@@ -1,0 +1,29 @@
+// One-off calibration probe (not part of the crate).
+use difet::config::SceneConfig;
+use difet::features::{conv, fast, gray::GrayImage, harris, surf};
+use difet::imagery::SceneGenerator;
+
+fn density(mask: &[bool]) -> f64 { mask.iter().filter(|&&m| m).count() as f64 / mask.len() as f64 }
+
+fn main() {
+    let mut cfg = SceneConfig::default();
+    cfg.width = 1024; cfg.height = 1024;
+    let scene = SceneGenerator::new(cfg).scene(0);
+    let g = GrayImage::from_rgba(&scene.image);
+
+    // Shi-Tomasi response distribution (BRIEF detector).
+    let st = harris::response(&g, harris::Mode::ShiTomasi);
+    let mut vals: Vec<f32> = st.data.clone(); vals.sort_by(|a,b| b.partial_cmp(a).unwrap());
+    for q in [50usize, 200, 1000, 5000, 20000] {
+        println!("shi-tomasi resp: top-{}th value = {:.5e}", q, vals[q]);
+    }
+    // FAST density vs t.
+    for t in [0.02f32, 0.03, 0.04, 0.05, 0.06] {
+        let (mask, _) = fast::maps(&g, t);
+        println!("fast t={t}: corner density {:.4}%", 100.0*density(&mask));
+    }
+    // Harris density with rel threshold + NMS.
+    let e = harris::extract(&g, (0,1024,0,1024), 1_000_000, harris::Mode::Harris);
+    println!("harris count (rel 0.01): {} ({:.4}%)", e.count, 100.0*e.count as f64/(1024.0*1024.0));
+    let _ = (conv::gaussian_taps(1.0,2), surf::hessian_det(&g, 1.2));
+}

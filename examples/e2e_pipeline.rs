@@ -1,0 +1,103 @@
+//! END-TO-END DRIVER (DESIGN.md §End-to-end validation).
+//!
+//! Exercises every layer of the stack on one real small workload:
+//!
+//!   1. generate a 20-scene synthetic LandSat corpus (imagery),
+//!   2. bundle it into a HIB file under backpressure (hib + coordinator),
+//!   3. write it into the replicated DFS (dfs),
+//!   4. run all seven extraction jobs on 1-, 2- and 4-node simulated
+//!      clusters through the PJRT-compiled Pallas/JAX artifacts
+//!      (coordinator + runtime + L2 + L1),
+//!   5. print Table 1 + Table 2 and the throughput summary recorded in
+//!      EXPERIMENTS.md.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_pipeline
+//! ```
+//!
+//! Runtime ≈ a few minutes at the default 1344² scenes (pass
+//! `--scene-size 896` for a faster smoke run).
+
+use difet::config::Config;
+use difet::pipeline::report::{ColumnKey, TableBuilder};
+use difet::pipeline::{run_extraction, run_sequential, ExtractRequest};
+use difet::util::args::{FlagSpec, ParsedArgs};
+use difet::util::fmt;
+
+fn main() -> difet::Result<()> {
+    let specs = vec![
+        FlagSpec { name: "scene-size", takes_value: true, help: "scene edge px (default 1344)" },
+        FlagSpec { name: "scenes", takes_value: true, help: "corpus size (default 20)" },
+        FlagSpec { name: "native", takes_value: false, help: "force pure-Rust executor" },
+    ];
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let p = ParsedArgs::parse(&argv, &specs, false).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2)
+    });
+
+    let mut cfg = Config::new();
+    let px: usize = p.get_or("scene-size", "1344").parse().expect("--scene-size");
+    cfg.scene.width = px;
+    cfg.scene.height = px;
+    let n: usize = p.get_or("scenes", "20").parse().expect("--scenes");
+
+    let req = ExtractRequest {
+        num_scenes: n,
+        write_output: true,
+        force_native: p.has("native"),
+        ..Default::default()
+    };
+
+    println!("=== DIFET end-to-end driver ===");
+    println!("corpus: {n} scenes of {px}x{px} RGBA ({} raw)\n", fmt::bytes((n * px * px * 4) as u64));
+
+    let mut tb = TableBuilder::new();
+    let total = std::time::Instant::now();
+
+    // Sequential baseline (Table 1 column 1).
+    eprintln!("[e2e] sequential baseline…");
+    let seq = run_sequential(&cfg, &req)?;
+    println!("--- one node, sequential ({} executor) ---", seq.executor);
+    print!("{}", seq.render_table());
+    for j in &seq.jobs {
+        tb.add(ColumnKey { nodes: 0, scenes: n }, j);
+    }
+
+    // Cluster runs (Table 1 columns 2–3).
+    for nodes in [2usize, 4] {
+        eprintln!("[e2e] {nodes}-node cluster…");
+        let mut c = cfg.clone();
+        c.cluster.nodes = nodes;
+        let rep = run_extraction(&c, &req)?;
+        println!(
+            "\n--- {nodes}-node MapReduce (ingest {:.1}s, bundle {}) ---",
+            rep.corpus.ingest_seconds,
+            fmt::bytes(rep.corpus.bundle_bytes)
+        );
+        print!("{}", rep.render_table());
+        for j in &rep.jobs {
+            tb.add(ColumnKey { nodes, scenes: n }, j);
+        }
+
+        if nodes == 4 {
+            // Throughput headline: scenes/hour at 4 nodes, per algorithm.
+            println!("\nthroughput @4 nodes:");
+            for j in &rep.jobs {
+                println!(
+                    "  {:<12} {:>8.1} scenes/h (sim)   census {:>12}",
+                    j.algorithm,
+                    3600.0 * n as f64 / j.sim_seconds,
+                    fmt::with_commas(j.total_count())
+                );
+            }
+        }
+    }
+
+    println!("\n{}", tb.render_table1());
+    println!("{}", tb.render_table2());
+
+    println!("wall total: {}", fmt::duration(total.elapsed().as_secs_f64()));
+    println!("\nRecorded in EXPERIMENTS.md §End-to-end.");
+    Ok(())
+}

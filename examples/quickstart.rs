@@ -1,0 +1,41 @@
+//! Quickstart: extract Harris corners from one synthetic LandSat scene.
+//!
+//! ```bash
+//! make artifacts          # once; otherwise the native fallback runs
+//! cargo run --release --example quickstart
+//! ```
+
+use difet::config::Config;
+use difet::pipeline::{run_sequential, ExtractRequest};
+
+fn main() -> difet::Result<()> {
+    // A small scene so the example finishes in seconds.
+    let mut cfg = Config::new();
+    cfg.scene.width = 1024;
+    cfg.scene.height = 1024;
+
+    let req = ExtractRequest {
+        algorithms: vec!["harris".into()],
+        num_scenes: 1,
+        write_output: false,
+        force_native: false,
+    };
+
+    let report = run_sequential(&cfg, &req)?;
+    let job = report.job("harris").expect("harris job");
+    let image = &job.images[0];
+
+    println!(
+        "scene 0 ({}x{}): {} Harris corners  [{} executor, {:.2}s compute]",
+        cfg.scene.width,
+        cfg.scene.height,
+        image.count,
+        report.executor,
+        job.compute_seconds
+    );
+    println!("\nstrongest corners (scene coordinates):");
+    for kp in image.keypoints.iter().take(5) {
+        println!("  ({:>4}, {:>4})  response {:.3e}", kp.row, kp.col, kp.score);
+    }
+    Ok(())
+}

@@ -1,0 +1,131 @@
+"""AOT compiler: lower every DIFET algorithm graph to HLO text artifacts.
+
+This is the *only* place Python meets the Rust runtime, and it runs at
+build time only (``make artifacts``).  For each algorithm in
+``model.ALGORITHMS`` it:
+
+1. builds the L2 graph (which embeds the L1 Pallas kernels),
+2. lowers ``jax.jit(fn)`` for a ``f32[TILE, TILE, 4]`` example tile,
+3. converts the StableHLO module to an XlaComputation and dumps **HLO
+   text** to ``artifacts/<alg>.hlo.txt``,
+4. records the executable's I/O contract in ``artifacts/manifest.json``
+   for the Rust runtime to parse.
+
+HLO *text* (never ``HloModuleProto.serialize()``) is the interchange
+format: jax >= 0.5 emits protos with 64-bit instruction ids which the
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def output_spec(name: str) -> list[dict]:
+    """The output-tuple contract for one algorithm (mirrored in Rust)."""
+    k = model.TOPK[name]
+    spec = [
+        {"name": "count", "dtype": "i32", "dims": []},
+        {"name": "scores", "dtype": "f32", "dims": [k]},
+        {"name": "rows", "dtype": "i32", "dims": [k]},
+        {"name": "cols", "dtype": "i32", "dims": [k]},
+    ]
+    desc = model.ALGORITHMS[name][1]
+    if desc is not None:
+        dtype, width = desc
+        spec.append({"name": "desc", "dtype": dtype, "dims": [k, width]})
+    return spec
+
+
+def lower_algorithm(name: str) -> str:
+    builder, _ = model.ALGORITHMS[name]
+    fn = builder()
+    tile = jax.ShapeDtypeStruct((model.TILE, model.TILE, 4), jax.numpy.float32)
+    core = jax.ShapeDtypeStruct((4,), jax.numpy.int32)
+    args = [tile, core]
+    if model.takes_pattern(name):
+        # BRIEF-256 pattern as runtime operands (see brief_descriptors).
+        pat = jax.ShapeDtypeStruct((model.BRIEF_BITS, 2), jax.numpy.float32)
+        args += [pat, pat]
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument(
+        "--algorithms",
+        default="all",
+        help="comma-separated subset (default: all seven)",
+    )
+    args = ap.parse_args(argv)
+
+    names = (
+        list(model.ALGORITHMS)
+        if args.algorithms == "all"
+        else [a.strip() for a in args.algorithms.split(",") if a.strip()]
+    )
+    unknown = [n for n in names if n not in model.ALGORITHMS]
+    if unknown:
+        ap.error(f"unknown algorithms: {unknown}; known: {list(model.ALGORITHMS)}")
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest: dict = {
+        "manifest_version": 1,
+        "tile": model.TILE,
+        "params": dict(model.PARAMS),
+        "algorithms": {},
+    }
+
+    for name in names:
+        t0 = time.time()
+        text = lower_algorithm(name)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest["algorithms"][name] = {
+            "file": fname,
+            "topk": model.TOPK[name],
+            "outputs": output_spec(name),
+            "takes_pattern": model.takes_pattern(name),
+            "sha256_16": digest,
+            "hlo_bytes": len(text),
+        }
+        print(
+            f"[aot] {name:11s} -> {fname:22s} "
+            f"{len(text) / 1e6:6.2f} MB  {time.time() - t0:5.1f}s",
+            file=sys.stderr,
+        )
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"[aot] wrote {mpath} ({len(names)} algorithms)", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,10 @@
+"""L1 Pallas kernels + their pure-jnp oracles.
+
+Modules:
+  conv   — separable Gaussian blur (row-blocked Pallas kernel)
+  harris — fused structure-tensor corner response (Harris / Shi-Tomasi)
+  ref    — pure-jnp reference implementations (correctness oracles)
+"""
+
+from .conv import blur2d_pallas  # noqa: F401
+from .harris import structure_response_pallas  # noqa: F401

@@ -1,0 +1,120 @@
+"""L1 Pallas kernel: separable Gaussian blur over row-blocked tiles.
+
+This is the single hottest primitive in DIFET's per-mapper pipeline: every
+one of the seven extractors begins with one or more Gaussian smoothing
+passes (Harris/Shi-Tomasi window, SIFT scale space, SURF derivative scale,
+BRIEF pattern smoothing).  The paper runs it inside OpenCV per mapper; here
+it is a Pallas kernel that lowers into the same HLO module as the L2 graph.
+
+TPU mapping (§Hardware-Adaptation in DESIGN.md)
+-----------------------------------------------
+* Grid: 1-D over row blocks of the output.  Each program instance produces
+  a ``(BLOCK_ROWS, W)`` slab — on real hardware each slab (plus its halo)
+  is staged HBM→VMEM once and both separable passes run out of VMEM, so
+  every input element crosses the HBM boundary exactly once.
+* VMEM budget: input slab ``(BLOCK_ROWS + 2*radius, W + 2*radius)`` f32 plus
+  one intermediate of the same height — at BLOCK_ROWS=128, W=512, radius≤8
+  that is < 1.2 MiB, comfortably inside a 16 MiB VMEM with double-buffering
+  headroom (see EXPERIMENTS.md §Perf for the footprint table).
+* The taps are compile-time constants; the two passes are fully unrolled
+  multiply-adds, i.e. pure VPU work with unit-stride lane access.
+
+The kernel consumes an **edge-pre-padded** input (``pad_edge``) so the
+program body is branch-free; the L2 graph pads once and reuses the padded
+tile for every primitive that needs a halo.
+
+CPU note: ``interpret=True`` is mandatory in this environment — real TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import gaussian_taps, pad_edge
+
+# Output rows produced per grid step.  512-row tiles → 4 programs.
+BLOCK_ROWS = 128
+
+
+def _blur_block_kernel(xp_ref, o_ref, *, taps: tuple[float, ...], block_rows: int):
+    """One grid step: separable blur for ``block_rows`` output rows.
+
+    ``xp_ref`` holds the full padded tile ``(H + 2r, W + 2r)``; the program
+    loads its slab (output rows ``i*block_rows ..`` plus the halo), runs the
+    vertical then horizontal pass as unrolled static-slice multiply-adds,
+    and stores the valid ``(block_rows, W)`` result.
+    """
+    i = pl.program_id(0)
+    radius = (len(taps) - 1) // 2
+    w_pad = xp_ref.shape[1]
+    w_out = w_pad - 2 * radius
+
+    # Load slab: block_rows + 2*radius rows, all padded columns.
+    slab = pl.load(
+        xp_ref, (pl.dslice(i * block_rows, block_rows + 2 * radius), slice(None))
+    )
+
+    # Vertical pass (consumes the row halo).
+    vert = jnp.zeros((block_rows, w_pad), slab.dtype)
+    for k, t in enumerate(taps):
+        vert = vert + t * slab[k : k + block_rows, :]
+
+    # Horizontal pass (consumes the column halo).
+    acc = jnp.zeros((block_rows, w_out), slab.dtype)
+    for k, t in enumerate(taps):
+        acc = acc + t * vert[:, k : k + w_out]
+
+    o_ref[...] = acc
+
+
+def resolve_block_rows(h: int, requested: int | None) -> int:
+    """Pick the grid row-block: the largest divisor of ``h`` ≤ BLOCK_ROWS.
+
+    Production tiles are 512 rows → 128-row blocks (4 programs).  Tests and
+    SIFT's decimated octaves use smaller tiles; gcd keeps the grid exact
+    without padding the output.
+    """
+    if requested is not None:
+        if h % requested != 0:
+            raise ValueError(f"H={h} not divisible by block_rows={requested}")
+        return requested
+    import math
+
+    return math.gcd(h, BLOCK_ROWS)
+
+
+@functools.partial(jax.jit, static_argnames=("sigma", "radius", "block_rows"))
+def blur2d_pallas(
+    x: jnp.ndarray,
+    *,
+    sigma: float,
+    radius: int,
+    block_rows: int | None = None,
+) -> jnp.ndarray:
+    """Separable Gaussian blur of an unpadded ``f32[H, W]`` tile via Pallas.
+
+    Functionally identical to :func:`..kernels.ref.blur2d_ref`; pytest
+    asserts allclose between the two.  ``H`` must be divisible by
+    ``block_rows`` when given explicitly (tiles in this system are 512 rows;
+    tests sweep other shapes via hypothesis).
+    """
+    h, w = x.shape
+    block_rows = resolve_block_rows(h, block_rows)
+    taps = gaussian_taps(sigma, radius)
+    xp = pad_edge(x, radius)
+    n_blocks = h // block_rows
+
+    return pl.pallas_call(
+        functools.partial(_blur_block_kernel, taps=taps, block_rows=block_rows),
+        grid=(n_blocks,),
+        # Full padded input visible to every program; output row-blocked.
+        in_specs=[pl.BlockSpec(xp.shape, lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((block_rows, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w), x.dtype),
+        interpret=True,
+    )(xp)

@@ -1,0 +1,149 @@
+"""L1 Pallas kernel: fused structure-tensor corner response (Harris / Shi-Tomasi).
+
+The structure-tensor pipeline — Sobel gradients, the three gradient products
+Ixx/Iyy/Ixy, a Gaussian window over each, and the scalar corner response —
+is DIFET's second hot primitive (it opens both corner detectors and the
+ORB/BRIEF keypoint rankings).  A naive composition materializes five
+intermediate planes in HBM; this kernel fuses the entire chain so each
+input element is read once and only the response plane is written back.
+
+TPU mapping (§Hardware-Adaptation in DESIGN.md)
+-----------------------------------------------
+* Grid: 1-D over ``(BLOCK_ROWS, W)`` output slabs, like ``conv.py``.
+* Per-program working set at BLOCK_ROWS=128, W=512, halo=4: the input slab
+  (136×520), two gradient planes (134×518) and three product planes — about
+  1.9 MiB f32, well inside VMEM; nothing round-trips through HBM.
+* All arithmetic is element-wise / shifted-slice VPU work; the unrolled
+  7-tap separable window is 14 fused multiply-adds per product plane.
+
+Fusion is the optimization the paper gets implicitly from OpenCV's
+``cornerHarris`` C++ loop nest; here it is explicit and benchmarked against
+the unfused composition in ``cargo bench --bench ablations`` (L2-side) and
+``python/tests/test_kernels.py`` checks numerics against the unfused
+pure-jnp oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import (
+    HARRIS_K,
+    STRUCTURE_HALO,
+    WINDOW_RADIUS,
+    gaussian_taps,
+    pad_edge,
+)
+
+BLOCK_ROWS = 128
+
+
+def _structure_block_kernel(
+    xp_ref,
+    o_ref,
+    *,
+    mode: str,
+    k: float,
+    taps: tuple[float, ...],
+    block_rows: int,
+):
+    """One grid step: fused response for ``block_rows`` output rows."""
+    i = pl.program_id(0)
+    halo = STRUCTURE_HALO  # 1 (Sobel) + WINDOW_RADIUS
+    radius = WINDOW_RADIUS
+    w_pad = xp_ref.shape[1]
+    w_out = w_pad - 2 * halo
+
+    # Slab covering the output rows plus the full stencil halo.
+    slab = pl.load(
+        xp_ref, (pl.dslice(i * block_rows, block_rows + 2 * halo), slice(None))
+    )
+
+    # --- Sobel gradients (valid: loses a 1-pixel ring) -------------------
+    gh = block_rows + 2 * radius  # gradient plane height
+    gw = w_pad - 2  # gradient plane width
+
+    def sl(dr: int, dc: int) -> jnp.ndarray:
+        return slab[1 + dr : 1 + dr + gh, 1 + dc : 1 + dc + gw]
+
+    ix = (
+        -sl(-1, -1) + sl(-1, 1)
+        - 2.0 * sl(0, -1) + 2.0 * sl(0, 1)
+        - sl(1, -1) + sl(1, 1)
+    ) * 0.125
+    iy = (
+        -sl(-1, -1) - 2.0 * sl(-1, 0) - sl(-1, 1)
+        + sl(1, -1) + 2.0 * sl(1, 0) + sl(1, 1)
+    ) * 0.125
+
+    # --- Gradient products, windowed in-register --------------------------
+    def window(p: jnp.ndarray) -> jnp.ndarray:
+        vert = jnp.zeros((block_rows, gw), p.dtype)
+        for t_idx, t in enumerate(taps):
+            vert = vert + t * p[t_idx : t_idx + block_rows, :]
+        acc = jnp.zeros((block_rows, w_out), p.dtype)
+        for t_idx, t in enumerate(taps):
+            acc = acc + t * vert[:, t_idx : t_idx + w_out]
+        return acc
+
+    ixx = window(ix * ix)
+    iyy = window(iy * iy)
+    ixy = window(ix * iy)
+
+    # --- Scalar response ---------------------------------------------------
+    if mode == "harris":
+        det = ixx * iyy - ixy * ixy
+        tr = ixx + iyy
+        resp = det - k * tr * tr
+    else:  # shi_tomasi: min eigenvalue
+        half_tr = 0.5 * (ixx + iyy)
+        half_diff = 0.5 * (ixx - iyy)
+        resp = half_tr - jnp.sqrt(half_diff * half_diff + ixy * ixy)
+
+    o_ref[...] = resp
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mode", "k", "window_sigma", "block_rows")
+)
+def structure_response_pallas(
+    x: jnp.ndarray,
+    *,
+    mode: str = "harris",
+    k: float = HARRIS_K,
+    window_sigma: float = 1.5,
+    block_rows: int | None = None,
+) -> jnp.ndarray:
+    """Fused Harris / Shi-Tomasi response of an unpadded ``f32[H, W]`` tile.
+
+    Functional twin of :func:`..kernels.ref.structure_response_ref`.
+    ``H`` must be divisible by ``block_rows`` when given explicitly.
+    """
+    if mode not in ("harris", "shi_tomasi"):
+        raise ValueError(f"unknown structure response mode: {mode!r}")
+    from .conv import resolve_block_rows
+
+    h, w = x.shape
+    block_rows = resolve_block_rows(h, block_rows)
+    taps = gaussian_taps(window_sigma, WINDOW_RADIUS)
+    xp = pad_edge(x, STRUCTURE_HALO)
+    n_blocks = h // block_rows
+
+    return pl.pallas_call(
+        functools.partial(
+            _structure_block_kernel,
+            mode=mode,
+            k=k,
+            taps=taps,
+            block_rows=block_rows,
+        ),
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec(xp.shape, lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((block_rows, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w), x.dtype),
+        interpret=True,
+    )(xp)

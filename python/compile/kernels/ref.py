@@ -1,0 +1,144 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness signal).
+
+Every Pallas kernel in this package has an exact functional twin here,
+implemented with plain jax.numpy shift-and-accumulate stencils.  pytest
+(``python/tests/test_kernels.py``) asserts ``allclose`` between the two over
+hypothesis-generated shapes and contents; this is the core L1 correctness
+gate demanded by the build process.
+
+Conventions
+-----------
+* Images are ``f32[H, W]`` single-band (grayscale) tiles.
+* "Padded" arrays carry an edge-replicated halo of ``halo`` pixels on every
+  side, produced by :func:`pad_edge`.  Kernels consume padded inputs and emit
+  valid (unpadded) outputs, so no boundary conditionals appear in the hot
+  loop — the same trick the TPU kernel uses to keep the VPU lanes uniform.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+# Radius of the Gaussian window used by the structure-tensor (Harris /
+# Shi-Tomasi) kernels.  Sobel adds one more ring, hence STRUCTURE_HALO = 4.
+WINDOW_RADIUS = 3
+STRUCTURE_HALO = WINDOW_RADIUS + 1
+
+# Harris corner response constant k (the classic 0.04..0.06 range; OpenCV's
+# default examples use 0.04, which the paper's mapper inherits).
+HARRIS_K = 0.04
+
+
+def gaussian_taps(sigma: float, radius: int) -> tuple[float, ...]:
+    """Normalized 1-D Gaussian taps with the given radius (static Python floats).
+
+    Taps are baked into the kernels as compile-time constants so the lowered
+    HLO contains immediate multiplies rather than a weights operand.
+    """
+    if radius < 0:
+        raise ValueError(f"radius must be >= 0, got {radius}")
+    if sigma <= 0.0:
+        raise ValueError(f"sigma must be > 0, got {sigma}")
+    raw = [math.exp(-0.5 * (i / sigma) ** 2) for i in range(-radius, radius + 1)]
+    s = sum(raw)
+    return tuple(t / s for t in raw)
+
+
+def pad_edge(x: jnp.ndarray, halo: int) -> jnp.ndarray:
+    """Edge-replicate pad a 2-D tile by ``halo`` pixels on every side."""
+    return jnp.pad(x, ((halo, halo), (halo, halo)), mode="edge")
+
+
+def blur2d_ref(x: jnp.ndarray, sigma: float, radius: int) -> jnp.ndarray:
+    """Separable Gaussian blur of an unpadded tile (reference).
+
+    Pads internally with edge replication, then applies the vertical and
+    horizontal passes by shift-and-accumulate.
+    """
+    taps = gaussian_taps(sigma, radius)
+    xp = pad_edge(x, radius)
+    return _blur_cols_valid(_blur_rows_valid(xp, taps), taps)
+
+
+def _blur_rows_valid(xp: jnp.ndarray, taps: tuple[float, ...]) -> jnp.ndarray:
+    """Vertical (axis-0) tap accumulation; consumes the axis-0 halo."""
+    radius = (len(taps) - 1) // 2
+    out_h = xp.shape[0] - 2 * radius
+    acc = jnp.zeros((out_h, xp.shape[1]), xp.dtype)
+    for k, t in enumerate(taps):
+        acc = acc + t * xp[k : k + out_h, :]
+    return acc
+
+
+def _blur_cols_valid(xp: jnp.ndarray, taps: tuple[float, ...]) -> jnp.ndarray:
+    """Horizontal (axis-1) tap accumulation; consumes the axis-1 halo."""
+    radius = (len(taps) - 1) // 2
+    out_w = xp.shape[1] - 2 * radius
+    acc = jnp.zeros((xp.shape[0], out_w), xp.dtype)
+    for k, t in enumerate(taps):
+        acc = acc + t * xp[:, k : k + out_w]
+    return acc
+
+
+def sobel_valid(xp: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """3x3 Sobel gradients of a padded array; output loses a 1-pixel ring.
+
+    Returns ``(Ix, Iy)`` with shape ``(H-2, W-2)`` for input ``(H, W)``.
+    """
+    h, w = xp.shape
+    oh, ow = h - 2, w - 2
+
+    def sl(dr: int, dc: int) -> jnp.ndarray:
+        return xp[1 + dr : 1 + dr + oh, 1 + dc : 1 + dc + ow]
+
+    # Sobel x: [[-1,0,1],[-2,0,2],[-1,0,1]] / 8 ; y is its transpose.
+    ix = (
+        -sl(-1, -1) + sl(-1, 1)
+        - 2.0 * sl(0, -1) + 2.0 * sl(0, 1)
+        - sl(1, -1) + sl(1, 1)
+    ) * 0.125
+    iy = (
+        -sl(-1, -1) - 2.0 * sl(-1, 0) - sl(-1, 1)
+        + sl(1, -1) + 2.0 * sl(1, 0) + sl(1, 1)
+    ) * 0.125
+    return ix, iy
+
+
+def structure_response_ref(
+    xp: jnp.ndarray, mode: str, k: float = HARRIS_K, window_sigma: float = 1.5
+) -> jnp.ndarray:
+    """Reference structure-tensor corner response.
+
+    ``xp`` must be padded by :data:`STRUCTURE_HALO`.  Output has the original
+    (unpadded) shape.  ``mode`` is ``"harris"`` (det - k*tr^2) or
+    ``"shi_tomasi"`` (min eigenvalue).
+    """
+    if mode not in ("harris", "shi_tomasi"):
+        raise ValueError(f"unknown structure response mode: {mode!r}")
+    taps = gaussian_taps(window_sigma, WINDOW_RADIUS)
+    ix, iy = sobel_valid(xp)  # still padded by WINDOW_RADIUS
+    ixx = _window_valid(ix * ix, taps)
+    iyy = _window_valid(iy * iy, taps)
+    ixy = _window_valid(ix * iy, taps)
+    return structure_response_from_tensor(ixx, iyy, ixy, mode, k)
+
+
+def structure_response_from_tensor(
+    ixx: jnp.ndarray, iyy: jnp.ndarray, ixy: jnp.ndarray, mode: str, k: float = HARRIS_K
+) -> jnp.ndarray:
+    """Corner response from smoothed structure-tensor components."""
+    if mode == "harris":
+        det = ixx * iyy - ixy * ixy
+        tr = ixx + iyy
+        return det - k * tr * tr
+    # Shi-Tomasi: smaller eigenvalue of [[ixx, ixy], [ixy, iyy]].
+    half_tr = 0.5 * (ixx + iyy)
+    half_diff = 0.5 * (ixx - iyy)
+    return half_tr - jnp.sqrt(half_diff * half_diff + ixy * ixy)
+
+
+def _window_valid(x: jnp.ndarray, taps: tuple[float, ...]) -> jnp.ndarray:
+    """Separable window sum consuming the halo in both axes."""
+    return _blur_cols_valid(_blur_rows_valid(x, taps), taps)

@@ -1,0 +1,571 @@
+"""L2: per-algorithm JAX compute graphs for DIFET's seven extractors.
+
+Each public ``build_<alg>`` function returns a jittable
+``fn(tile: f32[TILE, TILE, 4]) -> tuple`` operating on one RGBA image tile.
+``aot.py`` lowers every one of them to an ``artifacts/<alg>.hlo.txt``
+module; the Rust coordinator (L3) executes those modules via PJRT on the
+request path — Python never runs at extraction time.
+
+The seven algorithms mirror the paper's Section 2 selection:
+
+===========  ==========================  =================================
+algorithm    detector                    descriptor
+===========  ==========================  =================================
+harris       structure tensor (Pallas)   —
+shi_tomasi   structure tensor (Pallas)   —
+fast         FAST-9 segment test         —
+sift         DoG scale-space extrema     128-d gradient histogram (upright)
+surf         det-of-Hessian, 2 scales    64-d Haar sums (upright)
+brief        structure tensor, sparse    BRIEF-256 binary
+orb          FAST-9 + Harris ranking     steered BRIEF-256 (rBRIEF) binary
+===========  ==========================  =================================
+
+Upright note: classic SIFT/SURF estimate a dominant orientation and rotate
+the descriptor frame.  DIFET's evaluation (Tables 1–2) measures runtime and
+feature counts, which orientation does not affect; we implement the upright
+variants (as OpenCV's U-SURF does) for SIFT/SURF and full rotation steering
+for ORB, whose contribution *is* the rotation (rBRIEF).  DESIGN.md §3
+records this substitution.
+
+Output convention (all algorithms)
+----------------------------------
+``(count i32[], scores f32[K], rows i32[K], cols i32[K][, desc])`` where
+``desc`` is f32[K, 128] (SIFT), f32[K, 64] (SURF) or u32[K, 8] (BRIEF/ORB).
+``count`` is exact (not capped by K); rows/cols carry -1 sentinels past the
+K-th or past ``count``.  The manifest written by ``aot.py`` describes this
+layout to the Rust runtime.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from . import ops
+from .kernels import blur2d_pallas, structure_response_pallas
+from .kernels.ref import gaussian_taps  # noqa: F401  (re-exported for tests)
+
+# ---------------------------------------------------------------------------
+# Static configuration.  Changing anything here requires `make artifacts`.
+# ---------------------------------------------------------------------------
+
+# Tile edge (pixels).  Scenes (~7000x7000) are tiled by the Rust pipeline.
+TILE = 512
+
+# Per-tile top-K caps.  Counts are exact regardless; K only bounds how many
+# keypoints get coordinates/descriptors per tile.
+TOPK = {
+    "harris": 2048,
+    "shi_tomasi": 1024,
+    "fast": 4096,
+    "sift": 2048,
+    "surf": 1024,
+    "brief": 512,
+    "orb": 1024,
+}
+
+# Detector thresholds (on [0,1]-normalized grayscale).  Calibrated so the
+# synthetic LandSat corpus reproduces Table 2's per-algorithm ordering —
+# see EXPERIMENTS.md §Table2-calibration.
+PARAMS = {
+    "harris_rel_thresh": 0.02,     # OpenCV-style: resp > rel * max(resp)
+    "shi_tomasi_rel_thresh": 0.01,
+    "fast_t": 0.04,                # FAST brightness delta
+    "sift_contrast": 0.012,        # |DoG| threshold
+    "sift_edge_r": 10.0,           # Hessian edge-rejection ratio
+    "surf_thresh": 6.2e-3,         # ~ hessianThreshold 400 on 8-bit inputs
+    "brief_abs_thresh": 2.0e-2,    # absolute min-eig threshold (sparse)
+}
+
+# Descriptor geometry.
+SIFT_PATCH = 16        # 16x16 patch -> 4x4 cells x 8 bins = 128-d
+SURF_PATCH = 20        # 20x20 patch -> 4x4 subregions x 4 stats = 64-d
+BRIEF_BITS = 256
+BRIEF_PATCH_RADIUS = 15   # pairs drawn within a 31x31 window
+PATCH_PAD = 24            # tile padding that keeps every sampler in-bounds
+ORB_CENTROID_RADIUS = 7   # intensity-centroid orientation window
+
+# FAST: Bresenham circle of radius 3, 16 points, clockwise from 12 o'clock.
+FAST_CIRCLE = (
+    (-3, 0), (-3, 1), (-2, 2), (-1, 3), (0, 3), (1, 3), (2, 2), (3, 1),
+    (3, 0), (3, -1), (2, -2), (1, -3), (0, -3), (-1, -3), (-2, -2), (-3, -1),
+)
+FAST_ARC = 9  # FAST-9: need 9 contiguous brighter/darker circle pixels
+
+
+def _brief_pattern(seed: int = 42) -> tuple[np.ndarray, np.ndarray]:
+    """The BRIEF-256 sampling pattern: two (256, 2) f32 offset arrays.
+
+    Gaussian(0, (patch/5)^2) point pairs, the G-II layout from Calonder et
+    al. (2010), drawn once from a fixed seed and baked into the HLO as
+    constants (and mirrored, bit-for-bit, by ``features::brief`` in Rust).
+    """
+    rng = np.random.RandomState(seed)
+    sigma = (2 * BRIEF_PATCH_RADIUS + 1) / 5.0
+    a = rng.normal(0.0, sigma, size=(BRIEF_BITS, 2))
+    b = rng.normal(0.0, sigma, size=(BRIEF_BITS, 2))
+    lim = float(BRIEF_PATCH_RADIUS)
+    return (
+        np.clip(a, -lim, lim).astype(np.float32),
+        np.clip(b, -lim, lim).astype(np.float32),
+    )
+
+
+BRIEF_A, BRIEF_B = _brief_pattern()
+
+
+# ---------------------------------------------------------------------------
+# Detector primitives
+# ---------------------------------------------------------------------------
+
+
+def fast_maps(gray: jnp.ndarray, t: float) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """FAST-9 corner mask and SAD-style score map.
+
+    Vectorized over the whole tile with *bit-packed* ring tests: the 16
+    circle indicators become bits 0..15 of an i32 plane; "9 contiguous on
+    the circular ring" is the AND of 9 shifted copies of the bit-doubled
+    ring.  This replaces the original cumsum formulation (a [24, H, W]
+    f32 sliding-window sum) with 8 integer shift-ANDs per polarity —
+    ~5× less HLO work, measured in EXPERIMENTS.md §Perf (it is what makes
+    FAST the *cheapest* algorithm, as in the paper's Table 1, instead of
+    the most expensive).
+    Returns ``(corner_mask bool[H,W], score f32[H,W])``.
+    """
+    h, w = gray.shape
+    pad = 3
+    gp = jnp.pad(gray, ((pad, pad), (pad, pad)), mode="edge")
+    center = gray
+
+    bright_bits = jnp.zeros((h, w), jnp.int32)
+    dark_bits = jnp.zeros((h, w), jnp.int32)
+    score = jnp.zeros((h, w), jnp.float32)
+    for k, (dr, dc) in enumerate(FAST_CIRCLE):
+        tap = gp[pad + dr : pad + dr + h, pad + dc : pad + dc + w]
+        d = tap - center
+        bright_bits = bright_bits | ((d > t).astype(jnp.int32) << k)
+        dark_bits = dark_bits | ((d < -t).astype(jnp.int32) << k)
+        # Ranking score: total excess contrast around the circle (simpler
+        # than OpenCV's exact score; only orders keypoints under NMS).
+        score = score + jnp.maximum(jnp.abs(d) - t, 0.0)
+
+    def arc_hit(bits: jnp.ndarray) -> jnp.ndarray:
+        ring = bits | (bits << 16)  # circular doubling in one word
+        acc = ring
+        for i in range(1, FAST_ARC):
+            acc = acc & (ring >> i)
+        # Bit j of acc ⇔ indicators j..j+8 all set (a 9-arc starting at j).
+        return (acc & 0xFFFF) != 0
+
+    corner = arc_hit(bright_bits) | arc_hit(dark_bits)
+    return corner, score
+
+
+def hessian_det_map(gray: jnp.ndarray, sigma: float) -> jnp.ndarray:
+    """Scale-normalized determinant-of-Hessian response at scale ``sigma``.
+
+    SURF approximates this with box filters; we compute the Gaussian
+    derivatives exactly (blur via the Pallas kernel, then central second
+    differences), keeping SURF's 0.9 cross-term correction.
+    """
+    radius = max(2, int(3.0 * sigma + 0.5))
+    g = blur2d_pallas(gray, sigma=sigma, radius=radius)
+    gp = jnp.pad(g, ((1, 1), (1, 1)), mode="edge")
+    h, w = gray.shape
+    c = gp[1 : 1 + h, 1 : 1 + w]
+    lxx = gp[1 : 1 + h, 2 : 2 + w] - 2.0 * c + gp[1 : 1 + h, 0:w]
+    lyy = gp[2 : 2 + h, 1 : 1 + w] - 2.0 * c + gp[0:h, 1 : 1 + w]
+    lxy = 0.25 * (
+        gp[2 : 2 + h, 2 : 2 + w]
+        - gp[2 : 2 + h, 0:w]
+        - gp[0:h, 2 : 2 + w]
+        + gp[0:h, 0:w]
+    )
+    # sigma^4 normalization keeps responses comparable across scales.
+    return (sigma ** 4) * (lxx * lyy - (0.9 * lxy) ** 2)
+
+
+def dog_pyramid(
+    gray: jnp.ndarray, base_sigma: float = 1.6, intervals: int = 2
+) -> list[jnp.ndarray]:
+    """One octave of the SIFT difference-of-Gaussians stack.
+
+    ``intervals + 3`` Gaussian levels -> ``intervals + 2`` DoG planes, each
+    full-tile resolution (the caller decimates between octaves).
+    """
+    ks = 2.0 ** (1.0 / intervals)
+    sigmas = [base_sigma * (ks ** i) for i in range(intervals + 3)]
+    blurs = [
+        blur2d_pallas(gray, sigma=s, radius=max(2, int(3.0 * s + 0.5)))
+        for s in sigmas
+    ]
+    return [blurs[i + 1] - blurs[i] for i in range(len(blurs) - 1)], blurs
+
+
+def dog_extrema(
+    dogs: list[jnp.ndarray], contrast: float, edge_r: float
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Scale-space extrema mask + |DoG| score over the middle DoG layers."""
+    stack = jnp.stack(dogs)  # [L, H, W]
+    n_layers, h, w = stack.shape
+    pad = jnp.pad(stack, ((0, 0), (1, 1), (1, 1)), mode="edge")
+
+    neigh_max = []
+    neigh_min = []
+    for dl in (-1, 0, 1):
+        for dr in (0, 1, 2):
+            for dc in (0, 1, 2):
+                if dl == 0 and dr == 1 and dc == 1:
+                    continue
+                sl = pad[:, dr : dr + h, dc : dc + w]
+                sl = jnp.roll(sl, -dl, axis=0)
+                neigh_max.append(sl)
+                neigh_min.append(sl)
+    nmax = jnp.max(jnp.stack(neigh_max), axis=0)
+    nmin = jnp.min(jnp.stack(neigh_min), axis=0)
+
+    is_max = stack > nmax
+    is_min = stack < nmin
+    extremum = (is_max | is_min) & (jnp.abs(stack) > contrast)
+
+    # Edge rejection: 2x2 Hessian of each DoG plane, tr^2/det < (r+1)^2/r.
+    pd = jnp.pad(stack, ((0, 0), (1, 1), (1, 1)), mode="edge")
+    c = pd[:, 1 : 1 + h, 1 : 1 + w]
+    dxx = pd[:, 1 : 1 + h, 2 : 2 + w] - 2 * c + pd[:, 1 : 1 + h, 0:w]
+    dyy = pd[:, 2 : 2 + h, 1 : 1 + w] - 2 * c + pd[:, 0:h, 1 : 1 + w]
+    dxy = 0.25 * (
+        pd[:, 2 : 2 + h, 2 : 2 + w]
+        - pd[:, 2 : 2 + h, 0:w]
+        - pd[:, 0:h, 2 : 2 + w]
+        + pd[:, 0:h, 0:w]
+    )
+    tr = dxx + dyy
+    det = dxx * dyy - dxy * dxy
+    edge_ok = (det > 0) & (tr * tr * edge_r < (edge_r + 1.0) ** 2 * det)
+
+    # Only interior layers are true 3-D extrema; zero the boundary layers.
+    layer_ok = jnp.zeros((n_layers, 1, 1), bool).at[1:-1].set(True)
+    mask3 = extremum & edge_ok & layer_ok
+    score3 = jnp.where(mask3, jnp.abs(stack), 0.0)
+
+    mask = jnp.any(mask3, axis=0)
+    score = jnp.max(score3, axis=0)
+    return mask, score
+
+
+# ---------------------------------------------------------------------------
+# Descriptor primitives
+# ---------------------------------------------------------------------------
+
+
+def sift_descriptors(
+    blurred: jnp.ndarray, rows: jnp.ndarray, cols: jnp.ndarray
+) -> jnp.ndarray:
+    """Upright 128-d SIFT descriptors at the given keypoints.
+
+    16x16 patch of the σ≈1.6-blurred image → per-pixel gradient magnitude /
+    orientation → Gaussian-weighted soft-binned 4x4x8 histogram → L2
+    normalize, 0.2-clip, renormalize (Lowe 2004 §6).
+    """
+    padded = ops.pad_for_patches(blurred, PATCH_PAD)
+    patches = ops.extract_patches(padded, rows, cols, PATCH_PAD, SIFT_PATCH + 2)
+    # Central-difference gradients on the 18x18 patch -> 16x16 interior.
+    gy = 0.5 * (patches[:, 2:, 1:-1] - patches[:, :-2, 1:-1])
+    gx = 0.5 * (patches[:, 1:-1, 2:] - patches[:, 1:-1, :-2])
+    mag = jnp.sqrt(gx * gx + gy * gy)
+    ang = jnp.arctan2(gy, gx)  # [-pi, pi]
+
+    # Gaussian window over the patch.
+    idx = jnp.arange(SIFT_PATCH, dtype=jnp.float32) - (SIFT_PATCH - 1) / 2.0
+    wr = jnp.exp(-(idx ** 2) / (2.0 * (SIFT_PATCH / 2.0) ** 2))
+    window = wr[:, None] * wr[None, :]
+    wmag = mag * window[None, :, :]
+
+    # Soft orientation binning into 8 bins.
+    nbins = 8
+    binf = (ang + jnp.pi) * (nbins / (2.0 * jnp.pi))
+    b0 = jnp.floor(binf)
+    frac = binf - b0
+    b0 = b0.astype(jnp.int32) % nbins
+    b1 = (b0 + 1) % nbins
+
+    onehot0 = jax.nn.one_hot(b0, nbins, dtype=wmag.dtype) * (1.0 - frac)[..., None]
+    onehot1 = jax.nn.one_hot(b1, nbins, dtype=wmag.dtype) * frac[..., None]
+    votes = (onehot0 + onehot1) * wmag[..., None]  # [K, 16, 16, 8]
+
+    k = votes.shape[0]
+    cells = votes.reshape(k, 4, 4, 4, 4, nbins).sum(axis=(2, 4))  # [K,4,4,8]
+    desc = cells.reshape(k, 128)
+
+    norm = jnp.linalg.norm(desc, axis=1, keepdims=True) + 1e-7
+    desc = jnp.clip(desc / norm, 0.0, 0.2)
+    norm = jnp.linalg.norm(desc, axis=1, keepdims=True) + 1e-7
+    return (desc / norm).astype(jnp.float32)
+
+
+def surf_descriptors(
+    gray: jnp.ndarray, rows: jnp.ndarray, cols: jnp.ndarray
+) -> jnp.ndarray:
+    """Upright 64-d SURF descriptors (Bay et al. 2008, U-SURF variant).
+
+    20x20 patch of the σ=1-smoothed image; Haar responses dx, dy per pixel;
+    4x4 subregions each contributing (Σdx, Σdy, Σ|dx|, Σ|dy|).
+    """
+    smooth = blur2d_pallas(gray, sigma=1.0, radius=3)
+    padded = ops.pad_for_patches(smooth, PATCH_PAD)
+    patches = ops.extract_patches(padded, rows, cols, PATCH_PAD, SURF_PATCH + 2)
+    dy = 0.5 * (patches[:, 2:, 1:-1] - patches[:, :-2, 1:-1])
+    dx = 0.5 * (patches[:, 1:-1, 2:] - patches[:, 1:-1, :-2])
+
+    k = dx.shape[0]
+    sub = SURF_PATCH // 4
+
+    def stats(v: jnp.ndarray) -> jnp.ndarray:
+        blocks = v.reshape(k, 4, sub, 4, sub)
+        return blocks.sum(axis=(2, 4))  # [K, 4, 4]
+
+    feats = jnp.stack(
+        [stats(dx), stats(dy), stats(jnp.abs(dx)), stats(jnp.abs(dy))], axis=-1
+    )  # [K, 4, 4, 4]
+    desc = feats.reshape(k, 64)
+    norm = jnp.linalg.norm(desc, axis=1, keepdims=True) + 1e-7
+    return (desc / norm).astype(jnp.float32)
+
+
+def brief_descriptors(
+    gray: jnp.ndarray,
+    rows: jnp.ndarray,
+    cols: jnp.ndarray,
+    pat_a: jnp.ndarray,
+    pat_b: jnp.ndarray,
+    angles: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """BRIEF-256 binary descriptors, optionally steered by ``angles`` (ORB).
+
+    Intensity pairs are compared on a σ=2 smoothed image (Calonder et al.
+    recommend pre-smoothing for noise robustness).  With ``angles`` given,
+    the pattern is rotated per-keypoint — Rublee et al.'s rBRIEF steering.
+    Returns u32[K, 8] packed little-endian within each word.
+
+    The sampling pattern arrives as *runtime operands* (``pat_a/pat_b``,
+    f32[256,2]) rather than baked constants: xla_extension 0.5.1 (the Rust
+    runtime's XLA) corrupts large constant literals on the HLO-text
+    round-trip, silently zeroing every descriptor.  The Rust engine feeds
+    the generated `features::brief_pattern` constants — bit-identical to
+    ``BRIEF_A``/``BRIEF_B`` — with every call (DESIGN.md §7).
+    """
+    smooth = blur2d_pallas(gray, sigma=2.0, radius=5)
+    padded = ops.pad_for_patches(smooth, PATCH_PAD)
+
+    a = pat_a  # [256, 2] (dr, dc)
+    b = pat_b
+    k = rows.shape[0]
+    if angles is None:
+        a_dr = jnp.broadcast_to(a[:, 0], (k, BRIEF_BITS))
+        a_dc = jnp.broadcast_to(a[:, 1], (k, BRIEF_BITS))
+        b_dr = jnp.broadcast_to(b[:, 0], (k, BRIEF_BITS))
+        b_dc = jnp.broadcast_to(b[:, 1], (k, BRIEF_BITS))
+    else:
+        cos = jnp.cos(angles)[:, None]
+        sin = jnp.sin(angles)[:, None]
+        a_dr = a[None, :, 0] * cos + a[None, :, 1] * sin
+        a_dc = -a[None, :, 0] * sin + a[None, :, 1] * cos
+        b_dr = b[None, :, 0] * cos + b[None, :, 1] * sin
+        b_dc = -b[None, :, 0] * sin + b[None, :, 1] * cos
+
+    va = ops.sample_points(padded, rows, cols, a_dr, a_dc, PATCH_PAD)
+    vb = ops.sample_points(padded, rows, cols, b_dr, b_dc, PATCH_PAD)
+    return ops.pack_bits_u32(va < vb)
+
+
+def orb_orientations(
+    gray: jnp.ndarray, rows: jnp.ndarray, cols: jnp.ndarray
+) -> jnp.ndarray:
+    """Intensity-centroid keypoint orientation (Rosin moments, ORB §3.2)."""
+    padded = ops.pad_for_patches(gray, PATCH_PAD)
+    size = 2 * ORB_CENTROID_RADIUS + 1
+    patches = ops.extract_patches(padded, rows, cols, PATCH_PAD, size)
+    coords = jnp.arange(size, dtype=jnp.float32) - ORB_CENTROID_RADIUS
+    rr = coords[:, None]
+    cc = coords[None, :]
+    disk = (rr * rr + cc * cc) <= ORB_CENTROID_RADIUS ** 2
+    w = patches * disk[None, :, :]
+    m01 = jnp.sum(w * rr[None, :, :], axis=(1, 2))
+    m10 = jnp.sum(w * cc[None, :, :], axis=(1, 2))
+    return jnp.arctan2(m01, m10)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm graphs
+# ---------------------------------------------------------------------------
+
+
+def _structure_detector(mode: str, rel_thresh_key: str, k: int):
+    def fn(tile: jnp.ndarray, core: jnp.ndarray):
+        gray = ops.grayscale(tile)
+        resp = structure_response_pallas(gray, mode=mode)
+        thresh = PARAMS[rel_thresh_key] * jnp.max(resp)
+        mask = (
+            ops.nms_mask(resp)
+            & (resp > jnp.maximum(thresh, 1e-12))
+            & ops.core_mask(resp.shape, core)
+        )
+        return ops.select_topk(resp, mask, k)
+
+    return fn
+
+
+def build_harris():
+    """Harris corner detection (paper's first mapper pseudo-code)."""
+    return _structure_detector("harris", "harris_rel_thresh", TOPK["harris"])
+
+
+def build_shi_tomasi():
+    """Shi-Tomasi (min-eigenvalue) corners.
+
+    The per-image 400-corner cap implied by Table 2 (counts are exactly
+    400·N) is OpenCV ``goodFeaturesToTrack``'s ``maxCorners``; DIFET applies
+    it where the paper does — at per-image aggregation, in the Rust
+    coordinator — so the tile graph reports uncapped counts.
+    """
+    return _structure_detector(
+        "shi_tomasi", "shi_tomasi_rel_thresh", TOPK["shi_tomasi"]
+    )
+
+
+def build_fast():
+    """FAST-9 segment-test corners."""
+
+    def fn(tile: jnp.ndarray, core: jnp.ndarray):
+        gray = ops.grayscale(tile)
+        corner, score = fast_maps(gray, PARAMS["fast_t"])
+        mask = corner & ops.nms_mask(score) & ops.core_mask(score.shape, core)
+        return ops.select_topk(score, mask, TOPK["fast"])
+
+    return fn
+
+
+def build_sift():
+    """SIFT: 2-octave DoG detector + upright 128-d descriptors."""
+
+    def fn(tile: jnp.ndarray, core: jnp.ndarray):
+        gray = ops.grayscale(tile)
+
+        dogs0, blurs0 = dog_pyramid(gray)
+        mask0, score0 = dog_extrema(
+            dogs0, PARAMS["sift_contrast"], PARAMS["sift_edge_r"]
+        )
+        mask0 = mask0 & ops.core_mask(mask0.shape, core)
+
+        g1 = ops.downsample2(blurs0[2])  # ~2x base sigma, the octave seed
+        dogs1, _ = dog_pyramid(g1)
+        mask1, score1 = dog_extrema(
+            dogs1, PARAMS["sift_contrast"], PARAMS["sift_edge_r"]
+        )
+        # Octave-1 core at half resolution: [r0/2, ceil(r1/2)) etc. —
+        # mirrors the Rust baseline exactly (sift.rs::extract).
+        core1 = jnp.stack(
+            [core[0] // 2, -(-core[1] // 2), core[2] // 2, -(-core[3] // 2)]
+        )
+        mask1 = mask1 & ops.core_mask(mask1.shape, core1)
+
+        # Exact census: octave counts are independent detections.
+        count = jnp.sum(mask0, dtype=jnp.int32) + jnp.sum(mask1, dtype=jnp.int32)
+
+        # Keypoints: merge octave-1 onto the tile grid (NN upsample) and
+        # keep the stronger response where both octaves fire.
+        score1_up = ops.upsample2_nn(score1)
+        mask1_up = ops.upsample2_nn(mask1)
+        score = jnp.maximum(score0, score1_up)
+        mask = mask0 | mask1_up
+        _, scores, rows, cols = ops.select_topk(score, mask, TOPK["sift"])
+
+        desc = sift_descriptors(blurs0[1], rows, cols)
+        return count, scores, rows, cols, desc
+
+    return fn
+
+
+def build_surf():
+    """SURF: det-of-Hessian blobs at two scales + upright 64-d descriptors."""
+
+    def fn(tile: jnp.ndarray, core: jnp.ndarray):
+        gray = ops.grayscale(tile)
+        d1 = hessian_det_map(gray, 1.2)
+        d2 = hessian_det_map(gray, 2.4)
+        resp = jnp.maximum(d1, d2)
+        mask = (
+            ops.nms_mask(resp)
+            & (resp > PARAMS["surf_thresh"])
+            & ops.core_mask(resp.shape, core)
+        )
+        count, scores, rows, cols = ops.select_topk(resp, mask, TOPK["surf"])
+        desc = surf_descriptors(gray, rows, cols)
+        return count, scores, rows, cols, desc
+
+    return fn
+
+
+def build_brief():
+    """BRIEF-256 on a sparse min-eigenvalue detector.
+
+    The paper pairs BRIEF with a sparse detector (its Table 2 count is
+    ~1.2k/image, 200x sparser than FAST); we use the Shi-Tomasi response
+    with an *absolute* quality threshold, which reproduces that density.
+    """
+
+    def fn(tile: jnp.ndarray, core: jnp.ndarray, pat_a: jnp.ndarray, pat_b: jnp.ndarray):
+        gray = ops.grayscale(tile)
+        resp = structure_response_pallas(gray, mode="shi_tomasi")
+        mask = (
+            ops.nms_mask(resp)
+            & (resp > PARAMS["brief_abs_thresh"])
+            & ops.core_mask(resp.shape, core)
+        )
+        count, scores, rows, cols = ops.select_topk(resp, mask, TOPK["brief"])
+        desc = brief_descriptors(gray, rows, cols, pat_a, pat_b)
+        return count, scores, rows, cols, desc
+
+    return fn
+
+
+def build_orb():
+    """ORB: FAST-9 keypoints, Harris-ranked, steered BRIEF-256 descriptors.
+
+    The per-image 500-feature cap (Table 2 counts are exactly 500·N —
+    OpenCV's ``nfeatures`` default) is applied at per-image aggregation in
+    the Rust coordinator, ranking tiles' keypoints by this Harris score.
+    """
+
+    def fn(tile: jnp.ndarray, core: jnp.ndarray, pat_a: jnp.ndarray, pat_b: jnp.ndarray):
+        gray = ops.grayscale(tile)
+        corner, _ = fast_maps(gray, PARAMS["fast_t"])
+        harris = structure_response_pallas(gray, mode="harris")
+        score = jnp.where(corner, harris, ops.NEG_LARGE)
+        mask = corner & ops.nms_mask(score) & ops.core_mask(score.shape, core)
+        count, scores, rows, cols = ops.select_topk(score, mask, TOPK["orb"])
+        angles = orb_orientations(gray, rows, cols)
+        desc = brief_descriptors(gray, rows, cols, pat_a, pat_b, angles=angles)
+        return count, scores, rows, cols, desc
+
+    return fn
+
+
+def takes_pattern(name: str) -> bool:
+    """Does this algorithm's executable take the two pattern operands?"""
+    return name in ("brief", "orb")
+
+
+# Registry consumed by aot.py and the tests.  Order matches the paper's
+# Table 1 rows.
+ALGORITHMS = {
+    "harris": (build_harris, None),
+    "shi_tomasi": (build_shi_tomasi, None),
+    "sift": (build_sift, ("f32", 128)),
+    "surf": (build_surf, ("f32", 64)),
+    "fast": (build_fast, None),
+    "brief": (build_brief, ("u32", 8)),
+    "orb": (build_orb, ("u32", 8)),
+}

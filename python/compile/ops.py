@@ -1,0 +1,175 @@
+"""Shared L2 graph ops: grayscale, NMS, top-K selection, patch sampling.
+
+These are the static-shape building blocks that turn a dense response map
+into the fixed-size keypoint tensors the Rust coordinator consumes.  All
+shapes are compile-time constants — XLA/PJRT executables are AOT-compiled
+once per algorithm and reused for every tile of every scene, so nothing
+here may depend on data-dependent sizes.  Data-dependent *results* (how
+many features exist) travel as an explicit ``count`` scalar plus validity
+sentinels (row = col = -1) in the fixed-size arrays.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# Sentinel filled into the row/col slots of invalid (beyond-count) keypoints.
+INVALID_COORD = -1
+# Effectively -inf for masked response values; finite so top_k stays stable.
+NEG_LARGE = -1.0e30
+
+
+def grayscale(rgba: jnp.ndarray) -> jnp.ndarray:
+    """ITU-R BT.601 luma from an ``f32[H, W, 4]`` RGBA tile in [0, 255].
+
+    Matches step 2 of the paper's mapper pseudo-code ("convert image to
+    grayscale").  Output is normalized to [0, 1] so every detector threshold
+    below is resolution-of-quantization independent.
+    """
+    r, g, b = rgba[..., 0], rgba[..., 1], rgba[..., 2]
+    return (0.299 * r + 0.587 * g + 0.114 * b) * (1.0 / 255.0)
+
+
+def core_mask(shape: tuple[int, int], core: jnp.ndarray) -> jnp.ndarray:
+    """Ownership mask from a ``core = [r0, r1, c0, c1]`` i32[4] operand.
+
+    Tiles overlap (see ``rust/src/imagery/tiler.rs``); every detection is
+    attributed to exactly one tile — the one whose core rectangle contains
+    it.  The rectangle is a *runtime operand* so one AOT executable serves
+    every tile position (interior, border, corner).
+    """
+    h, w = shape
+    rows = jnp.arange(h, dtype=jnp.int32)
+    cols = jnp.arange(w, dtype=jnp.int32)
+    row_ok = (rows >= core[0]) & (rows < core[1])
+    col_ok = (cols >= core[2]) & (cols < core[3])
+    return row_ok[:, None] & col_ok[None, :]
+
+
+def nms_mask(resp: jnp.ndarray, radius: int = 1) -> jnp.ndarray:
+    """Strict 2-D non-maximum suppression mask.
+
+    A pixel survives iff it equals the max over its ``(2r+1)^2`` window.
+    Plateau ties admit every plateau member — measurably rare on float
+    responses and identical to OpenCV's dilate-compare idiom.
+    """
+    size = 2 * radius + 1
+    pooled = lax.reduce_window(
+        resp,
+        -jnp.inf,
+        lax.max,
+        window_dimensions=(size, size),
+        window_strides=(1, 1),
+        padding="SAME",
+    )
+    return resp >= pooled
+
+
+def select_topk(
+    resp: jnp.ndarray, mask: jnp.ndarray, k: int
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Masked top-K keypoint selection over a dense response map.
+
+    Returns ``(count, scores, rows, cols)``:
+      count  — i32 scalar, the exact number of mask-true pixels (NOT capped
+               at K; Table 2 is computed from this, so the cap never skews
+               the census),
+      scores — f32[K] descending, NEG_LARGE beyond ``count``,
+      rows/cols — i32[K], INVALID_COORD beyond ``count``.
+    """
+    h, w = resp.shape
+    count = jnp.sum(mask, dtype=jnp.int32)
+    flat = jnp.where(mask, resp, NEG_LARGE).reshape(-1)
+    # NOTE: deliberately NOT lax.top_k — jax lowers it to the `topk(...,
+    # largest=true)` HLO instruction, which the xla_extension 0.5.1 text
+    # parser (the Rust runtime's XLA) rejects.  A descending variadic sort
+    # lowers to the classic `sort` op and round-trips cleanly; the flat
+    # index as sort value keeps ties in stable flat order, matching the
+    # Rust baseline's deterministic tie-break.
+    idx_all = jnp.arange(flat.shape[0], dtype=jnp.int32)
+    sorted_scores, sorted_idx = lax.sort((-flat, idx_all), num_keys=1)
+    scores = -sorted_scores[:k]
+    idx = sorted_idx[:k]
+    valid = scores > NEG_LARGE * 0.5
+    rows = jnp.where(valid, (idx // w).astype(jnp.int32), INVALID_COORD)
+    cols = jnp.where(valid, (idx % w).astype(jnp.int32), INVALID_COORD)
+    return count, scores.astype(jnp.float32), rows, cols
+
+
+def pad_for_patches(gray: jnp.ndarray, pad: int) -> jnp.ndarray:
+    """Edge-replicate pad so patch sampling near borders stays in-bounds."""
+    return jnp.pad(gray, ((pad, pad), (pad, pad)), mode="edge")
+
+
+def sample_points(
+    padded: jnp.ndarray,
+    rows: jnp.ndarray,
+    cols: jnp.ndarray,
+    dr: jnp.ndarray,
+    dc: jnp.ndarray,
+    pad: int,
+) -> jnp.ndarray:
+    """Nearest-neighbour sample ``padded`` at per-keypoint offset points.
+
+    ``rows/cols`` are i32[K] tile coordinates (possibly INVALID_COORD —
+    clamping keeps those reads in-bounds and the results are discarded via
+    the validity mask downstream).  ``dr/dc`` are f32[K, P] per-keypoint
+    offsets (already rotated, if the caller steers the pattern).  Returns
+    f32[K, P].
+    """
+    hp, wp = padded.shape
+    y = jnp.clip(
+        jnp.round(rows[:, None].astype(jnp.float32) + pad + dr).astype(jnp.int32),
+        0,
+        hp - 1,
+    )
+    x = jnp.clip(
+        jnp.round(cols[:, None].astype(jnp.float32) + pad + dc).astype(jnp.int32),
+        0,
+        wp - 1,
+    )
+    return padded[y, x]
+
+
+def extract_patches(
+    padded: jnp.ndarray, rows: jnp.ndarray, cols: jnp.ndarray, pad: int, size: int
+) -> jnp.ndarray:
+    """Gather an axis-aligned ``size``×``size`` patch around each keypoint.
+
+    The patch is centred: its top-left corner sits at ``(row - size//2,
+    col - size//2)`` in tile coordinates.  Returns f32[K, size, size].
+    """
+    half = size // 2
+
+    def one(r: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+        r0 = jnp.clip(r + pad - half, 0, padded.shape[0] - size)
+        c0 = jnp.clip(c + pad - half, 0, padded.shape[1] - size)
+        return lax.dynamic_slice(padded, (r0, c0), (size, size))
+
+    return jax.vmap(one)(rows, cols)
+
+
+def pack_bits_u32(bits: jnp.ndarray) -> jnp.ndarray:
+    """Pack a boolean ``[K, 32*W]`` matrix into ``u32[K, W]`` words.
+
+    Bit ``j`` of word ``w`` is comparison ``32*w + j`` — the layout the Rust
+    ``features::descriptor`` module mirrors for Hamming matching.
+    """
+    k, n = bits.shape
+    if n % 32 != 0:
+        raise ValueError(f"bit count {n} not a multiple of 32")
+    words = bits.reshape(k, n // 32, 32).astype(jnp.uint32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(words << shifts[None, None, :], axis=-1, dtype=jnp.uint32)
+
+
+def downsample2(x: jnp.ndarray) -> jnp.ndarray:
+    """2× decimation (every other pixel) — SIFT octave step."""
+    return x[::2, ::2]
+
+
+def upsample2_nn(x: jnp.ndarray) -> jnp.ndarray:
+    """2× nearest-neighbour upsample — maps octave-1 maps back to tile res."""
+    return jnp.repeat(jnp.repeat(x, 2, axis=0), 2, axis=1)

@@ -1,0 +1,73 @@
+"""AOT path tests: lowering produces rust-loadable HLO text + manifest."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot, model
+
+
+def test_output_spec_matches_algorithms():
+    for name in model.ALGORITHMS:
+        spec = aot.output_spec(name)
+        names = [s["name"] for s in spec]
+        assert names[:4] == ["count", "scores", "rows", "cols"]
+        desc = model.ALGORITHMS[name][1]
+        if desc is None:
+            assert len(spec) == 4
+        else:
+            assert names[4] == "desc"
+            assert spec[4]["dims"] == [model.TOPK[name], desc[1]]
+
+
+def test_lower_harris_hlo_text():
+    text = aot.lower_algorithm("harris")
+    assert text.startswith("HloModule")
+    # Entry layout mentions the input tile and the 4-element result tuple.
+    assert "f32[512,512,4]" in text
+    assert "s32[4]" in text  # the core-rectangle operand
+    assert "s32[2048]" in text
+    # HLO text ids must be parseable by xla_extension 0.5.1 (32-bit): the
+    # text format carries no explicit ids, which is exactly why we use it.
+    assert ".serialize" not in text
+
+
+def test_lower_rejects_unknown_algorithm():
+    with pytest.raises(KeyError):
+        aot.lower_algorithm("kaze")
+
+
+def test_cli_writes_artifacts(tmp_path):
+    rc = aot.main(["--out", str(tmp_path), "--algorithms", "fast"])
+    assert rc == 0
+    assert (tmp_path / "fast.hlo.txt").exists()
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["tile"] == model.TILE
+    assert "fast" in manifest["algorithms"]
+    entry = manifest["algorithms"]["fast"]
+    assert entry["file"] == "fast.hlo.txt"
+    assert entry["topk"] == model.TOPK["fast"]
+    assert entry["outputs"][0] == {"name": "count", "dtype": "i32", "dims": []}
+
+
+def test_cli_rejects_unknown(tmp_path):
+    with pytest.raises(SystemExit):
+        aot.main(["--out", str(tmp_path), "--algorithms", "nope"])
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="run `make artifacts` first",
+)
+def test_repo_manifest_covers_all_algorithms():
+    root = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    manifest = json.load(open(os.path.join(root, "manifest.json")))
+    assert set(manifest["algorithms"]) == set(model.ALGORITHMS)
+    for name, entry in manifest["algorithms"].items():
+        path = os.path.join(root, entry["file"])
+        assert os.path.exists(path), f"missing artifact {path}"
+        head = open(path).read(64)
+        assert head.startswith("HloModule"), f"{name}: not HLO text"

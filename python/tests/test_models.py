@@ -1,0 +1,360 @@
+"""Behavioural tests for the seven L2 algorithm graphs (model.py).
+
+Each test drives the *same* graph objects that aot.py lowers into the
+artifacts, on synthetic tiles with known structure: flat tiles must yield
+zero features, corner-rich tiles must light up the corner detectors at the
+right locations, and every output must honour the manifest contract
+(dtypes, shapes, sentinels, exact counts).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model, ops
+
+TILE = model.TILE
+
+
+def _rgba(gray01: np.ndarray) -> jnp.ndarray:
+    """Promote a [0,1] grayscale image to the RGBA f32 tile layout."""
+    g = (gray01 * 255.0).astype(np.float32)
+    return jnp.asarray(np.stack([g, g, g, np.full_like(g, 255.0)], axis=-1))
+
+
+def _checkerboard(n: int = TILE, cell: int = 32) -> np.ndarray:
+    idx = np.arange(n) // cell
+    return ((idx[:, None] + idx[None, :]) % 2).astype(np.float32)
+
+
+FULL_CORE = jnp.asarray([0, TILE, 0, TILE], jnp.int32)
+
+
+@pytest.fixture(scope="module")
+def jitted():
+    """Jitted graphs with the full-tile core bound (most tests don't care
+    about seam attribution; test_core_operand exercises it explicitly)."""
+    out = {}
+    pat_a, pat_b = jnp.asarray(model.BRIEF_A), jnp.asarray(model.BRIEF_B)
+    for name, (b, _) in model.ALGORITHMS.items():
+        fn = jax.jit(b())
+        if model.takes_pattern(name):
+            out[name] = (lambda f: (lambda tile: f(tile, FULL_CORE, pat_a, pat_b)))(fn)
+        else:
+            out[name] = (lambda f: (lambda tile: f(tile, FULL_CORE)))(fn)
+    return out
+
+
+@pytest.fixture(scope="module")
+def checker_out(jitted):
+    tile = _rgba(_checkerboard())
+    return {name: jax.tree.map(np.asarray, fn(tile)) for name, fn in jitted.items()}
+
+
+# ---------------------------------------------------------------------------
+# Contract: shapes, dtypes, sentinels
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", list(model.ALGORITHMS))
+def test_output_contract(name, checker_out):
+    out = checker_out[name]
+    k = model.TOPK[name]
+    count, scores, rows, cols = out[0], out[1], out[2], out[3]
+    assert count.dtype == np.int32 and count.shape == ()
+    assert scores.shape == (k,) and scores.dtype == np.float32
+    assert rows.shape == (k,) and rows.dtype == np.int32
+    assert cols.shape == (k,) and cols.dtype == np.int32
+
+    n = min(int(count), k)
+    valid_r, valid_c = rows[:n], cols[:n]
+    assert np.all((valid_r >= 0) & (valid_r < TILE))
+    assert np.all((valid_c >= 0) & (valid_c < TILE))
+    assert np.all(rows[n:] == ops.INVALID_COORD)
+    assert np.all(np.diff(scores[:n]) <= 1e-5)  # descending
+
+    desc_spec = model.ALGORITHMS[name][1]
+    if desc_spec is None:
+        assert len(out) == 4
+    else:
+        dtype, width = desc_spec
+        desc = out[4]
+        assert desc.shape == (k, width)
+        assert desc.dtype == (np.float32 if dtype == "f32" else np.uint32)
+
+
+@pytest.mark.parametrize("name", list(model.ALGORITHMS))
+def test_flat_tile_zero_features(name, jitted):
+    """No structure → zero count, all-sentinel coordinates."""
+    out = jax.tree.map(np.asarray, jitted[name](_rgba(np.full((TILE, TILE), 0.5))))
+    assert int(out[0]) == 0, f"{name} found features in a flat tile"
+    assert np.all(out[2] == ops.INVALID_COORD)
+
+
+# ---------------------------------------------------------------------------
+# Detector semantics
+# ---------------------------------------------------------------------------
+
+
+def test_corner_detectors_hit_checkerboard_junctions(checker_out):
+    """Checkerboard cell junctions are ideal structure-tensor corners:
+    Harris and Shi-Tomasi must place their keypoints on the 32-px lattice.
+
+    (FAST is tested on isolated squares instead — a perfect checkerboard
+    junction splits the Bresenham circle 8/8, below the 9-contiguous arc,
+    which is FAST's textbook failure case and *should* yield nothing.)
+    """
+    for name in ("harris", "shi_tomasi"):
+        count, _, rows, cols = checker_out[name][:4]
+        n = min(int(count), model.TOPK[name])
+        assert n > 0, f"{name} found nothing on a checkerboard"
+        r_off = np.minimum(rows[:n] % 32, 32 - rows[:n] % 32)
+        c_off = np.minimum(cols[:n] % 32, 32 - cols[:n] % 32)
+        near = (r_off <= 2) & (c_off <= 2)
+        frac = near.mean()
+        assert frac > 0.9, f"{name}: only {frac:.0%} of corners on junctions"
+
+
+def _squares(n: int = TILE, size: int = 32, pitch: int = 64) -> np.ndarray:
+    """Bright isolated squares on dark ground; corners at known offsets."""
+    img = np.zeros((n, n), np.float32)
+    for r0 in range(16, n - size, pitch):
+        for c0 in range(16, n - size, pitch):
+            img[r0 : r0 + size, c0 : c0 + size] = 1.0
+    return img
+
+
+def test_fast_and_orb_hit_square_corners(jitted):
+    """Corners of isolated squares expose a >=12-contiguous arc: FAST (and
+    ORB, which seeds from FAST) must fire on — and only near — them."""
+    tile = _rgba(_squares())
+    corner_offsets = {15, 16, 47, 48}  # square edges at 16 and 48 (mod 64)
+    for name in ("fast", "orb"):
+        out = jax.tree.map(np.asarray, jitted[name](tile))
+        count, rows, cols = int(out[0]), out[2], out[3]
+        n = min(count, model.TOPK[name])
+        assert n > 0, f"{name} found nothing on isolated squares"
+        r_ok = np.isin(rows[:n] % 64, list(corner_offsets)) | (
+            np.isin((rows[:n] - 1) % 64, list(corner_offsets))
+        ) | np.isin((rows[:n] + 1) % 64, list(corner_offsets))
+        c_ok = np.isin(cols[:n] % 64, list(corner_offsets)) | (
+            np.isin((cols[:n] - 1) % 64, list(corner_offsets))
+        ) | np.isin((cols[:n] + 1) % 64, list(corner_offsets))
+        frac = (r_ok & c_ok).mean()
+        assert frac > 0.9, f"{name}: only {frac:.0%} on square corners"
+
+
+def test_fast_rejects_perfect_checkerboard(checker_out):
+    """The 8/8 circle split at checkerboard junctions defeats FAST-9 —
+    locking in the detector's arc semantics (segment test, not gradient)."""
+    assert int(checker_out["fast"][0]) == 0
+
+
+def test_checkerboard_corner_census(checker_out):
+    """~(TILE/32 - 1)^2 interior junctions exist; Harris should find about
+    one corner per junction (NMS collapses each to a point)."""
+    expected = (TILE // 32 - 1) ** 2  # 225 for 512/32
+    count = int(checker_out["harris"][0])
+    # A perfectly symmetric junction yields a 2x2 response plateau, and
+    # strict NMS admits every plateau member → up to 4 detections/junction.
+    assert 0.5 * expected < count <= 4.0 * expected
+
+
+def test_fast_needs_contrast(jitted):
+    """FAST's segment test needs |delta| > t: low-contrast squares
+    (delta < t) yield nothing, high-contrast ones plenty."""
+    lo = _rgba(0.5 + 0.4 * model.PARAMS["fast_t"] * _squares())
+    hi = _rgba(_squares())
+    assert int(np.asarray(jitted["fast"](lo)[0])) == 0
+    assert int(np.asarray(jitted["fast"](hi)[0])) > 100
+
+
+def test_sift_finds_blobs_not_edges(jitted):
+    """DoG responds to blobs: an isolated Gaussian spot must be detected;
+    a pure straight edge must be (mostly) rejected by the edge filter."""
+    yy, xx = np.mgrid[0:TILE, 0:TILE].astype(np.float32)
+    spot = np.exp(-(((yy - 256) ** 2 + (xx - 256) ** 2) / (2 * 6.0**2)))
+    out = jax.tree.map(np.asarray, jitted["sift"](_rgba(spot)))
+    count, rows, cols = int(out[0]), out[2], out[3]
+    assert count >= 1
+    n = min(count, model.TOPK["sift"])
+    d = np.sqrt((rows[:n] - 256.0) ** 2 + (cols[:n] - 256.0) ** 2)
+    assert d.min() < 6.0, "SIFT keypoint not on the blob centre"
+
+    edge = np.zeros((TILE, TILE), np.float32)
+    edge[:, 256:] = 1.0
+    out_e = jax.tree.map(np.asarray, jitted["sift"](_rgba(edge)))
+    assert int(out_e[0]) <= count * 4  # edge may ring a little, never explode
+
+
+def test_surf_detects_blob_scale_pair(jitted):
+    yy, xx = np.mgrid[0:TILE, 0:TILE].astype(np.float32)
+    img = np.zeros((TILE, TILE), np.float32)
+    for cy, cx, s in ((128, 128, 3.0), (384, 384, 6.0)):
+        img += np.exp(-(((yy - cy) ** 2 + (xx - cx) ** 2) / (2 * s**2)))
+    out = jax.tree.map(np.asarray, jitted["surf"](_rgba(img)))
+    count, rows, cols = int(out[0]), out[2], out[3]
+    assert count >= 2
+    n = min(count, model.TOPK["surf"])
+    pts = np.stack([rows[:n], cols[:n]], 1).astype(np.float32)
+    for cy, cx in ((128, 128), (384, 384)):
+        d = np.sqrt(((pts - np.array([cy, cx])) ** 2).sum(1))
+        assert d.min() < 4.0, f"SURF missed the blob at ({cy},{cx})"
+
+
+# ---------------------------------------------------------------------------
+# Descriptor semantics
+# ---------------------------------------------------------------------------
+
+
+def test_sift_descriptors_normalized(checker_out):
+    count, _, _, _, desc = checker_out["sift"]
+    n = min(int(count), model.TOPK["sift"])
+    if n == 0:
+        pytest.skip("no SIFT keypoints on checkerboard")
+    norms = np.linalg.norm(desc[:n], axis=1)
+    np.testing.assert_allclose(norms, 1.0, atol=1e-3)
+    assert np.all(desc[:n] >= 0.0) and np.all(desc[:n] <= 0.2 + 1e-3)
+
+
+def test_surf_descriptors_normalized(checker_out):
+    count, _, _, _, desc = checker_out["surf"]
+    n = min(int(count), model.TOPK["surf"])
+    if n == 0:
+        pytest.skip("no SURF keypoints on checkerboard")
+    np.testing.assert_allclose(np.linalg.norm(desc[:n], axis=1), 1.0, atol=1e-3)
+
+
+def test_brief_descriptors_deterministic(jitted):
+    """Same tile → bit-identical binary descriptors (pure function)."""
+    tile = _rgba(_checkerboard(cell=24))
+    d1 = np.asarray(jitted["brief"](tile)[4])
+    d2 = np.asarray(jitted["brief"](tile)[4])
+    np.testing.assert_array_equal(d1, d2)
+
+
+def test_orb_steering_changes_bits(jitted):
+    """Rotating the image must rotate ORB's descriptor frame: descriptors
+    of a 90°-rotated tile stay similar to the originals (steering works),
+    while *unsteered* BRIEF bits on the rotated tile diverge."""
+    rng = np.random.default_rng(5)
+    base = rng.uniform(0, 1, size=(TILE, TILE)).astype(np.float32)
+    base = np.asarray(
+        jnp.asarray(base)
+    )  # keep as-is; texture-rich random field
+    rot = np.rot90(base).copy()
+
+    out_a = jax.tree.map(np.asarray, jitted["orb"](_rgba(base)))
+    out_b = jax.tree.map(np.asarray, jitted["orb"](_rgba(rot)))
+    na = min(int(out_a[0]), model.TOPK["orb"])
+    nb = min(int(out_b[0]), model.TOPK["orb"])
+    assert na > 0 and nb > 0
+
+    # Match keypoints across the rotation: (r, c) -> (TILE-1-c, r) for rot90.
+    pts_a = {(int(r), int(c)): i for i, (r, c) in enumerate(zip(out_a[2][:na], out_a[3][:na]))}
+    pairs = []
+    for j in range(nb):
+        rb, cb = int(out_b[2][j]), int(out_b[3][j])
+        # inverse map of np.rot90 (counter-clockwise): a_row=cb, a_col=TILE-1-rb
+        key = (cb, TILE - 1 - rb)
+        if key in pts_a:
+            pairs.append((pts_a[key], j))
+    if len(pairs) < 10:
+        pytest.skip(f"only {len(pairs)} rotation-stable keypoints")
+
+    da, db = out_a[4], out_b[4]
+
+    def hamming(x, y):
+        return bin(int(np.bitwise_xor(x, y).astype(np.uint64).sum()))  # unused
+
+    dists = []
+    for ia, jb in pairs:
+        x = np.bitwise_xor(da[ia], db[jb])
+        dists.append(sum(int(v).bit_count() for v in x))
+    mean_steered = np.mean(dists)
+    # Random 256-bit strings differ in ~128 bits; steered matches must do
+    # far better on average.
+    assert mean_steered < 100, f"steered ORB hamming {mean_steered:.1f}"
+
+
+def test_brief_count_sparser_than_fast(jitted):
+    """Table 2's ordering: BRIEF's sparse detector finds far fewer points
+    than FAST on the same textured tile."""
+    rng = np.random.default_rng(9)
+    tex = np.clip(
+        _squares() * 0.8 + 0.1 + 0.05 * rng.normal(size=(TILE, TILE)), 0, 1
+    ).astype(np.float32)
+    tile = _rgba(tex)
+    n_fast = int(np.asarray(jitted["fast"](tile)[0]))
+    n_brief = int(np.asarray(jitted["brief"](tile)[0]))
+    assert n_brief * 5 < n_fast
+
+
+# ---------------------------------------------------------------------------
+# Invariance properties
+# ---------------------------------------------------------------------------
+
+
+def test_harris_translation_equivariance(jitted):
+    """Shifting the image shifts the keypoints (away from borders)."""
+    rng = np.random.default_rng(3)
+    img = rng.uniform(0, 1, size=(TILE, TILE)).astype(np.float32)
+    shift = 16
+    shifted = np.roll(img, (shift, shift), axis=(0, 1))
+
+    out_a = jax.tree.map(np.asarray, jitted["harris"](_rgba(img)))
+    out_b = jax.tree.map(np.asarray, jitted["harris"](_rgba(shifted)))
+    na = min(int(out_a[0]), model.TOPK["harris"])
+    nb = min(int(out_b[0]), model.TOPK["harris"])
+    pts_a = set()
+    for r, c in zip(out_a[2][:na], out_a[3][:na]):
+        if 32 <= r < TILE - 32 and 32 <= c < TILE - 32:
+            pts_a.add((int(r) + shift, int(c) + shift))
+    hits = sum(
+        (int(r), int(c)) in pts_a for r, c in zip(out_b[2][:nb], out_b[3][:nb])
+    )
+    assert hits > 0.7 * len(pts_a)
+
+
+def test_counts_scale_with_texture_density(jitted):
+    """More junctions → more corners: the census respects density."""
+    t_sparse = _rgba(_checkerboard(cell=128))
+    t_dense = _rgba(_checkerboard(cell=16))
+    for name in ("harris", "shi_tomasi"):
+        n_sparse = int(np.asarray(jitted[name](t_sparse)[0]))
+        n_dense = int(np.asarray(jitted[name](t_dense)[0]))
+        assert n_dense > 4 * max(n_sparse, 1), name
+
+
+def test_core_operand_restricts_census_and_keypoints():
+    """The core rectangle operand must bound both the count and the
+    keypoint coordinates — the property the tiler's exactness rests on."""
+    rng = np.random.default_rng(2)
+    tile = _rgba(rng.uniform(0, 1, size=(TILE, TILE)).astype(np.float32))
+    core = jnp.asarray([32, 200, 64, 300], jnp.int32)
+    for name in ("harris", "fast", "sift"):
+        fn = jax.jit(model.ALGORITHMS[name][0]())
+        full = jax.tree.map(np.asarray, fn(tile, FULL_CORE))
+        sub = jax.tree.map(np.asarray, fn(tile, core))
+        assert int(sub[0]) < int(full[0]), name
+        n = min(int(sub[0]), model.TOPK[name])
+        rows, cols = sub[2][:n], sub[3][:n]
+        valid = rows >= 0
+        assert np.all((rows[valid] >= 32) & (rows[valid] < 200)), name
+        assert np.all((cols[valid] >= 64) & (cols[valid] < 300)), name
+
+
+def test_core_censuses_tile_additively():
+    """Two disjoint cores' counts must sum to their union's count —
+    the exact-partition property Table 2 aggregation relies on."""
+    rng = np.random.default_rng(3)
+    tile = _rgba(rng.uniform(0, 1, size=(TILE, TILE)).astype(np.float32))
+    fn = jax.jit(model.ALGORITHMS["harris"][0]())
+    top = jnp.asarray([0, 256, 0, TILE], jnp.int32)
+    bottom = jnp.asarray([256, TILE, 0, TILE], jnp.int32)
+    n_top = int(np.asarray(fn(tile, top)[0]))
+    n_bottom = int(np.asarray(fn(tile, bottom)[0]))
+    n_full = int(np.asarray(fn(tile, FULL_CORE)[0]))
+    assert n_top + n_bottom == n_full

@@ -1,0 +1,179 @@
+"""Unit + property tests for the shared L2 ops (ops.py)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import ops
+
+settings.register_profile("difet", deadline=None, max_examples=25)
+settings.load_profile("difet")
+
+
+# ---------------------------------------------------------------------------
+# grayscale
+# ---------------------------------------------------------------------------
+
+
+def test_grayscale_weights_and_range():
+    rgba = np.zeros((4, 4, 4), np.float32)
+    rgba[..., 0] = 255.0  # pure red
+    g = np.asarray(ops.grayscale(jnp.asarray(rgba)))
+    np.testing.assert_allclose(g, 0.299, rtol=1e-6)
+
+    rgba = np.full((4, 4, 4), 255.0, np.float32)
+    g = np.asarray(ops.grayscale(jnp.asarray(rgba)))
+    np.testing.assert_allclose(g, 1.0, rtol=1e-5)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_grayscale_ignores_alpha(seed):
+    rng = np.random.default_rng(seed)
+    rgba = rng.uniform(0, 255, size=(8, 8, 4)).astype(np.float32)
+    other = rgba.copy()
+    other[..., 3] = rng.uniform(0, 255, size=(8, 8)).astype(np.float32)
+    a = np.asarray(ops.grayscale(jnp.asarray(rgba)))
+    b = np.asarray(ops.grayscale(jnp.asarray(other)))
+    np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# nms_mask
+# ---------------------------------------------------------------------------
+
+
+@given(seed=st.integers(0, 2**31 - 1), radius=st.integers(1, 3))
+def test_nms_survivors_are_local_maxima(seed, radius):
+    rng = np.random.default_rng(seed)
+    resp = rng.normal(size=(24, 24)).astype(np.float32)
+    mask = np.asarray(ops.nms_mask(jnp.asarray(resp), radius=radius))
+    h, w = resp.shape
+    for r in range(h):
+        for c in range(w):
+            if mask[r, c]:
+                r0, r1 = max(0, r - radius), min(h, r + radius + 1)
+                c0, c1 = max(0, c - radius), min(w, c + radius + 1)
+                assert resp[r, c] >= resp[r0:r1, c0:c1].max() - 1e-7
+
+
+def test_nms_single_peak():
+    resp = np.zeros((16, 16), np.float32)
+    resp[5, 9] = 1.0
+    mask = np.asarray(ops.nms_mask(jnp.asarray(resp)))
+    assert mask[5, 9]
+    # Only the peak and the flat-zero plateau survive; the peak's ring dies.
+    assert not mask[5, 8] and not mask[4, 9] and not mask[6, 10]
+
+
+# ---------------------------------------------------------------------------
+# select_topk
+# ---------------------------------------------------------------------------
+
+
+@given(seed=st.integers(0, 2**31 - 1), k=st.sampled_from([4, 16, 64]))
+def test_select_topk_contract(seed, k):
+    rng = np.random.default_rng(seed)
+    resp = rng.normal(size=(16, 16)).astype(np.float32)
+    mask = rng.uniform(size=(16, 16)) < 0.15
+    count, scores, rows, cols = (
+        np.asarray(o)
+        for o in ops.select_topk(jnp.asarray(resp), jnp.asarray(mask), k)
+    )
+    n = int(mask.sum())
+    assert count == n  # census is exact, never capped by K
+    m = min(n, k)
+    # Scores descending over the valid prefix.
+    assert np.all(np.diff(scores[:m]) <= 1e-6)
+    # Valid prefix points at mask-true pixels with matching scores.
+    for i in range(m):
+        r, c = int(rows[i]), int(cols[i])
+        assert mask[r, c]
+        assert abs(scores[i] - resp[r, c]) < 1e-6
+    # Sentinels beyond the valid prefix.
+    assert np.all(rows[m:] == ops.INVALID_COORD)
+    assert np.all(cols[m:] == ops.INVALID_COORD)
+
+
+def test_select_topk_empty_mask():
+    resp = jnp.zeros((8, 8), jnp.float32)
+    mask = jnp.zeros((8, 8), bool)
+    count, scores, rows, cols = ops.select_topk(resp, mask, 8)
+    assert int(count) == 0
+    assert np.all(np.asarray(rows) == ops.INVALID_COORD)
+
+
+# ---------------------------------------------------------------------------
+# pack_bits_u32
+# ---------------------------------------------------------------------------
+
+
+@given(seed=st.integers(0, 2**31 - 1), words=st.integers(1, 8))
+def test_pack_bits_roundtrip(seed, words):
+    rng = np.random.default_rng(seed)
+    bits = rng.uniform(size=(5, 32 * words)) < 0.5
+    packed = np.asarray(ops.pack_bits_u32(jnp.asarray(bits)))
+    assert packed.shape == (5, words)
+    assert packed.dtype == np.uint32
+    # Unpack in numpy and compare (defines the layout Rust mirrors).
+    unpacked = np.zeros_like(bits)
+    for w in range(words):
+        for j in range(32):
+            unpacked[:, 32 * w + j] = (packed[:, w] >> j) & 1
+    np.testing.assert_array_equal(unpacked.astype(bool), bits)
+
+
+def test_pack_bits_rejects_ragged():
+    import pytest
+
+    with pytest.raises(ValueError):
+        ops.pack_bits_u32(jnp.zeros((2, 33), bool))
+
+
+# ---------------------------------------------------------------------------
+# patch sampling
+# ---------------------------------------------------------------------------
+
+
+def test_extract_patches_centering():
+    img = np.arange(100, dtype=np.float32).reshape(10, 10)
+    pad = 6
+    padded = ops.pad_for_patches(jnp.asarray(img), pad)
+    rows = jnp.asarray([5], jnp.int32)
+    cols = jnp.asarray([7], jnp.int32)
+    patch = np.asarray(ops.extract_patches(padded, rows, cols, pad, 3))[0]
+    # Centre of the 3x3 patch is the keypoint pixel.
+    assert patch[1, 1] == img[5, 7]
+    assert patch[0, 0] == img[4, 6]
+
+
+def test_sample_points_clamps_out_of_bounds():
+    img = jnp.asarray(np.ones((8, 8), np.float32))
+    pad = 4
+    padded = ops.pad_for_patches(img, pad)
+    rows = jnp.asarray([ops.INVALID_COORD], jnp.int32)  # sentinel keypoint
+    cols = jnp.asarray([ops.INVALID_COORD], jnp.int32)
+    dr = jnp.full((1, 3), -100.0)
+    dc = jnp.full((1, 3), 100.0)
+    vals = np.asarray(ops.sample_points(padded, rows, cols, dr, dc, pad))
+    assert np.all(np.isfinite(vals))  # clamped, never OOB
+
+
+# ---------------------------------------------------------------------------
+# resampling
+# ---------------------------------------------------------------------------
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_down_up_sample_shapes(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(16, 12)).astype(np.float32))
+    d = ops.downsample2(x)
+    assert d.shape == (8, 6)
+    u = ops.upsample2_nn(d)
+    assert u.shape == (16, 12)
+    # NN upsample replicates each decimated pixel into a 2x2 block.
+    un = np.asarray(u)
+    dn = np.asarray(d)
+    assert np.all(un[0:2, 0:2] == dn[0, 0])
+    assert np.all(un[2:4, 4:6] == dn[1, 2])

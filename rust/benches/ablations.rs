@@ -1,0 +1,199 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//!   A1  locality-aware vs random task placement (remote-read bytes),
+//!   A2  speculative execution on/off under an injected straggler,
+//!   A3  HIB codec: deflate vs raw (bundle size + decode bandwidth),
+//!   A4  DFS block size sweep (task count / locality interaction),
+//!   A5  backpressure queue depth sweep (ingest wall time).
+
+use difet::config::Config;
+use difet::coordinator::backpressure::BoundedQueue;
+use difet::coordinator::driver::{JobHooks, NativeExecutor};
+use difet::coordinator::{run_job, JobSpec, TileExecutor};
+use difet::dfs::Dfs;
+use difet::hib::{codec, Codec};
+use difet::imagery::SceneGenerator;
+use difet::metrics::Registry;
+use difet::pipeline::ingest_corpus;
+use difet::util::bench::{bench, bench_once};
+use difet::util::fmt;
+
+fn base_cfg() -> Config {
+    let mut cfg = Config::new();
+    cfg.scene.width = 896;
+    cfg.scene.height = 896;
+    cfg.cluster.nodes = 4;
+    cfg.cluster.slots_per_node = 2;
+    cfg.cluster.job_startup = 0.5;
+    cfg.storage.block_size = 2 << 20;
+    cfg
+}
+
+fn main() {
+    ablation_locality();
+    ablation_speculation();
+    ablation_codec();
+    ablation_block_size();
+    ablation_queue_depth();
+}
+
+/// A1: locality-aware scheduling should convert remote reads into local
+/// ones; we report the data-local task fraction under both policies.
+fn ablation_locality() {
+    println!("\n== A1: locality-aware vs random placement ==");
+    for locality in [true, false] {
+        let mut cfg = base_cfg();
+        cfg.scheduler.locality_aware = locality;
+        // Replication 1 so each split lives on exactly one node — the
+        // configuration where placement policy actually matters (at the
+        // Hadoop default of 3-of-4 nodes, any policy is ~75% local).
+        cfg.cluster.replication = 1;
+        let dfs = Dfs::new(cfg.cluster.nodes, cfg.storage.block_size, cfg.cluster.replication);
+        let info = ingest_corpus(&cfg, &dfs, 8, "/a1.hib").unwrap();
+        let registry = Registry::new();
+        let mut spec = JobSpec::new("harris", &info.bundle_path);
+        spec.write_output = false;
+        let (rep, _) = bench_once(
+            &format!("harris 8 scenes, locality_aware={locality}"),
+            || run_job(&cfg, &dfs, &NativeExecutor, &spec, &registry, &JobHooks::default()).unwrap(),
+        );
+        let local = rep.counter("data_local_tasks");
+        let remote = rep.counter("rack_remote_tasks");
+        println!(
+            "    locality={locality}: {local} local / {remote} remote tasks, sim {}",
+            fmt::duration(rep.sim_seconds)
+        );
+    }
+}
+
+/// A2: with one straggling slot, speculation should not hurt correctness
+/// and should bound the tail (we report sim time with/without).
+fn ablation_speculation() {
+    println!("\n== A2: speculative execution under a straggler ==");
+
+    struct Straggler(std::sync::atomic::AtomicU64);
+    impl TileExecutor for Straggler {
+        fn run_tile(
+            &self,
+            alg: &str,
+            tile: &[f32],
+            core: [i32; 4],
+        ) -> difet::Result<difet::runtime::TileFeatures> {
+            use std::sync::atomic::Ordering;
+            if self.0.fetch_add(1, Ordering::Relaxed) % 37 == 5 {
+                std::thread::sleep(std::time::Duration::from_millis(40));
+            }
+            NativeExecutor.run_tile(alg, tile, core)
+        }
+        fn label(&self) -> &'static str {
+            "straggler"
+        }
+    }
+
+    for speculation in [false, true] {
+        let mut cfg = base_cfg();
+        cfg.scheduler.speculation = speculation;
+        cfg.scheduler.speculation_slowness = 0.9;
+        let dfs = Dfs::new(cfg.cluster.nodes, cfg.storage.block_size, cfg.cluster.replication);
+        let info = ingest_corpus(&cfg, &dfs, 8, "/a2.hib").unwrap();
+        let registry = Registry::new();
+        let mut spec = JobSpec::new("fast", &info.bundle_path);
+        spec.write_output = false;
+        let exec = Straggler(Default::default());
+        let (rep, _) = bench_once(&format!("fast 8 scenes, speculation={speculation}"), || {
+            run_job(&cfg, &dfs, &exec, &spec, &registry, &JobHooks::default()).unwrap()
+        });
+        println!(
+            "    speculation={speculation}: sim {}, wall {}, speculative launches {}",
+            fmt::duration(rep.sim_seconds),
+            fmt::duration(rep.wall_seconds),
+            rep.counter("speculative_launches"),
+        );
+    }
+}
+
+/// A3: deflate shrinks synthetic-scene bundles hugely; what does decoding
+/// cost?  (`StorageConfig.compress` trades DFS bytes for CPU.)
+fn ablation_codec() {
+    println!("\n== A3: HIB codec deflate vs raw ==");
+    let cfg = base_cfg();
+    let scene = SceneGenerator::new(cfg.scene.clone()).scene(0);
+    let raw_len = scene.image.data.len();
+
+    for (name, codec_kind) in [("raw", Codec::Raw), ("deflate-1", Codec::Deflate)] {
+        let encoded = codec::encode(codec_kind, &scene.image.data, 1).unwrap();
+        let m = bench(&format!("decode {name} ({} scene)", fmt::bytes(raw_len as u64)), 1, 5, || {
+            let out = codec::decode(codec_kind, &encoded, raw_len).unwrap();
+            std::hint::black_box(out.len());
+        });
+        println!(
+            "    {name}: encoded {} ({:.1}% of raw), decode {}",
+            fmt::bytes(encoded.len() as u64),
+            100.0 * encoded.len() as f64 / raw_len as f64,
+            m.throughput_str(raw_len as u64),
+        );
+    }
+}
+
+/// A4: smaller DFS blocks → more splits → more tasks (scheduling overhead)
+/// but finer load balance.
+fn ablation_block_size() {
+    println!("\n== A4: DFS block size sweep ==");
+    for mb in [1usize, 4, 16, 64] {
+        let mut cfg = base_cfg();
+        cfg.storage.block_size = mb << 20;
+        cfg.scheduler.split_per_image = false; // plain-Hadoop FileSplits
+        let dfs = Dfs::new(cfg.cluster.nodes, cfg.storage.block_size, cfg.cluster.replication);
+        let info = ingest_corpus(&cfg, &dfs, 6, "/a4.hib").unwrap();
+        let registry = Registry::new();
+        let mut spec = JobSpec::new("harris", &info.bundle_path);
+        spec.write_output = false;
+        let rep = run_job(&cfg, &dfs, &NativeExecutor, &spec, &registry, &JobHooks::default()).unwrap();
+        println!(
+            "    block={mb:>2} MiB: {:>2} tasks, sim {}, local {}/{}",
+            rep.counter("tasks"),
+            fmt::duration(rep.sim_seconds),
+            rep.counter("data_local_tasks"),
+            rep.counter("data_local_tasks") + rep.counter("rack_remote_tasks"),
+        );
+    }
+}
+
+/// A5: the bounded ingest queue — depth 1 serializes generator/committer,
+/// deeper queues overlap them until generation saturates.
+fn ablation_queue_depth() {
+    println!("\n== A5: backpressure queue depth (producer/consumer overlap) ==");
+    for depth in [1usize, 2, 8, 32] {
+        let m = bench(&format!("queue depth {depth}, 64 items, 4→1 threads"), 1, 3, || {
+            let q = BoundedQueue::new(depth);
+            std::thread::scope(|s| {
+                for t in 0..4 {
+                    let q = &q;
+                    s.spawn(move || {
+                        for i in 0..16u32 {
+                            // Simulated generation work.
+                            let mut acc = 0u64;
+                            for k in 0..40_000 {
+                                acc = acc.wrapping_add((k ^ (t * 16 + i) as u64).wrapping_mul(31));
+                            }
+                            q.push(acc).unwrap();
+                        }
+                    });
+                }
+                let q = &q;
+                s.spawn(move || {
+                    for _ in 0..64 {
+                        let v = q.pop().unwrap();
+                        // Simulated commit work.
+                        let mut acc = v;
+                        for k in 0..10_000u64 {
+                            acc = acc.wrapping_mul(6364136223846793005).wrapping_add(k);
+                        }
+                        std::hint::black_box(acc);
+                    }
+                });
+            });
+        });
+        let _ = m;
+    }
+}

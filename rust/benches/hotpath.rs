@@ -1,0 +1,104 @@
+//! Hot-path microbenches (§Perf): per-tile latency of every algorithm on
+//! both executors, the L1 kernel twins, HIB decode, scene generation and
+//! the DFS read path.  This is the profile the optimization pass iterates
+//! against; before/after numbers live in EXPERIMENTS.md §Perf.
+
+use difet::config::SceneConfig;
+use difet::coordinator::driver::{NativeExecutor, TileExecutor};
+use difet::dfs::{Dfs, NodeId};
+use difet::features::{conv, gray::GrayImage, harris};
+use difet::imagery::tiler::{extract_tile_f32, TileIter};
+use difet::imagery::SceneGenerator;
+use difet::runtime::{artifacts_available, Engine};
+use difet::util::bench::bench;
+use difet::util::fmt;
+use difet::TILE;
+
+fn test_tile() -> Vec<f32> {
+    let mut cfg = SceneConfig::default();
+    cfg.width = TILE;
+    cfg.height = TILE;
+    let scene = SceneGenerator::new(cfg).scene(0);
+    let t = TileIter::new(TILE, TILE).next().unwrap();
+    extract_tile_f32(&scene.image, &t)
+}
+
+const FULL: [i32; 4] = [0, TILE as i32, 0, TILE as i32];
+
+fn main() {
+    let tile = test_tile();
+
+    // --- per-tile algorithm latency: PJRT engine ------------------------
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if artifacts_available(&dir) {
+        let engine = Engine::load(&dir).expect("engine");
+        println!("== per-tile latency, PJRT executor (512x512 RGBA) ==");
+        for alg in difet::ALGORITHMS {
+            bench(&format!("pjrt/{alg}"), 2, 8, || {
+                std::hint::black_box(engine.run(alg, &tile, FULL).unwrap().count);
+            });
+        }
+    } else {
+        println!("(skipping PJRT benches: run `make artifacts`)");
+    }
+
+    // --- per-tile algorithm latency: native baseline --------------------
+    println!("\n== per-tile latency, native executor ==");
+    for alg in difet::ALGORITHMS {
+        bench(&format!("native/{alg}"), 1, 5, || {
+            std::hint::black_box(NativeExecutor.run_tile(alg, &tile, FULL).unwrap().count);
+        });
+    }
+
+    // --- L1 kernel twins -------------------------------------------------
+    println!("\n== L1 primitive twins (native side) ==");
+    let gray = GrayImage::from_tile_f32(&tile, TILE, TILE);
+    let px_bytes = (TILE * TILE * 4) as u64;
+    let m = bench("gaussian blur σ=1.6 r=5 (512²)", 2, 10, || {
+        std::hint::black_box(conv::blur(&gray, 1.6, 5).data[0]);
+    });
+    println!("    ≈ {}", m.throughput_str(px_bytes));
+    let m = bench("structure response harris (512²)", 2, 10, || {
+        std::hint::black_box(harris::response(&gray, harris::Mode::Harris).data[0]);
+    });
+    println!("    ≈ {}", m.throughput_str(px_bytes));
+
+    // --- substrate paths --------------------------------------------------
+    println!("\n== substrate paths ==");
+    let mut scfg = SceneConfig::default();
+    scfg.width = 1024;
+    scfg.height = 1024;
+    let gen = SceneGenerator::new(scfg.clone());
+    let m = bench("scene generation 1024²", 1, 5, || {
+        std::hint::black_box(gen.scene(1).image.data.len());
+    });
+    println!("    ≈ {}", m.throughput_str((1024 * 1024 * 4) as u64));
+
+    let scene = gen.scene(0);
+    let mut writer = difet::hib::BundleWriter::new(difet::hib::Codec::Deflate, 1);
+    writer.add_image(0, &scene.image).unwrap();
+    let bundle = writer.finish();
+    let m = bench("HIB open+decode 1 scene (deflate)", 1, 8, || {
+        let r = difet::hib::BundleReader::open(&bundle).unwrap();
+        std::hint::black_box(r.read_image(0).unwrap().1.data.len());
+    });
+    println!(
+        "    ≈ {} decode ({} bundle)",
+        m.throughput_str(scene.image.byte_len() as u64),
+        fmt::bytes(bundle.len() as u64)
+    );
+
+    let dfs = Dfs::new(4, 4 << 20, 3);
+    dfs.write_file("/bench.hib", &bundle, NodeId(0)).unwrap();
+    bench("DFS read_range (whole bundle, remote node)", 1, 10, || {
+        let (bytes, _) = dfs.read_range("/bench.hib", 0, bundle.len() as u64, NodeId(3)).unwrap();
+        std::hint::black_box(bytes.len());
+    });
+
+    // --- tiling ------------------------------------------------------------
+    println!("\n== tiling ==");
+    bench("extract_tile_f32 (512² from 1024² scene)", 2, 20, || {
+        let t = TileIter::new(1024, 1024).next().unwrap();
+        std::hint::black_box(extract_tile_f32(&scene.image, &t).len());
+    });
+}

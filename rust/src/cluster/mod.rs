@@ -1,0 +1,169 @@
+//! Simulated cluster: topology + I/O cost model of the paper's testbed.
+//!
+//! The paper's evaluation ran on 1/2/4 commodity machines (quad-core
+//! i7-950, 8 GB DRAM, SATA2 disks, 1 GbE, Hadoop 1.02).  We execute the
+//! real compute (PJRT tile executions) on real threads, but disk and
+//! network transfers are *modeled* as virtual time by [`CostModel`]
+//! (DESIGN.md §3, substitution 2): each worker accumulates
+//! `measured_compute + modeled_io`, and the job clock is the max over
+//! workers plus the fixed MapReduce job overhead.
+//!
+//! This hybrid is what lets the repo reproduce Table 1's *shape* —
+//! including the counter-intuitive rows where 2-node MapReduce loses to a
+//! single sequential node at N=3 (fixed `job_startup` dominating) — on a
+//! single host, while staying honest about what is measured vs modeled
+//! (EXPERIMENTS.md labels every column).
+
+pub mod topology;
+
+pub use topology::{Topology, WorkerSlot};
+
+use crate::config::ClusterConfig;
+use crate::dfs::Locality;
+
+/// Virtual-time I/O cost model of the paper's testbed hardware.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    cfg: ClusterConfig,
+}
+
+impl CostModel {
+    pub fn new(cfg: &ClusterConfig) -> Self {
+        CostModel { cfg: cfg.clone() }
+    }
+
+    /// Is modeling enabled at all?  ("bare" mode turns every modeled cost
+    /// into zero so benches can profile pure coordinator overhead.)
+    pub fn enabled(&self) -> bool {
+        self.cfg.cost_model
+    }
+
+    /// Seconds to read `bytes` from the local disk.
+    pub fn disk_read(&self, bytes: u64) -> f64 {
+        if !self.enabled() || bytes == 0 {
+            return 0.0;
+        }
+        self.cfg.disk_latency + bytes as f64 / self.cfg.disk_bandwidth
+    }
+
+    /// Seconds to pull `bytes` from another node (its disk + the wire).
+    pub fn remote_read(&self, bytes: u64) -> f64 {
+        if !self.enabled() || bytes == 0 {
+            return 0.0;
+        }
+        self.disk_read(bytes) + self.cfg.net_latency + bytes as f64 / self.cfg.net_bandwidth
+    }
+
+    /// Seconds to read a split's input given its locality mix.
+    pub fn split_input(&self, local_bytes: u64, remote_bytes: u64) -> f64 {
+        self.disk_read(local_bytes) + self.remote_read(remote_bytes)
+    }
+
+    /// Convenience for single-block reads.
+    pub fn block_read(&self, bytes: u64, locality: Locality) -> f64 {
+        match locality {
+            Locality::Local => self.disk_read(bytes),
+            Locality::Remote => self.remote_read(bytes),
+        }
+    }
+
+    /// Seconds to write `bytes` of mapper output back to HDFS with the
+    /// configured replication (1 local + R-1 pipelined remote copies; the
+    /// pipeline overlaps, so we charge the slowest leg once).
+    pub fn hdfs_write(&self, bytes: u64, replication: usize) -> f64 {
+        if !self.enabled() || bytes == 0 {
+            return 0.0;
+        }
+        let local = self.disk_read(bytes); // write ≈ read bandwidth (SATA2)
+        if replication > 1 {
+            local + self.cfg.net_latency + bytes as f64 / self.cfg.net_bandwidth
+        } else {
+            local
+        }
+    }
+
+    /// Fixed per-job MapReduce cost (JVM spawn, split computation,
+    /// jobtracker/tasktracker handshakes).  Zero for the sequential
+    /// baseline — Matlab on one node starts no cluster machinery.
+    pub fn job_startup(&self) -> f64 {
+        if self.enabled() {
+            self.cfg.job_startup
+        } else {
+            0.0
+        }
+    }
+
+    /// Fixed per-task scheduling/launch cost.
+    pub fn task_overhead(&self) -> f64 {
+        if self.enabled() {
+            self.cfg.task_overhead
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn model() -> CostModel {
+        CostModel::new(&ClusterConfig::default())
+    }
+
+    #[test]
+    fn remote_costs_more_than_local() {
+        let m = model();
+        for mb in [1u64, 10, 100] {
+            let b = mb * 1_000_000;
+            assert!(m.remote_read(b) > m.disk_read(b));
+        }
+    }
+
+    #[test]
+    fn costs_scale_linearly_in_bytes() {
+        let m = model();
+        // Differencing removes the constant latency term: +90 MB at
+        // 90 MB/s ≈ +1.0 s.
+        let delta = m.disk_read(100_000_000) - m.disk_read(10_000_000);
+        assert!((delta - 1.0).abs() < 1e-6, "delta {delta}");
+    }
+
+    #[test]
+    fn paper_scene_read_time_is_seconds_scale() {
+        // One 230 MB scene over SATA2 ≈ 2.6 s; over 1 GbE ≈ +2.1 s.  These
+        // magnitudes are what make the paper's Table 1 I/O-visible.
+        let m = model();
+        let scene = 240_599_644u64;
+        let local = m.disk_read(scene);
+        assert!((2.0..4.0).contains(&local), "local {local}");
+        let remote = m.remote_read(scene);
+        assert!((4.0..7.0).contains(&remote), "remote {remote}");
+    }
+
+    #[test]
+    fn bare_mode_zeroes_everything() {
+        let mut cfg = ClusterConfig::default();
+        cfg.cost_model = false;
+        let m = CostModel::new(&cfg);
+        assert_eq!(m.disk_read(1 << 30), 0.0);
+        assert_eq!(m.remote_read(1 << 30), 0.0);
+        assert_eq!(m.job_startup(), 0.0);
+        assert_eq!(m.task_overhead(), 0.0);
+        assert_eq!(m.hdfs_write(1 << 30, 3), 0.0);
+    }
+
+    #[test]
+    fn zero_bytes_costs_nothing() {
+        let m = model();
+        assert_eq!(m.disk_read(0), 0.0);
+        assert_eq!(m.remote_read(0), 0.0);
+    }
+
+    #[test]
+    fn replicated_write_costs_more() {
+        let m = model();
+        assert!(m.hdfs_write(50_000_000, 3) > m.hdfs_write(50_000_000, 1));
+    }
+}

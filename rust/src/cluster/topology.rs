@@ -1,0 +1,84 @@
+//! Cluster topology: nodes, worker slots and the thread pool that
+//! impersonates them.
+//!
+//! Hadoop 1.x runs a TaskTracker per node with a fixed number of map
+//! slots; DIFET mirrors that with `slots_per_node` OS threads pinned to a
+//! `NodeId` identity.  The scheduler hands tasks to slots, and each slot
+//! reports `measured_compute + modeled_io` virtual time back to the
+//! driver (see [`crate::coordinator`]).
+
+use crate::config::ClusterConfig;
+use crate::dfs::NodeId;
+
+/// One map slot: `(node, slot_index)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct WorkerSlot {
+    pub node: NodeId,
+    pub slot: usize,
+}
+
+/// Static cluster shape.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub nodes: usize,
+    pub slots_per_node: usize,
+}
+
+impl Topology {
+    pub fn new(cfg: &ClusterConfig) -> Self {
+        Topology {
+            nodes: cfg.nodes,
+            slots_per_node: cfg.slots_per_node,
+        }
+    }
+
+    pub fn total_slots(&self) -> usize {
+        self.nodes * self.slots_per_node
+    }
+
+    /// Enumerate every slot, node-major.
+    pub fn slots(&self) -> Vec<WorkerSlot> {
+        (0..self.nodes)
+            .flat_map(|n| {
+                (0..self.slots_per_node).map(move |s| WorkerSlot {
+                    node: NodeId(n),
+                    slot: s,
+                })
+            })
+            .collect()
+    }
+
+    pub fn node_ids(&self) -> Vec<NodeId> {
+        (0..self.nodes).map(NodeId).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_testbed_shapes() {
+        // 1, 2 and 4 quad-core machines → 4, 8, 16 map slots.
+        for (nodes, want) in [(1, 4), (2, 8), (4, 16)] {
+            let t = Topology {
+                nodes,
+                slots_per_node: 4,
+            };
+            assert_eq!(t.total_slots(), want);
+            assert_eq!(t.slots().len(), want);
+        }
+    }
+
+    #[test]
+    fn slots_cover_every_node() {
+        let t = Topology {
+            nodes: 3,
+            slots_per_node: 2,
+        };
+        let slots = t.slots();
+        for n in 0..3 {
+            assert_eq!(slots.iter().filter(|s| s.node == NodeId(n)).count(), 2);
+        }
+    }
+}

@@ -1,0 +1,382 @@
+//! Run configuration: a validated, layered config system.
+//!
+//! Configuration is resolved in three layers (lowest priority first):
+//! built-in defaults → an optional TOML-subset config file (`--config`) →
+//! individual CLI flags.  Everything the coordinator, cluster model and
+//! pipeline need is centralized here so examples, benches and the CLI all
+//! drive the exact same machinery — one of the framework properties
+//! (MaxText/Megatron-style) DESIGN.md calls out.
+//!
+//! The file format is the flat `key = value` subset of TOML with `[section]`
+//! headers and `#` comments (the offline registry has no `toml` crate; the
+//! parser below is unit-tested in place).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::{DifetError, Result};
+
+/// Scene/corpus geometry and generation parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SceneConfig {
+    /// Scene edge in pixels (paper: ~7000–7800; default scaled for CI).
+    pub width: usize,
+    pub height: usize,
+    /// Generator seed; scene `i` of a corpus uses `seed + i`.
+    pub seed: u64,
+    /// Number of structural "settlement" clusters per scene (corner-rich).
+    pub settlements: usize,
+    /// Number of linear road/coast features per scene.
+    pub roads: usize,
+    /// Additive band-noise sigma (8-bit DN units).
+    pub noise_sigma: f32,
+}
+
+impl Default for SceneConfig {
+    fn default() -> Self {
+        SceneConfig {
+            width: 1792,
+            height: 1792,
+            seed: 20170924, // the paper's ISPRS publication date
+            settlements: 24,
+            roads: 12,
+            noise_sigma: 2.0,
+        }
+    }
+}
+
+impl SceneConfig {
+    /// The paper's full-scale geometry (LandSat-8 scene, Section 4).
+    pub fn paper_scale() -> Self {
+        SceneConfig {
+            width: 7681,
+            height: 7831,
+            ..Default::default()
+        }
+    }
+}
+
+/// Simulated cluster topology + cost model parameters (paper's testbed).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    /// Number of worker nodes (paper sweeps 1, 2, 4).
+    pub nodes: usize,
+    /// Map slots per node (quad-core i7-950 → 4).
+    pub slots_per_node: usize,
+    /// Whether to add the modeled disk/network virtual time (off = "bare"
+    /// mode for profiling the coordinator itself).
+    pub cost_model: bool,
+    /// 1 GbE effective bandwidth, bytes/sec.
+    pub net_bandwidth: f64,
+    /// Per-transfer network latency, seconds.
+    pub net_latency: f64,
+    /// SATA2 7200rpm effective sequential bandwidth, bytes/sec.
+    pub disk_bandwidth: f64,
+    /// Disk seek + request overhead, seconds.
+    pub disk_latency: f64,
+    /// HDFS replication factor (Hadoop default 3, capped by node count).
+    pub replication: usize,
+    /// Fixed per-job MapReduce startup cost, seconds (JVM spawn, split
+    /// computation, task-tracker heartbeats — the overhead that makes the
+    /// paper's 2-node N=3 FAST/SURF rows *slower* than one sequential node).
+    pub job_startup: f64,
+    /// Per-task scheduling/launch overhead, seconds.
+    pub task_overhead: f64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            nodes: 4,
+            slots_per_node: 4,
+            cost_model: true,
+            net_bandwidth: 110e6, // ~1 GbE after TCP overhead
+            net_latency: 350e-6,
+            disk_bandwidth: 90e6, // SATA2 7200rpm sequential
+            disk_latency: 8e-3,
+            replication: 3,
+            job_startup: 12.0, // Hadoop 1.x JVM + jobtracker handshake
+            task_overhead: 0.8,
+        }
+    }
+}
+
+/// Coordinator policy knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedulerConfig {
+    /// Prefer data-local tasks (HDFS block placement aware).
+    pub locality_aware: bool,
+    /// Launch speculative duplicates of straggler tasks.
+    pub speculation: bool,
+    /// A task is a straggler if its progress rate is below this fraction
+    /// of the job mean (Hadoop's 1.0 - 0.2 default band → 0.8).
+    pub speculation_slowness: f64,
+    /// Max retry attempts per failed task (Hadoop default 4).
+    pub max_attempts: usize,
+    /// Bounded queue depth between pipeline stages (backpressure).
+    pub queue_depth: usize,
+    /// One map task per image (HIPI semantics: "each mapper is provided
+    /// with a single image", paper §3).  When false, tasks are DFS-block
+    /// sized like a plain Hadoop FileSplit.
+    pub split_per_image: bool,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            locality_aware: true,
+            speculation: true,
+            speculation_slowness: 0.8,
+            max_attempts: 4,
+            queue_depth: 16,
+            split_per_image: true,
+        }
+    }
+}
+
+/// HIB bundle / storage knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StorageConfig {
+    /// DFS block size in bytes (Hadoop 1.x default 64 MiB).
+    pub block_size: usize,
+    /// Compress bundle records with deflate.
+    pub compress: bool,
+    /// Deflate level (1 fast .. 9 small).
+    pub compression_level: u32,
+}
+
+impl Default for StorageConfig {
+    fn default() -> Self {
+        StorageConfig {
+            block_size: 64 << 20,
+            compress: true,
+            compression_level: 1,
+        }
+    }
+}
+
+/// Top-level run configuration.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    pub scene: SceneConfig,
+    pub cluster: ClusterConfig,
+    pub scheduler: SchedulerConfig,
+    pub storage: StorageConfig,
+    /// Directory holding `manifest.json` + `*.hlo.txt`.
+    pub artifacts_dir: String,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Config {
+            artifacts_dir: "artifacts".into(),
+            ..Default::default()
+        }
+    }
+
+    /// Validate cross-field invariants; called after every layer merge.
+    pub fn validate(&self) -> Result<()> {
+        let c = |ok: bool, msg: &str| {
+            if ok {
+                Ok(())
+            } else {
+                Err(DifetError::Config(msg.to_string()))
+            }
+        };
+        c(self.scene.width >= 64 && self.scene.height >= 64, "scene smaller than one tile halo")?;
+        c(self.cluster.nodes >= 1, "cluster.nodes must be >= 1")?;
+        c(self.cluster.slots_per_node >= 1, "cluster.slots_per_node must be >= 1")?;
+        c(self.cluster.replication >= 1, "cluster.replication must be >= 1")?;
+        c(self.scheduler.max_attempts >= 1, "scheduler.max_attempts must be >= 1")?;
+        c(self.scheduler.queue_depth >= 1, "scheduler.queue_depth must be >= 1")?;
+        c(
+            (0.0..=1.0).contains(&self.scheduler.speculation_slowness),
+            "scheduler.speculation_slowness must be in [0,1]",
+        )?;
+        c(self.storage.block_size >= 1 << 20, "storage.block_size must be >= 1 MiB")?;
+        c(
+            (1..=9).contains(&self.storage.compression_level),
+            "storage.compression_level must be in 1..=9",
+        )?;
+        Ok(())
+    }
+
+    /// Merge a parsed `section.key → value` table into self.
+    pub fn apply_kv(&mut self, table: &BTreeMap<String, String>) -> Result<()> {
+        for (key, val) in table {
+            self.apply_one(key, val)?;
+        }
+        self.validate()
+    }
+
+    /// Set a single dotted key, e.g. `cluster.nodes = 4`.
+    pub fn apply_one(&mut self, key: &str, val: &str) -> Result<()> {
+        fn p<T: std::str::FromStr>(key: &str, val: &str) -> Result<T> {
+            val.parse().map_err(|_| {
+                DifetError::Config(format!("{key}: cannot parse {val:?}"))
+            })
+        }
+        match key {
+            "scene.width" => self.scene.width = p(key, val)?,
+            "scene.height" => self.scene.height = p(key, val)?,
+            "scene.seed" => self.scene.seed = p(key, val)?,
+            "scene.settlements" => self.scene.settlements = p(key, val)?,
+            "scene.roads" => self.scene.roads = p(key, val)?,
+            "scene.noise_sigma" => self.scene.noise_sigma = p(key, val)?,
+            "cluster.nodes" => self.cluster.nodes = p(key, val)?,
+            "cluster.slots_per_node" => self.cluster.slots_per_node = p(key, val)?,
+            "cluster.cost_model" => self.cluster.cost_model = p(key, val)?,
+            "cluster.net_bandwidth" => self.cluster.net_bandwidth = p(key, val)?,
+            "cluster.net_latency" => self.cluster.net_latency = p(key, val)?,
+            "cluster.disk_bandwidth" => self.cluster.disk_bandwidth = p(key, val)?,
+            "cluster.disk_latency" => self.cluster.disk_latency = p(key, val)?,
+            "cluster.replication" => self.cluster.replication = p(key, val)?,
+            "cluster.job_startup" => self.cluster.job_startup = p(key, val)?,
+            "cluster.task_overhead" => self.cluster.task_overhead = p(key, val)?,
+            "scheduler.locality_aware" => self.scheduler.locality_aware = p(key, val)?,
+            "scheduler.speculation" => self.scheduler.speculation = p(key, val)?,
+            "scheduler.speculation_slowness" => {
+                self.scheduler.speculation_slowness = p(key, val)?
+            }
+            "scheduler.max_attempts" => self.scheduler.max_attempts = p(key, val)?,
+            "scheduler.split_per_image" => self.scheduler.split_per_image = p(key, val)?,
+            "scheduler.queue_depth" => self.scheduler.queue_depth = p(key, val)?,
+            "storage.block_size" => self.storage.block_size = p(key, val)?,
+            "storage.compress" => self.storage.compress = p(key, val)?,
+            "storage.compression_level" => self.storage.compression_level = p(key, val)?,
+            "artifacts_dir" => self.artifacts_dir = val.to_string(),
+            _ => {
+                return Err(DifetError::Config(format!("unknown config key {key:?}")));
+            }
+        }
+        Ok(())
+    }
+
+    /// Load + merge a config file.
+    pub fn load_file(&mut self, path: &Path) -> Result<()> {
+        let text = std::fs::read_to_string(path)?;
+        let table = parse_toml_subset(&text)
+            .map_err(|e| DifetError::Config(format!("{}: {e}", path.display())))?;
+        self.apply_kv(&table)
+    }
+}
+
+/// Parse the flat TOML subset: `[section]` headers, `key = value` lines,
+/// `#` comments, quoted or bare scalar values.  Returns dotted keys.
+pub fn parse_toml_subset(text: &str) -> std::result::Result<BTreeMap<String, String>, String> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = match raw.split_once('#') {
+            // Keep '#' inside quoted values.
+            Some((head, _)) if head.matches('"').count() % 2 == 0 => head,
+            _ => raw,
+        }
+        .trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(body) = line.strip_prefix('[') {
+            let name = body
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated section header", lineno + 1))?
+                .trim();
+            if name.is_empty() {
+                return Err(format!("line {}: empty section name", lineno + 1));
+            }
+            section = name.to_string();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = k.trim();
+        if key.is_empty() {
+            return Err(format!("line {}: empty key", lineno + 1));
+        }
+        let mut val = v.trim().to_string();
+        if val.len() >= 2 && val.starts_with('"') && val.ends_with('"') {
+            val = val[1..val.len() - 1].to_string();
+        }
+        let dotted = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        if out.insert(dotted.clone(), val).is_some() {
+            return Err(format!("line {}: duplicate key {dotted:?}", lineno + 1));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        Config::new().validate().unwrap();
+    }
+
+    #[test]
+    fn toml_subset_parses_sections_comments_quotes() {
+        let table = parse_toml_subset(
+            "# corpus\nartifacts_dir = \"my/arts\"\n[scene]\nwidth = 512 # px\n\n[cluster]\nnodes=2\n",
+        )
+        .unwrap();
+        assert_eq!(table["artifacts_dir"], "my/arts");
+        assert_eq!(table["scene.width"], "512");
+        assert_eq!(table["cluster.nodes"], "2");
+    }
+
+    #[test]
+    fn toml_subset_rejects_malformed() {
+        assert!(parse_toml_subset("[open\n").is_err());
+        assert!(parse_toml_subset("novalue\n").is_err());
+        assert!(parse_toml_subset("a = 1\na = 2\n").is_err());
+        assert!(parse_toml_subset("[]\nk=v\n").is_err());
+    }
+
+    #[test]
+    fn apply_kv_updates_and_validates() {
+        let mut cfg = Config::new();
+        let mut t = BTreeMap::new();
+        t.insert("cluster.nodes".into(), "2".into());
+        t.insert("scene.width".into(), "1024".into());
+        t.insert("scheduler.speculation".into(), "false".into());
+        cfg.apply_kv(&t).unwrap();
+        assert_eq!(cfg.cluster.nodes, 2);
+        assert_eq!(cfg.scene.width, 1024);
+        assert!(!cfg.scheduler.speculation);
+    }
+
+    #[test]
+    fn apply_rejects_unknown_keys_and_bad_values() {
+        let mut cfg = Config::new();
+        assert!(cfg.apply_one("cluster.warp_factor", "9").is_err());
+        assert!(cfg.apply_one("cluster.nodes", "many").is_err());
+    }
+
+    #[test]
+    fn validation_catches_out_of_range() {
+        let mut cfg = Config::new();
+        cfg.cluster.nodes = 0;
+        assert!(cfg.validate().is_err());
+        cfg = Config::new();
+        cfg.storage.compression_level = 11;
+        assert!(cfg.validate().is_err());
+        cfg = Config::new();
+        cfg.scheduler.speculation_slowness = 1.5;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn paper_scale_matches_section4() {
+        let s = SceneConfig::paper_scale();
+        assert_eq!((s.width, s.height), (7681, 7831));
+        // “A typical example … allocating 230 MB (32×7681×7831 bits)”.
+        let bytes = 4 * s.width * s.height;
+        assert!((229_000_000..243_000_000).contains(&bytes));
+    }
+}

@@ -1,0 +1,409 @@
+//! The job driver ("jobtracker"): plan → schedule → execute → merge.
+//!
+//! One call to [`run_job`] is one MapReduce job of the paper: a feature
+//! extraction pass of one algorithm over one HIB bundle.  Real compute
+//! (PJRT tile executions) runs on real worker threads (one per map slot,
+//! `nodes × slots_per_node` total); disk/network time is *modeled* by
+//! [`crate::cluster::CostModel`] and accumulated per slot.  The reported
+//! job time is
+//!
+//! ```text
+//! sim_seconds = job_startup + max_over_slots( Σ task_overhead
+//!                                            + modeled_io + measured_compute )
+//! ```
+//!
+//! which is the quantity comparable to the paper's Table 1 cells (see
+//! EXPERIMENTS.md for the measured-vs-modeled breakdown of every column).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::cluster::CostModel;
+use crate::config::Config;
+use crate::dfs::{Dfs, NodeId};
+use crate::features::{self, Algorithm, GrayImage};
+use crate::hib::{self, BundleReader, RecordMeta};
+use crate::imagery::tiler::{extract_tile_f32, TileIter};
+use crate::imagery::Rgba8Image;
+use crate::metrics::Registry;
+use crate::runtime::TileFeatures;
+use crate::util::{DifetError, Result, Stopwatch};
+
+use super::job::{JobReport, JobSpec, MapOutput};
+use super::scheduler::{Assignment, Scheduler, TaskDescriptor, TaskHandle};
+
+/// Anything that can extract features from one tile: the PJRT engine in
+/// production, the pure-Rust baseline as hermetic fallback.
+pub trait TileExecutor: Sync {
+    fn run_tile(&self, alg: &str, tile: &[f32], core: [i32; 4]) -> Result<TileFeatures>;
+    /// Executor label for reports ("pjrt" / "native").
+    fn label(&self) -> &'static str;
+}
+
+impl TileExecutor for crate::runtime::Engine {
+    fn run_tile(&self, alg: &str, tile: &[f32], core: [i32; 4]) -> Result<TileFeatures> {
+        self.run(alg, tile, core)
+    }
+    fn label(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// Pure-Rust executor (`crate::features`), used when artifacts are absent
+/// and as the sequential-baseline compute body.
+pub struct NativeExecutor;
+
+impl TileExecutor for NativeExecutor {
+    fn run_tile(&self, alg: &str, tile: &[f32], core: [i32; 4]) -> Result<TileFeatures> {
+        let algorithm = Algorithm::parse(alg)?;
+        let gray = GrayImage::from_tile_f32(tile, crate::TILE, crate::TILE);
+        let cap = features::params::topk(alg);
+        let ex = features::extract(
+            algorithm,
+            &gray,
+            (
+                core[0].max(0) as usize,
+                core[1].max(0) as usize,
+                core[2].max(0) as usize,
+                core[3].max(0) as usize,
+            ),
+            cap,
+        );
+        Ok(TileFeatures {
+            count: ex.count,
+            keypoints: ex.keypoints,
+            descriptors: ex.descriptors,
+        })
+    }
+    fn label(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Test hooks: deterministic failure injection.
+#[derive(Default)]
+pub struct JobHooks {
+    /// `fail(task_id, attempt)` → should this attempt die?
+    #[allow(clippy::type_complexity)]
+    pub fail: Option<Box<dyn Fn(usize, usize) -> bool + Sync>>,
+}
+
+/// Run one extraction job on the simulated cluster.
+pub fn run_job(
+    cfg: &Config,
+    dfs: &Dfs,
+    executor: &dyn TileExecutor,
+    spec: &JobSpec,
+    registry: &Registry,
+    hooks: &JobHooks,
+) -> Result<JobReport> {
+    let wall = Stopwatch::start();
+    let cost = CostModel::new(&cfg.cluster);
+
+    // ---- plan: read the bundle index, compute record-aligned splits ----
+    // (jobtracker-side planning; its I/O is part of the modeled startup.)
+    let (bundle_bytes, _) = dfs.read_file(&spec.bundle_path, NodeId(0))?;
+    let (tasks, metas) = {
+        let reader = BundleReader::open(&bundle_bytes)?;
+        let metas: Vec<RecordMeta> = reader.metas().to_vec();
+        // HIPI semantics (paper §3): one mapper per image.  A 1-byte split
+        // target makes every record its own split; block-sized splits are
+        // the plain-Hadoop alternative (ablations A4 measures the trade).
+        let split_target = if cfg.scheduler.split_per_image {
+            1
+        } else {
+            cfg.storage.block_size as u64
+        };
+        let splits = hib::splits(&reader, split_target);
+        let mut tasks = Vec::with_capacity(splits.len());
+        for (i, s) in splits.iter().enumerate() {
+            let preferred = dfs
+                .locate_range(&spec.bundle_path, s.byte_start, s.byte_end)
+                .unwrap_or_default();
+            tasks.push(TaskDescriptor {
+                task_id: i,
+                first_record: s.first_record,
+                last_record: s.last_record,
+                byte_start: s.byte_start,
+                byte_end: s.byte_end,
+                preferred_nodes: preferred,
+            });
+        }
+        (tasks, metas)
+    };
+    drop(bundle_bytes);
+    let n_tasks = tasks.len();
+    let n_images = metas.len();
+
+    let scheduler = Scheduler::new(tasks, &cfg.scheduler);
+    let outputs: Mutex<Vec<MapOutput>> = Mutex::new(Vec::new());
+    let compute_ns = AtomicU64::new(0);
+    let io_ns = AtomicU64::new(0);
+    let max_slot_ns = AtomicU64::new(0);
+    let tiles_counter = registry.counter("tiles_processed");
+    let tile_hist = registry.histogram("tile_latency");
+
+    std::thread::scope(|scope| {
+        for node in 0..cfg.cluster.nodes {
+            for _slot in 0..cfg.cluster.slots_per_node {
+                let scheduler = &scheduler;
+                let outputs = &outputs;
+                let metas = &metas;
+                let compute_ns = &compute_ns;
+                let io_ns = &io_ns;
+                let max_slot_ns = &max_slot_ns;
+                let tiles_counter = tiles_counter.clone();
+                let tile_hist = tile_hist.clone();
+                let cost = &cost;
+                scope.spawn(move || {
+                    let mut slot_virtual_ns = 0u64;
+                    loop {
+                        match scheduler.next_assignment(NodeId(node)) {
+                            Assignment::Done => break,
+                            Assignment::Run(desc, handle) => {
+                                match map_task(
+                                    cfg, dfs, executor, spec, hooks, cost, metas, &desc,
+                                    &handle, NodeId(node), &tiles_counter, &tile_hist,
+                                ) {
+                                    Ok(Some(task_out)) => {
+                                        slot_virtual_ns += task_out.virtual_ns;
+                                        compute_ns.fetch_add(task_out.compute_ns, Ordering::Relaxed);
+                                        io_ns.fetch_add(task_out.io_ns, Ordering::Relaxed);
+                                        if scheduler.report_success(&handle) {
+                                            outputs.lock().unwrap().extend(task_out.outputs);
+                                        }
+                                    }
+                                    Ok(None) => scheduler.report_cancelled(&handle),
+                                    Err(e) => scheduler.report_failure(&handle, &e.to_string()),
+                                }
+                            }
+                        }
+                    }
+                    max_slot_ns.fetch_max(slot_virtual_ns, Ordering::Relaxed);
+                });
+            }
+        }
+    });
+
+    if let Some(reason) = scheduler.abort_reason() {
+        return Err(DifetError::Job(reason));
+    }
+
+    let outputs = outputs.into_inner().unwrap();
+    let images = super::shuffle::merge_image_outputs(
+        outputs,
+        spec.per_image_cap,
+        spec.report_keypoints,
+    );
+    if images.len() != n_images {
+        return Err(DifetError::Job(format!(
+            "merged {} images, bundle has {n_images}",
+            images.len()
+        )));
+    }
+
+    let sim_seconds = cost.job_startup() + max_slot_ns.load(Ordering::Relaxed) as f64 * 1e-9;
+    let mut counters = std::collections::BTreeMap::new();
+    counters.insert("tasks".into(), n_tasks as u64);
+    counters.insert(
+        "data_local_tasks".into(),
+        scheduler.data_local_tasks.load(Ordering::Relaxed),
+    );
+    counters.insert(
+        "rack_remote_tasks".into(),
+        scheduler.rack_remote_tasks.load(Ordering::Relaxed),
+    );
+    counters.insert(
+        "speculative_launches".into(),
+        scheduler.speculative_launches.load(Ordering::Relaxed),
+    );
+    counters.insert("retries".into(), scheduler.retries.load(Ordering::Relaxed));
+    counters.insert("tiles".into(), tiles_counter.get());
+
+    Ok(JobReport {
+        algorithm: spec.algorithm.clone(),
+        nodes: cfg.cluster.nodes,
+        image_count: n_images,
+        sim_seconds,
+        wall_seconds: wall.elapsed_secs(),
+        compute_seconds: compute_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+        io_seconds: io_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+        images,
+        counters,
+    })
+}
+
+struct TaskOutcome {
+    outputs: Vec<MapOutput>,
+    /// Virtual time this task adds to its slot (overhead + io + compute).
+    virtual_ns: u64,
+    compute_ns: u64,
+    io_ns: u64,
+}
+
+/// The mapper body: split read → record decode → tile loop → aggregate.
+#[allow(clippy::too_many_arguments)]
+fn map_task(
+    cfg: &Config,
+    dfs: &Dfs,
+    executor: &dyn TileExecutor,
+    spec: &JobSpec,
+    hooks: &JobHooks,
+    cost: &CostModel,
+    metas: &[RecordMeta],
+    desc: &TaskDescriptor,
+    handle: &TaskHandle,
+    node: NodeId,
+    tiles_counter: &crate::metrics::Counter,
+    tile_hist: &crate::metrics::Histogram,
+) -> Result<Option<TaskOutcome>> {
+    // Failure injection happens before any work, like a crashed JVM.
+    if let Some(f) = &hooks.fail {
+        if f(desc.task_id, handle.attempt) {
+            return Err(DifetError::Job(format!(
+                "injected failure (task {}, attempt {})",
+                desc.task_id, handle.attempt
+            )));
+        }
+    }
+
+    let mut io_secs = 0.0f64;
+    let mut compute_ns = 0u64;
+
+    // --- input: read this split's byte range from DFS ----------------------
+    let (bytes, stats) = dfs.read_range(&spec.bundle_path, desc.byte_start, desc.byte_end, node)?;
+    io_secs += cost.split_input(stats.local_bytes, stats.remote_bytes);
+
+    let mut outputs = Vec::with_capacity(desc.last_record - desc.first_record);
+    let total_records = (desc.last_record - desc.first_record).max(1);
+
+    for (done, rec) in (desc.first_record..desc.last_record).enumerate() {
+        if handle.cancelled() {
+            return Ok(None);
+        }
+        let rec_off = (metas[rec].offset - desc.byte_start) as usize;
+        let (image_id, image, _) = hib::decode_record(&bytes[rec_off..])?;
+
+        let (map_out, tile_compute_ns) = map_one_image(
+            executor,
+            &spec.algorithm,
+            image_id,
+            &image,
+            spec.per_image_cap,
+            spec.report_keypoints,
+            handle,
+            tiles_counter,
+            tile_hist,
+        )?;
+        let Some(map_out) = map_out else {
+            return Ok(None); // cancelled mid-image
+        };
+        compute_ns += tile_compute_ns;
+
+        // --- output: the paper's mapper step 5 writes the annotated image
+        // back to HDFS.  We store the keypoint summary (real bytes) and
+        // model the cost of the image-sized write the paper performs.
+        if spec.write_output {
+            let summary = serialize_output(&map_out);
+            let out_path = format!("{}.out/{}/{image_id}", spec.bundle_path, spec.algorithm);
+            dfs.write_file(&out_path, &summary, node)?;
+            io_secs += cost.hdfs_write(image.byte_len() as u64, cfg.cluster.replication);
+        }
+        outputs.push(map_out);
+        handle.report_progress((done + 1) as f64 / total_records as f64);
+    }
+
+    let io_ns = (io_secs * 1e9) as u64;
+    let overhead_ns = (cost.task_overhead() * 1e9) as u64;
+    Ok(Some(TaskOutcome {
+        outputs,
+        virtual_ns: overhead_ns + io_ns + compute_ns,
+        compute_ns,
+        io_ns,
+    }))
+}
+
+/// Extract one image: tile it, run the executor per tile, merge.
+#[allow(clippy::too_many_arguments)]
+fn map_one_image(
+    executor: &dyn TileExecutor,
+    algorithm: &str,
+    image_id: u64,
+    image: &Rgba8Image,
+    per_image_cap: Option<usize>,
+    report_keypoints: usize,
+    handle: &TaskHandle,
+    tiles_counter: &crate::metrics::Counter,
+    tile_hist: &crate::metrics::Histogram,
+) -> Result<(Option<MapOutput>, u64)> {
+    let mut raw_count = 0u64;
+    let mut descriptor_count = 0u64;
+    let mut keypoints: Vec<crate::features::Keypoint> = Vec::new();
+    let keep = per_image_cap.unwrap_or(report_keypoints).max(report_keypoints);
+    let mut compute_ns = 0u64;
+
+    for tile in TileIter::new(image.width, image.height) {
+        if handle.cancelled() {
+            return Ok((None, compute_ns));
+        }
+        let buf = extract_tile_f32(image, &tile);
+        let t0 = std::time::Instant::now();
+        let feats = executor.run_tile(algorithm, &buf, tile.core_local())?;
+        let dt = t0.elapsed();
+        compute_ns += dt.as_nanos() as u64;
+        tile_hist.observe(dt.as_secs_f64());
+        tiles_counter.inc();
+
+        raw_count += feats.count;
+        descriptor_count += feats.descriptors.len() as u64;
+        for kp in feats.keypoints {
+            let (sr, sc) = tile.to_scene(kp.row, kp.col);
+            keypoints.push(crate::features::Keypoint {
+                row: sr as i32,
+                col: sc as i32,
+                score: kp.score,
+            });
+        }
+        // Keep the buffer bounded: re-rank and truncate when 4× over.
+        if keypoints.len() > keep * 4 {
+            keypoints.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+            keypoints.truncate(keep);
+        }
+    }
+    keypoints.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+    keypoints.truncate(keep);
+
+    Ok((
+        Some(MapOutput {
+            image_id,
+            raw_count,
+            keypoints,
+            descriptor_count,
+        }),
+        compute_ns,
+    ))
+}
+
+/// Serialize a mapper output (the record written back to DFS).
+fn serialize_output(out: &MapOutput) -> Vec<u8> {
+    use byteorder::{ByteOrder, LittleEndian as LE};
+    let mut buf = Vec::with_capacity(16 + out.keypoints.len() * 12);
+    let mut u64b = [0u8; 8];
+    LE::write_u64(&mut u64b, out.image_id);
+    buf.extend_from_slice(&u64b);
+    LE::write_u64(&mut u64b, out.raw_count);
+    buf.extend_from_slice(&u64b);
+    let mut u32b = [0u8; 4];
+    LE::write_u32(&mut u32b, out.keypoints.len() as u32);
+    buf.extend_from_slice(&u32b);
+    for kp in &out.keypoints {
+        LE::write_u32(&mut u32b, kp.row as u32);
+        buf.extend_from_slice(&u32b);
+        LE::write_u32(&mut u32b, kp.col as u32);
+        buf.extend_from_slice(&u32b);
+        LE::write_u32(&mut u32b, kp.score.to_bits());
+        buf.extend_from_slice(&u32b);
+    }
+    buf
+}
+

@@ -1,0 +1,123 @@
+//! Job specification + result types.
+
+use std::collections::BTreeMap;
+
+use crate::features::Keypoint;
+
+/// What to run: one algorithm over one HIB bundle in DFS.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Algorithm name (`harris` … `orb`).
+    pub algorithm: String,
+    /// DFS path of the input bundle.
+    pub bundle_path: String,
+    /// Per-image keypoint cap (OpenCV-default semantics; `None` = uncapped).
+    pub per_image_cap: Option<usize>,
+    /// Keep at most this many keypoints per image in the final report
+    /// (memory bound for the merged result; census counts are unaffected).
+    pub report_keypoints: usize,
+    /// Write the annotated outputs back to DFS (the paper's mapper step 5
+    /// "save FloatImage to hdfs with jpeg encoder").  Modeled+real write.
+    pub write_output: bool,
+}
+
+impl JobSpec {
+    pub fn new(algorithm: &str, bundle_path: &str) -> Self {
+        JobSpec {
+            algorithm: algorithm.to_string(),
+            bundle_path: bundle_path.to_string(),
+            per_image_cap: crate::per_image_cap(algorithm),
+            report_keypoints: 512,
+            write_output: true,
+        }
+    }
+}
+
+/// One mapper's output for one image.
+#[derive(Debug, Clone)]
+pub struct MapOutput {
+    pub image_id: u64,
+    /// Exact tile-census sum for this image (pre-cap).
+    pub raw_count: u64,
+    /// Strongest keypoints (scene coordinates), possibly truncated.
+    pub keypoints: Vec<Keypoint>,
+    /// Number of descriptors computed (== keypoints for desc algorithms).
+    pub descriptor_count: u64,
+}
+
+/// Final per-image result after the shuffle/merge stage.
+#[derive(Debug, Clone)]
+pub struct ImageCensus {
+    pub image_id: u64,
+    /// Census after the per-image cap (what Table 2 reports).
+    pub count: u64,
+    /// Pre-cap census (diagnostics; == count when no cap applies).
+    pub raw_count: u64,
+    pub keypoints: Vec<Keypoint>,
+}
+
+/// Whole-job result: Table 1 cell (+ Table 2 rows via `images`).
+#[derive(Debug, Clone)]
+pub struct JobReport {
+    pub algorithm: String,
+    pub nodes: usize,
+    pub image_count: usize,
+    /// Simulated job time: startup + max-over-slots virtual time (the
+    /// number comparable to the paper's Table 1).
+    pub sim_seconds: f64,
+    /// Host wall-clock actually spent (diagnostics only).
+    pub wall_seconds: f64,
+    /// Σ measured tile-compute seconds across all tasks.
+    pub compute_seconds: f64,
+    /// Σ modeled I/O seconds across all tasks.
+    pub io_seconds: f64,
+    pub images: Vec<ImageCensus>,
+    /// Hadoop-style counters (tasks launched, data-local tasks, …).
+    pub counters: BTreeMap<String, u64>,
+}
+
+impl JobReport {
+    /// Total feature census (Table 2 cell).
+    pub fn total_count(&self) -> u64 {
+        self.images.iter().map(|i| i.count).sum()
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_inherits_paper_caps() {
+        assert_eq!(JobSpec::new("shi_tomasi", "/b").per_image_cap, Some(400));
+        assert_eq!(JobSpec::new("orb", "/b").per_image_cap, Some(500));
+        assert_eq!(JobSpec::new("harris", "/b").per_image_cap, None);
+    }
+
+    #[test]
+    fn report_total_sums_capped_counts() {
+        let mk = |id, count| ImageCensus {
+            image_id: id,
+            count,
+            raw_count: count + 7,
+            keypoints: vec![],
+        };
+        let rep = JobReport {
+            algorithm: "orb".into(),
+            nodes: 2,
+            image_count: 2,
+            sim_seconds: 1.0,
+            wall_seconds: 0.5,
+            compute_seconds: 0.4,
+            io_seconds: 0.3,
+            images: vec![mk(0, 500), mk(1, 500)],
+            counters: BTreeMap::new(),
+        };
+        assert_eq!(rep.total_count(), 1000);
+        assert_eq!(rep.counter("nope"), 0);
+    }
+}

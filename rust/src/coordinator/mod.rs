@@ -1,0 +1,30 @@
+//! The MapReduce-style job coordinator — the paper's system contribution.
+//!
+//! DIFET's architecture (paper §3, Fig. 2) is: HIB bundles in HDFS → one
+//! mapper per image → per-mapper OpenCV feature extraction → results back
+//! to HDFS.  This module is that engine, minus the JVM:
+//!
+//! * [`job`] — job specification and the per-image/per-job result types.
+//! * [`scheduler`] — slot-level task assignment: locality-aware (prefer
+//!   nodes holding the split's blocks), FIFO within locality class,
+//!   bounded retries on failure, speculative re-execution of stragglers.
+//! * [`driver`] — the jobtracker: plans splits, spawns one worker thread
+//!   per map slot, runs the mapper body (DFS split read → HIB record
+//!   decode → tile → PJRT execute → aggregate), accounts virtual time
+//!   (measured compute + modeled I/O) and renders Hadoop-style reports.
+//! * [`shuffle`] — the reduce side: merge per-tile outputs into per-image
+//!   censuses, applying the per-image caps Table 2 exposes (Shi-Tomasi
+//!   400, ORB 500).
+//! * [`backpressure`] — the bounded queue used between planning and
+//!   execution, so a slow cluster never buffers the whole corpus.
+
+pub mod backpressure;
+pub mod driver;
+pub mod job;
+pub mod scheduler;
+pub mod shuffle;
+
+pub use driver::{run_job, TileExecutor};
+pub use job::{ImageCensus, JobReport, JobSpec, MapOutput};
+pub use scheduler::{Scheduler, TaskDescriptor, TaskState};
+pub use shuffle::merge_image_outputs;

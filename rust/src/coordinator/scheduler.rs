@@ -1,0 +1,448 @@
+//! Slot-level task scheduler: locality, retries, speculation.
+//!
+//! A faithful miniature of Hadoop 1.x's jobtracker scheduling loop:
+//!
+//! * **Locality** — when a slot on node *n* asks for work, prefer a
+//!   pending task whose split has a replica on *n* (`preferred_nodes`),
+//!   falling back to any pending task.  The `data_local_tasks` counter
+//!   records how often the preference held (Table 1's scale-out hinges on
+//!   this staying high).
+//! * **Retries** — a failed attempt re-queues the task until
+//!   `max_attempts` is exhausted, then the job fails (fail-fast, like
+//!   `mapred.map.max.attempts`).
+//! * **Speculation** — when the pending queue is empty and slots idle,
+//!   clone the running task with the lowest progress rate, if its rate is
+//!   below `slowness × mean`.  First finisher wins; the clone is killed
+//!   cooperatively via [`TaskHandle::cancelled`].
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::config::SchedulerConfig;
+use crate::dfs::NodeId;
+
+/// Static description of one map task (an input split).
+#[derive(Debug, Clone)]
+pub struct TaskDescriptor {
+    pub task_id: usize,
+    /// Record range within the bundle.
+    pub first_record: usize,
+    pub last_record: usize,
+    /// Byte range of the split (for DFS range reads).
+    pub byte_start: u64,
+    pub byte_end: u64,
+    /// Nodes holding replicas of the split's blocks, best first.
+    pub preferred_nodes: Vec<NodeId>,
+}
+
+/// Task lifecycle (visible to tests/reports).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskState {
+    Pending,
+    Running,
+    Succeeded,
+    Failed,
+}
+
+/// Cooperative cancellation + progress reporting handle given to the
+/// mapper body.
+#[derive(Debug)]
+pub struct TaskHandle {
+    pub task_id: usize,
+    pub attempt: usize,
+    cancel: Arc<AtomicBool>,
+    /// Progress in 1/1000ths of the task, updated by the mapper.
+    progress_milli: Arc<AtomicU64>,
+}
+
+impl TaskHandle {
+    pub fn cancelled(&self) -> bool {
+        self.cancel.load(Ordering::Relaxed)
+    }
+
+    pub fn report_progress(&self, fraction: f64) {
+        self.progress_milli
+            .store((fraction.clamp(0.0, 1.0) * 1000.0) as u64, Ordering::Relaxed);
+    }
+}
+
+struct Attempt {
+    cancel: Arc<AtomicBool>,
+    progress_milli: Arc<AtomicU64>,
+    started_at: std::time::Instant,
+    #[allow(dead_code)]
+    node: NodeId,
+}
+
+struct TaskEntry {
+    desc: TaskDescriptor,
+    state: TaskState,
+    attempts_started: usize,
+    running: Vec<(usize, Attempt)>, // (attempt index, attempt)
+    speculated: bool,
+}
+
+struct SchedState {
+    tasks: Vec<TaskEntry>,
+    pending: Vec<usize>, // task ids, FIFO
+    outstanding: usize,  // tasks not yet succeeded/failed-permanently
+    aborted: Option<String>,
+}
+
+/// The scheduler shared between the driver and all worker threads.
+pub struct Scheduler {
+    state: Mutex<SchedState>,
+    work_available: Condvar,
+    cfg: SchedulerConfig,
+    pub data_local_tasks: AtomicU64,
+    pub rack_remote_tasks: AtomicU64,
+    pub speculative_launches: AtomicU64,
+    pub retries: AtomicU64,
+}
+
+/// What a worker slot gets when it asks for work.
+pub enum Assignment {
+    /// Run this task attempt.
+    Run(TaskDescriptor, TaskHandle),
+    /// Nothing now and never again: job complete (or aborted).
+    Done,
+}
+
+impl Scheduler {
+    pub fn new(tasks: Vec<TaskDescriptor>, cfg: &SchedulerConfig) -> Self {
+        let n = tasks.len();
+        let entries = tasks
+            .into_iter()
+            .map(|desc| TaskEntry {
+                desc,
+                state: TaskState::Pending,
+                attempts_started: 0,
+                running: Vec::new(),
+                speculated: false,
+            })
+            .collect();
+        Scheduler {
+            state: Mutex::new(SchedState {
+                tasks: entries,
+                pending: (0..n).collect(),
+                outstanding: n,
+                aborted: None,
+            }),
+            work_available: Condvar::new(),
+            cfg: cfg.clone(),
+            data_local_tasks: AtomicU64::new(0),
+            rack_remote_tasks: AtomicU64::new(0),
+            speculative_launches: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+        }
+    }
+
+    /// Blocking work request from a slot on `node`.
+    pub fn next_assignment(&self, node: NodeId) -> Assignment {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.outstanding == 0 || st.aborted.is_some() {
+                return Assignment::Done;
+            }
+            // 1. Locality-preferred pending task.
+            let pick = if self.cfg.locality_aware {
+                st.pending
+                    .iter()
+                    .position(|&tid| st.tasks[tid].desc.preferred_nodes.contains(&node))
+            } else {
+                None
+            };
+            let pick = pick.or(if st.pending.is_empty() { None } else { Some(0) });
+
+            if let Some(idx) = pick {
+                let tid = st.pending.remove(idx);
+                let local = st.tasks[tid].desc.preferred_nodes.contains(&node);
+                if local {
+                    self.data_local_tasks.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    self.rack_remote_tasks.fetch_add(1, Ordering::Relaxed);
+                }
+                return Assignment::Run(st.tasks[tid].desc.clone(), self.launch(&mut st, tid, node));
+            }
+
+            // 2. Speculation: idle slot + no pending work.
+            if self.cfg.speculation {
+                if let Some(tid) = self.pick_straggler(&st) {
+                    self.speculative_launches.fetch_add(1, Ordering::Relaxed);
+                    st.tasks[tid].speculated = true;
+                    return Assignment::Run(st.tasks[tid].desc.clone(), self.launch(&mut st, tid, node));
+                }
+            }
+
+            st = self.work_available.wait(st).unwrap();
+        }
+    }
+
+    fn launch(&self, st: &mut SchedState, tid: usize, node: NodeId) -> TaskHandle {
+        let entry = &mut st.tasks[tid];
+        entry.state = TaskState::Running;
+        entry.attempts_started += 1;
+        let attempt = entry.attempts_started - 1;
+        let cancel = Arc::new(AtomicBool::new(false));
+        let progress = Arc::new(AtomicU64::new(0));
+        entry.running.push((
+            attempt,
+            Attempt {
+                cancel: cancel.clone(),
+                progress_milli: progress.clone(),
+                started_at: std::time::Instant::now(),
+                node,
+            },
+        ));
+        TaskHandle {
+            task_id: tid,
+            attempt,
+            cancel,
+            progress_milli: progress,
+        }
+    }
+
+    /// Pick the slowest running, not-yet-speculated task whose progress
+    /// rate is below `slowness ×` the mean rate of running tasks.
+    fn pick_straggler(&self, st: &SchedState) -> Option<usize> {
+        let mut rates: Vec<(usize, f64)> = Vec::new();
+        for (tid, e) in st.tasks.iter().enumerate() {
+            if e.state != TaskState::Running || e.speculated || e.running.is_empty() {
+                continue;
+            }
+            let (_, a) = &e.running[0];
+            let elapsed = a.started_at.elapsed().as_secs_f64().max(1e-3);
+            let rate = a.progress_milli.load(Ordering::Relaxed) as f64 / 1000.0 / elapsed;
+            rates.push((tid, rate));
+        }
+        if rates.len() < 2 {
+            return None;
+        }
+        let mean = rates.iter().map(|(_, r)| r).sum::<f64>() / rates.len() as f64;
+        rates
+            .iter()
+            .filter(|(_, r)| *r < self.cfg.speculation_slowness * mean)
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .map(|(tid, _)| *tid)
+    }
+
+    /// Report a finished attempt.  Returns `true` iff this attempt is the
+    /// winner (its result should be kept).
+    pub fn report_success(&self, handle: &TaskHandle) -> bool {
+        let mut st = self.state.lock().unwrap();
+        let entry = &mut st.tasks[handle.task_id];
+        if entry.state == TaskState::Succeeded {
+            return false; // a speculative twin already won
+        }
+        entry.state = TaskState::Succeeded;
+        // Cancel the losing twins.
+        for (att, a) in &entry.running {
+            if *att != handle.attempt {
+                a.cancel.store(true, Ordering::Relaxed);
+            }
+        }
+        entry.running.clear();
+        st.outstanding -= 1;
+        self.work_available.notify_all();
+        true
+    }
+
+    /// Report a failed attempt; re-queues or aborts the job.
+    pub fn report_failure(&self, handle: &TaskHandle, error: &str) {
+        let mut st = self.state.lock().unwrap();
+        let max_attempts = self.cfg.max_attempts;
+        let entry = &mut st.tasks[handle.task_id];
+        entry.running.retain(|(att, _)| *att != handle.attempt);
+        if entry.state == TaskState::Succeeded {
+            return; // twin already succeeded; this failure is moot
+        }
+        if !entry.running.is_empty() {
+            return; // a twin is still running; let it finish
+        }
+        if entry.attempts_started >= max_attempts {
+            entry.state = TaskState::Failed;
+            st.aborted = Some(format!(
+                "task {} failed {} attempts: {error}",
+                handle.task_id, max_attempts
+            ));
+        } else {
+            entry.state = TaskState::Pending;
+            self.retries.fetch_add(1, Ordering::Relaxed);
+            st.pending.push(handle.task_id);
+        }
+        self.work_available.notify_all();
+    }
+
+    /// Lost-attempt cleanup for cancelled speculative twins.
+    pub fn report_cancelled(&self, handle: &TaskHandle) {
+        let mut st = self.state.lock().unwrap();
+        let entry = &mut st.tasks[handle.task_id];
+        entry.running.retain(|(att, _)| *att != handle.attempt);
+        self.work_available.notify_all();
+    }
+
+    pub fn abort_reason(&self) -> Option<String> {
+        self.state.lock().unwrap().aborted.clone()
+    }
+
+    pub fn task_state(&self, tid: usize) -> TaskState {
+        self.state.lock().unwrap().tasks[tid].state
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn desc(id: usize, pref: &[usize]) -> TaskDescriptor {
+        TaskDescriptor {
+            task_id: id,
+            first_record: id,
+            last_record: id + 1,
+            byte_start: 0,
+            byte_end: 100,
+            preferred_nodes: pref.iter().map(|&n| NodeId(n)).collect(),
+        }
+    }
+
+    fn cfg() -> SchedulerConfig {
+        SchedulerConfig {
+            speculation: false, // most tests drive deterministic paths
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn locality_preference_wins() {
+        let s = Scheduler::new(vec![desc(0, &[1]), desc(1, &[0])], &cfg());
+        // Node 0 asks first: should receive task 1 (its local one), not 0.
+        match s.next_assignment(NodeId(0)) {
+            Assignment::Run(d, h) => {
+                assert_eq!(d.task_id, 1);
+                assert!(s.report_success(&h));
+            }
+            _ => panic!("expected work"),
+        }
+        assert_eq!(s.data_local_tasks.load(Ordering::Relaxed), 1);
+        match s.next_assignment(NodeId(0)) {
+            Assignment::Run(d, h) => {
+                assert_eq!(d.task_id, 0);
+                s.report_success(&h);
+            }
+            _ => panic!("expected work"),
+        }
+        assert_eq!(s.rack_remote_tasks.load(Ordering::Relaxed), 1);
+        assert!(matches!(s.next_assignment(NodeId(0)), Assignment::Done));
+    }
+
+    #[test]
+    fn failure_requeues_until_max_attempts() {
+        let mut c = cfg();
+        c.max_attempts = 3;
+        let s = Scheduler::new(vec![desc(0, &[])], &c);
+        for round in 0..3 {
+            match s.next_assignment(NodeId(0)) {
+                Assignment::Run(_, h) => {
+                    assert_eq!(h.attempt, round);
+                    s.report_failure(&h, "injected");
+                }
+                _ => panic!("expected work at round {round}"),
+            }
+        }
+        assert!(matches!(s.next_assignment(NodeId(0)), Assignment::Done));
+        assert!(s.abort_reason().unwrap().contains("injected"));
+        assert_eq!(s.task_state(0), TaskState::Failed);
+        assert_eq!(s.retries.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn success_after_retry() {
+        let s = Scheduler::new(vec![desc(0, &[])], &cfg());
+        let h = match s.next_assignment(NodeId(0)) {
+            Assignment::Run(_, h) => h,
+            _ => panic!(),
+        };
+        s.report_failure(&h, "flaky");
+        let h2 = match s.next_assignment(NodeId(1)) {
+            Assignment::Run(_, h) => h,
+            _ => panic!(),
+        };
+        assert!(s.report_success(&h2));
+        assert_eq!(s.task_state(0), TaskState::Succeeded);
+        assert!(matches!(s.next_assignment(NodeId(0)), Assignment::Done));
+    }
+
+    #[test]
+    fn speculation_duplicates_slow_task_and_first_wins() {
+        let mut c = cfg();
+        c.speculation = true;
+        c.speculation_slowness = 0.9;
+        let s = Scheduler::new(vec![desc(0, &[]), desc(1, &[])], &c);
+        let h0 = match s.next_assignment(NodeId(0)) {
+            Assignment::Run(d, h) => {
+                assert_eq!(d.task_id, 0);
+                h
+            }
+            _ => panic!(),
+        };
+        let h1 = match s.next_assignment(NodeId(1)) {
+            Assignment::Run(d, h) => {
+                assert_eq!(d.task_id, 1);
+                h
+            }
+            _ => panic!(),
+        };
+        // Task 0 races ahead; task 1 crawls.
+        h0.report_progress(0.9);
+        h1.report_progress(0.05);
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        // An idle slot now speculates task 1.
+        let h1b = match s.next_assignment(NodeId(2)) {
+            Assignment::Run(d, h) => {
+                assert_eq!(d.task_id, 1, "should speculate the straggler");
+                assert_eq!(h.attempt, 1);
+                h
+            }
+            _ => panic!("expected speculative assignment"),
+        };
+        assert_eq!(s.speculative_launches.load(Ordering::Relaxed), 1);
+        // The speculative twin finishes first and wins…
+        assert!(s.report_success(&h1b));
+        // …the original is now cancelled and its (late) success discarded.
+        assert!(h1.cancelled());
+        assert!(!s.report_success(&h1));
+        s.report_success(&h0);
+        assert!(matches!(s.next_assignment(NodeId(0)), Assignment::Done));
+    }
+
+    #[test]
+    fn concurrent_workers_drain_all_tasks_exactly_once() {
+        use std::sync::atomic::AtomicUsize;
+        let n = 64;
+        let s = Arc::new(Scheduler::new(
+            (0..n).map(|i| desc(i, &[i % 4])).collect(),
+            &cfg(),
+        ));
+        let done = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..8)
+            .map(|w| {
+                let s = s.clone();
+                let done = done.clone();
+                std::thread::spawn(move || loop {
+                    match s.next_assignment(NodeId(w % 4)) {
+                        Assignment::Run(_, h) => {
+                            if s.report_success(&h) {
+                                done.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        Assignment::Done => break,
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(done.load(Ordering::Relaxed), n);
+    }
+}

@@ -1,0 +1,152 @@
+//! The shuffle/merge stage: per-tile mapper outputs → per-image censuses.
+//!
+//! The paper's job is map-only (each mapper owns whole images and writes
+//! straight back to HDFS), but DIFET tiles images across tasks, so a
+//! merge by `image_id` is required.  This is also where the per-image
+//! OpenCV caps surface: Table 2's Shi-Tomasi row is exactly `400·N` and
+//! ORB's `500·N` because `goodFeaturesToTrack(maxCorners=400)` /
+//! `ORB(nfeatures=500)` keep only the strongest keypoints per image.
+
+use std::collections::BTreeMap;
+
+use super::job::{ImageCensus, MapOutput};
+
+/// Merge mapper outputs (one or more per image) into per-image censuses,
+/// applying the per-image cap and the report keypoint bound.
+pub fn merge_image_outputs(
+    outputs: Vec<MapOutput>,
+    per_image_cap: Option<usize>,
+    report_keypoints: usize,
+) -> Vec<ImageCensus> {
+    let mut by_image: BTreeMap<u64, (u64, Vec<crate::features::Keypoint>)> = BTreeMap::new();
+    for out in outputs {
+        let entry = by_image.entry(out.image_id).or_default();
+        entry.0 += out.raw_count;
+        entry.1.extend(out.keypoints);
+    }
+    by_image
+        .into_iter()
+        .map(|(image_id, (raw_count, mut kps))| {
+            kps.sort_by(|a, b| {
+                b.score
+                    .partial_cmp(&a.score)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.row.cmp(&b.row))
+                    .then(a.col.cmp(&b.col))
+            });
+            let count = match per_image_cap {
+                Some(cap) => raw_count.min(cap as u64),
+                None => raw_count,
+            };
+            let keep = per_image_cap.unwrap_or(usize::MAX).min(report_keypoints);
+            kps.truncate(keep);
+            ImageCensus {
+                image_id,
+                count,
+                raw_count,
+                keypoints: kps,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::Keypoint;
+    use crate::util::prop::check;
+
+    fn out(image_id: u64, raw: u64, scores: &[f32]) -> MapOutput {
+        MapOutput {
+            image_id,
+            raw_count: raw,
+            keypoints: scores
+                .iter()
+                .enumerate()
+                .map(|(i, &s)| Keypoint {
+                    row: i as i32,
+                    col: 0,
+                    score: s,
+                })
+                .collect(),
+            descriptor_count: scores.len() as u64,
+        }
+    }
+
+    #[test]
+    fn merges_tiles_of_one_image() {
+        let merged = merge_image_outputs(
+            vec![out(7, 10, &[0.5, 0.1]), out(7, 32, &[0.9])],
+            None,
+            100,
+        );
+        assert_eq!(merged.len(), 1);
+        assert_eq!(merged[0].image_id, 7);
+        assert_eq!(merged[0].count, 42);
+        assert_eq!(merged[0].raw_count, 42);
+        // Keypoints re-ranked across tiles.
+        assert_eq!(merged[0].keypoints[0].score, 0.9);
+    }
+
+    #[test]
+    fn cap_applies_per_image_not_per_job() {
+        let merged = merge_image_outputs(
+            vec![out(0, 900, &[0.1]), out(1, 450, &[0.2]), out(2, 100, &[0.3])],
+            Some(400),
+            100,
+        );
+        let counts: Vec<u64> = merged.iter().map(|m| m.count).collect();
+        assert_eq!(counts, vec![400, 400, 100]);
+        // Raw counts preserved for diagnostics.
+        assert_eq!(merged[0].raw_count, 900);
+    }
+
+    #[test]
+    fn keypoints_truncate_to_strongest() {
+        let merged = merge_image_outputs(
+            vec![out(0, 5, &[0.1, 0.9, 0.5, 0.7, 0.3])],
+            Some(3),
+            100,
+        );
+        let scores: Vec<f32> = merged[0].keypoints.iter().map(|k| k.score).collect();
+        assert_eq!(scores, vec![0.9, 0.7, 0.5]);
+    }
+
+    #[test]
+    fn prop_census_additive_and_cap_monotone() {
+        check("shuffle_census", 60, |g| {
+            let images = g.usize_in(1, 6);
+            let mut outputs = Vec::new();
+            let mut truth = vec![0u64; images];
+            for _ in 0..g.usize_in(1, 20) {
+                let img = g.usize_in(0, images - 1);
+                let n = g.u32(500) as u64;
+                truth[img] += n;
+                outputs.push(out(img as u64, n, &[]));
+            }
+            let uncapped = merge_image_outputs(outputs.clone(), None, 10);
+            for m in &uncapped {
+                crate::prop_assert!(
+                    m.count == truth[m.image_id as usize],
+                    "image {} census {} != {}",
+                    m.image_id,
+                    m.count,
+                    truth[m.image_id as usize]
+                );
+            }
+            let cap = g.usize_in(1, 600);
+            let capped = merge_image_outputs(outputs, Some(cap), 10);
+            for (a, b) in capped.iter().zip(uncapped.iter()) {
+                crate::prop_assert!(a.count <= b.count, "cap increased a census");
+                crate::prop_assert!(a.count <= cap as u64, "cap exceeded");
+                crate::prop_assert!(
+                    a.count == b.count.min(cap as u64),
+                    "cap not exact: {} vs min({}, {cap})",
+                    a.count,
+                    b.count
+                );
+            }
+            Ok(())
+        });
+    }
+}

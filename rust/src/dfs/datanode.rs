@@ -1,0 +1,100 @@
+//! Datanode: per-node block storage with liveness + usage accounting.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::{BlockId, NodeId};
+
+/// One simulated datanode.  Blocks are shared `Arc<[u8]>` slices —
+/// replica copies cost pointer clones, while the *modeled* transfer cost
+/// lives in [`crate::cluster::CostModel`].
+#[derive(Debug)]
+pub struct Datanode {
+    id: NodeId,
+    blocks: Mutex<HashMap<BlockId, Arc<[u8]>>>,
+    used: AtomicU64,
+    alive: AtomicBool,
+}
+
+impl Datanode {
+    pub fn new(id: NodeId) -> Self {
+        Datanode {
+            id,
+            blocks: Mutex::new(HashMap::new()),
+            used: AtomicU64::new(0),
+            alive: AtomicBool::new(true),
+        }
+    }
+
+    pub fn id(&self) -> NodeId {
+        self.id
+    }
+
+    pub fn store(&self, id: BlockId, data: Arc<[u8]>) {
+        let mut map = self.blocks.lock().unwrap();
+        if let Some(old) = map.insert(id, data) {
+            self.used.fetch_sub(old.len() as u64, Ordering::Relaxed);
+        }
+        let len = map[&id].len() as u64;
+        self.used.fetch_add(len, Ordering::Relaxed);
+    }
+
+    /// Fetch a block if this node is alive and holds it.
+    pub fn fetch(&self, id: BlockId) -> Option<Arc<[u8]>> {
+        if !self.is_alive() {
+            return None;
+        }
+        self.blocks.lock().unwrap().get(&id).cloned()
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used.load(Ordering::Relaxed)
+    }
+
+    pub fn block_count(&self) -> usize {
+        self.blocks.lock().unwrap().len()
+    }
+
+    pub fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::Relaxed)
+    }
+
+    pub fn set_alive(&self, alive: bool) {
+        self.alive.store(alive, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn store_fetch_and_accounting() {
+        let dn = Datanode::new(NodeId(0));
+        dn.store(BlockId(1), Arc::from(&[1u8, 2, 3][..]));
+        dn.store(BlockId(2), Arc::from(&[4u8; 10][..]));
+        assert_eq!(dn.used_bytes(), 13);
+        assert_eq!(dn.block_count(), 2);
+        assert_eq!(&*dn.fetch(BlockId(1)).unwrap(), &[1, 2, 3]);
+        assert!(dn.fetch(BlockId(9)).is_none());
+    }
+
+    #[test]
+    fn overwrite_does_not_leak_accounting() {
+        let dn = Datanode::new(NodeId(0));
+        dn.store(BlockId(1), Arc::from(&[0u8; 100][..]));
+        dn.store(BlockId(1), Arc::from(&[0u8; 40][..]));
+        assert_eq!(dn.used_bytes(), 40);
+    }
+
+    #[test]
+    fn dead_node_serves_nothing() {
+        let dn = Datanode::new(NodeId(3));
+        dn.store(BlockId(1), Arc::from(&[7u8][..]));
+        dn.set_alive(false);
+        assert!(dn.fetch(BlockId(1)).is_none());
+        dn.set_alive(true);
+        assert!(dn.fetch(BlockId(1)).is_some());
+    }
+}

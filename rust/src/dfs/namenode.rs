@@ -1,0 +1,196 @@
+//! Namenode: namespace + block map + replica placement.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Mutex;
+
+use crate::util::{DifetError, Result};
+
+use super::{BlockId, NodeId};
+
+/// Metadata of one stored block.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BlockMeta {
+    pub len: u64,
+    pub replicas: Vec<NodeId>,
+}
+
+/// Metadata of one file.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FileMeta {
+    pub blocks: Vec<BlockId>,
+    pub len: u64,
+}
+
+#[derive(Debug, Default)]
+struct State {
+    files: BTreeMap<String, FileMeta>,
+    blocks: HashMap<BlockId, BlockMeta>,
+    next_block: u64,
+}
+
+/// The metadata manager ("keeping track of both actions of datanodes and
+/// metadata for all directories and files", paper §3).
+#[derive(Debug)]
+pub struct Namenode {
+    state: Mutex<State>,
+    #[allow(dead_code)]
+    cluster_nodes: usize,
+}
+
+impl Namenode {
+    pub fn new(cluster_nodes: usize) -> Self {
+        Namenode {
+            state: Mutex::new(State::default()),
+            cluster_nodes,
+        }
+    }
+
+    /// Choose replica targets: first on the writer (if alive), the rest on
+    /// the least-loaded alive nodes — HDFS's default placement minus rack
+    /// awareness (the paper's testbed is one switch, i.e. one rack).
+    pub fn place_replicas(
+        &self,
+        writer: NodeId,
+        alive: &[NodeId],
+        replication: usize,
+        used_bytes: impl Fn(NodeId) -> u64,
+    ) -> Vec<NodeId> {
+        let want = replication.min(alive.len()).max(1);
+        let mut out = Vec::with_capacity(want);
+        if alive.contains(&writer) {
+            out.push(writer);
+        }
+        let mut rest: Vec<NodeId> = alive.iter().copied().filter(|n| !out.contains(n)).collect();
+        rest.sort_by_key(|n| (used_bytes(*n), n.0));
+        out.extend(rest.into_iter().take(want - out.len().min(want)));
+        out.truncate(want);
+        out
+    }
+
+    /// Allocate a block id and record its replica set.
+    pub fn register_block(&self, len: u64, replicas: &[NodeId]) -> Result<BlockId> {
+        if replicas.is_empty() {
+            return Err(DifetError::Dfs("block with zero replicas".into()));
+        }
+        let mut st = self.state.lock().unwrap();
+        let id = BlockId(st.next_block);
+        st.next_block += 1;
+        st.blocks.insert(
+            id,
+            BlockMeta {
+                len,
+                replicas: replicas.to_vec(),
+            },
+        );
+        Ok(id)
+    }
+
+    /// Record (or overwrite) a file entry.
+    pub fn register_file(&self, path: &str, blocks: &[BlockId], len: u64) -> Result<FileMeta> {
+        let meta = FileMeta {
+            blocks: blocks.to_vec(),
+            len,
+        };
+        self.state
+            .lock()
+            .unwrap()
+            .files
+            .insert(path.to_string(), meta.clone());
+        Ok(meta)
+    }
+
+    pub fn file_meta(&self, path: &str) -> Result<FileMeta> {
+        self.state
+            .lock()
+            .unwrap()
+            .files
+            .get(path)
+            .cloned()
+            .ok_or_else(|| DifetError::Dfs(format!("no such file {path:?}")))
+    }
+
+    pub fn block_meta(&self, id: BlockId) -> Result<BlockMeta> {
+        self.state
+            .lock()
+            .unwrap()
+            .blocks
+            .get(&id)
+            .cloned()
+            .ok_or_else(|| DifetError::Dfs(format!("no such block {id:?}")))
+    }
+
+    pub fn add_replica(&self, id: BlockId, node: NodeId) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        let meta = st
+            .blocks
+            .get_mut(&id)
+            .ok_or_else(|| DifetError::Dfs(format!("no such block {id:?}")))?;
+        if !meta.replicas.contains(&node) {
+            meta.replicas.push(node);
+        }
+        Ok(())
+    }
+
+    pub fn list_files(&self) -> Vec<String> {
+        self.state.lock().unwrap().files.keys().cloned().collect()
+    }
+
+    pub fn all_blocks(&self) -> Vec<(BlockId, BlockMeta)> {
+        let st = self.state.lock().unwrap();
+        let mut v: Vec<(BlockId, BlockMeta)> =
+            st.blocks.iter().map(|(k, v)| (*k, v.clone())).collect();
+        v.sort_by_key(|(k, _)| *k);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placement_prefers_writer_then_least_loaded() {
+        let nn = Namenode::new(4);
+        let alive: Vec<NodeId> = (0..4).map(NodeId).collect();
+        let used = |n: NodeId| [500u64, 100, 900, 0][n.0];
+        let got = nn.place_replicas(NodeId(2), &alive, 3, used);
+        assert_eq!(got[0], NodeId(2)); // writer first despite heavy load
+        assert_eq!(got[1], NodeId(3)); // then emptiest
+        assert_eq!(got[2], NodeId(1));
+    }
+
+    #[test]
+    fn placement_skips_dead_writer() {
+        let nn = Namenode::new(4);
+        let alive = vec![NodeId(1), NodeId(3)];
+        let got = nn.place_replicas(NodeId(0), &alive, 2, |_| 0);
+        assert!(!got.contains(&NodeId(0)));
+        assert_eq!(got.len(), 2);
+    }
+
+    #[test]
+    fn file_overwrite_replaces_meta() {
+        let nn = Namenode::new(2);
+        let b1 = nn.register_block(10, &[NodeId(0)]).unwrap();
+        let b2 = nn.register_block(20, &[NodeId(1)]).unwrap();
+        nn.register_file("/f", &[b1], 10).unwrap();
+        nn.register_file("/f", &[b2], 20).unwrap();
+        assert_eq!(nn.file_meta("/f").unwrap().blocks, vec![b2]);
+        assert_eq!(nn.list_files(), vec!["/f".to_string()]);
+    }
+
+    #[test]
+    fn add_replica_is_idempotent() {
+        let nn = Namenode::new(3);
+        let b = nn.register_block(5, &[NodeId(0)]).unwrap();
+        nn.add_replica(b, NodeId(1)).unwrap();
+        nn.add_replica(b, NodeId(1)).unwrap();
+        assert_eq!(nn.block_meta(b).unwrap().replicas, vec![NodeId(0), NodeId(1)]);
+    }
+
+    #[test]
+    fn zero_replica_registration_rejected() {
+        let nn = Namenode::new(1);
+        assert!(nn.register_block(1, &[]).is_err());
+    }
+}

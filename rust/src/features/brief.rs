@@ -1,0 +1,140 @@
+//! BRIEF-256: sparse min-eigenvalue detector + binary descriptor
+//! (sequential twin of `model.build_brief`).
+//!
+//! The 256 comparison pairs live in the generated `brief_pattern.rs`,
+//! byte-identical to the numpy pattern baked into the HLO artifacts —
+//! binary descriptors from the two paths are therefore comparable bit
+//! for bit (modulo intensity interpolation differences at the margin).
+
+use super::brief_pattern::{BRIEF_A, BRIEF_B};
+use super::conv::blur;
+use super::gray::GrayImage;
+use super::harris::{response, Mode};
+use super::nms::{absolute_threshold_mask, nms_inplace, select_topk};
+use super::params;
+use super::{Descriptors, Extraction, Keypoint};
+
+/// Full BRIEF pipeline.
+pub fn extract(gray: &GrayImage, core: (usize, usize, usize, usize), cap: usize) -> Extraction {
+    let resp = response(gray, Mode::ShiTomasi);
+    let mut mask = absolute_threshold_mask(&resp, params::BRIEF_ABS_THRESH);
+    nms_inplace(&resp, &mut mask, 1);
+    let (count, keypoints) = select_topk(&resp, &mask, core, cap);
+    let descriptors = describe(gray, &keypoints, None);
+    Extraction {
+        count,
+        keypoints,
+        descriptors,
+    }
+}
+
+/// BRIEF-256 bits at the given keypoints; `angles` steers the pattern
+/// per-keypoint (ORB's rBRIEF).  Sampling is nearest-neighbour on a σ=2
+/// smoothed image, bit j of word w = comparison 32·w + j — the exact
+/// layout of `ops.pack_bits_u32`.
+pub fn describe(gray: &GrayImage, kps: &[Keypoint], angles: Option<&[f32]>) -> Descriptors {
+    let smooth = blur(gray, 2.0, 5);
+    let mut out = Vec::with_capacity(kps.len());
+    for (i, kp) in kps.iter().enumerate() {
+        let (cos, sin) = match angles {
+            Some(a) => (a[i].cos(), a[i].sin()),
+            None => (1.0, 0.0),
+        };
+        let mut words = [0u32; 8];
+        for (bit, ((a_dr, a_dc), (b_dr, b_dc))) in BRIEF_A.iter().zip(BRIEF_B.iter()).enumerate() {
+            let rot = |dr: f32, dc: f32| (dr * cos + dc * sin, -dr * sin + dc * cos);
+            let (adr, adc) = rot(*a_dr, *a_dc);
+            let (bdr, bdc) = rot(*b_dr, *b_dc);
+            let va = smooth.at_clamped(
+                (kp.row as f32 + adr).round() as i64,
+                (kp.col as f32 + adc).round() as i64,
+            );
+            let vb = smooth.at_clamped(
+                (kp.row as f32 + bdr).round() as i64,
+                (kp.col as f32 + bdc).round() as i64,
+            );
+            if va < vb {
+                words[bit / 32] |= 1 << (bit % 32);
+            }
+        }
+        out.push(words);
+    }
+    Descriptors::Binary256(out)
+}
+
+/// Hamming distance between two 256-bit descriptors.
+pub fn hamming(a: &[u32; 8], b: &[u32; 8]) -> u32 {
+    a.iter().zip(b).map(|(x, y)| (x ^ y).count_ones()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn textured(n: usize, seed: u64) -> GrayImage {
+        let mut rng = Pcg32::seeded(seed);
+        let base = GrayImage::from_fn(n, n, |_, _| rng.next_f32());
+        blur(&base, 1.0, 3)
+    }
+
+    #[test]
+    fn pattern_fits_the_31px_window() {
+        for (dr, dc) in BRIEF_A.iter().chain(BRIEF_B.iter()) {
+            assert!(dr.abs() <= 15.0 && dc.abs() <= 15.0, "offset ({dr},{dc})");
+        }
+    }
+
+    #[test]
+    fn descriptors_deterministic_and_shifted_stable() {
+        let g = textured(96, 3);
+        let kps = vec![Keypoint { row: 48, col: 48, score: 1.0 }];
+        let d1 = describe(&g, &kps, None);
+        let d2 = describe(&g, &kps, None);
+        assert_eq!(d1, d2);
+    }
+
+    #[test]
+    fn detector_sparser_than_fast_on_texture() {
+        let g = textured(128, 9);
+        let nb = extract(&g, (0, 128, 0, 128), 4096).count;
+        let nf = super::super::fast::extract(&g, (0, 128, 0, 128), 4096).count;
+        assert!(nb * 2 < nf.max(1), "brief {nb} not sparser than fast {nf}");
+    }
+
+    #[test]
+    fn hamming_properties() {
+        let a = [0u32; 8];
+        let mut b = [0u32; 8];
+        assert_eq!(hamming(&a, &a), 0);
+        b[0] = 0b1011;
+        assert_eq!(hamming(&a, &b), 3);
+        let full = [u32::MAX; 8];
+        assert_eq!(hamming(&a, &full), 256);
+    }
+
+    #[test]
+    fn steering_by_zero_matches_unsteered() {
+        let g = textured(64, 5);
+        let kps = vec![Keypoint { row: 32, col: 32, score: 1.0 }];
+        let plain = describe(&g, &kps, None);
+        let steered = describe(&g, &kps, Some(&[0.0]));
+        assert_eq!(plain, steered);
+    }
+
+    #[test]
+    fn distinct_patches_have_distant_codes() {
+        let g = textured(128, 7);
+        let kps = vec![
+            Keypoint { row: 32, col: 32, score: 1.0 },
+            Keypoint { row: 96, col: 96, score: 1.0 },
+        ];
+        if let Descriptors::Binary256(v) = describe(&g, &kps, None) {
+            // Independent random texture → ≈128 differing bits.
+            let d = hamming(&v[0], &v[1]);
+            assert!(d > 64, "suspiciously close codes: {d}");
+        } else {
+            panic!("expected binary descriptors")
+        }
+    }
+}

@@ -1,0 +1,201 @@
+//! FAST-9 segment-test corner detection (sequential twin of
+//! `model.fast_maps`).
+
+use super::gray::GrayImage;
+use super::nms::{nms_inplace, select_topk};
+use super::params;
+use super::{Descriptors, Extraction};
+
+/// Bresenham circle of radius 3 (16 points, clockwise from 12 o'clock) —
+/// identical table to `model.FAST_CIRCLE`.
+pub const CIRCLE: [(i64, i64); 16] = [
+    (-3, 0),
+    (-3, 1),
+    (-2, 2),
+    (-1, 3),
+    (0, 3),
+    (1, 3),
+    (2, 2),
+    (3, 1),
+    (3, 0),
+    (3, -1),
+    (2, -2),
+    (1, -3),
+    (0, -3),
+    (-1, -3),
+    (-2, -2),
+    (-3, -1),
+];
+
+/// FAST corner mask + contrast score map.
+///
+/// §Perf: bit-plane formulation (the same trick as the L2 graph after its
+/// optimization pass): the 16 ring indicators are packed into a u32 plane
+/// tap-by-tap with unit-stride row slices over an edge-padded copy, then
+/// the "9 contiguous" arc test is 8 shift-ANDs per polarity.  Replaced a
+/// per-pixel 16-tap clamped gather + run-length scan (~6× faster; see
+/// EXPERIMENTS.md §Perf).
+pub fn maps(gray: &GrayImage, t: f32) -> (Vec<bool>, GrayImage) {
+    let (w, h) = (gray.width, gray.height);
+    const PAD: usize = 3;
+    let (wp, hp) = (w + 2 * PAD, h + 2 * PAD);
+
+    // Edge-replicated padded copy (one pass; every tap below becomes a
+    // plain shifted slice of it).
+    let mut gp = vec![0.0f32; wp * hp];
+    for row in 0..hp {
+        let sr = (row as i64 - PAD as i64).clamp(0, h as i64 - 1) as usize;
+        let src = &gray.data[sr * w..(sr + 1) * w];
+        let dst = &mut gp[row * wp..(row + 1) * wp];
+        dst[PAD..PAD + w].copy_from_slice(src);
+        for i in 0..PAD {
+            dst[i] = src[0];
+            dst[PAD + w + i] = src[w - 1];
+        }
+    }
+
+    let mut bright = vec![0u32; w * h];
+    let mut dark = vec![0u32; w * h];
+    let mut score = GrayImage::new(w, h);
+    for (k, (dr, dc)) in CIRCLE.iter().enumerate() {
+        let bit = 1u32 << k;
+        for row in 0..h {
+            let tap_row = ((row + PAD) as i64 + dr) as usize;
+            let tap =
+                &gp[tap_row * wp + (PAD as i64 + dc) as usize..][..w];
+            let centre = &gray.data[row * w..(row + 1) * w];
+            let b = &mut bright[row * w..(row + 1) * w];
+            let d = &mut dark[row * w..(row + 1) * w];
+            let s = &mut score.data[row * w..(row + 1) * w];
+            for c in 0..w {
+                let diff = tap[c] - centre[c];
+                b[c] |= if diff > t { bit } else { 0 };
+                d[c] |= if diff < -t { bit } else { 0 };
+                s[c] += (diff.abs() - t).max(0.0);
+            }
+        }
+    }
+
+    let mut mask = vec![false; w * h];
+    for i in 0..w * h {
+        mask[i] = arc9_bits(bright[i]) || arc9_bits(dark[i]);
+    }
+    (mask, score)
+}
+
+/// Is there a run of ≥ FAST_ARC consecutive set bits on the circular
+/// 16-bit ring?  (AND of 9 shifted copies of the bit-doubled ring.)
+#[inline]
+fn arc9_bits(bits16: u32) -> bool {
+    let ring = bits16 | (bits16 << 16);
+    let mut acc = ring;
+    for i in 1..params::FAST_ARC as u32 {
+        acc &= ring >> i;
+    }
+    acc & 0xFFFF != 0
+}
+
+/// Full FAST pipeline.
+pub fn extract(gray: &GrayImage, core: (usize, usize, usize, usize), cap: usize) -> Extraction {
+    let (mut mask, score) = maps(gray, params::FAST_T);
+    nms_inplace(&score, &mut mask, 1);
+    let (count, keypoints) = select_topk(&score, &mask, core, cap);
+    Extraction {
+        count,
+        keypoints,
+        descriptors: Descriptors::None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn squares(n: usize) -> GrayImage {
+        let mut g = GrayImage::new(n, n);
+        let mut r0 = 16;
+        while r0 + 32 < n {
+            let mut c0 = 16;
+            while c0 + 32 < n {
+                for r in r0..r0 + 32 {
+                    for c in c0..c0 + 32 {
+                        g.set(r, c, 1.0);
+                    }
+                }
+                c0 += 64;
+            }
+            r0 += 64;
+        }
+        g
+    }
+
+    #[test]
+    fn arc_detection_wraps() {
+        let mut bits = 0u32;
+        for i in 0..9 {
+            bits |= 1 << ((14 + i) % 16); // run crossing the seam
+        }
+        assert!(arc9_bits(bits));
+        bits &= !(1 << ((14 + 4) % 16)); // break it
+        assert!(!arc9_bits(bits));
+    }
+
+    #[test]
+    fn arc_bits_matches_naive_scan() {
+        // Property: the shift-AND arc test equals a run-length scan, for
+        // every 16-bit ring pattern (exhaustive).
+        for bits in 0u32..=0xFFFF {
+            let naive = {
+                let mut run = 0usize;
+                let mut hit = false;
+                for i in 0..32 {
+                    if bits & (1 << (i % 16)) != 0 {
+                        run += 1;
+                        if run >= 9 {
+                            hit = true;
+                            break;
+                        }
+                    } else {
+                        run = 0;
+                    }
+                }
+                hit
+            };
+            assert_eq!(arc9_bits(bits), naive, "pattern {bits:#06x}");
+        }
+    }
+
+    #[test]
+    fn flat_and_low_contrast_yield_nothing() {
+        let g = GrayImage::from_fn(64, 64, |r, c| 0.5 + 0.001 * ((r + c) % 2) as f32);
+        let e = extract(&g, (0, 64, 0, 64), 100);
+        assert_eq!(e.count, 0);
+    }
+
+    #[test]
+    fn isolated_square_corners_detected() {
+        let g = squares(128);
+        let e = extract(&g, (0, 128, 0, 128), 4096);
+        assert!(e.count > 0, "no FAST corners on isolated squares");
+        for kp in &e.keypoints {
+            let near = |v: i32| {
+                let m = (v % 64 + 64) % 64;
+                (14..=18).contains(&m) || (46..=50).contains(&m)
+            };
+            assert!(
+                near(kp.row) && near(kp.col),
+                "corner away from square corner: ({}, {})",
+                kp.row,
+                kp.col
+            );
+        }
+    }
+
+    #[test]
+    fn checkerboard_defeats_fast9() {
+        // Junctions split the ring 8/8 — no 9-arc (see python twin test).
+        let g = GrayImage::from_fn(96, 96, |r, c| ((r / 16 + c / 16) % 2) as f32);
+        let e = extract(&g, (0, 96, 0, 96), 4096);
+        assert_eq!(e.count, 0);
+    }
+}

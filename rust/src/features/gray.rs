@@ -1,0 +1,123 @@
+//! Grayscale image buffer + the BT.601 conversion every extractor starts
+//! with (step 2 of the paper's mapper pseudo-code).
+
+use crate::imagery::Rgba8Image;
+
+/// Row-major `f32` grayscale image, values nominally in [0, 1].
+#[derive(Debug, Clone, PartialEq)]
+pub struct GrayImage {
+    pub width: usize,
+    pub height: usize,
+    pub data: Vec<f32>,
+}
+
+impl GrayImage {
+    pub fn new(width: usize, height: usize) -> Self {
+        GrayImage {
+            width,
+            height,
+            data: vec![0.0; width * height],
+        }
+    }
+
+    pub fn from_fn(width: usize, height: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut img = GrayImage::new(width, height);
+        for r in 0..height {
+            for c in 0..width {
+                img.data[r * width + c] = f(r, c);
+            }
+        }
+        img
+    }
+
+    /// BT.601 luma of an RGBA8 image (identical to `ops.grayscale`).
+    pub fn from_rgba(img: &Rgba8Image) -> Self {
+        let mut out = GrayImage::new(img.width, img.height);
+        for (dst, px) in out.data.iter_mut().zip(img.data.chunks_exact(4)) {
+            *dst = (0.299 * px[0] as f32 + 0.587 * px[1] as f32 + 0.114 * px[2] as f32)
+                * (1.0 / 255.0);
+        }
+        out
+    }
+
+    /// From the HWC f32 RGBA tile layout the PJRT executables consume.
+    pub fn from_tile_f32(tile: &[f32], width: usize, height: usize) -> Self {
+        assert_eq!(tile.len(), width * height * 4);
+        let mut out = GrayImage::new(width, height);
+        for (dst, px) in out.data.iter_mut().zip(tile.chunks_exact(4)) {
+            *dst = (0.299 * px[0] + 0.587 * px[1] + 0.114 * px[2]) * (1.0 / 255.0);
+        }
+        out
+    }
+
+    #[inline]
+    pub fn at(&self, row: usize, col: usize) -> f32 {
+        self.data[row * self.width + col]
+    }
+
+    #[inline]
+    pub fn set(&mut self, row: usize, col: usize, v: f32) {
+        self.data[row * self.width + col] = v;
+    }
+
+    /// Edge-replicated read (`mode="edge"` padding semantics).
+    #[inline]
+    pub fn at_clamped(&self, row: i64, col: i64) -> f32 {
+        let r = row.clamp(0, self.height as i64 - 1) as usize;
+        let c = col.clamp(0, self.width as i64 - 1) as usize;
+        self.at(r, c)
+    }
+
+    /// 2× decimation (SIFT octave step; matches `ops.downsample2`).
+    pub fn downsample2(&self) -> GrayImage {
+        let (w, h) = (self.width.div_ceil(2), self.height.div_ceil(2));
+        GrayImage::from_fn(w, h, |r, c| self.at(r * 2, c * 2))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bt601_weights() {
+        let mut img = Rgba8Image::new(2, 1);
+        img.put(0, 0, [255, 0, 0, 255]);
+        img.put(0, 1, [0, 255, 0, 0]); // alpha ignored
+        let g = GrayImage::from_rgba(&img);
+        assert!((g.at(0, 0) - 0.299).abs() < 1e-6);
+        assert!((g.at(0, 1) - 0.587).abs() < 1e-6);
+    }
+
+    #[test]
+    fn tile_f32_matches_rgba_path() {
+        let mut img = Rgba8Image::new(3, 2);
+        for r in 0..2 {
+            for c in 0..3 {
+                img.put(r, c, [(r * 40) as u8, (c * 30) as u8, 77, 255]);
+            }
+        }
+        let tile: Vec<f32> = img.data.iter().map(|&b| b as f32).collect();
+        assert_eq!(
+            GrayImage::from_rgba(&img),
+            GrayImage::from_tile_f32(&tile, 3, 2)
+        );
+    }
+
+    #[test]
+    fn clamped_reads_replicate_edges() {
+        let g = GrayImage::from_fn(4, 3, |r, c| (r * 10 + c) as f32);
+        assert_eq!(g.at_clamped(-5, -5), 0.0);
+        assert_eq!(g.at_clamped(10, 10), 23.0);
+        assert_eq!(g.at_clamped(1, -1), 10.0);
+    }
+
+    #[test]
+    fn downsample_takes_even_pixels() {
+        let g = GrayImage::from_fn(4, 4, |r, c| (r * 4 + c) as f32);
+        let d = g.downsample2();
+        assert_eq!((d.width, d.height), (2, 2));
+        assert_eq!(d.at(0, 0), 0.0);
+        assert_eq!(d.at(1, 1), 10.0);
+    }
+}

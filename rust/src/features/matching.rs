@@ -1,0 +1,222 @@
+//! Descriptor matching — the downstream task DIFET's features feed.
+//!
+//! The paper motivates feature extraction with image matching and
+//! stitching (§1: "image matching (Wang et al., 2012; …), image
+//! stitching (Sayar et al., 2013)").  This module closes that loop so
+//! the examples can demonstrate end-use: brute-force nearest-neighbour
+//! matching with Lowe's ratio test for float descriptors (SIFT/SURF) and
+//! Hamming distance with the same test for binary ones (BRIEF/ORB), plus
+//! a translation-RANSAC consensus filter — enough to register two
+//! LandSat acquisitions of the same area, which is precisely the
+//! Sayar et al. 2013 use case.
+
+use super::brief::hamming;
+use super::{Descriptors, Keypoint};
+use crate::util::rng::Pcg32;
+
+/// One accepted correspondence (indices into the two keypoint lists).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Match {
+    pub query: usize,
+    pub train: usize,
+    /// Distance in the descriptor metric (L2 or Hamming).
+    pub distance: f32,
+}
+
+/// Brute-force matching with Lowe's ratio test (`best < ratio · second`).
+///
+/// Returns matches sorted by ascending distance.  Descriptor variants of
+/// the two sides must agree; mismatches return an empty set (callers pair
+/// extractions of the same algorithm).
+pub fn match_descriptors(query: &Descriptors, train: &Descriptors, ratio: f32) -> Vec<Match> {
+    let mut out = match (query, train) {
+        (
+            Descriptors::F32 { dim: dq, data: q },
+            Descriptors::F32 { dim: dt, data: t },
+        ) if dq == dt && *dq > 0 => {
+            let d = *dq;
+            let nq = q.len() / d;
+            let nt = t.len() / d;
+            let mut matches = Vec::new();
+            for i in 0..nq {
+                let qi = &q[i * d..(i + 1) * d];
+                let (mut best, mut second, mut best_j) = (f32::MAX, f32::MAX, usize::MAX);
+                for j in 0..nt {
+                    let tj = &t[j * d..(j + 1) * d];
+                    let dist: f32 = qi
+                        .iter()
+                        .zip(tj)
+                        .map(|(a, b)| (a - b) * (a - b))
+                        .sum();
+                    if dist < best {
+                        second = best;
+                        best = dist;
+                        best_j = j;
+                    } else if dist < second {
+                        second = dist;
+                    }
+                }
+                if best_j != usize::MAX && best < ratio * ratio * second {
+                    matches.push(Match {
+                        query: i,
+                        train: best_j,
+                        distance: best.sqrt(),
+                    });
+                }
+            }
+            matches
+        }
+        (Descriptors::Binary256(q), Descriptors::Binary256(t)) => {
+            let mut matches = Vec::new();
+            for (i, qi) in q.iter().enumerate() {
+                let (mut best, mut second, mut best_j) = (u32::MAX, u32::MAX, usize::MAX);
+                for (j, tj) in t.iter().enumerate() {
+                    let dist = hamming(qi, tj);
+                    if dist < best {
+                        second = best;
+                        best = dist;
+                        best_j = j;
+                    } else if dist < second {
+                        second = dist;
+                    }
+                }
+                if best_j != usize::MAX && (best as f32) < ratio * second as f32 {
+                    matches.push(Match {
+                        query: i,
+                        train: best_j,
+                        distance: best as f32,
+                    });
+                }
+            }
+            matches
+        }
+        _ => Vec::new(),
+    };
+    out.sort_by(|a, b| a.distance.partial_cmp(&b.distance).unwrap());
+    out
+}
+
+/// Estimated 2-D translation between two keypoint sets.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Translation {
+    pub d_row: f32,
+    pub d_col: f32,
+    pub inliers: usize,
+}
+
+/// Translation-model RANSAC over matches: the registration model for
+/// same-orbit LandSat acquisitions (Sayar et al. 2013 register mosaics
+/// with exactly this degree of freedom).
+pub fn ransac_translation(
+    query_kps: &[Keypoint],
+    train_kps: &[Keypoint],
+    matches: &[Match],
+    tolerance_px: f32,
+    iterations: usize,
+    seed: u64,
+) -> Option<Translation> {
+    if matches.is_empty() {
+        return None;
+    }
+    let mut rng = Pcg32::seeded(seed);
+    let mut best: Option<Translation> = None;
+    for _ in 0..iterations {
+        let m = matches[rng.next_bounded(matches.len() as u32) as usize];
+        let dr = train_kps[m.train].row as f32 - query_kps[m.query].row as f32;
+        let dc = train_kps[m.train].col as f32 - query_kps[m.query].col as f32;
+        // Count + accumulate inliers under this hypothesis.
+        let (mut n, mut sum_r, mut sum_c) = (0usize, 0.0f32, 0.0f32);
+        for mm in matches {
+            let r = train_kps[mm.train].row as f32 - query_kps[mm.query].row as f32;
+            let c = train_kps[mm.train].col as f32 - query_kps[mm.query].col as f32;
+            if (r - dr).abs() <= tolerance_px && (c - dc).abs() <= tolerance_px {
+                n += 1;
+                sum_r += r;
+                sum_c += c;
+            }
+        }
+        if n > best.map_or(0, |b| b.inliers) {
+            best = Some(Translation {
+                d_row: sum_r / n as f32,
+                d_col: sum_c / n as f32,
+                inliers: n,
+            });
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f32_desc(rows: &[&[f32]]) -> Descriptors {
+        let dim = rows[0].len();
+        Descriptors::F32 {
+            dim,
+            data: rows.iter().flat_map(|r| r.iter().copied()).collect(),
+        }
+    }
+
+    #[test]
+    fn ratio_test_keeps_unambiguous_matches_only() {
+        let q = f32_desc(&[&[1.0, 0.0], &[0.0, 1.0]]);
+        // Train: one clear match for q0, two near-identical rows for q1
+        // (ambiguous → ratio test must reject it).
+        let t = f32_desc(&[&[0.98, 0.0], &[0.0, 0.9], &[0.0, 0.91], &[5.0, 5.0]]);
+        let m = match_descriptors(&q, &t, 0.8);
+        assert_eq!(m.len(), 1);
+        assert_eq!((m[0].query, m[0].train), (0, 0));
+    }
+
+    #[test]
+    fn binary_matching_uses_hamming() {
+        let a = [[0u32; 8], [u32::MAX; 8]];
+        let q = Descriptors::Binary256(a.to_vec());
+        let t = Descriptors::Binary256(vec![[0u32; 8], [0x0F0F0F0F; 8], [u32::MAX; 8]]);
+        let m = match_descriptors(&q, &t, 0.8);
+        assert_eq!(m.len(), 2);
+        assert_eq!((m[0].query, m[0].train), (0, 0)); // distance 0 first
+        assert_eq!((m[1].query, m[1].train), (1, 2));
+    }
+
+    #[test]
+    fn mismatched_variants_yield_nothing() {
+        let q = f32_desc(&[&[1.0]]);
+        let t = Descriptors::Binary256(vec![[0; 8]]);
+        assert!(match_descriptors(&q, &t, 0.8).is_empty());
+        assert!(match_descriptors(&Descriptors::None, &Descriptors::None, 0.8).is_empty());
+    }
+
+    #[test]
+    fn ransac_recovers_a_planted_translation() {
+        let mut rng = Pcg32::seeded(9);
+        let mut q_kps = Vec::new();
+        let mut t_kps = Vec::new();
+        let mut matches = Vec::new();
+        // 40 true correspondences at (+17, -23), 10 outliers.
+        for i in 0..50 {
+            let r = 50 + rng.next_bounded(400) as i32;
+            let c = 50 + rng.next_bounded(400) as i32;
+            q_kps.push(Keypoint { row: r, col: c, score: 1.0 });
+            if i < 40 {
+                t_kps.push(Keypoint { row: r + 17, col: c - 23, score: 1.0 });
+            } else {
+                t_kps.push(Keypoint {
+                    row: rng.next_bounded(500) as i32,
+                    col: rng.next_bounded(500) as i32,
+                    score: 1.0,
+                });
+            }
+            matches.push(Match { query: i, train: i, distance: 0.1 });
+        }
+        let t = ransac_translation(&q_kps, &t_kps, &matches, 2.0, 64, 1).unwrap();
+        assert!(t.inliers >= 40, "inliers {}", t.inliers);
+        assert!((t.d_row - 17.0).abs() < 0.5 && (t.d_col + 23.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn ransac_empty_matches_is_none() {
+        assert!(ransac_translation(&[], &[], &[], 2.0, 8, 0).is_none());
+    }
+}

@@ -1,0 +1,227 @@
+//! Pure-Rust feature extractors — the paper's sequential baseline.
+//!
+//! Table 1's "One node (Matlab)" column is a desktop sequential
+//! implementation of the same seven algorithms; this module is DIFET's
+//! equivalent.  It mirrors the L2 JAX graphs operator-for-operator
+//! (`python/compile/model.py` is the normative description; thresholds
+//! live in [`params`]) and serves three roles:
+//!
+//! 1. the sequential baseline timed for Table 1's first column,
+//! 2. the fallback executor when `artifacts/` has not been built
+//!    (`cargo test` works pre-`make artifacts`),
+//! 3. the semantic oracle the integration tests compare PJRT outputs
+//!    against (counts and keypoint sets must agree closely; exact float
+//!    equality is *not* expected across XLA vs rustc op ordering).
+
+pub mod brief;
+mod brief_pattern;
+pub mod conv;
+pub mod fast;
+pub mod gray;
+pub mod harris;
+pub mod matching;
+pub mod nms;
+pub mod orb;
+pub mod params;
+pub mod sift;
+pub mod surf;
+
+pub use gray::GrayImage;
+
+/// The BRIEF-256 sampling pattern (generated from python, bit-identical
+/// to `model.BRIEF_A`) — the runtime feeds it to the BRIEF/ORB
+/// executables as operands.
+pub fn brief_pattern_a() -> &'static [(f32, f32); 256] {
+    &brief_pattern::BRIEF_A
+}
+pub fn brief_pattern_b() -> &'static [(f32, f32); 256] {
+    &brief_pattern::BRIEF_B
+}
+
+use crate::util::{DifetError, Result};
+
+/// The seven extractors, in the paper's Table 1 row order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    Harris,
+    ShiTomasi,
+    Sift,
+    Surf,
+    Fast,
+    Brief,
+    Orb,
+}
+
+impl Algorithm {
+    pub const ALL: [Algorithm; 7] = [
+        Algorithm::Harris,
+        Algorithm::ShiTomasi,
+        Algorithm::Sift,
+        Algorithm::Surf,
+        Algorithm::Fast,
+        Algorithm::Brief,
+        Algorithm::Orb,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Algorithm::Harris => "harris",
+            Algorithm::ShiTomasi => "shi_tomasi",
+            Algorithm::Sift => "sift",
+            Algorithm::Surf => "surf",
+            Algorithm::Fast => "fast",
+            Algorithm::Brief => "brief",
+            Algorithm::Orb => "orb",
+        }
+    }
+
+    /// Human label as printed in the paper's tables.
+    pub fn paper_label(self) -> &'static str {
+        match self {
+            Algorithm::Harris => "Harris Corner Detection",
+            Algorithm::ShiTomasi => "Shi-Tomasi",
+            Algorithm::Sift => "SIFT",
+            Algorithm::Surf => "SURF",
+            Algorithm::Fast => "FAST",
+            Algorithm::Brief => "BRIEF",
+            Algorithm::Orb => "ORB",
+        }
+    }
+
+    pub fn parse(name: &str) -> Result<Algorithm> {
+        Algorithm::ALL
+            .into_iter()
+            .find(|a| a.name() == name)
+            .ok_or_else(|| {
+                DifetError::Config(format!(
+                    "unknown algorithm {name:?} (known: {:?})",
+                    Algorithm::ALL.map(|a| a.name())
+                ))
+            })
+    }
+
+    /// Descriptor payload of this algorithm (mirrors `model.ALGORITHMS`).
+    pub fn descriptor_kind(self) -> DescriptorKind {
+        match self {
+            Algorithm::Sift => DescriptorKind::F32(128),
+            Algorithm::Surf => DescriptorKind::F32(64),
+            Algorithm::Brief | Algorithm::Orb => DescriptorKind::Binary256,
+            _ => DescriptorKind::None,
+        }
+    }
+}
+
+/// Descriptor layout attached to keypoints.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DescriptorKind {
+    None,
+    /// `F32(d)`: d-dimensional float vector.
+    F32(usize),
+    /// 256-bit binary string as 8 u32 words.
+    Binary256,
+}
+
+/// One detected keypoint (tile- or scene-local coordinates by context).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Keypoint {
+    pub row: i32,
+    pub col: i32,
+    pub score: f32,
+}
+
+/// Descriptor storage for a batch of keypoints.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Descriptors {
+    None,
+    F32 { dim: usize, data: Vec<f32> },
+    Binary256(Vec<[u32; 8]>),
+}
+
+impl Descriptors {
+    pub fn len(&self) -> usize {
+        match self {
+            Descriptors::None => 0,
+            Descriptors::F32 { dim, data } => {
+                if *dim == 0 {
+                    0
+                } else {
+                    data.len() / dim
+                }
+            }
+            Descriptors::Binary256(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Result of running one algorithm over one image/tile.
+#[derive(Debug, Clone)]
+pub struct Extraction {
+    /// Exact census (never truncated by the keypoint cap).
+    pub count: u64,
+    /// Keypoints, strongest first (possibly capped).
+    pub keypoints: Vec<Keypoint>,
+    pub descriptors: Descriptors,
+}
+
+/// Run `alg` over a grayscale image, keeping at most `cap` keypoints.
+/// The `core` rectangle (row0, row1, col0, col1) restricts the census to
+/// owned pixels, mirroring the HLO executables' second operand.
+pub fn extract(
+    alg: Algorithm,
+    gray: &GrayImage,
+    core: (usize, usize, usize, usize),
+    cap: usize,
+) -> Extraction {
+    match alg {
+        Algorithm::Harris => harris::extract(gray, core, cap, harris::Mode::Harris),
+        Algorithm::ShiTomasi => harris::extract(gray, core, cap, harris::Mode::ShiTomasi),
+        Algorithm::Fast => fast::extract(gray, core, cap),
+        Algorithm::Sift => sift::extract(gray, core, cap),
+        Algorithm::Surf => surf::extract(gray, core, cap),
+        Algorithm::Brief => brief::extract(gray, core, cap),
+        Algorithm::Orb => orb::extract(gray, core, cap),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algorithm_names_roundtrip() {
+        for a in Algorithm::ALL {
+            assert_eq!(Algorithm::parse(a.name()).unwrap(), a);
+        }
+        assert!(Algorithm::parse("kaze").is_err());
+    }
+
+    #[test]
+    fn names_match_crate_level_list() {
+        let names: Vec<&str> = Algorithm::ALL.iter().map(|a| a.name()).collect();
+        assert_eq!(names, crate::ALGORITHMS.to_vec());
+    }
+
+    #[test]
+    fn descriptor_kinds_match_manifest_contract() {
+        assert_eq!(Algorithm::Sift.descriptor_kind(), DescriptorKind::F32(128));
+        assert_eq!(Algorithm::Surf.descriptor_kind(), DescriptorKind::F32(64));
+        assert_eq!(Algorithm::Orb.descriptor_kind(), DescriptorKind::Binary256);
+        assert_eq!(Algorithm::Harris.descriptor_kind(), DescriptorKind::None);
+    }
+
+    #[test]
+    fn descriptors_len() {
+        assert_eq!(Descriptors::None.len(), 0);
+        assert!(Descriptors::None.is_empty());
+        let d = Descriptors::F32 {
+            dim: 4,
+            data: vec![0.0; 12],
+        };
+        assert_eq!(d.len(), 3);
+        assert_eq!(Descriptors::Binary256(vec![[0; 8]; 5]).len(), 5);
+    }
+}

@@ -1,0 +1,156 @@
+//! Non-maximum suppression + masked top-K selection (mirrors `ops.py`).
+
+use super::gray::GrayImage;
+use super::Keypoint;
+
+/// Strict 3×3 (radius-1) NMS: survivors equal the max of their window.
+/// `mask[i]` must already hold the thresholded candidacy.
+pub fn nms_inplace(resp: &GrayImage, mask: &mut [bool], radius: usize) {
+    let (w, h) = (resp.width, resp.height);
+    let r = radius as i64;
+    for row in 0..h as i64 {
+        for col in 0..w as i64 {
+            let i = row as usize * w + col as usize;
+            if !mask[i] {
+                continue;
+            }
+            let v = resp.data[i];
+            'win: for dr in -r..=r {
+                for dc in -r..=r {
+                    if dr == 0 && dc == 0 {
+                        continue;
+                    }
+                    let (rr, cc) = (row + dr, col + dc);
+                    if rr < 0 || rr >= h as i64 || cc < 0 || cc >= w as i64 {
+                        continue;
+                    }
+                    if resp.data[rr as usize * w + cc as usize] > v {
+                        mask[i] = false;
+                        break 'win;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Census + top-`cap` keypoints over a masked response map, restricted to
+/// the `core` rectangle `(row0, row1, col0, col1)`.  The returned count is
+/// exact; only the keypoint list is capped — same contract as
+/// `ops.select_topk` + the core-mask operand of the HLO executables.
+pub fn select_topk(
+    resp: &GrayImage,
+    mask: &[bool],
+    core: (usize, usize, usize, usize),
+    cap: usize,
+) -> (u64, Vec<Keypoint>) {
+    let (r0, r1, c0, c1) = core;
+    let w = resp.width;
+    let mut count = 0u64;
+    let mut kps: Vec<Keypoint> = Vec::new();
+    for row in r0..r1.min(resp.height) {
+        for col in c0..c1.min(w) {
+            let i = row * w + col;
+            if mask[i] {
+                count += 1;
+                kps.push(Keypoint {
+                    row: row as i32,
+                    col: col as i32,
+                    score: resp.data[i],
+                });
+            }
+        }
+    }
+    // Strongest first; deterministic tie-break on coordinates mirrors
+    // top_k's stable flat-index order.
+    kps.sort_by(|a, b| {
+        b.score
+            .partial_cmp(&a.score)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.row.cmp(&b.row))
+            .then(a.col.cmp(&b.col))
+    });
+    kps.truncate(cap);
+    (count, kps)
+}
+
+/// Threshold helper: `resp > rel · max(resp)` (OpenCV-style), as a mask.
+pub fn relative_threshold_mask(resp: &GrayImage, rel: f32) -> Vec<bool> {
+    let max = resp.data.iter().cloned().fold(f32::MIN, f32::max);
+    let t = (rel * max).max(1e-12);
+    resp.data.iter().map(|&v| v > t).collect()
+}
+
+/// Absolute threshold mask.
+pub fn absolute_threshold_mask(resp: &GrayImage, thresh: f32) -> Vec<bool> {
+    resp.data.iter().map(|&v| v > thresh).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn nms_keeps_only_local_maxima() {
+        check("nms_local_maxima", 30, |g| {
+            let w = g.usize_in(4, 24);
+            let h = g.usize_in(4, 24);
+            let mut rng = Pcg32::seeded(g.seed());
+            let resp = GrayImage::from_fn(w, h, |_, _| rng.next_f32());
+            let mut mask = vec![true; w * h];
+            nms_inplace(&resp, &mut mask, 1);
+            for row in 0..h {
+                for col in 0..w {
+                    if mask[row * w + col] {
+                        let v = resp.at(row, col);
+                        for dr in -1i64..=1 {
+                            for dc in -1i64..=1 {
+                                let (rr, cc) = (row as i64 + dr, col as i64 + dc);
+                                if rr >= 0 && rr < h as i64 && cc >= 0 && cc < w as i64 {
+                                    crate::prop_assert!(
+                                        resp.at(rr as usize, cc as usize) <= v,
+                                        "survivor ({row},{col}) not maximal"
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn select_topk_census_exact_and_cap_applies() {
+        let resp = GrayImage::from_fn(10, 10, |r, c| (r * 10 + c) as f32);
+        let mask = vec![true; 100];
+        let (count, kps) = select_topk(&resp, &mask, (0, 10, 0, 10), 5);
+        assert_eq!(count, 100);
+        assert_eq!(kps.len(), 5);
+        assert_eq!(kps[0].score, 99.0); // strongest first
+        assert!(kps.windows(2).all(|w| w[0].score >= w[1].score));
+    }
+
+    #[test]
+    fn select_topk_respects_core() {
+        let resp = GrayImage::from_fn(8, 8, |_, _| 1.0);
+        let mask = vec![true; 64];
+        let (count, kps) = select_topk(&resp, &mask, (2, 4, 3, 6), 100);
+        assert_eq!(count, 2 * 3);
+        assert!(kps
+            .iter()
+            .all(|k| (2..4).contains(&(k.row as usize)) && (3..6).contains(&(k.col as usize))));
+    }
+
+    #[test]
+    fn threshold_masks() {
+        let resp = GrayImage::from_fn(4, 1, |_, c| c as f32); // 0,1,2,3
+        let rel = relative_threshold_mask(&resp, 0.5); // > 1.5
+        assert_eq!(rel, vec![false, false, true, true]);
+        let abs = absolute_threshold_mask(&resp, 2.0);
+        assert_eq!(abs, vec![false, false, false, true]);
+    }
+}

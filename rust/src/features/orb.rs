@@ -1,0 +1,125 @@
+//! ORB: FAST-9 keypoints, Harris-ranked, intensity-centroid orientation,
+//! steered BRIEF-256 (rBRIEF) — sequential twin of `model.build_orb`.
+
+use super::brief::describe;
+use super::fast;
+use super::gray::GrayImage;
+use super::harris::{response, Mode};
+use super::nms::{nms_inplace, select_topk};
+use super::params;
+use super::{Extraction, Keypoint};
+
+const CENTROID_RADIUS: i64 = 7;
+
+/// Intensity-centroid orientation (Rosin moments) at one keypoint.
+pub fn orientation(gray: &GrayImage, kp: &Keypoint) -> f32 {
+    let mut m01 = 0f32;
+    let mut m10 = 0f32;
+    for dr in -CENTROID_RADIUS..=CENTROID_RADIUS {
+        for dc in -CENTROID_RADIUS..=CENTROID_RADIUS {
+            if dr * dr + dc * dc > CENTROID_RADIUS * CENTROID_RADIUS {
+                continue;
+            }
+            let v = gray.at_clamped(kp.row as i64 + dr, kp.col as i64 + dc);
+            m01 += dr as f32 * v;
+            m10 += dc as f32 * v;
+        }
+    }
+    m01.atan2(m10)
+}
+
+/// Full ORB pipeline.  The per-image 500-feature cap is applied at
+/// per-image aggregation by the coordinator, not per tile.
+pub fn extract(gray: &GrayImage, core: (usize, usize, usize, usize), cap: usize) -> Extraction {
+    let (corner_mask, _fast_score) = fast::maps(gray, params::FAST_T);
+    let harris = response(gray, Mode::Harris);
+    // Rank FAST corners by their Harris response (ORB §3.1).  NMS runs on
+    // the *corner-masked* score map — non-corner neighbours must not
+    // suppress a corner (matches `model.build_orb`, where non-corners are
+    // NEG_LARGE in the score map).
+    let mut score = GrayImage::new(gray.width, gray.height);
+    for i in 0..score.data.len() {
+        score.data[i] = if corner_mask[i] {
+            harris.data[i]
+        } else {
+            f32::NEG_INFINITY
+        };
+    }
+    let mut mask = corner_mask;
+    nms_inplace(&score, &mut mask, 1);
+    let (count, keypoints) = select_topk(&score, &mask, core, cap);
+
+    let angles: Vec<f32> = keypoints.iter().map(|k| orientation(gray, k)).collect();
+    let descriptors = describe(gray, &keypoints, Some(&angles));
+    Extraction {
+        count,
+        keypoints,
+        descriptors,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::brief::hamming;
+    use crate::features::Descriptors;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn orientation_points_at_the_bright_side() {
+        // Bright half-plane to the right → centroid along +x → angle ≈ 0.
+        let g = GrayImage::from_fn(32, 32, |_, c| if c > 16 { 1.0 } else { 0.0 });
+        let a = orientation(&g, &Keypoint { row: 16, col: 16, score: 0.0 });
+        assert!(a.abs() < 0.1, "angle {a}");
+        // Bright below → angle ≈ +π/2 (rows grow downward).
+        let g2 = GrayImage::from_fn(32, 32, |r, _| if r > 16 { 1.0 } else { 0.0 });
+        let a2 = orientation(&g2, &Keypoint { row: 16, col: 16, score: 0.0 });
+        assert!((a2 - std::f32::consts::FRAC_PI_2).abs() < 0.1, "angle {a2}");
+    }
+
+    #[test]
+    fn rotational_stability_of_steered_descriptors() {
+        // Texture + its 90° rotation: matching keypoints must yield close
+        // descriptors thanks to steering.
+        let n = 96;
+        let mut rng = Pcg32::seeded(11);
+        let base = super::super::conv::blur(
+            &GrayImage::from_fn(n, n, |_, _| rng.next_f32()),
+            1.2,
+            4,
+        );
+        // rot90 counter-clockwise: out(r, c) = in(c, n-1-r).
+        let rot = GrayImage::from_fn(n, n, |r, c| base.at(c, n - 1 - r));
+
+        let ea = extract(&base, (0, n, 0, n), 256);
+        let eb = extract(&rot, (0, n, 0, n), 256);
+        let (Descriptors::Binary256(da), Descriptors::Binary256(db)) =
+            (&ea.descriptors, &eb.descriptors)
+        else {
+            panic!("binary descriptors expected")
+        };
+
+        let mut dists = Vec::new();
+        for (j, kb) in eb.keypoints.iter().enumerate() {
+            // Inverse map: a_row = kb.col? For out(r,c)=in(c, n-1-r):
+            // in-coords (r_a, c_a) appear at out (n-1-c_a, r_a).
+            let (ra, ca) = (kb.col, n as i32 - 1 - kb.row);
+            if let Some(i) = ea
+                .keypoints
+                .iter()
+                .position(|k| (k.row - ra).abs() <= 1 && (k.col - ca).abs() <= 1)
+            {
+                dists.push(hamming(&da[i], &db[j]));
+            }
+        }
+        assert!(dists.len() >= 5, "only {} matched keypoints", dists.len());
+        let mean = dists.iter().sum::<u32>() as f32 / dists.len() as f32;
+        assert!(mean < 100.0, "steered hamming mean {mean} (random ≈ 128)");
+    }
+
+    #[test]
+    fn flat_image_yields_nothing() {
+        let g = GrayImage::from_fn(64, 64, |_, _| 0.6);
+        assert_eq!(extract(&g, (0, 64, 0, 64), 64).count, 0);
+    }
+}

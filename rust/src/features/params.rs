@@ -1,0 +1,64 @@
+//! Algorithm parameters — the single Rust-side copy of `model.PARAMS`.
+//!
+//! These constants MUST stay in lock-step with `python/compile/model.py`;
+//! `rust/tests/parity.rs` cross-checks them against the values recorded in
+//! `artifacts/manifest.json` whenever artifacts are present, so drift
+//! fails CI rather than silently skewing the baseline-vs-PJRT comparison.
+
+/// Harris response constant k.
+pub const HARRIS_K: f32 = 0.04;
+/// Gaussian window sigma for the structure tensor.
+pub const WINDOW_SIGMA: f32 = 1.5;
+/// Gaussian window radius (7 taps).
+pub const WINDOW_RADIUS: usize = 3;
+/// Structure-tensor stencil halo: Sobel (1) + window radius.
+pub const STRUCTURE_HALO: usize = WINDOW_RADIUS + 1;
+
+/// OpenCV-style relative thresholds: keep responses above
+/// `rel · max(response)`.
+pub const HARRIS_REL_THRESH: f32 = 0.02;
+pub const SHI_TOMASI_REL_THRESH: f32 = 0.01;
+
+/// FAST brightness delta on [0,1] grayscale.
+pub const FAST_T: f32 = 0.04;
+/// FAST-9 contiguous arc length.
+pub const FAST_ARC: usize = 9;
+
+/// SIFT |DoG| contrast threshold.
+pub const SIFT_CONTRAST: f32 = 0.012;
+/// SIFT edge-rejection principal-curvature ratio.
+pub const SIFT_EDGE_R: f32 = 10.0;
+/// SIFT base blur sigma and intervals per octave.
+pub const SIFT_BASE_SIGMA: f32 = 1.6;
+pub const SIFT_INTERVALS: usize = 2;
+
+/// SURF determinant-of-Hessian threshold (≈ OpenCV hessianThreshold 400
+/// rescaled to [0,1]^2 intensities).
+pub const SURF_THRESH: f32 = 6.2e-3;
+
+/// BRIEF sparse detector absolute min-eigenvalue threshold.
+pub const BRIEF_ABS_THRESH: f32 = 2.0e-2;
+
+/// Per-tile top-K caps (mirrors `model.TOPK`).
+pub fn topk(name: &str) -> usize {
+    match name {
+        "harris" => 2048,
+        "shi_tomasi" => 1024,
+        "fast" => 4096,
+        "sift" => 2048,
+        "surf" => 1024,
+        "brief" => 512,
+        "orb" => 1024,
+        _ => 1024,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn topk_known_algorithms() {
+        for (alg, want) in [("harris", 2048), ("fast", 4096), ("brief", 512)] {
+            assert_eq!(super::topk(alg), want);
+        }
+    }
+}

@@ -1,0 +1,273 @@
+//! SIFT: 2-octave DoG detector + upright 128-d descriptors (sequential
+//! twin of `model.build_sift`).
+
+use super::conv::{blur, radius_for_sigma};
+use super::gray::GrayImage;
+use super::params;
+use super::{Descriptors, Extraction, Keypoint};
+
+const PATCH: usize = 16;
+
+/// One octave: Gaussian stack + DoG planes.
+pub fn dog_pyramid(gray: &GrayImage) -> (Vec<GrayImage>, Vec<GrayImage>) {
+    let ks = 2f32.powf(1.0 / params::SIFT_INTERVALS as f32);
+    let sigmas: Vec<f32> = (0..params::SIFT_INTERVALS + 3)
+        .map(|i| params::SIFT_BASE_SIGMA * ks.powi(i as i32))
+        .collect();
+    let blurs: Vec<GrayImage> = sigmas
+        .iter()
+        .map(|&s| blur(gray, s, radius_for_sigma(s)))
+        .collect();
+    let dogs: Vec<GrayImage> = blurs
+        .windows(2)
+        .map(|w| {
+            let mut d = GrayImage::new(gray.width, gray.height);
+            for i in 0..d.data.len() {
+                d.data[i] = w[1].data[i] - w[0].data[i];
+            }
+            d
+        })
+        .collect();
+    (dogs, blurs)
+}
+
+/// Scale-space extrema of the interior DoG layers, with contrast + edge
+/// rejection.  Returns per-pixel (mask, |DoG| score) maps.
+pub fn dog_extrema(dogs: &[GrayImage]) -> (Vec<bool>, GrayImage) {
+    let (w, h) = (dogs[0].width, dogs[0].height);
+    let mut mask = vec![false; w * h];
+    let mut score = GrayImage::new(w, h);
+    let n = dogs.len();
+    for l in 1..n - 1 {
+        let d = &dogs[l];
+        for row in 0..h as i64 {
+            for col in 0..w as i64 {
+                let v = d.at(row as usize, col as usize);
+                if v.abs() <= params::SIFT_CONTRAST {
+                    continue;
+                }
+                let mut is_max = true;
+                let mut is_min = true;
+                'neigh: for dl in 0..3usize {
+                    let plane = &dogs[l + dl - 1];
+                    for dr in -1..=1i64 {
+                        for dc in -1..=1i64 {
+                            if dl == 1 && dr == 0 && dc == 0 {
+                                continue;
+                            }
+                            let nv = plane.at_clamped(row + dr, col + dc);
+                            if nv >= v {
+                                is_max = false;
+                            }
+                            if nv <= v {
+                                is_min = false;
+                            }
+                            if !is_max && !is_min {
+                                break 'neigh;
+                            }
+                        }
+                    }
+                }
+                if !(is_max || is_min) {
+                    continue;
+                }
+                // Edge rejection via the 2×2 spatial Hessian of this plane.
+                let p = |dr: i64, dc: i64| d.at_clamped(row + dr, col + dc);
+                let dxx = p(0, 1) - 2.0 * v + p(0, -1);
+                let dyy = p(1, 0) - 2.0 * v + p(-1, 0);
+                let dxy = 0.25 * (p(1, 1) - p(1, -1) - p(-1, 1) + p(-1, -1));
+                let tr = dxx + dyy;
+                let det = dxx * dyy - dxy * dxy;
+                let r = params::SIFT_EDGE_R;
+                if det <= 0.0 || tr * tr * r >= (r + 1.0) * (r + 1.0) * det {
+                    continue;
+                }
+                let i = row as usize * w + col as usize;
+                mask[i] = true;
+                score.data[i] = score.data[i].max(v.abs());
+            }
+        }
+    }
+    (mask, score)
+}
+
+/// Full SIFT pipeline over both octaves, with descriptors.
+pub fn extract(gray: &GrayImage, core: (usize, usize, usize, usize), cap: usize) -> Extraction {
+    let (dogs0, blurs0) = dog_pyramid(gray);
+    let (mask0, score0) = dog_extrema(&dogs0);
+
+    let g1 = blurs0[2].downsample2();
+    let (dogs1, _) = dog_pyramid(&g1);
+    let (mask1, score1) = dog_extrema(&dogs1);
+
+    // Exact census = octave censuses, each within the core at its scale.
+    let (r0, r1, c0, c1) = core;
+    let count0 = census(&mask0, gray.width, core);
+    let count1 = census(
+        &mask1,
+        g1.width,
+        (r0 / 2, r1.div_ceil(2), c0 / 2, c1.div_ceil(2)),
+    );
+
+    // Merge to tile-resolution keypoints (octave-1 upsampled NN).
+    let (w, h) = (gray.width, gray.height);
+    let mut merged_scores = score0;
+    let mut merged_mask = mask0;
+    for row in 0..h {
+        for col in 0..w {
+            let i1 = (row / 2).min(g1.height - 1) * g1.width + (col / 2).min(g1.width - 1);
+            if mask1[i1] {
+                let i = row * w + col;
+                merged_mask[i] = true;
+                merged_scores.data[i] = merged_scores.data[i].max(score1.data[i1]);
+            }
+        }
+    }
+    let (_, keypoints) = super::nms::select_topk(&merged_scores, &merged_mask, core, cap);
+
+    let desc = descriptors(&blurs0[1], &keypoints);
+    Extraction {
+        count: count0 + count1,
+        keypoints,
+        descriptors: desc,
+    }
+}
+
+fn census(mask: &[bool], width: usize, core: (usize, usize, usize, usize)) -> u64 {
+    let (r0, r1, c0, c1) = core;
+    let height = mask.len() / width;
+    let mut n = 0;
+    for row in r0..r1.min(height) {
+        for col in c0..c1.min(width) {
+            if mask[row * width + col] {
+                n += 1;
+            }
+        }
+    }
+    n
+}
+
+/// Upright 128-d descriptors (4×4 cells × 8 orientation bins, soft
+/// binned, Gaussian weighted, 0.2-clipped re-normalized — Lowe §6).
+pub fn descriptors(blurred: &GrayImage, kps: &[Keypoint]) -> Descriptors {
+    let mut data = Vec::with_capacity(kps.len() * 128);
+    let half = (PATCH / 2) as i64;
+    for kp in kps {
+        let mut desc = [0f32; 128];
+        for pr in 0..PATCH as i64 {
+            for pc in 0..PATCH as i64 {
+                let row = kp.row as i64 + pr - half + 1;
+                let col = kp.col as i64 + pc - half + 1;
+                let gy = 0.5 * (blurred.at_clamped(row + 1, col) - blurred.at_clamped(row - 1, col));
+                let gx = 0.5 * (blurred.at_clamped(row, col + 1) - blurred.at_clamped(row, col - 1));
+                let mag = (gx * gx + gy * gy).sqrt();
+                let ang = gy.atan2(gx); // [-pi, pi]
+
+                let idx_r = pr as f32 - (PATCH as f32 - 1.0) / 2.0;
+                let idx_c = pc as f32 - (PATCH as f32 - 1.0) / 2.0;
+                let wgt = (-(idx_r * idx_r) / (2.0 * (PATCH as f32 / 2.0).powi(2))).exp()
+                    * (-(idx_c * idx_c) / (2.0 * (PATCH as f32 / 2.0).powi(2))).exp();
+                let wmag = mag * wgt;
+
+                let binf = (ang + std::f32::consts::PI) * (8.0 / std::f32::consts::TAU);
+                let b0 = binf.floor();
+                let frac = binf - b0;
+                let b0 = (b0 as usize) % 8;
+                let b1 = (b0 + 1) % 8;
+                let cell = (pr as usize / 4) * 4 + (pc as usize / 4);
+                desc[cell * 8 + b0] += wmag * (1.0 - frac);
+                desc[cell * 8 + b1] += wmag * frac;
+            }
+        }
+        normalize_clip(&mut desc);
+        data.extend_from_slice(&desc);
+    }
+    Descriptors::F32 { dim: 128, data }
+}
+
+fn normalize_clip(desc: &mut [f32]) {
+    let norm = desc.iter().map(|v| v * v).sum::<f32>().sqrt() + 1e-7;
+    for v in desc.iter_mut() {
+        *v = (*v / norm).clamp(0.0, 0.2);
+    }
+    let norm = desc.iter().map(|v| v * v).sum::<f32>().sqrt() + 1e-7;
+    for v in desc.iter_mut() {
+        *v /= norm;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gaussian_spot(n: usize, cy: f32, cx: f32, s: f32) -> GrayImage {
+        GrayImage::from_fn(n, n, |r, c| {
+            let (dy, dx) = (r as f32 - cy, c as f32 - cx);
+            (-(dy * dy + dx * dx) / (2.0 * s * s)).exp()
+        })
+    }
+
+    #[test]
+    fn detects_an_isolated_blob() {
+        let g = gaussian_spot(128, 64.0, 64.0, 5.0);
+        let e = extract(&g, (0, 128, 0, 128), 64);
+        assert!(e.count >= 1, "no blob detected");
+        let d = e
+            .keypoints
+            .iter()
+            .map(|k| ((k.row - 64).pow(2) + (k.col - 64).pow(2)) as f32)
+            .fold(f32::MAX, f32::min)
+            .sqrt();
+        assert!(d < 6.0, "nearest keypoint {d} px from blob centre");
+    }
+
+    #[test]
+    fn flat_image_yields_nothing() {
+        let g = GrayImage::from_fn(96, 96, |_, _| 0.42);
+        assert_eq!(extract(&g, (0, 96, 0, 96), 10).count, 0);
+    }
+
+    #[test]
+    fn straight_edge_rejected() {
+        let g = GrayImage::from_fn(96, 96, |_, c| if c >= 48 { 1.0 } else { 0.0 });
+        let e = extract(&g, (8, 88, 8, 88), 4096);
+        // The edge-rejection filter kills responses along the line; the
+        // two points where the edge meets the core boundary may survive.
+        assert!(e.count < 32, "edge produced {} keypoints", e.count);
+    }
+
+    #[test]
+    fn descriptors_are_normalized_and_clipped() {
+        let g = gaussian_spot(64, 32.0, 30.0, 4.0);
+        let e = extract(&g, (0, 64, 0, 64), 8);
+        if let Descriptors::F32 { dim, data } = &e.descriptors {
+            assert_eq!(*dim, 128);
+            for d in data.chunks_exact(128) {
+                let norm = d.iter().map(|v| v * v).sum::<f32>().sqrt();
+                assert!((norm - 1.0).abs() < 1e-3, "norm {norm}");
+                // Clip happens *before* the final renormalization, so
+                // values may exceed 0.2 afterwards — but not by much.
+                assert!(d.iter().all(|&v| (0.0..=0.35).contains(&v)));
+            }
+        } else {
+            panic!("expected f32 descriptors");
+        }
+    }
+
+    #[test]
+    fn multi_scale_blobs_both_found() {
+        let mut g = gaussian_spot(192, 48.0, 48.0, 3.0);
+        let big = gaussian_spot(192, 144.0, 144.0, 6.5);
+        for i in 0..g.data.len() {
+            g.data[i] += big.data[i];
+        }
+        let e = extract(&g, (0, 192, 0, 192), 256);
+        let near = |cy: i32, cx: i32| {
+            e.keypoints
+                .iter()
+                .any(|k| (k.row - cy).abs() < 8 && (k.col - cx).abs() < 8)
+        };
+        assert!(near(48, 48), "small blob missed");
+        assert!(near(144, 144), "large blob missed (octave 2)");
+    }
+}

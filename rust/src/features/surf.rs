@@ -1,0 +1,162 @@
+//! SURF: determinant-of-Hessian blobs at two scales + upright 64-d
+//! descriptors (sequential twin of `model.build_surf`).
+
+use super::conv::{blur, radius_for_sigma};
+use super::gray::GrayImage;
+use super::nms::{absolute_threshold_mask, nms_inplace, select_topk};
+use super::params;
+use super::{Descriptors, Extraction, Keypoint};
+
+const PATCH: usize = 20;
+
+/// Scale-normalized det-of-Hessian response at scale `sigma`.
+///
+/// §Perf: row-buffered second differences (three padded row slices, unit
+/// stride) instead of a per-pixel clamped closure — same rewrite as
+/// `conv::sobel`, see EXPERIMENTS.md §Perf.
+pub fn hessian_det(gray: &GrayImage, sigma: f32) -> GrayImage {
+    let g = blur(gray, sigma, radius_for_sigma(sigma));
+    let (w, h) = (g.width, g.height);
+    let mut out = GrayImage::new(w, h);
+    let s4 = sigma.powi(4);
+
+    let mut above = vec![0.0f32; w + 2];
+    let mut mid = vec![0.0f32; w + 2];
+    let mut below = vec![0.0f32; w + 2];
+    let fill = |buf: &mut [f32], row: usize| {
+        let src = &g.data[row * w..(row + 1) * w];
+        buf[1..1 + w].copy_from_slice(src);
+        buf[0] = src[0];
+        buf[1 + w] = src[w - 1];
+    };
+
+    for row in 0..h {
+        fill(&mut above, row.saturating_sub(1));
+        fill(&mut mid, row);
+        fill(&mut below, (row + 1).min(h - 1));
+        let dst = &mut out.data[row * w..(row + 1) * w];
+        for c in 0..w {
+            let centre = mid[c + 1];
+            let lxx = mid[c + 2] - 2.0 * centre + mid[c];
+            let lyy = below[c + 1] - 2.0 * centre + above[c + 1];
+            let lxy = 0.25 * (below[c + 2] - below[c] - above[c + 2] + above[c]);
+            dst[c] = s4 * (lxx * lyy - (0.9 * lxy) * (0.9 * lxy));
+        }
+    }
+    out
+}
+
+/// Full SURF pipeline: two scales, NMS over the max response, descriptors.
+pub fn extract(gray: &GrayImage, core: (usize, usize, usize, usize), cap: usize) -> Extraction {
+    let d1 = hessian_det(gray, 1.2);
+    let d2 = hessian_det(gray, 2.4);
+    let mut resp = GrayImage::new(gray.width, gray.height);
+    for i in 0..resp.data.len() {
+        resp.data[i] = d1.data[i].max(d2.data[i]);
+    }
+    let mut mask = absolute_threshold_mask(&resp, params::SURF_THRESH);
+    nms_inplace(&resp, &mut mask, 1);
+    let (count, keypoints) = select_topk(&resp, &mask, core, cap);
+    let descriptors = descriptors(gray, &keypoints);
+    Extraction {
+        count,
+        keypoints,
+        descriptors,
+    }
+}
+
+/// Upright 64-d descriptors: 4×4 subregions × (Σdx, Σdy, Σ|dx|, Σ|dy|) of
+/// Haar-like responses on a σ=1 smoothed patch (U-SURF, Bay et al. §4.2).
+pub fn descriptors(gray: &GrayImage, kps: &[Keypoint]) -> Descriptors {
+    let smooth = blur(gray, 1.0, 3);
+    let half = (PATCH / 2) as i64;
+    let sub = PATCH / 4;
+    let mut data = Vec::with_capacity(kps.len() * 64);
+    for kp in kps {
+        let mut desc = [0f32; 64];
+        for pr in 0..PATCH as i64 {
+            for pc in 0..PATCH as i64 {
+                let row = kp.row as i64 + pr - half + 1;
+                let col = kp.col as i64 + pc - half + 1;
+                let dy = 0.5 * (smooth.at_clamped(row + 1, col) - smooth.at_clamped(row - 1, col));
+                let dx = 0.5 * (smooth.at_clamped(row, col + 1) - smooth.at_clamped(row, col - 1));
+                let region = (pr as usize / sub) * 4 + (pc as usize / sub);
+                desc[region * 4] += dx;
+                desc[region * 4 + 1] += dy;
+                desc[region * 4 + 2] += dx.abs();
+                desc[region * 4 + 3] += dy.abs();
+            }
+        }
+        let norm = desc.iter().map(|v| v * v).sum::<f32>().sqrt() + 1e-7;
+        data.extend(desc.iter().map(|v| v / norm));
+    }
+    Descriptors::F32 { dim: 64, data }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spot(n: usize, cy: f32, cx: f32, s: f32, amp: f32) -> GrayImage {
+        GrayImage::from_fn(n, n, |r, c| {
+            let (dy, dx) = (r as f32 - cy, c as f32 - cx);
+            amp * (-(dy * dy + dx * dx) / (2.0 * s * s)).exp()
+        })
+    }
+
+    #[test]
+    fn blob_detected_at_centre() {
+        let g = spot(96, 48.0, 48.0, 3.0, 1.0);
+        let e = extract(&g, (0, 96, 0, 96), 16);
+        assert!(e.count >= 1);
+        let k = &e.keypoints[0];
+        assert!((k.row - 48).abs() <= 2 && (k.col - 48).abs() <= 2);
+    }
+
+    #[test]
+    fn flat_and_gentle_gradient_rejected() {
+        let g = GrayImage::from_fn(64, 64, |_, c| 0.3 + 0.001 * c as f32);
+        assert_eq!(extract(&g, (0, 64, 0, 64), 16).count, 0);
+    }
+
+    #[test]
+    fn det_negative_on_saddle_like_edges() {
+        // Along a straight edge Lxx·Lyy ≈ 0 and Lxy ≈ 0 → det ≈ 0 (below
+        // threshold): edges must not fire the blob detector.
+        let g = GrayImage::from_fn(64, 64, |_, c| if c >= 32 { 1.0 } else { 0.0 });
+        let e = extract(&g, (4, 60, 4, 60), 128);
+        assert_eq!(e.count, 0, "edge fired SURF {} times", e.count);
+    }
+
+    #[test]
+    fn descriptors_normalized() {
+        let g = spot(64, 32.0, 32.0, 4.0, 1.0);
+        let e = extract(&g, (0, 64, 0, 64), 4);
+        if let Descriptors::F32 { dim, data } = &e.descriptors {
+            assert_eq!(*dim, 64);
+            for d in data.chunks_exact(64) {
+                let n = d.iter().map(|v| v * v).sum::<f32>().sqrt();
+                assert!((n - 1.0).abs() < 1e-3);
+            }
+        } else {
+            panic!("expected f32 descriptors")
+        }
+    }
+
+    #[test]
+    fn two_scales_cover_small_and_large_blobs() {
+        let mut g = spot(160, 40.0, 40.0, 2.0, 1.0);
+        let big = spot(160, 120.0, 120.0, 6.0, 1.0);
+        for i in 0..g.data.len() {
+            g.data[i] += big.data[i];
+        }
+        let e = extract(&g, (0, 160, 0, 160), 64);
+        let near = |cy: i32, cx: i32| {
+            e.keypoints
+                .iter()
+                .any(|k| (k.row - cy).abs() < 6 && (k.col - cx).abs() < 6)
+        };
+        assert!(near(40, 40), "σ=1.2 scale missed the small blob");
+        assert!(near(120, 120), "σ=2.4 scale missed the large blob");
+    }
+}

@@ -1,0 +1,448 @@
+//! Bundle writer/reader + record-aligned input splits.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! offset 0:  MAGIC ("DHIB1\n")
+//! records:   for each image:
+//!              u64 image_id, u32 width, u32 height, u8 codec,
+//!              u64 payload_len, u32 payload_crc32, payload bytes
+//! index:     u64 count, then per record:
+//!              u64 offset (of the record header), u64 image_id,
+//!              u32 width, u32 height
+//! footer:    u64 index_offset, u64 record_count, u32 index_crc32,
+//!            FOOTER_MAGIC ("DHIBF\n")
+//! ```
+
+use byteorder::{ByteOrder, LittleEndian as LE};
+
+use crate::imagery::Rgba8Image;
+use crate::util::{DifetError, Result};
+
+use super::codec::{self, Codec};
+use super::{FOOTER_MAGIC, MAGIC};
+
+/// Fixed sizes of the on-disk encodings.
+const REC_HEADER_LEN: usize = 8 + 4 + 4 + 1 + 8 + 4;
+const IDX_ENTRY_LEN: usize = 8 + 8 + 4 + 4;
+const FOOTER_LEN: usize = 8 + 8 + 4 + 6;
+
+/// Index entry describing one record (without its payload).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RecordMeta {
+    pub offset: u64,
+    pub image_id: u64,
+    pub width: u32,
+    pub height: u32,
+}
+
+/// Serializer: append images, then `finish()` to get the bundle bytes.
+pub struct BundleWriter {
+    buf: Vec<u8>,
+    index: Vec<RecordMeta>,
+    codec: Codec,
+    level: u32,
+}
+
+impl BundleWriter {
+    pub fn new(codec: Codec, level: u32) -> Self {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        BundleWriter {
+            buf,
+            index: Vec::new(),
+            codec,
+            level,
+        }
+    }
+
+    /// Append one image as a record.
+    pub fn add_image(&mut self, image_id: u64, img: &Rgba8Image) -> Result<()> {
+        let payload = codec::encode(self.codec, &img.data, self.level)?;
+        let crc = crc32fast::hash(&payload);
+        self.index.push(RecordMeta {
+            offset: self.buf.len() as u64,
+            image_id,
+            width: img.width as u32,
+            height: img.height as u32,
+        });
+
+        let mut hdr = [0u8; REC_HEADER_LEN];
+        LE::write_u64(&mut hdr[0..8], image_id);
+        LE::write_u32(&mut hdr[8..12], img.width as u32);
+        LE::write_u32(&mut hdr[12..16], img.height as u32);
+        hdr[16] = self.codec.to_byte();
+        LE::write_u64(&mut hdr[17..25], payload.len() as u64);
+        LE::write_u32(&mut hdr[25..29], crc);
+        self.buf.extend_from_slice(&hdr);
+        self.buf.extend_from_slice(&payload);
+        Ok(())
+    }
+
+    pub fn record_count(&self) -> usize {
+        self.index.len()
+    }
+
+    /// Write the index + footer and return the finished bundle.
+    pub fn finish(mut self) -> Vec<u8> {
+        let index_offset = self.buf.len() as u64;
+        let mut idx = Vec::with_capacity(8 + self.index.len() * IDX_ENTRY_LEN);
+        let mut n8 = [0u8; 8];
+        LE::write_u64(&mut n8, self.index.len() as u64);
+        idx.extend_from_slice(&n8);
+        for m in &self.index {
+            let mut e = [0u8; IDX_ENTRY_LEN];
+            LE::write_u64(&mut e[0..8], m.offset);
+            LE::write_u64(&mut e[8..16], m.image_id);
+            LE::write_u32(&mut e[16..20], m.width);
+            LE::write_u32(&mut e[20..24], m.height);
+            idx.extend_from_slice(&e);
+        }
+        let idx_crc = crc32fast::hash(&idx);
+        self.buf.extend_from_slice(&idx);
+
+        let mut footer = [0u8; FOOTER_LEN];
+        LE::write_u64(&mut footer[0..8], index_offset);
+        LE::write_u64(&mut footer[8..16], self.index.len() as u64);
+        LE::write_u32(&mut footer[16..20], idx_crc);
+        footer[20..26].copy_from_slice(FOOTER_MAGIC);
+        self.buf.extend_from_slice(&footer);
+        self.buf
+    }
+}
+
+/// Zero-copy reader over bundle bytes (typically a DFS file's content).
+pub struct BundleReader<'a> {
+    bytes: &'a [u8],
+    index: Vec<RecordMeta>,
+}
+
+impl<'a> BundleReader<'a> {
+    /// Parse and verify the container structure (not the payloads — those
+    /// are CRC-checked lazily per read, the way HDFS checksums blocks).
+    pub fn open(bytes: &'a [u8]) -> Result<BundleReader<'a>> {
+        let corrupt = |m: &str| DifetError::CorruptBundle(m.to_string());
+        if bytes.len() < MAGIC.len() + FOOTER_LEN || &bytes[..MAGIC.len()] != MAGIC {
+            return Err(corrupt("missing bundle magic"));
+        }
+        let footer = &bytes[bytes.len() - FOOTER_LEN..];
+        if &footer[20..26] != FOOTER_MAGIC {
+            return Err(corrupt("missing footer magic"));
+        }
+        let index_offset = LE::read_u64(&footer[0..8]) as usize;
+        let count = LE::read_u64(&footer[8..16]) as usize;
+        let idx_crc = LE::read_u32(&footer[16..20]);
+
+        let idx_end = bytes.len() - FOOTER_LEN;
+        if index_offset > idx_end {
+            return Err(corrupt("index offset out of range"));
+        }
+        let idx_bytes = &bytes[index_offset..idx_end];
+        if crc32fast::hash(idx_bytes) != idx_crc {
+            return Err(corrupt("index crc mismatch"));
+        }
+        if idx_bytes.len() != 8 + count * IDX_ENTRY_LEN
+            || LE::read_u64(&idx_bytes[0..8]) as usize != count
+        {
+            return Err(corrupt("index length mismatch"));
+        }
+        let mut index = Vec::with_capacity(count);
+        for i in 0..count {
+            let e = &idx_bytes[8 + i * IDX_ENTRY_LEN..8 + (i + 1) * IDX_ENTRY_LEN];
+            index.push(RecordMeta {
+                offset: LE::read_u64(&e[0..8]),
+                image_id: LE::read_u64(&e[8..16]),
+                width: LE::read_u32(&e[16..20]),
+                height: LE::read_u32(&e[20..24]),
+            });
+        }
+        Ok(BundleReader { bytes, index })
+    }
+
+    pub fn record_count(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn metas(&self) -> &[RecordMeta] {
+        &self.index
+    }
+
+    /// Decode record `i` into an image, verifying its CRC.
+    pub fn read_image(&self, i: usize) -> Result<(u64, Rgba8Image)> {
+        let corrupt = |m: String| DifetError::CorruptBundle(m);
+        let meta = *self
+            .index
+            .get(i)
+            .ok_or_else(|| corrupt(format!("record {i} out of range")))?;
+        let off = meta.offset as usize;
+        if off + REC_HEADER_LEN > self.bytes.len() {
+            return Err(corrupt(format!("record {i}: truncated header")));
+        }
+        let hdr = &self.bytes[off..off + REC_HEADER_LEN];
+        let image_id = LE::read_u64(&hdr[0..8]);
+        let width = LE::read_u32(&hdr[8..12]) as usize;
+        let height = LE::read_u32(&hdr[12..16]) as usize;
+        let codec = Codec::from_byte(hdr[16])?;
+        let payload_len = LE::read_u64(&hdr[17..25]) as usize;
+        let crc = LE::read_u32(&hdr[25..29]);
+        if image_id != meta.image_id || width != meta.width as usize || height != meta.height as usize
+        {
+            return Err(corrupt(format!("record {i}: header/index disagreement")));
+        }
+        let pstart = off + REC_HEADER_LEN;
+        if pstart + payload_len > self.bytes.len() {
+            return Err(corrupt(format!("record {i}: truncated payload")));
+        }
+        let payload = &self.bytes[pstart..pstart + payload_len];
+        if crc32fast::hash(payload) != crc {
+            return Err(corrupt(format!("record {i}: payload crc mismatch")));
+        }
+        let data = codec::decode(codec, payload, width * height * 4)?;
+        Ok((
+            image_id,
+            Rgba8Image {
+                width,
+                height,
+                data,
+            },
+        ))
+    }
+}
+
+/// Decode one record from a raw byte slice beginning at its header (the
+/// task-side path: a mapper reads only its split's byte range from DFS
+/// and decodes records in place).  Returns `(image_id, image, consumed)`.
+pub fn decode_record(bytes: &[u8]) -> Result<(u64, Rgba8Image, usize)> {
+    let corrupt = |m: &str| DifetError::CorruptBundle(m.to_string());
+    if bytes.len() < REC_HEADER_LEN {
+        return Err(corrupt("truncated record header"));
+    }
+    let image_id = LE::read_u64(&bytes[0..8]);
+    let width = LE::read_u32(&bytes[8..12]) as usize;
+    let height = LE::read_u32(&bytes[12..16]) as usize;
+    let codec = Codec::from_byte(bytes[16])?;
+    let payload_len = LE::read_u64(&bytes[17..25]) as usize;
+    let crc = LE::read_u32(&bytes[25..29]);
+    let end = REC_HEADER_LEN + payload_len;
+    if bytes.len() < end {
+        return Err(corrupt("truncated record payload"));
+    }
+    let payload = &bytes[REC_HEADER_LEN..end];
+    if crc32fast::hash(payload) != crc {
+        return Err(corrupt("record payload crc mismatch"));
+    }
+    let data = codec::decode(codec, payload, width * height * 4)?;
+    Ok((
+        image_id,
+        Rgba8Image {
+            width,
+            height,
+            data,
+        },
+        end,
+    ))
+}
+
+/// A record-aligned input split (mirrors Hadoop's `FileSplit` over HIB).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Split {
+    /// Record indices `[first, last)` in the bundle.
+    pub first_record: usize,
+    pub last_record: usize,
+    /// Byte range covered (for locality: which DFS blocks hold it).
+    pub byte_start: u64,
+    pub byte_end: u64,
+}
+
+impl Split {
+    pub fn record_count(&self) -> usize {
+        self.last_record - self.first_record
+    }
+}
+
+/// Compute record-aligned splits of at most `target_bytes` each: a record
+/// belongs to the split of the block containing its *first* byte, exactly
+/// like Hadoop's input-format contract, so no record straddles two tasks.
+pub fn splits(reader: &BundleReader<'_>, target_bytes: u64) -> Vec<Split> {
+    let metas = reader.metas();
+    if metas.is_empty() {
+        return Vec::new();
+    }
+    let end_of = |i: usize| -> u64 {
+        if i + 1 < metas.len() {
+            metas[i + 1].offset
+        } else {
+            // Last record runs to the index.
+            reader.bytes.len() as u64
+        }
+    };
+    let mut out = Vec::new();
+    let mut first = 0usize;
+    let mut split_start = metas[0].offset;
+    for i in 0..metas.len() {
+        let rec_end = end_of(i);
+        let boundary = (metas[i].offset / target_bytes.max(1)) != (split_start / target_bytes.max(1));
+        if i > first && boundary {
+            out.push(Split {
+                first_record: first,
+                last_record: i,
+                byte_start: metas[first].offset,
+                byte_end: metas[i].offset,
+            });
+            first = i;
+            split_start = metas[i].offset;
+        }
+        let _ = rec_end;
+    }
+    out.push(Split {
+        first_record: first,
+        last_record: metas.len(),
+        byte_start: metas[first].offset,
+        byte_end: end_of(metas.len() - 1),
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Pcg32;
+
+    fn test_image(seed: u64, w: usize, h: usize) -> Rgba8Image {
+        let mut rng = Pcg32::seeded(seed);
+        let mut img = Rgba8Image::new(w, h);
+        for v in img.data.iter_mut() {
+            *v = rng.next_u32() as u8;
+        }
+        img
+    }
+
+    fn build(codec: Codec, n: usize) -> (Vec<u8>, Vec<Rgba8Image>) {
+        let mut w = BundleWriter::new(codec, 1);
+        let imgs: Vec<Rgba8Image> = (0..n).map(|i| test_image(i as u64, 20 + i, 10 + i)).collect();
+        for (i, img) in imgs.iter().enumerate() {
+            w.add_image(1000 + i as u64, img).unwrap();
+        }
+        (w.finish(), imgs)
+    }
+
+    #[test]
+    fn roundtrip_raw_and_deflate() {
+        for codec in [Codec::Raw, Codec::Deflate] {
+            let (bytes, imgs) = build(codec, 5);
+            let r = BundleReader::open(&bytes).unwrap();
+            assert_eq!(r.record_count(), 5);
+            for (i, want) in imgs.iter().enumerate() {
+                let (id, got) = r.read_image(i).unwrap();
+                assert_eq!(id, 1000 + i as u64);
+                assert_eq!(&got, want, "codec {codec:?} record {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_bundle_roundtrips() {
+        let bytes = BundleWriter::new(Codec::Raw, 1).finish();
+        let r = BundleReader::open(&bytes).unwrap();
+        assert_eq!(r.record_count(), 0);
+        assert!(splits(&r, 1024).is_empty());
+        assert!(r.read_image(0).is_err());
+    }
+
+    #[test]
+    fn detects_payload_corruption() {
+        let (mut bytes, _) = build(Codec::Raw, 3);
+        // Flip a byte in the middle of record 1's payload.
+        let r = BundleReader::open(&bytes).unwrap();
+        let off = r.metas()[1].offset as usize + REC_HEADER_LEN + 10;
+        drop(r);
+        bytes[off] ^= 0xFF;
+        let r = BundleReader::open(&bytes).unwrap(); // container still fine
+        assert!(r.read_image(0).is_ok());
+        let err = r.read_image(1).unwrap_err();
+        assert!(err.to_string().contains("crc"), "{err}");
+    }
+
+    #[test]
+    fn detects_container_corruption() {
+        let (bytes, _) = build(Codec::Raw, 2);
+        // Truncated: footer gone.
+        assert!(BundleReader::open(&bytes[..bytes.len() - 10]).is_err());
+        // Bad magic.
+        let mut b2 = bytes.clone();
+        b2[0] = b'X';
+        assert!(BundleReader::open(&b2).is_err());
+        // Index crc flip.
+        let mut b3 = bytes.clone();
+        let n = b3.len();
+        b3[n - FOOTER_LEN + 16] ^= 1;
+        assert!(BundleReader::open(&b3).is_err());
+    }
+
+    #[test]
+    fn prop_splits_cover_all_records_exactly_once() {
+        check("hib_splits", 50, |g| {
+            let n = g.usize_in(1, 40);
+            let mut w = BundleWriter::new(Codec::Raw, 1);
+            for i in 0..n {
+                let iw = g.usize_in(1, 30);
+                let ih = g.usize_in(1, 30);
+                w.add_image(i as u64, &test_image(i as u64, iw, ih)).unwrap();
+            }
+            let bytes = w.finish();
+            let r = BundleReader::open(&bytes).map_err(|e| e.to_string())?;
+            let target = g.usize_in(64, 8192) as u64;
+            let ss = splits(&r, target);
+            let mut covered = vec![false; n];
+            let mut prev_end = 0usize;
+            for s in &ss {
+                crate::prop_assert!(
+                    s.first_record == prev_end,
+                    "split gap: {} != {}",
+                    s.first_record,
+                    prev_end
+                );
+                crate::prop_assert!(s.record_count() > 0, "empty split");
+                for rec in s.first_record..s.last_record {
+                    crate::prop_assert!(!covered[rec], "record {rec} in two splits");
+                    covered[rec] = true;
+                }
+                prev_end = s.last_record;
+            }
+            crate::prop_assert!(
+                covered.iter().all(|&c| c),
+                "{} records uncovered",
+                covered.iter().filter(|&&c| !c).count()
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn decode_record_from_raw_range() {
+        let (bytes, imgs) = build(Codec::Deflate, 4);
+        let r = BundleReader::open(&bytes).unwrap();
+        for (i, want) in imgs.iter().enumerate() {
+            let off = r.metas()[i].offset as usize;
+            let (id, got, consumed) = decode_record(&bytes[off..]).unwrap();
+            assert_eq!(id, 1000 + i as u64);
+            assert_eq!(&got, want);
+            assert!(consumed > REC_HEADER_LEN);
+        }
+        assert!(decode_record(&bytes[3..10]).is_err());
+    }
+
+    #[test]
+    fn splits_respect_target_size_roughly() {
+        let (bytes, _) = build(Codec::Raw, 20);
+        let r = BundleReader::open(&bytes).unwrap();
+        let target = 4096u64;
+        let ss = splits(&r, target);
+        assert!(ss.len() > 1, "expected multiple splits");
+        for s in &ss[..ss.len() - 1] {
+            // A split never *starts* a record beyond its block boundary.
+            assert!(s.byte_end - s.byte_start >= 1);
+        }
+    }
+}

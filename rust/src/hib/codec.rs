@@ -1,0 +1,128 @@
+//! Record payload codecs: raw RGBA8 or deflate.
+//!
+//! The paper's mappers decode JPEGs via HIPI's `ImageCodec`; our bundles
+//! store lossless RGBA (feature counts must be bit-reproducible, and JPEG
+//! artifacts would perturb detector thresholds), optionally
+//! deflate-compressed.  `cargo bench --bench ablations` measures the
+//! decode-bandwidth / bundle-size trade-off between the two, which is the
+//! knob `StorageConfig.compress` exposes.
+
+use std::io::{Read, Write};
+
+use crate::util::{DifetError, Result};
+
+/// Payload encoding of one bundle record.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Codec {
+    /// Raw RGBA8 bytes.
+    Raw = 0,
+    /// RFC 1951 deflate (flate2).
+    Deflate = 1,
+}
+
+impl Codec {
+    pub fn from_byte(b: u8) -> Result<Codec> {
+        match b {
+            0 => Ok(Codec::Raw),
+            1 => Ok(Codec::Deflate),
+            other => Err(DifetError::CorruptBundle(format!(
+                "unknown codec byte {other}"
+            ))),
+        }
+    }
+
+    pub fn to_byte(self) -> u8 {
+        self as u8
+    }
+}
+
+/// Encode an RGBA payload.
+pub fn encode(codec: Codec, rgba: &[u8], level: u32) -> Result<Vec<u8>> {
+    match codec {
+        Codec::Raw => Ok(rgba.to_vec()),
+        Codec::Deflate => {
+            let mut enc = flate2::write::DeflateEncoder::new(
+                Vec::with_capacity(rgba.len() / 2),
+                flate2::Compression::new(level),
+            );
+            enc.write_all(rgba)?;
+            Ok(enc.finish()?)
+        }
+    }
+}
+
+/// Decode a payload back to RGBA bytes; `expected_len` guards against
+/// truncated or padded streams.
+pub fn decode(codec: Codec, payload: &[u8], expected_len: usize) -> Result<Vec<u8>> {
+    let out = match codec {
+        Codec::Raw => payload.to_vec(),
+        Codec::Deflate => {
+            let mut dec = flate2::read::DeflateDecoder::new(payload);
+            let mut out = Vec::with_capacity(expected_len);
+            dec.read_to_end(&mut out)?;
+            out
+        }
+    };
+    if out.len() != expected_len {
+        return Err(DifetError::CorruptBundle(format!(
+            "decoded {} bytes, expected {expected_len}",
+            out.len()
+        )));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn raw_roundtrip() {
+        let data = vec![1u8, 2, 3, 4, 255, 0, 128, 7];
+        let enc = encode(Codec::Raw, &data, 1).unwrap();
+        assert_eq!(decode(Codec::Raw, &enc, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn deflate_roundtrip_and_compresses_structure() {
+        // Synthetic scenes are full of flat runs; deflate must win big.
+        let data: Vec<u8> = (0..64 * 1024).map(|i| ((i / 971) % 7) as u8).collect();
+        let enc = encode(Codec::Deflate, &data, 1).unwrap();
+        assert!(enc.len() * 4 < data.len(), "deflate only got {} bytes", enc.len());
+        assert_eq!(decode(Codec::Deflate, &enc, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn decode_length_mismatch_is_corrupt() {
+        let enc = encode(Codec::Deflate, &[9u8; 100], 1).unwrap();
+        assert!(decode(Codec::Deflate, &enc, 99).is_err());
+        assert!(decode(Codec::Raw, &[0u8; 10], 11).is_err());
+    }
+
+    #[test]
+    fn decode_garbage_is_error() {
+        assert!(decode(Codec::Deflate, &[0xde, 0xad, 0xbe, 0xef], 16).is_err());
+    }
+
+    #[test]
+    fn codec_byte_roundtrip() {
+        for c in [Codec::Raw, Codec::Deflate] {
+            assert_eq!(Codec::from_byte(c.to_byte()).unwrap(), c);
+        }
+        assert!(Codec::from_byte(9).is_err());
+    }
+
+    #[test]
+    fn prop_deflate_roundtrips_random_payloads() {
+        check("deflate_roundtrip", 60, |g| {
+            let len = g.usize_in(0, 4096);
+            let data = g.bytes(len);
+            let level = 1 + g.u32(9).min(8);
+            let enc = encode(Codec::Deflate, &data, level).map_err(|e| e.to_string())?;
+            let dec = decode(Codec::Deflate, &enc, data.len()).map_err(|e| e.to_string())?;
+            crate::prop_assert!(dec == data, "roundtrip mismatch at len {len}");
+            Ok(())
+        });
+    }
+}

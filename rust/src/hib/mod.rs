@@ -1,0 +1,30 @@
+//! HIB — the HIPI-style image bundle format.
+//!
+//! HIPI's `HipiImageBundle` packs a collection of images into one large
+//! HDFS file so MapReduce splits stay record-aligned and each mapper
+//! receives whole images ("HIB bundle is the primary input of an HIPI
+//! program", paper §3).  This module is DIFET's equivalent:
+//!
+//! ```text
+//! [ magic "DHIB1\n" ][ record 0 ][ record 1 ] … [ index ][ footer ]
+//! record  = header (id, w, h, codec, payload_len, crc32) + payload
+//! index   = per-record byte offsets (+ ids, dims) for random access
+//! footer  = index offset + record count + index crc + magic
+//! ```
+//!
+//! Payloads are RGBA8 pixels, either raw or deflate-compressed
+//! ([`codec`]).  Every payload carries a CRC32 checked on read — corrupt
+//! records surface as `DifetError::CorruptBundle`, which the coordinator
+//! turns into task retries against another DFS replica (the Hadoop
+//! behaviour).  [`bundle::splits`] computes record-aligned input splits
+//! for the job planner, mirroring `HibInputFormat`.
+
+pub mod bundle;
+pub mod codec;
+
+pub use bundle::{decode_record, splits, BundleReader, BundleWriter, RecordMeta, Split};
+pub use codec::Codec;
+
+/// Bundle magic (start) and footer magic (end).
+pub const MAGIC: &[u8; 6] = b"DHIB1\n";
+pub const FOOTER_MAGIC: &[u8; 6] = b"DHIBF\n";

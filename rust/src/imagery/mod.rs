@@ -1,0 +1,67 @@
+//! Synthetic LandSat-8 imagery + scene tiling.
+//!
+//! The paper evaluates on ~7000×7000 RGBA LandSat-8 scenes we cannot
+//! redistribute (and this environment has no network); [`scene`] generates
+//! deterministic synthetic scenes with the *structural statistics* the
+//! seven extractors care about — piecewise-smooth fields, linear roads,
+//! corner-rich settlements, flat water — per DESIGN.md §3 substitution 1.
+//!
+//! [`tiler`] cuts scenes into the fixed 512×512 tiles the AOT artifacts
+//! expect, with overlap + exclusive core ownership so per-scene feature
+//! censuses are exact (no double counting across tile seams).
+
+pub mod scene;
+pub mod tiler;
+
+pub use scene::{Scene, SceneGenerator};
+pub use tiler::{TileIter, TileRef, OVERLAP};
+
+/// RGBA8 image buffer (row-major, 4 bytes/pixel) — the paper's "RBGA
+/// color, … 32-bit" pixel layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Rgba8Image {
+    pub width: usize,
+    pub height: usize,
+    pub data: Vec<u8>,
+}
+
+impl Rgba8Image {
+    pub fn new(width: usize, height: usize) -> Self {
+        Rgba8Image {
+            width,
+            height,
+            data: vec![0; width * height * 4],
+        }
+    }
+
+    #[inline]
+    pub fn idx(&self, row: usize, col: usize) -> usize {
+        4 * (row * self.width + col)
+    }
+
+    #[inline]
+    pub fn put(&mut self, row: usize, col: usize, rgba: [u8; 4]) {
+        let i = self.idx(row, col);
+        self.data[i..i + 4].copy_from_slice(&rgba);
+    }
+
+    #[inline]
+    pub fn get(&self, row: usize, col: usize) -> [u8; 4] {
+        let i = self.idx(row, col);
+        [self.data[i], self.data[i + 1], self.data[i + 2], self.data[i + 3]]
+    }
+
+    /// Size in bytes (the paper quotes 230 MB for a 7681×7831 scene).
+    pub fn byte_len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// BT.601 luma of one pixel, normalized to [0, 1] — must match
+    /// `python/compile/ops.grayscale` exactly (bit-for-bit parity is
+    /// asserted by `rust/tests/parity.rs`).
+    #[inline]
+    pub fn luma01(&self, row: usize, col: usize) -> f32 {
+        let [r, g, b, _] = self.get(row, col);
+        (0.299 * r as f32 + 0.587 * g as f32 + 0.114 * b as f32) / 255.0
+    }
+}

@@ -1,0 +1,242 @@
+//! Scene → fixed-shape tile decomposition with exclusive core ownership.
+//!
+//! The AOT artifacts are compiled for one static shape (`TILE`×`TILE`
+//! RGBA f32).  Scenes are larger and arbitrary-sized, so the pipeline cuts
+//! them into overlapping tiles:
+//!
+//! * tiles are placed on a stride of `TILE - 2·OVERLAP`;
+//! * each tile *owns* an exclusive core rectangle (`OVERLAP` in from its
+//!   edges, clamped outward at scene borders), and the cores partition the
+//!   scene exactly — a detection is attributed to precisely one tile, so
+//!   per-scene censuses (Table 2) have no seam double-counting;
+//! * the `OVERLAP` margin gives every in-core pixel its full stencil
+//!   context (structure window 4 px, FAST ring 3 px, SIFT octave-2
+//!   context ≲ 12 px — 16 px covers all detectors);
+//! * reads past the scene edge replicate border pixels, matching the
+//!   `mode="edge"` padding the L2 reference semantics use.
+
+use super::Rgba8Image;
+use crate::TILE;
+
+/// Tile overlap margin (pixels on each side).
+pub const OVERLAP: usize = 16;
+
+/// One tile job: where the tile sits and which rectangle it owns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileRef {
+    /// Scene-coordinates of the tile's top-left corner (may be negative —
+    /// border tiles hang off the scene edge and read replicated pixels).
+    pub origin_row: i64,
+    pub origin_col: i64,
+    /// Owned core rectangle in scene coordinates: `[row0, row1) × [col0, col1)`.
+    pub core_row0: usize,
+    pub core_row1: usize,
+    pub core_col0: usize,
+    pub core_col1: usize,
+    /// Grid position (for locality bookkeeping / debugging).
+    pub grid_row: usize,
+    pub grid_col: usize,
+}
+
+impl TileRef {
+    /// Owned-core bounds in *tile-local* coordinates, as the `[r0, r1, c0,
+    /// c1]` vector the HLO executables take as their second operand.
+    pub fn core_local(&self) -> [i32; 4] {
+        [
+            (self.core_row0 as i64 - self.origin_row) as i32,
+            (self.core_row1 as i64 - self.origin_row) as i32,
+            (self.core_col0 as i64 - self.origin_col) as i32,
+            (self.core_col1 as i64 - self.origin_col) as i32,
+        ]
+    }
+
+    /// Core area in pixels.
+    pub fn core_area(&self) -> usize {
+        (self.core_row1 - self.core_row0) * (self.core_col1 - self.core_col0)
+    }
+
+    /// Convert a tile-local detection to scene coordinates.
+    pub fn to_scene(&self, local_row: i32, local_col: i32) -> (i64, i64) {
+        (
+            self.origin_row + local_row as i64,
+            self.origin_col + local_col as i64,
+        )
+    }
+}
+
+/// Iterator over the tile grid of a `height`×`width` scene.
+#[derive(Debug, Clone)]
+pub struct TileIter {
+    width: usize,
+    height: usize,
+    grid_rows: usize,
+    grid_cols: usize,
+    next: usize,
+}
+
+/// Core stride between tiles.
+pub const fn stride() -> usize {
+    TILE - 2 * OVERLAP
+}
+
+impl TileIter {
+    pub fn new(width: usize, height: usize) -> Self {
+        let s = stride();
+        TileIter {
+            width,
+            height,
+            grid_rows: height.div_ceil(s),
+            grid_cols: width.div_ceil(s),
+            next: 0,
+        }
+    }
+
+    pub fn tile_count(&self) -> usize {
+        self.grid_rows * self.grid_cols
+    }
+
+    fn make(&self, grid_row: usize, grid_col: usize) -> TileRef {
+        let s = stride();
+        let core_row0 = grid_row * s;
+        let core_col0 = grid_col * s;
+        // Interior cores are `stride` long; the last row/col of tiles owns
+        // the remainder up to the scene edge.  Border tiles also own their
+        // overlap margin (there is no neighbour to own it).
+        let core_row1 = (core_row0 + s).min(self.height);
+        let core_col1 = (core_col0 + s).min(self.width);
+        TileRef {
+            origin_row: core_row0 as i64 - OVERLAP as i64,
+            origin_col: core_col0 as i64 - OVERLAP as i64,
+            core_row0,
+            core_row1,
+            core_col0,
+            core_col1,
+            grid_row,
+            grid_col,
+        }
+    }
+}
+
+impl Iterator for TileIter {
+    type Item = TileRef;
+
+    fn next(&mut self) -> Option<TileRef> {
+        if self.next >= self.tile_count() {
+            return None;
+        }
+        let gr = self.next / self.grid_cols;
+        let gc = self.next % self.grid_cols;
+        self.next += 1;
+        Some(self.make(gr, gc))
+    }
+}
+
+/// Extract a tile as the `f32` RGBA buffer (`TILE·TILE·4` values, HWC) the
+/// PJRT executables take, replicating edge pixels outside the scene.
+pub fn extract_tile_f32(img: &Rgba8Image, tile: &TileRef) -> Vec<f32> {
+    let mut out = Vec::with_capacity(TILE * TILE * 4);
+    for r in 0..TILE as i64 {
+        let sr = (tile.origin_row + r).clamp(0, img.height as i64 - 1) as usize;
+        for c in 0..TILE as i64 {
+            let sc = (tile.origin_col + c).clamp(0, img.width as i64 - 1) as usize;
+            let i = img.idx(sr, sc);
+            out.extend_from_slice(&[
+                img.data[i] as f32,
+                img.data[i + 1] as f32,
+                img.data[i + 2] as f32,
+                img.data[i + 3] as f32,
+            ]);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn cores_partition_the_scene_exactly() {
+        check("tiler_partition", 40, |g| {
+            let w = g.usize_in(1, 1400);
+            let h = g.usize_in(1, 1400);
+            let mut owned = vec![0u8; w * h];
+            for t in TileIter::new(w, h) {
+                for r in t.core_row0..t.core_row1 {
+                    for c in t.core_col0..t.core_col1 {
+                        owned[r * w + c] += 1;
+                    }
+                }
+            }
+            crate::prop_assert!(
+                owned.iter().all(|&n| n == 1),
+                "scene {w}x{h}: some pixel owned {} times",
+                owned.iter().copied().max().unwrap_or(0)
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn interior_cores_have_full_context() {
+        // Every owned pixel of an interior tile is ≥ OVERLAP away from the
+        // tile boundary, so its stencil neighbourhood is genuine scene data.
+        let tiles: Vec<TileRef> = TileIter::new(2000, 2000).collect();
+        for t in &tiles {
+            let [r0, r1, c0, c1] = t.core_local();
+            assert!(r0 >= OVERLAP as i32 && c0 >= OVERLAP as i32);
+            assert!(r1 <= (TILE - 0) as i32 && c1 <= (TILE - 0) as i32);
+            assert!((r1 - r0) as usize <= stride() + OVERLAP);
+            assert!((c1 - c0) as usize <= stride() + OVERLAP);
+        }
+    }
+
+    #[test]
+    fn paper_scene_tile_count() {
+        // 7681×7831 at stride 480 → 17×17 = 289 tiles.
+        let it = TileIter::new(7681, 7831);
+        assert_eq!(it.tile_count(), 17 * 17);
+    }
+
+    #[test]
+    fn to_scene_roundtrip() {
+        let t = TileIter::new(1000, 1000).nth(5).unwrap();
+        let (sr, sc) = t.to_scene(100, 200);
+        assert_eq!(sr, t.origin_row + 100);
+        assert_eq!(sc, t.origin_col + 200);
+    }
+
+    #[test]
+    fn extract_replicates_borders() {
+        let mut img = Rgba8Image::new(600, 600);
+        for r in 0..600 {
+            for c in 0..600 {
+                img.put(r, c, [(r % 256) as u8, (c % 256) as u8, 7, 255]);
+            }
+        }
+        let t = TileIter::new(600, 600).next().unwrap(); // origin (-16, -16)
+        let buf = extract_tile_f32(&img, &t);
+        assert_eq!(buf.len(), TILE * TILE * 4);
+        // Pixel (0,0) of the tile is scene (-16,-16) → replicated (0,0).
+        assert_eq!(buf[0], 0.0);
+        assert_eq!(buf[1], 0.0);
+        // Pixel (OVERLAP, OVERLAP) is scene (0, 0) too.
+        let i = 4 * (OVERLAP * TILE + OVERLAP);
+        assert_eq!(buf[i], 0.0);
+        // Pixel (OVERLAP+10, OVERLAP+20) is scene (10, 20).
+        let j = 4 * ((OVERLAP + 10) * TILE + OVERLAP + 20);
+        assert_eq!(buf[j], 10.0);
+        assert_eq!(buf[j + 1], 20.0);
+        assert_eq!(buf[j + 3], 255.0);
+    }
+
+    #[test]
+    fn small_scene_single_tile_owns_everything() {
+        let tiles: Vec<TileRef> = TileIter::new(100, 80).collect();
+        assert_eq!(tiles.len(), 1);
+        let t = tiles[0];
+        assert_eq!((t.core_row0, t.core_row1), (0, 80));
+        assert_eq!((t.core_col0, t.core_col1), (0, 100));
+    }
+}

@@ -1,0 +1,63 @@
+//! # DIFET — Distributed Feature Extraction Tool
+//!
+//! A Rust + JAX + Pallas reproduction of *"DIFET: Distributed Feature
+//! Extraction Tool For High Spatial Resolution Remote Sensing Images"*
+//! (Eken, Aydın, Sayar — ISPRS Annals IV-4/W4, 2017).
+//!
+//! The paper's Hadoop + HIPI stack is rebuilt as a three-layer system:
+//!
+//! * **L3 (this crate)** — the distributed data-pipeline coordinator:
+//!   an HDFS-like replicated block store ([`dfs`]), HIPI-style image
+//!   bundles ([`hib`]), a MapReduce-style job engine with locality-aware
+//!   scheduling, retries, speculation and backpressure ([`coordinator`]),
+//!   and a simulated 1/2/4-node commodity cluster ([`cluster`]).
+//! * **L2** — per-algorithm JAX graphs AOT-lowered to HLO at build time
+//!   (`python/compile/model.py`), executed here through PJRT ([`runtime`]).
+//! * **L1** — Pallas kernels for the stencil hot spots (separable Gaussian
+//!   and the fused structure-tensor response), embedded in the L2 modules.
+//!
+//! Python never runs on the extraction path: after `make artifacts` the
+//! `difet` binary is self-contained.
+//!
+//! See `examples/` for the Table 1 / Table 2 regenerators and the
+//! end-to-end driver, and DESIGN.md for the paper-to-module map.
+
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod dfs;
+pub mod features;
+pub mod hib;
+pub mod imagery;
+pub mod metrics;
+pub mod pipeline;
+pub mod runtime;
+pub mod util;
+
+pub use config::Config;
+pub use util::{DifetError, Result};
+
+/// The seven algorithms of the paper's Tables 1–2, in row order.
+pub const ALGORITHMS: [&str; 7] = [
+    "harris",
+    "shi_tomasi",
+    "sift",
+    "surf",
+    "fast",
+    "brief",
+    "orb",
+];
+
+/// Tile edge used by every AOT artifact (must match `model.TILE`).
+pub const TILE: usize = 512;
+
+/// Per-image keypoint caps the paper inherits from OpenCV defaults:
+/// `goodFeaturesToTrack(maxCorners=400)` and `ORB(nfeatures=500)` —
+/// visible in Table 2 as counts of exactly 400·N and 500·N.
+pub fn per_image_cap(algorithm: &str) -> Option<usize> {
+    match algorithm {
+        "shi_tomasi" => Some(400),
+        "orb" => Some(500),
+        _ => None,
+    }
+}

@@ -1,0 +1,172 @@
+//! `difet` — the DIFET command-line launcher.
+//!
+//! Subcommands (all driven by the same [`difet::Config`] the examples and
+//! benches use):
+//!
+//! ```text
+//! difet extract     run extraction jobs on the simulated cluster
+//! difet sequential  run the one-node sequential baseline
+//! difet census      Table-2-style feature counts for a corpus
+//! difet scalability sweep node counts (Table 1 shape) in one command
+//! difet inspect     show artifact manifest + cluster configuration
+//! ```
+//!
+//! Try `difet extract --nodes 4 --scenes 3 --algorithms harris,orb`.
+
+use difet::config::Config;
+use difet::pipeline::{self, report::ColumnKey, report::TableBuilder, ExtractRequest};
+use difet::util::args::{help_text, FlagSpec, ParsedArgs};
+
+const USAGE: &str = "difet <extract|sequential|census|scalability|inspect> [options]";
+
+fn flag_specs() -> Vec<FlagSpec> {
+    vec![
+        FlagSpec { name: "config", takes_value: true, help: "config file (TOML subset)" },
+        FlagSpec { name: "set", takes_value: true, help: "override, e.g. --set cluster.nodes=2 (repeatable via commas)" },
+        FlagSpec { name: "nodes", takes_value: true, help: "cluster nodes (default 4)" },
+        FlagSpec { name: "scenes", takes_value: true, help: "corpus size N (default 3)" },
+        FlagSpec { name: "algorithms", takes_value: true, help: "comma list (default: all seven)" },
+        FlagSpec { name: "scene-size", takes_value: true, help: "scene edge px (default 1792; paper 7681)" },
+        FlagSpec { name: "artifacts", takes_value: true, help: "artifacts dir (default artifacts)" },
+        FlagSpec { name: "native", takes_value: false, help: "force the pure-Rust executor" },
+        FlagSpec { name: "no-write", takes_value: false, help: "skip mapper output writes" },
+        FlagSpec { name: "bare", takes_value: false, help: "disable the I/O cost model" },
+        FlagSpec { name: "verbose", takes_value: false, help: "print counters/metrics" },
+        FlagSpec { name: "help", takes_value: false, help: "show this help" },
+    ]
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let specs = flag_specs();
+    let parsed = match ParsedArgs::parse(&argv, &specs, true) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", help_text(USAGE, &specs));
+            std::process::exit(2);
+        }
+    };
+    if parsed.has("help") || parsed.subcommand.is_none() {
+        print!("{}", help_text(USAGE, &specs));
+        std::process::exit(if parsed.has("help") { 0 } else { 2 });
+    }
+    if let Err(e) = run(&parsed) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn build_config(p: &ParsedArgs) -> Result<Config, String> {
+    let mut cfg = Config::new();
+    if let Some(path) = p.get("config") {
+        cfg.load_file(std::path::Path::new(path)).map_err(|e| e.to_string())?;
+    }
+    if let Some(sets) = p.get_list("set") {
+        for kv in sets {
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| format!("--set expects key=value, got {kv:?}"))?;
+            cfg.apply_one(k.trim(), v.trim()).map_err(|e| e.to_string())?;
+        }
+    }
+    cfg.cluster.nodes = p.get_parse("nodes", cfg.cluster.nodes)?;
+    if let Some(size) = p.get("scene-size") {
+        let px: usize = size.parse().map_err(|_| format!("bad --scene-size {size:?}"))?;
+        cfg.scene.width = px;
+        cfg.scene.height = px;
+    }
+    if let Some(dir) = p.get("artifacts") {
+        cfg.artifacts_dir = dir.to_string();
+    }
+    if p.has("bare") {
+        cfg.cluster.cost_model = false;
+    }
+    cfg.validate().map_err(|e| e.to_string())?;
+    Ok(cfg)
+}
+
+fn build_request(p: &ParsedArgs) -> Result<ExtractRequest, String> {
+    let mut req = ExtractRequest::default();
+    req.num_scenes = p.get_parse("scenes", req.num_scenes)?;
+    if let Some(algs) = p.get_list("algorithms") {
+        req.algorithms = algs;
+    }
+    req.write_output = !p.has("no-write");
+    req.force_native = p.has("native");
+    Ok(req)
+}
+
+fn run(p: &ParsedArgs) -> Result<(), String> {
+    let cfg = build_config(p)?;
+    let req = build_request(p)?;
+    let verbose = p.has("verbose");
+
+    match p.subcommand.as_deref().unwrap() {
+        "extract" => {
+            let rep = pipeline::run_extraction(&cfg, &req).map_err(|e| e.to_string())?;
+            println!(
+                "corpus: {} scenes, {} raw, {} bundled ({:.1}s ingest)\n",
+                rep.corpus.scene_count,
+                difet::util::fmt::bytes(rep.corpus.raw_bytes),
+                difet::util::fmt::bytes(rep.corpus.bundle_bytes),
+                rep.corpus.ingest_seconds
+            );
+            print!("{}", rep.render_table());
+            if verbose {
+                print!("\n{}", rep.render_census());
+            }
+        }
+        "sequential" => {
+            let rep = pipeline::run_sequential(&cfg, &req).map_err(|e| e.to_string())?;
+            print!("{}", rep.render_table());
+            if verbose {
+                print!("\n{}", rep.render_census());
+            }
+        }
+        "census" => {
+            let rep = pipeline::run_sequential(&cfg, &req).map_err(|e| e.to_string())?;
+            print!("{}", rep.render_census());
+        }
+        "scalability" => {
+            // The Table 1 sweep: sequential, then 2 and 4 node MapReduce.
+            let mut tb = TableBuilder::new();
+            let seq = pipeline::run_sequential(&cfg, &req).map_err(|e| e.to_string())?;
+            for j in &seq.jobs {
+                tb.add(ColumnKey { nodes: 0, scenes: req.num_scenes }, j);
+            }
+            for nodes in [2usize, 4] {
+                let mut c = cfg.clone();
+                c.cluster.nodes = nodes;
+                let rep = pipeline::run_extraction(&c, &req).map_err(|e| e.to_string())?;
+                for j in &rep.jobs {
+                    tb.add(ColumnKey { nodes, scenes: req.num_scenes }, j);
+                }
+            }
+            print!("{}", tb.render_table1());
+            println!();
+            print!("{}", tb.render_table2());
+        }
+        "inspect" => {
+            println!("config: {cfg:#?}");
+            let dir = std::path::Path::new(&cfg.artifacts_dir);
+            if difet::runtime::artifacts_available(dir) {
+                let m = difet::runtime::Manifest::load(dir).map_err(|e| e.to_string())?;
+                println!("\nartifacts ({} algorithms, tile {}):", m.algorithms.len(), m.tile);
+                for (name, spec) in &m.algorithms {
+                    println!(
+                        "  {name:<12} topk={:<5} outputs={} desc={}",
+                        spec.topk,
+                        spec.outputs.len(),
+                        spec.has_descriptors()
+                    );
+                }
+            } else {
+                println!("\nno artifacts at {dir:?} (run `make artifacts`); native fallback active");
+            }
+        }
+        other => {
+            return Err(format!("unknown subcommand {other:?}\n{}", help_text(USAGE, &flag_specs())));
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,250 @@
+//! Job metrics: counters, gauges and latency histograms.
+//!
+//! The coordinator exports Hadoop-style job counters (tasks launched,
+//! data-local fraction, bytes read, speculative kills…) plus latency
+//! histograms for the tile hot path.  Everything is lock-cheap:
+//! counters are atomics, histograms use fixed log-spaced buckets behind a
+//! short critical section, and a `Registry` snapshot is a plain struct the
+//! report renderers consume.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Monotonic counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1)
+    }
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Log-spaced latency histogram, 1 µs .. ~17 min in 64 buckets.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Mutex<HistState>,
+}
+
+#[derive(Debug, Clone)]
+struct HistState {
+    counts: [u64; 64],
+    sum_secs: f64,
+    max_secs: f64,
+    n: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: Mutex::new(HistState {
+                counts: [0; 64],
+                sum_secs: 0.0,
+                max_secs: 0.0,
+                n: 0,
+            }),
+        }
+    }
+}
+
+fn bucket_of(secs: f64) -> usize {
+    // Bucket i covers [1µs * 1.35^i, 1µs * 1.35^(i+1)).
+    let ratio = secs.max(1e-6) / 1e-6;
+    let i = ratio.log(1.35).floor();
+    (i.max(0.0) as usize).min(63)
+}
+
+fn bucket_upper(i: usize) -> f64 {
+    1e-6 * 1.35f64.powi(i as i32 + 1)
+}
+
+impl Histogram {
+    pub fn observe(&self, secs: f64) {
+        let mut st = self.buckets.lock().unwrap();
+        st.counts[bucket_of(secs)] += 1;
+        st.sum_secs += secs;
+        st.max_secs = st.max_secs.max(secs);
+        st.n += 1;
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        let st = self.buckets.lock().unwrap().clone();
+        HistSnapshot {
+            n: st.n,
+            sum_secs: st.sum_secs,
+            max_secs: st.max_secs,
+            p50: percentile(&st, 0.50),
+            p95: percentile(&st, 0.95),
+            p99: percentile(&st, 0.99),
+        }
+    }
+}
+
+fn percentile(st: &HistState, q: f64) -> f64 {
+    if st.n == 0 {
+        return 0.0;
+    }
+    let target = (st.n as f64 * q).ceil() as u64;
+    let mut seen = 0;
+    for (i, &c) in st.counts.iter().enumerate() {
+        seen += c;
+        if seen >= target {
+            return bucket_upper(i);
+        }
+    }
+    st.max_secs
+}
+
+/// Immutable histogram snapshot.
+#[derive(Debug, Clone, Default)]
+pub struct HistSnapshot {
+    pub n: u64,
+    pub sum_secs: f64,
+    pub max_secs: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl HistSnapshot {
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum_secs / self.n as f64
+        }
+    }
+}
+
+/// Named metrics registry for one job run.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<&'static str, std::sync::Arc<Counter>>>,
+    histograms: Mutex<BTreeMap<&'static str, std::sync::Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&self, name: &'static str) -> std::sync::Arc<Counter> {
+        self.counters
+            .lock()
+            .unwrap()
+            .entry(name)
+            .or_default()
+            .clone()
+    }
+
+    pub fn histogram(&self, name: &'static str) -> std::sync::Arc<Histogram> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name)
+            .or_default()
+            .clone()
+    }
+
+    /// Render a Hadoop-style "Counters:" report block.
+    pub fn render(&self) -> String {
+        let mut out = String::from("Counters:\n");
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "  {name:<32} {}\n",
+                crate::util::fmt::with_commas(c.get())
+            ));
+        }
+        for (name, h) in self.histograms.lock().unwrap().iter() {
+            let s = h.snapshot();
+            out.push_str(&format!(
+                "  {name:<32} n={} mean={} p50={} p95={} max={}\n",
+                s.n,
+                crate::util::fmt::duration(s.mean()),
+                crate::util::fmt::duration(s.p50),
+                crate::util::fmt::duration(s.p95),
+                crate::util::fmt::duration(s.max_secs),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_across_clones() {
+        let reg = Registry::new();
+        let a = reg.counter("tasks_launched");
+        let b = reg.counter("tasks_launched");
+        a.inc();
+        b.add(4);
+        assert_eq!(reg.counter("tasks_launched").get(), 5);
+    }
+
+    #[test]
+    fn histogram_percentiles_are_ordered_and_bracket_data() {
+        let h = Histogram::default();
+        for i in 1..=1000 {
+            h.observe(i as f64 * 1e-4); // 0.1ms .. 100ms
+        }
+        let s = h.snapshot();
+        assert_eq!(s.n, 1000);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99);
+        assert!(s.p50 > 0.03 && s.p50 < 0.09, "p50={}", s.p50);
+        assert!(s.max_secs >= 0.0999);
+        assert!((s.mean() - 0.05005).abs() < 0.001);
+    }
+
+    #[test]
+    fn histogram_handles_extremes() {
+        let h = Histogram::default();
+        h.observe(0.0); // clamps into the first bucket
+        h.observe(1e9); // clamps into the last
+        let s = h.snapshot();
+        assert_eq!(s.n, 2);
+        assert!(s.max_secs == 1e9);
+    }
+
+    #[test]
+    fn render_contains_all_names() {
+        let reg = Registry::new();
+        reg.counter("bytes_read").add(1_000_000);
+        reg.histogram("tile_latency").observe(0.01);
+        let text = reg.render();
+        assert!(text.contains("bytes_read"));
+        assert!(text.contains("1,000,000"));
+        assert!(text.contains("tile_latency"));
+    }
+
+    #[test]
+    fn concurrent_observation_is_safe() {
+        let reg = std::sync::Arc::new(Registry::new());
+        let mut handles = vec![];
+        for t in 0..8 {
+            let r = reg.clone();
+            handles.push(std::thread::spawn(move || {
+                let c = r.counter("n");
+                let h = r.histogram("lat");
+                for i in 0..1000 {
+                    c.inc();
+                    h.observe((t * 1000 + i) as f64 * 1e-6);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(reg.counter("n").get(), 8000);
+        assert_eq!(reg.histogram("lat").snapshot().n, 8000);
+    }
+}

@@ -1,0 +1,258 @@
+//! Extraction runners: distributed (cluster sim) and sequential baseline.
+
+use std::path::Path;
+
+use crate::cluster::CostModel;
+use crate::config::Config;
+use crate::coordinator::driver::{JobHooks, NativeExecutor, TileExecutor};
+use crate::coordinator::{run_job, JobReport, JobSpec};
+use crate::dfs::Dfs;
+use crate::imagery::tiler::{extract_tile_f32, TileIter};
+use crate::imagery::SceneGenerator;
+use crate::metrics::Registry;
+use crate::runtime::{artifacts_available, Engine};
+use crate::util::{Result, Stopwatch};
+
+/// What to extract.
+#[derive(Debug, Clone)]
+pub struct ExtractRequest {
+    /// Algorithm names (Table 1 row order by default).
+    pub algorithms: Vec<String>,
+    /// Corpus size N (the paper sweeps 3 and 20).
+    pub num_scenes: usize,
+    /// Write mapper outputs back to DFS (paper's step 5).
+    pub write_output: bool,
+    /// Force the native executor even when artifacts exist.
+    pub force_native: bool,
+}
+
+impl Default for ExtractRequest {
+    fn default() -> Self {
+        ExtractRequest {
+            algorithms: crate::ALGORITHMS.iter().map(|s| s.to_string()).collect(),
+            num_scenes: 3,
+            write_output: true,
+            force_native: false,
+        }
+    }
+}
+
+/// Result of one extraction sweep (one node count, all algorithms).
+#[derive(Debug)]
+pub struct ExtractionReport {
+    pub jobs: Vec<JobReport>,
+    pub executor: &'static str,
+    pub corpus: super::ingest::CorpusInfo,
+}
+
+impl ExtractionReport {
+    pub fn job(&self, algorithm: &str) -> Option<&JobReport> {
+        self.jobs.iter().find(|j| j.algorithm == algorithm)
+    }
+
+    /// One Table-1-style block for this node count.
+    pub fn render_table(&self) -> String {
+        super::report::render_jobs_table(&self.jobs, self.executor)
+    }
+
+    /// One Table-2-style block (feature counts).
+    pub fn render_census(&self) -> String {
+        super::report::render_census_table(&self.jobs)
+    }
+}
+
+/// Pick the executor: PJRT engine when artifacts exist, else native.
+pub fn make_executor(cfg: &Config, req: &ExtractRequest) -> Result<Box<dyn TileExecutor>> {
+    let dir = Path::new(&cfg.artifacts_dir);
+    if !req.force_native && artifacts_available(dir) {
+        let subset: Vec<&str> = req.algorithms.iter().map(|s| s.as_str()).collect();
+        Ok(Box::new(Engine::load_subset(dir, Some(&subset))?))
+    } else {
+        Ok(Box::new(NativeExecutor))
+    }
+}
+
+/// Full distributed run: ingest a corpus, then one MapReduce job per
+/// algorithm on the simulated cluster described by `cfg.cluster`.
+pub fn run_extraction(cfg: &Config, req: &ExtractRequest) -> Result<ExtractionReport> {
+    cfg.validate()?;
+    let dfs = Dfs::new(
+        cfg.cluster.nodes,
+        cfg.storage.block_size,
+        cfg.cluster.replication,
+    );
+    let corpus = super::ingest::ingest_corpus(cfg, &dfs, req.num_scenes, "/corpus/scenes.hib")?;
+    let executor = make_executor(cfg, req)?;
+    run_jobs_on(cfg, &dfs, executor.as_ref(), req, corpus)
+}
+
+/// Same but over a caller-provided DFS + executor (benches reuse both).
+pub fn run_jobs_on(
+    cfg: &Config,
+    dfs: &Dfs,
+    executor: &dyn TileExecutor,
+    req: &ExtractRequest,
+    corpus: super::ingest::CorpusInfo,
+) -> Result<ExtractionReport> {
+    let mut jobs = Vec::new();
+    for alg in &req.algorithms {
+        let registry = Registry::new();
+        let mut spec = JobSpec::new(alg, &corpus.bundle_path);
+        spec.write_output = req.write_output;
+        let report = run_job(cfg, dfs, executor, &spec, &registry, &JobHooks::default())?;
+        jobs.push(report);
+    }
+    Ok(ExtractionReport {
+        jobs,
+        executor: executor.label(),
+        corpus,
+    })
+}
+
+/// The paper's "One node (Matlab)" column: the same algorithms run
+/// sequentially on one machine — no Hadoop startup, no task scheduling,
+/// no replication; just a local disk read per scene plus compute.
+pub fn run_sequential(cfg: &Config, req: &ExtractRequest) -> Result<ExtractionReport> {
+    cfg.validate()?;
+    let executor = make_executor(cfg, req)?;
+    let cost = CostModel::new(&cfg.cluster);
+    let gen = SceneGenerator::new(cfg.scene.clone());
+
+    // Generate once (the "dataset on local disk").
+    let scenes: Vec<_> = (0..req.num_scenes as u64).map(|i| gen.scene(i)).collect();
+    let raw_bytes: u64 = scenes.iter().map(|s| s.image.byte_len() as u64).sum();
+
+    let mut jobs = Vec::new();
+    for alg in &req.algorithms {
+        let wall = Stopwatch::start();
+        let mut compute_ns = 0u64;
+        let mut io_secs = 0.0;
+        let cap = crate::per_image_cap(alg);
+        let mut images = Vec::new();
+        for scene in &scenes {
+            io_secs += cost.disk_read(scene.image.byte_len() as u64);
+            let mut raw_count = 0u64;
+            let mut keypoints = Vec::new();
+            for tile in TileIter::new(scene.image.width, scene.image.height) {
+                let buf = extract_tile_f32(&scene.image, &tile);
+                let t0 = std::time::Instant::now();
+                let feats = executor.run_tile(alg, &buf, tile.core_local())?;
+                compute_ns += t0.elapsed().as_nanos() as u64;
+                raw_count += feats.count;
+                for kp in feats.keypoints {
+                    let (r, c) = tile.to_scene(kp.row, kp.col);
+                    keypoints.push(crate::features::Keypoint {
+                        row: r as i32,
+                        col: c as i32,
+                        score: kp.score,
+                    });
+                }
+            }
+            keypoints.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+            keypoints.truncate(cap.unwrap_or(512));
+            let count = cap.map_or(raw_count, |c| raw_count.min(c as u64));
+            images.push(crate::coordinator::ImageCensus {
+                image_id: scene.id,
+                count,
+                raw_count,
+                keypoints,
+            });
+        }
+        let compute_seconds = compute_ns as f64 * 1e-9;
+        jobs.push(JobReport {
+            algorithm: alg.clone(),
+            nodes: 1,
+            image_count: req.num_scenes,
+            sim_seconds: io_secs + compute_seconds,
+            wall_seconds: wall.elapsed_secs(),
+            compute_seconds,
+            io_seconds: io_secs,
+            images,
+            counters: Default::default(),
+        });
+    }
+
+    Ok(ExtractionReport {
+        jobs,
+        executor: executor.label(),
+        corpus: super::ingest::CorpusInfo {
+            bundle_path: "(local disk)".into(),
+            scene_count: req.num_scenes,
+            bundle_bytes: raw_bytes,
+            raw_bytes,
+            ingest_seconds: 0.0,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> Config {
+        let mut cfg = Config::new();
+        cfg.scene.width = 600;
+        cfg.scene.height = 600;
+        cfg.cluster.nodes = 2;
+        cfg.cluster.slots_per_node = 2;
+        cfg.storage.block_size = 4 << 20;
+        cfg.artifacts_dir = "/nonexistent".into(); // force native executor
+        cfg
+    }
+
+    #[test]
+    fn distributed_and_sequential_censuses_agree() {
+        let cfg = tiny_cfg();
+        let req = ExtractRequest {
+            algorithms: vec!["harris".into(), "fast".into()],
+            num_scenes: 2,
+            write_output: true,
+            force_native: true,
+        };
+        let dist = run_extraction(&cfg, &req).unwrap();
+        let seq = run_sequential(&cfg, &req).unwrap();
+        for alg in &req.algorithms {
+            let d = dist.job(alg).unwrap();
+            let s = seq.job(alg).unwrap();
+            assert_eq!(
+                d.total_count(),
+                s.total_count(),
+                "{alg}: distributed census != sequential census"
+            );
+            assert_eq!(d.image_count, 2);
+        }
+    }
+
+    #[test]
+    fn per_image_caps_enforced_end_to_end() {
+        let cfg = tiny_cfg();
+        let req = ExtractRequest {
+            algorithms: vec!["shi_tomasi".into()],
+            num_scenes: 2,
+            write_output: false,
+            force_native: true,
+        };
+        let rep = run_extraction(&cfg, &req).unwrap();
+        let job = rep.job("shi_tomasi").unwrap();
+        for img in &job.images {
+            assert!(img.count <= 400, "image {} census {}", img.image_id, img.count);
+            assert!(img.raw_count >= img.count);
+        }
+        // Synthetic scenes are corner-rich: the cap binds exactly.
+        assert_eq!(job.total_count(), 2 * 400);
+    }
+
+    #[test]
+    fn simulated_time_grows_with_corpus() {
+        let cfg = tiny_cfg();
+        let mk = |n| ExtractRequest {
+            algorithms: vec!["harris".into()],
+            num_scenes: n,
+            write_output: false,
+            force_native: true,
+        };
+        let t1 = run_extraction(&cfg, &mk(1)).unwrap().jobs[0].sim_seconds;
+        let t4 = run_extraction(&cfg, &mk(4)).unwrap().jobs[0].sim_seconds;
+        assert!(t4 > t1, "t4={t4} !> t1={t1}");
+    }
+}

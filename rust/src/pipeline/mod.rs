@@ -1,0 +1,20 @@
+//! End-to-end pipelines: ingest → extract → report.
+//!
+//! These are the flows the `difet` CLI, the examples and the benches
+//! drive; everything below composes the substrates (imagery, hib, dfs),
+//! the coordinator and the runtime into the two experiments of the paper:
+//!
+//! * [`ingest`] — generate a synthetic LandSat corpus, bundle it (HIB)
+//!   and write it into DFS under backpressure (streaming, bounded memory).
+//! * [`extract`] — run extraction jobs on the simulated cluster
+//!   ([`run_extraction`]) or sequentially on one node
+//!   ([`run_sequential`]), producing [`coordinator::JobReport`]s.
+//! * [`report`] — render Table 1 / Table 2 in the paper's row order.
+
+pub mod extract;
+pub mod ingest;
+pub mod report;
+
+pub use extract::{run_extraction, run_sequential, ExtractRequest, ExtractionReport};
+pub use ingest::{ingest_corpus, CorpusInfo};
+

@@ -1,0 +1,221 @@
+//! Table renderers in the paper's format.
+//!
+//! Table 1 (running times) and Table 2 (feature counts) are assembled
+//! from `JobReport`s collected across node-count sweeps.  Renderers are
+//! pure string builders so benches/examples/CLI can all print the same
+//! blocks and EXPERIMENTS.md can paste them verbatim.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::JobReport;
+use crate::features::Algorithm;
+use crate::util::fmt;
+
+/// One Table-1 *column* (a node-count × corpus-size configuration).
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct ColumnKey {
+    /// 0 = sequential baseline, else MapReduce node count.
+    pub nodes: usize,
+    pub scenes: usize,
+}
+
+impl ColumnKey {
+    pub fn label(&self) -> String {
+        if self.nodes == 0 {
+            format!("seq N={}", self.scenes)
+        } else {
+            format!("{}nd N={}", self.nodes, self.scenes)
+        }
+    }
+}
+
+/// Accumulates (algorithm, column) → seconds / counts across runs.
+#[derive(Debug, Default)]
+pub struct TableBuilder {
+    seconds: BTreeMap<(String, ColumnKey), f64>,
+    counts: BTreeMap<(String, usize), u64>, // (algorithm, scenes) → census
+}
+
+impl TableBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one job's results under a column.
+    pub fn add(&mut self, col: ColumnKey, job: &JobReport) {
+        self.seconds
+            .insert((job.algorithm.clone(), col.clone()), job.sim_seconds);
+        self.counts
+            .insert((job.algorithm.clone(), col.scenes), job.total_count());
+    }
+
+    /// Render Table 1: rows = algorithms, columns sorted by (nodes, N).
+    pub fn render_table1(&self) -> String {
+        let mut cols: Vec<ColumnKey> = self
+            .seconds
+            .keys()
+            .map(|(_, c)| c.clone())
+            .collect::<std::collections::BTreeSet<_>>()
+            .into_iter()
+            .collect();
+        cols.sort();
+        let mut out = String::new();
+        out.push_str("Table 1 — running times (seconds)\n");
+        out.push_str(&format!("{:<26}", "Algorithm"));
+        for c in &cols {
+            out.push_str(&format!("{:>12}", c.label()));
+        }
+        out.push('\n');
+        for alg in Algorithm::ALL {
+            out.push_str(&format!("{:<26}", alg.paper_label()));
+            for c in &cols {
+                match self.seconds.get(&(alg.name().to_string(), c.clone())) {
+                    Some(s) => out.push_str(&format!("{:>12.1}", s)),
+                    None => out.push_str(&format!("{:>12}", "—")),
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render Table 2: rows = algorithms, columns = corpus sizes.
+    pub fn render_table2(&self) -> String {
+        let mut sizes: Vec<usize> = self
+            .counts
+            .keys()
+            .map(|(_, n)| *n)
+            .collect::<std::collections::BTreeSet<_>>()
+            .into_iter()
+            .collect();
+        sizes.sort_unstable();
+        let mut out = String::new();
+        out.push_str("Table 2 — number of features\n");
+        out.push_str(&format!("{:<26}", "Algorithm"));
+        for n in &sizes {
+            out.push_str(&format!("{:>14}", format!("N={n}")));
+        }
+        out.push('\n');
+        for alg in Algorithm::ALL {
+            out.push_str(&format!("{:<26}", alg.paper_label()));
+            for n in &sizes {
+                match self.counts.get(&(alg.name().to_string(), *n)) {
+                    Some(c) => out.push_str(&format!("{:>14}", fmt::with_commas(*c))),
+                    None => out.push_str(&format!("{:>14}", "—")),
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Per-run job table (one node count): time breakdown + counters.
+pub fn render_jobs_table(jobs: &[JobReport], executor: &str) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<26}{:>10}{:>10}{:>10}{:>9}{:>8}{:>9}\n",
+        "Algorithm", "sim", "compute", "io", "wall", "tasks", "local%"
+    ));
+    for j in jobs {
+        let local_pct = {
+            let l = j.counter("data_local_tasks");
+            let r = j.counter("rack_remote_tasks");
+            if l + r == 0 {
+                100.0
+            } else {
+                100.0 * l as f64 / (l + r) as f64
+            }
+        };
+        out.push_str(&format!(
+            "{:<26}{:>10}{:>10}{:>10}{:>9}{:>8}{:>8.0}%\n",
+            j.algorithm,
+            fmt::duration(j.sim_seconds),
+            fmt::duration(j.compute_seconds),
+            fmt::duration(j.io_seconds),
+            fmt::duration(j.wall_seconds),
+            j.counter("tasks"),
+            local_pct,
+        ));
+    }
+    out.push_str(&format!("(executor: {executor})\n"));
+    out
+}
+
+/// Per-run census table.
+pub fn render_census_table(jobs: &[JobReport]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<26}{:>14}{:>14}\n",
+        "Algorithm", "features", "raw(uncapped)"
+    ));
+    for j in jobs {
+        let raw: u64 = j.images.iter().map(|i| i.raw_count).sum();
+        out.push_str(&format!(
+            "{:<26}{:>14}{:>14}\n",
+            j.algorithm,
+            fmt::with_commas(j.total_count()),
+            fmt::with_commas(raw),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(alg: &str, secs: f64, count: u64) -> JobReport {
+        JobReport {
+            algorithm: alg.into(),
+            nodes: 2,
+            image_count: 3,
+            sim_seconds: secs,
+            wall_seconds: 0.1,
+            compute_seconds: secs * 0.7,
+            io_seconds: secs * 0.3,
+            images: vec![crate::coordinator::ImageCensus {
+                image_id: 0,
+                count,
+                raw_count: count,
+                keypoints: vec![],
+            }],
+            counters: Default::default(),
+        }
+    }
+
+    #[test]
+    fn table1_has_all_rows_and_columns() {
+        let mut tb = TableBuilder::new();
+        tb.add(ColumnKey { nodes: 0, scenes: 3 }, &job("harris", 68.0, 10));
+        tb.add(ColumnKey { nodes: 2, scenes: 3 }, &job("harris", 44.0, 10));
+        tb.add(ColumnKey { nodes: 4, scenes: 3 }, &job("sift", 459.0, 20));
+        let t = tb.render_table1();
+        assert!(t.contains("Harris Corner Detection"));
+        assert!(t.contains("seq N=3"));
+        assert!(t.contains("2nd N=3"));
+        assert!(t.contains("4nd N=3"));
+        assert!(t.contains("68.0"));
+        assert!(t.contains("—")); // missing cells render as dashes
+    }
+
+    #[test]
+    fn table2_formats_counts_with_commas() {
+        let mut tb = TableBuilder::new();
+        tb.add(ColumnKey { nodes: 4, scenes: 20 }, &job("fast", 43.0, 4_762_222));
+        let t = tb.render_table2();
+        assert!(t.contains("4,762,222"));
+        assert!(t.contains("N=20"));
+    }
+
+    #[test]
+    fn jobs_table_renders_locality() {
+        let mut j = job("orb", 9.0, 500);
+        j.counters.insert("data_local_tasks".into(), 3);
+        j.counters.insert("rack_remote_tasks".into(), 1);
+        j.counters.insert("tasks".into(), 4);
+        let t = render_jobs_table(&[j], "pjrt");
+        assert!(t.contains("75%"));
+        assert!(t.contains("(executor: pjrt)"));
+    }
+}

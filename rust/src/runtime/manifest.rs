@@ -1,0 +1,245 @@
+//! Artifact manifest: the I/O contract `python/compile/aot.py` publishes.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Json};
+use crate::util::{DifetError, Result};
+
+/// Element type of one executable output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    I32,
+    F32,
+    U32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "i32" => Ok(Dtype::I32),
+            "f32" => Ok(Dtype::F32),
+            "u32" => Ok(Dtype::U32),
+            other => Err(DifetError::Runtime(format!("unknown dtype {other:?}"))),
+        }
+    }
+}
+
+/// One output of an executable's result tuple.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OutputSpec {
+    pub name: String,
+    pub dtype: Dtype,
+    pub dims: Vec<usize>,
+}
+
+/// One algorithm's artifact entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AlgorithmSpec {
+    pub name: String,
+    /// HLO text path (absolute, resolved against the manifest directory).
+    pub hlo_path: PathBuf,
+    pub topk: usize,
+    pub outputs: Vec<OutputSpec>,
+    /// Executable takes the BRIEF pattern operands (f32[256,2] × 2) after
+    /// the core rectangle — see DESIGN.md §7 (large-constant workaround).
+    pub takes_pattern: bool,
+}
+
+impl AlgorithmSpec {
+    /// Does this algorithm emit descriptors (5th tuple element)?
+    pub fn has_descriptors(&self) -> bool {
+        self.outputs.len() > 4
+    }
+}
+
+/// The parsed `manifest.json`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub tile: usize,
+    pub algorithms: BTreeMap<String, AlgorithmSpec>,
+    /// Detector thresholds as recorded at lowering time (used by the
+    /// parity test to catch Rust/Python constant drift).
+    pub params: BTreeMap<String, f64>,
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)?;
+        let doc = json::parse(&text)
+            .map_err(|e| DifetError::Runtime(format!("{}: {e}", path.display())))?;
+        Self::from_json(&doc, dir)
+    }
+
+    pub fn from_json(doc: &Json, dir: &Path) -> Result<Manifest> {
+        let bad = |m: String| DifetError::Runtime(m);
+        let tile = doc
+            .get("tile")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| bad("manifest: missing tile".into()))? as usize;
+        if tile != crate::TILE {
+            return Err(bad(format!(
+                "manifest tile {tile} != crate TILE {} — rebuild artifacts",
+                crate::TILE
+            )));
+        }
+        let algs = doc
+            .get("algorithms")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| bad("manifest: missing algorithms".into()))?;
+        let mut algorithms = BTreeMap::new();
+        for (name, entry) in algs {
+            let file = entry
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| bad(format!("manifest: {name}: missing file")))?;
+            let topk = entry
+                .get("topk")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| bad(format!("manifest: {name}: missing topk")))?
+                as usize;
+            let outs = entry
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| bad(format!("manifest: {name}: missing outputs")))?;
+            let mut outputs = Vec::with_capacity(outs.len());
+            for o in outs {
+                let oname = o
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| bad(format!("manifest: {name}: output missing name")))?;
+                let dtype = Dtype::parse(
+                    o.get("dtype")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| bad(format!("manifest: {name}: output missing dtype")))?,
+                )?;
+                let dims = o
+                    .get("dims")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| bad(format!("manifest: {name}: output missing dims")))?
+                    .iter()
+                    .map(|d| d.as_u64().map(|v| v as usize))
+                    .collect::<Option<Vec<usize>>>()
+                    .ok_or_else(|| bad(format!("manifest: {name}: bad dims")))?;
+                outputs.push(OutputSpec {
+                    name: oname.to_string(),
+                    dtype,
+                    dims,
+                });
+            }
+            // Validate the fixed prefix contract the executor relies on.
+            let prefix: Vec<&str> = outputs.iter().take(4).map(|o| o.name.as_str()).collect();
+            if prefix != ["count", "scores", "rows", "cols"] {
+                return Err(bad(format!(
+                    "manifest: {name}: unexpected output prefix {prefix:?}"
+                )));
+            }
+            let takes_pattern = entry
+                .get("takes_pattern")
+                .map(|v| v == &Json::Bool(true))
+                .unwrap_or(false);
+            algorithms.insert(
+                name.clone(),
+                AlgorithmSpec {
+                    name: name.clone(),
+                    hlo_path: dir.join(file),
+                    topk,
+                    outputs,
+                    takes_pattern,
+                },
+            );
+        }
+        let mut params = BTreeMap::new();
+        if let Some(p) = doc.get("params").and_then(Json::as_obj) {
+            for (k, v) in p {
+                if let Some(x) = v.as_f64() {
+                    params.insert(k.clone(), x);
+                }
+            }
+        }
+        Ok(Manifest {
+            tile,
+            algorithms,
+            params,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_doc() -> String {
+        r#"{
+          "manifest_version": 1,
+          "tile": 512,
+          "params": {"fast_t": 0.06},
+          "algorithms": {
+            "harris": {
+              "file": "harris.hlo.txt", "topk": 2048,
+              "outputs": [
+                {"name": "count", "dtype": "i32", "dims": []},
+                {"name": "scores", "dtype": "f32", "dims": [2048]},
+                {"name": "rows", "dtype": "i32", "dims": [2048]},
+                {"name": "cols", "dtype": "i32", "dims": [2048]}
+              ]
+            },
+            "orb": {
+              "file": "orb.hlo.txt", "topk": 1024,
+              "outputs": [
+                {"name": "count", "dtype": "i32", "dims": []},
+                {"name": "scores", "dtype": "f32", "dims": [1024]},
+                {"name": "rows", "dtype": "i32", "dims": [1024]},
+                {"name": "cols", "dtype": "i32", "dims": [1024]},
+                {"name": "desc", "dtype": "u32", "dims": [1024, 8]}
+              ]
+            }
+          }
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_sample() {
+        let doc = crate::util::json::parse(&sample_doc()).unwrap();
+        let m = Manifest::from_json(&doc, Path::new("/arts")).unwrap();
+        assert_eq!(m.tile, 512);
+        let h = &m.algorithms["harris"];
+        assert_eq!(h.topk, 2048);
+        assert!(!h.has_descriptors());
+        assert_eq!(h.hlo_path, Path::new("/arts/harris.hlo.txt"));
+        let o = &m.algorithms["orb"];
+        assert!(o.has_descriptors());
+        assert_eq!(o.outputs[4].dims, vec![1024, 8]);
+        assert_eq!(m.params["fast_t"], 0.06);
+    }
+
+    #[test]
+    fn rejects_wrong_tile() {
+        let doc = crate::util::json::parse(&sample_doc().replace("512", "256")).unwrap();
+        assert!(Manifest::from_json(&doc, Path::new("/x")).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_prefix() {
+        let doc = crate::util::json::parse(&sample_doc().replace("\"count\"", "\"n\"")).unwrap();
+        assert!(Manifest::from_json(&doc, Path::new("/x")).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_when_built() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !super::super::artifacts_available(&dir) {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.algorithms.len(), 7);
+        for name in crate::ALGORITHMS {
+            let spec = &m.algorithms[name];
+            assert!(spec.hlo_path.is_file(), "missing {:?}", spec.hlo_path);
+        }
+    }
+}

@@ -1,0 +1,26 @@
+//! PJRT runtime: load AOT artifacts and execute them on the tile hot path.
+//!
+//! This is the L3↔L2 boundary.  `make artifacts` leaves
+//! `artifacts/manifest.json` plus one `*.hlo.txt` per algorithm; at
+//! startup [`Engine::load`] parses the manifest ([`manifest`]), compiles
+//! every module once on a shared `PjRtClient::cpu()` and exposes a typed
+//! [`Engine::run`] the mappers call per tile.  Python is *never* involved
+//! — the HLO text is the entire interface.
+//!
+//! When `artifacts/` is absent (fresh checkout, pre-`make artifacts`) the
+//! pipeline falls back to the pure-Rust [`crate::features`] executor so
+//! `cargo test` and the coordinator tests stay hermetic; integration
+//! tests that need PJRT skip themselves with a notice instead of failing.
+
+pub mod executor;
+pub mod manifest;
+
+pub use executor::{Engine, TileFeatures};
+pub use manifest::{AlgorithmSpec, Manifest, OutputSpec};
+
+use std::path::Path;
+
+/// Does a directory contain a loadable artifact set?
+pub fn artifacts_available(dir: &Path) -> bool {
+    dir.join("manifest.json").is_file()
+}

@@ -1,0 +1,174 @@
+//! Tiny CLI argument parser (offline `clap` substitute).
+//!
+//! Supports the subcommand + `--flag value` / `--flag=value` / boolean
+//! switch grammar the `difet` binary uses.  Unknown flags are hard errors —
+//! typos in benchmark sweeps must not silently fall back to defaults.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, its flags and positional args.
+#[derive(Debug, Default, Clone)]
+pub struct ParsedArgs {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+/// Declarative flag spec used for validation + help text.
+#[derive(Debug, Clone)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+}
+
+impl ParsedArgs {
+    /// Parse `argv` (without the program name) against the allowed specs.
+    pub fn parse(
+        argv: &[String],
+        specs: &[FlagSpec],
+        expect_subcommand: bool,
+    ) -> Result<ParsedArgs, String> {
+        let mut out = ParsedArgs::default();
+        let mut it = argv.iter().peekable();
+
+        if expect_subcommand {
+            match it.peek() {
+                Some(s) if !s.starts_with('-') => {
+                    out.subcommand = Some(it.next().unwrap().clone());
+                }
+                _ => {}
+            }
+        }
+
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name}"))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("--{name} requires a value"))?
+                            .clone(),
+                    };
+                    out.flags.insert(name, val);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(format!("--{name} does not take a value"));
+                    }
+                    out.switches.push(name);
+                }
+            } else {
+                out.positional.push(arg.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(raw) => raw
+                .parse()
+                .map_err(|_| format!("--{name}: cannot parse {raw:?}")),
+        }
+    }
+
+    /// Parse a comma-separated list flag (e.g. `--algorithms harris,orb`).
+    pub fn get_list(&self, name: &str) -> Option<Vec<String>> {
+        self.get(name).map(|v| {
+            v.split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect()
+        })
+    }
+}
+
+/// Render `--help` text for a flag table.
+pub fn help_text(usage: &str, specs: &[FlagSpec]) -> String {
+    let mut out = format!("usage: {usage}\n\noptions:\n");
+    for s in specs {
+        let arg = if s.takes_value {
+            format!("--{} <v>", s.name)
+        } else {
+            format!("--{}", s.name)
+        };
+        out.push_str(&format!("  {arg:<24} {}\n", s.help));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<FlagSpec> {
+        vec![
+            FlagSpec { name: "nodes", takes_value: true, help: "node count" },
+            FlagSpec { name: "verbose", takes_value: false, help: "chatty" },
+            FlagSpec { name: "algorithms", takes_value: true, help: "subset" },
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_positionals() {
+        let p = ParsedArgs::parse(
+            &sv(&["extract", "--nodes", "4", "--verbose", "scene.hib"]),
+            &specs(),
+            true,
+        )
+        .unwrap();
+        assert_eq!(p.subcommand.as_deref(), Some("extract"));
+        assert_eq!(p.get("nodes"), Some("4"));
+        assert!(p.has("verbose"));
+        assert_eq!(p.positional, vec!["scene.hib"]);
+    }
+
+    #[test]
+    fn parses_equals_form_and_lists() {
+        let p = ParsedArgs::parse(&sv(&["--algorithms=harris, orb"]), &specs(), false).unwrap();
+        assert_eq!(p.get_list("algorithms").unwrap(), vec!["harris", "orb"]);
+    }
+
+    #[test]
+    fn rejects_unknown_and_malformed() {
+        assert!(ParsedArgs::parse(&sv(&["--bogus"]), &specs(), false).is_err());
+        assert!(ParsedArgs::parse(&sv(&["--nodes"]), &specs(), false).is_err());
+        assert!(ParsedArgs::parse(&sv(&["--verbose=1"]), &specs(), false).is_err());
+    }
+
+    #[test]
+    fn typed_access_with_default() {
+        let p = ParsedArgs::parse(&sv(&["--nodes", "8"]), &specs(), false).unwrap();
+        assert_eq!(p.get_parse("nodes", 1usize).unwrap(), 8);
+        assert_eq!(p.get_parse("algorithms", 3usize).unwrap(), 3); // default
+        let bad = ParsedArgs::parse(&sv(&["--nodes", "x"]), &specs(), false).unwrap();
+        assert!(bad.get_parse::<usize>("nodes", 1).is_err());
+    }
+}

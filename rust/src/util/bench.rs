@@ -1,0 +1,102 @@
+//! Minimal bench harness (offline `criterion` substitute).
+//!
+//! `cargo bench` binaries (`harness = false`) drive this directly.  Each
+//! measurement runs warmups, then timed iterations, and reports
+//! mean/σ/min in criterion-like one-liners.  `BenchSink` lets callers
+//! keep results for table assembly (the Table 1/2 regenerators).
+
+use std::time::Instant;
+
+/// One measurement result.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_secs: f64,
+    pub stddev_secs: f64,
+    pub min_secs: f64,
+}
+
+impl Measurement {
+    pub fn throughput_str(&self, bytes_per_iter: u64) -> String {
+        crate::util::fmt::throughput(bytes_per_iter, self.mean_secs)
+    }
+}
+
+impl std::fmt::Display for Measurement {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>10} ± {:<8} (min {}, n={})",
+            self.name,
+            crate::util::fmt::duration(self.mean_secs),
+            crate::util::fmt::duration(self.stddev_secs),
+            crate::util::fmt::duration(self.min_secs),
+            self.iters
+        )
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Measurement {
+    assert!(iters >= 1);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / iters as f64;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / iters as f64;
+    let min = samples.iter().cloned().fold(f64::MAX, f64::min);
+    let m = Measurement {
+        name: name.to_string(),
+        iters,
+        mean_secs: mean,
+        stddev_secs: var.sqrt(),
+        min_secs: min,
+    };
+    println!("{m}");
+    m
+}
+
+/// Run once and report (for end-to-end cells where iteration is costly).
+pub fn bench_once<T>(name: &str, f: impl FnOnce() -> T) -> (T, Measurement) {
+    let t0 = Instant::now();
+    let out = f();
+    let secs = t0.elapsed().as_secs_f64();
+    let m = Measurement {
+        name: name.to_string(),
+        iters: 1,
+        mean_secs: secs,
+        stddev_secs: 0.0,
+        min_secs: secs,
+    };
+    println!("{m}");
+    (out, m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let m = bench("noop-spin", 1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(m.iters, 5);
+        assert!(m.mean_secs >= m.min_secs);
+        assert!(m.mean_secs < 1.0);
+    }
+
+    #[test]
+    fn bench_once_returns_value() {
+        let (v, m) = bench_once("compute", || 41 + 1);
+        assert_eq!(v, 42);
+        assert!(m.min_secs >= 0.0);
+    }
+}

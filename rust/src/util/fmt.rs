@@ -1,0 +1,93 @@
+//! Human-readable formatting helpers for reports and logs.
+
+/// `1234567` → `"1,234,567"` (Table 2 rows use this).
+pub fn with_commas(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+/// Seconds → `"1h02m"`, `"4m07s"`, `"12.3s"`, `"85ms"`.
+pub fn duration(secs: f64) -> String {
+    if secs < 0.0 {
+        return format!("-{}", duration(-secs));
+    }
+    if secs < 1.0 {
+        format!("{:.0}ms", secs * 1e3)
+    } else if secs < 100.0 {
+        format!("{secs:.1}s")
+    } else if secs < 3600.0 {
+        format!("{}m{:02.0}s", (secs / 60.0) as u64, secs % 60.0)
+    } else {
+        format!("{}h{:02}m", (secs / 3600.0) as u64, ((secs % 3600.0) / 60.0) as u64)
+    }
+}
+
+/// Bytes → `"230.4 MB"` style (SI units, like HDFS reports).
+pub fn bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1000.0 && u < UNITS.len() - 1 {
+        v /= 1000.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.1} {}", UNITS[u])
+    }
+}
+
+/// Throughput in MB/s from bytes + seconds.
+pub fn throughput(bytes_n: u64, secs: f64) -> String {
+    if secs <= 0.0 {
+        return "inf".into();
+    }
+    format!("{:.1} MB/s", bytes_n as f64 / 1e6 / secs)
+}
+
+/// Fixed-width table cell (right-aligned).
+pub fn cell(s: &str, width: usize) -> String {
+    format!("{s:>width$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn commas() {
+        assert_eq!(with_commas(0), "0");
+        assert_eq!(with_commas(999), "999");
+        assert_eq!(with_commas(1000), "1,000");
+        assert_eq!(with_commas(4762222), "4,762,222");
+    }
+
+    #[test]
+    fn durations() {
+        assert_eq!(duration(0.085), "85ms");
+        assert_eq!(duration(12.34), "12.3s");
+        assert_eq!(duration(247.0), "4m07s");
+        assert_eq!(duration(3720.0), "1h02m");
+    }
+
+    #[test]
+    fn byte_sizes() {
+        assert_eq!(bytes(512), "512 B");
+        assert_eq!(bytes(230_400_000), "230.4 MB");
+        assert_eq!(bytes(1_500_000_000), "1.5 GB");
+    }
+
+    #[test]
+    fn throughput_fmt() {
+        assert_eq!(throughput(100_000_000, 2.0), "50.0 MB/s");
+        assert_eq!(throughput(1, 0.0), "inf");
+    }
+}

@@ -1,0 +1,62 @@
+//! Small shared utilities: errors, PRNG, property-testing harness, CLI
+//! argument parsing, JSON parsing and human-readable formatting.
+//!
+//! The offline crate registry in this environment lacks `clap`, `serde`,
+//! `rand` and `proptest`; these modules are the project-local substitutes
+//! DESIGN.md §3 documents (each is unit-tested in place).
+
+pub mod args;
+pub mod bench;
+pub mod fmt;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+use std::fmt as stdfmt;
+
+/// Unified error type for the DIFET library.
+#[derive(Debug, thiserror::Error)]
+pub enum DifetError {
+    #[error("I/O error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("corrupt bundle: {0}")]
+    CorruptBundle(String),
+    #[error("DFS error: {0}")]
+    Dfs(String),
+    #[error("config error: {0}")]
+    Config(String),
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    #[error("job failed: {0}")]
+    Job(String),
+    #[error("XLA error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for DifetError {
+    fn from(e: xla::Error) -> Self {
+        DifetError::Xla(e.to_string())
+    }
+}
+
+/// Project-wide result alias.
+pub type Result<T> = std::result::Result<T, DifetError>;
+
+/// Monotonic wall-clock helper for coarse phase timing.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch(std::time::Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(std::time::Instant::now())
+    }
+    pub fn elapsed_secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+impl stdfmt::Display for Stopwatch {
+    fn fmt(&self, f: &mut stdfmt::Formatter<'_>) -> stdfmt::Result {
+        write!(f, "{:.3}s", self.elapsed_secs())
+    }
+}

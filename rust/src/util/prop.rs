@@ -1,0 +1,166 @@
+//! Minimal property-based testing harness (offline `proptest` substitute).
+//!
+//! A property is a closure over a [`Gen`] (seeded case generator).  The
+//! harness runs `cases` independent seeds; on failure it retries the same
+//! seed with progressively *smaller* size hints — a crude but effective
+//! shrinking strategy for the collection-heavy inputs our coordinator
+//! invariants use — and reports the smallest failing seed/size so the case
+//! is reproducible with `Gen::replay`.
+//!
+//! Used by the coordinator, DFS and HIB invariant tests (routing, batching,
+//! block placement, bundle round-trips).
+
+use super::rng::Pcg32;
+
+/// Seeded case generator handed to properties.
+pub struct Gen {
+    rng: Pcg32,
+    /// Soft bound for "how big" generated collections should be; shrinking
+    /// lowers it.
+    pub size: usize,
+    seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Self {
+        Gen {
+            rng: Pcg32::new(seed, 0xd1f3),
+            size,
+            seed,
+        }
+    }
+
+    /// Re-create the exact generator a failure report names.
+    pub fn replay(seed: u64, size: usize) -> Self {
+        Self::new(seed, size)
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn u32(&mut self, bound: u32) -> u32 {
+        self.rng.next_bounded(bound.max(1))
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.next_bounded((hi - lo + 1) as u32) as usize
+    }
+
+    /// A collection length in `[min_len, min_len + size]`.
+    pub fn len(&mut self, min_len: usize) -> usize {
+        self.usize_in(min_len, min_len + self.size)
+    }
+
+    pub fn f32(&mut self) -> f32 {
+        self.rng.next_f32()
+    }
+
+    pub fn bool(&mut self, p_true: f64) -> bool {
+        self.rng.next_f64() < p_true
+    }
+
+    pub fn bytes(&mut self, len: usize) -> Vec<u8> {
+        (0..len).map(|_| self.rng.next_u32() as u8).collect()
+    }
+
+    pub fn vec_u32(&mut self, len: usize, bound: u32) -> Vec<u32> {
+        (0..len).map(|_| self.u32(bound)).collect()
+    }
+
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        self.rng.shuffle(xs)
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.choose(xs)
+    }
+}
+
+/// Outcome of a property check on one case.
+pub type PropResult = std::result::Result<(), String>;
+
+/// Run `prop` over `cases` generated cases (sizes ramp up with the case
+/// index, like proptest).  Panics with a reproduction line on failure.
+pub fn check<F>(name: &str, cases: u64, prop: F)
+where
+    F: Fn(&mut Gen) -> PropResult,
+{
+    for case in 0..cases {
+        let seed = 0x5eed_0000 + case;
+        // Ramp sizes so early cases are trivial and later ones are big.
+        let size = 1 + (case as usize * 97) % 50;
+        let mut g = Gen::new(seed, size);
+        if let Err(msg) = prop(&mut g) {
+            // Shrink: retry the same seed at smaller sizes, keep the
+            // smallest size that still fails.
+            let mut smallest = (size, msg);
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut g2 = Gen::new(seed, s);
+                match prop(&mut g2) {
+                    Err(m) => {
+                        smallest = (s, m);
+                        if s == 1 {
+                            break;
+                        }
+                        s /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed (replay with Gen::replay({seed}, {})):\n  {}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+/// Assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = std::cell::Cell::new(0u64);
+        check("count", 32, |_g| {
+            n.set(n.get() + 1);
+            Ok(())
+        });
+        assert_eq!(n.get_mut(), &32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_replay() {
+        check("fails", 8, |g| {
+            let n = g.len(1);
+            let v = g.vec_u32(n, 100);
+            if v.len() > 1 {
+                Err(format!("len {} > 1", v.len()))
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn replay_reproduces_identical_cases() {
+        let mut a = Gen::replay(99, 10);
+        let mut b = Gen::replay(99, 10);
+        assert_eq!(a.bytes(32), b.bytes(32));
+        assert_eq!(a.u32(1000), b.u32(1000));
+    }
+}

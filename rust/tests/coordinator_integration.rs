@@ -1,0 +1,245 @@
+//! Integration tests for the coordinator over the full substrate stack
+//! (DFS + HIB + imagery + native executor) — hermetic, no artifacts
+//! needed.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use difet::config::Config;
+use difet::coordinator::driver::{JobHooks, NativeExecutor};
+use difet::coordinator::{run_job, JobSpec};
+use difet::dfs::{Dfs, NodeId};
+use difet::metrics::Registry;
+use difet::pipeline::ingest_corpus;
+
+fn tiny_cfg(nodes: usize) -> Config {
+    let mut cfg = Config::new();
+    cfg.scene.width = 520;
+    cfg.scene.height = 520;
+    cfg.scene.settlements = 8;
+    cfg.cluster.nodes = nodes;
+    cfg.cluster.slots_per_node = 2;
+    cfg.cluster.job_startup = 0.5; // scaled: tests shouldn't model 12 s
+    cfg.storage.block_size = 1 << 20; // 1 MiB → several splits
+    cfg
+}
+
+fn setup(cfg: &Config, scenes: usize) -> (Dfs, String) {
+    let dfs = Dfs::new(
+        cfg.cluster.nodes,
+        cfg.storage.block_size,
+        cfg.cluster.replication,
+    );
+    let info = ingest_corpus(cfg, &dfs, scenes, "/corpus/itest.hib").unwrap();
+    (dfs, info.bundle_path)
+}
+
+#[test]
+fn job_completes_and_counts_match_corpus() {
+    let cfg = tiny_cfg(2);
+    let (dfs, path) = setup(&cfg, 3);
+    let registry = Registry::new();
+    let spec = JobSpec::new("harris", &path);
+    let rep = run_job(&cfg, &dfs, &NativeExecutor, &spec, &registry, &JobHooks::default()).unwrap();
+    assert_eq!(rep.image_count, 3);
+    assert_eq!(rep.images.len(), 3);
+    assert!(rep.total_count() > 0);
+    assert!(rep.sim_seconds > cfg.cluster.job_startup);
+    assert!(rep.counter("tasks") >= 1);
+    // Mapper outputs landed in DFS (paper's step 5).
+    let files = dfs.namenode().list_files();
+    assert!(
+        files.iter().filter(|f| f.contains(".out/harris/")).count() == 3,
+        "missing mapper outputs: {files:?}"
+    );
+}
+
+#[test]
+fn transient_failures_are_retried_to_success() {
+    let cfg = tiny_cfg(2);
+    let (dfs, path) = setup(&cfg, 2);
+    let registry = Registry::new();
+    let spec = JobSpec::new("fast", &path);
+    // Every task's first attempt dies; retries succeed.
+    let hooks = JobHooks {
+        fail: Some(Box::new(|_task, attempt| attempt == 0)),
+    };
+    let rep = run_job(&cfg, &dfs, &NativeExecutor, &spec, &registry, &hooks).unwrap();
+    assert!(rep.counter("retries") >= rep.counter("tasks"));
+    assert_eq!(rep.image_count, 2);
+}
+
+#[test]
+fn permanent_failure_aborts_the_job() {
+    let mut cfg = tiny_cfg(2);
+    cfg.scheduler.max_attempts = 2;
+    let (dfs, path) = setup(&cfg, 1);
+    let registry = Registry::new();
+    let spec = JobSpec::new("harris", &path);
+    let hooks = JobHooks {
+        fail: Some(Box::new(|task, _attempt| task == 0)),
+    };
+    let err = run_job(&cfg, &dfs, &NativeExecutor, &spec, &registry, &hooks).unwrap_err();
+    assert!(err.to_string().contains("injected"), "{err}");
+}
+
+#[test]
+fn survives_datanode_death_with_replication() {
+    let cfg = tiny_cfg(4); // replication 3 (default) over 4 nodes
+    let (dfs, path) = setup(&cfg, 2);
+    dfs.kill_node(NodeId(1));
+    let registry = Registry::new();
+    let spec = JobSpec::new("harris", &path);
+    let rep = run_job(&cfg, &dfs, &NativeExecutor, &spec, &registry, &JobHooks::default()).unwrap();
+    assert_eq!(rep.image_count, 2);
+    assert!(rep.total_count() > 0);
+}
+
+#[test]
+fn locality_aware_scheduling_mostly_local() {
+    let cfg = tiny_cfg(4);
+    let (dfs, path) = setup(&cfg, 6);
+    let registry = Registry::new();
+    let mut spec = JobSpec::new("harris", &path);
+    spec.write_output = false;
+    let rep = run_job(&cfg, &dfs, &NativeExecutor, &spec, &registry, &JobHooks::default()).unwrap();
+    let local = rep.counter("data_local_tasks");
+    let remote = rep.counter("rack_remote_tasks");
+    assert!(
+        local >= remote,
+        "locality-aware scheduling placed {local} local vs {remote} remote"
+    );
+}
+
+#[test]
+fn census_invariant_across_node_counts() {
+    // The distributed census must be identical for any cluster shape —
+    // partitioning work cannot change what is detected.
+    let mut totals = Vec::new();
+    for nodes in [1usize, 2, 4] {
+        let cfg = tiny_cfg(nodes);
+        let (dfs, path) = setup(&cfg, 2);
+        let registry = Registry::new();
+        let mut spec = JobSpec::new("surf", &path);
+        spec.write_output = false;
+        let rep =
+            run_job(&cfg, &dfs, &NativeExecutor, &spec, &registry, &JobHooks::default()).unwrap();
+        totals.push(rep.total_count());
+    }
+    assert_eq!(totals[0], totals[1]);
+    assert_eq!(totals[1], totals[2]);
+}
+
+#[test]
+fn sim_time_shrinks_with_more_nodes() {
+    // Table 1's headline shape on a compute-heavy corpus: enough scenes
+    // that parallelism beats the fixed startup cost.
+    let mut times = Vec::new();
+    for nodes in [1usize, 2, 4] {
+        let mut cfg = tiny_cfg(nodes);
+        cfg.scene.width = 780;
+        cfg.scene.height = 780;
+        let (dfs, path) = setup(&cfg, 6);
+        let registry = Registry::new();
+        let mut spec = JobSpec::new("sift", &path); // the slow algorithm
+        spec.write_output = false;
+        let rep =
+            run_job(&cfg, &dfs, &NativeExecutor, &spec, &registry, &JobHooks::default()).unwrap();
+        times.push(rep.sim_seconds);
+    }
+    assert!(
+        times[0] > times[1] && times[1] > times[2],
+        "no scale-out: {times:?}"
+    );
+}
+
+/// A TileExecutor wrapper that stalls its first N tile calls, driving the
+/// speculation machinery end-to-end.
+struct StallingExecutor {
+    inner: NativeExecutor,
+    stalled_calls: AtomicU64,
+    stall_first_n: u64,
+}
+
+impl difet::coordinator::TileExecutor for StallingExecutor {
+    fn run_tile(
+        &self,
+        alg: &str,
+        tile: &[f32],
+        core: [i32; 4],
+    ) -> difet::Result<difet::runtime::TileFeatures> {
+        // Stall the first N tile calls seen process-wide: the task that
+        // picks them up becomes the straggler.
+        let n = self.stalled_calls.fetch_add(1, Ordering::Relaxed);
+        if n < self.stall_first_n {
+            std::thread::sleep(std::time::Duration::from_millis(120));
+        }
+        self.inner.run_tile(alg, tile, core)
+    }
+    fn label(&self) -> &'static str {
+        "stalling"
+    }
+}
+
+#[test]
+fn speculation_rescues_stragglers() {
+    let mut cfg = tiny_cfg(4);
+    cfg.scheduler.speculation = true;
+    cfg.scheduler.speculation_slowness = 0.95;
+    let (dfs, path) = setup(&cfg, 6);
+    let registry = Registry::new();
+    let mut spec = JobSpec::new("harris", &path);
+    spec.write_output = false;
+    let executor = StallingExecutor {
+        inner: NativeExecutor,
+        stalled_calls: AtomicU64::new(0),
+        stall_first_n: 2,
+    };
+    let rep = run_job(&cfg, &dfs, &executor, &spec, &registry, &JobHooks::default()).unwrap();
+    // The job must complete with the correct census regardless of whether
+    // the speculative copy or the straggler won each race.
+    assert_eq!(rep.image_count, 6);
+    assert!(rep.total_count() > 0);
+    // (speculative_launches may be 0 if the straggler finished first —
+    // the counter existing and the job being correct is the contract.)
+    let _ = rep.counter("speculative_launches");
+}
+
+#[test]
+fn registry_collects_tile_metrics() {
+    let cfg = tiny_cfg(2);
+    let (dfs, path) = setup(&cfg, 1);
+    let registry = Registry::new();
+    let mut spec = JobSpec::new("brief", &path);
+    spec.write_output = false;
+    run_job(&cfg, &dfs, &NativeExecutor, &spec, &registry, &JobHooks::default()).unwrap();
+    let snap = registry.histogram("tile_latency").snapshot();
+    assert!(snap.n > 0, "no tile latencies recorded");
+    assert!(snap.p50 > 0.0);
+    let rendered = registry.render();
+    assert!(rendered.contains("tiles_processed"));
+}
+
+#[test]
+fn concurrent_jobs_do_not_interfere() {
+    let cfg = tiny_cfg(2);
+    let (dfs, path) = setup(&cfg, 2);
+    let dfs = &dfs;
+    let cfg2 = &cfg;
+    let path = &path;
+    let results: Mutex<Vec<u64>> = Mutex::new(Vec::new());
+    std::thread::scope(|s| {
+        for _ in 0..2 {
+            s.spawn(|| {
+                let registry = Registry::new();
+                let mut spec = JobSpec::new("fast", path);
+                spec.write_output = false;
+                let rep = run_job(cfg2, dfs, &NativeExecutor, &spec, &registry, &JobHooks::default())
+                    .unwrap();
+                results.lock().unwrap().push(rep.total_count());
+            });
+        }
+    });
+    let r = results.into_inner().unwrap();
+    assert_eq!(r[0], r[1], "concurrent identical jobs diverged");
+}

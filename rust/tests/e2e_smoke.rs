@@ -1,0 +1,93 @@
+//! End-to-end smoke: the full three-layer stack (synthetic corpus → HIB →
+//! DFS → coordinator → PJRT-compiled Pallas/JAX artifacts → census) on a
+//! small workload.  Uses the PJRT engine when artifacts exist, else the
+//! native fallback — always runs, but asserts the executor label so CI
+//! logs show which path was exercised.
+
+use difet::config::Config;
+use difet::pipeline::{run_extraction, run_sequential, ExtractRequest};
+
+fn cfg(nodes: usize) -> Config {
+    let mut cfg = Config::new();
+    cfg.scene.width = 700;
+    cfg.scene.height = 700;
+    cfg.cluster.nodes = nodes;
+    cfg.cluster.slots_per_node = 2;
+    cfg.cluster.job_startup = 1.0;
+    cfg.storage.block_size = 2 << 20;
+    cfg.artifacts_dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    cfg
+}
+
+#[test]
+fn full_stack_all_algorithms() {
+    let cfg = cfg(2);
+    let req = ExtractRequest {
+        num_scenes: 2,
+        write_output: true,
+        ..Default::default()
+    };
+    let rep = run_extraction(&cfg, &req).expect("extraction");
+    eprintln!("executor: {}", rep.executor);
+    assert_eq!(rep.jobs.len(), 7);
+    for job in &rep.jobs {
+        assert_eq!(job.image_count, 2, "{}", job.algorithm);
+        assert!(job.total_count() > 0, "{}: empty census", job.algorithm);
+        assert!(job.sim_seconds > 0.0);
+    }
+    // Caps: Table 2's fingerprint rows.
+    assert_eq!(rep.job("shi_tomasi").unwrap().total_count(), 2 * 400);
+    assert_eq!(rep.job("orb").unwrap().total_count(), 2 * 500);
+    // Table-shape sanity: SIFT is the most expensive algorithm.
+    let sift = rep.job("sift").unwrap().compute_seconds;
+    for alg in ["harris", "fast", "orb"] {
+        let t = rep.job(alg).unwrap().compute_seconds;
+        assert!(sift > t, "SIFT ({sift:.2}s) not slower than {alg} ({t:.2}s)");
+    }
+    // Renderers produce both table blocks.
+    let t = rep.render_table();
+    assert!(t.contains("sift") && t.contains("executor"));
+    let c = rep.render_census();
+    assert!(c.contains("features"));
+}
+
+#[test]
+fn census_ordering_matches_paper_table2() {
+    // Table 2's per-algorithm ordering on the synthetic corpus:
+    //   FAST > Harris > SIFT-ish… the acceptance criterion from DESIGN.md:
+    //   FAST ≫ detectors; BRIEF sparse; Shi-Tomasi/ORB capped exactly.
+    let cfg = cfg(2);
+    let req = ExtractRequest {
+        num_scenes: 2,
+        write_output: false,
+        ..Default::default()
+    };
+    let rep = run_extraction(&cfg, &req).expect("extraction");
+    let count = |a: &str| rep.job(a).unwrap().total_count();
+    assert!(count("fast") > count("harris"), "FAST must dominate (Table 2)");
+    assert!(count("harris") > count("brief"), "BRIEF must be sparse");
+    assert_eq!(count("shi_tomasi"), 800);
+    assert_eq!(count("orb"), 1000);
+}
+
+#[test]
+fn sequential_baseline_matches_cluster_census() {
+    let cfg = cfg(4);
+    let req = ExtractRequest {
+        algorithms: vec!["surf".into(), "brief".into()],
+        num_scenes: 2,
+        write_output: false,
+        force_native: false,
+    };
+    let dist = run_extraction(&cfg, &req).unwrap();
+    let seq = run_sequential(&cfg, &req).unwrap();
+    for alg in &req.algorithms {
+        assert_eq!(
+            dist.job(alg).unwrap().total_count(),
+            seq.job(alg).unwrap().total_count(),
+            "{alg}"
+        );
+    }
+    // And the baseline pays no job startup.
+    assert!(seq.job("surf").unwrap().sim_seconds < dist.job("surf").unwrap().sim_seconds);
+}

@@ -1,0 +1,221 @@
+//! Integration: PJRT engine over real artifacts + native/PJRT parity.
+//!
+//! These tests need `make artifacts`; without it they print a notice and
+//! pass vacuously (CI runs them after the artifact build).
+
+use difet::coordinator::driver::{NativeExecutor, TileExecutor};
+use difet::features::GrayImage;
+use difet::imagery::tiler::{extract_tile_f32, TileIter};
+use difet::imagery::SceneGenerator;
+use difet::runtime::{artifacts_available, Engine};
+use difet::TILE;
+
+use std::path::{Path, PathBuf};
+
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn engine_or_skip() -> Option<Engine> {
+    let dir = artifacts_dir();
+    if !artifacts_available(&dir) {
+        eprintln!("SKIP: no artifacts at {dir:?}; run `make artifacts`");
+        return None;
+    }
+    Some(Engine::load(&dir).expect("engine load"))
+}
+
+/// A deterministic 512×512 test tile from the synthetic scene generator.
+fn test_tile(seed: u64) -> Vec<f32> {
+    let mut cfg = difet::config::SceneConfig::default();
+    cfg.width = TILE;
+    cfg.height = TILE;
+    cfg.seed = seed;
+    let scene = SceneGenerator::new(cfg).scene(0);
+    let tile = TileIter::new(TILE, TILE).next().unwrap();
+    extract_tile_f32(&scene.image, &tile)
+}
+
+const FULL: [i32; 4] = [0, TILE as i32, 0, TILE as i32];
+
+#[test]
+fn engine_loads_all_seven_algorithms() {
+    let Some(engine) = engine_or_skip() else { return };
+    for alg in difet::ALGORITHMS {
+        assert!(engine.has_algorithm(alg), "{alg} missing");
+    }
+    assert_eq!(engine.manifest().tile, TILE);
+}
+
+#[test]
+fn engine_extracts_from_a_real_tile() {
+    let Some(engine) = engine_or_skip() else { return };
+    let tile = test_tile(42);
+    for alg in difet::ALGORITHMS {
+        let out = engine.run(alg, &tile, FULL).expect(alg);
+        assert!(out.count > 0, "{alg}: no features in a structured scene");
+        assert!(!out.keypoints.is_empty(), "{alg}: no keypoints");
+        // Keypoints in range, strongest first.
+        for kp in &out.keypoints {
+            assert!((0..TILE as i32).contains(&kp.row), "{alg}: row {}", kp.row);
+            assert!((0..TILE as i32).contains(&kp.col), "{alg}: col {}", kp.col);
+        }
+        for w in out.keypoints.windows(2) {
+            assert!(w[0].score >= w[1].score - 1e-5, "{alg}: not sorted");
+        }
+        // Descriptor algorithms deliver descriptors for every keypoint.
+        match alg {
+            "sift" | "surf" | "brief" | "orb" => {
+                assert_eq!(out.descriptors.len(), out.keypoints.len(), "{alg}");
+            }
+            _ => assert_eq!(out.descriptors.len(), 0, "{alg}"),
+        }
+    }
+}
+
+#[test]
+fn engine_core_restriction_is_additive() {
+    let Some(engine) = engine_or_skip() else { return };
+    let tile = test_tile(7);
+    for alg in ["harris", "fast"] {
+        let full = engine.run(alg, &tile, FULL).unwrap();
+        let top = engine.run(alg, &tile, [0, 256, 0, TILE as i32]).unwrap();
+        let bottom = engine.run(alg, &tile, [256, TILE as i32, 0, TILE as i32]).unwrap();
+        assert_eq!(
+            top.count + bottom.count,
+            full.count,
+            "{alg}: core halves don't sum to whole"
+        );
+    }
+}
+
+#[test]
+fn engine_is_deterministic() {
+    let Some(engine) = engine_or_skip() else { return };
+    let tile = test_tile(3);
+    let a = engine.run("orb", &tile, FULL).unwrap();
+    let b = engine.run("orb", &tile, FULL).unwrap();
+    assert_eq!(a.count, b.count);
+    assert_eq!(a.keypoints, b.keypoints);
+    assert_eq!(a.descriptors, b.descriptors);
+}
+
+#[test]
+fn engine_runs_concurrently_from_many_threads() {
+    let Some(engine) = engine_or_skip() else { return };
+    let engine = std::sync::Arc::new(engine);
+    let tile = std::sync::Arc::new(test_tile(11));
+    let baseline = engine.run("harris", &tile, FULL).unwrap().count;
+    let handles: Vec<_> = (0..8)
+        .map(|_| {
+            let engine = engine.clone();
+            let tile = tile.clone();
+            std::thread::spawn(move || engine.run("harris", &tile, FULL).unwrap().count)
+        })
+        .collect();
+    for h in handles {
+        assert_eq!(h.join().unwrap(), baseline);
+    }
+}
+
+/// Regression: binary descriptors must carry real bits.  (xla_extension
+/// 0.5.1 silently corrupted the [256,2] constant pattern through the
+/// HLO-text round-trip, zeroing every BRIEF/ORB descriptor — fixed by
+/// passing the pattern as runtime operands; DESIGN.md §7.)
+#[test]
+fn binary_descriptors_are_nonzero() {
+    let Some(engine) = engine_or_skip() else { return };
+    let tile = test_tile(21);
+    for alg in ["brief", "orb"] {
+        let out = engine.run(alg, &tile, FULL).unwrap();
+        if out.keypoints.is_empty() {
+            continue;
+        }
+        let difet::features::Descriptors::Binary256(words) = &out.descriptors else {
+            panic!("{alg}: expected binary descriptors");
+        };
+        let nonzero: usize = words
+            .iter()
+            .map(|w| w.iter().filter(|x| **x != 0).count())
+            .sum();
+        assert!(nonzero > 0, "{alg}: all descriptor bits are zero");
+    }
+}
+
+/// Native (pure-Rust) and PJRT paths implement the same mathematics; their
+/// censuses must agree closely (float op-ordering differs, so thresholded
+/// counts can differ by a small margin — we allow 2%) and their keypoint
+/// sets must overlap heavily.
+#[test]
+fn native_pjrt_parity_on_census() {
+    let Some(engine) = engine_or_skip() else { return };
+    let native = NativeExecutor;
+    let tile = test_tile(99);
+    for alg in difet::ALGORITHMS {
+        let p = engine.run(alg, &tile, FULL).unwrap();
+        let n = native.run_tile(alg, &tile, FULL).unwrap();
+        let (lo, hi) = (p.count.min(n.count) as f64, p.count.max(n.count) as f64);
+        assert!(
+            hi == 0.0 || lo / hi > 0.98,
+            "{alg}: census disagreement pjrt={} native={}",
+            p.count,
+            n.count
+        );
+        // Keypoint overlap on the top-64: ≥80% shared within 1px.
+        let top = |kps: &[difet::features::Keypoint]| {
+            kps.iter()
+                .take(64)
+                .map(|k| (k.row, k.col))
+                .collect::<Vec<_>>()
+        };
+        let (tp, tn) = (top(&p.keypoints), top(&n.keypoints));
+        let hits = tp
+            .iter()
+            .filter(|(r, c)| {
+                tn.iter()
+                    .any(|(r2, c2)| (r - r2).abs() <= 1 && (c - c2).abs() <= 1)
+            })
+            .count();
+        assert!(
+            hits * 10 >= tp.len() * 8,
+            "{alg}: only {hits}/{} top keypoints shared",
+            tp.len()
+        );
+    }
+}
+
+/// Parity of parameters: the manifest records model.PARAMS; the Rust
+/// params module must match (guards threshold drift between the stacks).
+#[test]
+fn manifest_params_match_rust_constants() {
+    let Some(engine) = engine_or_skip() else { return };
+    let p = &engine.manifest().params;
+    use difet::features::params;
+    // model.PARAMS are Python floats; the Rust constants are f32 — compare
+    // at f32 resolution.
+    let close = |a: f64, b: f32| (a as f32 - b).abs() <= f32::EPSILON * b.abs().max(1.0);
+    assert!(close(p["fast_t"], params::FAST_T));
+    assert!(close(p["sift_contrast"], params::SIFT_CONTRAST));
+    assert!(close(p["sift_edge_r"], params::SIFT_EDGE_R));
+    assert!(close(p["surf_thresh"], params::SURF_THRESH));
+    assert!(close(p["brief_abs_thresh"], params::BRIEF_ABS_THRESH));
+    assert!(close(p["harris_rel_thresh"], params::HARRIS_REL_THRESH));
+    assert!(close(p["shi_tomasi_rel_thresh"], params::SHI_TOMASI_REL_THRESH));
+}
+
+/// Grayscale parity: the Rust BT.601 conversion must match ops.grayscale
+/// through the executable (flat tiles make the comparison exact).
+#[test]
+fn grayscale_parity_via_flat_tile_census() {
+    let Some(engine) = engine_or_skip() else { return };
+    // A flat tile must produce zero features through BOTH paths — if the
+    // grayscale weights disagreed, the Pallas pipeline would see structure.
+    let tile = vec![127.0f32; TILE * TILE * 4];
+    let native = NativeExecutor;
+    for alg in difet::ALGORITHMS {
+        assert_eq!(engine.run(alg, &tile, FULL).unwrap().count, 0, "{alg} pjrt");
+        assert_eq!(native.run_tile(alg, &tile, FULL).unwrap().count, 0, "{alg} native");
+    }
+    let g = GrayImage::from_tile_f32(&tile, TILE, TILE);
+    assert!((g.at(0, 0) - 127.0 / 255.0).abs() < 1e-5);
+}
