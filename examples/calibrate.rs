@@ -13,7 +13,7 @@ fn main() {
 
     // Shi-Tomasi response distribution (BRIEF detector).
     let st = harris::response(&g, harris::Mode::ShiTomasi);
-    let mut vals: Vec<f32> = st.data.clone(); vals.sort_by(|a,b| b.partial_cmp(a).unwrap());
+    let mut vals: Vec<f32> = st.data.clone(); vals.sort_by(|a,b| b.total_cmp(a));
     for q in [50usize, 200, 1000, 5000, 20000] {
         println!("shi-tomasi resp: top-{}th value = {:.5e}", q, vals[q]);
     }

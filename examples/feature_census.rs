@@ -19,6 +19,7 @@ fn main() -> difet::Result<()> {
         FlagSpec { name: "scenes", takes_value: true, help: "comma list of N (default 3,20)" },
         FlagSpec { name: "scene-size", takes_value: true, help: "scene edge px (default 1792)" },
         FlagSpec { name: "native", takes_value: false, help: "force pure-Rust executor" },
+        FlagSpec { name: "fused", takes_value: false, help: "one fused pass for all algorithms" },
     ];
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let p = ParsedArgs::parse(&argv, &specs, false).unwrap_or_else(|e| {
@@ -47,6 +48,7 @@ fn main() -> difet::Result<()> {
             num_scenes: n,
             write_output: false,
             force_native: p.has("native"),
+            fused: p.has("fused"),
             ..Default::default()
         };
         let rep = run_extraction(&cfg, &req)?;

@@ -1,0 +1,115 @@
+//! Bench: the 7-algorithm sweep, per-algorithm jobs vs the fused pass.
+//!
+//! Seven independent jobs read, decode, tile and gray-convert the HIB
+//! bundle seven times and recompute every shared detector intermediate
+//! (structure tensor ×4, FAST ring maps ×2, σ=2 smoothing ×2).  The
+//! fused job does each of those once.  This bench measures the
+//! wall-clock gap on the native executor and verifies the censuses are
+//! identical; the acceptance target is a ≥2× reduction for the full
+//! sweep (`DIFET_BENCH_SCENE_PX` / `DIFET_BENCH_N` scale the workload).
+
+use difet::config::Config;
+use difet::coordinator::driver::NativeExecutor;
+use difet::dfs::Dfs;
+use difet::pipeline::{ingest_corpus, run_jobs_on, run_sequential, ExtractRequest};
+use difet::util::bench::bench_once;
+use difet::util::fmt;
+
+fn main() {
+    let px: usize = std::env::var("DIFET_BENCH_SCENE_PX")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1152);
+    let n: usize = std::env::var("DIFET_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3);
+
+    let mut cfg = Config::new();
+    cfg.scene.width = px;
+    cfg.scene.height = px;
+    cfg.cluster.nodes = 2;
+    cfg.cluster.slots_per_node = 2;
+    cfg.artifacts_dir = "/nonexistent".into(); // native executor throughout
+
+    println!("== fused: {px}x{px} scenes, N={n}, all 7 algorithms, native executor ==");
+    let dfs = Dfs::new(
+        cfg.cluster.nodes,
+        cfg.storage.block_size,
+        cfg.cluster.replication,
+    );
+    let corpus = ingest_corpus(&cfg, &dfs, n, "/bench/fused.hib").expect("ingest");
+    println!(
+        "corpus: {} scenes, {} bundled\n",
+        corpus.scene_count,
+        fmt::bytes(corpus.bundle_bytes)
+    );
+
+    let req = |fused| ExtractRequest {
+        num_scenes: n,
+        write_output: false,
+        force_native: true,
+        fused,
+        ..Default::default()
+    };
+
+    // --- distributed: 7 jobs vs 1 fused pass over the same DFS ------------
+    let (solo, m_solo) = bench_once("seven per-algorithm MapReduce jobs", || {
+        run_jobs_on(&cfg, &dfs, &NativeExecutor, &req(false), corpus.clone()).expect("per-alg")
+    });
+    let (fused, m_fused) = bench_once("one fused MapReduce pass", || {
+        run_jobs_on(&cfg, &dfs, &NativeExecutor, &req(true), corpus.clone()).expect("fused")
+    });
+
+    // Censuses must be identical — the speedup is free, not approximate.
+    for alg in difet::ALGORITHMS {
+        let a = solo.job(alg).unwrap().total_count();
+        let b = fused.job(alg).unwrap().total_count();
+        assert_eq!(a, b, "{alg}: fused census {b} != per-algorithm {a}");
+    }
+
+    let speedup = m_solo.mean_secs / m_fused.mean_secs.max(1e-9);
+    println!("\ndistributed sweep: {:.2}x wall-clock reduction (7 jobs {} → fused {})",
+        speedup,
+        fmt::duration(m_solo.mean_secs),
+        fmt::duration(m_fused.mean_secs),
+    );
+    let sim_solo: f64 = solo.jobs.iter().map(|j| j.sim_seconds).sum();
+    let sim_fused = fused.jobs[0].sim_seconds;
+    println!(
+        "modeled cluster time: Σ per-alg sim {} → fused sim {} ({:.2}x)",
+        fmt::duration(sim_solo),
+        fmt::duration(sim_fused),
+        sim_solo / sim_fused.max(1e-9)
+    );
+
+    // --- sequential baseline: same comparison without the cluster ---------
+    let (seq_solo, m_seq_solo) = bench_once("sequential, per-algorithm", || {
+        run_sequential(&cfg, &req(false)).expect("seq")
+    });
+    let (seq_fused, m_seq_fused) = bench_once("sequential, fused", || {
+        run_sequential(&cfg, &req(true)).expect("seq fused")
+    });
+    for alg in difet::ALGORITHMS {
+        assert_eq!(
+            seq_solo.job(alg).unwrap().total_count(),
+            seq_fused.job(alg).unwrap().total_count(),
+            "{alg}: sequential census drift"
+        );
+    }
+    println!(
+        "sequential sweep:  {:.2}x wall-clock reduction ({} → {})",
+        m_seq_solo.mean_secs / m_seq_fused.mean_secs.max(1e-9),
+        fmt::duration(m_seq_solo.mean_secs),
+        fmt::duration(m_seq_fused.mean_secs),
+    );
+
+    println!(
+        "\nacceptance (≥2.0x distributed sweep): {}",
+        if speedup >= 2.0 {
+            "PASS"
+        } else {
+            "BELOW TARGET (SIFT's unshared pyramid dominates at this scene size)"
+        }
+    );
+}

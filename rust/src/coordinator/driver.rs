@@ -1,11 +1,18 @@
 //! The job driver ("jobtracker"): plan → schedule → execute → merge.
 //!
 //! One call to [`run_job`] is one MapReduce job of the paper: a feature
-//! extraction pass of one algorithm over one HIB bundle.  Real compute
-//! (PJRT tile executions) runs on real worker threads (one per map slot,
-//! `nodes × slots_per_node` total); disk/network time is *modeled* by
-//! [`crate::cluster::CostModel`] and accumulated per slot.  The reported
-//! job time is
+//! extraction pass of one algorithm over one HIB bundle.
+//! [`run_fused_job`] generalizes it to the paper's actual experiment —
+//! *several* algorithms in a single pass: the bundle is read, decoded,
+//! tiled and gray-converted once, shared detector intermediates are
+//! computed once per tile ([`crate::features::fused`]), and one census
+//! per algorithm comes out.  `run_job` is the single-algorithm case of
+//! the same engine.
+//!
+//! Real compute (tile executions) runs on real worker threads (one per
+//! map slot, `nodes × slots_per_node` total); disk/network time is
+//! *modeled* by [`crate::cluster::CostModel`] and accumulated per slot.
+//! The reported job time is
 //!
 //! ```text
 //! sim_seconds = job_startup + max_over_slots( Σ task_overhead
@@ -13,7 +20,8 @@
 //! ```
 //!
 //! which is the quantity comparable to the paper's Table 1 cells (see
-//! EXPERIMENTS.md for the measured-vs-modeled breakdown of every column).
+//! README §Reproducing the paper's tables for the measured-vs-modeled
+//! breakdown of every column).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -21,6 +29,7 @@ use std::sync::Mutex;
 use crate::cluster::CostModel;
 use crate::config::Config;
 use crate::dfs::{Dfs, NodeId};
+use crate::features::nms::by_score_desc;
 use crate::features::{self, Algorithm, GrayImage};
 use crate::hib::{self, BundleReader, RecordMeta};
 use crate::imagery::tiler::{extract_tile_f32, TileIter};
@@ -29,13 +38,28 @@ use crate::metrics::Registry;
 use crate::runtime::TileFeatures;
 use crate::util::{DifetError, Result, Stopwatch};
 
-use super::job::{JobReport, JobSpec, MapOutput};
+use super::job::{mapper_retention, FusedJobSpec, JobReport, JobSpec, MapOutput};
 use super::scheduler::{Assignment, Scheduler, TaskDescriptor, TaskHandle};
 
 /// Anything that can extract features from one tile: the PJRT engine in
 /// production, the pure-Rust baseline as hermetic fallback.
 pub trait TileExecutor: Sync {
     fn run_tile(&self, alg: &str, tile: &[f32], core: [i32; 4]) -> Result<TileFeatures>;
+
+    /// Run several algorithms over ONE tile, returning results in `algs`
+    /// order.  The default loops [`TileExecutor::run_tile`];
+    /// [`NativeExecutor`] overrides it with the fused
+    /// shared-intermediate pass, which must stay byte-identical to the
+    /// loop (asserted by `rust/tests/fused_parity.rs`).
+    fn run_tile_multi(
+        &self,
+        algs: &[&str],
+        tile: &[f32],
+        core: [i32; 4],
+    ) -> Result<Vec<TileFeatures>> {
+        algs.iter().map(|a| self.run_tile(a, tile, core)).collect()
+    }
+
     /// Executor label for reports ("pjrt" / "native").
     fn label(&self) -> &'static str;
 }
@@ -53,28 +77,54 @@ impl TileExecutor for crate::runtime::Engine {
 /// and as the sequential-baseline compute body.
 pub struct NativeExecutor;
 
+fn core_tuple(core: [i32; 4]) -> (usize, usize, usize, usize) {
+    (
+        core[0].max(0) as usize,
+        core[1].max(0) as usize,
+        core[2].max(0) as usize,
+        core[3].max(0) as usize,
+    )
+}
+
 impl TileExecutor for NativeExecutor {
     fn run_tile(&self, alg: &str, tile: &[f32], core: [i32; 4]) -> Result<TileFeatures> {
         let algorithm = Algorithm::parse(alg)?;
         let gray = GrayImage::from_tile_f32(tile, crate::TILE, crate::TILE);
         let cap = features::params::topk(alg);
-        let ex = features::extract(
-            algorithm,
-            &gray,
-            (
-                core[0].max(0) as usize,
-                core[1].max(0) as usize,
-                core[2].max(0) as usize,
-                core[3].max(0) as usize,
-            ),
-            cap,
-        );
+        let ex = features::extract(algorithm, &gray, core_tuple(core), cap);
         Ok(TileFeatures {
             count: ex.count,
             keypoints: ex.keypoints,
             descriptors: ex.descriptors,
         })
     }
+
+    /// Fused path: one grayscale conversion and one set of shared
+    /// intermediates (structure tensor, FAST ring maps, σ=2 smoothing)
+    /// feed every requested algorithm.
+    fn run_tile_multi(
+        &self,
+        algs: &[&str],
+        tile: &[f32],
+        core: [i32; 4],
+    ) -> Result<Vec<TileFeatures>> {
+        let parsed = algs
+            .iter()
+            .map(|a| Algorithm::parse(a))
+            .collect::<Result<Vec<Algorithm>>>()?;
+        let caps: Vec<usize> = algs.iter().map(|a| features::params::topk(a)).collect();
+        let gray = GrayImage::from_tile_f32(tile, crate::TILE, crate::TILE);
+        let extractions = features::fused::extract_multi(&parsed, &gray, core_tuple(core), &caps);
+        Ok(extractions
+            .into_iter()
+            .map(|ex| TileFeatures {
+                count: ex.count,
+                keypoints: ex.keypoints,
+                descriptors: ex.descriptors,
+            })
+            .collect())
+    }
+
     fn label(&self) -> &'static str {
         "native"
     }
@@ -97,6 +147,36 @@ pub fn run_job(
     registry: &Registry,
     hooks: &JobHooks,
 ) -> Result<JobReport> {
+    let fused: FusedJobSpec = spec.into();
+    let mut reports = run_fused_job(cfg, dfs, executor, &fused, registry, hooks)?;
+    reports
+        .pop()
+        .ok_or_else(|| DifetError::Job("fused engine returned no report".into()))
+}
+
+/// Run ONE MapReduce pass that extracts every algorithm in `spec`,
+/// sharing the split read, record decode, tiling and per-tile
+/// intermediates across them.  Returns one [`JobReport`] per algorithm
+/// (in `spec.algorithms` order); job-level quantities — `sim_seconds`,
+/// `wall_seconds`, `compute_seconds`, `io_seconds`, `counters` — are
+/// those of the shared pass and therefore identical across the reports.
+pub fn run_fused_job(
+    cfg: &Config,
+    dfs: &Dfs,
+    executor: &dyn TileExecutor,
+    spec: &FusedJobSpec,
+    registry: &Registry,
+    hooks: &JobHooks,
+) -> Result<Vec<JobReport>> {
+    if spec.algorithms.is_empty() {
+        return Ok(Vec::new());
+    }
+    if spec.algorithms.len() != spec.per_image_caps.len() {
+        return Err(DifetError::Config(
+            "fused job: one per-image cap per algorithm required".into(),
+        ));
+    }
+    let n_algs = spec.algorithms.len();
     let wall = Stopwatch::start();
     let cost = CostModel::new(&cfg.cluster);
 
@@ -136,7 +216,7 @@ pub fn run_job(
     let n_images = metas.len();
 
     let scheduler = Scheduler::new(tasks, &cfg.scheduler);
-    let outputs: Mutex<Vec<MapOutput>> = Mutex::new(Vec::new());
+    let outputs: Mutex<Vec<Vec<MapOutput>>> = Mutex::new(vec![Vec::new(); n_algs]);
     let compute_ns = AtomicU64::new(0);
     let io_ns = AtomicU64::new(0);
     let max_slot_ns = AtomicU64::new(0);
@@ -170,7 +250,12 @@ pub fn run_job(
                                         compute_ns.fetch_add(task_out.compute_ns, Ordering::Relaxed);
                                         io_ns.fetch_add(task_out.io_ns, Ordering::Relaxed);
                                         if scheduler.report_success(&handle) {
-                                            outputs.lock().unwrap().extend(task_out.outputs);
+                                            let mut merged = outputs.lock().unwrap();
+                                            for (dst, src) in
+                                                merged.iter_mut().zip(task_out.outputs)
+                                            {
+                                                dst.extend(src);
+                                            }
                                         }
                                     }
                                     Ok(None) => scheduler.report_cancelled(&handle),
@@ -190,19 +275,11 @@ pub fn run_job(
     }
 
     let outputs = outputs.into_inner().unwrap();
-    let images = super::shuffle::merge_image_outputs(
-        outputs,
-        spec.per_image_cap,
-        spec.report_keypoints,
-    );
-    if images.len() != n_images {
-        return Err(DifetError::Job(format!(
-            "merged {} images, bundle has {n_images}",
-            images.len()
-        )));
-    }
-
     let sim_seconds = cost.job_startup() + max_slot_ns.load(Ordering::Relaxed) as f64 * 1e-9;
+    let wall_seconds = wall.elapsed_secs();
+    let compute_seconds = compute_ns.load(Ordering::Relaxed) as f64 * 1e-9;
+    let io_seconds = io_ns.load(Ordering::Relaxed) as f64 * 1e-9;
+
     let mut counters = std::collections::BTreeMap::new();
     counters.insert("tasks".into(), n_tasks as u64);
     counters.insert(
@@ -219,22 +296,40 @@ pub fn run_job(
     );
     counters.insert("retries".into(), scheduler.retries.load(Ordering::Relaxed));
     counters.insert("tiles".into(), tiles_counter.get());
+    counters.insert("fused_algorithms".into(), n_algs as u64);
 
-    Ok(JobReport {
-        algorithm: spec.algorithm.clone(),
-        nodes: cfg.cluster.nodes,
-        image_count: n_images,
-        sim_seconds,
-        wall_seconds: wall.elapsed_secs(),
-        compute_seconds: compute_ns.load(Ordering::Relaxed) as f64 * 1e-9,
-        io_seconds: io_ns.load(Ordering::Relaxed) as f64 * 1e-9,
-        images,
-        counters,
-    })
+    let mut reports = Vec::with_capacity(n_algs);
+    for (i, alg_outputs) in outputs.into_iter().enumerate() {
+        let images = super::shuffle::merge_image_outputs(
+            alg_outputs,
+            spec.per_image_caps[i],
+            spec.report_keypoints,
+        );
+        if images.len() != n_images {
+            return Err(DifetError::Job(format!(
+                "{}: merged {} images, bundle has {n_images}",
+                spec.algorithms[i],
+                images.len()
+            )));
+        }
+        reports.push(JobReport {
+            algorithm: spec.algorithms[i].clone(),
+            nodes: cfg.cluster.nodes,
+            image_count: n_images,
+            sim_seconds,
+            wall_seconds,
+            compute_seconds,
+            io_seconds,
+            images,
+            counters: counters.clone(),
+        });
+    }
+    Ok(reports)
 }
 
 struct TaskOutcome {
-    outputs: Vec<MapOutput>,
+    /// Mapper outputs per algorithm (parallel to `FusedJobSpec::algorithms`).
+    outputs: Vec<Vec<MapOutput>>,
     /// Virtual time this task adds to its slot (overhead + io + compute).
     virtual_ns: u64,
     compute_ns: u64,
@@ -242,12 +337,13 @@ struct TaskOutcome {
 }
 
 /// The mapper body: split read → record decode → tile loop → aggregate.
+/// Input I/O happens ONCE regardless of how many algorithms are fused.
 #[allow(clippy::too_many_arguments)]
 fn map_task(
     cfg: &Config,
     dfs: &Dfs,
     executor: &dyn TileExecutor,
-    spec: &JobSpec,
+    spec: &FusedJobSpec,
     hooks: &JobHooks,
     cost: &CostModel,
     metas: &[RecordMeta],
@@ -274,7 +370,10 @@ fn map_task(
     let (bytes, stats) = dfs.read_range(&spec.bundle_path, desc.byte_start, desc.byte_end, node)?;
     io_secs += cost.split_input(stats.local_bytes, stats.remote_bytes);
 
-    let mut outputs = Vec::with_capacity(desc.last_record - desc.first_record);
+    let mut outputs: Vec<Vec<MapOutput>> = vec![
+        Vec::with_capacity(desc.last_record - desc.first_record);
+        spec.algorithms.len()
+    ];
     let total_records = (desc.last_record - desc.first_record).max(1);
 
     for (done, rec) in (desc.first_record..desc.last_record).enumerate() {
@@ -286,11 +385,9 @@ fn map_task(
 
         let (map_out, tile_compute_ns) = map_one_image(
             executor,
-            &spec.algorithm,
+            spec,
             image_id,
             &image,
-            spec.per_image_cap,
-            spec.report_keypoints,
             handle,
             tiles_counter,
             tile_hist,
@@ -301,15 +398,21 @@ fn map_task(
         compute_ns += tile_compute_ns;
 
         // --- output: the paper's mapper step 5 writes the annotated image
-        // back to HDFS.  We store the keypoint summary (real bytes) and
-        // model the cost of the image-sized write the paper performs.
+        // back to HDFS, once per algorithm (each census is its own
+        // artifact, exactly as seven independent jobs would leave).  We
+        // store the keypoint summary (real bytes) and model the cost of
+        // the image-sized write the paper performs.
         if spec.write_output {
-            let summary = serialize_output(&map_out);
-            let out_path = format!("{}.out/{}/{image_id}", spec.bundle_path, spec.algorithm);
-            dfs.write_file(&out_path, &summary, node)?;
-            io_secs += cost.hdfs_write(image.byte_len() as u64, cfg.cluster.replication);
+            for (alg, out) in spec.algorithms.iter().zip(&map_out) {
+                let summary = serialize_output(out);
+                let out_path = format!("{}.out/{alg}/{image_id}", spec.bundle_path);
+                dfs.write_file(&out_path, &summary, node)?;
+                io_secs += cost.hdfs_write(image.byte_len() as u64, cfg.cluster.replication);
+            }
         }
-        outputs.push(map_out);
+        for (dst, out) in outputs.iter_mut().zip(map_out) {
+            dst.push(out);
+        }
         handle.report_progress((done + 1) as f64 / total_records as f64);
     }
 
@@ -323,23 +426,28 @@ fn map_task(
     }))
 }
 
-/// Extract one image: tile it, run the executor per tile, merge.
-#[allow(clippy::too_many_arguments)]
+/// Extract one image: tile it, run the executor once per tile (all
+/// algorithms fused), merge per algorithm.  Returns one [`MapOutput`]
+/// per algorithm, in spec order.
 fn map_one_image(
     executor: &dyn TileExecutor,
-    algorithm: &str,
+    spec: &FusedJobSpec,
     image_id: u64,
     image: &Rgba8Image,
-    per_image_cap: Option<usize>,
-    report_keypoints: usize,
     handle: &TaskHandle,
     tiles_counter: &crate::metrics::Counter,
     tile_hist: &crate::metrics::Histogram,
-) -> Result<(Option<MapOutput>, u64)> {
-    let mut raw_count = 0u64;
-    let mut descriptor_count = 0u64;
-    let mut keypoints: Vec<crate::features::Keypoint> = Vec::new();
-    let keep = per_image_cap.unwrap_or(report_keypoints).max(report_keypoints);
+) -> Result<(Option<Vec<MapOutput>>, u64)> {
+    let n = spec.algorithms.len();
+    let alg_names: Vec<&str> = spec.algorithms.iter().map(|s| s.as_str()).collect();
+    let keeps: Vec<usize> = spec
+        .per_image_caps
+        .iter()
+        .map(|&cap| mapper_retention(cap, spec.report_keypoints))
+        .collect();
+    let mut raw_count = vec![0u64; n];
+    let mut descriptor_count = vec![0u64; n];
+    let mut keypoints: Vec<Vec<crate::features::Keypoint>> = vec![Vec::new(); n];
     let mut compute_ns = 0u64;
 
     for tile in TileIter::new(image.width, image.height) {
@@ -348,40 +456,44 @@ fn map_one_image(
         }
         let buf = extract_tile_f32(image, &tile);
         let t0 = std::time::Instant::now();
-        let feats = executor.run_tile(algorithm, &buf, tile.core_local())?;
+        let feats_multi = executor.run_tile_multi(&alg_names, &buf, tile.core_local())?;
         let dt = t0.elapsed();
         compute_ns += dt.as_nanos() as u64;
         tile_hist.observe(dt.as_secs_f64());
         tiles_counter.inc();
 
-        raw_count += feats.count;
-        descriptor_count += feats.descriptors.len() as u64;
-        for kp in feats.keypoints {
-            let (sr, sc) = tile.to_scene(kp.row, kp.col);
-            keypoints.push(crate::features::Keypoint {
-                row: sr as i32,
-                col: sc as i32,
-                score: kp.score,
-            });
-        }
-        // Keep the buffer bounded: re-rank and truncate when 4× over.
-        if keypoints.len() > keep * 4 {
-            keypoints.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
-            keypoints.truncate(keep);
+        for (i, feats) in feats_multi.into_iter().enumerate() {
+            raw_count[i] += feats.count;
+            descriptor_count[i] += feats.descriptors.len() as u64;
+            for kp in feats.keypoints {
+                let (sr, sc) = tile.to_scene(kp.row, kp.col);
+                keypoints[i].push(crate::features::Keypoint {
+                    row: sr as i32,
+                    col: sc as i32,
+                    score: kp.score,
+                });
+            }
+            // Keep the buffer bounded: re-rank and truncate when 4× over.
+            if keypoints[i].len() > keeps[i] * 4 {
+                keypoints[i].sort_by(by_score_desc);
+                keypoints[i].truncate(keeps[i]);
+            }
         }
     }
-    keypoints.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
-    keypoints.truncate(keep);
 
-    Ok((
-        Some(MapOutput {
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut kps = std::mem::take(&mut keypoints[i]);
+        kps.sort_by(by_score_desc);
+        kps.truncate(keeps[i]);
+        out.push(MapOutput {
             image_id,
-            raw_count,
-            keypoints,
-            descriptor_count,
-        }),
-        compute_ns,
-    ))
+            raw_count: raw_count[i],
+            keypoints: kps,
+            descriptor_count: descriptor_count[i],
+        });
+    }
+    Ok((Some(out), compute_ns))
 }
 
 /// Serialize a mapper output (the record written back to DFS).
@@ -406,4 +518,3 @@ fn serialize_output(out: &MapOutput) -> Vec<u8> {
     }
     buf
 }
-

@@ -4,6 +4,24 @@ use std::collections::BTreeMap;
 
 use crate::features::Keypoint;
 
+/// Default bound on keypoints retained per image in final reports —
+/// the single constant the distributed merge and the sequential baseline
+/// both derive their truncation from (they used to disagree).
+pub const DEFAULT_REPORT_KEYPOINTS: usize = 512;
+
+/// Keypoints a mapper holds per image while tiles stream in: enough to
+/// survive the final re-rank (`max` of the cap and the report bound).
+pub fn mapper_retention(per_image_cap: Option<usize>, report_keypoints: usize) -> usize {
+    per_image_cap.unwrap_or(report_keypoints).max(report_keypoints)
+}
+
+/// Keypoints retained in a final per-image census: the per-image cap when
+/// it binds, bounded by the report limit.  Shared by the shuffle merge
+/// and the sequential baseline so both paths keep identical lists.
+pub fn final_retention(per_image_cap: Option<usize>, report_keypoints: usize) -> usize {
+    per_image_cap.unwrap_or(usize::MAX).min(report_keypoints)
+}
+
 /// What to run: one algorithm over one HIB bundle in DFS.
 #[derive(Debug, Clone)]
 pub struct JobSpec {
@@ -27,8 +45,53 @@ impl JobSpec {
             algorithm: algorithm.to_string(),
             bundle_path: bundle_path.to_string(),
             per_image_cap: crate::per_image_cap(algorithm),
-            report_keypoints: 512,
+            report_keypoints: DEFAULT_REPORT_KEYPOINTS,
             write_output: true,
+        }
+    }
+}
+
+/// A fused job: several algorithms in ONE MapReduce pass over the bundle
+/// (the split is read, decoded, tiled and gray-converted once; shared
+/// detector intermediates are computed once per tile — see
+/// [`crate::features::fused`]).  Emits one census per algorithm.
+#[derive(Debug, Clone)]
+pub struct FusedJobSpec {
+    /// Algorithm names, each with its per-image cap (parallel vectors).
+    pub algorithms: Vec<String>,
+    pub per_image_caps: Vec<Option<usize>>,
+    /// DFS path of the input bundle.
+    pub bundle_path: String,
+    pub report_keypoints: usize,
+    pub write_output: bool,
+}
+
+impl FusedJobSpec {
+    /// Paper-default caps (`crate::per_image_cap`) for each algorithm.
+    pub fn new<S: AsRef<str>>(algorithms: &[S], bundle_path: &str) -> Self {
+        FusedJobSpec {
+            algorithms: algorithms.iter().map(|a| a.as_ref().to_string()).collect(),
+            per_image_caps: algorithms
+                .iter()
+                .map(|a| crate::per_image_cap(a.as_ref()))
+                .collect(),
+            bundle_path: bundle_path.to_string(),
+            report_keypoints: DEFAULT_REPORT_KEYPOINTS,
+            write_output: true,
+        }
+    }
+}
+
+impl From<&JobSpec> for FusedJobSpec {
+    /// A single-algorithm job is the degenerate fused job — `run_job` is
+    /// implemented through this equivalence.
+    fn from(spec: &JobSpec) -> Self {
+        FusedJobSpec {
+            algorithms: vec![spec.algorithm.clone()],
+            per_image_caps: vec![spec.per_image_cap],
+            bundle_path: spec.bundle_path.clone(),
+            report_keypoints: spec.report_keypoints,
+            write_output: spec.write_output,
         }
     }
 }
@@ -96,6 +159,30 @@ mod tests {
         assert_eq!(JobSpec::new("shi_tomasi", "/b").per_image_cap, Some(400));
         assert_eq!(JobSpec::new("orb", "/b").per_image_cap, Some(500));
         assert_eq!(JobSpec::new("harris", "/b").per_image_cap, None);
+    }
+
+    #[test]
+    fn fused_spec_mirrors_per_algorithm_caps() {
+        let f = FusedJobSpec::new(&["harris", "shi_tomasi", "orb"], "/b");
+        assert_eq!(f.per_image_caps, vec![None, Some(400), Some(500)]);
+        let single: FusedJobSpec = (&JobSpec::new("orb", "/b")).into();
+        assert_eq!(single.algorithms, vec!["orb".to_string()]);
+        assert_eq!(single.per_image_caps, vec![Some(500)]);
+        assert_eq!(single.report_keypoints, DEFAULT_REPORT_KEYPOINTS);
+    }
+
+    #[test]
+    fn retention_helpers_agree_on_paper_defaults() {
+        // Capped algorithms: both paths retain exactly the cap.
+        assert_eq!(final_retention(Some(400), 512), 400);
+        assert_eq!(mapper_retention(Some(400), 512), 512);
+        // Uncapped: both retain the report bound.
+        assert_eq!(final_retention(None, 512), 512);
+        assert_eq!(mapper_retention(None, 512), 512);
+        // Cap above the report bound: final retention is the report bound
+        // on BOTH paths (the divergence this helper fixed).
+        assert_eq!(final_retention(Some(600), 512), 512);
+        assert_eq!(mapper_retention(Some(600), 512), 600);
     }
 
     #[test]

@@ -24,7 +24,7 @@ pub mod job;
 pub mod scheduler;
 pub mod shuffle;
 
-pub use driver::{run_job, TileExecutor};
-pub use job::{ImageCensus, JobReport, JobSpec, MapOutput};
+pub use driver::{run_fused_job, run_job, TileExecutor};
+pub use job::{FusedJobSpec, ImageCensus, JobReport, JobSpec, MapOutput};
 pub use scheduler::{Scheduler, TaskDescriptor, TaskState};
 pub use shuffle::merge_image_outputs;

@@ -222,7 +222,7 @@ impl Scheduler {
         rates
             .iter()
             .filter(|(_, r)| *r < self.cfg.speculation_slowness * mean)
-            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .min_by(|a, b| a.1.total_cmp(&b.1))
             .map(|(tid, _)| *tid)
     }
 

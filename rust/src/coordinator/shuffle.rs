@@ -9,7 +9,9 @@
 
 use std::collections::BTreeMap;
 
-use super::job::{ImageCensus, MapOutput};
+use crate::features::nms::by_score_desc;
+
+use super::job::{final_retention, ImageCensus, MapOutput};
 
 /// Merge mapper outputs (one or more per image) into per-image censuses,
 /// applying the per-image cap and the report keypoint bound.
@@ -27,19 +29,12 @@ pub fn merge_image_outputs(
     by_image
         .into_iter()
         .map(|(image_id, (raw_count, mut kps))| {
-            kps.sort_by(|a, b| {
-                b.score
-                    .partial_cmp(&a.score)
-                    .unwrap_or(std::cmp::Ordering::Equal)
-                    .then(a.row.cmp(&b.row))
-                    .then(a.col.cmp(&b.col))
-            });
+            kps.sort_by(by_score_desc);
             let count = match per_image_cap {
                 Some(cap) => raw_count.min(cap as u64),
                 None => raw_count,
             };
-            let keep = per_image_cap.unwrap_or(usize::MAX).min(report_keypoints);
-            kps.truncate(keep);
+            kps.truncate(final_retention(per_image_cap, report_keypoints));
             ImageCensus {
                 image_id,
                 count,
@@ -110,6 +105,20 @@ mod tests {
         );
         let scores: Vec<f32> = merged[0].keypoints.iter().map(|k| k.score).collect();
         assert_eq!(scores, vec![0.9, 0.7, 0.5]);
+    }
+
+    #[test]
+    fn nan_scores_merge_without_panicking_and_rank_last() {
+        let merged = merge_image_outputs(
+            vec![out(0, 3, &[f32::NAN, 0.9, 0.2])],
+            None,
+            10,
+        );
+        let kps = &merged[0].keypoints;
+        assert_eq!(kps.len(), 3);
+        assert_eq!(kps[0].score, 0.9);
+        assert_eq!(kps[1].score, 0.2);
+        assert!(kps[2].score.is_nan(), "NaN must sort last");
     }
 
     #[test]

@@ -14,13 +14,29 @@ use super::nms::{absolute_threshold_mask, nms_inplace, select_topk};
 use super::params;
 use super::{Descriptors, Extraction, Keypoint};
 
-/// Full BRIEF pipeline.
-pub fn extract(gray: &GrayImage, core: (usize, usize, usize, usize), cap: usize) -> Extraction {
-    let resp = response(gray, Mode::ShiTomasi);
-    let mut mask = absolute_threshold_mask(&resp, params::BRIEF_ABS_THRESH);
-    nms_inplace(&resp, &mut mask, 1);
-    let (count, keypoints) = select_topk(&resp, &mask, core, cap);
-    let descriptors = describe(gray, &keypoints, None);
+/// Descriptor-sampling blur parameters (σ=2, 11 taps).
+pub const SMOOTH_SIGMA: f32 = 2.0;
+pub const SMOOTH_RADIUS: usize = 5;
+
+/// The σ=2 smoothed image BRIEF samples its comparisons from — shared
+/// between BRIEF and ORB by the fused pass.
+pub fn smoothed(gray: &GrayImage) -> GrayImage {
+    blur(gray, SMOOTH_SIGMA, SMOOTH_RADIUS)
+}
+
+/// Detection + description over precomputed intermediates (the
+/// Shi-Tomasi response and the σ=2 smoothed image); shared by the
+/// standalone and fused paths.
+pub fn extract_from_parts(
+    resp: &GrayImage,
+    smooth: &GrayImage,
+    core: (usize, usize, usize, usize),
+    cap: usize,
+) -> Extraction {
+    let mut mask = absolute_threshold_mask(resp, params::BRIEF_ABS_THRESH);
+    nms_inplace(resp, &mut mask, 1);
+    let (count, keypoints) = select_topk(resp, &mask, core, cap);
+    let descriptors = describe_smoothed(smooth, &keypoints, None);
     Extraction {
         count,
         keypoints,
@@ -28,12 +44,26 @@ pub fn extract(gray: &GrayImage, core: (usize, usize, usize, usize), cap: usize)
     }
 }
 
+/// Full BRIEF pipeline.
+pub fn extract(gray: &GrayImage, core: (usize, usize, usize, usize), cap: usize) -> Extraction {
+    extract_from_parts(&response(gray, Mode::ShiTomasi), &smoothed(gray), core, cap)
+}
+
 /// BRIEF-256 bits at the given keypoints; `angles` steers the pattern
 /// per-keypoint (ORB's rBRIEF).  Sampling is nearest-neighbour on a σ=2
 /// smoothed image, bit j of word w = comparison 32·w + j — the exact
 /// layout of `ops.pack_bits_u32`.
 pub fn describe(gray: &GrayImage, kps: &[Keypoint], angles: Option<&[f32]>) -> Descriptors {
-    let smooth = blur(gray, 2.0, 5);
+    describe_smoothed(&smoothed(gray), kps, angles)
+}
+
+/// [`describe`] over an already-smoothed image (`smooth` must be the
+/// [`smoothed`] transform of the source tile).
+pub fn describe_smoothed(
+    smooth: &GrayImage,
+    kps: &[Keypoint],
+    angles: Option<&[f32]>,
+) -> Descriptors {
     let mut out = Vec::with_capacity(kps.len());
     for (i, kp) in kps.iter().enumerate() {
         let (cos, sin) = match angles {

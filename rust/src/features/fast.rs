@@ -95,16 +95,29 @@ fn arc9_bits(bits16: u32) -> bool {
     acc & 0xFFFF != 0
 }
 
-/// Full FAST pipeline.
-pub fn extract(gray: &GrayImage, core: (usize, usize, usize, usize), cap: usize) -> Extraction {
-    let (mut mask, score) = maps(gray, params::FAST_T);
-    nms_inplace(&score, &mut mask, 1);
-    let (count, keypoints) = select_topk(&score, &mask, core, cap);
+/// Detection tail over precomputed ring maps (NMS → census + top-K);
+/// shared by the standalone and fused paths — the fused pass computes
+/// [`maps`] once, cloning the mask it also feeds to ORB, while the
+/// standalone path moves its mask in without a copy.
+pub fn extract_from_maps(
+    mut mask: Vec<bool>,
+    score: &GrayImage,
+    core: (usize, usize, usize, usize),
+    cap: usize,
+) -> Extraction {
+    nms_inplace(score, &mut mask, 1);
+    let (count, keypoints) = select_topk(score, &mask, core, cap);
     Extraction {
         count,
         keypoints,
         descriptors: Descriptors::None,
     }
+}
+
+/// Full FAST pipeline.
+pub fn extract(gray: &GrayImage, core: (usize, usize, usize, usize), cap: usize) -> Extraction {
+    let (mask, score) = maps(gray, params::FAST_T);
+    extract_from_maps(mask, &score, core, cap)
 }
 
 #[cfg(test)]

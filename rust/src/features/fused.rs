@@ -1,0 +1,198 @@
+//! Fused multi-algorithm extraction: compute shared per-tile
+//! intermediates once, run every requested algorithm against them.
+//!
+//! The paper's experiment runs seven extractors over the *same* corpus;
+//! per-algorithm jobs recompute everything from the RGBA tile seven
+//! times.  One pass over a grayscale tile actually feeds most of the
+//! detector family tree:
+//!
+//! ```text
+//! gray ─┬─ structure tensor (Sobel + Gaussian window) ─┬─ Harris response ─┬─ harris
+//!       │                                              │                   └─ orb (ranking)
+//!       │                                              └─ Shi-Tomasi resp ─┬─ shi_tomasi
+//!       │                                                                  └─ brief (detector)
+//!       ├─ FAST ring bit-planes ──────────────────────────┬─ fast
+//!       │                                                 └─ orb (corners)
+//!       ├─ σ=2 smoothing ────────────────────────────────┬─ brief (descriptors)
+//!       │                                                └─ orb  (descriptors)
+//!       ├─ sift (own DoG pyramid)
+//!       └─ surf (own Hessian scales)
+//! ```
+//!
+//! Every consumer runs the *same* tail code as its standalone
+//! `extract` (the standalone functions are themselves composed from the
+//! shared pieces), so fused output is byte-identical to the
+//! per-algorithm path — `fused_multi_matches_per_algorithm` below and
+//! `rust/tests/fused_parity.rs` hold that invariant.  Only intermediates
+//! an algorithm in `algs` actually needs are computed.
+
+use super::gray::GrayImage;
+use super::{brief, fast, harris, orb, params, sift, surf};
+use super::{Algorithm, Extraction};
+
+/// Which shared intermediates a requested algorithm set needs.
+struct Plan {
+    tensor: bool,
+    harris_resp: bool,
+    shi_resp: bool,
+    fast_maps: bool,
+    smooth: bool,
+}
+
+impl Plan {
+    fn for_algorithms(algs: &[Algorithm]) -> Plan {
+        let any = |f: &dyn Fn(Algorithm) -> bool| algs.iter().any(|&a| f(a));
+        let harris_resp = any(&|a| matches!(a, Algorithm::Harris | Algorithm::Orb));
+        let shi_resp = any(&|a| matches!(a, Algorithm::ShiTomasi | Algorithm::Brief));
+        Plan {
+            tensor: harris_resp || shi_resp,
+            harris_resp,
+            shi_resp,
+            fast_maps: any(&|a| matches!(a, Algorithm::Fast | Algorithm::Orb)),
+            smooth: any(&|a| matches!(a, Algorithm::Brief | Algorithm::Orb)),
+        }
+    }
+}
+
+/// Run all `algs` over one grayscale tile, sharing intermediates.
+/// `caps[i]` is the per-tile top-K bound for `algs[i]` (pass
+/// [`params::topk`] values to match the per-algorithm executor).
+/// Results are returned in `algs` order and are byte-identical to
+/// calling [`super::extract`] per algorithm.
+pub fn extract_multi(
+    algs: &[Algorithm],
+    gray: &GrayImage,
+    core: (usize, usize, usize, usize),
+    caps: &[usize],
+) -> Vec<Extraction> {
+    assert_eq!(algs.len(), caps.len(), "one cap per algorithm");
+    let plan = Plan::for_algorithms(algs);
+
+    // --- shared intermediates, each computed at most once -----------------
+    let tensor = plan.tensor.then(|| harris::structure_tensor(gray));
+    let harris_resp = plan.harris_resp.then(|| {
+        let (ixx, iyy, ixy) = tensor.as_ref().unwrap();
+        harris::response_from_tensor(ixx, iyy, ixy, harris::Mode::Harris)
+    });
+    let shi_resp = plan.shi_resp.then(|| {
+        let (ixx, iyy, ixy) = tensor.as_ref().unwrap();
+        harris::response_from_tensor(ixx, iyy, ixy, harris::Mode::ShiTomasi)
+    });
+    let fast_maps = plan.fast_maps.then(|| fast::maps(gray, params::FAST_T));
+    let smooth = plan.smooth.then(|| brief::smoothed(gray));
+
+    // --- per-algorithm tails over the shared pieces -----------------------
+    algs.iter()
+        .zip(caps)
+        .map(|(&alg, &cap)| match alg {
+            Algorithm::Harris => harris::extract_from_response(
+                harris_resp.as_ref().unwrap(),
+                harris::Mode::Harris,
+                core,
+                cap,
+            ),
+            Algorithm::ShiTomasi => harris::extract_from_response(
+                shi_resp.as_ref().unwrap(),
+                harris::Mode::ShiTomasi,
+                core,
+                cap,
+            ),
+            Algorithm::Sift => sift::extract(gray, core, cap),
+            Algorithm::Surf => surf::extract(gray, core, cap),
+            Algorithm::Fast => {
+                // The mask is shared with ORB, so this consumer clones.
+                let (mask, score) = fast_maps.as_ref().unwrap();
+                fast::extract_from_maps(mask.clone(), score, core, cap)
+            }
+            Algorithm::Brief => brief::extract_from_parts(
+                shi_resp.as_ref().unwrap(),
+                smooth.as_ref().unwrap(),
+                core,
+                cap,
+            ),
+            Algorithm::Orb => {
+                let (mask, _) = fast_maps.as_ref().unwrap();
+                orb::extract_from_parts(
+                    gray,
+                    mask.clone(),
+                    harris_resp.as_ref().unwrap(),
+                    smooth.as_ref().unwrap(),
+                    core,
+                    cap,
+                )
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn textured(n: usize, seed: u64) -> GrayImage {
+        // Blurred noise + a few bright squares: exercises corners, blobs
+        // and flat regions in one image.
+        let mut rng = Pcg32::seeded(seed);
+        let mut g = super::super::conv::blur(
+            &GrayImage::from_fn(n, n, |_, _| 0.3 * rng.next_f32()),
+            1.2,
+            4,
+        );
+        for (r0, c0) in [(10, 12), (40, 60), (70, 30)] {
+            for r in r0..(r0 + 14).min(n) {
+                for c in c0..(c0 + 14).min(n) {
+                    g.set(r, c, 1.0);
+                }
+            }
+        }
+        g
+    }
+
+    #[test]
+    fn fused_multi_matches_per_algorithm() {
+        let g = textured(96, 17);
+        let core = (8, 88, 8, 88);
+        let algs = Algorithm::ALL;
+        let caps: Vec<usize> = algs.iter().map(|a| params::topk(a.name())).collect();
+        let fused = extract_multi(&algs, &g, core, &caps);
+        for (i, &alg) in algs.iter().enumerate() {
+            let solo = super::super::extract(alg, &g, core, caps[i]);
+            assert_eq!(fused[i].count, solo.count, "{}: census", alg.name());
+            assert_eq!(fused[i].keypoints, solo.keypoints, "{}: keypoints", alg.name());
+            assert_eq!(
+                fused[i].descriptors, solo.descriptors,
+                "{}: descriptors",
+                alg.name()
+            );
+        }
+    }
+
+    #[test]
+    fn subset_requests_compute_only_what_they_need() {
+        // A FAST-only request must not require the tensor path (no panic
+        // on absent intermediates) and must match the standalone result.
+        let g = textured(64, 3);
+        let fused = extract_multi(&[Algorithm::Fast], &g, (0, 64, 0, 64), &[4096]);
+        let solo = fast::extract(&g, (0, 64, 0, 64), 4096);
+        assert_eq!(fused[0].count, solo.count);
+        assert_eq!(fused[0].keypoints, solo.keypoints);
+    }
+
+    #[test]
+    fn duplicate_algorithms_are_independent() {
+        let g = textured(64, 5);
+        let out = extract_multi(
+            &[Algorithm::Harris, Algorithm::Harris],
+            &g,
+            (0, 64, 0, 64),
+            &[100, 5],
+        );
+        assert_eq!(out[0].count, out[1].count);
+        assert!(out[1].keypoints.len() <= 5);
+        assert_eq!(
+            out[0].keypoints[..out[1].keypoints.len()],
+            out[1].keypoints[..]
+        );
+    }
+}

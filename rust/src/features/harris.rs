@@ -14,8 +14,11 @@ pub enum Mode {
     ShiTomasi,
 }
 
-/// Dense corner response map (full image size, clamped borders).
-pub fn response(gray: &GrayImage, mode: Mode) -> GrayImage {
+/// Windowed structure tensor `(Σw·Ix², Σw·Iy², Σw·IxIy)` — the
+/// intermediate both response flavours (and, through them, BRIEF's and
+/// ORB's detectors) derive from.  [`crate::features::fused`] computes it
+/// once per tile and feeds every consumer.
+pub fn structure_tensor(gray: &GrayImage) -> (GrayImage, GrayImage, GrayImage) {
     let (ix, iy) = sobel(gray);
     let (w, h) = (gray.width, gray.height);
     let mut ixx = GrayImage::new(w, h);
@@ -27,12 +30,18 @@ pub fn response(gray: &GrayImage, mode: Mode) -> GrayImage {
         ixy.data[i] = ix.data[i] * iy.data[i];
     }
     let taps = gaussian_taps(params::WINDOW_SIGMA, params::WINDOW_RADIUS);
-    let ixx = window(&ixx, &taps);
-    let iyy = window(&iyy, &taps);
-    let ixy = window(&ixy, &taps);
+    (window(&ixx, &taps), window(&iyy, &taps), window(&ixy, &taps))
+}
 
-    let mut resp = GrayImage::new(w, h);
-    for i in 0..w * h {
+/// Corner response from a precomputed structure tensor.
+pub fn response_from_tensor(
+    ixx: &GrayImage,
+    iyy: &GrayImage,
+    ixy: &GrayImage,
+    mode: Mode,
+) -> GrayImage {
+    let mut resp = GrayImage::new(ixx.width, ixx.height);
+    for i in 0..resp.data.len() {
         let (a, c, b) = (ixx.data[i], iyy.data[i], ixy.data[i]);
         resp.data[i] = match mode {
             Mode::Harris => {
@@ -50,11 +59,39 @@ pub fn response(gray: &GrayImage, mode: Mode) -> GrayImage {
     resp
 }
 
+/// Dense corner response map (full image size, clamped borders).
+pub fn response(gray: &GrayImage, mode: Mode) -> GrayImage {
+    let (ixx, iyy, ixy) = structure_tensor(gray);
+    response_from_tensor(&ixx, &iyy, &ixy, mode)
+}
+
 fn window(img: &GrayImage, taps: &[f32]) -> GrayImage {
     // §Perf: delegates to the shared row-buffered separable filter (the
     // original per-pixel clamped horizontal pass was the hot spot of the
     // whole native executor — see EXPERIMENTS.md §Perf).
     super::conv::separable(img, taps)
+}
+
+/// Detection tail over a precomputed response map (threshold → NMS →
+/// census + top-K); shared by the standalone and fused paths.
+pub fn extract_from_response(
+    resp: &GrayImage,
+    mode: Mode,
+    core: (usize, usize, usize, usize),
+    cap: usize,
+) -> Extraction {
+    let rel = match mode {
+        Mode::Harris => params::HARRIS_REL_THRESH,
+        Mode::ShiTomasi => params::SHI_TOMASI_REL_THRESH,
+    };
+    let mut mask = relative_threshold_mask(resp, rel);
+    nms_inplace(resp, &mut mask, 1);
+    let (count, keypoints) = select_topk(resp, &mask, core, cap);
+    Extraction {
+        count,
+        keypoints,
+        descriptors: super::Descriptors::None,
+    }
 }
 
 /// Full detection pipeline (threshold → NMS → census + top-K).
@@ -64,19 +101,7 @@ pub fn extract(
     cap: usize,
     mode: Mode,
 ) -> Extraction {
-    let resp = response(gray, mode);
-    let rel = match mode {
-        Mode::Harris => params::HARRIS_REL_THRESH,
-        Mode::ShiTomasi => params::SHI_TOMASI_REL_THRESH,
-    };
-    let mut mask = relative_threshold_mask(&resp, rel);
-    nms_inplace(&resp, &mut mask, 1);
-    let (count, keypoints) = select_topk(&resp, &mask, core, cap);
-    Extraction {
-        count,
-        keypoints,
-        descriptors: super::Descriptors::None,
-    }
+    extract_from_response(&response(gray, mode), mode, core, cap)
 }
 
 #[cfg(test)]

@@ -92,7 +92,9 @@ pub fn match_descriptors(query: &Descriptors, train: &Descriptors, ratio: f32) -
         }
         _ => Vec::new(),
     };
-    out.sort_by(|a, b| a.distance.partial_cmp(&b.distance).unwrap());
+    // total_cmp: a NaN distance (degenerate descriptors) sorts last
+    // instead of panicking the worker mid-job.
+    out.sort_by(|a, b| a.distance.total_cmp(&b.distance));
     out
 }
 

@@ -17,6 +17,7 @@ pub mod brief;
 mod brief_pattern;
 pub mod conv;
 pub mod fast;
+pub mod fused;
 pub mod gray;
 pub mod harris;
 pub mod matching;

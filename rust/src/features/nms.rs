@@ -3,6 +3,27 @@
 use super::gray::GrayImage;
 use super::Keypoint;
 
+/// NaN-safe descending-score comparator shared by every keypoint-ranking
+/// site (tile top-K, mapper aggregation, shuffle merge, sequential
+/// baseline): strongest first, NaN scores last (a poisoned score must
+/// never panic a worker or outrank real detections), ties broken on
+/// (row, col) so all paths retain identical lists.
+pub fn by_score_desc(a: &Keypoint, b: &Keypoint) -> std::cmp::Ordering {
+    nan_last(b.score)
+        .total_cmp(&nan_last(a.score))
+        .then(a.row.cmp(&b.row))
+        .then(a.col.cmp(&b.col))
+}
+
+#[inline]
+fn nan_last(score: f32) -> f32 {
+    if score.is_nan() {
+        f32::NEG_INFINITY
+    } else {
+        score
+    }
+}
+
 /// Strict 3×3 (radius-1) NMS: survivors equal the max of their window.
 /// `mask[i]` must already hold the thresholded candidacy.
 pub fn nms_inplace(resp: &GrayImage, mask: &mut [bool], radius: usize) {
@@ -63,13 +84,7 @@ pub fn select_topk(
     }
     // Strongest first; deterministic tie-break on coordinates mirrors
     // top_k's stable flat-index order.
-    kps.sort_by(|a, b| {
-        b.score
-            .partial_cmp(&a.score)
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(a.row.cmp(&b.row))
-            .then(a.col.cmp(&b.col))
-    });
+    kps.sort_by(by_score_desc);
     kps.truncate(cap);
     (count, kps)
 }
@@ -143,6 +158,21 @@ mod tests {
         assert!(kps
             .iter()
             .all(|k| (2..4).contains(&(k.row as usize)) && (3..6).contains(&(k.col as usize))));
+    }
+
+    #[test]
+    fn nan_scores_sort_last_without_panicking() {
+        let mut kps = vec![
+            Keypoint { row: 0, col: 0, score: f32::NAN },
+            Keypoint { row: 1, col: 0, score: 0.5 },
+            Keypoint { row: 2, col: 0, score: f32::INFINITY },
+            Keypoint { row: 3, col: 0, score: -1.0 },
+            Keypoint { row: 4, col: 0, score: f32::NAN },
+        ];
+        kps.sort_by(by_score_desc);
+        let rows: Vec<i32> = kps.iter().map(|k| k.row).collect();
+        assert_eq!(rows, vec![2, 1, 3, 0, 4]); // NaNs last, row tie-break
+        assert!(kps[3].score.is_nan() && kps[4].score.is_nan());
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! ORB: FAST-9 keypoints, Harris-ranked, intensity-centroid orientation,
 //! steered BRIEF-256 (rBRIEF) — sequential twin of `model.build_orb`.
 
-use super::brief::describe;
+use super::brief::{describe_smoothed, smoothed};
 use super::fast;
 use super::gray::GrayImage;
 use super::harris::{response, Mode};
@@ -28,11 +28,17 @@ pub fn orientation(gray: &GrayImage, kp: &Keypoint) -> f32 {
     m01.atan2(m10)
 }
 
-/// Full ORB pipeline.  The per-image 500-feature cap is applied at
-/// per-image aggregation by the coordinator, not per tile.
-pub fn extract(gray: &GrayImage, core: (usize, usize, usize, usize), cap: usize) -> Extraction {
-    let (corner_mask, _fast_score) = fast::maps(gray, params::FAST_T);
-    let harris = response(gray, Mode::Harris);
+/// ORB over precomputed intermediates: the FAST corner mask, the Harris
+/// response and the σ=2 smoothed image — the pieces the fused pass shares
+/// with FAST, Harris and BRIEF respectively.
+pub fn extract_from_parts(
+    gray: &GrayImage,
+    corner_mask: Vec<bool>,
+    harris: &GrayImage,
+    smooth: &GrayImage,
+    core: (usize, usize, usize, usize),
+    cap: usize,
+) -> Extraction {
     // Rank FAST corners by their Harris response (ORB §3.1).  NMS runs on
     // the *corner-masked* score map — non-corner neighbours must not
     // suppress a corner (matches `model.build_orb`, where non-corners are
@@ -50,12 +56,26 @@ pub fn extract(gray: &GrayImage, core: (usize, usize, usize, usize), cap: usize)
     let (count, keypoints) = select_topk(&score, &mask, core, cap);
 
     let angles: Vec<f32> = keypoints.iter().map(|k| orientation(gray, k)).collect();
-    let descriptors = describe(gray, &keypoints, Some(&angles));
+    let descriptors = describe_smoothed(smooth, &keypoints, Some(&angles));
     Extraction {
         count,
         keypoints,
         descriptors,
     }
+}
+
+/// Full ORB pipeline.  The per-image 500-feature cap is applied at
+/// per-image aggregation by the coordinator, not per tile.
+pub fn extract(gray: &GrayImage, core: (usize, usize, usize, usize), cap: usize) -> Extraction {
+    let (corner_mask, _fast_score) = fast::maps(gray, params::FAST_T);
+    extract_from_parts(
+        gray,
+        corner_mask,
+        &response(gray, Mode::Harris),
+        &smoothed(gray),
+        core,
+        cap,
+    )
 }
 
 #[cfg(test)]

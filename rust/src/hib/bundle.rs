@@ -59,7 +59,7 @@ impl BundleWriter {
     /// Append one image as a record.
     pub fn add_image(&mut self, image_id: u64, img: &Rgba8Image) -> Result<()> {
         let payload = codec::encode(self.codec, &img.data, self.level)?;
-        let crc = crc32fast::hash(&payload);
+        let crc = crate::util::crc32::hash(&payload);
         self.index.push(RecordMeta {
             offset: self.buf.len() as u64,
             image_id,
@@ -98,7 +98,7 @@ impl BundleWriter {
             LE::write_u32(&mut e[20..24], m.height);
             idx.extend_from_slice(&e);
         }
-        let idx_crc = crc32fast::hash(&idx);
+        let idx_crc = crate::util::crc32::hash(&idx);
         self.buf.extend_from_slice(&idx);
 
         let mut footer = [0u8; FOOTER_LEN];
@@ -138,7 +138,7 @@ impl<'a> BundleReader<'a> {
             return Err(corrupt("index offset out of range"));
         }
         let idx_bytes = &bytes[index_offset..idx_end];
-        if crc32fast::hash(idx_bytes) != idx_crc {
+        if crate::util::crc32::hash(idx_bytes) != idx_crc {
             return Err(corrupt("index crc mismatch"));
         }
         if idx_bytes.len() != 8 + count * IDX_ENTRY_LEN
@@ -194,7 +194,7 @@ impl<'a> BundleReader<'a> {
             return Err(corrupt(format!("record {i}: truncated payload")));
         }
         let payload = &self.bytes[pstart..pstart + payload_len];
-        if crc32fast::hash(payload) != crc {
+        if crate::util::crc32::hash(payload) != crc {
             return Err(corrupt(format!("record {i}: payload crc mismatch")));
         }
         let data = codec::decode(codec, payload, width * height * 4)?;
@@ -228,7 +228,7 @@ pub fn decode_record(bytes: &[u8]) -> Result<(u64, Rgba8Image, usize)> {
         return Err(corrupt("truncated record payload"));
     }
     let payload = &bytes[REC_HEADER_LEN..end];
-    if crc32fast::hash(payload) != crc {
+    if crate::util::crc32::hash(payload) != crc {
         return Err(corrupt("record payload crc mismatch"));
     }
     let data = codec::decode(codec, payload, width * height * 4)?;

@@ -3,20 +3,19 @@
 //! The paper's mappers decode JPEGs via HIPI's `ImageCodec`; our bundles
 //! store lossless RGBA (feature counts must be bit-reproducible, and JPEG
 //! artifacts would perturb detector thresholds), optionally
-//! deflate-compressed.  `cargo bench --bench ablations` measures the
+//! deflate-compressed ([`crate::util::flate`], the offline `flate2`
+//! substitute).  `cargo bench --bench ablations` measures the
 //! decode-bandwidth / bundle-size trade-off between the two, which is the
 //! knob `StorageConfig.compress` exposes.
 
-use std::io::{Read, Write};
-
-use crate::util::{DifetError, Result};
+use crate::util::{flate, DifetError, Result};
 
 /// Payload encoding of one bundle record.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Codec {
     /// Raw RGBA8 bytes.
     Raw = 0,
-    /// RFC 1951 deflate (flate2).
+    /// RFC 1951 deflate.
     Deflate = 1,
 }
 
@@ -40,14 +39,7 @@ impl Codec {
 pub fn encode(codec: Codec, rgba: &[u8], level: u32) -> Result<Vec<u8>> {
     match codec {
         Codec::Raw => Ok(rgba.to_vec()),
-        Codec::Deflate => {
-            let mut enc = flate2::write::DeflateEncoder::new(
-                Vec::with_capacity(rgba.len() / 2),
-                flate2::Compression::new(level),
-            );
-            enc.write_all(rgba)?;
-            Ok(enc.finish()?)
-        }
+        Codec::Deflate => Ok(flate::deflate(rgba, level)),
     }
 }
 
@@ -56,12 +48,8 @@ pub fn encode(codec: Codec, rgba: &[u8], level: u32) -> Result<Vec<u8>> {
 pub fn decode(codec: Codec, payload: &[u8], expected_len: usize) -> Result<Vec<u8>> {
     let out = match codec {
         Codec::Raw => payload.to_vec(),
-        Codec::Deflate => {
-            let mut dec = flate2::read::DeflateDecoder::new(payload);
-            let mut out = Vec::with_capacity(expected_len);
-            dec.read_to_end(&mut out)?;
-            out
-        }
+        Codec::Deflate => flate::inflate(payload, expected_len)
+            .map_err(DifetError::CorruptBundle)?,
     };
     if out.len() != expected_len {
         return Err(DifetError::CorruptBundle(format!(

@@ -29,6 +29,7 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "scene-size", takes_value: true, help: "scene edge px (default 1792; paper 7681)" },
         FlagSpec { name: "artifacts", takes_value: true, help: "artifacts dir (default artifacts)" },
         FlagSpec { name: "native", takes_value: false, help: "force the pure-Rust executor" },
+        FlagSpec { name: "fused", takes_value: false, help: "one fused pass for all algorithms" },
         FlagSpec { name: "no-write", takes_value: false, help: "skip mapper output writes" },
         FlagSpec { name: "bare", takes_value: false, help: "disable the I/O cost model" },
         FlagSpec { name: "verbose", takes_value: false, help: "print counters/metrics" },
@@ -93,6 +94,7 @@ fn build_request(p: &ParsedArgs) -> Result<ExtractRequest, String> {
     }
     req.write_output = !p.has("no-write");
     req.force_native = p.has("native");
+    req.fused = p.has("fused");
     Ok(req)
 }
 

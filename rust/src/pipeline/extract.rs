@@ -1,12 +1,22 @@
 //! Extraction runners: distributed (cluster sim) and sequential baseline.
+//!
+//! Both come in two flavours.  The per-algorithm mode mirrors the paper's
+//! setup literally: one MapReduce job per algorithm, each re-reading the
+//! bundle.  The *fused* mode ([`ExtractRequest::fused`]) runs the whole
+//! algorithm sweep in a single pass — one bundle read, one decode, one
+//! tiling, shared per-tile intermediates ([`crate::features::fused`]) —
+//! and produces byte-identical censuses (`benches/fused.rs` measures the
+//! wall-clock gap, `tests/fused_parity.rs` holds the equivalence).
 
 use std::path::Path;
 
 use crate::cluster::CostModel;
 use crate::config::Config;
 use crate::coordinator::driver::{JobHooks, NativeExecutor, TileExecutor};
-use crate::coordinator::{run_job, JobReport, JobSpec};
+use crate::coordinator::job::{final_retention, DEFAULT_REPORT_KEYPOINTS};
+use crate::coordinator::{run_fused_job, run_job, FusedJobSpec, JobReport, JobSpec};
 use crate::dfs::Dfs;
+use crate::features::nms::by_score_desc;
 use crate::imagery::tiler::{extract_tile_f32, TileIter};
 use crate::imagery::SceneGenerator;
 use crate::metrics::Registry;
@@ -24,6 +34,9 @@ pub struct ExtractRequest {
     pub write_output: bool,
     /// Force the native executor even when artifacts exist.
     pub force_native: bool,
+    /// Run all algorithms in ONE fused pass over the corpus instead of
+    /// one job per algorithm (same censuses, one bundle read).
+    pub fused: bool,
 }
 
 impl Default for ExtractRequest {
@@ -33,6 +46,7 @@ impl Default for ExtractRequest {
             num_scenes: 3,
             write_output: true,
             force_native: false,
+            fused: false,
         }
     }
 }
@@ -61,19 +75,28 @@ impl ExtractionReport {
     }
 }
 
-/// Pick the executor: PJRT engine when artifacts exist, else native.
+/// Pick the executor: PJRT engine when artifacts exist and load, else
+/// native.  A failing engine load (e.g. a build without the `pjrt`
+/// feature finding leftover artifacts) degrades to the native executor
+/// with a warning rather than aborting the run.
 pub fn make_executor(cfg: &Config, req: &ExtractRequest) -> Result<Box<dyn TileExecutor>> {
     let dir = Path::new(&cfg.artifacts_dir);
     if !req.force_native && artifacts_available(dir) {
         let subset: Vec<&str> = req.algorithms.iter().map(|s| s.as_str()).collect();
-        Ok(Box::new(Engine::load_subset(dir, Some(&subset))?))
-    } else {
-        Ok(Box::new(NativeExecutor))
+        match Engine::load_subset(dir, Some(&subset)) {
+            Ok(engine) => return Ok(Box::new(engine)),
+            Err(e) => eprintln!(
+                "warning: artifacts at {dir:?} but PJRT engine unavailable ({e}); \
+                 falling back to the native executor"
+            ),
+        }
     }
+    Ok(Box::new(NativeExecutor))
 }
 
-/// Full distributed run: ingest a corpus, then one MapReduce job per
-/// algorithm on the simulated cluster described by `cfg.cluster`.
+/// Full distributed run: ingest a corpus, then either one MapReduce job
+/// per algorithm or (fused) a single shared pass, on the simulated
+/// cluster described by `cfg.cluster`.
 pub fn run_extraction(cfg: &Config, req: &ExtractRequest) -> Result<ExtractionReport> {
     cfg.validate()?;
     let dfs = Dfs::new(
@@ -94,14 +117,22 @@ pub fn run_jobs_on(
     req: &ExtractRequest,
     corpus: super::ingest::CorpusInfo,
 ) -> Result<ExtractionReport> {
-    let mut jobs = Vec::new();
-    for alg in &req.algorithms {
+    let jobs = if req.fused {
         let registry = Registry::new();
-        let mut spec = JobSpec::new(alg, &corpus.bundle_path);
+        let mut spec = FusedJobSpec::new(&req.algorithms, &corpus.bundle_path);
         spec.write_output = req.write_output;
-        let report = run_job(cfg, dfs, executor, &spec, &registry, &JobHooks::default())?;
-        jobs.push(report);
-    }
+        run_fused_job(cfg, dfs, executor, &spec, &registry, &JobHooks::default())?
+    } else {
+        let mut jobs = Vec::new();
+        for alg in &req.algorithms {
+            let registry = Registry::new();
+            let mut spec = JobSpec::new(alg, &corpus.bundle_path);
+            spec.write_output = req.write_output;
+            let report = run_job(cfg, dfs, executor, &spec, &registry, &JobHooks::default())?;
+            jobs.push(report);
+        }
+        jobs
+    };
     Ok(ExtractionReport {
         jobs,
         executor: executor.label(),
@@ -111,7 +142,10 @@ pub fn run_jobs_on(
 
 /// The paper's "One node (Matlab)" column: the same algorithms run
 /// sequentially on one machine — no Hadoop startup, no task scheduling,
-/// no replication; just a local disk read per scene plus compute.
+/// no replication; just a local disk read per scene plus compute.  In
+/// fused mode the sweep makes ONE pass per scene (scenes are read and
+/// tiled once, shared intermediates computed once per tile); the
+/// per-algorithm timing columns then all report the shared sweep time.
 pub fn run_sequential(cfg: &Config, req: &ExtractRequest) -> Result<ExtractionReport> {
     cfg.validate()?;
     let executor = make_executor(cfg, req)?;
@@ -122,55 +156,60 @@ pub fn run_sequential(cfg: &Config, req: &ExtractRequest) -> Result<ExtractionRe
     let scenes: Vec<_> = (0..req.num_scenes as u64).map(|i| gen.scene(i)).collect();
     let raw_bytes: u64 = scenes.iter().map(|s| s.image.byte_len() as u64).sum();
 
-    let mut jobs = Vec::new();
-    for alg in &req.algorithms {
-        let wall = Stopwatch::start();
-        let mut compute_ns = 0u64;
-        let mut io_secs = 0.0;
-        let cap = crate::per_image_cap(alg);
-        let mut images = Vec::new();
-        for scene in &scenes {
-            io_secs += cost.disk_read(scene.image.byte_len() as u64);
-            let mut raw_count = 0u64;
-            let mut keypoints = Vec::new();
-            for tile in TileIter::new(scene.image.width, scene.image.height) {
-                let buf = extract_tile_f32(&scene.image, &tile);
-                let t0 = std::time::Instant::now();
-                let feats = executor.run_tile(alg, &buf, tile.core_local())?;
-                compute_ns += t0.elapsed().as_nanos() as u64;
-                raw_count += feats.count;
-                for kp in feats.keypoints {
-                    let (r, c) = tile.to_scene(kp.row, kp.col);
-                    keypoints.push(crate::features::Keypoint {
-                        row: r as i32,
-                        col: c as i32,
-                        score: kp.score,
-                    });
+    let jobs = if req.fused {
+        run_sequential_fused(&cost, executor.as_ref(), req, &scenes)?
+    } else {
+        let mut jobs = Vec::new();
+        for alg in &req.algorithms {
+            let wall = Stopwatch::start();
+            let mut compute_ns = 0u64;
+            let mut io_secs = 0.0;
+            let cap = crate::per_image_cap(alg);
+            let mut images = Vec::new();
+            for scene in &scenes {
+                io_secs += cost.disk_read(scene.image.byte_len() as u64);
+                let mut raw_count = 0u64;
+                let mut keypoints = Vec::new();
+                for tile in TileIter::new(scene.image.width, scene.image.height) {
+                    let buf = extract_tile_f32(&scene.image, &tile);
+                    let t0 = std::time::Instant::now();
+                    let feats = executor.run_tile(alg, &buf, tile.core_local())?;
+                    compute_ns += t0.elapsed().as_nanos() as u64;
+                    raw_count += feats.count;
+                    for kp in feats.keypoints {
+                        let (r, c) = tile.to_scene(kp.row, kp.col);
+                        keypoints.push(crate::features::Keypoint {
+                            row: r as i32,
+                            col: c as i32,
+                            score: kp.score,
+                        });
+                    }
                 }
+                keypoints.sort_by(by_score_desc);
+                keypoints.truncate(final_retention(cap, DEFAULT_REPORT_KEYPOINTS));
+                let count = cap.map_or(raw_count, |c| raw_count.min(c as u64));
+                images.push(crate::coordinator::ImageCensus {
+                    image_id: scene.id,
+                    count,
+                    raw_count,
+                    keypoints,
+                });
             }
-            keypoints.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
-            keypoints.truncate(cap.unwrap_or(512));
-            let count = cap.map_or(raw_count, |c| raw_count.min(c as u64));
-            images.push(crate::coordinator::ImageCensus {
-                image_id: scene.id,
-                count,
-                raw_count,
-                keypoints,
+            let compute_seconds = compute_ns as f64 * 1e-9;
+            jobs.push(JobReport {
+                algorithm: alg.clone(),
+                nodes: 1,
+                image_count: req.num_scenes,
+                sim_seconds: io_secs + compute_seconds,
+                wall_seconds: wall.elapsed_secs(),
+                compute_seconds,
+                io_seconds: io_secs,
+                images,
+                counters: Default::default(),
             });
         }
-        let compute_seconds = compute_ns as f64 * 1e-9;
-        jobs.push(JobReport {
-            algorithm: alg.clone(),
-            nodes: 1,
-            image_count: req.num_scenes,
-            sim_seconds: io_secs + compute_seconds,
-            wall_seconds: wall.elapsed_secs(),
-            compute_seconds,
-            io_seconds: io_secs,
-            images,
-            counters: Default::default(),
-        });
-    }
+        jobs
+    };
 
     Ok(ExtractionReport {
         jobs,
@@ -183,6 +222,78 @@ pub fn run_sequential(cfg: &Config, req: &ExtractRequest) -> Result<ExtractionRe
             ingest_seconds: 0.0,
         },
     })
+}
+
+/// Fused sequential sweep: one pass over the scenes for all algorithms.
+fn run_sequential_fused(
+    cost: &CostModel,
+    executor: &dyn TileExecutor,
+    req: &ExtractRequest,
+    scenes: &[crate::imagery::Scene],
+) -> Result<Vec<JobReport>> {
+    let n = req.algorithms.len();
+    let alg_names: Vec<&str> = req.algorithms.iter().map(|s| s.as_str()).collect();
+    let caps: Vec<Option<usize>> = req.algorithms.iter().map(|a| crate::per_image_cap(a)).collect();
+
+    let wall = Stopwatch::start();
+    let mut compute_ns = 0u64;
+    let mut io_secs = 0.0;
+    let mut images: Vec<Vec<crate::coordinator::ImageCensus>> = vec![Vec::new(); n];
+
+    for scene in scenes {
+        // The scene is read from local disk ONCE for the whole sweep.
+        io_secs += cost.disk_read(scene.image.byte_len() as u64);
+        let mut raw_count = vec![0u64; n];
+        let mut keypoints: Vec<Vec<crate::features::Keypoint>> = vec![Vec::new(); n];
+        for tile in TileIter::new(scene.image.width, scene.image.height) {
+            let buf = extract_tile_f32(&scene.image, &tile);
+            let t0 = std::time::Instant::now();
+            let feats_multi = executor.run_tile_multi(&alg_names, &buf, tile.core_local())?;
+            compute_ns += t0.elapsed().as_nanos() as u64;
+            for (i, feats) in feats_multi.into_iter().enumerate() {
+                raw_count[i] += feats.count;
+                for kp in feats.keypoints {
+                    let (r, c) = tile.to_scene(kp.row, kp.col);
+                    keypoints[i].push(crate::features::Keypoint {
+                        row: r as i32,
+                        col: c as i32,
+                        score: kp.score,
+                    });
+                }
+            }
+        }
+        for i in 0..n {
+            let mut kps = std::mem::take(&mut keypoints[i]);
+            kps.sort_by(by_score_desc);
+            kps.truncate(final_retention(caps[i], DEFAULT_REPORT_KEYPOINTS));
+            let count = caps[i].map_or(raw_count[i], |c| raw_count[i].min(c as u64));
+            images[i].push(crate::coordinator::ImageCensus {
+                image_id: scene.id,
+                count,
+                raw_count: raw_count[i],
+                keypoints: kps,
+            });
+        }
+    }
+
+    let compute_seconds = compute_ns as f64 * 1e-9;
+    let wall_seconds = wall.elapsed_secs();
+    Ok(req
+        .algorithms
+        .iter()
+        .zip(images)
+        .map(|(alg, images)| JobReport {
+            algorithm: alg.clone(),
+            nodes: 1,
+            image_count: req.num_scenes,
+            sim_seconds: io_secs + compute_seconds,
+            wall_seconds,
+            compute_seconds,
+            io_seconds: io_secs,
+            images,
+            counters: Default::default(),
+        })
+        .collect())
 }
 
 #[cfg(test)]
@@ -208,38 +319,52 @@ mod tests {
             num_scenes: 2,
             write_output: true,
             force_native: true,
+            fused: false,
         };
         let dist = run_extraction(&cfg, &req).unwrap();
         let seq = run_sequential(&cfg, &req).unwrap();
+        // Three-way: the fused pass must agree with both legacy paths.
+        let fused_req = ExtractRequest { fused: true, ..req.clone() };
+        let fused = run_extraction(&cfg, &fused_req).unwrap();
         for alg in &req.algorithms {
             let d = dist.job(alg).unwrap();
             let s = seq.job(alg).unwrap();
+            let f = fused.job(alg).unwrap();
             assert_eq!(
                 d.total_count(),
                 s.total_count(),
                 "{alg}: distributed census != sequential census"
             );
+            assert_eq!(
+                d.total_count(),
+                f.total_count(),
+                "{alg}: fused census != per-algorithm census"
+            );
             assert_eq!(d.image_count, 2);
+            assert_eq!(f.image_count, 2);
         }
     }
 
     #[test]
     fn per_image_caps_enforced_end_to_end() {
         let cfg = tiny_cfg();
-        let req = ExtractRequest {
-            algorithms: vec!["shi_tomasi".into()],
-            num_scenes: 2,
-            write_output: false,
-            force_native: true,
-        };
-        let rep = run_extraction(&cfg, &req).unwrap();
-        let job = rep.job("shi_tomasi").unwrap();
-        for img in &job.images {
-            assert!(img.count <= 400, "image {} census {}", img.image_id, img.count);
-            assert!(img.raw_count >= img.count);
+        for fused in [false, true] {
+            let req = ExtractRequest {
+                algorithms: vec!["shi_tomasi".into()],
+                num_scenes: 2,
+                write_output: false,
+                force_native: true,
+                fused,
+            };
+            let rep = run_extraction(&cfg, &req).unwrap();
+            let job = rep.job("shi_tomasi").unwrap();
+            for img in &job.images {
+                assert!(img.count <= 400, "image {} census {}", img.image_id, img.count);
+                assert!(img.raw_count >= img.count);
+            }
+            // Synthetic scenes are corner-rich: the cap binds exactly.
+            assert_eq!(job.total_count(), 2 * 400, "fused={fused}");
         }
-        // Synthetic scenes are corner-rich: the cap binds exactly.
-        assert_eq!(job.total_count(), 2 * 400);
     }
 
     #[test]
@@ -250,9 +375,32 @@ mod tests {
             num_scenes: n,
             write_output: false,
             force_native: true,
+            fused: false,
         };
         let t1 = run_extraction(&cfg, &mk(1)).unwrap().jobs[0].sim_seconds;
         let t4 = run_extraction(&cfg, &mk(4)).unwrap().jobs[0].sim_seconds;
         assert!(t4 > t1, "t4={t4} !> t1={t1}");
+    }
+
+    #[test]
+    fn fused_sequential_matches_per_algorithm_sequential() {
+        let cfg = tiny_cfg();
+        let req = ExtractRequest {
+            algorithms: vec!["harris".into(), "orb".into()],
+            num_scenes: 1,
+            write_output: false,
+            force_native: true,
+            fused: false,
+        };
+        let solo = run_sequential(&cfg, &req).unwrap();
+        let fused = run_sequential(&cfg, &ExtractRequest { fused: true, ..req.clone() }).unwrap();
+        for alg in &req.algorithms {
+            let a = solo.job(alg).unwrap();
+            let b = fused.job(alg).unwrap();
+            assert_eq!(a.total_count(), b.total_count(), "{alg}");
+            for (ia, ib) in a.images.iter().zip(&b.images) {
+                assert_eq!(ia.keypoints, ib.keypoints, "{alg}: retained keypoints differ");
+            }
+        }
     }
 }

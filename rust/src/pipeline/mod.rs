@@ -15,6 +15,6 @@ pub mod extract;
 pub mod ingest;
 pub mod report;
 
-pub use extract::{run_extraction, run_sequential, ExtractRequest, ExtractionReport};
+pub use extract::{run_extraction, run_jobs_on, run_sequential, ExtractRequest, ExtractionReport};
 pub use ingest::{ingest_corpus, CorpusInfo};
 

@@ -7,27 +7,15 @@
 //! traits because its wrappers hold raw pointers — [`Shared`] re-asserts
 //! them with that safety argument.  The engine is the single hottest
 //! object in the system; `benches/hotpath.rs` tracks its per-tile latency.
-
-use std::collections::BTreeMap;
-use std::path::Path;
-use std::sync::Mutex;
+//!
+//! The `xla` crate is not in the offline registry, so everything touching
+//! it is gated behind the `pjrt` cargo feature (see README §PJRT
+//! artifacts).  Without the feature a stub [`Engine`] whose `load` always
+//! errors keeps every caller compiling; the pipeline then runs on the
+//! pure-Rust [`crate::features`] executor, exactly as it does when
+//! `artifacts/` is absent.
 
 use crate::features::{Descriptors, Keypoint};
-use crate::util::{DifetError, Result};
-
-use super::manifest::{AlgorithmSpec, Dtype, Manifest};
-
-/// `unsafe Send+Sync` wrapper — see module docs for the safety argument:
-/// PJRT clients/executables are internally synchronized, and we only ever
-/// call `execute` + literal conversions through `&self`.
-struct Shared<T>(T);
-unsafe impl<T> Send for Shared<T> {}
-unsafe impl<T> Sync for Shared<T> {}
-
-struct LoadedAlg {
-    spec: AlgorithmSpec,
-    exe: Shared<xla::PjRtLoadedExecutable>,
-}
 
 /// Features extracted from one tile by one algorithm.
 #[derive(Debug, Clone)]
@@ -39,193 +27,268 @@ pub struct TileFeatures {
     pub descriptors: Descriptors,
 }
 
-/// The compiled-executable registry.
-pub struct Engine {
-    #[allow(dead_code)]
-    client: Shared<xla::PjRtClient>,
-    algs: BTreeMap<String, LoadedAlg>,
-    manifest: Manifest,
-    /// PJRT literal construction isn't reentrant-cheap; serialize compiles
-    /// only (execution is lock-free).
-    compile_lock: Mutex<()>,
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use std::path::Path;
+
+    use super::TileFeatures;
+    use crate::runtime::manifest::Manifest;
+    use crate::util::{DifetError, Result};
+
+    /// Build-without-`pjrt` stand-in: loading always fails, so callers
+    /// fall back to the native executor (the same path taken when no
+    /// artifacts exist).
+    pub struct Engine {
+        manifest: Manifest,
+    }
+
+    impl Engine {
+        pub fn load(dir: &Path) -> Result<Engine> {
+            Self::load_subset(dir, None)
+        }
+
+        pub fn load_subset(_dir: &Path, _subset: Option<&[&str]>) -> Result<Engine> {
+            Err(DifetError::Runtime(
+                "PJRT engine unavailable: difet was built without the `pjrt` feature \
+                 (see README §PJRT artifacts)"
+                    .into(),
+            ))
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        pub fn has_algorithm(&self, _name: &str) -> bool {
+            false
+        }
+
+        pub fn run(&self, alg: &str, _tile: &[f32], _core: [i32; 4]) -> Result<TileFeatures> {
+            Err(DifetError::Runtime(format!(
+                "PJRT engine unavailable (built without `pjrt`): cannot run {alg:?}"
+            )))
+        }
+    }
 }
 
-impl Engine {
-    /// Load + compile every algorithm in `dir`'s manifest.
-    pub fn load(dir: &Path) -> Result<Engine> {
-        Self::load_subset(dir, None)
+#[cfg(not(feature = "pjrt"))]
+pub use stub::Engine;
+
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use std::collections::BTreeMap;
+    use std::path::Path;
+    use std::sync::Mutex;
+
+    use super::TileFeatures;
+    use crate::features::{Descriptors, Keypoint};
+    use crate::runtime::manifest::{AlgorithmSpec, Dtype, Manifest};
+    use crate::util::{DifetError, Result};
+
+    /// `unsafe Send+Sync` wrapper — see module docs for the safety
+    /// argument: PJRT clients/executables are internally synchronized, and
+    /// we only ever call `execute` + literal conversions through `&self`.
+    struct Shared<T>(T);
+    unsafe impl<T> Send for Shared<T> {}
+    unsafe impl<T> Sync for Shared<T> {}
+
+    struct LoadedAlg {
+        spec: AlgorithmSpec,
+        exe: Shared<xla::PjRtLoadedExecutable>,
     }
 
-    /// Load only the named algorithms (examples that use one algorithm
-    /// shouldn't pay seven compiles).
-    pub fn load_subset(dir: &Path, subset: Option<&[&str]>) -> Result<Engine> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu()?;
-        let mut algs = BTreeMap::new();
-        for (name, spec) in &manifest.algorithms {
-            if let Some(filter) = subset {
-                if !filter.contains(&name.as_str()) {
-                    continue;
-                }
-            }
-            let proto = xla::HloModuleProto::from_text_file(&spec.hlo_path)?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp)?;
-            algs.insert(
-                name.clone(),
-                LoadedAlg {
-                    spec: spec.clone(),
-                    exe: Shared(exe),
-                },
-            );
-        }
-        Ok(Engine {
-            client: Shared(client),
-            algs,
-            manifest,
-            compile_lock: Mutex::new(()),
-        })
+    /// The compiled-executable registry.
+    pub struct Engine {
+        #[allow(dead_code)]
+        client: Shared<xla::PjRtClient>,
+        algs: BTreeMap<String, LoadedAlg>,
+        manifest: Manifest,
+        /// PJRT literal construction isn't reentrant-cheap; serialize
+        /// compiles only (execution is lock-free).
+        compile_lock: Mutex<()>,
     }
 
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    pub fn has_algorithm(&self, name: &str) -> bool {
-        self.algs.contains_key(name)
-    }
-
-    /// Execute one algorithm over one tile.
-    ///
-    /// * `tile` — `TILE·TILE·4` f32 HWC RGBA values in [0, 255]
-    ///   (`imagery::tiler::extract_tile_f32` layout).
-    /// * `core` — owned rectangle `[r0, r1, c0, c1]` in tile coordinates.
-    pub fn run(&self, alg: &str, tile: &[f32], core: [i32; 4]) -> Result<TileFeatures> {
-        let tile_px = crate::TILE as i64;
-        let la = self
-            .algs
-            .get(alg)
-            .ok_or_else(|| DifetError::Runtime(format!("algorithm {alg:?} not loaded")))?;
-        if tile.len() != (tile_px * tile_px * 4) as usize {
-            return Err(DifetError::Runtime(format!(
-                "tile has {} values, want {}",
-                tile.len(),
-                tile_px * tile_px * 4
-            )));
-        }
-        let tile_lit = xla::Literal::vec1(tile).reshape(&[tile_px, tile_px, 4])?;
-        let core_lit = xla::Literal::vec1(&core[..]);
-
-        // BRIEF/ORB executables take the sampling pattern as runtime
-        // operands (xla_extension 0.5.1 corrupts large HLO-text constants;
-        // DESIGN.md §7).  The values come from the generated
-        // `features::brief_pattern`, bit-identical to python's BRIEF_A/B.
-        let mut args = vec![tile_lit, core_lit];
-        if la.spec.takes_pattern {
-            args.push(Self::pattern_literal(crate::features::brief_pattern_a())?);
-            args.push(Self::pattern_literal(crate::features::brief_pattern_b())?);
-        }
-        let mut outs = la.exe.0.execute::<xla::Literal>(&args)?;
-        let result = outs
-            .pop()
-            .and_then(|mut d| if d.is_empty() { None } else { Some(d.remove(0)) })
-            .ok_or_else(|| DifetError::Runtime("empty execute result".into()))?;
-        let tuple = result.to_literal_sync()?.to_tuple()?;
-        self.parse_outputs(&la.spec, tuple)
-    }
-
-    fn parse_outputs(
-        &self,
-        spec: &AlgorithmSpec,
-        mut tuple: Vec<xla::Literal>,
-    ) -> Result<TileFeatures> {
-        if tuple.len() != spec.outputs.len() {
-            return Err(DifetError::Runtime(format!(
-                "{}: executable returned {} outputs, manifest says {}",
-                spec.name,
-                tuple.len(),
-                spec.outputs.len()
-            )));
-        }
-        let desc_lit = if spec.has_descriptors() {
-            Some(tuple.pop().unwrap())
-        } else {
-            None
-        };
-        let cols_l = tuple.pop().unwrap();
-        let rows_l = tuple.pop().unwrap();
-        let scores_l = tuple.pop().unwrap();
-        let count_l = tuple.pop().unwrap();
-
-        let count = count_l.to_vec::<i32>()?[0].max(0) as u64;
-        let scores = scores_l.to_vec::<f32>()?;
-        let rows = rows_l.to_vec::<i32>()?;
-        let cols = cols_l.to_vec::<i32>()?;
-
-        let mut keypoints = Vec::with_capacity(count.min(spec.topk as u64) as usize);
-        for i in 0..rows.len() {
-            if rows[i] < 0 {
-                break; // INVALID_COORD sentinel: end of valid prefix
-            }
-            keypoints.push(Keypoint {
-                row: rows[i],
-                col: cols[i],
-                score: scores[i],
-            });
+    impl Engine {
+        /// Load + compile every algorithm in `dir`'s manifest.
+        pub fn load(dir: &Path) -> Result<Engine> {
+            Self::load_subset(dir, None)
         }
 
-        let descriptors = match (desc_lit, spec.outputs.last()) {
-            (Some(lit), Some(out)) if out.name == "desc" => {
-                let k = keypoints.len();
-                match out.dtype {
-                    Dtype::F32 => {
-                        let dim = out.dims[1];
-                        let mut data = lit.to_vec::<f32>()?;
-                        data.truncate(k * dim);
-                        Descriptors::F32 { dim, data }
+        /// Load only the named algorithms (examples that use one algorithm
+        /// shouldn't pay seven compiles).
+        pub fn load_subset(dir: &Path, subset: Option<&[&str]>) -> Result<Engine> {
+            let manifest = Manifest::load(dir)?;
+            let client = xla::PjRtClient::cpu()?;
+            let mut algs = BTreeMap::new();
+            for (name, spec) in &manifest.algorithms {
+                if let Some(filter) = subset {
+                    if !filter.contains(&name.as_str()) {
+                        continue;
                     }
-                    Dtype::U32 => {
-                        let words = lit.to_vec::<u32>()?;
-                        let mut v = Vec::with_capacity(k);
-                        for i in 0..k {
-                            let mut w = [0u32; 8];
-                            w.copy_from_slice(&words[i * 8..(i + 1) * 8]);
-                            v.push(w);
+                }
+                let proto = xla::HloModuleProto::from_text_file(&spec.hlo_path)?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client.compile(&comp)?;
+                algs.insert(
+                    name.clone(),
+                    LoadedAlg {
+                        spec: spec.clone(),
+                        exe: Shared(exe),
+                    },
+                );
+            }
+            Ok(Engine {
+                client: Shared(client),
+                algs,
+                manifest,
+                compile_lock: Mutex::new(()),
+            })
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        pub fn has_algorithm(&self, name: &str) -> bool {
+            self.algs.contains_key(name)
+        }
+
+        /// Execute one algorithm over one tile.
+        ///
+        /// * `tile` — `TILE·TILE·4` f32 HWC RGBA values in [0, 255]
+        ///   (`imagery::tiler::extract_tile_f32` layout).
+        /// * `core` — owned rectangle `[r0, r1, c0, c1]` in tile coords.
+        pub fn run(&self, alg: &str, tile: &[f32], core: [i32; 4]) -> Result<TileFeatures> {
+            let tile_px = crate::TILE as i64;
+            let la = self
+                .algs
+                .get(alg)
+                .ok_or_else(|| DifetError::Runtime(format!("algorithm {alg:?} not loaded")))?;
+            if tile.len() != (tile_px * tile_px * 4) as usize {
+                return Err(DifetError::Runtime(format!(
+                    "tile has {} values, want {}",
+                    tile.len(),
+                    tile_px * tile_px * 4
+                )));
+            }
+            let tile_lit = xla::Literal::vec1(tile).reshape(&[tile_px, tile_px, 4])?;
+            let core_lit = xla::Literal::vec1(&core[..]);
+
+            // BRIEF/ORB executables take the sampling pattern as runtime
+            // operands (xla_extension 0.5.1 corrupts large HLO-text
+            // constants; DESIGN.md §7).  The values come from the generated
+            // `features::brief_pattern`, bit-identical to python's
+            // BRIEF_A/B.
+            let mut args = vec![tile_lit, core_lit];
+            if la.spec.takes_pattern {
+                args.push(Self::pattern_literal(crate::features::brief_pattern_a())?);
+                args.push(Self::pattern_literal(crate::features::brief_pattern_b())?);
+            }
+            let mut outs = la.exe.0.execute::<xla::Literal>(&args)?;
+            let result = outs
+                .pop()
+                .and_then(|mut d| if d.is_empty() { None } else { Some(d.remove(0)) })
+                .ok_or_else(|| DifetError::Runtime("empty execute result".into()))?;
+            let tuple = result.to_literal_sync()?.to_tuple()?;
+            self.parse_outputs(&la.spec, tuple)
+        }
+
+        fn parse_outputs(
+            &self,
+            spec: &AlgorithmSpec,
+            mut tuple: Vec<xla::Literal>,
+        ) -> Result<TileFeatures> {
+            if tuple.len() != spec.outputs.len() {
+                return Err(DifetError::Runtime(format!(
+                    "{}: executable returned {} outputs, manifest says {}",
+                    spec.name,
+                    tuple.len(),
+                    spec.outputs.len()
+                )));
+            }
+            let desc_lit = if spec.has_descriptors() {
+                Some(tuple.pop().unwrap())
+            } else {
+                None
+            };
+            let cols_l = tuple.pop().unwrap();
+            let rows_l = tuple.pop().unwrap();
+            let scores_l = tuple.pop().unwrap();
+            let count_l = tuple.pop().unwrap();
+
+            let count = count_l.to_vec::<i32>()?[0].max(0) as u64;
+            let scores = scores_l.to_vec::<f32>()?;
+            let rows = rows_l.to_vec::<i32>()?;
+            let cols = cols_l.to_vec::<i32>()?;
+
+            let mut keypoints = Vec::with_capacity(count.min(spec.topk as u64) as usize);
+            for i in 0..rows.len() {
+                if rows[i] < 0 {
+                    break; // INVALID_COORD sentinel: end of valid prefix
+                }
+                keypoints.push(Keypoint {
+                    row: rows[i],
+                    col: cols[i],
+                    score: scores[i],
+                });
+            }
+
+            let descriptors = match (desc_lit, spec.outputs.last()) {
+                (Some(lit), Some(out)) if out.name == "desc" => {
+                    let k = keypoints.len();
+                    match out.dtype {
+                        Dtype::F32 => {
+                            let dim = out.dims[1];
+                            let mut data = lit.to_vec::<f32>()?;
+                            data.truncate(k * dim);
+                            Descriptors::F32 { dim, data }
                         }
-                        Descriptors::Binary256(v)
-                    }
-                    Dtype::I32 => {
-                        return Err(DifetError::Runtime(format!(
-                            "{}: i32 descriptors unsupported",
-                            spec.name
-                        )))
+                        Dtype::U32 => {
+                            let words = lit.to_vec::<u32>()?;
+                            let mut v = Vec::with_capacity(k);
+                            for i in 0..k {
+                                let mut w = [0u32; 8];
+                                w.copy_from_slice(&words[i * 8..(i + 1) * 8]);
+                                v.push(w);
+                            }
+                            Descriptors::Binary256(v)
+                        }
+                        Dtype::I32 => {
+                            return Err(DifetError::Runtime(format!(
+                                "{}: i32 descriptors unsupported",
+                                spec.name
+                            )))
+                        }
                     }
                 }
-            }
-            _ => Descriptors::None,
-        };
+                _ => Descriptors::None,
+            };
 
-        Ok(TileFeatures {
-            count,
-            keypoints,
-            descriptors,
-        })
-    }
+            Ok(TileFeatures {
+                count,
+                keypoints,
+                descriptors,
+            })
+        }
 
-    fn pattern_literal(pat: &[(f32, f32)]) -> Result<xla::Literal> {
-        let flat: Vec<f32> = pat.iter().flat_map(|(a, b)| [*a, *b]).collect();
-        Ok(xla::Literal::vec1(&flat).reshape(&[pat.len() as i64, 2])?)
-    }
+        fn pattern_literal(pat: &[(f32, f32)]) -> Result<xla::Literal> {
+            let flat: Vec<f32> = pat.iter().flat_map(|(a, b)| [*a, *b]).collect();
+            Ok(xla::Literal::vec1(&flat).reshape(&[pat.len() as i64, 2])?)
+        }
 
-    /// Compile an extra HLO file under the engine's client (ablations /
-    /// experiments).  Serialized by an internal lock.
-    pub fn compile_extra(&self, hlo_path: &Path) -> Result<xla::PjRtLoadedExecutable> {
-        let _guard = self.compile_lock.lock().unwrap();
-        let proto = xla::HloModuleProto::from_text_file(hlo_path)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        Ok(self.client.0.compile(&comp)?)
+        /// Compile an extra HLO file under the engine's client (ablations /
+        /// experiments).  Serialized by an internal lock.
+        pub fn compile_extra(&self, hlo_path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+            let _guard = self.compile_lock.lock().unwrap();
+            let proto = xla::HloModuleProto::from_text_file(hlo_path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(self.client.0.compile(&comp)?)
+        }
     }
 }
+
+#[cfg(feature = "pjrt")]
+pub use pjrt::Engine;
 
 #[cfg(test)]
 mod tests {

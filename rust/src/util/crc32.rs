@@ -1,0 +1,51 @@
+//! CRC-32 (IEEE 802.3 / ISO-HDLC), the checksum HDFS and the HIB bundle
+//! format use — offline substitute for the `crc32fast` crate, table-driven
+//! and bit-compatible with it (and with Python's `binascii.crc32`).
+
+/// Reflected-polynomial lookup table, built at compile time.
+const TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut n = 0;
+    while n < 256 {
+        let mut c = n as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[n] = c;
+        n += 1;
+    }
+    table
+};
+
+/// CRC-32 of `bytes` (same value `crc32fast::hash` returns).
+pub fn hash(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // The classic check value, plus edge cases (empty, single byte).
+        assert_eq!(hash(b"123456789"), 0xCBF4_3926);
+        assert_eq!(hash(b""), 0);
+        assert_eq!(hash(b"\x00"), 0xD202_EF8D);
+        assert_eq!(hash(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn sensitive_to_single_bit_flips() {
+        let mut data = vec![0xA5u8; 64];
+        let base = hash(&data);
+        data[17] ^= 0x01;
+        assert_ne!(hash(&data), base);
+    }
+}

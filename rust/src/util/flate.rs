@@ -1,0 +1,930 @@
+//! RFC 1951 DEFLATE — offline substitute for the `flate2` crate.
+//!
+//! The compressor runs greedy LZ77 matching over hash chains (`level`
+//! scales the chain-search depth, the same knob zlib's levels turn),
+//! then emits the token stream as whichever single block is smallest:
+//! stored, fixed-Huffman, or dynamic-Huffman with optimal length-limited
+//! codes (package-merge).  Dynamic blocks matter here: HIB payloads are
+//! sensor-noisy RGBA where most of the win is entropy coding, not
+//! matching.  The decompressor is a full inflater (stored, fixed and
+//! dynamic blocks) in the style of zlib's `puff.c` reference
+//! implementation, so it also decodes streams produced by other DEFLATE
+//! encoders.  Both directions are property-tested against each other in
+//! place; the HIB codec layers CRC32 integrity on top.
+
+const MIN_MATCH: usize = 3;
+const MAX_MATCH: usize = 258;
+const WINDOW: usize = 32 * 1024;
+const MAX_BITS: usize = 15;
+/// Max code length of the code-length code itself.
+const MAX_CLC_BITS: usize = 7;
+
+/// Length code bases (codes 257..=285) and their extra-bit counts.
+const LENGTH_BASE: [u16; 29] = [
+    3, 4, 5, 6, 7, 8, 9, 10, 11, 13, 15, 17, 19, 23, 27, 31, 35, 43, 51, 59, 67, 83, 99, 115,
+    131, 163, 195, 227, 258,
+];
+const LENGTH_EXTRA: [u8; 29] = [
+    0, 0, 0, 0, 0, 0, 0, 0, 1, 1, 1, 1, 2, 2, 2, 2, 3, 3, 3, 3, 4, 4, 4, 4, 5, 5, 5, 5, 0,
+];
+
+/// Distance code bases (codes 0..=29) and their extra-bit counts.
+const DIST_BASE: [u16; 30] = [
+    1, 2, 3, 4, 5, 7, 9, 13, 17, 25, 33, 49, 65, 97, 129, 193, 257, 385, 513, 769, 1025, 1537,
+    2049, 3073, 4097, 6145, 8193, 12289, 16385, 24577,
+];
+const DIST_EXTRA: [u8; 30] = [
+    0, 0, 0, 0, 1, 1, 2, 2, 3, 3, 4, 4, 5, 5, 6, 6, 7, 7, 8, 8, 9, 9, 10, 10, 11, 11, 12, 12,
+    13, 13,
+];
+
+/// Order in which the code-length-code lengths are transmitted.
+const CLC_ORDER: [usize; 19] = [16, 17, 18, 0, 8, 7, 9, 6, 10, 5, 11, 4, 12, 3, 13, 2, 14, 1, 15];
+
+// ---------------------------------------------------------------------------
+// Compression
+// ---------------------------------------------------------------------------
+
+struct BitWriter {
+    out: Vec<u8>,
+    bit_buf: u32,
+    bit_count: u32,
+}
+
+impl BitWriter {
+    fn new(capacity: usize) -> Self {
+        BitWriter {
+            out: Vec::with_capacity(capacity),
+            bit_buf: 0,
+            bit_count: 0,
+        }
+    }
+
+    /// Append `count` bits of `value`, LSB first (extra-bit convention).
+    fn write_bits(&mut self, value: u32, count: u32) {
+        self.bit_buf |= value << self.bit_count;
+        self.bit_count += count;
+        while self.bit_count >= 8 {
+            self.out.push((self.bit_buf & 0xFF) as u8);
+            self.bit_buf >>= 8;
+            self.bit_count -= 8;
+        }
+    }
+
+    /// Append a Huffman code: codes are packed MSB first per RFC 1951.
+    fn write_huff(&mut self, code: u32, len: u32) {
+        let mut rev = 0u32;
+        for i in 0..len {
+            rev |= ((code >> i) & 1) << (len - 1 - i);
+        }
+        self.write_bits(rev, len);
+    }
+
+    /// Pad with zero bits to the next byte boundary (stored blocks).
+    fn byte_align(&mut self) {
+        if self.bit_count > 0 {
+            self.write_bits(0, 8 - self.bit_count);
+        }
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        if self.bit_count > 0 {
+            self.out.push((self.bit_buf & 0xFF) as u8);
+        }
+        self.out
+    }
+}
+
+/// Fixed litlen Huffman code for a symbol (RFC 1951 §3.2.6).
+#[inline]
+fn fixed_litlen(sym: usize) -> (u32, u32) {
+    match sym {
+        0..=143 => (0x30 + sym as u32, 8),
+        144..=255 => (0x190 + (sym - 144) as u32, 9),
+        256..=279 => ((sym - 256) as u32, 7),
+        _ => (0xC0 + (sym - 280) as u32, 8),
+    }
+}
+
+/// Map a match length (3..=258) to its (code_index, extra_value).
+#[inline]
+fn length_code(len: usize) -> (usize, u32) {
+    let mut i = LENGTH_BASE.len() - 1;
+    while LENGTH_BASE[i] as usize > len {
+        i -= 1;
+    }
+    (i, (len - LENGTH_BASE[i] as usize) as u32)
+}
+
+/// Map a match distance (1..=32768) to its (code, extra_value).
+#[inline]
+fn dist_code(dist: usize) -> (usize, u32) {
+    let mut i = DIST_BASE.len() - 1;
+    while DIST_BASE[i] as usize > dist {
+        i -= 1;
+    }
+    (i, (dist - DIST_BASE[i] as usize) as u32)
+}
+
+/// One LZ77 token.
+enum Token {
+    Lit(u8),
+    Match { len: u16, dist: u16 },
+}
+
+const HASH_BITS: usize = 15;
+
+#[inline]
+fn hash3(data: &[u8], pos: usize) -> usize {
+    let v = (data[pos] as u32) | ((data[pos + 1] as u32) << 8) | ((data[pos + 2] as u32) << 16);
+    (v.wrapping_mul(0x9E37_79B1) >> (32 - HASH_BITS)) as usize
+}
+
+/// Greedy LZ77 with hash chains; `level` scales the search effort.  The
+/// chain store is a 32 KiB position ring (zlib's layout), so memory is
+/// independent of the input size; stale ring entries are harmless
+/// because every candidate is byte-verified before use.
+fn lz77(data: &[u8], level: u32) -> Vec<Token> {
+    let max_chain: usize = 4usize << level; // 8 at level 1 … 2048 at level 9
+    let nice_len: usize = if level >= 6 { MAX_MATCH } else { 16 << level };
+    const WINDOW_MASK: usize = WINDOW - 1;
+
+    let mut tokens = Vec::with_capacity(data.len() / 2 + 1);
+    let mut head = vec![u32::MAX; 1 << HASH_BITS];
+    let mut prev = vec![u32::MAX; WINDOW];
+    let insert = |head: &mut [u32], prev: &mut [u32], pos: usize| {
+        let h = hash3(data, pos);
+        prev[pos & WINDOW_MASK] = head[h];
+        head[h] = pos as u32;
+    };
+
+    let mut pos = 0;
+    while pos < data.len() {
+        let mut best_len = 0usize;
+        let mut best_dist = 0usize;
+        if pos + MIN_MATCH <= data.len() {
+            let max_len = MAX_MATCH.min(data.len() - pos);
+            let mut cand = head[hash3(data, pos)];
+            let mut chain = max_chain;
+            while cand != u32::MAX && chain > 0 {
+                let c = cand as usize;
+                if pos - c > WINDOW {
+                    break; // older than the window ⇒ rest of chain is too
+                }
+                // Cheap reject: match must beat the best so far.
+                if best_len == 0 || data[c + best_len] == data[pos + best_len] {
+                    let mut l = 0;
+                    while l < max_len && data[c + l] == data[pos + l] {
+                        l += 1;
+                    }
+                    if l > best_len {
+                        best_len = l;
+                        best_dist = pos - c;
+                        // Stop at a good-enough match — and always before
+                        // best_len == max_len, past which the cheap-reject
+                        // probe would read out of bounds.
+                        if l >= nice_len || l >= max_len {
+                            break;
+                        }
+                    }
+                }
+                cand = prev[c & WINDOW_MASK];
+                chain -= 1;
+            }
+        }
+
+        if best_len >= MIN_MATCH {
+            tokens.push(Token::Match {
+                len: best_len as u16,
+                dist: best_dist as u16,
+            });
+            for k in pos..pos + best_len {
+                if k + MIN_MATCH <= data.len() {
+                    insert(&mut head, &mut prev, k);
+                }
+            }
+            pos += best_len;
+        } else {
+            tokens.push(Token::Lit(data[pos]));
+            if pos + MIN_MATCH <= data.len() {
+                insert(&mut head, &mut prev, pos);
+            }
+            pos += 1;
+        }
+    }
+    tokens
+}
+
+/// Optimal length-limited Huffman code lengths (package-merge / coin
+/// collector).  Zero-frequency symbols get length 0; a single used
+/// symbol gets length 1 (RFC-sanctioned incomplete code).
+fn huffman_code_lengths(freqs: &[u64], max_bits: usize) -> Vec<u8> {
+    let mut lens = vec![0u8; freqs.len()];
+    let mut used: Vec<usize> = (0..freqs.len()).filter(|&i| freqs[i] > 0).collect();
+    match used.len() {
+        0 => return lens,
+        1 => {
+            lens[used[0]] = 1;
+            return lens;
+        }
+        _ => {}
+    }
+    used.sort_by_key(|&i| (freqs[i], i));
+    let leaves: Vec<(u64, Vec<u16>)> = used.iter().map(|&i| (freqs[i], vec![i as u16])).collect();
+    let mut prev: Vec<(u64, Vec<u16>)> = Vec::new();
+    for _ in 0..max_bits {
+        // Package pairs from the previous level…
+        let mut packages: Vec<(u64, Vec<u16>)> = Vec::with_capacity(prev.len() / 2);
+        for pair in prev.chunks_exact(2) {
+            let mut syms = pair[0].1.clone();
+            syms.extend_from_slice(&pair[1].1);
+            packages.push((pair[0].0 + pair[1].0, syms));
+        }
+        // …and merge with the leaves, ascending by weight (leaves first
+        // on ties, for determinism).
+        let mut merged: Vec<(u64, Vec<u16>)> = Vec::with_capacity(leaves.len() + packages.len());
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < leaves.len() || j < packages.len() {
+            let take_leaf =
+                j >= packages.len() || (i < leaves.len() && leaves[i].0 <= packages[j].0);
+            if take_leaf {
+                merged.push(leaves[i].clone());
+                i += 1;
+            } else {
+                merged.push(std::mem::take(&mut packages[j]));
+                j += 1;
+            }
+        }
+        prev = merged;
+    }
+    // The optimal solution takes the 2n-2 cheapest nodes; each leaf's
+    // code length is how many selected nodes contain it.
+    for node in prev.iter().take(2 * leaves.len() - 2) {
+        for &s in &node.1 {
+            lens[s as usize] += 1;
+        }
+    }
+    lens
+}
+
+/// Canonical codes from code lengths (RFC 1951 §3.2.2).
+fn canonical_codes(lens: &[u8]) -> Vec<u16> {
+    let max = lens.iter().copied().max().unwrap_or(0) as usize;
+    let mut bl_count = vec![0u16; max + 1];
+    for &l in lens {
+        if l > 0 {
+            bl_count[l as usize] += 1;
+        }
+    }
+    let mut next = vec![0u16; max + 1];
+    let mut code = 0u16;
+    for bits in 1..=max {
+        code = (code + bl_count[bits - 1]) << 1;
+        next[bits] = code;
+    }
+    lens.iter()
+        .map(|&l| {
+            if l > 0 {
+                let c = next[l as usize];
+                next[l as usize] += 1;
+                c
+            } else {
+                0
+            }
+        })
+        .collect()
+}
+
+/// RLE the concatenated code-length arrays with symbols 16/17/18
+/// (RFC 1951 §3.2.7).  Returns `(clc_symbol, extra_value, extra_bits)`.
+fn rle_code_lengths(all: &[u8]) -> Vec<(u8, u8, u8)> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < all.len() {
+        let v = all[i];
+        let mut run = 1;
+        while i + run < all.len() && all[i + run] == v {
+            run += 1;
+        }
+        if v == 0 {
+            let mut n = run;
+            while n >= 11 {
+                let take = n.min(138);
+                out.push((18u8, (take - 11) as u8, 7u8));
+                n -= take;
+            }
+            if n >= 3 {
+                out.push((17, (n - 3) as u8, 3));
+                n = 0;
+            }
+            for _ in 0..n {
+                out.push((0, 0, 0));
+            }
+        } else {
+            out.push((v, 0, 0));
+            let mut n = run - 1;
+            while n >= 3 {
+                let take = n.min(6);
+                out.push((16, (take - 3) as u8, 2));
+                n -= take;
+            }
+            for _ in 0..n {
+                out.push((v, 0, 0));
+            }
+        }
+        i += run;
+    }
+    out
+}
+
+/// Everything needed to emit (or cost) a dynamic block header.
+struct DynamicPlan {
+    lit_lens: Vec<u8>,
+    lit_codes: Vec<u16>,
+    dist_lens: Vec<u8>,
+    dist_codes: Vec<u16>,
+    clc_lens: Vec<u8>,
+    clc_codes: Vec<u16>,
+    rle: Vec<(u8, u8, u8)>,
+    hlit: usize,
+    hdist: usize,
+    hclen: usize,
+}
+
+fn plan_dynamic(lit_freq: &[u64], dist_freq: &[u64]) -> DynamicPlan {
+    let lit_lens = huffman_code_lengths(lit_freq, MAX_BITS);
+    let mut dist_lens = huffman_code_lengths(dist_freq, MAX_BITS);
+    // No distances used: emit one dist code of length 1 (RFC: "if only
+    // one distance code is used, it is encoded using one bit").
+    if dist_lens.iter().all(|&l| l == 0) {
+        dist_lens[0] = 1;
+    }
+    let hlit = (lit_lens.iter().rposition(|&l| l != 0).unwrap_or(0) + 1).max(257);
+    let hdist = dist_lens.iter().rposition(|&l| l != 0).unwrap_or(0) + 1;
+
+    let mut all = Vec::with_capacity(hlit + hdist);
+    all.extend_from_slice(&lit_lens[..hlit]);
+    all.extend_from_slice(&dist_lens[..hdist]);
+    let rle = rle_code_lengths(&all);
+
+    let mut clc_freq = [0u64; 19];
+    for &(sym, _, _) in &rle {
+        clc_freq[sym as usize] += 1;
+    }
+    let clc_lens = huffman_code_lengths(&clc_freq, MAX_CLC_BITS);
+    let hclen = CLC_ORDER
+        .iter()
+        .rposition(|&s| clc_lens[s] != 0)
+        .map(|p| p + 1)
+        .unwrap_or(0)
+        .max(4);
+
+    DynamicPlan {
+        lit_codes: canonical_codes(&lit_lens),
+        dist_codes: canonical_codes(&dist_lens),
+        clc_codes: canonical_codes(&clc_lens),
+        lit_lens,
+        dist_lens,
+        clc_lens,
+        rle,
+        hlit,
+        hdist,
+        hclen,
+    }
+}
+
+impl DynamicPlan {
+    /// Header cost in bits (past the 3-bit block header).
+    fn header_bits(&self) -> u64 {
+        let mut bits = 5 + 5 + 4 + 3 * self.hclen as u64;
+        for &(sym, _, eb) in &self.rle {
+            bits += self.clc_lens[sym as usize] as u64 + eb as u64;
+        }
+        bits
+    }
+}
+
+/// Compress `data` as one raw-DEFLATE stream.  `level` (1..=9) scales
+/// the LZ77 chain-search effort, zlib-style.  The emitted block type
+/// (stored / fixed / dynamic) is whichever is smallest.  Output always
+/// inflates back bit-exactly.
+pub fn deflate(data: &[u8], level: u32) -> Vec<u8> {
+    let level = level.clamp(1, 9);
+    let tokens = lz77(data, level);
+
+    // Symbol frequencies (end-of-block always occurs once).
+    let mut lit_freq = [0u64; 286];
+    let mut dist_freq = [0u64; 30];
+    lit_freq[256] = 1;
+    for t in &tokens {
+        match *t {
+            Token::Lit(b) => lit_freq[b as usize] += 1,
+            Token::Match { len, dist } => {
+                lit_freq[257 + length_code(len as usize).0] += 1;
+                dist_freq[dist_code(dist as usize).0] += 1;
+            }
+        }
+    }
+    let plan = plan_dynamic(&lit_freq, &dist_freq);
+
+    // Cost each block type in bits.
+    let mut fixed_bits = 3u64;
+    let mut dyn_bits = 3u64 + plan.header_bits();
+    for t in &tokens {
+        match *t {
+            Token::Lit(b) => {
+                fixed_bits += fixed_litlen(b as usize).1 as u64;
+                dyn_bits += plan.lit_lens[b as usize] as u64;
+            }
+            Token::Match { len, dist } => {
+                let (lc, _) = length_code(len as usize);
+                let (dc, _) = dist_code(dist as usize);
+                let extra = LENGTH_EXTRA[lc] as u64 + DIST_EXTRA[dc] as u64;
+                fixed_bits += fixed_litlen(257 + lc).1 as u64 + 5 + extra;
+                dyn_bits += plan.lit_lens[257 + lc] as u64
+                    + plan.dist_lens[dc] as u64
+                    + extra;
+            }
+        }
+    }
+    fixed_bits += fixed_litlen(256).1 as u64;
+    dyn_bits += plan.lit_lens[256] as u64;
+    // Stored: per ≤65535-byte chunk, 3 header bits + ≤7 align + 32 len bits.
+    let chunks = data.len().div_ceil(65535).max(1) as u64;
+    let stored_bits = chunks * 42 + 8 * data.len() as u64;
+
+    let mut bw = BitWriter::new(data.len() / 2 + 64);
+    if stored_bits < fixed_bits.min(dyn_bits) {
+        emit_stored(&mut bw, data);
+        return bw.finish();
+    }
+    let dynamic = dyn_bits < fixed_bits;
+    // Single block: BFINAL=1, BTYPE=10 (dynamic) or 01 (fixed).
+    bw.write_bits(1, 1);
+    bw.write_bits(if dynamic { 2 } else { 1 }, 2);
+    if dynamic {
+        bw.write_bits(plan.hlit as u32 - 257, 5);
+        bw.write_bits(plan.hdist as u32 - 1, 5);
+        bw.write_bits(plan.hclen as u32 - 4, 4);
+        for &s in CLC_ORDER.iter().take(plan.hclen) {
+            bw.write_bits(plan.clc_lens[s] as u32, 3);
+        }
+        for &(sym, ev, eb) in &plan.rle {
+            bw.write_huff(
+                plan.clc_codes[sym as usize] as u32,
+                plan.clc_lens[sym as usize] as u32,
+            );
+            if eb > 0 {
+                bw.write_bits(ev as u32, eb as u32);
+            }
+        }
+    }
+    let emit_lit = |bw: &mut BitWriter, sym: usize| {
+        if dynamic {
+            bw.write_huff(plan.lit_codes[sym] as u32, plan.lit_lens[sym] as u32);
+        } else {
+            let (code, bits) = fixed_litlen(sym);
+            bw.write_huff(code, bits);
+        }
+    };
+    for t in &tokens {
+        match *t {
+            Token::Lit(b) => emit_lit(&mut bw, b as usize),
+            Token::Match { len, dist } => {
+                let (lc, lextra) = length_code(len as usize);
+                emit_lit(&mut bw, 257 + lc);
+                bw.write_bits(lextra, LENGTH_EXTRA[lc] as u32);
+                let (dc, dextra) = dist_code(dist as usize);
+                if dynamic {
+                    bw.write_huff(plan.dist_codes[dc] as u32, plan.dist_lens[dc] as u32);
+                } else {
+                    bw.write_huff(dc as u32, 5);
+                }
+                bw.write_bits(dextra, DIST_EXTRA[dc] as u32);
+            }
+        }
+    }
+    emit_lit(&mut bw, 256);
+    bw.finish()
+}
+
+/// Emit `data` as stored (BTYPE=00) blocks.
+fn emit_stored(bw: &mut BitWriter, data: &[u8]) {
+    let mut chunks: Vec<&[u8]> = data.chunks(65535).collect();
+    if chunks.is_empty() {
+        chunks.push(&[]);
+    }
+    let last = chunks.len() - 1;
+    for (i, chunk) in chunks.into_iter().enumerate() {
+        bw.write_bits(u32::from(i == last), 1);
+        bw.write_bits(0, 2);
+        bw.byte_align();
+        let len = chunk.len() as u32;
+        bw.write_bits(len & 0xFF, 8);
+        bw.write_bits(len >> 8, 8);
+        bw.write_bits(!len & 0xFF, 8);
+        bw.write_bits((!len >> 8) & 0xFF, 8);
+        bw.out.extend_from_slice(chunk);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Decompression
+// ---------------------------------------------------------------------------
+
+struct BitReader<'a> {
+    data: &'a [u8],
+    pos: usize,
+    bit_buf: u32,
+    bit_count: u32,
+}
+
+impl<'a> BitReader<'a> {
+    fn new(data: &'a [u8]) -> Self {
+        BitReader {
+            data,
+            pos: 0,
+            bit_buf: 0,
+            bit_count: 0,
+        }
+    }
+
+    fn bits(&mut self, count: u32) -> Result<u32, String> {
+        while self.bit_count < count {
+            let byte = *self
+                .data
+                .get(self.pos)
+                .ok_or_else(|| "unexpected end of deflate stream".to_string())?;
+            self.bit_buf |= (byte as u32) << self.bit_count;
+            self.bit_count += 8;
+            self.pos += 1;
+        }
+        let v = self.bit_buf & ((1u32 << count) - 1);
+        self.bit_buf >>= count;
+        self.bit_count -= count;
+        Ok(v)
+    }
+
+    /// Discard bits up to the next byte boundary (stored-block prelude).
+    fn byte_align(&mut self) {
+        self.bit_buf = 0;
+        self.bit_count = 0;
+    }
+
+    fn take_bytes(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.pos + n > self.data.len() {
+            return Err("stored block overruns input".into());
+        }
+        let s = &self.data[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+}
+
+/// Canonical Huffman decoding tables (puff.c representation): symbol
+/// counts per code length plus symbols in canonical order.
+struct Huffman {
+    count: [u16; MAX_BITS + 1],
+    symbol: Vec<u16>,
+}
+
+impl Huffman {
+    /// Build from per-symbol code lengths (0 = unused).  Rejects
+    /// over-subscribed sets; incomplete sets are permitted (unused codes
+    /// then decode as errors), matching inflate's behaviour.
+    fn build(lengths: &[u8]) -> Result<Huffman, String> {
+        let mut count = [0u16; MAX_BITS + 1];
+        for &l in lengths {
+            if l as usize > MAX_BITS {
+                return Err("code length exceeds 15".into());
+            }
+            count[l as usize] += 1;
+        }
+        if count[0] as usize == lengths.len() {
+            return Err("no symbols in huffman table".into());
+        }
+        let mut left = 1i32;
+        for len in 1..=MAX_BITS {
+            left <<= 1;
+            left -= count[len] as i32;
+            if left < 0 {
+                return Err("over-subscribed huffman code".into());
+            }
+        }
+        let mut offs = [0u16; MAX_BITS + 1];
+        for len in 1..MAX_BITS {
+            offs[len + 1] = offs[len] + count[len];
+        }
+        let mut symbol = vec![0u16; lengths.len()];
+        for (sym, &l) in lengths.iter().enumerate() {
+            if l != 0 {
+                symbol[offs[l as usize] as usize] = sym as u16;
+                offs[l as usize] += 1;
+            }
+        }
+        Ok(Huffman { count, symbol })
+    }
+
+    fn decode(&self, br: &mut BitReader<'_>) -> Result<u16, String> {
+        let mut code = 0i32;
+        let mut first = 0i32;
+        let mut index = 0i32;
+        for len in 1..=MAX_BITS {
+            code |= br.bits(1)? as i32;
+            let count = self.count[len] as i32;
+            if code - first < count {
+                return Ok(self.symbol[(index + (code - first)) as usize]);
+            }
+            index += count;
+            first = (first + count) << 1;
+            code <<= 1;
+        }
+        Err("invalid huffman code".into())
+    }
+}
+
+fn fixed_tables() -> (Huffman, Huffman) {
+    let mut litlen = [0u8; 288];
+    litlen[0..144].fill(8);
+    litlen[144..256].fill(9);
+    litlen[256..280].fill(7);
+    litlen[280..288].fill(8);
+    let dist = [5u8; 30];
+    (
+        Huffman::build(&litlen).expect("fixed litlen table"),
+        Huffman::build(&dist).expect("fixed dist table"),
+    )
+}
+
+fn dynamic_tables(br: &mut BitReader<'_>) -> Result<(Huffman, Huffman), String> {
+    let hlit = br.bits(5)? as usize + 257;
+    let hdist = br.bits(5)? as usize + 1;
+    let hclen = br.bits(4)? as usize + 4;
+    if hlit > 286 || hdist > 30 {
+        return Err("too many litlen/dist codes".into());
+    }
+    let mut clc_lengths = [0u8; 19];
+    for &idx in CLC_ORDER.iter().take(hclen) {
+        clc_lengths[idx] = br.bits(3)? as u8;
+    }
+    let clc = Huffman::build(&clc_lengths)?;
+
+    let mut lengths = vec![0u8; hlit + hdist];
+    let mut i = 0;
+    while i < lengths.len() {
+        let sym = clc.decode(br)?;
+        match sym {
+            0..=15 => {
+                lengths[i] = sym as u8;
+                i += 1;
+            }
+            16 => {
+                if i == 0 {
+                    return Err("repeat with no previous length".into());
+                }
+                let prev = lengths[i - 1];
+                let n = 3 + br.bits(2)? as usize;
+                if i + n > lengths.len() {
+                    return Err("length repeat overruns table".into());
+                }
+                lengths[i..i + n].fill(prev);
+                i += n;
+            }
+            17 => {
+                let n = 3 + br.bits(3)? as usize;
+                if i + n > lengths.len() {
+                    return Err("zero repeat overruns table".into());
+                }
+                i += n;
+            }
+            18 => {
+                let n = 11 + br.bits(7)? as usize;
+                if i + n > lengths.len() {
+                    return Err("zero repeat overruns table".into());
+                }
+                i += n;
+            }
+            _ => return Err("invalid code-length symbol".into()),
+        }
+    }
+    if lengths[256] == 0 {
+        return Err("dynamic block has no end-of-block code".into());
+    }
+    let litlen = Huffman::build(&lengths[..hlit])?;
+    // An all-literal block may carry an empty distance table; decode then
+    // fails only if a distance code is actually used.
+    let dist_lengths = &lengths[hlit..];
+    let dist = if dist_lengths.iter().all(|&l| l == 0) {
+        Huffman {
+            count: [0; MAX_BITS + 1],
+            symbol: Vec::new(),
+        }
+    } else {
+        Huffman::build(dist_lengths)?
+    };
+    Ok((litlen, dist))
+}
+
+fn inflate_block(
+    br: &mut BitReader<'_>,
+    out: &mut Vec<u8>,
+    limit: usize,
+    litlen: &Huffman,
+    dist: &Huffman,
+) -> Result<(), String> {
+    loop {
+        if out.len() > limit {
+            return Err("decoded output exceeds expected size".into());
+        }
+        let sym = litlen.decode(br)? as usize;
+        match sym {
+            0..=255 => out.push(sym as u8),
+            256 => return Ok(()),
+            257..=285 => {
+                let idx = sym - 257;
+                let len =
+                    LENGTH_BASE[idx] as usize + br.bits(LENGTH_EXTRA[idx] as u32)? as usize;
+                let dsym = dist.decode(br)? as usize;
+                if dsym >= DIST_BASE.len() {
+                    return Err("invalid distance code".into());
+                }
+                let d = DIST_BASE[dsym] as usize + br.bits(DIST_EXTRA[dsym] as u32)? as usize;
+                if d > out.len() {
+                    return Err("distance beyond output start".into());
+                }
+                // Byte-by-byte: overlapping copies (d < len) must replicate.
+                let start = out.len() - d;
+                for k in 0..len {
+                    let b = out[start + k];
+                    out.push(b);
+                }
+            }
+            _ => return Err("invalid litlen symbol".into()),
+        }
+    }
+}
+
+/// Decompress a raw-DEFLATE stream.  `size_hint` pre-sizes the output
+/// buffer AND bounds it: a stream decoding to more than `size_hint`
+/// bytes errors out early instead of allocating without limit (the HIB
+/// codec knows every record's exact decoded size, so a longer stream is
+/// corruption by definition).
+pub fn inflate(data: &[u8], size_hint: usize) -> Result<Vec<u8>, String> {
+    let mut br = BitReader::new(data);
+    let mut out = Vec::with_capacity(size_hint);
+    loop {
+        let is_final = br.bits(1)? == 1;
+        match br.bits(2)? {
+            0 => {
+                br.byte_align();
+                let hdr = br.take_bytes(4)?;
+                let len = hdr[0] as usize | ((hdr[1] as usize) << 8);
+                let nlen = hdr[2] as usize | ((hdr[3] as usize) << 8);
+                if len != (!nlen & 0xFFFF) {
+                    return Err("stored block LEN/NLEN mismatch".into());
+                }
+                if out.len() + len > size_hint {
+                    return Err("decoded output exceeds expected size".into());
+                }
+                out.extend_from_slice(br.take_bytes(len)?);
+            }
+            1 => {
+                let (litlen, dist) = fixed_tables();
+                inflate_block(&mut br, &mut out, size_hint, &litlen, &dist)?;
+            }
+            2 => {
+                let (litlen, dist) = dynamic_tables(&mut br)?;
+                inflate_block(&mut br, &mut out, size_hint, &litlen, &dist)?;
+            }
+            _ => return Err("reserved block type".into()),
+        }
+        if is_final {
+            return Ok(out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Pcg32;
+
+    fn roundtrip(data: &[u8], level: u32) {
+        let enc = deflate(data, level);
+        let dec = inflate(&enc, data.len()).expect("inflate");
+        assert_eq!(dec, data, "roundtrip failed at level {level}");
+    }
+
+    #[test]
+    fn roundtrip_edge_cases() {
+        for level in [1, 6, 9] {
+            roundtrip(b"", level);
+            roundtrip(b"a", level);
+            roundtrip(b"ab", level);
+            roundtrip(b"aaa", level);
+            roundtrip(&[0u8; 10_000], level);
+            roundtrip(b"abcabcabcabcabcabcabc", level);
+            roundtrip(&[255u8; 300], level);
+        }
+    }
+
+    #[test]
+    fn compresses_runs_well() {
+        let data: Vec<u8> = (0..64 * 1024).map(|i| ((i / 971) % 7) as u8).collect();
+        let enc = deflate(&data, 1);
+        assert!(enc.len() * 10 < data.len(), "only {} bytes", enc.len());
+        assert_eq!(inflate(&enc, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn entropy_codes_noisy_but_skewed_bytes() {
+        // No LZ matches to speak of, but a skewed value distribution —
+        // the dynamic-Huffman case HIB's noisy RGBA scenes exercise
+        // (every 4th byte is alpha=255).
+        let mut rng = Pcg32::seeded(7);
+        let data: Vec<u8> = (0..40_000)
+            .map(|i| {
+                if i % 4 == 3 {
+                    255
+                } else {
+                    128 + (rng.next_u32() % 24) as u8
+                }
+            })
+            .collect();
+        let enc = deflate(&data, 1);
+        assert!(
+            enc.len() * 10 < data.len() * 9,
+            "dynamic huffman should beat raw: {} vs {}",
+            enc.len(),
+            data.len()
+        );
+        assert_eq!(inflate(&enc, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn incompressible_data_stays_near_raw() {
+        let mut rng = Pcg32::seeded(1);
+        let data: Vec<u8> = (0..100_000).map(|_| rng.next_u32() as u8).collect();
+        let enc = deflate(&data, 6);
+        // Stored-block fallback bounds expansion to a few bytes per 64 KiB.
+        assert!(enc.len() < data.len() + 64, "expanded to {}", enc.len());
+        assert_eq!(inflate(&enc, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn higher_levels_never_lose_data() {
+        let mut rng = Pcg32::seeded(5);
+        let data: Vec<u8> = (0..30_000).map(|_| (rng.next_u32() % 11) as u8).collect();
+        let mut sizes = Vec::new();
+        for level in 1..=9 {
+            let enc = deflate(&data, level);
+            assert_eq!(inflate(&enc, data.len()).unwrap(), data);
+            sizes.push(enc.len());
+        }
+        // Deeper searches should not do dramatically worse.
+        assert!(sizes[8] <= sizes[0] * 2, "sizes {sizes:?}");
+    }
+
+    #[test]
+    fn stored_block_decodes() {
+        // Hand-built stored block: BFINAL=1 BTYPE=00, then LEN/NLEN + bytes.
+        let payload = b"difet stored";
+        let mut raw = vec![0b0000_0001u8];
+        raw.push((payload.len() & 0xFF) as u8);
+        raw.push((payload.len() >> 8) as u8);
+        raw.push((!payload.len() & 0xFF) as u8);
+        raw.push(((!payload.len() >> 8) & 0xFF) as u8);
+        raw.extend_from_slice(payload);
+        assert_eq!(inflate(&raw, payload.len()).unwrap(), payload);
+    }
+
+    #[test]
+    fn garbage_is_rejected() {
+        assert!(inflate(&[0xDE, 0xAD, 0xBE, 0xEF], 16).is_err());
+        assert!(inflate(&[], 0).is_err());
+        // Truncated valid stream.
+        let data: Vec<u8> = (0..4096u32).map(|i| (i % 151) as u8).collect();
+        let enc = deflate(&data, 1);
+        assert!(inflate(&enc[..enc.len() / 2], 4096).is_err());
+    }
+
+    #[test]
+    fn prop_roundtrip_random_payloads() {
+        check("flate_roundtrip", 80, |g| {
+            let len = g.usize_in(0, 4096);
+            let structured = g.bool(0.5);
+            let data = if structured {
+                let period = g.usize_in(1, 17);
+                (0..len).map(|i| ((i / period) % 11) as u8).collect()
+            } else {
+                g.bytes(len)
+            };
+            let level = 1 + g.u32(9).min(8);
+            let enc = deflate(&data, level);
+            let dec = inflate(&enc, data.len()).map_err(|e| e.to_string())?;
+            crate::prop_assert!(dec == data, "roundtrip mismatch at len {len}");
+            Ok(())
+        });
+    }
+}

@@ -1,12 +1,16 @@
 //! Small shared utilities: errors, PRNG, property-testing harness, CLI
-//! argument parsing, JSON parsing and human-readable formatting.
+//! argument parsing, JSON parsing, CRC32, DEFLATE and human-readable
+//! formatting.
 //!
 //! The offline crate registry in this environment lacks `clap`, `serde`,
-//! `rand` and `proptest`; these modules are the project-local substitutes
-//! DESIGN.md §3 documents (each is unit-tested in place).
+//! `rand`, `proptest`, `flate2`, `crc32fast` and `thiserror`; these
+//! modules are the project-local substitutes DESIGN.md §3 documents (each
+//! is unit-tested in place).
 
 pub mod args;
 pub mod bench;
+pub mod crc32;
+pub mod flate;
 pub mod fmt;
 pub mod json;
 pub mod prop;
@@ -15,24 +19,47 @@ pub mod rng;
 use std::fmt as stdfmt;
 
 /// Unified error type for the DIFET library.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum DifetError {
-    #[error("I/O error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("corrupt bundle: {0}")]
+    Io(std::io::Error),
     CorruptBundle(String),
-    #[error("DFS error: {0}")]
     Dfs(String),
-    #[error("config error: {0}")]
     Config(String),
-    #[error("runtime error: {0}")]
     Runtime(String),
-    #[error("job failed: {0}")]
     Job(String),
-    #[error("XLA error: {0}")]
     Xla(String),
 }
 
+impl stdfmt::Display for DifetError {
+    fn fmt(&self, f: &mut stdfmt::Formatter<'_>) -> stdfmt::Result {
+        match self {
+            DifetError::Io(e) => write!(f, "I/O error: {e}"),
+            DifetError::CorruptBundle(m) => write!(f, "corrupt bundle: {m}"),
+            DifetError::Dfs(m) => write!(f, "DFS error: {m}"),
+            DifetError::Config(m) => write!(f, "config error: {m}"),
+            DifetError::Runtime(m) => write!(f, "runtime error: {m}"),
+            DifetError::Job(m) => write!(f, "job failed: {m}"),
+            DifetError::Xla(m) => write!(f, "XLA error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for DifetError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            DifetError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for DifetError {
+    fn from(e: std::io::Error) -> Self {
+        DifetError::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for DifetError {
     fn from(e: xla::Error) -> Self {
         DifetError::Xla(e.to_string())

@@ -78,6 +78,7 @@ fn sequential_baseline_matches_cluster_census() {
         num_scenes: 2,
         write_output: false,
         force_native: false,
+        fused: false,
     };
     let dist = run_extraction(&cfg, &req).unwrap();
     let seq = run_sequential(&cfg, &req).unwrap();

@@ -1,0 +1,148 @@
+//! Integration: the fused multi-algorithm pass must be indistinguishable
+//! from per-algorithm jobs (censuses AND retained keypoint lists), and a
+//! NaN-scored keypoint must never panic a worker — it sorts last.
+
+use difet::config::Config;
+use difet::coordinator::driver::{JobHooks, NativeExecutor};
+use difet::coordinator::{run_job, JobSpec, TileExecutor};
+use difet::dfs::Dfs;
+use difet::features::Keypoint;
+use difet::metrics::Registry;
+use difet::pipeline::{ingest_corpus, run_extraction, run_sequential, ExtractRequest};
+
+fn tiny_cfg() -> Config {
+    let mut cfg = Config::new();
+    cfg.scene.width = 520;
+    cfg.scene.height = 520;
+    cfg.scene.settlements = 8;
+    cfg.cluster.nodes = 2;
+    cfg.cluster.slots_per_node = 2;
+    cfg.cluster.job_startup = 0.5;
+    cfg.storage.block_size = 1 << 20;
+    cfg.artifacts_dir = "/nonexistent".into(); // force the native executor
+    cfg
+}
+
+/// (a) Fused vs per-algorithm vs sequential: identical censuses for all
+/// seven algorithms, and byte-identical retained keypoint lists between
+/// the two distributed paths.
+#[test]
+fn three_way_agreement_all_seven_algorithms() {
+    let cfg = tiny_cfg();
+    let base = ExtractRequest {
+        num_scenes: 2,
+        write_output: false,
+        force_native: true,
+        ..Default::default()
+    };
+    let per_alg = run_extraction(&cfg, &base).expect("per-algorithm run");
+    let fused = run_extraction(
+        &cfg,
+        &ExtractRequest {
+            fused: true,
+            ..base.clone()
+        },
+    )
+    .expect("fused run");
+    let seq = run_sequential(
+        &cfg,
+        &ExtractRequest {
+            fused: true,
+            ..base.clone()
+        },
+    )
+    .expect("sequential fused run");
+
+    assert_eq!(per_alg.jobs.len(), 7);
+    assert_eq!(fused.jobs.len(), 7);
+    for alg in difet::ALGORITHMS {
+        let p = per_alg.job(alg).unwrap();
+        let f = fused.job(alg).unwrap();
+        let s = seq.job(alg).unwrap();
+        assert_eq!(p.total_count(), f.total_count(), "{alg}: fused census");
+        assert_eq!(p.total_count(), s.total_count(), "{alg}: sequential census");
+        // Per-image equality, down to the retained keypoint lists.
+        for (pi, fi) in p.images.iter().zip(&f.images) {
+            assert_eq!(pi.image_id, fi.image_id, "{alg}");
+            assert_eq!(pi.count, fi.count, "{alg}: image census");
+            assert_eq!(pi.raw_count, fi.raw_count, "{alg}: raw census");
+            assert_eq!(pi.keypoints, fi.keypoints, "{alg}: retained keypoints");
+        }
+        // Sequential shares the retention rule with the merge path.
+        for (pi, si) in p.images.iter().zip(&s.images) {
+            assert_eq!(pi.keypoints.len(), si.keypoints.len(), "{alg}: retention");
+        }
+    }
+    // The fused run reports the sweep as one job: its per-algorithm rows
+    // share the single pass's timing.
+    let t0 = fused.jobs[0].sim_seconds;
+    assert!(fused.jobs.iter().all(|j| j.sim_seconds == t0));
+    assert_eq!(fused.jobs[0].counter("fused_algorithms"), 7);
+}
+
+/// A TileExecutor that poisons every tile with one NaN-scored keypoint.
+struct NanInjector(NativeExecutor);
+
+impl TileExecutor for NanInjector {
+    fn run_tile(
+        &self,
+        alg: &str,
+        tile: &[f32],
+        core: [i32; 4],
+    ) -> difet::Result<difet::runtime::TileFeatures> {
+        let mut feats = self.0.run_tile(alg, tile, core)?;
+        feats.keypoints.push(Keypoint {
+            row: core[0],
+            col: core[2],
+            score: f32::NAN,
+        });
+        Ok(feats)
+    }
+    fn label(&self) -> &'static str {
+        "nan-injector"
+    }
+}
+
+/// (b) A NaN-scored keypoint completes the job (no worker panic — the
+/// old `partial_cmp().unwrap()` died here) and sorts after every real
+/// detection.
+#[test]
+fn nan_scored_keypoints_complete_and_sort_last() {
+    let cfg = tiny_cfg();
+    let dfs = Dfs::new(
+        cfg.cluster.nodes,
+        cfg.storage.block_size,
+        cfg.cluster.replication,
+    );
+    let info = ingest_corpus(&cfg, &dfs, 2, "/corpus/nan.hib").unwrap();
+    let registry = Registry::new();
+    let mut spec = JobSpec::new("harris", &info.bundle_path);
+    spec.write_output = false;
+    let rep = run_job(
+        &cfg,
+        &dfs,
+        &NanInjector(NativeExecutor),
+        &spec,
+        &registry,
+        &JobHooks::default(),
+    )
+    .expect("job with NaN scores must complete");
+    assert_eq!(rep.image_count, 2);
+    for img in &rep.images {
+        let first_nan = img
+            .keypoints
+            .iter()
+            .position(|k| k.score.is_nan())
+            .unwrap_or(img.keypoints.len());
+        assert!(
+            img.keypoints[first_nan..].iter().all(|k| k.score.is_nan()),
+            "image {}: NaN keypoints interleaved with real ones",
+            img.image_id
+        );
+        assert!(
+            first_nan > 0,
+            "image {}: real detections displaced by NaNs",
+            img.image_id
+        );
+    }
+}
