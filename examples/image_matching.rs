@@ -1,81 +1,71 @@
 //! Image matching/registration — the application the paper's intro
 //! motivates (image matching, Wang et al. 2012; stitching of LandSat
-//! mosaics, Sayar et al. 2013).
-//!
-//! Two "acquisitions" of the same area are simulated by cropping one
-//! synthetic scene at two offsets; ORB features are extracted through the
-//! full DIFET stack, matched with Hamming + ratio test, and the planted
-//! translation is recovered by RANSAC.
+//! mosaics, Sayar et al. 2013) — run as the full two-stage distributed
+//! pipeline: overlapping acquisitions are bundled into DFS, a fused
+//! extraction job keeps ORB descriptors through the shuffle, and the
+//! registration job matches every scene pair reduce-side through the
+//! Scheduler (locality, retries, speculation).  The recovered
+//! translations are checked against the planted acquisition offsets and
+//! against the sequential matching baseline, which the distributed job
+//! must reproduce exactly.
 //!
 //! ```bash
 //! cargo run --release --example image_matching
 //! ```
 
-use difet::config::SceneConfig;
-use difet::coordinator::driver::{NativeExecutor, TileExecutor};
-use difet::features::matching::{match_descriptors, ransac_translation};
-use difet::imagery::{Rgba8Image, SceneGenerator};
-use difet::runtime::{artifacts_available, Engine};
-use difet::TILE;
-
-/// Crop a TILE×TILE window at (row0, col0).
-fn crop(img: &Rgba8Image, row0: usize, col0: usize) -> Vec<f32> {
-    let mut out = Vec::with_capacity(TILE * TILE * 4);
-    for r in 0..TILE {
-        for c in 0..TILE {
-            let px = img.get(row0 + r, col0 + c);
-            out.extend_from_slice(&[px[0] as f32, px[1] as f32, px[2] as f32, px[3] as f32]);
-        }
-    }
-    out
-}
+use difet::config::Config;
+use difet::pipeline::report::render_registration_table;
+use difet::pipeline::{register_pairs_sequential, run_registration, RegistrationRequest};
 
 fn main() -> difet::Result<()> {
-    // One big scene, two overlapping acquisitions offset by (40, -64).
-    let mut cfg = SceneConfig::default();
-    cfg.width = 900;
-    cfg.height = 900;
-    let scene = SceneGenerator::new(cfg).scene(0);
-    let (dr_true, dc_true) = (40i32, -64i32);
-    let a = crop(&scene.image, 100, 150);
-    let b = crop(
-        &scene.image,
-        (100 + dr_true) as usize,
-        (150 + dc_true) as usize,
-    );
+    // A small 2-node cluster and three overlapping 900²-px acquisitions.
+    let mut cfg = Config::new();
+    cfg.scene.width = 900;
+    cfg.scene.height = 900;
+    cfg.cluster.nodes = 2;
+    cfg.cluster.slots_per_node = 2;
+    cfg.cluster.job_startup = 1.0;
+    cfg.storage.block_size = 2 << 20;
+    cfg.artifacts_dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
 
-    // Extract ORB through the engine (PJRT if built, else native).
-    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let engine: Box<dyn TileExecutor> = if artifacts_available(&dir) {
-        Box::new(Engine::load_subset(&dir, Some(&["orb"]))?)
-    } else {
-        Box::new(NativeExecutor)
+    let req = RegistrationRequest {
+        num_scenes: 3,
+        max_offset: 96,
+        ..Default::default()
     };
-    let full = [0, TILE as i32, 0, TILE as i32];
-    let fa = engine.run_tile("orb", &a, full)?;
-    let fb = engine.run_tile("orb", &b, full)?;
+    let out = run_registration(&cfg, &req)?;
     println!(
-        "acquisition A: {} ORB keypoints; B: {} ({} executor)",
-        fa.keypoints.len(),
-        fb.keypoints.len(),
-        engine.label()
+        "extracted {} scenes ({} keypoints retained), registering {} pairs on {} nodes\n",
+        out.extraction.image_count,
+        out.extraction.images.iter().map(|i| i.keypoints.len()).sum::<usize>(),
+        out.report.pair_count,
+        out.report.nodes,
     );
+    print!("{}", render_registration_table(&out.report));
 
-    // Match + register.
-    let matches = match_descriptors(&fa.descriptors, &fb.descriptors, 0.85);
-    println!("ratio-test matches: {}", matches.len());
-    let t = ransac_translation(&fa.keypoints, &fb.keypoints, &matches, 3.0, 256, 7)
-        .expect("no consensus translation");
-    // B was cropped (dr, dc) further along, so B's keypoints sit at
-    // A-coordinates minus the offset.
-    println!(
-        "recovered translation: ({:+.1}, {:+.1}) px with {} inliers (truth ({:+}, {:+}))",
-        t.d_row, t.d_col, t.inliers, -dr_true, -dc_true
-    );
-    assert!(
-        (t.d_row + dr_true as f32).abs() <= 2.0 && (t.d_col + dc_true as f32).abs() <= 2.0,
-        "registration failed"
-    );
-    println!("registration OK");
+    // Every pair overlaps (offsets ≤ 96 px on 900 px frames): all must
+    // register, each within 2 px of the planted offset difference.
+    for p in &out.report.pairs {
+        let t = p
+            .translation
+            .as_ref()
+            .unwrap_or_else(|| panic!("pair {}→{} failed to register", p.image_a, p.image_b));
+        let (er, ec) = out.expected_translation(p.image_a, p.image_b);
+        assert!(
+            (t.d_row - er).abs() <= 2.0 && (t.d_col - ec).abs() <= 2.0,
+            "pair {}→{}: recovered ({:+.1}, {:+.1}), planted ({er:+.1}, {ec:+.1})",
+            p.image_a,
+            p.image_b,
+            t.d_row,
+            t.d_col,
+        );
+    }
+
+    // The distributed job must agree with the sequential baseline bit
+    // for bit (same matches, same translations).
+    let baseline = register_pairs_sequential(&out.extraction.images, &req.spec)?;
+    assert_eq!(out.report.pairs, baseline, "distributed != sequential baseline");
+
+    println!("\nregistration OK: all pairs within 2 px of planted offsets, baseline exact");
     Ok(())
 }

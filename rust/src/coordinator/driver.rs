@@ -29,8 +29,9 @@ use std::sync::Mutex;
 use crate::cluster::CostModel;
 use crate::config::Config;
 use crate::dfs::{Dfs, NodeId};
-use crate::features::nms::by_score_desc;
-use crate::features::{self, Algorithm, GrayImage};
+use crate::features::matching::{match_descriptors_while, ransac_translation};
+use crate::features::nms::rank_truncate;
+use crate::features::{self, Algorithm, Descriptors, GrayImage};
 use crate::hib::{self, BundleReader, RecordMeta};
 use crate::imagery::tiler::{extract_tile_f32, TileIter};
 use crate::imagery::Rgba8Image;
@@ -38,8 +39,12 @@ use crate::metrics::Registry;
 use crate::runtime::TileFeatures;
 use crate::util::{DifetError, Result, Stopwatch};
 
-use super::job::{mapper_retention, FusedJobSpec, JobReport, JobSpec, MapOutput};
+use super::job::{
+    mapper_retention, pair_seed, FusedJobSpec, ImageCensus, JobReport, JobSpec, MapOutput,
+    PairResult, PairTask, RegistrationReport, RegistrationSpec,
+};
 use super::scheduler::{Assignment, Scheduler, TaskDescriptor, TaskHandle};
+use super::shuffle;
 
 /// Anything that can extract features from one tile: the PJRT engine in
 /// production, the pure-Rust baseline as hermetic fallback.
@@ -154,6 +159,85 @@ pub fn run_job(
         .ok_or_else(|| DifetError::Job("fused engine returned no report".into()))
 }
 
+/// One slot-completed work item: its payload plus the virtual-time
+/// accounting every task contributes to the job clock.
+struct SlotWork<R> {
+    payload: R,
+    /// Virtual time this task adds to its slot (overhead + io + compute).
+    virtual_ns: u64,
+    compute_ns: u64,
+    io_ns: u64,
+}
+
+/// Aggregated slot accounting after a job drains.
+struct SlotTotals {
+    /// Max over slots of Σ virtual task time (the job-clock term).
+    max_slot_ns: u64,
+    compute_ns: u64,
+    io_ns: u64,
+}
+
+/// The shared worker-slot engine: spawn `nodes × slots_per_node` threads,
+/// drain `scheduler`, run `body` once per task attempt and `merge` once
+/// per *winning* attempt.  Both job shapes — the map-shaped extraction
+/// and the reduce-shaped registration — run on this skeleton, so retry,
+/// cancellation, speculation-twin and virtual-time semantics cannot
+/// diverge between them.
+fn run_slots<D, R, B, M>(
+    cluster: &crate::config::ClusterConfig,
+    scheduler: &Scheduler<D>,
+    body: B,
+    merge: M,
+) -> SlotTotals
+where
+    D: super::scheduler::WorkItem,
+    B: Fn(&D, &TaskHandle, NodeId) -> Result<Option<SlotWork<R>>> + Sync,
+    M: Fn(&D, R) + Sync,
+{
+    let compute_ns = AtomicU64::new(0);
+    let io_ns = AtomicU64::new(0);
+    let max_slot_ns = AtomicU64::new(0);
+    std::thread::scope(|scope| {
+        for node in 0..cluster.nodes {
+            for _slot in 0..cluster.slots_per_node {
+                let body = &body;
+                let merge = &merge;
+                let compute_ns = &compute_ns;
+                let io_ns = &io_ns;
+                let max_slot_ns = &max_slot_ns;
+                scope.spawn(move || {
+                    let mut slot_virtual_ns = 0u64;
+                    loop {
+                        match scheduler.next_assignment(NodeId(node)) {
+                            Assignment::Done => break,
+                            Assignment::Run(task, handle) => {
+                                match body(&task, &handle, NodeId(node)) {
+                                    Ok(Some(work)) => {
+                                        slot_virtual_ns += work.virtual_ns;
+                                        compute_ns.fetch_add(work.compute_ns, Ordering::Relaxed);
+                                        io_ns.fetch_add(work.io_ns, Ordering::Relaxed);
+                                        if scheduler.report_success(&handle) {
+                                            merge(&task, work.payload);
+                                        }
+                                    }
+                                    Ok(None) => scheduler.report_cancelled(&handle),
+                                    Err(e) => scheduler.report_failure(&handle, &e.to_string()),
+                                }
+                            }
+                        }
+                    }
+                    max_slot_ns.fetch_max(slot_virtual_ns, Ordering::Relaxed);
+                });
+            }
+        }
+    });
+    SlotTotals {
+        max_slot_ns: max_slot_ns.load(Ordering::Relaxed),
+        compute_ns: compute_ns.load(Ordering::Relaxed),
+        io_ns: io_ns.load(Ordering::Relaxed),
+    }
+}
+
 /// Run ONE MapReduce pass that extracts every algorithm in `spec`,
 /// sharing the split read, record decode, tiling and per-tile
 /// intermediates across them.  Returns one [`JobReport`] per algorithm
@@ -217,68 +301,35 @@ pub fn run_fused_job(
 
     let scheduler = Scheduler::new(tasks, &cfg.scheduler);
     let outputs: Mutex<Vec<Vec<MapOutput>>> = Mutex::new(vec![Vec::new(); n_algs]);
-    let compute_ns = AtomicU64::new(0);
-    let io_ns = AtomicU64::new(0);
-    let max_slot_ns = AtomicU64::new(0);
     let tiles_counter = registry.counter("tiles_processed");
     let tile_hist = registry.histogram("tile_latency");
 
-    std::thread::scope(|scope| {
-        for node in 0..cfg.cluster.nodes {
-            for _slot in 0..cfg.cluster.slots_per_node {
-                let scheduler = &scheduler;
-                let outputs = &outputs;
-                let metas = &metas;
-                let compute_ns = &compute_ns;
-                let io_ns = &io_ns;
-                let max_slot_ns = &max_slot_ns;
-                let tiles_counter = tiles_counter.clone();
-                let tile_hist = tile_hist.clone();
-                let cost = &cost;
-                scope.spawn(move || {
-                    let mut slot_virtual_ns = 0u64;
-                    loop {
-                        match scheduler.next_assignment(NodeId(node)) {
-                            Assignment::Done => break,
-                            Assignment::Run(desc, handle) => {
-                                match map_task(
-                                    cfg, dfs, executor, spec, hooks, cost, metas, &desc,
-                                    &handle, NodeId(node), &tiles_counter, &tile_hist,
-                                ) {
-                                    Ok(Some(task_out)) => {
-                                        slot_virtual_ns += task_out.virtual_ns;
-                                        compute_ns.fetch_add(task_out.compute_ns, Ordering::Relaxed);
-                                        io_ns.fetch_add(task_out.io_ns, Ordering::Relaxed);
-                                        if scheduler.report_success(&handle) {
-                                            let mut merged = outputs.lock().unwrap();
-                                            for (dst, src) in
-                                                merged.iter_mut().zip(task_out.outputs)
-                                            {
-                                                dst.extend(src);
-                                            }
-                                        }
-                                    }
-                                    Ok(None) => scheduler.report_cancelled(&handle),
-                                    Err(e) => scheduler.report_failure(&handle, &e.to_string()),
-                                }
-                            }
-                        }
-                    }
-                    max_slot_ns.fetch_max(slot_virtual_ns, Ordering::Relaxed);
-                });
+    let totals = run_slots(
+        &cfg.cluster,
+        &scheduler,
+        |desc: &TaskDescriptor, handle, node| {
+            map_task(
+                cfg, dfs, executor, spec, hooks, &cost, &metas, desc, handle, node,
+                &tiles_counter, &tile_hist,
+            )
+        },
+        |_desc, task_outputs| {
+            let mut merged = outputs.lock().unwrap();
+            for (dst, src) in merged.iter_mut().zip(task_outputs) {
+                dst.extend(src);
             }
-        }
-    });
+        },
+    );
 
     if let Some(reason) = scheduler.abort_reason() {
         return Err(DifetError::Job(reason));
     }
 
     let outputs = outputs.into_inner().unwrap();
-    let sim_seconds = cost.job_startup() + max_slot_ns.load(Ordering::Relaxed) as f64 * 1e-9;
+    let sim_seconds = cost.job_startup() + totals.max_slot_ns as f64 * 1e-9;
     let wall_seconds = wall.elapsed_secs();
-    let compute_seconds = compute_ns.load(Ordering::Relaxed) as f64 * 1e-9;
-    let io_seconds = io_ns.load(Ordering::Relaxed) as f64 * 1e-9;
+    let compute_seconds = totals.compute_ns as f64 * 1e-9;
+    let io_seconds = totals.io_ns as f64 * 1e-9;
 
     let mut counters = std::collections::BTreeMap::new();
     counters.insert("tasks".into(), n_tasks as u64);
@@ -327,17 +378,9 @@ pub fn run_fused_job(
     Ok(reports)
 }
 
-struct TaskOutcome {
-    /// Mapper outputs per algorithm (parallel to `FusedJobSpec::algorithms`).
-    outputs: Vec<Vec<MapOutput>>,
-    /// Virtual time this task adds to its slot (overhead + io + compute).
-    virtual_ns: u64,
-    compute_ns: u64,
-    io_ns: u64,
-}
-
 /// The mapper body: split read → record decode → tile loop → aggregate.
 /// Input I/O happens ONCE regardless of how many algorithms are fused.
+/// The payload is one `Vec<MapOutput>` per algorithm (spec order).
 #[allow(clippy::too_many_arguments)]
 fn map_task(
     cfg: &Config,
@@ -352,7 +395,7 @@ fn map_task(
     node: NodeId,
     tiles_counter: &crate::metrics::Counter,
     tile_hist: &crate::metrics::Histogram,
-) -> Result<Option<TaskOutcome>> {
+) -> Result<Option<SlotWork<Vec<Vec<MapOutput>>>>> {
     // Failure injection happens before any work, like a crashed JVM.
     if let Some(f) = &hooks.fail {
         if f(desc.task_id, handle.attempt) {
@@ -418,8 +461,8 @@ fn map_task(
 
     let io_ns = (io_secs * 1e9) as u64;
     let overhead_ns = (cost.task_overhead() * 1e9) as u64;
-    Ok(Some(TaskOutcome {
-        outputs,
+    Ok(Some(SlotWork {
+        payload: outputs,
         virtual_ns: overhead_ns + io_ns + compute_ns,
         compute_ns,
         io_ns,
@@ -448,6 +491,9 @@ fn map_one_image(
     let mut raw_count = vec![0u64; n];
     let mut descriptor_count = vec![0u64; n];
     let mut keypoints: Vec<Vec<crate::features::Keypoint>> = vec![Vec::new(); n];
+    // Descriptor rows parallel to `keypoints` (only filled when the spec
+    // keeps them; `None` rows make every re-rank below a plain sort).
+    let mut descriptors: Vec<Descriptors> = vec![Descriptors::None; n];
     let mut compute_ns = 0u64;
 
     for tile in TileIter::new(image.width, image.height) {
@@ -465,6 +511,12 @@ fn map_one_image(
         for (i, feats) in feats_multi.into_iter().enumerate() {
             raw_count[i] += feats.count;
             descriptor_count[i] += feats.descriptors.len() as u64;
+            if spec.keep_descriptors {
+                // Extractors emit exactly one row per retained keypoint,
+                // in keypoint order, so appending both keeps row i of the
+                // batch describing keypoint i.
+                descriptors[i].append(feats.descriptors)?;
+            }
             for kp in feats.keypoints {
                 let (sr, sc) = tile.to_scene(kp.row, kp.col);
                 keypoints[i].push(crate::features::Keypoint {
@@ -475,8 +527,7 @@ fn map_one_image(
             }
             // Keep the buffer bounded: re-rank and truncate when 4× over.
             if keypoints[i].len() > keeps[i] * 4 {
-                keypoints[i].sort_by(by_score_desc);
-                keypoints[i].truncate(keeps[i]);
+                rank_truncate(&mut keypoints[i], &mut descriptors[i], keeps[i]);
             }
         }
     }
@@ -484,16 +535,241 @@ fn map_one_image(
     let mut out = Vec::with_capacity(n);
     for i in 0..n {
         let mut kps = std::mem::take(&mut keypoints[i]);
-        kps.sort_by(by_score_desc);
-        kps.truncate(keeps[i]);
+        let mut descs = std::mem::take(&mut descriptors[i]);
+        rank_truncate(&mut kps, &mut descs, keeps[i]);
         out.push(MapOutput {
             image_id,
             raw_count: raw_count[i],
             keypoints: kps,
             descriptor_count: descriptor_count[i],
+            descriptors: descs,
         });
     }
     Ok((Some(out), compute_ns))
+}
+
+// ---------------------------------------------------------------------------
+// The registration job: reduce-side scene-pair matching.
+// ---------------------------------------------------------------------------
+
+/// Run a registration job over the per-scene censuses a
+/// `keep_descriptors` extraction produced: shuffle each scene's
+/// keypoints+descriptors into DFS feature files, enumerate scene pairs,
+/// and run reduce-side descriptor matching + translation RANSAC on the
+/// worker slots through the same [`Scheduler`] the map stage uses — pair
+/// tasks get locality (toward the nodes holding the feature files),
+/// bounded retries and straggler speculation for free.
+///
+/// Determinism contract: pair results depend only on the censuses and the
+/// spec (per-pair seeds come from [`pair_seed`]), never on which
+/// node/slot/attempt ran the pair, so the report is byte-identical across
+/// runs and matches the sequential `match_descriptors` +
+/// `ransac_translation` baseline exactly.
+pub fn run_registration_job(
+    cfg: &Config,
+    dfs: &Dfs,
+    censuses: &[ImageCensus],
+    spec: &RegistrationSpec,
+    registry: &Registry,
+    hooks: &JobHooks,
+) -> Result<RegistrationReport> {
+    let wall = Stopwatch::start();
+    let cost = CostModel::new(&cfg.cluster);
+
+    let scene_ids: Vec<u64> = censuses.iter().map(|c| c.image_id).collect();
+    let pairs = shuffle::enumerate_pairs(&scene_ids, spec.pairs.as_deref())?;
+    let by_id: std::collections::BTreeMap<u64, &ImageCensus> =
+        censuses.iter().map(|c| (c.image_id, c)).collect();
+    if by_id.len() != censuses.len() {
+        return Err(DifetError::Job("duplicate image ids in census set".into()));
+    }
+
+    // ---- shuffle: write each referenced scene's features into DFS --------
+    // (the descriptor payloads the paper-shaped map stage would have left
+    // behind; pair reducers fetch them with real locality accounting.)
+    let mut needed: Vec<u64> = pairs.iter().flat_map(|&(a, b)| [a, b]).collect();
+    needed.sort_unstable();
+    needed.dedup();
+    let feature_path =
+        |id: u64| format!("{}/{}/{id}", spec.feature_dir, spec.algorithm);
+    let mut shuffle_write_secs = vec![0.0f64; cfg.cluster.nodes];
+    for &id in &needed {
+        let census = by_id[&id];
+        let bytes = shuffle::encode_features(census);
+        // Spread feature files round-robin, like reducer partitions.
+        let writer = NodeId(id as usize % cfg.cluster.nodes);
+        dfs.write_file(&feature_path(id), &bytes, writer)?;
+        shuffle_write_secs[writer.0] +=
+            cost.hdfs_write(bytes.len() as u64, cfg.cluster.replication);
+    }
+    let shuffle_secs = shuffle_write_secs.iter().cloned().fold(0.0, f64::max);
+
+    // ---- plan: one reduce task per scene pair ----------------------------
+    let tasks: Vec<PairTask> = pairs
+        .iter()
+        .enumerate()
+        .map(|(pair_id, &(a, b))| {
+            let (path_a, path_b) = (feature_path(a), feature_path(b));
+            let mut preferred = Vec::new();
+            for path in [&path_a, &path_b] {
+                if let Ok(meta) = dfs.namenode().file_meta(path) {
+                    if let Ok(nodes) = dfs.locate_range(path, 0, meta.len) {
+                        for n in nodes {
+                            if !preferred.contains(&n) {
+                                preferred.push(n);
+                            }
+                        }
+                    }
+                }
+            }
+            PairTask { pair_id, image_a: a, image_b: b, path_a, path_b, preferred_nodes: preferred }
+        })
+        .collect();
+    let n_pairs = tasks.len();
+
+    let scheduler: Scheduler<PairTask> = Scheduler::new(tasks, &cfg.scheduler);
+    let results: Mutex<Vec<Option<PairResult>>> = Mutex::new(vec![None; n_pairs]);
+    let pairs_counter = registry.counter("pairs_processed");
+    let pair_hist = registry.histogram("pair_latency");
+
+    let totals = run_slots(
+        &cfg.cluster,
+        &scheduler,
+        |task: &PairTask, handle, node| {
+            let work = reduce_pair(dfs, spec, hooks, &cost, task, handle, node)?;
+            if let Some(w) = &work {
+                pair_hist.observe(w.compute_ns as f64 * 1e-9);
+            }
+            Ok(work)
+        },
+        |task, result| {
+            pairs_counter.inc();
+            results.lock().unwrap()[task.pair_id] = Some(result);
+        },
+    );
+
+    if let Some(reason) = scheduler.abort_reason() {
+        return Err(DifetError::Job(reason));
+    }
+
+    let results: Vec<PairResult> = results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .collect::<Option<Vec<_>>>()
+        .ok_or_else(|| DifetError::Job("registration pair lost its result".into()))?;
+
+    let mut counters = std::collections::BTreeMap::new();
+    counters.insert("pairs".into(), n_pairs as u64);
+    counters.insert(
+        "registered_pairs".into(),
+        results.iter().filter(|p| p.translation.is_some()).count() as u64,
+    );
+    counters.insert(
+        "data_local_tasks".into(),
+        scheduler.data_local_tasks.load(Ordering::Relaxed),
+    );
+    counters.insert(
+        "rack_remote_tasks".into(),
+        scheduler.rack_remote_tasks.load(Ordering::Relaxed),
+    );
+    counters.insert(
+        "speculative_launches".into(),
+        scheduler.speculative_launches.load(Ordering::Relaxed),
+    );
+    counters.insert("retries".into(), scheduler.retries.load(Ordering::Relaxed));
+
+    Ok(RegistrationReport {
+        algorithm: spec.algorithm.clone(),
+        nodes: cfg.cluster.nodes,
+        pair_count: n_pairs,
+        sim_seconds: cost.job_startup() + shuffle_secs + totals.max_slot_ns as f64 * 1e-9,
+        wall_seconds: wall.elapsed_secs(),
+        compute_seconds: totals.compute_ns as f64 * 1e-9,
+        io_seconds: totals.io_ns as f64 * 1e-9,
+        pairs: results,
+        counters,
+    })
+}
+
+/// The reducer body: fetch both feature files, match descriptors
+/// (chunked, reporting progress and honouring cancellation so a losing
+/// speculative twin dies mid-scan), then RANSAC the translation.
+fn reduce_pair(
+    dfs: &Dfs,
+    spec: &RegistrationSpec,
+    hooks: &JobHooks,
+    cost: &CostModel,
+    task: &PairTask,
+    handle: &TaskHandle,
+    node: NodeId,
+) -> Result<Option<SlotWork<PairResult>>> {
+    if let Some(f) = &hooks.fail {
+        if f(task.pair_id, handle.attempt) {
+            return Err(DifetError::Job(format!(
+                "injected failure (pair {}, attempt {})",
+                task.pair_id, handle.attempt
+            )));
+        }
+    }
+
+    // --- shuffle input: fetch both scenes' features -----------------------
+    let (bytes_a, stats_a) = dfs.read_file(&task.path_a, node)?;
+    let (bytes_b, stats_b) = dfs.read_file(&task.path_b, node)?;
+    let io_secs = cost.split_input(
+        stats_a.local_bytes + stats_b.local_bytes,
+        stats_a.remote_bytes + stats_b.remote_bytes,
+    );
+    let (id_a, kps_a, desc_a) = shuffle::decode_features(&bytes_a)?;
+    let (id_b, kps_b, desc_b) = shuffle::decode_features(&bytes_b)?;
+    if (id_a, id_b) != (task.image_a, task.image_b) {
+        return Err(DifetError::Job(format!(
+            "feature file routing mixup: wanted ({}, {}), got ({id_a}, {id_b})",
+            task.image_a, task.image_b
+        )));
+    }
+
+    // --- reduce: match + register ----------------------------------------
+    let t0 = std::time::Instant::now();
+    const MATCH_CHUNK: usize = 64;
+    let Some(matches) =
+        match_descriptors_while(&desc_a, &desc_b, spec.ratio, MATCH_CHUNK, &mut |done, total| {
+            handle.report_progress(done as f64 / total.max(1) as f64);
+            !handle.cancelled()
+        })
+    else {
+        return Ok(None); // cancelled: the twin won
+    };
+    if handle.cancelled() {
+        return Ok(None);
+    }
+    let translation = if matches.len() >= spec.min_matches {
+        ransac_translation(
+            &kps_a,
+            &kps_b,
+            &matches,
+            spec.tolerance_px,
+            spec.ransac_iters,
+            pair_seed(spec.seed, task.image_a, task.image_b),
+        )
+    } else {
+        None
+    };
+    let compute_ns = t0.elapsed().as_nanos() as u64;
+
+    let io_ns = (io_secs * 1e9) as u64;
+    let overhead_ns = (cost.task_overhead() * 1e9) as u64;
+    Ok(Some(SlotWork {
+        payload: PairResult {
+            image_a: task.image_a,
+            image_b: task.image_b,
+            matches: matches.len(),
+            translation,
+        },
+        virtual_ns: overhead_ns + io_ns + compute_ns,
+        compute_ns,
+        io_ns,
+    }))
 }
 
 /// Serialize a mapper output (the record written back to DFS).

@@ -2,7 +2,9 @@
 
 use std::collections::BTreeMap;
 
-use crate::features::Keypoint;
+use crate::dfs::NodeId;
+use crate::features::matching::Translation;
+use crate::features::{Descriptors, Keypoint};
 
 /// Default bound on keypoints retained per image in final reports —
 /// the single constant the distributed merge and the sequential baseline
@@ -64,6 +66,11 @@ pub struct FusedJobSpec {
     pub bundle_path: String,
     pub report_keypoints: usize,
     pub write_output: bool,
+    /// Carry descriptor payloads for the retained keypoints through the
+    /// shuffle into the [`ImageCensus`]es (what a downstream registration
+    /// job consumes).  Off by default: censuses-only jobs shouldn't pay
+    /// the descriptor memory.
+    pub keep_descriptors: bool,
 }
 
 impl FusedJobSpec {
@@ -78,6 +85,7 @@ impl FusedJobSpec {
             bundle_path: bundle_path.to_string(),
             report_keypoints: DEFAULT_REPORT_KEYPOINTS,
             write_output: true,
+            keep_descriptors: false,
         }
     }
 }
@@ -92,6 +100,7 @@ impl From<&JobSpec> for FusedJobSpec {
             bundle_path: spec.bundle_path.clone(),
             report_keypoints: spec.report_keypoints,
             write_output: spec.write_output,
+            keep_descriptors: false,
         }
     }
 }
@@ -106,6 +115,10 @@ pub struct MapOutput {
     pub keypoints: Vec<Keypoint>,
     /// Number of descriptors computed (== keypoints for desc algorithms).
     pub descriptor_count: u64,
+    /// Descriptor rows parallel to `keypoints` when the spec asked for
+    /// them ([`FusedJobSpec::keep_descriptors`]); `Descriptors::None`
+    /// otherwise.
+    pub descriptors: Descriptors,
 }
 
 /// Final per-image result after the shuffle/merge stage.
@@ -117,6 +130,9 @@ pub struct ImageCensus {
     /// Pre-cap census (diagnostics; == count when no cap applies).
     pub raw_count: u64,
     pub keypoints: Vec<Keypoint>,
+    /// Descriptor rows parallel to `keypoints` (present only when the
+    /// job ran with `keep_descriptors`).
+    pub descriptors: Descriptors,
 }
 
 /// Whole-job result: Table 1 cell (+ Table 2 rows via `images`).
@@ -143,6 +159,130 @@ impl JobReport {
     /// Total feature census (Table 2 cell).
     pub fn total_count(&self) -> u64 {
         self.images.iter().map(|i| i.count).sum()
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registration job: the reduce-shaped second stage.
+// ---------------------------------------------------------------------------
+
+/// What to register: scene pairs over one extracted census set.
+///
+/// The registration job is the system's first reduce-shaped workload: it
+/// consumes the per-scene keypoints+descriptors a `keep_descriptors`
+/// extraction produced, shuffles them into pair work units and recovers a
+/// translation per pair (Sarı et al. 2018's stitching stage on the same
+/// cluster).
+#[derive(Debug, Clone)]
+pub struct RegistrationSpec {
+    /// Which algorithm's census/descriptors to match (must be a
+    /// descriptor algorithm: sift/surf/brief/orb).
+    pub algorithm: String,
+    /// Explicit scene-id pairs, or `None` for every unordered pair.
+    pub pairs: Option<Vec<(u64, u64)>>,
+    /// Lowe ratio-test threshold.
+    pub ratio: f32,
+    /// RANSAC inlier tolerance in pixels.
+    pub tolerance_px: f32,
+    /// RANSAC hypothesis count per pair.
+    pub ransac_iters: usize,
+    /// Base seed; each pair derives its own via [`pair_seed`], so results
+    /// are independent of which slot/attempt runs the pair.
+    pub seed: u64,
+    /// Pairs with fewer ratio-test matches than this report no
+    /// translation (too little signal for a trustworthy consensus).
+    pub min_matches: usize,
+    /// DFS directory the shuffled per-scene feature files land in.
+    pub feature_dir: String,
+}
+
+impl RegistrationSpec {
+    pub fn new(algorithm: &str) -> Self {
+        RegistrationSpec {
+            algorithm: algorithm.to_string(),
+            pairs: None,
+            ratio: 0.85,
+            tolerance_px: 3.0,
+            ransac_iters: 256,
+            seed: 7,
+            min_matches: 8,
+            feature_dir: "/shuffle/features".into(),
+        }
+    }
+}
+
+/// Deterministic per-pair RANSAC seed: mixes the job seed with both scene
+/// ids (SplitMix64-style finalizer) so every pair draws an independent
+/// stream and the distributed job matches the sequential baseline exactly.
+pub fn pair_seed(base: u64, a: u64, b: u64) -> u64 {
+    let mut z = base
+        .wrapping_add(a.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        .wrapping_add(b.wrapping_mul(0xBF58_476D_1CE4_E5B9));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// One reduce work unit: register scene `image_b` against `image_a`.
+#[derive(Debug, Clone)]
+pub struct PairTask {
+    pub pair_id: usize,
+    pub image_a: u64,
+    pub image_b: u64,
+    /// DFS paths of the two shuffled feature files.
+    pub path_a: String,
+    pub path_b: String,
+    /// Nodes holding replicas of the feature files, best first.
+    pub preferred_nodes: Vec<NodeId>,
+}
+
+impl super::scheduler::WorkItem for PairTask {
+    fn preferred_nodes(&self) -> &[NodeId] {
+        &self.preferred_nodes
+    }
+}
+
+/// One registered pair (reduce output).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PairResult {
+    pub image_a: u64,
+    pub image_b: u64,
+    /// Ratio-test matches fed to RANSAC.
+    pub matches: usize,
+    /// Recovered translation taking A-coordinates to B-coordinates
+    /// (`None`: fewer than `min_matches` matches, or no consensus).
+    pub translation: Option<Translation>,
+}
+
+/// Whole registration-job result, shaped like [`JobReport`] so the same
+/// reporting/accounting conventions apply.
+#[derive(Debug, Clone)]
+pub struct RegistrationReport {
+    pub algorithm: String,
+    pub nodes: usize,
+    pub pair_count: usize,
+    /// Simulated job time: startup + shuffle + max-over-slots virtual time.
+    pub sim_seconds: f64,
+    pub wall_seconds: f64,
+    pub compute_seconds: f64,
+    pub io_seconds: f64,
+    /// Pair results in (image_a, image_b) order.
+    pub pairs: Vec<PairResult>,
+    pub counters: BTreeMap<String, u64>,
+}
+
+impl RegistrationReport {
+    pub fn pair(&self, a: u64, b: u64) -> Option<&PairResult> {
+        self.pairs.iter().find(|p| p.image_a == a && p.image_b == b)
+    }
+
+    /// Pairs that produced a consensus translation.
+    pub fn registered_count(&self) -> usize {
+        self.pairs.iter().filter(|p| p.translation.is_some()).count()
     }
 
     pub fn counter(&self, name: &str) -> u64 {
@@ -192,6 +332,7 @@ mod tests {
             count,
             raw_count: count + 7,
             keypoints: vec![],
+            descriptors: Descriptors::None,
         };
         let rep = JobReport {
             algorithm: "orb".into(),
@@ -206,5 +347,36 @@ mod tests {
         };
         assert_eq!(rep.total_count(), 1000);
         assert_eq!(rep.counter("nope"), 0);
+    }
+
+    #[test]
+    fn pair_seed_is_deterministic_and_pair_sensitive() {
+        assert_eq!(pair_seed(7, 0, 1), pair_seed(7, 0, 1));
+        assert_ne!(pair_seed(7, 0, 1), pair_seed(7, 1, 0));
+        assert_ne!(pair_seed(7, 0, 1), pair_seed(7, 0, 2));
+        assert_ne!(pair_seed(7, 0, 1), pair_seed(8, 0, 1));
+    }
+
+    #[test]
+    fn registration_report_lookup_and_counts() {
+        let t = Translation { d_row: 1.0, d_col: -2.0, inliers: 30 };
+        let rep = RegistrationReport {
+            algorithm: "orb".into(),
+            nodes: 2,
+            pair_count: 2,
+            sim_seconds: 1.0,
+            wall_seconds: 0.1,
+            compute_seconds: 0.05,
+            io_seconds: 0.02,
+            pairs: vec![
+                PairResult { image_a: 0, image_b: 1, matches: 50, translation: Some(t) },
+                PairResult { image_a: 0, image_b: 2, matches: 3, translation: None },
+            ],
+            counters: BTreeMap::new(),
+        };
+        assert_eq!(rep.pair(0, 1).unwrap().matches, 50);
+        assert!(rep.pair(1, 0).is_none());
+        assert_eq!(rep.registered_count(), 1);
+        assert_eq!(rep.counter("tasks"), 0);
     }
 }

@@ -14,9 +14,15 @@
 //!   (measured compute + modeled I/O) and renders Hadoop-style reports.
 //! * [`shuffle`] — the reduce side: merge per-tile outputs into per-image
 //!   censuses, applying the per-image caps Table 2 exposes (Shi-Tomasi
-//!   400, ORB 500).
+//!   400, ORB 500), plus descriptor routing (feature files + pair
+//!   enumeration) for the registration job.
 //! * [`backpressure`] — the bounded queue used between planning and
 //!   execution, so a slow cluster never buffers the whole corpus.
+//!
+//! Two job shapes run on this engine: the paper's map-shaped extraction
+//! ([`run_job`]/[`run_fused_job`]) and the reduce-shaped *registration*
+//! job ([`run_registration_job`]) that turns extracted descriptors into
+//! cross-scene matches — the stitching front-end the paper motivates.
 
 pub mod backpressure;
 pub mod driver;
@@ -24,7 +30,10 @@ pub mod job;
 pub mod scheduler;
 pub mod shuffle;
 
-pub use driver::{run_fused_job, run_job, TileExecutor};
-pub use job::{FusedJobSpec, ImageCensus, JobReport, JobSpec, MapOutput};
-pub use scheduler::{Scheduler, TaskDescriptor, TaskState};
-pub use shuffle::merge_image_outputs;
+pub use driver::{run_fused_job, run_job, run_registration_job, TileExecutor};
+pub use job::{
+    pair_seed, FusedJobSpec, ImageCensus, JobReport, JobSpec, MapOutput, PairResult, PairTask,
+    RegistrationReport, RegistrationSpec,
+};
+pub use scheduler::{Clock, Scheduler, TaskDescriptor, TaskState, WorkItem};
+pub use shuffle::{decode_features, encode_features, enumerate_pairs, merge_image_outputs};

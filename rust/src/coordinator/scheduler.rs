@@ -14,12 +14,36 @@
 //!   clone the running task with the lowest progress rate, if its rate is
 //!   below `slowness × mean`.  First finisher wins; the clone is killed
 //!   cooperatively via [`TaskHandle::cancelled`].
+//!
+//! The scheduler is generic over the work unit ([`WorkItem`]): map splits
+//! ([`TaskDescriptor`]) and registration scene pairs
+//! ([`super::job::PairTask`]) share the same locality/retry/speculation
+//! machinery.  Progress rates are measured against an injectable
+//! monotonic [`Clock`] so tests can drive speculation deterministically.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::config::SchedulerConfig;
 use crate::dfs::NodeId;
+
+/// Anything the scheduler can hand to a worker slot.  Cheap to clone (it
+/// is cloned once per attempt) and locality-addressable.
+pub trait WorkItem: Clone + Send + Sync {
+    /// Nodes where running this item is data-local, best first.
+    fn preferred_nodes(&self) -> &[NodeId];
+}
+
+/// Monotonic nanosecond source used for progress-rate estimation.
+/// Production uses wall-clock monotonic time; tests inject a manual
+/// counter so straggler detection needs no real sleeps.
+pub type Clock = Arc<dyn Fn() -> u64 + Send + Sync>;
+
+/// Real monotonic clock: nanoseconds since an arbitrary (per-clock) epoch.
+pub fn monotonic_clock() -> Clock {
+    let epoch = std::time::Instant::now();
+    Arc::new(move || epoch.elapsed().as_nanos() as u64)
+}
 
 /// Static description of one map task (an input split).
 #[derive(Debug, Clone)]
@@ -33,6 +57,12 @@ pub struct TaskDescriptor {
     pub byte_end: u64,
     /// Nodes holding replicas of the split's blocks, best first.
     pub preferred_nodes: Vec<NodeId>,
+}
+
+impl WorkItem for TaskDescriptor {
+    fn preferred_nodes(&self) -> &[NodeId] {
+        &self.preferred_nodes
+    }
 }
 
 /// Task lifecycle (visible to tests/reports).
@@ -69,31 +99,33 @@ impl TaskHandle {
 struct Attempt {
     cancel: Arc<AtomicBool>,
     progress_milli: Arc<AtomicU64>,
-    started_at: std::time::Instant,
+    /// Clock reading at launch (progress-rate denominator).
+    started_ns: u64,
     #[allow(dead_code)]
     node: NodeId,
 }
 
-struct TaskEntry {
-    desc: TaskDescriptor,
+struct TaskEntry<D> {
+    desc: D,
     state: TaskState,
     attempts_started: usize,
     running: Vec<(usize, Attempt)>, // (attempt index, attempt)
     speculated: bool,
 }
 
-struct SchedState {
-    tasks: Vec<TaskEntry>,
+struct SchedState<D> {
+    tasks: Vec<TaskEntry<D>>,
     pending: Vec<usize>, // task ids, FIFO
     outstanding: usize,  // tasks not yet succeeded/failed-permanently
     aborted: Option<String>,
 }
 
 /// The scheduler shared between the driver and all worker threads.
-pub struct Scheduler {
-    state: Mutex<SchedState>,
+pub struct Scheduler<D: WorkItem = TaskDescriptor> {
+    state: Mutex<SchedState<D>>,
     work_available: Condvar,
     cfg: SchedulerConfig,
+    clock: Clock,
     pub data_local_tasks: AtomicU64,
     pub rack_remote_tasks: AtomicU64,
     pub speculative_launches: AtomicU64,
@@ -101,15 +133,21 @@ pub struct Scheduler {
 }
 
 /// What a worker slot gets when it asks for work.
-pub enum Assignment {
+pub enum Assignment<D = TaskDescriptor> {
     /// Run this task attempt.
-    Run(TaskDescriptor, TaskHandle),
+    Run(D, TaskHandle),
     /// Nothing now and never again: job complete (or aborted).
     Done,
 }
 
-impl Scheduler {
-    pub fn new(tasks: Vec<TaskDescriptor>, cfg: &SchedulerConfig) -> Self {
+impl<D: WorkItem> Scheduler<D> {
+    pub fn new(tasks: Vec<D>, cfg: &SchedulerConfig) -> Self {
+        Self::with_clock(tasks, cfg, monotonic_clock())
+    }
+
+    /// Like [`Scheduler::new`] with an explicit progress clock (tests
+    /// inject a manual counter to drive speculation without sleeping).
+    pub fn with_clock(tasks: Vec<D>, cfg: &SchedulerConfig, clock: Clock) -> Self {
         let n = tasks.len();
         let entries = tasks
             .into_iter()
@@ -130,6 +168,7 @@ impl Scheduler {
             }),
             work_available: Condvar::new(),
             cfg: cfg.clone(),
+            clock,
             data_local_tasks: AtomicU64::new(0),
             rack_remote_tasks: AtomicU64::new(0),
             speculative_launches: AtomicU64::new(0),
@@ -138,7 +177,7 @@ impl Scheduler {
     }
 
     /// Blocking work request from a slot on `node`.
-    pub fn next_assignment(&self, node: NodeId) -> Assignment {
+    pub fn next_assignment(&self, node: NodeId) -> Assignment<D> {
         let mut st = self.state.lock().unwrap();
         loop {
             if st.outstanding == 0 || st.aborted.is_some() {
@@ -148,7 +187,7 @@ impl Scheduler {
             let pick = if self.cfg.locality_aware {
                 st.pending
                     .iter()
-                    .position(|&tid| st.tasks[tid].desc.preferred_nodes.contains(&node))
+                    .position(|&tid| st.tasks[tid].desc.preferred_nodes().contains(&node))
             } else {
                 None
             };
@@ -156,7 +195,7 @@ impl Scheduler {
 
             if let Some(idx) = pick {
                 let tid = st.pending.remove(idx);
-                let local = st.tasks[tid].desc.preferred_nodes.contains(&node);
+                let local = st.tasks[tid].desc.preferred_nodes().contains(&node);
                 if local {
                     self.data_local_tasks.fetch_add(1, Ordering::Relaxed);
                 } else {
@@ -178,7 +217,7 @@ impl Scheduler {
         }
     }
 
-    fn launch(&self, st: &mut SchedState, tid: usize, node: NodeId) -> TaskHandle {
+    fn launch(&self, st: &mut SchedState<D>, tid: usize, node: NodeId) -> TaskHandle {
         let entry = &mut st.tasks[tid];
         entry.state = TaskState::Running;
         entry.attempts_started += 1;
@@ -190,7 +229,7 @@ impl Scheduler {
             Attempt {
                 cancel: cancel.clone(),
                 progress_milli: progress.clone(),
-                started_at: std::time::Instant::now(),
+                started_ns: (self.clock)(),
                 node,
             },
         ));
@@ -204,14 +243,15 @@ impl Scheduler {
 
     /// Pick the slowest running, not-yet-speculated task whose progress
     /// rate is below `slowness ×` the mean rate of running tasks.
-    fn pick_straggler(&self, st: &SchedState) -> Option<usize> {
+    fn pick_straggler(&self, st: &SchedState<D>) -> Option<usize> {
+        let now_ns = (self.clock)();
         let mut rates: Vec<(usize, f64)> = Vec::new();
         for (tid, e) in st.tasks.iter().enumerate() {
             if e.state != TaskState::Running || e.speculated || e.running.is_empty() {
                 continue;
             }
             let (_, a) = &e.running[0];
-            let elapsed = a.started_at.elapsed().as_secs_f64().max(1e-3);
+            let elapsed = (now_ns.saturating_sub(a.started_ns) as f64 * 1e-9).max(1e-3);
             let rate = a.progress_milli.load(Ordering::Relaxed) as f64 / 1000.0 / elapsed;
             rates.push((tid, rate));
         }
@@ -372,12 +412,21 @@ mod tests {
         assert!(matches!(s.next_assignment(NodeId(0)), Assignment::Done));
     }
 
+    /// Manual clock: an atomic nanosecond counter the test advances, so
+    /// progress rates are exact and the test cannot race real time.
+    fn manual_clock() -> (Arc<AtomicU64>, Clock) {
+        let ticks = Arc::new(AtomicU64::new(0));
+        let t = ticks.clone();
+        (ticks, Arc::new(move || t.load(Ordering::Relaxed)))
+    }
+
     #[test]
     fn speculation_duplicates_slow_task_and_first_wins() {
         let mut c = cfg();
         c.speculation = true;
         c.speculation_slowness = 0.9;
-        let s = Scheduler::new(vec![desc(0, &[]), desc(1, &[])], &c);
+        let (ticks, clock) = manual_clock();
+        let s = Scheduler::with_clock(vec![desc(0, &[]), desc(1, &[])], &c, clock);
         let h0 = match s.next_assignment(NodeId(0)) {
             Assignment::Run(d, h) => {
                 assert_eq!(d.task_id, 0);
@@ -392,10 +441,12 @@ mod tests {
             }
             _ => panic!(),
         };
-        // Task 0 races ahead; task 1 crawls.
+        // Task 0 races ahead; task 1 crawls.  One simulated second elapses
+        // (well past the 1 ms rate floor), making the rates exactly
+        // 0.9/s vs 0.05/s — no real sleeping, nothing for CI to race.
         h0.report_progress(0.9);
         h1.report_progress(0.05);
-        std::thread::sleep(std::time::Duration::from_millis(20));
+        ticks.fetch_add(1_000_000_000, Ordering::Relaxed);
         // An idle slot now speculates task 1.
         let h1b = match s.next_assignment(NodeId(2)) {
             Assignment::Run(d, h) => {
@@ -413,6 +464,76 @@ mod tests {
         assert!(!s.report_success(&h1));
         s.report_success(&h0);
         assert!(matches!(s.next_assignment(NodeId(0)), Assignment::Done));
+    }
+
+    #[test]
+    fn speculation_needs_a_peer_to_compare_against() {
+        // With a single running task there is no mean rate to be below:
+        // an idle slot must block instead of speculating, and drain to
+        // Done once the only task succeeds.
+        let mut c = cfg();
+        c.speculation = true;
+        let (ticks, clock) = manual_clock();
+        let s = Arc::new(Scheduler::with_clock(vec![desc(0, &[])], &c, clock));
+        let h = match s.next_assignment(NodeId(0)) {
+            Assignment::Run(_, h) => h,
+            _ => panic!(),
+        };
+        h.report_progress(0.01);
+        ticks.fetch_add(5_000_000_000, Ordering::Relaxed);
+        let probe = std::thread::spawn({
+            let s = s.clone();
+            move || matches!(s.next_assignment(NodeId(1)), Assignment::Done)
+        });
+        assert!(s.report_success(&h)); // wakes the blocked probe
+        assert!(probe.join().unwrap(), "probe slot should see Done");
+        assert_eq!(s.speculative_launches.load(Ordering::Relaxed), 0);
+    }
+
+    /// A minimal non-split work item: the scheduler must be usable for
+    /// reduce-shaped workloads (scene pairs) too.
+    #[derive(Clone)]
+    struct Unit {
+        nodes: Vec<NodeId>,
+    }
+    impl WorkItem for Unit {
+        fn preferred_nodes(&self) -> &[NodeId] {
+            &self.nodes
+        }
+    }
+
+    #[test]
+    fn generic_work_items_get_locality_and_retries() {
+        let mut c = cfg();
+        c.max_attempts = 2;
+        let s = Scheduler::new(
+            vec![Unit { nodes: vec![NodeId(1)] }, Unit { nodes: vec![NodeId(0)] }],
+            &c,
+        );
+        // Locality holds for non-TaskDescriptor items.
+        let h = match s.next_assignment(NodeId(1)) {
+            Assignment::Run(u, h) => {
+                assert_eq!(u.nodes, vec![NodeId(1)]);
+                h
+            }
+            _ => panic!("expected work"),
+        };
+        // Retry path: first attempt fails, re-queued attempt succeeds.
+        s.report_failure(&h, "transient");
+        let h2 = match s.next_assignment(NodeId(1)) {
+            Assignment::Run(_, h2) => h2,
+            _ => panic!("expected requeued work"),
+        };
+        assert_eq!((h2.task_id, h2.attempt), (h.task_id, 1));
+        assert!(s.report_success(&h2));
+        assert_eq!(s.retries.load(Ordering::Relaxed), 1);
+        match s.next_assignment(NodeId(0)) {
+            Assignment::Run(_, h3) => {
+                assert!(s.report_success(&h3));
+            }
+            _ => panic!("expected second unit"),
+        }
+        assert!(matches!(s.next_assignment(NodeId(3)), Assignment::Done));
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! The shuffle/merge stage: per-tile mapper outputs → per-image censuses.
+//! The shuffle stage: per-tile mapper outputs → per-image censuses, and
+//! per-image features → pair work units for the registration job.
 //!
 //! The paper's job is map-only (each mapper owns whole images and writes
 //! straight back to HDFS), but DIFET tiles images across tasks, so a
@@ -6,43 +7,245 @@
 //! OpenCV caps surface: Table 2's Shi-Tomasi row is exactly `400·N` and
 //! ORB's `500·N` because `goodFeaturesToTrack(maxCorners=400)` /
 //! `ORB(nfeatures=500)` keep only the strongest keypoints per image.
+//!
+//! For the registration job the shuffle also routes *descriptor
+//! payloads*: per-scene keypoints+descriptors are serialized into DFS
+//! feature files ([`encode_features`]/[`decode_features`], CRC-guarded)
+//! and scene pairs are enumerated into reduce work units
+//! ([`enumerate_pairs`]).
 
 use std::collections::BTreeMap;
 
-use crate::features::nms::by_score_desc;
+use byteorder::{ByteOrder, LittleEndian as LE};
+
+use crate::features::nms::rank_truncate;
+use crate::features::{Descriptors, Keypoint};
+use crate::util::{crc32, DifetError, Result};
 
 use super::job::{final_retention, ImageCensus, MapOutput};
 
 /// Merge mapper outputs (one or more per image) into per-image censuses,
-/// applying the per-image cap and the report keypoint bound.
+/// applying the per-image cap and the report keypoint bound.  Descriptor
+/// rows (when mappers carried them) ride the same re-ranking: row *i* of
+/// a census's descriptors always describes keypoint *i*.
 pub fn merge_image_outputs(
     outputs: Vec<MapOutput>,
     per_image_cap: Option<usize>,
     report_keypoints: usize,
 ) -> Vec<ImageCensus> {
-    let mut by_image: BTreeMap<u64, (u64, Vec<crate::features::Keypoint>)> = BTreeMap::new();
+    // Per image: (raw census, keypoints, descriptor rows, poisoned flag).
+    let mut by_image: BTreeMap<u64, (u64, Vec<Keypoint>, Descriptors, bool)> = BTreeMap::new();
     for out in outputs {
         let entry = by_image.entry(out.image_id).or_default();
         entry.0 += out.raw_count;
         entry.1.extend(out.keypoints);
+        // Variant mismatches cannot happen within one job (one algorithm,
+        // one descriptor kind); a poisoned merge degrades to dropping the
+        // payload rather than failing the census path — and STAYS dropped,
+        // so a later output cannot re-adopt a variant with fewer rows than
+        // the merged keypoint list (which would misalign the gather).
+        if entry.3 || entry.2.append(out.descriptors).is_err() {
+            entry.2 = Descriptors::None;
+            entry.3 = true;
+        }
     }
     by_image
         .into_iter()
-        .map(|(image_id, (raw_count, mut kps))| {
-            kps.sort_by(by_score_desc);
+        .map(|(image_id, (raw_count, mut kps, mut descriptors, dropped))| {
+            // Alignment guard: descriptor row i must describe keypoint i.
+            // Any drift (poisoned merge, or a caller mixing descriptorless
+            // outputs with descriptor-bearing ones) drops the payload.
+            if dropped
+                || (!matches!(descriptors, Descriptors::None)
+                    && descriptors.len() != kps.len())
+            {
+                descriptors = Descriptors::None;
+            }
             let count = match per_image_cap {
                 Some(cap) => raw_count.min(cap as u64),
                 None => raw_count,
             };
-            kps.truncate(final_retention(per_image_cap, report_keypoints));
+            rank_truncate(
+                &mut kps,
+                &mut descriptors,
+                final_retention(per_image_cap, report_keypoints),
+            );
             ImageCensus {
                 image_id,
                 count,
                 raw_count,
                 keypoints: kps,
+                descriptors,
             }
         })
         .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Descriptor routing for the registration job.
+// ---------------------------------------------------------------------------
+
+const FEATURE_MAGIC: u32 = 0x4446_5452; // "DFTR"
+
+/// Serialize one scene's retained keypoints + descriptors — the record a
+/// registration reducer fetches from DFS.  Layout (all little-endian):
+/// magic, image_id, keypoint count, descriptor variant tag (+dim),
+/// keypoint triples, descriptor payload, CRC32 of everything prior.
+pub fn encode_features(census: &ImageCensus) -> Vec<u8> {
+    let kps = &census.keypoints;
+    let mut buf = Vec::with_capacity(32 + kps.len() * 12 + census.descriptors.len() * 32);
+    let mut w32 = |buf: &mut Vec<u8>, v: u32| {
+        let mut b = [0u8; 4];
+        LE::write_u32(&mut b, v);
+        buf.extend_from_slice(&b);
+    };
+    w32(&mut buf, FEATURE_MAGIC);
+    let mut b8 = [0u8; 8];
+    LE::write_u64(&mut b8, census.image_id);
+    buf.extend_from_slice(&b8);
+    w32(&mut buf, kps.len() as u32);
+    match &census.descriptors {
+        Descriptors::None => w32(&mut buf, 0),
+        Descriptors::F32 { dim, .. } => {
+            w32(&mut buf, 1);
+            w32(&mut buf, *dim as u32);
+        }
+        Descriptors::Binary256(_) => w32(&mut buf, 2),
+    }
+    for kp in kps {
+        w32(&mut buf, kp.row as u32);
+        w32(&mut buf, kp.col as u32);
+        w32(&mut buf, kp.score.to_bits());
+    }
+    match &census.descriptors {
+        Descriptors::None => {}
+        Descriptors::F32 { data, .. } => {
+            for v in data {
+                w32(&mut buf, v.to_bits());
+            }
+        }
+        Descriptors::Binary256(rows) => {
+            for row in rows {
+                for word in row {
+                    w32(&mut buf, *word);
+                }
+            }
+        }
+    }
+    let crc = crc32::hash(&buf);
+    w32(&mut buf, crc);
+    buf
+}
+
+/// Decode a feature file; the inverse of [`encode_features`].
+pub fn decode_features(bytes: &[u8]) -> Result<(u64, Vec<Keypoint>, Descriptors)> {
+    let corrupt = |what: &str| DifetError::Job(format!("feature file corrupt: {what}"));
+    // 20-byte fixed header + 4-byte trailing CRC is the smallest stream.
+    if bytes.len() < 24 {
+        return Err(corrupt("truncated header"));
+    }
+    let (body, crc_bytes) = bytes.split_at(bytes.len() - 4);
+    if crc32::hash(body) != LE::read_u32(crc_bytes) {
+        return Err(corrupt("checksum mismatch"));
+    }
+    if LE::read_u32(&body[0..4]) != FEATURE_MAGIC {
+        return Err(corrupt("bad magic"));
+    }
+    let image_id = LE::read_u64(&body[4..12]);
+    let n = LE::read_u32(&body[12..16]) as usize;
+    let variant = LE::read_u32(&body[16..20]);
+
+    fn take<'a>(body: &'a [u8], off: &mut usize, count: usize) -> Result<&'a [u8]> {
+        let end = off
+            .checked_add(count)
+            .filter(|&e| e <= body.len())
+            .ok_or_else(|| DifetError::Job("feature file corrupt: truncated payload".into()))?;
+        let s = &body[*off..end];
+        *off = end;
+        Ok(s)
+    }
+
+    let mut off = 20usize;
+    let dim = if variant == 1 {
+        LE::read_u32(take(body, &mut off, 4)?) as usize
+    } else {
+        0
+    };
+    let mut keypoints = Vec::with_capacity(n);
+    for _ in 0..n {
+        let rec = take(body, &mut off, 12)?;
+        keypoints.push(Keypoint {
+            row: LE::read_u32(&rec[0..4]) as i32,
+            col: LE::read_u32(&rec[4..8]) as i32,
+            score: f32::from_bits(LE::read_u32(&rec[8..12])),
+        });
+    }
+    let descriptors = match variant {
+        0 => Descriptors::None,
+        1 => {
+            let raw = take(body, &mut off, n.saturating_mul(dim).saturating_mul(4))?;
+            let mut data = Vec::with_capacity(n * dim);
+            for chunk in raw.chunks_exact(4) {
+                data.push(f32::from_bits(LE::read_u32(chunk)));
+            }
+            Descriptors::F32 { dim, data }
+        }
+        2 => {
+            let raw = take(body, &mut off, n.saturating_mul(32))?;
+            let mut rows = Vec::with_capacity(n);
+            for rec in raw.chunks_exact(32) {
+                let mut row = [0u32; 8];
+                for (w, chunk) in row.iter_mut().zip(rec.chunks_exact(4)) {
+                    *w = LE::read_u32(chunk);
+                }
+                rows.push(row);
+            }
+            Descriptors::Binary256(rows)
+        }
+        v => return Err(corrupt(&format!("unknown descriptor variant {v}"))),
+    };
+    if off != body.len() {
+        return Err(corrupt("trailing bytes"));
+    }
+    Ok((image_id, keypoints, descriptors))
+}
+
+/// Expand a registration spec's pair selection against the scenes that
+/// actually exist: `None` → every unordered pair (a < b, sorted), an
+/// explicit list → validated as-is (order preserved, self-pairs and
+/// unknown ids rejected).
+pub fn enumerate_pairs(
+    scene_ids: &[u64],
+    requested: Option<&[(u64, u64)]>,
+) -> Result<Vec<(u64, u64)>> {
+    match requested {
+        Some(pairs) => {
+            for &(a, b) in pairs {
+                if a == b {
+                    return Err(DifetError::Job(format!("self-pair ({a}, {b})")));
+                }
+                for id in [a, b] {
+                    if !scene_ids.contains(&id) {
+                        return Err(DifetError::Job(format!(
+                            "pair ({a}, {b}) references unknown scene {id}"
+                        )));
+                    }
+                }
+            }
+            Ok(pairs.to_vec())
+        }
+        None => {
+            let mut ids = scene_ids.to_vec();
+            ids.sort_unstable();
+            let mut out = Vec::with_capacity(ids.len() * ids.len().saturating_sub(1) / 2);
+            for i in 0..ids.len() {
+                for j in (i + 1)..ids.len() {
+                    out.push((ids[i], ids[j]));
+                }
+            }
+            Ok(out)
+        }
+    }
 }
 
 #[cfg(test)]
@@ -65,6 +268,7 @@ mod tests {
                 })
                 .collect(),
             descriptor_count: scores.len() as u64,
+            descriptors: Descriptors::None,
         }
     }
 
@@ -119,6 +323,152 @@ mod tests {
         assert_eq!(kps[0].score, 0.9);
         assert_eq!(kps[1].score, 0.2);
         assert!(kps[2].score.is_nan(), "NaN must sort last");
+    }
+
+    #[test]
+    fn merge_reranks_descriptor_rows_with_their_keypoints() {
+        // Two mapper outputs of one image; descriptor rows tag their
+        // original keypoint so we can watch them travel.
+        let mk = |scores: &[f32], tag: u32| MapOutput {
+            image_id: 3,
+            raw_count: scores.len() as u64,
+            keypoints: scores
+                .iter()
+                .enumerate()
+                .map(|(i, &s)| Keypoint { row: (tag * 100 + i as u32) as i32, col: 0, score: s })
+                .collect(),
+            descriptor_count: scores.len() as u64,
+            descriptors: Descriptors::Binary256(
+                scores
+                    .iter()
+                    .enumerate()
+                    .map(|(i, _)| [tag * 100 + i as u32; 8])
+                    .collect(),
+            ),
+        };
+        let merged = merge_image_outputs(vec![mk(&[0.2, 0.9], 1), mk(&[0.7], 2)], None, 2);
+        assert_eq!(merged.len(), 1);
+        let m = &merged[0];
+        // Strongest two keypoints: 0.9 (row 101) then 0.7 (row 200).
+        assert_eq!(m.keypoints.len(), 2);
+        assert_eq!((m.keypoints[0].row, m.keypoints[1].row), (101, 200));
+        match &m.descriptors {
+            Descriptors::Binary256(rows) => {
+                assert_eq!(rows.len(), 2);
+                assert_eq!(rows[0][0], 101);
+                assert_eq!(rows[1][0], 200);
+            }
+            other => panic!("descriptors dropped: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn mismatched_descriptor_variants_drop_payload_without_panicking() {
+        let mk = |scores: &[f32], descriptors: Descriptors| MapOutput {
+            image_id: 0,
+            raw_count: scores.len() as u64,
+            keypoints: scores
+                .iter()
+                .enumerate()
+                .map(|(i, &s)| Keypoint { row: i as i32, col: 0, score: s })
+                .collect(),
+            descriptor_count: descriptors.len() as u64,
+            descriptors,
+        };
+        // Binary → F32 → Binary: the merge poisons at the second output
+        // and must NOT re-adopt the third (fewer rows than keypoints).
+        let merged = merge_image_outputs(
+            vec![
+                mk(&[0.9, 0.8], Descriptors::Binary256(vec![[1; 8], [2; 8]])),
+                mk(&[0.7], Descriptors::F32 { dim: 2, data: vec![0.0, 1.0] }),
+                mk(&[0.6], Descriptors::Binary256(vec![[3; 8]])),
+            ],
+            None,
+            10,
+        );
+        assert_eq!(merged[0].keypoints.len(), 4);
+        assert_eq!(merged[0].descriptors, Descriptors::None);
+        // Descriptorless outputs mixed with descriptor-bearing ones also
+        // misalign rows vs keypoints: payload dropped, keypoints kept.
+        let merged = merge_image_outputs(
+            vec![
+                mk(&[0.9, 0.8], Descriptors::None),
+                mk(&[0.7], Descriptors::Binary256(vec![[3; 8]])),
+            ],
+            None,
+            10,
+        );
+        assert_eq!(merged[0].keypoints.len(), 3);
+        assert_eq!(merged[0].descriptors, Descriptors::None);
+    }
+
+    #[test]
+    fn feature_files_roundtrip_all_variants() {
+        let kps = vec![
+            Keypoint { row: 5, col: -3, score: 1.5 },
+            Keypoint { row: 1000, col: 7, score: f32::NAN },
+        ];
+        let variants = [
+            Descriptors::None,
+            Descriptors::F32 { dim: 3, data: vec![0.5, -1.0, f32::MIN, 2.0, 0.0, f32::MAX] },
+            Descriptors::Binary256(vec![[0xDEAD_BEEF; 8], [7; 8]]),
+        ];
+        for descriptors in variants {
+            let census = ImageCensus {
+                image_id: 42,
+                count: 2,
+                raw_count: 9,
+                keypoints: kps.clone(),
+                descriptors: descriptors.clone(),
+            };
+            let bytes = encode_features(&census);
+            let (id, out_kps, out_desc) = decode_features(&bytes).unwrap();
+            assert_eq!(id, 42);
+            assert_eq!(out_kps.len(), 2);
+            assert_eq!((out_kps[0].row, out_kps[0].col, out_kps[0].score), (5, -3, 1.5));
+            assert_eq!((out_kps[1].row, out_kps[1].col), (1000, 7));
+            assert!(out_kps[1].score.is_nan(), "NaN score must survive the shuffle");
+            assert_eq!(out_desc, descriptors);
+        }
+    }
+
+    #[test]
+    fn feature_files_reject_corruption() {
+        let census = ImageCensus {
+            image_id: 1,
+            count: 1,
+            raw_count: 1,
+            keypoints: vec![Keypoint { row: 0, col: 0, score: 1.0 }],
+            descriptors: Descriptors::Binary256(vec![[1; 8]]),
+        };
+        let good = encode_features(&census);
+        decode_features(&good).unwrap();
+        // Bit flip anywhere → checksum mismatch.
+        for i in [0usize, 12, good.len() / 2, good.len() - 1] {
+            let mut bad = good.clone();
+            bad[i] ^= 0x40;
+            assert!(decode_features(&bad).is_err(), "flip at {i} accepted");
+        }
+        // Truncation → error, not panic.
+        for cut in [0usize, 4, 19, good.len() - 5] {
+            assert!(decode_features(&good[..cut]).is_err(), "cut at {cut} accepted");
+        }
+    }
+
+    #[test]
+    fn enumerate_pairs_defaults_to_all_unordered() {
+        assert_eq!(
+            enumerate_pairs(&[2, 0, 1], None).unwrap(),
+            vec![(0, 1), (0, 2), (1, 2)]
+        );
+        assert_eq!(enumerate_pairs(&[5], None).unwrap(), vec![]);
+        // Explicit lists pass through in order, validated.
+        assert_eq!(
+            enumerate_pairs(&[0, 1, 2], Some(&[(2, 0), (1, 2)])).unwrap(),
+            vec![(2, 0), (1, 2)]
+        );
+        assert!(enumerate_pairs(&[0, 1], Some(&[(0, 0)])).is_err(), "self-pair");
+        assert!(enumerate_pairs(&[0, 1], Some(&[(0, 9)])).is_err(), "unknown id");
     }
 
     #[test]

@@ -29,6 +29,25 @@ pub struct Match {
 /// the two sides must agree; mismatches return an empty set (callers pair
 /// extractions of the same algorithm).
 pub fn match_descriptors(query: &Descriptors, train: &Descriptors, ratio: f32) -> Vec<Match> {
+    match_descriptors_while(query, train, ratio, usize::MAX, &mut |_, _| true)
+        .expect("uncancellable matching cannot be cancelled")
+}
+
+/// Chunked, cancellable [`match_descriptors`]: the registration job's
+/// reduce body.  Query rows are scanned in chunks of `chunk`; after each
+/// chunk `keep_going(done, total)` is consulted — returning `false`
+/// abandons the scan and yields `None`, which is how a speculative twin
+/// that lost its race dies mid-pair instead of wasting its slot.  The
+/// callback doubles as the progress report (`done` of `total` query
+/// rows), feeding the scheduler's straggler detector.  A completed scan
+/// is byte-identical to `match_descriptors`.
+pub fn match_descriptors_while(
+    query: &Descriptors,
+    train: &Descriptors,
+    ratio: f32,
+    chunk: usize,
+    keep_going: &mut dyn FnMut(usize, usize) -> bool,
+) -> Option<Vec<Match>> {
     let mut out = match (query, train) {
         (
             Descriptors::F32 { dim: dq, data: q },
@@ -37,65 +56,80 @@ pub fn match_descriptors(query: &Descriptors, train: &Descriptors, ratio: f32) -
             let d = *dq;
             let nq = q.len() / d;
             let nt = t.len() / d;
-            let mut matches = Vec::new();
-            for i in 0..nq {
-                let qi = &q[i * d..(i + 1) * d];
-                let (mut best, mut second, mut best_j) = (f32::MAX, f32::MAX, usize::MAX);
-                for j in 0..nt {
-                    let tj = &t[j * d..(j + 1) * d];
-                    let dist: f32 = qi
-                        .iter()
-                        .zip(tj)
-                        .map(|(a, b)| (a - b) * (a - b))
-                        .sum();
-                    if dist < best {
-                        second = best;
-                        best = dist;
-                        best_j = j;
-                    } else if dist < second {
-                        second = dist;
-                    }
-                }
-                if best_j != usize::MAX && best < ratio * ratio * second {
-                    matches.push(Match {
-                        query: i,
-                        train: best_j,
-                        distance: best.sqrt(),
-                    });
-                }
-            }
-            matches
+            let dist = |i: usize, j: usize| -> f32 {
+                q[i * d..(i + 1) * d]
+                    .iter()
+                    .zip(&t[j * d..(j + 1) * d])
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum()
+            };
+            // L2 works on squared distances: accept on best < ratio²·second,
+            // report √best.
+            let accept = |best: f32, second: f32| best < ratio * ratio * second;
+            nn_scan(nq, nt, chunk, keep_going, dist, accept, f32::sqrt)?
         }
         (Descriptors::Binary256(q), Descriptors::Binary256(t)) => {
-            let mut matches = Vec::new();
-            for (i, qi) in q.iter().enumerate() {
-                let (mut best, mut second, mut best_j) = (u32::MAX, u32::MAX, usize::MAX);
-                for (j, tj) in t.iter().enumerate() {
-                    let dist = hamming(qi, tj);
-                    if dist < best {
-                        second = best;
-                        best = dist;
-                        best_j = j;
-                    } else if dist < second {
-                        second = dist;
-                    }
-                }
-                if best_j != usize::MAX && (best as f32) < ratio * second as f32 {
-                    matches.push(Match {
-                        query: i,
-                        train: best_j,
-                        distance: best as f32,
-                    });
-                }
-            }
-            matches
+            let dist = |i: usize, j: usize| hamming(&q[i], &t[j]) as f32;
+            let accept = |best: f32, second: f32| best < ratio * second;
+            nn_scan(q.len(), t.len(), chunk, keep_going, dist, accept, |d| d)?
         }
         _ => Vec::new(),
     };
     // total_cmp: a NaN distance (degenerate descriptors) sorts last
     // instead of panicking the worker mid-job.
     out.sort_by(|a, b| a.distance.total_cmp(&b.distance));
-    out
+    Some(out)
+}
+
+/// Shared nearest-two scan over an `nq × nt` distance matrix, chunked and
+/// cancellable on the query axis.  Generic so each metric's inner loop
+/// monomorphizes and inlines — this is the registration reduce hot path
+/// (`nq × nt` distance evaluations per pair).
+fn nn_scan<D, A, F>(
+    nq: usize,
+    nt: usize,
+    chunk: usize,
+    keep_going: &mut dyn FnMut(usize, usize) -> bool,
+    dist: D,
+    accept: A,
+    finish: F,
+) -> Option<Vec<Match>>
+where
+    D: Fn(usize, usize) -> f32,
+    A: Fn(f32, f32) -> bool,
+    F: Fn(f32) -> f32,
+{
+    let chunk = chunk.max(1);
+    let mut matches = Vec::new();
+    let mut i = 0usize;
+    while i < nq {
+        let end = i.saturating_add(chunk).min(nq);
+        for qi in i..end {
+            let (mut best, mut second, mut best_j) = (f32::MAX, f32::MAX, usize::MAX);
+            for j in 0..nt {
+                let d = dist(qi, j);
+                if d < best {
+                    second = best;
+                    best = d;
+                    best_j = j;
+                } else if d < second {
+                    second = d;
+                }
+            }
+            if best_j != usize::MAX && accept(best, second) {
+                matches.push(Match {
+                    query: qi,
+                    train: best_j,
+                    distance: finish(best),
+                });
+            }
+        }
+        i = end;
+        if !keep_going(i, nq) {
+            return None;
+        }
+    }
+    Some(matches)
 }
 
 /// Estimated 2-D translation between two keypoint sets.
@@ -220,5 +254,65 @@ mod tests {
     #[test]
     fn ransac_empty_matches_is_none() {
         assert!(ransac_translation(&[], &[], &[], 2.0, 8, 0).is_none());
+    }
+
+    fn random_binary(rng: &mut Pcg32, n: usize) -> Descriptors {
+        Descriptors::Binary256(
+            (0..n)
+                .map(|_| {
+                    let mut row = [0u32; 8];
+                    for w in &mut row {
+                        *w = rng.next_u32();
+                    }
+                    row
+                })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn chunked_matching_is_identical_to_monolithic() {
+        let mut rng = Pcg32::seeded(31);
+        let q = random_binary(&mut rng, 37);
+        let t = random_binary(&mut rng, 23);
+        let whole = match_descriptors(&q, &t, 0.9);
+        assert!(!whole.is_empty(), "test corpus produced no matches");
+        for chunk in [1usize, 2, 7, 36, 37, 1000] {
+            let mut calls = 0usize;
+            let chunked = match_descriptors_while(&q, &t, 0.9, chunk, &mut |done, total| {
+                calls += 1;
+                assert!(done <= total && total == 37);
+                true
+            })
+            .unwrap();
+            assert_eq!(chunked, whole, "chunk={chunk} diverged");
+            assert_eq!(calls, (37 + chunk - 1) / chunk, "chunk={chunk} wrong call count");
+        }
+        // Float path too.
+        let mut rows: Vec<Vec<f32>> = Vec::new();
+        for _ in 0..19 {
+            rows.push((0..16).map(|_| rng.next_f32()).collect());
+        }
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let qf = f32_desc(&refs[..10]);
+        let tf = f32_desc(&refs[10..]);
+        let whole_f = match_descriptors(&qf, &tf, 0.95);
+        let chunked_f =
+            match_descriptors_while(&qf, &tf, 0.95, 3, &mut |_, _| true).unwrap();
+        assert_eq!(chunked_f, whole_f);
+    }
+
+    #[test]
+    fn cancelled_matching_returns_none_promptly() {
+        let mut rng = Pcg32::seeded(32);
+        let q = random_binary(&mut rng, 64);
+        let t = random_binary(&mut rng, 64);
+        let mut rows_scanned = 0usize;
+        let out = match_descriptors_while(&q, &t, 0.9, 8, &mut |done, _| {
+            rows_scanned = done;
+            done < 16 // cancel after the second chunk
+        });
+        assert!(out.is_none());
+        assert_eq!(rows_scanned, 16, "should stop at the cancellation chunk");
     }
 }

@@ -138,6 +138,12 @@ pub enum Descriptors {
     Binary256(Vec<[u32; 8]>),
 }
 
+impl Default for Descriptors {
+    fn default() -> Self {
+        Descriptors::None
+    }
+}
+
 impl Descriptors {
     pub fn len(&self) -> usize {
         match self {
@@ -155,6 +161,55 @@ impl Descriptors {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Concatenate another batch's rows onto this one.  `None` acts as
+    /// the empty batch of any variant (the first non-`None` appendee
+    /// fixes the variant); appending across distinct non-`None`
+    /// variants is a caller bug and fails loudly.
+    pub fn append(&mut self, other: Descriptors) -> Result<()> {
+        if matches!(other, Descriptors::None) {
+            return Ok(());
+        }
+        if matches!(self, Descriptors::None) {
+            *self = other;
+            return Ok(());
+        }
+        match (self, other) {
+            (
+                Descriptors::F32 { dim, data },
+                Descriptors::F32 { dim: od, data: odata },
+            ) if *dim == od => {
+                data.extend(odata);
+                Ok(())
+            }
+            (Descriptors::Binary256(rows), Descriptors::Binary256(orows)) => {
+                rows.extend(orows);
+                Ok(())
+            }
+            _ => Err(DifetError::Job(
+                "descriptor variant mismatch while merging batches".into(),
+            )),
+        }
+    }
+
+    /// Select rows by index, in `order` order (the shared re-ranking
+    /// primitive: keypoints and their descriptor rows permute together).
+    /// Indices must be in-bounds for non-`None` variants.
+    pub fn gather(&self, order: &[usize]) -> Descriptors {
+        match self {
+            Descriptors::None => Descriptors::None,
+            Descriptors::F32 { dim, data } => {
+                let mut out = Vec::with_capacity(order.len() * dim);
+                for &i in order {
+                    out.extend_from_slice(&data[i * dim..(i + 1) * dim]);
+                }
+                Descriptors::F32 { dim: *dim, data: out }
+            }
+            Descriptors::Binary256(rows) => {
+                Descriptors::Binary256(order.iter().map(|&i| rows[i]).collect())
+            }
+        }
     }
 }
 
@@ -224,5 +279,36 @@ mod tests {
         };
         assert_eq!(d.len(), 3);
         assert_eq!(Descriptors::Binary256(vec![[0; 8]; 5]).len(), 5);
+    }
+
+    #[test]
+    fn descriptors_append_adopts_variant_and_concatenates() {
+        let mut d = Descriptors::None;
+        d.append(Descriptors::None).unwrap();
+        assert_eq!(d, Descriptors::None);
+        d.append(Descriptors::F32 { dim: 2, data: vec![1.0, 2.0] }).unwrap();
+        d.append(Descriptors::F32 { dim: 2, data: vec![3.0, 4.0] }).unwrap();
+        assert_eq!(d, Descriptors::F32 { dim: 2, data: vec![1.0, 2.0, 3.0, 4.0] });
+        // None appendee is a no-op for any holder.
+        d.append(Descriptors::None).unwrap();
+        assert_eq!(d.len(), 2);
+        // Cross-variant (or cross-dim) merges fail loudly.
+        assert!(d.append(Descriptors::Binary256(vec![[0; 8]])).is_err());
+        assert!(d.append(Descriptors::F32 { dim: 3, data: vec![0.0; 3] }).is_err());
+    }
+
+    #[test]
+    fn descriptors_gather_selects_rows_in_order() {
+        let d = Descriptors::F32 {
+            dim: 2,
+            data: vec![0.0, 1.0, 10.0, 11.0, 20.0, 21.0],
+        };
+        assert_eq!(
+            d.gather(&[2, 0]),
+            Descriptors::F32 { dim: 2, data: vec![20.0, 21.0, 0.0, 1.0] }
+        );
+        let b = Descriptors::Binary256(vec![[1; 8], [2; 8], [3; 8]]);
+        assert_eq!(b.gather(&[1, 1, 0]), Descriptors::Binary256(vec![[2; 8], [2; 8], [1; 8]]));
+        assert_eq!(Descriptors::None.gather(&[0, 5]), Descriptors::None);
     }
 }

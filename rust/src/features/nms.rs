@@ -24,6 +24,26 @@ fn nan_last(score: f32) -> f32 {
     }
 }
 
+/// Re-rank keypoints by [`by_score_desc`] and keep the strongest `keep`,
+/// permuting the parallel descriptor rows identically.  With
+/// `Descriptors::None` this is exactly `sort_by(by_score_desc)` +
+/// `truncate(keep)` (the permutation is computed with a stable sort, so
+/// equal-key order matches the direct sort) — every ranking site can use
+/// it whether or not descriptors ride along.
+pub fn rank_truncate(kps: &mut Vec<Keypoint>, descriptors: &mut super::Descriptors, keep: usize) {
+    if matches!(descriptors, super::Descriptors::None) {
+        kps.sort_by(by_score_desc);
+        kps.truncate(keep);
+        return;
+    }
+    debug_assert_eq!(kps.len(), descriptors.len(), "keypoint/descriptor row drift");
+    let mut order: Vec<usize> = (0..kps.len()).collect();
+    order.sort_by(|&a, &b| by_score_desc(&kps[a], &kps[b]));
+    order.truncate(keep);
+    *descriptors = descriptors.gather(&order);
+    *kps = order.into_iter().map(|i| kps[i].clone()).collect();
+}
+
 /// Strict 3×3 (radius-1) NMS: survivors equal the max of their window.
 /// `mask[i]` must already hold the thresholded candidacy.
 pub fn nms_inplace(resp: &GrayImage, mask: &mut [bool], radius: usize) {
@@ -173,6 +193,54 @@ mod tests {
         let rows: Vec<i32> = kps.iter().map(|k| k.row).collect();
         assert_eq!(rows, vec![2, 1, 3, 0, 4]); // NaNs last, row tie-break
         assert!(kps[3].score.is_nan() && kps[4].score.is_nan());
+    }
+
+    #[test]
+    fn rank_truncate_matches_plain_sort_and_permutes_descriptors() {
+        use crate::features::Descriptors;
+        check("rank_truncate_joint", 40, |g| {
+            let n = g.usize_in(0, 30);
+            let kps: Vec<Keypoint> = (0..n)
+                .map(|i| Keypoint {
+                    row: i as i32,
+                    col: 0,
+                    // Coarse scores force ties so stability is exercised.
+                    score: (g.u32(5) as f32) / 4.0,
+                })
+                .collect();
+            let keep = g.usize_in(0, 35);
+
+            // Reference: the historical plain path.
+            let mut expect = kps.clone();
+            expect.sort_by(by_score_desc);
+            expect.truncate(keep);
+
+            // Joint path with Binary256 rows tagged by original index.
+            let mut got = kps.clone();
+            let mut desc = Descriptors::Binary256(
+                (0..n).map(|i| [i as u32; 8]).collect(),
+            );
+            rank_truncate(&mut got, &mut desc, keep);
+            crate::prop_assert!(got == expect, "joint ranking diverged from plain sort");
+            if let Descriptors::Binary256(rows) = &desc {
+                crate::prop_assert!(rows.len() == got.len(), "descriptor rows not truncated");
+                for (kp, row) in got.iter().zip(rows) {
+                    crate::prop_assert!(
+                        row[0] == kp.row as u32,
+                        "descriptor row followed the wrong keypoint"
+                    );
+                }
+            } else {
+                return Err("variant changed".into());
+            }
+
+            // None descriptors: same keypoint result through the fast path.
+            let mut got2 = kps.clone();
+            let mut none = Descriptors::None;
+            rank_truncate(&mut got2, &mut none, keep);
+            crate::prop_assert!(got2 == expect, "None-descriptor path diverged");
+            Ok(())
+        });
     }
 
     #[test]

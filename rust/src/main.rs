@@ -8,16 +8,21 @@
 //! difet sequential  run the one-node sequential baseline
 //! difet census      Table-2-style feature counts for a corpus
 //! difet scalability sweep node counts (Table 1 shape) in one command
+//! difet register    extract + match overlapping acquisitions (2 stages)
 //! difet inspect     show artifact manifest + cluster configuration
 //! ```
 //!
-//! Try `difet extract --nodes 4 --scenes 3 --algorithms harris,orb`.
+//! Try `difet extract --nodes 4 --scenes 3 --algorithms harris,orb`, or
+//! `difet register --nodes 2 --scenes 3 --native` for the two-stage
+//! scene-registration job (per-pair matches/inliers/translation table).
 
 use difet::config::Config;
-use difet::pipeline::{self, report::ColumnKey, report::TableBuilder, ExtractRequest};
+use difet::pipeline::{
+    self, report::ColumnKey, report::TableBuilder, ExtractRequest, RegistrationRequest,
+};
 use difet::util::args::{help_text, FlagSpec, ParsedArgs};
 
-const USAGE: &str = "difet <extract|sequential|census|scalability|inspect> [options]";
+const USAGE: &str = "difet <extract|sequential|census|scalability|register|inspect> [options]";
 
 fn flag_specs() -> Vec<FlagSpec> {
     vec![
@@ -31,6 +36,12 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "native", takes_value: false, help: "force the pure-Rust executor" },
         FlagSpec { name: "fused", takes_value: false, help: "one fused pass for all algorithms" },
         FlagSpec { name: "no-write", takes_value: false, help: "skip mapper output writes" },
+        FlagSpec { name: "pairs", takes_value: true, help: "register: explicit pairs, e.g. 0-1,1-2 (default: all)" },
+        FlagSpec { name: "max-offset", takes_value: true, help: "register: acquisition offset bound px (default 96)" },
+        FlagSpec { name: "ratio", takes_value: true, help: "register: Lowe ratio threshold (default 0.85)" },
+        FlagSpec { name: "tolerance", takes_value: true, help: "register: RANSAC inlier tolerance px (default 3)" },
+        FlagSpec { name: "ransac-iters", takes_value: true, help: "register: RANSAC hypotheses per pair (default 256)" },
+        FlagSpec { name: "seed", takes_value: true, help: "register: base RANSAC seed (default 7)" },
         FlagSpec { name: "bare", takes_value: false, help: "disable the I/O cost model" },
         FlagSpec { name: "verbose", takes_value: false, help: "print counters/metrics" },
         FlagSpec { name: "help", takes_value: false, help: "show this help" },
@@ -98,6 +109,49 @@ fn build_request(p: &ParsedArgs) -> Result<ExtractRequest, String> {
     Ok(req)
 }
 
+fn build_registration_request(
+    p: &ParsedArgs,
+    req: &ExtractRequest,
+) -> Result<RegistrationRequest, String> {
+    let mut r = RegistrationRequest::default();
+    // Reuse the shared extraction flags: --scenes and --native.
+    r.num_scenes = req.num_scenes;
+    r.force_native = req.force_native;
+    // Registration matches ONE descriptor algorithm; an explicit
+    // multi-algorithm list is ambiguous, so reject it rather than
+    // silently matching the default.
+    if let Some(algs) = p.get_list("algorithms") {
+        match algs.as_slice() {
+            [alg] => r.spec.algorithm = alg.clone(),
+            _ => {
+                return Err(format!(
+                    "register needs exactly one --algorithms entry (got {:?}); \
+                     pick one of sift/surf/brief/orb",
+                    algs
+                ))
+            }
+        }
+    }
+    r.max_offset = p.get_parse("max-offset", r.max_offset)?;
+    r.spec.ratio = p.get_parse("ratio", r.spec.ratio)?;
+    r.spec.tolerance_px = p.get_parse("tolerance", r.spec.tolerance_px)?;
+    r.spec.ransac_iters = p.get_parse("ransac-iters", r.spec.ransac_iters)?;
+    r.spec.seed = p.get_parse("seed", r.spec.seed)?;
+    if let Some(items) = p.get_list("pairs") {
+        let mut pairs = Vec::new();
+        for item in items {
+            let (a, b) = item
+                .split_once('-')
+                .ok_or_else(|| format!("--pairs expects a-b entries, got {item:?}"))?;
+            let a: u64 = a.trim().parse().map_err(|_| format!("bad pair id {a:?}"))?;
+            let b: u64 = b.trim().parse().map_err(|_| format!("bad pair id {b:?}"))?;
+            pairs.push((a, b));
+        }
+        r.spec.pairs = Some(pairs);
+    }
+    Ok(r)
+}
+
 fn run(p: &ParsedArgs) -> Result<(), String> {
     let cfg = build_config(p)?;
     let req = build_request(p)?;
@@ -147,6 +201,30 @@ fn run(p: &ParsedArgs) -> Result<(), String> {
             print!("{}", tb.render_table1());
             println!();
             print!("{}", tb.render_table2());
+        }
+        "register" => {
+            let rreq = build_registration_request(p, &req)?;
+            let out = pipeline::run_registration(&cfg, &rreq).map_err(|e| e.to_string())?;
+            println!(
+                "corpus: {} overlapping acquisitions, {} raw, {} bundled; \
+                 extraction: {} keypoints retained ({} executor path)\n",
+                out.corpus.scene_count,
+                difet::util::fmt::bytes(out.corpus.raw_bytes),
+                difet::util::fmt::bytes(out.corpus.bundle_bytes),
+                out.extraction
+                    .images
+                    .iter()
+                    .map(|i| i.keypoints.len())
+                    .sum::<usize>(),
+                if rreq.force_native { "native" } else { "auto" },
+            );
+            print!("{}", pipeline::report::render_registration_table(&out.report));
+            if verbose {
+                println!("\ncounters:");
+                for (k, v) in &out.report.counters {
+                    println!("  {k:<24}{v}");
+                }
+            }
         }
         "inspect" => {
             println!("config: {cfg:#?}");

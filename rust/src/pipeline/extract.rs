@@ -193,6 +193,7 @@ pub fn run_sequential(cfg: &Config, req: &ExtractRequest) -> Result<ExtractionRe
                     count,
                     raw_count,
                     keypoints,
+                    descriptors: crate::features::Descriptors::None,
                 });
             }
             let compute_seconds = compute_ns as f64 * 1e-9;
@@ -272,6 +273,7 @@ fn run_sequential_fused(
                 count,
                 raw_count: raw_count[i],
                 keypoints: kps,
+                descriptors: crate::features::Descriptors::None,
             });
         }
     }

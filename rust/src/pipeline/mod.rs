@@ -9,12 +9,21 @@
 //! * [`extract`] — run extraction jobs on the simulated cluster
 //!   ([`run_extraction`]) or sequentially on one node
 //!   ([`run_sequential`]), producing [`coordinator::JobReport`]s.
-//! * [`report`] — render Table 1 / Table 2 in the paper's row order.
+//! * [`register`] — the two-stage scene-registration flow: overlapping
+//!   acquisitions → fused extraction with descriptors → distributed
+//!   pair matching ([`run_registration`]).
+//! * [`report`] — render Table 1 / Table 2 in the paper's row order,
+//!   plus the per-pair registration table.
 
 pub mod extract;
 pub mod ingest;
+pub mod register;
 pub mod report;
 
 pub use extract::{run_extraction, run_jobs_on, run_sequential, ExtractRequest, ExtractionReport};
 pub use ingest::{ingest_corpus, CorpusInfo};
+pub use register::{
+    ingest_acquisitions, register_pairs_sequential, run_registration, RegistrationOutcome,
+    RegistrationRequest,
+};
 

@@ -1,0 +1,340 @@
+//! The registration pipeline: overlapping acquisitions → fused
+//! extraction (descriptors kept) → distributed scene-pair registration.
+//!
+//! This is the downstream workload the paper motivates feature extraction
+//! with (image matching / stitching of LandSat acquisitions, §1), built
+//! as a second MapReduce-shaped job on the same simulated cluster: the
+//! extraction stage's per-scene keypoints+descriptors are shuffled into
+//! DFS feature files, scene pairs become reduce tasks, and each reduce
+//! recovers the translation registering one scene against another
+//! ([`crate::coordinator::run_registration_job`]).
+//!
+//! Overlapping "acquisitions" are simulated the way two real passes over
+//! the same area overlap: one master scene is rendered once, and each
+//! acquisition is a frame-sized crop at a per-acquisition offset
+//! ([`ingest_acquisitions`]).  The planted offsets are returned so tests
+//! and examples can check the recovered translations against truth.
+
+use std::collections::BTreeMap;
+
+use crate::config::Config;
+use crate::coordinator::driver::JobHooks;
+use crate::coordinator::{
+    enumerate_pairs, pair_seed, run_fused_job, run_registration_job, FusedJobSpec, ImageCensus,
+    JobReport, PairResult, RegistrationReport, RegistrationSpec,
+};
+use crate::dfs::{Dfs, NodeId};
+use crate::features::matching::{match_descriptors, ransac_translation};
+use crate::features::{Algorithm, DescriptorKind};
+use crate::hib::{BundleWriter, Codec};
+use crate::imagery::{Rgba8Image, SceneGenerator};
+use crate::metrics::Registry;
+use crate::util::rng::Pcg32;
+use crate::util::{DifetError, Result, Stopwatch};
+
+use super::ingest::CorpusInfo;
+
+/// What to register.
+#[derive(Debug, Clone)]
+pub struct RegistrationRequest {
+    /// The coordinator-level matching spec (algorithm, pair selection,
+    /// ratio/RANSAC knobs), passed through to the registration job
+    /// verbatim — one source of truth, no pipeline-level mirror.
+    pub spec: RegistrationSpec,
+    /// Number of overlapping acquisitions to simulate.
+    pub num_scenes: usize,
+    /// Largest per-axis acquisition offset in pixels (overlap =
+    /// frame − offset; keep well under the frame size).
+    pub max_offset: usize,
+    /// Force the pure-Rust executor for the extraction stage.
+    pub force_native: bool,
+}
+
+impl Default for RegistrationRequest {
+    fn default() -> Self {
+        RegistrationRequest {
+            spec: RegistrationSpec::new("orb"),
+            num_scenes: 3,
+            max_offset: 96,
+            force_native: false,
+        }
+    }
+}
+
+/// Everything a registration run produced.
+#[derive(Debug)]
+pub struct RegistrationOutcome {
+    pub corpus: CorpusInfo,
+    /// Planted per-acquisition offsets (row, col) into the master scene.
+    pub offsets: Vec<(i32, i32)>,
+    /// The extraction stage's report (censuses carry descriptors).
+    pub extraction: JobReport,
+    /// The registration stage's report.
+    pub report: RegistrationReport,
+}
+
+impl RegistrationOutcome {
+    /// Ground-truth translation for pair `(a, b)`: a keypoint of scene
+    /// `a` appears in scene `b` displaced by `offset_a − offset_b`.
+    pub fn expected_translation(&self, a: u64, b: u64) -> (f32, f32) {
+        let (ra, ca) = self.offsets[a as usize];
+        let (rb, cb) = self.offsets[b as usize];
+        ((ra - rb) as f32, (ca - cb) as f32)
+    }
+}
+
+/// Frame-sized crop of the master image at `(row0, col0)`.
+fn crop(master: &Rgba8Image, row0: usize, col0: usize, w: usize, h: usize) -> Rgba8Image {
+    let mut out = Rgba8Image::new(w, h);
+    for r in 0..h {
+        let src = master.idx(row0 + r, col0);
+        let dst = out.idx(r, 0);
+        out.data[dst..dst + w * 4].copy_from_slice(&master.data[src..src + w * 4]);
+    }
+    out
+}
+
+/// Deterministic acquisition offsets: acquisition 0 anchors at (0, 0),
+/// the rest draw uniformly from `[0, max_offset]²` under the scene seed.
+pub fn acquisition_offsets(seed: u64, n: usize, max_offset: usize) -> Vec<(i32, i32)> {
+    let mut rng = Pcg32::new(seed, 0xACC5);
+    (0..n)
+        .map(|i| {
+            if i == 0 {
+                (0, 0)
+            } else {
+                (
+                    rng.next_bounded(max_offset as u32 + 1) as i32,
+                    rng.next_bounded(max_offset as u32 + 1) as i32,
+                )
+            }
+        })
+        .collect()
+}
+
+/// Render one master scene and bundle `n` overlapping frame-sized crops
+/// of it as a HIB corpus in DFS.  Returns the corpus info and the
+/// planted offsets (index = scene id).
+pub fn ingest_acquisitions(
+    cfg: &Config,
+    dfs: &Dfs,
+    n: usize,
+    max_offset: usize,
+    path: &str,
+) -> Result<(CorpusInfo, Vec<(i32, i32)>)> {
+    let sw = Stopwatch::start();
+    let (frame_w, frame_h) = (cfg.scene.width, cfg.scene.height);
+    if max_offset >= frame_w.min(frame_h) {
+        return Err(DifetError::Config(format!(
+            "max_offset {max_offset} leaves no overlap for {frame_w}×{frame_h} frames"
+        )));
+    }
+    // Master rendered once, big enough for every offset window.
+    let mut master_cfg = cfg.scene.clone();
+    master_cfg.width = frame_w + max_offset;
+    master_cfg.height = frame_h + max_offset;
+    let master = SceneGenerator::new(master_cfg).scene(0).image;
+
+    let offsets = acquisition_offsets(cfg.scene.seed, n, max_offset);
+    let codec = if cfg.storage.compress {
+        Codec::Deflate
+    } else {
+        Codec::Raw
+    };
+    let mut writer = BundleWriter::new(codec, cfg.storage.compression_level);
+    let mut raw_bytes = 0u64;
+    for (i, &(r0, c0)) in offsets.iter().enumerate() {
+        let frame = crop(&master, r0 as usize, c0 as usize, frame_w, frame_h);
+        raw_bytes += frame.byte_len() as u64;
+        writer.add_image(i as u64, &frame)?;
+    }
+    let bytes = writer.finish();
+    let bundle_bytes = bytes.len() as u64;
+    dfs.write_file(path, &bytes, NodeId(0))?;
+
+    Ok((
+        CorpusInfo {
+            bundle_path: path.to_string(),
+            scene_count: n,
+            bundle_bytes,
+            raw_bytes,
+            ingest_seconds: sw.elapsed_secs(),
+        },
+        offsets,
+    ))
+}
+
+/// Full two-stage run: acquisitions → fused extraction with descriptors →
+/// registration job on the simulated cluster.
+pub fn run_registration(cfg: &Config, req: &RegistrationRequest) -> Result<RegistrationOutcome> {
+    cfg.validate()?;
+    let alg = Algorithm::parse(&req.spec.algorithm)?;
+    if alg.descriptor_kind() == DescriptorKind::None {
+        return Err(DifetError::Config(format!(
+            "{} computes no descriptors; registration needs sift/surf/brief/orb",
+            req.spec.algorithm
+        )));
+    }
+
+    let dfs = Dfs::new(
+        cfg.cluster.nodes,
+        cfg.storage.block_size,
+        cfg.cluster.replication,
+    );
+    let (corpus, offsets) =
+        ingest_acquisitions(cfg, &dfs, req.num_scenes, req.max_offset, "/corpus/acquisitions.hib")?;
+
+    // Stage 1: extraction, carrying descriptors through the shuffle.
+    let extract_req = super::extract::ExtractRequest {
+        algorithms: vec![req.spec.algorithm.clone()],
+        num_scenes: req.num_scenes,
+        write_output: false,
+        force_native: req.force_native,
+        fused: true,
+    };
+    let executor = super::extract::make_executor(cfg, &extract_req)?;
+    let registry = Registry::new();
+    let mut spec = FusedJobSpec::new(&[req.spec.algorithm.as_str()], &corpus.bundle_path);
+    spec.write_output = false;
+    spec.keep_descriptors = true;
+    let mut reports = run_fused_job(
+        cfg,
+        &dfs,
+        executor.as_ref(),
+        &spec,
+        &registry,
+        &JobHooks::default(),
+    )?;
+    let extraction = reports
+        .pop()
+        .ok_or_else(|| DifetError::Job("extraction stage returned no report".into()))?;
+
+    // Stage 2: the reduce-shaped registration job.
+    let report = run_registration_job(
+        cfg,
+        &dfs,
+        &extraction.images,
+        &req.spec,
+        &registry,
+        &JobHooks::default(),
+    )?;
+
+    Ok(RegistrationOutcome {
+        corpus,
+        offsets,
+        extraction,
+        report,
+    })
+}
+
+/// Sequential baseline: the same pairs, matched with the plain library
+/// calls on one thread.  The distributed job must agree with this
+/// *exactly* (same matches, same bit-identical translations) — asserted
+/// by `rust/tests/registration_e2e.rs`.
+pub fn register_pairs_sequential(
+    censuses: &[ImageCensus],
+    spec: &RegistrationSpec,
+) -> Result<Vec<PairResult>> {
+    let ids: Vec<u64> = censuses.iter().map(|c| c.image_id).collect();
+    let pairs = enumerate_pairs(&ids, spec.pairs.as_deref())?;
+    let by_id: BTreeMap<u64, &ImageCensus> = censuses.iter().map(|c| (c.image_id, c)).collect();
+    pairs
+        .into_iter()
+        .map(|(a, b)| {
+            let ca = by_id[&a];
+            let cb = by_id[&b];
+            let matches = match_descriptors(&ca.descriptors, &cb.descriptors, spec.ratio);
+            let translation = if matches.len() >= spec.min_matches {
+                ransac_translation(
+                    &ca.keypoints,
+                    &cb.keypoints,
+                    &matches,
+                    spec.tolerance_px,
+                    spec.ransac_iters,
+                    pair_seed(spec.seed, a, b),
+                )
+            } else {
+                None
+            };
+            Ok(PairResult {
+                image_a: a,
+                image_b: b,
+                matches: matches.len(),
+                translation,
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hib::BundleReader;
+
+    fn small_cfg() -> Config {
+        let mut cfg = Config::new();
+        cfg.scene.width = 300;
+        cfg.scene.height = 260;
+        cfg.storage.block_size = 1 << 20;
+        cfg
+    }
+
+    #[test]
+    fn acquisition_offsets_are_deterministic_and_bounded() {
+        let a = acquisition_offsets(99, 6, 40);
+        let b = acquisition_offsets(99, 6, 40);
+        assert_eq!(a, b);
+        assert_eq!(a[0], (0, 0), "first acquisition anchors the frame");
+        assert!(a.iter().all(|&(r, c)| (0..=40).contains(&r) && (0..=40).contains(&c)));
+        assert_ne!(acquisition_offsets(100, 6, 40), a, "seed must matter");
+    }
+
+    #[test]
+    fn acquisitions_are_exact_windows_of_one_master() {
+        let cfg = small_cfg();
+        let dfs = Dfs::new(2, cfg.storage.block_size, 1);
+        let (info, offsets) = ingest_acquisitions(&cfg, &dfs, 3, 32, "/acq.hib").unwrap();
+        assert_eq!(info.scene_count, 3);
+        assert_eq!(offsets.len(), 3);
+
+        // Re-render the master independently and compare pixel windows.
+        let mut master_cfg = cfg.scene.clone();
+        master_cfg.width = cfg.scene.width + 32;
+        master_cfg.height = cfg.scene.height + 32;
+        let master = SceneGenerator::new(master_cfg).scene(0).image;
+
+        let (bytes, _) = dfs.read_file("/acq.hib", NodeId(0)).unwrap();
+        let reader = BundleReader::open(&bytes).unwrap();
+        assert_eq!(reader.record_count(), 3);
+        for i in 0..3 {
+            let (id, img) = reader.read_image(i).unwrap();
+            assert_eq!(id, i as u64);
+            let (r0, c0) = offsets[i];
+            for (r, c) in [(0usize, 0usize), (10, 17), (259, 299)] {
+                assert_eq!(
+                    img.get(r, c),
+                    master.get(r0 as usize + r, c0 as usize + c),
+                    "scene {i} pixel ({r},{c}) diverged from master window"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ingest_rejects_offsets_that_kill_the_overlap() {
+        let cfg = small_cfg();
+        let dfs = Dfs::new(1, cfg.storage.block_size, 1);
+        assert!(ingest_acquisitions(&cfg, &dfs, 2, 260, "/acq.hib").is_err());
+    }
+
+    #[test]
+    fn run_registration_rejects_descriptorless_algorithms() {
+        let cfg = small_cfg();
+        let req = RegistrationRequest {
+            spec: RegistrationSpec::new("harris"),
+            ..Default::default()
+        };
+        let err = run_registration(&cfg, &req).unwrap_err();
+        assert!(err.to_string().contains("no descriptors"), "{err}");
+    }
+}

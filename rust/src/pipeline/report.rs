@@ -142,6 +142,38 @@ pub fn render_jobs_table(jobs: &[JobReport], executor: &str) -> String {
     out
 }
 
+/// Per-pair registration table: matches, inliers and the recovered
+/// translation for every scene pair of a registration job.
+pub fn render_registration_table(rep: &crate::coordinator::RegistrationReport) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Registration — {} on {} node(s): {} pair(s), {} registered, {}\n",
+        rep.algorithm,
+        rep.nodes,
+        rep.pair_count,
+        rep.counters.get("registered_pairs").copied().unwrap_or(0),
+        fmt::duration(rep.sim_seconds),
+    ));
+    out.push_str(&format!(
+        "{:<12}{:>9}{:>9}{:>10}{:>10}\n",
+        "pair", "matches", "inliers", "d_row", "d_col"
+    ));
+    for p in &rep.pairs {
+        let pair = format!("{}→{}", p.image_a, p.image_b);
+        match &p.translation {
+            Some(t) => out.push_str(&format!(
+                "{:<12}{:>9}{:>9}{:>10.1}{:>10.1}\n",
+                pair, p.matches, t.inliers, t.d_row, t.d_col
+            )),
+            None => out.push_str(&format!(
+                "{:<12}{:>9}{:>9}{:>10}{:>10}\n",
+                pair, p.matches, "—", "—", "—"
+            )),
+        }
+    }
+    out
+}
+
 /// Per-run census table.
 pub fn render_census_table(jobs: &[JobReport]) -> String {
     let mut out = String::new();
@@ -179,6 +211,7 @@ mod tests {
                 count,
                 raw_count: count,
                 keypoints: vec![],
+                descriptors: crate::features::Descriptors::None,
             }],
             counters: Default::default(),
         }
@@ -206,6 +239,42 @@ mod tests {
         let t = tb.render_table2();
         assert!(t.contains("4,762,222"));
         assert!(t.contains("N=20"));
+    }
+
+    #[test]
+    fn registration_table_renders_pairs_and_dashes() {
+        use crate::coordinator::{PairResult, RegistrationReport};
+        use crate::features::matching::Translation;
+        let mut counters = std::collections::BTreeMap::new();
+        counters.insert("registered_pairs".to_string(), 1u64);
+        let rep = RegistrationReport {
+            algorithm: "orb".into(),
+            nodes: 2,
+            pair_count: 2,
+            sim_seconds: 3.5,
+            wall_seconds: 0.2,
+            compute_seconds: 0.1,
+            io_seconds: 0.05,
+            pairs: vec![
+                PairResult {
+                    image_a: 0,
+                    image_b: 1,
+                    matches: 120,
+                    translation: Some(Translation { d_row: 17.0, d_col: -23.5, inliers: 96 }),
+                },
+                PairResult { image_a: 0, image_b: 2, matches: 3, translation: None },
+            ],
+            counters,
+        };
+        let t = render_registration_table(&rep);
+        assert!(t.contains("orb"));
+        assert!(t.contains("0→1"));
+        assert!(t.contains("17.0"));
+        assert!(t.contains("-23.5"));
+        assert!(t.contains("96"));
+        assert!(t.contains("0→2"));
+        assert!(t.contains("—"), "unregistered pairs render as dashes");
+        assert!(t.contains("2 pair(s), 1 registered"));
     }
 
     #[test]

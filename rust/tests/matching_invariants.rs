@@ -1,0 +1,184 @@
+//! Invariant tests for `features::matching` — the primitives the
+//! registration job's reduce stage is built from.
+
+use difet::features::matching::{
+    match_descriptors, match_descriptors_while, ransac_translation, Match,
+};
+use difet::features::{brief::hamming, Descriptors, Keypoint};
+use difet::util::prop::check;
+use difet::util::rng::Pcg32;
+
+fn random_binary(rng: &mut Pcg32, n: usize) -> Vec<[u32; 8]> {
+    (0..n)
+        .map(|_| {
+            let mut row = [0u32; 8];
+            for w in &mut row {
+                *w = rng.next_u32();
+            }
+            row
+        })
+        .collect()
+}
+
+fn random_f32(rng: &mut Pcg32, n: usize, dim: usize) -> Vec<f32> {
+    (0..n * dim).map(|_| rng.next_f32()).collect()
+}
+
+#[test]
+fn prop_ratio_test_never_keeps_ambiguous_hamming_matches() {
+    check("ratio_test_hamming", 40, |g| {
+        let mut rng = Pcg32::new(g.seed(), 1);
+        let nq = g.usize_in(1, 30);
+        let nt = g.usize_in(2, 30);
+        let q = random_binary(&mut rng, nq);
+        let t = random_binary(&mut rng, nt);
+        let ratio = 0.5 + 0.4 * g.f32();
+        let matches = match_descriptors(
+            &Descriptors::Binary256(q.clone()),
+            &Descriptors::Binary256(t.clone()),
+            ratio,
+        );
+        for m in &matches {
+            // Independent brute-force recomputation of best/second-best.
+            let mut dists: Vec<(u32, usize)> = t
+                .iter()
+                .enumerate()
+                .map(|(j, tj)| (hamming(&q[m.query], tj), j))
+                .collect();
+            dists.sort();
+            let (best, best_j) = dists[0];
+            let (second, _) = dists[1];
+            difet::prop_assert!(
+                best <= second,
+                "query {}: returned match is not the nearest neighbour",
+                m.query
+            );
+            // The returned train index attains the best distance (ties
+            // break toward the first scan index, which sort() preserves).
+            difet::prop_assert!(
+                hamming(&q[m.query], &t[m.train]) == best,
+                "query {}: train {} not at best distance",
+                m.query,
+                m.train
+            );
+            let _ = best_j;
+            difet::prop_assert!(
+                (best as f32) < ratio * second as f32,
+                "query {}: ratio test should have rejected (best {best}, second {second}, ratio {ratio})",
+                m.query
+            );
+            difet::prop_assert!(
+                m.distance == best as f32,
+                "query {}: reported distance {} != best {}",
+                m.query,
+                m.distance,
+                best
+            );
+        }
+        // Matches come back sorted by ascending distance.
+        difet::prop_assert!(
+            matches.windows(2).all(|w| w[0].distance <= w[1].distance),
+            "matches not sorted by distance"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ratio_test_never_keeps_ambiguous_l2_matches() {
+    check("ratio_test_l2", 30, |g| {
+        let mut rng = Pcg32::new(g.seed(), 2);
+        let dim = g.usize_in(2, 16);
+        let nq = g.usize_in(1, 20);
+        let nt = g.usize_in(2, 20);
+        let q = random_f32(&mut rng, nq, dim);
+        let t = random_f32(&mut rng, nt, dim);
+        let ratio = 0.6 + 0.3 * g.f32();
+        let matches = match_descriptors(
+            &Descriptors::F32 { dim, data: q.clone() },
+            &Descriptors::F32 { dim, data: t.clone() },
+            ratio,
+        );
+        let sq_dist = |i: usize, j: usize| -> f32 {
+            q[i * dim..(i + 1) * dim]
+                .iter()
+                .zip(&t[j * dim..(j + 1) * dim])
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum()
+        };
+        for m in &matches {
+            let mut dists: Vec<f32> = (0..nt).map(|j| sq_dist(m.query, j)).collect();
+            dists.sort_by(f32::total_cmp);
+            let (best, second) = (dists[0], dists[1]);
+            difet::prop_assert!(
+                sq_dist(m.query, m.train) == best,
+                "query {}: returned match not the nearest neighbour",
+                m.query
+            );
+            difet::prop_assert!(
+                best < ratio * ratio * second,
+                "query {}: ratio test should have rejected (best {best}, second {second})",
+                m.query
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn ransac_recovers_shift_under_thirty_percent_outliers() {
+    // 100 correspondences: 70 planted at (−31, +44), 30 uniform outliers,
+    // fixed seed end to end.
+    let mut rng = Pcg32::seeded(2024);
+    let (dr, dc) = (-31i32, 44i32);
+    let mut q_kps = Vec::new();
+    let mut t_kps = Vec::new();
+    let mut matches = Vec::new();
+    for i in 0..100 {
+        let r = 100 + rng.next_bounded(800) as i32;
+        let c = 100 + rng.next_bounded(800) as i32;
+        q_kps.push(Keypoint { row: r, col: c, score: 1.0 });
+        if i < 70 {
+            t_kps.push(Keypoint { row: r + dr, col: c + dc, score: 1.0 });
+        } else {
+            t_kps.push(Keypoint {
+                row: rng.next_bounded(1000) as i32,
+                col: rng.next_bounded(1000) as i32,
+                score: 1.0,
+            });
+        }
+        matches.push(Match { query: i, train: i, distance: 1.0 });
+    }
+    let t = ransac_translation(&q_kps, &t_kps, &matches, 2.0, 128, 99).unwrap();
+    assert!(t.inliers >= 70, "only {} inliers", t.inliers);
+    assert!(
+        (t.d_row - dr as f32).abs() < 0.5 && (t.d_col - dc as f32).abs() < 0.5,
+        "recovered ({}, {}), planted ({dr}, {dc})",
+        t.d_row,
+        t.d_col
+    );
+    // Fixed seed ⇒ bit-identical across runs (the determinism the
+    // distributed/sequential parity contract stands on).
+    let t2 = ransac_translation(&q_kps, &t_kps, &matches, 2.0, 128, 99).unwrap();
+    assert_eq!(t, t2);
+}
+
+#[test]
+fn variant_mismatch_yields_empty_on_both_paths() {
+    let mut rng = Pcg32::seeded(5);
+    let bin = Descriptors::Binary256(random_binary(&mut rng, 8));
+    let f32s = Descriptors::F32 { dim: 4, data: random_f32(&mut rng, 8, 4) };
+    let none = Descriptors::None;
+    for (a, b) in [(&bin, &f32s), (&f32s, &bin), (&bin, &none), (&none, &f32s)] {
+        assert!(match_descriptors(a, b, 0.9).is_empty());
+        // The cancellable path agrees and completes without a callback
+        // (no query rows scanned on mismatch).
+        assert_eq!(
+            match_descriptors_while(a, b, 0.9, 4, &mut |_, _| true),
+            Some(vec![])
+        );
+    }
+    // Dim-mismatched float descriptors are also "different variants".
+    let f32s_other = Descriptors::F32 { dim: 8, data: random_f32(&mut rng, 4, 8) };
+    assert!(match_descriptors(&f32s, &f32s_other, 0.9).is_empty());
+}

@@ -1,0 +1,168 @@
+//! Deterministic two-stage end-to-end test: fixed-seed overlapping
+//! acquisitions → fused extraction (descriptors through the shuffle) →
+//! distributed registration job → recovered translations checked against
+//! the planted offsets, byte-identical across runs, and exactly equal to
+//! the sequential `match_descriptors` + `ransac_translation` baseline.
+//!
+//! The registration stage runs on 2 simulated nodes through the
+//! Scheduler with speculation enabled (the default) and, in the retry
+//! test, with injected first-attempt failures on every pair.
+
+use std::sync::OnceLock;
+
+use difet::config::Config;
+use difet::coordinator::driver::JobHooks;
+use difet::coordinator::run_registration_job;
+use difet::dfs::Dfs;
+use difet::metrics::Registry;
+use difet::pipeline::{
+    register_pairs_sequential, run_registration, RegistrationOutcome, RegistrationRequest,
+};
+
+fn test_cfg() -> Config {
+    let mut cfg = Config::new();
+    cfg.scene.width = 600;
+    cfg.scene.height = 600;
+    cfg.cluster.nodes = 2;
+    cfg.cluster.slots_per_node = 2;
+    cfg.cluster.job_startup = 0.5;
+    cfg.storage.block_size = 1 << 20;
+    cfg.artifacts_dir = "/nonexistent".into(); // hermetic: native executor
+    assert!(cfg.scheduler.speculation, "speculation must be on for this suite");
+    cfg
+}
+
+fn test_req() -> RegistrationRequest {
+    RegistrationRequest {
+        num_scenes: 3,
+        max_offset: 48,
+        force_native: true,
+        ..Default::default()
+    }
+}
+
+/// One shared two-stage run (extraction is the expensive part; every
+/// test in this binary reuses it).
+fn shared_run() -> &'static RegistrationOutcome {
+    static OUT: OnceLock<RegistrationOutcome> = OnceLock::new();
+    OUT.get_or_init(|| run_registration(&test_cfg(), &test_req()).expect("two-stage run"))
+}
+
+#[test]
+fn recovers_planted_offsets_on_two_nodes() {
+    let out = shared_run();
+    assert_eq!(out.report.nodes, 2);
+    assert_eq!(out.report.pair_count, 3, "3 scenes → 3 unordered pairs");
+    assert_eq!(out.report.counter("pairs"), 3);
+    // Every pair overlaps by ≥ 552 px of 600: all must register, each
+    // within 2 px of the planted offset difference.
+    assert_eq!(out.report.registered_count(), 3);
+    for p in &out.report.pairs {
+        let t = p.translation.as_ref().unwrap();
+        let (er, ec) = out.expected_translation(p.image_a, p.image_b);
+        assert!(
+            (t.d_row - er).abs() <= 2.0 && (t.d_col - ec).abs() <= 2.0,
+            "pair {}→{}: recovered ({}, {}), planted ({er}, {ec})",
+            p.image_a,
+            p.image_b,
+            t.d_row,
+            t.d_col
+        );
+        // Pixel-identical overlap: consensus should be broad, not marginal.
+        assert!(t.inliers >= 8, "pair {}→{}: only {} inliers", p.image_a, p.image_b, t.inliers);
+    }
+    // Every pair went through the scheduler on some node.
+    assert_eq!(
+        out.report.counter("data_local_tasks") + out.report.counter("rack_remote_tasks"),
+        3
+    );
+    // The extraction stage really carried descriptors for every census.
+    for img in &out.extraction.images {
+        assert_eq!(
+            img.descriptors.len(),
+            img.keypoints.len(),
+            "scene {}: descriptor rows must mirror keypoints",
+            img.image_id
+        );
+        assert!(!img.keypoints.is_empty());
+    }
+}
+
+#[test]
+fn report_is_byte_identical_across_runs() {
+    let first = shared_run();
+    let second = run_registration(&test_cfg(), &test_req()).expect("second run");
+    assert_eq!(first.offsets, second.offsets);
+    assert_eq!(
+        first.report.pairs, second.report.pairs,
+        "pair results must be bit-identical across runs"
+    );
+    // Extraction censuses (incl. descriptor payloads) are stable too.
+    for (a, b) in first.extraction.images.iter().zip(&second.extraction.images) {
+        assert_eq!(a.keypoints, b.keypoints);
+        assert_eq!(a.descriptors, b.descriptors);
+    }
+}
+
+#[test]
+fn distributed_job_equals_sequential_baseline_exactly() {
+    let out = shared_run();
+    let baseline = register_pairs_sequential(&out.extraction.images, &test_req().spec)
+        .expect("sequential baseline");
+    assert_eq!(
+        out.report.pairs, baseline,
+        "distributed reduce must reproduce the library baseline bit for bit"
+    );
+}
+
+#[test]
+fn retries_and_speculation_do_not_change_results() {
+    let out = shared_run();
+    let cfg = test_cfg();
+    // Fresh DFS for the re-shuffle; same censuses, first attempt of every
+    // pair dies (a crashed reducer), speculation stays enabled.
+    let dfs = Dfs::new(cfg.cluster.nodes, cfg.storage.block_size, cfg.cluster.replication);
+    let registry = Registry::new();
+    let hooks = JobHooks {
+        fail: Some(Box::new(|_pair, attempt| attempt == 0)),
+    };
+    let rep = run_registration_job(
+        &cfg,
+        &dfs,
+        &out.extraction.images,
+        &test_req().spec,
+        &registry,
+        &hooks,
+    )
+    .expect("registration with retries");
+    assert!(rep.counter("retries") >= rep.counter("pairs"), "every pair should retry");
+    assert_eq!(
+        rep.pairs, out.report.pairs,
+        "retried/speculated execution must not change any pair result"
+    );
+}
+
+#[test]
+fn explicit_pair_lists_are_honoured() {
+    let out = shared_run();
+    let cfg = test_cfg();
+    let dfs = Dfs::new(cfg.cluster.nodes, cfg.storage.block_size, cfg.cluster.replication);
+    let registry = Registry::new();
+    let mut spec = test_req().spec;
+    spec.pairs = Some(vec![(2, 0)]);
+    let rep = run_registration_job(
+        &cfg,
+        &dfs,
+        &out.extraction.images,
+        &spec,
+        &registry,
+        &JobHooks::default(),
+    )
+    .expect("explicit-pair job");
+    assert_eq!(rep.pair_count, 1);
+    let p = &rep.pairs[0];
+    assert_eq!((p.image_a, p.image_b), (2, 0));
+    let t = p.translation.as_ref().expect("overlapping pair must register");
+    let (er, ec) = out.expected_translation(2, 0);
+    assert!((t.d_row - er).abs() <= 2.0 && (t.d_col - ec).abs() <= 2.0);
+}
