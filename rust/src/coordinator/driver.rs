@@ -40,8 +40,9 @@ use crate::runtime::TileFeatures;
 use crate::util::{DifetError, Result, Stopwatch};
 
 use super::job::{
-    mapper_retention, pair_seed, FusedJobSpec, ImageCensus, JobReport, JobSpec, MapOutput,
-    PairResult, PairTask, RegistrationReport, RegistrationSpec,
+    mapper_retention, pair_seed, CanvasTile, FusedJobSpec, ImageCensus, JobReport, JobSpec,
+    MapOutput, MosaicReport, MosaicSpec, PairResult, PairTask, RegistrationReport,
+    RegistrationSpec,
 };
 use super::scheduler::{Assignment, Scheduler, TaskDescriptor, TaskHandle};
 use super::shuffle;
@@ -766,6 +767,248 @@ fn reduce_pair(
             matches: matches.len(),
             translation,
         },
+        virtual_ns: overhead_ns + io_ns + compute_ns,
+        compute_ns,
+        io_ns,
+    }))
+}
+
+// ---------------------------------------------------------------------------
+// The mosaic job: canvas-tile compositing over aligned scenes.
+// ---------------------------------------------------------------------------
+
+/// Run a mosaic job: shuffle the scene images into CRC-guarded DFS files,
+/// split the canvas into tile-shaped work units on the same generic
+/// [`Scheduler`] (the third `WorkItem` shape — locality toward the nodes
+/// holding the overlapping scene files, bounded retries, straggler
+/// speculation), and composite each tile with the blend the spec names.
+///
+/// Determinism contract: every canvas pixel is a pure function of the
+/// scenes covering it and the blend mode
+/// ([`crate::mosaic::composite_rect_while`] accumulates in ascending
+/// scene-id order), so the assembled mosaic is byte-identical to
+/// [`crate::mosaic::composite_sequential`] regardless of node count,
+/// tiling, retries or speculation histories.
+///
+/// Returns the job report (seam metrics included) and the composited
+/// canvas.  Seam diagnostics land in `registry` too: an `overlap_rms`
+/// histogram and the `mosaic_max_cycle_residual` gauge.
+pub fn run_mosaic_job(
+    cfg: &Config,
+    dfs: &Dfs,
+    scenes: &[(u64, Rgba8Image)],
+    alignment: &crate::mosaic::GlobalAlignment,
+    spec: &MosaicSpec,
+    registry: &Registry,
+    hooks: &JobHooks,
+) -> Result<(MosaicReport, Rgba8Image)> {
+    let wall = Stopwatch::start();
+    let cost = CostModel::new(&cfg.cluster);
+
+    // ---- layout: solved positions → integer canvas placements ------------
+    let dims: Vec<(u64, usize, usize)> = scenes
+        .iter()
+        .map(|(id, img)| (*id, img.width, img.height))
+        .collect();
+    // (layout rejects duplicate scene ids, so `by_id` is lossless.)
+    let canvas = crate::mosaic::layout(alignment, &dims)?;
+    let by_id: std::collections::BTreeMap<u64, &Rgba8Image> =
+        scenes.iter().map(|(id, img)| (*id, img)).collect();
+
+    // ---- shuffle: write each scene image into DFS -------------------------
+    // (the canvas-tile reducers fetch them with real locality accounting;
+    // payloads ride the hib codec under the storage compression policy.)
+    let scene_codec = if cfg.storage.compress {
+        crate::hib::Codec::Deflate
+    } else {
+        crate::hib::Codec::Raw
+    };
+    let scene_path = |id: u64| format!("{}/{id}", spec.scene_dir);
+    let mut shuffle_write_secs = vec![0.0f64; cfg.cluster.nodes];
+    for (id, img) in scenes {
+        let bytes =
+            shuffle::encode_scene(*id, img, scene_codec, cfg.storage.compression_level)?;
+        // Spread scene files round-robin, like reducer partitions.
+        let writer = NodeId(*id as usize % cfg.cluster.nodes);
+        dfs.write_file(&scene_path(*id), &bytes, writer)?;
+        shuffle_write_secs[writer.0] +=
+            cost.hdfs_write(bytes.len() as u64, cfg.cluster.replication);
+    }
+    let shuffle_secs = shuffle_write_secs.iter().cloned().fold(0.0, f64::max);
+
+    // ---- plan: one work unit per canvas tile ------------------------------
+    let tasks: Vec<CanvasTile> = crate::mosaic::tile_rects(&canvas, spec.canvas_tile)
+        .into_iter()
+        .enumerate()
+        .map(|(tile_id, rect)| {
+            let scene_ids = crate::mosaic::scenes_in_rect(&canvas, rect);
+            let scene_paths: Vec<String> = scene_ids.iter().map(|&id| scene_path(id)).collect();
+            let mut preferred = Vec::new();
+            for path in &scene_paths {
+                if let Ok(meta) = dfs.namenode().file_meta(path) {
+                    if let Ok(nodes) = dfs.locate_range(path, 0, meta.len) {
+                        for n in nodes {
+                            if !preferred.contains(&n) {
+                                preferred.push(n);
+                            }
+                        }
+                    }
+                }
+            }
+            CanvasTile { tile_id, rect, scene_ids, scene_paths, preferred_nodes: preferred }
+        })
+        .collect();
+    let n_tiles = tasks.len();
+
+    let scheduler: Scheduler<CanvasTile> = Scheduler::new(tasks, &cfg.scheduler);
+    let results: Mutex<Vec<Option<Vec<u8>>>> = Mutex::new(vec![None; n_tiles]);
+    let tiles_counter = registry.counter("canvas_tiles");
+    let tile_hist = registry.histogram("canvas_tile_latency");
+
+    let totals = run_slots(
+        &cfg.cluster,
+        &scheduler,
+        |task: &CanvasTile, handle, node| {
+            let work = mosaic_tile(dfs, spec, hooks, &cost, &canvas, task, handle, node)?;
+            if let Some(w) = &work {
+                tile_hist.observe(w.compute_ns as f64 * 1e-9);
+            }
+            Ok(work)
+        },
+        |task, pixels| {
+            tiles_counter.inc();
+            results.lock().unwrap()[task.tile_id] = Some(pixels);
+        },
+    );
+
+    if let Some(reason) = scheduler.abort_reason() {
+        return Err(DifetError::Job(reason));
+    }
+
+    // ---- assemble: tile pixels → one canvas -------------------------------
+    let tiles: Vec<Vec<u8>> = results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .collect::<Option<Vec<_>>>()
+        .ok_or_else(|| DifetError::Job("mosaic tile lost its result".into()))?;
+    let mut mosaic = Rgba8Image::new(canvas.width, canvas.height);
+    for (rect, px) in crate::mosaic::tile_rects(&canvas, spec.canvas_tile)
+        .into_iter()
+        .zip(&tiles)
+    {
+        let [r0, r1, c0, c1] = rect;
+        mosaic.blit(r0, c0, r1 - r0, c1 - c0, px);
+    }
+
+    // ---- seam diagnostics -------------------------------------------------
+    let overlaps = crate::mosaic::overlap_stats(&canvas, &by_id)?;
+    let rms_hist = registry.histogram("overlap_rms");
+    for o in &overlaps {
+        rms_hist.observe(o.rms);
+    }
+    registry
+        .gauge("mosaic_max_cycle_residual")
+        .set(alignment.max_residual());
+
+    let mut counters = std::collections::BTreeMap::new();
+    counters.insert("tiles".into(), n_tiles as u64);
+    counters.insert("scenes".into(), scenes.len() as u64);
+    counters.insert("overlaps".into(), overlaps.len() as u64);
+    counters.insert(
+        "data_local_tasks".into(),
+        scheduler.data_local_tasks.load(Ordering::Relaxed),
+    );
+    counters.insert(
+        "rack_remote_tasks".into(),
+        scheduler.rack_remote_tasks.load(Ordering::Relaxed),
+    );
+    counters.insert(
+        "speculative_launches".into(),
+        scheduler.speculative_launches.load(Ordering::Relaxed),
+    );
+    counters.insert("retries".into(), scheduler.retries.load(Ordering::Relaxed));
+
+    let report = MosaicReport {
+        nodes: cfg.cluster.nodes,
+        scene_count: scenes.len(),
+        canvas_width: canvas.width,
+        canvas_height: canvas.height,
+        tile_count: n_tiles,
+        blend: spec.blend,
+        sim_seconds: cost.job_startup() + shuffle_secs + totals.max_slot_ns as f64 * 1e-9,
+        wall_seconds: wall.elapsed_secs(),
+        compute_seconds: totals.compute_ns as f64 * 1e-9,
+        io_seconds: totals.io_ns as f64 * 1e-9,
+        overlaps,
+        max_cycle_residual: alignment.max_residual(),
+        rms_cycle_residual: alignment.rms_residual(),
+        counters,
+    };
+    Ok((report, mosaic))
+}
+
+/// The mosaic work-unit body: fetch the scenes overlapping this canvas
+/// tile from DFS, decode them (CRC-guarded), composite the rect with
+/// row-level progress reporting and cooperative cancellation (a losing
+/// speculative twin dies mid-render).
+#[allow(clippy::too_many_arguments)]
+fn mosaic_tile(
+    dfs: &Dfs,
+    spec: &MosaicSpec,
+    hooks: &JobHooks,
+    cost: &CostModel,
+    canvas: &crate::mosaic::Canvas,
+    task: &CanvasTile,
+    handle: &TaskHandle,
+    node: NodeId,
+) -> Result<Option<SlotWork<Vec<u8>>>> {
+    if let Some(f) = &hooks.fail {
+        if f(task.tile_id, handle.attempt) {
+            return Err(DifetError::Job(format!(
+                "injected failure (tile {}, attempt {})",
+                task.tile_id, handle.attempt
+            )));
+        }
+    }
+
+    // --- shuffle input: fetch only the scenes overlapping this rect -------
+    let mut io_secs = 0.0f64;
+    let mut tile_scenes: Vec<(u64, Rgba8Image)> = Vec::with_capacity(task.scene_paths.len());
+    for (expected_id, path) in task.scene_ids.iter().zip(&task.scene_paths) {
+        if handle.cancelled() {
+            return Ok(None);
+        }
+        let (bytes, stats) = dfs.read_file(path, node)?;
+        io_secs += cost.split_input(stats.local_bytes, stats.remote_bytes);
+        let (id, img) = shuffle::decode_scene(&bytes)?;
+        if id != *expected_id {
+            return Err(DifetError::Job(format!(
+                "scene file routing mixup: wanted {expected_id}, got {id}"
+            )));
+        }
+        tile_scenes.push((id, img));
+    }
+    let by_id: std::collections::BTreeMap<u64, &Rgba8Image> =
+        tile_scenes.iter().map(|(id, img)| (*id, img)).collect();
+
+    // --- reduce: composite the rect ---------------------------------------
+    let t0 = std::time::Instant::now();
+    let Some(pixels) =
+        crate::mosaic::composite_rect_while(canvas, &by_id, spec.blend, task.rect, &mut |done,
+                 total| {
+            handle.report_progress(done as f64 / total.max(1) as f64);
+            !handle.cancelled()
+        })?
+    else {
+        return Ok(None); // cancelled: the twin won
+    };
+    let compute_ns = t0.elapsed().as_nanos() as u64;
+
+    let io_ns = (io_secs * 1e9) as u64;
+    let overhead_ns = (cost.task_overhead() * 1e9) as u64;
+    Ok(Some(SlotWork {
+        payload: pixels,
         virtual_ns: overhead_ns + io_ns + compute_ns,
         compute_ns,
         io_ns,

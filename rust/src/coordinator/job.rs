@@ -5,6 +5,7 @@ use std::collections::BTreeMap;
 use crate::dfs::NodeId;
 use crate::features::matching::Translation;
 use crate::features::{Descriptors, Keypoint};
+use crate::mosaic::{BlendMode, OverlapStat};
 
 /// Default bound on keypoints retained per image in final reports —
 /// the single constant the distributed merge and the sequential baseline
@@ -290,6 +291,91 @@ impl RegistrationReport {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Mosaic job: canvas-tile compositing, the third work-item shape.
+// ---------------------------------------------------------------------------
+
+/// What to composite: blending policy and work-unit geometry for one
+/// mosaic job over an aligned scene set.
+#[derive(Debug, Clone)]
+pub struct MosaicSpec {
+    /// Overlap blending policy.
+    pub blend: BlendMode,
+    /// Canvas-tile edge in pixels (one work unit per tile).
+    pub canvas_tile: usize,
+    /// DFS directory the shuffled per-scene image files land in.
+    pub scene_dir: String,
+}
+
+impl Default for MosaicSpec {
+    fn default() -> Self {
+        MosaicSpec {
+            blend: BlendMode::Feather,
+            canvas_tile: 512,
+            scene_dir: "/shuffle/scenes".into(),
+        }
+    }
+}
+
+/// One mosaic work unit: render canvas rect `[row0, row1) × [col0, col1)`
+/// from the scenes overlapping it.  The third [`super::scheduler::WorkItem`]
+/// shape (after map splits and registration pairs) — locality points at
+/// the nodes holding the overlapping scene files' replicas.
+#[derive(Debug, Clone)]
+pub struct CanvasTile {
+    pub tile_id: usize,
+    /// Half-open canvas rect (row0, row1, col0, col1).
+    pub rect: [usize; 4],
+    /// Scene ids overlapping the rect, ascending (the blend order).
+    pub scene_ids: Vec<u64>,
+    /// DFS paths of the overlapping scene files, parallel to `scene_ids`.
+    pub scene_paths: Vec<String>,
+    /// Nodes holding replicas of the scene files, best first.
+    pub preferred_nodes: Vec<NodeId>,
+}
+
+impl super::scheduler::WorkItem for CanvasTile {
+    fn preferred_nodes(&self) -> &[NodeId] {
+        &self.preferred_nodes
+    }
+}
+
+/// Whole mosaic-job result, shaped like [`JobReport`] so the same
+/// reporting/accounting conventions apply; the composited pixels travel
+/// separately (they are a whole image, not a table).
+#[derive(Debug, Clone)]
+pub struct MosaicReport {
+    pub nodes: usize,
+    pub scene_count: usize,
+    pub canvas_width: usize,
+    pub canvas_height: usize,
+    pub tile_count: usize,
+    pub blend: BlendMode,
+    /// Simulated job time: startup + shuffle + max-over-slots virtual time.
+    pub sim_seconds: f64,
+    pub wall_seconds: f64,
+    pub compute_seconds: f64,
+    pub io_seconds: f64,
+    /// Seam quality per overlapping scene pair (RMS RGB difference).
+    pub overlaps: Vec<OverlapStat>,
+    /// Largest alignment cycle residual, in pixels.
+    pub max_cycle_residual: f64,
+    /// RMS alignment cycle residual, in pixels.
+    pub rms_cycle_residual: f64,
+    pub counters: BTreeMap<String, u64>,
+}
+
+impl MosaicReport {
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Worst per-overlap seam RMS (0 when nothing overlaps).
+    pub fn worst_overlap_rms(&self) -> f64 {
+        self.overlaps.iter().map(|o| o.rms).fold(0.0, f64::max)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -355,6 +441,34 @@ mod tests {
         assert_ne!(pair_seed(7, 0, 1), pair_seed(7, 1, 0));
         assert_ne!(pair_seed(7, 0, 1), pair_seed(7, 0, 2));
         assert_ne!(pair_seed(7, 0, 1), pair_seed(8, 0, 1));
+    }
+
+    #[test]
+    fn mosaic_report_defaults_and_worst_overlap() {
+        let spec = MosaicSpec::default();
+        assert_eq!(spec.blend, BlendMode::Feather);
+        assert_eq!(spec.canvas_tile, 512);
+        let rep = MosaicReport {
+            nodes: 2,
+            scene_count: 3,
+            canvas_width: 100,
+            canvas_height: 90,
+            tile_count: 4,
+            blend: spec.blend,
+            sim_seconds: 1.0,
+            wall_seconds: 0.1,
+            compute_seconds: 0.05,
+            io_seconds: 0.02,
+            overlaps: vec![
+                OverlapStat { a: 0, b: 1, area: 10, rms: 0.5 },
+                OverlapStat { a: 1, b: 2, area: 4, rms: 2.25 },
+            ],
+            max_cycle_residual: 0.0,
+            rms_cycle_residual: 0.0,
+            counters: BTreeMap::new(),
+        };
+        assert_eq!(rep.worst_overlap_rms(), 2.25);
+        assert_eq!(rep.counter("tiles"), 0);
     }
 
     #[test]

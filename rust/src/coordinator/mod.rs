@@ -19,10 +19,12 @@
 //! * [`backpressure`] — the bounded queue used between planning and
 //!   execution, so a slow cluster never buffers the whole corpus.
 //!
-//! Two job shapes run on this engine: the paper's map-shaped extraction
-//! ([`run_job`]/[`run_fused_job`]) and the reduce-shaped *registration*
-//! job ([`run_registration_job`]) that turns extracted descriptors into
-//! cross-scene matches — the stitching front-end the paper motivates.
+//! Three job shapes run on this engine: the paper's map-shaped
+//! extraction ([`run_job`]/[`run_fused_job`]), the reduce-shaped
+//! *registration* job ([`run_registration_job`]) that turns extracted
+//! descriptors into cross-scene matches, and the canvas-tile *mosaic*
+//! job ([`run_mosaic_job`]) that composites aligned scenes into one
+//! image — the stitching back-end the paper's follow-up work builds.
 
 pub mod backpressure;
 pub mod driver;
@@ -30,10 +32,13 @@ pub mod job;
 pub mod scheduler;
 pub mod shuffle;
 
-pub use driver::{run_fused_job, run_job, run_registration_job, TileExecutor};
+pub use driver::{run_fused_job, run_job, run_mosaic_job, run_registration_job, TileExecutor};
 pub use job::{
-    pair_seed, FusedJobSpec, ImageCensus, JobReport, JobSpec, MapOutput, PairResult, PairTask,
-    RegistrationReport, RegistrationSpec,
+    pair_seed, CanvasTile, FusedJobSpec, ImageCensus, JobReport, JobSpec, MapOutput,
+    MosaicReport, MosaicSpec, PairResult, PairTask, RegistrationReport, RegistrationSpec,
 };
 pub use scheduler::{Clock, Scheduler, TaskDescriptor, TaskState, WorkItem};
-pub use shuffle::{decode_features, encode_features, enumerate_pairs, merge_image_outputs};
+pub use shuffle::{
+    decode_features, decode_scene, encode_features, encode_scene, enumerate_pairs,
+    merge_image_outputs,
+};

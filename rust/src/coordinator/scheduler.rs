@@ -16,8 +16,9 @@
 //!   cooperatively via [`TaskHandle::cancelled`].
 //!
 //! The scheduler is generic over the work unit ([`WorkItem`]): map splits
-//! ([`TaskDescriptor`]) and registration scene pairs
-//! ([`super::job::PairTask`]) share the same locality/retry/speculation
+//! ([`TaskDescriptor`]), registration scene pairs
+//! ([`super::job::PairTask`]) and mosaic canvas tiles
+//! ([`super::job::CanvasTile`]) share the same locality/retry/speculation
 //! machinery.  Progress rates are measured against an injectable
 //! monotonic [`Clock`] so tests can drive speculation deterministically.
 

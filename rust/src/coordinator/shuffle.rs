@@ -12,7 +12,10 @@
 //! payloads*: per-scene keypoints+descriptors are serialized into DFS
 //! feature files ([`encode_features`]/[`decode_features`], CRC-guarded)
 //! and scene pairs are enumerated into reduce work units
-//! ([`enumerate_pairs`]).
+//! ([`enumerate_pairs`]).  The mosaic job routes whole *scene images*
+//! the same way ([`encode_scene`]/[`decode_scene`], hib-codec payloads
+//! under the same CRC guard) so canvas-tile workers fetch only the
+//! scenes overlapping their rectangle.
 
 use std::collections::BTreeMap;
 
@@ -20,6 +23,8 @@ use byteorder::{ByteOrder, LittleEndian as LE};
 
 use crate::features::nms::rank_truncate;
 use crate::features::{Descriptors, Keypoint};
+use crate::hib::{codec, Codec};
+use crate::imagery::Rgba8Image;
 use crate::util::{crc32, DifetError, Result};
 
 use super::job::{final_retention, ImageCensus, MapOutput};
@@ -208,6 +213,85 @@ pub fn decode_features(bytes: &[u8]) -> Result<(u64, Vec<Keypoint>, Descriptors)
         return Err(corrupt("trailing bytes"));
     }
     Ok((image_id, keypoints, descriptors))
+}
+
+// ---------------------------------------------------------------------------
+// Scene-image routing for the mosaic job.
+// ---------------------------------------------------------------------------
+
+const SCENE_MAGIC: u32 = 0x4446_5343; // "DFSC"
+
+/// Serialize one scene image — the record a mosaic canvas-tile worker
+/// fetches from DFS.  Layout (little-endian): magic, image_id, width,
+/// height, codec byte (as u32), payload length, payload
+/// ([`crate::hib::codec`]-encoded pixels), CRC32 of everything prior.
+///
+/// Deliberately NOT a one-record hib bundle: shuffle files follow the
+/// [`encode_features`] idiom of a single trailing CRC over the whole
+/// stream (header included), whereas the bundle format only checksums
+/// payloads and the index — a flipped byte in a record header there
+/// would go undetected.
+pub fn encode_scene(
+    image_id: u64,
+    img: &Rgba8Image,
+    scene_codec: Codec,
+    level: u32,
+) -> Result<Vec<u8>> {
+    let payload = codec::encode(scene_codec, &img.data, level)?;
+    let mut buf = Vec::with_capacity(32 + payload.len());
+    let mut w32 = |buf: &mut Vec<u8>, v: u32| {
+        let mut b = [0u8; 4];
+        LE::write_u32(&mut b, v);
+        buf.extend_from_slice(&b);
+    };
+    w32(&mut buf, SCENE_MAGIC);
+    let mut b8 = [0u8; 8];
+    LE::write_u64(&mut b8, image_id);
+    buf.extend_from_slice(&b8);
+    w32(&mut buf, img.width as u32);
+    w32(&mut buf, img.height as u32);
+    w32(&mut buf, scene_codec.to_byte() as u32);
+    w32(&mut buf, payload.len() as u32);
+    buf.extend_from_slice(&payload);
+    let crc = crc32::hash(&buf);
+    w32(&mut buf, crc);
+    Ok(buf)
+}
+
+/// Decode a scene file; the inverse of [`encode_scene`].
+pub fn decode_scene(bytes: &[u8]) -> Result<(u64, Rgba8Image)> {
+    let corrupt = |what: &str| DifetError::Job(format!("scene file corrupt: {what}"));
+    // 28-byte fixed header + 4-byte trailing CRC is the smallest stream.
+    if bytes.len() < 32 {
+        return Err(corrupt("truncated header"));
+    }
+    let (body, crc_bytes) = bytes.split_at(bytes.len() - 4);
+    if crc32::hash(body) != LE::read_u32(crc_bytes) {
+        return Err(corrupt("checksum mismatch"));
+    }
+    if LE::read_u32(&body[0..4]) != SCENE_MAGIC {
+        return Err(corrupt("bad magic"));
+    }
+    let image_id = LE::read_u64(&body[4..12]);
+    let width = LE::read_u32(&body[12..16]) as usize;
+    let height = LE::read_u32(&body[16..20]) as usize;
+    let codec_tag = LE::read_u32(&body[20..24]);
+    if codec_tag > u8::MAX as u32 {
+        return Err(corrupt("bad codec tag"));
+    }
+    let scene_codec = Codec::from_byte(codec_tag as u8)
+        .map_err(|e| corrupt(&e.to_string()))?;
+    let payload_len = LE::read_u32(&body[24..28]) as usize;
+    if body.len() != 28 + payload_len {
+        return Err(corrupt("payload length mismatch"));
+    }
+    let expected = width
+        .checked_mul(height)
+        .and_then(|px| px.checked_mul(4))
+        .ok_or_else(|| corrupt("absurd dimensions"))?;
+    let data = codec::decode(scene_codec, &body[28..], expected)
+        .map_err(|e| corrupt(&e.to_string()))?;
+    Ok((image_id, Rgba8Image { width, height, data }))
 }
 
 /// Expand a registration spec's pair selection against the scenes that
@@ -452,6 +536,37 @@ mod tests {
         // Truncation → error, not panic.
         for cut in [0usize, 4, 19, good.len() - 5] {
             assert!(decode_features(&good[..cut]).is_err(), "cut at {cut} accepted");
+        }
+    }
+
+    #[test]
+    fn scene_files_roundtrip_both_codecs() {
+        let mut img = Rgba8Image::new(7, 5);
+        for r in 0..5 {
+            for c in 0..7 {
+                img.put(r, c, [r as u8 * 30, c as u8 * 20, 9, 255]);
+            }
+        }
+        for scene_codec in [Codec::Raw, Codec::Deflate] {
+            let bytes = encode_scene(42, &img, scene_codec, 6).unwrap();
+            let (id, out) = decode_scene(&bytes).unwrap();
+            assert_eq!(id, 42);
+            assert_eq!(out, img, "codec {scene_codec:?} roundtrip diverged");
+        }
+    }
+
+    #[test]
+    fn scene_files_reject_corruption() {
+        let img = Rgba8Image::new(4, 4);
+        let good = encode_scene(1, &img, Codec::Deflate, 6).unwrap();
+        decode_scene(&good).unwrap();
+        for i in [0usize, 13, good.len() / 2, good.len() - 1] {
+            let mut bad = good.clone();
+            bad[i] ^= 0x20;
+            assert!(decode_scene(&bad).is_err(), "flip at {i} accepted");
+        }
+        for cut in [0usize, 8, 31, good.len() - 3] {
+            assert!(decode_scene(&good[..cut]).is_err(), "cut at {cut} accepted");
         }
     }
 

@@ -153,18 +153,17 @@ mod tests {
     }
 
     #[test]
-    fn distinct_patches_have_distant_codes() {
+    fn distinct_patches_have_distant_codes() -> crate::util::Result<()> {
         let g = textured(128, 7);
         let kps = vec![
             Keypoint { row: 32, col: 32, score: 1.0 },
             Keypoint { row: 96, col: 96, score: 1.0 },
         ];
-        if let Descriptors::Binary256(v) = describe(&g, &kps, None) {
-            // Independent random texture → ≈128 differing bits.
-            let d = hamming(&v[0], &v[1]);
-            assert!(d > 64, "suspiciously close codes: {d}");
-        } else {
-            panic!("expected binary descriptors")
-        }
+        let descriptors = describe(&g, &kps, None);
+        let v = descriptors.expect_binary()?;
+        // Independent random texture → ≈128 differing bits.
+        let d = hamming(&v[0], &v[1]);
+        assert!(d > 64, "suspiciously close codes: {d}");
+        Ok(())
     }
 }

@@ -193,6 +193,40 @@ impl Descriptors {
         }
     }
 
+    /// Variant label for error messages.
+    pub fn variant_name(&self) -> &'static str {
+        match self {
+            Descriptors::None => "none",
+            Descriptors::F32 { .. } => "f32",
+            Descriptors::Binary256(_) => "binary256",
+        }
+    }
+
+    /// Fallible view of the float payload as `(dim, row-major data)` —
+    /// the shared accessor for callers that require SIFT/SURF-style
+    /// descriptors (replaces the per-call-site `panic!`s).
+    pub fn expect_f32(&self) -> Result<(usize, &[f32])> {
+        match self {
+            Descriptors::F32 { dim, data } => Ok((*dim, data.as_slice())),
+            other => Err(DifetError::Job(format!(
+                "expected f32 descriptors, got {}",
+                other.variant_name()
+            ))),
+        }
+    }
+
+    /// Fallible view of the binary payload rows — the shared accessor
+    /// for callers that require BRIEF/ORB-style descriptors.
+    pub fn expect_binary(&self) -> Result<&[[u32; 8]]> {
+        match self {
+            Descriptors::Binary256(rows) => Ok(rows.as_slice()),
+            other => Err(DifetError::Job(format!(
+                "expected binary descriptors, got {}",
+                other.variant_name()
+            ))),
+        }
+    }
+
     /// Select rows by index, in `order` order (the shared re-ranking
     /// primitive: keypoints and their descriptor rows permute together).
     /// Indices must be in-bounds for non-`None` variants.
@@ -295,6 +329,22 @@ mod tests {
         // Cross-variant (or cross-dim) merges fail loudly.
         assert!(d.append(Descriptors::Binary256(vec![[0; 8]])).is_err());
         assert!(d.append(Descriptors::F32 { dim: 3, data: vec![0.0; 3] }).is_err());
+    }
+
+    #[test]
+    fn expect_accessors_view_the_right_variant_and_fail_loudly() {
+        let f = Descriptors::F32 { dim: 2, data: vec![1.0, 2.0, 3.0, 4.0] };
+        let (dim, data) = f.expect_f32().unwrap();
+        assert_eq!((dim, data.len()), (2, 4));
+        let b = Descriptors::Binary256(vec![[7; 8]]);
+        assert_eq!(b.expect_binary().unwrap().len(), 1);
+        for (wrong, msg) in [
+            (f.expect_binary().unwrap_err(), "expected binary descriptors, got f32"),
+            (b.expect_f32().unwrap_err(), "expected f32 descriptors, got binary256"),
+            (Descriptors::None.expect_f32().unwrap_err(), "expected f32 descriptors, got none"),
+        ] {
+            assert!(wrong.to_string().contains(msg), "{wrong}");
+        }
     }
 
     #[test]

@@ -82,7 +82,6 @@ pub fn extract(gray: &GrayImage, core: (usize, usize, usize, usize), cap: usize)
 mod tests {
     use super::*;
     use crate::features::brief::hamming;
-    use crate::features::Descriptors;
     use crate::util::rng::Pcg32;
 
     #[test]
@@ -98,7 +97,7 @@ mod tests {
     }
 
     #[test]
-    fn rotational_stability_of_steered_descriptors() {
+    fn rotational_stability_of_steered_descriptors() -> crate::util::Result<()> {
         // Texture + its 90° rotation: matching keypoints must yield close
         // descriptors thanks to steering.
         let n = 96;
@@ -113,11 +112,8 @@ mod tests {
 
         let ea = extract(&base, (0, n, 0, n), 256);
         let eb = extract(&rot, (0, n, 0, n), 256);
-        let (Descriptors::Binary256(da), Descriptors::Binary256(db)) =
-            (&ea.descriptors, &eb.descriptors)
-        else {
-            panic!("binary descriptors expected")
-        };
+        let da = ea.descriptors.expect_binary()?;
+        let db = eb.descriptors.expect_binary()?;
 
         let mut dists = Vec::new();
         for (j, kb) in eb.keypoints.iter().enumerate() {
@@ -135,6 +131,7 @@ mod tests {
         assert!(dists.len() >= 5, "only {} matched keypoints", dists.len());
         let mean = dists.iter().sum::<u32>() as f32 / dists.len() as f32;
         assert!(mean < 100.0, "steered hamming mean {mean} (random ≈ 128)");
+        Ok(())
     }
 
     #[test]

@@ -237,21 +237,19 @@ mod tests {
     }
 
     #[test]
-    fn descriptors_are_normalized_and_clipped() {
+    fn descriptors_are_normalized_and_clipped() -> crate::util::Result<()> {
         let g = gaussian_spot(64, 32.0, 30.0, 4.0);
         let e = extract(&g, (0, 64, 0, 64), 8);
-        if let Descriptors::F32 { dim, data } = &e.descriptors {
-            assert_eq!(*dim, 128);
-            for d in data.chunks_exact(128) {
-                let norm = d.iter().map(|v| v * v).sum::<f32>().sqrt();
-                assert!((norm - 1.0).abs() < 1e-3, "norm {norm}");
-                // Clip happens *before* the final renormalization, so
-                // values may exceed 0.2 afterwards — but not by much.
-                assert!(d.iter().all(|&v| (0.0..=0.35).contains(&v)));
-            }
-        } else {
-            panic!("expected f32 descriptors");
+        let (dim, data) = e.descriptors.expect_f32()?;
+        assert_eq!(dim, 128);
+        for d in data.chunks_exact(128) {
+            let norm = d.iter().map(|v| v * v).sum::<f32>().sqrt();
+            assert!((norm - 1.0).abs() < 1e-3, "norm {norm}");
+            // Clip happens *before* the final renormalization, so
+            // values may exceed 0.2 afterwards — but not by much.
+            assert!(d.iter().all(|&v| (0.0..=0.35).contains(&v)));
         }
+        Ok(())
     }
 
     #[test]

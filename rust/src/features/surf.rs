@@ -129,18 +129,16 @@ mod tests {
     }
 
     #[test]
-    fn descriptors_normalized() {
+    fn descriptors_normalized() -> crate::util::Result<()> {
         let g = spot(64, 32.0, 32.0, 4.0, 1.0);
         let e = extract(&g, (0, 64, 0, 64), 4);
-        if let Descriptors::F32 { dim, data } = &e.descriptors {
-            assert_eq!(*dim, 64);
-            for d in data.chunks_exact(64) {
-                let n = d.iter().map(|v| v * v).sum::<f32>().sqrt();
-                assert!((n - 1.0).abs() < 1e-3);
-            }
-        } else {
-            panic!("expected f32 descriptors")
+        let (dim, data) = e.descriptors.expect_f32()?;
+        assert_eq!(dim, 64);
+        for d in data.chunks_exact(64) {
+            let n = d.iter().map(|v| v * v).sum::<f32>().sqrt();
+            assert!((n - 1.0).abs() < 1e-3);
         }
+        Ok(())
     }
 
     #[test]

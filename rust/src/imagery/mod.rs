@@ -56,6 +56,19 @@ impl Rgba8Image {
         self.data.len()
     }
 
+    /// Copy a `rows×cols` RGBA block (row-major in `src`) into this image
+    /// with its top-left corner at `(row0, col0)` — the mosaic assembly
+    /// primitive (canvas tiles blit into the canvas).
+    pub fn blit(&mut self, row0: usize, col0: usize, rows: usize, cols: usize, src: &[u8]) {
+        assert_eq!(src.len(), rows * cols * 4, "blit source size mismatch");
+        assert!(row0 + rows <= self.height && col0 + cols <= self.width, "blit out of bounds");
+        for r in 0..rows {
+            let dst = self.idx(row0 + r, col0);
+            let s = r * cols * 4;
+            self.data[dst..dst + cols * 4].copy_from_slice(&src[s..s + cols * 4]);
+        }
+    }
+
     /// BT.601 luma of one pixel, normalized to [0, 1] — must match
     /// `python/compile/ops.grayscale` exactly (bit-for-bit parity is
     /// asserted by `rust/tests/parity.rs`).
@@ -63,5 +76,33 @@ impl Rgba8Image {
     pub fn luma01(&self, row: usize, col: usize) -> f32 {
         let [r, g, b, _] = self.get(row, col);
         (0.299 * r as f32 + 0.587 * g as f32 + 0.114 * b as f32) / 255.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blit_places_a_block_and_leaves_the_rest() {
+        let mut img = Rgba8Image::new(6, 5);
+        let block = vec![7u8; 2 * 3 * 4]; // 3 rows × 2 cols
+        img.blit(1, 2, 3, 2, &block);
+        assert_eq!(img.get(0, 2), [0, 0, 0, 0], "above the block untouched");
+        assert_eq!(img.get(1, 1), [0, 0, 0, 0], "left of the block untouched");
+        for r in 1..4 {
+            for c in 2..4 {
+                assert_eq!(img.get(r, c), [7, 7, 7, 7], "({r},{c}) inside the block");
+            }
+        }
+        assert_eq!(img.get(4, 2), [0, 0, 0, 0], "below the block untouched");
+        assert_eq!(img.get(1, 4), [0, 0, 0, 0], "right of the block untouched");
+    }
+
+    #[test]
+    #[should_panic(expected = "blit out of bounds")]
+    fn blit_rejects_out_of_bounds_targets() {
+        let mut img = Rgba8Image::new(4, 4);
+        img.blit(3, 3, 2, 2, &[0u8; 16]);
     }
 }

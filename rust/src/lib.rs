@@ -30,6 +30,7 @@ pub mod features;
 pub mod hib;
 pub mod imagery;
 pub mod metrics;
+pub mod mosaic;
 pub mod pipeline;
 pub mod runtime;
 pub mod util;

@@ -9,26 +9,34 @@
 //! difet census      Table-2-style feature counts for a corpus
 //! difet scalability sweep node counts (Table 1 shape) in one command
 //! difet register    extract + match overlapping acquisitions (2 stages)
+//! difet stitch      register + align + composite one mosaic (4 stages)
+//! difet bench       horizontal-scalability sweep → BENCH_3.json
 //! difet inspect     show artifact manifest + cluster configuration
 //! ```
 //!
-//! Try `difet extract --nodes 4 --scenes 3 --algorithms harris,orb`, or
+//! Try `difet extract --nodes 4 --scenes 3 --algorithms harris,orb`,
 //! `difet register --nodes 2 --scenes 3 --native` for the two-stage
-//! scene-registration job (per-pair matches/inliers/translation table).
+//! scene-registration job, or `difet stitch --nodes 2 --scenes 4
+//! --native` for the full mosaicking flow (solved scene positions +
+//! seam-quality table; `--out mosaic.hib` dumps the composite).
 
 use difet::config::Config;
+use difet::mosaic::BlendMode;
 use difet::pipeline::{
     self, report::ColumnKey, report::TableBuilder, ExtractRequest, RegistrationRequest,
+    StitchRequest,
 };
 use difet::util::args::{help_text, FlagSpec, ParsedArgs};
+use difet::util::json::Json;
 
-const USAGE: &str = "difet <extract|sequential|census|scalability|register|inspect> [options]";
+const USAGE: &str =
+    "difet <extract|sequential|census|scalability|register|stitch|bench|inspect> [options]";
 
 fn flag_specs() -> Vec<FlagSpec> {
     vec![
         FlagSpec { name: "config", takes_value: true, help: "config file (TOML subset)" },
         FlagSpec { name: "set", takes_value: true, help: "override, e.g. --set cluster.nodes=2 (repeatable via commas)" },
-        FlagSpec { name: "nodes", takes_value: true, help: "cluster nodes (default 4)" },
+        FlagSpec { name: "nodes", takes_value: true, help: "cluster nodes (default 4; bench: comma list, default 1,2,4,8)" },
         FlagSpec { name: "scenes", takes_value: true, help: "corpus size N (default 3)" },
         FlagSpec { name: "algorithms", takes_value: true, help: "comma list (default: all seven)" },
         FlagSpec { name: "scene-size", takes_value: true, help: "scene edge px (default 1792; paper 7681)" },
@@ -42,6 +50,8 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "tolerance", takes_value: true, help: "register: RANSAC inlier tolerance px (default 3)" },
         FlagSpec { name: "ransac-iters", takes_value: true, help: "register: RANSAC hypotheses per pair (default 256)" },
         FlagSpec { name: "seed", takes_value: true, help: "register: base RANSAC seed (default 7)" },
+        FlagSpec { name: "blend", takes_value: true, help: "stitch: feather|average|first (default feather)" },
+        FlagSpec { name: "out", takes_value: true, help: "stitch: dump mosaic to this .hib file; bench: JSON path (default BENCH_3.json)" },
         FlagSpec { name: "bare", takes_value: false, help: "disable the I/O cost model" },
         FlagSpec { name: "verbose", takes_value: false, help: "print counters/metrics" },
         FlagSpec { name: "help", takes_value: false, help: "show this help" },
@@ -68,7 +78,7 @@ fn main() {
     }
 }
 
-fn build_config(p: &ParsedArgs) -> Result<Config, String> {
+fn build_config(p: &ParsedArgs, nodes_is_list: bool) -> Result<Config, String> {
     let mut cfg = Config::new();
     if let Some(path) = p.get("config") {
         cfg.load_file(std::path::Path::new(path)).map_err(|e| e.to_string())?;
@@ -81,7 +91,10 @@ fn build_config(p: &ParsedArgs) -> Result<Config, String> {
             cfg.apply_one(k.trim(), v.trim()).map_err(|e| e.to_string())?;
         }
     }
-    cfg.cluster.nodes = p.get_parse("nodes", cfg.cluster.nodes)?;
+    // `bench` sweeps a node-count list; everything else takes one count.
+    if !nodes_is_list {
+        cfg.cluster.nodes = p.get_parse("nodes", cfg.cluster.nodes)?;
+    }
     if let Some(size) = p.get("scene-size") {
         let px: usize = size.parse().map_err(|_| format!("bad --scene-size {size:?}"))?;
         cfg.scene.width = px;
@@ -98,25 +111,26 @@ fn build_config(p: &ParsedArgs) -> Result<Config, String> {
 }
 
 fn build_request(p: &ParsedArgs) -> Result<ExtractRequest, String> {
-    let mut req = ExtractRequest::default();
-    req.num_scenes = p.get_parse("scenes", req.num_scenes)?;
-    if let Some(algs) = p.get_list("algorithms") {
-        req.algorithms = algs;
-    }
-    req.write_output = !p.has("no-write");
-    req.force_native = p.has("native");
-    req.fused = p.has("fused");
-    Ok(req)
+    let defaults = ExtractRequest::default();
+    Ok(ExtractRequest {
+        num_scenes: p.get_parse("scenes", defaults.num_scenes)?,
+        algorithms: p.get_list("algorithms").unwrap_or(defaults.algorithms),
+        write_output: !p.has("no-write"),
+        force_native: p.has("native"),
+        fused: p.has("fused"),
+    })
 }
 
 fn build_registration_request(
     p: &ParsedArgs,
     req: &ExtractRequest,
 ) -> Result<RegistrationRequest, String> {
-    let mut r = RegistrationRequest::default();
     // Reuse the shared extraction flags: --scenes and --native.
-    r.num_scenes = req.num_scenes;
-    r.force_native = req.force_native;
+    let mut r = RegistrationRequest {
+        num_scenes: req.num_scenes,
+        force_native: req.force_native,
+        ..Default::default()
+    };
     // Registration matches ONE descriptor algorithm; an explicit
     // multi-algorithm list is ambiguous, so reject it rather than
     // silently matching the default.
@@ -153,11 +167,12 @@ fn build_registration_request(
 }
 
 fn run(p: &ParsedArgs) -> Result<(), String> {
-    let cfg = build_config(p)?;
+    let sub = p.subcommand.as_deref().unwrap();
+    let cfg = build_config(p, sub == "bench")?;
     let req = build_request(p)?;
     let verbose = p.has("verbose");
 
-    match p.subcommand.as_deref().unwrap() {
+    match sub {
         "extract" => {
             let rep = pipeline::run_extraction(&cfg, &req).map_err(|e| e.to_string())?;
             println!(
@@ -226,6 +241,42 @@ fn run(p: &ParsedArgs) -> Result<(), String> {
                 }
             }
         }
+        "stitch" => {
+            let rreq = build_registration_request(p, &req)?;
+            let blend =
+                BlendMode::parse(p.get_or("blend", "feather")).map_err(|e| e.to_string())?;
+            let sreq = StitchRequest { reg: rreq, blend, ..Default::default() };
+            let out = pipeline::run_stitch(&cfg, &sreq).map_err(|e| e.to_string())?;
+            println!(
+                "corpus: {} overlapping acquisitions, {} raw, {} bundled; \
+                 {} pair(s) registered, {} aligned component(s)\n",
+                out.registration.corpus.scene_count,
+                difet::util::fmt::bytes(out.registration.corpus.raw_bytes),
+                difet::util::fmt::bytes(out.registration.corpus.bundle_bytes),
+                out.registration.report.registered_count(),
+                out.alignment.components.len(),
+            );
+            print!("{}", pipeline::report::render_registration_table(&out.registration.report));
+            println!();
+            print!("{}", pipeline::report::render_mosaic_table(&out.alignment, &out.report));
+            if let Some(path) = p.get("out") {
+                pipeline::dump_mosaic(std::path::Path::new(path), &out.mosaic)
+                    .map_err(|e| e.to_string())?;
+                println!(
+                    "\nmosaic ({}×{}) written to {path} (single-record HIB, deflate)",
+                    out.mosaic.width, out.mosaic.height
+                );
+            }
+            if verbose {
+                println!("\ncounters:");
+                for (k, v) in &out.report.counters {
+                    println!("  {k:<24}{v}");
+                }
+            }
+        }
+        "bench" => {
+            run_bench(p, &cfg, &req)?;
+        }
         "inspect" => {
             println!("config: {cfg:#?}");
             let dir = std::path::Path::new(&cfg.artifacts_dir);
@@ -248,5 +299,105 @@ fn run(p: &ParsedArgs) -> Result<(), String> {
             return Err(format!("unknown subcommand {other:?}\n{}", help_text(USAGE, &flag_specs())));
         }
     }
+    Ok(())
+}
+
+/// The paper's core evaluation as one command: run the fused extraction
+/// sweep AND the full stitch flow at each node count, then write
+/// wall-time, speedup and parallel efficiency to a JSON report
+/// (`BENCH_3.json` by default).  Speedup is relative to the smallest
+/// node count in the sweep; efficiency is `speedup × baseline / nodes`.
+fn run_bench(p: &ParsedArgs, cfg: &Config, req: &ExtractRequest) -> Result<(), String> {
+    let mut nodes: Vec<usize> = match p.get_list("nodes") {
+        Some(items) => items
+            .iter()
+            .map(|s| s.parse().map_err(|_| format!("bad node count {s:?}")))
+            .collect::<Result<Vec<usize>, String>>()?,
+        None => vec![1, 2, 4, 8],
+    };
+    nodes.sort_unstable();
+    nodes.dedup();
+    if nodes.is_empty() || nodes[0] == 0 {
+        return Err("--nodes needs a comma list of positive counts".into());
+    }
+
+    // The stitch leg reuses the shared flags (--scenes/--native/
+    // --max-offset/--seed) with the default ORB matcher.
+    let mut rreq = RegistrationRequest {
+        num_scenes: req.num_scenes,
+        force_native: req.force_native,
+        ..Default::default()
+    };
+    rreq.max_offset = p.get_parse("max-offset", rreq.max_offset)?;
+    rreq.spec.seed = p.get_parse("seed", rreq.spec.seed)?;
+    let sreq = StitchRequest { reg: rreq, ..Default::default() };
+    let ereq = ExtractRequest { fused: true, write_output: false, ..req.clone() };
+
+    println!(
+        "bench: {} scene(s), algorithms {:?}, node counts {:?}\n",
+        req.num_scenes, req.algorithms, nodes
+    );
+    let mut rows: Vec<(usize, f64, f64)> = Vec::new(); // (nodes, extract, stitch)
+    for &n in &nodes {
+        let mut c = cfg.clone();
+        c.cluster.nodes = n;
+        let erep = pipeline::run_extraction(&c, &ereq).map_err(|e| e.to_string())?;
+        let extract_secs = erep.jobs.first().map_or(0.0, |j| j.sim_seconds);
+        let sout = pipeline::run_stitch(&c, &sreq).map_err(|e| e.to_string())?;
+        let stitch_secs = sout.registration.extraction.sim_seconds
+            + sout.registration.report.sim_seconds
+            + sout.report.sim_seconds;
+        println!(
+            "  {n} node(s): extract {}, stitch {}",
+            difet::util::fmt::duration(extract_secs),
+            difet::util::fmt::duration(stitch_secs),
+        );
+        rows.push((n, extract_secs, stitch_secs));
+    }
+
+    let baseline_nodes = rows[0].0;
+    let baseline_total = rows[0].1 + rows[0].2;
+    let mut runs = Vec::new();
+    println!(
+        "\n{:<8}{:>12}{:>12}{:>12}{:>10}{:>12}",
+        "nodes", "extract", "stitch", "total", "speedup", "efficiency"
+    );
+    for &(n, extract_secs, stitch_secs) in &rows {
+        let total = extract_secs + stitch_secs;
+        let speedup = if total > 0.0 { baseline_total / total } else { 0.0 };
+        let efficiency = speedup * baseline_nodes as f64 / n as f64;
+        println!(
+            "{:<8}{:>12.1}{:>12.1}{:>12.1}{:>9.2}x{:>11.0}%",
+            n,
+            extract_secs,
+            stitch_secs,
+            total,
+            speedup,
+            efficiency * 100.0,
+        );
+        let mut row = std::collections::BTreeMap::new();
+        row.insert("nodes".to_string(), Json::Num(n as f64));
+        row.insert("extract_sim_seconds".to_string(), Json::Num(extract_secs));
+        row.insert("stitch_sim_seconds".to_string(), Json::Num(stitch_secs));
+        row.insert("total_sim_seconds".to_string(), Json::Num(total));
+        row.insert("speedup".to_string(), Json::Num(speedup));
+        row.insert("parallel_efficiency".to_string(), Json::Num(efficiency));
+        runs.push(Json::Obj(row));
+    }
+
+    let mut root = std::collections::BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("horizontal_scalability".to_string()));
+    root.insert("scenes".to_string(), Json::Num(req.num_scenes as f64));
+    root.insert("scene_width".to_string(), Json::Num(cfg.scene.width as f64));
+    root.insert("scene_height".to_string(), Json::Num(cfg.scene.height as f64));
+    root.insert(
+        "algorithms".to_string(),
+        Json::Arr(req.algorithms.iter().map(|a| Json::Str(a.clone())).collect()),
+    );
+    root.insert("baseline_nodes".to_string(), Json::Num(baseline_nodes as f64));
+    root.insert("runs".to_string(), Json::Arr(runs));
+    let path = p.get_or("out", "BENCH_3.json");
+    std::fs::write(path, format!("{}\n", Json::Obj(root))).map_err(|e| e.to_string())?;
+    println!("\nwrote {path}");
     Ok(())
 }

@@ -27,6 +27,22 @@ impl Counter {
     }
 }
 
+/// Last-value gauge for f64 quantities (stored as bit patterns, so reads
+/// and writes are lock-free).  Used for job-level quality diagnostics
+/// like the mosaic alignment's max cycle residual.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
 /// Log-spaced latency histogram, 1 µs .. ~17 min in 64 buckets.
 #[derive(Debug)]
 pub struct Histogram {
@@ -127,6 +143,7 @@ impl HistSnapshot {
 #[derive(Debug, Default)]
 pub struct Registry {
     counters: Mutex<BTreeMap<&'static str, std::sync::Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<&'static str, std::sync::Arc<Gauge>>>,
     histograms: Mutex<BTreeMap<&'static str, std::sync::Arc<Histogram>>>,
 }
 
@@ -137,6 +154,15 @@ impl Registry {
 
     pub fn counter(&self, name: &'static str) -> std::sync::Arc<Counter> {
         self.counters
+            .lock()
+            .unwrap()
+            .entry(name)
+            .or_default()
+            .clone()
+    }
+
+    pub fn gauge(&self, name: &'static str) -> std::sync::Arc<Gauge> {
+        self.gauges
             .lock()
             .unwrap()
             .entry(name)
@@ -161,6 +187,9 @@ impl Registry {
                 "  {name:<32} {}\n",
                 crate::util::fmt::with_commas(c.get())
             ));
+        }
+        for (name, g) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("  {name:<32} {:.3}\n", g.get()));
         }
         for (name, h) in self.histograms.lock().unwrap().iter() {
             let s = h.snapshot();
@@ -220,10 +249,23 @@ mod tests {
         let reg = Registry::new();
         reg.counter("bytes_read").add(1_000_000);
         reg.histogram("tile_latency").observe(0.01);
+        reg.gauge("max_cycle_residual").set(1.25);
         let text = reg.render();
         assert!(text.contains("bytes_read"));
         assert!(text.contains("1,000,000"));
         assert!(text.contains("tile_latency"));
+        assert!(text.contains("max_cycle_residual"));
+        assert!(text.contains("1.250"));
+    }
+
+    #[test]
+    fn gauge_holds_last_value_across_clones() {
+        let reg = Registry::new();
+        let a = reg.gauge("residual");
+        assert_eq!(a.get(), 0.0, "default gauge reads 0");
+        a.set(3.5);
+        reg.gauge("residual").set(-0.25);
+        assert_eq!(a.get(), -0.25);
     }
 
     #[test]

@@ -1,0 +1,388 @@
+//! Global alignment: pairwise translations → per-scene absolute positions.
+//!
+//! The registration job leaves a *graph*: scenes are vertices, registered
+//! pairs are edges measuring `pos_a − pos_b` (a translation taking
+//! A-coordinates to B-coordinates is exactly the difference of the two
+//! scenes' canvas origins).  Mosaicking needs one absolute position per
+//! scene, which is an overdetermined linear system as soon as the graph
+//! has cycles — the classic bundle-adjustment-lite step every stitching
+//! pipeline runs between matching and compositing (Sarı et al. 2018 §3).
+//!
+//! The solver here is deterministic and dependency-free:
+//!
+//! 1. **Connected components** — scenes that never registered against
+//!    each other cannot be placed relative to one another; each component
+//!    is solved independently, anchored at its smallest scene id.
+//! 2. **Spanning-tree initialization** — BFS from the anchor accumulates
+//!    translations along tree edges, which is already exact when the
+//!    measurements are cycle-consistent.
+//! 3. **Gauss-Seidel refinement** — sweeps in ascending scene-id order
+//!    re-estimate every non-anchor position as the inlier-weighted mean
+//!    of its neighbours' predictions, converging to the weighted
+//!    least-squares solution of the translation-difference equations.
+//!
+//! Because every step iterates scenes/edges in sorted order with f64
+//! arithmetic, the solution is bit-identical across runs and node counts
+//! — the property the distributed compositing job builds on.
+//!
+//! Cycle residuals (`(pos_a − pos_b) − t_ab` per edge) are kept as
+//! diagnostics: they are ~0 on cycle-consistent inputs and their max/RMS
+//! quantify how much the pairwise registrations disagree globally.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::PairResult;
+use crate::util::{DifetError, Result};
+
+/// One measured edge: `pos_a − pos_b = (d_row, d_col)`, weighted (the
+/// stitch pipeline uses RANSAC inlier counts as weights).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PairMeasurement {
+    pub a: u64,
+    pub b: u64,
+    pub d_row: f64,
+    pub d_col: f64,
+    pub weight: f64,
+}
+
+/// Convert a registration job's pair results into alignment measurements
+/// (unregistered pairs are skipped; their scenes may end up in separate
+/// components).
+pub fn measurements_from_pairs(pairs: &[PairResult]) -> Vec<PairMeasurement> {
+    pairs
+        .iter()
+        .filter_map(|p| {
+            p.translation.map(|t| PairMeasurement {
+                a: p.image_a,
+                b: p.image_b,
+                d_row: t.d_row as f64,
+                d_col: t.d_col as f64,
+                weight: (t.inliers.max(1)) as f64,
+            })
+        })
+        .collect()
+}
+
+/// Residual of one edge under the solved positions:
+/// `(pos_a − pos_b) − t_ab`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EdgeResidual {
+    pub a: u64,
+    pub b: u64,
+    pub d_row_err: f64,
+    pub d_col_err: f64,
+}
+
+impl EdgeResidual {
+    /// Euclidean magnitude in pixels.
+    pub fn magnitude(&self) -> f64 {
+        self.d_row_err.hypot(self.d_col_err)
+    }
+}
+
+/// Solved global alignment over one scene set.
+#[derive(Debug, Clone)]
+pub struct GlobalAlignment {
+    /// Absolute (row, col) position per scene, anchored per component.
+    pub positions: BTreeMap<u64, (f64, f64)>,
+    /// Connected components, each sorted ascending; the first id of each
+    /// is its anchor (position fixed at (0, 0)).
+    pub components: Vec<Vec<u64>>,
+    /// Gauss-Seidel sweeps actually run — always ≥ 1; a forest (or any
+    /// cycle-consistent graph) converges on the first sweep, which only
+    /// confirms the spanning-tree initialization.
+    pub iterations: usize,
+    /// Per-edge residuals under the solved positions.
+    pub residuals: Vec<EdgeResidual>,
+}
+
+impl GlobalAlignment {
+    /// Largest edge residual magnitude (0 for edgeless graphs).
+    pub fn max_residual(&self) -> f64 {
+        self.residuals
+            .iter()
+            .map(|r| r.magnitude())
+            .fold(0.0, f64::max)
+    }
+
+    /// Root-mean-square edge residual magnitude.
+    pub fn rms_residual(&self) -> f64 {
+        if self.residuals.is_empty() {
+            return 0.0;
+        }
+        let sum: f64 = self
+            .residuals
+            .iter()
+            .map(|r| r.d_row_err * r.d_row_err + r.d_col_err * r.d_col_err)
+            .sum();
+        (sum / self.residuals.len() as f64).sqrt()
+    }
+}
+
+/// Solver knobs; defaults suit every corpus this repo generates.
+#[derive(Debug, Clone, Copy)]
+pub struct AlignOptions {
+    /// Gauss-Seidel sweep cap.
+    pub max_iterations: usize,
+    /// Stop when the largest per-sweep position change drops below this.
+    pub epsilon: f64,
+}
+
+impl Default for AlignOptions {
+    fn default() -> Self {
+        AlignOptions {
+            max_iterations: 256,
+            epsilon: 1e-9,
+        }
+    }
+}
+
+/// Solve per-scene absolute positions from pairwise measurements.
+///
+/// Every scene in `scene_ids` gets a position: scenes without edges are
+/// singleton components anchored at (0, 0).  Measurements referencing
+/// unknown scenes or self-pairs are rejected.
+pub fn solve_alignment(
+    scene_ids: &[u64],
+    measurements: &[PairMeasurement],
+    opts: AlignOptions,
+) -> Result<GlobalAlignment> {
+    let mut ids: Vec<u64> = scene_ids.to_vec();
+    ids.sort_unstable();
+    ids.dedup();
+    if ids.len() != scene_ids.len() {
+        return Err(DifetError::Job("duplicate scene ids in alignment".into()));
+    }
+    let index: BTreeMap<u64, usize> = ids.iter().enumerate().map(|(i, &id)| (id, i)).collect();
+    for m in measurements {
+        if m.a == m.b {
+            return Err(DifetError::Job(format!("self-measurement on scene {}", m.a)));
+        }
+        for id in [m.a, m.b] {
+            if !index.contains_key(&id) {
+                return Err(DifetError::Job(format!(
+                    "measurement ({}, {}) references unknown scene {id}",
+                    m.a, m.b
+                )));
+            }
+        }
+        if !m.weight.is_finite() || m.weight <= 0.0 || !m.d_row.is_finite() || !m.d_col.is_finite()
+        {
+            return Err(DifetError::Job(format!(
+                "degenerate measurement ({}, {}): weight {}, t ({}, {})",
+                m.a, m.b, m.weight, m.d_row, m.d_col
+            )));
+        }
+    }
+
+    // Adjacency: for scene i, (neighbour j, delta such that
+    // pos_i = pos_j + delta, weight).  Edge (a, b) with t = pos_a − pos_b
+    // gives pos_a = pos_b + t and pos_b = pos_a − t.
+    let n = ids.len();
+    let mut adj: Vec<Vec<(usize, f64, f64, f64)>> = vec![Vec::new(); n];
+    for m in measurements {
+        let (ia, ib) = (index[&m.a], index[&m.b]);
+        adj[ia].push((ib, m.d_row, m.d_col, m.weight));
+        adj[ib].push((ia, -m.d_row, -m.d_col, m.weight));
+    }
+    // Sorted neighbour order keeps every later loop deterministic.
+    for nbrs in &mut adj {
+        nbrs.sort_by_key(|e| e.0);
+    }
+
+    // ---- connected components + spanning-tree (BFS) initialization ------
+    let mut pos: Vec<(f64, f64)> = vec![(0.0, 0.0); n];
+    let mut comp_of: Vec<usize> = vec![usize::MAX; n];
+    let mut components: Vec<Vec<u64>> = Vec::new();
+    for start in 0..n {
+        if comp_of[start] != usize::MAX {
+            continue;
+        }
+        let comp_id = components.len();
+        let mut members = Vec::new();
+        let mut queue = std::collections::VecDeque::from([start]);
+        comp_of[start] = comp_id;
+        pos[start] = (0.0, 0.0); // anchor: smallest id reaches first
+        while let Some(i) = queue.pop_front() {
+            members.push(ids[i]);
+            for &(j, dr, dc, _) in &adj[i] {
+                if comp_of[j] == usize::MAX {
+                    comp_of[j] = comp_id;
+                    // pos_j = pos_i − delta_ij  (delta is pos_i − pos_j).
+                    pos[j] = (pos[i].0 - dr, pos[i].1 - dc);
+                    queue.push_back(j);
+                }
+            }
+        }
+        members.sort_unstable();
+        components.push(members);
+    }
+    let anchor: Vec<bool> = {
+        let mut a = vec![false; n];
+        for comp in &components {
+            a[index[&comp[0]]] = true;
+        }
+        a
+    };
+
+    // ---- Gauss-Seidel refinement ----------------------------------------
+    let mut iterations = 0usize;
+    for _ in 0..opts.max_iterations {
+        let mut max_delta = 0.0f64;
+        for i in 0..n {
+            if anchor[i] || adj[i].is_empty() {
+                continue;
+            }
+            let (mut sr, mut sc, mut sw) = (0.0f64, 0.0f64, 0.0f64);
+            for &(j, dr, dc, w) in &adj[i] {
+                // Neighbour j predicts pos_i = pos_j + delta_ij.
+                sr += w * (pos[j].0 + dr);
+                sc += w * (pos[j].1 + dc);
+                sw += w;
+            }
+            let next = (sr / sw, sc / sw);
+            max_delta = max_delta
+                .max((next.0 - pos[i].0).abs())
+                .max((next.1 - pos[i].1).abs());
+            pos[i] = next;
+        }
+        iterations += 1;
+        if max_delta < opts.epsilon {
+            break;
+        }
+    }
+
+    let residuals: Vec<EdgeResidual> = measurements
+        .iter()
+        .map(|m| {
+            let (ia, ib) = (index[&m.a], index[&m.b]);
+            EdgeResidual {
+                a: m.a,
+                b: m.b,
+                d_row_err: (pos[ia].0 - pos[ib].0) - m.d_row,
+                d_col_err: (pos[ia].1 - pos[ib].1) - m.d_col,
+            }
+        })
+        .collect();
+
+    Ok(GlobalAlignment {
+        positions: ids.iter().zip(&pos).map(|(&id, &p)| (id, p)).collect(),
+        components,
+        iterations,
+        residuals,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(a: u64, b: u64, dr: f64, dc: f64) -> PairMeasurement {
+        PairMeasurement { a, b, d_row: dr, d_col: dc, weight: 1.0 }
+    }
+
+    #[test]
+    fn chain_is_exact_from_tree_init() {
+        // 0—1—2 chain with consistent measurements: pos_a − pos_b = t.
+        let al = solve_alignment(
+            &[0, 1, 2],
+            &[m(0, 1, -10.0, -5.0), m(1, 2, -7.0, 3.0)],
+            AlignOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(al.components, vec![vec![0, 1, 2]]);
+        assert_eq!(al.positions[&0], (0.0, 0.0));
+        let p1 = al.positions[&1];
+        let p2 = al.positions[&2];
+        assert!((p1.0 - 10.0).abs() < 1e-9 && (p1.1 - 5.0).abs() < 1e-9);
+        assert!((p2.0 - 17.0).abs() < 1e-9 && (p2.1 - 2.0).abs() < 1e-9);
+        assert!(al.max_residual() < 1e-9);
+    }
+
+    #[test]
+    fn consistent_cycle_has_zero_residual() {
+        // Triangle whose measurements close exactly.
+        let al = solve_alignment(
+            &[0, 1, 2],
+            &[m(0, 1, -4.0, 0.0), m(1, 2, -6.0, -2.0), m(0, 2, -10.0, -2.0)],
+            AlignOptions::default(),
+        )
+        .unwrap();
+        assert!(al.max_residual() < 1e-9, "residual {}", al.max_residual());
+        let p2 = al.positions[&2];
+        assert!((p2.0 - 10.0).abs() < 1e-9 && (p2.1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn inconsistent_cycle_spreads_error_and_reports_residual() {
+        // Triangle that fails to close by 3 px on the row axis.
+        let al = solve_alignment(
+            &[0, 1, 2],
+            &[m(0, 1, -4.0, 0.0), m(1, 2, -6.0, 0.0), m(0, 2, -13.0, 0.0)],
+            AlignOptions::default(),
+        )
+        .unwrap();
+        // Least squares splits the 3 px misclosure across the three edges.
+        assert!(al.max_residual() > 0.5, "residual {}", al.max_residual());
+        assert!(al.max_residual() < 3.0, "residual {}", al.max_residual());
+        assert!(al.rms_residual() <= al.max_residual());
+        // The solved position lands between the two contradictory paths.
+        let p2 = al.positions[&2].0;
+        assert!(p2 > 10.0 && p2 < 13.0, "pos {p2}");
+    }
+
+    #[test]
+    fn disconnected_components_are_anchored_independently() {
+        let al = solve_alignment(
+            &[0, 1, 5, 9],
+            &[m(0, 1, -8.0, -8.0), m(5, 9, 2.0, 4.0)],
+            AlignOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(al.components, vec![vec![0, 1], vec![5, 9]]);
+        assert_eq!(al.positions[&0], (0.0, 0.0));
+        assert_eq!(al.positions[&5], (0.0, 0.0));
+        let p9 = al.positions[&9];
+        assert!((p9.0 + 2.0).abs() < 1e-9 && (p9.1 + 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn weights_pull_toward_the_heavier_edge() {
+        // Two contradictory direct measurements 0→1; the heavier wins.
+        let heavy = PairMeasurement { a: 0, b: 1, d_row: -10.0, d_col: 0.0, weight: 9.0 };
+        let light = PairMeasurement { a: 0, b: 1, d_row: -20.0, d_col: 0.0, weight: 1.0 };
+        let al = solve_alignment(&[0, 1], &[heavy, light], AlignOptions::default()).unwrap();
+        let p1 = al.positions[&1].0;
+        assert!((p1 - 11.0).abs() < 1e-6, "pos {p1} (weighted mean is 11)");
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        assert!(solve_alignment(&[0, 0], &[], AlignOptions::default()).is_err());
+        assert!(solve_alignment(&[0, 1], &[m(0, 0, 1.0, 1.0)], AlignOptions::default()).is_err());
+        assert!(solve_alignment(&[0, 1], &[m(0, 7, 1.0, 1.0)], AlignOptions::default()).is_err());
+        let mut nan = m(0, 1, f64::NAN, 0.0);
+        assert!(solve_alignment(&[0, 1], &[nan], AlignOptions::default()).is_err());
+        nan = m(0, 1, 0.0, 0.0);
+        nan.weight = 0.0;
+        assert!(solve_alignment(&[0, 1], &[nan], AlignOptions::default()).is_err());
+    }
+
+    #[test]
+    fn measurements_from_pairs_skip_unregistered() {
+        use crate::features::matching::Translation;
+        let pairs = vec![
+            PairResult {
+                image_a: 0,
+                image_b: 1,
+                matches: 40,
+                translation: Some(Translation { d_row: 3.0, d_col: -2.0, inliers: 30 }),
+            },
+            PairResult { image_a: 0, image_b: 2, matches: 2, translation: None },
+        ];
+        let ms = measurements_from_pairs(&pairs);
+        assert_eq!(ms.len(), 1);
+        assert_eq!((ms[0].a, ms[0].b), (0, 1));
+        assert_eq!((ms[0].d_row, ms[0].d_col, ms[0].weight), (3.0, -2.0, 30.0));
+    }
+}

@@ -1,0 +1,491 @@
+//! Mosaic compositing: aligned scenes → one blended canvas.
+//!
+//! Scenes are placed on an integer canvas grid (positions from the
+//! [`super::align`] solver, rounded to the nearest pixel — the
+//! registration model is translation-only, so sub-pixel resampling would
+//! add nothing but blur) and blended per pixel.  The per-pixel loop is
+//! the whole determinism story: each canvas pixel is computed from
+//! scratch from the scenes covering it, in ascending scene-id order,
+//! with f64 accumulation — so any rectangle of the canvas composites to
+//! the same bytes whether it is rendered by one thread
+//! ([`composite_sequential`]) or as a tile-shaped work unit of the
+//! distributed job ([`crate::coordinator::run_mosaic_job`]).  Scenes
+//! that do not cover a pixel contribute nothing, which is why a tile
+//! worker only needs the scenes overlapping its rectangle.
+
+use std::collections::BTreeMap;
+
+use crate::imagery::Rgba8Image;
+use crate::util::{DifetError, Result};
+
+use super::align::GlobalAlignment;
+
+/// Overlap blending policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlendMode {
+    /// Distance-feathered weights: each scene's contribution is its
+    /// pixel's distance to the nearest scene edge, so seams fade linearly
+    /// (the default, and the mode the paper's stitching follow-up uses).
+    Feather,
+    /// Unweighted mean of all covering scenes.
+    Average,
+    /// First covering scene (ascending id) wins — hard seams, useful as
+    /// a diagnostic for misalignment.
+    First,
+}
+
+impl BlendMode {
+    pub fn parse(name: &str) -> Result<BlendMode> {
+        match name {
+            "feather" => Ok(BlendMode::Feather),
+            "average" => Ok(BlendMode::Average),
+            "first" => Ok(BlendMode::First),
+            other => Err(DifetError::Config(format!(
+                "unknown blend mode {other:?} (known: feather, average, first)"
+            ))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BlendMode::Feather => "feather",
+            BlendMode::Average => "average",
+            BlendMode::First => "first",
+        }
+    }
+}
+
+/// One scene's placement on the canvas (canvas-relative, non-negative).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Placement {
+    pub id: u64,
+    pub row0: usize,
+    pub col0: usize,
+    pub width: usize,
+    pub height: usize,
+}
+
+impl Placement {
+    /// Half-open canvas rect `[row0, row1) × [col0, col1)`.
+    pub fn rect(&self) -> [usize; 4] {
+        [self.row0, self.row0 + self.height, self.col0, self.col0 + self.width]
+    }
+}
+
+/// The mosaic canvas: its size and every scene's placement, sorted by
+/// scene id (the blend order).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Canvas {
+    pub width: usize,
+    pub height: usize,
+    pub placements: Vec<Placement>,
+}
+
+/// Do two half-open rects `[r0, r1) × [c0, c1)` intersect, and where?
+fn intersect(a: [usize; 4], b: [usize; 4]) -> Option<[usize; 4]> {
+    let r0 = a[0].max(b[0]);
+    let r1 = a[1].min(b[1]);
+    let c0 = a[2].max(b[2]);
+    let c1 = a[3].min(b[3]);
+    (r0 < r1 && c0 < c1).then_some([r0, r1, c0, c1])
+}
+
+/// Lay out the canvas: round solved positions to integer pixels, shift so
+/// the top-left-most scene corner is (0, 0), compute the bounding box.
+/// `dims` maps scene id → (width, height); every dims entry must have a
+/// solved position.
+pub fn layout(alignment: &GlobalAlignment, dims: &[(u64, usize, usize)]) -> Result<Canvas> {
+    if dims.is_empty() {
+        return Err(DifetError::Job("mosaic layout: no scenes".into()));
+    }
+    let mut sorted: Vec<(u64, usize, usize)> = dims.to_vec();
+    sorted.sort_unstable_by_key(|&(id, _, _)| id);
+    for w in sorted.windows(2) {
+        if w[0].0 == w[1].0 {
+            return Err(DifetError::Job(format!("duplicate scene id {}", w[0].0)));
+        }
+    }
+    let mut px: Vec<(u64, i64, i64, usize, usize)> = Vec::with_capacity(sorted.len());
+    for &(id, width, height) in &sorted {
+        let &(r, c) = alignment.positions.get(&id).ok_or_else(|| {
+            DifetError::Job(format!("scene {id} has no solved position"))
+        })?;
+        if !r.is_finite() || !c.is_finite() {
+            return Err(DifetError::Job(format!("scene {id} position is not finite")));
+        }
+        px.push((id, r.round() as i64, c.round() as i64, width, height));
+    }
+    let min_r = px.iter().map(|p| p.1).min().unwrap();
+    let min_c = px.iter().map(|p| p.2).min().unwrap();
+    let placements: Vec<Placement> = px
+        .iter()
+        .map(|&(id, r, c, width, height)| Placement {
+            id,
+            row0: (r - min_r) as usize,
+            col0: (c - min_c) as usize,
+            width,
+            height,
+        })
+        .collect();
+    let height = placements.iter().map(|p| p.row0 + p.height).max().unwrap();
+    let width = placements.iter().map(|p| p.col0 + p.width).max().unwrap();
+    Ok(Canvas { width, height, placements })
+}
+
+/// Feather weight of local pixel (r, c) in a w×h scene: distance (in
+/// pixels, 1-based) to the nearest scene edge.
+#[inline]
+fn feather_weight(r: usize, c: usize, w: usize, h: usize) -> f64 {
+    let wr = (r + 1).min(h - r);
+    let wc = (c + 1).min(w - c);
+    wr.min(wc) as f64
+}
+
+/// Composite one canvas rect `[row0, row1) × [col0, col1)` from the given
+/// placements, calling `keep_going(rows_done, rows_total)` after every
+/// row (returning `false` abandons the render and yields `None` — the
+/// cooperative-cancellation hook a losing speculative twin dies through).
+///
+/// `scenes` maps scene id → pixels; only placements whose scene is
+/// present AND whose rect intersects `rect` contribute, and contributions
+/// accumulate in ascending placement (scene-id) order, so the output
+/// bytes are independent of how the canvas is partitioned into rects.
+pub fn composite_rect_while(
+    canvas: &Canvas,
+    scenes: &BTreeMap<u64, &Rgba8Image>,
+    blend: BlendMode,
+    rect: [usize; 4],
+    keep_going: &mut dyn FnMut(usize, usize) -> bool,
+) -> Result<Option<Vec<u8>>> {
+    let [row0, row1, col0, col1] = rect;
+    if row1 > canvas.height || col1 > canvas.width || row0 > row1 || col0 > col1 {
+        return Err(DifetError::Job(format!(
+            "composite rect {rect:?} outside {}×{} canvas",
+            canvas.height, canvas.width
+        )));
+    }
+    // Placements touching this rect, with their pixel buffers.
+    let mut active: Vec<(&Placement, &Rgba8Image)> = Vec::new();
+    for p in &canvas.placements {
+        if intersect(p.rect(), rect).is_none() {
+            continue;
+        }
+        let img = scenes.get(&p.id).copied().ok_or_else(|| {
+            DifetError::Job(format!("scene {} overlaps rect {rect:?} but was not provided", p.id))
+        })?;
+        if (img.width, img.height) != (p.width, p.height) {
+            return Err(DifetError::Job(format!(
+                "scene {}: placement says {}×{}, image is {}×{}",
+                p.id, p.width, p.height, img.width, img.height
+            )));
+        }
+        active.push((p, img));
+    }
+
+    let (rows, cols) = (row1 - row0, col1 - col0);
+    let mut out = vec![0u8; rows * cols * 4];
+    for (done, row) in (row0..row1).enumerate() {
+        for col in col0..col1 {
+            let mut acc = [0.0f64; 3];
+            let mut acc_w = 0.0f64;
+            for &(p, img) in &active {
+                if row < p.row0 || col < p.col0 {
+                    continue;
+                }
+                let (lr, lc) = (row - p.row0, col - p.col0);
+                if lr >= p.height || lc >= p.width {
+                    continue;
+                }
+                let [r, g, b, _] = img.get(lr, lc);
+                let w = match blend {
+                    BlendMode::Feather => feather_weight(lr, lc, p.width, p.height),
+                    BlendMode::Average => 1.0,
+                    BlendMode::First => 1.0,
+                };
+                acc[0] += w * r as f64;
+                acc[1] += w * g as f64;
+                acc[2] += w * b as f64;
+                acc_w += w;
+                if blend == BlendMode::First {
+                    break;
+                }
+            }
+            let base = ((row - row0) * cols + (col - col0)) * 4;
+            if acc_w > 0.0 {
+                for ch in 0..3 {
+                    out[base + ch] = (acc[ch] / acc_w).round().clamp(0.0, 255.0) as u8;
+                }
+                out[base + 3] = 255;
+            }
+        }
+        if !keep_going(done + 1, rows) {
+            return Ok(None);
+        }
+    }
+    Ok(Some(out))
+}
+
+/// Single-threaded whole-canvas composite — the baseline the distributed
+/// job must reproduce byte for byte (`rust/tests/mosaic_e2e.rs`).
+pub fn composite_sequential(
+    canvas: &Canvas,
+    scenes: &BTreeMap<u64, &Rgba8Image>,
+    blend: BlendMode,
+) -> Result<Rgba8Image> {
+    let rect = [0, canvas.height, 0, canvas.width];
+    let data = composite_rect_while(canvas, scenes, blend, rect, &mut |_, _| true)?
+        .expect("uncancellable composite cannot be cancelled");
+    Ok(Rgba8Image { width: canvas.width, height: canvas.height, data })
+}
+
+/// Seam quality of one scene overlap: RMS per-channel RGB difference over
+/// the intersection of the two placements (0 when the aligned scenes
+/// agree exactly where they overlap).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OverlapStat {
+    pub a: u64,
+    pub b: u64,
+    /// Overlap area in pixels.
+    pub area: usize,
+    /// RMS RGB difference over the overlap, in 8-bit DN units.
+    pub rms: f64,
+}
+
+/// Compute [`OverlapStat`]s for every overlapping placement pair (a < b
+/// by id order).
+pub fn overlap_stats(
+    canvas: &Canvas,
+    scenes: &BTreeMap<u64, &Rgba8Image>,
+) -> Result<Vec<OverlapStat>> {
+    let mut out = Vec::new();
+    for (i, pa) in canvas.placements.iter().enumerate() {
+        for pb in &canvas.placements[i + 1..] {
+            let Some([r0, r1, c0, c1]) = intersect(pa.rect(), pb.rect()) else {
+                continue;
+            };
+            let get = |p: &Placement| {
+                scenes.get(&p.id).copied().ok_or_else(|| {
+                    DifetError::Job(format!("scene {} missing for overlap stats", p.id))
+                })
+            };
+            let (ia, ib) = (get(pa)?, get(pb)?);
+            let mut sum_sq = 0.0f64;
+            for row in r0..r1 {
+                for col in c0..c1 {
+                    let x = ia.get(row - pa.row0, col - pa.col0);
+                    let y = ib.get(row - pb.row0, col - pb.col0);
+                    for ch in 0..3 {
+                        let d = x[ch] as f64 - y[ch] as f64;
+                        sum_sq += d * d;
+                    }
+                }
+            }
+            let area = (r1 - r0) * (c1 - c0);
+            out.push(OverlapStat {
+                a: pa.id,
+                b: pb.id,
+                area,
+                rms: (sum_sq / (area * 3) as f64).sqrt(),
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// Canvas tile rects of edge `tile` (row-major), covering the canvas.
+pub fn tile_rects(canvas: &Canvas, tile: usize) -> Vec<[usize; 4]> {
+    let tile = tile.max(1);
+    let mut out = Vec::new();
+    let mut r = 0;
+    while r < canvas.height {
+        let r1 = (r + tile).min(canvas.height);
+        let mut c = 0;
+        while c < canvas.width {
+            let c1 = (c + tile).min(canvas.width);
+            out.push([r, r1, c, c1]);
+            c = c1;
+        }
+        r = r1;
+    }
+    out
+}
+
+/// Scene ids (ascending) whose placements intersect `rect`.
+pub fn scenes_in_rect(canvas: &Canvas, rect: [usize; 4]) -> Vec<u64> {
+    canvas
+        .placements
+        .iter()
+        .filter(|p| intersect(p.rect(), rect).is_some())
+        .map(|p| p.id)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mosaic::align::{solve_alignment, AlignOptions, PairMeasurement};
+
+    fn flat(w: usize, h: usize, v: u8) -> Rgba8Image {
+        Rgba8Image { width: w, height: h, data: vec![v; w * h * 4] }
+    }
+
+    fn two_scene_canvas() -> (Canvas, Rgba8Image, Rgba8Image) {
+        // Scene 1 sits 4 px right/down of scene 0; both 8×8.
+        let al = solve_alignment(
+            &[0, 1],
+            &[PairMeasurement { a: 0, b: 1, d_row: -4.0, d_col: -4.0, weight: 1.0 }],
+            AlignOptions::default(),
+        )
+        .unwrap();
+        let canvas = layout(&al, &[(0, 8, 8), (1, 8, 8)]).unwrap();
+        (canvas, flat(8, 8, 100), flat(8, 8, 200))
+    }
+
+    #[test]
+    fn layout_normalizes_to_origin_and_bounds() {
+        let (canvas, _, _) = two_scene_canvas();
+        assert_eq!((canvas.width, canvas.height), (12, 12));
+        assert_eq!(canvas.placements[0], Placement { id: 0, row0: 0, col0: 0, width: 8, height: 8 });
+        assert_eq!(canvas.placements[1], Placement { id: 1, row0: 4, col0: 4, width: 8, height: 8 });
+    }
+
+    #[test]
+    fn layout_handles_negative_positions() {
+        // Scene 1 placed up-left of the anchor: everything shifts.
+        let al = solve_alignment(
+            &[0, 1],
+            &[PairMeasurement { a: 0, b: 1, d_row: 3.0, d_col: 5.0, weight: 1.0 }],
+            AlignOptions::default(),
+        )
+        .unwrap();
+        let canvas = layout(&al, &[(0, 10, 10), (1, 10, 10)]).unwrap();
+        assert_eq!(canvas.placements[0].row0, 3);
+        assert_eq!(canvas.placements[0].col0, 5);
+        assert_eq!(canvas.placements[1].row0, 0);
+        assert_eq!(canvas.placements[1].col0, 0);
+        assert_eq!((canvas.height, canvas.width), (13, 15));
+    }
+
+    #[test]
+    fn composite_covers_blends_and_leaves_gaps_transparent() {
+        let (canvas, s0, s1) = two_scene_canvas();
+        let scenes: BTreeMap<u64, &Rgba8Image> = [(0u64, &s0), (1u64, &s1)].into();
+        let m = composite_sequential(&canvas, &scenes, BlendMode::Feather).unwrap();
+        // Exclusive regions take their scene's value.
+        assert_eq!(m.get(0, 0), [100, 100, 100, 255]);
+        assert_eq!(m.get(11, 11), [200, 200, 200, 255]);
+        // Overlap blends strictly between the two.
+        let mid = m.get(5, 5);
+        assert!(mid[0] > 100 && mid[0] < 200, "overlap pixel {:?}", mid);
+        assert_eq!(mid[3], 255);
+        // The corners off both scenes stay transparent black.
+        assert_eq!(m.get(0, 11), [0, 0, 0, 0]);
+        assert_eq!(m.get(11, 0), [0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn first_mode_lets_the_lowest_id_win() {
+        let (canvas, s0, s1) = two_scene_canvas();
+        let scenes: BTreeMap<u64, &Rgba8Image> = [(0u64, &s0), (1u64, &s1)].into();
+        let m = composite_sequential(&canvas, &scenes, BlendMode::First).unwrap();
+        assert_eq!(m.get(5, 5), [100, 100, 100, 255], "scene 0 must win the overlap");
+        assert_eq!(m.get(9, 9), [200, 200, 200, 255]);
+    }
+
+    #[test]
+    fn tiled_composite_equals_whole_canvas_composite() {
+        let (canvas, s0, s1) = two_scene_canvas();
+        let scenes: BTreeMap<u64, &Rgba8Image> = [(0u64, &s0), (1u64, &s1)].into();
+        for blend in [BlendMode::Feather, BlendMode::Average, BlendMode::First] {
+            let whole = composite_sequential(&canvas, &scenes, blend).unwrap();
+            for tile in [1usize, 3, 5, 12, 100] {
+                let mut assembled = vec![0u8; whole.data.len()];
+                for rect in tile_rects(&canvas, tile) {
+                    let px =
+                        composite_rect_while(&canvas, &scenes, blend, rect, &mut |_, _| true)
+                            .unwrap()
+                            .unwrap();
+                    let [r0, r1, c0, c1] = rect;
+                    let cols = c1 - c0;
+                    for (i, row) in (r0..r1).enumerate() {
+                        let dst = (row * canvas.width + c0) * 4;
+                        let src = i * cols * 4;
+                        assembled[dst..dst + cols * 4]
+                            .copy_from_slice(&px[src..src + cols * 4]);
+                    }
+                }
+                assert_eq!(assembled, whole.data, "blend {blend:?} tile {tile} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn cancellation_stops_mid_rect() {
+        let (canvas, s0, s1) = two_scene_canvas();
+        let scenes: BTreeMap<u64, &Rgba8Image> = [(0u64, &s0), (1u64, &s1)].into();
+        let mut rows = 0usize;
+        let out = composite_rect_while(
+            &canvas,
+            &scenes,
+            BlendMode::Feather,
+            [0, 12, 0, 12],
+            &mut |done, _| {
+                rows = done;
+                done < 5
+            },
+        )
+        .unwrap();
+        assert!(out.is_none());
+        assert_eq!(rows, 5);
+    }
+
+    #[test]
+    fn overlap_stats_measure_agreement() {
+        let (canvas, s0, _) = two_scene_canvas();
+        // Identical content in the overlap → RMS 0.
+        let s1 = flat(8, 8, 100);
+        let scenes: BTreeMap<u64, &Rgba8Image> = [(0u64, &s0), (1u64, &s1)].into();
+        let stats = overlap_stats(&canvas, &scenes).unwrap();
+        assert_eq!(stats.len(), 1);
+        assert_eq!((stats[0].a, stats[0].b, stats[0].area), (0, 1, 16));
+        assert_eq!(stats[0].rms, 0.0);
+        // Constant 100-DN disagreement → RMS exactly 100.
+        let s2 = flat(8, 8, 200);
+        let scenes: BTreeMap<u64, &Rgba8Image> = [(0u64, &s0), (1u64, &s2)].into();
+        let stats = overlap_stats(&canvas, &scenes).unwrap();
+        assert!((stats[0].rms - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn composite_rejects_missing_scenes_and_bad_rects() {
+        let (canvas, s0, _) = two_scene_canvas();
+        let scenes: BTreeMap<u64, &Rgba8Image> = [(0u64, &s0)].into();
+        assert!(composite_sequential(&canvas, &scenes, BlendMode::Feather).is_err());
+        let full: BTreeMap<u64, &Rgba8Image> = BTreeMap::new();
+        assert!(
+            composite_rect_while(&canvas, &full, BlendMode::Feather, [0, 99, 0, 1], &mut |_, _| {
+                true
+            })
+            .is_err(),
+            "rect outside the canvas must be rejected"
+        );
+    }
+
+    #[test]
+    fn tile_rects_cover_exactly() {
+        let canvas = Canvas { width: 10, height: 7, placements: vec![] };
+        let rects = tile_rects(&canvas, 4);
+        assert_eq!(rects.len(), 6);
+        let area: usize = rects.iter().map(|[r0, r1, c0, c1]| (r1 - r0) * (c1 - c0)).sum();
+        assert_eq!(area, 70);
+        assert!(rects.iter().all(|&[r0, r1, c0, c1]| r0 < r1 && c0 < c1 && r1 <= 7 && c1 <= 10));
+    }
+
+    #[test]
+    fn blend_mode_parse_roundtrip() {
+        for b in [BlendMode::Feather, BlendMode::Average, BlendMode::First] {
+            assert_eq!(BlendMode::parse(b.name()).unwrap(), b);
+        }
+        assert!(BlendMode::parse("poisson").is_err());
+    }
+}

@@ -1,0 +1,27 @@
+//! Mosaicking: pairwise registrations → one seamless composite image.
+//!
+//! The subsystem the paper's authors built next ("An Approach For
+//! Stitching Satellite Images In A Bigdata MapReduce Framework", Sarı,
+//! Eken, Sayar 2018): the registration job's per-pair translations are
+//! lifted to per-scene absolute positions by a global least-squares
+//! solve ([`align`]), scenes are placed on an integer canvas and blended
+//! with distance-feathered weights ([`composite`]), and the canvas is
+//! rendered either sequentially or as tile-shaped work units on the
+//! generic coordinator [`crate::coordinator::Scheduler`]
+//! ([`crate::coordinator::run_mosaic_job`]) — byte-identically, which is
+//! asserted end to end by `rust/tests/mosaic_e2e.rs`.
+//!
+//! The driver-facing flow lives in [`crate::pipeline::stitch`]:
+//! ingest → register → align → composite.
+
+pub mod align;
+pub mod composite;
+
+pub use align::{
+    measurements_from_pairs, solve_alignment, AlignOptions, EdgeResidual, GlobalAlignment,
+    PairMeasurement,
+};
+pub use composite::{
+    composite_rect_while, composite_sequential, layout, overlap_stats, scenes_in_rect,
+    tile_rects, BlendMode, Canvas, OverlapStat, Placement,
+};

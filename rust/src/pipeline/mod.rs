@@ -12,18 +12,22 @@
 //! * [`register`] — the two-stage scene-registration flow: overlapping
 //!   acquisitions → fused extraction with descriptors → distributed
 //!   pair matching ([`run_registration`]).
+//! * [`stitch`] — the full mosaicking flow on top of registration:
+//!   ingest → register → align → composite ([`run_stitch`]).
 //! * [`report`] — render Table 1 / Table 2 in the paper's row order,
-//!   plus the per-pair registration table.
+//!   plus the per-pair registration and mosaic tables.
 
 pub mod extract;
 pub mod ingest;
 pub mod register;
 pub mod report;
+pub mod stitch;
 
 pub use extract::{run_extraction, run_jobs_on, run_sequential, ExtractRequest, ExtractionReport};
 pub use ingest::{ingest_corpus, CorpusInfo};
 pub use register::{
-    ingest_acquisitions, register_pairs_sequential, run_registration, RegistrationOutcome,
-    RegistrationRequest,
+    ingest_acquisitions, register_pairs_sequential, run_registration, run_registration_on,
+    RegistrationOutcome, RegistrationRequest,
 };
+pub use stitch::{dump_mosaic, run_stitch, run_stitch_on, StitchOutcome, StitchRequest};
 

@@ -168,6 +168,23 @@ pub fn ingest_acquisitions(
 /// registration job on the simulated cluster.
 pub fn run_registration(cfg: &Config, req: &RegistrationRequest) -> Result<RegistrationOutcome> {
     cfg.validate()?;
+    let dfs = Dfs::new(
+        cfg.cluster.nodes,
+        cfg.storage.block_size,
+        cfg.cluster.replication,
+    );
+    run_registration_on(cfg, &dfs, req)
+}
+
+/// [`run_registration`] over a caller-provided DFS — the stitch pipeline
+/// shares one DFS across its registration and mosaic stages so the
+/// acquisition bundle is ingested once.
+pub fn run_registration_on(
+    cfg: &Config,
+    dfs: &Dfs,
+    req: &RegistrationRequest,
+) -> Result<RegistrationOutcome> {
+    cfg.validate()?;
     let alg = Algorithm::parse(&req.spec.algorithm)?;
     if alg.descriptor_kind() == DescriptorKind::None {
         return Err(DifetError::Config(format!(
@@ -176,13 +193,8 @@ pub fn run_registration(cfg: &Config, req: &RegistrationRequest) -> Result<Regis
         )));
     }
 
-    let dfs = Dfs::new(
-        cfg.cluster.nodes,
-        cfg.storage.block_size,
-        cfg.cluster.replication,
-    );
     let (corpus, offsets) =
-        ingest_acquisitions(cfg, &dfs, req.num_scenes, req.max_offset, "/corpus/acquisitions.hib")?;
+        ingest_acquisitions(cfg, dfs, req.num_scenes, req.max_offset, "/corpus/acquisitions.hib")?;
 
     // Stage 1: extraction, carrying descriptors through the shuffle.
     let extract_req = super::extract::ExtractRequest {
@@ -199,7 +211,7 @@ pub fn run_registration(cfg: &Config, req: &RegistrationRequest) -> Result<Regis
     spec.keep_descriptors = true;
     let mut reports = run_fused_job(
         cfg,
-        &dfs,
+        dfs,
         executor.as_ref(),
         &spec,
         &registry,
@@ -212,7 +224,7 @@ pub fn run_registration(cfg: &Config, req: &RegistrationRequest) -> Result<Regis
     // Stage 2: the reduce-shaped registration job.
     let report = run_registration_job(
         cfg,
-        &dfs,
+        dfs,
         &extraction.images,
         &req.spec,
         &registry,

@@ -174,6 +174,49 @@ pub fn render_registration_table(rep: &crate::coordinator::RegistrationReport) -
     out
 }
 
+/// Mosaic summary: solved scene positions, seam quality per overlap and
+/// the alignment cycle residuals of one mosaic job.
+pub fn render_mosaic_table(
+    alignment: &crate::mosaic::GlobalAlignment,
+    rep: &crate::coordinator::MosaicReport,
+) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Mosaic — {} scene(s) on {} node(s): {}×{} canvas, {} tile(s), blend={}, {}\n",
+        rep.scene_count,
+        rep.nodes,
+        rep.canvas_width,
+        rep.canvas_height,
+        rep.tile_count,
+        rep.blend.name(),
+        fmt::duration(rep.sim_seconds),
+    ));
+    out.push_str(&format!(
+        "cycle residual: max {:.2} px, rms {:.2} px ({} component(s), {} alignment sweep(s))\n",
+        rep.max_cycle_residual,
+        rep.rms_cycle_residual,
+        alignment.components.len(),
+        alignment.iterations,
+    ));
+    out.push_str(&format!("{:<10}{:>10}{:>10}\n", "scene", "row", "col"));
+    for (id, (r, c)) in &alignment.positions {
+        out.push_str(&format!("{:<10}{:>10.1}{:>10.1}\n", id, r, c));
+    }
+    if !rep.overlaps.is_empty() {
+        out.push_str(&format!("{:<10}{:>12}{:>10}\n", "overlap", "area px", "rms"));
+        for o in &rep.overlaps {
+            let pair = format!("{}↔{}", o.a, o.b);
+            out.push_str(&format!(
+                "{:<10}{:>12}{:>10.2}\n",
+                pair,
+                fmt::with_commas(o.area as u64),
+                o.rms
+            ));
+        }
+    }
+    out
+}
+
 /// Per-run census table.
 pub fn render_census_table(jobs: &[JobReport]) -> String {
     let mut out = String::new();
@@ -275,6 +318,42 @@ mod tests {
         assert!(t.contains("0→2"));
         assert!(t.contains("—"), "unregistered pairs render as dashes");
         assert!(t.contains("2 pair(s), 1 registered"));
+    }
+
+    #[test]
+    fn mosaic_table_renders_positions_and_overlaps() {
+        use crate::coordinator::MosaicReport;
+        use crate::mosaic::{solve_alignment, AlignOptions, BlendMode, OverlapStat, PairMeasurement};
+        let alignment = solve_alignment(
+            &[0, 1],
+            &[PairMeasurement { a: 0, b: 1, d_row: -12.0, d_col: -34.0, weight: 5.0 }],
+            AlignOptions::default(),
+        )
+        .unwrap();
+        let rep = MosaicReport {
+            nodes: 2,
+            scene_count: 2,
+            canvas_width: 640,
+            canvas_height: 620,
+            tile_count: 4,
+            blend: BlendMode::Feather,
+            sim_seconds: 2.5,
+            wall_seconds: 0.1,
+            compute_seconds: 0.05,
+            io_seconds: 0.02,
+            overlaps: vec![OverlapStat { a: 0, b: 1, area: 123456, rms: 0.0 }],
+            max_cycle_residual: 0.0,
+            rms_cycle_residual: 0.0,
+            counters: Default::default(),
+        };
+        let t = render_mosaic_table(&alignment, &rep);
+        assert!(t.contains("2 scene(s) on 2 node(s)"));
+        assert!(t.contains("640×620"));
+        assert!(t.contains("blend=feather"));
+        assert!(t.contains("12.0"), "scene 1's solved row position");
+        assert!(t.contains("34.0"), "scene 1's solved col position");
+        assert!(t.contains("0↔1"));
+        assert!(t.contains("123,456"));
     }
 
     #[test]

@@ -1,0 +1,219 @@
+//! The stitch pipeline: ingest → register → align → composite.
+//!
+//! The full mosaicking flow the paper's follow-up work describes (Sarı,
+//! Eken, Sayar 2018), run end to end on the simulated cluster:
+//!
+//! 1. **Ingest** — overlapping acquisitions of one master scene are
+//!    bundled into DFS ([`super::register::ingest_acquisitions`]).
+//! 2. **Register** — fused extraction with descriptors, then the
+//!    reduce-shaped pair-matching job
+//!    ([`super::register::run_registration_on`]).
+//! 3. **Align** — pairwise translations become per-scene absolute
+//!    positions by global least squares
+//!    ([`crate::mosaic::solve_alignment`]).
+//! 4. **Composite** — the canvas is rendered as tile-shaped work units
+//!    on the coordinator ([`crate::coordinator::run_mosaic_job`]),
+//!    byte-identical to [`crate::mosaic::composite_sequential`].
+//!
+//! All four stages share one DFS, so the bundle the registration stage
+//! ingested is the same bytes the compositing stage's scene shuffle
+//! re-routes.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::config::Config;
+use crate::coordinator::driver::JobHooks;
+use crate::coordinator::{run_mosaic_job, MosaicReport, MosaicSpec};
+use crate::dfs::{Dfs, NodeId};
+use crate::hib::{BundleReader, BundleWriter, Codec};
+use crate::imagery::Rgba8Image;
+use crate::metrics::Registry;
+use crate::mosaic::{
+    composite_sequential, layout, measurements_from_pairs, solve_alignment, AlignOptions,
+    BlendMode, Canvas, GlobalAlignment,
+};
+use crate::util::{DifetError, Result};
+
+use super::register::{run_registration_on, RegistrationOutcome, RegistrationRequest};
+
+/// What to stitch.
+#[derive(Debug, Clone)]
+pub struct StitchRequest {
+    /// The registration front-end (scene count, offsets, matching knobs).
+    pub reg: RegistrationRequest,
+    /// Overlap blending policy for the composite.
+    pub blend: BlendMode,
+    /// Canvas-tile edge in pixels (one distributed work unit per tile).
+    pub canvas_tile: usize,
+}
+
+impl Default for StitchRequest {
+    fn default() -> Self {
+        StitchRequest {
+            reg: RegistrationRequest::default(),
+            blend: BlendMode::Feather,
+            canvas_tile: 512,
+        }
+    }
+}
+
+/// Everything a stitch run produced.
+#[derive(Debug)]
+pub struct StitchOutcome {
+    /// The two-stage registration outcome (corpus, planted offsets,
+    /// extraction + registration reports).
+    pub registration: RegistrationOutcome,
+    /// Scene images as decoded from the DFS bundle (id ascending).
+    pub scenes: Vec<(u64, Rgba8Image)>,
+    /// Solved global alignment.
+    pub alignment: GlobalAlignment,
+    /// The mosaic job's report (seam metrics, counters, timing).
+    pub report: MosaicReport,
+    /// The composited canvas.
+    pub mosaic: Rgba8Image,
+}
+
+impl StitchOutcome {
+    /// Canvas layout implied by the alignment (what the distributed job
+    /// used) — handy for baselines and tests.
+    pub fn canvas(&self) -> Result<Canvas> {
+        let dims: Vec<(u64, usize, usize)> = self
+            .scenes
+            .iter()
+            .map(|(id, img)| (*id, img.width, img.height))
+            .collect();
+        layout(&self.alignment, &dims)
+    }
+
+    /// Sequential whole-canvas composite of this outcome's scenes — the
+    /// baseline the distributed mosaic must equal byte for byte.
+    pub fn composite_baseline(&self, blend: BlendMode) -> Result<Rgba8Image> {
+        let canvas = self.canvas()?;
+        let by_id: BTreeMap<u64, &Rgba8Image> =
+            self.scenes.iter().map(|(id, img)| (*id, img)).collect();
+        composite_sequential(&canvas, &by_id, blend)
+    }
+
+    /// Solved position error against a planted offset table (index =
+    /// scene id), in pixels — the acceptance metric for synthetic runs.
+    pub fn max_position_error(&self, planted: &[(i32, i32)]) -> f64 {
+        self.alignment
+            .positions
+            .iter()
+            .map(|(&id, &(r, c))| {
+                let (pr, pc) = planted[id as usize];
+                (r - pr as f64).hypot(c - pc as f64)
+            })
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Full four-stage run on the simulated cluster.
+pub fn run_stitch(cfg: &Config, req: &StitchRequest) -> Result<StitchOutcome> {
+    cfg.validate()?;
+    let dfs = Dfs::new(
+        cfg.cluster.nodes,
+        cfg.storage.block_size,
+        cfg.cluster.replication,
+    );
+    run_stitch_on(cfg, &dfs, req, &Registry::new(), &JobHooks::default())
+}
+
+/// [`run_stitch`] over caller-provided DFS/metrics/hooks (tests inject
+/// failures; callers that want the `overlap_rms` histogram pass their
+/// own registry).
+pub fn run_stitch_on(
+    cfg: &Config,
+    dfs: &Dfs,
+    req: &StitchRequest,
+    registry: &Registry,
+    hooks: &JobHooks,
+) -> Result<StitchOutcome> {
+    // Stages 1–2: acquisitions → extraction → pair registration.
+    let registration = run_registration_on(cfg, dfs, &req.reg)?;
+
+    // Stage 3: global alignment over the registered pairs.
+    let scene_ids: Vec<u64> = registration
+        .extraction
+        .images
+        .iter()
+        .map(|c| c.image_id)
+        .collect();
+    let measurements = measurements_from_pairs(&registration.report.pairs);
+    if measurements.is_empty() {
+        return Err(DifetError::Job(
+            "stitch: no scene pair registered; nothing to align".into(),
+        ));
+    }
+    let alignment = solve_alignment(&scene_ids, &measurements, AlignOptions::default())?;
+
+    // Stage 4: read the acquisition bundle back and composite.
+    let (bytes, _) = dfs.read_file(&registration.corpus.bundle_path, NodeId(0))?;
+    let scenes = {
+        let reader = BundleReader::open(&bytes)?;
+        (0..reader.record_count())
+            .map(|i| reader.read_image(i))
+            .collect::<Result<Vec<(u64, Rgba8Image)>>>()?
+    };
+    drop(bytes);
+
+    let spec = MosaicSpec {
+        blend: req.blend,
+        canvas_tile: req.canvas_tile,
+        ..Default::default()
+    };
+    let (report, mosaic) = run_mosaic_job(cfg, dfs, &scenes, &alignment, &spec, registry, hooks)?;
+
+    Ok(StitchOutcome {
+        registration,
+        scenes,
+        alignment,
+        report,
+        mosaic,
+    })
+}
+
+/// Dump a mosaic to a local file as a single-record HIB bundle (raw
+/// RGBA via the existing [`crate::hib`] codec — lossless and PNG-free;
+/// re-open it with [`BundleReader`]).
+pub fn dump_mosaic(path: &Path, mosaic: &Rgba8Image) -> Result<()> {
+    let mut writer = BundleWriter::new(Codec::Deflate, 6);
+    writer.add_image(0, mosaic)?;
+    std::fs::write(path, writer.finish())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dump_mosaic_roundtrips_through_the_bundle_reader() {
+        let mut img = Rgba8Image::new(9, 6);
+        for r in 0..6 {
+            for c in 0..9 {
+                img.put(r, c, [(r * c) as u8, r as u8, c as u8, 255]);
+            }
+        }
+        let dir = std::env::temp_dir().join("difet_stitch_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("mosaic.hib");
+        dump_mosaic(&path, &img).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let reader = BundleReader::open(&bytes).unwrap();
+        assert_eq!(reader.record_count(), 1);
+        let (id, out) = reader.read_image(0).unwrap();
+        assert_eq!(id, 0);
+        assert_eq!(out, img);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn stitch_request_defaults_are_sane() {
+        let req = StitchRequest::default();
+        assert_eq!(req.blend, BlendMode::Feather);
+        assert_eq!(req.canvas_tile, 512);
+        assert_eq!(req.reg.num_scenes, 3);
+    }
+}

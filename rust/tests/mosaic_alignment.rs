@@ -1,0 +1,193 @@
+//! Property tests for the global alignment solver: random spanning
+//! graphs with planted positions must be recovered exactly when the
+//! measurements are consistent (and cycle residuals must vanish), within
+//! a noise-proportional tolerance otherwise, and disconnected pair
+//! graphs must split into independently anchored components.
+
+use difet::mosaic::{solve_alignment, AlignOptions, PairMeasurement};
+use difet::util::prop::{check, Gen};
+
+/// Planted per-scene positions in [-500, 500]².
+fn planted_positions(g: &mut Gen, n: usize) -> Vec<(f64, f64)> {
+    (0..n)
+        .map(|_| {
+            (
+                g.u32(1001) as f64 - 500.0,
+                g.u32(1001) as f64 - 500.0,
+            )
+        })
+        .collect()
+}
+
+/// A random connected measurement set over scenes `0..n` at `truth`:
+/// a random spanning tree plus `extra` random chords, each edge reported
+/// in a random direction with uniform noise in `[-amp, amp]` per axis.
+fn random_graph(
+    g: &mut Gen,
+    truth: &[(f64, f64)],
+    extra: usize,
+    amp: f64,
+) -> Vec<PairMeasurement> {
+    let n = truth.len();
+    let mut edges: Vec<(usize, usize)> = (1..n).map(|i| (i, g.usize_in(0, i - 1))).collect();
+    for _ in 0..extra {
+        let u = g.usize_in(0, n - 1);
+        let v = g.usize_in(0, n - 1);
+        if u != v {
+            edges.push((u, v));
+        }
+    }
+    edges
+        .into_iter()
+        .map(|(u, v)| {
+            // Random reporting direction, like unordered pair enumeration.
+            let (a, b) = if g.bool(0.5) { (u, v) } else { (v, u) };
+            let noise = |g: &mut Gen| {
+                if amp == 0.0 {
+                    0.0
+                } else {
+                    (g.u32(2001) as f64 / 1000.0 - 1.0) * amp
+                }
+            };
+            PairMeasurement {
+                a: a as u64,
+                b: b as u64,
+                d_row: truth[a].0 - truth[b].0 + noise(g),
+                d_col: truth[a].1 - truth[b].1 + noise(g),
+                weight: 1.0 + g.u32(50) as f64,
+            }
+        })
+        .collect()
+}
+
+/// Max per-scene distance between solved and planted positions, after
+/// shifting both so scene 0 (the anchor) sits at the origin.
+fn max_recovery_error(
+    solved: &std::collections::BTreeMap<u64, (f64, f64)>,
+    truth: &[(f64, f64)],
+) -> f64 {
+    let origin = truth[0];
+    solved
+        .iter()
+        .map(|(&id, &(r, c))| {
+            let t = truth[id as usize];
+            (r - (t.0 - origin.0)).hypot(c - (t.1 - origin.1))
+        })
+        .fold(0.0, f64::max)
+}
+
+#[test]
+fn prop_noise_free_graphs_recover_planted_offsets_exactly() {
+    check("align_noise_free", 60, |g| {
+        let n = g.usize_in(2, 10);
+        let truth = planted_positions(g, n);
+        let extra = g.usize_in(0, n); // chords → cycles
+        let ms = random_graph(g, &truth, extra, 0.0);
+        let ids: Vec<u64> = (0..n as u64).collect();
+        let al = solve_alignment(&ids, &ms, AlignOptions::default())
+            .map_err(|e| e.to_string())?;
+        difet::prop_assert!(
+            al.components.len() == 1,
+            "spanning graph split into {} components",
+            al.components.len()
+        );
+        let err = max_recovery_error(&al.positions, &truth);
+        difet::prop_assert!(err < 1e-6, "noise-free recovery error {err}");
+        difet::prop_assert!(
+            al.max_residual() < 1e-6,
+            "noise-free cycle residual {}",
+            al.max_residual()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_noisy_graphs_recover_within_tolerance() {
+    check("align_noisy", 60, |g| {
+        let n = g.usize_in(2, 10);
+        let truth = planted_positions(g, n);
+        let extra = g.usize_in(0, 2 * n);
+        let amp = 0.25 + g.u32(100) as f64 / 200.0; // 0.25..0.75 px
+        let ms = random_graph(g, &truth, extra, amp);
+        let ids: Vec<u64> = (0..n as u64).collect();
+        let al = solve_alignment(&ids, &ms, AlignOptions::default())
+            .map_err(|e| e.to_string())?;
+        // Worst case the error accumulates along the longest tree path;
+        // least squares over the chords only shrinks it.  2× slack keeps
+        // the bound far from flaky while still scaling with the noise.
+        let bound = 2.0 * amp * (n as f64 + 2.0) + 1e-9;
+        let err = max_recovery_error(&al.positions, &truth);
+        difet::prop_assert!(err <= bound, "recovery error {err} > bound {bound} (amp {amp}, n {n})");
+        // Residuals are bounded by the per-edge noise (up to the same
+        // accumulation slack) — they measure measurement disagreement,
+        // which noise alone created.
+        difet::prop_assert!(
+            al.max_residual() <= 2.0 * bound,
+            "residual {} vs noise bound {bound}",
+            al.max_residual()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_disconnected_graphs_anchor_each_component() {
+    check("align_components", 40, |g| {
+        // Two islands: scenes 0..k and k..n with no cross edges.
+        let n = g.usize_in(4, 10);
+        let k = g.usize_in(2, n - 2);
+        let truth = planted_positions(g, n);
+        let mut ms = Vec::new();
+        for (lo, hi) in [(0usize, k), (k, n)] {
+            for i in (lo + 1)..hi {
+                let parent = g.usize_in(lo, i - 1);
+                ms.push(PairMeasurement {
+                    a: i as u64,
+                    b: parent as u64,
+                    d_row: truth[i].0 - truth[parent].0,
+                    d_col: truth[i].1 - truth[parent].1,
+                    weight: 1.0,
+                });
+            }
+        }
+        let ids: Vec<u64> = (0..n as u64).collect();
+        let al = solve_alignment(&ids, &ms, AlignOptions::default())
+            .map_err(|e| e.to_string())?;
+        difet::prop_assert!(al.components.len() == 2, "{} components", al.components.len());
+        difet::prop_assert!(
+            al.components[0] == (0..k as u64).collect::<Vec<_>>()
+                && al.components[1] == (k as u64..n as u64).collect::<Vec<_>>(),
+            "component membership wrong: {:?}",
+            al.components
+        );
+        // Each component anchors its smallest id at the origin and is
+        // internally exact.
+        difet::prop_assert!(al.positions[&0] == (0.0, 0.0), "anchor 0 moved");
+        difet::prop_assert!(al.positions[&(k as u64)] == (0.0, 0.0), "anchor {k} moved");
+        for comp in &al.components {
+            let anchor = comp[0] as usize;
+            for &id in comp {
+                let (r, c) = al.positions[&id];
+                let er = truth[id as usize].0 - truth[anchor].0;
+                let ec = truth[id as usize].1 - truth[anchor].1;
+                difet::prop_assert!(
+                    (r - er).abs() < 1e-6 && (c - ec).abs() < 1e-6,
+                    "scene {id}: solved ({r}, {c}), planted ({er}, {ec})"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn singleton_scenes_are_their_own_anchored_components() {
+    let al = solve_alignment(&[3, 7], &[], AlignOptions::default()).unwrap();
+    assert_eq!(al.components, vec![vec![3], vec![7]]);
+    assert_eq!(al.positions[&3], (0.0, 0.0));
+    assert_eq!(al.positions[&7], (0.0, 0.0));
+    assert_eq!(al.residuals.len(), 0);
+    assert_eq!(al.max_residual(), 0.0);
+    assert_eq!(al.rms_residual(), 0.0);
+}

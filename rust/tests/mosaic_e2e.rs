@@ -1,0 +1,202 @@
+//! Deterministic end-to-end mosaic test: six fixed-seed overlapping
+//! acquisitions → fused extraction → distributed registration → global
+//! alignment → distributed canvas-tile compositing.  The solved scene
+//! positions must recover the planted acquisition offsets to ≤ 1 px,
+//! and the distributed composite must be byte-identical to the
+//! sequential `composite_sequential` baseline — at 1, 2 and 4 nodes and
+//! across retry/speculation histories.
+
+use std::sync::OnceLock;
+
+use difet::config::Config;
+use difet::coordinator::driver::JobHooks;
+use difet::coordinator::{run_mosaic_job, MosaicSpec};
+use difet::dfs::Dfs;
+use difet::metrics::Registry;
+use difet::mosaic::BlendMode;
+use difet::pipeline::{run_stitch, RegistrationRequest, StitchOutcome, StitchRequest};
+
+fn test_cfg(nodes: usize) -> Config {
+    let mut cfg = Config::new();
+    cfg.scene.width = 600;
+    cfg.scene.height = 600;
+    cfg.cluster.nodes = nodes;
+    cfg.cluster.slots_per_node = 2;
+    cfg.cluster.job_startup = 0.5;
+    cfg.storage.block_size = 1 << 20;
+    cfg.artifacts_dir = "/nonexistent".into(); // hermetic: native executor
+    assert!(cfg.scheduler.speculation, "speculation must be on for this suite");
+    cfg
+}
+
+fn test_req() -> StitchRequest {
+    StitchRequest {
+        reg: RegistrationRequest {
+            num_scenes: 6,
+            max_offset: 64,
+            force_native: true,
+            ..Default::default()
+        },
+        blend: BlendMode::Feather,
+        canvas_tile: 256, // ≥ 9 work units on a ~664² canvas
+    }
+}
+
+fn mosaic_spec() -> MosaicSpec {
+    MosaicSpec {
+        blend: BlendMode::Feather,
+        canvas_tile: 256,
+        ..Default::default()
+    }
+}
+
+/// One shared four-stage run on 2 nodes (extraction is the expensive
+/// part; every test in this binary reuses it).
+fn shared_run() -> &'static StitchOutcome {
+    static OUT: OnceLock<StitchOutcome> = OnceLock::new();
+    OUT.get_or_init(|| run_stitch(&test_cfg(2), &test_req()).expect("stitch run"))
+}
+
+#[test]
+fn recovers_planted_offsets_within_one_pixel() {
+    let out = shared_run();
+    // 6 scenes, every unordered pair attempted.
+    assert_eq!(out.scenes.len(), 6);
+    assert_eq!(out.registration.report.pair_count, 15);
+    // ≥ 536 px of 600 px overlap on every pair: all must register and the
+    // pair graph must be a single component.
+    assert_eq!(out.registration.report.registered_count(), 15);
+    assert_eq!(out.alignment.components.len(), 1);
+    // The acceptance bar: solved absolute positions within 1 px of the
+    // planted acquisition offsets (scene 0 anchors both frames).
+    let err = out.max_position_error(&out.registration.offsets);
+    assert!(err <= 1.0, "max position error {err:.3} px");
+    // Cycle-consistent measurements → near-zero residual diagnostics.
+    assert!(
+        out.report.max_cycle_residual < 0.5,
+        "max cycle residual {:.3} px",
+        out.report.max_cycle_residual
+    );
+    assert!(out.report.rms_cycle_residual <= out.report.max_cycle_residual);
+}
+
+#[test]
+fn distributed_composite_equals_sequential_baseline_bitwise() {
+    let out = shared_run();
+    assert!(out.report.tile_count >= 9, "canvas should split into many tiles");
+    assert_eq!(out.report.counter("tiles") as usize, out.report.tile_count);
+    let baseline = out.composite_baseline(BlendMode::Feather).expect("baseline");
+    assert_eq!(
+        (out.mosaic.width, out.mosaic.height),
+        (baseline.width, baseline.height)
+    );
+    assert_eq!(
+        out.mosaic.data, baseline.data,
+        "distributed canvas-tile composite must equal composite_sequential byte for byte"
+    );
+}
+
+#[test]
+fn node_counts_do_not_change_the_mosaic() {
+    // The registration stage is node-count invariant (registration_e2e);
+    // what is new here is the mosaic job, so re-run ONLY it at 1 and 4
+    // nodes over the shared run's scenes and alignment.
+    let out = shared_run();
+    for nodes in [1usize, 4] {
+        let cfg = test_cfg(nodes);
+        let dfs = Dfs::new(cfg.cluster.nodes, cfg.storage.block_size, cfg.cluster.replication);
+        let (rep, mosaic) = run_mosaic_job(
+            &cfg,
+            &dfs,
+            &out.scenes,
+            &out.alignment,
+            &mosaic_spec(),
+            &Registry::new(),
+            &JobHooks::default(),
+        )
+        .expect("mosaic job");
+        assert_eq!(rep.nodes, nodes);
+        assert_eq!(
+            mosaic.data, out.mosaic.data,
+            "{nodes}-node mosaic diverged from the 2-node run"
+        );
+    }
+}
+
+#[test]
+fn retries_and_speculation_do_not_change_the_mosaic() {
+    let out = shared_run();
+    let cfg = test_cfg(2);
+    let dfs = Dfs::new(cfg.cluster.nodes, cfg.storage.block_size, cfg.cluster.replication);
+    // First attempt of every canvas tile dies (a crashed worker);
+    // speculation stays enabled.
+    let hooks = JobHooks {
+        fail: Some(Box::new(|_tile, attempt| attempt == 0)),
+    };
+    let (rep, mosaic) = run_mosaic_job(
+        &cfg,
+        &dfs,
+        &out.scenes,
+        &out.alignment,
+        &mosaic_spec(),
+        &Registry::new(),
+        &hooks,
+    )
+    .expect("mosaic with retries");
+    assert!(
+        rep.counter("retries") >= rep.counter("tiles"),
+        "every tile should retry at least once"
+    );
+    assert_eq!(
+        mosaic.data, out.mosaic.data,
+        "retried/speculated execution must not change any pixel"
+    );
+}
+
+#[test]
+fn seam_metrics_see_exact_overlaps() {
+    // Acquisitions are exact windows of one master scene, and the solved
+    // alignment is integer-exact, so overlapping pixels are identical:
+    // every per-overlap RMS must be zero (the seam-quality signal only
+    // fires on real misalignment or radiometric disagreement).
+    let out = shared_run();
+    assert!(!out.report.overlaps.is_empty(), "6 overlapping scenes, no overlap stats?");
+    assert_eq!(out.report.counter("overlaps") as usize, out.report.overlaps.len());
+    for o in &out.report.overlaps {
+        assert!(o.area > 0);
+        assert!(
+            o.rms < 1.0,
+            "overlap {}↔{}: rms {} (misaligned by ≥ 1 px?)",
+            o.a,
+            o.b,
+            o.rms
+        );
+    }
+    assert!(out.report.worst_overlap_rms() < 1.0);
+}
+
+#[test]
+fn registry_carries_seam_diagnostics() {
+    // Drive the mosaic job with an inspectable registry and check the
+    // metrics wiring: per-overlap RMS histogram + cycle-residual gauge.
+    let out = shared_run();
+    let cfg = test_cfg(2);
+    let dfs = Dfs::new(cfg.cluster.nodes, cfg.storage.block_size, cfg.cluster.replication);
+    let registry = Registry::new();
+    let (rep, _) = run_mosaic_job(
+        &cfg,
+        &dfs,
+        &out.scenes,
+        &out.alignment,
+        &mosaic_spec(),
+        &registry,
+        &JobHooks::default(),
+    )
+    .expect("mosaic job");
+    assert_eq!(registry.histogram("overlap_rms").snapshot().n, rep.overlaps.len() as u64);
+    assert_eq!(
+        registry.gauge("mosaic_max_cycle_residual").get(),
+        rep.max_cycle_residual
+    );
+    assert_eq!(registry.counter("canvas_tiles").get() as usize, rep.tile_count);
+}
