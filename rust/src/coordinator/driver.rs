@@ -1015,6 +1015,245 @@ fn mosaic_tile(
     }))
 }
 
+// ---------------------------------------------------------------------------
+// The vector job: band-tile connected-component labeling over a mask.
+// ---------------------------------------------------------------------------
+
+/// Run an object-extraction labeling job: shuffle the segmented mask
+/// into DFS (1 byte/pixel, header-free, so band workers fetch their rows
+/// as one contiguous range read), split it into full-width band units on
+/// the same generic [`Scheduler`] (the fourth `WorkItem` shape —
+/// locality toward the nodes holding the band's blocks, bounded retries,
+/// straggler speculation), label each band locally, route the tile
+/// labels back through CRC-guarded DFS files
+/// ([`shuffle::encode_labels`]), and stitch them into global object ids
+/// with the reduce-side union-find merge.
+///
+/// Determinism contract: tile-local components are keyed by the global
+/// row-major index of their first pixel and final object ids ascend with
+/// each merged object's minimum key
+/// ([`crate::vector::merge_tile_labels`]), so — unlike RANSAC pairs — no
+/// per-pair seeds are even needed: the merged raster and object table
+/// are bit-identical to [`crate::vector::label_sequential`] at any node
+/// count, band size, and across retry/speculation histories.
+///
+/// Returns the job report plus the merged label raster and object table.
+/// Diagnostics land in `registry` too: the `objects_extracted` counter
+/// and the `vector_max_merge_residual` gauge.
+pub fn run_vector_job(
+    cfg: &Config,
+    dfs: &Dfs,
+    mask: &crate::vector::Mask,
+    spec: &super::job::VectorSpec,
+    registry: &Registry,
+    hooks: &JobHooks,
+) -> Result<(
+    super::job::VectorReport,
+    crate::vector::Labels,
+    Vec<crate::vector::ObjectStats>,
+)> {
+    let wall = Stopwatch::start();
+    let cost = CostModel::new(&cfg.cluster);
+    if mask.width == 0 || mask.height == 0 {
+        return Err(DifetError::Job("vector job: empty mask".into()));
+    }
+    if mask.data.len() != mask.width * mask.height {
+        return Err(DifetError::Job(format!(
+            "vector job: mask raster has {} cells, {}×{} needs {}",
+            mask.data.len(),
+            mask.width,
+            mask.height,
+            mask.width * mask.height
+        )));
+    }
+
+    // ---- shuffle: write the mask raster into DFS --------------------------
+    dfs.write_file(&spec.mask_path, &mask.data, NodeId(0))?;
+    let shuffle_secs = cost.hdfs_write(mask.data.len() as u64, cfg.cluster.replication);
+
+    // ---- plan: one work unit per full-width mask band ---------------------
+    let tasks: Vec<super::job::LabelTile> =
+        crate::vector::band_rects(mask.width, mask.height, spec.band_rows)
+            .into_iter()
+            .enumerate()
+            .map(|(tile_id, rect)| {
+                let byte_start = (rect[0] * mask.width) as u64;
+                let byte_end = (rect[1] * mask.width) as u64;
+                let preferred = dfs
+                    .locate_range(&spec.mask_path, byte_start, byte_end)
+                    .unwrap_or_default();
+                super::job::LabelTile {
+                    tile_id,
+                    rect,
+                    byte_start,
+                    byte_end,
+                    mask_path: spec.mask_path.clone(),
+                    labels_path: format!("{}/{tile_id}", spec.labels_dir),
+                    preferred_nodes: preferred,
+                }
+            })
+            .collect();
+    let n_tiles = tasks.len();
+    let labels_paths: Vec<String> = tasks.iter().map(|t| t.labels_path.clone()).collect();
+
+    let scheduler: Scheduler<super::job::LabelTile> = Scheduler::new(tasks, &cfg.scheduler);
+    let done: Mutex<Vec<bool>> = Mutex::new(vec![false; n_tiles]);
+    let tiles_counter = registry.counter("label_tiles");
+    let tile_hist = registry.histogram("label_tile_latency");
+
+    let totals = run_slots(
+        &cfg.cluster,
+        &scheduler,
+        |task: &super::job::LabelTile, handle, node| {
+            let work = label_tile(cfg, dfs, hooks, &cost, task, handle, node)?;
+            if let Some(w) = &work {
+                tile_hist.observe(w.compute_ns as f64 * 1e-9);
+            }
+            Ok(work)
+        },
+        |task, ()| {
+            tiles_counter.inc();
+            done.lock().unwrap()[task.tile_id] = true;
+        },
+    );
+
+    if let Some(reason) = scheduler.abort_reason() {
+        return Err(DifetError::Job(reason));
+    }
+    if !done.into_inner().unwrap().into_iter().all(|d| d) {
+        return Err(DifetError::Job("vector tile lost its result".into()));
+    }
+
+    // ---- reduce: fetch the shuffled tile labels, merge the seams ----------
+    let mut tiles = Vec::with_capacity(n_tiles);
+    for (tile_id, path) in labels_paths.iter().enumerate() {
+        let (bytes, _) = dfs.read_file(path, NodeId(0))?;
+        let (id, tile) = shuffle::decode_labels(&bytes)?;
+        if id != tile_id as u64 {
+            return Err(DifetError::Job(format!(
+                "label file routing mixup: wanted {tile_id}, got {id}"
+            )));
+        }
+        tiles.push(tile);
+    }
+    let (labels, objects, mstats) =
+        crate::vector::merge_tile_labels(mask.width, mask.height, &tiles)?;
+
+    registry
+        .gauge("vector_max_merge_residual")
+        .set(mstats.max_merge_residual() as f64);
+    registry.counter("objects_extracted").add(objects.len() as u64);
+
+    let mut counters = std::collections::BTreeMap::new();
+    counters.insert("tiles".into(), n_tiles as u64);
+    counters.insert("objects".into(), objects.len() as u64);
+    counters.insert("seam_unions".into(), mstats.seam_unions);
+    counters.insert("max_merge_residual".into(), mstats.max_merge_residual());
+    counters.insert(
+        "data_local_tasks".into(),
+        scheduler.data_local_tasks.load(Ordering::Relaxed),
+    );
+    counters.insert(
+        "rack_remote_tasks".into(),
+        scheduler.rack_remote_tasks.load(Ordering::Relaxed),
+    );
+    counters.insert(
+        "speculative_launches".into(),
+        scheduler.speculative_launches.load(Ordering::Relaxed),
+    );
+    counters.insert("retries".into(), scheduler.retries.load(Ordering::Relaxed));
+
+    let report = super::job::VectorReport {
+        nodes: cfg.cluster.nodes,
+        width: mask.width,
+        height: mask.height,
+        tile_count: n_tiles,
+        object_count: objects.len(),
+        foreground_px: mask.foreground(),
+        max_merge_residual: mstats.max_merge_residual(),
+        seam_unions: mstats.seam_unions,
+        sim_seconds: cost.job_startup() + shuffle_secs + totals.max_slot_ns as f64 * 1e-9,
+        wall_seconds: wall.elapsed_secs(),
+        compute_seconds: totals.compute_ns as f64 * 1e-9,
+        io_seconds: totals.io_ns as f64 * 1e-9,
+        counters,
+    };
+    Ok((report, labels, objects))
+}
+
+/// The label work-unit body: fetch this band's mask rows from DFS (one
+/// contiguous range read), run tile-local CCL with row-level progress
+/// reporting and cooperative cancellation (a losing speculative twin
+/// dies mid-scan), and shuffle the encoded tile labels back into a
+/// CRC-guarded DFS file for the merge stage.
+fn label_tile(
+    cfg: &Config,
+    dfs: &Dfs,
+    hooks: &JobHooks,
+    cost: &CostModel,
+    task: &super::job::LabelTile,
+    handle: &TaskHandle,
+    node: NodeId,
+) -> Result<Option<SlotWork<()>>> {
+    if let Some(f) = &hooks.fail {
+        if f(task.tile_id, handle.attempt) {
+            return Err(DifetError::Job(format!(
+                "injected failure (tile {}, attempt {})",
+                task.tile_id, handle.attempt
+            )));
+        }
+    }
+
+    // --- input: this band's rows of the shuffled mask ---------------------
+    let (bytes, stats) =
+        dfs.read_range(&task.mask_path, task.byte_start, task.byte_end, node)?;
+    let mut io_secs = cost.split_input(stats.local_bytes, stats.remote_bytes);
+    let [r0, r1, c0, c1] = task.rect;
+    let (rows, width) = (r1 - r0, c1 - c0);
+    if c0 != 0 || bytes.len() != rows * width {
+        return Err(DifetError::Job(format!(
+            "mask band {}: got {} bytes, rect {:?} needs {}",
+            task.tile_id,
+            bytes.len(),
+            task.rect,
+            rows * width
+        )));
+    }
+    let band = crate::vector::Mask { width, height: rows, data: bytes };
+
+    // --- label the band locally -------------------------------------------
+    let t0 = std::time::Instant::now();
+    let Some(local) =
+        crate::vector::label_rect_while(&band, [0, rows, 0, width], &mut |done, total| {
+            handle.report_progress(done as f64 / total.max(1) as f64);
+            !handle.cancelled()
+        })?
+    else {
+        return Ok(None); // cancelled: the twin won
+    };
+    let tile = local.offset_rows(r0);
+    let compute_ns = t0.elapsed().as_nanos() as u64;
+    if handle.cancelled() {
+        return Ok(None);
+    }
+
+    // --- output: shuffle the tile labels into DFS --------------------------
+    // (bit-identical across attempts, so a retry or losing twin rewriting
+    // the same path is harmless.)
+    let encoded = shuffle::encode_labels(task.tile_id as u64, &tile);
+    dfs.write_file(&task.labels_path, &encoded, node)?;
+    io_secs += cost.hdfs_write(encoded.len() as u64, cfg.cluster.replication);
+
+    let io_ns = (io_secs * 1e9) as u64;
+    let overhead_ns = (cost.task_overhead() * 1e9) as u64;
+    Ok(Some(SlotWork {
+        payload: (),
+        virtual_ns: overhead_ns + io_ns + compute_ns,
+        compute_ns,
+        io_ns,
+    }))
+}
+
 /// Serialize a mapper output (the record written back to DFS).
 fn serialize_output(out: &MapOutput) -> Vec<u8> {
     use byteorder::{ByteOrder, LittleEndian as LE};

@@ -376,6 +376,93 @@ impl MosaicReport {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Vector job: band-tile labeling, the fourth work-item shape.
+// ---------------------------------------------------------------------------
+
+/// What to label: work-unit geometry and shuffle paths for one
+/// object-extraction (vectorization) job over a segmented mask.
+#[derive(Debug, Clone)]
+pub struct VectorSpec {
+    /// Rows per `LabelTile` work unit (full-width bands, so every unit's
+    /// mask input is one contiguous DFS byte range).
+    pub band_rows: usize,
+    /// DFS path the shuffled mask raster lands in.
+    pub mask_path: String,
+    /// DFS directory the per-tile label files land in.
+    pub labels_dir: String,
+}
+
+impl Default for VectorSpec {
+    fn default() -> Self {
+        VectorSpec {
+            band_rows: 256,
+            mask_path: "/shuffle/mask".into(),
+            labels_dir: "/shuffle/labels".into(),
+        }
+    }
+}
+
+/// One labeling work unit: run tile-local connected-component labeling
+/// over mask band `[row0, row1) × [0, width)`.  The fourth
+/// [`super::scheduler::WorkItem`] shape (after map splits, registration
+/// pairs and canvas tiles) — locality points at the nodes holding the
+/// band's byte range of the shuffled mask file.
+#[derive(Debug, Clone)]
+pub struct LabelTile {
+    pub tile_id: usize,
+    /// Half-open mask rect (row0, row1, col0, col1); always full-width.
+    pub rect: [usize; 4],
+    /// Byte range of the band within the mask file (1 byte/pixel).
+    pub byte_start: u64,
+    pub byte_end: u64,
+    /// DFS path of the shuffled mask raster.
+    pub mask_path: String,
+    /// DFS path this unit's encoded tile labels are written to.
+    pub labels_path: String,
+    /// Nodes holding replicas of the band's blocks, best first.
+    pub preferred_nodes: Vec<NodeId>,
+}
+
+impl super::scheduler::WorkItem for LabelTile {
+    fn preferred_nodes(&self) -> &[NodeId] {
+        &self.preferred_nodes
+    }
+}
+
+/// Whole vector-job result, shaped like [`JobReport`] so the same
+/// reporting/accounting conventions apply; the merged label raster and
+/// object table travel separately (they are data, not a table).
+#[derive(Debug, Clone)]
+pub struct VectorReport {
+    pub nodes: usize,
+    /// Mask geometry.
+    pub width: usize,
+    pub height: usize,
+    pub tile_count: usize,
+    /// Global objects after the union-find merge.
+    pub object_count: usize,
+    /// Foreground pixels in the mask.
+    pub foreground_px: u64,
+    /// Largest number of tile-local fragments merged into one object,
+    /// minus one (0 = no object crossed a band boundary).
+    pub max_merge_residual: u64,
+    /// Union operations that joined distinct classes across seams.
+    pub seam_unions: u64,
+    /// Simulated job time: startup + shuffle + max-over-slots virtual time.
+    pub sim_seconds: f64,
+    pub wall_seconds: f64,
+    pub compute_seconds: f64,
+    pub io_seconds: f64,
+    pub counters: BTreeMap<String, u64>,
+}
+
+impl VectorReport {
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -492,5 +579,30 @@ mod tests {
         assert!(rep.pair(1, 0).is_none());
         assert_eq!(rep.registered_count(), 1);
         assert_eq!(rep.counter("tasks"), 0);
+    }
+
+    #[test]
+    fn vector_spec_defaults_and_report_counters() {
+        let spec = VectorSpec::default();
+        assert_eq!(spec.band_rows, 256);
+        assert_eq!(spec.mask_path, "/shuffle/mask");
+        assert_eq!(spec.labels_dir, "/shuffle/labels");
+        let rep = VectorReport {
+            nodes: 2,
+            width: 100,
+            height: 80,
+            tile_count: 4,
+            object_count: 7,
+            foreground_px: 1234,
+            max_merge_residual: 2,
+            seam_unions: 5,
+            sim_seconds: 1.0,
+            wall_seconds: 0.1,
+            compute_seconds: 0.05,
+            io_seconds: 0.02,
+            counters: BTreeMap::new(),
+        };
+        assert_eq!(rep.counter("tiles"), 0);
+        assert_eq!(rep.max_merge_residual, 2);
     }
 }

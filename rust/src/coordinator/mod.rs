@@ -19,12 +19,14 @@
 //! * [`backpressure`] — the bounded queue used between planning and
 //!   execution, so a slow cluster never buffers the whole corpus.
 //!
-//! Three job shapes run on this engine: the paper's map-shaped
+//! Four job shapes run on this engine: the paper's map-shaped
 //! extraction ([`run_job`]/[`run_fused_job`]), the reduce-shaped
 //! *registration* job ([`run_registration_job`]) that turns extracted
-//! descriptors into cross-scene matches, and the canvas-tile *mosaic*
-//! job ([`run_mosaic_job`]) that composites aligned scenes into one
-//! image — the stitching back-end the paper's follow-up work builds.
+//! descriptors into cross-scene matches, the canvas-tile *mosaic* job
+//! ([`run_mosaic_job`]) that composites aligned scenes into one image —
+//! the stitching back-end the paper's follow-up work builds — and the
+//! band-tile *vector* job ([`run_vector_job`]) that labels the mosaic's
+//! segmented mask into global objects for vectorization.
 
 pub mod backpressure;
 pub mod driver;
@@ -32,13 +34,16 @@ pub mod job;
 pub mod scheduler;
 pub mod shuffle;
 
-pub use driver::{run_fused_job, run_job, run_mosaic_job, run_registration_job, TileExecutor};
+pub use driver::{
+    run_fused_job, run_job, run_mosaic_job, run_registration_job, run_vector_job, TileExecutor,
+};
 pub use job::{
-    pair_seed, CanvasTile, FusedJobSpec, ImageCensus, JobReport, JobSpec, MapOutput,
+    pair_seed, CanvasTile, FusedJobSpec, ImageCensus, JobReport, JobSpec, LabelTile, MapOutput,
     MosaicReport, MosaicSpec, PairResult, PairTask, RegistrationReport, RegistrationSpec,
+    VectorReport, VectorSpec,
 };
 pub use scheduler::{Clock, Scheduler, TaskDescriptor, TaskState, WorkItem};
 pub use shuffle::{
-    decode_features, decode_scene, encode_features, encode_scene, enumerate_pairs,
-    merge_image_outputs,
+    decode_features, decode_labels, decode_scene, encode_features, encode_labels, encode_scene,
+    enumerate_pairs, merge_image_outputs,
 };

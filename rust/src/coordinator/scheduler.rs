@@ -17,8 +17,9 @@
 //!
 //! The scheduler is generic over the work unit ([`WorkItem`]): map splits
 //! ([`TaskDescriptor`]), registration scene pairs
-//! ([`super::job::PairTask`]) and mosaic canvas tiles
-//! ([`super::job::CanvasTile`]) share the same locality/retry/speculation
+//! ([`super::job::PairTask`]), mosaic canvas tiles
+//! ([`super::job::CanvasTile`]) and mask label bands
+//! ([`super::job::LabelTile`]) share the same locality/retry/speculation
 //! machinery.  Progress rates are measured against an injectable
 //! monotonic [`Clock`] so tests can drive speculation deterministically.
 

@@ -92,6 +92,20 @@ pub fn merge_image_outputs(
 
 const FEATURE_MAGIC: u32 = 0x4446_5452; // "DFTR"
 
+/// Append a little-endian u32 — the shuffle encoders' shared primitive.
+fn w32(buf: &mut Vec<u8>, v: u32) {
+    let mut b = [0u8; 4];
+    LE::write_u32(&mut b, v);
+    buf.extend_from_slice(&b);
+}
+
+/// Append a little-endian u64.
+fn w64(buf: &mut Vec<u8>, v: u64) {
+    let mut b = [0u8; 8];
+    LE::write_u64(&mut b, v);
+    buf.extend_from_slice(&b);
+}
+
 /// Serialize one scene's retained keypoints + descriptors — the record a
 /// registration reducer fetches from DFS.  Layout (all little-endian):
 /// magic, image_id, keypoint count, descriptor variant tag (+dim),
@@ -99,15 +113,8 @@ const FEATURE_MAGIC: u32 = 0x4446_5452; // "DFTR"
 pub fn encode_features(census: &ImageCensus) -> Vec<u8> {
     let kps = &census.keypoints;
     let mut buf = Vec::with_capacity(32 + kps.len() * 12 + census.descriptors.len() * 32);
-    let mut w32 = |buf: &mut Vec<u8>, v: u32| {
-        let mut b = [0u8; 4];
-        LE::write_u32(&mut b, v);
-        buf.extend_from_slice(&b);
-    };
     w32(&mut buf, FEATURE_MAGIC);
-    let mut b8 = [0u8; 8];
-    LE::write_u64(&mut b8, census.image_id);
-    buf.extend_from_slice(&b8);
+    w64(&mut buf, census.image_id);
     w32(&mut buf, kps.len() as u32);
     match &census.descriptors {
         Descriptors::None => w32(&mut buf, 0),
@@ -239,15 +246,8 @@ pub fn encode_scene(
 ) -> Result<Vec<u8>> {
     let payload = codec::encode(scene_codec, &img.data, level)?;
     let mut buf = Vec::with_capacity(32 + payload.len());
-    let mut w32 = |buf: &mut Vec<u8>, v: u32| {
-        let mut b = [0u8; 4];
-        LE::write_u32(&mut b, v);
-        buf.extend_from_slice(&b);
-    };
     w32(&mut buf, SCENE_MAGIC);
-    let mut b8 = [0u8; 8];
-    LE::write_u64(&mut b8, image_id);
-    buf.extend_from_slice(&b8);
+    w64(&mut buf, image_id);
     w32(&mut buf, img.width as u32);
     w32(&mut buf, img.height as u32);
     w32(&mut buf, scene_codec.to_byte() as u32);
@@ -292,6 +292,110 @@ pub fn decode_scene(bytes: &[u8]) -> Result<(u64, Rgba8Image)> {
     let data = codec::decode(scene_codec, &body[28..], expected)
         .map_err(|e| corrupt(&e.to_string()))?;
     Ok((image_id, Rgba8Image { width, height, data }))
+}
+
+// ---------------------------------------------------------------------------
+// Tile-label routing for the vector (object-extraction) job.
+// ---------------------------------------------------------------------------
+
+const LABELS_MAGIC: u32 = 0x4446_4C42; // "DFLB"
+
+/// Serialize one labeled mask tile — the record a label worker writes to
+/// DFS and the merge stage fetches back.  Layout (all little-endian):
+/// magic, tile_id, rect (4×u32), component count, per-component records
+/// (key, area, sum_row, sum_col as u64s + bbox 4×u32), the rect-local
+/// label raster (u32 per pixel), CRC32 of everything prior — the same
+/// whole-stream trailing-CRC idiom as [`encode_features`].
+pub fn encode_labels(tile_id: u64, tile: &crate::vector::TileLabels) -> Vec<u8> {
+    let [r0, r1, c0, c1] = tile.rect;
+    let mut buf =
+        Vec::with_capacity(32 + tile.components.len() * 48 + tile.labels.len() * 4);
+    w32(&mut buf, LABELS_MAGIC);
+    w64(&mut buf, tile_id);
+    for v in [r0, r1, c0, c1] {
+        w32(&mut buf, v as u32);
+    }
+    w32(&mut buf, tile.components.len() as u32);
+    for comp in &tile.components {
+        w64(&mut buf, comp.key);
+        w64(&mut buf, comp.area);
+        w64(&mut buf, comp.sum_row);
+        w64(&mut buf, comp.sum_col);
+        for v in comp.bbox {
+            w32(&mut buf, v);
+        }
+    }
+    for &l in &tile.labels {
+        w32(&mut buf, l);
+    }
+    let crc = crc32::hash(&buf);
+    w32(&mut buf, crc);
+    buf
+}
+
+/// Decode a tile-label file; the inverse of [`encode_labels`].
+pub fn decode_labels(bytes: &[u8]) -> Result<(u64, crate::vector::TileLabels)> {
+    let corrupt = |what: &str| DifetError::Job(format!("label file corrupt: {what}"));
+    // 32-byte fixed header + 4-byte trailing CRC is the smallest stream.
+    if bytes.len() < 36 {
+        return Err(corrupt("truncated header"));
+    }
+    let (body, crc_bytes) = bytes.split_at(bytes.len() - 4);
+    if crc32::hash(body) != LE::read_u32(crc_bytes) {
+        return Err(corrupt("checksum mismatch"));
+    }
+    if LE::read_u32(&body[0..4]) != LABELS_MAGIC {
+        return Err(corrupt("bad magic"));
+    }
+    let tile_id = LE::read_u64(&body[4..12]);
+    let rect = [
+        LE::read_u32(&body[12..16]) as usize,
+        LE::read_u32(&body[16..20]) as usize,
+        LE::read_u32(&body[20..24]) as usize,
+        LE::read_u32(&body[24..28]) as usize,
+    ];
+    let [r0, r1, c0, c1] = rect;
+    if r0 > r1 || c0 > c1 {
+        return Err(corrupt("inverted rect"));
+    }
+    let n_comps = LE::read_u32(&body[28..32]) as usize;
+    let cells = (r1 - r0)
+        .checked_mul(c1 - c0)
+        .ok_or_else(|| corrupt("absurd rect"))?;
+    let want = 32usize
+        .checked_add(n_comps.checked_mul(48).ok_or_else(|| corrupt("absurd component count"))?)
+        .and_then(|v| v.checked_add(cells.checked_mul(4)?))
+        .ok_or_else(|| corrupt("absurd sizes"))?;
+    if body.len() != want {
+        return Err(corrupt("payload length mismatch"));
+    }
+    let mut off = 32usize;
+    let mut components = Vec::with_capacity(n_comps);
+    for _ in 0..n_comps {
+        let rec = &body[off..off + 48];
+        components.push(crate::vector::TileComponent {
+            key: LE::read_u64(&rec[0..8]),
+            area: LE::read_u64(&rec[8..16]),
+            sum_row: LE::read_u64(&rec[16..24]),
+            sum_col: LE::read_u64(&rec[24..32]),
+            bbox: [
+                LE::read_u32(&rec[32..36]),
+                LE::read_u32(&rec[36..40]),
+                LE::read_u32(&rec[40..44]),
+                LE::read_u32(&rec[44..48]),
+            ],
+        });
+        off += 48;
+    }
+    let mut labels = Vec::with_capacity(cells);
+    for chunk in body[off..].chunks_exact(4) {
+        let l = LE::read_u32(chunk);
+        if l as usize > n_comps {
+            return Err(corrupt("label exceeds component table"));
+        }
+        labels.push(l);
+    }
+    Ok((tile_id, crate::vector::TileLabels { rect, labels, components }))
 }
 
 /// Expand a registration spec's pair selection against the scenes that
@@ -567,6 +671,44 @@ mod tests {
         }
         for cut in [0usize, 8, 31, good.len() - 3] {
             assert!(decode_scene(&good[..cut]).is_err(), "cut at {cut} accepted");
+        }
+    }
+
+    #[test]
+    fn label_files_roundtrip() {
+        use crate::vector::{label_rect, Mask};
+        let mut m = Mask::new(6, 4);
+        for (r, c) in [(0, 1), (0, 2), (1, 2), (3, 0), (3, 5)] {
+            m.set(r, c, true);
+        }
+        let tile = label_rect(&m, [0, 4, 0, 6]).unwrap();
+        let bytes = encode_labels(7, &tile);
+        let (id, back) = decode_labels(&bytes).unwrap();
+        assert_eq!(id, 7);
+        assert_eq!(back, tile);
+        // Empty tiles (no components) round-trip too.
+        let empty = label_rect(&Mask::new(3, 2), [0, 2, 0, 3]).unwrap();
+        let (id, back) = decode_labels(&encode_labels(0, &empty)).unwrap();
+        assert_eq!(id, 0);
+        assert_eq!(back, empty);
+    }
+
+    #[test]
+    fn label_files_reject_corruption() {
+        use crate::vector::{label_rect, Mask};
+        let mut m = Mask::new(4, 3);
+        m.set(1, 1, true);
+        m.set(1, 2, true);
+        let tile = label_rect(&m, [0, 3, 0, 4]).unwrap();
+        let good = encode_labels(1, &tile);
+        decode_labels(&good).unwrap();
+        for i in [0usize, 15, good.len() / 2, good.len() - 1] {
+            let mut bad = good.clone();
+            bad[i] ^= 0x10;
+            assert!(decode_labels(&bad).is_err(), "flip at {i} accepted");
+        }
+        for cut in [0usize, 8, 35, good.len() - 2] {
+            assert!(decode_labels(&good[..cut]).is_err(), "cut at {cut} accepted");
         }
     }
 

@@ -34,6 +34,7 @@ pub mod mosaic;
 pub mod pipeline;
 pub mod runtime;
 pub mod util;
+pub mod vector;
 
 pub use config::Config;
 pub use util::{DifetError, Result};

@@ -10,27 +10,33 @@
 //! difet scalability sweep node counts (Table 1 shape) in one command
 //! difet register    extract + match overlapping acquisitions (2 stages)
 //! difet stitch      register + align + composite one mosaic (4 stages)
-//! difet bench       horizontal-scalability sweep → BENCH_3.json
+//! difet vectorize   stitch + segment + label + trace objects (5 stages)
+//! difet bench       horizontal-scalability sweep → BENCH_4.json
 //! difet inspect     show artifact manifest + cluster configuration
 //! ```
 //!
 //! Try `difet extract --nodes 4 --scenes 3 --algorithms harris,orb`,
 //! `difet register --nodes 2 --scenes 3 --native` for the two-stage
-//! scene-registration job, or `difet stitch --nodes 2 --scenes 4
-//! --native` for the full mosaicking flow (solved scene positions +
-//! seam-quality table; `--out mosaic.hib` dumps the composite).
+//! scene-registration job, `difet stitch --nodes 2 --scenes 4 --native`
+//! for the full mosaicking flow, or `difet vectorize --nodes 2 --scenes 3
+//! --native --threshold 0.55 --out objects.json` to push the mosaic all
+//! the way to GeoJSON-style vector objects.
+//!
+//! Per-subcommand request building goes through the shared helpers below
+//! (`apply_registration_flags` + the `util::args` list/pair parsers), so
+//! each new stage reuses the previous stages' flags instead of
+//! re-parsing them.
 
 use difet::config::Config;
 use difet::mosaic::BlendMode;
 use difet::pipeline::{
     self, report::ColumnKey, report::TableBuilder, ExtractRequest, RegistrationRequest,
-    StitchRequest,
+    StitchRequest, VectorizeRequest,
 };
 use difet::util::args::{help_text, FlagSpec, ParsedArgs};
 use difet::util::json::Json;
 
-const USAGE: &str =
-    "difet <extract|sequential|census|scalability|register|stitch|bench|inspect> [options]";
+const USAGE: &str = "difet <extract|sequential|census|scalability|register|stitch|vectorize|bench|inspect> [options]";
 
 fn flag_specs() -> Vec<FlagSpec> {
     vec![
@@ -51,7 +57,10 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "ransac-iters", takes_value: true, help: "register: RANSAC hypotheses per pair (default 256)" },
         FlagSpec { name: "seed", takes_value: true, help: "register: base RANSAC seed (default 7)" },
         FlagSpec { name: "blend", takes_value: true, help: "stitch: feather|average|first (default feather)" },
-        FlagSpec { name: "out", takes_value: true, help: "stitch: dump mosaic to this .hib file; bench: JSON path (default BENCH_3.json)" },
+        FlagSpec { name: "threshold", takes_value: true, help: "vectorize: luma threshold in [0,1] (default 0.5)" },
+        FlagSpec { name: "min-area", takes_value: true, help: "vectorize: min object area px (default 8)" },
+        FlagSpec { name: "epsilon", takes_value: true, help: "vectorize: Douglas-Peucker tolerance px (default 1.5)" },
+        FlagSpec { name: "out", takes_value: true, help: "stitch: mosaic .hib path; vectorize: GeoJSON path; bench: JSON path (default BENCH_4.json)" },
         FlagSpec { name: "bare", takes_value: false, help: "disable the I/O cost model" },
         FlagSpec { name: "verbose", takes_value: false, help: "print counters/metrics" },
         FlagSpec { name: "help", takes_value: false, help: "show this help" },
@@ -121,6 +130,21 @@ fn build_request(p: &ParsedArgs) -> Result<ExtractRequest, String> {
     })
 }
 
+/// Apply the shared registration-stage flags (everything except the
+/// algorithm choice) onto a request — used verbatim by `register`,
+/// `stitch`, `vectorize` and `bench`, so no stage re-parses them.
+fn apply_registration_flags(p: &ParsedArgs, r: &mut RegistrationRequest) -> Result<(), String> {
+    r.max_offset = p.get_parse("max-offset", r.max_offset)?;
+    r.spec.ratio = p.get_parse("ratio", r.spec.ratio)?;
+    r.spec.tolerance_px = p.get_parse("tolerance", r.spec.tolerance_px)?;
+    r.spec.ransac_iters = p.get_parse("ransac-iters", r.spec.ransac_iters)?;
+    r.spec.seed = p.get_parse("seed", r.spec.seed)?;
+    if let Some(pairs) = p.get_id_pairs("pairs")? {
+        r.spec.pairs = Some(pairs);
+    }
+    Ok(())
+}
+
 fn build_registration_request(
     p: &ParsedArgs,
     req: &ExtractRequest,
@@ -146,24 +170,48 @@ fn build_registration_request(
             }
         }
     }
-    r.max_offset = p.get_parse("max-offset", r.max_offset)?;
-    r.spec.ratio = p.get_parse("ratio", r.spec.ratio)?;
-    r.spec.tolerance_px = p.get_parse("tolerance", r.spec.tolerance_px)?;
-    r.spec.ransac_iters = p.get_parse("ransac-iters", r.spec.ransac_iters)?;
-    r.spec.seed = p.get_parse("seed", r.spec.seed)?;
-    if let Some(items) = p.get_list("pairs") {
-        let mut pairs = Vec::new();
-        for item in items {
-            let (a, b) = item
-                .split_once('-')
-                .ok_or_else(|| format!("--pairs expects a-b entries, got {item:?}"))?;
-            let a: u64 = a.trim().parse().map_err(|_| format!("bad pair id {a:?}"))?;
-            let b: u64 = b.trim().parse().map_err(|_| format!("bad pair id {b:?}"))?;
-            pairs.push((a, b));
-        }
-        r.spec.pairs = Some(pairs);
-    }
+    apply_registration_flags(p, &mut r)?;
     Ok(r)
+}
+
+fn build_stitch_request(p: &ParsedArgs, req: &ExtractRequest) -> Result<StitchRequest, String> {
+    let reg = build_registration_request(p, req)?;
+    let blend = BlendMode::parse(p.get_or("blend", "feather")).map_err(|e| e.to_string())?;
+    Ok(StitchRequest { reg, blend, ..Default::default() })
+}
+
+/// Apply the vectorize-stage flags onto the options — shared by the
+/// `vectorize` subcommand and the bench sweep.
+fn apply_vector_flags(
+    p: &ParsedArgs,
+    opts: &mut pipeline::VectorOptions,
+) -> Result<(), String> {
+    opts.threshold = p.get_parse("threshold", opts.threshold)?;
+    opts.min_area = p.get_parse("min-area", opts.min_area)?;
+    opts.epsilon = p.get_parse("epsilon", opts.epsilon)?;
+    if !(0.0..=1.0).contains(&opts.threshold) {
+        return Err(format!("--threshold {} outside [0, 1]", opts.threshold));
+    }
+    Ok(())
+}
+
+fn build_vectorize_request(
+    p: &ParsedArgs,
+    req: &ExtractRequest,
+) -> Result<VectorizeRequest, String> {
+    let mut r = VectorizeRequest {
+        stitch: build_stitch_request(p, req)?,
+        ..Default::default()
+    };
+    apply_vector_flags(p, &mut r.opts)?;
+    Ok(r)
+}
+
+fn print_counters(counters: &std::collections::BTreeMap<String, u64>) {
+    println!("\ncounters:");
+    for (k, v) in counters {
+        println!("  {k:<24}{v}");
+    }
 }
 
 fn run(p: &ParsedArgs) -> Result<(), String> {
@@ -235,17 +283,11 @@ fn run(p: &ParsedArgs) -> Result<(), String> {
             );
             print!("{}", pipeline::report::render_registration_table(&out.report));
             if verbose {
-                println!("\ncounters:");
-                for (k, v) in &out.report.counters {
-                    println!("  {k:<24}{v}");
-                }
+                print_counters(&out.report.counters);
             }
         }
         "stitch" => {
-            let rreq = build_registration_request(p, &req)?;
-            let blend =
-                BlendMode::parse(p.get_or("blend", "feather")).map_err(|e| e.to_string())?;
-            let sreq = StitchRequest { reg: rreq, blend, ..Default::default() };
+            let sreq = build_stitch_request(p, &req)?;
             let out = pipeline::run_stitch(&cfg, &sreq).map_err(|e| e.to_string())?;
             println!(
                 "corpus: {} overlapping acquisitions, {} raw, {} bundled; \
@@ -268,10 +310,37 @@ fn run(p: &ParsedArgs) -> Result<(), String> {
                 );
             }
             if verbose {
-                println!("\ncounters:");
-                for (k, v) in &out.report.counters {
-                    println!("  {k:<24}{v}");
-                }
+                print_counters(&out.report.counters);
+            }
+        }
+        "vectorize" => {
+            let vreq = build_vectorize_request(p, &req)?;
+            let out = pipeline::run_vectorize(&cfg, &vreq).map_err(|e| e.to_string())?;
+            println!(
+                "corpus: {} overlapping acquisitions; {} pair(s) registered; \
+                 mosaic {}×{}; threshold {:.2}, min area {} px, ε {:.1}\n",
+                out.stitch.registration.corpus.scene_count,
+                out.stitch.registration.report.registered_count(),
+                out.stitch.mosaic.width,
+                out.stitch.mosaic.height,
+                vreq.opts.threshold,
+                vreq.opts.min_area,
+                vreq.opts.epsilon,
+            );
+            print!(
+                "{}",
+                pipeline::report::render_vector_table(&out.vector.report, &out.vector.objects)
+            );
+            if let Some(path) = p.get("out") {
+                pipeline::dump_geojson(std::path::Path::new(path), &out.vector.objects)
+                    .map_err(|e| e.to_string())?;
+                println!(
+                    "\n{} object(s) written to {path} (GeoJSON FeatureCollection)",
+                    out.vector.objects.len()
+                );
+            }
+            if verbose {
+                print_counters(&out.vector.report.counters);
             }
         }
         "bench" => {
@@ -303,41 +372,35 @@ fn run(p: &ParsedArgs) -> Result<(), String> {
 }
 
 /// The paper's core evaluation as one command: run the fused extraction
-/// sweep AND the full stitch flow at each node count, then write
-/// wall-time, speedup and parallel efficiency to a JSON report
-/// (`BENCH_3.json` by default).  Speedup is relative to the smallest
-/// node count in the sweep; efficiency is `speedup × baseline / nodes`.
+/// sweep, the full stitch flow AND the vectorize tail at each node
+/// count, then write wall-time, speedup and parallel efficiency to a
+/// JSON report (`BENCH_4.json` by default).  Speedup is relative to the
+/// smallest node count in the sweep; efficiency is
+/// `speedup × baseline / nodes`.
 fn run_bench(p: &ParsedArgs, cfg: &Config, req: &ExtractRequest) -> Result<(), String> {
-    let mut nodes: Vec<usize> = match p.get_list("nodes") {
-        Some(items) => items
-            .iter()
-            .map(|s| s.parse().map_err(|_| format!("bad node count {s:?}")))
-            .collect::<Result<Vec<usize>, String>>()?,
-        None => vec![1, 2, 4, 8],
-    };
-    nodes.sort_unstable();
-    nodes.dedup();
-    if nodes.is_empty() || nodes[0] == 0 {
-        return Err("--nodes needs a comma list of positive counts".into());
-    }
+    let nodes = p.get_counts("nodes", &[1, 2, 4, 8])?;
 
-    // The stitch leg reuses the shared flags (--scenes/--native/
-    // --max-offset/--seed) with the default ORB matcher.
+    // The stitch + vectorize legs reuse the shared flags (--scenes/
+    // --native/--max-offset/--seed/--threshold/…) with the default ORB
+    // matcher (an explicit --algorithms list configures the extraction
+    // sweep, so it must not constrain the matcher here).
     let mut rreq = RegistrationRequest {
         num_scenes: req.num_scenes,
         force_native: req.force_native,
         ..Default::default()
     };
-    rreq.max_offset = p.get_parse("max-offset", rreq.max_offset)?;
-    rreq.spec.seed = p.get_parse("seed", rreq.spec.seed)?;
+    apply_registration_flags(p, &mut rreq)?;
     let sreq = StitchRequest { reg: rreq, ..Default::default() };
+    let mut vopts = pipeline::VectorOptions::default();
+    apply_vector_flags(p, &mut vopts)?;
     let ereq = ExtractRequest { fused: true, write_output: false, ..req.clone() };
 
     println!(
         "bench: {} scene(s), algorithms {:?}, node counts {:?}\n",
         req.num_scenes, req.algorithms, nodes
     );
-    let mut rows: Vec<(usize, f64, f64)> = Vec::new(); // (nodes, extract, stitch)
+    // (nodes, extract, stitch, vectorize) sim seconds per sweep point.
+    let mut rows: Vec<(usize, f64, f64, f64)> = Vec::new();
     for &n in &nodes {
         let mut c = cfg.clone();
         c.cluster.nodes = n;
@@ -347,30 +410,36 @@ fn run_bench(p: &ParsedArgs, cfg: &Config, req: &ExtractRequest) -> Result<(), S
         let stitch_secs = sout.registration.extraction.sim_seconds
             + sout.registration.report.sim_seconds
             + sout.report.sim_seconds;
+        let vstage = pipeline::run_vector_stage(&c, &sout.mosaic, &vopts)
+            .map_err(|e| e.to_string())?;
+        let vector_secs = vstage.report.sim_seconds;
         println!(
-            "  {n} node(s): extract {}, stitch {}",
+            "  {n} node(s): extract {}, stitch {}, vectorize {} ({} object(s))",
             difet::util::fmt::duration(extract_secs),
             difet::util::fmt::duration(stitch_secs),
+            difet::util::fmt::duration(vector_secs),
+            vstage.report.object_count,
         );
-        rows.push((n, extract_secs, stitch_secs));
+        rows.push((n, extract_secs, stitch_secs, vector_secs));
     }
 
     let baseline_nodes = rows[0].0;
-    let baseline_total = rows[0].1 + rows[0].2;
+    let baseline_total = rows[0].1 + rows[0].2 + rows[0].3;
     let mut runs = Vec::new();
     println!(
-        "\n{:<8}{:>12}{:>12}{:>12}{:>10}{:>12}",
-        "nodes", "extract", "stitch", "total", "speedup", "efficiency"
+        "\n{:<8}{:>12}{:>12}{:>12}{:>12}{:>10}{:>12}",
+        "nodes", "extract", "stitch", "vectorize", "total", "speedup", "efficiency"
     );
-    for &(n, extract_secs, stitch_secs) in &rows {
-        let total = extract_secs + stitch_secs;
+    for &(n, extract_secs, stitch_secs, vector_secs) in &rows {
+        let total = extract_secs + stitch_secs + vector_secs;
         let speedup = if total > 0.0 { baseline_total / total } else { 0.0 };
         let efficiency = speedup * baseline_nodes as f64 / n as f64;
         println!(
-            "{:<8}{:>12.1}{:>12.1}{:>12.1}{:>9.2}x{:>11.0}%",
+            "{:<8}{:>12.1}{:>12.1}{:>12.1}{:>12.1}{:>9.2}x{:>11.0}%",
             n,
             extract_secs,
             stitch_secs,
+            vector_secs,
             total,
             speedup,
             efficiency * 100.0,
@@ -379,6 +448,7 @@ fn run_bench(p: &ParsedArgs, cfg: &Config, req: &ExtractRequest) -> Result<(), S
         row.insert("nodes".to_string(), Json::Num(n as f64));
         row.insert("extract_sim_seconds".to_string(), Json::Num(extract_secs));
         row.insert("stitch_sim_seconds".to_string(), Json::Num(stitch_secs));
+        row.insert("vectorize_sim_seconds".to_string(), Json::Num(vector_secs));
         row.insert("total_sim_seconds".to_string(), Json::Num(total));
         row.insert("speedup".to_string(), Json::Num(speedup));
         row.insert("parallel_efficiency".to_string(), Json::Num(efficiency));
@@ -395,8 +465,13 @@ fn run_bench(p: &ParsedArgs, cfg: &Config, req: &ExtractRequest) -> Result<(), S
         Json::Arr(req.algorithms.iter().map(|a| Json::Str(a.clone())).collect()),
     );
     root.insert("baseline_nodes".to_string(), Json::Num(baseline_nodes as f64));
+    root.insert("stages".to_string(), Json::Arr(vec![
+        Json::Str("extract".to_string()),
+        Json::Str("stitch".to_string()),
+        Json::Str("vectorize".to_string()),
+    ]));
     root.insert("runs".to_string(), Json::Arr(runs));
-    let path = p.get_or("out", "BENCH_3.json");
+    let path = p.get_or("out", "BENCH_4.json");
     std::fs::write(path, format!("{}\n", Json::Obj(root))).map_err(|e| e.to_string())?;
     println!("\nwrote {path}");
     Ok(())

@@ -14,14 +14,18 @@
 //!   pair matching ([`run_registration`]).
 //! * [`stitch`] — the full mosaicking flow on top of registration:
 //!   ingest → register → align → composite ([`run_stitch`]).
+//! * [`vectorize`] — object extraction from the mosaic: segment → label
+//!   (distributed) → trace into GeoJSON-style polygons
+//!   ([`run_vectorize`]).
 //! * [`report`] — render Table 1 / Table 2 in the paper's row order,
-//!   plus the per-pair registration and mosaic tables.
+//!   plus the per-pair registration, mosaic and vector tables.
 
 pub mod extract;
 pub mod ingest;
 pub mod register;
 pub mod report;
 pub mod stitch;
+pub mod vectorize;
 
 pub use extract::{run_extraction, run_jobs_on, run_sequential, ExtractRequest, ExtractionReport};
 pub use ingest::{ingest_corpus, CorpusInfo};
@@ -30,4 +34,8 @@ pub use register::{
     RegistrationOutcome, RegistrationRequest,
 };
 pub use stitch::{dump_mosaic, run_stitch, run_stitch_on, StitchOutcome, StitchRequest};
+pub use vectorize::{
+    dump_geojson, run_vector_stage, run_vector_stage_on, run_vectorize, run_vectorize_on,
+    VectorOptions, VectorStage, VectorizeOutcome, VectorizeRequest,
+};
 

@@ -217,6 +217,58 @@ pub fn render_mosaic_table(
     out
 }
 
+/// Vectorization summary: object table (strongest first by area) plus
+/// the label-merge diagnostics of one vector job.
+pub fn render_vector_table(
+    rep: &crate::coordinator::VectorReport,
+    objects: &[crate::vector::VectorObject],
+) -> String {
+    const LISTED: usize = 12;
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Vectorization — {} object(s) from a {}×{} mask on {} node(s): {} band tile(s), {}\n",
+        rep.object_count,
+        rep.width,
+        rep.height,
+        rep.nodes,
+        rep.tile_count,
+        fmt::duration(rep.sim_seconds),
+    ));
+    out.push_str(&format!(
+        "foreground {} px; merge: {} seam union(s), max residual {} fragment(s); {} polygon(s) ≥ min area\n",
+        fmt::with_commas(rep.foreground_px),
+        rep.seam_unions,
+        rep.max_merge_residual,
+        objects.len(),
+    ));
+    if objects.is_empty() {
+        return out;
+    }
+    out.push_str(&format!(
+        "{:<8}{:>10}{:>11}{:>10}{:>18}{:>22}\n",
+        "object", "area px", "perimeter", "vertices", "centroid", "bbox"
+    ));
+    // Largest objects first; ties broken by id so the listing is stable.
+    let mut by_area: Vec<&crate::vector::VectorObject> = objects.iter().collect();
+    by_area.sort_by(|a, b| b.area.cmp(&a.area).then(a.id.cmp(&b.id)));
+    for o in by_area.iter().take(LISTED) {
+        let (cr, cc) = o.centroid;
+        let centroid = format!("({cr:.1}, {cc:.1})");
+        let bbox = format!("[{}, {}, {}, {}]", o.bbox[0], o.bbox[1], o.bbox[2], o.bbox[3]);
+        out.push_str(&format!(
+            "{:<8}{:>10}{:>11.1}{:>10}{centroid:>18}{bbox:>22}\n",
+            o.id,
+            fmt::with_commas(o.area),
+            o.perimeter,
+            o.polygon.len(),
+        ));
+    }
+    if by_area.len() > LISTED {
+        out.push_str(&format!("… and {} smaller object(s)\n", by_area.len() - LISTED));
+    }
+    out
+}
+
 /// Per-run census table.
 pub fn render_census_table(jobs: &[JobReport]) -> String {
     let mut out = String::new();
@@ -354,6 +406,47 @@ mod tests {
         assert!(t.contains("34.0"), "scene 1's solved col position");
         assert!(t.contains("0↔1"));
         assert!(t.contains("123,456"));
+    }
+
+    #[test]
+    fn vector_table_renders_objects_largest_first() {
+        use crate::coordinator::VectorReport;
+        use crate::vector::VectorObject;
+        let rep = VectorReport {
+            nodes: 2,
+            width: 640,
+            height: 480,
+            tile_count: 3,
+            object_count: 2,
+            foreground_px: 12345,
+            max_merge_residual: 1,
+            seam_unions: 1,
+            sim_seconds: 2.0,
+            wall_seconds: 0.1,
+            compute_seconds: 0.05,
+            io_seconds: 0.02,
+            counters: Default::default(),
+        };
+        let obj = |id: u32, area: u64| VectorObject {
+            id,
+            area,
+            perimeter: 12.0,
+            centroid: (3.5, 4.5),
+            bbox: [1, 2, 6, 7],
+            polygon: vec![(1, 2), (1, 7), (6, 7), (6, 2)],
+        };
+        let t = render_vector_table(&rep, &[obj(1, 10), obj(2, 500)]);
+        assert!(t.contains("2 object(s) from a 640×480 mask on 2 node(s)"));
+        assert!(t.contains("12,345"));
+        assert!(t.contains("max residual 1"));
+        // Object 2 (larger) listed before object 1.
+        let pos2 = t.find("\n2  ").unwrap();
+        let pos1 = t.find("\n1  ").unwrap();
+        assert!(pos2 < pos1, "larger object must list first:\n{t}");
+        // Empty object lists render the header block only.
+        let empty = render_vector_table(&rep, &[]);
+        assert!(empty.contains("0 polygon(s)"));
+        assert!(!empty.contains("vertices"));
     }
 
     #[test]

@@ -1,0 +1,244 @@
+//! The vectorize pipeline: ingest → stitch → segment → label → trace.
+//!
+//! The five-stage flow completing the authors' published pipeline
+//! (extraction → registration → mosaicking → object extraction /
+//! vectorization) on the simulated cluster:
+//!
+//! 1. **Stitch** — the full four-stage mosaicking flow
+//!    ([`super::stitch::run_stitch_on`]) produces the composited canvas.
+//! 2. **Segment** — the mosaic is thresholded into a binary mask
+//!    ([`crate::vector::threshold_mask`]; transparent canvas gaps stay
+//!    background).
+//! 3. **Label** — the mask is labeled as band-shaped `LabelTile` work
+//!    units on the coordinator ([`crate::coordinator::run_vector_job`]),
+//!    tile labels are shuffled through CRC-guarded DFS files, and the
+//!    union-find merge stitches them into global object ids —
+//!    bit-identical to [`crate::vector::label_sequential`].
+//! 4. **Trace** — every object of `min_area`+ pixels becomes a
+//!    Douglas–Peucker-simplified polygon with exact area / perimeter /
+//!    centroid / bbox attributes ([`crate::vector::extract_objects`]),
+//!    emittable as a GeoJSON-style document ([`dump_geojson`]).
+//!
+//! The segment → label → trace tail also runs standalone over any raster
+//! ([`run_vector_stage_on`]) — that is what `difet bench` measures and
+//! what the e2e suite drives at several node counts.
+
+use std::path::Path;
+
+use crate::config::Config;
+use crate::coordinator::driver::JobHooks;
+use crate::coordinator::{run_vector_job, VectorReport, VectorSpec};
+use crate::dfs::Dfs;
+use crate::imagery::Rgba8Image;
+use crate::metrics::Registry;
+use crate::util::json::Json;
+use crate::util::Result;
+use crate::vector::{
+    extract_objects, geojson, label_sequential, threshold_mask, Labels, Mask, ObjectStats,
+    VectorObject,
+};
+
+use super::stitch::{run_stitch_on, StitchOutcome, StitchRequest};
+
+/// Segment/label/trace knobs (everything downstream of the mosaic).
+#[derive(Debug, Clone)]
+pub struct VectorOptions {
+    /// Luma threshold in [0, 1]: pixels at or above become foreground.
+    pub threshold: f32,
+    /// Objects below this pixel area are not traced into polygons.
+    pub min_area: u64,
+    /// Douglas–Peucker simplification tolerance, in pixels.
+    pub epsilon: f64,
+    /// Rows per distributed labeling work unit.
+    pub band_rows: usize,
+}
+
+impl Default for VectorOptions {
+    fn default() -> Self {
+        VectorOptions {
+            threshold: 0.5,
+            min_area: 8,
+            epsilon: 1.5,
+            band_rows: 256,
+        }
+    }
+}
+
+/// What to vectorize: the stitch front-end plus the vector knobs.
+#[derive(Debug, Clone, Default)]
+pub struct VectorizeRequest {
+    pub stitch: StitchRequest,
+    pub opts: VectorOptions,
+}
+
+/// The segment → label → trace tail over one raster.
+#[derive(Debug)]
+pub struct VectorStage {
+    pub opts: VectorOptions,
+    /// The segmented foreground mask.
+    pub mask: Mask,
+    /// Merged global label raster (distributed job output).
+    pub labels: Labels,
+    /// Merged per-object statistics, ascending object id.
+    pub stats: Vec<ObjectStats>,
+    /// Traced + simplified polygons (objects of `min_area`+ pixels).
+    pub objects: Vec<VectorObject>,
+    /// The vector job's report (merge residual, counters, timing).
+    pub report: VectorReport,
+}
+
+impl VectorStage {
+    /// Sequential whole-raster labeling of this stage's mask — the
+    /// baseline the distributed job must equal bit for bit.
+    pub fn labels_baseline(&self) -> (Labels, Vec<ObjectStats>) {
+        label_sequential(&self.mask)
+    }
+
+    /// Sequentially derived polygons — must equal `self.objects` exactly.
+    pub fn objects_baseline(&self) -> Vec<VectorObject> {
+        let (labels, stats) = self.labels_baseline();
+        extract_objects(&labels, &stats, self.opts.min_area, self.opts.epsilon)
+    }
+
+    /// GeoJSON-style document for the traced objects.
+    pub fn geojson(&self) -> Json {
+        geojson(&self.objects)
+    }
+}
+
+/// Everything a vectorize run produced.
+#[derive(Debug)]
+pub struct VectorizeOutcome {
+    /// The four-stage stitch outcome (registration, alignment, mosaic).
+    pub stitch: StitchOutcome,
+    /// The vector tail over the composited mosaic.
+    pub vector: VectorStage,
+}
+
+impl VectorizeOutcome {
+    pub fn object_count(&self) -> usize {
+        self.vector.report.object_count
+    }
+
+    /// Largest cross-band label-merge residual (0 = no object crossed a
+    /// band boundary) — the vector analogue of the alignment residual.
+    pub fn max_merge_residual(&self) -> u64 {
+        self.vector.report.max_merge_residual
+    }
+}
+
+/// Run the segment → label → trace tail over `img` on the simulated
+/// cluster (caller-provided DFS/metrics/hooks; tests inject failures).
+pub fn run_vector_stage_on(
+    cfg: &Config,
+    dfs: &Dfs,
+    img: &Rgba8Image,
+    opts: &VectorOptions,
+    registry: &Registry,
+    hooks: &JobHooks,
+) -> Result<VectorStage> {
+    let mask = threshold_mask(img, opts.threshold);
+    let spec = VectorSpec {
+        band_rows: opts.band_rows,
+        ..Default::default()
+    };
+    let (report, labels, stats) = run_vector_job(cfg, dfs, &mask, &spec, registry, hooks)?;
+    let objects = extract_objects(&labels, &stats, opts.min_area, opts.epsilon);
+    Ok(VectorStage {
+        opts: opts.clone(),
+        mask,
+        labels,
+        stats,
+        objects,
+        report,
+    })
+}
+
+/// [`run_vector_stage_on`] over a fresh DFS and registry — the bench and
+/// example entry point.
+pub fn run_vector_stage(cfg: &Config, img: &Rgba8Image, opts: &VectorOptions) -> Result<VectorStage> {
+    cfg.validate()?;
+    let dfs = Dfs::new(
+        cfg.cluster.nodes,
+        cfg.storage.block_size,
+        cfg.cluster.replication,
+    );
+    run_vector_stage_on(cfg, &dfs, img, opts, &Registry::new(), &JobHooks::default())
+}
+
+/// Full five-stage run on the simulated cluster.
+pub fn run_vectorize(cfg: &Config, req: &VectorizeRequest) -> Result<VectorizeOutcome> {
+    cfg.validate()?;
+    let dfs = Dfs::new(
+        cfg.cluster.nodes,
+        cfg.storage.block_size,
+        cfg.cluster.replication,
+    );
+    run_vectorize_on(cfg, &dfs, req, &Registry::new(), &JobHooks::default())
+}
+
+/// [`run_vectorize`] over caller-provided DFS/metrics/hooks.  The stitch
+/// stages and the vector job share one DFS, so the mosaic the vector
+/// stage segments came off the same store its mask is shuffled back into.
+pub fn run_vectorize_on(
+    cfg: &Config,
+    dfs: &Dfs,
+    req: &VectorizeRequest,
+    registry: &Registry,
+    hooks: &JobHooks,
+) -> Result<VectorizeOutcome> {
+    let stitch = run_stitch_on(cfg, dfs, &req.stitch, registry, hooks)?;
+    let vector = run_vector_stage_on(cfg, dfs, &stitch.mosaic, &req.opts, registry, hooks)?;
+    Ok(VectorizeOutcome { stitch, vector })
+}
+
+/// Write the objects as a GeoJSON-style document (pretty enough for GIS
+/// tooling to ingest; coordinates are `[col, row]` pixel positions).
+pub fn dump_geojson(path: &Path, objects: &[VectorObject]) -> Result<()> {
+    let mut root = match geojson(objects) {
+        Json::Obj(m) => m,
+        _ => unreachable!("geojson always returns an object"),
+    };
+    root.insert("object_count".to_string(), Json::Num(objects.len() as f64));
+    std::fs::write(path, format!("{}\n", Json::Obj(root)))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let req = VectorizeRequest::default();
+        assert_eq!(req.opts.threshold, 0.5);
+        assert_eq!(req.opts.min_area, 8);
+        assert_eq!(req.opts.epsilon, 1.5);
+        assert_eq!(req.opts.band_rows, 256);
+        assert_eq!(req.stitch.reg.num_scenes, 3);
+    }
+
+    #[test]
+    fn dump_geojson_roundtrips_through_the_parser() {
+        let objects = vec![VectorObject {
+            id: 1,
+            area: 4,
+            perimeter: 4.0,
+            centroid: (0.5, 0.5),
+            bbox: [0, 0, 1, 1],
+            polygon: vec![(0, 0), (0, 1), (1, 1), (1, 0)],
+        }];
+        let dir = std::env::temp_dir().join("difet_vectorize_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("objects.json");
+        dump_geojson(&path, &objects).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = crate::util::json::parse(&text).unwrap();
+        assert_eq!(doc.get("object_count").unwrap().as_u64(), Some(1));
+        assert_eq!(
+            doc.get("features").unwrap().as_arr().unwrap().len(),
+            1
+        );
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -104,6 +104,42 @@ impl ParsedArgs {
                 .collect()
         })
     }
+
+    /// Parse a comma list of `a-b` id pairs (e.g. `--pairs 0-1,1-2`).
+    pub fn get_id_pairs(&self, name: &str) -> Result<Option<Vec<(u64, u64)>>, String> {
+        let Some(items) = self.get_list(name) else {
+            return Ok(None);
+        };
+        let mut pairs = Vec::with_capacity(items.len());
+        for item in &items {
+            let (a, b) = item
+                .split_once('-')
+                .ok_or_else(|| format!("--{name} expects a-b entries, got {item:?}"))?;
+            let a: u64 = a.trim().parse().map_err(|_| format!("--{name}: bad id {a:?}"))?;
+            let b: u64 = b.trim().parse().map_err(|_| format!("--{name}: bad id {b:?}"))?;
+            pairs.push((a, b));
+        }
+        Ok(Some(pairs))
+    }
+
+    /// Parse a comma list of positive counts (e.g. a `--nodes 1,2,4,8`
+    /// sweep): sorted, deduplicated, `default` when the flag is absent,
+    /// and zero/empty rejected.
+    pub fn get_counts(&self, name: &str, default: &[usize]) -> Result<Vec<usize>, String> {
+        let mut counts: Vec<usize> = match self.get_list(name) {
+            Some(items) => items
+                .iter()
+                .map(|s| s.parse().map_err(|_| format!("--{name}: bad count {s:?}")))
+                .collect::<Result<_, _>>()?,
+            None => default.to_vec(),
+        };
+        counts.sort_unstable();
+        counts.dedup();
+        if counts.is_empty() || counts[0] == 0 {
+            return Err(format!("--{name} needs a comma list of positive counts"));
+        }
+        Ok(counts)
+    }
 }
 
 /// Render `--help` text for a flag table.
@@ -161,6 +197,31 @@ mod tests {
         assert!(ParsedArgs::parse(&sv(&["--bogus"]), &specs(), false).is_err());
         assert!(ParsedArgs::parse(&sv(&["--nodes"]), &specs(), false).is_err());
         assert!(ParsedArgs::parse(&sv(&["--verbose=1"]), &specs(), false).is_err());
+    }
+
+    #[test]
+    fn id_pairs_parse_and_reject() {
+        let specs = vec![FlagSpec { name: "pairs", takes_value: true, help: "p" }];
+        let p = ParsedArgs::parse(&sv(&["--pairs", "0-1, 2-10"]), &specs, false).unwrap();
+        assert_eq!(p.get_id_pairs("pairs").unwrap(), Some(vec![(0, 1), (2, 10)]));
+        let none = ParsedArgs::parse(&sv(&[]), &specs, false).unwrap();
+        assert_eq!(none.get_id_pairs("pairs").unwrap(), None);
+        for bad in ["0", "a-1", "1-b"] {
+            let p = ParsedArgs::parse(&sv(&["--pairs", bad]), &specs, false).unwrap();
+            assert!(p.get_id_pairs("pairs").is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn counts_sort_dedup_and_reject_zero() {
+        let p = ParsedArgs::parse(&sv(&["--nodes", "4,1,2,4"]), &specs(), false).unwrap();
+        assert_eq!(p.get_counts("nodes", &[8]).unwrap(), vec![1, 2, 4]);
+        let none = ParsedArgs::parse(&sv(&[]), &specs(), false).unwrap();
+        assert_eq!(none.get_counts("nodes", &[1, 2]).unwrap(), vec![1, 2]);
+        for bad in ["0,1", "x", ","] {
+            let p = ParsedArgs::parse(&sv(&["--nodes", bad]), &specs(), false).unwrap();
+            assert!(p.get_counts("nodes", &[1]).is_err(), "accepted {bad:?}");
+        }
     }
 
     #[test]

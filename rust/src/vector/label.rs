@@ -1,0 +1,660 @@
+//! Connected-component labeling: mask → per-object label raster.
+//!
+//! The distributed design mirrors the object-extraction follow-up papers:
+//! the mask is cut into tile rects, each tile is labeled *locally*
+//! ([`label_rect`] — classic two-pass union-find CCL, 4-connectivity),
+//! and a union-find **merge** over the tile seams stitches tile-local
+//! components into global objects ([`merge_tile_labels`]).
+//!
+//! Determinism is structural, not seeded: every tile-local component is
+//! keyed by the global row-major index of its first (topmost, then
+//! leftmost) pixel — unique across tiles because rects are disjoint —
+//! and final object ids are assigned in ascending order of each merged
+//! object's minimum key.  A row-major scan first meets a component at
+//! exactly that pixel, so the sequential baseline
+//! ([`label_sequential`], the one-tile case of the same code path) and
+//! *any* tiling produce bit-identical label rasters and object tables,
+//! regardless of node count, scheduling order, retries or speculation.
+
+use std::collections::BTreeMap;
+
+use crate::util::{DifetError, Result};
+
+use super::segment::Mask;
+
+/// Global object-label raster: 0 = background, 1..=K = object id
+/// (row-major, ids ascend with each object's first row-major pixel).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Labels {
+    pub width: usize,
+    pub height: usize,
+    pub data: Vec<u32>,
+}
+
+impl Labels {
+    #[inline]
+    pub fn get(&self, row: usize, col: usize) -> u32 {
+        self.data[row * self.width + col]
+    }
+}
+
+/// One tile-local component (pre-merge).  `key` is the global row-major
+/// index of its first pixel — the canonical identity the merge and the
+/// final numbering are built on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TileComponent {
+    pub key: u64,
+    pub area: u64,
+    /// Σ of member pixel rows / cols (global coordinates) — centroids
+    /// merge by exact integer addition, no float order sensitivity.
+    pub sum_row: u64,
+    pub sum_col: u64,
+    /// Inclusive global bounds: [min_row, min_col, max_row, max_col].
+    pub bbox: [u32; 4],
+}
+
+/// One labeled tile: the work-unit output shuffled through DFS.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TileLabels {
+    /// Half-open global rect [row0, row1, col0, col1] this tile covers.
+    pub rect: [usize; 4],
+    /// Rect-local raster: 0 = background, i = `components[i - 1]`.
+    pub labels: Vec<u32>,
+    /// Components in ascending `key` order (first-encounter order).
+    pub components: Vec<TileComponent>,
+}
+
+impl TileLabels {
+    /// Shift a tile labeled in band-local coordinates down by `row0`
+    /// rows.  Only valid for full-width bands (`rect[2] == 0`): a
+    /// band-local row-major index plus `row0 × band_width` is then the
+    /// global row-major index.  This is how a distributed worker labels
+    /// the band bytes it fetched from DFS without holding the full mask.
+    pub fn offset_rows(mut self, row0: usize) -> TileLabels {
+        assert_eq!(self.rect[2], 0, "offset_rows requires a full-width band");
+        let width = self.rect[3];
+        self.rect[0] += row0;
+        self.rect[1] += row0;
+        for comp in &mut self.components {
+            comp.key += (row0 * width) as u64;
+            comp.sum_row += comp.area * row0 as u64;
+            comp.bbox[0] += row0 as u32;
+            comp.bbox[2] += row0 as u32;
+        }
+        self
+    }
+}
+
+/// Merged per-object statistics (what the trace stage consumes).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ObjectStats {
+    /// Final object id (1-based, ascending with `key`).
+    pub label: u32,
+    /// Global row-major index of the object's first pixel.
+    pub key: u64,
+    pub area: u64,
+    pub sum_row: u64,
+    pub sum_col: u64,
+    /// Inclusive global bounds: [min_row, min_col, max_row, max_col].
+    pub bbox: [u32; 4],
+}
+
+impl ObjectStats {
+    /// Exact centroid (row, col) from the integer coordinate sums.
+    pub fn centroid(&self) -> (f64, f64) {
+        (
+            self.sum_row as f64 / self.area as f64,
+            self.sum_col as f64 / self.area as f64,
+        )
+    }
+
+    /// The object's first pixel (row, col) — the canonical trace start.
+    pub fn start_pixel(&self, width: usize) -> (usize, usize) {
+        ((self.key / width as u64) as usize, (self.key % width as u64) as usize)
+    }
+}
+
+/// Merge diagnostics: how much cross-tile stitching the tiling induced.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MergeStats {
+    /// Union operations that actually joined two distinct classes (one
+    /// per seam-crossing component adjacency class).
+    pub seam_unions: u64,
+    /// Largest number of tile-local fragments merged into one object.
+    pub max_fragments: u64,
+}
+
+impl MergeStats {
+    /// `max_fragments − 1`: 0 when no object crossed a tile boundary —
+    /// the "label-merge residual" the vectorize outcome reports.
+    pub fn max_merge_residual(&self) -> u64 {
+        self.max_fragments.saturating_sub(1)
+    }
+}
+
+/// Union-find with path halving (no ranks: merge sets are tiny and the
+/// relabeling is by min key, not by root identity).
+struct UnionFind {
+    parent: Vec<u32>,
+}
+
+impl UnionFind {
+    fn new() -> Self {
+        UnionFind { parent: Vec::new() }
+    }
+
+    fn make(&mut self) -> u32 {
+        let id = self.parent.len() as u32;
+        self.parent.push(id);
+        id
+    }
+
+    fn find(&mut self, mut x: u32) -> u32 {
+        while self.parent[x as usize] != x {
+            let grand = self.parent[self.parent[x as usize] as usize];
+            self.parent[x as usize] = grand;
+            x = grand;
+        }
+        x
+    }
+
+    /// Union two classes; returns `true` iff they were distinct.
+    fn union(&mut self, a: u32, b: u32) -> bool {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra == rb {
+            return false;
+        }
+        // Keep the smaller id as root (deterministic, though nothing
+        // downstream depends on root identity).
+        let (lo, hi) = if ra < rb { (ra, rb) } else { (rb, ra) };
+        self.parent[hi as usize] = lo;
+        true
+    }
+}
+
+/// Tile rects for a row-band tiling: full-width strips of `band_rows`
+/// rows (the last band may be shorter).  Bands are the work-unit shape
+/// of the distributed job: a band's mask bytes are one contiguous DFS
+/// byte range, so splits get real range reads and locality.
+pub fn band_rects(width: usize, height: usize, band_rows: usize) -> Vec<[usize; 4]> {
+    let band_rows = band_rows.max(1);
+    let mut out = Vec::new();
+    let mut r = 0;
+    while r < height {
+        let r1 = (r + band_rows).min(height);
+        out.push([r, r1, 0, width]);
+        r = r1;
+    }
+    out
+}
+
+/// Label one rect of the mask (4-connectivity, rect-local adjacency
+/// only).  Calls `keep_going(step, total)` as rows complete across both
+/// passes; returning `false` abandons the scan and yields `None` — the
+/// cooperative-cancellation hook a losing speculative twin dies through.
+pub fn label_rect_while(
+    mask: &Mask,
+    rect: [usize; 4],
+    keep_going: &mut dyn FnMut(usize, usize) -> bool,
+) -> Result<Option<TileLabels>> {
+    let [r0, r1, c0, c1] = rect;
+    if r1 > mask.height || c1 > mask.width || r0 > r1 || c0 > c1 {
+        return Err(DifetError::Job(format!(
+            "label rect {rect:?} outside {}×{} mask",
+            mask.height, mask.width
+        )));
+    }
+    let (rows, cols) = (r1 - r0, c1 - c0);
+    let total_steps = 2 * rows;
+
+    // Pass 1: provisional labels (value = union-find id + 1; 0 = bg).
+    let mut prov = vec![0u32; rows * cols];
+    let mut uf = UnionFind::new();
+    for r in 0..rows {
+        for c in 0..cols {
+            if !mask.get(r0 + r, c0 + c) {
+                continue;
+            }
+            let i = r * cols + c;
+            let left = if c > 0 { prov[i - 1] } else { 0 };
+            let up = if r > 0 { prov[i - cols] } else { 0 };
+            prov[i] = match (left, up) {
+                (0, 0) => uf.make() + 1,
+                (l, 0) => l,
+                (0, u) => u,
+                (l, u) => {
+                    uf.union(l - 1, u - 1);
+                    l
+                }
+            };
+        }
+        if !keep_going(r + 1, total_steps) {
+            return Ok(None);
+        }
+    }
+
+    // Pass 2: compact components in first-encounter (= min key) order,
+    // accumulating exact integer statistics.
+    let mut labels = vec![0u32; rows * cols];
+    let mut comp_of_root: Vec<u32> = vec![0; uf.parent.len()]; // 0 = unseen
+    let mut components: Vec<TileComponent> = Vec::new();
+    for r in 0..rows {
+        for c in 0..cols {
+            let i = r * cols + c;
+            if prov[i] == 0 {
+                continue;
+            }
+            let root = uf.find(prov[i] - 1) as usize;
+            let (gr, gc) = (r0 + r, c0 + c);
+            let id = if comp_of_root[root] == 0 {
+                components.push(TileComponent {
+                    key: (gr * mask.width + gc) as u64,
+                    area: 0,
+                    sum_row: 0,
+                    sum_col: 0,
+                    bbox: [gr as u32, gc as u32, gr as u32, gc as u32],
+                });
+                comp_of_root[root] = components.len() as u32;
+                components.len() as u32
+            } else {
+                comp_of_root[root]
+            };
+            labels[i] = id;
+            let comp = &mut components[id as usize - 1];
+            comp.area += 1;
+            comp.sum_row += gr as u64;
+            comp.sum_col += gc as u64;
+            comp.bbox[0] = comp.bbox[0].min(gr as u32);
+            comp.bbox[1] = comp.bbox[1].min(gc as u32);
+            comp.bbox[2] = comp.bbox[2].max(gr as u32);
+            comp.bbox[3] = comp.bbox[3].max(gc as u32);
+        }
+        if !keep_going(rows + r + 1, total_steps) {
+            return Ok(None);
+        }
+    }
+
+    Ok(Some(TileLabels { rect, labels, components }))
+}
+
+/// Uncancellable [`label_rect_while`].
+pub fn label_rect(mask: &Mask, rect: [usize; 4]) -> Result<TileLabels> {
+    Ok(label_rect_while(mask, rect, &mut |_, _| true)?
+        .expect("uncancellable labeling cannot be cancelled"))
+}
+
+/// Stitch tile-local labelings into one global label raster + object
+/// table.  The tiles must partition the `width × height` raster exactly
+/// (disjoint rects, full cover).  Seam-crossing fragments are joined by
+/// union-find over component keys; final object ids are assigned by
+/// ascending minimum key, which makes the output independent of the
+/// tiling — bit-identical to [`label_sequential`].
+pub fn merge_tile_labels(
+    width: usize,
+    height: usize,
+    tiles: &[TileLabels],
+) -> Result<(Labels, Vec<ObjectStats>, MergeStats)> {
+    let corrupt = |what: String| DifetError::Job(format!("label merge: {what}"));
+    // Working raster of dense component indices + 1 (0 = background);
+    // `u32::MAX` marks not-yet-covered cells so overlaps and gaps are
+    // both caught.  Dense indices keep the hot per-pixel passes below on
+    // plain array indexing — the only map in this function is the
+    // per-*component* duplicate-key check.
+    let mut idx1 = vec![u32::MAX; width * height];
+    let mut comps: Vec<TileComponent> = Vec::new();
+    let mut seen_keys: std::collections::BTreeSet<u64> = Default::default();
+
+    for (t, tile) in tiles.iter().enumerate() {
+        let [r0, r1, c0, c1] = tile.rect;
+        if r1 > height || c1 > width || r0 > r1 || c0 > c1 {
+            return Err(corrupt(format!("tile {t} rect {:?} out of bounds", tile.rect)));
+        }
+        let (rows, cols) = (r1 - r0, c1 - c0);
+        if tile.labels.len() != rows * cols {
+            return Err(corrupt(format!(
+                "tile {t} raster has {} cells, rect {:?} needs {}",
+                tile.labels.len(),
+                tile.rect,
+                rows * cols
+            )));
+        }
+        let base = comps.len() as u32;
+        for comp in &tile.components {
+            if !seen_keys.insert(comp.key) {
+                return Err(corrupt(format!("duplicate component key {}", comp.key)));
+            }
+            comps.push(comp.clone());
+        }
+        if comps.len() as u64 >= u32::MAX as u64 {
+            return Err(corrupt("component count overflows the index raster".into()));
+        }
+        for r in 0..rows {
+            for c in 0..cols {
+                let local = tile.labels[r * cols + c];
+                if local as usize > tile.components.len() {
+                    return Err(corrupt(format!(
+                        "tile {t} label {local} exceeds its {} components",
+                        tile.components.len()
+                    )));
+                }
+                let g = (r0 + r) * width + (c0 + c);
+                if idx1[g] != u32::MAX {
+                    return Err(corrupt(format!("tiles overlap at pixel {g}")));
+                }
+                idx1[g] = if local == 0 { 0 } else { base + local };
+            }
+        }
+    }
+    if idx1.contains(&u32::MAX) {
+        return Err(corrupt("tiles do not cover the raster".into()));
+    }
+
+    // Union across every remaining foreground adjacency.  Within-tile
+    // neighbors already share a component (tile-local CCL joined them),
+    // so only seam-crossing adjacencies perform real unions.
+    let mut uf = UnionFind::new();
+    for _ in 0..comps.len() {
+        uf.make();
+    }
+    let mut stats = MergeStats::default();
+    for row in 0..height {
+        for col in 0..width {
+            let k = idx1[row * width + col];
+            if k == 0 {
+                continue;
+            }
+            if col + 1 < width {
+                let kr = idx1[row * width + col + 1];
+                if kr != 0 && kr != k && uf.union(k - 1, kr - 1) {
+                    stats.seam_unions += 1;
+                }
+            }
+            if row + 1 < height {
+                let kd = idx1[(row + 1) * width + col];
+                if kd != 0 && kd != k && uf.union(k - 1, kd - 1) {
+                    stats.seam_unions += 1;
+                }
+            }
+        }
+    }
+
+    // Group fragments by root; order objects by their minimum key.
+    let mut by_root: BTreeMap<u32, Vec<u32>> = BTreeMap::new();
+    for idx in 0..comps.len() as u32 {
+        by_root.entry(uf.find(idx)).or_default().push(idx);
+    }
+    let mut ordered: Vec<(u64, Vec<u32>)> = by_root
+        .into_values()
+        .map(|members| {
+            // Components were inserted in per-tile key order, but tiles
+            // arrive in arbitrary order — take the true minimum.
+            let min_key = members.iter().map(|&i| comps[i as usize].key).min().unwrap();
+            (min_key, members)
+        })
+        .collect();
+    ordered.sort_unstable_by_key(|&(min_key, _)| min_key);
+
+    let mut objects = Vec::with_capacity(ordered.len());
+    let mut label_of_comp: Vec<u32> = vec![0; comps.len()];
+    for (label0, (min_key, members)) in ordered.into_iter().enumerate() {
+        let label = (label0 + 1) as u32;
+        stats.max_fragments = stats.max_fragments.max(members.len() as u64);
+        let mut obj = ObjectStats {
+            label,
+            key: min_key,
+            area: 0,
+            sum_row: 0,
+            sum_col: 0,
+            bbox: [u32::MAX, u32::MAX, 0, 0],
+        };
+        for &m in &members {
+            let c = &comps[m as usize];
+            obj.area += c.area;
+            obj.sum_row += c.sum_row;
+            obj.sum_col += c.sum_col;
+            obj.bbox[0] = obj.bbox[0].min(c.bbox[0]);
+            obj.bbox[1] = obj.bbox[1].min(c.bbox[1]);
+            obj.bbox[2] = obj.bbox[2].max(c.bbox[2]);
+            obj.bbox[3] = obj.bbox[3].max(c.bbox[3]);
+            label_of_comp[m as usize] = label;
+        }
+        objects.push(obj);
+    }
+
+    let data = idx1
+        .into_iter()
+        .map(|k| if k == 0 { 0 } else { label_of_comp[k as usize - 1] })
+        .collect();
+    Ok((Labels { width, height, data }, objects, stats))
+}
+
+/// Single-threaded whole-raster labeling — the baseline every tiling
+/// must reproduce bit for bit (the one-tile case of the same code path,
+/// exactly as `composite_sequential` relates to the mosaic job).
+pub fn label_sequential(mask: &Mask) -> (Labels, Vec<ObjectStats>) {
+    let tile = label_rect(mask, [0, mask.height, 0, mask.width])
+        .expect("full-raster rect is always valid");
+    let (labels, objects, _) = merge_tile_labels(mask.width, mask.height, &[tile])
+        .expect("single full-cover tile always merges");
+    (labels, objects)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn mask_of(rows: &[&str]) -> Mask {
+        Mask::from_art(rows)
+    }
+
+    #[test]
+    fn labels_two_objects_in_row_major_order() {
+        let m = mask_of(&[
+            ".##..",
+            ".##.#",
+            "....#",
+        ]);
+        let (labels, objects) = label_sequential(&m);
+        assert_eq!(objects.len(), 2);
+        // Object 1 starts at (0,1); object 2 at (1,4).
+        assert_eq!(labels.get(0, 1), 1);
+        assert_eq!(labels.get(1, 2), 1);
+        assert_eq!(labels.get(1, 4), 2);
+        assert_eq!(labels.get(2, 4), 2);
+        assert_eq!(objects[0].area, 4);
+        assert_eq!(objects[0].bbox, [0, 1, 1, 2]);
+        assert_eq!(objects[0].centroid(), (0.5, 1.5));
+        assert_eq!(objects[1].area, 2);
+        assert_eq!(objects[1].key, 9, "row 1, col 4 of a 5-wide raster");
+        assert_eq!(objects[1].start_pixel(5), (1, 4));
+    }
+
+    #[test]
+    fn diagonal_pixels_are_separate_objects() {
+        // 4-connectivity: a diagonal pair is two objects.
+        let m = mask_of(&["#.", ".#"]);
+        let (_, objects) = label_sequential(&m);
+        assert_eq!(objects.len(), 2);
+    }
+
+    #[test]
+    fn u_shape_joins_late_within_one_pass() {
+        // The two arms of a U get distinct provisional labels and only
+        // union at the bottom — the classic two-pass CCL stress case.
+        let m = mask_of(&[
+            "#.#",
+            "#.#",
+            "###",
+        ]);
+        let (labels, objects) = label_sequential(&m);
+        assert_eq!(objects.len(), 1);
+        assert_eq!(objects[0].area, 7);
+        assert!(labels.data.iter().all(|&l| l <= 1));
+    }
+
+    #[test]
+    fn empty_and_full_masks() {
+        let empty = Mask::new(4, 3);
+        let (labels, objects) = label_sequential(&empty);
+        assert!(objects.is_empty());
+        assert!(labels.data.iter().all(|&l| l == 0));
+
+        let full = mask_of(&["###", "###"]);
+        let (labels, objects) = label_sequential(&full);
+        assert_eq!(objects.len(), 1);
+        assert_eq!(objects[0].area, 6);
+        assert!(labels.data.iter().all(|&l| l == 1));
+    }
+
+    #[test]
+    fn blob_split_across_four_tiles_relabels_identically() {
+        let m = mask_of(&[
+            "..##..",
+            ".####.",
+            ".####.",
+            "..##..",
+        ]);
+        let (seq_labels, seq_objects) = label_sequential(&m);
+        // 2×2 tiling cuts the blob into four fragments.
+        let rects = [[0, 2, 0, 3], [0, 2, 3, 6], [2, 4, 0, 3], [2, 4, 3, 6]];
+        let tiles: Vec<TileLabels> =
+            rects.iter().map(|&r| label_rect(&m, r).unwrap()).collect();
+        let (labels, objects, stats) = merge_tile_labels(6, 4, &tiles).unwrap();
+        assert_eq!(labels, seq_labels);
+        assert_eq!(objects, seq_objects);
+        assert_eq!(stats.max_fragments, 4);
+        assert_eq!(stats.max_merge_residual(), 3);
+    }
+
+    #[test]
+    fn offset_rows_matches_in_place_band_labeling() {
+        let m = mask_of(&[
+            "#..#",
+            "##.#",
+            ".#..",
+            ".###",
+        ]);
+        // Label rows 2..4 in place…
+        let direct = label_rect(&m, [2, 4, 0, 4]).unwrap();
+        // …and as a detached band shifted back into place.
+        let band = Mask {
+            width: 4,
+            height: 2,
+            data: m.data[2 * 4..4 * 4].to_vec(),
+        };
+        let shifted = label_rect(&band, [0, 2, 0, 4]).unwrap().offset_rows(2);
+        assert_eq!(shifted, direct);
+    }
+
+    #[test]
+    fn cancellation_stops_mid_scan() {
+        let m = mask_of(&["###", "###", "###"]);
+        let mut steps = 0usize;
+        let out = label_rect_while(&m, [0, 3, 0, 3], &mut |done, total| {
+            steps = done;
+            assert_eq!(total, 6);
+            done < 2
+        })
+        .unwrap();
+        assert!(out.is_none());
+        assert_eq!(steps, 2);
+    }
+
+    #[test]
+    fn merge_rejects_gaps_overlaps_and_bad_tiles() {
+        let m = mask_of(&["##", "##"]);
+        let full = label_rect(&m, [0, 2, 0, 2]).unwrap();
+        let top = label_rect(&m, [0, 1, 0, 2]).unwrap();
+        // Gap: only the top band.
+        assert!(merge_tile_labels(2, 2, &[top.clone()]).is_err());
+        // Overlap: full + top.
+        assert!(merge_tile_labels(2, 2, &[full.clone(), top]).is_err());
+        // Out of bounds.
+        assert!(merge_tile_labels(1, 1, &[full.clone()]).is_err());
+        // Corrupt raster length.
+        let mut bad = full.clone();
+        bad.labels.pop();
+        assert!(merge_tile_labels(2, 2, &[bad]).is_err());
+        // Label pointing past the component table.
+        let mut bad = full;
+        bad.labels[0] = 99;
+        assert!(merge_tile_labels(2, 2, &[bad]).is_err());
+    }
+
+    #[test]
+    fn band_rects_cover_exactly() {
+        let rects = band_rects(10, 7, 3);
+        assert_eq!(rects, vec![[0, 3, 0, 10], [3, 6, 0, 10], [6, 7, 0, 10]]);
+        assert_eq!(band_rects(5, 4, 100), vec![[0, 4, 0, 5]]);
+        assert_eq!(band_rects(5, 0, 2), Vec::<[usize; 4]>::new());
+    }
+
+    /// The tentpole property: planted multi-tile blobs split across every
+    /// tiling are relabeled identically to the sequential baseline.
+    #[test]
+    fn prop_any_tiling_matches_sequential() {
+        check("label_merge_tiling", 60, |g| {
+            let width = g.usize_in(1, 24);
+            let height = g.usize_in(1, 24);
+            let mut m = Mask::new(width, height);
+            // Plant a few rectangles + salt noise so blobs routinely span
+            // several tiles and funnel through the union-find merge.
+            for _ in 0..g.usize_in(0, 5) {
+                let r0 = g.usize_in(0, height - 1);
+                let c0 = g.usize_in(0, width - 1);
+                let r1 = g.usize_in(r0, (r0 + 6).min(height - 1));
+                let c1 = g.usize_in(c0, (c0 + 6).min(width - 1));
+                for r in r0..=r1 {
+                    for c in c0..=c1 {
+                        m.set(r, c, true);
+                    }
+                }
+            }
+            for i in 0..m.data.len() {
+                if g.bool(0.15) {
+                    m.data[i] = 1;
+                }
+            }
+
+            // Random grid tiling: sorted distinct row/col cuts.
+            let mut row_cuts = vec![0, height];
+            for _ in 0..g.usize_in(0, 3) {
+                row_cuts.push(g.usize_in(0, height));
+            }
+            row_cuts.sort_unstable();
+            row_cuts.dedup();
+            let mut col_cuts = vec![0, width];
+            for _ in 0..g.usize_in(0, 3) {
+                col_cuts.push(g.usize_in(0, width));
+            }
+            col_cuts.sort_unstable();
+            col_cuts.dedup();
+
+            let mut tiles = Vec::new();
+            for rw in row_cuts.windows(2) {
+                for cw in col_cuts.windows(2) {
+                    tiles.push(
+                        label_rect(&m, [rw[0], rw[1], cw[0], cw[1]])
+                            .map_err(|e| e.to_string())?,
+                    );
+                }
+            }
+            // Merge must not depend on tile arrival order.
+            g.shuffle(&mut tiles);
+
+            let (seq_labels, seq_objects) = label_sequential(&m);
+            let (labels, objects, _) = merge_tile_labels(width, height, &tiles)
+                .map_err(|e| e.to_string())?;
+            crate::prop_assert!(labels == seq_labels, "label raster diverged from sequential");
+            crate::prop_assert!(objects == seq_objects, "object table diverged from sequential");
+            let total: u64 = objects.iter().map(|o| o.area).sum();
+            crate::prop_assert!(
+                total == m.foreground(),
+                "object areas {total} != foreground {}",
+                m.foreground()
+            );
+            Ok(())
+        });
+    }
+}

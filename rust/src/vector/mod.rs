@@ -1,0 +1,35 @@
+//! Object extraction & vectorization: raster mosaic → vector objects.
+//!
+//! The stage the paper's companion work builds after mosaicking
+//! ("A MapReduce based Big-data Framework for Object Extraction from
+//! Mosaic Satellite Images", 1808.08528, and the HIPI vectorization
+//! paper 1809.00235): the composited mosaic — or any single scene — is
+//! segmented into a binary mask ([`segment`]), connected components are
+//! labeled into global objects ([`label`]), and each object's outer
+//! boundary is traced and simplified into an attributed polygon
+//! ([`trace`]), emitted as a GeoJSON-style document.
+//!
+//! Labeling is the distributed part: tile-local CCL runs as `LabelTile`
+//! work units on the generic coordinator
+//! ([`crate::coordinator::run_vector_job`] — the FOURTH `WorkItem`
+//! shape, sharing locality/retries/speculation), and a union-find merge
+//! over tile seams stitches tile-local labels into global object ids.
+//! Canonical min-pixel component keys make the merged output
+//! bit-identical to [`label_sequential`] under any tiling — asserted
+//! end to end by `rust/tests/vectorize_e2e.rs`.
+//!
+//! The driver-facing flow lives in [`crate::pipeline::vectorize`]:
+//! ingest → stitch → segment → label → trace.
+
+pub mod label;
+pub mod segment;
+pub mod trace;
+
+pub use label::{
+    band_rects, label_rect, label_rect_while, label_sequential, merge_tile_labels, Labels,
+    MergeStats, ObjectStats, TileComponent, TileLabels,
+};
+pub use segment::{band_mask, threshold_mask, Mask};
+pub use trace::{
+    extract_objects, geojson, ring_length, simplify_ring, trace_boundary, VectorObject,
+};

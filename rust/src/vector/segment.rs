@@ -1,0 +1,141 @@
+//! Segmentation: raster → binary foreground mask.
+//!
+//! The object-extraction papers this stage reproduces (Eken & Sayar's
+//! vectorization and object-extraction follow-ups) start from a simple
+//! radiometric segmentation of the mosaic: pixels above a brightness
+//! threshold (buildings, roads, bare soil against dark fields/water in
+//! their LandSat material) become foreground, everything else background.
+//! Both entry points are pure per-pixel functions of the input raster, so
+//! segmentation is trivially deterministic — the determinism story of the
+//! whole vector pipeline starts here.
+//!
+//! Transparent pixels (alpha 0) are always background: the composited
+//! mosaic leaves canvas corners no scene covers transparent, and those
+//! must not become spurious "objects".
+
+use crate::imagery::Rgba8Image;
+
+/// Binary raster: 1 = foreground, 0 = background (row-major).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Mask {
+    pub width: usize,
+    pub height: usize,
+    pub data: Vec<u8>,
+}
+
+impl Mask {
+    /// All-background mask of the given size.
+    pub fn new(width: usize, height: usize) -> Self {
+        Mask { width, height, data: vec![0; width * height] }
+    }
+
+    #[inline]
+    pub fn idx(&self, row: usize, col: usize) -> usize {
+        row * self.width + col
+    }
+
+    #[inline]
+    pub fn get(&self, row: usize, col: usize) -> bool {
+        self.data[self.idx(row, col)] != 0
+    }
+
+    #[inline]
+    pub fn set(&mut self, row: usize, col: usize, fg: bool) {
+        let i = self.idx(row, col);
+        self.data[i] = fg as u8;
+    }
+
+    /// Number of foreground pixels.
+    pub fn foreground(&self) -> u64 {
+        self.data.iter().map(|&b| b as u64).sum()
+    }
+}
+
+/// Test fixture: parse an ASCII-art picture (`#` = foreground) — shared
+/// by the labeling and tracing test suites.
+#[cfg(test)]
+impl Mask {
+    pub(crate) fn from_art(rows: &[&str]) -> Mask {
+        let height = rows.len();
+        let width = rows[0].len();
+        let mut m = Mask::new(width, height);
+        for (r, line) in rows.iter().enumerate() {
+            for (c, ch) in line.bytes().enumerate() {
+                m.set(r, c, ch == b'#');
+            }
+        }
+        m
+    }
+}
+
+/// Threshold segmentation: foreground where BT.601 luma (normalized to
+/// [0, 1]) is ≥ `threshold` and the pixel is opaque.
+pub fn threshold_mask(img: &Rgba8Image, threshold: f32) -> Mask {
+    band_mask(img, threshold, f32::INFINITY)
+}
+
+/// Band segmentation: foreground where `lo ≤ luma < hi` and the pixel is
+/// opaque.  [`threshold_mask`] is the `hi = ∞` case.
+pub fn band_mask(img: &Rgba8Image, lo: f32, hi: f32) -> Mask {
+    let mut mask = Mask::new(img.width, img.height);
+    for row in 0..img.height {
+        for col in 0..img.width {
+            let opaque = img.get(row, col)[3] != 0;
+            let y = img.luma01(row, col);
+            mask.set(row, col, opaque && (lo..hi).contains(&y));
+        }
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gray(v: u8) -> [u8; 4] {
+        [v, v, v, 255]
+    }
+
+    #[test]
+    fn threshold_splits_bright_from_dark() {
+        let mut img = Rgba8Image::new(3, 1);
+        img.put(0, 0, gray(10));
+        img.put(0, 1, gray(200));
+        img.put(0, 2, gray(255));
+        let m = threshold_mask(&img, 0.5);
+        assert_eq!(m.data, vec![0, 1, 1]);
+        assert_eq!(m.foreground(), 2);
+    }
+
+    #[test]
+    fn transparent_pixels_never_foreground() {
+        let mut img = Rgba8Image::new(2, 1);
+        img.put(0, 0, [255, 255, 255, 255]);
+        img.put(0, 1, [255, 255, 255, 0]); // bright but transparent
+        let m = threshold_mask(&img, 0.5);
+        assert_eq!(m.data, vec![1, 0]);
+    }
+
+    #[test]
+    fn band_selects_a_luma_slice() {
+        let mut img = Rgba8Image::new(4, 1);
+        for (c, v) in [0u8, 90, 160, 250].into_iter().enumerate() {
+            img.put(0, c, gray(v));
+        }
+        let m = band_mask(&img, 0.25, 0.75);
+        assert_eq!(m.data, vec![0, 1, 1, 0]);
+    }
+
+    #[test]
+    fn threshold_zero_keeps_every_opaque_pixel() {
+        let img = Rgba8Image::new(3, 2); // all [0,0,0,0]: transparent
+        assert_eq!(threshold_mask(&img, 0.0).foreground(), 0);
+        let mut img = Rgba8Image::new(3, 2);
+        for r in 0..2 {
+            for c in 0..3 {
+                img.put(r, c, gray(0));
+            }
+        }
+        assert_eq!(threshold_mask(&img, 0.0).foreground(), 6);
+    }
+}

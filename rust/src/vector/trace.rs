@@ -1,0 +1,494 @@
+//! Raster → vector: boundary tracing, simplification, GeoJSON.
+//!
+//! Per labeled object: the outer boundary is walked with Moore-neighbor
+//! tracing (Jacob's stopping criterion) starting from the object's
+//! canonical first pixel, then simplified with Douglas–Peucker.  Both
+//! steps are pure functions of the global label raster with
+//! deterministic tie-breaking (first-index wins), so the polygons
+//! inherit the labeling stage's bit-exact reproducibility.
+//!
+//! Simplification guarantees the test suite leans on:
+//! * collinear chains collapse at any ε ≥ 0 (distances are compared
+//!   strictly, so zero-deviation vertices always drop);
+//! * the kept vertex set only shrinks as ε grows (the split vertex is
+//!   ε-independent, so larger ε prunes subtrees of the same recursion).
+//!
+//! Objects are emitted as a GeoJSON-style `FeatureCollection` via
+//! [`crate::util::json`] — coordinates are `[col, row]` pixel positions
+//! ([x, y] order), one outer ring per object (interior holes are not
+//! traced; the follow-up papers' building/field footprints are solid).
+//! Degenerate objects fall back to `LineString`/`Point` geometries so
+//! every emitted `Polygon` ring is RFC 7946-valid.
+
+use crate::util::json::Json;
+
+use super::label::{Labels, ObjectStats};
+
+/// One vectorized object: simplified outer ring + exact attributes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VectorObject {
+    /// Global object id (the label raster value).
+    pub id: u32,
+    /// Pixel count (from labeling, not from the polygon).
+    pub area: u64,
+    /// Length of the full (unsimplified) traced boundary, in pixels.
+    pub perimeter: f64,
+    /// Exact centroid (row, col).
+    pub centroid: (f64, f64),
+    /// Inclusive bounds: [min_row, min_col, max_row, max_col].
+    pub bbox: [u32; 4],
+    /// Simplified closed ring of (row, col) pixel positions; the first
+    /// vertex is not repeated at the end.
+    pub polygon: Vec<(u32, u32)>,
+}
+
+/// Moore neighborhood, clockwise from north.
+const DIRS: [(i32, i32); 8] = [
+    (-1, 0),
+    (-1, 1),
+    (0, 1),
+    (1, 1),
+    (1, 0),
+    (1, -1),
+    (0, -1),
+    (-1, -1),
+];
+
+fn dir_index(dr: i32, dc: i32) -> usize {
+    DIRS.iter()
+        .position(|&d| d == (dr, dc))
+        .expect("consecutive Moore neighbors are always adjacent")
+}
+
+/// Trace the outer boundary of `label`'s object with Moore-neighbor
+/// tracing.  `start` must be the object's first row-major pixel (its
+/// [`ObjectStats::start_pixel`]) — minimality guarantees the west
+/// neighbor is background, the canonical trace entry.  Returns the
+/// closed boundary as (row, col) pixels, first vertex not repeated.
+pub fn trace_boundary(labels: &Labels, label: u32, start: (usize, usize)) -> Vec<(u32, u32)> {
+    let (h, w) = (labels.height as i32, labels.width as i32);
+    let is_fg = |r: i32, c: i32| {
+        (0..h).contains(&r) && (0..w).contains(&c) && labels.get(r as usize, c as usize) == label
+    };
+    debug_assert!(is_fg(start.0 as i32, start.1 as i32), "trace start off the object");
+
+    let start_i = (start.0 as i32, start.1 as i32);
+    let mut contour: Vec<(u32, u32)> = vec![(start.0 as u32, start.1 as u32)];
+    let mut cur = start_i;
+    let mut backtrack = 6; // west: background by start minimality
+    let mut first_move: Option<usize> = None;
+    // Defensive bound; the Moore cycle of a finite region always
+    // terminates well before visiting each pixel 4 times.
+    let cap = 4 * labels.data.len() + 8;
+
+    while contour.len() <= cap {
+        // First foreground neighbor, clockwise after the backtrack.
+        let mut found = None;
+        for k in 1..=8 {
+            let idx = (backtrack + k) % 8;
+            let (dr, dc) = DIRS[idx];
+            if is_fg(cur.0 + dr, cur.1 + dc) {
+                found = Some((idx, k));
+                break;
+            }
+        }
+        let Some((idx, k)) = found else {
+            break; // isolated pixel: the contour is just the start
+        };
+        // Jacob's criterion: the cycle is complete when we are about to
+        // repeat the initial move out of the start pixel.
+        if cur == start_i {
+            match first_move {
+                Some(d) if d == idx => break,
+                Some(_) => {}
+                None => first_move = Some(idx),
+            }
+        }
+        let prev_idx = (backtrack + k - 1) % 8;
+        let b = (cur.0 + DIRS[prev_idx].0, cur.1 + DIRS[prev_idx].1);
+        let next = (cur.0 + DIRS[idx].0, cur.1 + DIRS[idx].1);
+        contour.push((next.0 as u32, next.1 as u32));
+        backtrack = dir_index(b.0 - next.0, b.1 - next.1);
+        cur = next;
+    }
+    // Terminating at the start leaves it duplicated at the tail.
+    if contour.len() > 1 && contour.last() == contour.first() {
+        contour.pop();
+    }
+    contour
+}
+
+fn dist(a: (u32, u32), b: (u32, u32)) -> f64 {
+    (a.0 as f64 - b.0 as f64).hypot(a.1 as f64 - b.1 as f64)
+}
+
+/// Distance from `p` to the infinite line through `a` and `b` (distance
+/// to the point when they coincide) — the classic Douglas–Peucker
+/// deviation measure.
+fn line_distance(p: (u32, u32), a: (u32, u32), b: (u32, u32)) -> f64 {
+    let (ar, ac) = (a.0 as f64, a.1 as f64);
+    let (dr, dc) = (b.0 as f64 - ar, b.1 as f64 - ac);
+    let len = dr.hypot(dc);
+    if len == 0.0 {
+        return dist(p, a);
+    }
+    ((p.0 as f64 - ar) * dc - (p.1 as f64 - ac) * dr).abs() / len
+}
+
+/// Douglas–Peucker over an open polyline (endpoints always kept).  The
+/// split vertex is the first index attaining the maximum deviation, so
+/// the recursion tree — and with it ε-monotonicity — is deterministic.
+fn dp_open(points: &[(u32, u32)], epsilon: f64) -> Vec<(u32, u32)> {
+    if points.len() <= 2 {
+        return points.to_vec();
+    }
+    let mut keep = vec![false; points.len()];
+    keep[0] = true;
+    keep[points.len() - 1] = true;
+    let mut stack = vec![(0usize, points.len() - 1)];
+    while let Some((lo, hi)) = stack.pop() {
+        if hi <= lo + 1 {
+            continue;
+        }
+        let mut best = lo + 1;
+        let mut dmax = -1.0f64;
+        for (i, &p) in points.iter().enumerate().take(hi).skip(lo + 1) {
+            let d = line_distance(p, points[lo], points[hi]);
+            if d > dmax {
+                dmax = d;
+                best = i;
+            }
+        }
+        if dmax > epsilon {
+            keep[best] = true;
+            stack.push((lo, best));
+            stack.push((best, hi));
+        }
+    }
+    points
+        .iter()
+        .zip(&keep)
+        .filter_map(|(&p, &k)| k.then_some(p))
+        .collect()
+}
+
+/// Simplify a closed ring (first vertex not repeated): anchor at vertex
+/// 0 and the vertex farthest from it (first index wins ties — both
+/// anchors are ε-independent), Douglas–Peucker each half, and rejoin.
+pub fn simplify_ring(points: &[(u32, u32)], epsilon: f64) -> Vec<(u32, u32)> {
+    if points.len() <= 2 {
+        return points.to_vec();
+    }
+    let mut far = 0;
+    let mut dmax = 0.0f64;
+    for (i, &p) in points.iter().enumerate().skip(1) {
+        let d = dist(p, points[0]);
+        if d > dmax {
+            dmax = d;
+            far = i;
+        }
+    }
+    if far == 0 {
+        return vec![points[0]]; // degenerate: every vertex coincides
+    }
+    let chain_a = &points[..=far];
+    let mut chain_b: Vec<(u32, u32)> = points[far..].to_vec();
+    chain_b.push(points[0]);
+    let sa = dp_open(chain_a, epsilon);
+    let sb = dp_open(&chain_b, epsilon);
+    // sa ends at the far vertex; sb starts there and ends back at
+    // vertex 0 — drop both duplicated joints.
+    let mut out = sa;
+    out.extend_from_slice(&sb[1..sb.len() - 1]);
+    out
+}
+
+/// Length of a closed ring (wraps last → first; 0 for a single vertex).
+pub fn ring_length(points: &[(u32, u32)]) -> f64 {
+    if points.len() < 2 {
+        return 0.0;
+    }
+    let mut len = 0.0;
+    for w in points.windows(2) {
+        len += dist(w[0], w[1]);
+    }
+    len + dist(points[points.len() - 1], points[0])
+}
+
+/// Trace + simplify every object with `area ≥ min_area` into a
+/// [`VectorObject`], in ascending object-id order.
+pub fn extract_objects(
+    labels: &Labels,
+    stats: &[ObjectStats],
+    min_area: u64,
+    epsilon: f64,
+) -> Vec<VectorObject> {
+    stats
+        .iter()
+        .filter(|s| s.area >= min_area)
+        .map(|s| {
+            let contour = trace_boundary(labels, s.label, s.start_pixel(labels.width));
+            VectorObject {
+                id: s.label,
+                area: s.area,
+                perimeter: ring_length(&contour),
+                centroid: s.centroid(),
+                bbox: s.bbox,
+                polygon: simplify_ring(&contour, epsilon),
+            }
+        })
+        .collect()
+}
+
+/// GeoJSON-style `FeatureCollection` for the extracted objects.
+/// Coordinates are `[col, row]` ([x, y]).  Rings of 3+ vertices become
+/// `Polygon`s (closed by repeating the first vertex, so every linear
+/// ring has the 4+ positions RFC 7946 requires); degenerate objects —
+/// 1-pixel-wide bars that simplify to 2 vertices, single pixels — are
+/// emitted as `LineString`/`Point` instead of an invalid ring.
+pub fn geojson(objects: &[VectorObject]) -> Json {
+    let features = objects
+        .iter()
+        .map(|o| {
+            let mut ring: Vec<Json> = o
+                .polygon
+                .iter()
+                .map(|&(r, c)| Json::Arr(vec![Json::Num(c as f64), Json::Num(r as f64)]))
+                .collect();
+            let mut geometry = std::collections::BTreeMap::new();
+            match ring.len() {
+                1 => {
+                    geometry.insert("type".to_string(), Json::Str("Point".to_string()));
+                    geometry.insert("coordinates".to_string(), ring.pop().unwrap());
+                }
+                2 => {
+                    geometry.insert("type".to_string(), Json::Str("LineString".to_string()));
+                    geometry.insert("coordinates".to_string(), Json::Arr(ring));
+                }
+                _ => {
+                    if let Some(first) = ring.first().cloned() {
+                        ring.push(first);
+                    }
+                    geometry.insert("type".to_string(), Json::Str("Polygon".to_string()));
+                    geometry
+                        .insert("coordinates".to_string(), Json::Arr(vec![Json::Arr(ring)]));
+                }
+            }
+            let mut props = std::collections::BTreeMap::new();
+            props.insert("id".to_string(), Json::Num(o.id as f64));
+            props.insert("area_px".to_string(), Json::Num(o.area as f64));
+            props.insert("perimeter_px".to_string(), Json::Num(o.perimeter));
+            props.insert(
+                "centroid".to_string(),
+                Json::Arr(vec![Json::Num(o.centroid.0), Json::Num(o.centroid.1)]),
+            );
+            props.insert(
+                "bbox".to_string(),
+                Json::Arr(o.bbox.iter().map(|&v| Json::Num(v as f64)).collect()),
+            );
+            let mut feature = std::collections::BTreeMap::new();
+            feature.insert("type".to_string(), Json::Str("Feature".to_string()));
+            feature.insert("geometry".to_string(), Json::Obj(geometry));
+            feature.insert("properties".to_string(), Json::Obj(props));
+            Json::Obj(feature)
+        })
+        .collect();
+    let mut root = std::collections::BTreeMap::new();
+    root.insert("type".to_string(), Json::Str("FeatureCollection".to_string()));
+    root.insert("features".to_string(), Json::Arr(features));
+    Json::Obj(root)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::vector::label::label_sequential;
+    use crate::vector::segment::Mask;
+
+    fn traced(rows: &[&str]) -> (Labels, Vec<ObjectStats>) {
+        label_sequential(&Mask::from_art(rows))
+    }
+
+    #[test]
+    fn square_simplifies_to_its_four_corners() {
+        let (labels, stats) = traced(&["###", "###", "###"]);
+        let contour = trace_boundary(&labels, 1, stats[0].start_pixel(3));
+        assert_eq!(contour.len(), 8, "3×3 square boundary has 8 pixels");
+        assert_eq!(ring_length(&contour), 8.0);
+        let ring = simplify_ring(&contour, 0.0);
+        assert_eq!(ring, vec![(0, 0), (0, 2), (2, 2), (2, 0)]);
+    }
+
+    #[test]
+    fn single_pixel_and_bar_contours() {
+        let (labels, stats) = traced(&["#"]);
+        assert_eq!(trace_boundary(&labels, 1, stats[0].start_pixel(1)), vec![(0, 0)]);
+
+        // A 1×5 bar: trace walks out and back; ε = 0 collapses the
+        // collinear chain to its two endpoints.
+        let (labels, stats) = traced(&["#####"]);
+        let contour = trace_boundary(&labels, 1, stats[0].start_pixel(5));
+        assert_eq!(contour[0], (0, 0));
+        assert!(contour.contains(&(0, 4)));
+        assert_eq!(simplify_ring(&contour, 0.0), vec![(0, 0), (0, 4)]);
+    }
+
+    #[test]
+    fn contour_is_closed_and_on_object() {
+        let (labels, stats) = traced(&[
+            ".##..",
+            "####.",
+            ".###.",
+            "..#..",
+        ]);
+        let contour = trace_boundary(&labels, 1, stats[0].start_pixel(5));
+        for &(r, c) in &contour {
+            assert_eq!(labels.get(r as usize, c as usize), 1, "({r},{c}) off the object");
+        }
+        for i in 0..contour.len() {
+            let a = contour[i];
+            let b = contour[(i + 1) % contour.len()];
+            let (dr, dc) = (a.0.abs_diff(b.0), a.1.abs_diff(b.1));
+            assert!(dr <= 1 && dc <= 1 && (dr, dc) != (0, 0), "gap {a:?}→{b:?}");
+        }
+    }
+
+    #[test]
+    fn epsilon_zero_keeps_every_true_corner() {
+        // An L: six corners survive ε = 0.
+        let (labels, stats) = traced(&[
+            "#...",
+            "#...",
+            "####",
+        ]);
+        let contour = trace_boundary(&labels, 1, stats[0].start_pixel(4));
+        let ring = simplify_ring(&contour, 0.0);
+        for corner in [(0, 0), (2, 0), (2, 3)] {
+            assert!(ring.contains(&corner), "corner {corner:?} dropped: {ring:?}");
+        }
+        // Large ε degrades gracefully (anchors always survive).
+        let coarse = simplify_ring(&contour, 100.0);
+        assert_eq!(coarse.len(), 2);
+    }
+
+    #[test]
+    fn geojson_document_shape() {
+        let (labels, stats) = traced(&["##", "##"]);
+        let objects = extract_objects(&labels, &stats, 1, 0.0);
+        assert_eq!(objects.len(), 1);
+        let doc = geojson(&objects);
+        assert_eq!(doc.get("type").unwrap().as_str(), Some("FeatureCollection"));
+        let features = doc.get("features").unwrap().as_arr().unwrap();
+        assert_eq!(features.len(), 1);
+        let f = &features[0];
+        assert_eq!(f.get("type").unwrap().as_str(), Some("Feature"));
+        let geom = f.get("geometry").unwrap();
+        assert_eq!(geom.get("type").unwrap().as_str(), Some("Polygon"));
+        let ring = geom.get("coordinates").unwrap().as_arr().unwrap()[0]
+            .as_arr()
+            .unwrap();
+        assert!(ring.len() >= 4, "closed ring repeats its first vertex");
+        assert_eq!(ring.first(), ring.last());
+        assert_eq!(f.get("properties").unwrap().get("area_px").unwrap().as_u64(), Some(4));
+        // The document round-trips through the JSON parser.
+        let text = doc.to_string();
+        assert_eq!(crate::util::json::parse(&text).unwrap(), doc);
+    }
+
+    #[test]
+    fn degenerate_objects_fall_back_to_valid_geometries() {
+        // A 1×5 bar simplifies to 2 vertices → LineString, and a lone
+        // pixel → Point; neither may emit an RFC-invalid short ring.
+        let (labels, stats) = traced(&["#####", ".....", "..#.."]);
+        let objects = extract_objects(&labels, &stats, 1, 0.0);
+        let doc = geojson(&objects);
+        let features = doc.get("features").unwrap().as_arr().unwrap();
+        let geom_type = |i: usize| {
+            features[i]
+                .get("geometry")
+                .unwrap()
+                .get("type")
+                .unwrap()
+                .as_str()
+                .unwrap()
+                .to_string()
+        };
+        assert_eq!(geom_type(0), "LineString");
+        assert_eq!(geom_type(1), "Point");
+        // Every Polygon emitted anywhere has a closed ring of ≥ 4
+        // positions (checked here on a real one for contrast).
+        let (labels, stats) = traced(&["###", "###", "###"]);
+        let square = geojson(&extract_objects(&labels, &stats, 1, 0.0));
+        let ring = square.get("features").unwrap().as_arr().unwrap()[0]
+            .get("geometry")
+            .unwrap()
+            .get("coordinates")
+            .unwrap()
+            .as_arr()
+            .unwrap()[0]
+            .as_arr()
+            .unwrap();
+        assert!(ring.len() >= 4);
+        assert_eq!(ring.first(), ring.last());
+    }
+
+    #[test]
+    fn min_area_filters_small_objects() {
+        let (labels, stats) = traced(&["#.###", ".....", "#...."]);
+        assert_eq!(stats.len(), 3);
+        let objects = extract_objects(&labels, &stats, 2, 0.0);
+        assert_eq!(objects.len(), 1);
+        assert_eq!(objects[0].area, 3);
+    }
+
+    /// Douglas–Peucker invariant: vertex count is monotonically
+    /// non-increasing in ε, on rings traced from random blobs.
+    #[test]
+    fn prop_simplification_monotone_in_epsilon() {
+        check("dp_monotone", 60, |g| {
+            let width = g.usize_in(2, 20);
+            let height = g.usize_in(2, 20);
+            let mut m = Mask::new(width, height);
+            let r0 = g.usize_in(0, height - 1);
+            let c0 = g.usize_in(0, width - 1);
+            let r1 = g.usize_in(r0, height - 1);
+            let c1 = g.usize_in(c0, width - 1);
+            for r in r0..=r1 {
+                for c in c0..=c1 {
+                    m.set(r, c, true);
+                }
+            }
+            for i in 0..m.data.len() {
+                if g.bool(0.2) {
+                    m.data[i] = 1;
+                }
+            }
+            let (labels, stats) = label_sequential(&m);
+            for s in &stats {
+                let contour = trace_boundary(&labels, s.label, s.start_pixel(width));
+                let mut prev = usize::MAX;
+                for eps in [0.0, 0.25, 0.5, 1.0, 2.0, 4.0, 100.0] {
+                    let ring = simplify_ring(&contour, eps);
+                    crate::prop_assert!(
+                        ring.len() <= prev,
+                        "object {}: ε={eps} grew the ring {} → {}",
+                        s.label,
+                        prev,
+                        ring.len()
+                    );
+                    crate::prop_assert!(!ring.is_empty(), "empty ring at ε={eps}");
+                    for &(r, c) in &ring {
+                        crate::prop_assert!(
+                            labels.get(r as usize, c as usize) == s.label,
+                            "ring vertex ({r},{c}) off object {}",
+                            s.label
+                        );
+                    }
+                    prev = ring.len();
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,208 @@
+//! Deterministic end-to-end vectorization test: the distributed
+//! band-tile labeling job (the fourth `WorkItem` shape) must produce a
+//! label raster, object table and traced polygons byte-identical to the
+//! sequential `label_sequential` baseline — at 1, 2 and 4 nodes, and
+//! across injected retries and speculative execution — and the full
+//! five-stage pipeline (ingest → stitch → segment → label → trace)
+//! must hold the same equality over a real composited mosaic.
+
+use difet::config::Config;
+use difet::coordinator::driver::JobHooks;
+use difet::dfs::Dfs;
+use difet::imagery::Rgba8Image;
+use difet::metrics::Registry;
+use difet::pipeline::{
+    run_vector_stage_on, run_vectorize, RegistrationRequest, StitchRequest, VectorOptions,
+    VectorStage, VectorizeRequest,
+};
+use difet::util::rng::Pcg32;
+use difet::vector::{extract_objects, label_sequential, threshold_mask};
+
+fn test_cfg(nodes: usize) -> Config {
+    let mut cfg = Config::new();
+    cfg.scene.width = 300;
+    cfg.scene.height = 300;
+    cfg.cluster.nodes = nodes;
+    cfg.cluster.slots_per_node = 2;
+    cfg.cluster.job_startup = 0.5;
+    cfg.storage.block_size = 1 << 20;
+    cfg.artifacts_dir = "/nonexistent".into(); // hermetic: native executor
+    assert!(cfg.scheduler.speculation, "speculation must be on for this suite");
+    cfg
+}
+
+/// A synthetic 120×90 raster: bright blobs on a dark background, laid
+/// out so several objects cross the 16-row band boundaries (the
+/// union-find merge must do real cross-tile stitching), plus
+/// deterministic bright speckles for object-count variety.
+fn synthetic_raster() -> Rgba8Image {
+    let (w, h) = (120usize, 90usize);
+    let mut img = Rgba8Image::new(w, h);
+    for r in 0..h {
+        for c in 0..w {
+            img.put(r, c, [30, 40, 35, 255]); // dark background
+        }
+    }
+    let mut paint = |r0: usize, r1: usize, c0: usize, c1: usize| {
+        for r in r0..r1 {
+            for c in c0..c1 {
+                img.put(r, c, [220, 210, 200, 255]);
+            }
+        }
+    };
+    paint(5, 20, 10, 40); // crosses the band seam at row 16
+    paint(30, 70, 60, 75); // crosses the seams at rows 32, 48 and 64
+    paint(0, h, 100, 105); // full-height bar: a fragment in every band
+    let mut rng = Pcg32::new(0x5EC7, 0xD1F);
+    for _ in 0..40 {
+        let r = rng.next_bounded(h as u32) as usize;
+        let c = rng.next_bounded(w as u32) as usize;
+        img.put(r, c, [230, 230, 230, 255]);
+    }
+    img
+}
+
+fn stage_opts() -> VectorOptions {
+    VectorOptions {
+        threshold: 0.5,
+        min_area: 4,
+        epsilon: 1.0,
+        band_rows: 16, // 90 rows → 6 band work units
+    }
+}
+
+fn run_stage(nodes: usize, registry: &Registry, hooks: &JobHooks) -> VectorStage {
+    let cfg = test_cfg(nodes);
+    let dfs = Dfs::new(cfg.cluster.nodes, cfg.storage.block_size, cfg.cluster.replication);
+    run_vector_stage_on(&cfg, &dfs, &synthetic_raster(), &stage_opts(), registry, hooks)
+        .expect("vector stage")
+}
+
+#[test]
+fn distributed_labeling_equals_sequential_at_1_2_4_nodes() {
+    let opts = stage_opts();
+    let mask = threshold_mask(&synthetic_raster(), opts.threshold);
+    let (base_labels, base_stats) = label_sequential(&mask);
+    let base_objects = extract_objects(&base_labels, &base_stats, opts.min_area, opts.epsilon);
+    assert!(base_objects.len() >= 3, "test raster should yield several objects");
+
+    for nodes in [1usize, 2, 4] {
+        let stage = run_stage(nodes, &Registry::new(), &JobHooks::default());
+        assert_eq!(stage.report.nodes, nodes);
+        assert_eq!(stage.report.tile_count, 6, "90 rows / 16-row bands");
+        assert_eq!(
+            stage.labels, base_labels,
+            "{nodes}-node label raster diverged from the sequential baseline"
+        );
+        assert_eq!(
+            stage.stats, base_stats,
+            "{nodes}-node object table diverged from the sequential baseline"
+        );
+        assert_eq!(
+            stage.objects, base_objects,
+            "{nodes}-node polygons diverged from the sequential baseline"
+        );
+        // The full-height bar fragments in all 6 bands: the merge must
+        // have done real cross-seam stitching.
+        assert!(
+            stage.report.max_merge_residual >= 5,
+            "expected ≥ 5 merged fragments, got residual {}",
+            stage.report.max_merge_residual
+        );
+        assert!(stage.report.seam_unions >= 5);
+        assert_eq!(stage.report.object_count, base_stats.len());
+        assert_eq!(stage.report.foreground_px, mask.foreground());
+    }
+}
+
+#[test]
+fn retries_and_speculation_do_not_change_the_objects() {
+    let baseline = run_stage(2, &Registry::new(), &JobHooks::default());
+    // First attempt of every band dies (a crashed worker); speculation
+    // stays enabled, so twins race the retried attempts.
+    let hooks = JobHooks {
+        fail: Some(Box::new(|_tile, attempt| attempt == 0)),
+    };
+    let stage = run_stage(2, &Registry::new(), &hooks);
+    assert!(
+        stage.report.counter("retries") >= stage.report.counter("tiles"),
+        "every band should retry at least once"
+    );
+    assert_eq!(stage.labels, baseline.labels, "retried labels diverged");
+    assert_eq!(stage.stats, baseline.stats, "retried object table diverged");
+    assert_eq!(stage.objects, baseline.objects, "retried polygons diverged");
+}
+
+#[test]
+fn registry_carries_vector_diagnostics() {
+    let registry = Registry::new();
+    let stage = run_stage(2, &registry, &JobHooks::default());
+    assert_eq!(
+        registry.counter("label_tiles").get() as usize,
+        stage.report.tile_count
+    );
+    assert_eq!(
+        registry.counter("objects_extracted").get() as usize,
+        stage.report.object_count
+    );
+    assert_eq!(
+        registry.gauge("vector_max_merge_residual").get(),
+        stage.report.max_merge_residual as f64
+    );
+    // Losing speculative twins also observe the latency histogram, so
+    // this is a lower bound, not an equality.
+    assert!(
+        registry.histogram("label_tile_latency").snapshot().n as usize
+            >= stage.report.tile_count
+    );
+}
+
+#[test]
+fn five_stage_pipeline_holds_the_equality_over_a_real_mosaic() {
+    let cfg = test_cfg(2);
+    let req = VectorizeRequest {
+        stitch: StitchRequest {
+            reg: RegistrationRequest {
+                num_scenes: 3,
+                max_offset: 48,
+                force_native: true,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        opts: VectorOptions {
+            band_rows: 64, // a ~348²-px mosaic → several bands
+            ..Default::default()
+        },
+    };
+    let out = run_vectorize(&cfg, &req).expect("vectorize run");
+
+    // The mosaic really went through stitching…
+    assert_eq!(out.stitch.scenes.len(), 3);
+    assert!(out.stitch.mosaic.width >= 300 && out.stitch.mosaic.height >= 300);
+    assert_eq!(out.vector.labels.width, out.stitch.mosaic.width);
+    assert_eq!(out.vector.labels.height, out.stitch.mosaic.height);
+    assert!(out.vector.report.tile_count >= 4, "mosaic should split into several bands");
+
+    // …and the bright synthetic settlements yield real objects.
+    assert!(out.object_count() > 0, "no objects above the default threshold");
+
+    // The acceptance bar: distributed == sequential, bit for bit.
+    let (base_labels, base_stats) = out.vector.labels_baseline();
+    assert_eq!(out.vector.labels, base_labels);
+    assert_eq!(out.vector.stats, base_stats);
+    assert_eq!(out.vector.objects, out.vector.objects_baseline());
+
+    // Areas are conserved through the merge.
+    let traced_px: u64 = out.vector.stats.iter().map(|o| o.area).sum();
+    assert_eq!(traced_px, out.vector.mask.foreground());
+
+    // The GeoJSON document round-trips through the in-crate parser.
+    let doc = out.vector.geojson();
+    let parsed = difet::util::json::parse(&doc.to_string()).expect("geojson parses");
+    assert_eq!(parsed, doc);
+    assert_eq!(
+        doc.get("features").unwrap().as_arr().unwrap().len(),
+        out.vector.objects.len()
+    );
+}
