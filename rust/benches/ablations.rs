@@ -55,7 +55,8 @@ fn ablation_locality() {
         spec.write_output = false;
         let (rep, _) = bench_once(
             &format!("harris 8 scenes, locality_aware={locality}"),
-            || run_job(&cfg, &dfs, &NativeExecutor, &spec, &registry, &JobHooks::default()).unwrap(),
+            || run_job(&cfg, &dfs, &NativeExecutor, &spec, &registry, &JobHooks::default())
+                .unwrap(),
         );
         let local = rep.counter("data_local_tasks");
         let remote = rep.counter("rack_remote_tasks");
@@ -148,7 +149,8 @@ fn ablation_block_size() {
         let registry = Registry::new();
         let mut spec = JobSpec::new("harris", &info.bundle_path);
         spec.write_output = false;
-        let rep = run_job(&cfg, &dfs, &NativeExecutor, &spec, &registry, &JobHooks::default()).unwrap();
+        let rep =
+            run_job(&cfg, &dfs, &NativeExecutor, &spec, &registry, &JobHooks::default()).unwrap();
         println!(
             "    block={mb:>2} MiB: {:>2} tasks, sim {}, local {}/{}",
             rep.counter("tasks"),

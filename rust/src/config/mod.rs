@@ -119,6 +119,11 @@ pub struct SchedulerConfig {
     /// with a single image", paper §3).  When false, tasks are DFS-block
     /// sized like a plain Hadoop FileSplit.
     pub split_per_image: bool,
+    /// Run job DAGs bulk-synchronously (whole-stage barriers + one job
+    /// startup per stage), exactly like the pre-DAG chained drivers.
+    /// Off = pipelined: units release on unit-level input satisfaction.
+    /// Outputs are bit-identical either way (`difet --barrier`).
+    pub barrier: bool,
 }
 
 impl Default for SchedulerConfig {
@@ -130,6 +135,7 @@ impl Default for SchedulerConfig {
             max_attempts: 4,
             queue_depth: 16,
             split_per_image: true,
+            barrier: false,
         }
     }
 }
@@ -240,6 +246,7 @@ impl Config {
             }
             "scheduler.max_attempts" => self.scheduler.max_attempts = p(key, val)?,
             "scheduler.split_per_image" => self.scheduler.split_per_image = p(key, val)?,
+            "scheduler.barrier" => self.scheduler.barrier = p(key, val)?,
             "scheduler.queue_depth" => self.scheduler.queue_depth = p(key, val)?,
             "storage.block_size" => self.storage.block_size = p(key, val)?,
             "storage.compress" => self.storage.compress = p(key, val)?,

@@ -1,0 +1,1077 @@
+//! The job-DAG runtime: one generic executor for every job shape.
+//!
+//! Where the coordinator used to carry four bespoke driver loops (fused
+//! extraction, pair registration, canvas-tile compositing, band-tile
+//! labeling), it now carries ONE: a job is a list of [`DagStage`]s, each
+//! of which *plans* a set of work units (with explicit upstream inputs),
+//! *runs* one unit per task attempt, *merges* each winning attempt and
+//! *finalizes* once every unit has merged.  [`run_dag`] drains the whole
+//! DAG over the shared worker-slot pool — one [`Scheduler`] spanning all
+//! stages, so locality, bounded retries and straggler speculation behave
+//! identically for every stage of every job.
+//!
+//! Two execution modes ([`ExecMode`]):
+//!
+//! * **Pipelined** (default) — a work unit is released to the slot pool
+//!   the moment its *own* upstream units have merged (unit-level input
+//!   satisfaction).  Downstream stages start while upstream stages still
+//!   run: a registration pair matches as soon as its two scenes'
+//!   feature files exist, a label band thresholds as soon as the canvas
+//!   tiles covering its rows are composited.  One MapReduce startup is
+//!   charged for the whole DAG.
+//! * **Barrier** — the pre-DAG behavior: a stage's units are released
+//!   only when every upstream stage has fully completed, and each stage
+//!   is charged its own job startup, exactly as the four chained
+//!   bulk-synchronous jobs used to be.
+//!
+//! The two modes must be **bit-identical** in their outputs: every unit
+//! computes a pure function of its declared inputs, so release order can
+//! only change *when* things run, never *what* they produce
+//! (`rust/tests/dag_runtime.rs` holds this over random DAG topologies
+//! with injected retries and speculation).
+//!
+//! Virtual time is event-driven: a slot's clock advances by each
+//! attempt's `task_overhead + modeled_io + measured_compute`, but a unit
+//! cannot *start* (on the virtual timeline) before its inputs were
+//! satisfied, so
+//!
+//! ```text
+//! completion(unit) = max(slot_clock, ready(unit)) + virtual(unit)
+//! sim_seconds      = max over units/slots of completion
+//! ```
+//!
+//! which makes the pipelined mode's consolidation of startups and
+//! elimination of stage barriers directly visible in `sim_seconds`
+//! (`difet bench` writes both modes into `BENCH_5.json`; CI gates on
+//! them).
+//!
+//! Observability: the executor registers, per DAG run,
+//!
+//! * `dag_queue_depth_max_<stage>` — gauge: peak released-but-unmerged
+//!   units of that stage;
+//! * `dag_stage_overlap_max` — gauge: peak number of stages that had
+//!   released-but-unmerged units *simultaneously* (1 in barrier mode by
+//!   construction, ≥ 2 whenever pipelining actually overlapped stages);
+//! * `dag_eager_units` — counter: units released while one of their
+//!   upstream stages still had unfinished units (each is a concrete
+//!   instance of cross-stage pipelining).
+
+use std::any::Any;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::cluster::CostModel;
+use crate::config::Config;
+use crate::dfs::NodeId;
+use crate::metrics::Registry;
+use crate::util::{DifetError, Result, Stopwatch};
+
+use super::scheduler::{monotonic_clock, Assignment, Scheduler, TaskHandle, WorkItem};
+
+/// How the executor sequences stages: see the module docs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Unit-level input satisfaction; one job startup for the whole DAG.
+    Pipelined,
+    /// Whole-stage barriers; one job startup per stage (the pre-DAG
+    /// behavior of the four chained bulk-synchronous jobs).
+    Barrier,
+}
+
+impl ExecMode {
+    /// The mode the configuration asks for (`scheduler.barrier` /
+    /// `difet --barrier`).
+    pub fn from_config(cfg: &Config) -> ExecMode {
+        if cfg.scheduler.barrier {
+            ExecMode::Barrier
+        } else {
+            ExecMode::Pipelined
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecMode::Pipelined => "pipelined",
+            ExecMode::Barrier => "barrier",
+        }
+    }
+}
+
+/// Reference to one unit of one stage (stage index within the DAG).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct UnitRef {
+    pub stage: usize,
+    pub unit: usize,
+}
+
+/// When a stage may *plan* (generate its unit set).
+#[derive(Debug, Clone, Copy)]
+pub enum Gate {
+    /// As soon as the upstream stage has planned — used by stages whose
+    /// units reference upstream units directly (the unit-level deps then
+    /// control when each unit actually runs).
+    Planned(usize),
+    /// Only after the upstream stage fully completed and finalized —
+    /// used when planning itself consumes the upstream *reduction* (the
+    /// mosaic layout needs the solved alignment).
+    Completed(usize),
+}
+
+impl Gate {
+    fn target(&self) -> usize {
+        match *self {
+            Gate::Planned(s) | Gate::Completed(s) => s,
+        }
+    }
+}
+
+/// One planned work unit: its upstream inputs and locality preference.
+#[derive(Debug, Clone, Default)]
+pub struct UnitSpec {
+    /// Upstream units whose merged outputs this unit consumes.  All must
+    /// belong to already-planned stages.
+    pub deps: Vec<UnitRef>,
+    /// Nodes where running this unit is data-local, best first.
+    pub preferred_nodes: Vec<NodeId>,
+}
+
+/// A stage's plan: its unit set plus the driver-side setup I/O (e.g.
+/// shuffling input files into DFS) charged serially when the stage opens
+/// on the virtual timeline.
+pub struct StagePlan {
+    pub units: Vec<UnitSpec>,
+    pub plan_io_secs: f64,
+}
+
+/// What a unit body hands back: an opaque payload for [`DagStage::merge`]
+/// plus its virtual-time accounting.
+pub struct UnitOutput {
+    pub payload: Box<dyn Any + Send>,
+    /// Measured compute nanoseconds (wall time inside the unit body).
+    pub compute_ns: u64,
+    /// Modeled I/O seconds (DFS reads/writes under the cost model).
+    pub io_secs: f64,
+}
+
+/// One stage of a job DAG.  Implementations carry their own inputs
+/// (config, DFS, specs) and outputs (interior-mutable sinks the caller
+/// reads back after [`run_dag`] returns).
+///
+/// Contract: `run_unit` must be a pure function of the stage inputs and
+/// the merged outputs of the unit's declared `deps` — never of which
+/// node/slot/attempt runs it or of the release order — so pipelined and
+/// barrier schedules produce bit-identical results.  `merge` is called
+/// exactly once per unit (only for the winning attempt) and `finalize`
+/// exactly once, after every unit has merged.
+pub trait DagStage: Sync {
+    /// Short stable name (metrics suffix + report rows).
+    fn name(&self) -> &'static str;
+
+    /// Planning prerequisites; the default is an unconditional plan at
+    /// DAG start.
+    fn gates(&self) -> Vec<Gate> {
+        Vec::new()
+    }
+
+    /// Generate the unit set (called once, after the gates are met).
+    fn plan(&self) -> Result<StagePlan>;
+
+    /// Run one unit.  `Ok(None)` means the attempt observed cancellation
+    /// (a losing speculative twin) and died cooperatively.
+    fn run_unit(&self, unit: usize, handle: &TaskHandle, node: NodeId)
+        -> Result<Option<UnitOutput>>;
+
+    /// Merge the winning attempt's payload into the stage sink.
+    fn merge(&self, unit: usize, payload: Box<dyn Any + Send>) -> Result<()>;
+
+    /// Reduce after every unit merged (e.g. the label union-find merge).
+    fn finalize(&self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Per-stage slice of a [`DagReport`].
+#[derive(Debug, Clone)]
+pub struct StageReport {
+    pub name: &'static str,
+    pub units: usize,
+    /// Virtual time the stage opened (its first unit became runnable).
+    pub open_secs: f64,
+    /// Virtual time its last unit completed.
+    pub close_secs: f64,
+    /// Σ measured compute over all attempts of this stage's units.
+    pub compute_seconds: f64,
+    /// Σ modeled I/O over all attempts.  Plan-time shuffle I/O is NOT
+    /// included (it shifts the stage's `open_secs` on the virtual
+    /// timeline instead), matching the old per-job reports.
+    pub io_seconds: f64,
+    pub data_local_tasks: u64,
+    pub rack_remote_tasks: u64,
+    pub retries: u64,
+    pub speculative_launches: u64,
+    /// Units released while an upstream stage still had unmerged units —
+    /// concrete cross-stage pipelining events (0 in barrier mode).
+    pub eager_units: u64,
+    /// Peak released-but-unmerged units (the queue-depth gauge value).
+    pub max_queue_depth: u64,
+}
+
+impl StageReport {
+    /// Busy span of the stage on the shared virtual timeline.
+    pub fn span_secs(&self) -> f64 {
+        (self.close_secs - self.open_secs).max(0.0)
+    }
+
+    /// The Hadoop-style counters every per-job report used to expose.
+    pub fn scheduler_counters(&self) -> BTreeMap<String, u64> {
+        let mut counters = BTreeMap::new();
+        counters.insert("data_local_tasks".into(), self.data_local_tasks);
+        counters.insert("rack_remote_tasks".into(), self.rack_remote_tasks);
+        counters.insert("retries".into(), self.retries);
+        counters.insert("speculative_launches".into(), self.speculative_launches);
+        counters.insert("eager_units".into(), self.eager_units);
+        counters
+    }
+}
+
+/// Whole-DAG result: the one simulated clock all stages shared.
+#[derive(Debug, Clone)]
+pub struct DagReport {
+    pub mode: ExecMode,
+    /// Simulated time for the whole DAG (startup(s) + virtual span).
+    pub sim_seconds: f64,
+    /// Host wall-clock actually spent (diagnostics only).
+    pub wall_seconds: f64,
+    /// Peak number of stages with released-but-unmerged units at once.
+    pub max_stage_overlap: u64,
+    pub stages: Vec<StageReport>,
+}
+
+impl DagReport {
+    pub fn stage(&self, name: &str) -> Option<&StageReport> {
+        self.stages.iter().find(|s| s.name == name)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Executor internals.
+// ---------------------------------------------------------------------------
+
+/// The scheduler work item: one (stage, unit) pair.
+#[derive(Clone)]
+struct DagTask {
+    unit: UnitRef,
+    preferred: Vec<NodeId>,
+}
+
+impl WorkItem for DagTask {
+    fn preferred_nodes(&self) -> &[NodeId] {
+        &self.preferred
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum StageStatus {
+    /// Gates not met yet.
+    Blocked,
+    /// A thread is running `plan()` right now.
+    Planning,
+    /// Units exist; some not merged yet.
+    Running,
+    /// A thread is running `finalize()` right now.
+    Finalizing,
+    /// Everything merged and finalized.
+    Done,
+}
+
+struct UnitState {
+    deps_remaining: usize,
+    /// Distinct upstream stages this unit depends on (eager detection).
+    dep_stages: Vec<usize>,
+    /// Downstream units waiting on this one.
+    dependents: Vec<UnitRef>,
+    preferred: Vec<NodeId>,
+    released: bool,
+    merged: bool,
+    /// Virtual time the unit became runnable (valid once released).
+    ready_ns: u64,
+    /// Virtual completion time (valid once merged).
+    completion_ns: u64,
+}
+
+struct StageState {
+    status: StageStatus,
+    units: Vec<UnitState>,
+    outstanding: usize,
+    /// All upstream stages (gates ∪ unit-dep stages) — barrier release set.
+    upstream: Vec<usize>,
+    /// Barrier mode: whether the whole-stage release already happened.
+    released_all: bool,
+    plan_io_ns: u64,
+    open_ns: u64,
+    close_ns: u64,
+    compute_ns: u64,
+    io_ns: u64,
+    data_local: u64,
+    rack_remote: u64,
+    retries: u64,
+    spec_launches: u64,
+    eager: u64,
+    depth: u64,
+    max_depth: u64,
+}
+
+impl StageState {
+    fn new() -> Self {
+        StageState {
+            status: StageStatus::Blocked,
+            units: Vec::new(),
+            outstanding: 0,
+            upstream: Vec::new(),
+            released_all: false,
+            plan_io_ns: 0,
+            open_ns: 0,
+            close_ns: 0,
+            compute_ns: 0,
+            io_ns: 0,
+            data_local: 0,
+            rack_remote: 0,
+            retries: 0,
+            spec_launches: 0,
+            eager: 0,
+            depth: 0,
+            max_depth: 0,
+        }
+    }
+
+    fn planned(&self) -> bool {
+        matches!(
+            self.status,
+            StageStatus::Running | StageStatus::Finalizing | StageStatus::Done
+        )
+    }
+}
+
+struct DagState {
+    stages: Vec<StageState>,
+    /// Stages with depth > 0 right now (overlap metric).
+    live_stages: u64,
+    max_overlap: u64,
+    done_stages: usize,
+}
+
+enum Act {
+    Plan(usize),
+    Finalize(usize),
+}
+
+struct DagExec<'a> {
+    stages: &'a [&'a dyn DagStage],
+    sched: Scheduler<DagTask>,
+    state: Mutex<DagState>,
+    mode: ExecMode,
+    startup_ns: u64,
+    overhead_ns: u64,
+    /// Max over slots of each slot's final virtual clock (losing twins
+    /// keep their slot busy even though they merge nothing).
+    max_slot_ns: AtomicU64,
+}
+
+impl<'a> DagExec<'a> {
+    /// Are this stage's gates met?  (`Planned` ⇒ upstream planned,
+    /// `Completed` ⇒ upstream done — identical in both modes; the modes
+    /// differ in unit *release*, not in planning.)
+    fn gates_met(&self, st: &DagState, gates: &[Gate]) -> bool {
+        gates.iter().all(|g| match *g {
+            Gate::Planned(p) => p < st.stages.len() && st.stages[p].planned(),
+            Gate::Completed(p) => {
+                p < st.stages.len() && st.stages[p].status == StageStatus::Done
+            }
+        })
+    }
+
+    /// One state-machine step under the lock; transitional statuses stop
+    /// two threads from planning/finalizing the same stage twice.
+    fn next_act(&self, st: &mut DagState) -> Option<Act> {
+        if let Some(i) = st
+            .stages
+            .iter()
+            .position(|s| s.status == StageStatus::Running && s.outstanding == 0)
+        {
+            st.stages[i].status = StageStatus::Finalizing;
+            return Some(Act::Finalize(i));
+        }
+        let blocked: Vec<usize> = st
+            .stages
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.status == StageStatus::Blocked)
+            .map(|(i, _)| i)
+            .collect();
+        for i in blocked {
+            if self.gates_met(st, &self.stages[i].gates()) {
+                st.stages[i].status = StageStatus::Planning;
+                return Some(Act::Plan(i));
+            }
+        }
+        None
+    }
+
+    /// Drive planning/finalization until nothing more can happen now.
+    /// Returns an error for a structurally stalled DAG (gate cycle).
+    fn advance(&self) -> Result<()> {
+        loop {
+            let act = {
+                let mut st = self.state.lock().unwrap();
+                match self.next_act(&mut st) {
+                    Some(act) => act,
+                    None => {
+                        let idle = st
+                            .stages
+                            .iter()
+                            .all(|s| matches!(s.status, StageStatus::Blocked | StageStatus::Done));
+                        if idle && st.done_stages < st.stages.len() {
+                            let stuck: Vec<&str> = st
+                                .stages
+                                .iter()
+                                .enumerate()
+                                .filter(|(_, s)| s.status == StageStatus::Blocked)
+                                .map(|(i, _)| self.stages[i].name())
+                                .collect();
+                            return Err(DifetError::Job(format!(
+                                "job DAG stalled: stage gates never satisfiable for {stuck:?}"
+                            )));
+                        }
+                        return Ok(());
+                    }
+                }
+            };
+            match act {
+                Act::Plan(i) => {
+                    let plan = self.stages[i].plan()?;
+                    let mut st = self.state.lock().unwrap();
+                    self.install_plan(&mut st, i, plan)?;
+                }
+                Act::Finalize(i) => {
+                    self.stages[i].finalize()?;
+                    let mut st = self.state.lock().unwrap();
+                    st.stages[i].status = StageStatus::Done;
+                    st.done_stages += 1;
+                    if st.done_stages == st.stages.len() {
+                        self.sched.close();
+                    } else if self.mode == ExecMode::Barrier {
+                        self.release_barrier_ready(&mut st);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Validate and install a freshly planned stage, releasing whatever
+    /// units are already runnable.
+    fn install_plan(&self, st: &mut DagState, stage: usize, plan: StagePlan) -> Result<()> {
+        // Resolve deps first (immutable reads across stages).
+        let mut units = Vec::with_capacity(plan.units.len());
+        let mut upstream: Vec<usize> = self.stages[stage]
+            .gates()
+            .iter()
+            .map(|g| g.target())
+            .collect();
+        for (u, spec) in plan.units.iter().enumerate() {
+            let mut deps_remaining = 0usize;
+            let mut dep_stages: Vec<usize> = Vec::new();
+            let mut ready_ns = 0u64;
+            for d in &spec.deps {
+                let up = st.stages.get(d.stage).ok_or_else(|| {
+                    DifetError::Job(format!(
+                        "stage {} unit {u}: dep on unknown stage {}",
+                        self.stages[stage].name(),
+                        d.stage
+                    ))
+                })?;
+                if !up.planned() || d.stage == stage {
+                    return Err(DifetError::Job(format!(
+                        "stage {} unit {u}: dep on unplanned stage {}",
+                        self.stages[stage].name(),
+                        d.stage
+                    )));
+                }
+                let dep_unit = up.units.get(d.unit).ok_or_else(|| {
+                    DifetError::Job(format!(
+                        "stage {} unit {u}: dep unit {}/{} out of range",
+                        self.stages[stage].name(),
+                        d.stage,
+                        d.unit
+                    ))
+                })?;
+                if dep_unit.merged {
+                    ready_ns = ready_ns.max(dep_unit.completion_ns);
+                } else {
+                    deps_remaining += 1;
+                }
+                if !dep_stages.contains(&d.stage) {
+                    dep_stages.push(d.stage);
+                }
+                if !upstream.contains(&d.stage) {
+                    upstream.push(d.stage);
+                }
+            }
+            units.push(UnitState {
+                deps_remaining,
+                dep_stages,
+                dependents: Vec::new(),
+                preferred: spec.preferred_nodes.clone(),
+                released: false,
+                merged: false,
+                ready_ns,
+                completion_ns: 0,
+            });
+        }
+        // Register dependents on the upstream units (second pass, now that
+        // validation cannot fail halfway).
+        for (u, spec) in plan.units.iter().enumerate() {
+            for d in &spec.deps {
+                if !st.stages[d.stage].units[d.unit].merged {
+                    st.stages[d.stage].units[d.unit]
+                        .dependents
+                        .push(UnitRef { stage, unit: u });
+                }
+            }
+        }
+
+        let s = &mut st.stages[stage];
+        s.plan_io_ns = secs_to_ns(plan.plan_io_secs);
+        s.outstanding = units.len();
+        s.units = units;
+        s.upstream = upstream;
+        s.status = StageStatus::Running;
+
+        match self.mode {
+            ExecMode::Pipelined => {
+                // Open now: gates are met, so the gate times are known.
+                let mut open = self.startup_ns;
+                for g in self.stages[stage].gates() {
+                    open = open.max(match g {
+                        Gate::Planned(p) => st.stages[p].open_ns,
+                        Gate::Completed(p) => st.stages[p].close_ns,
+                    });
+                }
+                let open = open + st.stages[stage].plan_io_ns;
+                st.stages[stage].open_ns = open;
+                st.stages[stage].close_ns = open;
+                let ready: Vec<usize> = st.stages[stage]
+                    .units
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, u)| u.deps_remaining == 0)
+                    .map(|(u, _)| u)
+                    .collect();
+                for unit in ready {
+                    self.release_unit(st, UnitRef { stage, unit });
+                }
+            }
+            ExecMode::Barrier => self.release_barrier_ready(st),
+        }
+        Ok(())
+    }
+
+    /// Barrier mode: release every unit of each planned stage whose
+    /// upstream stages have ALL completed (the whole-stage barrier), with
+    /// a fresh per-stage job startup on the virtual clock.
+    fn release_barrier_ready(&self, st: &mut DagState) {
+        for stage in 0..st.stages.len() {
+            let s = &st.stages[stage];
+            if s.status != StageStatus::Running || s.released_all {
+                continue;
+            }
+            let upstream_done = s
+                .upstream
+                .iter()
+                .all(|&p| st.stages[p].status == StageStatus::Done);
+            if !upstream_done {
+                continue;
+            }
+            let mut open = 0u64;
+            for &p in &st.stages[stage].upstream {
+                open = open.max(st.stages[p].close_ns);
+            }
+            let open = open + self.startup_ns + st.stages[stage].plan_io_ns;
+            st.stages[stage].released_all = true;
+            st.stages[stage].open_ns = open;
+            st.stages[stage].close_ns = open;
+            let n_units = st.stages[stage].units.len();
+            for unit in 0..n_units {
+                debug_assert_eq!(st.stages[stage].units[unit].deps_remaining, 0);
+                st.stages[stage].units[unit].ready_ns = open;
+                self.release_unit(st, UnitRef { stage, unit });
+            }
+        }
+    }
+
+    /// Hand one runnable unit to the scheduler and keep the queue-depth /
+    /// overlap / eager metrics.
+    fn release_unit(&self, st: &mut DagState, r: UnitRef) {
+        {
+            let s = &mut st.stages[r.stage];
+            let u = &mut s.units[r.unit];
+            debug_assert!(!u.released && u.deps_remaining == 0);
+            u.released = true;
+            u.ready_ns = u.ready_ns.max(s.open_ns);
+            if s.depth == 0 {
+                st.live_stages += 1;
+            }
+        }
+        st.max_overlap = st.max_overlap.max(st.live_stages);
+        let s = &mut st.stages[r.stage];
+        s.depth += 1;
+        s.max_depth = s.max_depth.max(s.depth);
+        // Pipelining observability: this release happened while one of
+        // the unit's input stages still had unfinished units.
+        let eager = st.stages[r.stage].units[r.unit]
+            .dep_stages
+            .iter()
+            .any(|&p| st.stages[p].outstanding > 0);
+        if eager {
+            st.stages[r.stage].eager += 1;
+        }
+        let preferred = st.stages[r.stage].units[r.unit].preferred.clone();
+        self.sched.push(DagTask { unit: r, preferred });
+    }
+
+    /// Record a winning merge: virtual completion, dependent releases.
+    fn complete_unit(&self, r: UnitRef, completion_ns: u64) {
+        let mut st = self.state.lock().unwrap();
+        let s = &mut st.stages[r.stage];
+        let dependents = {
+            let u = &mut s.units[r.unit];
+            debug_assert!(!u.merged);
+            u.merged = true;
+            u.completion_ns = completion_ns;
+            std::mem::take(&mut u.dependents)
+        };
+        s.outstanding -= 1;
+        s.close_ns = s.close_ns.max(completion_ns);
+        s.depth -= 1;
+        if s.depth == 0 {
+            st.live_stages -= 1;
+        }
+        for d in dependents {
+            let du = &mut st.stages[d.stage].units[d.unit];
+            du.ready_ns = du.ready_ns.max(completion_ns);
+            du.deps_remaining -= 1;
+            if du.deps_remaining == 0 && self.mode == ExecMode::Pipelined {
+                self.release_unit(&mut st, d);
+            }
+        }
+    }
+
+    /// The worker-slot body: identical lifecycle to the old per-job
+    /// drivers, but spanning every stage of the DAG.
+    fn slot_loop(&self, node: NodeId) {
+        let mut clock_ns = 0u64;
+        loop {
+            let (task, handle) = match self.sched.next_assignment(node) {
+                Assignment::Done => break,
+                Assignment::Run(task, handle) => (task, handle),
+            };
+            let UnitRef { stage, unit } = task.unit;
+            {
+                let mut st = self.state.lock().unwrap();
+                let s = &mut st.stages[stage];
+                if handle.speculative {
+                    s.spec_launches += 1;
+                } else if task.preferred.contains(&node) {
+                    s.data_local += 1;
+                } else {
+                    s.rack_remote += 1;
+                }
+            }
+            match self.stages[stage].run_unit(unit, &handle, node) {
+                Ok(Some(out)) => {
+                    let io_ns = secs_to_ns(out.io_secs);
+                    let virtual_ns = self.overhead_ns + io_ns + out.compute_ns;
+                    // Busy-slot accounting happens for every completed
+                    // attempt, winners and losing twins alike (the slot
+                    // really was occupied).
+                    let ready_ns = {
+                        let mut st = self.state.lock().unwrap();
+                        let s = &mut st.stages[stage];
+                        s.compute_ns += out.compute_ns;
+                        s.io_ns += io_ns;
+                        s.units[unit].ready_ns
+                    };
+                    let completion = clock_ns.max(ready_ns) + virtual_ns;
+                    clock_ns = completion;
+                    if self.sched.report_success(&handle) {
+                        let merged = self.stages[stage].merge(unit, out.payload);
+                        match merged {
+                            Ok(()) => {
+                                self.complete_unit(task.unit, completion);
+                                if let Err(e) = self.advance() {
+                                    self.sched.abort(e.to_string());
+                                }
+                            }
+                            Err(e) => self.sched.abort(e.to_string()),
+                        }
+                    }
+                }
+                Ok(None) => self.sched.report_cancelled(&handle),
+                Err(e) => {
+                    if self.sched.report_failure(&handle, &e.to_string()) {
+                        self.state.lock().unwrap().stages[stage].retries += 1;
+                    }
+                }
+            }
+        }
+        self.max_slot_ns.fetch_max(clock_ns, Ordering::Relaxed);
+    }
+
+    fn report(&self, wall_seconds: f64, registry: &Registry) -> DagReport {
+        let st = self.state.lock().unwrap();
+        let mut stages = Vec::with_capacity(st.stages.len());
+        let mut sim_ns = self.max_slot_ns.load(Ordering::Relaxed);
+        for (i, s) in st.stages.iter().enumerate() {
+            sim_ns = sim_ns.max(s.close_ns);
+            let name = self.stages[i].name();
+            registry
+                .gauge(&format!("dag_queue_depth_max_{name}"))
+                .set(s.max_depth as f64);
+            stages.push(StageReport {
+                name,
+                units: s.units.len(),
+                open_secs: s.open_ns as f64 * 1e-9,
+                close_secs: s.close_ns as f64 * 1e-9,
+                compute_seconds: s.compute_ns as f64 * 1e-9,
+                io_seconds: s.io_ns as f64 * 1e-9,
+                data_local_tasks: s.data_local,
+                rack_remote_tasks: s.rack_remote,
+                retries: s.retries,
+                speculative_launches: s.spec_launches,
+                eager_units: s.eager,
+                max_queue_depth: s.max_depth,
+            });
+        }
+        registry.gauge("dag_stage_overlap_max").set(st.max_overlap as f64);
+        registry
+            .counter("dag_eager_units")
+            .add(st.stages.iter().map(|s| s.eager).sum());
+        DagReport {
+            mode: self.mode,
+            sim_seconds: sim_ns as f64 * 1e-9,
+            wall_seconds,
+            max_stage_overlap: st.max_overlap,
+            stages,
+        }
+    }
+}
+
+fn secs_to_ns(secs: f64) -> u64 {
+    (secs.max(0.0) * 1e9) as u64
+}
+
+/// Run a job DAG on the simulated cluster: spawn `nodes × slots_per_node`
+/// worker slots, drain every stage through one shared [`Scheduler`]
+/// (locality / bounded retries / speculation for every stage), and
+/// account virtual time per the module docs.
+pub fn run_dag(
+    cfg: &Config,
+    stages: &[&dyn DagStage],
+    mode: ExecMode,
+    registry: &Registry,
+) -> Result<DagReport> {
+    let wall = Stopwatch::start();
+    let cost = CostModel::new(&cfg.cluster);
+    let exec = DagExec {
+        stages,
+        sched: Scheduler::new_dynamic(&cfg.scheduler, monotonic_clock()),
+        state: Mutex::new(DagState {
+            stages: (0..stages.len()).map(|_| StageState::new()).collect(),
+            live_stages: 0,
+            max_overlap: 0,
+            done_stages: 0,
+        }),
+        mode,
+        startup_ns: secs_to_ns(cost.job_startup()),
+        overhead_ns: secs_to_ns(cost.task_overhead()),
+        max_slot_ns: AtomicU64::new(0),
+    };
+    if stages.is_empty() {
+        exec.sched.close();
+        return Ok(exec.report(wall.elapsed_secs(), registry));
+    }
+    // Initial planning wave (and zero-unit stage finalization).
+    exec.advance()?;
+    std::thread::scope(|scope| {
+        for node in 0..cfg.cluster.nodes {
+            for _slot in 0..cfg.cluster.slots_per_node {
+                let exec = &exec;
+                scope.spawn(move || exec.slot_loop(NodeId(node)));
+            }
+        }
+    });
+    if let Some(reason) = exec.sched.abort_reason() {
+        return Err(DifetError::Job(reason));
+    }
+    Ok(exec.report(wall.elapsed_secs(), registry))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    /// A synthetic stage: unit `u` computes a mix of its own id and its
+    /// deps' merged values; results land in a shared map.
+    struct MixStage {
+        name: &'static str,
+        index: usize,
+        gates: Vec<Gate>,
+        unit_deps: Vec<Vec<UnitRef>>,
+        values: Mutex<BTreeMap<(usize, usize), u64>>,
+        upstream_values: std::sync::Arc<Mutex<BTreeMap<(usize, usize), u64>>>,
+        fail_first_attempt: bool,
+        plan_io_secs: f64,
+        finalized: AtomicU64,
+    }
+
+    fn mix(a: u64, b: u64) -> u64 {
+        let mut z = a ^ b.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z ^ (z >> 31)
+    }
+
+    impl DagStage for MixStage {
+        fn name(&self) -> &'static str {
+            self.name
+        }
+        fn gates(&self) -> Vec<Gate> {
+            self.gates.clone()
+        }
+        fn plan(&self) -> Result<StagePlan> {
+            Ok(StagePlan {
+                units: self
+                    .unit_deps
+                    .iter()
+                    .map(|deps| UnitSpec { deps: deps.clone(), preferred_nodes: Vec::new() })
+                    .collect(),
+                plan_io_secs: self.plan_io_secs,
+            })
+        }
+        fn run_unit(
+            &self,
+            unit: usize,
+            handle: &TaskHandle,
+            _node: NodeId,
+        ) -> Result<Option<UnitOutput>> {
+            if self.fail_first_attempt && handle.attempt == 0 {
+                return Err(DifetError::Job(format!(
+                    "injected failure (unit {unit}, attempt {})",
+                    handle.attempt
+                )));
+            }
+            let shared = self.upstream_values.lock().unwrap();
+            let mut v = mix(self.index as u64, unit as u64);
+            for d in &self.unit_deps[unit] {
+                let dep = shared
+                    .get(&(d.stage, d.unit))
+                    .copied()
+                    .expect("dep ran before its consumer");
+                v = mix(v, dep);
+            }
+            drop(shared);
+            Ok(Some(UnitOutput { payload: Box::new(v), compute_ns: 1_000, io_secs: 0.0 }))
+        }
+        fn merge(&self, unit: usize, payload: Box<dyn Any + Send>) -> Result<()> {
+            let v = *payload.downcast::<u64>().expect("payload type");
+            self.values.lock().unwrap().insert((self.index, unit), v);
+            self.upstream_values
+                .lock()
+                .unwrap()
+                .insert((self.index, unit), v);
+            Ok(())
+        }
+        fn finalize(&self) -> Result<()> {
+            self.finalized.fetch_add(1, Ordering::Relaxed);
+            Ok(())
+        }
+    }
+
+    fn mk_stage(
+        shared: &std::sync::Arc<Mutex<BTreeMap<(usize, usize), u64>>>,
+        name: &'static str,
+        index: usize,
+        gates: Vec<Gate>,
+        unit_deps: Vec<Vec<UnitRef>>,
+    ) -> MixStage {
+        MixStage {
+            name,
+            index,
+            gates,
+            unit_deps,
+            values: Mutex::new(BTreeMap::new()),
+            upstream_values: shared.clone(),
+            fail_first_attempt: false,
+            plan_io_secs: 0.0,
+            finalized: AtomicU64::new(0),
+        }
+    }
+
+    fn test_cfg() -> Config {
+        let mut cfg = Config::new();
+        cfg.cluster.nodes = 2;
+        cfg.cluster.slots_per_node = 2;
+        cfg.cluster.job_startup = 1.0;
+        cfg.cluster.task_overhead = 0.1;
+        cfg
+    }
+
+    #[test]
+    fn two_stage_chain_runs_and_finalizes_in_both_modes() {
+        for mode in [ExecMode::Pipelined, ExecMode::Barrier] {
+            let shared = std::sync::Arc::new(Mutex::new(BTreeMap::new()));
+            let a = mk_stage(&shared, "a", 0, vec![], vec![vec![], vec![], vec![]]);
+            let b = mk_stage(
+                &shared,
+                "b",
+                1,
+                vec![Gate::Planned(0)],
+                vec![
+                    vec![UnitRef { stage: 0, unit: 0 }, UnitRef { stage: 0, unit: 1 }],
+                    vec![UnitRef { stage: 0, unit: 2 }],
+                ],
+            );
+            let registry = Registry::new();
+            let rep = run_dag(&test_cfg(), &[&a, &b], mode, &registry).expect("dag run");
+            assert_eq!(rep.stages.len(), 2);
+            assert_eq!(rep.stages[0].units, 3);
+            assert_eq!(rep.stages[1].units, 2);
+            assert_eq!(a.finalized.load(Ordering::Relaxed), 1);
+            assert_eq!(b.finalized.load(Ordering::Relaxed), 1);
+            assert_eq!(a.values.lock().unwrap().len(), 3);
+            assert_eq!(b.values.lock().unwrap().len(), 2);
+            // Stage b cannot close before stage a's last *dep* completed.
+            assert!(rep.stages[1].close_secs >= rep.stages[0].open_secs);
+            assert!(rep.sim_seconds >= rep.stages[1].close_secs);
+            // Barrier charges two startups and forbids overlap entirely.
+            match mode {
+                ExecMode::Barrier => {
+                    assert_eq!(rep.max_stage_overlap, 1);
+                    // Stage b re-pays the 1 s job startup after stage a
+                    // closes (f64 conversion leaves sub-ns slack).
+                    assert!(rep.stages[1].open_secs >= rep.stages[0].close_secs + 0.999);
+                    assert_eq!(rep.stages[1].eager_units, 0);
+                }
+                ExecMode::Pipelined => {
+                    assert!(rep.sim_seconds >= 1.0, "single startup still charged");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_and_barrier_values_are_bit_identical() {
+        let run = |mode| {
+            let shared = std::sync::Arc::new(Mutex::new(BTreeMap::new()));
+            let a = mk_stage(&shared, "a", 0, vec![], vec![vec![]; 4]);
+            let mut b = mk_stage(
+                &shared,
+                "b",
+                1,
+                vec![Gate::Planned(0)],
+                (0..4).map(|u| vec![UnitRef { stage: 0, unit: u }]).collect(),
+            );
+            b.fail_first_attempt = true; // injected retries on every unit
+            let c = mk_stage(
+                &shared,
+                "c",
+                2,
+                vec![Gate::Completed(1)],
+                vec![vec![UnitRef { stage: 1, unit: 0 }, UnitRef { stage: 1, unit: 3 }]],
+            );
+            let registry = Registry::new();
+            run_dag(&test_cfg(), &[&a, &b, &c], mode, &registry).expect("dag");
+            let mut all = a.values.lock().unwrap().clone();
+            all.extend(b.values.lock().unwrap().iter());
+            all.extend(c.values.lock().unwrap().iter());
+            all
+        };
+        assert_eq!(run(ExecMode::Pipelined), run(ExecMode::Barrier));
+    }
+
+    #[test]
+    fn zero_unit_stages_complete_and_gate_downstream() {
+        let shared = std::sync::Arc::new(Mutex::new(BTreeMap::new()));
+        let empty = mk_stage(&shared, "empty", 0, vec![], vec![]);
+        let after = mk_stage(&shared, "after", 1, vec![Gate::Completed(0)], vec![vec![]]);
+        let registry = Registry::new();
+        let rep =
+            run_dag(&test_cfg(), &[&empty, &after], ExecMode::Pipelined, &registry).unwrap();
+        assert_eq!(rep.stages[0].units, 0);
+        assert_eq!(after.values.lock().unwrap().len(), 1);
+        assert_eq!(empty.finalized.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn gate_cycles_are_reported_not_hung() {
+        let shared = std::sync::Arc::new(Mutex::new(BTreeMap::new()));
+        let a = mk_stage(&shared, "a", 0, vec![Gate::Completed(1)], vec![vec![]]);
+        let b = mk_stage(&shared, "b", 1, vec![Gate::Completed(0)], vec![vec![]]);
+        let registry = Registry::new();
+        let err = run_dag(&test_cfg(), &[&a, &b], ExecMode::Pipelined, &registry).unwrap_err();
+        assert!(err.to_string().contains("stalled"), "{err}");
+    }
+
+    #[test]
+    fn permanent_unit_failure_aborts_with_the_unit_error() {
+        let shared = std::sync::Arc::new(Mutex::new(BTreeMap::new()));
+        struct AlwaysFail;
+        impl DagStage for AlwaysFail {
+            fn name(&self) -> &'static str {
+                "doomed"
+            }
+            fn plan(&self) -> Result<StagePlan> {
+                Ok(StagePlan {
+                    units: vec![UnitSpec::default()],
+                    plan_io_secs: 0.0,
+                })
+            }
+            fn run_unit(
+                &self,
+                _unit: usize,
+                _handle: &TaskHandle,
+                _node: NodeId,
+            ) -> Result<Option<UnitOutput>> {
+                Err(DifetError::Job("injected permafail".into()))
+            }
+            fn merge(&self, _unit: usize, _payload: Box<dyn Any + Send>) -> Result<()> {
+                Ok(())
+            }
+        }
+        let ok = mk_stage(&shared, "fine", 0, vec![], vec![vec![]]);
+        let doomed = AlwaysFail;
+        let registry = Registry::new();
+        let err = run_dag(
+            &test_cfg(),
+            &[&ok as &dyn DagStage, &doomed],
+            ExecMode::Pipelined,
+            &registry,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("injected permafail"), "{err}");
+    }
+
+    #[test]
+    fn queue_depth_and_overlap_gauges_are_registered() {
+        let shared = std::sync::Arc::new(Mutex::new(BTreeMap::new()));
+        let a = mk_stage(&shared, "a", 0, vec![], vec![vec![]; 3]);
+        let registry = Registry::new();
+        let rep = run_dag(&test_cfg(), &[&a], ExecMode::Pipelined, &registry).unwrap();
+        assert!(registry.gauge("dag_queue_depth_max_a").get() >= 1.0);
+        assert_eq!(
+            registry.gauge("dag_stage_overlap_max").get(),
+            rep.max_stage_overlap as f64
+        );
+        assert_eq!(rep.max_stage_overlap, 1);
+    }
+}

@@ -1,51 +1,52 @@
-//! The job driver ("jobtracker"): plan → schedule → execute → merge.
+//! The job driver: executors, failure hooks and the four job entry
+//! points, all running on the generic job-DAG runtime.
 //!
-//! One call to [`run_job`] is one MapReduce job of the paper: a feature
-//! extraction pass of one algorithm over one HIB bundle.
-//! [`run_fused_job`] generalizes it to the paper's actual experiment —
-//! *several* algorithms in a single pass: the bundle is read, decoded,
-//! tiled and gray-converted once, shared detector intermediates are
-//! computed once per tile ([`crate::features::fused`]), and one census
-//! per algorithm comes out.  `run_job` is the single-algorithm case of
-//! the same engine.
+//! This file used to hold four bespoke scheduling loops (one per job
+//! shape).  They are gone: every job is now a [`crate::coordinator::dag`]
+//! composition of the [`crate::coordinator::stages`] definitions, and
+//! the entry points below are thin single-stage wrappers kept for API
+//! stability (the pipelines in `crate::pipeline` compose the multi-stage
+//! DAGs directly):
 //!
-//! Real compute (tile executions) runs on real worker threads (one per
-//! map slot, `nodes × slots_per_node` total); disk/network time is
-//! *modeled* by [`crate::cluster::CostModel`] and accumulated per slot.
-//! The reported job time is
+//! * [`run_job`] / [`run_fused_job`] — one [`stages::ExtractStage`];
+//!   `run_job` is the single-algorithm case of the fused engine.
+//! * [`run_registration_job`] — one [`stages::PairStage`] over censuses
+//!   that already exist (feature files shuffled at plan time).
+//! * [`run_mosaic_job`] — one [`stages::CompositeStage`] over a solved
+//!   alignment.
+//! * [`run_vector_job`] — one [`stages::LabelStage`] over a mask.
+//!
+//! Real compute (tile executions, descriptor matching, compositing,
+//! labeling) runs on real worker threads (one per map slot,
+//! `nodes × slots_per_node` total); disk/network time is *modeled* by
+//! [`crate::cluster::CostModel`] and accumulated per slot.  The reported
+//! job time is the DAG's simulated clock
 //!
 //! ```text
-//! sim_seconds = job_startup + max_over_slots( Σ task_overhead
-//!                                            + modeled_io + measured_compute )
+//! sim_seconds = job_startup + max_over_units( completion )
 //! ```
 //!
-//! which is the quantity comparable to the paper's Table 1 cells (see
-//! README §Reproducing the paper's tables for the measured-vs-modeled
-//! breakdown of every column).
+//! which for a single-stage DAG is exactly the old per-job quantity
+//! comparable to the paper's Table 1 cells (see README §Reproducing the
+//! paper's tables for the measured-vs-modeled breakdown, and README
+//! §Job-DAG runtime for the multi-stage pipelined/barrier semantics).
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
-
-use crate::cluster::CostModel;
 use crate::config::Config;
-use crate::dfs::{Dfs, NodeId};
-use crate::features::matching::{match_descriptors_while, ransac_translation};
-use crate::features::nms::rank_truncate;
-use crate::features::{self, Algorithm, Descriptors, GrayImage};
-use crate::hib::{self, BundleReader, RecordMeta};
-use crate::imagery::tiler::{extract_tile_f32, TileIter};
+use crate::dfs::Dfs;
+use crate::features::{self, Algorithm, GrayImage};
 use crate::imagery::Rgba8Image;
 use crate::metrics::Registry;
 use crate::runtime::TileFeatures;
-use crate::util::{DifetError, Result, Stopwatch};
+use crate::util::{DifetError, Result};
 
+use super::dag::{run_dag, ExecMode};
 use super::job::{
-    mapper_retention, pair_seed, CanvasTile, FusedJobSpec, ImageCensus, JobReport, JobSpec,
-    MapOutput, MosaicReport, MosaicSpec, PairResult, PairTask, RegistrationReport,
-    RegistrationSpec,
+    FusedJobSpec, JobReport, JobSpec, MosaicReport, MosaicSpec, RegistrationReport,
+    RegistrationSpec, VectorReport,
 };
-use super::scheduler::{Assignment, Scheduler, TaskDescriptor, TaskHandle};
-use super::shuffle;
+use super::stages::{
+    AlignSource, CompositeStage, ExtractStage, MaskSource, PairSource, PairStage, LabelStage,
+};
 
 /// Anything that can extract features from one tile: the PJRT engine in
 /// production, the pure-Rust baseline as hermetic fallback.
@@ -136,10 +137,11 @@ impl TileExecutor for NativeExecutor {
     }
 }
 
-/// Test hooks: deterministic failure injection.
+/// Test hooks: deterministic failure injection, applied to every stage
+/// of the DAG (unit ids are stage-local, matching the old per-job ids).
 #[derive(Default)]
 pub struct JobHooks {
-    /// `fail(task_id, attempt)` → should this attempt die?
+    /// `fail(unit_id, attempt)` → should this attempt die?
     #[allow(clippy::type_complexity)]
     pub fail: Option<Box<dyn Fn(usize, usize) -> bool + Sync>>,
 }
@@ -160,91 +162,12 @@ pub fn run_job(
         .ok_or_else(|| DifetError::Job("fused engine returned no report".into()))
 }
 
-/// One slot-completed work item: its payload plus the virtual-time
-/// accounting every task contributes to the job clock.
-struct SlotWork<R> {
-    payload: R,
-    /// Virtual time this task adds to its slot (overhead + io + compute).
-    virtual_ns: u64,
-    compute_ns: u64,
-    io_ns: u64,
-}
-
-/// Aggregated slot accounting after a job drains.
-struct SlotTotals {
-    /// Max over slots of Σ virtual task time (the job-clock term).
-    max_slot_ns: u64,
-    compute_ns: u64,
-    io_ns: u64,
-}
-
-/// The shared worker-slot engine: spawn `nodes × slots_per_node` threads,
-/// drain `scheduler`, run `body` once per task attempt and `merge` once
-/// per *winning* attempt.  Both job shapes — the map-shaped extraction
-/// and the reduce-shaped registration — run on this skeleton, so retry,
-/// cancellation, speculation-twin and virtual-time semantics cannot
-/// diverge between them.
-fn run_slots<D, R, B, M>(
-    cluster: &crate::config::ClusterConfig,
-    scheduler: &Scheduler<D>,
-    body: B,
-    merge: M,
-) -> SlotTotals
-where
-    D: super::scheduler::WorkItem,
-    B: Fn(&D, &TaskHandle, NodeId) -> Result<Option<SlotWork<R>>> + Sync,
-    M: Fn(&D, R) + Sync,
-{
-    let compute_ns = AtomicU64::new(0);
-    let io_ns = AtomicU64::new(0);
-    let max_slot_ns = AtomicU64::new(0);
-    std::thread::scope(|scope| {
-        for node in 0..cluster.nodes {
-            for _slot in 0..cluster.slots_per_node {
-                let body = &body;
-                let merge = &merge;
-                let compute_ns = &compute_ns;
-                let io_ns = &io_ns;
-                let max_slot_ns = &max_slot_ns;
-                scope.spawn(move || {
-                    let mut slot_virtual_ns = 0u64;
-                    loop {
-                        match scheduler.next_assignment(NodeId(node)) {
-                            Assignment::Done => break,
-                            Assignment::Run(task, handle) => {
-                                match body(&task, &handle, NodeId(node)) {
-                                    Ok(Some(work)) => {
-                                        slot_virtual_ns += work.virtual_ns;
-                                        compute_ns.fetch_add(work.compute_ns, Ordering::Relaxed);
-                                        io_ns.fetch_add(work.io_ns, Ordering::Relaxed);
-                                        if scheduler.report_success(&handle) {
-                                            merge(&task, work.payload);
-                                        }
-                                    }
-                                    Ok(None) => scheduler.report_cancelled(&handle),
-                                    Err(e) => scheduler.report_failure(&handle, &e.to_string()),
-                                }
-                            }
-                        }
-                    }
-                    max_slot_ns.fetch_max(slot_virtual_ns, Ordering::Relaxed);
-                });
-            }
-        }
-    });
-    SlotTotals {
-        max_slot_ns: max_slot_ns.load(Ordering::Relaxed),
-        compute_ns: compute_ns.load(Ordering::Relaxed),
-        io_ns: io_ns.load(Ordering::Relaxed),
-    }
-}
-
-/// Run ONE MapReduce pass that extracts every algorithm in `spec`,
-/// sharing the split read, record decode, tiling and per-tile
-/// intermediates across them.  Returns one [`JobReport`] per algorithm
-/// (in `spec.algorithms` order); job-level quantities — `sim_seconds`,
-/// `wall_seconds`, `compute_seconds`, `io_seconds`, `counters` — are
-/// those of the shared pass and therefore identical across the reports.
+/// Run ONE map pass that extracts every algorithm in `spec`, sharing the
+/// split read, record decode, tiling and per-tile intermediates across
+/// them.  Returns one [`JobReport`] per algorithm (in `spec.algorithms`
+/// order); job-level quantities — `sim_seconds`, `wall_seconds`,
+/// `compute_seconds`, `io_seconds`, `counters` — are those of the shared
+/// pass and therefore identical across the reports.
 pub fn run_fused_job(
     cfg: &Config,
     dfs: &Dfs,
@@ -256,532 +179,45 @@ pub fn run_fused_job(
     if spec.algorithms.is_empty() {
         return Ok(Vec::new());
     }
-    if spec.algorithms.len() != spec.per_image_caps.len() {
-        return Err(DifetError::Config(
-            "fused job: one per-image cap per algorithm required".into(),
-        ));
-    }
-    let n_algs = spec.algorithms.len();
-    let wall = Stopwatch::start();
-    let cost = CostModel::new(&cfg.cluster);
-
-    // ---- plan: read the bundle index, compute record-aligned splits ----
-    // (jobtracker-side planning; its I/O is part of the modeled startup.)
-    let (bundle_bytes, _) = dfs.read_file(&spec.bundle_path, NodeId(0))?;
-    let (tasks, metas) = {
-        let reader = BundleReader::open(&bundle_bytes)?;
-        let metas: Vec<RecordMeta> = reader.metas().to_vec();
-        // HIPI semantics (paper §3): one mapper per image.  A 1-byte split
-        // target makes every record its own split; block-sized splits are
-        // the plain-Hadoop alternative (ablations A4 measures the trade).
-        let split_target = if cfg.scheduler.split_per_image {
-            1
-        } else {
-            cfg.storage.block_size as u64
-        };
-        let splits = hib::splits(&reader, split_target);
-        let mut tasks = Vec::with_capacity(splits.len());
-        for (i, s) in splits.iter().enumerate() {
-            let preferred = dfs
-                .locate_range(&spec.bundle_path, s.byte_start, s.byte_end)
-                .unwrap_or_default();
-            tasks.push(TaskDescriptor {
-                task_id: i,
-                first_record: s.first_record,
-                last_record: s.last_record,
-                byte_start: s.byte_start,
-                byte_end: s.byte_end,
-                preferred_nodes: preferred,
-            });
-        }
-        (tasks, metas)
-    };
-    drop(bundle_bytes);
-    let n_tasks = tasks.len();
-    let n_images = metas.len();
-
-    let scheduler = Scheduler::new(tasks, &cfg.scheduler);
-    let outputs: Mutex<Vec<Vec<MapOutput>>> = Mutex::new(vec![Vec::new(); n_algs]);
-    let tiles_counter = registry.counter("tiles_processed");
-    let tile_hist = registry.histogram("tile_latency");
-
-    let totals = run_slots(
-        &cfg.cluster,
-        &scheduler,
-        |desc: &TaskDescriptor, handle, node| {
-            map_task(
-                cfg, dfs, executor, spec, hooks, &cost, &metas, desc, handle, node,
-                &tiles_counter, &tile_hist,
-            )
-        },
-        |_desc, task_outputs| {
-            let mut merged = outputs.lock().unwrap();
-            for (dst, src) in merged.iter_mut().zip(task_outputs) {
-                dst.extend(src);
-            }
-        },
-    );
-
-    if let Some(reason) = scheduler.abort_reason() {
-        return Err(DifetError::Job(reason));
-    }
-
-    let outputs = outputs.into_inner().unwrap();
-    let sim_seconds = cost.job_startup() + totals.max_slot_ns as f64 * 1e-9;
-    let wall_seconds = wall.elapsed_secs();
-    let compute_seconds = totals.compute_ns as f64 * 1e-9;
-    let io_seconds = totals.io_ns as f64 * 1e-9;
-
-    let mut counters = std::collections::BTreeMap::new();
-    counters.insert("tasks".into(), n_tasks as u64);
-    counters.insert(
-        "data_local_tasks".into(),
-        scheduler.data_local_tasks.load(Ordering::Relaxed),
-    );
-    counters.insert(
-        "rack_remote_tasks".into(),
-        scheduler.rack_remote_tasks.load(Ordering::Relaxed),
-    );
-    counters.insert(
-        "speculative_launches".into(),
-        scheduler.speculative_launches.load(Ordering::Relaxed),
-    );
-    counters.insert("retries".into(), scheduler.retries.load(Ordering::Relaxed));
-    counters.insert("tiles".into(), tiles_counter.get());
-    counters.insert("fused_algorithms".into(), n_algs as u64);
-
-    let mut reports = Vec::with_capacity(n_algs);
-    for (i, alg_outputs) in outputs.into_iter().enumerate() {
-        let images = super::shuffle::merge_image_outputs(
-            alg_outputs,
-            spec.per_image_caps[i],
-            spec.report_keypoints,
-        );
-        if images.len() != n_images {
-            return Err(DifetError::Job(format!(
-                "{}: merged {} images, bundle has {n_images}",
-                spec.algorithms[i],
-                images.len()
-            )));
-        }
-        reports.push(JobReport {
-            algorithm: spec.algorithms[i].clone(),
-            nodes: cfg.cluster.nodes,
-            image_count: n_images,
-            sim_seconds,
-            wall_seconds,
-            compute_seconds,
-            io_seconds,
-            images,
-            counters: counters.clone(),
-        });
-    }
-    Ok(reports)
+    let stage = ExtractStage::new(cfg, dfs, executor, spec.clone(), registry, hooks)?;
+    let dag = run_dag(cfg, &[&stage], ExecMode::from_config(cfg), registry)?;
+    stage.reports(&dag.stages[0], dag.sim_seconds, dag.wall_seconds)
 }
-
-/// The mapper body: split read → record decode → tile loop → aggregate.
-/// Input I/O happens ONCE regardless of how many algorithms are fused.
-/// The payload is one `Vec<MapOutput>` per algorithm (spec order).
-#[allow(clippy::too_many_arguments)]
-fn map_task(
-    cfg: &Config,
-    dfs: &Dfs,
-    executor: &dyn TileExecutor,
-    spec: &FusedJobSpec,
-    hooks: &JobHooks,
-    cost: &CostModel,
-    metas: &[RecordMeta],
-    desc: &TaskDescriptor,
-    handle: &TaskHandle,
-    node: NodeId,
-    tiles_counter: &crate::metrics::Counter,
-    tile_hist: &crate::metrics::Histogram,
-) -> Result<Option<SlotWork<Vec<Vec<MapOutput>>>>> {
-    // Failure injection happens before any work, like a crashed JVM.
-    if let Some(f) = &hooks.fail {
-        if f(desc.task_id, handle.attempt) {
-            return Err(DifetError::Job(format!(
-                "injected failure (task {}, attempt {})",
-                desc.task_id, handle.attempt
-            )));
-        }
-    }
-
-    let mut io_secs = 0.0f64;
-    let mut compute_ns = 0u64;
-
-    // --- input: read this split's byte range from DFS ----------------------
-    let (bytes, stats) = dfs.read_range(&spec.bundle_path, desc.byte_start, desc.byte_end, node)?;
-    io_secs += cost.split_input(stats.local_bytes, stats.remote_bytes);
-
-    let mut outputs: Vec<Vec<MapOutput>> = vec![
-        Vec::with_capacity(desc.last_record - desc.first_record);
-        spec.algorithms.len()
-    ];
-    let total_records = (desc.last_record - desc.first_record).max(1);
-
-    for (done, rec) in (desc.first_record..desc.last_record).enumerate() {
-        if handle.cancelled() {
-            return Ok(None);
-        }
-        let rec_off = (metas[rec].offset - desc.byte_start) as usize;
-        let (image_id, image, _) = hib::decode_record(&bytes[rec_off..])?;
-
-        let (map_out, tile_compute_ns) = map_one_image(
-            executor,
-            spec,
-            image_id,
-            &image,
-            handle,
-            tiles_counter,
-            tile_hist,
-        )?;
-        let Some(map_out) = map_out else {
-            return Ok(None); // cancelled mid-image
-        };
-        compute_ns += tile_compute_ns;
-
-        // --- output: the paper's mapper step 5 writes the annotated image
-        // back to HDFS, once per algorithm (each census is its own
-        // artifact, exactly as seven independent jobs would leave).  We
-        // store the keypoint summary (real bytes) and model the cost of
-        // the image-sized write the paper performs.
-        if spec.write_output {
-            for (alg, out) in spec.algorithms.iter().zip(&map_out) {
-                let summary = serialize_output(out);
-                let out_path = format!("{}.out/{alg}/{image_id}", spec.bundle_path);
-                dfs.write_file(&out_path, &summary, node)?;
-                io_secs += cost.hdfs_write(image.byte_len() as u64, cfg.cluster.replication);
-            }
-        }
-        for (dst, out) in outputs.iter_mut().zip(map_out) {
-            dst.push(out);
-        }
-        handle.report_progress((done + 1) as f64 / total_records as f64);
-    }
-
-    let io_ns = (io_secs * 1e9) as u64;
-    let overhead_ns = (cost.task_overhead() * 1e9) as u64;
-    Ok(Some(SlotWork {
-        payload: outputs,
-        virtual_ns: overhead_ns + io_ns + compute_ns,
-        compute_ns,
-        io_ns,
-    }))
-}
-
-/// Extract one image: tile it, run the executor once per tile (all
-/// algorithms fused), merge per algorithm.  Returns one [`MapOutput`]
-/// per algorithm, in spec order.
-fn map_one_image(
-    executor: &dyn TileExecutor,
-    spec: &FusedJobSpec,
-    image_id: u64,
-    image: &Rgba8Image,
-    handle: &TaskHandle,
-    tiles_counter: &crate::metrics::Counter,
-    tile_hist: &crate::metrics::Histogram,
-) -> Result<(Option<Vec<MapOutput>>, u64)> {
-    let n = spec.algorithms.len();
-    let alg_names: Vec<&str> = spec.algorithms.iter().map(|s| s.as_str()).collect();
-    let keeps: Vec<usize> = spec
-        .per_image_caps
-        .iter()
-        .map(|&cap| mapper_retention(cap, spec.report_keypoints))
-        .collect();
-    let mut raw_count = vec![0u64; n];
-    let mut descriptor_count = vec![0u64; n];
-    let mut keypoints: Vec<Vec<crate::features::Keypoint>> = vec![Vec::new(); n];
-    // Descriptor rows parallel to `keypoints` (only filled when the spec
-    // keeps them; `None` rows make every re-rank below a plain sort).
-    let mut descriptors: Vec<Descriptors> = vec![Descriptors::None; n];
-    let mut compute_ns = 0u64;
-
-    for tile in TileIter::new(image.width, image.height) {
-        if handle.cancelled() {
-            return Ok((None, compute_ns));
-        }
-        let buf = extract_tile_f32(image, &tile);
-        let t0 = std::time::Instant::now();
-        let feats_multi = executor.run_tile_multi(&alg_names, &buf, tile.core_local())?;
-        let dt = t0.elapsed();
-        compute_ns += dt.as_nanos() as u64;
-        tile_hist.observe(dt.as_secs_f64());
-        tiles_counter.inc();
-
-        for (i, feats) in feats_multi.into_iter().enumerate() {
-            raw_count[i] += feats.count;
-            descriptor_count[i] += feats.descriptors.len() as u64;
-            if spec.keep_descriptors {
-                // Extractors emit exactly one row per retained keypoint,
-                // in keypoint order, so appending both keeps row i of the
-                // batch describing keypoint i.
-                descriptors[i].append(feats.descriptors)?;
-            }
-            for kp in feats.keypoints {
-                let (sr, sc) = tile.to_scene(kp.row, kp.col);
-                keypoints[i].push(crate::features::Keypoint {
-                    row: sr as i32,
-                    col: sc as i32,
-                    score: kp.score,
-                });
-            }
-            // Keep the buffer bounded: re-rank and truncate when 4× over.
-            if keypoints[i].len() > keeps[i] * 4 {
-                rank_truncate(&mut keypoints[i], &mut descriptors[i], keeps[i]);
-            }
-        }
-    }
-
-    let mut out = Vec::with_capacity(n);
-    for i in 0..n {
-        let mut kps = std::mem::take(&mut keypoints[i]);
-        let mut descs = std::mem::take(&mut descriptors[i]);
-        rank_truncate(&mut kps, &mut descs, keeps[i]);
-        out.push(MapOutput {
-            image_id,
-            raw_count: raw_count[i],
-            keypoints: kps,
-            descriptor_count: descriptor_count[i],
-            descriptors: descs,
-        });
-    }
-    Ok((Some(out), compute_ns))
-}
-
-// ---------------------------------------------------------------------------
-// The registration job: reduce-side scene-pair matching.
-// ---------------------------------------------------------------------------
 
 /// Run a registration job over the per-scene censuses a
-/// `keep_descriptors` extraction produced: shuffle each scene's
-/// keypoints+descriptors into DFS feature files, enumerate scene pairs,
-/// and run reduce-side descriptor matching + translation RANSAC on the
-/// worker slots through the same [`Scheduler`] the map stage uses — pair
-/// tasks get locality (toward the nodes holding the feature files),
-/// bounded retries and straggler speculation for free.
+/// `keep_descriptors` extraction produced: the stage plan shuffles each
+/// scene's keypoints+descriptors into DFS feature files, scene pairs
+/// become reduce units, and reduce-side ratio-test matching +
+/// translation RANSAC runs on the worker slots.
 ///
-/// Determinism contract: pair results depend only on the censuses and the
-/// spec (per-pair seeds come from [`pair_seed`]), never on which
-/// node/slot/attempt ran the pair, so the report is byte-identical across
-/// runs and matches the sequential `match_descriptors` +
-/// `ransac_translation` baseline exactly.
+/// Determinism contract: pair results depend only on the censuses and
+/// the spec (per-pair seeds come from [`super::job::pair_seed`]), never
+/// on which node/slot/attempt ran the pair, so the report is
+/// byte-identical across runs and matches the sequential
+/// `match_descriptors` + `ransac_translation` baseline exactly.
 pub fn run_registration_job(
     cfg: &Config,
     dfs: &Dfs,
-    censuses: &[ImageCensus],
+    censuses: &[super::job::ImageCensus],
     spec: &RegistrationSpec,
     registry: &Registry,
     hooks: &JobHooks,
 ) -> Result<RegistrationReport> {
-    let wall = Stopwatch::start();
-    let cost = CostModel::new(&cfg.cluster);
-
-    let scene_ids: Vec<u64> = censuses.iter().map(|c| c.image_id).collect();
-    let pairs = shuffle::enumerate_pairs(&scene_ids, spec.pairs.as_deref())?;
-    let by_id: std::collections::BTreeMap<u64, &ImageCensus> =
-        censuses.iter().map(|c| (c.image_id, c)).collect();
-    if by_id.len() != censuses.len() {
-        return Err(DifetError::Job("duplicate image ids in census set".into()));
-    }
-
-    // ---- shuffle: write each referenced scene's features into DFS --------
-    // (the descriptor payloads the paper-shaped map stage would have left
-    // behind; pair reducers fetch them with real locality accounting.)
-    let mut needed: Vec<u64> = pairs.iter().flat_map(|&(a, b)| [a, b]).collect();
-    needed.sort_unstable();
-    needed.dedup();
-    let feature_path =
-        |id: u64| format!("{}/{}/{id}", spec.feature_dir, spec.algorithm);
-    let mut shuffle_write_secs = vec![0.0f64; cfg.cluster.nodes];
-    for &id in &needed {
-        let census = by_id[&id];
-        let bytes = shuffle::encode_features(census);
-        // Spread feature files round-robin, like reducer partitions.
-        let writer = NodeId(id as usize % cfg.cluster.nodes);
-        dfs.write_file(&feature_path(id), &bytes, writer)?;
-        shuffle_write_secs[writer.0] +=
-            cost.hdfs_write(bytes.len() as u64, cfg.cluster.replication);
-    }
-    let shuffle_secs = shuffle_write_secs.iter().cloned().fold(0.0, f64::max);
-
-    // ---- plan: one reduce task per scene pair ----------------------------
-    let tasks: Vec<PairTask> = pairs
-        .iter()
-        .enumerate()
-        .map(|(pair_id, &(a, b))| {
-            let (path_a, path_b) = (feature_path(a), feature_path(b));
-            let mut preferred = Vec::new();
-            for path in [&path_a, &path_b] {
-                if let Ok(meta) = dfs.namenode().file_meta(path) {
-                    if let Ok(nodes) = dfs.locate_range(path, 0, meta.len) {
-                        for n in nodes {
-                            if !preferred.contains(&n) {
-                                preferred.push(n);
-                            }
-                        }
-                    }
-                }
-            }
-            PairTask { pair_id, image_a: a, image_b: b, path_a, path_b, preferred_nodes: preferred }
-        })
-        .collect();
-    let n_pairs = tasks.len();
-
-    let scheduler: Scheduler<PairTask> = Scheduler::new(tasks, &cfg.scheduler);
-    let results: Mutex<Vec<Option<PairResult>>> = Mutex::new(vec![None; n_pairs]);
-    let pairs_counter = registry.counter("pairs_processed");
-    let pair_hist = registry.histogram("pair_latency");
-
-    let totals = run_slots(
-        &cfg.cluster,
-        &scheduler,
-        |task: &PairTask, handle, node| {
-            let work = reduce_pair(dfs, spec, hooks, &cost, task, handle, node)?;
-            if let Some(w) = &work {
-                pair_hist.observe(w.compute_ns as f64 * 1e-9);
-            }
-            Ok(work)
-        },
-        |task, result| {
-            pairs_counter.inc();
-            results.lock().unwrap()[task.pair_id] = Some(result);
-        },
+    let stage = PairStage::new(
+        cfg,
+        dfs,
+        spec.clone(),
+        PairSource::Censuses(censuses),
+        registry,
+        hooks,
     );
-
-    if let Some(reason) = scheduler.abort_reason() {
-        return Err(DifetError::Job(reason));
-    }
-
-    let results: Vec<PairResult> = results
-        .into_inner()
-        .unwrap()
-        .into_iter()
-        .collect::<Option<Vec<_>>>()
-        .ok_or_else(|| DifetError::Job("registration pair lost its result".into()))?;
-
-    let mut counters = std::collections::BTreeMap::new();
-    counters.insert("pairs".into(), n_pairs as u64);
-    counters.insert(
-        "registered_pairs".into(),
-        results.iter().filter(|p| p.translation.is_some()).count() as u64,
-    );
-    counters.insert(
-        "data_local_tasks".into(),
-        scheduler.data_local_tasks.load(Ordering::Relaxed),
-    );
-    counters.insert(
-        "rack_remote_tasks".into(),
-        scheduler.rack_remote_tasks.load(Ordering::Relaxed),
-    );
-    counters.insert(
-        "speculative_launches".into(),
-        scheduler.speculative_launches.load(Ordering::Relaxed),
-    );
-    counters.insert("retries".into(), scheduler.retries.load(Ordering::Relaxed));
-
-    Ok(RegistrationReport {
-        algorithm: spec.algorithm.clone(),
-        nodes: cfg.cluster.nodes,
-        pair_count: n_pairs,
-        sim_seconds: cost.job_startup() + shuffle_secs + totals.max_slot_ns as f64 * 1e-9,
-        wall_seconds: wall.elapsed_secs(),
-        compute_seconds: totals.compute_ns as f64 * 1e-9,
-        io_seconds: totals.io_ns as f64 * 1e-9,
-        pairs: results,
-        counters,
-    })
+    let dag = run_dag(cfg, &[&stage], ExecMode::from_config(cfg), registry)?;
+    stage.report(&dag.stages[0], dag.sim_seconds, dag.wall_seconds)
 }
 
-/// The reducer body: fetch both feature files, match descriptors
-/// (chunked, reporting progress and honouring cancellation so a losing
-/// speculative twin dies mid-scan), then RANSAC the translation.
-fn reduce_pair(
-    dfs: &Dfs,
-    spec: &RegistrationSpec,
-    hooks: &JobHooks,
-    cost: &CostModel,
-    task: &PairTask,
-    handle: &TaskHandle,
-    node: NodeId,
-) -> Result<Option<SlotWork<PairResult>>> {
-    if let Some(f) = &hooks.fail {
-        if f(task.pair_id, handle.attempt) {
-            return Err(DifetError::Job(format!(
-                "injected failure (pair {}, attempt {})",
-                task.pair_id, handle.attempt
-            )));
-        }
-    }
-
-    // --- shuffle input: fetch both scenes' features -----------------------
-    let (bytes_a, stats_a) = dfs.read_file(&task.path_a, node)?;
-    let (bytes_b, stats_b) = dfs.read_file(&task.path_b, node)?;
-    let io_secs = cost.split_input(
-        stats_a.local_bytes + stats_b.local_bytes,
-        stats_a.remote_bytes + stats_b.remote_bytes,
-    );
-    let (id_a, kps_a, desc_a) = shuffle::decode_features(&bytes_a)?;
-    let (id_b, kps_b, desc_b) = shuffle::decode_features(&bytes_b)?;
-    if (id_a, id_b) != (task.image_a, task.image_b) {
-        return Err(DifetError::Job(format!(
-            "feature file routing mixup: wanted ({}, {}), got ({id_a}, {id_b})",
-            task.image_a, task.image_b
-        )));
-    }
-
-    // --- reduce: match + register ----------------------------------------
-    let t0 = std::time::Instant::now();
-    const MATCH_CHUNK: usize = 64;
-    let Some(matches) =
-        match_descriptors_while(&desc_a, &desc_b, spec.ratio, MATCH_CHUNK, &mut |done, total| {
-            handle.report_progress(done as f64 / total.max(1) as f64);
-            !handle.cancelled()
-        })
-    else {
-        return Ok(None); // cancelled: the twin won
-    };
-    if handle.cancelled() {
-        return Ok(None);
-    }
-    let translation = if matches.len() >= spec.min_matches {
-        ransac_translation(
-            &kps_a,
-            &kps_b,
-            &matches,
-            spec.tolerance_px,
-            spec.ransac_iters,
-            pair_seed(spec.seed, task.image_a, task.image_b),
-        )
-    } else {
-        None
-    };
-    let compute_ns = t0.elapsed().as_nanos() as u64;
-
-    let io_ns = (io_secs * 1e9) as u64;
-    let overhead_ns = (cost.task_overhead() * 1e9) as u64;
-    Ok(Some(SlotWork {
-        payload: PairResult {
-            image_a: task.image_a,
-            image_b: task.image_b,
-            matches: matches.len(),
-            translation,
-        },
-        virtual_ns: overhead_ns + io_ns + compute_ns,
-        compute_ns,
-        io_ns,
-    }))
-}
-
-// ---------------------------------------------------------------------------
-// The mosaic job: canvas-tile compositing over aligned scenes.
-// ---------------------------------------------------------------------------
-
-/// Run a mosaic job: shuffle the scene images into CRC-guarded DFS files,
-/// split the canvas into tile-shaped work units on the same generic
-/// [`Scheduler`] (the third `WorkItem` shape — locality toward the nodes
-/// holding the overlapping scene files, bounded retries, straggler
-/// speculation), and composite each tile with the blend the spec names.
+/// Run a mosaic job: shuffle the scene images into CRC-guarded DFS
+/// files, split the canvas into tile-shaped work units, composite each
+/// tile with the blend the spec names.
 ///
 /// Determinism contract: every canvas pixel is a pure function of the
 /// scenes covering it and the blend mode
@@ -802,244 +238,39 @@ pub fn run_mosaic_job(
     registry: &Registry,
     hooks: &JobHooks,
 ) -> Result<(MosaicReport, Rgba8Image)> {
-    let wall = Stopwatch::start();
-    let cost = CostModel::new(&cfg.cluster);
-
-    // ---- layout: solved positions → integer canvas placements ------------
-    let dims: Vec<(u64, usize, usize)> = scenes
-        .iter()
-        .map(|(id, img)| (*id, img.width, img.height))
-        .collect();
-    // (layout rejects duplicate scene ids, so `by_id` is lossless.)
-    let canvas = crate::mosaic::layout(alignment, &dims)?;
-    let by_id: std::collections::BTreeMap<u64, &Rgba8Image> =
-        scenes.iter().map(|(id, img)| (*id, img)).collect();
-
-    // ---- shuffle: write each scene image into DFS -------------------------
-    // (the canvas-tile reducers fetch them with real locality accounting;
-    // payloads ride the hib codec under the storage compression policy.)
-    let scene_codec = if cfg.storage.compress {
-        crate::hib::Codec::Deflate
-    } else {
-        crate::hib::Codec::Raw
-    };
-    let scene_path = |id: u64| format!("{}/{id}", spec.scene_dir);
-    let mut shuffle_write_secs = vec![0.0f64; cfg.cluster.nodes];
-    for (id, img) in scenes {
-        let bytes =
-            shuffle::encode_scene(*id, img, scene_codec, cfg.storage.compression_level)?;
-        // Spread scene files round-robin, like reducer partitions.
-        let writer = NodeId(*id as usize % cfg.cluster.nodes);
-        dfs.write_file(&scene_path(*id), &bytes, writer)?;
-        shuffle_write_secs[writer.0] +=
-            cost.hdfs_write(bytes.len() as u64, cfg.cluster.replication);
-    }
-    let shuffle_secs = shuffle_write_secs.iter().cloned().fold(0.0, f64::max);
-
-    // ---- plan: one work unit per canvas tile ------------------------------
-    let tasks: Vec<CanvasTile> = crate::mosaic::tile_rects(&canvas, spec.canvas_tile)
-        .into_iter()
-        .enumerate()
-        .map(|(tile_id, rect)| {
-            let scene_ids = crate::mosaic::scenes_in_rect(&canvas, rect);
-            let scene_paths: Vec<String> = scene_ids.iter().map(|&id| scene_path(id)).collect();
-            let mut preferred = Vec::new();
-            for path in &scene_paths {
-                if let Ok(meta) = dfs.namenode().file_meta(path) {
-                    if let Ok(nodes) = dfs.locate_range(path, 0, meta.len) {
-                        for n in nodes {
-                            if !preferred.contains(&n) {
-                                preferred.push(n);
-                            }
-                        }
-                    }
-                }
-            }
-            CanvasTile { tile_id, rect, scene_ids, scene_paths, preferred_nodes: preferred }
-        })
-        .collect();
-    let n_tiles = tasks.len();
-
-    let scheduler: Scheduler<CanvasTile> = Scheduler::new(tasks, &cfg.scheduler);
-    let results: Mutex<Vec<Option<Vec<u8>>>> = Mutex::new(vec![None; n_tiles]);
-    let tiles_counter = registry.counter("canvas_tiles");
-    let tile_hist = registry.histogram("canvas_tile_latency");
-
-    let totals = run_slots(
-        &cfg.cluster,
-        &scheduler,
-        |task: &CanvasTile, handle, node| {
-            let work = mosaic_tile(dfs, spec, hooks, &cost, &canvas, task, handle, node)?;
-            if let Some(w) = &work {
-                tile_hist.observe(w.compute_ns as f64 * 1e-9);
-            }
-            Ok(work)
-        },
-        |task, pixels| {
-            tiles_counter.inc();
-            results.lock().unwrap()[task.tile_id] = Some(pixels);
-        },
+    let stage = CompositeStage::new(
+        cfg,
+        dfs,
+        scenes,
+        AlignSource::Given(alignment),
+        spec.clone(),
+        registry,
+        hooks,
     );
-
-    if let Some(reason) = scheduler.abort_reason() {
-        return Err(DifetError::Job(reason));
-    }
-
-    // ---- assemble: tile pixels → one canvas -------------------------------
-    let tiles: Vec<Vec<u8>> = results
-        .into_inner()
-        .unwrap()
-        .into_iter()
-        .collect::<Option<Vec<_>>>()
-        .ok_or_else(|| DifetError::Job("mosaic tile lost its result".into()))?;
-    let mut mosaic = Rgba8Image::new(canvas.width, canvas.height);
-    for (rect, px) in crate::mosaic::tile_rects(&canvas, spec.canvas_tile)
-        .into_iter()
-        .zip(&tiles)
-    {
-        let [r0, r1, c0, c1] = rect;
-        mosaic.blit(r0, c0, r1 - r0, c1 - c0, px);
-    }
-
-    // ---- seam diagnostics -------------------------------------------------
-    let overlaps = crate::mosaic::overlap_stats(&canvas, &by_id)?;
-    let rms_hist = registry.histogram("overlap_rms");
-    for o in &overlaps {
-        rms_hist.observe(o.rms);
-    }
-    registry
-        .gauge("mosaic_max_cycle_residual")
-        .set(alignment.max_residual());
-
-    let mut counters = std::collections::BTreeMap::new();
-    counters.insert("tiles".into(), n_tiles as u64);
-    counters.insert("scenes".into(), scenes.len() as u64);
-    counters.insert("overlaps".into(), overlaps.len() as u64);
-    counters.insert(
-        "data_local_tasks".into(),
-        scheduler.data_local_tasks.load(Ordering::Relaxed),
-    );
-    counters.insert(
-        "rack_remote_tasks".into(),
-        scheduler.rack_remote_tasks.load(Ordering::Relaxed),
-    );
-    counters.insert(
-        "speculative_launches".into(),
-        scheduler.speculative_launches.load(Ordering::Relaxed),
-    );
-    counters.insert("retries".into(), scheduler.retries.load(Ordering::Relaxed));
-
-    let report = MosaicReport {
-        nodes: cfg.cluster.nodes,
-        scene_count: scenes.len(),
-        canvas_width: canvas.width,
-        canvas_height: canvas.height,
-        tile_count: n_tiles,
-        blend: spec.blend,
-        sim_seconds: cost.job_startup() + shuffle_secs + totals.max_slot_ns as f64 * 1e-9,
-        wall_seconds: wall.elapsed_secs(),
-        compute_seconds: totals.compute_ns as f64 * 1e-9,
-        io_seconds: totals.io_ns as f64 * 1e-9,
-        overlaps,
-        max_cycle_residual: alignment.max_residual(),
-        rms_cycle_residual: alignment.rms_residual(),
-        counters,
-    };
+    let dag = run_dag(cfg, &[&stage], ExecMode::from_config(cfg), registry)?;
+    let report = stage.report(&dag.stages[0], dag.sim_seconds, dag.wall_seconds);
+    let mosaic = stage.mosaic()?;
     Ok((report, mosaic))
 }
 
-/// The mosaic work-unit body: fetch the scenes overlapping this canvas
-/// tile from DFS, decode them (CRC-guarded), composite the rect with
-/// row-level progress reporting and cooperative cancellation (a losing
-/// speculative twin dies mid-render).
-#[allow(clippy::too_many_arguments)]
-fn mosaic_tile(
-    dfs: &Dfs,
-    spec: &MosaicSpec,
-    hooks: &JobHooks,
-    cost: &CostModel,
-    canvas: &crate::mosaic::Canvas,
-    task: &CanvasTile,
-    handle: &TaskHandle,
-    node: NodeId,
-) -> Result<Option<SlotWork<Vec<u8>>>> {
-    if let Some(f) = &hooks.fail {
-        if f(task.tile_id, handle.attempt) {
-            return Err(DifetError::Job(format!(
-                "injected failure (tile {}, attempt {})",
-                task.tile_id, handle.attempt
-            )));
-        }
-    }
-
-    // --- shuffle input: fetch only the scenes overlapping this rect -------
-    let mut io_secs = 0.0f64;
-    let mut tile_scenes: Vec<(u64, Rgba8Image)> = Vec::with_capacity(task.scene_paths.len());
-    for (expected_id, path) in task.scene_ids.iter().zip(&task.scene_paths) {
-        if handle.cancelled() {
-            return Ok(None);
-        }
-        let (bytes, stats) = dfs.read_file(path, node)?;
-        io_secs += cost.split_input(stats.local_bytes, stats.remote_bytes);
-        let (id, img) = shuffle::decode_scene(&bytes)?;
-        if id != *expected_id {
-            return Err(DifetError::Job(format!(
-                "scene file routing mixup: wanted {expected_id}, got {id}"
-            )));
-        }
-        tile_scenes.push((id, img));
-    }
-    let by_id: std::collections::BTreeMap<u64, &Rgba8Image> =
-        tile_scenes.iter().map(|(id, img)| (*id, img)).collect();
-
-    // --- reduce: composite the rect ---------------------------------------
-    let t0 = std::time::Instant::now();
-    let Some(pixels) =
-        crate::mosaic::composite_rect_while(canvas, &by_id, spec.blend, task.rect, &mut |done,
-                 total| {
-            handle.report_progress(done as f64 / total.max(1) as f64);
-            !handle.cancelled()
-        })?
-    else {
-        return Ok(None); // cancelled: the twin won
-    };
-    let compute_ns = t0.elapsed().as_nanos() as u64;
-
-    let io_ns = (io_secs * 1e9) as u64;
-    let overhead_ns = (cost.task_overhead() * 1e9) as u64;
-    Ok(Some(SlotWork {
-        payload: pixels,
-        virtual_ns: overhead_ns + io_ns + compute_ns,
-        compute_ns,
-        io_ns,
-    }))
-}
-
-// ---------------------------------------------------------------------------
-// The vector job: band-tile connected-component labeling over a mask.
-// ---------------------------------------------------------------------------
-
 /// Run an object-extraction labeling job: shuffle the segmented mask
-/// into DFS (1 byte/pixel, header-free, so band workers fetch their rows
-/// as one contiguous range read), split it into full-width band units on
-/// the same generic [`Scheduler`] (the fourth `WorkItem` shape —
-/// locality toward the nodes holding the band's blocks, bounded retries,
-/// straggler speculation), label each band locally, route the tile
-/// labels back through CRC-guarded DFS files
-/// ([`shuffle::encode_labels`]), and stitch them into global object ids
-/// with the reduce-side union-find merge.
+/// into DFS (1 byte/pixel, header-free, so band workers fetch their
+/// rows as one contiguous range read), split it into full-width band
+/// units, label each band locally, route the tile labels back through
+/// CRC-guarded DFS files, and stitch them into global object ids with
+/// the reduce-side union-find merge.
 ///
 /// Determinism contract: tile-local components are keyed by the global
-/// row-major index of their first pixel and final object ids ascend with
-/// each merged object's minimum key
-/// ([`crate::vector::merge_tile_labels`]), so — unlike RANSAC pairs — no
-/// per-pair seeds are even needed: the merged raster and object table
-/// are bit-identical to [`crate::vector::label_sequential`] at any node
-/// count, band size, and across retry/speculation histories.
+/// row-major index of their first pixel and final object ids ascend
+/// with each merged object's minimum key
+/// ([`crate::vector::merge_tile_labels`]), so the merged raster and
+/// object table are bit-identical to
+/// [`crate::vector::label_sequential`] at any node count, band size,
+/// and across retry/speculation histories.
 ///
-/// Returns the job report plus the merged label raster and object table.
-/// Diagnostics land in `registry` too: the `objects_extracted` counter
-/// and the `vector_max_merge_residual` gauge.
+/// Returns the job report plus the merged label raster and object
+/// table.  Diagnostics land in `registry` too: the `objects_extracted`
+/// counter and the `vector_max_merge_residual` gauge.
 pub fn run_vector_job(
     cfg: &Config,
     dfs: &Dfs,
@@ -1048,231 +279,20 @@ pub fn run_vector_job(
     registry: &Registry,
     hooks: &JobHooks,
 ) -> Result<(
-    super::job::VectorReport,
+    VectorReport,
     crate::vector::Labels,
     Vec<crate::vector::ObjectStats>,
 )> {
-    let wall = Stopwatch::start();
-    let cost = CostModel::new(&cfg.cluster);
-    if mask.width == 0 || mask.height == 0 {
-        return Err(DifetError::Job("vector job: empty mask".into()));
-    }
-    if mask.data.len() != mask.width * mask.height {
-        return Err(DifetError::Job(format!(
-            "vector job: mask raster has {} cells, {}×{} needs {}",
-            mask.data.len(),
-            mask.width,
-            mask.height,
-            mask.width * mask.height
-        )));
-    }
-
-    // ---- shuffle: write the mask raster into DFS --------------------------
-    dfs.write_file(&spec.mask_path, &mask.data, NodeId(0))?;
-    let shuffle_secs = cost.hdfs_write(mask.data.len() as u64, cfg.cluster.replication);
-
-    // ---- plan: one work unit per full-width mask band ---------------------
-    let tasks: Vec<super::job::LabelTile> =
-        crate::vector::band_rects(mask.width, mask.height, spec.band_rows)
-            .into_iter()
-            .enumerate()
-            .map(|(tile_id, rect)| {
-                let byte_start = (rect[0] * mask.width) as u64;
-                let byte_end = (rect[1] * mask.width) as u64;
-                let preferred = dfs
-                    .locate_range(&spec.mask_path, byte_start, byte_end)
-                    .unwrap_or_default();
-                super::job::LabelTile {
-                    tile_id,
-                    rect,
-                    byte_start,
-                    byte_end,
-                    mask_path: spec.mask_path.clone(),
-                    labels_path: format!("{}/{tile_id}", spec.labels_dir),
-                    preferred_nodes: preferred,
-                }
-            })
-            .collect();
-    let n_tiles = tasks.len();
-    let labels_paths: Vec<String> = tasks.iter().map(|t| t.labels_path.clone()).collect();
-
-    let scheduler: Scheduler<super::job::LabelTile> = Scheduler::new(tasks, &cfg.scheduler);
-    let done: Mutex<Vec<bool>> = Mutex::new(vec![false; n_tiles]);
-    let tiles_counter = registry.counter("label_tiles");
-    let tile_hist = registry.histogram("label_tile_latency");
-
-    let totals = run_slots(
-        &cfg.cluster,
-        &scheduler,
-        |task: &super::job::LabelTile, handle, node| {
-            let work = label_tile(cfg, dfs, hooks, &cost, task, handle, node)?;
-            if let Some(w) = &work {
-                tile_hist.observe(w.compute_ns as f64 * 1e-9);
-            }
-            Ok(work)
-        },
-        |task, ()| {
-            tiles_counter.inc();
-            done.lock().unwrap()[task.tile_id] = true;
-        },
+    let stage = LabelStage::new(
+        cfg,
+        dfs,
+        spec.clone(),
+        MaskSource::Given(mask),
+        registry,
+        hooks,
     );
-
-    if let Some(reason) = scheduler.abort_reason() {
-        return Err(DifetError::Job(reason));
-    }
-    if !done.into_inner().unwrap().into_iter().all(|d| d) {
-        return Err(DifetError::Job("vector tile lost its result".into()));
-    }
-
-    // ---- reduce: fetch the shuffled tile labels, merge the seams ----------
-    let mut tiles = Vec::with_capacity(n_tiles);
-    for (tile_id, path) in labels_paths.iter().enumerate() {
-        let (bytes, _) = dfs.read_file(path, NodeId(0))?;
-        let (id, tile) = shuffle::decode_labels(&bytes)?;
-        if id != tile_id as u64 {
-            return Err(DifetError::Job(format!(
-                "label file routing mixup: wanted {tile_id}, got {id}"
-            )));
-        }
-        tiles.push(tile);
-    }
-    let (labels, objects, mstats) =
-        crate::vector::merge_tile_labels(mask.width, mask.height, &tiles)?;
-
-    registry
-        .gauge("vector_max_merge_residual")
-        .set(mstats.max_merge_residual() as f64);
-    registry.counter("objects_extracted").add(objects.len() as u64);
-
-    let mut counters = std::collections::BTreeMap::new();
-    counters.insert("tiles".into(), n_tiles as u64);
-    counters.insert("objects".into(), objects.len() as u64);
-    counters.insert("seam_unions".into(), mstats.seam_unions);
-    counters.insert("max_merge_residual".into(), mstats.max_merge_residual());
-    counters.insert(
-        "data_local_tasks".into(),
-        scheduler.data_local_tasks.load(Ordering::Relaxed),
-    );
-    counters.insert(
-        "rack_remote_tasks".into(),
-        scheduler.rack_remote_tasks.load(Ordering::Relaxed),
-    );
-    counters.insert(
-        "speculative_launches".into(),
-        scheduler.speculative_launches.load(Ordering::Relaxed),
-    );
-    counters.insert("retries".into(), scheduler.retries.load(Ordering::Relaxed));
-
-    let report = super::job::VectorReport {
-        nodes: cfg.cluster.nodes,
-        width: mask.width,
-        height: mask.height,
-        tile_count: n_tiles,
-        object_count: objects.len(),
-        foreground_px: mask.foreground(),
-        max_merge_residual: mstats.max_merge_residual(),
-        seam_unions: mstats.seam_unions,
-        sim_seconds: cost.job_startup() + shuffle_secs + totals.max_slot_ns as f64 * 1e-9,
-        wall_seconds: wall.elapsed_secs(),
-        compute_seconds: totals.compute_ns as f64 * 1e-9,
-        io_seconds: totals.io_ns as f64 * 1e-9,
-        counters,
-    };
+    let dag = run_dag(cfg, &[&stage], ExecMode::from_config(cfg), registry)?;
+    let report = stage.report(&dag.stages[0], dag.sim_seconds, dag.wall_seconds)?;
+    let (labels, objects, _mstats) = stage.output()?;
     Ok((report, labels, objects))
-}
-
-/// The label work-unit body: fetch this band's mask rows from DFS (one
-/// contiguous range read), run tile-local CCL with row-level progress
-/// reporting and cooperative cancellation (a losing speculative twin
-/// dies mid-scan), and shuffle the encoded tile labels back into a
-/// CRC-guarded DFS file for the merge stage.
-fn label_tile(
-    cfg: &Config,
-    dfs: &Dfs,
-    hooks: &JobHooks,
-    cost: &CostModel,
-    task: &super::job::LabelTile,
-    handle: &TaskHandle,
-    node: NodeId,
-) -> Result<Option<SlotWork<()>>> {
-    if let Some(f) = &hooks.fail {
-        if f(task.tile_id, handle.attempt) {
-            return Err(DifetError::Job(format!(
-                "injected failure (tile {}, attempt {})",
-                task.tile_id, handle.attempt
-            )));
-        }
-    }
-
-    // --- input: this band's rows of the shuffled mask ---------------------
-    let (bytes, stats) =
-        dfs.read_range(&task.mask_path, task.byte_start, task.byte_end, node)?;
-    let mut io_secs = cost.split_input(stats.local_bytes, stats.remote_bytes);
-    let [r0, r1, c0, c1] = task.rect;
-    let (rows, width) = (r1 - r0, c1 - c0);
-    if c0 != 0 || bytes.len() != rows * width {
-        return Err(DifetError::Job(format!(
-            "mask band {}: got {} bytes, rect {:?} needs {}",
-            task.tile_id,
-            bytes.len(),
-            task.rect,
-            rows * width
-        )));
-    }
-    let band = crate::vector::Mask { width, height: rows, data: bytes };
-
-    // --- label the band locally -------------------------------------------
-    let t0 = std::time::Instant::now();
-    let Some(local) =
-        crate::vector::label_rect_while(&band, [0, rows, 0, width], &mut |done, total| {
-            handle.report_progress(done as f64 / total.max(1) as f64);
-            !handle.cancelled()
-        })?
-    else {
-        return Ok(None); // cancelled: the twin won
-    };
-    let tile = local.offset_rows(r0);
-    let compute_ns = t0.elapsed().as_nanos() as u64;
-    if handle.cancelled() {
-        return Ok(None);
-    }
-
-    // --- output: shuffle the tile labels into DFS --------------------------
-    // (bit-identical across attempts, so a retry or losing twin rewriting
-    // the same path is harmless.)
-    let encoded = shuffle::encode_labels(task.tile_id as u64, &tile);
-    dfs.write_file(&task.labels_path, &encoded, node)?;
-    io_secs += cost.hdfs_write(encoded.len() as u64, cfg.cluster.replication);
-
-    let io_ns = (io_secs * 1e9) as u64;
-    let overhead_ns = (cost.task_overhead() * 1e9) as u64;
-    Ok(Some(SlotWork {
-        payload: (),
-        virtual_ns: overhead_ns + io_ns + compute_ns,
-        compute_ns,
-        io_ns,
-    }))
-}
-
-/// Serialize a mapper output (the record written back to DFS).
-fn serialize_output(out: &MapOutput) -> Vec<u8> {
-    use byteorder::{ByteOrder, LittleEndian as LE};
-    let mut buf = Vec::with_capacity(16 + out.keypoints.len() * 12);
-    let mut u64b = [0u8; 8];
-    LE::write_u64(&mut u64b, out.image_id);
-    buf.extend_from_slice(&u64b);
-    LE::write_u64(&mut u64b, out.raw_count);
-    buf.extend_from_slice(&u64b);
-    let mut u32b = [0u8; 4];
-    LE::write_u32(&mut u32b, out.keypoints.len() as u32);
-    buf.extend_from_slice(&u32b);
-    for kp in &out.keypoints {
-        LE::write_u32(&mut u32b, kp.row as u32);
-        buf.extend_from_slice(&u32b);
-        LE::write_u32(&mut u32b, kp.col as u32);
-        buf.extend_from_slice(&u32b);
-        LE::write_u32(&mut u32b, kp.score.to_bits());
-        buf.extend_from_slice(&u32b);
-    }
-    buf
 }

@@ -7,15 +7,21 @@
 //! * [`job`] — job specification and the per-image/per-job result types.
 //! * [`scheduler`] — slot-level task assignment: locality-aware (prefer
 //!   nodes holding the split's blocks), FIFO within locality class,
-//!   bounded retries on failure, speculative re-execution of stragglers.
-//! * [`driver`] — the jobtracker: plans splits, spawns one worker thread
-//!   per map slot, runs the mapper body (DFS split read → HIB record
-//!   decode → tile → PJRT execute → aggregate), accounts virtual time
-//!   (measured compute + modeled I/O) and renders Hadoop-style reports.
-//! * [`shuffle`] — the reduce side: merge per-tile outputs into per-image
-//!   censuses, applying the per-image caps Table 2 exposes (Shi-Tomasi
-//!   400, ORB 500), plus descriptor routing (feature files + pair
-//!   enumeration) for the registration job.
+//!   bounded retries on failure, speculative re-execution of stragglers,
+//!   dynamic task injection for the DAG runtime.
+//! * [`dag`] — the job-DAG runtime: a generic [`DagStage`] abstraction
+//!   and the [`run_dag`] executor that drains whole multi-stage jobs
+//!   over one worker-slot pool, pipelined (unit-level input
+//!   satisfaction) or barriered (`--barrier`, the old bulk-synchronous
+//!   chaining), with identical bits either way.
+//! * [`stages`] — the four job shapes as `DagStage` definitions:
+//!   map-shaped extraction, reduce-shaped pair registration, the global
+//!   alignment solve, canvas-tile compositing and band-tile labeling.
+//! * [`driver`] — executors ([`TileExecutor`]), failure hooks and the
+//!   four single-stage job entry points kept for API stability.
+//! * [`shuffle`] — the reduce side: census merging plus the
+//!   length-prefixed, CRC-guarded record streams every inter-stage DFS
+//!   file uses (features, scenes, labels).
 //! * [`backpressure`] — the bounded queue used between planning and
 //!   execution, so a slow cluster never buffers the whole corpus.
 //!
@@ -23,17 +29,23 @@
 //! extraction ([`run_job`]/[`run_fused_job`]), the reduce-shaped
 //! *registration* job ([`run_registration_job`]) that turns extracted
 //! descriptors into cross-scene matches, the canvas-tile *mosaic* job
-//! ([`run_mosaic_job`]) that composites aligned scenes into one image —
-//! the stitching back-end the paper's follow-up work builds — and the
-//! band-tile *vector* job ([`run_vector_job`]) that labels the mosaic's
-//! segmented mask into global objects for vectorization.
+//! ([`run_mosaic_job`]) — the stitching back-end the paper's follow-up
+//! work builds — and the band-tile *vector* job ([`run_vector_job`])
+//! that labels the mosaic's segmented mask into global objects.  The
+//! pipelines in `crate::pipeline` compose them as multi-stage DAGs.
 
 pub mod backpressure;
+pub mod dag;
 pub mod driver;
 pub mod job;
 pub mod scheduler;
 pub mod shuffle;
+pub mod stages;
 
+pub use dag::{
+    run_dag, DagReport, DagStage, ExecMode, Gate, StagePlan, StageReport, UnitOutput, UnitRef,
+    UnitSpec,
+};
 pub use driver::{
     run_fused_job, run_job, run_mosaic_job, run_registration_job, run_vector_job, TileExecutor,
 };
@@ -42,8 +54,12 @@ pub use job::{
     MosaicReport, MosaicSpec, PairResult, PairTask, RegistrationReport, RegistrationSpec,
     VectorReport, VectorSpec,
 };
-pub use scheduler::{Clock, Scheduler, TaskDescriptor, TaskState, WorkItem};
+pub use scheduler::{Clock, Scheduler, TaskDescriptor, TaskHandle, TaskState, WorkItem};
 pub use shuffle::{
     decode_features, decode_labels, decode_scene, encode_features, encode_labels, encode_scene,
     enumerate_pairs, merge_image_outputs,
+};
+pub use stages::{
+    AlignSource, AlignStage, CompositeStage, ExtractStage, MaskSource, PairSource, PairStage,
+    LabelStage,
 };

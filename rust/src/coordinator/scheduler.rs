@@ -82,6 +82,9 @@ pub enum TaskState {
 pub struct TaskHandle {
     pub task_id: usize,
     pub attempt: usize,
+    /// True when this attempt was launched as a speculative twin of a
+    /// straggler (the DAG executor keys its per-stage counters off this).
+    pub speculative: bool,
     cancel: Arc<AtomicBool>,
     /// Progress in 1/1000ths of the task, updated by the mapper.
     progress_milli: Arc<AtomicU64>,
@@ -120,6 +123,9 @@ struct SchedState<D> {
     pending: Vec<usize>, // task ids, FIFO
     outstanding: usize,  // tasks not yet succeeded/failed-permanently
     aborted: Option<String>,
+    /// When false, more tasks may still be pushed ([`Scheduler::push`]):
+    /// an idle slot blocks instead of draining to `Done`.
+    closed: bool,
 }
 
 /// The scheduler shared between the driver and all worker threads.
@@ -150,23 +156,26 @@ impl<D: WorkItem> Scheduler<D> {
     /// Like [`Scheduler::new`] with an explicit progress clock (tests
     /// inject a manual counter to drive speculation without sleeping).
     pub fn with_clock(tasks: Vec<D>, cfg: &SchedulerConfig, clock: Clock) -> Self {
-        let n = tasks.len();
-        let entries = tasks
-            .into_iter()
-            .map(|desc| TaskEntry {
-                desc,
-                state: TaskState::Pending,
-                attempts_started: 0,
-                running: Vec::new(),
-                speculated: false,
-            })
-            .collect();
+        let s = Self::new_dynamic(cfg, clock);
+        for desc in tasks {
+            s.push(desc);
+        }
+        s.close();
+        s
+    }
+
+    /// An open scheduler with no tasks yet: the job-DAG executor pushes
+    /// work units as their upstream inputs become satisfied and calls
+    /// [`Scheduler::close`] when no further units can ever arrive.  Until
+    /// then, idle slots block instead of draining to `Done`.
+    pub fn new_dynamic(cfg: &SchedulerConfig, clock: Clock) -> Self {
         Scheduler {
             state: Mutex::new(SchedState {
-                tasks: entries,
-                pending: (0..n).collect(),
-                outstanding: n,
+                tasks: Vec::new(),
+                pending: Vec::new(),
+                outstanding: 0,
                 aborted: None,
+                closed: false,
             }),
             work_available: Condvar::new(),
             cfg: cfg.clone(),
@@ -178,11 +187,55 @@ impl<D: WorkItem> Scheduler<D> {
         }
     }
 
+    /// Add one task to the pending queue; returns its scheduler task id.
+    /// Panics if the scheduler was already closed.
+    pub fn push(&self, desc: D) -> usize {
+        let mut st = self.state.lock().unwrap();
+        assert!(!st.closed, "push after close");
+        let tid = st.tasks.len();
+        st.tasks.push(TaskEntry {
+            desc,
+            state: TaskState::Pending,
+            attempts_started: 0,
+            running: Vec::new(),
+            speculated: false,
+        });
+        st.pending.push(tid);
+        st.outstanding += 1;
+        self.work_available.notify_all();
+        tid
+    }
+
+    /// No more [`Scheduler::push`] calls will come: once the current
+    /// tasks drain, idle slots see [`Assignment::Done`].
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.work_available.notify_all();
+    }
+
+    /// Abort the whole job (a stage plan or merge failed): running
+    /// attempts are cancelled cooperatively and every slot drains.
+    pub fn abort(&self, reason: String) {
+        let mut st = self.state.lock().unwrap();
+        if st.aborted.is_none() {
+            st.aborted = Some(reason);
+        }
+        for e in &st.tasks {
+            for (_, a) in &e.running {
+                a.cancel.store(true, Ordering::Relaxed);
+            }
+        }
+        drop(st);
+        self.work_available.notify_all();
+    }
+
     /// Blocking work request from a slot on `node`.
     pub fn next_assignment(&self, node: NodeId) -> Assignment<D> {
         let mut st = self.state.lock().unwrap();
         loop {
-            if st.outstanding == 0 || st.aborted.is_some() {
+            if (st.outstanding == 0 && st.closed) || st.aborted.is_some() {
                 return Assignment::Done;
             }
             // 1. Locality-preferred pending task.
@@ -203,7 +256,10 @@ impl<D: WorkItem> Scheduler<D> {
                 } else {
                     self.rack_remote_tasks.fetch_add(1, Ordering::Relaxed);
                 }
-                return Assignment::Run(st.tasks[tid].desc.clone(), self.launch(&mut st, tid, node));
+                return Assignment::Run(
+                    st.tasks[tid].desc.clone(),
+                    self.launch(&mut st, tid, node, false),
+                );
             }
 
             // 2. Speculation: idle slot + no pending work.
@@ -211,7 +267,10 @@ impl<D: WorkItem> Scheduler<D> {
                 if let Some(tid) = self.pick_straggler(&st) {
                     self.speculative_launches.fetch_add(1, Ordering::Relaxed);
                     st.tasks[tid].speculated = true;
-                    return Assignment::Run(st.tasks[tid].desc.clone(), self.launch(&mut st, tid, node));
+                    return Assignment::Run(
+                        st.tasks[tid].desc.clone(),
+                        self.launch(&mut st, tid, node, true),
+                    );
                 }
             }
 
@@ -219,7 +278,13 @@ impl<D: WorkItem> Scheduler<D> {
         }
     }
 
-    fn launch(&self, st: &mut SchedState<D>, tid: usize, node: NodeId) -> TaskHandle {
+    fn launch(
+        &self,
+        st: &mut SchedState<D>,
+        tid: usize,
+        node: NodeId,
+        speculative: bool,
+    ) -> TaskHandle {
         let entry = &mut st.tasks[tid];
         entry.state = TaskState::Running;
         entry.attempts_started += 1;
@@ -238,6 +303,7 @@ impl<D: WorkItem> Scheduler<D> {
         TaskHandle {
             task_id: tid,
             attempt,
+            speculative,
             cancel,
             progress_milli: progress,
         }
@@ -289,30 +355,35 @@ impl<D: WorkItem> Scheduler<D> {
         true
     }
 
-    /// Report a failed attempt; re-queues or aborts the job.
-    pub fn report_failure(&self, handle: &TaskHandle, error: &str) {
+    /// Report a failed attempt; re-queues or aborts the job.  Returns
+    /// `true` iff the task went back to the pending queue (a retry —
+    /// the DAG executor counts these per stage).
+    pub fn report_failure(&self, handle: &TaskHandle, error: &str) -> bool {
         let mut st = self.state.lock().unwrap();
         let max_attempts = self.cfg.max_attempts;
         let entry = &mut st.tasks[handle.task_id];
         entry.running.retain(|(att, _)| *att != handle.attempt);
         if entry.state == TaskState::Succeeded {
-            return; // twin already succeeded; this failure is moot
+            return false; // twin already succeeded; this failure is moot
         }
         if !entry.running.is_empty() {
-            return; // a twin is still running; let it finish
+            return false; // a twin is still running; let it finish
         }
-        if entry.attempts_started >= max_attempts {
+        let requeued = if entry.attempts_started >= max_attempts {
             entry.state = TaskState::Failed;
             st.aborted = Some(format!(
                 "task {} failed {} attempts: {error}",
                 handle.task_id, max_attempts
             ));
+            false
         } else {
             entry.state = TaskState::Pending;
             self.retries.fetch_add(1, Ordering::Relaxed);
             st.pending.push(handle.task_id);
-        }
+            true
+        };
         self.work_available.notify_all();
+        requeued
     }
 
     /// Lost-attempt cleanup for cancelled speculative twins.
@@ -536,6 +607,47 @@ mod tests {
             _ => panic!("expected second unit"),
         }
         assert!(matches!(s.next_assignment(NodeId(3)), Assignment::Done));
+    }
+
+    #[test]
+    fn dynamic_push_blocks_idle_slots_until_close() {
+        let s = Arc::new(Scheduler::<TaskDescriptor>::new_dynamic(&cfg(), monotonic_clock()));
+        // A slot asking for work before any push must block, then receive
+        // the late-pushed task rather than Done.
+        let probe = std::thread::spawn({
+            let s = s.clone();
+            move || match s.next_assignment(NodeId(0)) {
+                Assignment::Run(d, h) => {
+                    assert!(s.report_success(&h));
+                    d.task_id
+                }
+                Assignment::Done => panic!("drained before close"),
+            }
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let tid = s.push(desc(0, &[]));
+        assert_eq!(probe.join().unwrap(), tid);
+        // Still open: another idle slot must block until close().
+        let probe = std::thread::spawn({
+            let s = s.clone();
+            move || matches!(s.next_assignment(NodeId(1)), Assignment::Done)
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        s.close();
+        assert!(probe.join().unwrap(), "close must drain idle slots");
+    }
+
+    #[test]
+    fn abort_cancels_running_attempts_and_drains() {
+        let s = Scheduler::new(vec![desc(0, &[]), desc(1, &[])], &cfg());
+        let h = match s.next_assignment(NodeId(0)) {
+            Assignment::Run(_, h) => h,
+            _ => panic!(),
+        };
+        s.abort("stage plan failed".into());
+        assert!(h.cancelled(), "running attempt must be cancelled");
+        assert!(matches!(s.next_assignment(NodeId(1)), Assignment::Done));
+        assert!(s.abort_reason().unwrap().contains("stage plan failed"));
     }
 
     #[test]

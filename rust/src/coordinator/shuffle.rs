@@ -8,14 +8,18 @@
 //! ORB's `500·N` because `goodFeaturesToTrack(maxCorners=400)` /
 //! `ORB(nfeatures=500)` keep only the strongest keypoints per image.
 //!
-//! For the registration job the shuffle also routes *descriptor
-//! payloads*: per-scene keypoints+descriptors are serialized into DFS
-//! feature files ([`encode_features`]/[`decode_features`], CRC-guarded)
-//! and scene pairs are enumerated into reduce work units
-//! ([`enumerate_pairs`]).  The mosaic job routes whole *scene images*
-//! the same way ([`encode_scene`]/[`decode_scene`], hib-codec payloads
-//! under the same CRC guard) so canvas-tile workers fetch only the
-//! scenes overlapping their rectangle.
+//! The shuffle also routes the inter-stage payloads every DAG edge
+//! rides: per-scene keypoints+descriptors for the registration stage
+//! ([`encode_features`]/[`decode_features`]), whole scene images for
+//! the mosaic stage ([`encode_scene`]/[`decode_scene`], hib-codec
+//! payloads) and labeled mask tiles for the vector merge
+//! ([`encode_labels`]/[`decode_labels`]).  All three are field layouts
+//! over ONE shared record-stream helper ([`StreamWriter`] /
+//! [`StreamReader`]): a 4-byte magic, little-endian scalars, raw or
+//! length-prefixed byte runs, and a single trailing CRC32 over the
+//! whole stream — so framing, bounds checking and corruption handling
+//! cannot drift between the record kinds.  Scene pairs are enumerated
+//! into reduce work units by [`enumerate_pairs`].
 
 use std::collections::BTreeMap;
 
@@ -87,105 +91,184 @@ pub fn merge_image_outputs(
 }
 
 // ---------------------------------------------------------------------------
+// The shared record stream: length-prefixed, CRC-guarded.
+// ---------------------------------------------------------------------------
+
+/// Writer half of the shuffle files' shared record stream: a 4-byte
+/// magic, little-endian scalars, raw or length-prefixed byte runs, and
+/// ONE trailing CRC32 over everything prior (header included) —
+/// deliberately stronger than the hib bundle format, which only
+/// checksums payloads and the index (a flipped byte in a record header
+/// there would go undetected).  [`encode_features`], [`encode_scene`]
+/// and [`encode_labels`] are all this writer plus a field layout.
+pub struct StreamWriter {
+    buf: Vec<u8>,
+}
+
+impl StreamWriter {
+    pub fn new(magic: u32, capacity: usize) -> Self {
+        let mut w = StreamWriter { buf: Vec::with_capacity(capacity + 8) };
+        w.u32(magic);
+        w
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        let mut b = [0u8; 4];
+        LE::write_u32(&mut b, v);
+        self.buf.extend_from_slice(&b);
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        let mut b = [0u8; 8];
+        LE::write_u64(&mut b, v);
+        self.buf.extend_from_slice(&b);
+    }
+
+    /// Length-prefixed blob: u32 byte count, then the bytes.
+    pub fn blob(&mut self, bytes: &[u8]) {
+        self.u32(bytes.len() as u32);
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Seal the stream: append the CRC32 of everything written so far.
+    pub fn finish(mut self) -> Vec<u8> {
+        let crc = crc32::hash(&self.buf);
+        self.u32(crc);
+        self.buf
+    }
+}
+
+/// Reader half: verifies the trailing CRC and the magic up front, then
+/// hands out bounds-checked little-endian reads.  Every decode error is
+/// `"<what> corrupt: <reason>"`, matching the historical messages.
+pub struct StreamReader<'a> {
+    body: &'a [u8],
+    off: usize,
+    what: &'static str,
+}
+
+impl<'a> StreamReader<'a> {
+    /// `min_len` is the smallest well-formed stream (fixed header +
+    /// 4-byte trailing CRC) — shorter inputs are "truncated header".
+    pub fn open(
+        bytes: &'a [u8],
+        magic: u32,
+        what: &'static str,
+        min_len: usize,
+    ) -> Result<StreamReader<'a>> {
+        let r = StreamReader { body: &[], off: 0, what };
+        if bytes.len() < min_len.max(8) {
+            return Err(r.corrupt("truncated header"));
+        }
+        let (body, crc_bytes) = bytes.split_at(bytes.len() - 4);
+        if crc32::hash(body) != LE::read_u32(crc_bytes) {
+            return Err(r.corrupt("checksum mismatch"));
+        }
+        if LE::read_u32(&body[0..4]) != magic {
+            return Err(r.corrupt("bad magic"));
+        }
+        Ok(StreamReader { body, off: 4, what })
+    }
+
+    pub fn corrupt(&self, reason: &str) -> DifetError {
+        DifetError::Job(format!("{} corrupt: {reason}", self.what))
+    }
+
+    pub fn take(&mut self, count: usize) -> Result<&'a [u8]> {
+        let end = self
+            .off
+            .checked_add(count)
+            .filter(|&e| e <= self.body.len())
+            .ok_or_else(|| self.corrupt("truncated payload"))?;
+        let s = &self.body[self.off..end];
+        self.off = end;
+        Ok(s)
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(LE::read_u32(self.take(4)?))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(LE::read_u64(self.take(8)?))
+    }
+
+    /// Length-prefixed blob (inverse of [`StreamWriter::blob`]).
+    pub fn blob(&mut self) -> Result<&'a [u8]> {
+        let len = self.u32()? as usize;
+        self.take(len)
+    }
+
+    /// The stream must be fully consumed; anything left is corruption.
+    pub fn finish(self) -> Result<()> {
+        if self.off != self.body.len() {
+            return Err(self.corrupt("trailing bytes"));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Descriptor routing for the registration job.
 // ---------------------------------------------------------------------------
 
 const FEATURE_MAGIC: u32 = 0x4446_5452; // "DFTR"
 
-/// Append a little-endian u32 — the shuffle encoders' shared primitive.
-fn w32(buf: &mut Vec<u8>, v: u32) {
-    let mut b = [0u8; 4];
-    LE::write_u32(&mut b, v);
-    buf.extend_from_slice(&b);
-}
-
-/// Append a little-endian u64.
-fn w64(buf: &mut Vec<u8>, v: u64) {
-    let mut b = [0u8; 8];
-    LE::write_u64(&mut b, v);
-    buf.extend_from_slice(&b);
-}
-
 /// Serialize one scene's retained keypoints + descriptors — the record a
-/// registration reducer fetches from DFS.  Layout (all little-endian):
-/// magic, image_id, keypoint count, descriptor variant tag (+dim),
-/// keypoint triples, descriptor payload, CRC32 of everything prior.
+/// registration reducer fetches from DFS.  Layout (all little-endian,
+/// one [`StreamWriter`] stream): magic, image_id, keypoint count,
+/// descriptor variant tag (+dim), keypoint triples, descriptor payload,
+/// CRC32 of everything prior.
 pub fn encode_features(census: &ImageCensus) -> Vec<u8> {
     let kps = &census.keypoints;
-    let mut buf = Vec::with_capacity(32 + kps.len() * 12 + census.descriptors.len() * 32);
-    w32(&mut buf, FEATURE_MAGIC);
-    w64(&mut buf, census.image_id);
-    w32(&mut buf, kps.len() as u32);
+    let mut w = StreamWriter::new(
+        FEATURE_MAGIC,
+        28 + kps.len() * 12 + census.descriptors.len() * 32,
+    );
+    w.u64(census.image_id);
+    w.u32(kps.len() as u32);
     match &census.descriptors {
-        Descriptors::None => w32(&mut buf, 0),
+        Descriptors::None => w.u32(0),
         Descriptors::F32 { dim, .. } => {
-            w32(&mut buf, 1);
-            w32(&mut buf, *dim as u32);
+            w.u32(1);
+            w.u32(*dim as u32);
         }
-        Descriptors::Binary256(_) => w32(&mut buf, 2),
+        Descriptors::Binary256(_) => w.u32(2),
     }
     for kp in kps {
-        w32(&mut buf, kp.row as u32);
-        w32(&mut buf, kp.col as u32);
-        w32(&mut buf, kp.score.to_bits());
+        w.u32(kp.row as u32);
+        w.u32(kp.col as u32);
+        w.u32(kp.score.to_bits());
     }
     match &census.descriptors {
         Descriptors::None => {}
         Descriptors::F32 { data, .. } => {
             for v in data {
-                w32(&mut buf, v.to_bits());
+                w.u32(v.to_bits());
             }
         }
         Descriptors::Binary256(rows) => {
             for row in rows {
                 for word in row {
-                    w32(&mut buf, *word);
+                    w.u32(*word);
                 }
             }
         }
     }
-    let crc = crc32::hash(&buf);
-    w32(&mut buf, crc);
-    buf
+    w.finish()
 }
 
 /// Decode a feature file; the inverse of [`encode_features`].
 pub fn decode_features(bytes: &[u8]) -> Result<(u64, Vec<Keypoint>, Descriptors)> {
-    let corrupt = |what: &str| DifetError::Job(format!("feature file corrupt: {what}"));
     // 20-byte fixed header + 4-byte trailing CRC is the smallest stream.
-    if bytes.len() < 24 {
-        return Err(corrupt("truncated header"));
-    }
-    let (body, crc_bytes) = bytes.split_at(bytes.len() - 4);
-    if crc32::hash(body) != LE::read_u32(crc_bytes) {
-        return Err(corrupt("checksum mismatch"));
-    }
-    if LE::read_u32(&body[0..4]) != FEATURE_MAGIC {
-        return Err(corrupt("bad magic"));
-    }
-    let image_id = LE::read_u64(&body[4..12]);
-    let n = LE::read_u32(&body[12..16]) as usize;
-    let variant = LE::read_u32(&body[16..20]);
-
-    fn take<'a>(body: &'a [u8], off: &mut usize, count: usize) -> Result<&'a [u8]> {
-        let end = off
-            .checked_add(count)
-            .filter(|&e| e <= body.len())
-            .ok_or_else(|| DifetError::Job("feature file corrupt: truncated payload".into()))?;
-        let s = &body[*off..end];
-        *off = end;
-        Ok(s)
-    }
-
-    let mut off = 20usize;
-    let dim = if variant == 1 {
-        LE::read_u32(take(body, &mut off, 4)?) as usize
-    } else {
-        0
-    };
+    let mut r = StreamReader::open(bytes, FEATURE_MAGIC, "feature file", 24)?;
+    let image_id = r.u64()?;
+    let n = r.u32()? as usize;
+    let variant = r.u32()?;
+    let dim = if variant == 1 { r.u32()? as usize } else { 0 };
     let mut keypoints = Vec::with_capacity(n);
     for _ in 0..n {
-        let rec = take(body, &mut off, 12)?;
+        let rec = r.take(12)?;
         keypoints.push(Keypoint {
             row: LE::read_u32(&rec[0..4]) as i32,
             col: LE::read_u32(&rec[4..8]) as i32,
@@ -195,7 +278,7 @@ pub fn decode_features(bytes: &[u8]) -> Result<(u64, Vec<Keypoint>, Descriptors)
     let descriptors = match variant {
         0 => Descriptors::None,
         1 => {
-            let raw = take(body, &mut off, n.saturating_mul(dim).saturating_mul(4))?;
+            let raw = r.take(n.saturating_mul(dim).saturating_mul(4))?;
             let mut data = Vec::with_capacity(n * dim);
             for chunk in raw.chunks_exact(4) {
                 data.push(f32::from_bits(LE::read_u32(chunk)));
@@ -203,7 +286,7 @@ pub fn decode_features(bytes: &[u8]) -> Result<(u64, Vec<Keypoint>, Descriptors)
             Descriptors::F32 { dim, data }
         }
         2 => {
-            let raw = take(body, &mut off, n.saturating_mul(32))?;
+            let raw = r.take(n.saturating_mul(32))?;
             let mut rows = Vec::with_capacity(n);
             for rec in raw.chunks_exact(32) {
                 let mut row = [0u32; 8];
@@ -214,11 +297,9 @@ pub fn decode_features(bytes: &[u8]) -> Result<(u64, Vec<Keypoint>, Descriptors)
             }
             Descriptors::Binary256(rows)
         }
-        v => return Err(corrupt(&format!("unknown descriptor variant {v}"))),
+        v => return Err(r.corrupt(&format!("unknown descriptor variant {v}"))),
     };
-    if off != body.len() {
-        return Err(corrupt("trailing bytes"));
-    }
+    r.finish()?;
     Ok((image_id, keypoints, descriptors))
 }
 
@@ -229,15 +310,15 @@ pub fn decode_features(bytes: &[u8]) -> Result<(u64, Vec<Keypoint>, Descriptors)
 const SCENE_MAGIC: u32 = 0x4446_5343; // "DFSC"
 
 /// Serialize one scene image — the record a mosaic canvas-tile worker
-/// fetches from DFS.  Layout (little-endian): magic, image_id, width,
-/// height, codec byte (as u32), payload length, payload
-/// ([`crate::hib::codec`]-encoded pixels), CRC32 of everything prior.
+/// fetches from DFS.  Layout (little-endian, one [`StreamWriter`]
+/// stream): magic, image_id, width, height, codec byte (as u32),
+/// length-prefixed payload ([`crate::hib::codec`]-encoded pixels),
+/// CRC32 of everything prior.
 ///
-/// Deliberately NOT a one-record hib bundle: shuffle files follow the
-/// [`encode_features`] idiom of a single trailing CRC over the whole
-/// stream (header included), whereas the bundle format only checksums
-/// payloads and the index — a flipped byte in a record header there
-/// would go undetected.
+/// Deliberately NOT a one-record hib bundle: shuffle files use a single
+/// trailing CRC over the whole stream (header included), whereas the
+/// bundle format only checksums payloads and the index — a flipped byte
+/// in a record header there would go undetected.
 pub fn encode_scene(
     image_id: u64,
     img: &Rgba8Image,
@@ -245,52 +326,36 @@ pub fn encode_scene(
     level: u32,
 ) -> Result<Vec<u8>> {
     let payload = codec::encode(scene_codec, &img.data, level)?;
-    let mut buf = Vec::with_capacity(32 + payload.len());
-    w32(&mut buf, SCENE_MAGIC);
-    w64(&mut buf, image_id);
-    w32(&mut buf, img.width as u32);
-    w32(&mut buf, img.height as u32);
-    w32(&mut buf, scene_codec.to_byte() as u32);
-    w32(&mut buf, payload.len() as u32);
-    buf.extend_from_slice(&payload);
-    let crc = crc32::hash(&buf);
-    w32(&mut buf, crc);
-    Ok(buf)
+    let mut w = StreamWriter::new(SCENE_MAGIC, 28 + payload.len());
+    w.u64(image_id);
+    w.u32(img.width as u32);
+    w.u32(img.height as u32);
+    w.u32(scene_codec.to_byte() as u32);
+    w.blob(&payload);
+    Ok(w.finish())
 }
 
 /// Decode a scene file; the inverse of [`encode_scene`].
 pub fn decode_scene(bytes: &[u8]) -> Result<(u64, Rgba8Image)> {
-    let corrupt = |what: &str| DifetError::Job(format!("scene file corrupt: {what}"));
     // 28-byte fixed header + 4-byte trailing CRC is the smallest stream.
-    if bytes.len() < 32 {
-        return Err(corrupt("truncated header"));
-    }
-    let (body, crc_bytes) = bytes.split_at(bytes.len() - 4);
-    if crc32::hash(body) != LE::read_u32(crc_bytes) {
-        return Err(corrupt("checksum mismatch"));
-    }
-    if LE::read_u32(&body[0..4]) != SCENE_MAGIC {
-        return Err(corrupt("bad magic"));
-    }
-    let image_id = LE::read_u64(&body[4..12]);
-    let width = LE::read_u32(&body[12..16]) as usize;
-    let height = LE::read_u32(&body[16..20]) as usize;
-    let codec_tag = LE::read_u32(&body[20..24]);
+    let mut r = StreamReader::open(bytes, SCENE_MAGIC, "scene file", 32)?;
+    let image_id = r.u64()?;
+    let width = r.u32()? as usize;
+    let height = r.u32()? as usize;
+    let codec_tag = r.u32()?;
     if codec_tag > u8::MAX as u32 {
-        return Err(corrupt("bad codec tag"));
+        return Err(r.corrupt("bad codec tag"));
     }
-    let scene_codec = Codec::from_byte(codec_tag as u8)
-        .map_err(|e| corrupt(&e.to_string()))?;
-    let payload_len = LE::read_u32(&body[24..28]) as usize;
-    if body.len() != 28 + payload_len {
-        return Err(corrupt("payload length mismatch"));
-    }
+    let scene_codec =
+        Codec::from_byte(codec_tag as u8).map_err(|e| r.corrupt(&e.to_string()))?;
+    let payload = r.blob()?;
     let expected = width
         .checked_mul(height)
         .and_then(|px| px.checked_mul(4))
-        .ok_or_else(|| corrupt("absurd dimensions"))?;
-    let data = codec::decode(scene_codec, &body[28..], expected)
-        .map_err(|e| corrupt(&e.to_string()))?;
+        .ok_or_else(|| r.corrupt("absurd dimensions"))?;
+    let data =
+        codec::decode(scene_codec, payload, expected).map_err(|e| r.corrupt(&e.to_string()))?;
+    r.finish()?;
     Ok((image_id, Rgba8Image { width, height, data }))
 }
 
@@ -301,78 +366,59 @@ pub fn decode_scene(bytes: &[u8]) -> Result<(u64, Rgba8Image)> {
 const LABELS_MAGIC: u32 = 0x4446_4C42; // "DFLB"
 
 /// Serialize one labeled mask tile — the record a label worker writes to
-/// DFS and the merge stage fetches back.  Layout (all little-endian):
-/// magic, tile_id, rect (4×u32), component count, per-component records
-/// (key, area, sum_row, sum_col as u64s + bbox 4×u32), the rect-local
-/// label raster (u32 per pixel), CRC32 of everything prior — the same
-/// whole-stream trailing-CRC idiom as [`encode_features`].
+/// DFS and the merge stage fetches back.  Layout (all little-endian, one
+/// [`StreamWriter`] stream): magic, tile_id, rect (4×u32), component
+/// count, per-component records (key, area, sum_row, sum_col as u64s +
+/// bbox 4×u32), the rect-local label raster (u32 per pixel), CRC32 of
+/// everything prior.
 pub fn encode_labels(tile_id: u64, tile: &crate::vector::TileLabels) -> Vec<u8> {
     let [r0, r1, c0, c1] = tile.rect;
-    let mut buf =
-        Vec::with_capacity(32 + tile.components.len() * 48 + tile.labels.len() * 4);
-    w32(&mut buf, LABELS_MAGIC);
-    w64(&mut buf, tile_id);
+    let mut w = StreamWriter::new(
+        LABELS_MAGIC,
+        28 + tile.components.len() * 48 + tile.labels.len() * 4,
+    );
+    w.u64(tile_id);
     for v in [r0, r1, c0, c1] {
-        w32(&mut buf, v as u32);
+        w.u32(v as u32);
     }
-    w32(&mut buf, tile.components.len() as u32);
+    w.u32(tile.components.len() as u32);
     for comp in &tile.components {
-        w64(&mut buf, comp.key);
-        w64(&mut buf, comp.area);
-        w64(&mut buf, comp.sum_row);
-        w64(&mut buf, comp.sum_col);
+        w.u64(comp.key);
+        w.u64(comp.area);
+        w.u64(comp.sum_row);
+        w.u64(comp.sum_col);
         for v in comp.bbox {
-            w32(&mut buf, v);
+            w.u32(v);
         }
     }
     for &l in &tile.labels {
-        w32(&mut buf, l);
+        w.u32(l);
     }
-    let crc = crc32::hash(&buf);
-    w32(&mut buf, crc);
-    buf
+    w.finish()
 }
 
 /// Decode a tile-label file; the inverse of [`encode_labels`].
 pub fn decode_labels(bytes: &[u8]) -> Result<(u64, crate::vector::TileLabels)> {
-    let corrupt = |what: &str| DifetError::Job(format!("label file corrupt: {what}"));
     // 32-byte fixed header + 4-byte trailing CRC is the smallest stream.
-    if bytes.len() < 36 {
-        return Err(corrupt("truncated header"));
-    }
-    let (body, crc_bytes) = bytes.split_at(bytes.len() - 4);
-    if crc32::hash(body) != LE::read_u32(crc_bytes) {
-        return Err(corrupt("checksum mismatch"));
-    }
-    if LE::read_u32(&body[0..4]) != LABELS_MAGIC {
-        return Err(corrupt("bad magic"));
-    }
-    let tile_id = LE::read_u64(&body[4..12]);
+    let mut r = StreamReader::open(bytes, LABELS_MAGIC, "label file", 36)?;
+    let tile_id = r.u64()?;
     let rect = [
-        LE::read_u32(&body[12..16]) as usize,
-        LE::read_u32(&body[16..20]) as usize,
-        LE::read_u32(&body[20..24]) as usize,
-        LE::read_u32(&body[24..28]) as usize,
+        r.u32()? as usize,
+        r.u32()? as usize,
+        r.u32()? as usize,
+        r.u32()? as usize,
     ];
     let [r0, r1, c0, c1] = rect;
     if r0 > r1 || c0 > c1 {
-        return Err(corrupt("inverted rect"));
+        return Err(r.corrupt("inverted rect"));
     }
-    let n_comps = LE::read_u32(&body[28..32]) as usize;
+    let n_comps = r.u32()? as usize;
     let cells = (r1 - r0)
         .checked_mul(c1 - c0)
-        .ok_or_else(|| corrupt("absurd rect"))?;
-    let want = 32usize
-        .checked_add(n_comps.checked_mul(48).ok_or_else(|| corrupt("absurd component count"))?)
-        .and_then(|v| v.checked_add(cells.checked_mul(4)?))
-        .ok_or_else(|| corrupt("absurd sizes"))?;
-    if body.len() != want {
-        return Err(corrupt("payload length mismatch"));
-    }
-    let mut off = 32usize;
+        .ok_or_else(|| r.corrupt("absurd rect"))?;
     let mut components = Vec::with_capacity(n_comps);
     for _ in 0..n_comps {
-        let rec = &body[off..off + 48];
+        let rec = r.take(48)?;
         components.push(crate::vector::TileComponent {
             key: LE::read_u64(&rec[0..8]),
             area: LE::read_u64(&rec[8..16]),
@@ -385,16 +431,18 @@ pub fn decode_labels(bytes: &[u8]) -> Result<(u64, crate::vector::TileLabels)> {
                 LE::read_u32(&rec[44..48]),
             ],
         });
-        off += 48;
     }
+    let raster_bytes = cells.checked_mul(4).ok_or_else(|| r.corrupt("absurd rect"))?;
+    let raster = r.take(raster_bytes)?;
     let mut labels = Vec::with_capacity(cells);
-    for chunk in body[off..].chunks_exact(4) {
+    for chunk in raster.chunks_exact(4) {
         let l = LE::read_u32(chunk);
         if l as usize > n_comps {
-            return Err(corrupt("label exceeds component table"));
+            return Err(r.corrupt("label exceeds component table"));
         }
         labels.push(l);
     }
+    r.finish()?;
     Ok((tile_id, crate::vector::TileLabels { rect, labels, components }))
 }
 
@@ -588,6 +636,30 @@ mod tests {
         );
         assert_eq!(merged[0].keypoints.len(), 3);
         assert_eq!(merged[0].descriptors, Descriptors::None);
+    }
+
+    #[test]
+    fn record_stream_roundtrips_and_rejects_misuse() {
+        let mut w = StreamWriter::new(0xABCD_1234, 16);
+        w.u32(7);
+        w.u64(u64::MAX);
+        w.blob(b"payload");
+        let bytes = w.finish();
+        let mut r = StreamReader::open(&bytes, 0xABCD_1234, "test stream", 8).unwrap();
+        assert_eq!(r.u32().unwrap(), 7);
+        assert_eq!(r.u64().unwrap(), u64::MAX);
+        assert_eq!(r.blob().unwrap(), b"payload");
+        r.finish().unwrap();
+        // Wrong magic, truncation, bit flips, trailing garbage: all err.
+        assert!(StreamReader::open(&bytes, 0xABCD_1235, "test stream", 8).is_err());
+        assert!(StreamReader::open(&bytes[..6], 0xABCD_1234, "test stream", 8).is_err());
+        let mut flipped = bytes.clone();
+        flipped[9] ^= 1;
+        assert!(StreamReader::open(&flipped, 0xABCD_1234, "test stream", 8).is_err());
+        let mut r = StreamReader::open(&bytes, 0xABCD_1234, "test stream", 8).unwrap();
+        r.u32().unwrap();
+        let err = r.finish().unwrap_err();
+        assert!(err.to_string().contains("trailing bytes"), "{err}");
     }
 
     #[test]

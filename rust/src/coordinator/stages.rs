@@ -1,0 +1,1562 @@
+//! The four job shapes as [`DagStage`] definitions.
+//!
+//! Everything that used to be a bespoke driver loop is now per-stage
+//! glue over the generic [`crate::coordinator::dag`] runtime:
+//!
+//! * [`ExtractStage`] — map-shaped fused extraction (one unit per HIB
+//!   split).  With [`ExtractStage::publish_features`] enabled, each map
+//!   unit also writes its images' keypoints+descriptors into CRC-guarded
+//!   DFS feature files the moment the unit completes — the unit-level
+//!   hand-off a downstream [`PairStage`] pipelines against.
+//! * [`PairStage`] — reduce-shaped scene-pair registration.  Each pair
+//!   unit declares the extract units owning its two scenes as inputs, so
+//!   a pair matches as soon as *its* feature files exist, not when the
+//!   whole extraction stage barriers.
+//! * [`AlignStage`] — the global least-squares solve as a single reduce
+//!   unit gated on the full pair set (alignment is inherently global:
+//!   releasing it earlier would change results).
+//! * [`CompositeStage`] — canvas-tile compositing; plans once the
+//!   alignment exists, then all tiles run in parallel.
+//! * [`LabelStage`] — band-tile mask labeling.  Over a mosaic, each
+//!   band unit declares the canvas tiles covering its rows as inputs, so
+//!   labeling starts while other canvas tiles are still compositing;
+//!   the reduce-side union-find merge runs at finalize.
+//!
+//! Determinism: every unit body here is byte-for-byte the computation
+//! the old drivers ran, a pure function of the stage spec and its
+//! declared inputs — which is what makes pipelined and barrier schedules
+//! (and any retry/speculation history) bit-identical, as the e2e suites
+//! assert against the sequential baselines.
+
+use std::any::Any;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::cluster::CostModel;
+use crate::config::Config;
+use crate::dfs::{Dfs, NodeId};
+use crate::features::matching::{match_descriptors_while, ransac_translation};
+use crate::features::nms::rank_truncate;
+use crate::features::{self, Descriptors};
+use crate::hib::{self, BundleReader, RecordMeta};
+use crate::imagery::tiler::{extract_tile_f32, TileIter};
+use crate::imagery::Rgba8Image;
+use crate::metrics::{Counter, Gauge, Histogram, Registry};
+use crate::mosaic::{Canvas, GlobalAlignment, OverlapStat};
+use crate::util::{DifetError, Result};
+use crate::vector::{Labels, Mask, MergeStats, ObjectStats};
+
+use super::dag::{DagStage, Gate, StagePlan, StageReport, UnitOutput, UnitRef, UnitSpec};
+use super::driver::{JobHooks, TileExecutor};
+use super::job::{
+    mapper_retention, pair_seed, CanvasTile, FusedJobSpec, ImageCensus, JobReport, LabelTile,
+    MapOutput, MosaicReport, MosaicSpec, PairResult, PairTask, RegistrationReport,
+    RegistrationSpec, VectorReport, VectorSpec,
+};
+use super::scheduler::{TaskDescriptor, TaskHandle};
+use super::shuffle;
+
+/// DFS path of one scene's shuffled feature file.
+pub(crate) fn feature_path(dir: &str, algorithm: &str, id: u64) -> String {
+    format!("{dir}/{algorithm}/{id}")
+}
+
+/// Nodes holding replicas of any of `paths`, deduplicated, best first.
+fn preferred_for_paths(dfs: &Dfs, paths: &[String]) -> Vec<NodeId> {
+    let mut preferred = Vec::new();
+    for path in paths {
+        if let Ok(meta) = dfs.namenode().file_meta(path) {
+            if let Ok(nodes) = dfs.locate_range(path, 0, meta.len) {
+                for n in nodes {
+                    if !preferred.contains(&n) {
+                        preferred.push(n);
+                    }
+                }
+            }
+        }
+    }
+    preferred
+}
+
+/// Failure injection shared by every stage body (the paper's "crashed
+/// JVM": an attempt dies before doing any work).
+fn injected_failure(hooks: &JobHooks, what: &str, unit: usize, handle: &TaskHandle) -> Result<()> {
+    if let Some(f) = &hooks.fail {
+        if f(unit, handle.attempt) {
+            return Err(DifetError::Job(format!(
+                "injected failure ({what} {unit}, attempt {})",
+                handle.attempt
+            )));
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Extract: the map-shaped fused-extraction stage.
+// ---------------------------------------------------------------------------
+
+struct ExtractPlanInfo {
+    tasks: Vec<TaskDescriptor>,
+    metas: Vec<RecordMeta>,
+    /// image_id → owning unit (what downstream pair units depend on).
+    image_unit: BTreeMap<u64, usize>,
+}
+
+/// Map-shaped fused extraction over one HIB bundle: one unit per
+/// record-aligned split, every algorithm of the spec in one shared pass.
+pub struct ExtractStage<'a> {
+    cfg: &'a Config,
+    dfs: &'a Dfs,
+    executor: &'a dyn TileExecutor,
+    spec: FusedJobSpec,
+    hooks: &'a JobHooks,
+    cost: CostModel,
+    /// When set: each unit writes its images' censuses of algorithm
+    /// `spec.algorithms[index]` into `dir` as CRC-guarded feature files.
+    publish: Option<(String, usize)>,
+    tiles_counter: Arc<Counter>,
+    tile_hist: Arc<Histogram>,
+    tiles: AtomicU64,
+    planned: Mutex<Option<Arc<ExtractPlanInfo>>>,
+    /// (image_id, algorithm index) → merged census.
+    censuses: Mutex<BTreeMap<(u64, usize), ImageCensus>>,
+}
+
+impl<'a> ExtractStage<'a> {
+    pub fn new(
+        cfg: &'a Config,
+        dfs: &'a Dfs,
+        executor: &'a dyn TileExecutor,
+        spec: FusedJobSpec,
+        registry: &Registry,
+        hooks: &'a JobHooks,
+    ) -> Result<Self> {
+        if spec.algorithms.len() != spec.per_image_caps.len() {
+            return Err(DifetError::Config(
+                "fused job: one per-image cap per algorithm required".into(),
+            ));
+        }
+        Ok(ExtractStage {
+            cfg,
+            dfs,
+            executor,
+            spec,
+            hooks,
+            cost: CostModel::new(&cfg.cluster),
+            publish: None,
+            tiles_counter: registry.counter("tiles_processed"),
+            tile_hist: registry.histogram("tile_latency"),
+            tiles: AtomicU64::new(0),
+            planned: Mutex::new(None),
+            censuses: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    /// Publish per-scene feature files of algorithm index `alg_index`
+    /// into `feature_dir` from each map unit (pair-stage hand-off).
+    pub fn publish_features(mut self, feature_dir: &str, alg_index: usize) -> Self {
+        self.publish = Some((feature_dir.to_string(), alg_index));
+        self
+    }
+
+    fn plan_info(&self) -> Arc<ExtractPlanInfo> {
+        self.planned
+            .lock()
+            .unwrap()
+            .clone()
+            .expect("extract stage used before plan")
+    }
+
+    /// Scene ids of the planned bundle, record order.
+    pub fn scene_ids(&self) -> Vec<u64> {
+        self.plan_info().metas.iter().map(|m| m.image_id).collect()
+    }
+
+    /// The unit owning an image (downstream unit-level deps).
+    pub fn unit_of_image(&self, image_id: u64) -> Option<usize> {
+        self.plan_info().image_unit.get(&image_id).copied()
+    }
+
+    /// A unit's data-local nodes (the split's replica holders).  The
+    /// locality-aware scheduler runs the unit there when it can, and the
+    /// unit publishes its feature files from wherever it ran — so these
+    /// nodes are also the best locality guess for downstream pair units.
+    pub fn unit_preferred(&self, unit: usize) -> Vec<NodeId> {
+        self.plan_info().tasks[unit].preferred_nodes.clone()
+    }
+
+    /// Merged per-image censuses of one algorithm, image id ascending.
+    pub fn images(&self, alg_index: usize) -> Vec<ImageCensus> {
+        self.censuses
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|((_, a), _)| *a == alg_index)
+            .map(|(_, c)| c.clone())
+            .collect()
+    }
+
+    /// Assemble the per-algorithm [`JobReport`]s (one per algorithm, in
+    /// spec order) from this stage's slice of a finished DAG run.
+    pub fn reports(
+        &self,
+        stage: &StageReport,
+        sim_seconds: f64,
+        wall_seconds: f64,
+    ) -> Result<Vec<JobReport>> {
+        let n_images = self.plan_info().metas.len();
+        let mut counters = stage.scheduler_counters();
+        counters.insert("tasks".into(), stage.units as u64);
+        counters.insert("tiles".into(), self.tiles.load(Ordering::Relaxed));
+        counters.insert("fused_algorithms".into(), self.spec.algorithms.len() as u64);
+        let mut reports = Vec::with_capacity(self.spec.algorithms.len());
+        for (i, alg) in self.spec.algorithms.iter().enumerate() {
+            let images = self.images(i);
+            if images.len() != n_images {
+                return Err(DifetError::Job(format!(
+                    "{alg}: merged {} images, bundle has {n_images}",
+                    images.len()
+                )));
+            }
+            reports.push(JobReport {
+                algorithm: alg.clone(),
+                nodes: self.cfg.cluster.nodes,
+                image_count: n_images,
+                sim_seconds,
+                wall_seconds,
+                compute_seconds: stage.compute_seconds,
+                io_seconds: stage.io_seconds,
+                images,
+                counters: counters.clone(),
+            });
+        }
+        Ok(reports)
+    }
+
+    /// Extract one image: tile it, run the executor once per tile (all
+    /// algorithms fused), merge per algorithm.  Returns one
+    /// [`MapOutput`] per algorithm, in spec order.
+    fn map_one_image(
+        &self,
+        image_id: u64,
+        image: &Rgba8Image,
+        handle: &TaskHandle,
+    ) -> Result<(Option<Vec<MapOutput>>, u64)> {
+        let spec = &self.spec;
+        let n = spec.algorithms.len();
+        let alg_names: Vec<&str> = spec.algorithms.iter().map(|s| s.as_str()).collect();
+        let keeps: Vec<usize> = spec
+            .per_image_caps
+            .iter()
+            .map(|&cap| mapper_retention(cap, spec.report_keypoints))
+            .collect();
+        let mut raw_count = vec![0u64; n];
+        let mut descriptor_count = vec![0u64; n];
+        let mut keypoints: Vec<Vec<features::Keypoint>> = vec![Vec::new(); n];
+        // Descriptor rows parallel to `keypoints` (only filled when the
+        // spec keeps them; `None` rows make every re-rank a plain sort).
+        let mut descriptors: Vec<Descriptors> = vec![Descriptors::None; n];
+        let mut compute_ns = 0u64;
+
+        for tile in TileIter::new(image.width, image.height) {
+            if handle.cancelled() {
+                return Ok((None, compute_ns));
+            }
+            let buf = extract_tile_f32(image, &tile);
+            let t0 = std::time::Instant::now();
+            let feats_multi = self.executor.run_tile_multi(&alg_names, &buf, tile.core_local())?;
+            let dt = t0.elapsed();
+            compute_ns += dt.as_nanos() as u64;
+            self.tile_hist.observe(dt.as_secs_f64());
+            self.tiles_counter.inc();
+            self.tiles.fetch_add(1, Ordering::Relaxed);
+
+            for (i, feats) in feats_multi.into_iter().enumerate() {
+                raw_count[i] += feats.count;
+                descriptor_count[i] += feats.descriptors.len() as u64;
+                if spec.keep_descriptors {
+                    // Extractors emit exactly one row per retained
+                    // keypoint, in keypoint order, so appending both
+                    // keeps row i of the batch describing keypoint i.
+                    descriptors[i].append(feats.descriptors)?;
+                }
+                for kp in feats.keypoints {
+                    let (sr, sc) = tile.to_scene(kp.row, kp.col);
+                    keypoints[i].push(features::Keypoint {
+                        row: sr as i32,
+                        col: sc as i32,
+                        score: kp.score,
+                    });
+                }
+                // Keep the buffer bounded: re-rank + truncate at 4× over.
+                if keypoints[i].len() > keeps[i] * 4 {
+                    rank_truncate(&mut keypoints[i], &mut descriptors[i], keeps[i]);
+                }
+            }
+        }
+
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut kps = std::mem::take(&mut keypoints[i]);
+            let mut descs = std::mem::take(&mut descriptors[i]);
+            rank_truncate(&mut kps, &mut descs, keeps[i]);
+            out.push(MapOutput {
+                image_id,
+                raw_count: raw_count[i],
+                keypoints: kps,
+                descriptor_count: descriptor_count[i],
+                descriptors: descs,
+            });
+        }
+        Ok((Some(out), compute_ns))
+    }
+}
+
+/// Serialize a mapper output (the record written back to DFS — the
+/// paper's mapper step 5 artifact).
+fn serialize_output(out: &MapOutput) -> Vec<u8> {
+    use byteorder::{ByteOrder, LittleEndian as LE};
+    let mut buf = Vec::with_capacity(16 + out.keypoints.len() * 12);
+    let mut u64b = [0u8; 8];
+    LE::write_u64(&mut u64b, out.image_id);
+    buf.extend_from_slice(&u64b);
+    LE::write_u64(&mut u64b, out.raw_count);
+    buf.extend_from_slice(&u64b);
+    let mut u32b = [0u8; 4];
+    LE::write_u32(&mut u32b, out.keypoints.len() as u32);
+    buf.extend_from_slice(&u32b);
+    for kp in &out.keypoints {
+        LE::write_u32(&mut u32b, kp.row as u32);
+        buf.extend_from_slice(&u32b);
+        LE::write_u32(&mut u32b, kp.col as u32);
+        buf.extend_from_slice(&u32b);
+        LE::write_u32(&mut u32b, kp.score.to_bits());
+        buf.extend_from_slice(&u32b);
+    }
+    buf
+}
+
+impl DagStage for ExtractStage<'_> {
+    fn name(&self) -> &'static str {
+        "extract"
+    }
+
+    /// Plan: read the bundle index, compute record-aligned splits
+    /// (jobtracker-side planning; its I/O is part of the modeled
+    /// startup, as it always was).
+    fn plan(&self) -> Result<StagePlan> {
+        let (bundle_bytes, _) = self.dfs.read_file(&self.spec.bundle_path, NodeId(0))?;
+        let reader = BundleReader::open(&bundle_bytes)?;
+        let metas: Vec<RecordMeta> = reader.metas().to_vec();
+        // HIPI semantics (paper §3): one mapper per image.  A 1-byte
+        // split target makes every record its own split; block-sized
+        // splits are the plain-Hadoop alternative.
+        let split_target = if self.cfg.scheduler.split_per_image {
+            1
+        } else {
+            self.cfg.storage.block_size as u64
+        };
+        let splits = hib::splits(&reader, split_target);
+        let mut tasks = Vec::with_capacity(splits.len());
+        let mut image_unit = BTreeMap::new();
+        for (i, s) in splits.iter().enumerate() {
+            let preferred = self
+                .dfs
+                .locate_range(&self.spec.bundle_path, s.byte_start, s.byte_end)
+                .unwrap_or_default();
+            for rec in s.first_record..s.last_record {
+                image_unit.insert(metas[rec].image_id, i);
+            }
+            tasks.push(TaskDescriptor {
+                task_id: i,
+                first_record: s.first_record,
+                last_record: s.last_record,
+                byte_start: s.byte_start,
+                byte_end: s.byte_end,
+                preferred_nodes: preferred,
+            });
+        }
+        let units = tasks
+            .iter()
+            .map(|t| UnitSpec {
+                deps: Vec::new(),
+                preferred_nodes: t.preferred_nodes.clone(),
+            })
+            .collect();
+        *self.planned.lock().unwrap() = Some(Arc::new(ExtractPlanInfo {
+            tasks,
+            metas,
+            image_unit,
+        }));
+        Ok(StagePlan { units, plan_io_secs: 0.0 })
+    }
+
+    /// The mapper body: split read → record decode → tile loop →
+    /// per-image census merge (→ feature-file publish).  Input I/O
+    /// happens ONCE regardless of how many algorithms are fused.
+    fn run_unit(
+        &self,
+        unit: usize,
+        handle: &TaskHandle,
+        node: NodeId,
+    ) -> Result<Option<UnitOutput>> {
+        injected_failure(self.hooks, "task", unit, handle)?;
+        let info = self.plan_info();
+        let desc = &info.tasks[unit];
+        let spec = &self.spec;
+
+        let mut io_secs = 0.0f64;
+        let mut compute_ns = 0u64;
+
+        // --- input: read this split's byte range from DFS ------------------
+        let (bytes, stats) =
+            self.dfs
+                .read_range(&spec.bundle_path, desc.byte_start, desc.byte_end, node)?;
+        io_secs += self.cost.split_input(stats.local_bytes, stats.remote_bytes);
+
+        let mut outputs: Vec<Vec<MapOutput>> =
+            vec![Vec::with_capacity(desc.last_record - desc.first_record); spec.algorithms.len()];
+        let total_records = (desc.last_record - desc.first_record).max(1);
+
+        for (done, rec) in (desc.first_record..desc.last_record).enumerate() {
+            if handle.cancelled() {
+                return Ok(None);
+            }
+            let rec_off = (info.metas[rec].offset - desc.byte_start) as usize;
+            let (image_id, image, _) = hib::decode_record(&bytes[rec_off..])?;
+
+            let (map_out, tile_compute_ns) = self.map_one_image(image_id, &image, handle)?;
+            let Some(map_out) = map_out else {
+                return Ok(None); // cancelled mid-image
+            };
+            compute_ns += tile_compute_ns;
+
+            // --- output: the paper's mapper step 5 writes the annotated
+            // image back to HDFS, once per algorithm.  We store the
+            // keypoint summary (real bytes) and model the cost of the
+            // image-sized write the paper performs.
+            if spec.write_output {
+                for (alg, out) in spec.algorithms.iter().zip(&map_out) {
+                    let summary = serialize_output(out);
+                    let out_path = format!("{}.out/{alg}/{image_id}", spec.bundle_path);
+                    self.dfs.write_file(&out_path, &summary, node)?;
+                    io_secs += self
+                        .cost
+                        .hdfs_write(image.byte_len() as u64, self.cfg.cluster.replication);
+                }
+            }
+            for (dst, out) in outputs.iter_mut().zip(map_out) {
+                dst.push(out);
+            }
+            handle.report_progress((done + 1) as f64 / total_records as f64);
+        }
+
+        // --- merge tiles into per-image censuses, one list per algorithm.
+        // (Each image lives in exactly one split, so the per-unit merge IS
+        // the whole shuffle for these images; the caps and retention are
+        // identical to the old job-wide merge.)
+        let mut censuses: Vec<Vec<ImageCensus>> = Vec::with_capacity(spec.algorithms.len());
+        for (i, alg_outputs) in outputs.into_iter().enumerate() {
+            censuses.push(shuffle::merge_image_outputs(
+                alg_outputs,
+                spec.per_image_caps[i],
+                spec.report_keypoints,
+            ));
+        }
+
+        // --- publish: shuffle each image's features into DFS so a
+        // downstream pair unit can start the moment both its scenes'
+        // files exist.  Bit-identical across attempts, so a retry or a
+        // losing twin rewriting the same path is harmless.
+        if let Some((dir, alg_index)) = &self.publish {
+            for census in &censuses[*alg_index] {
+                let bytes = shuffle::encode_features(census);
+                self.dfs.write_file(
+                    &feature_path(dir, &spec.algorithms[*alg_index], census.image_id),
+                    &bytes,
+                    node,
+                )?;
+                io_secs += self
+                    .cost
+                    .hdfs_write(bytes.len() as u64, self.cfg.cluster.replication);
+            }
+        }
+
+        Ok(Some(UnitOutput {
+            payload: Box::new(censuses),
+            compute_ns,
+            io_secs,
+        }))
+    }
+
+    fn merge(&self, _unit: usize, payload: Box<dyn Any + Send>) -> Result<()> {
+        let censuses = payload
+            .downcast::<Vec<Vec<ImageCensus>>>()
+            .map_err(|_| DifetError::Job("extract stage: payload type mismatch".into()))?;
+        let mut sink = self.censuses.lock().unwrap();
+        for (alg_index, list) in censuses.into_iter().enumerate() {
+            for census in list {
+                sink.insert((census.image_id, alg_index), census);
+            }
+        }
+        Ok(())
+    }
+
+    fn finalize(&self) -> Result<()> {
+        let n_images = self.plan_info().metas.len();
+        let merged = self.censuses.lock().unwrap().len();
+        if merged != n_images * self.spec.algorithms.len() {
+            return Err(DifetError::Job(format!(
+                "extract stage merged {merged} censuses, expected {}",
+                n_images * self.spec.algorithms.len()
+            )));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Register: the reduce-shaped scene-pair stage.
+// ---------------------------------------------------------------------------
+
+/// Where a [`PairStage`] gets its per-scene features from.
+pub enum PairSource<'a> {
+    /// Censuses known up front (the standalone registration job): the
+    /// stage plan shuffles the feature files into DFS itself.
+    Censuses(&'a [ImageCensus]),
+    /// An upstream [`ExtractStage`] (at DAG index `stage_index`) that
+    /// publishes feature files from its map units; pair units then
+    /// depend on exactly the extract units owning their two scenes.
+    Extract {
+        stage: &'a ExtractStage<'a>,
+        stage_index: usize,
+    },
+}
+
+/// Reduce-shaped pair registration: ratio-test matching + translation
+/// RANSAC per scene pair, with per-pair seeds ([`pair_seed`]) so results
+/// never depend on which node/slot/attempt ran the pair.
+pub struct PairStage<'a> {
+    cfg: &'a Config,
+    dfs: &'a Dfs,
+    spec: RegistrationSpec,
+    hooks: &'a JobHooks,
+    cost: CostModel,
+    source: PairSource<'a>,
+    pairs_counter: Arc<Counter>,
+    pair_hist: Arc<Histogram>,
+    planned: Mutex<Option<Arc<Vec<PairTask>>>>,
+    scene_ids: Mutex<Vec<u64>>,
+    results: Mutex<Vec<Option<PairResult>>>,
+}
+
+impl<'a> PairStage<'a> {
+    pub fn new(
+        cfg: &'a Config,
+        dfs: &'a Dfs,
+        spec: RegistrationSpec,
+        source: PairSource<'a>,
+        registry: &Registry,
+        hooks: &'a JobHooks,
+    ) -> Self {
+        PairStage {
+            cfg,
+            dfs,
+            spec,
+            hooks,
+            cost: CostModel::new(&cfg.cluster),
+            source,
+            pairs_counter: registry.counter("pairs_processed"),
+            pair_hist: registry.histogram("pair_latency"),
+            planned: Mutex::new(None),
+            scene_ids: Mutex::new(Vec::new()),
+            results: Mutex::new(Vec::new()),
+        }
+    }
+
+    fn plan_info(&self) -> Arc<Vec<PairTask>> {
+        self.planned
+            .lock()
+            .unwrap()
+            .clone()
+            .expect("pair stage used before plan")
+    }
+
+    /// All scene ids the stage planned over (alignment needs them).
+    pub fn scene_ids(&self) -> Vec<u64> {
+        self.scene_ids.lock().unwrap().clone()
+    }
+
+    /// Pair results in pair-id order (valid after the stage completed).
+    pub fn results(&self) -> Result<Vec<PairResult>> {
+        self.results
+            .lock()
+            .unwrap()
+            .clone()
+            .into_iter()
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(|| DifetError::Job("registration pair lost its result".into()))
+    }
+
+    /// Assemble the [`RegistrationReport`] from this stage's slice of a
+    /// finished DAG run.
+    pub fn report(
+        &self,
+        stage: &StageReport,
+        sim_seconds: f64,
+        wall_seconds: f64,
+    ) -> Result<RegistrationReport> {
+        let pairs = self.results()?;
+        let mut counters = stage.scheduler_counters();
+        counters.insert("pairs".into(), pairs.len() as u64);
+        counters.insert(
+            "registered_pairs".into(),
+            pairs.iter().filter(|p| p.translation.is_some()).count() as u64,
+        );
+        Ok(RegistrationReport {
+            algorithm: self.spec.algorithm.clone(),
+            nodes: self.cfg.cluster.nodes,
+            pair_count: pairs.len(),
+            sim_seconds,
+            wall_seconds,
+            compute_seconds: stage.compute_seconds,
+            io_seconds: stage.io_seconds,
+            pairs,
+            counters,
+        })
+    }
+}
+
+impl DagStage for PairStage<'_> {
+    fn name(&self) -> &'static str {
+        "register"
+    }
+
+    fn gates(&self) -> Vec<Gate> {
+        match &self.source {
+            PairSource::Censuses(_) => Vec::new(),
+            // Pairs are plannable as soon as the bundle index (scene ids
+            // + unit ownership) exists — before any extraction ran.
+            PairSource::Extract { stage_index, .. } => vec![Gate::Planned(*stage_index)],
+        }
+    }
+
+    fn plan(&self) -> Result<StagePlan> {
+        let spec = &self.spec;
+        let fpath = |id: u64| feature_path(&spec.feature_dir, &spec.algorithm, id);
+
+        let scene_ids = match &self.source {
+            PairSource::Censuses(censuses) => {
+                censuses.iter().map(|c| c.image_id).collect::<Vec<u64>>()
+            }
+            PairSource::Extract { stage, .. } => stage.scene_ids(),
+        };
+        let pairs = shuffle::enumerate_pairs(&scene_ids, spec.pairs.as_deref())?;
+
+        // Source-dependent feature-file shuffle (Censuses mode only:
+        // with an upstream extract stage, the map units publish).
+        let plan_io_secs = match &self.source {
+            PairSource::Censuses(censuses) => {
+                let by_id: BTreeMap<u64, &ImageCensus> =
+                    censuses.iter().map(|c| (c.image_id, c)).collect();
+                if by_id.len() != censuses.len() {
+                    return Err(DifetError::Job("duplicate image ids in census set".into()));
+                }
+                // Shuffle: write each referenced scene's features into DFS
+                // (the payloads the paper-shaped map stage would have left
+                // behind), round-robin like reducer partitions; the stage
+                // opens after the slowest writer.
+                let mut needed: Vec<u64> = pairs.iter().flat_map(|&(a, b)| [a, b]).collect();
+                needed.sort_unstable();
+                needed.dedup();
+                let mut write_secs = vec![0.0f64; self.cfg.cluster.nodes];
+                for &id in &needed {
+                    let bytes = shuffle::encode_features(by_id[&id]);
+                    let writer = NodeId(id as usize % self.cfg.cluster.nodes);
+                    self.dfs.write_file(&fpath(id), &bytes, writer)?;
+                    write_secs[writer.0] +=
+                        self.cost.hdfs_write(bytes.len() as u64, self.cfg.cluster.replication);
+                }
+                write_secs.iter().cloned().fold(0.0, f64::max)
+            }
+            PairSource::Extract { .. } => 0.0,
+        };
+
+        let mut tasks = Vec::with_capacity(pairs.len());
+        let mut units = Vec::with_capacity(pairs.len());
+        for (pair_id, &(a, b)) in pairs.iter().enumerate() {
+            let (path_a, path_b) = (fpath(a), fpath(b));
+            let (preferred, deps) = match &self.source {
+                PairSource::Censuses(_) => {
+                    // Files exist already: locality toward their replicas.
+                    (
+                        preferred_for_paths(self.dfs, &[path_a.clone(), path_b.clone()]),
+                        Vec::new(),
+                    )
+                }
+                PairSource::Extract { stage, stage_index } => {
+                    // Files appear when the owning extract units merge;
+                    // those units are this pair's inputs, and their
+                    // splits' replica nodes are where the published
+                    // feature files most likely land (the map unit runs
+                    // data-local when it can and writes from its node).
+                    let mut deps = Vec::new();
+                    let mut preferred = Vec::new();
+                    for id in [a, b] {
+                        let unit = stage.unit_of_image(id).ok_or_else(|| {
+                            DifetError::Job(format!("pair references unknown scene {id}"))
+                        })?;
+                        let r = UnitRef { stage: *stage_index, unit };
+                        if !deps.contains(&r) {
+                            deps.push(r);
+                        }
+                        for n in stage.unit_preferred(unit) {
+                            if !preferred.contains(&n) {
+                                preferred.push(n);
+                            }
+                        }
+                    }
+                    (preferred, deps)
+                }
+            };
+            tasks.push(PairTask {
+                pair_id,
+                image_a: a,
+                image_b: b,
+                path_a,
+                path_b,
+                preferred_nodes: preferred.clone(),
+            });
+            units.push(UnitSpec { deps, preferred_nodes: preferred });
+        }
+        *self.results.lock().unwrap() = vec![None; tasks.len()];
+        *self.scene_ids.lock().unwrap() = scene_ids;
+        *self.planned.lock().unwrap() = Some(Arc::new(tasks));
+        Ok(StagePlan { units, plan_io_secs })
+    }
+
+    /// The reducer body: fetch both feature files, match descriptors
+    /// (chunked, honouring cancellation so a losing speculative twin
+    /// dies mid-scan), then RANSAC the translation.
+    fn run_unit(
+        &self,
+        unit: usize,
+        handle: &TaskHandle,
+        node: NodeId,
+    ) -> Result<Option<UnitOutput>> {
+        injected_failure(self.hooks, "pair", unit, handle)?;
+        let tasks = self.plan_info();
+        let task = &tasks[unit];
+        let spec = &self.spec;
+
+        // --- shuffle input: fetch both scenes' features --------------------
+        let (bytes_a, stats_a) = self.dfs.read_file(&task.path_a, node)?;
+        let (bytes_b, stats_b) = self.dfs.read_file(&task.path_b, node)?;
+        let io_secs = self.cost.split_input(
+            stats_a.local_bytes + stats_b.local_bytes,
+            stats_a.remote_bytes + stats_b.remote_bytes,
+        );
+        let (id_a, kps_a, desc_a) = shuffle::decode_features(&bytes_a)?;
+        let (id_b, kps_b, desc_b) = shuffle::decode_features(&bytes_b)?;
+        if (id_a, id_b) != (task.image_a, task.image_b) {
+            return Err(DifetError::Job(format!(
+                "feature file routing mixup: wanted ({}, {}), got ({id_a}, {id_b})",
+                task.image_a, task.image_b
+            )));
+        }
+
+        // --- reduce: match + register --------------------------------------
+        let t0 = std::time::Instant::now();
+        const MATCH_CHUNK: usize = 64;
+        let Some(matches) = match_descriptors_while(
+            &desc_a,
+            &desc_b,
+            spec.ratio,
+            MATCH_CHUNK,
+            &mut |done, total| {
+                handle.report_progress(done as f64 / total.max(1) as f64);
+                !handle.cancelled()
+            },
+        ) else {
+            return Ok(None); // cancelled: the twin won
+        };
+        if handle.cancelled() {
+            return Ok(None);
+        }
+        let translation = if matches.len() >= spec.min_matches {
+            ransac_translation(
+                &kps_a,
+                &kps_b,
+                &matches,
+                spec.tolerance_px,
+                spec.ransac_iters,
+                pair_seed(spec.seed, task.image_a, task.image_b),
+            )
+        } else {
+            None
+        };
+        let compute_ns = t0.elapsed().as_nanos() as u64;
+        self.pair_hist.observe(compute_ns as f64 * 1e-9);
+
+        Ok(Some(UnitOutput {
+            payload: Box::new(PairResult {
+                image_a: task.image_a,
+                image_b: task.image_b,
+                matches: matches.len(),
+                translation,
+            }),
+            compute_ns,
+            io_secs,
+        }))
+    }
+
+    fn merge(&self, unit: usize, payload: Box<dyn Any + Send>) -> Result<()> {
+        let result = payload
+            .downcast::<PairResult>()
+            .map_err(|_| DifetError::Job("pair stage: payload type mismatch".into()))?;
+        self.pairs_counter.inc();
+        self.results.lock().unwrap()[unit] = Some(*result);
+        Ok(())
+    }
+
+    fn finalize(&self) -> Result<()> {
+        self.results().map(|_| ())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Align: the global least-squares solve as one reduce unit.
+// ---------------------------------------------------------------------------
+
+/// Global alignment over a completed pair stage.  A single unit, gated
+/// on the FULL pair set: solved positions are a global function of every
+/// measurement, so releasing earlier would change bits.
+pub struct AlignStage<'a> {
+    pairs: &'a PairStage<'a>,
+    pair_stage_index: usize,
+    hooks: &'a JobHooks,
+    options: crate::mosaic::AlignOptions,
+    solved: Mutex<Option<GlobalAlignment>>,
+}
+
+impl<'a> AlignStage<'a> {
+    pub fn new(pairs: &'a PairStage<'a>, pair_stage_index: usize, hooks: &'a JobHooks) -> Self {
+        AlignStage {
+            pairs,
+            pair_stage_index,
+            hooks,
+            options: crate::mosaic::AlignOptions::default(),
+            solved: Mutex::new(None),
+        }
+    }
+
+    /// The solved alignment (valid after the stage completed).
+    pub fn alignment(&self) -> Result<GlobalAlignment> {
+        self.solved
+            .lock()
+            .unwrap()
+            .clone()
+            .ok_or_else(|| DifetError::Job("align stage read before completion".into()))
+    }
+}
+
+impl DagStage for AlignStage<'_> {
+    fn name(&self) -> &'static str {
+        "align"
+    }
+
+    fn gates(&self) -> Vec<Gate> {
+        vec![Gate::Completed(self.pair_stage_index)]
+    }
+
+    fn plan(&self) -> Result<StagePlan> {
+        Ok(StagePlan {
+            units: vec![UnitSpec::default()],
+            plan_io_secs: 0.0,
+        })
+    }
+
+    fn run_unit(
+        &self,
+        unit: usize,
+        handle: &TaskHandle,
+        _node: NodeId,
+    ) -> Result<Option<UnitOutput>> {
+        injected_failure(self.hooks, "align", unit, handle)?;
+        let t0 = std::time::Instant::now();
+        let results = self.pairs.results()?;
+        let measurements = crate::mosaic::measurements_from_pairs(&results);
+        if measurements.is_empty() {
+            return Err(DifetError::Job(
+                "stitch: no scene pair registered; nothing to align".into(),
+            ));
+        }
+        let scene_ids = self.pairs.scene_ids();
+        let alignment = crate::mosaic::solve_alignment(&scene_ids, &measurements, self.options)?;
+        Ok(Some(UnitOutput {
+            payload: Box::new(alignment),
+            compute_ns: t0.elapsed().as_nanos() as u64,
+            io_secs: 0.0,
+        }))
+    }
+
+    fn merge(&self, _unit: usize, payload: Box<dyn Any + Send>) -> Result<()> {
+        let alignment = payload
+            .downcast::<GlobalAlignment>()
+            .map_err(|_| DifetError::Job("align stage: payload type mismatch".into()))?;
+        *self.solved.lock().unwrap() = Some(*alignment);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Composite: canvas-tile compositing.
+// ---------------------------------------------------------------------------
+
+/// Where a [`CompositeStage`] gets its alignment from.
+pub enum AlignSource<'a> {
+    /// Solved elsewhere (the standalone mosaic job).
+    Given(&'a GlobalAlignment),
+    /// An upstream [`AlignStage`] at DAG index `stage_index`.
+    Solved {
+        stage: &'a AlignStage<'a>,
+        stage_index: usize,
+    },
+}
+
+struct CompositePlanInfo {
+    canvas: Canvas,
+    alignment: GlobalAlignment,
+    tasks: Vec<CanvasTile>,
+}
+
+/// Canvas-tile compositing: scenes are shuffled into CRC-guarded DFS
+/// files at plan time, the canvas splits into tile-shaped units, and
+/// every canvas pixel is a pure function of the scenes covering it (the
+/// blend accumulates in ascending scene-id order) — byte-identical to
+/// [`crate::mosaic::composite_sequential`] under any schedule.
+pub struct CompositeStage<'a> {
+    cfg: &'a Config,
+    dfs: &'a Dfs,
+    hooks: &'a JobHooks,
+    cost: CostModel,
+    scenes: &'a [(u64, Rgba8Image)],
+    spec: MosaicSpec,
+    align: AlignSource<'a>,
+    tiles_counter: Arc<Counter>,
+    tile_hist: Arc<Histogram>,
+    rms_hist: Arc<Histogram>,
+    residual_gauge: Arc<Gauge>,
+    planned: Mutex<Option<Arc<CompositePlanInfo>>>,
+    mosaic: Mutex<Option<Rgba8Image>>,
+    overlaps: Mutex<Vec<OverlapStat>>,
+}
+
+impl<'a> CompositeStage<'a> {
+    pub fn new(
+        cfg: &'a Config,
+        dfs: &'a Dfs,
+        scenes: &'a [(u64, Rgba8Image)],
+        align: AlignSource<'a>,
+        spec: MosaicSpec,
+        registry: &Registry,
+        hooks: &'a JobHooks,
+    ) -> Self {
+        CompositeStage {
+            cfg,
+            dfs,
+            hooks,
+            cost: CostModel::new(&cfg.cluster),
+            scenes,
+            spec,
+            align,
+            tiles_counter: registry.counter("canvas_tiles"),
+            tile_hist: registry.histogram("canvas_tile_latency"),
+            rms_hist: registry.histogram("overlap_rms"),
+            residual_gauge: registry.gauge("mosaic_max_cycle_residual"),
+            planned: Mutex::new(None),
+            mosaic: Mutex::new(None),
+            overlaps: Mutex::new(Vec::new()),
+        }
+    }
+
+    fn plan_info(&self) -> Arc<CompositePlanInfo> {
+        self.planned
+            .lock()
+            .unwrap()
+            .clone()
+            .expect("composite stage used before plan")
+    }
+
+    /// Canvas geometry + tile rects (downstream band deps), post-plan.
+    pub fn planned_tiles(&self) -> (usize, usize, Vec<[usize; 4]>) {
+        let info = self.plan_info();
+        (
+            info.canvas.width,
+            info.canvas.height,
+            info.tasks.iter().map(|t| t.rect).collect(),
+        )
+    }
+
+    /// Copy rows `[r0, r1)` of the composited canvas (valid once every
+    /// tile intersecting those rows has merged — i.e. from a downstream
+    /// unit that declared them as deps).
+    pub fn canvas_rows(&self, r0: usize, r1: usize) -> Result<Rgba8Image> {
+        let guard = self.mosaic.lock().unwrap();
+        let mosaic = guard
+            .as_ref()
+            .ok_or_else(|| DifetError::Job("composite canvas read before plan".into()))?;
+        let w = mosaic.width;
+        Ok(Rgba8Image {
+            width: w,
+            height: r1 - r0,
+            data: mosaic.data[r0 * w * 4..r1 * w * 4].to_vec(),
+        })
+    }
+
+    /// The finished mosaic (valid after the stage completed).
+    pub fn mosaic(&self) -> Result<Rgba8Image> {
+        self.mosaic
+            .lock()
+            .unwrap()
+            .clone()
+            .ok_or_else(|| DifetError::Job("composite stage read before completion".into()))
+    }
+
+    /// The alignment the plan actually used (given or solved upstream).
+    pub fn alignment_used(&self) -> GlobalAlignment {
+        self.plan_info().alignment.clone()
+    }
+
+    /// Assemble the [`MosaicReport`] from this stage's slice of a
+    /// finished DAG run.
+    pub fn report(
+        &self,
+        stage: &StageReport,
+        sim_seconds: f64,
+        wall_seconds: f64,
+    ) -> MosaicReport {
+        let info = self.plan_info();
+        let overlaps = self.overlaps.lock().unwrap().clone();
+        let mut counters = stage.scheduler_counters();
+        counters.insert("tiles".into(), info.tasks.len() as u64);
+        counters.insert("scenes".into(), self.scenes.len() as u64);
+        counters.insert("overlaps".into(), overlaps.len() as u64);
+        MosaicReport {
+            nodes: self.cfg.cluster.nodes,
+            scene_count: self.scenes.len(),
+            canvas_width: info.canvas.width,
+            canvas_height: info.canvas.height,
+            tile_count: info.tasks.len(),
+            blend: self.spec.blend,
+            sim_seconds,
+            wall_seconds,
+            compute_seconds: stage.compute_seconds,
+            io_seconds: stage.io_seconds,
+            overlaps,
+            max_cycle_residual: info.alignment.max_residual(),
+            rms_cycle_residual: info.alignment.rms_residual(),
+            counters,
+        }
+    }
+}
+
+impl DagStage for CompositeStage<'_> {
+    fn name(&self) -> &'static str {
+        "composite"
+    }
+
+    fn gates(&self) -> Vec<Gate> {
+        match &self.align {
+            AlignSource::Given(_) => Vec::new(),
+            AlignSource::Solved { stage_index, .. } => vec![Gate::Completed(*stage_index)],
+        }
+    }
+
+    /// Plan: solved positions → integer canvas layout, scene shuffle
+    /// into DFS (round-robin, like reducer partitions), one unit per
+    /// canvas tile with locality toward the overlapping scene files.
+    fn plan(&self) -> Result<StagePlan> {
+        let alignment = match &self.align {
+            AlignSource::Given(a) => (*a).clone(),
+            AlignSource::Solved { stage, .. } => stage.alignment()?,
+        };
+        let dims: Vec<(u64, usize, usize)> = self
+            .scenes
+            .iter()
+            .map(|(id, img)| (*id, img.width, img.height))
+            .collect();
+        // (layout rejects duplicate scene ids, so path routing is lossless.)
+        let canvas = crate::mosaic::layout(&alignment, &dims)?;
+
+        let scene_codec = if self.cfg.storage.compress {
+            crate::hib::Codec::Deflate
+        } else {
+            crate::hib::Codec::Raw
+        };
+        let scene_path = |id: u64| format!("{}/{id}", self.spec.scene_dir);
+        let mut write_secs = vec![0.0f64; self.cfg.cluster.nodes];
+        for (id, img) in self.scenes {
+            let bytes = shuffle::encode_scene(
+                *id,
+                img,
+                scene_codec,
+                self.cfg.storage.compression_level,
+            )?;
+            let writer = NodeId(*id as usize % self.cfg.cluster.nodes);
+            self.dfs.write_file(&scene_path(*id), &bytes, writer)?;
+            write_secs[writer.0] +=
+                self.cost.hdfs_write(bytes.len() as u64, self.cfg.cluster.replication);
+        }
+        let plan_io_secs = write_secs.iter().cloned().fold(0.0, f64::max);
+
+        let tasks: Vec<CanvasTile> = crate::mosaic::tile_rects(&canvas, self.spec.canvas_tile)
+            .into_iter()
+            .enumerate()
+            .map(|(tile_id, rect)| {
+                let scene_ids = crate::mosaic::scenes_in_rect(&canvas, rect);
+                let scene_paths: Vec<String> =
+                    scene_ids.iter().map(|&id| scene_path(id)).collect();
+                let preferred = preferred_for_paths(self.dfs, &scene_paths);
+                CanvasTile { tile_id, rect, scene_ids, scene_paths, preferred_nodes: preferred }
+            })
+            .collect();
+        let units = tasks
+            .iter()
+            .map(|t| UnitSpec {
+                deps: Vec::new(),
+                preferred_nodes: t.preferred_nodes.clone(),
+            })
+            .collect();
+        *self.mosaic.lock().unwrap() = Some(Rgba8Image::new(canvas.width, canvas.height));
+        *self.planned.lock().unwrap() =
+            Some(Arc::new(CompositePlanInfo { canvas, alignment, tasks }));
+        Ok(StagePlan { units, plan_io_secs })
+    }
+
+    /// The tile body: fetch the scenes overlapping this canvas tile from
+    /// DFS, decode them (CRC-guarded), composite the rect with row-level
+    /// progress and cooperative cancellation.
+    fn run_unit(
+        &self,
+        unit: usize,
+        handle: &TaskHandle,
+        node: NodeId,
+    ) -> Result<Option<UnitOutput>> {
+        injected_failure(self.hooks, "tile", unit, handle)?;
+        let info = self.plan_info();
+        let task = &info.tasks[unit];
+
+        // --- shuffle input: fetch only the scenes overlapping this rect ----
+        let mut io_secs = 0.0f64;
+        let mut tile_scenes: Vec<(u64, Rgba8Image)> = Vec::with_capacity(task.scene_paths.len());
+        for (expected_id, path) in task.scene_ids.iter().zip(&task.scene_paths) {
+            if handle.cancelled() {
+                return Ok(None);
+            }
+            let (bytes, stats) = self.dfs.read_file(path, node)?;
+            io_secs += self.cost.split_input(stats.local_bytes, stats.remote_bytes);
+            let (id, img) = shuffle::decode_scene(&bytes)?;
+            if id != *expected_id {
+                return Err(DifetError::Job(format!(
+                    "scene file routing mixup: wanted {expected_id}, got {id}"
+                )));
+            }
+            tile_scenes.push((id, img));
+        }
+        let by_id: BTreeMap<u64, &Rgba8Image> =
+            tile_scenes.iter().map(|(id, img)| (*id, img)).collect();
+
+        // --- reduce: composite the rect ------------------------------------
+        let t0 = std::time::Instant::now();
+        let Some(pixels) = crate::mosaic::composite_rect_while(
+            &info.canvas,
+            &by_id,
+            self.spec.blend,
+            task.rect,
+            &mut |done, total| {
+                handle.report_progress(done as f64 / total.max(1) as f64);
+                !handle.cancelled()
+            },
+        )?
+        else {
+            return Ok(None); // cancelled: the twin won
+        };
+        let compute_ns = t0.elapsed().as_nanos() as u64;
+        self.tile_hist.observe(compute_ns as f64 * 1e-9);
+
+        Ok(Some(UnitOutput {
+            payload: Box::new(pixels),
+            compute_ns,
+            io_secs,
+        }))
+    }
+
+    fn merge(&self, unit: usize, payload: Box<dyn Any + Send>) -> Result<()> {
+        let pixels = payload
+            .downcast::<Vec<u8>>()
+            .map_err(|_| DifetError::Job("composite stage: payload type mismatch".into()))?;
+        let info = self.plan_info();
+        let [r0, r1, c0, c1] = info.tasks[unit].rect;
+        let mut guard = self.mosaic.lock().unwrap();
+        let mosaic = guard
+            .as_mut()
+            .ok_or_else(|| DifetError::Job("composite canvas missing at merge".into()))?;
+        mosaic.blit(r0, c0, r1 - r0, c1 - c0, &pixels);
+        self.tiles_counter.inc();
+        Ok(())
+    }
+
+    /// Seam diagnostics once the whole canvas exists.
+    fn finalize(&self) -> Result<()> {
+        let info = self.plan_info();
+        let by_id: BTreeMap<u64, &Rgba8Image> =
+            self.scenes.iter().map(|(id, img)| (*id, img)).collect();
+        let overlaps = crate::mosaic::overlap_stats(&info.canvas, &by_id)?;
+        for o in &overlaps {
+            self.rms_hist.observe(o.rms);
+        }
+        self.residual_gauge.set(info.alignment.max_residual());
+        *self.overlaps.lock().unwrap() = overlaps;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Vectorize: band-tile labeling over a mask.
+// ---------------------------------------------------------------------------
+
+/// Where a [`LabelStage`] gets its mask from.
+pub enum MaskSource<'a> {
+    /// A mask known up front (the standalone vector job): the plan
+    /// shuffles it into DFS and band units range-read their rows.
+    Given(&'a Mask),
+    /// An upstream [`CompositeStage`] at DAG index `stage_index`: each
+    /// band unit depends on the canvas tiles covering its rows and
+    /// thresholds them at `threshold` the moment they are composited.
+    Mosaic {
+        stage: &'a CompositeStage<'a>,
+        stage_index: usize,
+        threshold: f32,
+    },
+}
+
+struct VectorPlanInfo {
+    width: usize,
+    height: usize,
+    tasks: Vec<LabelTile>,
+}
+
+/// Band-tile connected-component labeling: tile-local CCL per full-width
+/// band, tile labels shuffled back through CRC-guarded DFS files, and a
+/// reduce-side union-find merge at finalize — bit-identical to
+/// [`crate::vector::label_sequential`] at any node count, band size and
+/// schedule (canonical min-pixel component keys).
+pub struct LabelStage<'a> {
+    cfg: &'a Config,
+    dfs: &'a Dfs,
+    hooks: &'a JobHooks,
+    cost: CostModel,
+    spec: VectorSpec,
+    source: MaskSource<'a>,
+    tiles_counter: Arc<Counter>,
+    tile_hist: Arc<Histogram>,
+    residual_gauge: Arc<Gauge>,
+    objects_counter: Arc<Counter>,
+    planned: Mutex<Option<Arc<VectorPlanInfo>>>,
+    done: Mutex<Vec<bool>>,
+    merged: Mutex<Option<(Labels, Vec<ObjectStats>, MergeStats)>>,
+}
+
+impl<'a> LabelStage<'a> {
+    pub fn new(
+        cfg: &'a Config,
+        dfs: &'a Dfs,
+        spec: VectorSpec,
+        source: MaskSource<'a>,
+        registry: &Registry,
+        hooks: &'a JobHooks,
+    ) -> Self {
+        LabelStage {
+            cfg,
+            dfs,
+            hooks,
+            cost: CostModel::new(&cfg.cluster),
+            spec,
+            source,
+            tiles_counter: registry.counter("label_tiles"),
+            tile_hist: registry.histogram("label_tile_latency"),
+            residual_gauge: registry.gauge("vector_max_merge_residual"),
+            objects_counter: registry.counter("objects_extracted"),
+            planned: Mutex::new(None),
+            done: Mutex::new(Vec::new()),
+            merged: Mutex::new(None),
+        }
+    }
+
+    fn plan_info(&self) -> Arc<VectorPlanInfo> {
+        self.planned
+            .lock()
+            .unwrap()
+            .clone()
+            .expect("vector stage used before plan")
+    }
+
+    /// The merged label raster, object table and merge diagnostics
+    /// (valid after the stage completed).
+    pub fn output(&self) -> Result<(Labels, Vec<ObjectStats>, MergeStats)> {
+        self.merged
+            .lock()
+            .unwrap()
+            .clone()
+            .ok_or_else(|| DifetError::Job("vector stage read before completion".into()))
+    }
+
+    /// Assemble the [`VectorReport`] from this stage's slice of a
+    /// finished DAG run.
+    pub fn report(
+        &self,
+        stage: &StageReport,
+        sim_seconds: f64,
+        wall_seconds: f64,
+    ) -> Result<VectorReport> {
+        let info = self.plan_info();
+        let (_, objects, mstats) = self.output()?;
+        // Object areas partition the foreground exactly, so the stats
+        // sum IS the mask census (asserted by the e2e suite).
+        let foreground_px: u64 = objects.iter().map(|o| o.area).sum();
+        let mut counters = stage.scheduler_counters();
+        counters.insert("tiles".into(), info.tasks.len() as u64);
+        counters.insert("objects".into(), objects.len() as u64);
+        counters.insert("seam_unions".into(), mstats.seam_unions);
+        counters.insert("max_merge_residual".into(), mstats.max_merge_residual());
+        Ok(VectorReport {
+            nodes: self.cfg.cluster.nodes,
+            width: info.width,
+            height: info.height,
+            tile_count: info.tasks.len(),
+            object_count: objects.len(),
+            foreground_px,
+            max_merge_residual: mstats.max_merge_residual(),
+            seam_unions: mstats.seam_unions,
+            sim_seconds,
+            wall_seconds,
+            compute_seconds: stage.compute_seconds,
+            io_seconds: stage.io_seconds,
+            counters,
+        })
+    }
+
+    /// This band's mask rows: a DFS range read (standalone) or a
+    /// threshold over the already-composited canvas rows (mosaic mode).
+    /// Both are pure per-pixel functions of the same inputs, so the band
+    /// masks are identical to slicing a whole-raster [`Mask`].
+    fn band_mask(&self, task: &LabelTile, node: NodeId) -> Result<(Mask, f64)> {
+        let [r0, r1, c0, c1] = task.rect;
+        let (rows, width) = (r1 - r0, c1 - c0);
+        match &self.source {
+            MaskSource::Given(_) => {
+                let (bytes, stats) =
+                    self.dfs
+                        .read_range(&task.mask_path, task.byte_start, task.byte_end, node)?;
+                let io = self.cost.split_input(stats.local_bytes, stats.remote_bytes);
+                if c0 != 0 || bytes.len() != rows * width {
+                    return Err(DifetError::Job(format!(
+                        "mask band {}: got {} bytes, rect {:?} needs {}",
+                        task.tile_id,
+                        bytes.len(),
+                        task.rect,
+                        rows * width
+                    )));
+                }
+                Ok((Mask { width, height: rows, data: bytes }, io))
+            }
+            MaskSource::Mosaic { stage, threshold, .. } => {
+                // The canvas rows this band covers were merged before the
+                // unit was released (they are its declared inputs); the
+                // band is materialized node-locally, modeled as a local
+                // read of its 1 byte/pixel rows.
+                let band = stage.canvas_rows(r0, r1)?;
+                let io = self.cost.split_input((rows * width) as u64, 0);
+                Ok((crate::vector::threshold_mask(&band, *threshold), io))
+            }
+        }
+    }
+}
+
+impl DagStage for LabelStage<'_> {
+    fn name(&self) -> &'static str {
+        "vectorize"
+    }
+
+    fn gates(&self) -> Vec<Gate> {
+        match &self.source {
+            MaskSource::Given(_) => Vec::new(),
+            // Bands are plannable as soon as the canvas geometry exists.
+            MaskSource::Mosaic { stage_index, .. } => vec![Gate::Planned(*stage_index)],
+        }
+    }
+
+    fn plan(&self) -> Result<StagePlan> {
+        let (width, height, tile_deps, plan_io_secs) = match &self.source {
+            MaskSource::Given(mask) => {
+                if mask.width == 0 || mask.height == 0 {
+                    return Err(DifetError::Job("vector job: empty mask".into()));
+                }
+                if mask.data.len() != mask.width * mask.height {
+                    return Err(DifetError::Job(format!(
+                        "vector job: mask raster has {} cells, {}×{} needs {}",
+                        mask.data.len(),
+                        mask.width,
+                        mask.height,
+                        mask.width * mask.height
+                    )));
+                }
+                // Shuffle: the mask raster goes into DFS header-free
+                // (1 byte/pixel) so every band is one contiguous range.
+                self.dfs.write_file(&self.spec.mask_path, &mask.data, NodeId(0))?;
+                let io = self
+                    .cost
+                    .hdfs_write(mask.data.len() as u64, self.cfg.cluster.replication);
+                (mask.width, mask.height, None, io)
+            }
+            MaskSource::Mosaic { stage, stage_index, .. } => {
+                let (width, height, rects) = stage.planned_tiles();
+                if width == 0 || height == 0 {
+                    return Err(DifetError::Job("vector job: empty canvas".into()));
+                }
+                (width, height, Some((*stage_index, rects)), 0.0)
+            }
+        };
+
+        let mut tasks = Vec::new();
+        let mut units = Vec::new();
+        for (tile_id, rect) in crate::vector::band_rects(width, height, self.spec.band_rows)
+            .into_iter()
+            .enumerate()
+        {
+            let byte_start = (rect[0] * width) as u64;
+            let byte_end = (rect[1] * width) as u64;
+            let (preferred, deps) = match &tile_deps {
+                // Standalone: locality toward the mask band's blocks.
+                None => (
+                    self.dfs
+                        .locate_range(&self.spec.mask_path, byte_start, byte_end)
+                        .unwrap_or_default(),
+                    Vec::new(),
+                ),
+                // Mosaic mode: inputs are the canvas tiles covering the
+                // band's rows (full-width bands cross every tile column).
+                Some((stage_index, rects)) => (
+                    Vec::new(),
+                    rects
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, r)| r[0] < rect[1] && rect[0] < r[1])
+                        .map(|(unit, _)| UnitRef { stage: *stage_index, unit })
+                        .collect(),
+                ),
+            };
+            tasks.push(LabelTile {
+                tile_id,
+                rect,
+                byte_start,
+                byte_end,
+                mask_path: self.spec.mask_path.clone(),
+                labels_path: format!("{}/{tile_id}", self.spec.labels_dir),
+                preferred_nodes: preferred.clone(),
+            });
+            units.push(UnitSpec { deps, preferred_nodes: preferred });
+        }
+        *self.done.lock().unwrap() = vec![false; tasks.len()];
+        *self.planned.lock().unwrap() = Some(Arc::new(VectorPlanInfo { width, height, tasks }));
+        Ok(StagePlan { units, plan_io_secs })
+    }
+
+    /// The band body: materialize this band's mask rows, run tile-local
+    /// CCL with row-level progress and cooperative cancellation, and
+    /// shuffle the encoded tile labels back into a CRC-guarded DFS file
+    /// for the merge stage.
+    fn run_unit(
+        &self,
+        unit: usize,
+        handle: &TaskHandle,
+        node: NodeId,
+    ) -> Result<Option<UnitOutput>> {
+        injected_failure(self.hooks, "tile", unit, handle)?;
+        let info = self.plan_info();
+        let task = &info.tasks[unit];
+        let [r0, r1, c0, c1] = task.rect;
+        let (rows, width) = (r1 - r0, c1 - c0);
+
+        let (band, mut io_secs) = self.band_mask(task, node)?;
+        debug_assert_eq!((band.width, band.height), (width, rows));
+
+        // --- label the band locally ----------------------------------------
+        let t0 = std::time::Instant::now();
+        let Some(local) =
+            crate::vector::label_rect_while(&band, [0, rows, 0, width], &mut |done, total| {
+                handle.report_progress(done as f64 / total.max(1) as f64);
+                !handle.cancelled()
+            })?
+        else {
+            return Ok(None); // cancelled: the twin won
+        };
+        let tile = local.offset_rows(r0);
+        let compute_ns = t0.elapsed().as_nanos() as u64;
+        if handle.cancelled() {
+            return Ok(None);
+        }
+        self.tile_hist.observe(compute_ns as f64 * 1e-9);
+
+        // --- output: shuffle the tile labels into DFS ----------------------
+        // (bit-identical across attempts, so a retry or losing twin
+        // rewriting the same path is harmless.)
+        let encoded = shuffle::encode_labels(task.tile_id as u64, &tile);
+        self.dfs.write_file(&task.labels_path, &encoded, node)?;
+        io_secs += self
+            .cost
+            .hdfs_write(encoded.len() as u64, self.cfg.cluster.replication);
+
+        Ok(Some(UnitOutput {
+            payload: Box::new(()),
+            compute_ns,
+            io_secs,
+        }))
+    }
+
+    fn merge(&self, unit: usize, _payload: Box<dyn Any + Send>) -> Result<()> {
+        self.tiles_counter.inc();
+        self.done.lock().unwrap()[unit] = true;
+        Ok(())
+    }
+
+    /// Reduce: fetch the shuffled tile labels, merge the seams with the
+    /// union-find, publish the diagnostics gauges.
+    fn finalize(&self) -> Result<()> {
+        let info = self.plan_info();
+        if !self.done.lock().unwrap().iter().all(|&d| d) {
+            return Err(DifetError::Job("vector tile lost its result".into()));
+        }
+        let mut tiles = Vec::with_capacity(info.tasks.len());
+        for task in &info.tasks {
+            let (bytes, _) = self.dfs.read_file(&task.labels_path, NodeId(0))?;
+            let (id, tile) = shuffle::decode_labels(&bytes)?;
+            if id != task.tile_id as u64 {
+                return Err(DifetError::Job(format!(
+                    "label file routing mixup: wanted {}, got {id}",
+                    task.tile_id
+                )));
+            }
+            tiles.push(tile);
+        }
+        let (labels, objects, mstats) =
+            crate::vector::merge_tile_labels(info.width, info.height, &tiles)?;
+        self.residual_gauge.set(mstats.max_merge_residual() as f64);
+        self.objects_counter.add(objects.len() as u64);
+        *self.merged.lock().unwrap() = Some((labels, objects, mstats));
+        Ok(())
+    }
+}

@@ -8,16 +8,22 @@
 //! difet sequential  run the one-node sequential baseline
 //! difet census      Table-2-style feature counts for a corpus
 //! difet scalability sweep node counts (Table 1 shape) in one command
-//! difet register    extract + match overlapping acquisitions (2 stages)
-//! difet stitch      register + align + composite one mosaic (4 stages)
-//! difet vectorize   stitch + segment + label + trace objects (5 stages)
-//! difet bench       horizontal-scalability sweep → BENCH_4.json
+//! difet register    extract + match overlapping acquisitions (2-stage DAG)
+//! difet stitch      register + align + composite one mosaic (4-stage DAG)
+//! difet vectorize   stitch + segment + label + trace objects (5-stage DAG)
+//! difet bench       pipelined-vs-barrier DAG sweep → BENCH_5.json
 //! difet inspect     show artifact manifest + cluster configuration
 //! ```
 //!
+//! The multi-stage subcommands run on the job-DAG runtime
+//! ([`difet::coordinator::run_dag`]): pipelined by default (work units
+//! release on unit-level input satisfaction), or bulk-synchronous with
+//! `--barrier` (the pre-DAG per-job chaining) — outputs are
+//! bit-identical either way.
+//!
 //! Try `difet extract --nodes 4 --scenes 3 --algorithms harris,orb`,
 //! `difet register --nodes 2 --scenes 3 --native` for the two-stage
-//! scene-registration job, `difet stitch --nodes 2 --scenes 4 --native`
+//! scene-registration DAG, `difet stitch --nodes 2 --scenes 4 --native`
 //! for the full mosaicking flow, or `difet vectorize --nodes 2 --scenes 3
 //! --native --threshold 0.55 --out objects.json` to push the mosaic all
 //! the way to GeoJSON-style vector objects.
@@ -49,6 +55,7 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "artifacts", takes_value: true, help: "artifacts dir (default artifacts)" },
         FlagSpec { name: "native", takes_value: false, help: "force the pure-Rust executor" },
         FlagSpec { name: "fused", takes_value: false, help: "one fused pass for all algorithms" },
+        FlagSpec { name: "barrier", takes_value: false, help: "bulk-synchronous DAG stages (pre-DAG behavior; same bits)" },
         FlagSpec { name: "no-write", takes_value: false, help: "skip mapper output writes" },
         FlagSpec { name: "pairs", takes_value: true, help: "register: explicit pairs, e.g. 0-1,1-2 (default: all)" },
         FlagSpec { name: "max-offset", takes_value: true, help: "register: acquisition offset bound px (default 96)" },
@@ -60,7 +67,7 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "threshold", takes_value: true, help: "vectorize: luma threshold in [0,1] (default 0.5)" },
         FlagSpec { name: "min-area", takes_value: true, help: "vectorize: min object area px (default 8)" },
         FlagSpec { name: "epsilon", takes_value: true, help: "vectorize: Douglas-Peucker tolerance px (default 1.5)" },
-        FlagSpec { name: "out", takes_value: true, help: "stitch: mosaic .hib path; vectorize: GeoJSON path; bench: JSON path (default BENCH_4.json)" },
+        FlagSpec { name: "out", takes_value: true, help: "stitch: mosaic .hib path; vectorize: GeoJSON path; bench: JSON path (default BENCH_5.json)" },
         FlagSpec { name: "bare", takes_value: false, help: "disable the I/O cost model" },
         FlagSpec { name: "verbose", takes_value: false, help: "print counters/metrics" },
         FlagSpec { name: "help", takes_value: false, help: "show this help" },
@@ -114,6 +121,9 @@ fn build_config(p: &ParsedArgs, nodes_is_list: bool) -> Result<Config, String> {
     }
     if p.has("bare") {
         cfg.cluster.cost_model = false;
+    }
+    if p.has("barrier") {
+        cfg.scheduler.barrier = true;
     }
     cfg.validate().map_err(|e| e.to_string())?;
     Ok(cfg)
@@ -283,6 +293,7 @@ fn run(p: &ParsedArgs) -> Result<(), String> {
             );
             print!("{}", pipeline::report::render_registration_table(&out.report));
             if verbose {
+                print!("\n{}", pipeline::report::render_dag_table(&out.dag));
                 print_counters(&out.report.counters);
             }
         }
@@ -310,6 +321,7 @@ fn run(p: &ParsedArgs) -> Result<(), String> {
                 );
             }
             if verbose {
+                print!("\n{}", pipeline::report::render_dag_table(&out.dag));
                 print_counters(&out.report.counters);
             }
         }
@@ -340,6 +352,7 @@ fn run(p: &ParsedArgs) -> Result<(), String> {
                 );
             }
             if verbose {
+                print!("\n{}", pipeline::report::render_dag_table(&out.stitch.dag));
                 print_counters(&out.vector.report.counters);
             }
         }
@@ -371,92 +384,156 @@ fn run(p: &ParsedArgs) -> Result<(), String> {
     Ok(())
 }
 
-/// The paper's core evaluation as one command: run the fused extraction
-/// sweep, the full stitch flow AND the vectorize tail at each node
-/// count, then write wall-time, speedup and parallel efficiency to a
-/// JSON report (`BENCH_4.json` by default).  Speedup is relative to the
-/// smallest node count in the sweep; efficiency is
-/// `speedup × baseline / nodes`.
+/// The DAG-runtime evaluation as one command: at each node count, run
+/// the fused extraction sweep plus the five-stage vectorize DAG in BOTH
+/// execution modes (`--barrier` bulk-synchronous vs pipelined), verify
+/// the two modes and the sequential baselines are bit-identical, and
+/// write the totals, speedup and parallel efficiency to a JSON report
+/// (`BENCH_5.json` by default).  Speedup is relative to the smallest
+/// node count in the sweep over the `extract + pipelined vectorize`
+/// total; efficiency is `speedup × baseline / nodes`.  Exits non-zero
+/// if ANY parity check fails — CI runs this as a binding gate.
 fn run_bench(p: &ParsedArgs, cfg: &Config, req: &ExtractRequest) -> Result<(), String> {
     let nodes = p.get_counts("nodes", &[1, 2, 4, 8])?;
 
-    // The stitch + vectorize legs reuse the shared flags (--scenes/
-    // --native/--max-offset/--seed/--threshold/…) with the default ORB
-    // matcher (an explicit --algorithms list configures the extraction
-    // sweep, so it must not constrain the matcher here).
+    // The vectorize leg reuses the shared flags (--scenes/--native/
+    // --max-offset/--seed/--threshold/…) with the default ORB matcher
+    // (an explicit --algorithms list configures the extraction sweep, so
+    // it must not constrain the matcher here).
     let mut rreq = RegistrationRequest {
         num_scenes: req.num_scenes,
         force_native: req.force_native,
         ..Default::default()
     };
     apply_registration_flags(p, &mut rreq)?;
-    let sreq = StitchRequest { reg: rreq, ..Default::default() };
-    let mut vopts = pipeline::VectorOptions::default();
-    apply_vector_flags(p, &mut vopts)?;
+    let mut vreq = VectorizeRequest {
+        stitch: StitchRequest { reg: rreq, ..Default::default() },
+        ..Default::default()
+    };
+    apply_vector_flags(p, &mut vreq.opts)?;
     let ereq = ExtractRequest { fused: true, write_output: false, ..req.clone() };
 
     println!(
-        "bench: {} scene(s), algorithms {:?}, node counts {:?}\n",
+        "bench: {} scene(s), algorithms {:?}, node counts {:?}, pipelined vs barrier\n",
         req.num_scenes, req.algorithms, nodes
     );
-    // (nodes, extract, stitch, vectorize) sim seconds per sweep point.
-    let mut rows: Vec<(usize, f64, f64, f64)> = Vec::new();
+    struct Row {
+        nodes: usize,
+        extract: f64,
+        barrier: f64,
+        pipelined: f64,
+        spans: Vec<(String, f64)>,
+        parity: bool,
+    }
+    let mut rows: Vec<Row> = Vec::new();
+    let mut all_parity = true;
     for &n in &nodes {
         let mut c = cfg.clone();
         c.cluster.nodes = n;
         let erep = pipeline::run_extraction(&c, &ereq).map_err(|e| e.to_string())?;
-        let extract_secs = erep.jobs.first().map_or(0.0, |j| j.sim_seconds);
-        let sout = pipeline::run_stitch(&c, &sreq).map_err(|e| e.to_string())?;
-        let stitch_secs = sout.registration.extraction.sim_seconds
-            + sout.registration.report.sim_seconds
-            + sout.report.sim_seconds;
-        let vstage = pipeline::run_vector_stage(&c, &sout.mosaic, &vopts)
+        let extract = erep.jobs.first().map_or(0.0, |j| j.sim_seconds);
+
+        let mut cb = c.clone();
+        cb.scheduler.barrier = true;
+        let barrier_out = pipeline::run_vectorize(&cb, &vreq).map_err(|e| e.to_string())?;
+        let mut cp = c.clone();
+        cp.scheduler.barrier = false;
+        let pipelined_out = pipeline::run_vectorize(&cp, &vreq).map_err(|e| e.to_string())?;
+
+        // Parity: barrier == pipelined == sequential, bit for bit, for
+        // every stage output that survives to the end of the DAG.
+        let seq_mosaic = pipelined_out
+            .stitch
+            .composite_baseline(vreq.stitch.blend)
             .map_err(|e| e.to_string())?;
-        let vector_secs = vstage.report.sim_seconds;
+        let (seq_labels, seq_stats) = pipelined_out.vector.labels_baseline();
+        let parity = barrier_out.stitch.mosaic == pipelined_out.stitch.mosaic
+            && pipelined_out.stitch.mosaic == seq_mosaic
+            && barrier_out.vector.labels == pipelined_out.vector.labels
+            && pipelined_out.vector.labels == seq_labels
+            && barrier_out.vector.stats == pipelined_out.vector.stats
+            && pipelined_out.vector.stats == seq_stats
+            && barrier_out.vector.objects == pipelined_out.vector.objects
+            && pipelined_out.vector.objects == pipelined_out.vector.objects_baseline();
+        all_parity &= parity;
+
+        let barrier = barrier_out.stitch.dag.sim_seconds;
+        let pipelined = pipelined_out.stitch.dag.sim_seconds;
         println!(
-            "  {n} node(s): extract {}, stitch {}, vectorize {} ({} object(s))",
-            difet::util::fmt::duration(extract_secs),
-            difet::util::fmt::duration(stitch_secs),
-            difet::util::fmt::duration(vector_secs),
-            vstage.report.object_count,
+            "  {n} node(s): extract {}, vectorize barrier {}, pipelined {} ({} object(s), overlap {}, parity {})",
+            difet::util::fmt::duration(extract),
+            difet::util::fmt::duration(barrier),
+            difet::util::fmt::duration(pipelined),
+            pipelined_out.object_count(),
+            pipelined_out.stitch.dag.max_stage_overlap,
+            if parity { "ok" } else { "FAILED" },
         );
-        rows.push((n, extract_secs, stitch_secs, vector_secs));
+        rows.push(Row {
+            nodes: n,
+            extract,
+            barrier,
+            pipelined,
+            spans: pipelined_out
+                .stitch
+                .dag
+                .stages
+                .iter()
+                .map(|s| (s.name.to_string(), s.span_secs()))
+                .collect(),
+            parity,
+        });
     }
 
-    let baseline_nodes = rows[0].0;
-    let baseline_total = rows[0].1 + rows[0].2 + rows[0].3;
+    let baseline_nodes = rows[0].nodes;
+    let baseline_total = rows[0].extract + rows[0].pipelined;
     let mut runs = Vec::new();
     println!(
         "\n{:<8}{:>12}{:>12}{:>12}{:>12}{:>10}{:>12}",
-        "nodes", "extract", "stitch", "vectorize", "total", "speedup", "efficiency"
+        "nodes", "extract", "barrier", "pipelined", "total", "speedup", "efficiency"
     );
-    for &(n, extract_secs, stitch_secs, vector_secs) in &rows {
-        let total = extract_secs + stitch_secs + vector_secs;
+    for row in &rows {
+        let total = row.extract + row.pipelined;
         let speedup = if total > 0.0 { baseline_total / total } else { 0.0 };
-        let efficiency = speedup * baseline_nodes as f64 / n as f64;
+        let efficiency = speedup * baseline_nodes as f64 / row.nodes as f64;
         println!(
             "{:<8}{:>12.1}{:>12.1}{:>12.1}{:>12.1}{:>9.2}x{:>11.0}%",
-            n,
-            extract_secs,
-            stitch_secs,
-            vector_secs,
+            row.nodes,
+            row.extract,
+            row.barrier,
+            row.pipelined,
             total,
             speedup,
             efficiency * 100.0,
         );
-        let mut row = std::collections::BTreeMap::new();
-        row.insert("nodes".to_string(), Json::Num(n as f64));
-        row.insert("extract_sim_seconds".to_string(), Json::Num(extract_secs));
-        row.insert("stitch_sim_seconds".to_string(), Json::Num(stitch_secs));
-        row.insert("vectorize_sim_seconds".to_string(), Json::Num(vector_secs));
-        row.insert("total_sim_seconds".to_string(), Json::Num(total));
-        row.insert("speedup".to_string(), Json::Num(speedup));
-        row.insert("parallel_efficiency".to_string(), Json::Num(efficiency));
-        runs.push(Json::Obj(row));
+        let mut spans = std::collections::BTreeMap::new();
+        for (name, span) in &row.spans {
+            spans.insert(name.clone(), Json::Num(*span));
+        }
+        let mut r = std::collections::BTreeMap::new();
+        r.insert("nodes".to_string(), Json::Num(row.nodes as f64));
+        r.insert("extract_sim_seconds".to_string(), Json::Num(row.extract));
+        r.insert(
+            "vectorize_barrier_sim_seconds".to_string(),
+            Json::Num(row.barrier),
+        );
+        r.insert(
+            "vectorize_pipelined_sim_seconds".to_string(),
+            Json::Num(row.pipelined),
+        );
+        r.insert(
+            "pipelined_not_slower".to_string(),
+            Json::Bool(row.pipelined <= row.barrier),
+        );
+        r.insert("parity_ok".to_string(), Json::Bool(row.parity));
+        r.insert("pipelined_stage_spans".to_string(), Json::Obj(spans));
+        r.insert("total_sim_seconds".to_string(), Json::Num(total));
+        r.insert("speedup".to_string(), Json::Num(speedup));
+        r.insert("parallel_efficiency".to_string(), Json::Num(efficiency));
+        runs.push(Json::Obj(r));
     }
 
     let mut root = std::collections::BTreeMap::new();
-    root.insert("bench".to_string(), Json::Str("horizontal_scalability".to_string()));
+    root.insert("bench".to_string(), Json::Str("job_dag_pipelining".to_string()));
     root.insert("scenes".to_string(), Json::Num(req.num_scenes as f64));
     root.insert("scene_width".to_string(), Json::Num(cfg.scene.width as f64));
     root.insert("scene_height".to_string(), Json::Num(cfg.scene.height as f64));
@@ -467,12 +544,17 @@ fn run_bench(p: &ParsedArgs, cfg: &Config, req: &ExtractRequest) -> Result<(), S
     root.insert("baseline_nodes".to_string(), Json::Num(baseline_nodes as f64));
     root.insert("stages".to_string(), Json::Arr(vec![
         Json::Str("extract".to_string()),
-        Json::Str("stitch".to_string()),
+        Json::Str("register".to_string()),
+        Json::Str("align".to_string()),
+        Json::Str("composite".to_string()),
         Json::Str("vectorize".to_string()),
     ]));
     root.insert("runs".to_string(), Json::Arr(runs));
-    let path = p.get_or("out", "BENCH_4.json");
+    let path = p.get_or("out", "BENCH_5.json");
     std::fs::write(path, format!("{}\n", Json::Obj(root))).map_err(|e| e.to_string())?;
     println!("\nwrote {path}");
+    if !all_parity {
+        return Err("bench parity check FAILED: pipelined / barrier / sequential outputs differ".into());
+    }
     Ok(())
 }

@@ -140,11 +140,15 @@ impl HistSnapshot {
 }
 
 /// Named metrics registry for one job run.
+///
+/// Names are owned strings so per-stage series can be minted at runtime
+/// (the job-DAG executor registers `dag_queue_depth_max_<stage>` gauges
+/// for whatever stages a DAG happens to compose).
 #[derive(Debug, Default)]
 pub struct Registry {
-    counters: Mutex<BTreeMap<&'static str, std::sync::Arc<Counter>>>,
-    gauges: Mutex<BTreeMap<&'static str, std::sync::Arc<Gauge>>>,
-    histograms: Mutex<BTreeMap<&'static str, std::sync::Arc<Histogram>>>,
+    counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, std::sync::Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
 }
 
 impl Registry {
@@ -152,31 +156,37 @@ impl Registry {
         Self::default()
     }
 
-    pub fn counter(&self, name: &'static str) -> std::sync::Arc<Counter> {
+    pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
         self.counters
             .lock()
             .unwrap()
-            .entry(name)
+            .entry(name.to_string())
             .or_default()
             .clone()
     }
 
-    pub fn gauge(&self, name: &'static str) -> std::sync::Arc<Gauge> {
+    pub fn gauge(&self, name: &str) -> std::sync::Arc<Gauge> {
         self.gauges
             .lock()
             .unwrap()
-            .entry(name)
+            .entry(name.to_string())
             .or_default()
             .clone()
     }
 
-    pub fn histogram(&self, name: &'static str) -> std::sync::Arc<Histogram> {
+    pub fn histogram(&self, name: &str) -> std::sync::Arc<Histogram> {
         self.histograms
             .lock()
             .unwrap()
-            .entry(name)
+            .entry(name.to_string())
             .or_default()
             .clone()
+    }
+
+    /// Names of all gauges currently registered (tests use this to find
+    /// the per-stage DAG series without hard-coding stage names).
+    pub fn gauge_names(&self) -> Vec<String> {
+        self.gauges.lock().unwrap().keys().cloned().collect()
     }
 
     /// Render a Hadoop-style "Counters:" report block.
@@ -256,6 +266,19 @@ mod tests {
         assert!(text.contains("tile_latency"));
         assert!(text.contains("max_cycle_residual"));
         assert!(text.contains("1.250"));
+    }
+
+    #[test]
+    fn runtime_minted_names_are_distinct_series() {
+        let reg = Registry::new();
+        for stage in ["extract", "register"] {
+            reg.gauge(&format!("dag_queue_depth_max_{stage}")).set(2.0);
+        }
+        reg.gauge("dag_queue_depth_max_register").set(5.0);
+        assert_eq!(reg.gauge("dag_queue_depth_max_extract").get(), 2.0);
+        assert_eq!(reg.gauge("dag_queue_depth_max_register").get(), 5.0);
+        let names = reg.gauge_names();
+        assert!(names.iter().any(|n| n == "dag_queue_depth_max_extract"));
     }
 
     #[test]

@@ -9,16 +9,21 @@
 //! * [`extract`] — run extraction jobs on the simulated cluster
 //!   ([`run_extraction`]) or sequentially on one node
 //!   ([`run_sequential`]), producing [`coordinator::JobReport`]s.
-//! * [`register`] — the two-stage scene-registration flow: overlapping
+//! * [`register`] — the two-stage scene-registration DAG: overlapping
 //!   acquisitions → fused extraction with descriptors → distributed
-//!   pair matching ([`run_registration`]).
-//! * [`stitch`] — the full mosaicking flow on top of registration:
-//!   ingest → register → align → composite ([`run_stitch`]).
-//! * [`vectorize`] — object extraction from the mosaic: segment → label
-//!   (distributed) → trace into GeoJSON-style polygons
+//!   pair matching, pipelined at unit granularity
+//!   ([`run_registration`]).
+//! * [`stitch`] — the full mosaicking flow as one four-stage DAG:
+//!   ingest → extract → register → align → composite ([`run_stitch`]).
+//! * [`vectorize`] — object extraction as the five-stage DAG (stitch
+//!   stages + band-tile labeling) → trace into GeoJSON-style polygons
 //!   ([`run_vectorize`]).
 //! * [`report`] — render Table 1 / Table 2 in the paper's row order,
-//!   plus the per-pair registration, mosaic and vector tables.
+//!   plus the per-pair registration, mosaic, vector and job-DAG tables.
+//!
+//! Every multi-stage flow runs on [`crate::coordinator::run_dag`]:
+//! pipelined by default, bulk-synchronous under `--barrier`
+//! (`scheduler.barrier`), bit-identical outputs either way.
 
 pub mod extract;
 pub mod ingest;

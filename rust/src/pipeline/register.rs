@@ -3,11 +3,14 @@
 //!
 //! This is the downstream workload the paper motivates feature extraction
 //! with (image matching / stitching of LandSat acquisitions, §1), built
-//! as a second MapReduce-shaped job on the same simulated cluster: the
-//! extraction stage's per-scene keypoints+descriptors are shuffled into
-//! DFS feature files, scene pairs become reduce tasks, and each reduce
-//! recovers the translation registering one scene against another
-//! ([`crate::coordinator::run_registration_job`]).
+//! as a two-stage job DAG on the same simulated cluster: the extraction
+//! stage's map units publish per-scene keypoints+descriptors into DFS
+//! feature files as they complete, and each scene pair becomes a reduce
+//! unit whose inputs are exactly the extract units owning its two scenes
+//! — so in the default pipelined mode a pair starts matching while other
+//! scenes are still extracting ([`crate::coordinator::run_dag`];
+//! `--barrier` restores the old two-job bulk-synchronous chaining,
+//! bit-identically).
 //!
 //! Overlapping "acquisitions" are simulated the way two real passes over
 //! the same area overlap: one master scene is rendered once, and each
@@ -20,8 +23,9 @@ use std::collections::BTreeMap;
 use crate::config::Config;
 use crate::coordinator::driver::JobHooks;
 use crate::coordinator::{
-    enumerate_pairs, pair_seed, run_fused_job, run_registration_job, FusedJobSpec, ImageCensus,
-    JobReport, PairResult, RegistrationReport, RegistrationSpec,
+    enumerate_pairs, pair_seed, run_dag, DagReport, DagStage, ExecMode, ExtractStage, FusedJobSpec,
+    ImageCensus, JobReport, PairResult, PairSource, PairStage, RegistrationReport,
+    RegistrationSpec,
 };
 use crate::dfs::{Dfs, NodeId};
 use crate::features::matching::{match_descriptors, ransac_translation};
@@ -67,10 +71,13 @@ pub struct RegistrationOutcome {
     pub corpus: CorpusInfo,
     /// Planted per-acquisition offsets (row, col) into the master scene.
     pub offsets: Vec<(i32, i32)>,
-    /// The extraction stage's report (censuses carry descriptors).
+    /// The extraction stage's report (censuses carry descriptors);
+    /// `sim_seconds` is the stage's busy span on the DAG timeline.
     pub extraction: JobReport,
-    /// The registration stage's report.
+    /// The registration stage's report (same convention).
     pub report: RegistrationReport,
+    /// The whole DAG run: total simulated time, per-stage spans, mode.
+    pub dag: DagReport,
 }
 
 impl RegistrationOutcome {
@@ -185,18 +192,13 @@ pub fn run_registration_on(
     req: &RegistrationRequest,
 ) -> Result<RegistrationOutcome> {
     cfg.validate()?;
-    let alg = Algorithm::parse(&req.spec.algorithm)?;
-    if alg.descriptor_kind() == DescriptorKind::None {
-        return Err(DifetError::Config(format!(
-            "{} computes no descriptors; registration needs sift/surf/brief/orb",
-            req.spec.algorithm
-        )));
-    }
+    validate_matcher(&req.spec.algorithm)?;
 
     let (corpus, offsets) =
         ingest_acquisitions(cfg, dfs, req.num_scenes, req.max_offset, "/corpus/acquisitions.hib")?;
 
-    // Stage 1: extraction, carrying descriptors through the shuffle.
+    // The two-stage DAG: extraction (descriptors published per map unit)
+    // feeding pair registration at unit granularity.
     let extract_req = super::extract::ExtractRequest {
         algorithms: vec![req.spec.algorithm.clone()],
         num_scenes: req.num_scenes,
@@ -206,37 +208,47 @@ pub fn run_registration_on(
     };
     let executor = super::extract::make_executor(cfg, &extract_req)?;
     let registry = Registry::new();
+    let hooks = JobHooks::default();
     let mut spec = FusedJobSpec::new(&[req.spec.algorithm.as_str()], &corpus.bundle_path);
     spec.write_output = false;
     spec.keep_descriptors = true;
-    let mut reports = run_fused_job(
+    let extract = ExtractStage::new(cfg, dfs, executor.as_ref(), spec, &registry, &hooks)?
+        .publish_features(&req.spec.feature_dir, 0);
+    let pairs = PairStage::new(
         cfg,
         dfs,
-        executor.as_ref(),
-        &spec,
+        req.spec.clone(),
+        PairSource::Extract { stage: &extract, stage_index: 0 },
         &registry,
-        &JobHooks::default(),
-    )?;
-    let extraction = reports
+        &hooks,
+    );
+    let stages: Vec<&dyn DagStage> = vec![&extract, &pairs];
+    let dag = run_dag(cfg, &stages, ExecMode::from_config(cfg), &registry)?;
+
+    let extraction = extract
+        .reports(&dag.stages[0], dag.stages[0].span_secs(), dag.wall_seconds)?
         .pop()
         .ok_or_else(|| DifetError::Job("extraction stage returned no report".into()))?;
-
-    // Stage 2: the reduce-shaped registration job.
-    let report = run_registration_job(
-        cfg,
-        dfs,
-        &extraction.images,
-        &req.spec,
-        &registry,
-        &JobHooks::default(),
-    )?;
+    let report = pairs.report(&dag.stages[1], dag.stages[1].span_secs(), dag.wall_seconds)?;
 
     Ok(RegistrationOutcome {
         corpus,
         offsets,
         extraction,
         report,
+        dag,
     })
+}
+
+/// Registration matches ONE descriptor algorithm; reject the rest early.
+pub(crate) fn validate_matcher(algorithm: &str) -> Result<()> {
+    let alg = Algorithm::parse(algorithm)?;
+    if alg.descriptor_kind() == DescriptorKind::None {
+        return Err(DifetError::Config(format!(
+            "{algorithm} computes no descriptors; registration needs sift/surf/brief/orb"
+        )));
+    }
+    Ok(())
 }
 
 /// Sequential baseline: the same pairs, matched with the plain library

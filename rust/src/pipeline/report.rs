@@ -269,6 +269,38 @@ pub fn render_vector_table(
     out
 }
 
+/// Job-DAG timeline: per-stage open/close on the shared virtual clock,
+/// busy span, unit count, peak queue depth and eager (cross-stage
+/// pipelined) releases — the observable difference between `--barrier`
+/// and the default pipelined mode.
+pub fn render_dag_table(dag: &crate::coordinator::DagReport) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Job DAG — {} mode: {} stage(s), {} total, peak stage overlap {}\n",
+        dag.mode.name(),
+        dag.stages.len(),
+        fmt::duration(dag.sim_seconds),
+        dag.max_stage_overlap,
+    ));
+    out.push_str(&format!(
+        "{:<12}{:>7}{:>10}{:>10}{:>10}{:>8}{:>8}\n",
+        "stage", "units", "open", "close", "span", "depth", "eager"
+    ));
+    for s in &dag.stages {
+        out.push_str(&format!(
+            "{:<12}{:>7}{:>10}{:>10}{:>10}{:>8}{:>8}\n",
+            s.name,
+            s.units,
+            fmt::duration(s.open_secs),
+            fmt::duration(s.close_secs),
+            fmt::duration(s.span_secs()),
+            s.max_queue_depth,
+            s.eager_units,
+        ));
+    }
+    out
+}
+
 /// Per-run census table.
 pub fn render_census_table(jobs: &[JobReport]) -> String {
     let mut out = String::new();
@@ -447,6 +479,39 @@ mod tests {
         let empty = render_vector_table(&rep, &[]);
         assert!(empty.contains("0 polygon(s)"));
         assert!(!empty.contains("vertices"));
+    }
+
+    #[test]
+    fn dag_table_renders_stages_and_mode() {
+        use crate::coordinator::{DagReport, ExecMode, StageReport};
+        let stage = |name: &'static str, units, open, close, eager| StageReport {
+            name,
+            units,
+            open_secs: open,
+            close_secs: close,
+            compute_seconds: 0.1,
+            io_seconds: 0.2,
+            data_local_tasks: 1,
+            rack_remote_tasks: 0,
+            retries: 0,
+            speculative_launches: 0,
+            eager_units: eager,
+            max_queue_depth: units as u64,
+        };
+        let dag = DagReport {
+            mode: ExecMode::Pipelined,
+            sim_seconds: 21.5,
+            wall_seconds: 0.4,
+            max_stage_overlap: 2,
+            stages: vec![stage("extract", 3, 12.0, 18.0, 0), stage("register", 3, 12.0, 21.5, 2)],
+        };
+        let t = render_dag_table(&dag);
+        assert!(t.contains("pipelined mode"));
+        assert!(t.contains("peak stage overlap 2"));
+        assert!(t.contains("extract"));
+        assert!(t.contains("register"));
+        assert_eq!(dag.stage("register").unwrap().eager_units, 2);
+        assert!((dag.stage("extract").unwrap().span_secs() - 6.0).abs() < 1e-9);
     }
 
     #[test]

@@ -1,41 +1,52 @@
-//! The stitch pipeline: ingest → register → align → composite.
+//! The stitch pipeline: ingest → one job DAG (extract → register →
+//! align → composite).
 //!
 //! The full mosaicking flow the paper's follow-up work describes (Sarı,
-//! Eken, Sayar 2018), run end to end on the simulated cluster:
+//! Eken, Sayar 2018), composed as ONE job DAG on the simulated cluster
+//! ([`crate::coordinator::run_dag`]):
 //!
 //! 1. **Ingest** — overlapping acquisitions of one master scene are
 //!    bundled into DFS ([`super::register::ingest_acquisitions`]).
-//! 2. **Register** — fused extraction with descriptors, then the
-//!    reduce-shaped pair-matching job
-//!    ([`super::register::run_registration_on`]).
-//! 3. **Align** — pairwise translations become per-scene absolute
-//!    positions by global least squares
-//!    ([`crate::mosaic::solve_alignment`]).
-//! 4. **Composite** — the canvas is rendered as tile-shaped work units
-//!    on the coordinator ([`crate::coordinator::run_mosaic_job`]),
+//! 2. **Extract** — fused extraction with descriptors; each map unit
+//!    publishes its scenes' feature files as it completes.
+//! 3. **Register** — one reduce unit per scene pair, depending on
+//!    exactly the extract units owning its two scenes (pipelined mode
+//!    overlaps the two stages at unit granularity).
+//! 4. **Align** — pairwise translations become per-scene absolute
+//!    positions by global least squares, as a single unit gated on the
+//!    FULL pair set ([`crate::mosaic::solve_alignment`] is global —
+//!    releasing it earlier would change bits).
+//! 5. **Composite** — the canvas is rendered as tile-shaped work units,
 //!    byte-identical to [`crate::mosaic::composite_sequential`].
 //!
-//! All four stages share one DFS, so the bundle the registration stage
-//! ingested is the same bytes the compositing stage's scene shuffle
-//! re-routes.
+//! `--barrier` runs the same DAG bulk-synchronously (the pre-DAG
+//! four-job chaining) and must produce the identical mosaic.  All stages
+//! share one DFS, so the bundle the registration stage ingested is the
+//! same bytes the compositing stage's scene shuffle re-routes.
+//!
+//! `run_stitch_dag` optionally appends the vectorize tail (band-tile
+//! labeling over the canvas) so `difet vectorize` runs one five-stage
+//! DAG — that is where composite→label pipelining comes from.
 
 use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::config::Config;
 use crate::coordinator::driver::JobHooks;
-use crate::coordinator::{run_mosaic_job, MosaicReport, MosaicSpec};
+use crate::coordinator::{
+    run_dag, AlignSource, AlignStage, CompositeStage, DagReport, DagStage, ExecMode, ExtractStage,
+    FusedJobSpec, LabelStage, MaskSource, MosaicReport, MosaicSpec, PairSource, PairStage,
+    VectorReport, VectorSpec,
+};
 use crate::dfs::{Dfs, NodeId};
 use crate::hib::{BundleReader, BundleWriter, Codec};
 use crate::imagery::Rgba8Image;
 use crate::metrics::Registry;
-use crate::mosaic::{
-    composite_sequential, layout, measurements_from_pairs, solve_alignment, AlignOptions,
-    BlendMode, Canvas, GlobalAlignment,
-};
-use crate::util::{DifetError, Result};
+use crate::mosaic::{composite_sequential, layout, BlendMode, Canvas, GlobalAlignment};
+use crate::util::Result;
+use crate::vector::{Labels, MergeStats, ObjectStats};
 
-use super::register::{run_registration_on, RegistrationOutcome, RegistrationRequest};
+use super::register::{ingest_acquisitions, RegistrationOutcome, RegistrationRequest};
 
 /// What to stitch.
 #[derive(Debug, Clone)]
@@ -61,17 +72,19 @@ impl Default for StitchRequest {
 /// Everything a stitch run produced.
 #[derive(Debug)]
 pub struct StitchOutcome {
-    /// The two-stage registration outcome (corpus, planted offsets,
-    /// extraction + registration reports).
+    /// The registration front half (corpus, planted offsets, extraction
+    /// + registration reports, the shared DAG report).
     pub registration: RegistrationOutcome,
     /// Scene images as decoded from the DFS bundle (id ascending).
     pub scenes: Vec<(u64, Rgba8Image)>,
     /// Solved global alignment.
     pub alignment: GlobalAlignment,
-    /// The mosaic job's report (seam metrics, counters, timing).
+    /// The composite stage's report (seam metrics, counters, timing).
     pub report: MosaicReport,
     /// The composited canvas.
     pub mosaic: Rgba8Image,
+    /// The whole DAG run (same object as `registration.dag`).
+    pub dag: DagReport,
 }
 
 impl StitchOutcome {
@@ -109,6 +122,21 @@ impl StitchOutcome {
     }
 }
 
+/// The vectorize tail's products when [`run_stitch_dag`] appends it.
+pub(crate) struct VectorTail {
+    pub report: VectorReport,
+    pub labels: Labels,
+    pub stats: Vec<ObjectStats>,
+    #[allow(dead_code)]
+    pub mstats: MergeStats,
+}
+
+/// Knobs the vectorize tail needs from [`super::vectorize::VectorOptions`].
+pub(crate) struct VectorTailSpec {
+    pub threshold: f32,
+    pub band_rows: usize,
+}
+
 /// Full four-stage run on the simulated cluster.
 pub fn run_stitch(cfg: &Config, req: &StitchRequest) -> Result<StitchOutcome> {
     cfg.validate()?;
@@ -130,26 +158,35 @@ pub fn run_stitch_on(
     registry: &Registry,
     hooks: &JobHooks,
 ) -> Result<StitchOutcome> {
-    // Stages 1–2: acquisitions → extraction → pair registration.
-    let registration = run_registration_on(cfg, dfs, &req.reg)?;
+    let (outcome, _) = run_stitch_dag(cfg, dfs, req, None, registry, hooks)?;
+    Ok(outcome)
+}
 
-    // Stage 3: global alignment over the registered pairs.
-    let scene_ids: Vec<u64> = registration
-        .extraction
-        .images
-        .iter()
-        .map(|c| c.image_id)
-        .collect();
-    let measurements = measurements_from_pairs(&registration.report.pairs);
-    if measurements.is_empty() {
-        return Err(DifetError::Job(
-            "stitch: no scene pair registered; nothing to align".into(),
-        ));
-    }
-    let alignment = solve_alignment(&scene_ids, &measurements, AlignOptions::default())?;
+/// Compose and run the stitch DAG, optionally with the vectorize tail
+/// appended as a fifth stage (what `difet vectorize` runs): this is the
+/// single place the multi-stage DAG is wired, so the four- and
+/// five-stage flows cannot drift apart.
+pub(crate) fn run_stitch_dag(
+    cfg: &Config,
+    dfs: &Dfs,
+    req: &StitchRequest,
+    vector: Option<&VectorTailSpec>,
+    registry: &Registry,
+    hooks: &JobHooks,
+) -> Result<(StitchOutcome, Option<VectorTail>)> {
+    cfg.validate()?;
+    super::register::validate_matcher(&req.reg.spec.algorithm)?;
 
-    // Stage 4: read the acquisition bundle back and composite.
-    let (bytes, _) = dfs.read_file(&registration.corpus.bundle_path, NodeId(0))?;
+    // Ingest, then decode the scenes back out of DFS: the composite
+    // stage's scene shuffle re-routes the same bytes.
+    let (corpus, offsets) = ingest_acquisitions(
+        cfg,
+        dfs,
+        req.reg.num_scenes,
+        req.reg.max_offset,
+        "/corpus/acquisitions.hib",
+    )?;
+    let (bytes, _) = dfs.read_file(&corpus.bundle_path, NodeId(0))?;
     let scenes = {
         let reader = BundleReader::open(&bytes)?;
         (0..reader.record_count())
@@ -158,20 +195,107 @@ pub fn run_stitch_on(
     };
     drop(bytes);
 
-    let spec = MosaicSpec {
+    // The DAG: extract → register → align → composite (→ vectorize).
+    let extract_req = super::extract::ExtractRequest {
+        algorithms: vec![req.reg.spec.algorithm.clone()],
+        num_scenes: req.reg.num_scenes,
+        write_output: false,
+        force_native: req.reg.force_native,
+        fused: true,
+    };
+    let executor = super::extract::make_executor(cfg, &extract_req)?;
+    let mut fspec = FusedJobSpec::new(&[req.reg.spec.algorithm.as_str()], &corpus.bundle_path);
+    fspec.write_output = false;
+    fspec.keep_descriptors = true;
+    let extract = ExtractStage::new(cfg, dfs, executor.as_ref(), fspec, registry, hooks)?
+        .publish_features(&req.reg.spec.feature_dir, 0);
+    let pairs = PairStage::new(
+        cfg,
+        dfs,
+        req.reg.spec.clone(),
+        PairSource::Extract { stage: &extract, stage_index: 0 },
+        registry,
+        hooks,
+    );
+    let align = AlignStage::new(&pairs, 1, hooks);
+    let mspec = MosaicSpec {
         blend: req.blend,
         canvas_tile: req.canvas_tile,
         ..Default::default()
     };
-    let (report, mosaic) = run_mosaic_job(cfg, dfs, &scenes, &alignment, &spec, registry, hooks)?;
+    let composite = CompositeStage::new(
+        cfg,
+        dfs,
+        &scenes,
+        AlignSource::Solved { stage: &align, stage_index: 2 },
+        mspec,
+        registry,
+        hooks,
+    );
+    let label = vector.map(|v| {
+        LabelStage::new(
+            cfg,
+            dfs,
+            VectorSpec { band_rows: v.band_rows, ..Default::default() },
+            MaskSource::Mosaic {
+                stage: &composite,
+                stage_index: 3,
+                threshold: v.threshold,
+            },
+            registry,
+            hooks,
+        )
+    });
+    let mut stages: Vec<&dyn DagStage> = vec![&extract, &pairs, &align, &composite];
+    if let Some(l) = &label {
+        stages.push(l);
+    }
+    let dag = run_dag(cfg, &stages, ExecMode::from_config(cfg), registry)?;
+    drop(stages);
 
-    Ok(StitchOutcome {
-        registration,
-        scenes,
-        alignment,
-        report,
-        mosaic,
-    })
+    // Pull every product out of the stages, then drop them (they borrow
+    // `scenes`, which moves into the outcome).
+    let extraction = extract
+        .reports(&dag.stages[0], dag.stages[0].span_secs(), dag.wall_seconds)?
+        .pop()
+        .ok_or_else(|| crate::util::DifetError::Job("extraction returned no report".into()))?;
+    let reg_report = pairs.report(&dag.stages[1], dag.stages[1].span_secs(), dag.wall_seconds)?;
+    let alignment = align.alignment()?;
+    let mosaic_report =
+        composite.report(&dag.stages[3], dag.stages[3].span_secs(), dag.wall_seconds);
+    let mosaic = composite.mosaic()?;
+    let tail = match &label {
+        Some(l) => {
+            let report = l.report(&dag.stages[4], dag.stages[4].span_secs(), dag.wall_seconds)?;
+            let (labels, stats, mstats) = l.output()?;
+            Some(VectorTail { report, labels, stats, mstats })
+        }
+        None => None,
+    };
+    drop(label);
+    drop(composite);
+    drop(align);
+    drop(pairs);
+    drop(extract);
+
+    let registration = RegistrationOutcome {
+        corpus,
+        offsets,
+        extraction,
+        report: reg_report,
+        dag: dag.clone(),
+    };
+    Ok((
+        StitchOutcome {
+            registration,
+            scenes,
+            alignment,
+            report: mosaic_report,
+            mosaic,
+            dag,
+        },
+        tail,
+    ))
 }
 
 /// Dump a mosaic to a local file as a single-record HIB bundle (raw

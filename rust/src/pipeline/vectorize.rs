@@ -1,27 +1,27 @@
-//! The vectorize pipeline: ingest → stitch → segment → label → trace.
+//! The vectorize pipeline: ingest → one five-stage job DAG (extract →
+//! register → align → composite → label) → trace.
 //!
-//! The five-stage flow completing the authors' published pipeline
-//! (extraction → registration → mosaicking → object extraction /
-//! vectorization) on the simulated cluster:
+//! The flow completing the authors' published pipeline (extraction →
+//! registration → mosaicking → object extraction / vectorization),
+//! composed as ONE job DAG (`run_stitch_dag` with the
+//! vectorize tail appended).  In the default pipelined mode a label
+//! band's mask rows are thresholded and labeled as soon as the canvas
+//! tiles covering those rows are composited — the band's declared
+//! unit-level inputs — while other canvas tiles are still rendering;
+//! `--barrier` restores the old chain of bulk-synchronous jobs,
+//! bit-identically ([`crate::vector::threshold_mask`] is per-pixel and
+//! the union-find merge uses canonical min-pixel keys, so any schedule
+//! equals [`crate::vector::label_sequential`]).
 //!
-//! 1. **Stitch** — the full four-stage mosaicking flow
-//!    ([`super::stitch::run_stitch_on`]) produces the composited canvas.
-//! 2. **Segment** — the mosaic is thresholded into a binary mask
-//!    ([`crate::vector::threshold_mask`]; transparent canvas gaps stay
-//!    background).
-//! 3. **Label** — the mask is labeled as band-shaped `LabelTile` work
-//!    units on the coordinator ([`crate::coordinator::run_vector_job`]),
-//!    tile labels are shuffled through CRC-guarded DFS files, and the
-//!    union-find merge stitches them into global object ids —
-//!    bit-identical to [`crate::vector::label_sequential`].
-//! 4. **Trace** — every object of `min_area`+ pixels becomes a
-//!    Douglas–Peucker-simplified polygon with exact area / perimeter /
-//!    centroid / bbox attributes ([`crate::vector::extract_objects`]),
-//!    emittable as a GeoJSON-style document ([`dump_geojson`]).
+//! **Trace** then runs driver-side: every object of `min_area`+ pixels
+//! becomes a Douglas–Peucker-simplified polygon with exact area /
+//! perimeter / centroid / bbox attributes
+//! ([`crate::vector::extract_objects`]), emittable as a GeoJSON-style
+//! document ([`dump_geojson`]).
 //!
 //! The segment → label → trace tail also runs standalone over any raster
-//! ([`run_vector_stage_on`]) — that is what `difet bench` measures and
-//! what the e2e suite drives at several node counts.
+//! ([`run_vector_stage_on`], a single-stage DAG over a precomputed mask)
+//! — that is what the e2e suite drives at several node counts.
 
 use std::path::Path;
 
@@ -38,7 +38,7 @@ use crate::vector::{
     VectorObject,
 };
 
-use super::stitch::{run_stitch_on, StitchOutcome, StitchRequest};
+use super::stitch::{StitchOutcome, StitchRequest};
 
 /// Segment/label/trace knobs (everything downstream of the mosaic).
 #[derive(Debug, Clone)]
@@ -177,9 +177,9 @@ pub fn run_vectorize(cfg: &Config, req: &VectorizeRequest) -> Result<VectorizeOu
     run_vectorize_on(cfg, &dfs, req, &Registry::new(), &JobHooks::default())
 }
 
-/// [`run_vectorize`] over caller-provided DFS/metrics/hooks.  The stitch
-/// stages and the vector job share one DFS, so the mosaic the vector
-/// stage segments came off the same store its mask is shuffled back into.
+/// [`run_vectorize`] over caller-provided DFS/metrics/hooks: ONE
+/// five-stage DAG, so the label bands pipeline against the composite
+/// tiles instead of waiting for a whole-mosaic barrier.
 pub fn run_vectorize_on(
     cfg: &Config,
     dfs: &Dfs,
@@ -187,8 +187,25 @@ pub fn run_vectorize_on(
     registry: &Registry,
     hooks: &JobHooks,
 ) -> Result<VectorizeOutcome> {
-    let stitch = run_stitch_on(cfg, dfs, &req.stitch, registry, hooks)?;
-    let vector = run_vector_stage_on(cfg, dfs, &stitch.mosaic, &req.opts, registry, hooks)?;
+    let tail_spec = super::stitch::VectorTailSpec {
+        threshold: req.opts.threshold,
+        band_rows: req.opts.band_rows,
+    };
+    let (stitch, tail) =
+        super::stitch::run_stitch_dag(cfg, dfs, &req.stitch, Some(&tail_spec), registry, hooks)?;
+    let tail = tail.expect("vector tail requested");
+    // Driver-side trace over the merged labels, plus the whole-raster
+    // mask (identical to the per-band thresholds the units computed).
+    let objects = extract_objects(&tail.labels, &tail.stats, req.opts.min_area, req.opts.epsilon);
+    let mask = threshold_mask(&stitch.mosaic, req.opts.threshold);
+    let vector = VectorStage {
+        opts: req.opts.clone(),
+        mask,
+        labels: tail.labels,
+        stats: tail.stats,
+        objects,
+        report: tail.report,
+    };
     Ok(VectorizeOutcome { stitch, vector })
 }
 

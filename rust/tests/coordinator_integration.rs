@@ -234,8 +234,9 @@ fn concurrent_jobs_do_not_interfere() {
                 let registry = Registry::new();
                 let mut spec = JobSpec::new("fast", path);
                 spec.write_output = false;
-                let rep = run_job(cfg2, dfs, &NativeExecutor, &spec, &registry, &JobHooks::default())
-                    .unwrap();
+                let rep =
+                    run_job(cfg2, dfs, &NativeExecutor, &spec, &registry, &JobHooks::default())
+                        .unwrap();
                 results.lock().unwrap().push(rep.total_count());
             });
         }

@@ -1,0 +1,332 @@
+//! Property tests for the job-DAG runtime: random DAG topologies with
+//! injected retries and speculation must produce bit-identical stage
+//! outputs in `--barrier` and pipelined modes — and both must equal a
+//! plain sequential evaluation of the same recurrence.  A deterministic
+//! one-slot chain additionally pins down the pipelining observables
+//! (stage-overlap and queue-depth gauges, eager releases).
+
+use std::any::Any;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use difet::config::Config;
+use difet::coordinator::{
+    run_dag, DagStage, ExecMode, Gate, StagePlan, TaskHandle, UnitOutput, UnitRef, UnitSpec,
+};
+use difet::dfs::NodeId;
+use difet::metrics::Registry;
+use difet::util::rng::Pcg32;
+use difet::util::{DifetError, Result};
+
+/// Stage names must be `&'static str`; the generator indexes this table.
+const NAMES: [&str; 6] = ["s0", "s1", "s2", "s3", "s4", "s5"];
+
+fn mix(a: u64, b: u64) -> u64 {
+    let mut z = a ^ b.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z ^ (z >> 31)
+}
+
+/// One synthetic stage: unit `u` computes a hash of its own identity and
+/// its deps' merged values (read from the cross-stage store) — a pure
+/// function of declared inputs, like the real stages.
+struct SynthStage {
+    index: usize,
+    gates: Vec<Gate>,
+    unit_deps: Vec<Vec<UnitRef>>,
+    /// Attempts 0..fail_first[u] of unit u die (injected retries).
+    fail_first: Vec<usize>,
+    /// Slow units sleep a little, inviting speculation twins.
+    slow: Vec<bool>,
+    store: Arc<Mutex<BTreeMap<(usize, usize), u64>>>,
+}
+
+impl DagStage for SynthStage {
+    fn name(&self) -> &'static str {
+        NAMES[self.index]
+    }
+    fn gates(&self) -> Vec<Gate> {
+        self.gates.clone()
+    }
+    fn plan(&self) -> Result<StagePlan> {
+        Ok(StagePlan {
+            units: self
+                .unit_deps
+                .iter()
+                .map(|deps| UnitSpec { deps: deps.clone(), preferred_nodes: Vec::new() })
+                .collect(),
+            plan_io_secs: 0.0,
+        })
+    }
+    fn run_unit(
+        &self,
+        unit: usize,
+        handle: &TaskHandle,
+        _node: NodeId,
+    ) -> Result<Option<UnitOutput>> {
+        if handle.attempt < self.fail_first[unit] {
+            return Err(DifetError::Job(format!(
+                "injected failure (unit {unit}, attempt {})",
+                handle.attempt
+            )));
+        }
+        if self.slow[unit] {
+            // Report sluggish progress so the straggler detector can
+            // clone this attempt; first finisher wins either way.
+            handle.report_progress(0.05);
+            std::thread::sleep(std::time::Duration::from_millis(3));
+        }
+        let store = self.store.lock().unwrap();
+        let mut v = mix(self.index as u64 + 1, unit as u64 + 1);
+        for d in &self.unit_deps[unit] {
+            let dep = *store
+                .get(&(d.stage, d.unit))
+                .expect("unit released before its declared input merged");
+            v = mix(v, dep);
+        }
+        drop(store);
+        Ok(Some(UnitOutput { payload: Box::new(v), compute_ns: 10_000, io_secs: 0.0 }))
+    }
+    fn merge(&self, unit: usize, payload: Box<dyn Any + Send>) -> Result<()> {
+        let v = *payload.downcast::<u64>().expect("u64 payload");
+        self.store.lock().unwrap().insert((self.index, unit), v);
+        Ok(())
+    }
+}
+
+/// The ground truth: evaluate the same recurrence sequentially.
+fn sequential_truth(stages: &[(Vec<Gate>, Vec<Vec<UnitRef>>)]) -> BTreeMap<(usize, usize), u64> {
+    let mut out = BTreeMap::new();
+    for (s, (_, unit_deps)) in stages.iter().enumerate() {
+        for (u, deps) in unit_deps.iter().enumerate() {
+            let mut v = mix(s as u64 + 1, u as u64 + 1);
+            for d in deps {
+                v = mix(v, out[&(d.stage, d.unit)]);
+            }
+            out.insert((s, u), v);
+        }
+    }
+    out
+}
+
+fn dag_cfg() -> Config {
+    let mut cfg = Config::new();
+    cfg.cluster.nodes = 2;
+    cfg.cluster.slots_per_node = 2;
+    cfg.cluster.job_startup = 0.25;
+    cfg.cluster.task_overhead = 0.01;
+    cfg.scheduler.speculation = true;
+    cfg.scheduler.speculation_slowness = 0.95;
+    cfg
+}
+
+/// Generate one random topology: a planning chain (stage s gates on
+/// s−1 being planned) with random unit counts, random cross-stage unit
+/// deps, random injected failures and random stragglers.
+#[allow(clippy::type_complexity)]
+fn random_topology(
+    rng: &mut Pcg32,
+) -> (Vec<(Vec<Gate>, Vec<Vec<UnitRef>>)>, Vec<Vec<usize>>, Vec<Vec<bool>>) {
+    let n_stages = 2 + rng.next_bounded(3) as usize; // 2..=4
+    let mut stages: Vec<(Vec<Gate>, Vec<Vec<UnitRef>>)> = Vec::new();
+    let mut fails: Vec<Vec<usize>> = Vec::new();
+    let mut slows: Vec<Vec<bool>> = Vec::new();
+    for s in 0..n_stages {
+        let mut gates = Vec::new();
+        if s > 0 {
+            gates.push(Gate::Planned(s - 1));
+            // Occasionally demand a full upstream completion too.
+            if rng.next_bounded(4) == 0 {
+                gates.push(Gate::Completed(rng.next_bounded(s as u32) as usize));
+            }
+        }
+        let n_units = rng.next_bounded(5) as usize; // 0..=4 (zero allowed)
+        let mut unit_deps = Vec::with_capacity(n_units);
+        let mut fail = Vec::with_capacity(n_units);
+        let mut slow = Vec::with_capacity(n_units);
+        for _ in 0..n_units {
+            let mut deps: Vec<UnitRef> = Vec::new();
+            if s > 0 {
+                for _ in 0..rng.next_bounded(4) {
+                    let ds = rng.next_bounded(s as u32) as usize;
+                    let n_up = stages[ds].1.len();
+                    if n_up == 0 {
+                        continue;
+                    }
+                    let du = rng.next_bounded(n_up as u32) as usize;
+                    let r = UnitRef { stage: ds, unit: du };
+                    if !deps.contains(&r) {
+                        deps.push(r);
+                    }
+                }
+            }
+            unit_deps.push(deps);
+            fail.push(if rng.next_bounded(5) == 0 { 1 } else { 0 });
+            slow.push(rng.next_bounded(7) == 0);
+        }
+        stages.push((gates, unit_deps));
+        fails.push(fail);
+        slows.push(slow);
+    }
+    (stages, fails, slows)
+}
+
+fn run_topology(
+    topology: &[(Vec<Gate>, Vec<Vec<UnitRef>>)],
+    fails: &[Vec<usize>],
+    slows: &[Vec<bool>],
+    mode: ExecMode,
+) -> BTreeMap<(usize, usize), u64> {
+    let store = Arc::new(Mutex::new(BTreeMap::new()));
+    let stages: Vec<SynthStage> = topology
+        .iter()
+        .enumerate()
+        .map(|(index, (gates, unit_deps))| SynthStage {
+            index,
+            gates: gates.clone(),
+            unit_deps: unit_deps.clone(),
+            fail_first: fails[index].clone(),
+            slow: slows[index].clone(),
+            store: store.clone(),
+        })
+        .collect();
+    let refs: Vec<&dyn DagStage> = stages.iter().map(|s| s as &dyn DagStage).collect();
+    let registry = Registry::new();
+    run_dag(&dag_cfg(), &refs, mode, &registry).expect("dag run");
+    drop(refs);
+    drop(stages);
+    Arc::try_unwrap(store).unwrap().into_inner().unwrap()
+}
+
+#[test]
+fn random_topologies_are_mode_invariant_and_match_sequential_truth() {
+    let mut rng = Pcg32::new(0xDA6, 0x5EED);
+    for case in 0..12 {
+        let (topology, fails, slows) = random_topology(&mut rng);
+        let truth = sequential_truth(&topology);
+        let pipelined = run_topology(&topology, &fails, &slows, ExecMode::Pipelined);
+        let barrier = run_topology(&topology, &fails, &slows, ExecMode::Barrier);
+        assert_eq!(
+            pipelined, truth,
+            "case {case}: pipelined diverged from sequential truth"
+        );
+        assert_eq!(barrier, truth, "case {case}: barrier diverged from sequential truth");
+    }
+}
+
+#[test]
+fn retried_and_speculated_units_do_not_change_outputs_or_double_merge() {
+    // Every unit's first attempt dies AND every unit is slow: maximum
+    // retry + speculation churn, same bits.
+    let topology: Vec<(Vec<Gate>, Vec<Vec<UnitRef>>)> = vec![
+        (vec![], vec![vec![]; 4]),
+        (
+            vec![Gate::Planned(0)],
+            (0..4).map(|u| vec![UnitRef { stage: 0, unit: u }]).collect(),
+        ),
+    ];
+    let fails = vec![vec![1; 4], vec![1; 4]];
+    let slows = vec![vec![true; 4], vec![true; 4]];
+    let truth = sequential_truth(&topology);
+    for mode in [ExecMode::Pipelined, ExecMode::Barrier] {
+        let got = run_topology(&topology, &fails, &slows, mode);
+        assert_eq!(got, truth, "{mode:?} with retries+speculation diverged");
+        assert_eq!(got.len(), 8, "every unit merged exactly once");
+    }
+}
+
+/// One slot, three upstream units, downstream unit depending on the
+/// first two: after units 0 and 1 merge, the downstream unit is released
+/// while upstream unit 2 is still pending — deterministic cross-stage
+/// overlap, visible in the gauges.  Barrier mode must show none.
+#[test]
+fn one_slot_chain_pins_down_the_overlap_gauges() {
+    let run = |mode: ExecMode| {
+        let store = Arc::new(Mutex::new(BTreeMap::new()));
+        let a = SynthStage {
+            index: 0,
+            gates: vec![],
+            unit_deps: vec![vec![]; 3],
+            fail_first: vec![0; 3],
+            slow: vec![false; 3],
+            store: store.clone(),
+        };
+        let b = SynthStage {
+            index: 1,
+            gates: vec![Gate::Planned(0)],
+            unit_deps: vec![vec![
+                UnitRef { stage: 0, unit: 0 },
+                UnitRef { stage: 0, unit: 1 },
+            ]],
+            fail_first: vec![0],
+            slow: vec![false],
+            store: store.clone(),
+        };
+        let mut cfg = dag_cfg();
+        cfg.cluster.nodes = 1;
+        cfg.cluster.slots_per_node = 1;
+        let registry = Registry::new();
+        let rep = run_dag(&cfg, &[&a, &b], mode, &registry).expect("dag run");
+        (
+            rep.max_stage_overlap,
+            rep.stage("s1").unwrap().eager_units,
+            registry.gauge("dag_stage_overlap_max").get(),
+            registry.gauge("dag_queue_depth_max_s0").get(),
+            registry.counter("dag_eager_units").get(),
+        )
+    };
+    let (overlap, eager, overlap_gauge, depth_a, eager_counter) = run(ExecMode::Pipelined);
+    assert_eq!(overlap, 2, "pipelined: stage s1 must open while s0 still has a unit");
+    assert_eq!(eager, 1, "the s1 unit is an eager release");
+    assert_eq!(overlap_gauge, 2.0);
+    assert_eq!(eager_counter, 1);
+    assert!(depth_a >= 3.0, "all three s0 units queue on the single slot");
+
+    let (overlap, eager, overlap_gauge, _, eager_counter) = run(ExecMode::Barrier);
+    assert_eq!(overlap, 1, "barrier: no cross-stage overlap by construction");
+    assert_eq!(eager, 0);
+    assert_eq!(overlap_gauge, 1.0);
+    assert_eq!(eager_counter, 0);
+}
+
+/// Barrier mode charges one job startup per stage; pipelined charges
+/// one for the whole DAG — with equal work, pipelined can never be
+/// slower on the simulated clock.
+#[test]
+fn pipelined_sim_time_never_exceeds_barrier_on_the_same_dag() {
+    let topology: Vec<(Vec<Gate>, Vec<Vec<UnitRef>>)> = vec![
+        (vec![], vec![vec![]; 3]),
+        (
+            vec![Gate::Planned(0)],
+            (0..3).map(|u| vec![UnitRef { stage: 0, unit: u }]).collect(),
+        ),
+        (vec![Gate::Completed(1)], vec![vec![]]),
+    ];
+    let fails = vec![vec![0; 3], vec![0; 3], vec![0]];
+    let slows = vec![vec![false; 3], vec![false; 3], vec![false]];
+    let sim = |mode: ExecMode| {
+        let store = Arc::new(Mutex::new(BTreeMap::new()));
+        let stages: Vec<SynthStage> = topology
+            .iter()
+            .enumerate()
+            .map(|(index, (gates, unit_deps))| SynthStage {
+                index,
+                gates: gates.clone(),
+                unit_deps: unit_deps.clone(),
+                fail_first: fails[index].clone(),
+                slow: slows[index].clone(),
+                store: store.clone(),
+            })
+            .collect();
+        let refs: Vec<&dyn DagStage> = stages.iter().map(|s| s as &dyn DagStage).collect();
+        run_dag(&dag_cfg(), &refs, mode, &Registry::new()).expect("dag").sim_seconds
+    };
+    let pipelined = sim(ExecMode::Pipelined);
+    let barrier = sim(ExecMode::Barrier);
+    // Three stages: barrier pays 3 × 0.25 s startup, pipelined pays one.
+    // Measured compute is microseconds, so the gap cannot be noise.
+    assert!(
+        pipelined < barrier,
+        "pipelined {pipelined:.3}s !< barrier {barrier:.3}s"
+    );
+}

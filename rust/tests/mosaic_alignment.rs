@@ -118,7 +118,10 @@ fn prop_noisy_graphs_recover_within_tolerance() {
         // the bound far from flaky while still scaling with the noise.
         let bound = 2.0 * amp * (n as f64 + 2.0) + 1e-9;
         let err = max_recovery_error(&al.positions, &truth);
-        difet::prop_assert!(err <= bound, "recovery error {err} > bound {bound} (amp {amp}, n {n})");
+        difet::prop_assert!(
+            err <= bound,
+            "recovery error {err} > bound {bound} (amp {amp}, n {n})"
+        );
         // Residuals are bounded by the per-edge noise (up to the same
         // accumulation slack) — they measure measurement disagreement,
         // which noise alone created.

@@ -12,8 +12,8 @@ use difet::dfs::Dfs;
 use difet::imagery::Rgba8Image;
 use difet::metrics::Registry;
 use difet::pipeline::{
-    run_vector_stage_on, run_vectorize, RegistrationRequest, StitchRequest, VectorOptions,
-    VectorStage, VectorizeRequest,
+    run_vector_stage_on, run_vectorize, run_vectorize_on, RegistrationRequest, StitchRequest,
+    VectorOptions, VectorStage, VectorizeRequest,
 };
 use difet::util::rng::Pcg32;
 use difet::vector::{extract_objects, label_sequential, threshold_mask};
@@ -154,6 +154,80 @@ fn registry_carries_vector_diagnostics() {
     assert!(
         registry.histogram("label_tile_latency").snapshot().n as usize
             >= stage.report.tile_count
+    );
+}
+
+#[test]
+fn pipelined_five_stage_dag_overlaps_stages_and_matches_barrier() {
+    // One slot on one node makes the cross-stage releases deterministic:
+    // with three extract units draining serially, the first register
+    // pair is released the moment its two scenes' feature files exist —
+    // while the third extract unit is still queued.  That is the
+    // pipelining observable the new gauges must expose, and barrier mode
+    // must show none of it while producing identical bits.
+    let mut cfg = test_cfg(1);
+    cfg.cluster.slots_per_node = 1;
+    let req = VectorizeRequest {
+        stitch: StitchRequest {
+            reg: RegistrationRequest {
+                num_scenes: 3,
+                max_offset: 48,
+                force_native: true,
+                ..Default::default()
+            },
+            canvas_tile: 128, // several composite tiles feed each band
+            ..Default::default()
+        },
+        opts: VectorOptions {
+            band_rows: 64,
+            ..Default::default()
+        },
+    };
+    let registry = Registry::new();
+    let dfs = Dfs::new(cfg.cluster.nodes, cfg.storage.block_size, cfg.cluster.replication);
+    let pipelined =
+        run_vectorize_on(&cfg, &dfs, &req, &registry, &JobHooks::default()).expect("pipelined");
+
+    let names: Vec<&str> = pipelined.stitch.dag.stages.iter().map(|s| s.name).collect();
+    assert_eq!(names, ["extract", "register", "align", "composite", "vectorize"]);
+    assert!(
+        pipelined.stitch.dag.max_stage_overlap >= 2,
+        "pipelined run never overlapped stages (overlap {})",
+        pipelined.stitch.dag.max_stage_overlap
+    );
+    assert_eq!(
+        registry.gauge("dag_stage_overlap_max").get(),
+        pipelined.stitch.dag.max_stage_overlap as f64
+    );
+    let reg_stage = pipelined.stitch.dag.stage("register").unwrap();
+    assert!(
+        reg_stage.eager_units >= 1,
+        "a pair must be released while extraction still has pending units"
+    );
+    assert!(registry.gauge("dag_queue_depth_max_register").get() >= 1.0);
+    assert!(registry.counter("dag_eager_units").get() >= 1);
+
+    // Barrier mode: the old bulk-synchronous chaining — zero overlap,
+    // per-stage startups (slower simulated clock), identical bits.
+    let mut bcfg = cfg.clone();
+    bcfg.scheduler.barrier = true;
+    let bdfs = Dfs::new(bcfg.cluster.nodes, bcfg.storage.block_size, bcfg.cluster.replication);
+    let bregistry = Registry::new();
+    let barrier =
+        run_vectorize_on(&bcfg, &bdfs, &req, &bregistry, &JobHooks::default()).expect("barrier");
+    assert_eq!(barrier.stitch.dag.max_stage_overlap, 1);
+    assert!(barrier.stitch.dag.stages.iter().all(|s| s.eager_units == 0));
+    assert_eq!(bregistry.gauge("dag_stage_overlap_max").get(), 1.0);
+
+    assert_eq!(barrier.stitch.mosaic, pipelined.stitch.mosaic, "mosaic bits diverged");
+    assert_eq!(barrier.vector.labels, pipelined.vector.labels, "label bits diverged");
+    assert_eq!(barrier.vector.stats, pipelined.vector.stats, "object table diverged");
+    assert_eq!(barrier.vector.objects, pipelined.vector.objects, "polygons diverged");
+    assert!(
+        pipelined.stitch.dag.sim_seconds <= barrier.stitch.dag.sim_seconds,
+        "pipelined {:.2}s should not exceed barrier {:.2}s (5 startups vs 1 + barriers)",
+        pipelined.stitch.dag.sim_seconds,
+        barrier.stitch.dag.sim_seconds
     );
 }
 
