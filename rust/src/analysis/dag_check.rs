@@ -1,0 +1,326 @@
+//! Layer 2 of the determinism audit: plan-time validation of job DAGs.
+//!
+//! [`run_dag`](crate::coordinator::run_dag) consults this module twice:
+//! once up front on the stage-level *gate graph* (so a DAG that can
+//! never finish is rejected before a single worker slot spawns) and
+//! once per stage as its plan lands (so malformed unit dependencies are
+//! rejected before any unit is scheduled).  Every error names the
+//! offending stage/unit, because "the DAG hung" is the least debuggable
+//! failure a distributed runtime can produce.
+//!
+//! The types here are deliberately light — plain indices and names, no
+//! reference to `coordinator` internals — so `coordinator` depends on
+//! `analysis` and not the other way round, and so the property tests
+//! can generate thousands of random graphs without touching the
+//! runtime.
+//!
+//! Checks, mapped to the runtime invariants they protect:
+//!
+//! * **gate range / self-gates / gate cycles** — a stage plans only
+//!   after its gates are met; a cycle (or a gate on itself) stalls the
+//!   whole DAG.  The runtime used to detect this only after spinning up
+//!   the slot pool; now it is a pre-flight error.
+//! * **dangling unit deps** — a dep on an unknown stage, on the unit's
+//!   own stage, or on a unit index past the upstream plan can never
+//!   merge, so the unit would wait forever.
+//! * **unplanned-stage deps (unreachable units)** — a unit dep on a
+//!   stage the gate graph does not guarantee to have planned first is a
+//!   scheduling race: whether the unit is runnable would depend on
+//!   thread timing, the exact nondeterminism this subsystem exists to
+//!   exclude.
+//! * **duplicate deps** — the executor counts `deps_remaining` per dep
+//!   edge; a duplicate edge double-counts and the unit never releases.
+//! * **locality-hint range** — a preferred node beyond the cluster size
+//!   silently disables data-local placement; better to fail loudly.
+
+use std::collections::BTreeSet;
+
+/// Kind of planning gate (mirrors `coordinator::Gate` by index).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GateKind {
+    /// Upstream stage has planned.
+    Planned,
+    /// Upstream stage has fully completed.
+    Completed,
+}
+
+/// One planning gate: this stage may plan once `target` reaches `kind`.
+#[derive(Debug, Clone, Copy)]
+pub struct GateDef {
+    pub kind: GateKind,
+    pub target: usize,
+}
+
+/// One unit of a stage plan, reduced to what validation needs.
+#[derive(Debug, Clone, Default)]
+pub struct UnitDef {
+    /// `(stage, unit)` upstream dependencies.
+    pub deps: Vec<(usize, usize)>,
+    /// Preferred node indices (locality hints).
+    pub preferred: Vec<usize>,
+}
+
+/// A whole stage, for offline/property validation of a complete DAG.
+#[derive(Debug, Clone)]
+pub struct StageDef {
+    pub name: String,
+    pub gates: Vec<GateDef>,
+    pub units: Vec<UnitDef>,
+}
+
+/// Validate the stage-level gate graph: targets in range, no self
+/// gates, no cycles.  Returns every issue found (empty = valid).
+pub fn validate_gates(names: &[&str], gates: &[Vec<GateDef>]) -> Vec<String> {
+    debug_assert_eq!(names.len(), gates.len());
+    let n = names.len();
+    let mut issues = Vec::new();
+    for (s, gs) in gates.iter().enumerate() {
+        for g in gs {
+            if g.target >= n {
+                issues.push(format!(
+                    "stage {}: gate on unknown stage {} (DAG has {n} stages)",
+                    names[s], g.target
+                ));
+            } else if g.target == s {
+                issues.push(format!("stage {}: gate on itself", names[s]));
+            }
+        }
+    }
+    if !issues.is_empty() {
+        return issues; // cycle walk needs in-range edges
+    }
+    // Iterative three-color DFS over gate edges.
+    #[derive(Clone, Copy, PartialEq)]
+    enum Color {
+        White,
+        Grey,
+        Black,
+    }
+    let mut color = vec![Color::White; n];
+    for root in 0..n {
+        if color[root] != Color::White {
+            continue;
+        }
+        // Stack of (stage, next-gate-index); Grey while on the stack.
+        let mut stack = vec![(root, 0usize)];
+        color[root] = Color::Grey;
+        while let Some(&(s, gi)) = stack.last() {
+            if gi < gates[s].len() {
+                stack.last_mut().unwrap().1 += 1;
+                let t = gates[s][gi].target;
+                match color[t] {
+                    Color::White => {
+                        color[t] = Color::Grey;
+                        stack.push((t, 0));
+                    }
+                    Color::Grey => {
+                        // Reconstruct the cycle path for the message.
+                        let from = stack.iter().position(|&(x, _)| x == t).unwrap();
+                        let cycle: Vec<&str> =
+                            stack[from..].iter().map(|&(x, _)| names[x]).collect();
+                        issues.push(format!(
+                            "gate cycle: stages {cycle:?} would be stalled forever"
+                        ));
+                        return issues;
+                    }
+                    Color::Black => {}
+                }
+            } else {
+                color[s] = Color::Black;
+                stack.pop();
+            }
+        }
+    }
+    issues
+}
+
+/// Validate one stage's freshly generated plan.
+///
+/// `planned_units[s]` is `Some(unit_count)` for every stage the caller
+/// guarantees has planned before this one — at runtime the actually
+/// planned stages, offline the transitive gate ancestors.  `nodes` is
+/// the cluster size for locality-hint range checks.
+pub fn validate_plan(
+    stage_name: &str,
+    stage: usize,
+    units: &[UnitDef],
+    planned_units: &[Option<usize>],
+    nodes: usize,
+) -> Vec<String> {
+    let mut issues = Vec::new();
+    for (u, spec) in units.iter().enumerate() {
+        let mut seen: BTreeSet<(usize, usize)> = BTreeSet::new();
+        for &(ds, du) in &spec.deps {
+            if !seen.insert((ds, du)) {
+                issues.push(format!(
+                    "stage {stage_name} unit {u}: duplicate dep {ds}/{du} \
+                     (deps_remaining would double-count and the unit never release)"
+                ));
+                continue;
+            }
+            if ds >= planned_units.len() {
+                issues.push(format!(
+                    "stage {stage_name} unit {u}: dep on unknown stage {ds}"
+                ));
+                continue;
+            }
+            if ds == stage {
+                issues.push(format!(
+                    "stage {stage_name} unit {u}: dep on its own stage (intra-stage \
+                     ordering is the scheduler's job, not a dep edge)"
+                ));
+                continue;
+            }
+            match planned_units[ds] {
+                None => issues.push(format!(
+                    "stage {stage_name} unit {u}: dep on unplanned stage {ds} — \
+                     unreachable unit (no gate guarantees stage {ds} plans first)"
+                )),
+                Some(count) if du >= count => issues.push(format!(
+                    "stage {stage_name} unit {u}: dep unit {ds}/{du} out of range \
+                     (stage {ds} planned {count} unit(s))"
+                )),
+                Some(_) => {}
+            }
+        }
+        for &p in &spec.preferred {
+            if p >= nodes {
+                issues.push(format!(
+                    "stage {stage_name} unit {u}: locality hint node {p} out of range \
+                     (cluster has {nodes} node(s))"
+                ));
+            }
+        }
+    }
+    issues
+}
+
+/// Offline validation of a complete DAG (gate graph + every stage's
+/// units), as the property tests exercise it.  Stages are "planned" in
+/// gate-closure order: a unit dep is legal only on a transitive gate
+/// ancestor, the conservative semantics that make runnability
+/// independent of scheduling order.
+pub fn validate_dag(stages: &[StageDef], nodes: usize) -> Vec<String> {
+    let names: Vec<&str> = stages.iter().map(|s| s.name.as_str()).collect();
+    let gates: Vec<Vec<GateDef>> = stages.iter().map(|s| s.gates.clone()).collect();
+    let mut issues = validate_gates(&names, &gates);
+    if !issues.is_empty() {
+        return issues;
+    }
+    // Transitive gate ancestors per stage (graph is acyclic here).
+    let mut ancestors: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); stages.len()];
+    // Repeat-until-fixpoint is O(n² · E) worst case but n is stage
+    // count (single digits in practice, ≤ dozens in tests).
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for s in 0..stages.len() {
+            for g in &stages[s].gates {
+                let mut add: BTreeSet<usize> = ancestors[g.target].clone();
+                add.insert(g.target);
+                for a in add {
+                    changed |= ancestors[s].insert(a);
+                }
+            }
+        }
+    }
+    for (s, stage) in stages.iter().enumerate() {
+        let planned: Vec<Option<usize>> = (0..stages.len())
+            .map(|p| {
+                if ancestors[s].contains(&p) {
+                    Some(stages[p].units.len())
+                } else {
+                    None
+                }
+            })
+            .collect();
+        issues.extend(validate_plan(&stage.name, s, &stage.units, &planned, nodes));
+    }
+    issues
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gate(kind: GateKind, target: usize) -> GateDef {
+        GateDef { kind, target }
+    }
+
+    fn stage(name: &str, gates: Vec<GateDef>, units: Vec<UnitDef>) -> StageDef {
+        StageDef { name: name.into(), gates, units }
+    }
+
+    fn unit(deps: &[(usize, usize)]) -> UnitDef {
+        UnitDef { deps: deps.to_vec(), preferred: vec![] }
+    }
+
+    #[test]
+    fn valid_chain_passes() {
+        let dag = vec![
+            stage("a", vec![], vec![unit(&[]), unit(&[])]),
+            stage(
+                "b",
+                vec![gate(GateKind::Planned, 0)],
+                vec![unit(&[(0, 0), (0, 1)])],
+            ),
+            stage("c", vec![gate(GateKind::Completed, 1)], vec![unit(&[(1, 0)])]),
+        ];
+        assert!(validate_dag(&dag, 4).is_empty());
+    }
+
+    #[test]
+    fn gate_cycle_detected_with_path() {
+        let dag = vec![
+            stage("a", vec![gate(GateKind::Completed, 1)], vec![]),
+            stage("b", vec![gate(GateKind::Completed, 0)], vec![]),
+        ];
+        let issues = validate_dag(&dag, 1);
+        assert_eq!(issues.len(), 1);
+        assert!(issues[0].contains("stalled"), "{issues:?}");
+        assert!(issues[0].contains('a') && issues[0].contains('b'));
+    }
+
+    #[test]
+    fn self_gate_and_range() {
+        let issues = validate_gates(&["a"], &[vec![gate(GateKind::Planned, 0)]]);
+        assert!(issues[0].contains("itself"));
+        let issues = validate_gates(&["a"], &[vec![gate(GateKind::Planned, 7)]]);
+        assert!(issues[0].contains("unknown stage 7"));
+    }
+
+    #[test]
+    fn dangling_and_duplicate_deps() {
+        let planned = [Some(2), None];
+        let units = [unit(&[(0, 5)])];
+        let issues = validate_plan("s", 1, &units, &planned, 1);
+        assert!(issues[0].contains("out of range"), "{issues:?}");
+
+        let units = [unit(&[(0, 1), (0, 1)])];
+        let issues = validate_plan("s", 1, &units, &planned, 1);
+        assert!(issues[0].contains("duplicate dep"), "{issues:?}");
+
+        let units = [unit(&[(9, 0)])];
+        let issues = validate_plan("s", 1, &units, &planned, 1);
+        assert!(issues[0].contains("unknown stage 9"), "{issues:?}");
+    }
+
+    #[test]
+    fn ungated_dep_is_unreachable() {
+        // b deps on a's units but has no gate on a: racy, rejected.
+        let dag = vec![
+            stage("a", vec![], vec![unit(&[])]),
+            stage("b", vec![], vec![unit(&[(0, 0)])]),
+        ];
+        let issues = validate_dag(&dag, 1);
+        assert!(issues[0].contains("unreachable"), "{issues:?}");
+    }
+
+    #[test]
+    fn locality_hint_range() {
+        let units = [UnitDef { deps: vec![], preferred: vec![3] }];
+        let issues = validate_plan("s", 0, &units, &[None], 2);
+        assert!(issues[0].contains("locality hint"), "{issues:?}");
+        assert!(validate_plan("s", 0, &units, &[None], 4).is_empty());
+    }
+}

@@ -1,0 +1,298 @@
+//! Layer 3 of the determinism audit: a happens-before checker for the
+//! pipelined DAG executor — a race detector for the simulated runtime.
+//!
+//! The executor's correctness contract is simple to state and easy to
+//! break silently: *a unit may observe an upstream output only after
+//! that output's winning attempt has merged*.  Pipelined release,
+//! bounded retries and speculative twins all create schedules where an
+//! ordering bug would still usually produce the right bytes — parity
+//! sampling can miss it for months.  In `--audit` mode (default-on,
+//! including every e2e test) the executor reports its lifecycle events
+//! here and this checker asserts the happens-before order on *every*
+//! attempt of *every* history, failing loudly with the violating edge.
+//!
+//! Mechanics: a single lamport counter timestamps the four event kinds
+//! (register / release / attempt-start / merge).  Each merged unit
+//! carries a vector clock — the join of its dependencies' clocks plus
+//! its own merge stamp — so a violation report can show not just "dep
+//! unmerged" but the full causal frontier the unit actually saw.
+//! Checks enforced:
+//!
+//! * **release-after-merge** — a unit is released to the scheduler only
+//!   once all declared deps merged (the violating dep edge is named);
+//! * **observe-after-merge** — every attempt (first, retry, or
+//!   speculative twin) starts only after all deps merged;
+//! * **exactly-once merge** — no unit merges twice (the losing twin
+//!   must never reach `merge`);
+//! * **merge-after-release** — a merge for a unit that was never
+//!   released means the executor bypassed the release path;
+//! * **causal closure** — a merged unit's vector clock dominates each
+//!   dep's clock (detects cross-thread clock regressions).
+//!
+//! The checker keeps its own mutex and never calls back into the
+//! executor, so it cannot deadlock against `DagState`; the executor
+//! calls it *after* dropping (or before taking) its own lock where
+//! possible, and the per-event cost is a few BTreeMap operations.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// `(stage, unit)` — mirrors `coordinator::UnitRef` without the import.
+pub type UnitKey = (usize, usize);
+
+#[derive(Debug, Clone)]
+struct MergeRec {
+    /// Lamport stamp of the merge event.
+    seq: u64,
+    /// Vector clock: every unit causally before (and including) this one,
+    /// mapped to its merge stamp.
+    clock: BTreeMap<UnitKey, u64>,
+}
+
+#[derive(Debug, Default)]
+struct HbState {
+    next_seq: u64,
+    /// Declared deps per unit, recorded when the plan installs.
+    deps: BTreeMap<UnitKey, Vec<UnitKey>>,
+    /// Release stamps (release = handed to the scheduler).
+    released: BTreeMap<UnitKey, u64>,
+    /// Merge records for completed units.
+    merged: BTreeMap<UnitKey, MergeRec>,
+    /// Total happens-before assertions evaluated (metrics surface).
+    checks: u64,
+    violations: Vec<String>,
+}
+
+impl HbState {
+    fn tick(&mut self) -> u64 {
+        self.next_seq += 1;
+        self.next_seq
+    }
+}
+
+/// The audit-mode race detector.  One instance per `run_dag` call.
+#[derive(Debug, Default)]
+pub struct HbChecker {
+    state: Mutex<HbState>,
+}
+
+impl HbChecker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A stage plan installed: record each unit's declared deps.
+    pub fn register_unit(&self, unit: UnitKey, deps: &[UnitKey]) {
+        let mut st = self.state.lock().unwrap();
+        st.tick();
+        if st.deps.insert(unit, deps.to_vec()).is_some() {
+            st.violations
+                .push(format!("unit {}/{} registered twice", unit.0, unit.1));
+        }
+    }
+
+    /// Unit handed to the scheduler.  All deps must have merged.
+    pub fn on_release(&self, unit: UnitKey) {
+        let mut st = self.state.lock().unwrap();
+        let seq = st.tick();
+        if st.released.insert(unit, seq).is_some() {
+            st.violations
+                .push(format!("unit {}/{} released twice", unit.0, unit.1));
+        }
+        self.check_deps_merged(&mut st, unit, "released", seq);
+    }
+
+    /// An attempt (any retry / speculative twin) is about to run the
+    /// unit body and will observe the merged outputs of its deps.
+    pub fn on_attempt_start(&self, unit: UnitKey, launch_seq: u64, speculative: bool) {
+        let mut st = self.state.lock().unwrap();
+        let seq = st.tick();
+        if !st.released.contains_key(&unit) {
+            st.violations.push(format!(
+                "attempt #{launch_seq} of unit {}/{} started but the unit was never released",
+                unit.0, unit.1
+            ));
+        }
+        let label = if speculative {
+            format!("speculative attempt #{launch_seq}")
+        } else {
+            format!("attempt #{launch_seq}")
+        };
+        self.check_deps_merged(&mut st, unit, &label, seq);
+    }
+
+    /// The winning attempt's payload merged into the stage sink.
+    pub fn on_merge(&self, unit: UnitKey) {
+        let mut st = self.state.lock().unwrap();
+        let seq = st.tick();
+        if !st.released.contains_key(&unit) {
+            st.violations.push(format!(
+                "unit {}/{} merged without ever being released",
+                unit.0, unit.1
+            ));
+        }
+        if st.merged.contains_key(&unit) {
+            st.violations.push(format!(
+                "unit {}/{} merged twice (a losing attempt reached merge)",
+                unit.0, unit.1
+            ));
+            return;
+        }
+        self.check_deps_merged(&mut st, unit, "merged", seq);
+        // Vector clock: join of dep clocks + own stamp; then verify
+        // causal closure (dominance over every dep's clock).
+        let mut clock: BTreeMap<UnitKey, u64> = BTreeMap::new();
+        for dep in st.deps.get(&unit).cloned().unwrap_or_default() {
+            if let Some(rec) = st.merged.get(&dep) {
+                for (&k, &v) in &rec.clock {
+                    let e = clock.entry(k).or_insert(0);
+                    *e = (*e).max(v);
+                }
+            }
+        }
+        clock.insert(unit, seq);
+        for dep in st.deps.get(&unit).cloned().unwrap_or_default() {
+            st.checks += 1;
+            let dominated = match st.merged.get(&dep) {
+                Some(rec) => rec
+                    .clock
+                    .iter()
+                    .all(|(k, &v)| clock.get(k).is_some_and(|&c| c >= v)),
+                None => false,
+            };
+            if !dominated {
+                st.violations.push(format!(
+                    "causal closure broken: clock of {}/{} does not dominate dep {}/{}",
+                    unit.0, unit.1, dep.0, dep.1
+                ));
+            }
+        }
+        st.merged.insert(unit, MergeRec { seq, clock });
+    }
+
+    /// The core assertion: every declared dep of `unit` merged before
+    /// lamport time `seq`.  `what` names the observing event.
+    fn check_deps_merged(&self, st: &mut HbState, unit: UnitKey, what: &str, seq: u64) {
+        let deps = st.deps.get(&unit).cloned().unwrap_or_default();
+        for dep in deps {
+            st.checks += 1;
+            match st.merged.get(&dep) {
+                Some(rec) if rec.seq < seq => {}
+                Some(rec) => st.violations.push(format!(
+                    "happens-before violation: unit {}/{} {what} at t={seq} but dep \
+                     {}/{} merged at t={} (not before)",
+                    unit.0, unit.1, dep.0, dep.1, rec.seq
+                )),
+                None => st.violations.push(format!(
+                    "happens-before violation: unit {}/{} {what} at t={seq} but dep \
+                     {}/{} had not merged — the unit observed an unmerged input",
+                    unit.0, unit.1, dep.0, dep.1
+                )),
+            }
+        }
+    }
+
+    /// Number of happens-before assertions evaluated so far.
+    pub fn checks(&self) -> u64 {
+        self.state.lock().unwrap().checks
+    }
+
+    /// Consume the run: `Ok(total checks)` or every recorded violation.
+    pub fn finish(&self) -> Result<u64, Vec<String>> {
+        let st = self.state.lock().unwrap();
+        if st.violations.is_empty() {
+            Ok(st.checks)
+        } else {
+            Err(st.violations.clone())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_pipelined_history_passes() {
+        let hb = HbChecker::new();
+        hb.register_unit((0, 0), &[]);
+        hb.register_unit((1, 0), &[(0, 0)]);
+        hb.on_release((0, 0));
+        hb.on_attempt_start((0, 0), 0, false);
+        hb.on_merge((0, 0));
+        hb.on_release((1, 0));
+        hb.on_attempt_start((1, 0), 1, false);
+        hb.on_merge((1, 0));
+        let checks = hb.finish().expect("clean history");
+        assert!(checks >= 3, "dep edges were actually checked: {checks}");
+    }
+
+    #[test]
+    fn early_release_names_the_edge() {
+        let hb = HbChecker::new();
+        hb.register_unit((0, 0), &[]);
+        hb.register_unit((1, 0), &[(0, 0)]);
+        hb.on_release((0, 0));
+        hb.on_release((1, 0)); // bug: dep 0/0 not merged yet
+        let errs = hb.finish().unwrap_err();
+        assert!(errs[0].contains("1/0"), "{errs:?}");
+        assert!(errs[0].contains("0/0"), "{errs:?}");
+        assert!(errs[0].contains("unmerged"), "{errs:?}");
+    }
+
+    #[test]
+    fn retries_and_twins_are_each_checked() {
+        let hb = HbChecker::new();
+        hb.register_unit((0, 0), &[]);
+        hb.register_unit((1, 0), &[(0, 0)]);
+        hb.on_release((0, 0));
+        hb.on_attempt_start((0, 0), 0, false);
+        hb.on_merge((0, 0));
+        hb.on_release((1, 0));
+        let before = hb.checks();
+        hb.on_attempt_start((1, 0), 1, false); // first attempt
+        hb.on_attempt_start((1, 0), 2, false); // retry
+        hb.on_attempt_start((1, 0), 3, true); // speculative twin
+        assert_eq!(hb.checks() - before, 3);
+        hb.on_merge((1, 0));
+        hb.finish().expect("all attempts saw merged deps");
+    }
+
+    #[test]
+    fn double_merge_is_a_violation() {
+        let hb = HbChecker::new();
+        hb.register_unit((0, 0), &[]);
+        hb.on_release((0, 0));
+        hb.on_merge((0, 0));
+        hb.on_merge((0, 0)); // losing twin must never reach merge
+        let errs = hb.finish().unwrap_err();
+        assert!(errs[0].contains("merged twice"), "{errs:?}");
+    }
+
+    #[test]
+    fn merge_without_release_is_a_violation() {
+        let hb = HbChecker::new();
+        hb.register_unit((0, 0), &[]);
+        hb.on_merge((0, 0));
+        let errs = hb.finish().unwrap_err();
+        assert!(errs[0].contains("without ever being released"), "{errs:?}");
+    }
+
+    #[test]
+    fn vector_clocks_are_causally_closed() {
+        let hb = HbChecker::new();
+        // Diamond: 0/0 and 0/1 → 1/0.
+        hb.register_unit((0, 0), &[]);
+        hb.register_unit((0, 1), &[]);
+        hb.register_unit((1, 0), &[(0, 0), (0, 1)]);
+        for u in [(0, 0), (0, 1)] {
+            hb.on_release(u);
+            hb.on_attempt_start(u, u.1 as u64, false);
+            hb.on_merge(u);
+        }
+        hb.on_release((1, 0));
+        hb.on_attempt_start((1, 0), 2, false);
+        hb.on_merge((1, 0));
+        hb.finish().expect("diamond is causally closed");
+    }
+}

@@ -1,0 +1,329 @@
+//! A hand-rolled, token-level Rust lexer — just enough syntax awareness
+//! for the determinism linter ([`super::lint`]).
+//!
+//! The offline registry bars `syn`/`proc-macro2` exactly like it barred
+//! `flate2`/`crc32fast`, so this is the in-crate equivalent: a single
+//! forward scan that classifies source text into identifiers,
+//! punctuation, literals and comments, with correct handling of the
+//! constructs that defeat naive `grep`-style scanning:
+//!
+//! * line comments (`//`) and **nested** block comments (`/* /* */ */`);
+//! * string literals with escapes (`"a \" b"`), byte strings (`b"…"`);
+//! * raw strings with arbitrary hash fences (`r#"…"#`, `br##"…"##`);
+//! * char literals vs. lifetimes (`'x'` vs. `'static`).
+//!
+//! Comments are *kept* as tokens (the linter's `SAFETY:`/ordering-comment
+//! rules need them); string/char literal *contents* are deliberately
+//! opaque, so `"HashMap"` in a string can never false-positive a hazard
+//! rule.  The lexer is infallible by design: any byte it cannot classify
+//! becomes punctuation, which only ever makes the linter *miss* exotic
+//! code, never crash on it.
+
+/// What a token is; contents carried only where a lint rule needs them.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TokenKind {
+    /// Identifier or keyword (`HashMap`, `unsafe`, `fn`, …).
+    Ident(String),
+    /// One punctuation character (`:`, `{`, `+`, …).
+    Punct(char),
+    /// String / raw-string / byte-string / char literal (contents opaque).
+    Literal,
+    /// Numeric literal (contents opaque).
+    Number,
+    /// `//` or `/* … */` comment, text preserved for comment-aware rules.
+    Comment(String),
+}
+
+/// One token with the 1-based source line it starts on.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: TokenKind,
+    pub line: usize,
+}
+
+impl Token {
+    /// The identifier text, if this is an identifier.
+    pub fn ident(&self) -> Option<&str> {
+        match &self.kind {
+            TokenKind::Ident(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// The punctuation char, if this is punctuation.
+    pub fn punct(&self) -> Option<char> {
+        match &self.kind {
+            TokenKind::Punct(c) => Some(c),
+            _ => None,
+        }
+    }
+}
+
+/// Tokenize Rust source text.  Never fails; see module docs.
+pub fn tokenize(src: &str) -> Vec<Token> {
+    let b: Vec<char> = src.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let n = b.len();
+
+    // Advance `i` past one newline-aware character, updating `line`.
+    macro_rules! bump {
+        () => {{
+            if b[i] == '\n' {
+                line += 1;
+            }
+            i += 1;
+        }};
+    }
+
+    while i < n {
+        let c = b[i];
+        // Whitespace.
+        if c.is_whitespace() {
+            bump!();
+            continue;
+        }
+        // Comments.
+        if c == '/' && i + 1 < n && (b[i + 1] == '/' || b[i + 1] == '*') {
+            let start_line = line;
+            let mut text = String::new();
+            if b[i + 1] == '/' {
+                while i < n && b[i] != '\n' {
+                    text.push(b[i]);
+                    i += 1;
+                }
+            } else {
+                let mut depth = 0usize;
+                while i < n {
+                    if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                        depth += 1;
+                        text.push_str("/*");
+                        i += 2;
+                        continue;
+                    }
+                    if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                        depth -= 1;
+                        text.push_str("*/");
+                        i += 2;
+                        if depth == 0 {
+                            break;
+                        }
+                        continue;
+                    }
+                    if b[i] == '\n' {
+                        line += 1;
+                    }
+                    text.push(b[i]);
+                    i += 1;
+                }
+            }
+            out.push(Token { kind: TokenKind::Comment(text), line: start_line });
+            continue;
+        }
+        // Raw strings / byte strings: r"…", r#"…"#, b"…", br#"…"#.
+        if (c == 'r' || c == 'b') && raw_or_byte_string_start(&b, i) {
+            let start_line = line;
+            let mut j = i;
+            while j < n && (b[j] == 'r' || b[j] == 'b') {
+                j += 1;
+            }
+            let mut hashes = 0usize;
+            while j < n && b[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            // b[j] == '"' guaranteed by raw_or_byte_string_start.
+            j += 1;
+            // Scan to the closing quote followed by `hashes` hashes.  A
+            // plain b"…" (hashes == 0) still honours backslash escapes;
+            // raw strings (an `r` present) have none.
+            let raw = b[i] == 'r' || (b[i] == 'b' && i + 1 < n && b[i + 1] == 'r');
+            while j < n {
+                if b[j] == '\n' {
+                    line += 1;
+                }
+                if !raw && b[j] == '\\' {
+                    j += 2;
+                    continue;
+                }
+                if b[j] == '"' && b[j + 1..].iter().take(hashes).filter(|&&h| h == '#').count() == hashes {
+                    j += 1 + hashes;
+                    break;
+                }
+                j += 1;
+            }
+            i = j;
+            out.push(Token { kind: TokenKind::Literal, line: start_line });
+            continue;
+        }
+        // Identifiers / keywords.
+        if c.is_alphabetic() || c == '_' {
+            let start_line = line;
+            let mut s = String::new();
+            while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                s.push(b[i]);
+                i += 1;
+            }
+            out.push(Token { kind: TokenKind::Ident(s), line: start_line });
+            continue;
+        }
+        // Numbers (loose: consumes suffixes and float forms).
+        if c.is_ascii_digit() {
+            let start_line = line;
+            while i < n && (b[i].is_alphanumeric() || b[i] == '_' || b[i] == '.') {
+                // Stop a range expression `0..n` from being eaten.
+                if b[i] == '.' && i + 1 < n && b[i + 1] == '.' {
+                    break;
+                }
+                i += 1;
+            }
+            out.push(Token { kind: TokenKind::Number, line: start_line });
+            continue;
+        }
+        // Plain string literal.
+        if c == '"' {
+            let start_line = line;
+            i += 1;
+            while i < n {
+                if b[i] == '\\' {
+                    i += 2;
+                    continue;
+                }
+                if b[i] == '"' {
+                    i += 1;
+                    break;
+                }
+                if b[i] == '\n' {
+                    line += 1;
+                }
+                i += 1;
+            }
+            out.push(Token { kind: TokenKind::Literal, line: start_line });
+            continue;
+        }
+        // Char literal vs lifetime.  `'a'` is a char; `'a` (no closing
+        // quote right after one item) is a lifetime and lexes as punct +
+        // ident so `&'static str` keeps its identifier.
+        if c == '\'' {
+            let start_line = line;
+            if is_char_literal(&b, i) {
+                i += 1;
+                while i < n {
+                    if b[i] == '\\' {
+                        i += 2;
+                        continue;
+                    }
+                    if b[i] == '\'' {
+                        i += 1;
+                        break;
+                    }
+                    i += 1;
+                }
+                out.push(Token { kind: TokenKind::Literal, line: start_line });
+            } else {
+                out.push(Token { kind: TokenKind::Punct('\''), line: start_line });
+                i += 1;
+            }
+            continue;
+        }
+        // Everything else: one punctuation char.
+        out.push(Token { kind: TokenKind::Punct(c), line });
+        bump!();
+    }
+    out
+}
+
+/// Does `b[i..]` begin a raw or byte string (`r"`, `r#`, `b"`, `br`, `rb`)?
+fn raw_or_byte_string_start(b: &[char], i: usize) -> bool {
+    let mut j = i;
+    let mut saw_prefix = false;
+    while j < b.len() && (b[j] == 'r' || b[j] == 'b') && j - i < 2 {
+        saw_prefix = true;
+        j += 1;
+    }
+    if !saw_prefix {
+        return false;
+    }
+    while j < b.len() && b[j] == '#' {
+        j += 1;
+    }
+    j < b.len() && b[j] == '"'
+}
+
+/// Distinguish `'x'` / `'\n'` (char literal) from `'label` (lifetime).
+fn is_char_literal(b: &[char], i: usize) -> bool {
+    // An escape is always a char literal.
+    if i + 1 < b.len() && b[i + 1] == '\\' {
+        return true;
+    }
+    // `'X'` with exactly one scalar between the quotes.
+    i + 2 < b.len() && b[i + 2] == '\'' && b[i + 1] != '\''
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        tokenize(src)
+            .iter()
+            .filter_map(|t| t.ident().map(str::to_string))
+            .collect()
+    }
+
+    #[test]
+    fn identifiers_and_lines() {
+        let toks = tokenize("fn main() {\n    let x = foo;\n}\n");
+        let f = toks.iter().find(|t| t.ident() == Some("foo")).unwrap();
+        assert_eq!(f.line, 2);
+        assert_eq!(idents("fn main"), vec!["fn", "main"]);
+    }
+
+    #[test]
+    fn strings_are_opaque() {
+        assert!(idents("let s = \"HashMap in a string\";")
+            .iter()
+            .all(|s| s != "HashMap"));
+        assert!(idents("let s = r#\"HashMap \" raw\"#;").iter().all(|s| s != "HashMap"));
+        assert!(idents("let b = b\"HashMap\";").iter().all(|s| s != "HashMap"));
+        // …and lexing resumes correctly after the literal.
+        assert!(idents("let s = \"x\"; let y = HashMap::new();")
+            .iter()
+            .any(|s| s == "HashMap"));
+    }
+
+    #[test]
+    fn comments_are_tokens_not_idents() {
+        let toks = tokenize("// HashMap here\nlet x = 1; /* nested /* SystemTime */ */");
+        assert!(toks.iter().all(|t| t.ident() != Some("HashMap")));
+        assert!(toks.iter().all(|t| t.ident() != Some("SystemTime")));
+        let comments: Vec<_> = toks
+            .iter()
+            .filter(|t| matches!(t.kind, TokenKind::Comment(_)))
+            .collect();
+        assert_eq!(comments.len(), 2);
+    }
+
+    #[test]
+    fn lifetimes_do_not_eat_source() {
+        // A naive char-literal scan would treat `'a` as an unterminated
+        // char and swallow the rest of the file.
+        assert!(idents("fn f<'a>(x: &'a str) { HashMap::new(); }")
+            .iter()
+            .any(|s| s == "HashMap"));
+        assert!(idents("let c = 'x'; let h = HashMap::new();")
+            .iter()
+            .any(|s| s == "HashMap"));
+        assert!(idents("let c = '\\n'; let h = HashMap::new();")
+            .iter()
+            .any(|s| s == "HashMap"));
+    }
+
+    #[test]
+    fn escaped_quotes_inside_strings() {
+        assert!(idents(r#"let s = "a \" HashMap \" b"; let t = done;"#)
+            .iter()
+            .any(|s| s == "done"));
+    }
+}

@@ -1,0 +1,564 @@
+//! Layer 1 of the determinism audit: a source-level nondeterminism
+//! linter for the crate's own code.
+//!
+//! The e2e suites prove bit-identical output on the histories they
+//! sample; this linter proves the *sources* of nondeterminism cannot
+//! enter unit-execution code in the first place.  It walks `rust/src/`
+//! (token stream from [`super::lexer`], so strings and comments never
+//! false-positive) and flags:
+//!
+//! * `hash-collection` — any `HashMap`/`HashSet` identifier.  Their
+//!   iteration order is randomized per-process, which is exactly the
+//!   order-escape that breaks cross-mode parity; the crate standard is
+//!   `BTreeMap`/`BTreeSet`.
+//! * `wall-clock` — `Instant::now` / `SystemTime`.  Wall time may feed
+//!   *virtual-time accounting* (allowlisted per use) but must never
+//!   influence output bytes.
+//! * `thread-spawn` — `thread::spawn` or a `.spawn(...)` call outside
+//!   the sanctioned executors.  Ad-hoc threads are where unordered
+//!   merges sneak in.
+//! * `unsafe-outside-runtime` — `unsafe` anywhere but `runtime/`, the
+//!   one module allowed to carry FFI glue.
+//! * `unsafe-impl-no-safety` — an `unsafe impl` (Send/Sync and
+//!   friends) not immediately preceded by a `// SAFETY:` comment
+//!   stating the invariant.
+//! * `float-accum-unordered` — `+=` accumulation in a function named
+//!   like a combiner (`merge`/`reduce`/`finalize`/`accumulate`) whose
+//!   body mentions `f32`/`f64`, with no comment explaining the
+//!   accumulation *order*.  Float addition is non-associative; a
+//!   combiner that doesn't pin its order is a parity bug waiting for a
+//!   retry history to expose it.
+//!
+//! `#[cfg(test)]` items are skipped entirely: tests may spawn probe
+//! threads and sleep real time without threatening product output.
+//!
+//! Findings are matched against a checked-in allowlist
+//! (`analysis/allowlist.toml`).  Every entry carries a `why`, a `count`
+//! capping how many findings of that rule the file may contain (so a
+//! *new* hazard in an allowlisted file still fails), and is itself
+//! audited: an entry whose count no longer matches reality is a hard
+//! error, keeping the allowlist from rotting into a blanket waiver.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::lexer::{tokenize, Token, TokenKind};
+
+/// The default allowlist shipped with the crate, used by `difet audit`.
+pub const DEFAULT_ALLOWLIST: &str = include_str!("allowlist.toml");
+
+/// One determinism hazard found in a source file.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Rule slug (`hash-collection`, `wall-clock`, …).
+    pub rule: &'static str,
+    /// Path relative to the scanned source root, `/`-separated.
+    pub file: String,
+    /// 1-based source line.
+    pub line: usize,
+    /// Human-readable description of what was matched.
+    pub detail: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.detail)
+    }
+}
+
+/// Parsed allowlist: justified waivers, each capped by a finding count.
+#[derive(Debug, Default)]
+pub struct Allowlist {
+    entries: Vec<AllowEntry>,
+}
+
+#[derive(Debug)]
+struct AllowEntry {
+    rule: String,
+    file: String,
+    count: usize,
+    why: String,
+}
+
+impl Allowlist {
+    /// Parse the TOML-subset allowlist: one `[allow.N]` section per
+    /// waiver with `rule`, `file`, `count` and `why` keys, all
+    /// required.  A `why` under 10 characters is rejected — a waiver
+    /// without a real justification is a waiver nobody reviewed.
+    pub fn parse(text: &str) -> Result<Allowlist, String> {
+        let table = crate::config::parse_toml_subset(text)?;
+        let mut sections: BTreeMap<String, BTreeMap<String, String>> = BTreeMap::new();
+        for (key, val) in table {
+            let (section, field) = key
+                .rsplit_once('.')
+                .ok_or_else(|| format!("allowlist key '{key}' outside an [allow.*] section"))?;
+            if !section.starts_with("allow") {
+                return Err(format!("unexpected allowlist section '{section}'"));
+            }
+            sections.entry(section.to_string()).or_default().insert(field.to_string(), val);
+        }
+        let mut entries = Vec::new();
+        for (section, fields) in sections {
+            let get = |k: &str| -> Result<String, String> {
+                fields
+                    .get(k)
+                    .cloned()
+                    .ok_or_else(|| format!("allowlist [{section}] missing required key '{k}'"))
+            };
+            let why = get("why")?;
+            if why.trim().len() < 10 {
+                return Err(format!(
+                    "allowlist [{section}]: 'why' must be a real justification (got {:?})",
+                    why
+                ));
+            }
+            let count: usize = get("count")?
+                .parse()
+                .map_err(|_| format!("allowlist [{section}]: 'count' must be an integer"))?;
+            if count == 0 {
+                return Err(format!("allowlist [{section}]: 'count' must be >= 1"));
+            }
+            entries.push(AllowEntry { rule: get("rule")?, file: get("file")?, count, why });
+        }
+        Ok(Allowlist { entries })
+    }
+}
+
+/// Outcome of matching findings against the allowlist.
+#[derive(Debug, Default)]
+pub struct AuditReport {
+    /// Findings not covered by any allowlist entry — hard errors.
+    pub violations: Vec<Finding>,
+    /// Findings waived, with the justification that waived them.
+    pub allowed: Vec<(Finding, String)>,
+    /// Allowlist entries whose `count` no longer matches the source —
+    /// hard errors, whether stale (too few findings) or undercounted.
+    pub stale: Vec<String>,
+    /// Files scanned, for the audit summary line.
+    pub files_scanned: usize,
+}
+
+impl AuditReport {
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty() && self.stale.is_empty()
+    }
+}
+
+/// Scan one file's source text.  `rel_path` is the path relative to the
+/// source root with `/` separators (used for path-scoped rules and
+/// allowlist matching).
+pub fn scan_source(rel_path: &str, src: &str) -> Vec<Finding> {
+    let toks = tokenize(src);
+    let skip = test_mask(&toks);
+    let mut out = Vec::new();
+
+    let ident = |i: usize| -> Option<&str> { toks.get(i).and_then(|t| t.ident()) };
+    let punct = |i: usize| -> Option<char> { toks.get(i).and_then(|t| t.punct()) };
+
+    for i in 0..toks.len() {
+        if skip[i] {
+            continue;
+        }
+        let t = &toks[i];
+        let Some(name) = t.ident() else { continue };
+        match name {
+            "HashMap" | "HashSet" => out.push(Finding {
+                rule: "hash-collection",
+                file: rel_path.to_string(),
+                line: t.line,
+                detail: format!("`{name}` has randomized iteration order; use BTree{}", &name[4..]),
+            }),
+            "SystemTime" => out.push(Finding {
+                rule: "wall-clock",
+                file: rel_path.to_string(),
+                line: t.line,
+                detail: "`SystemTime` read".to_string(),
+            }),
+            "Instant" => {
+                if punct(i + 1) == Some(':')
+                    && punct(i + 2) == Some(':')
+                    && ident(i + 3) == Some("now")
+                {
+                    out.push(Finding {
+                        rule: "wall-clock",
+                        file: rel_path.to_string(),
+                        line: t.line,
+                        detail: "`Instant::now()` read".to_string(),
+                    });
+                }
+            }
+            "spawn" => {
+                let thread_path = i >= 3
+                    && punct(i - 1) == Some(':')
+                    && punct(i - 2) == Some(':')
+                    && ident(i - 3) == Some("thread");
+                let method_call = i >= 1 && punct(i - 1) == Some('.');
+                if thread_path || method_call {
+                    out.push(Finding {
+                        rule: "thread-spawn",
+                        file: rel_path.to_string(),
+                        line: t.line,
+                        detail: if thread_path {
+                            "`thread::spawn` outside the sanctioned executor".to_string()
+                        } else {
+                            "`.spawn(..)` outside the sanctioned executor".to_string()
+                        },
+                    });
+                }
+            }
+            "unsafe" => {
+                if ident(i + 1) == Some("impl") && !preceded_by_safety_comment(&toks, i) {
+                    out.push(Finding {
+                        rule: "unsafe-impl-no-safety",
+                        file: rel_path.to_string(),
+                        line: t.line,
+                        detail: "`unsafe impl` without a `// SAFETY:` comment stating the invariant"
+                            .to_string(),
+                    });
+                }
+                if !rel_path.starts_with("runtime/") {
+                    out.push(Finding {
+                        rule: "unsafe-outside-runtime",
+                        file: rel_path.to_string(),
+                        line: t.line,
+                        detail: "`unsafe` outside runtime/ (the only module allowed FFI glue)"
+                            .to_string(),
+                    });
+                }
+            }
+            _ => {}
+        }
+    }
+
+    out.extend(scan_float_accum(rel_path, &toks, &skip));
+    out.sort_by_key(|f| (f.line, f.rule));
+    out
+}
+
+/// Flag `+=` accumulation over floats in combiner-named functions with
+/// no ordering comment (see module docs).
+fn scan_float_accum(rel_path: &str, toks: &[Token], skip: &[bool]) -> Vec<Finding> {
+    const COMBINER_HINTS: [&str; 4] = ["merge", "reduce", "finalize", "accumulate"];
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        let is_fn = !skip[i] && toks[i].ident() == Some("fn");
+        let fn_name = if is_fn { toks.get(i + 1).and_then(|t| t.ident()) } else { None };
+        let Some(fn_name) = fn_name else {
+            i += 1;
+            continue;
+        };
+        let lower = fn_name.to_ascii_lowercase();
+        if !COMBINER_HINTS.iter().any(|h| lower.contains(h)) {
+            i += 1;
+            continue;
+        }
+        // Locate the body: next `{` … matching `}`.  A `;` first means
+        // a bodiless trait declaration — nothing to scan.
+        let stop = (i..toks.len())
+            .find(|&j| matches!(toks[j].punct(), Some('{') | Some(';')));
+        let open = match stop {
+            Some(j) if toks[j].punct() == Some('{') => j,
+            _ => {
+                i += 1;
+                continue;
+            }
+        };
+        let mut depth = 0usize;
+        let mut close = open;
+        for j in open..toks.len() {
+            match toks[j].punct() {
+                Some('{') => depth += 1,
+                Some('}') => {
+                    depth -= 1;
+                    if depth == 0 {
+                        close = j;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        let body = &toks[open..=close.min(toks.len() - 1)];
+        let has_float = body.iter().any(|t| matches!(t.ident(), Some("f32") | Some("f64")));
+        let ordered = body.iter().any(|t| match &t.kind {
+            TokenKind::Comment(c) => c.to_ascii_lowercase().contains("order"),
+            _ => false,
+        });
+        let plus_eq = body
+            .windows(2)
+            .find(|w| w[0].punct() == Some('+') && w[1].punct() == Some('='));
+        if let (true, false, Some(w)) = (has_float, ordered, plus_eq) {
+            out.push(Finding {
+                rule: "float-accum-unordered",
+                file: rel_path.to_string(),
+                line: w[0].line,
+                detail: format!(
+                    "float `+=` in combiner `{fn_name}` with no comment pinning the \
+                     accumulation order (float addition is non-associative)"
+                ),
+            });
+        }
+        i = close.max(i) + 1;
+    }
+    out
+}
+
+/// Mark token ranges covered by a `#[cfg(test)]` item (attribute through
+/// the end of the item's brace-matched body).
+fn test_mask(toks: &[Token]) -> Vec<bool> {
+    let mut mask = vec![false; toks.len()];
+    let mut i = 0;
+    while i < toks.len() {
+        if is_cfg_test_attr(toks, i) {
+            // Skip to the item body's `{` and mark through its match.
+            let Some(open) = (i..toks.len()).find(|&j| toks[j].punct() == Some('{')) else {
+                for m in mask.iter_mut().skip(i) {
+                    *m = true;
+                }
+                break;
+            };
+            let mut depth = 0usize;
+            let mut end = toks.len() - 1;
+            for j in open..toks.len() {
+                match toks[j].punct() {
+                    Some('{') => depth += 1,
+                    Some('}') => {
+                        depth -= 1;
+                        if depth == 0 {
+                            end = j;
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            for m in mask.iter_mut().take(end + 1).skip(i) {
+                *m = true;
+            }
+            i = end + 1;
+            continue;
+        }
+        i += 1;
+    }
+    mask
+}
+
+/// Token pattern `# [ cfg ( test ) ]` starting at `i`.
+fn is_cfg_test_attr(toks: &[Token], i: usize) -> bool {
+    let p = |j: usize, c: char| toks.get(i + j).and_then(|t| t.punct()) == Some(c);
+    let w = |j: usize, s: &str| toks.get(i + j).and_then(|t| t.ident()) == Some(s);
+    p(0, '#') && p(1, '[') && w(2, "cfg") && p(3, '(') && w(4, "test") && p(5, ')') && p(6, ']')
+}
+
+/// Is token `i` (an `unsafe` keyword) preceded by `// SAFETY:` text?
+/// Walks back over any run of comments so rustdoc lines may interleave.
+fn preceded_by_safety_comment(toks: &[Token], i: usize) -> bool {
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        match &toks[j].kind {
+            TokenKind::Comment(c) => {
+                if c.contains("SAFETY") {
+                    return true;
+                }
+            }
+            _ => return false,
+        }
+    }
+    false
+}
+
+/// Walk `src_root` (every `.rs` file, recursively, in sorted order so
+/// reports are deterministic) and return all findings.
+pub fn scan_tree(src_root: &Path) -> std::io::Result<(Vec<Finding>, usize)> {
+    let mut files = Vec::new();
+    collect_rs_files(src_root, &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    for path in &files {
+        let src = std::fs::read_to_string(path)?;
+        let rel = path
+            .strip_prefix(src_root)
+            .unwrap_or(path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        findings.extend(scan_source(&rel, &src));
+    }
+    Ok((findings, files.len()))
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Match findings against the allowlist (see module docs for the
+/// count-cap and staleness semantics).
+pub fn apply_allowlist(findings: Vec<Finding>, allow: &Allowlist) -> AuditReport {
+    let mut report = AuditReport::default();
+    // Findings per (rule, file), in deterministic scan order.
+    let mut used: Vec<usize> = vec![0; allow.entries.len()];
+    for f in findings {
+        let slot = allow
+            .entries
+            .iter()
+            .position(|e| e.rule == f.rule && e.file == f.file);
+        match slot {
+            Some(k) if used[k] < allow.entries[k].count => {
+                used[k] += 1;
+                let why = allow.entries[k].why.clone();
+                report.allowed.push((f, why));
+            }
+            _ => report.violations.push(f),
+        }
+    }
+    for (k, e) in allow.entries.iter().enumerate() {
+        if used[k] != e.count {
+            report.stale.push(format!(
+                "allowlist entry {{rule={}, file={}}} expects {} finding(s) but the source has {} \
+                 — update or remove the entry",
+                e.rule, e.file, e.count, used[k]
+            ));
+        }
+    }
+    report
+}
+
+/// Full Layer-1 audit of a source tree with an allowlist.
+pub fn audit_tree(src_root: &Path, allow: &Allowlist) -> std::io::Result<AuditReport> {
+    let (findings, files_scanned) = scan_tree(src_root)?;
+    let mut report = apply_allowlist(findings, allow);
+    report.files_scanned = files_scanned;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules(rel: &str, src: &str) -> Vec<&'static str> {
+        scan_source(rel, src).into_iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn hash_collections_flagged_btree_not() {
+        let src = "use std::collections::HashMap;\nfn f() { let m: HashSet<u32> = x; }";
+        assert_eq!(rules("a.rs", src), vec!["hash-collection", "hash-collection"]);
+        assert!(rules("a.rs", "use std::collections::BTreeMap;").is_empty());
+    }
+
+    #[test]
+    fn strings_and_comments_do_not_false_positive() {
+        let src = r##"
+            // A comment naming HashMap and Instant::now and SystemTime.
+            fn f() {
+                let s = "HashMap iteration";
+                let r = r#"thread::spawn in a raw string"#;
+            }
+        "##;
+        assert!(rules("a.rs", src).is_empty());
+    }
+
+    #[test]
+    fn cfg_test_items_are_skipped() {
+        let src = "
+            #[cfg(test)]
+            mod tests {
+                use std::collections::HashMap;
+                fn probe() { std::thread::spawn(|| {}); }
+            }
+            fn prod() {}
+        ";
+        assert!(rules("a.rs", src).is_empty());
+        // …but the same code outside cfg(test) is flagged.
+        let bad = "mod m { use std::collections::HashMap; }";
+        assert_eq!(rules("a.rs", bad), vec!["hash-collection"]);
+    }
+
+    #[test]
+    fn wall_clock_and_spawn_detected() {
+        let src = "fn f() { let t = std::time::Instant::now(); }";
+        assert_eq!(rules("a.rs", src), vec!["wall-clock"]);
+        let src = "fn f() { let t = SystemTime::now(); }";
+        assert_eq!(rules("a.rs", src), vec!["wall-clock"]);
+        let src = "fn f() { std::thread::spawn(|| {}); }";
+        assert_eq!(rules("a.rs", src), vec!["thread-spawn"]);
+        let src = "fn f(s: &Scope) { s.spawn(|| {}); }";
+        assert_eq!(rules("a.rs", src), vec!["thread-spawn"]);
+        // `spawn` as a plain identifier (fn name, variable) is fine.
+        assert!(rules("a.rs", "fn spawn_rate() {}").is_empty());
+    }
+
+    #[test]
+    fn unsafe_rules_are_path_scoped() {
+        let src = "fn f() { unsafe { ptr.read() } }";
+        assert_eq!(rules("pipeline/a.rs", src), vec!["unsafe-outside-runtime"]);
+        assert!(rules("runtime/a.rs", src).is_empty());
+        // unsafe impl needs SAFETY even inside runtime/.
+        let src = "unsafe impl<T> Send for Shared<T> {}";
+        assert_eq!(rules("runtime/a.rs", src), vec!["unsafe-impl-no-safety"]);
+        let ok = "// SAFETY: access is serialized by the slot mutex.\nunsafe impl<T> Send for Shared<T> {}";
+        assert!(rules("runtime/a.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn float_accum_needs_ordering_comment() {
+        let bad = "fn merge_stats(a: &mut f32, b: f32) { *a += b; }";
+        assert_eq!(rules("a.rs", bad), vec!["float-accum-unordered"]);
+        let ok = "fn merge_stats(a: &mut f32, b: f32) {\n    // Accumulation order: fixed unit index, see plan().\n    *a += b;\n}";
+        assert!(rules("a.rs", ok).is_empty());
+        // Integer accumulation in a combiner is fine.
+        assert!(rules("a.rs", "fn merge_counts(a: &mut u64, b: u64) { *a += b; }").is_empty());
+        // Float accumulation outside combiner-named fns is fine (the
+        // unit-execution path, not general math, is what we audit).
+        assert!(rules("a.rs", "fn mean(xs: &[f32]) -> f32 { let mut s = 0.0f32; for x in xs { s += x; } s }").is_empty());
+    }
+
+    #[test]
+    fn allowlist_caps_and_staleness() {
+        let allow = Allowlist::parse(
+            "[allow.1]\nrule = \"wall-clock\"\nfile = \"a.rs\"\ncount = 1\nwhy = \"virtual-time accounting only\"\n",
+        )
+        .unwrap();
+        let f = |line| Finding {
+            rule: "wall-clock",
+            file: "a.rs".into(),
+            line,
+            detail: String::new(),
+        };
+        // Exactly covered: clean.
+        let r = apply_allowlist(vec![f(1)], &allow);
+        assert!(r.is_clean(), "{:?}", r);
+        assert_eq!(r.allowed.len(), 1);
+        // One extra finding: the overflow is a violation.
+        let r = apply_allowlist(vec![f(1), f(2)], &allow);
+        assert_eq!(r.violations.len(), 1);
+        // Hazard fixed but entry kept: stale.
+        let r = apply_allowlist(vec![], &allow);
+        assert_eq!(r.stale.len(), 1);
+        assert!(!r.is_clean());
+    }
+
+    #[test]
+    fn allowlist_rejects_weak_entries() {
+        assert!(Allowlist::parse("[allow.1]\nrule = \"x\"\nfile = \"a.rs\"\ncount = 1\nwhy = \"ok\"\n").is_err());
+        assert!(Allowlist::parse("[allow.1]\nrule = \"x\"\nfile = \"a.rs\"\ncount = 0\nwhy = \"long enough why\"\n").is_err());
+        assert!(Allowlist::parse("[allow.1]\nrule = \"x\"\ncount = 1\nwhy = \"long enough why\"\n").is_err());
+    }
+
+    #[test]
+    fn default_allowlist_parses() {
+        Allowlist::parse(DEFAULT_ALLOWLIST).unwrap();
+    }
+}

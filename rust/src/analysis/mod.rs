@@ -1,0 +1,76 @@
+//! Determinism audit subsystem (`difet audit`).
+//!
+//! The repo's core claim — distributed output bit-identical to the
+//! sequential baseline at any node count and across retry/speculation
+//! histories — was until now enforced only *dynamically*, by the parity
+//! suites sampling a handful of histories.  This module makes the claim
+//! structural, in three layers:
+//!
+//! 1. [`lint`] — a source-level nondeterminism linter over a hand-rolled
+//!    token [`lexer`]: hash-map iteration, wall-clock reads, stray
+//!    threads, `unsafe` outside `runtime/`, unordered float
+//!    accumulation; all against a justified, counted allowlist.
+//! 2. [`dag_check`] — plan-time DAG validation (gate cycles, dangling /
+//!    duplicate unit deps, unreachable units, locality-hint range) run
+//!    by `run_dag` before any unit is scheduled.
+//! 3. [`hb`] — a happens-before checker threaded through the executor
+//!    and scheduler: every attempt of every history is asserted to
+//!    observe only merged inputs, with vector-clock causal closure.
+//!
+//! Layer 1 runs from the CLI/CI (`difet audit`); layers 2 and 3 run
+//! inside every `run_dag` call when `scheduler.audit` is on (the
+//! default, so tests get them for free).
+
+pub mod dag_check;
+pub mod hb;
+pub mod lexer;
+pub mod lint;
+
+use std::path::{Path, PathBuf};
+
+use crate::util::{DifetError, Result};
+
+/// Locate the crate source tree from the process working directory:
+/// `src/` when run from `rust/` (CI), `rust/src/` from the repo root.
+pub fn find_src_root() -> Option<PathBuf> {
+    for cand in ["src", "rust/src"] {
+        let p = Path::new(cand);
+        if p.join("lib.rs").is_file() {
+            return Some(p.to_path_buf());
+        }
+    }
+    None
+}
+
+/// Run the Layer-1 source audit with the checked-in allowlist, printing
+/// a human report to stdout.  `Ok(())` iff the tree is clean.
+pub fn run_source_audit(src_root: &Path) -> Result<()> {
+    let allow = lint::Allowlist::parse(lint::DEFAULT_ALLOWLIST)
+        .map_err(|e| DifetError::Config(format!("embedded allowlist: {e}")))?;
+    let report = lint::audit_tree(src_root, &allow)
+        .map_err(|e| DifetError::Config(format!("audit walk of {}: {e}", src_root.display())))?;
+    println!(
+        "determinism audit: {} file(s) scanned, {} finding(s) allowlisted, {} violation(s)",
+        report.files_scanned,
+        report.allowed.len(),
+        report.violations.len() + report.stale.len(),
+    );
+    for (f, why) in &report.allowed {
+        println!("  allowed  {f}  ({why})");
+    }
+    for f in &report.violations {
+        println!("  VIOLATION  {f}");
+    }
+    for s in &report.stale {
+        println!("  STALE  {s}");
+    }
+    if report.is_clean() {
+        Ok(())
+    } else {
+        Err(DifetError::Config(format!(
+            "determinism audit failed: {} violation(s), {} stale allowlist entr(ies)",
+            report.violations.len(),
+            report.stale.len()
+        )))
+    }
+}

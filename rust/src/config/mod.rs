@@ -124,6 +124,12 @@ pub struct SchedulerConfig {
     /// Off = pipelined: units release on unit-level input satisfaction.
     /// Outputs are bit-identical either way (`difet --barrier`).
     pub barrier: bool,
+    /// Determinism audit mode: the DAG executor threads a happens-before
+    /// checker through every release/attempt/merge and fails the run on
+    /// any ordering violation.  Default ON (the per-event cost is a few
+    /// map operations) so every test and bench history is race-checked;
+    /// `difet --no-audit` / `scheduler.audit = false` opts out.
+    pub audit: bool,
 }
 
 impl Default for SchedulerConfig {
@@ -136,6 +142,7 @@ impl Default for SchedulerConfig {
             queue_depth: 16,
             split_per_image: true,
             barrier: false,
+            audit: true,
         }
     }
 }
@@ -247,6 +254,7 @@ impl Config {
             "scheduler.max_attempts" => self.scheduler.max_attempts = p(key, val)?,
             "scheduler.split_per_image" => self.scheduler.split_per_image = p(key, val)?,
             "scheduler.barrier" => self.scheduler.barrier = p(key, val)?,
+            "scheduler.audit" => self.scheduler.audit = p(key, val)?,
             "scheduler.queue_depth" => self.scheduler.queue_depth = p(key, val)?,
             "storage.block_size" => self.storage.block_size = p(key, val)?,
             "storage.compress" => self.storage.compress = p(key, val)?,

@@ -61,6 +61,8 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use crate::analysis::dag_check;
+use crate::analysis::hb::HbChecker;
 use crate::cluster::CostModel;
 use crate::config::Config;
 use crate::dfs::NodeId;
@@ -376,6 +378,14 @@ struct DagExec<'a> {
     /// Max over slots of each slot's final virtual clock (losing twins
     /// keep their slot busy even though they merge nothing).
     max_slot_ns: AtomicU64,
+    /// Cluster size, for plan-time locality-hint validation.
+    nodes: usize,
+    /// Audit-mode happens-before checker (`scheduler.audit`, default on):
+    /// the executor reports release/attempt/merge events and the run
+    /// fails if any history violated the merge-before-observe order.
+    /// Lock order: the checker has its own mutex and never takes
+    /// `state`, so reporting while holding `state` cannot deadlock.
+    hb: Option<HbChecker>,
 }
 
 impl<'a> DagExec<'a> {
@@ -471,40 +481,53 @@ impl<'a> DagExec<'a> {
     /// Validate and install a freshly planned stage, releasing whatever
     /// units are already runnable.
     fn install_plan(&self, st: &mut DagState, stage: usize, plan: StagePlan) -> Result<()> {
-        // Resolve deps first (immutable reads across stages).
+        // Layer-2 audit: reject a malformed plan before any unit state
+        // exists, with every issue named (not just the first).
+        let unit_defs: Vec<dag_check::UnitDef> = plan
+            .units
+            .iter()
+            .map(|spec| dag_check::UnitDef {
+                deps: spec.deps.iter().map(|d| (d.stage, d.unit)).collect(),
+                preferred: spec.preferred_nodes.iter().map(|n| n.0).collect(),
+            })
+            .collect();
+        let planned_units: Vec<Option<usize>> = st
+            .stages
+            .iter()
+            .enumerate()
+            .map(|(s, up)| (s != stage && up.planned()).then(|| up.units.len()))
+            .collect();
+        let issues = dag_check::validate_plan(
+            self.stages[stage].name(),
+            stage,
+            &unit_defs,
+            &planned_units,
+            self.nodes,
+        );
+        if !issues.is_empty() {
+            return Err(DifetError::Job(issues.join("; ")));
+        }
+        if let Some(hb) = &self.hb {
+            for (u, spec) in plan.units.iter().enumerate() {
+                let deps: Vec<(usize, usize)> =
+                    spec.deps.iter().map(|d| (d.stage, d.unit)).collect();
+                hb.register_unit((stage, u), &deps);
+            }
+        }
+        // Resolve deps (immutable reads across stages); the validator
+        // above guarantees every reference is in range and planned.
         let mut units = Vec::with_capacity(plan.units.len());
         let mut upstream: Vec<usize> = self.stages[stage]
             .gates()
             .iter()
             .map(|g| g.target())
             .collect();
-        for (u, spec) in plan.units.iter().enumerate() {
+        for spec in &plan.units {
             let mut deps_remaining = 0usize;
             let mut dep_stages: Vec<usize> = Vec::new();
             let mut ready_ns = 0u64;
             for d in &spec.deps {
-                let up = st.stages.get(d.stage).ok_or_else(|| {
-                    DifetError::Job(format!(
-                        "stage {} unit {u}: dep on unknown stage {}",
-                        self.stages[stage].name(),
-                        d.stage
-                    ))
-                })?;
-                if !up.planned() || d.stage == stage {
-                    return Err(DifetError::Job(format!(
-                        "stage {} unit {u}: dep on unplanned stage {}",
-                        self.stages[stage].name(),
-                        d.stage
-                    )));
-                }
-                let dep_unit = up.units.get(d.unit).ok_or_else(|| {
-                    DifetError::Job(format!(
-                        "stage {} unit {u}: dep unit {}/{} out of range",
-                        self.stages[stage].name(),
-                        d.stage,
-                        d.unit
-                    ))
-                })?;
+                let dep_unit = &st.stages[d.stage].units[d.unit];
                 if dep_unit.merged {
                     ready_ns = ready_ns.max(dep_unit.completion_ns);
                 } else {
@@ -636,6 +659,11 @@ impl<'a> DagExec<'a> {
             st.stages[r.stage].eager += 1;
         }
         let preferred = st.stages[r.stage].units[r.unit].preferred.clone();
+        // Record the release before the scheduler can hand the unit to a
+        // slot, so an attempt can never be observed before its release.
+        if let Some(hb) = &self.hb {
+            hb.on_release((r.stage, r.unit));
+        }
         self.sched.push(DagTask { unit: r, preferred });
     }
 
@@ -676,6 +704,11 @@ impl<'a> DagExec<'a> {
                 Assignment::Run(task, handle) => (task, handle),
             };
             let UnitRef { stage, unit } = task.unit;
+            // Every attempt — first, retry or speculative twin — is about
+            // to observe its deps' merged outputs: assert they merged.
+            if let Some(hb) = &self.hb {
+                hb.on_attempt_start((stage, unit), handle.launch_seq, handle.speculative);
+            }
             {
                 let mut st = self.state.lock().unwrap();
                 let s = &mut st.stages[stage];
@@ -707,6 +740,9 @@ impl<'a> DagExec<'a> {
                         let merged = self.stages[stage].merge(unit, out.payload);
                         match merged {
                             Ok(()) => {
+                                if let Some(hb) = &self.hb {
+                                    hb.on_merge((stage, unit));
+                                }
                                 self.complete_unit(task.unit, completion);
                                 if let Err(e) = self.advance() {
                                     self.sched.abort(e.to_string());
@@ -782,6 +818,28 @@ pub fn run_dag(
 ) -> Result<DagReport> {
     let wall = Stopwatch::start();
     let cost = CostModel::new(&cfg.cluster);
+    // Layer-2 pre-flight: a DAG whose gate graph can never finish is
+    // rejected before a single worker slot spawns.
+    let names: Vec<&str> = stages.iter().map(|s| s.name()).collect();
+    let gate_defs: Vec<Vec<dag_check::GateDef>> = stages
+        .iter()
+        .map(|s| {
+            s.gates()
+                .iter()
+                .map(|g| dag_check::GateDef {
+                    kind: match g {
+                        Gate::Planned(_) => dag_check::GateKind::Planned,
+                        Gate::Completed(_) => dag_check::GateKind::Completed,
+                    },
+                    target: g.target(),
+                })
+                .collect()
+        })
+        .collect();
+    let issues = dag_check::validate_gates(&names, &gate_defs);
+    if !issues.is_empty() {
+        return Err(DifetError::Job(issues.join("; ")));
+    }
     let exec = DagExec {
         stages,
         sched: Scheduler::new_dynamic(&cfg.scheduler, monotonic_clock()),
@@ -795,6 +853,8 @@ pub fn run_dag(
         startup_ns: secs_to_ns(cost.job_startup()),
         overhead_ns: secs_to_ns(cost.task_overhead()),
         max_slot_ns: AtomicU64::new(0),
+        nodes: cfg.cluster.nodes,
+        hb: cfg.scheduler.audit.then(HbChecker::new),
     };
     if stages.is_empty() {
         exec.sched.close();
@@ -812,6 +872,20 @@ pub fn run_dag(
     });
     if let Some(reason) = exec.sched.abort_reason() {
         return Err(DifetError::Job(reason));
+    }
+    // Layer-3 verdict: the sampled history must be race-free on every
+    // attempt, including retries and losing speculative twins.
+    if let Some(hb) = &exec.hb {
+        match hb.finish() {
+            Ok(checks) => registry.counter("audit_hb_checks").add(checks),
+            Err(violations) => {
+                return Err(DifetError::Job(format!(
+                    "happens-before audit failed ({} violation(s)): {}",
+                    violations.len(),
+                    violations.join("; ")
+                )))
+            }
+        }
     }
     Ok(exec.report(wall.elapsed_secs(), registry))
 }

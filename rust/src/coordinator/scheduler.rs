@@ -85,6 +85,11 @@ pub struct TaskHandle {
     /// True when this attempt was launched as a speculative twin of a
     /// straggler (the DAG executor keys its per-stage counters off this).
     pub speculative: bool,
+    /// Global launch order of this attempt across the whole scheduler —
+    /// retries and speculative twins each get their own stamp.  The
+    /// happens-before checker uses it to name the exact attempt that
+    /// observed a violation.
+    pub launch_seq: u64,
     cancel: Arc<AtomicBool>,
     /// Progress in 1/1000ths of the task, updated by the mapper.
     progress_milli: Arc<AtomicU64>,
@@ -138,6 +143,8 @@ pub struct Scheduler<D: WorkItem = TaskDescriptor> {
     pub rack_remote_tasks: AtomicU64,
     pub speculative_launches: AtomicU64,
     pub retries: AtomicU64,
+    /// Monotone attempt-launch counter feeding [`TaskHandle::launch_seq`].
+    launch_counter: AtomicU64,
 }
 
 /// What a worker slot gets when it asks for work.
@@ -184,6 +191,7 @@ impl<D: WorkItem> Scheduler<D> {
             rack_remote_tasks: AtomicU64::new(0),
             speculative_launches: AtomicU64::new(0),
             retries: AtomicU64::new(0),
+            launch_counter: AtomicU64::new(0),
         }
     }
 
@@ -304,6 +312,7 @@ impl<D: WorkItem> Scheduler<D> {
             task_id: tid,
             attempt,
             speculative,
+            launch_seq: self.launch_counter.fetch_add(1, Ordering::Relaxed),
             cancel,
             progress_milli: progress,
         }

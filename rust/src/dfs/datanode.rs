@@ -1,6 +1,6 @@
 //! Datanode: per-node block storage with liveness + usage accounting.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -12,7 +12,7 @@ use super::{BlockId, NodeId};
 #[derive(Debug)]
 pub struct Datanode {
     id: NodeId,
-    blocks: Mutex<HashMap<BlockId, Arc<[u8]>>>,
+    blocks: Mutex<BTreeMap<BlockId, Arc<[u8]>>>,
     used: AtomicU64,
     alive: AtomicBool,
 }
@@ -21,7 +21,7 @@ impl Datanode {
     pub fn new(id: NodeId) -> Self {
         Datanode {
             id,
-            blocks: Mutex::new(HashMap::new()),
+            blocks: Mutex::new(BTreeMap::new()),
             used: AtomicU64::new(0),
             alive: AtomicBool::new(true),
         }

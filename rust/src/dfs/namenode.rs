@@ -1,6 +1,6 @@
 //! Namenode: namespace + block map + replica placement.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 
 use crate::util::{DifetError, Result};
@@ -24,7 +24,7 @@ pub struct FileMeta {
 #[derive(Debug, Default)]
 struct State {
     files: BTreeMap<String, FileMeta>,
-    blocks: HashMap<BlockId, BlockMeta>,
+    blocks: BTreeMap<BlockId, BlockMeta>,
     next_block: u64,
 }
 
@@ -137,10 +137,8 @@ impl Namenode {
 
     pub fn all_blocks(&self) -> Vec<(BlockId, BlockMeta)> {
         let st = self.state.lock().unwrap();
-        let mut v: Vec<(BlockId, BlockMeta)> =
-            st.blocks.iter().map(|(k, v)| (*k, v.clone())).collect();
-        v.sort_by_key(|(k, _)| *k);
-        v
+        // BTreeMap iteration is already BlockId-ordered.
+        st.blocks.iter().map(|(k, v)| (*k, v.clone())).collect()
     }
 }
 

@@ -22,6 +22,12 @@
 //! See `examples/` for the Table 1 / Table 2 regenerators and the
 //! end-to-end driver, and DESIGN.md for the paper-to-module map.
 
+// Determinism-audit hygiene: every unsafe operation inside an `unsafe fn`
+// must still be wrapped in an explicit `unsafe {}` block with its own
+// justification (see `analysis::lint` and `runtime::executor`).
+#![deny(unsafe_op_in_unsafe_fn)]
+
+pub mod analysis;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;

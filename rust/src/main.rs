@@ -12,6 +12,7 @@
 //! difet stitch      register + align + composite one mosaic (4-stage DAG)
 //! difet vectorize   stitch + segment + label + trace objects (5-stage DAG)
 //! difet bench       pipelined-vs-barrier DAG sweep → BENCH_5.json
+//! difet audit       determinism audit: lint the crate sources (Layer 1)
 //! difet inspect     show artifact manifest + cluster configuration
 //! ```
 //!
@@ -42,7 +43,7 @@ use difet::pipeline::{
 use difet::util::args::{help_text, FlagSpec, ParsedArgs};
 use difet::util::json::Json;
 
-const USAGE: &str = "difet <extract|sequential|census|scalability|register|stitch|vectorize|bench|inspect> [options]";
+const USAGE: &str = "difet <extract|sequential|census|scalability|register|stitch|vectorize|bench|audit|inspect> [options]";
 
 fn flag_specs() -> Vec<FlagSpec> {
     vec![
@@ -56,6 +57,8 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "native", takes_value: false, help: "force the pure-Rust executor" },
         FlagSpec { name: "fused", takes_value: false, help: "one fused pass for all algorithms" },
         FlagSpec { name: "barrier", takes_value: false, help: "bulk-synchronous DAG stages (pre-DAG behavior; same bits)" },
+        FlagSpec { name: "audit", takes_value: false, help: "happens-before checking of DAG runs (default on)" },
+        FlagSpec { name: "no-audit", takes_value: false, help: "disable happens-before checking" },
         FlagSpec { name: "no-write", takes_value: false, help: "skip mapper output writes" },
         FlagSpec { name: "pairs", takes_value: true, help: "register: explicit pairs, e.g. 0-1,1-2 (default: all)" },
         FlagSpec { name: "max-offset", takes_value: true, help: "register: acquisition offset bound px (default 96)" },
@@ -124,6 +127,12 @@ fn build_config(p: &ParsedArgs, nodes_is_list: bool) -> Result<Config, String> {
     }
     if p.has("barrier") {
         cfg.scheduler.barrier = true;
+    }
+    if p.has("audit") {
+        cfg.scheduler.audit = true;
+    }
+    if p.has("no-audit") {
+        cfg.scheduler.audit = false;
     }
     cfg.validate().map_err(|e| e.to_string())?;
     Ok(cfg)
@@ -358,6 +367,15 @@ fn run(p: &ParsedArgs) -> Result<(), String> {
         }
         "bench" => {
             run_bench(p, &cfg, &req)?;
+        }
+        "audit" => {
+            // Layer 1 of the determinism audit: lint the crate's own
+            // sources against the checked-in allowlist.  Layers 2/3 run
+            // inside every DAG execution (see `scheduler.audit`).
+            let src = difet::analysis::find_src_root().ok_or_else(|| {
+                "cannot locate the crate sources (run from the repo root or rust/)".to_string()
+            })?;
+            difet::analysis::run_source_audit(&src).map_err(|e| e.to_string())?;
         }
         "inspect" => {
             println!("config: {cfg:#?}");

@@ -89,7 +89,16 @@ mod pjrt {
     /// argument: PJRT clients/executables are internally synchronized, and
     /// we only ever call `execute` + literal conversions through `&self`.
     struct Shared<T>(T);
+    // SAFETY: `Shared` wraps PJRT handles (`PjRtClient` /
+    // `PjRtLoadedExecutable`) whose C++ implementations are documented
+    // thread-safe; the wrapper exposes no `&mut` access after
+    // construction, so moving it across threads cannot create aliased
+    // mutable state.
     unsafe impl<T> Send for Shared<T> {}
+    // SAFETY: all cross-thread use goes through `&self` methods
+    // (`execute`, literal conversion); PJRT serializes internally and
+    // the one non-reentrant path (compilation) is guarded by
+    // `Engine::compile_lock`, so concurrent `&Shared<T>` access is sound.
     unsafe impl<T> Sync for Shared<T> {}
 
     struct LoadedAlg {

@@ -1,0 +1,307 @@
+//! Golden-fixture tests for the determinism linter (layer 1 of the
+//! audit subsystem) and a property test for the plan-time DAG
+//! validator (layer 2): known-bad snippets must be flagged,
+//! allowlisted snippets must pass with the allowlist consumed exactly,
+//! `HashMap` inside comments/strings must not false-positive, the
+//! crate must self-audit clean with the shipped allowlist, and random
+//! DAGs with planted defects must all be rejected while defect-free
+//! ones are accepted.
+
+use std::path::Path;
+
+use difet::analysis::dag_check::{
+    validate_dag, GateDef, GateKind, StageDef, UnitDef,
+};
+use difet::analysis::lint::{
+    apply_allowlist, audit_tree, scan_source, Allowlist, DEFAULT_ALLOWLIST,
+};
+use difet::util::prop::{check, Gen};
+
+// ---------------------------------------------------------------------------
+// Layer 1: linter golden fixtures.
+// ---------------------------------------------------------------------------
+
+/// Every rule the linter knows, violated once each in a plausible way.
+const KNOWN_BAD: &str = r##"
+use std::collections::HashMap;
+use std::time::Instant;
+
+fn sample(rows: &[u64]) -> u64 {
+    let mut seen = HashMap::new();
+    let t0 = Instant::now();
+    let wall = std::time::SystemTime::now();
+    let worker = std::thread::spawn(move || rows.len());
+    for r in rows {
+        seen.insert(*r, ());
+    }
+    let _ = (t0, wall);
+    unsafe { worker.join().unwrap_unchecked() as u64 }
+}
+
+fn merge_scores(parts: &[f32]) -> f32 {
+    let mut total: f32 = 0.0;
+    for p in parts {
+        total += p;
+    }
+    total
+}
+"##;
+
+#[test]
+fn known_bad_fixture_trips_every_rule() {
+    let findings = scan_source("pipeline/bad.rs", KNOWN_BAD);
+    let rules: Vec<&str> = findings.iter().map(|f| f.rule).collect();
+    for want in [
+        "hash-collection",
+        "wall-clock",
+        "thread-spawn",
+        "unsafe-outside-runtime",
+        "float-accum-unordered",
+    ] {
+        assert!(
+            rules.contains(&want),
+            "rule {want} not triggered; findings: {findings:#?}"
+        );
+    }
+    // `HashMap` appears twice as an identifier (use + ::new), and both
+    // clock reads fire: the fixture line numbers must be real.
+    let hash: Vec<_> = findings.iter().filter(|f| f.rule == "hash-collection").collect();
+    assert_eq!(hash.len(), 2, "{hash:#?}");
+    assert!(findings.iter().all(|f| f.line > 0 && f.file == "pipeline/bad.rs"));
+}
+
+#[test]
+fn allowlisted_fixture_passes_and_cap_is_exact() {
+    let allow = Allowlist::parse(
+        "[allow.01]\n\
+         rule = \"hash-collection\"\n\
+         file = \"pipeline/bad.rs\"\n\
+         count = 2\n\
+         why = \"fixture: waived for the golden test\"\n\
+         [allow.02]\n\
+         rule = \"wall-clock\"\n\
+         file = \"pipeline/bad.rs\"\n\
+         count = 2\n\
+         why = \"fixture: waived for the golden test\"\n\
+         [allow.03]\n\
+         rule = \"thread-spawn\"\n\
+         file = \"pipeline/bad.rs\"\n\
+         count = 1\n\
+         why = \"fixture: waived for the golden test\"\n\
+         [allow.04]\n\
+         rule = \"unsafe-outside-runtime\"\n\
+         file = \"pipeline/bad.rs\"\n\
+         count = 1\n\
+         why = \"fixture: waived for the golden test\"\n\
+         [allow.05]\n\
+         rule = \"float-accum-unordered\"\n\
+         file = \"pipeline/bad.rs\"\n\
+         count = 1\n\
+         why = \"fixture: waived for the golden test\"\n",
+    )
+    .expect("fixture allowlist parses");
+    let report = apply_allowlist(scan_source("pipeline/bad.rs", KNOWN_BAD), &allow);
+    assert!(
+        report.is_clean(),
+        "violations: {:#?}, stale: {:#?}",
+        report.violations,
+        report.stale
+    );
+    assert_eq!(report.allowed.len(), 7);
+
+    // One fewer waiver than findings -> the overflow is a violation,
+    // not silently absorbed.
+    let tight = Allowlist::parse(
+        "[allow.01]\n\
+         rule = \"hash-collection\"\n\
+         file = \"pipeline/bad.rs\"\n\
+         count = 1\n\
+         why = \"fixture: deliberately under-counted\"\n",
+    )
+    .unwrap();
+    let report = apply_allowlist(scan_source("pipeline/bad.rs", KNOWN_BAD), &tight);
+    assert!(report.violations.iter().any(|f| f.rule == "hash-collection"));
+}
+
+#[test]
+fn hashmap_in_comments_and_strings_is_not_flagged() {
+    let src = r##"
+// HashMap would be wrong here; see DESIGN.md on HashMap iteration.
+/* block comment: HashMap, SystemTime, thread::spawn, unsafe */
+fn describe() -> &'static str {
+    "prefer BTreeMap over HashMap; Instant::now is wall-clock"
+}
+fn raw() -> &'static str {
+    r#"HashMap<K, V> and unsafe { } inside a raw string"#
+}
+"##;
+    let findings = scan_source("util/docs.rs", src);
+    assert!(findings.is_empty(), "{findings:#?}");
+}
+
+#[test]
+fn cfg_test_modules_are_exempt() {
+    let src = r##"
+fn prod() -> u32 { 1 }
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+    #[test]
+    fn scratch() {
+        let mut m = HashMap::new();
+        m.insert(1, std::time::Instant::now());
+        let h = std::thread::spawn(|| 0);
+        let _ = h.join();
+    }
+}
+"##;
+    let findings = scan_source("pipeline/ok.rs", src);
+    assert!(findings.is_empty(), "{findings:#?}");
+}
+
+#[test]
+fn crate_self_audit_is_clean_with_shipped_allowlist() {
+    // This is the same check `difet audit` runs in CI; keeping it in
+    // `cargo test` means a nondeterminism hazard fails the suite even
+    // where the binary leg is not wired up.
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let allow = Allowlist::parse(DEFAULT_ALLOWLIST).expect("shipped allowlist parses");
+    let report = audit_tree(&src, &allow).expect("source tree readable");
+    assert!(report.files_scanned > 20, "suspiciously few files: {}", report.files_scanned);
+    assert!(
+        report.is_clean(),
+        "violations: {:#?}\nstale: {:#?}",
+        report.violations,
+        report.stale
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Layer 2: DAG validator property test.
+// ---------------------------------------------------------------------------
+
+/// A random defect-free DAG: chain gates (stage `s` gated on `s - 1`,
+/// occasionally also `Completed` on an earlier stage), unit deps only
+/// on gate ancestors with in-range unit indices, locality hints inside
+/// the cluster.
+fn random_valid_dag(g: &mut Gen) -> (Vec<StageDef>, usize) {
+    let nodes = g.usize_in(1, 4);
+    let n_stages = g.usize_in(2, 2 + g.size.min(6));
+    let mut stages: Vec<StageDef> = Vec::with_capacity(n_stages);
+    for s in 0..n_stages {
+        let mut gates = Vec::new();
+        if s > 0 {
+            gates.push(GateDef { kind: GateKind::Planned, target: s - 1 });
+            if s > 1 && g.bool(0.25) {
+                gates.push(GateDef {
+                    kind: GateKind::Completed,
+                    target: g.usize_in(0, s - 2),
+                });
+            }
+        }
+        let n_units = g.usize_in(1, 4);
+        let mut units = Vec::new();
+        for _ in 0..n_units {
+            let mut deps: Vec<(usize, usize)> = Vec::new();
+            if s > 0 {
+                for _ in 0..g.usize_in(0, 3) {
+                    let ds = g.usize_in(0, s - 1);
+                    let du = g.usize_in(0, stages[ds].units.len() - 1);
+                    if !deps.contains(&(ds, du)) {
+                        deps.push((ds, du));
+                    }
+                }
+            }
+            let preferred = if g.bool(0.3) { vec![g.usize_in(0, nodes - 1)] } else { vec![] };
+            units.push(UnitDef { deps, preferred });
+        }
+        stages.push(StageDef { name: format!("stage{s}"), gates, units });
+    }
+    (stages, nodes)
+}
+
+#[test]
+fn validator_accepts_random_valid_dags() {
+    check("dag_validator_accepts_valid", 200, |g| {
+        let (stages, nodes) = random_valid_dag(g);
+        let issues = validate_dag(&stages, nodes);
+        if issues.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("valid DAG rejected: {issues:?}"))
+        }
+    });
+}
+
+#[test]
+fn validator_rejects_every_planted_defect() {
+    check("dag_validator_rejects_planted", 300, |g| {
+        let (mut stages, nodes) = random_valid_dag(g);
+        let n = stages.len();
+        let defect = g.u32(6);
+        match defect {
+            // Back-gate a -> b with a < b closes a cycle through the chain.
+            0 => {
+                let b = g.usize_in(1, n - 1);
+                let a = g.usize_in(0, b - 1);
+                stages[a].gates.push(GateDef { kind: GateKind::Completed, target: b });
+            }
+            // Self gate.
+            1 => {
+                let s = g.usize_in(0, n - 1);
+                stages[s].gates.push(GateDef { kind: GateKind::Planned, target: s });
+            }
+            // Dep on an unknown stage.
+            2 => {
+                let s = g.usize_in(1, n - 1);
+                stages[s].units[0].deps.push((n + 3, 0));
+            }
+            // Dep unit index past the upstream plan.
+            3 => {
+                let s = g.usize_in(1, n - 1);
+                let upstream_len = stages[s - 1].units.len();
+                stages[s].units[0].deps.push((s - 1, upstream_len + 2));
+            }
+            // Duplicate dep edge.
+            4 => {
+                let s = g.usize_in(1, n - 1);
+                stages[s].units[0].deps = vec![(s - 1, 0), (s - 1, 0)];
+            }
+            // Locality hint outside the cluster.
+            _ => {
+                let s = g.usize_in(0, n - 1);
+                stages[s].units[0].preferred.push(nodes + 1);
+            }
+        }
+        let issues = validate_dag(&stages, nodes);
+        if issues.is_empty() {
+            Err(format!("planted defect {defect} not detected"))
+        } else {
+            Ok(())
+        }
+    });
+}
+
+#[test]
+fn ungated_dep_is_rejected_as_unreachable() {
+    // Deterministic version of the raciest defect: a dep on a stage no
+    // gate orders before the depender.
+    let stages = vec![
+        StageDef {
+            name: "a".into(),
+            gates: vec![],
+            units: vec![UnitDef::default()],
+        },
+        StageDef {
+            name: "b".into(),
+            gates: vec![],
+            units: vec![UnitDef { deps: vec![(0, 0)], preferred: vec![] }],
+        },
+    ];
+    let issues = validate_dag(&stages, 1);
+    assert!(
+        issues.iter().any(|m| m.contains("unreachable")),
+        "{issues:?}"
+    );
+}

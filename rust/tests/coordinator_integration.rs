@@ -21,6 +21,7 @@ fn tiny_cfg(nodes: usize) -> Config {
     cfg.cluster.slots_per_node = 2;
     cfg.cluster.job_startup = 0.5; // scaled: tests shouldn't model 12 s
     cfg.storage.block_size = 1 << 20; // 1 MiB → several splits
+    assert!(cfg.scheduler.audit, "happens-before audit must default on in e2e runs");
     cfg
 }
 

@@ -117,6 +117,9 @@ fn dag_cfg() -> Config {
     cfg.cluster.task_overhead = 0.01;
     cfg.scheduler.speculation = true;
     cfg.scheduler.speculation_slowness = 0.95;
+    // The happens-before audit must stay on for this whole suite: every
+    // random topology below doubles as a history for the checker.
+    assert!(cfg.scheduler.audit, "audit must default on");
     cfg
 }
 

@@ -16,6 +16,7 @@ fn cfg(nodes: usize) -> Config {
     cfg.cluster.job_startup = 1.0;
     cfg.storage.block_size = 2 << 20;
     cfg.artifacts_dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    assert!(cfg.scheduler.audit, "happens-before audit must default on in e2e runs");
     cfg
 }
 

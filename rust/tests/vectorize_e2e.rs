@@ -28,6 +28,7 @@ fn test_cfg(nodes: usize) -> Config {
     cfg.storage.block_size = 1 << 20;
     cfg.artifacts_dir = "/nonexistent".into(); // hermetic: native executor
     assert!(cfg.scheduler.speculation, "speculation must be on for this suite");
+    assert!(cfg.scheduler.audit, "happens-before audit must default on in e2e runs");
     cfg
 }
 
