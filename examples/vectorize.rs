@@ -1,5 +1,6 @@
-//! Vectorization — the full five-stage pipeline (ingest → register →
-//! align → composite → vectorize) on the simulated cluster: overlapping
+//! Vectorization — the full nine-stage DAG (ingest → extract ⇒
+//! census-merge / register ⇒ register-merge → align → composite →
+//! vectorize ⇒ label-merge) on the simulated cluster: overlapping
 //! acquisitions are stitched into one mosaic, the mosaic is thresholded
 //! into a foreground mask, the mask is labeled as band-shaped work
 //! units on the coordinator (the fourth `WorkItem` shape), and every

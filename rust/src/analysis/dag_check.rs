@@ -20,9 +20,12 @@
 //!   after its gates are met; a cycle (or a gate on itself) stalls the
 //!   whole DAG.  The runtime used to detect this only after spinning up
 //!   the slot pool; now it is a pre-flight error.
-//! * **dangling unit deps** — a dep on an unknown stage, on the unit's
-//!   own stage, or on a unit index past the upstream plan can never
-//!   merge, so the unit would wait forever.
+//! * **dangling unit deps** — a dep on an unknown stage, or on a unit
+//!   index past the upstream plan, can never merge, so the unit would
+//!   wait forever.  Deps on the unit's *own* stage are legal only when
+//!   they point at an earlier unit (`du < u`): plans list units in
+//!   topological order, so backward references (tree-merge children)
+//!   are well-founded while self/forward references would deadlock.
 //! * **unplanned-stage deps (unreachable units)** — a unit dep on a
 //!   stage the gate graph does not guarantee to have planned first is a
 //!   scheduling race: whether the unit is runnable would depend on
@@ -165,10 +168,17 @@ pub fn validate_plan(
                 continue;
             }
             if ds == stage {
-                issues.push(format!(
-                    "stage {stage_name} unit {u}: dep on its own stage (intra-stage \
-                     ordering is the scheduler's job, not a dep edge)"
-                ));
+                // Intra-stage deps: legal iff they reference an earlier
+                // unit of the same plan (units are listed in topological
+                // order, so backward edges are well-founded — this is
+                // how tree-shaped merge stages express parent→children).
+                if du >= u {
+                    issues.push(format!(
+                        "stage {stage_name} unit {u}: dep on its own stage must \
+                         reference an earlier unit (got {du} >= {u}; a self or \
+                         forward reference would never release)"
+                    ));
+                }
                 continue;
             }
             match planned_units[ds] {
@@ -303,6 +313,42 @@ mod tests {
         let units = [unit(&[(9, 0)])];
         let issues = validate_plan("s", 1, &units, &planned, 1);
         assert!(issues[0].contains("unknown stage 9"), "{issues:?}");
+    }
+
+    #[test]
+    fn own_stage_backward_dep_is_legal_forward_is_not() {
+        // Tree-merge shape: units 0..2 are leaves, unit 2 combines them.
+        let units = [unit(&[]), unit(&[]), unit(&[(0, 0), (0, 1)])];
+        assert!(validate_plan("merge", 0, &units, &[None], 2).is_empty());
+
+        // Self reference: unit 1 depends on itself.
+        let units = [unit(&[]), unit(&[(0, 1)])];
+        let issues = validate_plan("merge", 0, &units, &[None], 2);
+        assert!(issues[0].contains("earlier unit"), "{issues:?}");
+
+        // Forward reference: unit 0 depends on unit 1.
+        let units = [unit(&[(0, 1)]), unit(&[])];
+        let issues = validate_plan("merge", 0, &units, &[None], 2);
+        assert!(issues[0].contains("earlier unit"), "{issues:?}");
+
+        // Whole-DAG path: a tree-merge stage downstream of a map stage,
+        // with leaves on the upstream units and internal nodes on its
+        // own earlier units.
+        let dag = vec![
+            stage("map", vec![], vec![unit(&[]), unit(&[]), unit(&[])]),
+            stage(
+                "merge",
+                vec![gate(GateKind::Planned, 0)],
+                vec![
+                    unit(&[(0, 0)]),
+                    unit(&[(0, 1)]),
+                    unit(&[(0, 2)]),
+                    unit(&[(1, 0), (1, 1)]),
+                    unit(&[(1, 3), (1, 2)]),
+                ],
+            ),
+        ];
+        assert!(validate_dag(&dag, 4).is_empty());
     }
 
     #[test]

@@ -42,8 +42,15 @@
 //!
 //! which makes the pipelined mode's consolidation of startups and
 //! elimination of stage barriers directly visible in `sim_seconds`
-//! (`difet bench` writes both modes into `BENCH_5.json`; CI gates on
+//! (`difet bench` writes both modes into `BENCH_7.json`; CI gates on
 //! them).
+//!
+//! Unit deps may also point at *earlier units of the same stage*
+//! (`dep.unit < unit`, validated at plan time): that is how tree-shaped
+//! merge stages express parent→children edges.  Intra-stage deps release
+//! exactly like cross-stage ones in pipelined mode; in barrier mode the
+//! whole-stage release frees the leaves and internal units cascade as
+//! their children merge (own stage is never part of the barrier set).
 //!
 //! Observability: the executor registers, per DAG run,
 //!
@@ -527,6 +534,16 @@ impl<'a> DagExec<'a> {
             let mut dep_stages: Vec<usize> = Vec::new();
             let mut ready_ns = 0u64;
             for d in &spec.deps {
+                if d.stage == stage {
+                    // Intra-stage dep (a tree-merge parent on its
+                    // children, validated `d.unit < u`): the child is in
+                    // this very plan, so it cannot have merged yet.  Own
+                    // stage stays out of `dep_stages` (internal nodes are
+                    // not cross-stage-eager) and out of `upstream` (a
+                    // stage barriering on itself would never release).
+                    deps_remaining += 1;
+                    continue;
+                }
                 let dep_unit = &st.stages[d.stage].units[d.unit];
                 if dep_unit.merged {
                     ready_ns = ready_ns.max(dep_unit.completion_ns);
@@ -552,10 +569,13 @@ impl<'a> DagExec<'a> {
             });
         }
         // Register dependents on the upstream units (second pass, now that
-        // validation cannot fail halfway).
+        // validation cannot fail halfway).  Own-stage deps register on the
+        // local `units` vec — those units are not installed yet.
         for (u, spec) in plan.units.iter().enumerate() {
             for d in &spec.deps {
-                if !st.stages[d.stage].units[d.unit].merged {
+                if d.stage == stage {
+                    units[d.unit].dependents.push(UnitRef { stage, unit: u });
+                } else if !st.stages[d.stage].units[d.unit].merged {
                     st.stages[d.stage].units[d.unit]
                         .dependents
                         .push(UnitRef { stage, unit: u });
@@ -625,9 +645,14 @@ impl<'a> DagExec<'a> {
             st.stages[stage].close_ns = open;
             let n_units = st.stages[stage].units.len();
             for unit in 0..n_units {
-                debug_assert_eq!(st.stages[stage].units[unit].deps_remaining, 0);
+                // With all upstream stages Done, only *intra-stage* deps
+                // (tree-merge parents on their children) can still be
+                // pending; those units release from `complete_unit` as
+                // their children merge.
                 st.stages[stage].units[unit].ready_ns = open;
-                self.release_unit(st, UnitRef { stage, unit });
+                if st.stages[stage].units[unit].deps_remaining == 0 {
+                    self.release_unit(st, UnitRef { stage, unit });
+                }
             }
         }
     }
@@ -688,7 +713,12 @@ impl<'a> DagExec<'a> {
             let du = &mut st.stages[d.stage].units[d.unit];
             du.ready_ns = du.ready_ns.max(completion_ns);
             du.deps_remaining -= 1;
-            if du.deps_remaining == 0 && self.mode == ExecMode::Pipelined {
+            // Barrier mode releases intra-stage dependents too, once the
+            // whole-stage release has happened (the stage's cross-stage
+            // barrier was already paid; tree-internal units then cascade).
+            if du.deps_remaining == 0
+                && (self.mode == ExecMode::Pipelined || st.stages[d.stage].released_all)
+            {
                 self.release_unit(&mut st, d);
             }
         }
@@ -1071,6 +1101,60 @@ mod tests {
             all
         };
         assert_eq!(run(ExecMode::Pipelined), run(ExecMode::Barrier));
+    }
+
+    /// Tree-merge shape over one upstream stage: units 0..4 are leaves
+    /// (one per upstream unit), 4 and 5 combine pairs, 6 is the root.
+    fn tree_deps() -> Vec<Vec<UnitRef>> {
+        let up = |u| UnitRef { stage: 0, unit: u };
+        let own = |u| UnitRef { stage: 1, unit: u };
+        vec![
+            vec![up(0)],
+            vec![up(1)],
+            vec![up(2)],
+            vec![up(3)],
+            vec![own(0), own(1)],
+            vec![own(2), own(3)],
+            vec![own(4), own(5)],
+        ]
+    }
+
+    #[test]
+    fn intra_stage_tree_deps_run_in_both_modes_with_identical_values() {
+        let run = |mode, fail_first| {
+            let shared = std::sync::Arc::new(Mutex::new(BTreeMap::new()));
+            let a = mk_stage(&shared, "a", 0, vec![], vec![vec![]; 4]);
+            let mut t = mk_stage(&shared, "tree", 1, vec![Gate::Planned(0)], tree_deps());
+            t.fail_first_attempt = fail_first;
+            let registry = Registry::new();
+            let rep = run_dag(&test_cfg(), &[&a, &t], mode, &registry).expect("dag");
+            assert_eq!(rep.stages[1].units, 7);
+            assert_eq!(t.finalized.load(Ordering::Relaxed), 1);
+            assert_eq!(t.values.lock().unwrap().len(), 7);
+            t.values.lock().unwrap().clone()
+        };
+        let baseline = run(ExecMode::Pipelined, false);
+        assert_eq!(baseline, run(ExecMode::Barrier, false));
+        // Injected retries on every tree unit must not change a bit
+        // (children are re-read from the merged sink, never consumed).
+        assert_eq!(baseline, run(ExecMode::Pipelined, true));
+        assert_eq!(baseline, run(ExecMode::Barrier, true));
+    }
+
+    #[test]
+    fn intra_stage_forward_dep_is_rejected_at_plan_time() {
+        let shared = std::sync::Arc::new(Mutex::new(BTreeMap::new()));
+        // Unit 0 depends on unit 1 of its own stage: forward reference.
+        let bad = mk_stage(
+            &shared,
+            "bad",
+            0,
+            vec![],
+            vec![vec![UnitRef { stage: 0, unit: 1 }], vec![]],
+        );
+        let registry = Registry::new();
+        let err = run_dag(&test_cfg(), &[&bad], ExecMode::Pipelined, &registry).unwrap_err();
+        assert!(err.to_string().contains("earlier unit"), "{err}");
     }
 
     #[test]

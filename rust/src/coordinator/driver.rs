@@ -241,7 +241,7 @@ pub fn run_mosaic_job(
     let stage = CompositeStage::new(
         cfg,
         dfs,
-        scenes,
+        super::stages::SceneSource::Given(scenes),
         AlignSource::Given(alignment),
         spec.clone(),
         registry,

@@ -106,6 +106,28 @@ impl From<&JobSpec> for FusedJobSpec {
     }
 }
 
+/// One ingest work unit: decode one bundle record back into a scene
+/// image.  The fifth [`super::scheduler::WorkItem`] shape — locality
+/// points at the nodes holding the record's byte range of the bundle.
+#[derive(Debug, Clone)]
+pub struct IngestTask {
+    /// Record index in the bundle (also the unit index).
+    pub record: usize,
+    /// Image id the record's header promises.
+    pub image_id: u64,
+    /// Byte range of the record within the bundle file.
+    pub byte_start: u64,
+    pub byte_end: u64,
+    /// Nodes holding replicas of the record's blocks, best first.
+    pub preferred_nodes: Vec<NodeId>,
+}
+
+impl super::scheduler::WorkItem for IngestTask {
+    fn preferred_nodes(&self) -> &[NodeId] {
+        &self.preferred_nodes
+    }
+}
+
 /// One mapper's output for one image.
 #[derive(Debug, Clone)]
 pub struct MapOutput {
@@ -123,7 +145,7 @@ pub struct MapOutput {
 }
 
 /// Final per-image result after the shuffle/merge stage.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ImageCensus {
     pub image_id: u64,
     /// Census after the per-image cap (what Table 2 reports).

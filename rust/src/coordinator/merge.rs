@@ -1,0 +1,649 @@
+//! Tree-shaped distributed reduction over a DAG stage's unit outputs.
+//!
+//! The PR-5 runtime distributed every *map*-shaped computation, but each
+//! stage's reduction still ran as a serial loop on the coordinator —
+//! the census fold in `ExtractStage::finalize`, the pair-result collect
+//! in `AlignStage::plan`, and the union-find label merge in
+//! `LabelStage::finalize`.  Those loops are O(units) on one thread and
+//! are exactly the Amdahl term that collapsed parallel efficiency at
+//! 4+ nodes (BENCH_5: 0.29 at 4 nodes).
+//!
+//! [`TreeMergeStage`] replaces a serial fold with a log-depth merge
+//! tree scheduled as ordinary DAG units:
+//!
+//! * **leaves** materialize contiguous runs of upstream unit outputs
+//!   (`[lo, hi)` in upstream unit order), released per-run as soon as
+//!   *those* upstream units merge — reduction overlaps the map stage;
+//! * **internal units** combine their children's parts, declared as
+//!   intra-stage backward deps (`child < parent` in unit order), so the
+//!   runtime releases each combine the moment its children merged.
+//!
+//! Determinism: the tree shape is fixed at plan time (a pure function
+//! of the upstream unit count, the cluster geometry, and the optional
+//! shape seed — never of the schedule), every combine receives its
+//! children in upstream order, and the part algebra of each
+//! [`TreeReducer`] is associative over contiguous runs.  Any tree shape
+//! therefore folds to bits identical to the serial left fold, which is
+//! what lets retries, speculation, and barrier-vs-pipelined schedules
+//! all land on the same answer — property-tested over random shapes in
+//! this module's tests and end-to-end in `rust/tests/vectorize_e2e.rs`.
+//!
+//! Fault tolerance: parts are stored as `Arc`s and children are only
+//! ever *cloned*, never consumed — a retried or speculative combine can
+//! re-read its children at any point.  Only `finalize` consumes the
+//! root.
+
+use std::any::Any;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use crate::cluster::CostModel;
+use crate::config::Config;
+use crate::dfs::{Dfs, NodeId};
+use crate::util::{DifetError, Result};
+use crate::vector::{band_part, band_part_output, merge_band_parts, BandPart};
+
+use super::dag::{DagStage, Gate, StagePlan, UnitOutput, UnitRef, UnitSpec};
+use super::driver::JobHooks;
+use super::job::{ImageCensus, PairResult};
+use super::shuffle;
+use super::scheduler::TaskHandle;
+use super::stages::{injected_failure, ExtractStage, LabelStage, PairStage};
+
+/// The merge algebra a [`TreeMergeStage`] folds.  Implementations must
+/// be associative over *contiguous runs of upstream units*: combining
+/// `[lo, mid)` with `[mid, hi)` must equal materializing `[lo, hi)`
+/// directly — that (plus the fixed plan-time shape) is the whole
+/// bit-identity argument.
+pub trait TreeReducer: Sync {
+    /// One subtree's value: the fold of a contiguous run of upstream
+    /// unit outputs.
+    type Part: Send + Sync + 'static;
+
+    /// Per-upstream-unit locality hints; the length defines the
+    /// upstream unit count (so this also pins the leaf ranges).
+    fn fan_in(&self) -> Result<Vec<Vec<NodeId>>>;
+
+    /// Materialize upstream units `[lo, hi)` into a part, returning the
+    /// part plus modeled I/O seconds spent fetching the inputs.
+    fn leaf(&self, lo: usize, hi: usize, node: NodeId) -> Result<(Self::Part, f64)>;
+
+    /// Fold `children` — contiguous sibling parts in upstream order —
+    /// into their parent part.
+    fn combine(&self, children: Vec<Arc<Self::Part>>) -> Result<Self::Part>;
+
+    /// Install the root part (the full fold) into its destination sink.
+    fn finish(&self, root: Arc<Self::Part>) -> Result<()>;
+}
+
+/// One node of the planned merge tree.
+struct TreeNode {
+    /// Child unit indices (empty for leaves).  Always `< ` this node's
+    /// own index: the tree is built bottom-up, so intra-stage deps are
+    /// backward references, which is what the DAG validator requires.
+    children: Vec<usize>,
+    /// Upstream unit range `[lo, hi)` this subtree covers.
+    lo: usize,
+    hi: usize,
+    preferred: Vec<NodeId>,
+}
+
+/// A log-depth reduction stage over the outputs of `upstream_index`.
+///
+/// Leaves span `ceil(n_upstream / leaf_target)` upstream units each,
+/// where `leaf_target ≈ 2× the cluster's slot count` — enough leaves to
+/// keep every slot busy without drowning small merges in per-task
+/// overhead.  Internal levels pair adjacent siblings (or, with
+/// [`TreeMergeStage::with_shape_seed`], group 2–3 of them pseudo-
+/// randomly — the property tests' lever for exercising arbitrary
+/// shapes); an odd node out is carried up a level rather than wrapped
+/// in a pointless single-child unit.
+pub struct TreeMergeStage<'a, R: TreeReducer> {
+    name: &'static str,
+    /// This stage's own index in the DAG's stage array (intra-stage
+    /// deps are self-referential, so the stage must know its address).
+    stage_index: usize,
+    upstream_index: usize,
+    leaf_target: usize,
+    shape_seed: Option<u64>,
+    reducer: R,
+    hooks: &'a JobHooks,
+    planned: Mutex<Option<Arc<Vec<TreeNode>>>>,
+    parts: Mutex<Vec<Option<Arc<R::Part>>>>,
+}
+
+impl<'a, R: TreeReducer> TreeMergeStage<'a, R> {
+    pub fn new(
+        name: &'static str,
+        cfg: &Config,
+        stage_index: usize,
+        upstream_index: usize,
+        reducer: R,
+        hooks: &'a JobHooks,
+    ) -> Self {
+        TreeMergeStage {
+            name,
+            stage_index,
+            upstream_index,
+            leaf_target: (cfg.cluster.nodes * cfg.cluster.slots_per_node * 2).max(4),
+            shape_seed: None,
+            reducer,
+            hooks,
+            planned: Mutex::new(None),
+            parts: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Randomize the tree shape (group sizes 2–3 drawn from a seeded
+    /// xorshift).  Same seed ⇒ same shape; the fold result is shape-
+    /// independent by the [`TreeReducer`] contract.
+    pub fn with_shape_seed(mut self, seed: u64) -> Self {
+        self.shape_seed = Some(seed);
+        self
+    }
+
+    /// The reducer, for reading back sinks it owns itself.
+    pub fn reducer(&self) -> &R {
+        &self.reducer
+    }
+
+    fn plan_info(&self) -> Arc<Vec<TreeNode>> {
+        self.planned
+            .lock()
+            .unwrap()
+            .clone()
+            .expect("tree-merge stage used before plan")
+    }
+}
+
+/// Union of locality hints, first-seen order, deduplicated.
+fn union_preferred(sets: &[&[NodeId]]) -> Vec<NodeId> {
+    let mut out: Vec<NodeId> = Vec::new();
+    for set in sets {
+        for &n in *set {
+            if !out.contains(&n) {
+                out.push(n);
+            }
+        }
+    }
+    out
+}
+
+impl<R: TreeReducer> DagStage for TreeMergeStage<'_, R> {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn gates(&self) -> Vec<Gate> {
+        // The shape depends on the upstream unit count, so plan once the
+        // upstream stage has planned (NOT completed — leaves release
+        // per-run as their upstream units merge).
+        vec![Gate::Planned(self.upstream_index)]
+    }
+
+    fn plan(&self) -> Result<StagePlan> {
+        let fan_in = self.reducer.fan_in()?;
+        let n_up = fan_in.len();
+        if n_up == 0 {
+            return Err(DifetError::Job(format!(
+                "{}: upstream stage planned zero units; nothing to merge",
+                self.name
+            )));
+        }
+        let span = n_up.div_ceil(self.leaf_target);
+
+        let mut nodes: Vec<TreeNode> = Vec::new();
+        let mut level: Vec<usize> = Vec::new();
+        let mut lo = 0;
+        while lo < n_up {
+            let hi = (lo + span).min(n_up);
+            let sets: Vec<&[NodeId]> = fan_in[lo..hi].iter().map(|v| v.as_slice()).collect();
+            nodes.push(TreeNode {
+                children: Vec::new(),
+                lo,
+                hi,
+                preferred: union_preferred(&sets),
+            });
+            level.push(nodes.len() - 1);
+            lo = hi;
+        }
+
+        // Internal levels, bottom-up.  The xorshift stream is consumed
+        // in one deterministic plan-time pass — shape never depends on
+        // the schedule.
+        let mut rng = self.shape_seed;
+        while level.len() > 1 {
+            let mut next = Vec::new();
+            let mut i = 0;
+            while i < level.len() {
+                let remaining = level.len() - i;
+                if remaining == 1 {
+                    // Odd node out: carry it up instead of wrapping it
+                    // in a single-child unit.
+                    next.push(level[i]);
+                    break;
+                }
+                let group = match &mut rng {
+                    None => 2,
+                    Some(s) => {
+                        *s ^= *s << 13;
+                        *s ^= *s >> 7;
+                        *s ^= *s << 17;
+                        2 + (*s % 2) as usize
+                    }
+                }
+                .min(remaining);
+                let children: Vec<usize> = level[i..i + group].to_vec();
+                let sets: Vec<&[NodeId]> = children
+                    .iter()
+                    .map(|&c| nodes[c].preferred.as_slice())
+                    .collect();
+                nodes.push(TreeNode {
+                    lo: nodes[children[0]].lo,
+                    hi: nodes[children[group - 1]].hi,
+                    preferred: union_preferred(&sets),
+                    children,
+                });
+                next.push(nodes.len() - 1);
+                i += group;
+            }
+            level = next;
+        }
+        debug_assert_eq!(nodes.last().map(|n| (n.lo, n.hi)), Some((0, n_up)));
+
+        let units = nodes
+            .iter()
+            .map(|n| UnitSpec {
+                deps: if n.children.is_empty() {
+                    (n.lo..n.hi)
+                        .map(|u| UnitRef { stage: self.upstream_index, unit: u })
+                        .collect()
+                } else {
+                    n.children
+                        .iter()
+                        .map(|&c| UnitRef { stage: self.stage_index, unit: c })
+                        .collect()
+                },
+                preferred_nodes: n.preferred.clone(),
+            })
+            .collect();
+        *self.parts.lock().unwrap() = vec![None; nodes.len()];
+        *self.planned.lock().unwrap() = Some(Arc::new(nodes));
+        Ok(StagePlan { units, plan_io_secs: 0.0 })
+    }
+
+    fn run_unit(
+        &self,
+        unit: usize,
+        handle: &TaskHandle,
+        node: NodeId,
+    ) -> Result<Option<UnitOutput>> {
+        injected_failure(self.hooks, self.name, unit, handle)?;
+        let nodes = self.plan_info();
+        let tree_node = &nodes[unit];
+        if handle.cancelled() {
+            return Ok(None);
+        }
+        let t0 = std::time::Instant::now();
+        let (part, io_secs) = if tree_node.children.is_empty() {
+            self.reducer.leaf(tree_node.lo, tree_node.hi, node)?
+        } else {
+            // Children merged before this unit was released (declared
+            // deps); clone their Arcs under a brief lock and combine
+            // outside it.
+            let children: Vec<Arc<R::Part>> = {
+                let parts = self.parts.lock().unwrap();
+                tree_node
+                    .children
+                    .iter()
+                    .map(|&c| {
+                        parts[c].clone().ok_or_else(|| {
+                            DifetError::Job(format!(
+                                "{}: child part {c} missing for unit {unit}",
+                                self.name
+                            ))
+                        })
+                    })
+                    .collect::<Result<_>>()?
+            };
+            (self.reducer.combine(children)?, 0.0)
+        };
+        let compute_ns = t0.elapsed().as_nanos() as u64;
+        if handle.cancelled() {
+            return Ok(None);
+        }
+        Ok(Some(UnitOutput {
+            payload: Box::new(part),
+            compute_ns,
+            io_secs,
+        }))
+    }
+
+    fn merge(&self, unit: usize, payload: Box<dyn Any + Send>) -> Result<()> {
+        // Downcast before taking the lock (keep the critical section to
+        // the slot store).
+        let part = payload
+            .downcast::<R::Part>()
+            .map_err(|_| DifetError::Job(format!("{}: wrong payload type", self.name)))?;
+        self.parts.lock().unwrap()[unit] = Some(Arc::new(*part));
+        Ok(())
+    }
+
+    fn finalize(&self) -> Result<()> {
+        let root = {
+            let parts = self.parts.lock().unwrap();
+            for (unit, part) in parts.iter().enumerate() {
+                if part.is_none() {
+                    return Err(DifetError::Job(format!(
+                        "{}: unit {unit} lost its part",
+                        self.name
+                    )));
+                }
+            }
+            // Clone (never take) — a late losing twin of an internal
+            // unit may still read its children.  The root is the last
+            // node built.
+            parts.last().and_then(|p| p.clone()).unwrap()
+        };
+        self.reducer.finish(root)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The three reducers: census, registration, labels.
+// ---------------------------------------------------------------------------
+
+/// Census fold for an [`ExtractStage`] in defer mode: parts are maps
+/// keyed `(image_id, algorithm_index)`.  Upstream units own disjoint
+/// image sets, so every combine is a disjoint map union — trivially
+/// associative and order-free.
+pub struct CensusTreeReducer<'a> {
+    extract: &'a ExtractStage<'a>,
+}
+
+impl<'a> CensusTreeReducer<'a> {
+    pub fn new(extract: &'a ExtractStage<'a>) -> Self {
+        CensusTreeReducer { extract }
+    }
+}
+
+impl TreeReducer for CensusTreeReducer<'_> {
+    type Part = BTreeMap<(u64, usize), ImageCensus>;
+
+    fn fan_in(&self) -> Result<Vec<Vec<NodeId>>> {
+        Ok((0..self.extract.unit_count())
+            .map(|u| self.extract.unit_preferred(u))
+            .collect())
+    }
+
+    fn leaf(&self, lo: usize, hi: usize, _node: NodeId) -> Result<(Self::Part, f64)> {
+        // The censuses are in-memory slots on the extract stage (no DFS
+        // hop), so leaf I/O is free.
+        let mut part = BTreeMap::new();
+        for u in lo..hi {
+            for per_image in self.extract.unit_censuses(u)?.iter() {
+                for (alg, census) in per_image.iter().enumerate() {
+                    part.insert((census.image_id, alg), census.clone());
+                }
+            }
+        }
+        Ok((part, 0.0))
+    }
+
+    fn combine(&self, children: Vec<Arc<Self::Part>>) -> Result<Self::Part> {
+        let mut out = Self::Part::new();
+        for child in children {
+            for (key, census) in child.iter() {
+                if out.insert(*key, census.clone()).is_some() {
+                    return Err(DifetError::Job(format!(
+                        "census merge: image {} algorithm {} seen twice",
+                        key.0, key.1
+                    )));
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn finish(&self, root: Arc<Self::Part>) -> Result<()> {
+        self.extract.install_censuses(root.as_ref().clone())
+    }
+}
+
+/// Pair-result collect for a [`PairStage`]: parts are slices of the
+/// results in unit order, so contiguous combines are concatenations —
+/// the root is byte-for-byte the vector the serial collect built.  The
+/// merged vector stays here (read via [`PairTreeReducer::results`]);
+/// a downstream [`super::stages::AlignStage`] consumes it.
+pub struct PairTreeReducer<'a> {
+    pairs: &'a PairStage<'a>,
+    merged: Mutex<Option<Vec<PairResult>>>,
+}
+
+impl<'a> PairTreeReducer<'a> {
+    pub fn new(pairs: &'a PairStage<'a>) -> Self {
+        PairTreeReducer { pairs, merged: Mutex::new(None) }
+    }
+
+    /// The collected pair results, unit order (valid after the merge
+    /// stage completed).
+    pub fn results(&self) -> Result<Vec<PairResult>> {
+        self.merged
+            .lock()
+            .unwrap()
+            .clone()
+            .ok_or_else(|| DifetError::Job("pair merge read before completion".into()))
+    }
+}
+
+impl TreeReducer for PairTreeReducer<'_> {
+    type Part = Vec<PairResult>;
+
+    fn fan_in(&self) -> Result<Vec<Vec<NodeId>>> {
+        Ok((0..self.pairs.unit_count())
+            .map(|u| self.pairs.unit_preferred(u))
+            .collect())
+    }
+
+    fn leaf(&self, lo: usize, hi: usize, _node: NodeId) -> Result<(Self::Part, f64)> {
+        let mut part = Vec::with_capacity(hi - lo);
+        for u in lo..hi {
+            part.push(self.pairs.result_of(u)?);
+        }
+        Ok((part, 0.0))
+    }
+
+    fn combine(&self, children: Vec<Arc<Self::Part>>) -> Result<Self::Part> {
+        let mut out = Vec::with_capacity(children.iter().map(|c| c.len()).sum());
+        for child in children {
+            out.extend(child.iter().cloned());
+        }
+        Ok(out)
+    }
+
+    fn finish(&self, root: Arc<Self::Part>) -> Result<()> {
+        *self.merged.lock().unwrap() = Some(root.as_ref().clone());
+        Ok(())
+    }
+}
+
+/// Label-band fold for a [`LabelStage`] in defer mode: parts are
+/// [`BandPart`]s — canonically relabeled row bands with fragment and
+/// seam-union tallies.  `rust/src/vector/label.rs` proves (and
+/// property-tests) that merging adjacent bands is associative and lands
+/// bit-identically on the serial `merge_tile_labels` fold, so any tree
+/// over contiguous bands is safe.
+///
+/// Unlike the in-memory reducers above, leaves fetch the upstream
+/// units' shuffled label files from DFS — that is real modeled I/O, and
+/// it is exactly the fetch the serial finalize loop used to do one file
+/// at a time on the coordinator.
+pub struct LabelTreeReducer<'a> {
+    label: &'a LabelStage<'a>,
+    dfs: &'a Dfs,
+    cost: CostModel,
+}
+
+impl<'a> LabelTreeReducer<'a> {
+    pub fn new(cfg: &Config, dfs: &'a Dfs, label: &'a LabelStage<'a>) -> Self {
+        LabelTreeReducer { label, dfs, cost: CostModel::new(&cfg.cluster) }
+    }
+}
+
+impl TreeReducer for LabelTreeReducer<'_> {
+    type Part = BandPart;
+
+    fn fan_in(&self) -> Result<Vec<Vec<NodeId>>> {
+        Ok((0..self.label.unit_count())
+            .map(|u| self.label.unit_preferred(u))
+            .collect())
+    }
+
+    fn leaf(&self, lo: usize, hi: usize, node: NodeId) -> Result<(Self::Part, f64)> {
+        let mut io_secs = 0.0;
+        let mut acc: Option<BandPart> = None;
+        for u in lo..hi {
+            let (path, want_id) = self.label.unit_labels_file(u);
+            let (bytes, stats) = self.dfs.read_file(&path, node)?;
+            io_secs += self.cost.split_input(stats.local_bytes, stats.remote_bytes);
+            let (id, tile) = shuffle::decode_labels(&bytes)?;
+            if id != want_id {
+                return Err(DifetError::Job(format!(
+                    "label file routing mixup: wanted {want_id}, got {id}"
+                )));
+            }
+            let next = band_part(tile)?;
+            acc = Some(match acc {
+                None => next,
+                Some(prev) => merge_band_parts(&prev, &next)?,
+            });
+        }
+        acc.map(|part| (part, io_secs))
+            .ok_or_else(|| DifetError::Job("label merge leaf spans zero bands".into()))
+    }
+
+    fn combine(&self, children: Vec<Arc<Self::Part>>) -> Result<Self::Part> {
+        let mut iter = children.into_iter();
+        let first = iter
+            .next()
+            .ok_or_else(|| DifetError::Job("label merge combine got no children".into()))?;
+        let mut acc = first.as_ref().clone();
+        for child in iter {
+            acc = merge_band_parts(&acc, &child)?;
+        }
+        Ok(acc)
+    }
+
+    fn finish(&self, root: Arc<Self::Part>) -> Result<()> {
+        let (width, height) = self.label.dims();
+        let merged = band_part_output(width, height, root.as_ref().clone())?;
+        self.label.install_merged(merged)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A reducer over plain integer ranges: leaf(lo,hi) = the vector
+    /// [lo, hi), combine = concat.  The root must be [0, n) exactly —
+    /// any dropped, duplicated or reordered upstream unit is visible.
+    struct RangeReducer {
+        n: usize,
+        sink: Mutex<Option<Vec<usize>>>,
+    }
+
+    impl TreeReducer for RangeReducer {
+        type Part = Vec<usize>;
+        fn fan_in(&self) -> Result<Vec<Vec<NodeId>>> {
+            Ok(vec![Vec::new(); self.n])
+        }
+        fn leaf(&self, lo: usize, hi: usize, _node: NodeId) -> Result<(Self::Part, f64)> {
+            Ok(((lo..hi).collect(), 0.0))
+        }
+        fn combine(&self, children: Vec<Arc<Self::Part>>) -> Result<Self::Part> {
+            Ok(children.iter().flat_map(|c| c.iter().copied()).collect())
+        }
+        fn finish(&self, root: Arc<Self::Part>) -> Result<()> {
+            *self.sink.lock().unwrap() = Some(root.as_ref().clone());
+            Ok(())
+        }
+    }
+
+    fn leaf_count(plan: &StagePlan, upstream: usize) -> usize {
+        plan.units
+            .iter()
+            .filter(|u| u.deps.iter().all(|d| d.stage == upstream))
+            .count()
+    }
+
+    #[test]
+    fn plan_builds_contiguous_backward_trees() {
+        let hooks = JobHooks::default();
+        let mut cfg = Config::default();
+        cfg.cluster.nodes = 2;
+        cfg.cluster.slots_per_node = 2;
+        for n in [1usize, 2, 7, 16, 33, 120] {
+            for seed in [None, Some(7u64), Some(0xDEADBEEF)] {
+                let reducer = RangeReducer { n, sink: Mutex::new(None) };
+                let mut stage = TreeMergeStage::new("t", &cfg, 1, 0, reducer, &hooks);
+                if let Some(s) = seed {
+                    stage = stage.with_shape_seed(s);
+                }
+                let plan = stage.plan().unwrap();
+                // leaf_target = (2*2*2).max(4) = 8 leaves max.
+                let leaves = leaf_count(&plan, 0);
+                assert!(leaves <= 8, "n={n}: {leaves} leaves");
+                assert!(leaves >= 1);
+                // Every dep is either upstream or a backward self-ref.
+                for (u, spec) in plan.units.iter().enumerate() {
+                    for d in &spec.deps {
+                        if d.stage == 1 {
+                            assert!(d.unit < u, "forward self-dep {} -> {u}", d.unit);
+                        } else {
+                            assert_eq!(d.stage, 0);
+                            assert!(d.unit < n);
+                        }
+                    }
+                    assert!(!spec.deps.is_empty());
+                }
+                // Exactly one root: a unit nothing else depends on.
+                let mut depended: Vec<bool> = vec![false; plan.units.len()];
+                for spec in &plan.units {
+                    for d in &spec.deps {
+                        if d.stage == 1 {
+                            depended[d.unit] = true;
+                        }
+                    }
+                }
+                let roots = depended.iter().filter(|&&d| !d).count();
+                assert_eq!(roots, 1, "n={n} seed={seed:?}");
+                assert!(!depended[plan.units.len() - 1], "root must be last");
+            }
+        }
+    }
+
+    #[test]
+    fn same_seed_same_shape_and_any_shape_folds_identically() {
+        let hooks = JobHooks::default();
+        let cfg = Config::default();
+        for seed in [None, Some(1u64), Some(2), Some(999)] {
+            let reducer = RangeReducer { n: 37, sink: Mutex::new(None) };
+            let mut stage = TreeMergeStage::new("t", &cfg, 1, 0, reducer, &hooks);
+            if let Some(s) = seed {
+                stage = stage.with_shape_seed(s);
+            }
+            let plan = stage.plan().unwrap();
+            // Drive the stage by hand in unit order (deps are backward,
+            // so ascending order satisfies them).
+            let handle = TaskHandle::test_handle();
+            for u in 0..plan.units.len() {
+                let out = stage.run_unit(u, &handle, NodeId(0)).unwrap().unwrap();
+                stage.merge(u, out.payload).unwrap();
+            }
+            stage.finalize().unwrap();
+            let folded = stage.reducer().sink.lock().unwrap().clone().unwrap();
+            assert_eq!(folded, (0..37).collect::<Vec<_>>(), "seed={seed:?}");
+        }
+    }
+}

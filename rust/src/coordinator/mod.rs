@@ -14,9 +14,13 @@
 //!   over one worker-slot pool, pipelined (unit-level input
 //!   satisfaction) or barriered (`--barrier`, the old bulk-synchronous
 //!   chaining), with identical bits either way.
-//! * [`stages`] — the four job shapes as `DagStage` definitions:
-//!   map-shaped extraction, reduce-shaped pair registration, the global
-//!   alignment solve, canvas-tile compositing and band-tile labeling.
+//! * [`stages`] — the job shapes as `DagStage` definitions: bundle
+//!   ingest, map-shaped extraction, reduce-shaped pair registration,
+//!   the component-sharded alignment solve, canvas-tile compositing and
+//!   band-tile labeling.
+//! * [`merge`] — tree-shaped distributed reduction ([`TreeMergeStage`]):
+//!   the census fold, pair-result collect and label union-find run as
+//!   log-depth trees of DAG units instead of serial coordinator loops.
 //! * [`driver`] — executors ([`TileExecutor`]), failure hooks and the
 //!   four single-stage job entry points kept for API stability.
 //! * [`shuffle`] — the reduce side: census merging plus the
@@ -38,6 +42,7 @@ pub mod backpressure;
 pub mod dag;
 pub mod driver;
 pub mod job;
+pub mod merge;
 pub mod scheduler;
 pub mod shuffle;
 pub mod stages;
@@ -50,9 +55,12 @@ pub use driver::{
     run_fused_job, run_job, run_mosaic_job, run_registration_job, run_vector_job, TileExecutor,
 };
 pub use job::{
-    pair_seed, CanvasTile, FusedJobSpec, ImageCensus, JobReport, JobSpec, LabelTile, MapOutput,
-    MosaicReport, MosaicSpec, PairResult, PairTask, RegistrationReport, RegistrationSpec,
-    VectorReport, VectorSpec,
+    pair_seed, CanvasTile, FusedJobSpec, ImageCensus, IngestTask, JobReport, JobSpec, LabelTile,
+    MapOutput, MosaicReport, MosaicSpec, PairResult, PairTask, RegistrationReport,
+    RegistrationSpec, VectorReport, VectorSpec,
+};
+pub use merge::{
+    CensusTreeReducer, LabelTreeReducer, PairTreeReducer, TreeMergeStage, TreeReducer,
 };
 pub use scheduler::{Clock, Scheduler, TaskDescriptor, TaskHandle, TaskState, WorkItem};
 pub use shuffle::{
@@ -60,6 +68,6 @@ pub use shuffle::{
     enumerate_pairs, merge_image_outputs,
 };
 pub use stages::{
-    AlignSource, AlignStage, CompositeStage, ExtractStage, MaskSource, PairSource, PairStage,
-    LabelStage,
+    AlignSource, AlignStage, CompositeStage, ExtractStage, IngestStage, LabelStage, MaskSource,
+    PairResultsSource, PairSource, PairStage, SceneSource,
 };

@@ -96,6 +96,20 @@ pub struct TaskHandle {
 }
 
 impl TaskHandle {
+    /// A detached handle for driving stage bodies directly in unit
+    /// tests: attempt 0, never cancelled, progress discarded.
+    #[cfg(test)]
+    pub(crate) fn test_handle() -> TaskHandle {
+        TaskHandle {
+            task_id: 0,
+            attempt: 0,
+            speculative: false,
+            launch_seq: 0,
+            cancel: Arc::new(AtomicBool::new(false)),
+            progress_milli: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
     pub fn cancelled(&self) -> bool {
         self.cancel.load(Ordering::Relaxed)
     }

@@ -1,26 +1,38 @@
-//! The four job shapes as [`DagStage`] definitions.
+//! The job shapes as [`DagStage`] definitions.
 //!
 //! Everything that used to be a bespoke driver loop is now per-stage
 //! glue over the generic [`crate::coordinator::dag`] runtime:
 //!
+//! * [`IngestStage`] — bundle decode as a first-class stage (one unit
+//!   per record).  Decoded scenes flow through the existing
+//!   [`super::backpressure::BoundedQueue`] into per-unit slots, so
+//!   decode overlaps extraction instead of running serially before the
+//!   DAG and being mis-billed to the extract span.
 //! * [`ExtractStage`] — map-shaped fused extraction (one unit per HIB
 //!   split).  With [`ExtractStage::publish_features`] enabled, each map
 //!   unit also writes its images' keypoints+descriptors into CRC-guarded
 //!   DFS feature files the moment the unit completes — the unit-level
-//!   hand-off a downstream [`PairStage`] pipelines against.
+//!   hand-off a downstream [`PairStage`] pipelines against.  With
+//!   [`ExtractStage::defer_merge`], the census fold moves off the
+//!   coordinator onto a downstream tree-merge stage
+//!   ([`super::merge::TreeMergeStage`]).
 //! * [`PairStage`] — reduce-shaped scene-pair registration.  Each pair
 //!   unit declares the extract units owning its two scenes as inputs, so
 //!   a pair matches as soon as *its* feature files exist, not when the
 //!   whole extraction stage barriers.
-//! * [`AlignStage`] — the global least-squares solve as a single reduce
-//!   unit gated on the full pair set (alignment is inherently global:
-//!   releasing it earlier would change results).
+//! * [`AlignStage`] — the least-squares solve, sharded one unit per
+//!   connected component of the measurement graph (components are
+//!   independent systems; [`crate::mosaic::AlignProblem`] makes the
+//!   shards bit-equal to the serial solve by construction).
 //! * [`CompositeStage`] — canvas-tile compositing; plans once the
-//!   alignment exists, then all tiles run in parallel.
+//!   alignment exists, then all tiles run in parallel.  Scenes come
+//!   either from the caller or from an upstream [`IngestStage`].
 //! * [`LabelStage`] — band-tile mask labeling.  Over a mosaic, each
 //!   band unit declares the canvas tiles covering its rows as inputs, so
-//!   labeling starts while other canvas tiles are still compositing;
-//!   the reduce-side union-find merge runs at finalize.
+//!   labeling starts while other canvas tiles are still compositing.
+//!   The union-find merge runs at finalize, or — with
+//!   [`LabelStage::defer_merge`] — as a distributed tree of pairwise
+//!   band merges.
 //!
 //! Determinism: every unit body here is byte-for-byte the computation
 //! the old drivers ran, a pure function of the stage spec and its
@@ -47,11 +59,12 @@ use crate::mosaic::{Canvas, GlobalAlignment, OverlapStat};
 use crate::util::{DifetError, Result};
 use crate::vector::{Labels, Mask, MergeStats, ObjectStats};
 
+use super::backpressure::BoundedQueue;
 use super::dag::{DagStage, Gate, StagePlan, StageReport, UnitOutput, UnitRef, UnitSpec};
 use super::driver::{JobHooks, TileExecutor};
 use super::job::{
-    mapper_retention, pair_seed, CanvasTile, FusedJobSpec, ImageCensus, JobReport, LabelTile,
-    MapOutput, MosaicReport, MosaicSpec, PairResult, PairTask, RegistrationReport,
+    mapper_retention, pair_seed, CanvasTile, FusedJobSpec, ImageCensus, IngestTask, JobReport,
+    LabelTile, MapOutput, MosaicReport, MosaicSpec, PairResult, PairTask, RegistrationReport,
     RegistrationSpec, VectorReport, VectorSpec,
 };
 use super::scheduler::{TaskDescriptor, TaskHandle};
@@ -63,7 +76,7 @@ pub(crate) fn feature_path(dir: &str, algorithm: &str, id: u64) -> String {
 }
 
 /// Nodes holding replicas of any of `paths`, deduplicated, best first.
-fn preferred_for_paths(dfs: &Dfs, paths: &[String]) -> Vec<NodeId> {
+pub(crate) fn preferred_for_paths(dfs: &Dfs, paths: &[String]) -> Vec<NodeId> {
     let mut preferred = Vec::new();
     for path in paths {
         if let Ok(meta) = dfs.namenode().file_meta(path) {
@@ -81,7 +94,12 @@ fn preferred_for_paths(dfs: &Dfs, paths: &[String]) -> Vec<NodeId> {
 
 /// Failure injection shared by every stage body (the paper's "crashed
 /// JVM": an attempt dies before doing any work).
-fn injected_failure(hooks: &JobHooks, what: &str, unit: usize, handle: &TaskHandle) -> Result<()> {
+pub(crate) fn injected_failure(
+    hooks: &JobHooks,
+    what: &str,
+    unit: usize,
+    handle: &TaskHandle,
+) -> Result<()> {
     if let Some(f) = &hooks.fail {
         if f(unit, handle.attempt) {
             return Err(DifetError::Job(format!(
@@ -91,6 +109,211 @@ fn injected_failure(hooks: &JobHooks, what: &str, unit: usize, handle: &TaskHand
         }
     }
     Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Ingest: bundle decode as a first-class stage.
+// ---------------------------------------------------------------------------
+
+/// Bundle decode as a DAG stage: one unit per record, each range-reading
+/// and decoding its record wherever the scheduler placed it.  Decoded
+/// scenes ride the existing [`BoundedQueue`] (capacity-bounded, so a
+/// burst of decoders backpressures instead of piling images up) into
+/// per-unit slots; slot writes are first-wins idempotent, so retries and
+/// speculative twins — which decode identical bytes — are harmless.
+///
+/// This replaces the pre-DAG serial decode loop the stitch driver ran,
+/// which both delayed every map unit behind the full-bundle decode and
+/// mis-billed decode time into the extract stage's bench span.
+pub struct IngestStage<'a> {
+    dfs: &'a Dfs,
+    hooks: &'a JobHooks,
+    cost: CostModel,
+    bundle_path: String,
+    records_counter: Arc<Counter>,
+    decode_hist: Arc<Histogram>,
+    planned: Mutex<Option<Arc<Vec<IngestTask>>>>,
+    /// Decoded records in flight between a worker slot and the per-unit
+    /// slots below.  Every pusher drains the queue right after its push,
+    /// so a blocked pusher always has a draining predecessor — the queue
+    /// cannot wedge.
+    queue: BoundedQueue<(usize, u64, Rgba8Image)>,
+    slots: Mutex<Vec<Option<(u64, Rgba8Image)>>>,
+    scenes: Mutex<Option<Arc<Vec<(u64, Rgba8Image)>>>>,
+}
+
+impl<'a> IngestStage<'a> {
+    pub fn new(
+        cfg: &'a Config,
+        dfs: &'a Dfs,
+        bundle_path: &str,
+        registry: &Registry,
+        hooks: &'a JobHooks,
+    ) -> Self {
+        IngestStage {
+            dfs,
+            hooks,
+            cost: CostModel::new(&cfg.cluster),
+            bundle_path: bundle_path.to_string(),
+            records_counter: registry.counter("records_ingested"),
+            decode_hist: registry.histogram("ingest_decode_latency"),
+            planned: Mutex::new(None),
+            queue: BoundedQueue::new(4),
+            slots: Mutex::new(Vec::new()),
+            scenes: Mutex::new(None),
+        }
+    }
+
+    fn plan_info(&self) -> Arc<Vec<IngestTask>> {
+        self.planned
+            .lock()
+            .unwrap()
+            .clone()
+            .expect("ingest stage used before plan")
+    }
+
+    /// Move everything currently in the queue into the per-unit slots.
+    /// The slots lock is held across the whole pop+insert loop, so after
+    /// any drain returns, every item pushed before it is visible in the
+    /// slots — `merge()` relies on this to observe its own unit's item.
+    fn drain(&self) {
+        let mut slots = self.slots.lock().unwrap();
+        while let Some((unit, id, image)) = self.queue.try_pop() {
+            if slots[unit].is_none() {
+                slots[unit] = Some((id, image));
+            }
+        }
+    }
+
+    /// The decoded scene set, record order (valid after the stage
+    /// completed).
+    pub fn scenes(&self) -> Result<Arc<Vec<(u64, Rgba8Image)>>> {
+        self.scenes
+            .lock()
+            .unwrap()
+            .clone()
+            .ok_or_else(|| DifetError::Job("ingest stage read before completion".into()))
+    }
+}
+
+impl DagStage for IngestStage<'_> {
+    fn name(&self) -> &'static str {
+        "ingest"
+    }
+
+    /// Plan: read the bundle index (jobtracker-side, like the extract
+    /// plan), one unit per record with locality toward its byte range.
+    fn plan(&self) -> Result<StagePlan> {
+        let (bundle_bytes, _) = self.dfs.read_file(&self.bundle_path, NodeId(0))?;
+        let reader = BundleReader::open(&bundle_bytes)?;
+        let metas: Vec<RecordMeta> = reader.metas().to_vec();
+        let total = bundle_bytes.len() as u64;
+        let mut tasks = Vec::with_capacity(metas.len());
+        for (i, meta) in metas.iter().enumerate() {
+            let byte_start = meta.offset;
+            let byte_end = metas.get(i + 1).map(|m| m.offset).unwrap_or(total);
+            let preferred = self
+                .dfs
+                .locate_range(&self.bundle_path, byte_start, byte_end)
+                .unwrap_or_default();
+            tasks.push(IngestTask {
+                record: i,
+                image_id: meta.image_id,
+                byte_start,
+                byte_end,
+                preferred_nodes: preferred,
+            });
+        }
+        let units = tasks
+            .iter()
+            .map(|t| UnitSpec {
+                deps: Vec::new(),
+                preferred_nodes: t.preferred_nodes.clone(),
+            })
+            .collect();
+        *self.slots.lock().unwrap() = vec![None; tasks.len()];
+        *self.planned.lock().unwrap() = Some(Arc::new(tasks));
+        Ok(StagePlan { units, plan_io_secs: 0.0 })
+    }
+
+    /// The unit body: range-read the record, decode it, hand it off
+    /// through the bounded queue.
+    fn run_unit(
+        &self,
+        unit: usize,
+        handle: &TaskHandle,
+        node: NodeId,
+    ) -> Result<Option<UnitOutput>> {
+        injected_failure(self.hooks, "ingest", unit, handle)?;
+        let tasks = self.plan_info();
+        let task = &tasks[unit];
+
+        let (bytes, stats) =
+            self.dfs
+                .read_range(&self.bundle_path, task.byte_start, task.byte_end, node)?;
+        let io_secs = self.cost.split_input(stats.local_bytes, stats.remote_bytes);
+        if handle.cancelled() {
+            return Ok(None);
+        }
+        let t0 = std::time::Instant::now();
+        let (image_id, image, _) = hib::decode_record(&bytes)?;
+        let compute_ns = t0.elapsed().as_nanos() as u64;
+        if image_id != task.image_id {
+            return Err(DifetError::Job(format!(
+                "ingest record routing mixup: wanted {}, got {image_id}",
+                task.image_id
+            )));
+        }
+        self.decode_hist.observe(compute_ns as f64 * 1e-9);
+        if handle.cancelled() {
+            return Ok(None);
+        }
+        self.queue
+            .push((unit, image_id, image))
+            .map_err(|_| DifetError::Job("ingest queue closed mid-run".into()))?;
+        self.drain();
+
+        Ok(Some(UnitOutput {
+            payload: Box::new(()),
+            compute_ns,
+            io_secs,
+        }))
+    }
+
+    fn merge(&self, unit: usize, _payload: Box<dyn Any + Send>) -> Result<()> {
+        // The winning attempt pushed before returning, and drain() holds
+        // the slots lock across pop+insert — so after this drain, the
+        // unit's scene is guaranteed present.
+        self.drain();
+        if self.slots.lock().unwrap()[unit].is_none() {
+            return Err(DifetError::Job(format!(
+                "ingest record {unit} missing after merge"
+            )));
+        }
+        self.records_counter.inc();
+        Ok(())
+    }
+
+    fn finalize(&self) -> Result<()> {
+        self.drain();
+        let mut slots = self.slots.lock().unwrap();
+        let mut scenes = Vec::with_capacity(slots.len());
+        for (unit, slot) in slots.iter_mut().enumerate() {
+            // take(): the slots are never read again (a late losing twin
+            // re-filling one is harmless), and this avoids doubling the
+            // decoded corpus in memory.
+            match slot.take() {
+                Some(scene) => scenes.push(scene),
+                None => {
+                    return Err(DifetError::Job(format!(
+                        "ingest record {unit} lost its scene"
+                    )))
+                }
+            }
+        }
+        *self.scenes.lock().unwrap() = Some(Arc::new(scenes));
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -116,10 +339,17 @@ pub struct ExtractStage<'a> {
     /// When set: each unit writes its images' censuses of algorithm
     /// `spec.algorithms[index]` into `dir` as CRC-guarded feature files.
     publish: Option<(String, usize)>,
+    /// When set, `merge()` parks each unit's censuses in a per-unit slot
+    /// instead of folding them into the coordinator map — a downstream
+    /// tree-merge stage performs the fold and hands the result back via
+    /// [`ExtractStage::install_censuses`].
+    defer: bool,
     tiles_counter: Arc<Counter>,
     tile_hist: Arc<Histogram>,
     tiles: AtomicU64,
     planned: Mutex<Option<Arc<ExtractPlanInfo>>>,
+    /// Per-unit deferred payloads (defer mode; indexed by unit).
+    unit_censuses: Mutex<Vec<Option<Arc<Vec<Vec<ImageCensus>>>>>>,
     /// (image_id, algorithm index) → merged census.
     censuses: Mutex<BTreeMap<(u64, usize), ImageCensus>>,
 }
@@ -146,10 +376,12 @@ impl<'a> ExtractStage<'a> {
             hooks,
             cost: CostModel::new(&cfg.cluster),
             publish: None,
+            defer: false,
             tiles_counter: registry.counter("tiles_processed"),
             tile_hist: registry.histogram("tile_latency"),
             tiles: AtomicU64::new(0),
             planned: Mutex::new(None),
+            unit_censuses: Mutex::new(Vec::new()),
             censuses: Mutex::new(BTreeMap::new()),
         })
     }
@@ -158,6 +390,15 @@ impl<'a> ExtractStage<'a> {
     /// into `feature_dir` from each map unit (pair-stage hand-off).
     pub fn publish_features(mut self, feature_dir: &str, alg_index: usize) -> Self {
         self.publish = Some((feature_dir.to_string(), alg_index));
+        self
+    }
+
+    /// Defer the census fold to a downstream tree-merge stage: `merge()`
+    /// becomes an O(1) slot store and `finalize()` only checks coverage.
+    /// The merge stage installs the fold via
+    /// [`ExtractStage::install_censuses`] before reports are read.
+    pub fn defer_merge(mut self) -> Self {
+        self.defer = true;
         self
     }
 
@@ -185,6 +426,33 @@ impl<'a> ExtractStage<'a> {
     /// nodes are also the best locality guess for downstream pair units.
     pub fn unit_preferred(&self, unit: usize) -> Vec<NodeId> {
         self.plan_info().tasks[unit].preferred_nodes.clone()
+    }
+
+    /// Planned unit count (valid after plan).
+    pub fn unit_count(&self) -> usize {
+        self.plan_info().tasks.len()
+    }
+
+    /// One unit's deferred censuses (defer mode; valid once the unit
+    /// merged — i.e. from a downstream unit that declared it as a dep).
+    pub fn unit_censuses(&self, unit: usize) -> Result<Arc<Vec<Vec<ImageCensus>>>> {
+        self.unit_censuses.lock().unwrap()[unit]
+            .clone()
+            .ok_or_else(|| DifetError::Job(format!("extract unit {unit} has not merged yet")))
+    }
+
+    /// Install the tree-merged census fold (defer mode).  Validates the
+    /// same full-coverage invariant the serial finalize enforced.
+    pub fn install_censuses(&self, merged: BTreeMap<(u64, usize), ImageCensus>) -> Result<()> {
+        let expect = self.plan_info().metas.len() * self.spec.algorithms.len();
+        if merged.len() != expect {
+            return Err(DifetError::Job(format!(
+                "census merge produced {} censuses, expected {expect}",
+                merged.len()
+            )));
+        }
+        *self.censuses.lock().unwrap() = merged;
+        Ok(())
     }
 
     /// Merged per-image censuses of one algorithm, image id ascending.
@@ -385,6 +653,7 @@ impl DagStage for ExtractStage<'_> {
                 preferred_nodes: t.preferred_nodes.clone(),
             })
             .collect();
+        *self.unit_censuses.lock().unwrap() = vec![None; tasks.len()];
         *self.planned.lock().unwrap() = Some(Arc::new(ExtractPlanInfo {
             tasks,
             metas,
@@ -491,10 +760,18 @@ impl DagStage for ExtractStage<'_> {
         }))
     }
 
-    fn merge(&self, _unit: usize, payload: Box<dyn Any + Send>) -> Result<()> {
+    fn merge(&self, unit: usize, payload: Box<dyn Any + Send>) -> Result<()> {
+        // Downcast BEFORE taking any stage lock: the coordinator calls
+        // merge() between slot completions, so work done under the lock
+        // serializes them.
         let censuses = payload
             .downcast::<Vec<Vec<ImageCensus>>>()
             .map_err(|_| DifetError::Job("extract stage: payload type mismatch".into()))?;
+        if self.defer {
+            // O(1): park the payload for the downstream tree merge.
+            self.unit_censuses.lock().unwrap()[unit] = Some(Arc::new(*censuses));
+            return Ok(());
+        }
         let mut sink = self.censuses.lock().unwrap();
         for (alg_index, list) in censuses.into_iter().enumerate() {
             for census in list {
@@ -505,6 +782,13 @@ impl DagStage for ExtractStage<'_> {
     }
 
     fn finalize(&self) -> Result<()> {
+        if self.defer {
+            // The fold happens downstream; only check unit coverage here.
+            if self.unit_censuses.lock().unwrap().iter().any(|s| s.is_none()) {
+                return Err(DifetError::Job("extract unit lost its censuses".into()));
+            }
+            return Ok(());
+        }
         let n_images = self.plan_info().metas.len();
         let merged = self.censuses.lock().unwrap().len();
         if merged != n_images * self.spec.algorithms.len() {
@@ -598,6 +882,24 @@ impl<'a> PairStage<'a> {
             .into_iter()
             .collect::<Option<Vec<_>>>()
             .ok_or_else(|| DifetError::Job("registration pair lost its result".into()))
+    }
+
+    /// Planned unit count (valid after plan).
+    pub fn unit_count(&self) -> usize {
+        self.plan_info().len()
+    }
+
+    /// One unit's result (valid once the unit merged — i.e. from a
+    /// downstream unit that declared it as a dep).
+    pub fn result_of(&self, unit: usize) -> Result<PairResult> {
+        self.results.lock().unwrap()[unit]
+            .clone()
+            .ok_or_else(|| DifetError::Job(format!("pair unit {unit} has not merged yet")))
+    }
+
+    /// A unit's preferred nodes (locality hint for downstream merges).
+    pub fn unit_preferred(&self, unit: usize) -> Vec<NodeId> {
+        self.plan_info()[unit].preferred_nodes.clone()
     }
 
     /// Assemble the [`RegistrationReport`] from this stage's slice of a
@@ -827,29 +1129,67 @@ impl DagStage for PairStage<'_> {
 }
 
 // ---------------------------------------------------------------------------
-// Align: the global least-squares solve as one reduce unit.
+// Align: the least-squares solve, sharded per connected component.
 // ---------------------------------------------------------------------------
 
-/// Global alignment over a completed pair stage.  A single unit, gated
-/// on the FULL pair set: solved positions are a global function of every
-/// measurement, so releasing earlier would change bits.
+/// Where an [`AlignStage`] gets its registered pair results from.
+pub enum PairResultsSource<'a> {
+    /// Directly from a completed [`PairStage`] at DAG index `stage_index`.
+    Stage {
+        stage: &'a PairStage<'a>,
+        stage_index: usize,
+    },
+    /// From a tree-merged registration result set
+    /// ([`super::merge::TreeMergeStage`] over a [`PairTreeReducer`]) at
+    /// DAG index `stage_index`; `pairs` still supplies the scene-id set.
+    Merged {
+        pairs: &'a PairStage<'a>,
+        merge: &'a super::merge::TreeMergeStage<'a, super::merge::PairTreeReducer<'a>>,
+        stage_index: usize,
+    },
+}
+
+/// Alignment over a completed pair set, sharded one unit per connected
+/// component of the measurement graph.  Components are independent
+/// linear systems ([`crate::mosaic::AlignProblem`]), so the shards can
+/// run on any node in any order and assemble to exactly the serial
+/// [`crate::mosaic::solve_alignment`] result — the gate still waits for
+/// the FULL pair set, because the component structure itself is a global
+/// function of every measurement.
 pub struct AlignStage<'a> {
-    pairs: &'a PairStage<'a>,
-    pair_stage_index: usize,
+    source: PairResultsSource<'a>,
     hooks: &'a JobHooks,
     options: crate::mosaic::AlignOptions,
+    problem: Mutex<Option<Arc<crate::mosaic::AlignProblem>>>,
+    solutions: Mutex<Vec<Option<crate::mosaic::ComponentSolution>>>,
     solved: Mutex<Option<GlobalAlignment>>,
 }
 
 impl<'a> AlignStage<'a> {
     pub fn new(pairs: &'a PairStage<'a>, pair_stage_index: usize, hooks: &'a JobHooks) -> Self {
+        Self::from_source(
+            PairResultsSource::Stage { stage: pairs, stage_index: pair_stage_index },
+            hooks,
+        )
+    }
+
+    pub fn from_source(source: PairResultsSource<'a>, hooks: &'a JobHooks) -> Self {
         AlignStage {
-            pairs,
-            pair_stage_index,
+            source,
             hooks,
             options: crate::mosaic::AlignOptions::default(),
+            problem: Mutex::new(None),
+            solutions: Mutex::new(Vec::new()),
             solved: Mutex::new(None),
         }
+    }
+
+    fn problem(&self) -> Arc<crate::mosaic::AlignProblem> {
+        self.problem
+            .lock()
+            .unwrap()
+            .clone()
+            .expect("align stage used before plan")
     }
 
     /// The solved alignment (valid after the stage completed).
@@ -868,14 +1208,38 @@ impl DagStage for AlignStage<'_> {
     }
 
     fn gates(&self) -> Vec<Gate> {
-        vec![Gate::Completed(self.pair_stage_index)]
+        match &self.source {
+            PairResultsSource::Stage { stage_index, .. }
+            | PairResultsSource::Merged { stage_index, .. } => {
+                vec![Gate::Completed(*stage_index)]
+            }
+        }
     }
 
+    /// Plan: build the measurement graph and its connected components
+    /// (jobtracker-side, cheap), one unit per component.
     fn plan(&self) -> Result<StagePlan> {
-        Ok(StagePlan {
-            units: vec![UnitSpec::default()],
-            plan_io_secs: 0.0,
-        })
+        let results = match &self.source {
+            PairResultsSource::Stage { stage, .. } => stage.results()?,
+            PairResultsSource::Merged { merge, .. } => merge.reducer().results()?,
+        };
+        let measurements = crate::mosaic::measurements_from_pairs(&results);
+        if measurements.is_empty() {
+            return Err(DifetError::Job(
+                "stitch: no scene pair registered; nothing to align".into(),
+            ));
+        }
+        let scene_ids = match &self.source {
+            PairResultsSource::Stage { stage, .. } => stage.scene_ids(),
+            PairResultsSource::Merged { pairs, .. } => pairs.scene_ids(),
+        };
+        let problem = crate::mosaic::prepare_alignment(&scene_ids, &measurements, self.options)?;
+        let units = (0..problem.num_components())
+            .map(|_| UnitSpec::default())
+            .collect();
+        *self.solutions.lock().unwrap() = vec![None; problem.num_components()];
+        *self.problem.lock().unwrap() = Some(Arc::new(problem));
+        Ok(StagePlan { units, plan_io_secs: 0.0 })
     }
 
     fn run_unit(
@@ -885,28 +1249,39 @@ impl DagStage for AlignStage<'_> {
         _node: NodeId,
     ) -> Result<Option<UnitOutput>> {
         injected_failure(self.hooks, "align", unit, handle)?;
+        let problem = self.problem();
         let t0 = std::time::Instant::now();
-        let results = self.pairs.results()?;
-        let measurements = crate::mosaic::measurements_from_pairs(&results);
-        if measurements.is_empty() {
-            return Err(DifetError::Job(
-                "stitch: no scene pair registered; nothing to align".into(),
-            ));
+        let solution = problem.solve_component(unit);
+        let compute_ns = t0.elapsed().as_nanos() as u64;
+        if handle.cancelled() {
+            return Ok(None);
         }
-        let scene_ids = self.pairs.scene_ids();
-        let alignment = crate::mosaic::solve_alignment(&scene_ids, &measurements, self.options)?;
         Ok(Some(UnitOutput {
-            payload: Box::new(alignment),
-            compute_ns: t0.elapsed().as_nanos() as u64,
+            payload: Box::new(solution),
+            compute_ns,
             io_secs: 0.0,
         }))
     }
 
-    fn merge(&self, _unit: usize, payload: Box<dyn Any + Send>) -> Result<()> {
-        let alignment = payload
-            .downcast::<GlobalAlignment>()
+    fn merge(&self, unit: usize, payload: Box<dyn Any + Send>) -> Result<()> {
+        let solution = payload
+            .downcast::<crate::mosaic::ComponentSolution>()
             .map_err(|_| DifetError::Job("align stage: payload type mismatch".into()))?;
-        *self.solved.lock().unwrap() = Some(*alignment);
+        self.solutions.lock().unwrap()[unit] = Some(*solution);
+        Ok(())
+    }
+
+    fn finalize(&self) -> Result<()> {
+        let solutions: Vec<crate::mosaic::ComponentSolution> = self
+            .solutions
+            .lock()
+            .unwrap()
+            .clone()
+            .into_iter()
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(|| DifetError::Job("alignment component lost its solution".into()))?;
+        let alignment = self.problem().assemble(&solutions)?;
+        *self.solved.lock().unwrap() = Some(alignment);
         Ok(())
     }
 }
@@ -926,10 +1301,24 @@ pub enum AlignSource<'a> {
     },
 }
 
+/// Where a [`CompositeStage`] gets its decoded scenes from.
+pub enum SceneSource<'a> {
+    /// Scenes decoded up front by the caller (the standalone mosaic job).
+    Given(&'a [(u64, Rgba8Image)]),
+    /// An upstream [`IngestStage`] at DAG index `stage_index`; the plan
+    /// gate waits for it, then borrows its decoded scenes without a copy.
+    Ingested {
+        stage: &'a IngestStage<'a>,
+        stage_index: usize,
+    },
+}
+
 struct CompositePlanInfo {
     canvas: Canvas,
     alignment: GlobalAlignment,
     tasks: Vec<CanvasTile>,
+    /// The scene set the plan was built over (given or ingested).
+    scenes: Arc<Vec<(u64, Rgba8Image)>>,
 }
 
 /// Canvas-tile compositing: scenes are shuffled into CRC-guarded DFS
@@ -942,7 +1331,7 @@ pub struct CompositeStage<'a> {
     dfs: &'a Dfs,
     hooks: &'a JobHooks,
     cost: CostModel,
-    scenes: &'a [(u64, Rgba8Image)],
+    scenes: SceneSource<'a>,
     spec: MosaicSpec,
     align: AlignSource<'a>,
     tiles_counter: Arc<Counter>,
@@ -958,7 +1347,7 @@ impl<'a> CompositeStage<'a> {
     pub fn new(
         cfg: &'a Config,
         dfs: &'a Dfs,
-        scenes: &'a [(u64, Rgba8Image)],
+        scenes: SceneSource<'a>,
         align: AlignSource<'a>,
         spec: MosaicSpec,
         registry: &Registry,
@@ -1042,11 +1431,11 @@ impl<'a> CompositeStage<'a> {
         let overlaps = self.overlaps.lock().unwrap().clone();
         let mut counters = stage.scheduler_counters();
         counters.insert("tiles".into(), info.tasks.len() as u64);
-        counters.insert("scenes".into(), self.scenes.len() as u64);
+        counters.insert("scenes".into(), info.scenes.len() as u64);
         counters.insert("overlaps".into(), overlaps.len() as u64);
         MosaicReport {
             nodes: self.cfg.cluster.nodes,
-            scene_count: self.scenes.len(),
+            scene_count: info.scenes.len(),
             canvas_width: info.canvas.width,
             canvas_height: info.canvas.height,
             tile_count: info.tasks.len(),
@@ -1069,22 +1458,29 @@ impl DagStage for CompositeStage<'_> {
     }
 
     fn gates(&self) -> Vec<Gate> {
-        match &self.align {
-            AlignSource::Given(_) => Vec::new(),
-            AlignSource::Solved { stage_index, .. } => vec![Gate::Completed(*stage_index)],
+        let mut gates = Vec::new();
+        if let AlignSource::Solved { stage_index, .. } = &self.align {
+            gates.push(Gate::Completed(*stage_index));
         }
+        if let SceneSource::Ingested { stage_index, .. } = &self.scenes {
+            gates.push(Gate::Completed(*stage_index));
+        }
+        gates
     }
 
     /// Plan: solved positions → integer canvas layout, scene shuffle
     /// into DFS (round-robin, like reducer partitions), one unit per
     /// canvas tile with locality toward the overlapping scene files.
     fn plan(&self) -> Result<StagePlan> {
+        let scenes: Arc<Vec<(u64, Rgba8Image)>> = match &self.scenes {
+            SceneSource::Given(s) => Arc::new(s.to_vec()),
+            SceneSource::Ingested { stage, .. } => stage.scenes()?,
+        };
         let alignment = match &self.align {
             AlignSource::Given(a) => (*a).clone(),
             AlignSource::Solved { stage, .. } => stage.alignment()?,
         };
-        let dims: Vec<(u64, usize, usize)> = self
-            .scenes
+        let dims: Vec<(u64, usize, usize)> = scenes
             .iter()
             .map(|(id, img)| (*id, img.width, img.height))
             .collect();
@@ -1098,7 +1494,7 @@ impl DagStage for CompositeStage<'_> {
         };
         let scene_path = |id: u64| format!("{}/{id}", self.spec.scene_dir);
         let mut write_secs = vec![0.0f64; self.cfg.cluster.nodes];
-        for (id, img) in self.scenes {
+        for (id, img) in scenes.iter() {
             let bytes = shuffle::encode_scene(
                 *id,
                 img,
@@ -1132,7 +1528,7 @@ impl DagStage for CompositeStage<'_> {
             .collect();
         *self.mosaic.lock().unwrap() = Some(Rgba8Image::new(canvas.width, canvas.height));
         *self.planned.lock().unwrap() =
-            Some(Arc::new(CompositePlanInfo { canvas, alignment, tasks }));
+            Some(Arc::new(CompositePlanInfo { canvas, alignment, tasks, scenes }));
         Ok(StagePlan { units, plan_io_secs })
     }
 
@@ -1213,7 +1609,7 @@ impl DagStage for CompositeStage<'_> {
     fn finalize(&self) -> Result<()> {
         let info = self.plan_info();
         let by_id: BTreeMap<u64, &Rgba8Image> =
-            self.scenes.iter().map(|(id, img)| (*id, img)).collect();
+            info.scenes.iter().map(|(id, img)| (*id, img)).collect();
         let overlaps = crate::mosaic::overlap_stats(&info.canvas, &by_id)?;
         for o in &overlaps {
             self.rms_hist.observe(o.rms);
@@ -1261,6 +1657,10 @@ pub struct LabelStage<'a> {
     cost: CostModel,
     spec: VectorSpec,
     source: MaskSource<'a>,
+    /// When set, `finalize()` skips the serial coordinator read+merge
+    /// loop — a downstream tree of pairwise band merges performs it and
+    /// hands the result back via [`LabelStage::install_merged`].
+    defer: bool,
     tiles_counter: Arc<Counter>,
     tile_hist: Arc<Histogram>,
     residual_gauge: Arc<Gauge>,
@@ -1286,6 +1686,7 @@ impl<'a> LabelStage<'a> {
             cost: CostModel::new(&cfg.cluster),
             spec,
             source,
+            defer: false,
             tiles_counter: registry.counter("label_tiles"),
             tile_hist: registry.histogram("label_tile_latency"),
             residual_gauge: registry.gauge("vector_max_merge_residual"),
@@ -1302,6 +1703,52 @@ impl<'a> LabelStage<'a> {
             .unwrap()
             .clone()
             .expect("vector stage used before plan")
+    }
+
+    /// Defer the union-find merge to a downstream tree-merge stage:
+    /// `finalize()` only checks coverage, and the merge stage installs
+    /// its fold via [`LabelStage::install_merged`].
+    pub fn defer_merge(mut self) -> Self {
+        self.defer = true;
+        self
+    }
+
+    /// Planned unit count (valid after plan).
+    pub fn unit_count(&self) -> usize {
+        self.plan_info().tasks.len()
+    }
+
+    /// Mask geometry (valid after plan).
+    pub fn dims(&self) -> (usize, usize) {
+        let info = self.plan_info();
+        (info.width, info.height)
+    }
+
+    /// One band unit's shuffled label-file path + expected tile id.
+    pub fn unit_labels_file(&self, unit: usize) -> (String, u64) {
+        let task = &self.plan_info().tasks[unit];
+        (task.labels_path.clone(), task.tile_id as u64)
+    }
+
+    /// A unit's preferred nodes (locality hint for downstream merges).
+    pub fn unit_preferred(&self, unit: usize) -> Vec<NodeId> {
+        self.plan_info().tasks[unit].preferred_nodes.clone()
+    }
+
+    /// Install the tree-merged labeling (defer mode) and publish the
+    /// same diagnostics the serial finalize recorded.
+    pub fn install_merged(&self, merged: (Labels, Vec<ObjectStats>, MergeStats)) -> Result<()> {
+        let info = self.plan_info();
+        if (merged.0.width, merged.0.height) != (info.width, info.height) {
+            return Err(DifetError::Job(format!(
+                "label merge produced a {}×{} raster for a {}×{} mask",
+                merged.0.height, merged.0.width, info.height, info.width
+            )));
+        }
+        self.residual_gauge.set(merged.2.max_merge_residual() as f64);
+        self.objects_counter.add(merged.1.len() as u64);
+        *self.merged.lock().unwrap() = Some(merged);
+        Ok(())
     }
 
     /// The merged label raster, object table and merge diagnostics
@@ -1534,11 +1981,16 @@ impl DagStage for LabelStage<'_> {
     }
 
     /// Reduce: fetch the shuffled tile labels, merge the seams with the
-    /// union-find, publish the diagnostics gauges.
+    /// union-find, publish the diagnostics gauges.  In defer mode the
+    /// merge is a downstream stage's tree of pairwise band merges — the
+    /// historical serial loop below is the scaling collapse it replaces.
     fn finalize(&self) -> Result<()> {
         let info = self.plan_info();
         if !self.done.lock().unwrap().iter().all(|&d| d) {
             return Err(DifetError::Job("vector tile lost its result".into()));
+        }
+        if self.defer {
+            return Ok(());
         }
         let mut tiles = Vec::with_capacity(info.tasks.len());
         for task in &info.tasks {

@@ -10,8 +10,8 @@
 //! difet scalability sweep node counts (Table 1 shape) in one command
 //! difet register    extract + match overlapping acquisitions (2-stage DAG)
 //! difet stitch      register + align + composite one mosaic (4-stage DAG)
-//! difet vectorize   stitch + segment + label + trace objects (5-stage DAG)
-//! difet bench       pipelined-vs-barrier DAG sweep → BENCH_5.json
+//! difet vectorize   stitch + segment + label + trace objects (9-stage DAG)
+//! difet bench       pipelined-vs-barrier DAG sweep → BENCH_7.json
 //! difet audit       determinism audit: lint the crate sources (Layer 1)
 //! difet inspect     show artifact manifest + cluster configuration
 //! ```
@@ -49,7 +49,7 @@ fn flag_specs() -> Vec<FlagSpec> {
     vec![
         FlagSpec { name: "config", takes_value: true, help: "config file (TOML subset)" },
         FlagSpec { name: "set", takes_value: true, help: "override, e.g. --set cluster.nodes=2 (repeatable via commas)" },
-        FlagSpec { name: "nodes", takes_value: true, help: "cluster nodes (default 4; bench: comma list, default 1,2,4,8)" },
+        FlagSpec { name: "nodes", takes_value: true, help: "cluster nodes (default 4; bench: comma list, default 1,2,4,8,16)" },
         FlagSpec { name: "scenes", takes_value: true, help: "corpus size N (default 3)" },
         FlagSpec { name: "algorithms", takes_value: true, help: "comma list (default: all seven)" },
         FlagSpec { name: "scene-size", takes_value: true, help: "scene edge px (default 1792; paper 7681)" },
@@ -70,7 +70,7 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "threshold", takes_value: true, help: "vectorize: luma threshold in [0,1] (default 0.5)" },
         FlagSpec { name: "min-area", takes_value: true, help: "vectorize: min object area px (default 8)" },
         FlagSpec { name: "epsilon", takes_value: true, help: "vectorize: Douglas-Peucker tolerance px (default 1.5)" },
-        FlagSpec { name: "out", takes_value: true, help: "stitch: mosaic .hib path; vectorize: GeoJSON path; bench: JSON path (default BENCH_5.json)" },
+        FlagSpec { name: "out", takes_value: true, help: "stitch: mosaic .hib path; vectorize: GeoJSON path; bench: JSON path (default BENCH_7.json)" },
         FlagSpec { name: "bare", takes_value: false, help: "disable the I/O cost model" },
         FlagSpec { name: "verbose", takes_value: false, help: "print counters/metrics" },
         FlagSpec { name: "help", takes_value: false, help: "show this help" },
@@ -403,16 +403,16 @@ fn run(p: &ParsedArgs) -> Result<(), String> {
 }
 
 /// The DAG-runtime evaluation as one command: at each node count, run
-/// the fused extraction sweep plus the five-stage vectorize DAG in BOTH
+/// the fused extraction sweep plus the nine-stage vectorize DAG in BOTH
 /// execution modes (`--barrier` bulk-synchronous vs pipelined), verify
 /// the two modes and the sequential baselines are bit-identical, and
 /// write the totals, speedup and parallel efficiency to a JSON report
-/// (`BENCH_5.json` by default).  Speedup is relative to the smallest
+/// (`BENCH_7.json` by default).  Speedup is relative to the smallest
 /// node count in the sweep over the `extract + pipelined vectorize`
 /// total; efficiency is `speedup × baseline / nodes`.  Exits non-zero
 /// if ANY parity check fails — CI runs this as a binding gate.
 fn run_bench(p: &ParsedArgs, cfg: &Config, req: &ExtractRequest) -> Result<(), String> {
-    let nodes = p.get_counts("nodes", &[1, 2, 4, 8])?;
+    let nodes = p.get_counts("nodes", &[1, 2, 4, 8, 16])?;
 
     // The vectorize leg reuses the shared flags (--scenes/--native/
     // --max-offset/--seed/--threshold/…) with the default ORB matcher
@@ -561,14 +561,18 @@ fn run_bench(p: &ParsedArgs, cfg: &Config, req: &ExtractRequest) -> Result<(), S
     );
     root.insert("baseline_nodes".to_string(), Json::Num(baseline_nodes as f64));
     root.insert("stages".to_string(), Json::Arr(vec![
+        Json::Str("ingest".to_string()),
         Json::Str("extract".to_string()),
+        Json::Str("census-merge".to_string()),
         Json::Str("register".to_string()),
+        Json::Str("register-merge".to_string()),
         Json::Str("align".to_string()),
         Json::Str("composite".to_string()),
         Json::Str("vectorize".to_string()),
+        Json::Str("label-merge".to_string()),
     ]));
     root.insert("runs".to_string(), Json::Arr(runs));
-    let path = p.get_or("out", "BENCH_5.json");
+    let path = p.get_or("out", "BENCH_7.json");
     std::fs::write(path, format!("{}\n", Json::Obj(root))).map_err(|e| e.to_string())?;
     println!("\nwrote {path}");
     if !all_parity {

@@ -88,7 +88,8 @@ pub struct GlobalAlignment {
     /// Connected components, each sorted ascending; the first id of each
     /// is its anchor (position fixed at (0, 0)).
     pub components: Vec<Vec<u64>>,
-    /// Gauss-Seidel sweeps actually run — always ≥ 1; a forest (or any
+    /// Gauss-Seidel sweeps actually run, maximized over components (each
+    /// component iterates independently) — always ≥ 1; a forest (or any
     /// cycle-consistent graph) converges on the first sweep, which only
     /// confirms the spanning-tree initialization.
     pub iterations: usize,
@@ -142,11 +143,62 @@ impl Default for AlignOptions {
 /// Every scene in `scene_ids` gets a position: scenes without edges are
 /// singleton components anchored at (0, 0).  Measurements referencing
 /// unknown scenes or self-pairs are rejected.
+///
+/// Implemented as prepare → per-component solve → assemble, the exact
+/// decomposition the distributed align stage runs one component per work
+/// unit — the serial baseline and the sharded solve share this code, so
+/// they agree bit for bit by construction.
 pub fn solve_alignment(
     scene_ids: &[u64],
     measurements: &[PairMeasurement],
     opts: AlignOptions,
 ) -> Result<GlobalAlignment> {
+    let problem = prepare_alignment(scene_ids, measurements, opts)?;
+    let solutions: Vec<ComponentSolution> = (0..problem.num_components())
+        .map(|c| problem.solve_component(c))
+        .collect();
+    problem.assemble(&solutions)
+}
+
+/// The validated, initialized alignment system: everything up to (but not
+/// including) the Gauss-Seidel sweeps.  Components are independent linear
+/// systems, so [`AlignProblem::solve_component`] units can run on any
+/// node in any order and [`AlignProblem::assemble`] recovers the same
+/// [`GlobalAlignment`] the serial solver produces.
+#[derive(Debug, Clone)]
+pub struct AlignProblem {
+    /// Scene ids, sorted ascending (index space for every other field).
+    ids: Vec<u64>,
+    index: BTreeMap<u64, usize>,
+    /// For scene i: (neighbour j, delta with pos_i = pos_j + delta, weight),
+    /// sorted by neighbour.
+    adj: Vec<Vec<(usize, f64, f64, f64)>>,
+    /// Spanning-tree initialization (exact on cycle-consistent inputs).
+    pos0: Vec<(f64, f64)>,
+    anchor: Vec<bool>,
+    /// Connected components, each sorted ascending (scene ids).
+    components: Vec<Vec<u64>>,
+    measurements: Vec<PairMeasurement>,
+    opts: AlignOptions,
+}
+
+/// One component's solved positions, parallel to the component's member
+/// list (ascending scene id).
+#[derive(Debug, Clone)]
+pub struct ComponentSolution {
+    pub component: usize,
+    pub positions: Vec<(f64, f64)>,
+    /// Gauss-Seidel sweeps this component ran (always ≥ 1).
+    pub iterations: usize,
+}
+
+/// Validate the inputs, build the measurement graph, find connected
+/// components and run the BFS spanning-tree initialization.
+pub fn prepare_alignment(
+    scene_ids: &[u64],
+    measurements: &[PairMeasurement],
+    opts: AlignOptions,
+) -> Result<AlignProblem> {
     let mut ids: Vec<u64> = scene_ids.to_vec();
     ids.sort_unstable();
     ids.dedup();
@@ -225,52 +277,132 @@ pub fn solve_alignment(
         a
     };
 
-    // ---- Gauss-Seidel refinement ----------------------------------------
-    let mut iterations = 0usize;
-    for _ in 0..opts.max_iterations {
-        let mut max_delta = 0.0f64;
-        for i in 0..n {
-            if anchor[i] || adj[i].is_empty() {
-                continue;
+    Ok(AlignProblem {
+        ids,
+        index,
+        adj,
+        pos0: pos,
+        anchor,
+        components,
+        measurements: measurements.to_vec(),
+        opts,
+    })
+}
+
+impl AlignProblem {
+    pub fn num_components(&self) -> usize {
+        self.components.len()
+    }
+
+    /// Connected components, each sorted ascending (scene ids).
+    pub fn components(&self) -> &[Vec<u64>] {
+        &self.components
+    }
+
+    /// Gauss-Seidel refinement over ONE component, starting from the
+    /// spanning-tree initialization.  A component's equations only
+    /// reference its own members, so sweeping the members in ascending
+    /// scene-id order visits exactly the updates the whole-graph sweep
+    /// would apply to them — the restriction is bit-exact, and a
+    /// per-component stop test terminates each shard independently.
+    pub fn solve_component(&self, component: usize) -> ComponentSolution {
+        let members: Vec<usize> = self.components[component]
+            .iter()
+            .map(|id| self.index[id])
+            .collect();
+        // Scratch positions indexed by the global index space; only this
+        // component's entries are read or written.
+        let mut pos = self.pos0.clone();
+        let mut iterations = 0usize;
+        for _ in 0..self.opts.max_iterations {
+            let mut max_delta = 0.0f64;
+            for &i in &members {
+                if self.anchor[i] || self.adj[i].is_empty() {
+                    continue;
+                }
+                let (mut sr, mut sc, mut sw) = (0.0f64, 0.0f64, 0.0f64);
+                for &(j, dr, dc, w) in &self.adj[i] {
+                    // Neighbour j predicts pos_i = pos_j + delta_ij.
+                    sr += w * (pos[j].0 + dr);
+                    sc += w * (pos[j].1 + dc);
+                    sw += w;
+                }
+                let next = (sr / sw, sc / sw);
+                max_delta = max_delta
+                    .max((next.0 - pos[i].0).abs())
+                    .max((next.1 - pos[i].1).abs());
+                pos[i] = next;
             }
-            let (mut sr, mut sc, mut sw) = (0.0f64, 0.0f64, 0.0f64);
-            for &(j, dr, dc, w) in &adj[i] {
-                // Neighbour j predicts pos_i = pos_j + delta_ij.
-                sr += w * (pos[j].0 + dr);
-                sc += w * (pos[j].1 + dc);
-                sw += w;
+            iterations += 1;
+            if max_delta < self.opts.epsilon {
+                break;
             }
-            let next = (sr / sw, sc / sw);
-            max_delta = max_delta
-                .max((next.0 - pos[i].0).abs())
-                .max((next.1 - pos[i].1).abs());
-            pos[i] = next;
         }
-        iterations += 1;
-        if max_delta < opts.epsilon {
-            break;
+        ComponentSolution {
+            component,
+            positions: members.iter().map(|&i| pos[i]).collect(),
+            iterations,
         }
     }
 
-    let residuals: Vec<EdgeResidual> = measurements
-        .iter()
-        .map(|m| {
-            let (ia, ib) = (index[&m.a], index[&m.b]);
-            EdgeResidual {
-                a: m.a,
-                b: m.b,
-                d_row_err: (pos[ia].0 - pos[ib].0) - m.d_row,
-                d_col_err: (pos[ia].1 - pos[ib].1) - m.d_col,
+    /// Scatter per-component solutions back into the global index space
+    /// and compute residuals in measurement input order.  Solutions may
+    /// arrive in any order; each component must appear exactly once.
+    pub fn assemble(&self, solutions: &[ComponentSolution]) -> Result<GlobalAlignment> {
+        if solutions.len() != self.components.len() {
+            return Err(DifetError::Job(format!(
+                "alignment assemble: {} component solutions for {} components",
+                solutions.len(),
+                self.components.len()
+            )));
+        }
+        let mut pos = self.pos0.clone();
+        let mut seen = vec![false; self.components.len()];
+        let mut iterations = 0usize;
+        for sol in solutions {
+            if sol.component >= self.components.len() || seen[sol.component] {
+                return Err(DifetError::Job(format!(
+                    "alignment assemble: bad or duplicate component {}",
+                    sol.component
+                )));
             }
-        })
-        .collect();
+            seen[sol.component] = true;
+            let members = &self.components[sol.component];
+            if sol.positions.len() != members.len() {
+                return Err(DifetError::Job(format!(
+                    "alignment assemble: component {} has {} positions for {} members",
+                    sol.component,
+                    sol.positions.len(),
+                    members.len()
+                )));
+            }
+            for (id, &p) in members.iter().zip(&sol.positions) {
+                pos[self.index[id]] = p;
+            }
+            iterations = iterations.max(sol.iterations);
+        }
 
-    Ok(GlobalAlignment {
-        positions: ids.iter().zip(&pos).map(|(&id, &p)| (id, p)).collect(),
-        components,
-        iterations,
-        residuals,
-    })
+        let residuals: Vec<EdgeResidual> = self
+            .measurements
+            .iter()
+            .map(|m| {
+                let (ia, ib) = (self.index[&m.a], self.index[&m.b]);
+                EdgeResidual {
+                    a: m.a,
+                    b: m.b,
+                    d_row_err: (pos[ia].0 - pos[ib].0) - m.d_row,
+                    d_col_err: (pos[ia].1 - pos[ib].1) - m.d_col,
+                }
+            })
+            .collect();
+
+        Ok(GlobalAlignment {
+            positions: self.ids.iter().zip(&pos).map(|(&id, &p)| (id, p)).collect(),
+            components: self.components.clone(),
+            iterations,
+            residuals,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -366,6 +498,36 @@ mod tests {
         nan = m(0, 1, 0.0, 0.0);
         nan.weight = 0.0;
         assert!(solve_alignment(&[0, 1], &[nan], AlignOptions::default()).is_err());
+    }
+
+    #[test]
+    fn sharded_component_solve_matches_serial_bit_for_bit() {
+        // Two components, one with an inconsistent cycle (so Gauss-Seidel
+        // actually iterates) and one chain; solving the shards in reverse
+        // order must reproduce solve_alignment exactly.
+        let ids = [0u64, 1, 2, 5, 9];
+        let ms = [
+            m(0, 1, -4.0, 0.0),
+            m(1, 2, -6.0, 0.0),
+            m(0, 2, -13.0, 0.0),
+            m(5, 9, 2.0, 4.0),
+        ];
+        let serial = solve_alignment(&ids, &ms, AlignOptions::default()).unwrap();
+        let problem = prepare_alignment(&ids, &ms, AlignOptions::default()).unwrap();
+        assert_eq!(problem.num_components(), 2);
+        let mut sols: Vec<ComponentSolution> = (0..problem.num_components())
+            .map(|c| problem.solve_component(c))
+            .collect();
+        sols.reverse(); // arrival order must not matter
+        let sharded = problem.assemble(&sols).unwrap();
+        assert_eq!(serial.positions, sharded.positions);
+        assert_eq!(serial.components, sharded.components);
+        assert_eq!(serial.iterations, sharded.iterations);
+        assert_eq!(serial.residuals, sharded.residuals);
+        // Assemble rejects missing/duplicate shards.
+        assert!(problem.assemble(&sols[..1]).is_err());
+        let dup = vec![sols[0].clone(), sols[0].clone()];
+        assert!(problem.assemble(&dup).is_err());
     }
 
     #[test]

@@ -18,8 +18,8 @@ pub mod align;
 pub mod composite;
 
 pub use align::{
-    measurements_from_pairs, solve_alignment, AlignOptions, EdgeResidual, GlobalAlignment,
-    PairMeasurement,
+    measurements_from_pairs, prepare_alignment, solve_alignment, AlignOptions, AlignProblem,
+    ComponentSolution, EdgeResidual, GlobalAlignment, PairMeasurement,
 };
 pub use composite::{
     composite_rect_while, composite_sequential, layout, overlap_stats, scenes_in_rect,

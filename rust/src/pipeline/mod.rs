@@ -13,11 +13,13 @@
 //!   acquisitions → fused extraction with descriptors → distributed
 //!   pair matching, pipelined at unit granularity
 //!   ([`run_registration`]).
-//! * [`stitch`] — the full mosaicking flow as one four-stage DAG:
-//!   ingest → extract → register → align → composite ([`run_stitch`]).
-//! * [`vectorize`] — object extraction as the five-stage DAG (stitch
-//!   stages + band-tile labeling) → trace into GeoJSON-style polygons
-//!   ([`run_vectorize`]).
+//! * [`stitch`] — the full mosaicking flow as one seven-stage DAG:
+//!   ingest → extract ⇒ census-merge / register ⇒ register-merge →
+//!   align → composite ([`run_stitch`]); reductions run as tree-merge
+//!   stages, not serial coordinator loops.
+//! * [`vectorize`] — object extraction as the nine-stage DAG (stitch
+//!   stages + band-tile labeling + its label-merge tree) → trace into
+//!   GeoJSON-style polygons ([`run_vectorize`]).
 //! * [`report`] — render Table 1 / Table 2 in the paper's row order,
 //!   plus the per-pair registration, mosaic, vector and job-DAG tables.
 //!

@@ -1,32 +1,43 @@
-//! The stitch pipeline: ingest → one job DAG (extract → register →
-//! align → composite).
+//! The stitch pipeline as ONE job DAG: ingest → extract ⇒ census-merge
+//! / register ⇒ register-merge → align → composite (→ vectorize ⇒
+//! label-merge).
 //!
 //! The full mosaicking flow the paper's follow-up work describes (Sarı,
 //! Eken, Sayar 2018), composed as ONE job DAG on the simulated cluster
 //! ([`crate::coordinator::run_dag`]):
 //!
-//! 1. **Ingest** — overlapping acquisitions of one master scene are
-//!    bundled into DFS ([`super::register::ingest_acquisitions`]).
+//! 1. **Ingest** — overlapping acquisitions are bundled into DFS
+//!    ([`super::register::ingest_acquisitions`]), then decoded as a
+//!    first-class DAG stage ([`crate::coordinator::IngestStage`], one
+//!    unit per record) — decode overlaps extraction instead of running
+//!    serially before the DAG.
 //! 2. **Extract** — fused extraction with descriptors; each map unit
-//!    publishes its scenes' feature files as it completes.
+//!    publishes its scenes' feature files as it completes, and the
+//!    census fold runs downstream as a **census-merge** tree
+//!    ([`crate::coordinator::TreeMergeStage`]) instead of a serial
+//!    coordinator loop.
 //! 3. **Register** — one reduce unit per scene pair, depending on
-//!    exactly the extract units owning its two scenes (pipelined mode
-//!    overlaps the two stages at unit granularity).
+//!    exactly the extract units owning its two scenes; the result
+//!    collect is a **register-merge** tree.
 //! 4. **Align** — pairwise translations become per-scene absolute
-//!    positions by global least squares, as a single unit gated on the
-//!    FULL pair set ([`crate::mosaic::solve_alignment`] is global —
-//!    releasing it earlier would change bits).
+//!    positions by global least squares, sharded one unit per connected
+//!    component of the measurement graph (the gate still waits for the
+//!    FULL pair set — the component structure is a global function of
+//!    every measurement — but independent components solve in
+//!    parallel, bit-equal to serial [`crate::mosaic::solve_alignment`]
+//!    by construction).
 //! 5. **Composite** — the canvas is rendered as tile-shaped work units,
 //!    byte-identical to [`crate::mosaic::composite_sequential`].
 //!
 //! `--barrier` runs the same DAG bulk-synchronously (the pre-DAG
 //! four-job chaining) and must produce the identical mosaic.  All stages
-//! share one DFS, so the bundle the registration stage ingested is the
-//! same bytes the compositing stage's scene shuffle re-routes.
+//! share one DFS, so the bundle the ingest stage decodes is the same
+//! bytes the compositing stage's scene shuffle re-routes.
 //!
 //! `run_stitch_dag` optionally appends the vectorize tail (band-tile
-//! labeling over the canvas) so `difet vectorize` runs one five-stage
-//! DAG — that is where composite→label pipelining comes from.
+//! labeling over the canvas, plus its **label-merge** tree of pairwise
+//! band merges) so `difet vectorize` runs one nine-stage DAG — that is
+//! where composite→label pipelining comes from.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -34,11 +45,12 @@ use std::path::Path;
 use crate::config::Config;
 use crate::coordinator::driver::JobHooks;
 use crate::coordinator::{
-    run_dag, AlignSource, AlignStage, CompositeStage, DagReport, DagStage, ExecMode, ExtractStage,
-    FusedJobSpec, LabelStage, MaskSource, MosaicReport, MosaicSpec, PairSource, PairStage,
-    VectorReport, VectorSpec,
+    run_dag, AlignSource, AlignStage, CensusTreeReducer, CompositeStage, DagReport, DagStage,
+    ExecMode, ExtractStage, FusedJobSpec, IngestStage, LabelStage, LabelTreeReducer, MaskSource,
+    MosaicReport, MosaicSpec, PairResultsSource, PairSource, PairStage, PairTreeReducer,
+    SceneSource, TreeMergeStage, VectorReport, VectorSpec,
 };
-use crate::dfs::{Dfs, NodeId};
+use crate::dfs::Dfs;
 use crate::hib::{BundleReader, BundleWriter, Codec};
 use crate::imagery::Rgba8Image;
 use crate::metrics::Registry;
@@ -57,6 +69,11 @@ pub struct StitchRequest {
     pub blend: BlendMode,
     /// Canvas-tile edge in pixels (one distributed work unit per tile).
     pub canvas_tile: usize,
+    /// Optional fuzz seed for the merge-tree shapes: `Some(s)` makes the
+    /// census/register/label merge trees use seeded irregular fan-ins
+    /// instead of balanced pairs.  Outputs must be bit-identical for
+    /// every value — the parity suites sweep this to prove it.
+    pub merge_shape_seed: Option<u64>,
 }
 
 impl Default for StitchRequest {
@@ -65,6 +82,7 @@ impl Default for StitchRequest {
             reg: RegistrationRequest::default(),
             blend: BlendMode::Feather,
             canvas_tile: 512,
+            merge_shape_seed: None,
         }
     }
 }
@@ -137,7 +155,7 @@ pub(crate) struct VectorTailSpec {
     pub band_rows: usize,
 }
 
-/// Full four-stage run on the simulated cluster.
+/// Full seven-stage run on the simulated cluster.
 pub fn run_stitch(cfg: &Config, req: &StitchRequest) -> Result<StitchOutcome> {
     cfg.validate()?;
     let dfs = Dfs::new(
@@ -163,9 +181,9 @@ pub fn run_stitch_on(
 }
 
 /// Compose and run the stitch DAG, optionally with the vectorize tail
-/// appended as a fifth stage (what `difet vectorize` runs): this is the
-/// single place the multi-stage DAG is wired, so the four- and
-/// five-stage flows cannot drift apart.
+/// appended (what `difet vectorize` runs, together with its label-merge
+/// tree): this is the single place the multi-stage DAG is wired, so the
+/// seven- and nine-stage flows cannot drift apart.
 pub(crate) fn run_stitch_dag(
     cfg: &Config,
     dfs: &Dfs,
@@ -177,8 +195,7 @@ pub(crate) fn run_stitch_dag(
     cfg.validate()?;
     super::register::validate_matcher(&req.reg.spec.algorithm)?;
 
-    // Ingest, then decode the scenes back out of DFS: the composite
-    // stage's scene shuffle re-routes the same bytes.
+    // Bundle the corpus into DFS; the DAG's ingest stage decodes it.
     let (corpus, offsets) = ingest_acquisitions(
         cfg,
         dfs,
@@ -186,16 +203,10 @@ pub(crate) fn run_stitch_dag(
         req.reg.max_offset,
         "/corpus/acquisitions.hib",
     )?;
-    let (bytes, _) = dfs.read_file(&corpus.bundle_path, NodeId(0))?;
-    let scenes = {
-        let reader = BundleReader::open(&bytes)?;
-        (0..reader.record_count())
-            .map(|i| reader.read_image(i))
-            .collect::<Result<Vec<(u64, Rgba8Image)>>>()?
-    };
-    drop(bytes);
 
-    // The DAG: extract → register → align → composite (→ vectorize).
+    // The DAG: ingest → extract ⇒ census-merge / register ⇒
+    // register-merge → align → composite (→ vectorize ⇒ label-merge).
+    // Stage indices are positional in `stages` below.
     let extract_req = super::extract::ExtractRequest {
         algorithms: vec![req.reg.spec.algorithm.clone()],
         num_scenes: req.reg.num_scenes,
@@ -207,17 +218,35 @@ pub(crate) fn run_stitch_dag(
     let mut fspec = FusedJobSpec::new(&[req.reg.spec.algorithm.as_str()], &corpus.bundle_path);
     fspec.write_output = false;
     fspec.keep_descriptors = true;
+    let ingest = IngestStage::new(cfg, dfs, &corpus.bundle_path, registry, hooks);
     let extract = ExtractStage::new(cfg, dfs, executor.as_ref(), fspec, registry, hooks)?
-        .publish_features(&req.reg.spec.feature_dir, 0);
+        .publish_features(&req.reg.spec.feature_dir, 0)
+        .defer_merge();
+    // Distinct sub-seeds per tree so a single fuzz seed exercises three
+    // unrelated shapes; `None` keeps the balanced pairwise default.
+    let tree_seed = |k: u64| req.merge_shape_seed.map(|s| s ^ k.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let mut census_merge =
+        TreeMergeStage::new("census-merge", cfg, 2, 1, CensusTreeReducer::new(&extract), hooks);
+    if let Some(s) = tree_seed(1) {
+        census_merge = census_merge.with_shape_seed(s);
+    }
     let pairs = PairStage::new(
         cfg,
         dfs,
         req.reg.spec.clone(),
-        PairSource::Extract { stage: &extract, stage_index: 0 },
+        PairSource::Extract { stage: &extract, stage_index: 1 },
         registry,
         hooks,
     );
-    let align = AlignStage::new(&pairs, 1, hooks);
+    let mut pair_merge =
+        TreeMergeStage::new("register-merge", cfg, 4, 3, PairTreeReducer::new(&pairs), hooks);
+    if let Some(s) = tree_seed(2) {
+        pair_merge = pair_merge.with_shape_seed(s);
+    }
+    let align = AlignStage::from_source(
+        PairResultsSource::Merged { pairs: &pairs, merge: &pair_merge, stage_index: 4 },
+        hooks,
+    );
     let mspec = MosaicSpec {
         blend: req.blend,
         canvas_tile: req.canvas_tile,
@@ -226,8 +255,8 @@ pub(crate) fn run_stitch_dag(
     let composite = CompositeStage::new(
         cfg,
         dfs,
-        &scenes,
-        AlignSource::Solved { stage: &align, stage_index: 2 },
+        SceneSource::Ingested { stage: &ingest, stage_index: 0 },
+        AlignSource::Solved { stage: &align, stage_index: 5 },
         mspec,
         registry,
         hooks,
@@ -239,44 +268,61 @@ pub(crate) fn run_stitch_dag(
             VectorSpec { band_rows: v.band_rows, ..Default::default() },
             MaskSource::Mosaic {
                 stage: &composite,
-                stage_index: 3,
+                stage_index: 6,
                 threshold: v.threshold,
             },
             registry,
             hooks,
         )
+        .defer_merge()
     });
-    let mut stages: Vec<&dyn DagStage> = vec![&extract, &pairs, &align, &composite];
+    let label_merge = label.as_ref().map(|l| {
+        let m =
+            TreeMergeStage::new("label-merge", cfg, 8, 7, LabelTreeReducer::new(cfg, dfs, l), hooks);
+        match tree_seed(3) {
+            Some(s) => m.with_shape_seed(s),
+            None => m,
+        }
+    });
+    let mut stages: Vec<&dyn DagStage> =
+        vec![&ingest, &extract, &census_merge, &pairs, &pair_merge, &align, &composite];
     if let Some(l) = &label {
         stages.push(l);
+    }
+    if let Some(m) = &label_merge {
+        stages.push(m);
     }
     let dag = run_dag(cfg, &stages, ExecMode::from_config(cfg), registry)?;
     drop(stages);
 
-    // Pull every product out of the stages, then drop them (they borrow
-    // `scenes`, which moves into the outcome).
+    // Pull every product out of the stages by NAME — the stage list
+    // changes shape (7 vs 9 stages), so positional pulls would rot.
+    let stage_report = |name: &'static str| {
+        dag.stage(name).ok_or_else(|| {
+            crate::util::DifetError::Job(format!("stage {name} missing from DAG report"))
+        })
+    };
+    let ext_rep = stage_report("extract")?;
     let extraction = extract
-        .reports(&dag.stages[0], dag.stages[0].span_secs(), dag.wall_seconds)?
+        .reports(ext_rep, ext_rep.span_secs(), dag.wall_seconds)?
         .pop()
         .ok_or_else(|| crate::util::DifetError::Job("extraction returned no report".into()))?;
-    let reg_report = pairs.report(&dag.stages[1], dag.stages[1].span_secs(), dag.wall_seconds)?;
+    let reg_rep = stage_report("register")?;
+    let reg_report = pairs.report(reg_rep, reg_rep.span_secs(), dag.wall_seconds)?;
     let alignment = align.alignment()?;
-    let mosaic_report =
-        composite.report(&dag.stages[3], dag.stages[3].span_secs(), dag.wall_seconds);
+    let comp_rep = stage_report("composite")?;
+    let mosaic_report = composite.report(comp_rep, comp_rep.span_secs(), dag.wall_seconds);
     let mosaic = composite.mosaic()?;
     let tail = match &label {
         Some(l) => {
-            let report = l.report(&dag.stages[4], dag.stages[4].span_secs(), dag.wall_seconds)?;
+            let vec_rep = stage_report("vectorize")?;
+            let report = l.report(vec_rep, vec_rep.span_secs(), dag.wall_seconds)?;
             let (labels, stats, mstats) = l.output()?;
             Some(VectorTail { report, labels, stats, mstats })
         }
         None => None,
     };
-    drop(label);
-    drop(composite);
-    drop(align);
-    drop(pairs);
-    drop(extract);
+    let scenes = ingest.scenes()?.as_ref().clone();
 
     let registration = RegistrationOutcome {
         corpus,

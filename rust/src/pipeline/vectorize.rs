@@ -1,5 +1,6 @@
-//! The vectorize pipeline: ingest → one five-stage job DAG (extract →
-//! register → align → composite → label) → trace.
+//! The vectorize pipeline: one nine-stage job DAG (ingest → extract ⇒
+//! census-merge / register ⇒ register-merge → align → composite →
+//! label ⇒ label-merge) → trace.
 //!
 //! The flow completing the authors' published pipeline (extraction →
 //! registration → mosaicking → object extraction / vectorization),
@@ -109,7 +110,7 @@ impl VectorStage {
 /// Everything a vectorize run produced.
 #[derive(Debug)]
 pub struct VectorizeOutcome {
-    /// The four-stage stitch outcome (registration, alignment, mosaic).
+    /// The stitch outcome (registration, alignment, mosaic).
     pub stitch: StitchOutcome,
     /// The vector tail over the composited mosaic.
     pub vector: VectorStage,
@@ -166,7 +167,7 @@ pub fn run_vector_stage(cfg: &Config, img: &Rgba8Image, opts: &VectorOptions) ->
     run_vector_stage_on(cfg, &dfs, img, opts, &Registry::new(), &JobHooks::default())
 }
 
-/// Full five-stage run on the simulated cluster.
+/// Full nine-stage run on the simulated cluster.
 pub fn run_vectorize(cfg: &Config, req: &VectorizeRequest) -> Result<VectorizeOutcome> {
     cfg.validate()?;
     let dfs = Dfs::new(
@@ -178,7 +179,7 @@ pub fn run_vectorize(cfg: &Config, req: &VectorizeRequest) -> Result<VectorizeOu
 }
 
 /// [`run_vectorize`] over caller-provided DFS/metrics/hooks: ONE
-/// five-stage DAG, so the label bands pipeline against the composite
+/// nine-stage DAG, so the label bands pipeline against the composite
 /// tiles instead of waiting for a whole-mosaic barrier.
 pub fn run_vectorize_on(
     cfg: &Config,

@@ -428,6 +428,208 @@ pub fn merge_tile_labels(
     Ok((Labels { width, height, data }, objects, stats))
 }
 
+/// A partially merged run of adjacent full-width bands — the value a
+/// tree-shaped label merge passes between its units.  The contained
+/// [`TileLabels`] is kept canonical (components ascending by key, raster
+/// values = component index + 1), which makes merging *associative*:
+/// any tree of contiguous [`merge_band_parts`] calls over the same bands
+/// yields the same root part, so the distributed merge is bit-identical
+/// to the serial [`merge_tile_labels`] fold regardless of tree shape,
+/// scheduling order, retries or speculation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BandPart {
+    /// The merged band run in canonical [`TileLabels`] form.
+    pub tile: TileLabels,
+    /// Original (pre-merge) band-local fragments per component, parallel
+    /// to `tile.components` — sums under merge, feeds `max_fragments`.
+    pub fragments: Vec<u64>,
+    /// Unions that joined distinct classes across seams inside this run.
+    /// Every successful union drops the class count by one, so the total
+    /// is path-independent and sums across sub-merges.
+    pub seam_unions: u64,
+}
+
+impl BandPart {
+    /// Half-open global row range `[row0, row1)` this part covers.
+    pub fn rows(&self) -> (usize, usize) {
+        (self.tile.rect[0], self.tile.rect[1])
+    }
+}
+
+/// Lift one labeled full-width band (as produced by [`label_rect`] /
+/// `offset_rows`) into a mergeable [`BandPart`] leaf.
+pub fn band_part(tile: TileLabels) -> Result<BandPart> {
+    if tile.rect[2] != 0 {
+        return Err(DifetError::Job(format!(
+            "band part requires a full-width band, got rect {:?}",
+            tile.rect
+        )));
+    }
+    let [r0, r1, _, width] = tile.rect;
+    if tile.labels.len() != (r1 - r0) * width {
+        return Err(DifetError::Job(format!(
+            "band part raster has {} cells, rect {:?} needs {}",
+            tile.labels.len(),
+            tile.rect,
+            (r1 - r0) * width
+        )));
+    }
+    let fragments = vec![1u64; tile.components.len()];
+    Ok(BandPart { tile, fragments, seam_unions: 0 })
+}
+
+/// Merge two row-adjacent band parts (`top` directly above `bottom`)
+/// into one canonical part.  Only the single seam row pair is scanned
+/// (4-connectivity, matching [`merge_tile_labels`]' down-neighbour
+/// unions); statistics merge by exact integer addition.
+pub fn merge_band_parts(top: &BandPart, bottom: &BandPart) -> Result<BandPart> {
+    let corrupt = |what: String| DifetError::Job(format!("band merge: {what}"));
+    let [tr0, tr1, _, tw] = top.tile.rect;
+    let [br0, br1, _, bw] = bottom.tile.rect;
+    if tw != bw {
+        return Err(corrupt(format!("band widths differ ({tw} vs {bw})")));
+    }
+    if tr1 != br0 {
+        return Err(corrupt(format!(
+            "bands are not adjacent (top rows {tr0}..{tr1}, bottom rows {br0}..{br1})"
+        )));
+    }
+    let width = tw;
+    let n_top = top.tile.components.len();
+    let n_bot = bottom.tile.components.len();
+    if (n_top + n_bot) as u64 >= u32::MAX as u64 {
+        return Err(corrupt("component count overflows the label space".into()));
+    }
+
+    // Union across the one seam: top's last row vs bottom's first row.
+    let mut uf = UnionFind::new();
+    for _ in 0..n_top + n_bot {
+        uf.make();
+    }
+    let mut seam_unions = 0u64;
+    if tr1 > tr0 && br1 > br0 {
+        let top_last = (tr1 - tr0 - 1) * width;
+        for col in 0..width {
+            let a = top.tile.labels[top_last + col];
+            let b = bottom.tile.labels[col];
+            if a != 0 && b != 0 && uf.union(a - 1, n_top as u32 + b - 1) {
+                seam_unions += 1;
+            }
+        }
+    }
+
+    // Group merged classes and renumber by ascending minimum key — the
+    // same canonical order merge_tile_labels assigns, so intermediate
+    // parts stay in the exact form a single flat merge would produce.
+    let key_of = |i: usize| {
+        if i < n_top {
+            top.tile.components[i].key
+        } else {
+            bottom.tile.components[i - n_top].key
+        }
+    };
+    let mut by_root: BTreeMap<u32, Vec<u32>> = BTreeMap::new();
+    for idx in 0..(n_top + n_bot) as u32 {
+        by_root.entry(uf.find(idx)).or_default().push(idx);
+    }
+    let mut ordered: Vec<(u64, Vec<u32>)> = by_root
+        .into_values()
+        .map(|members| {
+            let min_key = members.iter().map(|&i| key_of(i as usize)).min().unwrap();
+            (min_key, members)
+        })
+        .collect();
+    ordered.sort_unstable_by_key(|&(min_key, _)| min_key);
+
+    let mut components = Vec::with_capacity(ordered.len());
+    let mut fragments = Vec::with_capacity(ordered.len());
+    let mut label_of: Vec<u32> = vec![0; n_top + n_bot];
+    for (label0, (min_key, members)) in ordered.into_iter().enumerate() {
+        let label = (label0 + 1) as u32;
+        let mut merged = TileComponent {
+            key: min_key,
+            area: 0,
+            sum_row: 0,
+            sum_col: 0,
+            bbox: [u32::MAX, u32::MAX, 0, 0],
+        };
+        let mut frag = 0u64;
+        for &m in &members {
+            let i = m as usize;
+            let (c, f) = if i < n_top {
+                (&top.tile.components[i], top.fragments[i])
+            } else {
+                (&bottom.tile.components[i - n_top], bottom.fragments[i - n_top])
+            };
+            merged.area += c.area;
+            merged.sum_row += c.sum_row;
+            merged.sum_col += c.sum_col;
+            merged.bbox[0] = merged.bbox[0].min(c.bbox[0]);
+            merged.bbox[1] = merged.bbox[1].min(c.bbox[1]);
+            merged.bbox[2] = merged.bbox[2].max(c.bbox[2]);
+            merged.bbox[3] = merged.bbox[3].max(c.bbox[3]);
+            frag += f;
+            label_of[i] = label;
+        }
+        components.push(merged);
+        fragments.push(frag);
+    }
+
+    let mut labels = Vec::with_capacity((br1 - tr0) * width);
+    labels.extend(top.tile.labels.iter().map(|&l| {
+        if l == 0 { 0 } else { label_of[l as usize - 1] }
+    }));
+    labels.extend(bottom.tile.labels.iter().map(|&l| {
+        if l == 0 { 0 } else { label_of[n_top + l as usize - 1] }
+    }));
+
+    Ok(BandPart {
+        tile: TileLabels { rect: [tr0, br1, 0, width], labels, components },
+        fragments,
+        seam_unions: top.seam_unions + bottom.seam_unions + seam_unions,
+    })
+}
+
+/// Finish a root [`BandPart`] covering the whole raster into the exact
+/// `(Labels, ObjectStats, MergeStats)` triple [`merge_tile_labels`]
+/// returns for the same bands.
+pub fn band_part_output(
+    width: usize,
+    height: usize,
+    part: &BandPart,
+) -> Result<(Labels, Vec<ObjectStats>, MergeStats)> {
+    if part.tile.rect != [0, height, 0, width] {
+        return Err(DifetError::Job(format!(
+            "band merge root covers rect {:?}, raster is {height}×{width}",
+            part.tile.rect
+        )));
+    }
+    let objects: Vec<ObjectStats> = part
+        .tile
+        .components
+        .iter()
+        .enumerate()
+        .map(|(i, c)| ObjectStats {
+            label: (i + 1) as u32,
+            key: c.key,
+            area: c.area,
+            sum_row: c.sum_row,
+            sum_col: c.sum_col,
+            bbox: c.bbox,
+        })
+        .collect();
+    let stats = MergeStats {
+        seam_unions: part.seam_unions,
+        max_fragments: part.fragments.iter().copied().max().unwrap_or(0),
+    };
+    let labels = Labels {
+        width,
+        height,
+        data: part.tile.labels.clone(),
+    };
+    Ok((labels, objects, stats))
+}
+
 /// Single-threaded whole-raster labeling — the baseline every tiling
 /// must reproduce bit for bit (the one-tile case of the same code path,
 /// exactly as `composite_sequential` relates to the mosaic job).
@@ -656,5 +858,91 @@ mod tests {
             );
             Ok(())
         });
+    }
+
+    /// Tree-merge parity: ANY tree of pairwise [`merge_band_parts`] calls
+    /// over a random band tiling reproduces the flat serial merge (and
+    /// hence the sequential baseline) bit for bit, including the
+    /// seam-union and fragment diagnostics.
+    #[test]
+    fn prop_any_merge_tree_matches_flat_band_merge() {
+        check("label_merge_tree_shape", 60, |g| {
+            let width = g.usize_in(1, 24);
+            let height = g.usize_in(2, 24);
+            let mut m = Mask::new(width, height);
+            for _ in 0..g.usize_in(0, 5) {
+                let r0 = g.usize_in(0, height - 1);
+                let c0 = g.usize_in(0, width - 1);
+                let r1 = g.usize_in(r0, (r0 + 6).min(height - 1));
+                let c1 = g.usize_in(c0, (c0 + 6).min(width - 1));
+                for r in r0..=r1 {
+                    for c in c0..=c1 {
+                        m.set(r, c, true);
+                    }
+                }
+            }
+            for i in 0..m.data.len() {
+                if g.bool(0.15) {
+                    m.data[i] = 1;
+                }
+            }
+
+            let band_rows = g.usize_in(1, height);
+            let tiles: Vec<TileLabels> = band_rects(width, height, band_rows)
+                .into_iter()
+                .map(|r| label_rect(&m, r).map_err(|e| e.to_string()))
+                .collect::<std::result::Result<_, String>>()?;
+            let (flat_labels, flat_objects, flat_stats) =
+                merge_tile_labels(width, height, &tiles).map_err(|e| e.to_string())?;
+
+            // Random merge tree: repeatedly merge a random adjacent pair
+            // of band runs until one root remains.  Every binary tree
+            // over the bands is reachable this way.
+            let mut parts: Vec<BandPart> = tiles
+                .into_iter()
+                .map(|t| band_part(t).map_err(|e| e.to_string()))
+                .collect::<std::result::Result<_, String>>()?;
+            while parts.len() > 1 {
+                let i = g.usize_in(0, parts.len() - 2);
+                let merged =
+                    merge_band_parts(&parts[i], &parts[i + 1]).map_err(|e| e.to_string())?;
+                parts[i] = merged;
+                parts.remove(i + 1);
+            }
+            let (labels, objects, stats) =
+                band_part_output(width, height, &parts[0]).map_err(|e| e.to_string())?;
+            crate::prop_assert!(labels == flat_labels, "label raster diverged from flat merge");
+            crate::prop_assert!(objects == flat_objects, "object table diverged from flat merge");
+            crate::prop_assert!(
+                stats == flat_stats,
+                "merge stats diverged: tree {stats:?} vs flat {flat_stats:?}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn band_part_rejects_non_bands_and_partial_roots() {
+        let m = mask_of(&["##", "##", "##"]);
+        // Not full-width.
+        let half = label_rect(&m, [0, 3, 1, 2]).unwrap();
+        assert!(band_part(half).is_err());
+        // Non-adjacent bands.
+        let b0 = band_part(label_rect(&m, [0, 1, 0, 2]).unwrap()).unwrap();
+        let b2 = band_part(label_rect(&m, [2, 3, 0, 2]).unwrap()).unwrap();
+        assert!(merge_band_parts(&b0, &b2).is_err());
+        // Root that does not cover the raster.
+        assert!(band_part_output(2, 3, &b0).is_err());
+        // Proper merge chain works and matches the flat merge.
+        let b1 = band_part(label_rect(&m, [1, 2, 0, 2]).unwrap()).unwrap();
+        let root = merge_band_parts(&merge_band_parts(&b0, &b1).unwrap(), &b2).unwrap();
+        let (labels, objects, stats) = band_part_output(2, 3, &root).unwrap();
+        let tiles = vec![
+            label_rect(&m, [0, 1, 0, 2]).unwrap(),
+            label_rect(&m, [1, 2, 0, 2]).unwrap(),
+            label_rect(&m, [2, 3, 0, 2]).unwrap(),
+        ];
+        let flat = merge_tile_labels(2, 3, &tiles).unwrap();
+        assert_eq!((labels, objects, stats), flat);
     }
 }

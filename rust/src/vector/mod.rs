@@ -26,8 +26,9 @@ pub mod segment;
 pub mod trace;
 
 pub use label::{
-    band_rects, label_rect, label_rect_while, label_sequential, merge_tile_labels, Labels,
-    MergeStats, ObjectStats, TileComponent, TileLabels,
+    band_part, band_part_output, band_rects, label_rect, label_rect_while, label_sequential,
+    merge_band_parts, merge_tile_labels, BandPart, Labels, MergeStats, ObjectStats, TileComponent,
+    TileLabels,
 };
 pub use segment::{band_mask, threshold_mask, Mask};
 pub use trace::{

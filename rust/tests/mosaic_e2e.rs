@@ -40,6 +40,7 @@ fn test_req() -> StitchRequest {
         },
         blend: BlendMode::Feather,
         canvas_tile: 256, // ≥ 9 work units on a ~664² canvas
+        ..Default::default()
     }
 }
 
@@ -51,7 +52,7 @@ fn mosaic_spec() -> MosaicSpec {
     }
 }
 
-/// One shared four-stage run on 2 nodes (extraction is the expensive
+/// One shared seven-stage run on 2 nodes (extraction is the expensive
 /// part; every test in this binary reuses it).
 fn shared_run() -> &'static StitchOutcome {
     static OUT: OnceLock<StitchOutcome> = OnceLock::new();

@@ -3,8 +3,10 @@
 //! label raster, object table and traced polygons byte-identical to the
 //! sequential `label_sequential` baseline — at 1, 2 and 4 nodes, and
 //! across injected retries and speculative execution — and the full
-//! five-stage pipeline (ingest → stitch → segment → label → trace)
-//! must hold the same equality over a real composited mosaic.
+//! nine-stage pipeline (ingest → extract ⇒ census-merge / register ⇒
+//! register-merge → align → composite → label ⇒ label-merge) must hold
+//! the same equality over a real composited mosaic, for every
+//! merge-tree shape the fuzz seed produces.
 
 use difet::config::Config;
 use difet::coordinator::driver::JobHooks;
@@ -12,8 +14,9 @@ use difet::dfs::Dfs;
 use difet::imagery::Rgba8Image;
 use difet::metrics::Registry;
 use difet::pipeline::{
-    run_vector_stage_on, run_vectorize, run_vectorize_on, RegistrationRequest, StitchRequest,
-    VectorOptions, VectorStage, VectorizeRequest,
+    register_pairs_sequential, run_registration, run_vector_stage_on, run_vectorize,
+    run_vectorize_on, RegistrationRequest, StitchRequest, VectorOptions, VectorStage,
+    VectorizeRequest,
 };
 use difet::util::rng::Pcg32;
 use difet::vector::{extract_objects, label_sequential, threshold_mask};
@@ -159,7 +162,7 @@ fn registry_carries_vector_diagnostics() {
 }
 
 #[test]
-fn pipelined_five_stage_dag_overlaps_stages_and_matches_barrier() {
+fn pipelined_nine_stage_dag_overlaps_stages_and_matches_barrier() {
     // One slot on one node makes the cross-stage releases deterministic:
     // with three extract units draining serially, the first register
     // pair is released the moment its two scenes' feature files exist —
@@ -190,7 +193,20 @@ fn pipelined_five_stage_dag_overlaps_stages_and_matches_barrier() {
         run_vectorize_on(&cfg, &dfs, &req, &registry, &JobHooks::default()).expect("pipelined");
 
     let names: Vec<&str> = pipelined.stitch.dag.stages.iter().map(|s| s.name).collect();
-    assert_eq!(names, ["extract", "register", "align", "composite", "vectorize"]);
+    assert_eq!(
+        names,
+        [
+            "ingest",
+            "extract",
+            "census-merge",
+            "register",
+            "register-merge",
+            "align",
+            "composite",
+            "vectorize",
+            "label-merge",
+        ]
+    );
     assert!(
         pipelined.stitch.dag.max_stage_overlap >= 2,
         "pipelined run never overlapped stages (overlap {})",
@@ -226,14 +242,14 @@ fn pipelined_five_stage_dag_overlaps_stages_and_matches_barrier() {
     assert_eq!(barrier.vector.objects, pipelined.vector.objects, "polygons diverged");
     assert!(
         pipelined.stitch.dag.sim_seconds <= barrier.stitch.dag.sim_seconds,
-        "pipelined {:.2}s should not exceed barrier {:.2}s (5 startups vs 1 + barriers)",
+        "pipelined {:.2}s should not exceed barrier {:.2}s (9 startups vs 1 + barriers)",
         pipelined.stitch.dag.sim_seconds,
         barrier.stitch.dag.sim_seconds
     );
 }
 
 #[test]
-fn five_stage_pipeline_holds_the_equality_over_a_real_mosaic() {
+fn nine_stage_pipeline_holds_the_equality_over_a_real_mosaic() {
     let cfg = test_cfg(2);
     let req = VectorizeRequest {
         stitch: StitchRequest {
@@ -280,4 +296,102 @@ fn five_stage_pipeline_holds_the_equality_over_a_real_mosaic() {
         doc.get("features").unwrap().as_arr().unwrap().len(),
         out.vector.objects.len()
     );
+}
+
+/// The tree-merge parity property (the serial-reduce fix's acceptance
+/// bar): random merge-tree shapes × injected retries × speculation ×
+/// both execution modes must produce bit-identical censuses, label
+/// rasters and registration match sets versus the serial merge
+/// baselines.  The serial baselines come from two independent places:
+/// the two-stage registration flow (whose extract/pair stages still
+/// fold and collect serially on the coordinator) and the library-level
+/// `register_pairs_sequential` / `label_sequential` references.
+#[test]
+fn merge_tree_shapes_retries_and_speculation_keep_reduction_bit_identical() {
+    let cfg = test_cfg(4);
+    let reg_req = RegistrationRequest {
+        num_scenes: 4,
+        max_offset: 48,
+        force_native: true,
+        ..Default::default()
+    };
+    // Serial-merge baselines over the SAME fixed-seed corpus.
+    let serial = run_registration(&cfg, &reg_req).expect("serial-merge registration baseline");
+    let serial_pairs = register_pairs_sequential(&serial.extraction.images, &reg_req.spec)
+        .expect("library pair baseline");
+    assert_eq!(serial.report.pairs, serial_pairs, "serial collect vs library baseline");
+
+    let make_req = |seed: Option<u64>| VectorizeRequest {
+        stitch: StitchRequest {
+            reg: reg_req.clone(),
+            canvas_tile: 128,
+            merge_shape_seed: seed,
+            ..Default::default()
+        },
+        opts: VectorOptions { band_rows: 32, ..Default::default() },
+    };
+    let run = |cfg: &Config, seed: Option<u64>, hooks: &JobHooks| {
+        let dfs = Dfs::new(cfg.cluster.nodes, cfg.storage.block_size, cfg.cluster.replication);
+        run_vectorize_on(cfg, &dfs, &make_req(seed), &Registry::new(), hooks)
+            .expect("nine-stage vectorize run")
+    };
+    let retry_hooks = || JobHooks {
+        fail: Some(Box::new(|_unit, attempt| attempt == 0)),
+    };
+
+    // Reference distributed run: balanced pairwise trees, no failures.
+    let base = run(&cfg, None, &JobHooks::default());
+    let (base_labels, base_stats) = base.vector.labels_baseline();
+    assert_eq!(base.vector.labels, base_labels, "tree label merge vs label_sequential");
+    assert_eq!(base.vector.stats, base_stats, "tree object table vs label_sequential");
+    assert_eq!(
+        base.stitch.registration.extraction.images, serial.extraction.images,
+        "tree census merge vs the serial coordinator fold"
+    );
+    assert_eq!(
+        base.stitch.registration.report.pairs, serial_pairs,
+        "tree pair merge vs the serial collect"
+    );
+
+    // Random shapes × injected first-attempt failures (speculation stays
+    // on throughout — test_cfg asserts it).
+    let mut rng = Pcg32::new(0x7EE5, 0x5EED);
+    for _trial in 0..2 {
+        let seed = rng.next_u64() | 1;
+        for inject in [false, true] {
+            let hooks = if inject { retry_hooks() } else { JobHooks::default() };
+            let out = run(&cfg, Some(seed), &hooks);
+            let what = format!("shape seed {seed:#x}, injected retries {inject}");
+            assert_eq!(
+                out.stitch.registration.extraction.images, serial.extraction.images,
+                "censuses diverged ({what})"
+            );
+            assert_eq!(
+                out.stitch.registration.report.pairs, serial_pairs,
+                "registration match sets diverged ({what})"
+            );
+            assert_eq!(out.vector.labels, base_labels, "label raster diverged ({what})");
+            assert_eq!(out.vector.stats, base_stats, "object table diverged ({what})");
+            assert_eq!(out.stitch.mosaic, base.stitch.mosaic, "mosaic diverged ({what})");
+            if inject {
+                // The failures really landed inside the merge trees.
+                for stage in ["census-merge", "register-merge", "label-merge"] {
+                    let rep = out.stitch.dag.stage(stage).unwrap_or_else(|| {
+                        panic!("stage {stage} missing from DAG report ({what})")
+                    });
+                    assert!(rep.retries >= 1, "{stage} never retried ({what})");
+                }
+            }
+        }
+    }
+
+    // Barrier mode over a seeded irregular shape, with retries: the
+    // bulk-synchronous schedule must hold the same equalities.
+    let mut bcfg = cfg.clone();
+    bcfg.scheduler.barrier = true;
+    let out = run(&bcfg, Some(0x0BAD_5EED), &retry_hooks());
+    assert_eq!(out.stitch.registration.extraction.images, serial.extraction.images);
+    assert_eq!(out.stitch.registration.report.pairs, serial_pairs);
+    assert_eq!(out.vector.labels, base_labels);
+    assert_eq!(out.vector.stats, base_stats);
 }
