@@ -16,7 +16,11 @@
 //!   influence output bytes.
 //! * `thread-spawn` — `thread::spawn` or a `.spawn(...)` call outside
 //!   the sanctioned executors.  Ad-hoc threads are where unordered
-//!   merges sneak in.
+//!   merges sneak in.  The sanctioned executors are a *path-scoped*
+//!   exemption ([`SANCTIONED_SPAWN_MODULES`]): the DAG runtime's scoped
+//!   slot pool and the ingest reader pool are the two places allowed to
+//!   own threads, so a spawn anywhere else is a violation even if an
+//!   allowlist entry tried to waive it.
 //! * `unsafe-outside-runtime` — `unsafe` anywhere but `runtime/`, the
 //!   one module allowed to carry FFI glue.
 //! * `unsafe-impl-no-safety` — an `unsafe impl` (Send/Sync and
@@ -46,6 +50,13 @@ use super::lexer::{tokenize, Token, TokenKind};
 
 /// The default allowlist shipped with the crate, used by `difet audit`.
 pub const DEFAULT_ALLOWLIST: &str = include_str!("allowlist.toml");
+
+/// The only modules allowed to spawn threads: the DAG runtime's scoped
+/// slot pool (whose merges the happens-before checker orders) and the
+/// ingest reader pool (joins before return, writes disjoint tiles).
+/// Path-scoped like `unsafe-outside-runtime`, not allowlisted — adding
+/// a third executor is a deliberate edit here, reviewed as such.
+pub const SANCTIONED_SPAWN_MODULES: [&str; 2] = ["coordinator/dag.rs", "pipeline/ingest.rs"];
 
 /// One determinism hazard found in a source file.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -188,6 +199,9 @@ pub fn scan_source(rel_path: &str, src: &str) -> Vec<Finding> {
                 }
             }
             "spawn" => {
+                if SANCTIONED_SPAWN_MODULES.contains(&rel_path) {
+                    continue;
+                }
                 let thread_path = i >= 3
                     && punct(i - 1) == Some(':')
                     && punct(i - 2) == Some(':')
@@ -498,6 +512,24 @@ mod tests {
         assert_eq!(rules("a.rs", src), vec!["thread-spawn"]);
         // `spawn` as a plain identifier (fn name, variable) is fine.
         assert!(rules("a.rs", "fn spawn_rate() {}").is_empty());
+    }
+
+    #[test]
+    fn sanctioned_executors_may_spawn_others_may_not() {
+        let src = "fn f(s: &Scope) { s.spawn(|| {}); std::thread::spawn(|| {}); }";
+        for module in SANCTIONED_SPAWN_MODULES {
+            assert!(rules(module, src).is_empty(), "{module} is the sanctioned executor");
+        }
+        // The exemption is exact-path, not prefix: siblings still flag.
+        assert_eq!(
+            rules("coordinator/stages.rs", src),
+            vec!["thread-spawn", "thread-spawn"]
+        );
+        // …and other hazards in the sanctioned files are NOT exempt.
+        assert_eq!(
+            rules("coordinator/dag.rs", "fn f() { let m: HashMap<u32, u32>; }"),
+            vec!["hash-collection"]
+        );
     }
 
     #[test]

@@ -130,6 +130,23 @@ pub struct SchedulerConfig {
     /// map operations) so every test and bench history is race-checked;
     /// `difet --no-audit` / `scheduler.audit = false` opts out.
     pub audit: bool,
+    /// Collect the deterministic virtual-time trace in memory (the
+    /// `DagReport` then carries a sealed `TraceLog` + critical path).
+    /// Implied by `trace_path`; tests and the bench harness set it
+    /// directly when they only need the in-memory log.
+    pub trace: bool,
+    /// Write a Perfetto/Chrome-trace JSON file at the end of each DAG
+    /// run (`difet <cmd> --trace out.json`).  When one invocation runs
+    /// several DAGs (e.g. a non-fused extract sweep), the last DAG's
+    /// trace wins — the file is rewritten per DAG.
+    pub trace_path: Option<String>,
+}
+
+impl SchedulerConfig {
+    /// Is the trace sink threaded through the DAG executor?
+    pub fn trace_enabled(&self) -> bool {
+        self.trace || self.trace_path.is_some()
+    }
 }
 
 impl Default for SchedulerConfig {
@@ -143,6 +160,8 @@ impl Default for SchedulerConfig {
             split_per_image: true,
             barrier: false,
             audit: true,
+            trace: false,
+            trace_path: None,
         }
     }
 }
@@ -255,6 +274,8 @@ impl Config {
             "scheduler.split_per_image" => self.scheduler.split_per_image = p(key, val)?,
             "scheduler.barrier" => self.scheduler.barrier = p(key, val)?,
             "scheduler.audit" => self.scheduler.audit = p(key, val)?,
+            "scheduler.trace" => self.scheduler.trace = p(key, val)?,
+            "scheduler.trace_path" => self.scheduler.trace_path = Some(val.to_string()),
             "scheduler.queue_depth" => self.scheduler.queue_depth = p(key, val)?,
             "storage.block_size" => self.storage.block_size = p(key, val)?,
             "storage.compress" => self.storage.compress = p(key, val)?,

@@ -42,7 +42,7 @@
 //!
 //! which makes the pipelined mode's consolidation of startups and
 //! elimination of stage barriers directly visible in `sim_seconds`
-//! (`difet bench` writes both modes into `BENCH_7.json`; CI gates on
+//! (`difet bench` writes both modes into `BENCH_8.json`; CI gates on
 //! them).
 //!
 //! Unit deps may also point at *earlier units of the same stage*
@@ -66,7 +66,7 @@
 use std::any::Any;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::analysis::dag_check;
 use crate::analysis::hb::HbChecker;
@@ -74,6 +74,10 @@ use crate::cluster::CostModel;
 use crate::config::Config;
 use crate::dfs::NodeId;
 use crate::metrics::Registry;
+use crate::trace::critical::{critical_path, CriticalPath};
+use crate::trace::{
+    perfetto, AttemptEvent, AttemptOutcome, TraceEvent, TraceLog, TraceSink, UnitKind, UnitMeta,
+};
 use crate::util::{DifetError, Result, Stopwatch};
 
 use super::scheduler::{monotonic_clock, Assignment, Scheduler, TaskHandle, WorkItem};
@@ -198,6 +202,12 @@ pub trait DagStage: Sync {
     fn finalize(&self) -> Result<()> {
         Ok(())
     }
+
+    /// What unit `unit` *is* for trace/critical-path attribution.
+    /// Stages with non-compute units (ingest, tree merges) override.
+    fn unit_kind(&self, _unit: usize) -> UnitKind {
+        UnitKind::Compute
+    }
 }
 
 /// Per-stage slice of a [`DagReport`].
@@ -224,6 +234,9 @@ pub struct StageReport {
     pub eager_units: u64,
     /// Peak released-but-unmerged units (the queue-depth gauge value).
     pub max_queue_depth: u64,
+    /// Virtual slot-busy seconds per node inside this stage (every
+    /// completed attempt, winners and losing twins alike).
+    pub node_busy_secs: Vec<f64>,
 }
 
 impl StageReport {
@@ -254,12 +267,31 @@ pub struct DagReport {
     pub wall_seconds: f64,
     /// Peak number of stages with released-but-unmerged units at once.
     pub max_stage_overlap: u64,
+    /// Worker slots per node (the utilization denominator).
+    pub slots_per_node: usize,
     pub stages: Vec<StageReport>,
+    /// The sealed virtual-time event log (tracing enabled only).
+    pub trace: Option<Arc<TraceLog>>,
+    /// Critical-path attribution of `sim_seconds` (tracing enabled only).
+    pub critical_path: Option<CriticalPath>,
 }
 
 impl DagReport {
     pub fn stage(&self, name: &str) -> Option<&StageReport> {
         self.stages.iter().find(|s| s.name == name)
+    }
+
+    /// Fraction of node `node`'s slot-seconds spent busy during `stage`'s
+    /// span on the virtual timeline (0 for empty spans; idle fraction is
+    /// the complement).
+    pub fn node_utilization(&self, stage: usize, node: usize) -> f64 {
+        let s = &self.stages[stage];
+        let capacity = s.span_secs() * self.slots_per_node.max(1) as f64;
+        if capacity <= 0.0 {
+            return 0.0;
+        }
+        let busy = s.node_busy_secs.get(node).copied().unwrap_or(0.0);
+        (busy / capacity).clamp(0.0, 1.0)
     }
 }
 
@@ -329,10 +361,14 @@ struct StageState {
     eager: u64,
     depth: u64,
     max_depth: u64,
+    /// Virtual slot-busy ns per node charged to this stage.
+    node_busy_ns: Vec<u64>,
+    /// Whether a `StageOpen` trace event was emitted for this stage.
+    trace_opened: bool,
 }
 
 impl StageState {
-    fn new() -> Self {
+    fn new(nodes: usize) -> Self {
         StageState {
             status: StageStatus::Blocked,
             units: Vec::new(),
@@ -351,6 +387,8 @@ impl StageState {
             eager: 0,
             depth: 0,
             max_depth: 0,
+            node_busy_ns: vec![0; nodes],
+            trace_opened: false,
         }
     }
 
@@ -387,6 +425,11 @@ struct DagExec<'a> {
     max_slot_ns: AtomicU64,
     /// Cluster size, for plan-time locality-hint validation.
     nodes: usize,
+    slots_per_node: usize,
+    /// Deterministic trace collector (`scheduler.trace` / `--trace`).
+    /// Same lock discipline as `hb`: its own mutex, never takes `state`,
+    /// and the per-attempt hot path only appends to a slot-local buffer.
+    trace: Option<TraceSink>,
     /// Audit-mode happens-before checker (`scheduler.audit`, default on):
     /// the executor reports release/attempt/merge events and the run
     /// fails if any history violated the merge-before-observe order.
@@ -475,6 +518,24 @@ impl<'a> DagExec<'a> {
                     let mut st = self.state.lock().unwrap();
                     st.stages[i].status = StageStatus::Done;
                     st.done_stages += 1;
+                    if let Some(tr) = &self.trace {
+                        let s = &mut st.stages[i];
+                        if !s.trace_opened {
+                            // A zero-unit stage can finalize before its
+                            // barrier release ever opens it; give it a
+                            // zero-width span so the log stays one
+                            // open / one finalize per stage.
+                            s.trace_opened = true;
+                            tr.emit(TraceEvent::StageOpen {
+                                stage: i,
+                                open_ns: s.close_ns,
+                                base_ns: s.close_ns,
+                                startup_ns: 0,
+                                plan_io_ns: 0,
+                            });
+                        }
+                        tr.emit(TraceEvent::StageFinalize { stage: i, close_ns: s.close_ns });
+                    }
                     if st.done_stages == st.stages.len() {
                         self.sched.close();
                     } else if self.mode == ExecMode::Barrier {
@@ -520,6 +581,18 @@ impl<'a> DagExec<'a> {
                     spec.deps.iter().map(|d| (d.stage, d.unit)).collect();
                 hb.register_unit((stage, u), &deps);
             }
+        }
+        if let Some(tr) = &self.trace {
+            let metas: Vec<UnitMeta> = plan
+                .units
+                .iter()
+                .enumerate()
+                .map(|(u, spec)| UnitMeta {
+                    deps: spec.deps.iter().map(|d| (d.stage, d.unit)).collect(),
+                    kind: self.stages[stage].unit_kind(u),
+                })
+                .collect();
+            tr.register_stage(stage, self.stages[stage].name(), metas);
         }
         // Resolve deps (immutable reads across stages); the validator
         // above guarantees every reference is in range and planned.
@@ -593,16 +666,31 @@ impl<'a> DagExec<'a> {
         match self.mode {
             ExecMode::Pipelined => {
                 // Open now: gates are met, so the gate times are known.
-                let mut open = self.startup_ns;
+                // `base` is the latest gate time; the DAG-wide startup is
+                // only charged where it actually extends past the gates
+                // (`max(startup, base) == base + startup.saturating_sub(base)`),
+                // which is exactly the slice the trace attributes to it.
+                let mut base = 0u64;
                 for g in self.stages[stage].gates() {
-                    open = open.max(match g {
+                    base = base.max(match g {
                         Gate::Planned(p) => st.stages[p].open_ns,
                         Gate::Completed(p) => st.stages[p].close_ns,
                     });
                 }
-                let open = open + st.stages[stage].plan_io_ns;
+                let startup_charged = self.startup_ns.saturating_sub(base);
+                let open = base + startup_charged + st.stages[stage].plan_io_ns;
                 st.stages[stage].open_ns = open;
                 st.stages[stage].close_ns = open;
+                if let Some(tr) = &self.trace {
+                    st.stages[stage].trace_opened = true;
+                    tr.emit(TraceEvent::StageOpen {
+                        stage,
+                        open_ns: open,
+                        base_ns: base,
+                        startup_ns: startup_charged,
+                        plan_io_ns: st.stages[stage].plan_io_ns,
+                    });
+                }
                 let ready: Vec<usize> = st.stages[stage]
                     .units
                     .iter()
@@ -635,14 +723,24 @@ impl<'a> DagExec<'a> {
             if !upstream_done {
                 continue;
             }
-            let mut open = 0u64;
+            let mut base = 0u64;
             for &p in &st.stages[stage].upstream {
-                open = open.max(st.stages[p].close_ns);
+                base = base.max(st.stages[p].close_ns);
             }
-            let open = open + self.startup_ns + st.stages[stage].plan_io_ns;
+            let open = base + self.startup_ns + st.stages[stage].plan_io_ns;
             st.stages[stage].released_all = true;
             st.stages[stage].open_ns = open;
             st.stages[stage].close_ns = open;
+            if let Some(tr) = &self.trace {
+                st.stages[stage].trace_opened = true;
+                tr.emit(TraceEvent::StageOpen {
+                    stage,
+                    open_ns: open,
+                    base_ns: base,
+                    startup_ns: self.startup_ns,
+                    plan_io_ns: st.stages[stage].plan_io_ns,
+                });
+            }
             let n_units = st.stages[stage].units.len();
             for unit in 0..n_units {
                 // With all upstream stages Done, only *intra-stage* deps
@@ -689,6 +787,14 @@ impl<'a> DagExec<'a> {
         if let Some(hb) = &self.hb {
             hb.on_release((r.stage, r.unit));
         }
+        if let Some(tr) = &self.trace {
+            tr.emit(TraceEvent::Release {
+                stage: r.stage,
+                unit: r.unit,
+                at_ns: st.stages[r.stage].units[r.unit].ready_ns,
+                eager,
+            });
+        }
         self.sched.push(DagTask { unit: r, preferred });
     }
 
@@ -725,9 +831,12 @@ impl<'a> DagExec<'a> {
     }
 
     /// The worker-slot body: identical lifecycle to the old per-job
-    /// drivers, but spanning every stage of the DAG.
-    fn slot_loop(&self, node: NodeId) {
+    /// drivers, but spanning every stage of the DAG.  Trace events are
+    /// buffered slot-locally and flushed once at slot exit, so tracing
+    /// adds no lock to the per-attempt hot path.
+    fn slot_loop(&self, node: NodeId, slot: usize) {
         let mut clock_ns = 0u64;
+        let mut tbuf: Vec<TraceEvent> = Vec::new();
         loop {
             let (task, handle) = match self.sched.next_assignment(node) {
                 Assignment::Done => break,
@@ -739,7 +848,9 @@ impl<'a> DagExec<'a> {
             if let Some(hb) = &self.hb {
                 hb.on_attempt_start((stage, unit), handle.launch_seq, handle.speculative);
             }
-            {
+            // Per-attempt counters + the unit's ready time (stable once
+            // released — nothing mutates it after the scheduler push).
+            let ready_ns = {
                 let mut st = self.state.lock().unwrap();
                 let s = &mut st.stages[stage];
                 if handle.speculative {
@@ -749,7 +860,25 @@ impl<'a> DagExec<'a> {
                 } else {
                     s.rack_remote += 1;
                 }
-            }
+                s.units[unit].ready_ns
+            };
+            let attempt_event = |begin: u64, end: u64, io: u64, compute: u64, ovh: u64, outcome| {
+                TraceEvent::Attempt(AttemptEvent {
+                    stage,
+                    unit,
+                    attempt: handle.attempt,
+                    launch_seq: handle.launch_seq,
+                    speculative: handle.speculative,
+                    node: node.0,
+                    slot,
+                    begin_ns: begin,
+                    end_ns: end,
+                    overhead_ns: ovh,
+                    io_ns: io,
+                    compute_ns: compute,
+                    outcome,
+                })
+            };
             match self.stages[stage].run_unit(unit, &handle, node) {
                 Ok(Some(out)) => {
                     let io_ns = secs_to_ns(out.io_secs);
@@ -757,16 +886,30 @@ impl<'a> DagExec<'a> {
                     // Busy-slot accounting happens for every completed
                     // attempt, winners and losing twins alike (the slot
                     // really was occupied).
-                    let ready_ns = {
+                    {
                         let mut st = self.state.lock().unwrap();
                         let s = &mut st.stages[stage];
                         s.compute_ns += out.compute_ns;
                         s.io_ns += io_ns;
-                        s.units[unit].ready_ns
-                    };
-                    let completion = clock_ns.max(ready_ns) + virtual_ns;
+                        s.node_busy_ns[node.0] += virtual_ns;
+                    }
+                    let begin = clock_ns.max(ready_ns);
+                    let completion = begin + virtual_ns;
                     clock_ns = completion;
-                    if self.sched.report_success(&handle) {
+                    let won = self.sched.report_success(&handle);
+                    if self.trace.is_some() {
+                        let outcome =
+                            if won { AttemptOutcome::Won } else { AttemptOutcome::Lost };
+                        tbuf.push(attempt_event(
+                            begin,
+                            completion,
+                            io_ns,
+                            out.compute_ns,
+                            self.overhead_ns,
+                            outcome,
+                        ));
+                    }
+                    if won {
                         let merged = self.stages[stage].merge(unit, out.payload);
                         match merged {
                             Ok(()) => {
@@ -782,8 +925,19 @@ impl<'a> DagExec<'a> {
                         }
                     }
                 }
-                Ok(None) => self.sched.report_cancelled(&handle),
+                Ok(None) => {
+                    // Cooperative kill: zero-width marker, no clock.
+                    if self.trace.is_some() {
+                        let at = clock_ns.max(ready_ns);
+                        tbuf.push(attempt_event(at, at, 0, 0, 0, AttemptOutcome::Killed));
+                    }
+                    self.sched.report_cancelled(&handle);
+                }
                 Err(e) => {
+                    if self.trace.is_some() {
+                        let at = clock_ns.max(ready_ns);
+                        tbuf.push(attempt_event(at, at, 0, 0, 0, AttemptOutcome::Failed));
+                    }
                     if self.sched.report_failure(&handle, &e.to_string()) {
                         self.state.lock().unwrap().stages[stage].retries += 1;
                     }
@@ -791,14 +945,19 @@ impl<'a> DagExec<'a> {
             }
         }
         self.max_slot_ns.fetch_max(clock_ns, Ordering::Relaxed);
+        if let Some(tr) = &self.trace {
+            tr.flush(&mut tbuf);
+        }
     }
 
     fn report(&self, wall_seconds: f64, registry: &Registry) -> DagReport {
         let st = self.state.lock().unwrap();
         let mut stages = Vec::with_capacity(st.stages.len());
         let mut sim_ns = self.max_slot_ns.load(Ordering::Relaxed);
-        for (i, s) in st.stages.iter().enumerate() {
+        for s in st.stages.iter() {
             sim_ns = sim_ns.max(s.close_ns);
+        }
+        for (i, s) in st.stages.iter().enumerate() {
             let name = self.stages[i].name();
             registry
                 .gauge(&format!("dag_queue_depth_max_{name}"))
@@ -816,19 +975,51 @@ impl<'a> DagExec<'a> {
                 speculative_launches: s.spec_launches,
                 eager_units: s.eager,
                 max_queue_depth: s.max_depth,
+                node_busy_secs: s.node_busy_ns.iter().map(|&b| b as f64 * 1e-9).collect(),
             });
         }
         registry.gauge("dag_stage_overlap_max").set(st.max_overlap as f64);
         registry
             .counter("dag_eager_units")
             .add(st.stages.iter().map(|s| s.eager).sum());
+        let max_stage_overlap = st.max_overlap;
+        drop(st);
+        let (trace_log, cp) = match &self.trace {
+            Some(tr) => {
+                let log = tr.seal(self.mode.name(), self.nodes, self.slots_per_node, sim_ns);
+                let cp = critical_path(&log);
+                for (cat, _) in cp.breakdown() {
+                    registry
+                        .gauge(&format!("critical_path_seconds_{}", cat.name()))
+                        .set(cp.seconds(cat));
+                }
+                (Some(Arc::new(log)), Some(cp))
+            }
+            None => (None, None),
+        };
         DagReport {
             mode: self.mode,
             sim_seconds: sim_ns as f64 * 1e-9,
             wall_seconds,
-            max_stage_overlap: st.max_overlap,
+            max_stage_overlap,
+            slots_per_node: self.slots_per_node,
             stages,
+            trace: trace_log,
+            critical_path: cp,
         }
+    }
+
+    /// Seal the report and, when `--trace <path>` asked for it, write the
+    /// Perfetto export (embedding the registry snapshot).  One invocation
+    /// running several DAGs rewrites the file per DAG — last one wins.
+    fn finish(&self, wall_seconds: f64, cfg: &Config, registry: &Registry) -> Result<DagReport> {
+        let report = self.report(wall_seconds, registry);
+        if let (Some(path), Some(log)) =
+            (cfg.scheduler.trace_path.as_deref(), report.trace.as_deref())
+        {
+            perfetto::write_file(path, log, Some(&registry.snapshot()))?;
+        }
+        Ok(report)
     }
 }
 
@@ -874,7 +1065,9 @@ pub fn run_dag(
         stages,
         sched: Scheduler::new_dynamic(&cfg.scheduler, monotonic_clock()),
         state: Mutex::new(DagState {
-            stages: (0..stages.len()).map(|_| StageState::new()).collect(),
+            stages: (0..stages.len())
+                .map(|_| StageState::new(cfg.cluster.nodes))
+                .collect(),
             live_stages: 0,
             max_overlap: 0,
             done_stages: 0,
@@ -884,19 +1077,21 @@ pub fn run_dag(
         overhead_ns: secs_to_ns(cost.task_overhead()),
         max_slot_ns: AtomicU64::new(0),
         nodes: cfg.cluster.nodes,
+        slots_per_node: cfg.cluster.slots_per_node,
+        trace: cfg.scheduler.trace_enabled().then(|| TraceSink::new(stages.len())),
         hb: cfg.scheduler.audit.then(HbChecker::new),
     };
     if stages.is_empty() {
         exec.sched.close();
-        return Ok(exec.report(wall.elapsed_secs(), registry));
+        return exec.finish(wall.elapsed_secs(), cfg, registry);
     }
     // Initial planning wave (and zero-unit stage finalization).
     exec.advance()?;
     std::thread::scope(|scope| {
         for node in 0..cfg.cluster.nodes {
-            for _slot in 0..cfg.cluster.slots_per_node {
+            for slot in 0..cfg.cluster.slots_per_node {
                 let exec = &exec;
-                scope.spawn(move || exec.slot_loop(NodeId(node)));
+                scope.spawn(move || exec.slot_loop(NodeId(node), slot));
             }
         }
     });
@@ -917,7 +1112,7 @@ pub fn run_dag(
             }
         }
     }
-    Ok(exec.report(wall.elapsed_secs(), registry))
+    exec.finish(wall.elapsed_secs(), cfg, registry)
 }
 
 #[cfg(test)]

@@ -40,6 +40,7 @@ use std::sync::{Arc, Mutex};
 use crate::cluster::CostModel;
 use crate::config::Config;
 use crate::dfs::{Dfs, NodeId};
+use crate::trace::UnitKind;
 use crate::util::{DifetError, Result};
 use crate::vector::{band_part, band_part_output, merge_band_parts, BandPart};
 
@@ -172,6 +173,19 @@ fn union_preferred(sets: &[&[NodeId]]) -> Vec<NodeId> {
 impl<R: TreeReducer> DagStage for TreeMergeStage<'_, R> {
     fn name(&self) -> &'static str {
         self.name
+    }
+
+    fn unit_kind(&self, unit: usize) -> UnitKind {
+        // Valid once planned (the runtime only asks after `plan`).  The
+        // root is always the last node built (asserted in `plan`).
+        let nodes = self.plan_info();
+        if nodes[unit].children.is_empty() {
+            UnitKind::MergeLeaf
+        } else if unit == nodes.len() - 1 {
+            UnitKind::MergeRoot
+        } else {
+            UnitKind::MergeInternal
+        }
     }
 
     fn gates(&self) -> Vec<Gate> {

@@ -90,6 +90,9 @@ pub struct TaskHandle {
     /// happens-before checker uses it to name the exact attempt that
     /// observed a violation.
     pub launch_seq: u64,
+    /// Node whose slot this attempt was assigned to (the trace sink
+    /// stamps it on the attempt's timeline event).
+    pub node: NodeId,
     cancel: Arc<AtomicBool>,
     /// Progress in 1/1000ths of the task, updated by the mapper.
     progress_milli: Arc<AtomicU64>,
@@ -105,6 +108,7 @@ impl TaskHandle {
             attempt: 0,
             speculative: false,
             launch_seq: 0,
+            node: NodeId(0),
             cancel: Arc::new(AtomicBool::new(false)),
             progress_milli: Arc::new(AtomicU64::new(0)),
         }
@@ -327,6 +331,7 @@ impl<D: WorkItem> Scheduler<D> {
             attempt,
             speculative,
             launch_seq: self.launch_counter.fetch_add(1, Ordering::Relaxed),
+            node,
             cancel,
             progress_milli: progress,
         }

@@ -55,6 +55,7 @@ use crate::hib::{self, BundleReader, RecordMeta};
 use crate::imagery::tiler::{extract_tile_f32, TileIter};
 use crate::imagery::Rgba8Image;
 use crate::metrics::{Counter, Gauge, Histogram, Registry};
+use crate::trace::UnitKind;
 use crate::mosaic::{Canvas, GlobalAlignment, OverlapStat};
 use crate::util::{DifetError, Result};
 use crate::vector::{Labels, Mask, MergeStats, ObjectStats};
@@ -199,6 +200,10 @@ impl<'a> IngestStage<'a> {
 impl DagStage for IngestStage<'_> {
     fn name(&self) -> &'static str {
         "ingest"
+    }
+
+    fn unit_kind(&self, _unit: usize) -> UnitKind {
+        UnitKind::Ingest
     }
 
     /// Plan: read the bundle index (jobtracker-side, like the extract

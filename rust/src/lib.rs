@@ -39,6 +39,7 @@ pub mod metrics;
 pub mod mosaic;
 pub mod pipeline;
 pub mod runtime;
+pub mod trace;
 pub mod util;
 pub mod vector;
 

@@ -11,8 +11,9 @@
 //! difet register    extract + match overlapping acquisitions (2-stage DAG)
 //! difet stitch      register + align + composite one mosaic (4-stage DAG)
 //! difet vectorize   stitch + segment + label + trace objects (9-stage DAG)
-//! difet bench       pipelined-vs-barrier DAG sweep → BENCH_7.json
+//! difet bench       pipelined-vs-barrier DAG sweep → BENCH_8.json
 //! difet audit       determinism audit: lint the crate sources (Layer 1)
+//! difet trace       analyze a --trace JSON: validate + critical path
 //! difet inspect     show artifact manifest + cluster configuration
 //! ```
 //!
@@ -29,6 +30,12 @@
 //! --native --threshold 0.55 --out objects.json` to push the mosaic all
 //! the way to GeoJSON-style vector objects.
 //!
+//! Every DAG-running subcommand accepts `--trace out.json`: the runtime
+//! records a deterministic virtual-time event log of the executed DAG
+//! and writes it as Perfetto/Chrome-trace JSON (open it at
+//! ui.perfetto.dev, or feed it back to `difet trace out.json` for the
+//! critical-path attribution table).
+//!
 //! Per-subcommand request building goes through the shared helpers below
 //! (`apply_registration_flags` + the `util::args` list/pair parsers), so
 //! each new stage reuses the previous stages' flags instead of
@@ -43,7 +50,7 @@ use difet::pipeline::{
 use difet::util::args::{help_text, FlagSpec, ParsedArgs};
 use difet::util::json::Json;
 
-const USAGE: &str = "difet <extract|sequential|census|scalability|register|stitch|vectorize|bench|audit|inspect> [options]";
+const USAGE: &str = "difet <extract|sequential|census|scalability|register|stitch|vectorize|bench|audit|trace|inspect> [options]";
 
 fn flag_specs() -> Vec<FlagSpec> {
     vec![
@@ -70,7 +77,8 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "threshold", takes_value: true, help: "vectorize: luma threshold in [0,1] (default 0.5)" },
         FlagSpec { name: "min-area", takes_value: true, help: "vectorize: min object area px (default 8)" },
         FlagSpec { name: "epsilon", takes_value: true, help: "vectorize: Douglas-Peucker tolerance px (default 1.5)" },
-        FlagSpec { name: "out", takes_value: true, help: "stitch: mosaic .hib path; vectorize: GeoJSON path; bench: JSON path (default BENCH_7.json)" },
+        FlagSpec { name: "out", takes_value: true, help: "stitch: mosaic .hib path; vectorize: GeoJSON path; bench: JSON path (default BENCH_8.json)" },
+        FlagSpec { name: "trace", takes_value: true, help: "write a Perfetto trace of the run's DAG to this JSON path" },
         FlagSpec { name: "bare", takes_value: false, help: "disable the I/O cost model" },
         FlagSpec { name: "verbose", takes_value: false, help: "print counters/metrics" },
         FlagSpec { name: "help", takes_value: false, help: "show this help" },
@@ -133,6 +141,9 @@ fn build_config(p: &ParsedArgs, nodes_is_list: bool) -> Result<Config, String> {
     }
     if p.has("no-audit") {
         cfg.scheduler.audit = false;
+    }
+    if let Some(path) = p.get("trace") {
+        cfg.scheduler.trace_path = Some(path.to_string());
     }
     cfg.validate().map_err(|e| e.to_string())?;
     Ok(cfg)
@@ -303,6 +314,9 @@ fn run(p: &ParsedArgs) -> Result<(), String> {
             print!("{}", pipeline::report::render_registration_table(&out.report));
             if verbose {
                 print!("\n{}", pipeline::report::render_dag_table(&out.dag));
+                if let Some(cp) = &out.dag.critical_path {
+                    print!("{}", pipeline::report::render_critical_path(cp));
+                }
                 print_counters(&out.report.counters);
             }
         }
@@ -331,6 +345,9 @@ fn run(p: &ParsedArgs) -> Result<(), String> {
             }
             if verbose {
                 print!("\n{}", pipeline::report::render_dag_table(&out.dag));
+                if let Some(cp) = &out.dag.critical_path {
+                    print!("{}", pipeline::report::render_critical_path(cp));
+                }
                 print_counters(&out.report.counters);
             }
         }
@@ -362,6 +379,9 @@ fn run(p: &ParsedArgs) -> Result<(), String> {
             }
             if verbose {
                 print!("\n{}", pipeline::report::render_dag_table(&out.stitch.dag));
+                if let Some(cp) = &out.stitch.dag.critical_path {
+                    print!("{}", pipeline::report::render_critical_path(cp));
+                }
                 print_counters(&out.vector.report.counters);
             }
         }
@@ -376,6 +396,43 @@ fn run(p: &ParsedArgs) -> Result<(), String> {
                 "cannot locate the crate sources (run from the repo root or rust/)".to_string()
             })?;
             difet::analysis::run_source_audit(&src).map_err(|e| e.to_string())?;
+        }
+        "trace" => {
+            // Re-validate a `--trace` export and attribute its sim time:
+            // the file round-trips through the Perfetto validator, the
+            // structural TraceLog validator, and the critical-path walk,
+            // whose category sum must equal the end-to-end sim time
+            // exactly (checked in integer ns AND in seconds).
+            let path = p
+                .positional
+                .first()
+                .ok_or_else(|| format!("trace needs a file: difet trace <out.json>\n{USAGE}"))?;
+            let log = difet::trace::perfetto::read_file(path).map_err(|e| e.to_string())?;
+            println!(
+                "trace: {} mode, {} node(s) × {} slot(s), {} stage(s), {} event(s), sim {}\n",
+                log.mode,
+                log.nodes,
+                log.slots_per_node,
+                log.stages.len(),
+                log.events.len(),
+                difet::util::fmt::duration(log.sim_ns as f64 * 1e-9),
+            );
+            let cp = difet::trace::critical::critical_path(&log);
+            if cp.attributed_ns() != cp.total_ns {
+                return Err(format!(
+                    "critical-path attribution lost time: {} of {} ns attributed",
+                    cp.attributed_ns(),
+                    cp.total_ns
+                ));
+            }
+            let sum_secs: f64 = cp.breakdown().map(|(_, ns)| ns as f64 * 1e-9).sum();
+            let sim_secs = log.sim_ns as f64 * 1e-9;
+            if (sum_secs - sim_secs).abs() > 1e-9 {
+                return Err(format!(
+                    "category sum {sum_secs} s differs from sim time {sim_secs} s"
+                ));
+            }
+            print!("{}", pipeline::report::render_critical_path(&cp));
         }
         "inspect" => {
             println!("config: {cfg:#?}");
@@ -407,7 +464,10 @@ fn run(p: &ParsedArgs) -> Result<(), String> {
 /// execution modes (`--barrier` bulk-synchronous vs pipelined), verify
 /// the two modes and the sequential baselines are bit-identical, and
 /// write the totals, speedup and parallel efficiency to a JSON report
-/// (`BENCH_7.json` by default).  Speedup is relative to the smallest
+/// (`BENCH_8.json` by default).  At ≤ 4 nodes the pipelined run is
+/// repeated with tracing enabled — outputs must stay bit-identical
+/// (tracing is pure observation) and the run's critical-path category
+/// breakdown is recorded per row.  Speedup is relative to the smallest
 /// node count in the sweep over the `extract + pipelined vectorize`
 /// total; efficiency is `speedup × baseline / nodes`.  Exits non-zero
 /// if ANY parity check fails — CI runs this as a binding gate.
@@ -442,6 +502,9 @@ fn run_bench(p: &ParsedArgs, cfg: &Config, req: &ExtractRequest) -> Result<(), S
         pipelined: f64,
         spans: Vec<(String, f64)>,
         parity: bool,
+        /// Traced pipelined rerun (≤ 4 nodes): bit-parity vs the
+        /// untraced run + critical-path seconds per category.
+        traced: Option<(bool, Vec<(&'static str, f64)>)>,
     }
     let mut rows: Vec<Row> = Vec::new();
     let mut all_parity = true;
@@ -486,6 +549,46 @@ fn run_bench(p: &ParsedArgs, cfg: &Config, req: &ExtractRequest) -> Result<(), S
             pipelined_out.stitch.dag.max_stage_overlap,
             if parity { "ok" } else { "FAILED" },
         );
+
+        // Tracing must be pure observation: rerun the pipelined DAG
+        // with the trace sink attached and demand the same bits and the
+        // same sim time, then attribute the run's critical path.
+        let traced = if n <= 4 {
+            let mut ct = c.clone();
+            ct.scheduler.barrier = false;
+            ct.scheduler.trace = true;
+            let traced_out = pipeline::run_vectorize(&ct, &vreq).map_err(|e| e.to_string())?;
+            let tparity = traced_out.stitch.mosaic == pipelined_out.stitch.mosaic
+                && traced_out.vector.labels == pipelined_out.vector.labels
+                && traced_out.vector.stats == pipelined_out.vector.stats
+                && traced_out.vector.objects == pipelined_out.vector.objects;
+            all_parity &= tparity;
+            let breakdown: Vec<(&'static str, f64)> = traced_out
+                .stitch
+                .dag
+                .critical_path
+                .as_ref()
+                .map(|cp| {
+                    cp.breakdown()
+                        .map(|(cat, ns)| (cat.name(), ns as f64 * 1e-9))
+                        .collect()
+                })
+                .unwrap_or_default();
+            let summary = breakdown
+                .iter()
+                .filter(|(_, s)| *s > 0.0)
+                .map(|(name, s)| format!("{name} {}", difet::util::fmt::duration(*s)))
+                .collect::<Vec<_>>()
+                .join(", ");
+            println!(
+                "           traced rerun: parity {}, critical path: {summary}",
+                if tparity { "ok" } else { "FAILED" },
+            );
+            Some((tparity, breakdown))
+        } else {
+            None
+        };
+
         rows.push(Row {
             nodes: n,
             extract,
@@ -499,6 +602,7 @@ fn run_bench(p: &ParsedArgs, cfg: &Config, req: &ExtractRequest) -> Result<(), S
                 .map(|s| (s.name.to_string(), s.span_secs()))
                 .collect(),
             parity,
+            traced,
         });
     }
 
@@ -543,6 +647,14 @@ fn run_bench(p: &ParsedArgs, cfg: &Config, req: &ExtractRequest) -> Result<(), S
             Json::Bool(row.pipelined <= row.barrier),
         );
         r.insert("parity_ok".to_string(), Json::Bool(row.parity));
+        if let Some((tparity, breakdown)) = &row.traced {
+            r.insert("traced_parity_ok".to_string(), Json::Bool(*tparity));
+            let mut cp = std::collections::BTreeMap::new();
+            for (name, secs) in breakdown {
+                cp.insert(name.to_string(), Json::Num(*secs));
+            }
+            r.insert("critical_path_seconds".to_string(), Json::Obj(cp));
+        }
         r.insert("pipelined_stage_spans".to_string(), Json::Obj(spans));
         r.insert("total_sim_seconds".to_string(), Json::Num(total));
         r.insert("speedup".to_string(), Json::Num(speedup));
@@ -572,7 +684,7 @@ fn run_bench(p: &ParsedArgs, cfg: &Config, req: &ExtractRequest) -> Result<(), S
         Json::Str("label-merge".to_string()),
     ]));
     root.insert("runs".to_string(), Json::Arr(runs));
-    let path = p.get_or("out", "BENCH_7.json");
+    let path = p.get_or("out", "BENCH_8.json");
     std::fs::write(path, format!("{}\n", Json::Obj(root))).map_err(|e| e.to_string())?;
     println!("\nwrote {path}");
     if !all_parity {

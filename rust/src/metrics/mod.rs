@@ -112,7 +112,10 @@ fn percentile(st: &HistState, q: f64) -> f64 {
     for (i, &c) in st.counts.iter().enumerate() {
         seen += c;
         if seen >= target {
-            return bucket_upper(i);
+            // The bucket upper bound can overshoot the largest value
+            // actually observed (the top occupied bucket is log-wide);
+            // no percentile estimate may exceed the true maximum.
+            return bucket_upper(i).min(st.max_secs);
         }
     }
     st.max_secs
@@ -189,31 +192,65 @@ impl Registry {
         self.gauges.lock().unwrap().keys().cloned().collect()
     }
 
+    /// Structured point-in-time copy of every registered series — the
+    /// one read path `render` and the trace exporter share.
+    pub fn snapshot(&self) -> RegistrySnapshot {
+        RegistrySnapshot {
+            counters: self
+                .counters
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(name, c)| (name.clone(), c.get()))
+                .collect(),
+            gauges: self
+                .gauges
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(name, g)| (name.clone(), g.get()))
+                .collect(),
+            histograms: self
+                .histograms
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(name, h)| (name.clone(), h.snapshot()))
+                .collect(),
+        }
+    }
+
     /// Render a Hadoop-style "Counters:" report block.
     pub fn render(&self) -> String {
+        let snap = self.snapshot();
         let mut out = String::from("Counters:\n");
-        for (name, c) in self.counters.lock().unwrap().iter() {
-            out.push_str(&format!(
-                "  {name:<32} {}\n",
-                crate::util::fmt::with_commas(c.get())
-            ));
+        for (name, v) in &snap.counters {
+            out.push_str(&format!("  {name:<32} {}\n", crate::util::fmt::with_commas(*v)));
         }
-        for (name, g) in self.gauges.lock().unwrap().iter() {
-            out.push_str(&format!("  {name:<32} {:.3}\n", g.get()));
+        for (name, v) in &snap.gauges {
+            out.push_str(&format!("  {name:<32} {v:.3}\n"));
         }
-        for (name, h) in self.histograms.lock().unwrap().iter() {
-            let s = h.snapshot();
+        for (name, s) in &snap.histograms {
             out.push_str(&format!(
-                "  {name:<32} n={} mean={} p50={} p95={} max={}\n",
+                "  {name:<32} n={} mean={} p50={} p95={} p99={} max={}\n",
                 s.n,
                 crate::util::fmt::duration(s.mean()),
                 crate::util::fmt::duration(s.p50),
                 crate::util::fmt::duration(s.p95),
+                crate::util::fmt::duration(s.p99),
                 crate::util::fmt::duration(s.max_secs),
             ));
         }
         out
     }
+}
+
+/// Point-in-time copy of a [`Registry`]'s series (sorted by name).
+#[derive(Debug, Clone, Default)]
+pub struct RegistrySnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, f64>,
+    pub histograms: BTreeMap<String, HistSnapshot>,
 }
 
 #[cfg(test)]
@@ -264,8 +301,44 @@ mod tests {
         assert!(text.contains("bytes_read"));
         assert!(text.contains("1,000,000"));
         assert!(text.contains("tile_latency"));
+        assert!(text.contains("p99="), "render must include the p99 column: {text}");
         assert!(text.contains("max_cycle_residual"));
         assert!(text.contains("1.250"));
+    }
+
+    #[test]
+    fn percentiles_never_exceed_observed_max() {
+        // A single observation sits alone in a log-wide bucket whose
+        // upper bound overshoots it; every percentile must clamp to the
+        // observed maximum.
+        let h = Histogram::default();
+        h.observe(1.0);
+        let s = h.snapshot();
+        assert_eq!(s.p50, 1.0);
+        assert_eq!(s.p95, 1.0);
+        assert_eq!(s.p99, 1.0);
+        // And with a spread, percentiles still bracket under the max.
+        let h = Histogram::default();
+        for v in [0.010, 0.011, 0.012, 0.5] {
+            h.observe(v);
+        }
+        let s = h.snapshot();
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99);
+        assert!(s.p99 <= s.max_secs, "p99={} max={}", s.p99, s.max_secs);
+    }
+
+    #[test]
+    fn snapshot_mirrors_render_sources() {
+        let reg = Registry::new();
+        reg.counter("tasks").add(3);
+        reg.gauge("depth").set(2.5);
+        reg.histogram("lat").observe(0.25);
+        let snap = reg.snapshot();
+        assert_eq!(snap.counters.get("tasks"), Some(&3));
+        assert_eq!(snap.gauges.get("depth"), Some(&2.5));
+        let h = snap.histograms.get("lat").expect("histogram present");
+        assert_eq!(h.n, 1);
+        assert_eq!(h.p99, 0.25, "clamped to the observed max");
     }
 
     #[test]

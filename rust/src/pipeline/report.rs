@@ -298,6 +298,51 @@ pub fn render_dag_table(dag: &crate::coordinator::DagReport) -> String {
             s.eager_units,
         ));
     }
+    let nodes = dag.stages.iter().map(|s| s.node_busy_secs.len()).max().unwrap_or(0);
+    if nodes > 0 {
+        out.push_str("per-node utilization (busy ÷ span × slots):\n");
+        out.push_str(&format!("{:<12}", "stage"));
+        for n in 0..nodes {
+            out.push_str(&format!("{:>8}", format!("n{n}")));
+        }
+        out.push('\n');
+        for (i, s) in dag.stages.iter().enumerate() {
+            out.push_str(&format!("{:<12}", s.name));
+            for n in 0..nodes {
+                out.push_str(&format!("{:>7.0}%", 100.0 * dag.node_utilization(i, n)));
+            }
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// Critical-path attribution: where the end-to-end sim time of one DAG
+/// run was spent, walked backward over its trace (see `trace::critical`).
+/// The category column sums to the total exactly — the walk is over the
+/// same integer-nanosecond recurrence the executor ran.
+pub fn render_critical_path(cp: &crate::trace::critical::CriticalPath) -> String {
+    let total_secs = cp.total_ns as f64 * 1e-9;
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Critical path — {} attributed over {} hop(s)\n",
+        fmt::duration(total_secs),
+        cp.hops,
+    ));
+    out.push_str(&format!("{:<16}{:>12}{:>8}\n", "category", "seconds", "share"));
+    for (cat, ns) in cp.breakdown() {
+        if ns == 0 {
+            continue;
+        }
+        let share = if cp.total_ns == 0 { 0.0 } else { 100.0 * ns as f64 / cp.total_ns as f64 };
+        out.push_str(&format!(
+            "{:<16}{:>12.6}{:>7.1}%\n",
+            cat.name(),
+            ns as f64 * 1e-9,
+            share,
+        ));
+    }
+    out.push_str(&format!("{:<16}{:>12.6}{:>7.1}%\n", "total", total_secs, 100.0));
     out
 }
 
@@ -497,13 +542,17 @@ mod tests {
             speculative_launches: 0,
             eager_units: eager,
             max_queue_depth: units as u64,
+            node_busy_secs: vec![3.0, 12.0],
         };
         let dag = DagReport {
             mode: ExecMode::Pipelined,
             sim_seconds: 21.5,
             wall_seconds: 0.4,
             max_stage_overlap: 2,
+            slots_per_node: 2,
             stages: vec![stage("extract", 3, 12.0, 18.0, 0), stage("register", 3, 12.0, 21.5, 2)],
+            trace: None,
+            critical_path: None,
         };
         let t = render_dag_table(&dag);
         assert!(t.contains("pipelined mode"));
@@ -512,6 +561,66 @@ mod tests {
         assert!(t.contains("register"));
         assert_eq!(dag.stage("register").unwrap().eager_units, 2);
         assert!((dag.stage("extract").unwrap().span_secs() - 6.0).abs() < 1e-9);
+        // extract spans 6s × 2 slots = 12 slot-seconds of capacity:
+        // node 0 busy 3s → 25%, node 1 busy 12s → clamped to 100%.
+        assert!((dag.node_utilization(0, 0) - 0.25).abs() < 1e-9);
+        assert!((dag.node_utilization(0, 1) - 1.0).abs() < 1e-9);
+        assert!(t.contains("per-node utilization"));
+        assert!(t.contains("25%"));
+    }
+
+    #[test]
+    fn critical_path_table_sums_to_total() {
+        use crate::trace::critical::{critical_path, Category};
+        use crate::trace::{
+            AttemptEvent, AttemptOutcome, StageTrace, TraceEvent, TraceLog, UnitKind, UnitMeta,
+        };
+        let log = TraceLog {
+            mode: "pipelined".into(),
+            nodes: 1,
+            slots_per_node: 1,
+            sim_ns: 100,
+            stages: vec![StageTrace {
+                name: "extract".into(),
+                units: vec![UnitMeta { deps: vec![], kind: UnitKind::Compute }],
+            }],
+            events: vec![
+                TraceEvent::StageOpen {
+                    stage: 0,
+                    open_ns: 10,
+                    base_ns: 0,
+                    startup_ns: 10,
+                    plan_io_ns: 0,
+                },
+                TraceEvent::Release { stage: 0, unit: 0, at_ns: 10, eager: false },
+                TraceEvent::Attempt(AttemptEvent {
+                    stage: 0,
+                    unit: 0,
+                    attempt: 0,
+                    launch_seq: 0,
+                    speculative: false,
+                    node: 0,
+                    slot: 0,
+                    begin_ns: 10,
+                    end_ns: 100,
+                    overhead_ns: 5,
+                    io_ns: 25,
+                    compute_ns: 60,
+                    outcome: AttemptOutcome::Won,
+                }),
+                TraceEvent::StageFinalize { stage: 0, close_ns: 100 },
+            ],
+        };
+        log.validate().unwrap();
+        let cp = critical_path(&log);
+        assert_eq!(cp.attributed_ns(), cp.total_ns);
+        assert_eq!(cp.total_ns, 100);
+        let t = render_critical_path(&cp);
+        assert!(t.contains("critical path") || t.contains("Critical path"));
+        assert!(t.contains("startup"));
+        assert!(t.contains("compute"));
+        assert!(t.contains("total"));
+        assert_eq!(cp.ns(Category::Compute), 60);
     }
 
     #[test]

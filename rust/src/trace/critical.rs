@@ -1,0 +1,435 @@
+//! Critical-path attribution over a sealed [`TraceLog`].
+//!
+//! The executor's virtual clock is event-driven and exact in integer
+//! nanoseconds: an attempt's span is `overhead + io + compute`, a
+//! stage's open is `base + startup + plan_io`, a unit's release time is
+//! `max(stage open, dep completions)`, and a slot-queued attempt begins
+//! exactly where the slot's previous attempt ended.  That exactness is
+//! what makes attribution a *walk*, not an estimate: starting from the
+//! event that achieves `sim_ns`, every step back in time either crosses
+//! an attempt (attribute its overhead/IO/compute), crosses a stage open
+//! (attribute its startup/plan-IO), or finds no event ending at the
+//! frontier — a genuine gap, attributed to [`Category::Idle`].  The
+//! category sums therefore reconstruct `sim_ns` exactly, in u64 ns
+//! (the 1e-9 tolerance in the CLI report only covers the final f64
+//! rendering).
+
+use super::{AttemptEvent, AttemptOutcome, TraceEvent, TraceLog, UnitKind};
+
+/// Where a nanosecond of end-to-end sim time went.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Category {
+    /// Job startup charges (stage opens) + per-task scheduling overhead.
+    Startup,
+    /// Ingest-unit compute: bundle record decode.
+    Ingest,
+    /// Map/reduce unit compute (extract, pair, composite, label…).
+    Compute,
+    /// Modeled I/O: split reads, shuffle writes, plan-time shuffles.
+    ShuffleIo,
+    /// Tree-merge leaf + internal combines.
+    MergeCombine,
+    /// The serializing root combine of a tree-merge stage.
+    RootCombine,
+    /// Gaps where nothing on the critical path was running.
+    Idle,
+}
+
+impl Category {
+    pub const ALL: [Category; 7] = [
+        Category::Startup,
+        Category::Ingest,
+        Category::Compute,
+        Category::ShuffleIo,
+        Category::MergeCombine,
+        Category::RootCombine,
+        Category::Idle,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Category::Startup => "startup",
+            Category::Ingest => "ingest",
+            Category::Compute => "compute",
+            Category::ShuffleIo => "shuffle_io",
+            Category::MergeCombine => "merge_combine",
+            Category::RootCombine => "root_combine",
+            Category::Idle => "idle",
+        }
+    }
+
+    fn idx(self) -> usize {
+        Category::ALL.iter().position(|c| *c == self).unwrap()
+    }
+
+    fn for_kind(kind: UnitKind) -> Category {
+        match kind {
+            UnitKind::Compute => Category::Compute,
+            UnitKind::Ingest => Category::Ingest,
+            UnitKind::MergeLeaf | UnitKind::MergeInternal => Category::MergeCombine,
+            UnitKind::MergeRoot => Category::RootCombine,
+        }
+    }
+}
+
+/// The attribution of one run's end-to-end sim time.
+#[derive(Debug, Clone)]
+pub struct CriticalPath {
+    /// The time walked: `TraceLog::sim_ns`.
+    pub total_ns: u64,
+    /// Events crossed on the reconstructed path.
+    pub hops: usize,
+    ns: [u64; 7],
+}
+
+impl CriticalPath {
+    pub fn ns(&self, cat: Category) -> u64 {
+        self.ns[cat.idx()]
+    }
+
+    pub fn seconds(&self, cat: Category) -> f64 {
+        self.ns(cat) as f64 * 1e-9
+    }
+
+    /// Σ over categories — equals `total_ns` by construction.
+    pub fn attributed_ns(&self) -> u64 {
+        self.ns.iter().sum()
+    }
+
+    /// `(category, ns)` pairs in fixed [`Category::ALL`] order.
+    pub fn breakdown(&self) -> impl Iterator<Item = (Category, u64)> + '_ {
+        Category::ALL.iter().map(move |c| (*c, self.ns(*c)))
+    }
+}
+
+/// Where the backward walk currently stands.
+#[derive(Clone, Copy)]
+enum Cursor {
+    /// At the end of attempt `i` (index into the collected attempt vec).
+    Attempt(usize),
+    /// At stage `s`'s open time.
+    Open(usize),
+    /// At stage `s`'s finalize close time.
+    Close(usize),
+}
+
+struct Index<'a> {
+    attempts: Vec<&'a AttemptEvent>,
+    /// Per stage: (open, base, startup, plan_io).
+    opens: Vec<Option<(u64, u64, u64, u64)>>,
+    closes: Vec<Option<u64>>,
+    /// Winning attempt per (stage, unit), as an index into `attempts`.
+    winner: std::collections::BTreeMap<(usize, usize), usize>,
+}
+
+impl<'a> Index<'a> {
+    fn build(log: &'a TraceLog) -> Index<'a> {
+        let mut idx = Index {
+            attempts: Vec::new(),
+            opens: vec![None; log.stages.len()],
+            closes: vec![None; log.stages.len()],
+            winner: std::collections::BTreeMap::new(),
+        };
+        for e in &log.events {
+            match e {
+                TraceEvent::Attempt(a) => {
+                    if a.outcome == AttemptOutcome::Won {
+                        idx.winner.insert((a.stage, a.unit), idx.attempts.len());
+                    }
+                    idx.attempts.push(a);
+                }
+                TraceEvent::StageOpen { stage, open_ns, base_ns, startup_ns, plan_io_ns } => {
+                    idx.opens[*stage] = Some((*open_ns, *base_ns, *startup_ns, *plan_io_ns));
+                }
+                TraceEvent::StageFinalize { stage, close_ns } => {
+                    idx.closes[*stage] = Some(*close_ns);
+                }
+                TraceEvent::Release { .. } => {}
+            }
+        }
+        idx
+    }
+
+    /// Did this attempt occupy its slot for its full span?  Killed and
+    /// failed attempts are zero-width markers — never path segments.
+    fn completed(a: &AttemptEvent) -> bool {
+        matches!(a.outcome, AttemptOutcome::Won | AttemptOutcome::Lost)
+    }
+
+    /// Something that *ends* exactly at `t`, preferring attempts of
+    /// `prefer_stage` (deterministic: first match in sorted log order).
+    fn at_time(&self, t: u64, prefer_stage: Option<usize>) -> Option<Cursor> {
+        if let Some(ps) = prefer_stage {
+            if let Some(i) = self
+                .attempts
+                .iter()
+                .position(|a| a.stage == ps && Self::completed(a) && a.end_ns == t)
+            {
+                return Some(Cursor::Attempt(i));
+            }
+        }
+        if let Some(i) = self
+            .attempts
+            .iter()
+            .position(|a| Self::completed(a) && a.end_ns == t)
+        {
+            return Some(Cursor::Attempt(i));
+        }
+        if let Some(s) = self.closes.iter().position(|c| *c == Some(t)) {
+            return Some(Cursor::Close(s));
+        }
+        if let Some(s) = self.opens.iter().position(|o| o.map(|v| v.0) == Some(t)) {
+            return Some(Cursor::Open(s));
+        }
+        None
+    }
+
+    /// Latest event boundary strictly before `t` (idle-gap landing spot).
+    fn anchor_before(&self, t: u64) -> u64 {
+        let mut best = 0u64;
+        for a in &self.attempts {
+            if Self::completed(a) && a.end_ns < t {
+                best = best.max(a.end_ns);
+            }
+        }
+        for c in self.closes.iter().flatten() {
+            if *c < t {
+                best = best.max(*c);
+            }
+        }
+        for o in self.opens.iter().flatten() {
+            if o.0 < t {
+                best = best.max(o.0);
+            }
+        }
+        best
+    }
+}
+
+/// Walk the executed attempt graph backwards from the sim-time-achieving
+/// event and attribute every nanosecond of `log.sim_ns` to a category.
+pub fn critical_path(log: &TraceLog) -> CriticalPath {
+    let idx = Index::build(log);
+    let release_at = |stage: usize, unit: usize| -> Option<u64> {
+        log.events.iter().find_map(|e| match e {
+            TraceEvent::Release { stage: s, unit: u, at_ns, .. }
+                if (*s, *u) == (stage, unit) =>
+            {
+                Some(*at_ns)
+            }
+            _ => None,
+        })
+    };
+
+    let mut ns = [0u64; 7];
+    let mut hops = 0usize;
+    let mut t = log.sim_ns;
+    let mut cursor = idx.at_time(t, None);
+    // Exact matching makes every step land on an event boundary; the
+    // step cap only guards degenerate zero-width cycles, dumping any
+    // un-walked remainder into Idle so the sum invariant still holds.
+    let limit = 4 * log.events.len() + 16;
+    let mut steps = 0usize;
+    while t > 0 {
+        steps += 1;
+        if steps > limit {
+            ns[Category::Idle.idx()] += t;
+            break;
+        }
+        match cursor {
+            None => {
+                let anchor = idx.anchor_before(t);
+                ns[Category::Idle.idx()] += t - anchor;
+                t = anchor;
+                cursor = idx.at_time(t, None);
+            }
+            Some(Cursor::Attempt(i)) => {
+                let a = idx.attempts[i];
+                hops += 1;
+                ns[Category::Startup.idx()] += a.overhead_ns;
+                ns[Category::ShuffleIo.idx()] += a.io_ns;
+                let kind = log.stages[a.stage].units[a.unit].kind;
+                ns[Category::for_kind(kind).idx()] += a.compute_ns;
+                t = a.begin_ns;
+                cursor = if release_at(a.stage, a.unit) == Some(t) {
+                    // The attempt started the moment its unit became
+                    // runnable: the cause is a dep completion or the
+                    // stage open, whichever achieved the release time.
+                    let dep = log.stages[a.stage].units[a.unit]
+                        .deps
+                        .iter()
+                        .find_map(|d| {
+                            let w = *idx.winner.get(d)?;
+                            (idx.attempts[w].end_ns == t).then_some(w)
+                        });
+                    match dep {
+                        Some(w) => Some(Cursor::Attempt(w)),
+                        None if idx.opens[a.stage].map(|o| o.0) == Some(t) => {
+                            Some(Cursor::Open(a.stage))
+                        }
+                        None => idx.at_time(t, None),
+                    }
+                } else {
+                    // Slot-queue chain: the slot's previous completed
+                    // attempt ended exactly where this one began.
+                    idx.attempts
+                        .iter()
+                        .enumerate()
+                        .filter(|(j, p)| {
+                            *j != i
+                                && (p.node, p.slot) == (a.node, a.slot)
+                                && Index::completed(p)
+                                && p.end_ns == t
+                        })
+                        .map(|(j, _)| Cursor::Attempt(j))
+                        .next_back()
+                        .or_else(|| idx.at_time(t, None))
+                }
+            }
+            Some(Cursor::Open(s)) => {
+                let (_, base, startup, plan_io) = idx.opens[s].expect("open cursor has open");
+                hops += 1;
+                ns[Category::Startup.idx()] += startup;
+                ns[Category::ShuffleIo.idx()] += plan_io;
+                t = base;
+                // The base is a gate time: an upstream close (Completed
+                // gate / barrier), an upstream open (Planned gate), or
+                // an attempt end that equals one of those.
+                cursor = idx
+                    .closes
+                    .iter()
+                    .position(|c| *c == Some(t))
+                    .map(Cursor::Close)
+                    .or_else(|| {
+                        idx.opens
+                            .iter()
+                            .enumerate()
+                            .position(|(j, o)| j != s && o.map(|v| v.0) == Some(t))
+                            .map(Cursor::Open)
+                    })
+                    .or_else(|| idx.at_time(t, None));
+            }
+            Some(Cursor::Close(s)) => {
+                // Zero-width marker: the close IS the last unit's
+                // completion (or the open, for zero-unit stages).  A
+                // None here falls through to the gap handler above.
+                hops += 1;
+                cursor = idx
+                    .at_time(t, Some(s))
+                    .filter(|c| !matches!(c, Cursor::Close(cs) if *cs == s))
+                    .or_else(|| {
+                        (idx.opens[s].map(|o| o.0) == Some(t)).then_some(Cursor::Open(s))
+                    });
+            }
+        }
+    }
+    CriticalPath { total_ns: log.sim_ns, hops, ns }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{StageTrace, TraceSink, UnitMeta};
+    use super::*;
+
+    /// Hand-built two-stage chain: open(startup 10) → unit A [10,30] →
+    /// dep → unit B [30,70] → finalize.  Every ns must be attributed.
+    #[test]
+    fn chain_attribution_is_exact() {
+        let sink = TraceSink::new(2);
+        sink.register_stage(0, "a", vec![UnitMeta { deps: vec![], kind: UnitKind::Compute }]);
+        sink.register_stage(
+            1,
+            "b",
+            vec![UnitMeta { deps: vec![(0, 0)], kind: UnitKind::MergeRoot }],
+        );
+        sink.emit(TraceEvent::StageOpen {
+            stage: 0,
+            open_ns: 10,
+            base_ns: 0,
+            startup_ns: 10,
+            plan_io_ns: 0,
+        });
+        sink.emit(TraceEvent::StageOpen {
+            stage: 1,
+            open_ns: 14,
+            base_ns: 10,
+            startup_ns: 0,
+            plan_io_ns: 4,
+        });
+        sink.emit(TraceEvent::Release { stage: 0, unit: 0, at_ns: 10, eager: false });
+        sink.emit(TraceEvent::Attempt(AttemptEvent {
+            stage: 0,
+            unit: 0,
+            attempt: 0,
+            launch_seq: 0,
+            speculative: false,
+            node: 0,
+            slot: 0,
+            begin_ns: 10,
+            end_ns: 30,
+            overhead_ns: 2,
+            io_ns: 3,
+            compute_ns: 15,
+            outcome: AttemptOutcome::Won,
+        }));
+        sink.emit(TraceEvent::StageFinalize { stage: 0, close_ns: 30 });
+        sink.emit(TraceEvent::Release { stage: 1, unit: 0, at_ns: 30, eager: false });
+        sink.emit(TraceEvent::Attempt(AttemptEvent {
+            stage: 1,
+            unit: 0,
+            attempt: 0,
+            launch_seq: 1,
+            speculative: false,
+            node: 0,
+            slot: 0,
+            begin_ns: 30,
+            end_ns: 70,
+            overhead_ns: 2,
+            io_ns: 8,
+            compute_ns: 30,
+            outcome: AttemptOutcome::Won,
+        }));
+        sink.emit(TraceEvent::StageFinalize { stage: 1, close_ns: 70 });
+        let log = sink.seal("pipelined", 1, 1, 70);
+        log.validate().unwrap();
+
+        let cp = critical_path(&log);
+        assert_eq!(cp.total_ns, 70);
+        assert_eq!(cp.attributed_ns(), 70, "{cp:?}");
+        // 10 (stage-0 startup) + 2 + 2 (overheads) = 14 startup.
+        assert_eq!(cp.ns(Category::Startup), 14);
+        // 3 + 8 (attempt IO) — stage 1's plan IO (4) is off-path: the
+        // path runs through unit A's completion at 30, not the open.
+        assert_eq!(cp.ns(Category::ShuffleIo), 11);
+        assert_eq!(cp.ns(Category::Compute), 15);
+        assert_eq!(cp.ns(Category::RootCombine), 30);
+        assert_eq!(cp.ns(Category::Idle), 0, "{cp:?}");
+    }
+
+    /// A sim_ns beyond every event (synthetic) lands in Idle, keeping
+    /// the sum invariant unconditional.
+    #[test]
+    fn unexplained_tail_is_idle() {
+        let log = super::super::TraceLog {
+            mode: "pipelined".into(),
+            nodes: 1,
+            slots_per_node: 1,
+            sim_ns: 100,
+            stages: vec![StageTrace { name: "a".into(), units: vec![] }],
+            events: vec![
+                TraceEvent::StageOpen {
+                    stage: 0,
+                    open_ns: 40,
+                    base_ns: 0,
+                    startup_ns: 40,
+                    plan_io_ns: 0,
+                },
+                TraceEvent::StageFinalize { stage: 0, close_ns: 40 },
+            ],
+        };
+        let cp = critical_path(&log);
+        assert_eq!(cp.attributed_ns(), 100);
+        assert_eq!(cp.ns(Category::Idle), 60);
+        assert_eq!(cp.ns(Category::Startup), 40);
+    }
+}

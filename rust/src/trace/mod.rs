@@ -1,0 +1,566 @@
+//! Deterministic DAG tracing: a virtual-time event log of every unit
+//! release, task attempt (first, retry, speculative twin, cooperative
+//! kill), stage open and stage finalize the job-DAG runtime executed.
+//!
+//! Every timestamp in a [`TraceLog`] is **virtual** — the same
+//! event-driven clock `coordinator/dag.rs` reports `sim_seconds` on —
+//! so a trace is a pure function of the executed schedule: no wall
+//! clock is read anywhere in this module (it stays out of the
+//! `difet audit` allowlist entirely), and re-running an identical
+//! schedule reproduces the identical trace bit for bit.
+//!
+//! The log is collected by a [`TraceSink`] with one coarse mutex of its
+//! own.  Like the happens-before checker (`analysis::hb`) it never
+//! takes the executor's state lock, so it can be reported into from
+//! any point of the runtime without deadlock risk; the hot per-attempt
+//! path does not even take the sink lock — worker slots buffer their
+//! [`TraceEvent`]s locally and flush once when the slot retires.
+//!
+//! Downstream consumers:
+//!
+//! * [`perfetto`] — Perfetto/Chrome-trace JSON export (`--trace
+//!   out.json` on any subcommand) and the matching importer used by
+//!   `difet trace <file>`.
+//! * [`critical`] — the critical-path analyzer: walks the executed
+//!   attempt graph backwards from the sim-time-achieving event and
+//!   attributes every nanosecond of end-to-end sim time to a
+//!   [`critical::Category`] (startup, ingest, compute, shuffle I/O,
+//!   merge-tree combines, root combine, scheduler idle).  The category
+//!   sum equals `sim_ns` exactly, in integer nanoseconds.
+
+pub mod critical;
+pub mod perfetto;
+
+use std::sync::Mutex;
+
+/// What a work unit *is*, for attribution purposes.  Stages override
+/// `DagStage::unit_kind`; the default is [`UnitKind::Compute`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum UnitKind {
+    /// Ordinary map/reduce compute (extract, pair, composite, label…).
+    Compute,
+    /// Bundle-record decode (the ingest stage).
+    Ingest,
+    /// Tree-merge leaf: reads one upstream part, emits a tree part.
+    MergeLeaf,
+    /// Tree-merge internal combine of two child parts.
+    MergeInternal,
+    /// The tree root: the last, serializing combine of the stage.
+    MergeRoot,
+}
+
+impl UnitKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            UnitKind::Compute => "compute",
+            UnitKind::Ingest => "ingest",
+            UnitKind::MergeLeaf => "merge_leaf",
+            UnitKind::MergeInternal => "merge_internal",
+            UnitKind::MergeRoot => "merge_root",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<UnitKind> {
+        Some(match s {
+            "compute" => UnitKind::Compute,
+            "ingest" => UnitKind::Ingest,
+            "merge_leaf" => UnitKind::MergeLeaf,
+            "merge_internal" => UnitKind::MergeInternal,
+            "merge_root" => UnitKind::MergeRoot,
+            _ => return None,
+        })
+    }
+}
+
+/// How one task attempt ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AttemptOutcome {
+    /// First attempt to finish: its payload merged.
+    Won,
+    /// Completed the work but another attempt had already won.
+    Lost,
+    /// Observed its cancel flag and died cooperatively (zero width on
+    /// the virtual timeline — a killed twin advances no clock).
+    Killed,
+    /// The unit body returned an error (a retry may follow).
+    Failed,
+}
+
+impl AttemptOutcome {
+    pub fn name(self) -> &'static str {
+        match self {
+            AttemptOutcome::Won => "won",
+            AttemptOutcome::Lost => "lost",
+            AttemptOutcome::Killed => "killed",
+            AttemptOutcome::Failed => "failed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<AttemptOutcome> {
+        Some(match s {
+            "won" => AttemptOutcome::Won,
+            "lost" => AttemptOutcome::Lost,
+            "killed" => AttemptOutcome::Killed,
+            "failed" => AttemptOutcome::Failed,
+            _ => return None,
+        })
+    }
+}
+
+/// Static per-unit metadata, registered once when the stage's plan
+/// installs: the declared input edges and the unit's kind.
+#[derive(Debug, Clone)]
+pub struct UnitMeta {
+    /// Declared upstream inputs as `(stage, unit)` pairs.
+    pub deps: Vec<(usize, usize)>,
+    pub kind: UnitKind,
+}
+
+/// Static per-stage metadata (the dynamic open/close live in events).
+#[derive(Debug, Clone)]
+pub struct StageTrace {
+    pub name: String,
+    pub units: Vec<UnitMeta>,
+}
+
+/// One task attempt on the virtual timeline.  For completed attempts
+/// (`Won`/`Lost`), `end_ns - begin_ns == overhead_ns + io_ns +
+/// compute_ns` exactly; `Killed`/`Failed` attempts are zero-width (they
+/// advance no virtual clock).
+#[derive(Debug, Clone)]
+pub struct AttemptEvent {
+    pub stage: usize,
+    pub unit: usize,
+    /// Per-unit attempt ordinal (0 = first launch).
+    pub attempt: usize,
+    /// Global launch sequence number from the scheduler.
+    pub launch_seq: u64,
+    pub speculative: bool,
+    pub node: usize,
+    pub slot: usize,
+    pub begin_ns: u64,
+    pub end_ns: u64,
+    pub overhead_ns: u64,
+    pub io_ns: u64,
+    pub compute_ns: u64,
+    pub outcome: AttemptOutcome,
+}
+
+/// One structured event of the DAG execution, stamped in virtual ns.
+#[derive(Debug, Clone)]
+pub enum TraceEvent {
+    /// The stage opened on the virtual timeline.  Invariant:
+    /// `open_ns == base_ns + startup_ns + plan_io_ns`, where `base_ns`
+    /// is the gate/barrier time the stage waited for, `startup_ns` the
+    /// job startup actually charged to this stage (0 when an earlier
+    /// stage's startup already covers it in pipelined mode), and
+    /// `plan_io_ns` the serial plan-time shuffle I/O.
+    StageOpen {
+        stage: usize,
+        open_ns: u64,
+        base_ns: u64,
+        startup_ns: u64,
+        plan_io_ns: u64,
+    },
+    /// The unit became runnable (handed to the scheduler) at `at_ns` =
+    /// max(stage open, its dep completions).  `eager` marks a release
+    /// while an upstream stage still had unmerged units.
+    Release {
+        stage: usize,
+        unit: usize,
+        at_ns: u64,
+        eager: bool,
+    },
+    Attempt(AttemptEvent),
+    /// The stage finalized; `close_ns` is the completion time of its
+    /// last unit (== open for zero-unit stages).
+    StageFinalize { stage: usize, close_ns: u64 },
+}
+
+impl TraceEvent {
+    /// Virtual timestamp the event is anchored at.
+    pub fn at_ns(&self) -> u64 {
+        match self {
+            TraceEvent::StageOpen { open_ns, .. } => *open_ns,
+            TraceEvent::Release { at_ns, .. } => *at_ns,
+            TraceEvent::Attempt(a) => a.begin_ns,
+            TraceEvent::StageFinalize { close_ns, .. } => *close_ns,
+        }
+    }
+
+    /// Total deterministic sort key: time, then event class, then
+    /// identity (launch_seq is globally unique across attempts).
+    fn sort_key(&self) -> (u64, u8, usize, usize, u64) {
+        match self {
+            TraceEvent::StageOpen { stage, open_ns, .. } => (*open_ns, 0, *stage, 0, 0),
+            TraceEvent::Release { stage, unit, at_ns, .. } => (*at_ns, 1, *stage, *unit, 0),
+            TraceEvent::Attempt(a) => (a.begin_ns, 2, a.stage, a.unit, a.launch_seq),
+            TraceEvent::StageFinalize { stage, close_ns } => (*close_ns, 3, *stage, 0, 0),
+        }
+    }
+
+    fn stage(&self) -> usize {
+        match self {
+            TraceEvent::StageOpen { stage, .. }
+            | TraceEvent::Release { stage, .. }
+            | TraceEvent::StageFinalize { stage, .. } => *stage,
+            TraceEvent::Attempt(a) => a.stage,
+        }
+    }
+}
+
+/// The sealed, sorted event log of one DAG run.
+#[derive(Debug, Clone, Default)]
+pub struct TraceLog {
+    /// Execution mode name ("pipelined" / "barrier").
+    pub mode: String,
+    pub nodes: usize,
+    pub slots_per_node: usize,
+    /// End-to-end simulated time of the run, integer ns.
+    pub sim_ns: u64,
+    pub stages: Vec<StageTrace>,
+    /// All events, sorted by [`TraceEvent::sort_key`].
+    pub events: Vec<TraceEvent>,
+}
+
+impl TraceLog {
+    /// The stage's open event, if it opened.
+    pub fn stage_open(&self, stage: usize) -> Option<(u64, u64, u64, u64)> {
+        self.events.iter().find_map(|e| match e {
+            TraceEvent::StageOpen { stage: s, open_ns, base_ns, startup_ns, plan_io_ns }
+                if *s == stage =>
+            {
+                Some((*open_ns, *base_ns, *startup_ns, *plan_io_ns))
+            }
+            _ => None,
+        })
+    }
+
+    /// The stage's finalize close time, if it closed.
+    pub fn stage_close(&self, stage: usize) -> Option<u64> {
+        self.events.iter().find_map(|e| match e {
+            TraceEvent::StageFinalize { stage: s, close_ns } if *s == stage => Some(*close_ns),
+            _ => None,
+        })
+    }
+
+    /// The stage's span on the virtual timeline: `[open, end]` where
+    /// `end` covers the finalize close AND every attempt of the stage
+    /// (a losing speculative twin may outlive the stage close — the
+    /// span is what the Perfetto async track renders, and what every
+    /// event of the stage nests inside).
+    pub fn stage_span(&self, stage: usize) -> Option<(u64, u64)> {
+        let (open, ..) = self.stage_open(stage)?;
+        let mut end = self.stage_close(stage).unwrap_or(open);
+        for e in &self.events {
+            if let TraceEvent::Attempt(a) = e {
+                if a.stage == stage {
+                    end = end.max(a.end_ns);
+                }
+            }
+        }
+        Some((open, end))
+    }
+
+    /// Structural validation: refs resolve, events are sorted, spans
+    /// nest.  Returns the first problem found.
+    pub fn validate(&self) -> std::result::Result<(), String> {
+        for w in self.events.windows(2) {
+            if w[0].sort_key() > w[1].sort_key() {
+                return Err(format!(
+                    "events out of order: {:?} after {:?}",
+                    w[1].sort_key(),
+                    w[0].sort_key()
+                ));
+            }
+        }
+        // Per-stage: exactly one open + one finalize; unit refs in range.
+        let mut opens = vec![0usize; self.stages.len()];
+        let mut finals = vec![0usize; self.stages.len()];
+        for e in &self.events {
+            let s = e.stage();
+            if s >= self.stages.len() {
+                return Err(format!("event references unknown stage {s}"));
+            }
+            let n_units = self.stages[s].units.len();
+            match e {
+                TraceEvent::StageOpen { open_ns, base_ns, startup_ns, plan_io_ns, .. } => {
+                    opens[s] += 1;
+                    if *open_ns != base_ns + startup_ns + plan_io_ns {
+                        return Err(format!(
+                            "stage {s} open decomposition broken: \
+                             {open_ns} != {base_ns}+{startup_ns}+{plan_io_ns}"
+                        ));
+                    }
+                }
+                TraceEvent::StageFinalize { .. } => finals[s] += 1,
+                TraceEvent::Release { unit, .. } => {
+                    if *unit >= n_units {
+                        return Err(format!("release references unknown unit {s}/{unit}"));
+                    }
+                }
+                TraceEvent::Attempt(a) => {
+                    if a.unit >= n_units {
+                        return Err(format!("attempt references unknown unit {s}/{}", a.unit));
+                    }
+                    if a.begin_ns > a.end_ns {
+                        return Err(format!(
+                            "attempt {s}/{} begin {} > end {}",
+                            a.unit, a.begin_ns, a.end_ns
+                        ));
+                    }
+                    if a.node >= self.nodes || a.slot >= self.slots_per_node {
+                        return Err(format!(
+                            "attempt {s}/{} on unknown slot node{}:slot{}",
+                            a.unit, a.node, a.slot
+                        ));
+                    }
+                }
+            }
+        }
+        for (s, st) in self.stages.iter().enumerate() {
+            if opens[s] != 1 || finals[s] != 1 {
+                return Err(format!(
+                    "stage {s} ({}) has {} open / {} finalize events (want 1/1)",
+                    st.name, opens[s], finals[s]
+                ));
+            }
+            for (u, meta) in st.units.iter().enumerate() {
+                for &(ds, du) in &meta.deps {
+                    let ok = ds < self.stages.len()
+                        && du < self.stages[ds].units.len()
+                        && (ds, du) != (s, u);
+                    if !ok {
+                        return Err(format!("unit {s}/{u} has dangling dep ({ds}, {du})"));
+                    }
+                }
+            }
+        }
+        // Winner accounting + nesting inside the stage span.
+        let mut won = vec![Vec::new(); self.stages.len()];
+        for (s, st) in self.stages.iter().enumerate() {
+            won[s] = vec![0usize; st.units.len()];
+        }
+        for e in &self.events {
+            let s = e.stage();
+            let (open, end) = self
+                .stage_span(s)
+                .ok_or_else(|| format!("stage {s} has events but never opened"))?;
+            match e {
+                TraceEvent::Release { unit, at_ns, .. } => {
+                    if *at_ns < open {
+                        return Err(format!("release {s}/{unit} at {at_ns} before open {open}"));
+                    }
+                }
+                TraceEvent::Attempt(a) => {
+                    if a.begin_ns < open || a.end_ns > end {
+                        return Err(format!(
+                            "attempt {s}/{} [{}, {}] escapes stage span [{open}, {end}]",
+                            a.unit, a.begin_ns, a.end_ns
+                        ));
+                    }
+                    if a.outcome == AttemptOutcome::Won {
+                        won[s][a.unit] += 1;
+                    }
+                }
+                _ => {}
+            }
+        }
+        for (s, counts) in won.iter().enumerate() {
+            for (u, &n) in counts.iter().enumerate() {
+                if n != 1 {
+                    return Err(format!("unit {s}/{u} has {n} winning attempts (want 1)"));
+                }
+            }
+        }
+        for e in &self.events {
+            if e.at_ns() > self.sim_ns {
+                return Err(format!(
+                    "event at {} exceeds sim_ns {}",
+                    e.at_ns(),
+                    self.sim_ns
+                ));
+            }
+            if let TraceEvent::Attempt(a) = e {
+                if a.end_ns > self.sim_ns {
+                    return Err(format!("attempt ends at {} > sim_ns {}", a.end_ns, self.sim_ns));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[derive(Default)]
+struct SinkInner {
+    stages: Vec<Option<StageTrace>>,
+    events: Vec<TraceEvent>,
+}
+
+/// Collector threaded through the DAG executor when tracing is on.
+///
+/// Lock order: the sink has its own mutex and never takes the
+/// executor's state lock, so it may be reported into while `state` is
+/// held (same discipline as `analysis::hb::HbChecker`).
+pub struct TraceSink {
+    inner: Mutex<SinkInner>,
+}
+
+impl TraceSink {
+    pub fn new(n_stages: usize) -> TraceSink {
+        TraceSink {
+            inner: Mutex::new(SinkInner {
+                stages: (0..n_stages).map(|_| None).collect(),
+                events: Vec::new(),
+            }),
+        }
+    }
+
+    /// Record a stage's static metadata (called once, at plan install).
+    pub fn register_stage(&self, stage: usize, name: &str, units: Vec<UnitMeta>) {
+        let mut inner = self.inner.lock().unwrap();
+        debug_assert!(inner.stages[stage].is_none());
+        inner.stages[stage] = Some(StageTrace { name: name.to_string(), units });
+    }
+
+    pub fn emit(&self, ev: TraceEvent) {
+        self.inner.lock().unwrap().events.push(ev);
+    }
+
+    /// Drain a worker slot's local event buffer (one lock per slot
+    /// lifetime instead of one per attempt).
+    pub fn flush(&self, buf: &mut Vec<TraceEvent>) {
+        if buf.is_empty() {
+            return;
+        }
+        self.inner.lock().unwrap().events.append(buf);
+    }
+
+    /// Seal the log: sort events on the deterministic total key and
+    /// stamp the run header.
+    pub fn seal(&self, mode: &str, nodes: usize, slots_per_node: usize, sim_ns: u64) -> TraceLog {
+        let inner = std::mem::take(&mut *self.inner.lock().unwrap());
+        let mut events = inner.events;
+        events.sort_by_key(|e| e.sort_key());
+        TraceLog {
+            mode: mode.to_string(),
+            nodes,
+            slots_per_node,
+            sim_ns,
+            stages: inner
+                .stages
+                .into_iter()
+                .map(|s| s.unwrap_or(StageTrace { name: String::new(), units: Vec::new() }))
+                .collect(),
+            events,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn won(stage: usize, unit: usize, begin: u64, end: u64, seq: u64) -> TraceEvent {
+        TraceEvent::Attempt(AttemptEvent {
+            stage,
+            unit,
+            attempt: 0,
+            launch_seq: seq,
+            speculative: false,
+            node: 0,
+            slot: 0,
+            begin_ns: begin,
+            end_ns: end,
+            overhead_ns: 0,
+            io_ns: 0,
+            compute_ns: end - begin,
+            outcome: AttemptOutcome::Won,
+        })
+    }
+
+    fn tiny_log() -> TraceLog {
+        let sink = TraceSink::new(1);
+        sink.register_stage(
+            0,
+            "a",
+            vec![UnitMeta { deps: vec![], kind: UnitKind::Compute }],
+        );
+        sink.emit(TraceEvent::StageOpen {
+            stage: 0,
+            open_ns: 10,
+            base_ns: 0,
+            startup_ns: 10,
+            plan_io_ns: 0,
+        });
+        sink.emit(TraceEvent::Release { stage: 0, unit: 0, at_ns: 10, eager: false });
+        sink.emit(won(0, 0, 10, 25, 0));
+        sink.emit(TraceEvent::StageFinalize { stage: 0, close_ns: 25 });
+        sink.seal("pipelined", 1, 1, 25)
+    }
+
+    #[test]
+    fn seal_sorts_and_validates() {
+        let log = tiny_log();
+        assert_eq!(log.events.len(), 4);
+        log.validate().expect("tiny log is structurally sound");
+        assert_eq!(log.stage_span(0), Some((10, 25)));
+    }
+
+    #[test]
+    fn validate_rejects_escaping_attempt() {
+        let mut log = tiny_log();
+        // Shrink the finalize close AND the winning attempt, then add a
+        // stray attempt beginning before the stage opened.
+        log.events.insert(
+            0,
+            TraceEvent::Attempt(AttemptEvent {
+                begin_ns: 5,
+                end_ns: 9,
+                outcome: AttemptOutcome::Lost,
+                ..match &log.events[2] {
+                    TraceEvent::Attempt(a) => a.clone(),
+                    _ => unreachable!(),
+                }
+            }),
+        );
+        let err = log.validate().unwrap_err();
+        assert!(err.contains("escapes stage span"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_broken_open_decomposition() {
+        let mut log = tiny_log();
+        log.events[0] = TraceEvent::StageOpen {
+            stage: 0,
+            open_ns: 10,
+            base_ns: 3,
+            startup_ns: 3,
+            plan_io_ns: 3,
+        };
+        let err = log.validate().unwrap_err();
+        assert!(err.contains("decomposition"), "{err}");
+    }
+
+    #[test]
+    fn kind_and_outcome_names_round_trip() {
+        for k in [
+            UnitKind::Compute,
+            UnitKind::Ingest,
+            UnitKind::MergeLeaf,
+            UnitKind::MergeInternal,
+            UnitKind::MergeRoot,
+        ] {
+            assert_eq!(UnitKind::parse(k.name()), Some(k));
+        }
+        for o in [
+            AttemptOutcome::Won,
+            AttemptOutcome::Lost,
+            AttemptOutcome::Killed,
+            AttemptOutcome::Failed,
+        ] {
+            assert_eq!(AttemptOutcome::parse(o.name()), Some(o));
+        }
+        assert_eq!(UnitKind::parse("nope"), None);
+    }
+}

@@ -1,0 +1,642 @@
+//! Perfetto/Chrome-trace JSON export and import for [`TraceLog`]s.
+//!
+//! The exported document is a standard Chrome trace-event file — load
+//! it straight into <https://ui.perfetto.dev> — plus a `"difet"`
+//! section carrying the exact integer-nanosecond event log (Chrome
+//! `ts`/`dur` are microsecond floats; the sidecar is what
+//! `difet trace <file>` re-analyzes so attribution stays exact):
+//!
+//! * one **process** per node (`pid = node`) with one **thread** per
+//!   worker slot (`tid = slot`), carrying an `"X"` complete event per
+//!   task attempt (killed/failed attempts are zero-width markers);
+//! * one extra process (`pid = nodes`, named `dag`) with one thread
+//!   per stage, carrying a `"b"`/`"e"` async span over each stage's
+//!   open→end window and `"i"` instants for unit releases.
+//!
+//! All virtual-time values fit f64 exactly (sim runs are far below
+//! 2^53 ns), and `util::json` prints integers losslessly, so export →
+//! parse → import round-trips bit-for-bit.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::{AttemptEvent, AttemptOutcome, StageTrace, TraceEvent, TraceLog, UnitKind, UnitMeta};
+use crate::metrics::RegistrySnapshot;
+use crate::util::json::{self, Json};
+use crate::util::{DifetError, Result};
+
+/// Version stamp of the `"difet"` sidecar schema.
+pub const FORMAT_VERSION: u64 = 1;
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn num(n: u64) -> Json {
+    Json::Num(n as f64)
+}
+
+/// Virtual ns → Chrome trace µs.
+fn us(ns: u64) -> Json {
+    Json::Num(ns as f64 / 1000.0)
+}
+
+fn meta(field: &str, pid: usize, tid: Option<usize>, name: String) -> Json {
+    let mut pairs = vec![
+        ("ph", Json::Str("M".into())),
+        ("name", Json::Str(field.into())),
+        ("pid", num(pid as u64)),
+        ("args", obj(vec![("name", Json::Str(name))])),
+    ];
+    if let Some(t) = tid {
+        pairs.push(("tid", num(t as u64)));
+    }
+    obj(pairs)
+}
+
+/// Render a [`TraceLog`] (plus an optional metrics snapshot) as a
+/// Chrome trace-event document with the `"difet"` sidecar.
+pub fn to_json(log: &TraceLog, metrics: Option<&RegistrySnapshot>) -> Json {
+    let dag_pid = log.nodes;
+    let mut events: Vec<Json> = Vec::new();
+    for n in 0..log.nodes {
+        events.push(meta("process_name", n, None, format!("node{n}")));
+        for s in 0..log.slots_per_node {
+            events.push(meta("thread_name", n, Some(s), format!("slot{s}")));
+        }
+    }
+    events.push(meta("process_name", dag_pid, None, "dag".into()));
+    for (i, st) in log.stages.iter().enumerate() {
+        events.push(meta("thread_name", dag_pid, Some(i), format!("stage:{}", st.name)));
+    }
+
+    // Timed events, sorted by (ns, generation order) so the emitted
+    // array is non-decreasing in `ts` and fully deterministic.
+    let mut timed: Vec<(u64, usize, Json)> = Vec::new();
+    let mut push = |timed: &mut Vec<(u64, usize, Json)>, at: u64, ev: Json| {
+        let seq = timed.len();
+        timed.push((at, seq, ev));
+    };
+    for (i, st) in log.stages.iter().enumerate() {
+        let Some((open, end)) = log.stage_span(i) else { continue };
+        let span = |ph: &str, at: u64| {
+            obj(vec![
+                ("ph", Json::Str(ph.into())),
+                ("cat", Json::Str("stage".into())),
+                ("id", num(i as u64)),
+                ("name", Json::Str(st.name.clone())),
+                ("pid", num(dag_pid as u64)),
+                ("tid", num(i as u64)),
+                ("ts", us(at)),
+            ])
+        };
+        push(&mut timed, open, span("b", open));
+        push(&mut timed, end, span("e", end));
+    }
+    for e in &log.events {
+        match e {
+            TraceEvent::Release { stage, unit, at_ns, eager } => {
+                push(
+                    &mut timed,
+                    *at_ns,
+                    obj(vec![
+                        ("ph", Json::Str("i".into())),
+                        ("s", Json::Str("t".into())),
+                        ("cat", Json::Str("release".into())),
+                        ("name", Json::Str(format!("release {}/{unit}", log.stages[*stage].name))),
+                        ("pid", num(dag_pid as u64)),
+                        ("tid", num(*stage as u64)),
+                        ("ts", us(*at_ns)),
+                        ("args", obj(vec![("unit", num(*unit as u64)), ("eager", Json::Bool(*eager))])),
+                    ]),
+                );
+            }
+            TraceEvent::Attempt(a) => {
+                let meta = &log.stages[a.stage].units[a.unit];
+                let deps: Vec<Json> = meta
+                    .deps
+                    .iter()
+                    .map(|(s, u)| Json::Str(format!("{}/{u}", log.stages[*s].name)))
+                    .collect();
+                push(
+                    &mut timed,
+                    a.begin_ns,
+                    obj(vec![
+                        ("ph", Json::Str("X".into())),
+                        ("cat", Json::Str(meta.kind.name().into())),
+                        (
+                            "name",
+                            Json::Str(format!("{}/{}#{}", log.stages[a.stage].name, a.unit, a.attempt)),
+                        ),
+                        ("pid", num(a.node as u64)),
+                        ("tid", num(a.slot as u64)),
+                        ("ts", us(a.begin_ns)),
+                        ("dur", us(a.end_ns - a.begin_ns)),
+                        (
+                            "args",
+                            obj(vec![
+                                ("stage", Json::Str(log.stages[a.stage].name.clone())),
+                                ("unit", num(a.unit as u64)),
+                                ("attempt", num(a.attempt as u64)),
+                                ("launch_seq", num(a.launch_seq)),
+                                ("speculative", Json::Bool(a.speculative)),
+                                ("outcome", Json::Str(a.outcome.name().into())),
+                                ("overhead_ns", num(a.overhead_ns)),
+                                ("io_ns", num(a.io_ns)),
+                                ("compute_ns", num(a.compute_ns)),
+                                ("deps", Json::Arr(deps)),
+                            ]),
+                        ),
+                    ]),
+                );
+            }
+            TraceEvent::StageOpen { .. } | TraceEvent::StageFinalize { .. } => {
+                // Rendered by the b/e async span on the dag process.
+            }
+        }
+    }
+    timed.sort_by_key(|(at, seq, _)| (*at, *seq));
+    events.extend(timed.into_iter().map(|(_, _, e)| e));
+
+    obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".into())),
+        ("difet", sidecar(log, metrics)),
+    ])
+}
+
+fn sidecar(log: &TraceLog, metrics: Option<&RegistrySnapshot>) -> Json {
+    let stages: Vec<Json> = log
+        .stages
+        .iter()
+        .map(|st| {
+            let units: Vec<Json> = st
+                .units
+                .iter()
+                .map(|u| {
+                    let deps: Vec<Json> = u
+                        .deps
+                        .iter()
+                        .map(|(s, un)| Json::Arr(vec![num(*s as u64), num(*un as u64)]))
+                        .collect();
+                    obj(vec![
+                        ("kind", Json::Str(u.kind.name().into())),
+                        ("deps", Json::Arr(deps)),
+                    ])
+                })
+                .collect();
+            obj(vec![
+                ("name", Json::Str(st.name.clone())),
+                ("units", Json::Arr(units)),
+            ])
+        })
+        .collect();
+    let events: Vec<Json> = log.events.iter().map(event_to_json).collect();
+    obj(vec![
+        ("version", num(FORMAT_VERSION)),
+        ("mode", Json::Str(log.mode.clone())),
+        ("nodes", num(log.nodes as u64)),
+        ("slots_per_node", num(log.slots_per_node as u64)),
+        ("sim_ns", num(log.sim_ns)),
+        ("stages", Json::Arr(stages)),
+        ("events", Json::Arr(events)),
+        ("metrics", metrics.map_or(Json::Null, metrics_to_json)),
+    ])
+}
+
+fn event_to_json(e: &TraceEvent) -> Json {
+    match e {
+        TraceEvent::StageOpen { stage, open_ns, base_ns, startup_ns, plan_io_ns } => obj(vec![
+            ("type", Json::Str("stage_open".into())),
+            ("stage", num(*stage as u64)),
+            ("open_ns", num(*open_ns)),
+            ("base_ns", num(*base_ns)),
+            ("startup_ns", num(*startup_ns)),
+            ("plan_io_ns", num(*plan_io_ns)),
+        ]),
+        TraceEvent::Release { stage, unit, at_ns, eager } => obj(vec![
+            ("type", Json::Str("release".into())),
+            ("stage", num(*stage as u64)),
+            ("unit", num(*unit as u64)),
+            ("at_ns", num(*at_ns)),
+            ("eager", Json::Bool(*eager)),
+        ]),
+        TraceEvent::Attempt(a) => obj(vec![
+            ("type", Json::Str("attempt".into())),
+            ("stage", num(a.stage as u64)),
+            ("unit", num(a.unit as u64)),
+            ("attempt", num(a.attempt as u64)),
+            ("launch_seq", num(a.launch_seq)),
+            ("speculative", Json::Bool(a.speculative)),
+            ("node", num(a.node as u64)),
+            ("slot", num(a.slot as u64)),
+            ("begin_ns", num(a.begin_ns)),
+            ("end_ns", num(a.end_ns)),
+            ("overhead_ns", num(a.overhead_ns)),
+            ("io_ns", num(a.io_ns)),
+            ("compute_ns", num(a.compute_ns)),
+            ("outcome", Json::Str(a.outcome.name().into())),
+        ]),
+        TraceEvent::StageFinalize { stage, close_ns } => obj(vec![
+            ("type", Json::Str("stage_finalize".into())),
+            ("stage", num(*stage as u64)),
+            ("close_ns", num(*close_ns)),
+        ]),
+    }
+}
+
+fn metrics_to_json(m: &RegistrySnapshot) -> Json {
+    obj(vec![
+        (
+            "counters",
+            Json::Obj(m.counters.iter().map(|(k, v)| (k.clone(), num(*v))).collect()),
+        ),
+        (
+            "gauges",
+            Json::Obj(m.gauges.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect()),
+        ),
+        (
+            "histograms",
+            Json::Obj(
+                m.histograms
+                    .iter()
+                    .map(|(k, h)| {
+                        (
+                            k.clone(),
+                            obj(vec![
+                                ("n", num(h.n)),
+                                ("sum_secs", Json::Num(h.sum_secs)),
+                                ("max_secs", Json::Num(h.max_secs)),
+                                ("p50", Json::Num(h.p50)),
+                                ("p95", Json::Num(h.p95)),
+                                ("p99", Json::Num(h.p99)),
+                            ]),
+                        )
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// Import
+// ---------------------------------------------------------------------------
+
+fn field<'a>(v: &'a Json, key: &str) -> std::result::Result<&'a Json, String> {
+    v.get(key).ok_or_else(|| format!("missing field {key:?}"))
+}
+
+fn field_u64(v: &Json, key: &str) -> std::result::Result<u64, String> {
+    field(v, key)?
+        .as_u64()
+        .ok_or_else(|| format!("field {key:?} is not a non-negative integer"))
+}
+
+fn field_usize(v: &Json, key: &str) -> std::result::Result<usize, String> {
+    Ok(field_u64(v, key)? as usize)
+}
+
+fn field_bool(v: &Json, key: &str) -> std::result::Result<bool, String> {
+    match field(v, key)? {
+        Json::Bool(b) => Ok(*b),
+        _ => Err(format!("field {key:?} is not a bool")),
+    }
+}
+
+fn field_str<'a>(v: &'a Json, key: &str) -> std::result::Result<&'a str, String> {
+    field(v, key)?
+        .as_str()
+        .ok_or_else(|| format!("field {key:?} is not a string"))
+}
+
+fn field_arr<'a>(v: &'a Json, key: &str) -> std::result::Result<&'a [Json], String> {
+    field(v, key)?
+        .as_arr()
+        .ok_or_else(|| format!("field {key:?} is not an array"))
+}
+
+/// Reconstruct the exact [`TraceLog`] from a document's `"difet"`
+/// sidecar (structural errors only — run [`TraceLog::validate`] for
+/// semantic checks).
+pub fn from_json(doc: &Json) -> std::result::Result<TraceLog, String> {
+    let d = doc
+        .get("difet")
+        .ok_or("missing \"difet\" section (not a difet trace export?)")?;
+    let version = field_u64(d, "version")?;
+    if version != FORMAT_VERSION {
+        return Err(format!("unsupported difet trace version {version} (want {FORMAT_VERSION})"));
+    }
+    let mut stages = Vec::new();
+    for (i, st) in field_arr(d, "stages")?.iter().enumerate() {
+        let mut units = Vec::new();
+        for (u, uj) in field_arr(st, "units")?.iter().enumerate() {
+            let kind = field_str(uj, "kind")?;
+            let kind = UnitKind::parse(kind)
+                .ok_or_else(|| format!("stage {i} unit {u}: unknown kind {kind:?}"))?;
+            let mut deps = Vec::new();
+            for dj in field_arr(uj, "deps")? {
+                let pair = dj.as_arr().filter(|p| p.len() == 2);
+                let pair = pair.ok_or_else(|| format!("stage {i} unit {u}: malformed dep"))?;
+                let ds = pair[0].as_u64().ok_or("dep stage is not an integer")? as usize;
+                let du = pair[1].as_u64().ok_or("dep unit is not an integer")? as usize;
+                deps.push((ds, du));
+            }
+            units.push(UnitMeta { deps, kind });
+        }
+        stages.push(StageTrace { name: field_str(st, "name")?.to_string(), units });
+    }
+    let mut events = Vec::new();
+    for (i, ej) in field_arr(d, "events")?.iter().enumerate() {
+        let ty = field_str(ej, "type").map_err(|m| format!("event {i}: {m}"))?;
+        let ev = match ty {
+            "stage_open" => TraceEvent::StageOpen {
+                stage: field_usize(ej, "stage")?,
+                open_ns: field_u64(ej, "open_ns")?,
+                base_ns: field_u64(ej, "base_ns")?,
+                startup_ns: field_u64(ej, "startup_ns")?,
+                plan_io_ns: field_u64(ej, "plan_io_ns")?,
+            },
+            "release" => TraceEvent::Release {
+                stage: field_usize(ej, "stage")?,
+                unit: field_usize(ej, "unit")?,
+                at_ns: field_u64(ej, "at_ns")?,
+                eager: field_bool(ej, "eager")?,
+            },
+            "attempt" => {
+                let outcome = field_str(ej, "outcome")?;
+                TraceEvent::Attempt(AttemptEvent {
+                    stage: field_usize(ej, "stage")?,
+                    unit: field_usize(ej, "unit")?,
+                    attempt: field_usize(ej, "attempt")?,
+                    launch_seq: field_u64(ej, "launch_seq")?,
+                    speculative: field_bool(ej, "speculative")?,
+                    node: field_usize(ej, "node")?,
+                    slot: field_usize(ej, "slot")?,
+                    begin_ns: field_u64(ej, "begin_ns")?,
+                    end_ns: field_u64(ej, "end_ns")?,
+                    overhead_ns: field_u64(ej, "overhead_ns")?,
+                    io_ns: field_u64(ej, "io_ns")?,
+                    compute_ns: field_u64(ej, "compute_ns")?,
+                    outcome: AttemptOutcome::parse(outcome)
+                        .ok_or_else(|| format!("event {i}: unknown outcome {outcome:?}"))?,
+                })
+            }
+            "stage_finalize" => TraceEvent::StageFinalize {
+                stage: field_usize(ej, "stage")?,
+                close_ns: field_u64(ej, "close_ns")?,
+            },
+            other => return Err(format!("event {i}: unknown type {other:?}")),
+        };
+        events.push(ev);
+    }
+    Ok(TraceLog {
+        mode: field_str(d, "mode")?.to_string(),
+        nodes: field_usize(d, "nodes")?,
+        slots_per_node: field_usize(d, "slots_per_node")?,
+        sim_ns: field_u64(d, "sim_ns")?,
+        stages,
+        events,
+    })
+}
+
+/// Structural validation of the Chrome trace-event section: every
+/// non-metadata event is timestamp-sorted, durations are non-negative,
+/// and every `pid`/`tid` resolves to a declared process/thread.
+pub fn validate_perfetto(doc: &Json) -> std::result::Result<(), String> {
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or("missing traceEvents array")?;
+    let mut procs = BTreeSet::new();
+    let mut threads = BTreeSet::new();
+    for e in events {
+        if e.get("ph").and_then(Json::as_str) == Some("M") {
+            let pid = field_u64(e, "pid")?;
+            match e.get("name").and_then(Json::as_str) {
+                Some("process_name") => {
+                    procs.insert(pid);
+                }
+                Some("thread_name") => {
+                    threads.insert((pid, field_u64(e, "tid")?));
+                }
+                _ => {}
+            }
+        }
+    }
+    let mut last_ts = f64::NEG_INFINITY;
+    let mut async_open: BTreeMap<u64, i64> = BTreeMap::new();
+    for (i, e) in events.iter().enumerate() {
+        let ctx = |m: String| format!("traceEvents[{i}]: {m}");
+        let ph = e
+            .get("ph")
+            .and_then(Json::as_str)
+            .ok_or_else(|| ctx("missing ph".into()))?;
+        if ph == "M" {
+            continue;
+        }
+        let ts = e
+            .get("ts")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| ctx("missing ts".into()))?;
+        if ts < last_ts {
+            return Err(ctx(format!("ts {ts} decreases (prev {last_ts})")));
+        }
+        last_ts = ts;
+        let pid = field_u64(e, "pid").map_err(ctx)?;
+        if !procs.contains(&pid) {
+            return Err(ctx(format!("pid {pid} has no process_name metadata")));
+        }
+        let tid = field_u64(e, "tid").map_err(ctx)?;
+        if !threads.contains(&(pid, tid)) {
+            return Err(ctx(format!("tid {pid}:{tid} has no thread_name metadata")));
+        }
+        match ph {
+            "X" => {
+                let dur = e
+                    .get("dur")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| ctx("X event missing dur".into()))?;
+                if dur < 0.0 {
+                    return Err(ctx(format!("negative dur {dur}")));
+                }
+            }
+            "i" => {}
+            "b" => {
+                *async_open.entry(field_u64(e, "id").map_err(ctx)?).or_insert(0) += 1;
+            }
+            "e" => {
+                let id = field_u64(e, "id").map_err(ctx)?;
+                let open = async_open.entry(id).or_insert(0);
+                *open -= 1;
+                if *open < 0 {
+                    return Err(ctx(format!("async end id {id} without matching begin")));
+                }
+            }
+            other => return Err(ctx(format!("unsupported ph {other:?}"))),
+        }
+    }
+    if let Some((id, _)) = async_open.iter().find(|(_, n)| **n != 0) {
+        return Err(format!("async span id {id} is unbalanced"));
+    }
+    Ok(())
+}
+
+/// Full load path: Perfetto structure, sidecar reconstruction, and the
+/// [`TraceLog`]'s own semantic validation.
+pub fn load(doc: &Json) -> std::result::Result<TraceLog, String> {
+    validate_perfetto(doc)?;
+    let log = from_json(doc)?;
+    log.validate()?;
+    Ok(log)
+}
+
+/// Serialize and write a trace file.
+pub fn write_file(path: &str, log: &TraceLog, metrics: Option<&RegistrySnapshot>) -> Result<()> {
+    std::fs::write(path, format!("{}\n", to_json(log, metrics)))?;
+    Ok(())
+}
+
+/// Read, parse, and fully validate a trace file.
+pub fn read_file(path: &str) -> Result<TraceLog> {
+    let text = std::fs::read_to_string(path)?;
+    let doc = json::parse(&text).map_err(|e| DifetError::Runtime(format!("{path}: {e}")))?;
+    load(&doc).map_err(|e| DifetError::Runtime(format!("{path}: invalid trace: {e}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::TraceSink;
+    use super::*;
+    use crate::metrics::Registry;
+    use crate::trace::critical::critical_path;
+
+    fn sample_log() -> TraceLog {
+        let sink = TraceSink::new(2);
+        sink.register_stage(0, "extract", vec![UnitMeta { deps: vec![], kind: UnitKind::Compute }]);
+        sink.register_stage(
+            1,
+            "merge",
+            vec![UnitMeta { deps: vec![(0, 0)], kind: UnitKind::MergeRoot }],
+        );
+        sink.emit(TraceEvent::StageOpen {
+            stage: 0,
+            open_ns: 1_000,
+            base_ns: 0,
+            startup_ns: 1_000,
+            plan_io_ns: 0,
+        });
+        sink.emit(TraceEvent::Release { stage: 0, unit: 0, at_ns: 1_000, eager: false });
+        sink.emit(TraceEvent::Attempt(AttemptEvent {
+            stage: 0,
+            unit: 0,
+            attempt: 0,
+            launch_seq: 0,
+            speculative: false,
+            node: 0,
+            slot: 0,
+            begin_ns: 1_000,
+            end_ns: 4_500,
+            overhead_ns: 500,
+            io_ns: 1_000,
+            compute_ns: 2_000,
+            outcome: AttemptOutcome::Won,
+        }));
+        sink.emit(TraceEvent::StageFinalize { stage: 0, close_ns: 4_500 });
+        sink.emit(TraceEvent::StageOpen {
+            stage: 1,
+            open_ns: 1_250,
+            base_ns: 1_000,
+            startup_ns: 0,
+            plan_io_ns: 250,
+        });
+        sink.emit(TraceEvent::Release { stage: 1, unit: 0, at_ns: 4_500, eager: false });
+        sink.emit(TraceEvent::Attempt(AttemptEvent {
+            stage: 1,
+            unit: 0,
+            attempt: 0,
+            launch_seq: 1,
+            speculative: false,
+            node: 0,
+            slot: 0,
+            begin_ns: 4_500,
+            end_ns: 6_000,
+            overhead_ns: 500,
+            io_ns: 0,
+            compute_ns: 1_000,
+            outcome: AttemptOutcome::Won,
+        }));
+        sink.emit(TraceEvent::StageFinalize { stage: 1, close_ns: 6_000 });
+        sink.seal("pipelined", 1, 1, 6_000)
+    }
+
+    #[test]
+    fn export_import_round_trips_exactly() {
+        let log = sample_log();
+        log.validate().unwrap();
+        let reg = Registry::new();
+        reg.counter("units_total").add(2);
+        reg.histogram("unit_secs").observe(0.0035);
+        let doc = to_json(&log, Some(&reg.snapshot()));
+        // Serialize → reparse → full load (structure + semantics).
+        let text = doc.to_string();
+        let back = json::parse(&text).unwrap();
+        let log2 = load(&back).unwrap();
+        assert_eq!(log2.mode, log.mode);
+        assert_eq!((log2.nodes, log2.slots_per_node, log2.sim_ns), (1, 1, 6_000));
+        assert_eq!(log2.stages.len(), 2);
+        assert_eq!(log2.stages[1].units[0].deps, vec![(0, 0)]);
+        assert_eq!(log2.events.len(), log.events.len());
+        // The reconstructed log attributes identically.
+        let (a, b) = (critical_path(&log), critical_path(&log2));
+        assert_eq!(a.total_ns, b.total_ns);
+        for (cat, ns) in a.breakdown() {
+            assert_eq!(ns, b.ns(cat), "category {} differs", cat.name());
+        }
+        // Metrics survive in the sidecar.
+        let m = back.get("difet").unwrap().get("metrics").unwrap();
+        assert_eq!(m.get("counters").unwrap().get("units_total").unwrap().as_u64(), Some(2));
+        assert!(m.get("histograms").unwrap().get("unit_secs").unwrap().get("p99").is_some());
+    }
+
+    #[test]
+    fn validate_rejects_unsorted_and_dangling() {
+        let log = sample_log();
+        let doc = to_json(&log, None);
+        // Reverse the timed events: ts ordering breaks.
+        let mut tampered = doc.clone();
+        if let Json::Obj(m) = &mut tampered {
+            if let Some(Json::Arr(evs)) = m.get_mut("traceEvents") {
+                evs.reverse();
+            }
+        }
+        let err = validate_perfetto(&tampered).unwrap_err();
+        assert!(err.contains("decreases") || err.contains("metadata"), "{err}");
+        // Drop the thread metadata: tids dangle.
+        let mut tampered = doc.clone();
+        if let Json::Obj(m) = &mut tampered {
+            if let Some(Json::Arr(evs)) = m.get_mut("traceEvents") {
+                evs.retain(|e| {
+                    e.get("name").and_then(Json::as_str) != Some("thread_name")
+                });
+            }
+        }
+        let err = validate_perfetto(&tampered).unwrap_err();
+        assert!(err.contains("thread_name"), "{err}");
+        // The untampered document passes.
+        validate_perfetto(&doc).unwrap();
+    }
+
+    #[test]
+    fn write_and_read_file_round_trip() {
+        let log = sample_log();
+        let dir = std::env::temp_dir().join("difet_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.json");
+        let path = path.to_str().unwrap();
+        write_file(path, &log, None).unwrap();
+        let back = read_file(path).unwrap();
+        assert_eq!(back.sim_ns, log.sim_ns);
+        assert_eq!(back.events.len(), log.events.len());
+        std::fs::remove_file(path).ok();
+    }
+}

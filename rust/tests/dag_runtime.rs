@@ -11,7 +11,8 @@ use std::sync::{Arc, Mutex};
 
 use difet::config::Config;
 use difet::coordinator::{
-    run_dag, DagStage, ExecMode, Gate, StagePlan, TaskHandle, UnitOutput, UnitRef, UnitSpec,
+    run_dag, DagReport, DagStage, ExecMode, Gate, StagePlan, TaskHandle, UnitOutput, UnitRef,
+    UnitSpec,
 };
 use difet::dfs::NodeId;
 use difet::metrics::Registry;
@@ -174,12 +175,13 @@ fn random_topology(
     (stages, fails, slows)
 }
 
-fn run_topology(
+fn run_topology_with(
     topology: &[(Vec<Gate>, Vec<Vec<UnitRef>>)],
     fails: &[Vec<usize>],
     slows: &[Vec<bool>],
     mode: ExecMode,
-) -> BTreeMap<(usize, usize), u64> {
+    trace: bool,
+) -> (BTreeMap<(usize, usize), u64>, DagReport) {
     let store = Arc::new(Mutex::new(BTreeMap::new()));
     let stages: Vec<SynthStage> = topology
         .iter()
@@ -195,10 +197,21 @@ fn run_topology(
         .collect();
     let refs: Vec<&dyn DagStage> = stages.iter().map(|s| s as &dyn DagStage).collect();
     let registry = Registry::new();
-    run_dag(&dag_cfg(), &refs, mode, &registry).expect("dag run");
+    let mut cfg = dag_cfg();
+    cfg.scheduler.trace = trace;
+    let rep = run_dag(&cfg, &refs, mode, &registry).expect("dag run");
     drop(refs);
     drop(stages);
-    Arc::try_unwrap(store).unwrap().into_inner().unwrap()
+    (Arc::try_unwrap(store).unwrap().into_inner().unwrap(), rep)
+}
+
+fn run_topology(
+    topology: &[(Vec<Gate>, Vec<Vec<UnitRef>>)],
+    fails: &[Vec<usize>],
+    slows: &[Vec<bool>],
+    mode: ExecMode,
+) -> BTreeMap<(usize, usize), u64> {
+    run_topology_with(topology, fails, slows, mode, false).0
 }
 
 #[test]
@@ -235,6 +248,40 @@ fn retried_and_speculated_units_do_not_change_outputs_or_double_merge() {
         let got = run_topology(&topology, &fails, &slows, mode);
         assert_eq!(got, truth, "{mode:?} with retries+speculation diverged");
         assert_eq!(got.len(), 8, "every unit merged exactly once");
+    }
+}
+
+/// Tracing is pure observation: with the sink on, merged outputs stay
+/// bit-identical in both modes, every event nests inside its stage
+/// span (`TraceLog::validate`), and the critical-path walk attributes
+/// *all* simulated time — its length equals the run's reported sim
+/// clock exactly, with injected retries and speculation in the mix.
+#[test]
+fn tracing_is_pure_observation_and_attributes_all_sim_time() {
+    let mut rng = Pcg32::new(0x7EACE, 0x0FF5E7);
+    for case in 0..8 {
+        let (topology, fails, slows) = random_topology(&mut rng);
+        for mode in [ExecMode::Pipelined, ExecMode::Barrier] {
+            let (plain, plain_rep) = run_topology_with(&topology, &fails, &slows, mode, false);
+            let (traced, rep) = run_topology_with(&topology, &fails, &slows, mode, true);
+            assert_eq!(plain, traced, "case {case} {mode:?}: tracing changed merged outputs");
+            assert!(plain_rep.trace.is_none(), "trace off must not record a log");
+            let log = rep.trace.as_ref().expect("trace on records a log");
+            log.validate()
+                .unwrap_or_else(|e| panic!("case {case} {mode:?}: invalid trace: {e}"));
+            let cp = rep.critical_path.as_ref().expect("trace on computes the critical path");
+            assert_eq!(
+                cp.total_ns, log.sim_ns,
+                "case {case} {mode:?}: critical-path length != reported sim time"
+            );
+            assert_eq!(
+                cp.attributed_ns(),
+                cp.total_ns,
+                "case {case} {mode:?}: sim time leaked out of the attribution"
+            );
+            // Same run, so the report's clock is the log's clock exactly.
+            assert_eq!(rep.sim_seconds, log.sim_ns as f64 * 1e-9);
+        }
     }
 }
 
