@@ -1,7 +1,9 @@
 //! Hot-path microbenches (§Perf): per-tile latency of every algorithm on
 //! both executors, the L1 kernel twins, HIB decode, scene generation and
 //! the DFS read path.  This is the profile the optimization pass iterates
-//! against; before/after numbers live in EXPERIMENTS.md §Perf.
+//! against; for in-pipeline per-kernel attribution (exclusive time,
+//! MP/s, flamegraphs) use the wall-clock profiler instead — README
+//! §Profiling, `difet profile`.
 
 use difet::config::SceneConfig;
 use difet::coordinator::driver::{NativeExecutor, TileExecutor};

@@ -13,7 +13,11 @@
 //!   `BTreeMap`/`BTreeSet`.
 //! * `wall-clock` — `Instant::now` / `SystemTime`.  Wall time may feed
 //!   *virtual-time accounting* (allowlisted per use) but must never
-//!   influence output bytes.
+//!   influence output bytes.  The one *path-scoped* exemption
+//!   ([`SANCTIONED_WALLCLOCK_MODULES`]) is the scoped profiler, whose
+//!   entire job is reading the monotonic clock and whose purity
+//!   (bit-identical output profiled vs not) the e2e property suite
+//!   proves dynamically.
 //! * `thread-spawn` — `thread::spawn` or a `.spawn(...)` call outside
 //!   the sanctioned executors.  Ad-hoc threads are where unordered
 //!   merges sneak in.  The sanctioned executors are a *path-scoped*
@@ -57,6 +61,16 @@ pub const DEFAULT_ALLOWLIST: &str = include_str!("allowlist.toml");
 /// Path-scoped like `unsafe-outside-runtime`, not allowlisted — adding
 /// a third executor is a deliberate edit here, reviewed as such.
 pub const SANCTIONED_SPAWN_MODULES: [&str; 2] = ["coordinator/dag.rs", "pipeline/ingest.rs"];
+
+/// The only module allowed to read the wall clock without a per-use
+/// allowlist entry: the scoped profiler, which exists to measure real
+/// time and confines every `Instant::now` behind `profile::clock_ns`.
+/// Its purity (bit-identical outputs with profiling on vs off) is
+/// enforced by the `profile_purity` property suite, so the static
+/// waiver never hides an output-bytes dependency.  Path-scoped like
+/// [`SANCTIONED_SPAWN_MODULES`], not allowlisted — widening it is a
+/// deliberate edit here, reviewed as such.
+pub const SANCTIONED_WALLCLOCK_MODULES: [&str; 1] = ["profile/mod.rs"];
 
 /// One determinism hazard found in a source file.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -179,13 +193,21 @@ pub fn scan_source(rel_path: &str, src: &str) -> Vec<Finding> {
                 line: t.line,
                 detail: format!("`{name}` has randomized iteration order; use BTree{}", &name[4..]),
             }),
-            "SystemTime" => out.push(Finding {
-                rule: "wall-clock",
-                file: rel_path.to_string(),
-                line: t.line,
-                detail: "`SystemTime` read".to_string(),
-            }),
+            "SystemTime" => {
+                if SANCTIONED_WALLCLOCK_MODULES.contains(&rel_path) {
+                    continue;
+                }
+                out.push(Finding {
+                    rule: "wall-clock",
+                    file: rel_path.to_string(),
+                    line: t.line,
+                    detail: "`SystemTime` read".to_string(),
+                });
+            }
             "Instant" => {
+                if SANCTIONED_WALLCLOCK_MODULES.contains(&rel_path) {
+                    continue;
+                }
                 if punct(i + 1) == Some(':')
                     && punct(i + 2) == Some(':')
                     && ident(i + 3) == Some("now")
@@ -528,6 +550,21 @@ mod tests {
         // …and other hazards in the sanctioned files are NOT exempt.
         assert_eq!(
             rules("coordinator/dag.rs", "fn f() { let m: HashMap<u32, u32>; }"),
+            vec!["hash-collection"]
+        );
+    }
+
+    #[test]
+    fn sanctioned_clock_owner_may_read_time_others_may_not() {
+        let src = "fn f() { let t = std::time::Instant::now(); let s = SystemTime::now(); }";
+        for module in SANCTIONED_WALLCLOCK_MODULES {
+            assert!(rules(module, src).is_empty(), "{module} is the sanctioned clock owner");
+        }
+        // The exemption is exact-path, not prefix: siblings still flag.
+        assert_eq!(rules("profile/report.rs", src), vec!["wall-clock", "wall-clock"]);
+        // …and other hazards in the sanctioned file are NOT exempt.
+        assert_eq!(
+            rules("profile/mod.rs", "fn f() { let m: HashMap<u32, u32>; }"),
             vec!["hash-collection"]
         );
     }

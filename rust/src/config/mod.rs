@@ -140,12 +140,25 @@ pub struct SchedulerConfig {
     /// several DAGs (e.g. a non-fused extract sweep), the last DAG's
     /// trace wins — the file is rewritten per DAG.
     pub trace_path: Option<String>,
+    /// Enable the wall-clock kernel profiler (`crate::profile`): scoped
+    /// per-kernel exclusive/inclusive nanoseconds and MP/s / MB/s
+    /// throughput.  Pure observation — outputs are bit-identical on or
+    /// off.  Implied by `profile_path`.
+    pub profile: bool,
+    /// Write the per-kernel profile report (table + collapsed stacks)
+    /// to this file at the end of the run (`difet <cmd> --profile out.txt`).
+    pub profile_path: Option<String>,
 }
 
 impl SchedulerConfig {
     /// Is the trace sink threaded through the DAG executor?
     pub fn trace_enabled(&self) -> bool {
         self.trace || self.trace_path.is_some()
+    }
+
+    /// Is the wall-clock profiler recording?
+    pub fn profile_enabled(&self) -> bool {
+        self.profile || self.profile_path.is_some()
     }
 }
 
@@ -162,6 +175,8 @@ impl Default for SchedulerConfig {
             audit: true,
             trace: false,
             trace_path: None,
+            profile: false,
+            profile_path: None,
         }
     }
 }
@@ -276,6 +291,8 @@ impl Config {
             "scheduler.audit" => self.scheduler.audit = p(key, val)?,
             "scheduler.trace" => self.scheduler.trace = p(key, val)?,
             "scheduler.trace_path" => self.scheduler.trace_path = Some(val.to_string()),
+            "scheduler.profile" => self.scheduler.profile = p(key, val)?,
+            "scheduler.profile_path" => self.scheduler.profile_path = Some(val.to_string()),
             "scheduler.queue_depth" => self.scheduler.queue_depth = p(key, val)?,
             "storage.block_size" => self.storage.block_size = p(key, val)?,
             "storage.compress" => self.storage.compress = p(key, val)?,

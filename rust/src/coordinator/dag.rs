@@ -237,6 +237,11 @@ pub struct StageReport {
     /// Virtual slot-busy seconds per node inside this stage (every
     /// completed attempt, winners and losing twins alike).
     pub node_busy_secs: Vec<f64>,
+    /// Host wall-clock seconds spent inside `run_unit` across all
+    /// attempts of this stage — the real-time twin of the virtual-time
+    /// columns, so sim-time attribution and wall-time cost line up in
+    /// one table (see `crate::profile`).
+    pub real_seconds: f64,
 }
 
 impl StageReport {
@@ -363,6 +368,8 @@ struct StageState {
     max_depth: u64,
     /// Virtual slot-busy ns per node charged to this stage.
     node_busy_ns: Vec<u64>,
+    /// Host wall-clock ns spent inside `run_unit` for this stage.
+    real_ns: u64,
     /// Whether a `StageOpen` trace event was emitted for this stage.
     trace_opened: bool,
 }
@@ -388,6 +395,7 @@ impl StageState {
             depth: 0,
             max_depth: 0,
             node_busy_ns: vec![0; nodes],
+            real_ns: 0,
             trace_opened: false,
         }
     }
@@ -879,7 +887,20 @@ impl<'a> DagExec<'a> {
                     outcome,
                 })
             };
-            match self.stages[stage].run_unit(unit, &handle, node) {
+            // Real-time accounting around the actual compute: one
+            // monotonic read on each side (always on — `wall_seconds`
+            // is measured unconditionally too) plus a profiler span
+            // named after the stage so kernel spans nest under it.
+            let unit_result = {
+                let real_t0 = crate::profile::clock_ns();
+                let span = crate::profile::enter(self.stages[stage].name());
+                let unit_result = self.stages[stage].run_unit(unit, &handle, node);
+                drop(span);
+                let real_ns = crate::profile::clock_ns().saturating_sub(real_t0);
+                self.state.lock().unwrap().stages[stage].real_ns += real_ns;
+                unit_result
+            };
+            match unit_result {
                 Ok(Some(out)) => {
                     let io_ns = secs_to_ns(out.io_secs);
                     let virtual_ns = self.overhead_ns + io_ns + out.compute_ns;
@@ -976,12 +997,16 @@ impl<'a> DagExec<'a> {
                 eager_units: s.eager,
                 max_queue_depth: s.max_depth,
                 node_busy_secs: s.node_busy_ns.iter().map(|&b| b as f64 * 1e-9).collect(),
+                real_seconds: s.real_ns as f64 * 1e-9,
             });
         }
         registry.gauge("dag_stage_overlap_max").set(st.max_overlap as f64);
         registry
             .counter("dag_eager_units")
             .add(st.stages.iter().map(|s| s.eager).sum());
+        if crate::profile::is_enabled() {
+            crate::profile::snapshot().export_gauges(registry);
+        }
         let max_stage_overlap = st.max_overlap;
         drop(st);
         let (trace_log, cp) = match &self.trace {

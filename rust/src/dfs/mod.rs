@@ -130,6 +130,8 @@ impl Dfs {
     /// local replicas; fails only if some block has no alive replica.
     pub fn read_file(&self, path: &str, reader: NodeId) -> Result<(Vec<u8>, ReadStats)> {
         let meta = self.namenode.file_meta(path)?;
+        let span = crate::profile::enter("dfs_read");
+        span.bytes(meta.len);
         let mut out = Vec::with_capacity(meta.len as usize);
         let mut stats = ReadStats::default();
         for b in &meta.blocks {
@@ -159,6 +161,8 @@ impl Dfs {
         if start >= end {
             return Ok((Vec::new(), ReadStats::default()));
         }
+        let span = crate::profile::enter("dfs_read");
+        span.bytes(end - start);
         let mut out = Vec::with_capacity((end - start) as usize);
         let mut stats = ReadStats::default();
         let mut off = 0u64;

@@ -2,8 +2,10 @@
 //!
 //! Mirrors `python/compile/kernels/ref.py` (and therefore the Pallas
 //! kernels) operator-for-operator.  The blur is the sequential baseline's
-//! hot loop; `benches/hotpath.rs` tracks its throughput and the §Perf
-//! pass optimized it from a naive 2-D loop into the row-buffer form below.
+//! hot loop; `benches/hotpath.rs` tracks its throughput, the wall-clock
+//! profiler (README §Profiling, `difet profile`) attributes its MP/s, and
+//! the perf pass optimized it from a naive 2-D loop into the row-buffer
+//! form below.
 
 use super::gray::GrayImage;
 
@@ -34,6 +36,8 @@ pub fn blur(img: &GrayImage, sigma: f32, radius: usize) -> GrayImage {
 /// tensor's window sum — §Perf: one row-buffered implementation instead
 /// of two, and no per-pixel clamped loads on the hot path).
 pub fn separable(img: &GrayImage, taps: &[f32]) -> GrayImage {
+    let span = crate::profile::enter("separable");
+    span.pixels((img.width * img.height) as u64);
     let radius = taps.len() / 2;
     let (w, h) = (img.width, img.height);
     let r = radius as i64;
@@ -74,10 +78,13 @@ pub fn separable(img: &GrayImage, taps: &[f32]) -> GrayImage {
 /// 3×3 Sobel gradients (÷8 normalization, identical to `ref.sobel_valid`
 /// over an edge-padded input — i.e. full-size output with clamped reads).
 ///
-/// §Perf: row-buffered — three padded row slices per output row, unit
+/// Perf note: row-buffered — three padded row slices per output row, unit
 /// stride inner loops, no per-pixel bounds clamping (was a per-pixel
-/// closure; 2.8× faster, see EXPERIMENTS.md §Perf).
+/// closure; 2.8× faster — the profiler's `sobel` row in README §Profiling
+/// tracks it).
 pub fn sobel(img: &GrayImage) -> (GrayImage, GrayImage) {
+    let span = crate::profile::enter("sobel");
+    span.pixels((img.width * img.height) as u64);
     let (w, h) = (img.width, img.height);
     let mut ix = GrayImage::new(w, h);
     let mut iy = GrayImage::new(w, h);

@@ -78,48 +78,63 @@ pub fn extract_multi(
         let (ixx, iyy, ixy) = tensor.as_ref().unwrap();
         harris::response_from_tensor(ixx, iyy, ixy, harris::Mode::ShiTomasi)
     });
-    let fast_maps = plan.fast_maps.then(|| fast::maps(gray, params::FAST_T));
-    let smooth = plan.smooth.then(|| brief::smoothed(gray));
+    let fast_maps = plan.fast_maps.then(|| {
+        let span = crate::profile::enter("fast_maps");
+        span.pixels((gray.width * gray.height) as u64);
+        fast::maps(gray, params::FAST_T)
+    });
+    let smooth = plan.smooth.then(|| {
+        let span = crate::profile::enter("brief_smooth");
+        span.pixels((gray.width * gray.height) as u64);
+        brief::smoothed(gray)
+    });
 
     // --- per-algorithm tails over the shared pieces -----------------------
+    let px = (gray.width * gray.height) as u64;
     algs.iter()
         .zip(caps)
-        .map(|(&alg, &cap)| match alg {
-            Algorithm::Harris => harris::extract_from_response(
-                harris_resp.as_ref().unwrap(),
-                harris::Mode::Harris,
-                core,
-                cap,
-            ),
-            Algorithm::ShiTomasi => harris::extract_from_response(
-                shi_resp.as_ref().unwrap(),
-                harris::Mode::ShiTomasi,
-                core,
-                cap,
-            ),
-            Algorithm::Sift => sift::extract(gray, core, cap),
-            Algorithm::Surf => surf::extract(gray, core, cap),
-            Algorithm::Fast => {
-                // The mask is shared with ORB, so this consumer clones.
-                let (mask, score) = fast_maps.as_ref().unwrap();
-                fast::extract_from_maps(mask.clone(), score, core, cap)
-            }
-            Algorithm::Brief => brief::extract_from_parts(
-                shi_resp.as_ref().unwrap(),
-                smooth.as_ref().unwrap(),
-                core,
-                cap,
-            ),
-            Algorithm::Orb => {
-                let (mask, _) = fast_maps.as_ref().unwrap();
-                orb::extract_from_parts(
-                    gray,
-                    mask.clone(),
+        .map(|(&alg, &cap)| {
+            // Same span name as the standalone path so the kernel table
+            // aggregates fused and per-algorithm runs under one row.
+            let span = crate::profile::enter(alg.name());
+            span.pixels(px);
+            match alg {
+                Algorithm::Harris => harris::extract_from_response(
                     harris_resp.as_ref().unwrap(),
+                    harris::Mode::Harris,
+                    core,
+                    cap,
+                ),
+                Algorithm::ShiTomasi => harris::extract_from_response(
+                    shi_resp.as_ref().unwrap(),
+                    harris::Mode::ShiTomasi,
+                    core,
+                    cap,
+                ),
+                Algorithm::Sift => sift::extract(gray, core, cap),
+                Algorithm::Surf => surf::extract(gray, core, cap),
+                Algorithm::Fast => {
+                    // The mask is shared with ORB, so this consumer clones.
+                    let (mask, score) = fast_maps.as_ref().unwrap();
+                    fast::extract_from_maps(mask.clone(), score, core, cap)
+                }
+                Algorithm::Brief => brief::extract_from_parts(
+                    shi_resp.as_ref().unwrap(),
                     smooth.as_ref().unwrap(),
                     core,
                     cap,
-                )
+                ),
+                Algorithm::Orb => {
+                    let (mask, _) = fast_maps.as_ref().unwrap();
+                    orb::extract_from_parts(
+                        gray,
+                        mask.clone(),
+                        harris_resp.as_ref().unwrap(),
+                        smooth.as_ref().unwrap(),
+                        core,
+                        cap,
+                    )
+                }
             }
         })
         .collect()

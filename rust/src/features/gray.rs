@@ -32,6 +32,8 @@ impl GrayImage {
 
     /// BT.601 luma of an RGBA8 image (identical to `ops.grayscale`).
     pub fn from_rgba(img: &Rgba8Image) -> Self {
+        let span = crate::profile::enter("gray");
+        span.pixels((img.width * img.height) as u64);
         let mut out = GrayImage::new(img.width, img.height);
         for (dst, px) in out.data.iter_mut().zip(img.data.chunks_exact(4)) {
             *dst = (0.299 * px[0] as f32 + 0.587 * px[1] as f32 + 0.114 * px[2] as f32)
@@ -43,6 +45,8 @@ impl GrayImage {
     /// From the HWC f32 RGBA tile layout the PJRT executables consume.
     pub fn from_tile_f32(tile: &[f32], width: usize, height: usize) -> Self {
         assert_eq!(tile.len(), width * height * 4);
+        let span = crate::profile::enter("gray");
+        span.pixels((width * height) as u64);
         let mut out = GrayImage::new(width, height);
         for (dst, px) in out.data.iter_mut().zip(tile.chunks_exact(4)) {
             *dst = (0.299 * px[0] + 0.587 * px[1] + 0.114 * px[2]) * (1.0 / 255.0);

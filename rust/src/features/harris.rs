@@ -19,6 +19,8 @@ pub enum Mode {
 /// ORB's detectors) derive from.  [`crate::features::fused`] computes it
 /// once per tile and feeds every consumer.
 pub fn structure_tensor(gray: &GrayImage) -> (GrayImage, GrayImage, GrayImage) {
+    let span = crate::profile::enter("structure_tensor");
+    span.pixels((gray.width * gray.height) as u64);
     let (ix, iy) = sobel(gray);
     let (w, h) = (gray.width, gray.height);
     let mut ixx = GrayImage::new(w, h);
@@ -66,9 +68,10 @@ pub fn response(gray: &GrayImage, mode: Mode) -> GrayImage {
 }
 
 fn window(img: &GrayImage, taps: &[f32]) -> GrayImage {
-    // §Perf: delegates to the shared row-buffered separable filter (the
+    // Perf note: delegates to the shared row-buffered separable filter (the
     // original per-pixel clamped horizontal pass was the hot spot of the
-    // whole native executor — see EXPERIMENTS.md §Perf).
+    // whole native executor — the profiler's `separable` row tracks it,
+    // see README §Profiling).
     super::conv::separable(img, taps)
 }
 

@@ -266,6 +266,10 @@ pub fn extract(
     core: (usize, usize, usize, usize),
     cap: usize,
 ) -> Extraction {
+    // Per-algorithm profiling scope: the span name is the kernel-table
+    // row, pixels feed its MP/s column (see `crate::profile`).
+    let span = crate::profile::enter(alg.name());
+    span.pixels((gray.width * gray.height) as u64);
     match alg {
         Algorithm::Harris => harris::extract(gray, core, cap, harris::Mode::Harris),
         Algorithm::ShiTomasi => harris::extract(gray, core, cap, harris::Mode::ShiTomasi),

@@ -47,6 +47,8 @@ pub fn rank_truncate(kps: &mut Vec<Keypoint>, descriptors: &mut super::Descripto
 /// Strict 3×3 (radius-1) NMS: survivors equal the max of their window.
 /// `mask[i]` must already hold the thresholded candidacy.
 pub fn nms_inplace(resp: &GrayImage, mask: &mut [bool], radius: usize) {
+    let span = crate::profile::enter("nms");
+    span.pixels((resp.width * resp.height) as u64);
     let (w, h) = (resp.width, resp.height);
     let r = radius as i64;
     for row in 0..h as i64 {

@@ -39,7 +39,11 @@ impl Codec {
 pub fn encode(codec: Codec, rgba: &[u8], level: u32) -> Result<Vec<u8>> {
     match codec {
         Codec::Raw => Ok(rgba.to_vec()),
-        Codec::Deflate => Ok(flate::deflate(rgba, level)),
+        Codec::Deflate => {
+            let span = crate::profile::enter("deflate");
+            span.bytes(rgba.len() as u64);
+            Ok(flate::deflate(rgba, level))
+        }
     }
 }
 
@@ -48,8 +52,11 @@ pub fn encode(codec: Codec, rgba: &[u8], level: u32) -> Result<Vec<u8>> {
 pub fn decode(codec: Codec, payload: &[u8], expected_len: usize) -> Result<Vec<u8>> {
     let out = match codec {
         Codec::Raw => payload.to_vec(),
-        Codec::Deflate => flate::inflate(payload, expected_len)
-            .map_err(DifetError::CorruptBundle)?,
+        Codec::Deflate => {
+            let span = crate::profile::enter("inflate");
+            span.bytes(expected_len as u64);
+            flate::inflate(payload, expected_len).map_err(DifetError::CorruptBundle)?
+        }
     };
     if out.len() != expected_len {
         return Err(DifetError::CorruptBundle(format!(

@@ -38,6 +38,7 @@ pub mod imagery;
 pub mod metrics;
 pub mod mosaic;
 pub mod pipeline;
+pub mod profile;
 pub mod runtime;
 pub mod trace;
 pub mod util;

@@ -12,6 +12,7 @@
 //! difet stitch      register + align + composite one mosaic (4-stage DAG)
 //! difet vectorize   stitch + segment + label + trace objects (9-stage DAG)
 //! difet bench       pipelined-vs-barrier DAG sweep → BENCH_8.json
+//! difet profile     profiled fused sweep → per-kernel MP/s table (BENCH_9)
 //! difet audit       determinism audit: lint the crate sources (Layer 1)
 //! difet trace       analyze a --trace JSON: validate + critical path
 //! difet inspect     show artifact manifest + cluster configuration
@@ -36,6 +37,13 @@
 //! ui.perfetto.dev, or feed it back to `difet trace out.json` for the
 //! critical-path attribution table).
 //!
+//! Every subcommand also accepts `--profile out.txt`: the wall-clock
+//! kernel profiler ([`difet::profile`]) records scoped per-kernel
+//! exclusive/inclusive time plus MP/s / MB/s throughput and writes the
+//! report at exit.  `difet profile` runs a self-checking profiled fused
+//! sweep and exports collapsed stacks (`--out`) and the per-kernel
+//! throughput JSON CI gates on (`--json`, see README §Profiling).
+//!
 //! Per-subcommand request building goes through the shared helpers below
 //! (`apply_registration_flags` + the `util::args` list/pair parsers), so
 //! each new stage reuses the previous stages' flags instead of
@@ -50,7 +58,7 @@ use difet::pipeline::{
 use difet::util::args::{help_text, FlagSpec, ParsedArgs};
 use difet::util::json::Json;
 
-const USAGE: &str = "difet <extract|sequential|census|scalability|register|stitch|vectorize|bench|audit|trace|inspect> [options]";
+const USAGE: &str = "difet <extract|sequential|census|scalability|register|stitch|vectorize|bench|profile|audit|trace|inspect> [options]";
 
 fn flag_specs() -> Vec<FlagSpec> {
     vec![
@@ -77,8 +85,10 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "threshold", takes_value: true, help: "vectorize: luma threshold in [0,1] (default 0.5)" },
         FlagSpec { name: "min-area", takes_value: true, help: "vectorize: min object area px (default 8)" },
         FlagSpec { name: "epsilon", takes_value: true, help: "vectorize: Douglas-Peucker tolerance px (default 1.5)" },
-        FlagSpec { name: "out", takes_value: true, help: "stitch: mosaic .hib path; vectorize: GeoJSON path; bench: JSON path (default BENCH_8.json)" },
+        FlagSpec { name: "out", takes_value: true, help: "stitch: mosaic .hib path; vectorize: GeoJSON path; bench: JSON path (default BENCH_8.json); profile: collapsed-stacks path" },
         FlagSpec { name: "trace", takes_value: true, help: "write a Perfetto trace of the run's DAG to this JSON path" },
+        FlagSpec { name: "profile", takes_value: true, help: "write the wall-clock kernel profile (per-kernel table + span tree) to this path" },
+        FlagSpec { name: "json", takes_value: true, help: "profile: write the per-kernel throughput JSON (the BENCH_9 shape) to this path" },
         FlagSpec { name: "bare", takes_value: false, help: "disable the I/O cost model" },
         FlagSpec { name: "verbose", takes_value: false, help: "print counters/metrics" },
         FlagSpec { name: "help", takes_value: false, help: "show this help" },
@@ -144,6 +154,9 @@ fn build_config(p: &ParsedArgs, nodes_is_list: bool) -> Result<Config, String> {
     }
     if let Some(path) = p.get("trace") {
         cfg.scheduler.trace_path = Some(path.to_string());
+    }
+    if let Some(path) = p.get("profile") {
+        cfg.scheduler.profile_path = Some(path.to_string());
     }
     cfg.validate().map_err(|e| e.to_string())?;
     Ok(cfg)
@@ -249,6 +262,9 @@ fn run(p: &ParsedArgs) -> Result<(), String> {
     let cfg = build_config(p, sub == "bench")?;
     let req = build_request(p)?;
     let verbose = p.has("verbose");
+    if cfg.scheduler.profile_enabled() {
+        difet::profile::enable();
+    }
 
     match sub {
         "extract" => {
@@ -388,6 +404,9 @@ fn run(p: &ParsedArgs) -> Result<(), String> {
         "bench" => {
             run_bench(p, &cfg, &req)?;
         }
+        "profile" => {
+            run_profile(p, &cfg, &req)?;
+        }
         "audit" => {
             // Layer 1 of the determinism audit: lint the crate's own
             // sources against the checked-in allowlist.  Layers 2/3 run
@@ -454,6 +473,19 @@ fn run(p: &ParsedArgs) -> Result<(), String> {
         }
         other => {
             return Err(format!("unknown subcommand {other:?}\n{}", help_text(USAGE, &flag_specs())));
+        }
+    }
+    // End-of-run profile sink for every ordinary subcommand (`difet
+    // profile` writes its own outputs and drains the tree itself).
+    if sub != "profile" && cfg.scheduler.profile_enabled() {
+        let report = difet::profile::take_report();
+        report.validate().map_err(|e| format!("profile report invalid: {e}"))?;
+        match &cfg.scheduler.profile_path {
+            Some(path) => {
+                std::fs::write(path, report.render_text()).map_err(|e| e.to_string())?;
+                println!("\nwall-clock profile written to {path}");
+            }
+            None => print!("\n{}", report.render_text()),
         }
     }
     Ok(())
@@ -689,6 +721,107 @@ fn run_bench(p: &ParsedArgs, cfg: &Config, req: &ExtractRequest) -> Result<(), S
     println!("\nwrote {path}");
     if !all_parity {
         return Err("bench parity check FAILED: pipelined / barrier / sequential outputs differ".into());
+    }
+    Ok(())
+}
+
+/// `difet profile`: the wall-clock twin of `difet trace`.  Runs one
+/// profiled fused extraction sweep (compressed bundles forced on so the
+/// DEFLATE/CRC32/DFS spans appear alongside every requested algorithm),
+/// prints the per-kernel table + span tree, and fails unless every
+/// requested algorithm reports nonzero MP/s and the codec/IO spans
+/// report nonzero MB/s — the self-check CI's perf leg builds on.
+/// `--out` writes collapsed stacks (flamegraph.pl / inferno /
+/// speedscope), `--json` the per-kernel throughput JSON (`BENCH_9.json`
+/// in CI), `--profile` the full text report.
+fn run_profile(p: &ParsedArgs, cfg: &Config, req: &ExtractRequest) -> Result<(), String> {
+    let mut c = cfg.clone();
+    c.storage.compress = true;
+    let ereq = ExtractRequest { fused: true, write_output: false, ..req.clone() };
+
+    difet::profile::reset();
+    difet::profile::enable();
+    let erep = pipeline::run_extraction(&c, &ereq).map_err(|e| e.to_string())?;
+    difet::profile::disable();
+    let report = difet::profile::take_report();
+    report.validate().map_err(|e| format!("profile report invalid: {e}"))?;
+
+    println!(
+        "corpus: {} scene(s) of {}×{} px, {} raw, {} bundled; profiled fused sweep on {} node(s)\n",
+        erep.corpus.scene_count,
+        c.scene.width,
+        c.scene.height,
+        difet::util::fmt::bytes(erep.corpus.raw_bytes),
+        difet::util::fmt::bytes(erep.corpus.bundle_bytes),
+        c.cluster.nodes,
+    );
+    print!("{}", report.render_text());
+
+    let kernels = report.kernels();
+    let kernel = |name: &str| kernels.iter().find(|k| k.name == name);
+    let mut missing = Vec::new();
+    for alg in &ereq.algorithms {
+        if kernel(alg).map_or(0.0, |k| k.mp_per_s()) <= 0.0 {
+            missing.push(format!("{alg} (MP/s)"));
+        }
+    }
+    for name in ["deflate", "inflate", "crc32", "dfs_read"] {
+        if kernel(name).map_or(0.0, |k| k.mb_per_s()) <= 0.0 {
+            missing.push(format!("{name} (MB/s)"));
+        }
+    }
+    // Fused-sweep aggregate: all algorithm pixels over all algorithm
+    // inclusive seconds — the number the CI regression floor holds.
+    let (px, ns) = ereq
+        .algorithms
+        .iter()
+        .filter_map(|a| kernel(a))
+        .fold((0u64, 0u64), |(px, ns), k| (px + k.pixels, ns + k.incl_ns));
+    let fused_mp_per_s = if ns > 0 { (px as f64 / 1e6) / (ns as f64 * 1e-9) } else { 0.0 };
+    println!(
+        "\nfused-sweep throughput: {fused_mp_per_s:.1} MP/s across {} algorithm(s)",
+        ereq.algorithms.len()
+    );
+
+    if let Some(path) = &cfg.scheduler.profile_path {
+        std::fs::write(path, report.render_text()).map_err(|e| e.to_string())?;
+        println!("wall-clock profile written to {path}");
+    }
+    if let Some(path) = p.get("out") {
+        std::fs::write(path, report.render_collapsed()).map_err(|e| e.to_string())?;
+        println!("collapsed stacks written to {path} (flamegraph.pl / inferno / speedscope)");
+    }
+    if let Some(path) = p.get("json") {
+        let mut kmap = std::collections::BTreeMap::new();
+        for k in &kernels {
+            let mut o = std::collections::BTreeMap::new();
+            o.insert("calls".to_string(), Json::Num(k.calls as f64));
+            o.insert("excl_seconds".to_string(), Json::Num(k.excl_ns as f64 * 1e-9));
+            o.insert("incl_seconds".to_string(), Json::Num(k.incl_ns as f64 * 1e-9));
+            o.insert("mp_per_s".to_string(), Json::Num(k.mp_per_s()));
+            o.insert("mb_per_s".to_string(), Json::Num(k.mb_per_s()));
+            kmap.insert(k.name.to_string(), Json::Obj(o));
+        }
+        let mut root = std::collections::BTreeMap::new();
+        root.insert("bench".to_string(), Json::Str("wall_clock_kernel_profile".to_string()));
+        root.insert("scenes".to_string(), Json::Num(ereq.num_scenes as f64));
+        root.insert("scene_width".to_string(), Json::Num(c.scene.width as f64));
+        root.insert("scene_height".to_string(), Json::Num(c.scene.height as f64));
+        root.insert("nodes".to_string(), Json::Num(c.cluster.nodes as f64));
+        root.insert(
+            "algorithms".to_string(),
+            Json::Arr(ereq.algorithms.iter().map(|a| Json::Str(a.clone())).collect()),
+        );
+        root.insert("fused_mp_per_s".to_string(), Json::Num(fused_mp_per_s));
+        root.insert("kernels".to_string(), Json::Obj(kmap));
+        std::fs::write(path, format!("{}\n", Json::Obj(root))).map_err(|e| e.to_string())?;
+        println!("per-kernel throughput JSON written to {path}");
+    }
+    if !missing.is_empty() {
+        return Err(format!(
+            "profile gate FAILED — no throughput recorded for: {}",
+            missing.join(", ")
+        ));
     }
     Ok(())
 }

@@ -220,15 +220,25 @@ impl Registry {
         }
     }
 
-    /// Render a Hadoop-style "Counters:" report block.
+    /// Render a Hadoop-style "Counters:" report block.  Kernel-throughput
+    /// gauges (`kernel_mp_per_s_*` / `kernel_mb_per_s_*`, exported by the
+    /// wall-clock profiler) group under their own heading instead of
+    /// interleaving with the DAG gauges.
     pub fn render(&self) -> String {
         let snap = self.snapshot();
         let mut out = String::from("Counters:\n");
         for (name, v) in &snap.counters {
             out.push_str(&format!("  {name:<32} {}\n", crate::util::fmt::with_commas(*v)));
         }
-        for (name, v) in &snap.gauges {
+        let is_kernel = |name: &str| name.starts_with("kernel_");
+        for (name, v) in snap.gauges.iter().filter(|(n, _)| !is_kernel(n)) {
             out.push_str(&format!("  {name:<32} {v:.3}\n"));
+        }
+        if snap.gauges.keys().any(|n| is_kernel(n)) {
+            out.push_str("kernel throughput (wall-clock profiler):\n");
+            for (name, v) in snap.gauges.iter().filter(|(n, _)| is_kernel(n)) {
+                out.push_str(&format!("  {name:<32} {v:.3}\n"));
+            }
         }
         for (name, s) in &snap.histograms {
             out.push_str(&format!(
@@ -352,6 +362,26 @@ mod tests {
         assert_eq!(reg.gauge("dag_queue_depth_max_register").get(), 5.0);
         let names = reg.gauge_names();
         assert!(names.iter().any(|n| n == "dag_queue_depth_max_extract"));
+    }
+
+    #[test]
+    fn kernel_gauges_render_in_their_own_section() {
+        let reg = Registry::new();
+        reg.gauge("dag_stage_overlap_max").set(2.0);
+        reg.gauge("kernel_mp_per_s_harris").set(41.5);
+        reg.gauge("kernel_mb_per_s_inflate").set(310.25);
+        let text = reg.render();
+        let heading = text.find("kernel throughput").expect("kernel section heading");
+        let dag = text.find("dag_stage_overlap_max").expect("dag gauge rendered");
+        let harris = text.find("kernel_mp_per_s_harris").expect("kernel gauge rendered");
+        assert!(dag < heading, "DAG gauges list before the kernel section:\n{text}");
+        assert!(heading < harris, "kernel gauges list under the heading:\n{text}");
+        assert!(text.contains("41.500"));
+        assert!(text.contains("kernel_mb_per_s_inflate"));
+        // Without kernel gauges the section is absent entirely.
+        let plain = Registry::new();
+        plain.gauge("dag_stage_overlap_max").set(1.0);
+        assert!(!plain.render().contains("kernel throughput"));
     }
 
     #[test]

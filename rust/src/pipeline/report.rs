@@ -270,9 +270,10 @@ pub fn render_vector_table(
 }
 
 /// Job-DAG timeline: per-stage open/close on the shared virtual clock,
-/// busy span, unit count, peak queue depth and eager (cross-stage
-/// pipelined) releases — the observable difference between `--barrier`
-/// and the default pipelined mode.
+/// busy span, host wall-clock spent in `run_unit` (the `real` column —
+/// virtual and real time side by side), unit count, peak queue depth and
+/// eager (cross-stage pipelined) releases — the observable difference
+/// between `--barrier` and the default pipelined mode.
 pub fn render_dag_table(dag: &crate::coordinator::DagReport) -> String {
     let mut out = String::new();
     out.push_str(&format!(
@@ -283,17 +284,18 @@ pub fn render_dag_table(dag: &crate::coordinator::DagReport) -> String {
         dag.max_stage_overlap,
     ));
     out.push_str(&format!(
-        "{:<12}{:>7}{:>10}{:>10}{:>10}{:>8}{:>8}\n",
-        "stage", "units", "open", "close", "span", "depth", "eager"
+        "{:<12}{:>7}{:>10}{:>10}{:>10}{:>10}{:>8}{:>8}\n",
+        "stage", "units", "open", "close", "span", "real", "depth", "eager"
     ));
     for s in &dag.stages {
         out.push_str(&format!(
-            "{:<12}{:>7}{:>10}{:>10}{:>10}{:>8}{:>8}\n",
+            "{:<12}{:>7}{:>10}{:>10}{:>10}{:>10}{:>8}{:>8}\n",
             s.name,
             s.units,
             fmt::duration(s.open_secs),
             fmt::duration(s.close_secs),
             fmt::duration(s.span_secs()),
+            fmt::duration(s.real_seconds),
             s.max_queue_depth,
             s.eager_units,
         ));
@@ -543,6 +545,7 @@ mod tests {
             eager_units: eager,
             max_queue_depth: units as u64,
             node_busy_secs: vec![3.0, 12.0],
+            real_seconds: 0.05,
         };
         let dag = DagReport {
             mode: ExecMode::Pipelined,
@@ -557,6 +560,8 @@ mod tests {
         let t = render_dag_table(&dag);
         assert!(t.contains("pipelined mode"));
         assert!(t.contains("peak stage overlap 2"));
+        assert!(t.contains("real"), "wall-clock column present:\n{t}");
+        assert!(t.contains("50ms"), "real_seconds rendered:\n{t}");
         assert!(t.contains("extract"));
         assert!(t.contains("register"));
         assert_eq!(dag.stage("register").unwrap().eager_units, 2);

@@ -1,0 +1,707 @@
+//! Scoped wall-clock kernel profiler (`--profile`, `difet profile`).
+//!
+//! The trace subsystem ([`crate::trace`]) answers *where the simulated
+//! time goes*; this module answers the other half of the ROADMAP's
+//! kernel-speed item: *where the real time goes*.  It is a hierarchical
+//! span profiler threaded through the compute hot path — the `features/`
+//! kernels, the HIB codec (DEFLATE, CRC32) and the DFS read path — with
+//! per-span call counts, inclusive/exclusive nanoseconds and throughput
+//! attribution (pixels for image kernels, bytes for codec/IO), so the
+//! per-kernel table can report megapixels/s and MB/s directly.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Pure observation.** Profiling on vs off must not change a single
+//!    output bit (`tests/profile_purity.rs` holds this the same way the
+//!    trace suite holds it for virtual time).  Spans only read the clock
+//!    and bump thread-local counters.
+//! 2. **Wall-clock reads stay confined here.** Every `Instant::now` read
+//!    lives in this module ([`clock_ns`] / the anchor); instrumented code
+//!    calls [`enter`] only.  The audit linter's path-scoped
+//!    `SANCTIONED_WALLCLOCK_MODULES` exemption covers exactly this file,
+//!    so the profiler adds zero per-file allowlist waivers.
+//! 3. **Cheap when off, ~one clock read per scope edge when on.**
+//!    Disabled, [`enter`] is a single relaxed atomic load (no clock
+//!    read, no TLS touch).  Enabled, each scope costs one monotonic read
+//!    at entry and one at drop, against a thread-local span stack; the
+//!    per-thread trees merge into the process-wide tree under a mutex
+//!    only at thread exit or snapshot time, never per span.
+//!
+//! The merged tree surfaces as a [`ProfileReport`]: an indented span
+//! tree, a per-kernel table sorted by exclusive time (MP/s and MB/s
+//! columns), a collapsed-stack export loadable by standard flamegraph
+//! tools (`inferno`, `flamegraph.pl`, speedscope), and
+//! `kernel_mp_per_s_<kernel>` / `kernel_mb_per_s_<kernel>` gauges for
+//! the metrics registry.  See README §Profiling for the CLI tour.
+
+use std::cell::{Cell, RefCell};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::metrics::Registry;
+use crate::util::fmt;
+
+/// Process-wide on/off switch; off costs one relaxed load per scope.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Set when a snapshot caught a thread with spans still open (the
+/// report is then partial and [`ProfileReport::validate`] fails).
+static DANGLING: AtomicBool = AtomicBool::new(false);
+
+/// Process-wide merged span tree (per-thread trees fold in at thread
+/// exit / snapshot, so the hot path never touches this lock).
+static GLOBAL: Mutex<Tree> = Mutex::new(Tree {
+    nodes: Vec::new(),
+    index: BTreeMap::new(),
+});
+
+/// Turn profiling on (idempotent).  Spans entered before the flip are
+/// unaffected; they were recorded as disabled no-ops.
+pub fn enable() {
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Turn profiling off (idempotent).  Already-open spans still record.
+pub fn disable() {
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+pub fn is_enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Nanoseconds on the process-wide monotonic clock.  The ONLY sanctioned
+/// wall-clock read outside `util::Stopwatch` and the allowlisted timing
+/// sites; callers needing a raw duration (e.g. the DAG executor's
+/// real-seconds-per-stage column) subtract two of these.
+pub fn clock_ns() -> u64 {
+    static ANCHOR: OnceLock<Instant> = OnceLock::new();
+    let anchor = *ANCHOR.get_or_init(Instant::now);
+    // `duration_since` saturates to zero for pre-anchor instants, so
+    // this never panics even under clock weirdness.
+    Instant::now().duration_since(anchor).as_nanos() as u64
+}
+
+/// One node of the (merged) span tree.
+#[derive(Debug, Clone)]
+pub struct SpanStat {
+    /// Scope name; the per-kernel table aggregates equal names across
+    /// every position in the tree.
+    pub name: &'static str,
+    /// Parent node index (always smaller than this node's own index).
+    pub parent: Option<usize>,
+    /// Completed invocations.
+    pub calls: u64,
+    /// Total nanoseconds inside this scope, children included.
+    pub incl_ns: u64,
+    /// Nanoseconds minus time spent in child spans; the flamegraph /
+    /// hot-kernel ranking key.  Invariant: `excl + Σ child incl = incl`.
+    pub excl_ns: u64,
+    /// Pixels attributed via [`Span::pixels`] (image kernels).
+    pub pixels: u64,
+    /// Bytes attributed via [`Span::bytes`] (codec / IO kernels).
+    pub bytes: u64,
+}
+
+/// Span tree + the (parent, name) → node interning index.
+#[derive(Debug, Clone, Default)]
+struct Tree {
+    nodes: Vec<SpanStat>,
+    /// Key is `(parent_index + 1, name)`; 0 encodes "root".
+    index: BTreeMap<(usize, &'static str), usize>,
+}
+
+impl Tree {
+    fn node_for(&mut self, parent: Option<usize>, name: &'static str) -> usize {
+        let key = (parent.map_or(0, |p| p + 1), name);
+        if let Some(&i) = self.index.get(&key) {
+            return i;
+        }
+        let i = self.nodes.len();
+        self.nodes.push(SpanStat {
+            name,
+            parent,
+            calls: 0,
+            incl_ns: 0,
+            excl_ns: 0,
+            pixels: 0,
+            bytes: 0,
+        });
+        self.index.insert(key, i);
+        i
+    }
+
+    /// Fold `other` into `self`, matching nodes by path.  `other`'s
+    /// parents always precede their children (a child node is interned
+    /// while its parent's frame is still open), so one forward pass with
+    /// an index map suffices.
+    fn merge(&mut self, other: &Tree) {
+        let mut map = vec![0usize; other.nodes.len()];
+        for (i, n) in other.nodes.iter().enumerate() {
+            let parent = n.parent.map(|p| map[p]);
+            let gi = self.node_for(parent, n.name);
+            let g = &mut self.nodes[gi];
+            g.calls += n.calls;
+            g.incl_ns += n.incl_ns;
+            g.excl_ns += n.excl_ns;
+            g.pixels += n.pixels;
+            g.bytes += n.bytes;
+            map[i] = gi;
+        }
+    }
+
+    fn clear(&mut self) {
+        self.nodes.clear();
+        self.index.clear();
+    }
+}
+
+/// One open scope on a thread's span stack.
+struct Frame {
+    node: usize,
+    start_ns: u64,
+    /// Sum of direct children's inclusive durations within THIS
+    /// invocation — subtracted at drop to form the exclusive time.
+    child_ns: u64,
+}
+
+struct ThreadState {
+    tree: Tree,
+    stack: Vec<Frame>,
+}
+
+impl Drop for ThreadState {
+    fn drop(&mut self) {
+        // Thread exit: fold this thread's tree into the global one.  A
+        // non-empty stack here means spans leaked past the thread body;
+        // flag it so validation reports the truncation.
+        if !self.stack.is_empty() {
+            DANGLING.store(true, Ordering::Relaxed);
+        }
+        if self.tree.nodes.is_empty() {
+            return;
+        }
+        if let Ok(mut g) = GLOBAL.lock() {
+            g.merge(&self.tree);
+        }
+    }
+}
+
+thread_local! {
+    static TLS: RefCell<ThreadState> = RefCell::new(ThreadState {
+        tree: Tree::default(),
+        stack: Vec::new(),
+    });
+}
+
+/// RAII scope guard: construction pushes a frame (when profiling is on),
+/// drop pops it and charges the elapsed nanoseconds.  Bind it to a
+/// named local — `let _span = profile::enter("...")` — so the scope
+/// spans the region you mean to measure.
+#[must_use = "bind the span to a local; dropping it immediately measures nothing"]
+pub struct Span {
+    live: bool,
+    pixels: Cell<u64>,
+    bytes: Cell<u64>,
+}
+
+impl Span {
+    /// Attribute `n` pixels of work to this scope (MP/s accounting).
+    pub fn pixels(&self, n: u64) {
+        if self.live {
+            self.pixels.set(self.pixels.get() + n);
+        }
+    }
+
+    /// Attribute `n` bytes of work to this scope (MB/s accounting).
+    pub fn bytes(&self, n: u64) {
+        if self.live {
+            self.bytes.set(self.bytes.get() + n);
+        }
+    }
+}
+
+/// Open a named scope.  `name` must be `'static` (kernel and stage
+/// names are literals) so the tree never allocates per entry.
+pub fn enter(name: &'static str) -> Span {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return Span { live: false, pixels: Cell::new(0), bytes: Cell::new(0) };
+    }
+    let start_ns = clock_ns();
+    let pushed = TLS
+        .try_with(|t| {
+            let mut t = t.borrow_mut();
+            let parent = t.stack.last().map(|f| f.node);
+            let node = t.tree.node_for(parent, name);
+            t.stack.push(Frame { node, start_ns, child_ns: 0 });
+        })
+        .is_ok();
+    Span { live: pushed, pixels: Cell::new(0), bytes: Cell::new(0) }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.live {
+            return;
+        }
+        let end_ns = clock_ns();
+        let _ = TLS.try_with(|t| {
+            let mut t = t.borrow_mut();
+            let Some(frame) = t.stack.pop() else {
+                // A mid-span snapshot drained this thread's stack; the
+                // truncation is already flagged via DANGLING.
+                return;
+            };
+            if frame.node >= t.tree.nodes.len() {
+                return;
+            }
+            let dur = end_ns.saturating_sub(frame.start_ns);
+            let excl = dur.saturating_sub(frame.child_ns);
+            let node = &mut t.tree.nodes[frame.node];
+            node.calls += 1;
+            node.incl_ns += dur;
+            node.excl_ns += excl;
+            node.pixels += self.pixels.get();
+            node.bytes += self.bytes.get();
+            if let Some(parent) = t.stack.last_mut() {
+                parent.child_ns += dur;
+            }
+        });
+    }
+}
+
+/// Fold the calling thread's tree into the global one.  Any spans still
+/// open on this thread are abandoned (flagged via `DANGLING`).
+fn flush_current_thread() {
+    let _ = TLS.try_with(|t| {
+        let mut t = t.borrow_mut();
+        if !t.stack.is_empty() {
+            DANGLING.store(true, Ordering::Relaxed);
+            t.stack.clear();
+        }
+        if t.tree.nodes.is_empty() {
+            return;
+        }
+        let tree = std::mem::take(&mut t.tree);
+        GLOBAL.lock().unwrap().merge(&tree);
+    });
+}
+
+/// Snapshot the merged tree WITHOUT clearing it (the DAG executor uses
+/// this to export per-kernel gauges at report time while the run's
+/// `--profile` output still accumulates).  Worker threads that have
+/// exited are already folded in; the calling thread is folded here.
+pub fn snapshot() -> ProfileReport {
+    flush_current_thread();
+    let tree = GLOBAL.lock().unwrap().clone();
+    ProfileReport { spans: tree.nodes, dangling: DANGLING.load(Ordering::Relaxed) }
+}
+
+/// Take the merged tree and reset the accumulator (the end-of-run path
+/// behind `--profile out.txt` and `difet profile`).
+pub fn take_report() -> ProfileReport {
+    flush_current_thread();
+    let tree = std::mem::take(&mut *GLOBAL.lock().unwrap());
+    ProfileReport { spans: tree.nodes, dangling: DANGLING.swap(false, Ordering::Relaxed) }
+}
+
+/// Drop all recorded data (tests and repeated in-process runs).
+pub fn reset() {
+    flush_current_thread();
+    GLOBAL.lock().unwrap().clear();
+    DANGLING.store(false, Ordering::Relaxed);
+}
+
+/// Per-name aggregate across every tree position — one row of the
+/// per-kernel table.
+#[derive(Debug, Clone)]
+pub struct KernelStat {
+    pub name: &'static str,
+    pub calls: u64,
+    pub incl_ns: u64,
+    pub excl_ns: u64,
+    pub pixels: u64,
+    pub bytes: u64,
+}
+
+impl KernelStat {
+    /// Megapixels per second of inclusive time (0 when unattributed).
+    pub fn mp_per_s(&self) -> f64 {
+        if self.pixels == 0 || self.incl_ns == 0 {
+            return 0.0;
+        }
+        (self.pixels as f64 / 1e6) / (self.incl_ns as f64 * 1e-9)
+    }
+
+    /// Megabytes (SI) per second of inclusive time (0 when unattributed).
+    pub fn mb_per_s(&self) -> f64 {
+        if self.bytes == 0 || self.incl_ns == 0 {
+            return 0.0;
+        }
+        (self.bytes as f64 / 1e6) / (self.incl_ns as f64 * 1e-9)
+    }
+}
+
+/// Immutable profiler output: the merged span tree plus its renderers.
+#[derive(Debug, Clone)]
+pub struct ProfileReport {
+    /// Tree nodes; every parent index precedes its children.
+    pub spans: Vec<SpanStat>,
+    /// True when some thread still had open spans at snapshot time
+    /// (the tree is then truncated and [`validate`](Self::validate)
+    /// fails).
+    pub dangling: bool,
+}
+
+impl ProfileReport {
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    /// Structural check: no dangling open spans, parents precede
+    /// children, every node was closed at least once, and the exact
+    /// accounting identity `excl + Σ(child incl) == incl` holds in u64
+    /// for every node (the same style of identity the trace module's
+    /// critical path holds for virtual time).
+    pub fn validate(&self) -> std::result::Result<(), String> {
+        if self.dangling {
+            return Err("open span(s) at snapshot: the tree is truncated".into());
+        }
+        let mut child_incl = vec![0u64; self.spans.len()];
+        for (i, s) in self.spans.iter().enumerate() {
+            match s.parent {
+                Some(p) if p >= i => {
+                    return Err(format!("span {i} ({}) does not follow its parent {p}", s.name));
+                }
+                Some(p) => child_incl[p] += s.incl_ns,
+                None => {}
+            }
+            if s.calls == 0 {
+                return Err(format!("span {i} ({}) recorded zero completed calls", s.name));
+            }
+        }
+        for (i, s) in self.spans.iter().enumerate() {
+            if s.excl_ns + child_incl[i] != s.incl_ns {
+                return Err(format!(
+                    "span {i} ({}): excl {} + children {} != incl {}",
+                    s.name, s.excl_ns, child_incl[i], s.incl_ns
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Aggregate by name (a kernel may appear under several parents —
+    /// e.g. `separable` under both `harris` and `sift`), sorted by
+    /// exclusive time descending, name ascending on ties.
+    pub fn kernels(&self) -> Vec<KernelStat> {
+        let mut by_name: BTreeMap<&'static str, KernelStat> = BTreeMap::new();
+        for s in &self.spans {
+            let k = by_name.entry(s.name).or_insert(KernelStat {
+                name: s.name,
+                calls: 0,
+                incl_ns: 0,
+                excl_ns: 0,
+                pixels: 0,
+                bytes: 0,
+            });
+            k.calls += s.calls;
+            k.incl_ns += s.incl_ns;
+            k.excl_ns += s.excl_ns;
+            k.pixels += s.pixels;
+            k.bytes += s.bytes;
+        }
+        let mut v: Vec<KernelStat> = by_name.into_values().collect();
+        v.sort_by(|a, b| b.excl_ns.cmp(&a.excl_ns).then(a.name.cmp(b.name)));
+        v
+    }
+
+    /// The per-kernel table: one row per span name, hottest (exclusive
+    /// time) first, with MP/s for pixel kernels and MB/s for codec/IO.
+    pub fn render_kernel_table(&self) -> String {
+        let mut out = format!(
+            "{:<22}{:>9}{:>10}{:>10}{:>10}{:>10}\n",
+            "kernel", "calls", "excl", "incl", "MP/s", "MB/s"
+        );
+        for k in self.kernels() {
+            let mp = if k.pixels > 0 { format!("{:.1}", k.mp_per_s()) } else { "-".into() };
+            let mb = if k.bytes > 0 { format!("{:.1}", k.mb_per_s()) } else { "-".into() };
+            out.push_str(&format!(
+                "{:<22}{:>9}{:>10}{:>10}{:>10}{:>10}\n",
+                k.name,
+                fmt::with_commas(k.calls),
+                fmt::duration(k.excl_ns as f64 * 1e-9),
+                fmt::duration(k.incl_ns as f64 * 1e-9),
+                mp,
+                mb,
+            ));
+        }
+        out
+    }
+
+    /// The span hierarchy, indented, siblings in first-seen order.
+    pub fn render_tree(&self) -> String {
+        let mut children: Vec<Vec<usize>> = vec![Vec::new(); self.spans.len()];
+        let mut roots: Vec<usize> = Vec::new();
+        for (i, s) in self.spans.iter().enumerate() {
+            match s.parent {
+                Some(p) => children[p].push(i),
+                None => roots.push(i),
+            }
+        }
+        let mut out = String::from("span tree (incl / excl / calls):\n");
+        let mut stack: Vec<(usize, usize)> = roots.into_iter().rev().map(|r| (r, 0)).collect();
+        while let Some((i, depth)) = stack.pop() {
+            let s = &self.spans[i];
+            out.push_str(&format!(
+                "{:indent$}{:<width$} {:>9} / {:>9} / {}\n",
+                "",
+                s.name,
+                fmt::duration(s.incl_ns as f64 * 1e-9),
+                fmt::duration(s.excl_ns as f64 * 1e-9),
+                fmt::with_commas(s.calls),
+                indent = depth * 2,
+                width = 24usize.saturating_sub(depth * 2),
+            ));
+            for &c in children[i].iter().rev() {
+                stack.push((c, depth + 1));
+            }
+        }
+        out
+    }
+
+    /// Collapsed-stack export: one `root;...;leaf <exclusive_ns>` line
+    /// per tree node, directly loadable by flamegraph.pl / inferno /
+    /// speedscope (the "folded stacks" format, ns as the sample weight).
+    pub fn render_collapsed(&self) -> String {
+        let mut out = String::new();
+        for s in &self.spans {
+            let mut parts = vec![s.name];
+            let mut p = s.parent;
+            while let Some(pi) = p {
+                parts.push(self.spans[pi].name);
+                p = self.spans[pi].parent;
+            }
+            parts.reverse();
+            out.push_str(&format!("{} {}\n", parts.join(";"), s.excl_ns));
+        }
+        out
+    }
+
+    /// Full human-readable report (`--profile out.txt` payload).
+    pub fn render_text(&self) -> String {
+        let mut out = String::from("== wall-clock profile ==\n");
+        if self.dangling {
+            out.push_str("WARNING: snapshot caught open spans; totals are truncated\n");
+        }
+        if self.is_empty() {
+            out.push_str("(no spans recorded — was profiling enabled?)\n");
+            return out;
+        }
+        out.push_str("\nper-kernel totals, hottest exclusive time first\n");
+        out.push_str("(MP/s over inclusive time; MB/s for codec/IO spans):\n");
+        out.push_str(&self.render_kernel_table());
+        out.push('\n');
+        out.push_str(&self.render_tree());
+        out
+    }
+
+    /// Export `kernel_mp_per_s_<name>` (pixel kernels) and
+    /// `kernel_mb_per_s_<name>` (codec/IO) gauges into `registry`.
+    pub fn export_gauges(&self, registry: &Registry) {
+        for k in self.kernels() {
+            if k.pixels > 0 {
+                registry.gauge(&format!("kernel_mp_per_s_{}", k.name)).set(k.mp_per_s());
+            }
+            if k.bytes > 0 {
+                registry.gauge(&format!("kernel_mb_per_s_{}", k.name)).set(k.mb_per_s());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The profiler is process-global state; tests that flip it on must
+    /// not interleave with each other.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn spin(rounds: u64) -> u64 {
+        // Enough work that incl_ns is nonzero on any ns-resolution
+        // monotonic clock, without sleeping.
+        let mut acc = 0u64;
+        for i in 0..rounds {
+            acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i);
+            std::hint::black_box(acc);
+        }
+        acc
+    }
+
+    #[test]
+    fn disabled_profiler_records_nothing() {
+        let _g = TEST_LOCK.lock().unwrap();
+        reset();
+        assert!(!is_enabled());
+        {
+            let span = enter("prof_test_off");
+            span.pixels(123);
+        }
+        let rep = take_report();
+        assert!(
+            rep.spans.iter().all(|s| s.name != "prof_test_off"),
+            "disabled profiler must not record spans"
+        );
+    }
+
+    #[test]
+    fn scopes_nest_and_the_accounting_identity_holds() {
+        let _g = TEST_LOCK.lock().unwrap();
+        reset();
+        enable();
+        for _ in 0..3 {
+            let outer = enter("prof_test_outer");
+            outer.pixels(1_000_000);
+            std::hint::black_box(spin(10_000));
+            {
+                let inner = enter("prof_test_inner");
+                inner.bytes(4096);
+                std::hint::black_box(spin(10_000));
+            }
+        }
+        disable();
+        let rep = take_report();
+        rep.validate().expect("nesting identity");
+        let outer = rep
+            .spans
+            .iter()
+            .find(|s| s.name == "prof_test_outer")
+            .expect("outer span recorded");
+        assert_eq!(outer.calls, 3);
+        assert_eq!(outer.pixels, 3_000_000);
+        assert!(outer.incl_ns > 0, "spin loops must be measurable");
+        let inner = rep
+            .spans
+            .iter()
+            .find(|s| s.name == "prof_test_inner")
+            .expect("inner span recorded");
+        assert_eq!(inner.calls, 3);
+        assert_eq!(inner.bytes, 3 * 4096);
+        assert_eq!(rep.spans[inner.parent.expect("inner has a parent")].name, "prof_test_outer");
+        assert!(
+            outer.incl_ns >= inner.incl_ns,
+            "outer incl {} < inner incl {}",
+            outer.incl_ns,
+            inner.incl_ns
+        );
+        assert_eq!(outer.excl_ns + inner.incl_ns, outer.incl_ns, "exact identity");
+    }
+
+    #[test]
+    fn kernel_table_aggregates_across_parents_and_sorts_by_excl() {
+        let _g = TEST_LOCK.lock().unwrap();
+        reset();
+        enable();
+        {
+            let _a = enter("prof_test_p1");
+            let leaf = enter("prof_test_leaf");
+            leaf.pixels(2_000_000);
+            std::hint::black_box(spin(20_000));
+        }
+        {
+            let _b = enter("prof_test_p2");
+            let leaf = enter("prof_test_leaf");
+            leaf.pixels(1_000_000);
+            std::hint::black_box(spin(20_000));
+        }
+        disable();
+        let rep = take_report();
+        rep.validate().expect("valid tree");
+        let kernels = rep.kernels();
+        let leaf = kernels.iter().find(|k| k.name == "prof_test_leaf").expect("aggregated leaf");
+        assert_eq!(leaf.calls, 2);
+        assert_eq!(leaf.pixels, 3_000_000);
+        assert!(leaf.mp_per_s() > 0.0);
+        // Sorted: every row's exclusive time is >= the next row's.
+        assert!(kernels.windows(2).all(|w| w[0].excl_ns >= w[1].excl_ns));
+        let table = rep.render_kernel_table();
+        assert!(table.contains("prof_test_leaf"));
+        let collapsed = rep.render_collapsed();
+        assert!(
+            collapsed.contains("prof_test_p1;prof_test_leaf"),
+            "collapsed stacks must join paths with ';': {collapsed}"
+        );
+    }
+
+    #[test]
+    fn worker_thread_trees_merge_at_thread_exit() {
+        let _g = TEST_LOCK.lock().unwrap();
+        reset();
+        enable();
+        std::thread::spawn(|| {
+            let span = enter("prof_test_thread");
+            span.bytes(1 << 20);
+            std::hint::black_box(spin(10_000));
+        })
+        .join()
+        .unwrap();
+        disable();
+        let rep = take_report();
+        let s = rep
+            .spans
+            .iter()
+            .find(|s| s.name == "prof_test_thread")
+            .expect("worker spans merged at exit");
+        assert_eq!(s.bytes, 1 << 20);
+        rep.validate().expect("merged tree validates");
+    }
+
+    #[test]
+    fn mid_span_snapshot_is_flagged_as_dangling() {
+        let _g = TEST_LOCK.lock().unwrap();
+        reset();
+        enable();
+        let open = enter("prof_test_dangling");
+        let rep = snapshot();
+        assert!(rep.dangling, "open span must mark the snapshot dangling");
+        assert!(rep.validate().is_err());
+        drop(open); // must not panic after the drain
+        disable();
+        reset();
+        let rep = take_report();
+        assert!(!rep.dangling, "reset clears the dangling flag");
+    }
+
+    #[test]
+    fn gauges_export_only_attributed_kernels() {
+        let _g = TEST_LOCK.lock().unwrap();
+        reset();
+        enable();
+        {
+            let px = enter("prof_test_px");
+            px.pixels(5_000_000);
+            std::hint::black_box(spin(20_000));
+        }
+        {
+            let by = enter("prof_test_by");
+            by.bytes(10 << 20);
+            std::hint::black_box(spin(20_000));
+        }
+        {
+            let _bare = enter("prof_test_bare");
+            std::hint::black_box(spin(1_000));
+        }
+        disable();
+        let rep = take_report();
+        let registry = Registry::new();
+        rep.export_gauges(&registry);
+        let snap = registry.snapshot();
+        assert!(snap.gauges.get("kernel_mp_per_s_prof_test_px").copied().unwrap_or(0.0) > 0.0);
+        assert!(snap.gauges.get("kernel_mb_per_s_prof_test_by").copied().unwrap_or(0.0) > 0.0);
+        assert!(!snap.gauges.contains_key("kernel_mp_per_s_prof_test_bare"));
+        assert!(!snap.gauges.contains_key("kernel_mb_per_s_prof_test_px"));
+    }
+}

@@ -21,6 +21,8 @@ const TABLE: [u32; 256] = {
 
 /// CRC-32 of `bytes` (same value `crc32fast::hash` returns).
 pub fn hash(bytes: &[u8]) -> u32 {
+    let span = crate::profile::enter("crc32");
+    span.bytes(bytes.len() as u64);
     let mut c = 0xFFFF_FFFFu32;
     for &b in bytes {
         c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);

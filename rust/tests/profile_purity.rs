@@ -1,0 +1,320 @@
+//! Property tests for profiling purity: the wall-clock profiler is pure
+//! observation.  Random DAG topologies with injected retries and
+//! straggler speculation, in both execution modes, must merge
+//! bit-identical outputs with profiling on and off — and on a
+//! deterministic single-slot chain the *simulated* clock must match
+//! exactly too, proving virtual-time accounting never observes the
+//! profiler.  Every enabled run's report must validate (no dangling
+//! spans, exclusive + child-inclusive == inclusive in exact integer
+//! nanoseconds) and carry a span row for each stage that ran units.
+//!
+//! The profiler is process-global, so the tests in this binary
+//! serialize on one lock and bracket every run with `reset`.
+
+use std::any::Any;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use difet::config::Config;
+use difet::coordinator::{
+    run_dag, DagReport, DagStage, ExecMode, Gate, StagePlan, TaskHandle, UnitOutput, UnitRef,
+    UnitSpec,
+};
+use difet::dfs::NodeId;
+use difet::metrics::Registry;
+use difet::profile;
+use difet::util::rng::Pcg32;
+use difet::util::{DifetError, Result};
+
+/// Stage names must be `&'static str`; the generator indexes this table.
+const NAMES: [&str; 6] = ["p0", "p1", "p2", "p3", "p4", "p5"];
+
+/// One guard for the whole binary: the profiler's enable flag and span
+/// tree are process-global state.
+static PROFILER: Mutex<()> = Mutex::new(());
+
+fn profiler_lock() -> MutexGuard<'static, ()> {
+    PROFILER.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn mix(a: u64, b: u64) -> u64 {
+    let mut z = a ^ b.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z ^ (z >> 31)
+}
+
+/// One synthetic stage: unit `u` computes a hash of its own identity and
+/// its deps' merged values — a pure function of declared inputs, with a
+/// *fixed* virtual cost so the simulated clock is independent of how
+/// long the host really took (the property under test).
+struct SynthStage {
+    index: usize,
+    gates: Vec<Gate>,
+    unit_deps: Vec<Vec<UnitRef>>,
+    /// Attempts 0..fail_first[u] of unit u die (injected retries).
+    fail_first: Vec<usize>,
+    /// Slow units sleep a little, inviting speculation twins.
+    slow: Vec<bool>,
+    store: Arc<Mutex<BTreeMap<(usize, usize), u64>>>,
+}
+
+impl DagStage for SynthStage {
+    fn name(&self) -> &'static str {
+        NAMES[self.index]
+    }
+    fn gates(&self) -> Vec<Gate> {
+        self.gates.clone()
+    }
+    fn plan(&self) -> Result<StagePlan> {
+        Ok(StagePlan {
+            units: self
+                .unit_deps
+                .iter()
+                .map(|deps| UnitSpec { deps: deps.clone(), preferred_nodes: Vec::new() })
+                .collect(),
+            plan_io_secs: 0.0,
+        })
+    }
+    fn run_unit(
+        &self,
+        unit: usize,
+        handle: &TaskHandle,
+        _node: NodeId,
+    ) -> Result<Option<UnitOutput>> {
+        if handle.attempt < self.fail_first[unit] {
+            return Err(DifetError::Job(format!(
+                "injected failure (unit {unit}, attempt {})",
+                handle.attempt
+            )));
+        }
+        if self.slow[unit] {
+            handle.report_progress(0.05);
+            std::thread::sleep(std::time::Duration::from_millis(3));
+        }
+        let store = self.store.lock().unwrap();
+        let mut v = mix(self.index as u64 + 1, unit as u64 + 1);
+        for d in &self.unit_deps[unit] {
+            let dep = *store
+                .get(&(d.stage, d.unit))
+                .expect("unit released before its declared input merged");
+            v = mix(v, dep);
+        }
+        drop(store);
+        Ok(Some(UnitOutput { payload: Box::new(v), compute_ns: 10_000, io_secs: 0.0 }))
+    }
+    fn merge(&self, unit: usize, payload: Box<dyn Any + Send>) -> Result<()> {
+        let v = *payload.downcast::<u64>().expect("u64 payload");
+        self.store.lock().unwrap().insert((self.index, unit), v);
+        Ok(())
+    }
+}
+
+/// The ground truth: evaluate the same recurrence sequentially.
+fn sequential_truth(stages: &[(Vec<Gate>, Vec<Vec<UnitRef>>)]) -> BTreeMap<(usize, usize), u64> {
+    let mut out = BTreeMap::new();
+    for (s, (_, unit_deps)) in stages.iter().enumerate() {
+        for (u, deps) in unit_deps.iter().enumerate() {
+            let mut v = mix(s as u64 + 1, u as u64 + 1);
+            for d in deps {
+                v = mix(v, out[&(d.stage, d.unit)]);
+            }
+            out.insert((s, u), v);
+        }
+    }
+    out
+}
+
+fn dag_cfg(nodes: usize, slots: usize) -> Config {
+    let mut cfg = Config::new();
+    cfg.cluster.nodes = nodes;
+    cfg.cluster.slots_per_node = slots;
+    cfg.cluster.job_startup = 0.25;
+    cfg.cluster.task_overhead = 0.01;
+    cfg.scheduler.speculation = true;
+    cfg.scheduler.speculation_slowness = 0.95;
+    cfg
+}
+
+/// Generate one random topology: a planning chain with random unit
+/// counts, random cross-stage unit deps, random injected failures and
+/// random stragglers (same generator family as the dag_runtime suite).
+#[allow(clippy::type_complexity)]
+fn random_topology(
+    rng: &mut Pcg32,
+) -> (Vec<(Vec<Gate>, Vec<Vec<UnitRef>>)>, Vec<Vec<usize>>, Vec<Vec<bool>>) {
+    let n_stages = 2 + rng.next_bounded(3) as usize; // 2..=4
+    let mut stages: Vec<(Vec<Gate>, Vec<Vec<UnitRef>>)> = Vec::new();
+    let mut fails: Vec<Vec<usize>> = Vec::new();
+    let mut slows: Vec<Vec<bool>> = Vec::new();
+    for s in 0..n_stages {
+        let mut gates = Vec::new();
+        if s > 0 {
+            gates.push(Gate::Planned(s - 1));
+            if rng.next_bounded(4) == 0 {
+                gates.push(Gate::Completed(rng.next_bounded(s as u32) as usize));
+            }
+        }
+        let n_units = rng.next_bounded(5) as usize; // 0..=4 (zero allowed)
+        let mut unit_deps = Vec::with_capacity(n_units);
+        let mut fail = Vec::with_capacity(n_units);
+        let mut slow = Vec::with_capacity(n_units);
+        for _ in 0..n_units {
+            let mut deps: Vec<UnitRef> = Vec::new();
+            if s > 0 {
+                for _ in 0..rng.next_bounded(4) {
+                    let ds = rng.next_bounded(s as u32) as usize;
+                    let n_up = stages[ds].1.len();
+                    if n_up == 0 {
+                        continue;
+                    }
+                    let du = rng.next_bounded(n_up as u32) as usize;
+                    let r = UnitRef { stage: ds, unit: du };
+                    if !deps.contains(&r) {
+                        deps.push(r);
+                    }
+                }
+            }
+            unit_deps.push(deps);
+            fail.push(if rng.next_bounded(5) == 0 { 1 } else { 0 });
+            slow.push(rng.next_bounded(7) == 0);
+        }
+        stages.push((gates, unit_deps));
+        fails.push(fail);
+        slows.push(slow);
+    }
+    (stages, fails, slows)
+}
+
+fn run_topology(
+    topology: &[(Vec<Gate>, Vec<Vec<UnitRef>>)],
+    fails: &[Vec<usize>],
+    slows: &[Vec<bool>],
+    mode: ExecMode,
+    cfg: &Config,
+) -> (BTreeMap<(usize, usize), u64>, DagReport) {
+    let store = Arc::new(Mutex::new(BTreeMap::new()));
+    let stages: Vec<SynthStage> = topology
+        .iter()
+        .enumerate()
+        .map(|(index, (gates, unit_deps))| SynthStage {
+            index,
+            gates: gates.clone(),
+            unit_deps: unit_deps.clone(),
+            fail_first: fails[index].clone(),
+            slow: slows[index].clone(),
+            store: store.clone(),
+        })
+        .collect();
+    let refs: Vec<&dyn DagStage> = stages.iter().map(|s| s as &dyn DagStage).collect();
+    let registry = Registry::new();
+    let rep = run_dag(cfg, &refs, mode, &registry).expect("dag run");
+    drop(refs);
+    drop(stages);
+    (Arc::try_unwrap(store).unwrap().into_inner().unwrap(), rep)
+}
+
+/// The headline property: with retries and speculation twins in the
+/// mix on a multi-slot cluster, profiling on vs off changes *nothing*
+/// about the merged outputs, and the enabled run's report validates
+/// with a row for every stage that ran units.
+#[test]
+fn profiling_is_pure_observation_under_retry_and_speculation_churn() {
+    let _guard = profiler_lock();
+    let mut rng = Pcg32::new(0x9D0F, 0x11E9);
+    for case in 0..8 {
+        let (topology, fails, slows) = random_topology(&mut rng);
+        let truth = sequential_truth(&topology);
+        let cfg = dag_cfg(2, 2);
+        for mode in [ExecMode::Pipelined, ExecMode::Barrier] {
+            profile::disable();
+            profile::reset();
+            let (plain, _) = run_topology(&topology, &fails, &slows, mode, &cfg);
+            assert!(
+                profile::snapshot().is_empty(),
+                "case {case} {mode:?}: disabled profiler recorded spans"
+            );
+            profile::enable();
+            let (profiled, _) = run_topology(&topology, &fails, &slows, mode, &cfg);
+            profile::disable();
+            let report = profile::take_report();
+
+            assert_eq!(plain, truth, "case {case} {mode:?}: unprofiled run diverged");
+            assert_eq!(
+                profiled, truth,
+                "case {case} {mode:?}: profiling changed merged outputs"
+            );
+            report
+                .validate()
+                .unwrap_or_else(|e| panic!("case {case} {mode:?}: invalid profile: {e}"));
+            let kernels = report.kernels();
+            for (s, (_, units)) in topology.iter().enumerate() {
+                if units.is_empty() {
+                    continue;
+                }
+                let row = kernels
+                    .iter()
+                    .find(|k| k.name == NAMES[s])
+                    .unwrap_or_else(|| panic!("case {case} {mode:?}: no span for {}", NAMES[s]));
+                // Every unit runs at least once; retries and twins only
+                // add calls, never subtract.
+                assert!(
+                    row.calls >= units.len() as u64,
+                    "case {case} {mode:?}: {} ran {} units but profiled {} calls",
+                    NAMES[s],
+                    units.len(),
+                    row.calls
+                );
+            }
+        }
+    }
+}
+
+/// On one node × one slot the unit→slot assignment is deterministic, so
+/// the simulated clock must be *exactly* equal profiled vs not — the
+/// virtual-time model may never observe the wall clock the profiler
+/// reads.  Injected retries keep the failure path in the comparison.
+#[test]
+fn single_slot_sim_clock_is_bit_identical_profiled_or_not() {
+    let _guard = profiler_lock();
+    let topology: Vec<(Vec<Gate>, Vec<Vec<UnitRef>>)> = vec![
+        (vec![], vec![vec![]; 3]),
+        (
+            vec![Gate::Planned(0)],
+            (0..3).map(|u| vec![UnitRef { stage: 0, unit: u }]).collect(),
+        ),
+    ];
+    let fails = vec![vec![1, 0, 1], vec![0, 1, 0]];
+    let slows = vec![vec![false; 3], vec![false; 3]];
+    let cfg = dag_cfg(1, 1);
+    for mode in [ExecMode::Pipelined, ExecMode::Barrier] {
+        let run = |enabled: bool| {
+            profile::disable();
+            profile::reset();
+            if enabled {
+                profile::enable();
+            }
+            let (out, rep) = run_topology(&topology, &fails, &slows, mode, &cfg);
+            profile::disable();
+            (out, rep, profile::take_report())
+        };
+        let (plain, plain_rep, _) = run(false);
+        let (profiled, rep, report) = run(true);
+        assert_eq!(plain, profiled, "{mode:?}: profiling changed merged outputs");
+        assert_eq!(
+            plain_rep.sim_seconds, rep.sim_seconds,
+            "{mode:?}: the virtual clock observed the profiler"
+        );
+        report.validate().unwrap_or_else(|e| panic!("{mode:?}: invalid profile: {e}"));
+        assert!(!report.is_empty(), "{mode:?}: enabled run recorded no spans");
+        // The real-seconds column is measured unconditionally (profiled
+        // or not) and can only be a sane, finite duration.
+        for s in plain_rep.stages.iter().chain(rep.stages.iter()) {
+            assert!(
+                s.real_seconds.is_finite() && s.real_seconds >= 0.0,
+                "{mode:?}: stage {} has bogus real_seconds {}",
+                s.name,
+                s.real_seconds
+            );
+        }
+    }
+}
