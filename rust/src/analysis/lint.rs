@@ -22,9 +22,10 @@
 //!   the sanctioned executors.  Ad-hoc threads are where unordered
 //!   merges sneak in.  The sanctioned executors are a *path-scoped*
 //!   exemption ([`SANCTIONED_SPAWN_MODULES`]): the DAG runtime's scoped
-//!   slot pool and the ingest reader pool are the two places allowed to
-//!   own threads, so a spawn anywhere else is a violation even if an
-//!   allowlist entry tried to waive it.
+//!   slot pool, the job service's shared pool and the ingest reader
+//!   pool are the only places allowed to own threads, so a spawn
+//!   anywhere else is a violation even if an allowlist entry tried to
+//!   waive it.
 //! * `unsafe-outside-runtime` — `unsafe` anywhere but `runtime/`, the
 //!   one module allowed to carry FFI glue.
 //! * `unsafe-impl-no-safety` — an `unsafe impl` (Send/Sync and
@@ -60,7 +61,8 @@ pub const DEFAULT_ALLOWLIST: &str = include_str!("allowlist.toml");
 /// ingest reader pool (joins before return, writes disjoint tiles).
 /// Path-scoped like `unsafe-outside-runtime`, not allowlisted — adding
 /// a third executor is a deliberate edit here, reviewed as such.
-pub const SANCTIONED_SPAWN_MODULES: [&str; 2] = ["coordinator/dag.rs", "pipeline/ingest.rs"];
+pub const SANCTIONED_SPAWN_MODULES: [&str; 3] =
+    ["coordinator/dag.rs", "coordinator/serve.rs", "pipeline/ingest.rs"];
 
 /// The only module allowed to read the wall clock without a per-use
 /// allowlist entry: the scoped profiler, which exists to measure real

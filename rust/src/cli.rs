@@ -1,0 +1,188 @@
+//! The `difet` command-line surface, centralized: ONE table of
+//! subcommands and ONE table of flags, from which the usage line and
+//! `--help` text are generated.
+//!
+//! The binary (`main.rs`) dispatches on [`SUBCOMMANDS`] and parses
+//! against [`flag_specs`]; nothing else defines usage strings.  Keeping
+//! the tables in the library makes the no-drift properties testable:
+//! the tests below assert that every subcommand and every parsed flag
+//! appears in [`help`] output, and that every subcommand named here has
+//! a real dispatch arm in `main.rs` (read from source, the same way the
+//! determinism linter audits the crate).
+
+use crate::util::args::{help_text, FlagSpec};
+
+/// One `difet <subcommand>` entry: its name and one-line description.
+#[derive(Debug, Clone, Copy)]
+pub struct SubcommandSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+}
+
+/// Every subcommand the `difet` binary dispatches, in help order.
+pub const SUBCOMMANDS: [SubcommandSpec; 14] = [
+    SubcommandSpec { name: "extract", help: "run extraction jobs on the simulated cluster" },
+    SubcommandSpec { name: "sequential", help: "run the one-node sequential baseline" },
+    SubcommandSpec { name: "census", help: "Table-2-style feature counts for a corpus" },
+    SubcommandSpec { name: "scalability", help: "sweep node counts (Table 1 shape) in one command" },
+    SubcommandSpec { name: "register", help: "extract + match overlapping acquisitions (2-stage DAG)" },
+    SubcommandSpec { name: "stitch", help: "register + align + composite one mosaic (4-stage DAG)" },
+    SubcommandSpec { name: "vectorize", help: "stitch + segment + label + trace objects (9-stage DAG)" },
+    SubcommandSpec { name: "serve", help: "multi-tenant job service simulation on one shared pool" },
+    SubcommandSpec { name: "bench", help: "pipelined-vs-barrier DAG sweep -> BENCH_8.json" },
+    SubcommandSpec { name: "profile", help: "profiled fused sweep -> per-kernel MP/s table (BENCH_9)" },
+    SubcommandSpec { name: "audit", help: "determinism audit: lint the crate sources (Layer 1)" },
+    SubcommandSpec { name: "trace", help: "analyze a --trace JSON: validate + critical path" },
+    SubcommandSpec { name: "inspect", help: "show artifact manifest + cluster configuration" },
+    SubcommandSpec { name: "help", help: "show this help" },
+];
+
+/// The generated usage line: `difet <a|b|...> [options]`.
+pub fn usage() -> String {
+    let names: Vec<&str> = SUBCOMMANDS
+        .iter()
+        .map(|s| s.name)
+        .filter(|&n| n != "help")
+        .collect();
+    format!("difet <{}> [options]", names.join("|"))
+}
+
+/// Every flag any subcommand parses.  Flags are global (the tiny parser
+/// has no per-subcommand scoping); the help strings say which
+/// subcommand(s) consume each one.
+pub fn flag_specs() -> Vec<FlagSpec> {
+    vec![
+        FlagSpec { name: "config", takes_value: true, help: "config file (TOML subset)" },
+        FlagSpec { name: "set", takes_value: true, help: "override, e.g. --set cluster.nodes=2 (repeatable via commas)" },
+        FlagSpec { name: "nodes", takes_value: true, help: "cluster nodes (default 4; bench: comma list, default 1,2,4,8,16)" },
+        FlagSpec { name: "scenes", takes_value: true, help: "corpus size N (default 3)" },
+        FlagSpec { name: "algorithms", takes_value: true, help: "comma list (default: all seven)" },
+        FlagSpec { name: "scene-size", takes_value: true, help: "scene edge px (default 1792; paper 7681)" },
+        FlagSpec { name: "artifacts", takes_value: true, help: "artifacts dir (default artifacts)" },
+        FlagSpec { name: "native", takes_value: false, help: "force the pure-Rust executor" },
+        FlagSpec { name: "fused", takes_value: false, help: "one fused pass for all algorithms" },
+        FlagSpec { name: "barrier", takes_value: false, help: "bulk-synchronous DAG stages (pre-DAG behavior; same bits)" },
+        FlagSpec { name: "audit", takes_value: false, help: "happens-before checking of DAG runs (default on)" },
+        FlagSpec { name: "no-audit", takes_value: false, help: "disable happens-before checking" },
+        FlagSpec { name: "no-write", takes_value: false, help: "skip mapper output writes" },
+        FlagSpec { name: "pairs", takes_value: true, help: "register: explicit pairs, e.g. 0-1,1-2 (default: all)" },
+        FlagSpec { name: "max-offset", takes_value: true, help: "register: acquisition offset bound px (default 96)" },
+        FlagSpec { name: "ratio", takes_value: true, help: "register: Lowe ratio threshold (default 0.85)" },
+        FlagSpec { name: "tolerance", takes_value: true, help: "register: RANSAC inlier tolerance px (default 3)" },
+        FlagSpec { name: "ransac-iters", takes_value: true, help: "register: RANSAC hypotheses per pair (default 256)" },
+        FlagSpec { name: "seed", takes_value: true, help: "register: base RANSAC seed (default 7); serve: workload seed" },
+        FlagSpec { name: "blend", takes_value: true, help: "stitch: feather|average|first (default feather)" },
+        FlagSpec { name: "threshold", takes_value: true, help: "vectorize: luma threshold in [0,1] (default 0.5)" },
+        FlagSpec { name: "min-area", takes_value: true, help: "vectorize: min object area px (default 8)" },
+        FlagSpec { name: "epsilon", takes_value: true, help: "vectorize: Douglas-Peucker tolerance px (default 1.5)" },
+        FlagSpec { name: "jobs", takes_value: true, help: "serve: simulated job count (default 50)" },
+        FlagSpec { name: "tenants", takes_value: true, help: "serve: tenant count (default 3)" },
+        FlagSpec { name: "quotas", takes_value: true, help: "serve: per-tenant slot quotas, e.g. 2,1,1 (default: even split)" },
+        FlagSpec { name: "max-jobs", takes_value: true, help: "serve: max concurrently running jobs (default 8)" },
+        FlagSpec { name: "queue-depth", takes_value: true, help: "serve: admission queue bound; arrivals past it are rejected (default 16)" },
+        FlagSpec { name: "mean-interarrival", takes_value: true, help: "serve: mean virtual seconds between arrivals (default 2.0)" },
+        FlagSpec { name: "no-preemption", takes_value: false, help: "serve: disable priority preemption of running units" },
+        FlagSpec { name: "out", takes_value: true, help: "stitch: mosaic .hib path; vectorize: GeoJSON path; bench: JSON path (default BENCH_8.json); profile: collapsed-stacks path; serve: latency report path" },
+        FlagSpec { name: "trace", takes_value: true, help: "write a Perfetto trace of the run's DAG to this JSON path" },
+        FlagSpec { name: "profile", takes_value: true, help: "write the wall-clock kernel profile (per-kernel table + span tree) to this path" },
+        FlagSpec { name: "json", takes_value: true, help: "profile: write the per-kernel throughput JSON (the BENCH_9 shape) to this path" },
+        FlagSpec { name: "bare", takes_value: false, help: "disable the I/O cost model" },
+        FlagSpec { name: "verbose", takes_value: false, help: "print counters/metrics" },
+        FlagSpec { name: "help", takes_value: false, help: "show this help" },
+    ]
+}
+
+/// The full `--help` text: usage line, subcommand table, flag table.
+pub fn help() -> String {
+    let mut out = format!("usage: {}\n\nsubcommands:\n", usage());
+    for s in SUBCOMMANDS.iter().filter(|s| s.name != "help") {
+        out.push_str(&format!("  {:<12} {}\n", s.name, s.help));
+    }
+    out.push('\n');
+    out.push_str(
+        help_text("", &flag_specs())
+            .strip_prefix("usage: \n\n")
+            .unwrap_or(""),
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_subcommand_appears_in_usage_and_help() {
+        let u = usage();
+        let h = help();
+        for s in SUBCOMMANDS.iter().filter(|s| s.name != "help") {
+            assert!(u.contains(s.name), "usage line missing {:?}", s.name);
+            assert!(h.contains(s.name), "help missing subcommand {:?}", s.name);
+            assert!(h.contains(s.help), "help missing description for {:?}", s.name);
+        }
+        assert!(u.contains("serve"), "the job service must be advertised");
+    }
+
+    #[test]
+    fn every_parsed_flag_appears_in_help() {
+        let h = help();
+        for f in flag_specs() {
+            assert!(
+                h.contains(&format!("--{}", f.name)),
+                "help missing --{}",
+                f.name
+            );
+            assert!(h.contains(f.help), "help missing text for --{}", f.name);
+        }
+    }
+
+    #[test]
+    fn flag_and_subcommand_names_are_unique() {
+        let mut flags: Vec<&str> = flag_specs().iter().map(|f| f.name).collect();
+        flags.sort_unstable();
+        let n = flags.len();
+        flags.dedup();
+        assert_eq!(n, flags.len(), "duplicate flag name");
+        let mut subs: Vec<&str> = SUBCOMMANDS.iter().map(|s| s.name).collect();
+        subs.sort_unstable();
+        let n = subs.len();
+        subs.dedup();
+        assert_eq!(n, subs.len(), "duplicate subcommand name");
+    }
+
+    /// Anti-drift: every subcommand in this table has a literal dispatch
+    /// arm in `main.rs` (checked against the source, like the linter).
+    #[test]
+    fn every_subcommand_has_a_dispatch_arm_in_main() {
+        let src = crate::analysis::find_src_root().expect("source root");
+        let main_rs =
+            std::fs::read_to_string(src.join("main.rs")).expect("read main.rs");
+        for s in SUBCOMMANDS.iter().filter(|s| s.name != "help") {
+            assert!(
+                main_rs.contains(&format!("\"{}\" =>", s.name)),
+                "main.rs has no dispatch arm for subcommand {:?}",
+                s.name
+            );
+        }
+    }
+
+    /// Serve's dedicated flags all map onto `serve.*` config keys, which
+    /// must exist and parse (the same keys `--set` reaches).
+    #[test]
+    fn serve_flags_map_onto_config_keys() {
+        let mut cfg = crate::config::Config::new();
+        for (key, val) in [
+            ("serve.jobs", "10"),
+            ("serve.tenants", "2"),
+            ("serve.quotas", "2,1"),
+            ("serve.max_concurrent_jobs", "4"),
+            ("serve.queue_depth", "5"),
+            ("serve.mean_interarrival", "1.5"),
+            ("serve.preemption", "false"),
+            ("serve.seed", "99"),
+        ] {
+            cfg.apply_one(key, val).unwrap_or_else(|e| panic!("{key}: {e}"));
+        }
+        cfg.validate().unwrap();
+    }
+}

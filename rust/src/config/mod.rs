@@ -181,6 +181,48 @@ impl Default for SchedulerConfig {
     }
 }
 
+/// Multi-tenant job-service knobs (`difet serve`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    /// Jobs admitted to the shared pool at once; beyond this, arrivals
+    /// wait in the admission queue.
+    pub max_concurrent_jobs: usize,
+    /// Admission queue bound (the seed's `coordinator::backpressure`
+    /// semantics): arrivals past `queue_depth` waiting jobs are rejected
+    /// outright with a `tenant_jobs_rejected_*` count.
+    pub queue_depth: usize,
+    /// Tenants in the simulation; tenant `t` of a job is drawn
+    /// round-robin-ish from the workload RNG.
+    pub tenants: usize,
+    /// Slot quota per tenant for fair-share DRR.  Empty = every tenant
+    /// gets `total_slots / tenants` (min 1).
+    pub quotas: Vec<usize>,
+    /// Cooperative priority preemption of low-priority running units.
+    pub preemption: bool,
+    /// Jobs driven by the `difet serve` simulation.
+    pub jobs: usize,
+    /// Workload RNG seed (arrivals, shapes, tenants, priorities).
+    pub seed: u64,
+    /// Mean virtual-time gap between job arrivals, seconds (the
+    /// exponential inter-arrival parameter of the Poisson-ish process).
+    pub mean_interarrival: f64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_concurrent_jobs: 8,
+            queue_depth: 16,
+            tenants: 3,
+            quotas: Vec::new(),
+            preemption: true,
+            jobs: 50,
+            seed: 20170924,
+            mean_interarrival: 2.0,
+        }
+    }
+}
+
 /// HIB bundle / storage knobs.
 #[derive(Debug, Clone, PartialEq)]
 pub struct StorageConfig {
@@ -208,6 +250,7 @@ pub struct Config {
     pub scene: SceneConfig,
     pub cluster: ClusterConfig,
     pub scheduler: SchedulerConfig,
+    pub serve: ServeConfig,
     pub storage: StorageConfig,
     /// Directory holding `manifest.json` + `*.hlo.txt`.
     pub artifacts_dir: String,
@@ -239,6 +282,15 @@ impl Config {
         c(
             (0.0..=1.0).contains(&self.scheduler.speculation_slowness),
             "scheduler.speculation_slowness must be in [0,1]",
+        )?;
+        c(self.serve.max_concurrent_jobs >= 1, "serve.max_concurrent_jobs must be >= 1")?;
+        c(self.serve.queue_depth >= 1, "serve.queue_depth must be >= 1")?;
+        c(self.serve.tenants >= 1, "serve.tenants must be >= 1")?;
+        c(self.serve.jobs >= 1, "serve.jobs must be >= 1")?;
+        c(self.serve.mean_interarrival > 0.0, "serve.mean_interarrival must be > 0")?;
+        c(
+            self.serve.quotas.is_empty() || self.serve.quotas.len() == self.serve.tenants,
+            "serve.quotas must list one quota per tenant (or be empty)",
         )?;
         c(self.storage.block_size >= 1 << 20, "storage.block_size must be >= 1 MiB")?;
         c(
@@ -294,6 +346,20 @@ impl Config {
             "scheduler.profile" => self.scheduler.profile = p(key, val)?,
             "scheduler.profile_path" => self.scheduler.profile_path = Some(val.to_string()),
             "scheduler.queue_depth" => self.scheduler.queue_depth = p(key, val)?,
+            "serve.max_concurrent_jobs" => self.serve.max_concurrent_jobs = p(key, val)?,
+            "serve.queue_depth" => self.serve.queue_depth = p(key, val)?,
+            "serve.tenants" => self.serve.tenants = p(key, val)?,
+            "serve.preemption" => self.serve.preemption = p(key, val)?,
+            "serve.jobs" => self.serve.jobs = p(key, val)?,
+            "serve.seed" => self.serve.seed = p(key, val)?,
+            "serve.mean_interarrival" => self.serve.mean_interarrival = p(key, val)?,
+            "serve.quotas" => {
+                self.serve.quotas = val
+                    .split(',')
+                    .filter(|s| !s.trim().is_empty())
+                    .map(|s| p::<usize>(key, s.trim()))
+                    .collect::<Result<_>>()?
+            }
             "storage.block_size" => self.storage.block_size = p(key, val)?,
             "storage.compress" => self.storage.compress = p(key, val)?,
             "storage.compression_level" => self.storage.compression_level = p(key, val)?,
@@ -409,6 +475,23 @@ mod tests {
         let mut cfg = Config::new();
         assert!(cfg.apply_one("cluster.warp_factor", "9").is_err());
         assert!(cfg.apply_one("cluster.nodes", "many").is_err());
+    }
+
+    #[test]
+    fn serve_keys_parse_and_validate() {
+        let mut cfg = Config::new();
+        cfg.apply_one("serve.max_concurrent_jobs", "4").unwrap();
+        cfg.apply_one("serve.tenants", "2").unwrap();
+        cfg.apply_one("serve.quotas", "6, 2").unwrap();
+        cfg.apply_one("serve.preemption", "false").unwrap();
+        cfg.apply_one("serve.jobs", "25").unwrap();
+        cfg.apply_one("serve.mean_interarrival", "0.5").unwrap();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.serve.quotas, vec![6, 2]);
+        assert!(!cfg.serve.preemption);
+        // Quota list length must match the tenant count.
+        cfg.serve.quotas = vec![1, 2, 3];
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -55,6 +55,19 @@ impl<T> BoundedQueue<T> {
         }
     }
 
+    /// Non-blocking push: `Err(item)` when the queue is full or closed.
+    /// The job service's admission path uses this to *reject* a job at
+    /// the configured depth bound instead of blocking the submitter.
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed || st.queue.len() >= self.capacity {
+            return Err(item);
+        }
+        st.queue.push_back(item);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
     /// Blocking pop.  `None` only after `close()` and full drain.
     pub fn pop(&self) -> Option<T> {
         let mut st = self.state.lock().unwrap();
@@ -85,6 +98,10 @@ impl<T> BoundedQueue<T> {
         st.closed = true;
         self.not_full.notify_all();
         self.not_empty.notify_all();
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
     }
 
     pub fn len(&self) -> usize {
@@ -122,6 +139,18 @@ mod tests {
         assert_eq!(q.pop(), Some(2));
         assert_eq!(q.pop(), None);
         assert_eq!(q.push(3), Err(3));
+    }
+
+    #[test]
+    fn try_push_rejects_at_capacity_without_blocking() {
+        let q = BoundedQueue::new(2);
+        assert!(q.try_push(0).is_ok());
+        assert!(q.try_push(1).is_ok());
+        assert_eq!(q.try_push(2), Err(2), "full queue must reject, not block");
+        assert_eq!(q.pop(), Some(0));
+        assert!(q.try_push(2).is_ok(), "freed capacity admits again");
+        q.close();
+        assert_eq!(q.try_push(9), Err(9), "closed queue rejects");
     }
 
     #[test]

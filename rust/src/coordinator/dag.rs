@@ -177,6 +177,102 @@ pub struct UnitOutput {
 /// barrier schedules produce bit-identical results.  `merge` is called
 /// exactly once per unit (only for the winning attempt) and `finalize`
 /// exactly once, after every unit has merged.
+///
+/// # Example
+///
+/// A two-stage DAG: `nums` emits three numbers into a shared sink, and
+/// `total` declares one unit per number (unit-level deps, so each is
+/// released the moment *its* number merged) and folds them:
+///
+/// ```
+/// use std::any::Any;
+/// use std::sync::{Arc, Mutex};
+/// use difet::config::Config;
+/// use difet::coordinator::{
+///     run_dag, DagStage, ExecMode, Gate, StagePlan, TaskHandle, UnitOutput, UnitRef, UnitSpec,
+/// };
+/// use difet::dfs::NodeId;
+/// use difet::metrics::Registry;
+///
+/// struct Nums {
+///     out: Arc<Mutex<Vec<u64>>>,
+/// }
+/// impl DagStage for Nums {
+///     fn name(&self) -> &'static str {
+///         "nums"
+///     }
+///     fn plan(&self) -> difet::Result<StagePlan> {
+///         Ok(StagePlan { units: vec![UnitSpec::default(); 3], plan_io_secs: 0.0 })
+///     }
+///     fn run_unit(
+///         &self,
+///         unit: usize,
+///         _handle: &TaskHandle,
+///         _node: NodeId,
+///     ) -> difet::Result<Option<UnitOutput>> {
+///         Ok(Some(UnitOutput {
+///             payload: Box::new(unit as u64 + 1),
+///             compute_ns: 1_000,
+///             io_secs: 0.0,
+///         }))
+///     }
+///     fn merge(&self, unit: usize, payload: Box<dyn Any + Send>) -> difet::Result<()> {
+///         let v = *payload.downcast::<u64>().expect("u64 payload");
+///         let mut out = self.out.lock().unwrap();
+///         if out.len() <= unit {
+///             out.resize(unit + 1, 0);
+///         }
+///         out[unit] = v;
+///         Ok(())
+///     }
+/// }
+///
+/// struct Total {
+///     nums: Arc<Mutex<Vec<u64>>>,
+///     total: Mutex<u64>,
+/// }
+/// impl DagStage for Total {
+///     fn name(&self) -> &'static str {
+///         "total"
+///     }
+///     fn gates(&self) -> Vec<Gate> {
+///         vec![Gate::Planned(0)] // plan as soon as `nums` has planned
+///     }
+///     fn plan(&self) -> difet::Result<StagePlan> {
+///         let units = (0..3)
+///             .map(|u| UnitSpec {
+///                 deps: vec![UnitRef { stage: 0, unit: u }],
+///                 ..Default::default()
+///             })
+///             .collect();
+///         Ok(StagePlan { units, plan_io_secs: 0.0 })
+///     }
+///     fn run_unit(
+///         &self,
+///         unit: usize,
+///         _handle: &TaskHandle,
+///         _node: NodeId,
+///     ) -> difet::Result<Option<UnitOutput>> {
+///         // The declared dep guarantees entry `unit` merged before
+///         // this attempt was released.
+///         let v = self.nums.lock().unwrap()[unit];
+///         Ok(Some(UnitOutput { payload: Box::new(v * 10), compute_ns: 1_000, io_secs: 0.0 }))
+///     }
+///     fn merge(&self, _unit: usize, payload: Box<dyn Any + Send>) -> difet::Result<()> {
+///         *self.total.lock().unwrap() += *payload.downcast::<u64>().expect("u64 payload");
+///         Ok(())
+///     }
+/// }
+///
+/// let shared = Arc::new(Mutex::new(Vec::new()));
+/// let nums = Nums { out: shared.clone() };
+/// let total = Total { nums: shared, total: Mutex::new(0) };
+/// let stages: Vec<&dyn DagStage> = vec![&nums, &total];
+/// let report = run_dag(&Config::new(), &stages, ExecMode::Pipelined, &Registry::new())?;
+/// assert_eq!(*total.total.lock().unwrap(), 60); // (1 + 2 + 3) × 10
+/// assert_eq!(report.stages.len(), 2);
+/// # Ok::<(), difet::DifetError>(())
+/// ```
 pub trait DagStage: Sync {
     /// Short stable name (metrics suffix + report rows).
     fn name(&self) -> &'static str;
@@ -1056,6 +1152,54 @@ fn secs_to_ns(secs: f64) -> u64 {
 /// worker slots, drain every stage through one shared [`Scheduler`]
 /// (locality / bounded retries / speculation for every stage), and
 /// account virtual time per the module docs.
+///
+/// # Example
+///
+/// A single map-shaped stage whose units square their index (see
+/// [`DagStage`] for a multi-stage DAG with unit-level deps and gates):
+///
+/// ```
+/// use std::any::Any;
+/// use std::sync::Mutex;
+/// use difet::config::Config;
+/// use difet::coordinator::{run_dag, DagStage, ExecMode, StagePlan, TaskHandle, UnitOutput, UnitSpec};
+/// use difet::dfs::NodeId;
+/// use difet::metrics::Registry;
+///
+/// struct Square {
+///     sink: Mutex<Vec<u64>>,
+/// }
+/// impl DagStage for Square {
+///     fn name(&self) -> &'static str {
+///         "square"
+///     }
+///     fn plan(&self) -> difet::Result<StagePlan> {
+///         Ok(StagePlan { units: vec![UnitSpec::default(); 4], plan_io_secs: 0.0 })
+///     }
+///     fn run_unit(
+///         &self,
+///         unit: usize,
+///         _handle: &TaskHandle,
+///         _node: NodeId,
+///     ) -> difet::Result<Option<UnitOutput>> {
+///         let sq = (unit as u64) * (unit as u64);
+///         Ok(Some(UnitOutput { payload: Box::new(sq), compute_ns: 1_000, io_secs: 0.0 }))
+///     }
+///     fn merge(&self, _unit: usize, payload: Box<dyn Any + Send>) -> difet::Result<()> {
+///         self.sink.lock().unwrap().push(*payload.downcast::<u64>().expect("u64 payload"));
+///         Ok(())
+///     }
+/// }
+///
+/// let stage = Square { sink: Mutex::new(Vec::new()) };
+/// let stages: Vec<&dyn DagStage> = vec![&stage];
+/// let report = run_dag(&Config::new(), &stages, ExecMode::Pipelined, &Registry::new())?;
+/// let mut got = stage.sink.into_inner().unwrap();
+/// got.sort_unstable(); // merge order follows virtual-time completion
+/// assert_eq!(got, vec![0, 1, 4, 9]);
+/// assert!(report.sim_seconds > 0.0);
+/// # Ok::<(), difet::DifetError>(())
+/// ```
 pub fn run_dag(
     cfg: &Config,
     stages: &[&dyn DagStage],

@@ -27,7 +27,14 @@
 //!   length-prefixed, CRC-guarded record streams every inter-stage DFS
 //!   file uses (features, scenes, labels).
 //! * [`backpressure`] — the bounded queue used between planning and
-//!   execution, so a slow cluster never buffers the whole corpus.
+//!   execution, so a slow cluster never buffers the whole corpus — and,
+//!   since the job service landed, the admission queue whose `try_push`
+//!   rejection bounds how many jobs may wait for the shared pool.
+//! * [`serve`] — the multi-tenant job service: a persistent
+//!   [`JobService`] that pays pool startup once and drains MANY
+//!   concurrent DAG jobs through one shared fair-share scheduler, with
+//!   queue-depth admission control, per-tenant quotas (DRR), priority
+//!   preemption and a per-job happens-before audit (`difet serve`).
 //!
 //! Four job shapes run on this engine: the paper's map-shaped
 //! extraction ([`run_job`]/[`run_fused_job`]), the reduce-shaped
@@ -44,6 +51,7 @@ pub mod driver;
 pub mod job;
 pub mod merge;
 pub mod scheduler;
+pub mod serve;
 pub mod shuffle;
 pub mod stages;
 
@@ -63,6 +71,9 @@ pub use merge::{
     CensusTreeReducer, LabelTreeReducer, PairTreeReducer, TreeMergeStage, TreeReducer,
 };
 pub use scheduler::{Clock, Scheduler, TaskDescriptor, TaskHandle, TaskState, WorkItem};
+// serve's JobSpec/JobReport would clash with job.rs's; import those via
+// `coordinator::serve::{JobSpec, JobReport}` directly.
+pub use serve::{synthetic_jobs, JobService, ServeReport, TenantReport};
 pub use shuffle::{
     decode_features, decode_labels, decode_scene, encode_features, encode_labels, encode_scene,
     enumerate_pairs, merge_image_outputs,

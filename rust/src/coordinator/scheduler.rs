@@ -22,6 +22,24 @@
 //! ([`super::job::LabelTile`]) share the same locality/retry/speculation
 //! machinery.  Progress rates are measured against an injectable
 //! monotonic [`Clock`] so tests can drive speculation deterministically.
+//!
+//! **Multi-tenant mode** ([`Scheduler::new_fair`]) adds two orthogonal
+//! policies on top, used by the job service (`coordinator::serve`):
+//!
+//! * **Fair share** — every work item names a tenant
+//!   ([`WorkItem::tenant`]) with a configured slot quota.  When a slot
+//!   frees up, tenants holding fewer slots than their quota are served
+//!   first; within that pool a deficit-round-robin pass (each grant
+//!   charges `1/quota` of a quantum, lowest charge goes next) keeps
+//!   long-run slot shares proportional to quotas.  The invariant "no
+//!   tenant runs above quota while a backlogged tenant sits below its
+//!   own" is re-checked at every grant and exported via
+//!   [`Scheduler::fairness_violations`].
+//! * **Priority preemption** — pushing a high-priority item may
+//!   cooperatively cancel one running lower-priority attempt (same
+//!   [`TaskHandle::cancelled`] flag the speculation twins use).  The
+//!   victim re-queues without burning a retry attempt; unit purity
+//!   makes the re-run bit-identical.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -34,6 +52,20 @@ use crate::dfs::NodeId;
 pub trait WorkItem: Clone + Send + Sync {
     /// Nodes where running this item is data-local, best first.
     fn preferred_nodes(&self) -> &[NodeId];
+
+    /// Tenant this item bills its slot time to.  Only consulted in
+    /// fair-share mode ([`Scheduler::new_fair`]); single-job schedulers
+    /// run everything under tenant 0.
+    fn tenant(&self) -> usize {
+        0
+    }
+
+    /// Scheduling class: higher runs first, and (in fair-share mode
+    /// with preemption enabled) may cooperatively evict a running
+    /// lower-priority attempt.
+    fn priority(&self) -> u8 {
+        1
+    }
 }
 
 /// Monotonic nanosecond source used for progress-rate estimation.
@@ -139,6 +171,25 @@ struct TaskEntry<D> {
     attempts_started: usize,
     running: Vec<(usize, Attempt)>, // (attempt index, attempt)
     speculated: bool,
+    /// Cached [`WorkItem::tenant`] / [`WorkItem::priority`] so fair-share
+    /// picks never call back into the item under the lock.
+    tenant: usize,
+    priority: u8,
+    /// Attempt indices cancelled by priority preemption (not by a twin
+    /// winning or an abort): their [`Scheduler::report_cancelled`]
+    /// re-queues the task and refunds the attempt.
+    preempted_attempts: Vec<usize>,
+    /// Attempts refunded after preemption; the retry budget gate uses
+    /// `attempts_started - preempt_credits`.
+    preempt_credits: usize,
+}
+
+/// Fair-share policy: per-tenant slot quotas plus the preemption switch.
+#[derive(Debug, Clone)]
+struct FairPolicy {
+    /// Slot quota per tenant (index = tenant id); each entry ≥ 1.
+    quotas: Vec<usize>,
+    preemption: bool,
 }
 
 struct SchedState<D> {
@@ -149,6 +200,11 @@ struct SchedState<D> {
     /// When false, more tasks may still be pushed ([`Scheduler::push`]):
     /// an idle slot blocks instead of draining to `Done`.
     closed: bool,
+    /// Fair-share bookkeeping (all zero-length when not in fair mode):
+    /// slots currently held per tenant…
+    tenant_running: Vec<usize>,
+    /// …and lifetime grants per tenant (the DRR charge numerator).
+    tenant_granted: Vec<u64>,
 }
 
 /// The scheduler shared between the driver and all worker threads.
@@ -157,10 +213,19 @@ pub struct Scheduler<D: WorkItem = TaskDescriptor> {
     work_available: Condvar,
     cfg: SchedulerConfig,
     clock: Clock,
+    fair: Option<FairPolicy>,
     pub data_local_tasks: AtomicU64,
     pub rack_remote_tasks: AtomicU64,
     pub speculative_launches: AtomicU64,
     pub retries: AtomicU64,
+    /// Attempts cooperatively evicted to make room for a higher-priority
+    /// push (fair-share mode only).
+    pub preemptions: AtomicU64,
+    /// Grants that violated the fair-share invariant (a tenant served
+    /// above quota while a backlogged tenant sat below its own).  The
+    /// pick rule makes this impossible by construction; the counter is
+    /// the audit that proves it stayed impossible.
+    pub fairness_violations: AtomicU64,
     /// Monotone attempt-launch counter feeding [`TaskHandle::launch_seq`].
     launch_counter: AtomicU64,
 }
@@ -194,6 +259,27 @@ impl<D: WorkItem> Scheduler<D> {
     /// [`Scheduler::close`] when no further units can ever arrive.  Until
     /// then, idle slots block instead of draining to `Done`.
     pub fn new_dynamic(cfg: &SchedulerConfig, clock: Clock) -> Self {
+        Self::build(cfg, clock, None)
+    }
+
+    /// An open scheduler in **fair-share mode**: tenants are served in
+    /// proportion to `quotas` (slots per tenant, one entry per tenant
+    /// id, each clamped to ≥ 1), and — when `preemption` is on — a
+    /// pushed high-priority item may cooperatively evict one running
+    /// lower-priority attempt.  Used by the multi-tenant job service.
+    pub fn new_fair(
+        cfg: &SchedulerConfig,
+        clock: Clock,
+        quotas: &[usize],
+        preemption: bool,
+    ) -> Self {
+        let quotas: Vec<usize> = quotas.iter().map(|&q| q.max(1)).collect();
+        assert!(!quotas.is_empty(), "fair mode needs at least one tenant");
+        Self::build(cfg, clock, Some(FairPolicy { quotas, preemption }))
+    }
+
+    fn build(cfg: &SchedulerConfig, clock: Clock, fair: Option<FairPolicy>) -> Self {
+        let tenants = fair.as_ref().map_or(0, |f| f.quotas.len());
         Scheduler {
             state: Mutex::new(SchedState {
                 tasks: Vec::new(),
@@ -201,14 +287,19 @@ impl<D: WorkItem> Scheduler<D> {
                 outstanding: 0,
                 aborted: None,
                 closed: false,
+                tenant_running: vec![0; tenants],
+                tenant_granted: vec![0; tenants],
             }),
             work_available: Condvar::new(),
             cfg: cfg.clone(),
             clock,
+            fair,
             data_local_tasks: AtomicU64::new(0),
             rack_remote_tasks: AtomicU64::new(0),
             speculative_launches: AtomicU64::new(0),
             retries: AtomicU64::new(0),
+            preemptions: AtomicU64::new(0),
+            fairness_violations: AtomicU64::new(0),
             launch_counter: AtomicU64::new(0),
         }
     }
@@ -216,8 +307,13 @@ impl<D: WorkItem> Scheduler<D> {
     /// Add one task to the pending queue; returns its scheduler task id.
     /// Panics if the scheduler was already closed.
     pub fn push(&self, desc: D) -> usize {
+        let tenant = desc.tenant();
+        let priority = desc.priority();
         let mut st = self.state.lock().unwrap();
         assert!(!st.closed, "push after close");
+        if let Some(fair) = &self.fair {
+            assert!(tenant < fair.quotas.len(), "tenant {tenant} has no quota");
+        }
         let tid = st.tasks.len();
         st.tasks.push(TaskEntry {
             desc,
@@ -225,11 +321,53 @@ impl<D: WorkItem> Scheduler<D> {
             attempts_started: 0,
             running: Vec::new(),
             speculated: false,
+            tenant,
+            priority,
+            preempted_attempts: Vec::new(),
+            preempt_credits: 0,
         });
         st.pending.push(tid);
         st.outstanding += 1;
+        if self.fair.as_ref().is_some_and(|f| f.preemption) {
+            self.maybe_preempt(&mut st, priority);
+        }
         self.work_available.notify_all();
         tid
+    }
+
+    /// Cooperatively evict one running attempt of strictly lower
+    /// priority than `priority`, if any — lowest class first, youngest
+    /// task on ties (least sunk work).  The victim's
+    /// [`Scheduler::report_cancelled`] re-queues it with the attempt
+    /// refunded, so preemption never eats into the retry budget.
+    fn maybe_preempt(&self, st: &mut SchedState<D>, priority: u8) {
+        let victim = st
+            .tasks
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| {
+                e.state == TaskState::Running
+                    && e.priority < priority
+                    && e.running
+                        .iter()
+                        .any(|(_, a)| !a.cancel.load(Ordering::Relaxed))
+            })
+            .min_by_key(|(tid, e)| (e.priority, usize::MAX - tid))
+            .map(|(tid, _)| tid);
+        if let Some(tid) = victim {
+            let entry = &mut st.tasks[tid];
+            let att = {
+                let (att, a) = entry
+                    .running
+                    .iter()
+                    .find(|(_, a)| !a.cancel.load(Ordering::Relaxed))
+                    .expect("victim filter guarantees a live attempt");
+                a.cancel.store(true, Ordering::Relaxed);
+                *att
+            };
+            entry.preempted_attempts.push(att);
+            self.preemptions.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     /// No more [`Scheduler::push`] calls will come: once the current
@@ -264,8 +402,11 @@ impl<D: WorkItem> Scheduler<D> {
             if (st.outstanding == 0 && st.closed) || st.aborted.is_some() {
                 return Assignment::Done;
             }
-            // 1. Locality-preferred pending task.
-            let pick = if self.cfg.locality_aware {
+            // 1. Pick a pending task: fair-share DRR across tenants when
+            //    in fair mode, otherwise plain locality-then-FIFO.
+            let pick = if let Some(fair) = &self.fair {
+                self.fair_pick(&mut st, node, fair)
+            } else if self.cfg.locality_aware {
                 st.pending
                     .iter()
                     .position(|&tid| st.tasks[tid].desc.preferred_nodes().contains(&node))
@@ -311,6 +452,11 @@ impl<D: WorkItem> Scheduler<D> {
         node: NodeId,
         speculative: bool,
     ) -> TaskHandle {
+        if self.fair.is_some() {
+            let t = st.tasks[tid].tenant;
+            st.tenant_running[t] += 1;
+            st.tenant_granted[t] += 1;
+        }
         let entry = &mut st.tasks[tid];
         entry.state = TaskState::Running;
         entry.attempts_started += 1;
@@ -335,6 +481,64 @@ impl<D: WorkItem> Scheduler<D> {
             cancel,
             progress_milli: progress,
         }
+    }
+
+    /// Fair-share pick: returns an index into `st.pending`.
+    ///
+    /// 1. Only the highest priority class present in the queue competes.
+    /// 2. Tenants holding fewer slots than their quota go first; if every
+    ///    backlogged tenant is at/over quota the pool stays
+    ///    work-conserving and all of them compete.
+    /// 3. Deficit round-robin inside the pool: each past grant charged
+    ///    the tenant `1/quota`, lowest accumulated charge goes next
+    ///    (ties break to the lowest tenant id — deterministic).
+    /// 4. Within the chosen (tenant, class): locality-preferred pending
+    ///    item, else oldest (FIFO).
+    ///
+    /// Also audits the fairness invariant at grant time (see
+    /// [`Scheduler::fairness_violations`]).
+    fn fair_pick(&self, st: &mut SchedState<D>, node: NodeId, fair: &FairPolicy) -> Option<usize> {
+        let top = st.pending.iter().map(|&tid| st.tasks[tid].priority).max()?;
+        let mut backlogged: Vec<usize> = st
+            .pending
+            .iter()
+            .filter(|&&tid| st.tasks[tid].priority == top)
+            .map(|&tid| st.tasks[tid].tenant)
+            .collect();
+        backlogged.sort_unstable();
+        backlogged.dedup();
+        let under: Vec<usize> = backlogged
+            .iter()
+            .copied()
+            .filter(|&t| st.tenant_running[t] < fair.quotas[t])
+            .collect();
+        let pool = if under.is_empty() { &backlogged } else { &under };
+        let tenant = pool
+            .iter()
+            .copied()
+            .min_by(|&a, &b| {
+                let ca = st.tenant_granted[a] as f64 / fair.quotas[a] as f64;
+                let cb = st.tenant_granted[b] as f64 / fair.quotas[b] as f64;
+                ca.total_cmp(&cb).then(a.cmp(&b))
+            })
+            .expect("pool is non-empty when pending is");
+        // Audit: granting to an at/over-quota tenant is only legitimate
+        // when no under-quota tenant had work in this class.
+        if st.tenant_running[tenant] >= fair.quotas[tenant] && !under.is_empty() {
+            self.fairness_violations.fetch_add(1, Ordering::Relaxed);
+        }
+        let of_tenant = |tid: usize| {
+            let e = &st.tasks[tid];
+            e.priority == top && e.tenant == tenant
+        };
+        if self.cfg.locality_aware {
+            if let Some(idx) = st.pending.iter().position(|&tid| {
+                of_tenant(tid) && st.tasks[tid].desc.preferred_nodes().contains(&node)
+            }) {
+                return Some(idx);
+            }
+        }
+        st.pending.iter().position(|&tid| of_tenant(tid))
     }
 
     /// Pick the slowest running, not-yet-speculated task whose progress
@@ -366,7 +570,9 @@ impl<D: WorkItem> Scheduler<D> {
     /// winner (its result should be kept).
     pub fn report_success(&self, handle: &TaskHandle) -> bool {
         let mut st = self.state.lock().unwrap();
+        self.release_slot(&mut st, handle.task_id);
         let entry = &mut st.tasks[handle.task_id];
+        entry.preempted_attempts.retain(|&a| a != handle.attempt);
         if entry.state == TaskState::Succeeded {
             return false; // a speculative twin already won
         }
@@ -388,8 +594,10 @@ impl<D: WorkItem> Scheduler<D> {
     /// the DAG executor counts these per stage).
     pub fn report_failure(&self, handle: &TaskHandle, error: &str) -> bool {
         let mut st = self.state.lock().unwrap();
+        self.release_slot(&mut st, handle.task_id);
         let max_attempts = self.cfg.max_attempts;
         let entry = &mut st.tasks[handle.task_id];
+        entry.preempted_attempts.retain(|&a| a != handle.attempt);
         entry.running.retain(|(att, _)| *att != handle.attempt);
         if entry.state == TaskState::Succeeded {
             return false; // twin already succeeded; this failure is moot
@@ -397,7 +605,7 @@ impl<D: WorkItem> Scheduler<D> {
         if !entry.running.is_empty() {
             return false; // a twin is still running; let it finish
         }
-        let requeued = if entry.attempts_started >= max_attempts {
+        let requeued = if entry.attempts_started - entry.preempt_credits >= max_attempts {
             entry.state = TaskState::Failed;
             st.aborted = Some(format!(
                 "task {} failed {} attempts: {error}",
@@ -414,16 +622,44 @@ impl<D: WorkItem> Scheduler<D> {
         requeued
     }
 
-    /// Lost-attempt cleanup for cancelled speculative twins.
+    /// Lost-attempt cleanup for cooperatively cancelled attempts —
+    /// speculative twins that lost, abort victims, and (in fair-share
+    /// mode) preemption victims.  A preemption victim goes back to the
+    /// pending queue with its attempt refunded: eviction is a
+    /// scheduling decision, not a task fault, so it must never eat into
+    /// the retry budget.
     pub fn report_cancelled(&self, handle: &TaskHandle) {
         let mut st = self.state.lock().unwrap();
+        self.release_slot(&mut st, handle.task_id);
         let entry = &mut st.tasks[handle.task_id];
+        let was_preempted = entry.preempted_attempts.contains(&handle.attempt);
+        entry.preempted_attempts.retain(|&a| a != handle.attempt);
         entry.running.retain(|(att, _)| *att != handle.attempt);
+        if was_preempted && entry.state == TaskState::Running && entry.running.is_empty() {
+            entry.state = TaskState::Pending;
+            entry.preempt_credits += 1;
+            st.pending.push(handle.task_id);
+        }
         self.work_available.notify_all();
+    }
+
+    /// Fair-share slot bookkeeping: every launched attempt releases its
+    /// slot exactly once, through whichever report_* call it exits by.
+    fn release_slot(&self, st: &mut SchedState<D>, tid: usize) {
+        if self.fair.is_some() {
+            let t = st.tasks[tid].tenant;
+            st.tenant_running[t] -= 1;
+        }
     }
 
     pub fn abort_reason(&self) -> Option<String> {
         self.state.lock().unwrap().aborted.clone()
+    }
+
+    /// Lifetime attempt grants per tenant (fair-share mode; empty
+    /// otherwise).  The serve report uses it for the fairness table.
+    pub fn tenant_granted(&self) -> Vec<u64> {
+        self.state.lock().unwrap().tenant_granted.clone()
     }
 
     pub fn task_state(&self, tid: usize) -> TaskState {
@@ -676,6 +912,142 @@ mod tests {
         assert!(h.cancelled(), "running attempt must be cancelled");
         assert!(matches!(s.next_assignment(NodeId(1)), Assignment::Done));
         assert!(s.abort_reason().unwrap().contains("stage plan failed"));
+    }
+
+    /// A tenant/priority-tagged unit for fair-share tests.
+    #[derive(Clone)]
+    struct TenantUnit {
+        tenant: usize,
+        priority: u8,
+        nodes: Vec<NodeId>,
+    }
+    impl WorkItem for TenantUnit {
+        fn preferred_nodes(&self) -> &[NodeId] {
+            &self.nodes
+        }
+        fn tenant(&self) -> usize {
+            self.tenant
+        }
+        fn priority(&self) -> u8 {
+            self.priority
+        }
+    }
+
+    fn tu(tenant: usize, priority: u8) -> TenantUnit {
+        TenantUnit { tenant, priority, nodes: Vec::new() }
+    }
+
+    #[test]
+    fn fair_share_serves_under_quota_tenant_first() {
+        // Tenant 0 floods the queue; tenant 1 (same quota) arrives late.
+        // With one slot held by tenant 0, the freed slot must go to
+        // tenant 1: it is under quota while tenant 0 is at quota.
+        let (_, clock) = manual_clock();
+        let s = Scheduler::new_fair(&cfg(), clock, &[1, 1], false);
+        for _ in 0..3 {
+            s.push(tu(0, 1));
+        }
+        s.push(tu(1, 1));
+        let h0 = match s.next_assignment(NodeId(0)) {
+            Assignment::Run(u, h) => {
+                assert_eq!(u.tenant, 0, "first grant: only tenant 0 queued at start-equal charge");
+                h
+            }
+            _ => panic!("expected work"),
+        };
+        match s.next_assignment(NodeId(1)) {
+            Assignment::Run(u, h) => {
+                assert_eq!(u.tenant, 1, "tenant 0 is at quota; under-quota tenant 1 must win");
+                s.report_success(&h);
+            }
+            _ => panic!("expected work"),
+        }
+        s.report_success(&h0);
+        assert_eq!(s.fairness_violations.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn fair_share_drr_tracks_quota_ratio() {
+        // Quotas 3:1 over a long backlog → grants converge to 3:1.
+        let (_, clock) = manual_clock();
+        let s = Scheduler::new_fair(&cfg(), clock, &[3, 1], false);
+        for _ in 0..40 {
+            s.push(tu(0, 1));
+            s.push(tu(1, 1));
+        }
+        // Single slot, serial drain: quotas never bind on running counts,
+        // so the DRR charge alone decides the interleave.
+        for _ in 0..40 {
+            match s.next_assignment(NodeId(0)) {
+                Assignment::Run(_, h) => {
+                    s.report_success(&h);
+                }
+                _ => panic!("expected work"),
+            }
+        }
+        let granted = s.tenant_granted();
+        assert_eq!(granted.iter().sum::<u64>(), 40);
+        assert_eq!(granted[0], 30, "3:1 quotas must yield a 3:1 grant split, got {granted:?}");
+        assert_eq!(s.fairness_violations.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn higher_priority_class_runs_first() {
+        let (_, clock) = manual_clock();
+        let s = Scheduler::new_fair(&cfg(), clock, &[1, 1], false);
+        s.push(tu(0, 1));
+        s.push(tu(1, 3));
+        match s.next_assignment(NodeId(0)) {
+            Assignment::Run(u, h) => {
+                assert_eq!(u.priority, 3, "priority 3 must outrank the earlier priority-1 push");
+                s.report_success(&h);
+            }
+            _ => panic!("expected work"),
+        }
+        match s.next_assignment(NodeId(0)) {
+            Assignment::Run(u, h) => {
+                assert_eq!(u.priority, 1);
+                s.report_success(&h);
+            }
+            _ => panic!("expected work"),
+        }
+    }
+
+    #[test]
+    fn preemption_evicts_low_priority_and_refunds_attempt() {
+        let mut c = cfg();
+        c.max_attempts = 1; // the refund is the only thing keeping the victim alive
+        let (_, clock) = manual_clock();
+        let s = Scheduler::new_fair(&c, clock, &[1, 1], true);
+        s.push(tu(0, 1));
+        let victim = match s.next_assignment(NodeId(0)) {
+            Assignment::Run(_, h) => h,
+            _ => panic!("expected work"),
+        };
+        assert!(!victim.cancelled());
+        // A higher-priority push cancels the running low-priority attempt.
+        s.push(tu(1, 3));
+        assert!(victim.cancelled(), "push of priority 3 must preempt the priority-1 attempt");
+        assert_eq!(s.preemptions.load(Ordering::Relaxed), 1);
+        s.report_cancelled(&victim); // victim observes the flag and yields
+        // High-priority unit runs, then the victim re-runs: its first
+        // attempt was refunded, so max_attempts=1 still admits attempt 1.
+        match s.next_assignment(NodeId(0)) {
+            Assignment::Run(u, h) => {
+                assert_eq!(u.priority, 3);
+                s.report_success(&h);
+            }
+            _ => panic!("expected preempting unit"),
+        }
+        match s.next_assignment(NodeId(0)) {
+            Assignment::Run(u, h) => {
+                assert_eq!((u.tenant, h.attempt), (0, 1), "victim must re-queue, not fail");
+                s.report_success(&h);
+            }
+            _ => panic!("expected requeued victim"),
+        }
+        assert!(s.abort_reason().is_none());
+        assert_eq!(s.task_state(0), TaskState::Succeeded);
     }
 
     #[test]

@@ -1,0 +1,1546 @@
+//! Multi-tenant job service: MANY concurrent DAG jobs on ONE shared
+//! slot pool.
+//!
+//! Every other `difet` entry point builds a cluster, runs one DAG and
+//! exits — so the fixed job startup (PR 8's critical-path attribution
+//! shows it as a dominant serial term) is paid per invocation.  The
+//! ROADMAP's north star ("serve heavy traffic from millions of users")
+//! needs the opposite shape: a persistent coordinator that pays startup
+//! once and then streams heterogeneous jobs through the same worker
+//! slots.  [`JobService`] is that coordinator:
+//!
+//! * **One pool, many DAGs.**  A single fair-share [`Scheduler`]
+//!   (`Scheduler::new_fair`) executes the units of every admitted job;
+//!   each job keeps its own stage/unit state machine (a per-job copy of
+//!   the `dag.rs` pipelined executor) so plans, merges and finalizes
+//!   stay attributable to the job that owns them.
+//! * **Admission control.**  At most `serve.max_concurrent_jobs` jobs
+//!   run at once; due arrivals beyond that wait in a
+//!   [`BoundedQueue`](super::backpressure::BoundedQueue) of depth
+//!   `serve.queue_depth`, and arrivals past the bound are *rejected* —
+//!   the queue can never grow without limit.
+//! * **Fair share + preemption.**  Slots free up into a
+//!   deficit-round-robin pick over tenants (quota
+//!   `serve.quotas`/`serve.tenants`); a higher-priority arrival may
+//!   cooperatively preempt a running lower-priority unit
+//!   (`serve.preemption`), reusing the kill machinery speculative twins
+//!   already exercise.
+//! * **Per-job determinism audit.**  Every admitted job threads its own
+//!   [`HbChecker`] through the shared pool, so the bit-identical-per-job
+//!   invariant is *checked*, not assumed, under co-scheduling.
+//!
+//! # Virtual time
+//!
+//! The pool inherits the DAG runtime's event-driven virtual clock: unit
+//! completion is `max(slot_clock, ready) + overhead + io + compute`.
+//! Pool startup (`CostModel::job_startup`) initializes every slot clock
+//! and the admission frontier ONCE — jobs admitted later never pay it
+//! again.  A job's admission time is `max(arrival, frontier)` where the
+//! frontier advances to each processed completion; with one slot the
+//! frontier is exactly the event order, so the whole simulation is
+//! deterministic; with many slots the *outputs* stay bit-identical and
+//! the admission/fairness invariants hold while timings are
+//! approximately ordered (same contract `dag.rs` documents for its
+//! multi-slot timings).
+//!
+//! Queue-wait is measured from *arrival* to *admission* (early arrivals
+//! wait out pool startup too — that is part of the service experience).
+//! Cooperative preemption kills are modeled as instantaneous: a killed
+//! attempt advances no virtual clock, and the refunded retry re-runs
+//! when the unit is next granted.
+//!
+//! # Example
+//!
+//! ```
+//! use difet::config::Config;
+//! use difet::coordinator::serve::{synthetic_jobs, JobService};
+//! use difet::metrics::Registry;
+//!
+//! let mut cfg = Config::new();
+//! cfg.cluster.nodes = 2;
+//! cfg.cluster.slots_per_node = 2;
+//! cfg.serve.jobs = 4;
+//! let mut svc = JobService::new(&cfg);
+//! for job in synthetic_jobs(&cfg) {
+//!     svc.submit(job);
+//! }
+//! let report = svc.run(&Registry::new()).unwrap();
+//! assert_eq!(report.completed() + report.rejected(), 4);
+//! assert!(report.fairness_ok());
+//! ```
+
+use std::any::Any;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::analysis::dag_check;
+use crate::analysis::hb::HbChecker;
+use crate::cluster::CostModel;
+use crate::config::Config;
+use crate::dfs::NodeId;
+use crate::metrics::Registry;
+use crate::util::rng::Pcg32;
+use crate::util::{DifetError, Result, Stopwatch};
+
+use super::backpressure::BoundedQueue;
+use super::dag::{DagStage, Gate, StagePlan, UnitOutput, UnitRef, UnitSpec};
+use super::scheduler::{monotonic_clock, Assignment, Scheduler, TaskHandle, WorkItem};
+
+/// Shared observable-output sink a job's synthetic stages merge into —
+/// the job's "result file".  [`sink_digest`] folds it into the u64 the
+/// bit-parity tests compare between solo and shared runs.
+pub type JobSink = Arc<Mutex<BTreeMap<(usize, usize), u64>>>;
+
+/// One job submitted to the service: a whole DAG plus its tenant,
+/// priority class (higher runs first, may preempt) and virtual arrival
+/// time.
+pub struct JobSpec {
+    pub name: String,
+    pub tenant: usize,
+    /// Priority class; within the pool the highest backlogged class is
+    /// served first and (when enabled) may preempt lower classes.
+    pub priority: u8,
+    /// Virtual-clock arrival (seconds since service start).
+    pub arrival_secs: f64,
+    pub stages: Vec<Box<dyn DagStage + Send + Sync>>,
+    /// Observable output map, if the job's stages write one (the
+    /// synthetic workload does; real stages may sink elsewhere).
+    pub sink: Option<JobSink>,
+}
+
+// ---------------------------------------------------------------------------
+// Reports.
+// ---------------------------------------------------------------------------
+
+/// Per-job outcome: admission/finish times on the virtual clock plus
+/// the output digest for bit-parity checks.
+#[derive(Debug, Clone)]
+pub struct JobReport {
+    pub name: String,
+    pub tenant: usize,
+    pub priority: u8,
+    pub arrival_secs: f64,
+    pub admit_secs: f64,
+    pub finish_secs: f64,
+    pub rejected: bool,
+    /// Units executed across all stages (0 when rejected).
+    pub units: usize,
+    /// Folded output digest (when the job carried a sink).
+    pub digest: Option<u64>,
+}
+
+impl JobReport {
+    /// Arrival → admission (includes pool startup for early arrivals).
+    pub fn queue_wait_secs(&self) -> f64 {
+        (self.admit_secs - self.arrival_secs).max(0.0)
+    }
+
+    /// End-to-end: arrival → last merge of the job.
+    pub fn latency_secs(&self) -> f64 {
+        (self.finish_secs - self.arrival_secs).max(0.0)
+    }
+}
+
+/// Per-tenant aggregate: quota, job counts, granted units and exact
+/// latency/queue-wait percentiles over the tenant's completed jobs.
+#[derive(Debug, Clone)]
+pub struct TenantReport {
+    pub tenant: usize,
+    pub quota: usize,
+    pub submitted: usize,
+    pub completed: usize,
+    pub rejected: usize,
+    /// Unit attempts the fair-share scheduler granted this tenant.
+    pub granted_units: u64,
+    pub latency_p50: f64,
+    pub latency_p95: f64,
+    pub latency_p99: f64,
+    pub queue_wait_p50: f64,
+    pub queue_wait_p95: f64,
+    pub queue_wait_p99: f64,
+}
+
+/// The service-level report `difet serve` renders.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub sim_seconds: f64,
+    pub wall_seconds: f64,
+    pub nodes: usize,
+    pub slots_per_node: usize,
+    pub startup_secs: f64,
+    pub max_concurrent_jobs: usize,
+    pub queue_depth_bound: usize,
+    /// Peak concurrently running jobs (≤ `max_concurrent_jobs`).
+    pub max_running_jobs: u64,
+    /// Peak admission-queue depth (≤ `queue_depth_bound`).
+    pub max_queue_depth: u64,
+    pub preemptions: u64,
+    /// Fair-share audit: grants to an at-quota tenant while an
+    /// under-quota tenant had backlogged work.  0 = fairness held.
+    pub fairness_violations: u64,
+    pub hb_checks: u64,
+    pub jobs: Vec<JobReport>,
+    pub tenants: Vec<TenantReport>,
+}
+
+impl ServeReport {
+    pub fn completed(&self) -> usize {
+        self.jobs.iter().filter(|j| !j.rejected).count()
+    }
+
+    pub fn rejected(&self) -> usize {
+        self.jobs.iter().filter(|j| j.rejected).count()
+    }
+
+    /// The fair-share property the e2e suite asserts: no tenant was
+    /// served past its quota while another sat under quota with work.
+    pub fn fairness_ok(&self) -> bool {
+        self.fairness_violations == 0
+    }
+
+    pub fn job(&self, name: &str) -> Option<&JobReport> {
+        self.jobs.iter().find(|j| j.name == name)
+    }
+
+    /// Human-readable latency-percentile and fairness report.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "difet serve — {} nodes x {} slots, pool startup {:.1}s paid once\n",
+            self.nodes, self.slots_per_node, self.startup_secs
+        ));
+        out.push_str(&format!(
+            "jobs: {} submitted, {} completed, {} rejected; sim {:.2}s (wall {:.3}s)\n",
+            self.jobs.len(),
+            self.completed(),
+            self.rejected(),
+            self.sim_seconds,
+            self.wall_seconds
+        ));
+        out.push_str(&format!(
+            "admission: peak {} running (bound {}), peak queue {} (bound {})\n",
+            self.max_running_jobs,
+            self.max_concurrent_jobs,
+            self.max_queue_depth,
+            self.queue_depth_bound
+        ));
+        out.push_str(&format!(
+            "scheduling: {} preemptions, fairness {} ({} violations), {} hb checks\n",
+            self.preemptions,
+            if self.fairness_ok() { "OK" } else { "VIOLATED" },
+            self.fairness_violations,
+            self.hb_checks
+        ));
+        out.push_str(
+            "tenant  quota  jobs  done  rej  granted  lat p50      p95      p99   wait p99\n",
+        );
+        for t in &self.tenants {
+            out.push_str(&format!(
+                "{:>6}  {:>5}  {:>4}  {:>4}  {:>3}  {:>7}  {:>7.2}s {:>7.2}s {:>7.2}s  {:>7.2}s\n",
+                t.tenant,
+                t.quota,
+                t.submitted,
+                t.completed,
+                t.rejected,
+                t.granted_units,
+                t.latency_p50,
+                t.latency_p95,
+                t.latency_p99,
+                t.queue_wait_p99
+            ));
+        }
+        out
+    }
+}
+
+/// Exact percentile over an ascending-sorted sample (nearest-rank);
+/// 0.0 for an empty sample.
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 * q).ceil() as usize).clamp(1, sorted.len()) - 1;
+    sorted[idx]
+}
+
+fn secs_to_ns(secs: f64) -> u64 {
+    (secs.max(0.0) * 1e9) as u64
+}
+
+/// splitmix-style mixer: the synthetic stage values and job digests.
+fn mix(a: u64, b: u64) -> u64 {
+    let mut z = a ^ b.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z ^ (z >> 31)
+}
+
+/// Fold a job's sink into one u64 — what the solo-vs-shared bit-parity
+/// property compares.
+pub fn sink_digest(sink: &JobSink) -> u64 {
+    let m = sink.lock().unwrap();
+    let mut d = 0x00D1_FE70_u64;
+    for (&(s, u), &v) in m.iter() {
+        d = mix(d, mix(s as u64, mix(u as u64, v)));
+    }
+    d
+}
+
+// ---------------------------------------------------------------------------
+// Executor internals.
+// ---------------------------------------------------------------------------
+
+/// Scheduler work item: one (job, stage, unit) triple, tagged with the
+/// owning tenant and priority class for the fair-share pick.
+#[derive(Clone)]
+struct ServeTask {
+    job: usize,
+    unit: UnitRef,
+    preferred: Vec<NodeId>,
+    tenant: usize,
+    priority: u8,
+}
+
+impl WorkItem for ServeTask {
+    fn preferred_nodes(&self) -> &[NodeId] {
+        &self.preferred
+    }
+
+    fn tenant(&self) -> usize {
+        self.tenant
+    }
+
+    fn priority(&self) -> u8 {
+        self.priority
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum StageStatus {
+    Blocked,
+    Planning,
+    Running,
+    Finalizing,
+    Done,
+}
+
+struct UnitRun {
+    deps_remaining: usize,
+    dependents: Vec<UnitRef>,
+    preferred: Vec<NodeId>,
+    released: bool,
+    merged: bool,
+    ready_ns: u64,
+    completion_ns: u64,
+}
+
+struct StageRun {
+    status: StageStatus,
+    units: Vec<UnitRun>,
+    outstanding: usize,
+    plan_io_ns: u64,
+    open_ns: u64,
+    close_ns: u64,
+}
+
+impl StageRun {
+    fn new() -> Self {
+        StageRun {
+            status: StageStatus::Blocked,
+            units: Vec::new(),
+            outstanding: 0,
+            plan_io_ns: 0,
+            open_ns: 0,
+            close_ns: 0,
+        }
+    }
+
+    fn planned(&self) -> bool {
+        matches!(
+            self.status,
+            StageStatus::Running | StageStatus::Finalizing | StageStatus::Done
+        )
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum JobStatus {
+    /// Not arrived / not yet processed by the admission pump.
+    Pending,
+    /// Waiting in the bounded admission queue.
+    Queued,
+    Running,
+    Done,
+    Rejected,
+}
+
+struct JobRun {
+    status: JobStatus,
+    stages: Vec<StageRun>,
+    done_stages: usize,
+    units_total: usize,
+    admit_ns: u64,
+    finish_ns: u64,
+}
+
+impl JobRun {
+    fn new(stages: usize) -> Self {
+        JobRun {
+            status: JobStatus::Pending,
+            stages: (0..stages).map(|_| StageRun::new()).collect(),
+            done_stages: 0,
+            units_total: 0,
+            admit_ns: 0,
+            finish_ns: 0,
+        }
+    }
+}
+
+struct ServeState {
+    jobs: Vec<JobRun>,
+    /// Index into `order` of the next unprocessed arrival.
+    next_arrival: usize,
+    running_jobs: usize,
+    /// Done + Rejected.
+    finished_jobs: usize,
+    max_running: u64,
+    max_queue_depth: u64,
+    /// Virtual admission frontier: max(pool startup, processed job
+    /// completions).  Queued jobs admit at `max(arrival, frontier)`.
+    frontier_ns: u64,
+}
+
+enum Act {
+    Plan(usize),
+    Finalize(usize),
+}
+
+struct ServeExec<'a> {
+    jobs: &'a [JobSpec],
+    /// Job indices sorted by (arrival, submission order).
+    order: Vec<usize>,
+    arrival_ns: Vec<u64>,
+    sched: Scheduler<ServeTask>,
+    state: Mutex<ServeState>,
+    /// The admission queue — the seed's backpressure primitive, finally
+    /// load-bearing: `try_push` rejection IS the admission bound.
+    waiting: BoundedQueue<usize>,
+    /// One happens-before checker per job (audit mode): the per-job
+    /// bit-identity invariant checked under co-scheduling.  Lock order
+    /// as in `dag.rs`: checkers never take `state`.
+    hb: Option<Vec<HbChecker>>,
+    startup_ns: u64,
+    overhead_ns: u64,
+    max_slot_ns: AtomicU64,
+    nodes: usize,
+    slots_per_node: usize,
+    max_concurrent: usize,
+}
+
+impl<'a> ServeExec<'a> {
+    // -- admission ----------------------------------------------------------
+
+    /// Process arrivals and queue drains at virtual time `now_ns`.
+    /// Returns the jobs admitted (their DAGs still need an initial
+    /// `job_advance`).  Invariants: the queue drains before new
+    /// arrivals are considered (FIFO admission), and an arrival is
+    /// queued/rejected only once it is *due* (arrival ≤ frontier) with
+    /// the pool full — future arrivals admit directly when a slot is
+    /// free, which is what advances virtual time across idle gaps.
+    fn pump(&self, now_ns: u64) -> Vec<usize> {
+        let mut admitted = Vec::new();
+        let mut st = self.state.lock().unwrap();
+        st.frontier_ns = st.frontier_ns.max(now_ns);
+        loop {
+            if st.running_jobs < self.max_concurrent {
+                if let Some(j) = self.waiting.try_pop() {
+                    let at = st.frontier_ns.max(self.arrival_ns[j]);
+                    self.admit(&mut st, j, at, &mut admitted);
+                    continue;
+                }
+            }
+            let Some(&j) = self.order.get(st.next_arrival) else {
+                break;
+            };
+            let arr = self.arrival_ns[j];
+            if st.running_jobs < self.max_concurrent {
+                st.next_arrival += 1;
+                let at = st.frontier_ns.max(arr);
+                self.admit(&mut st, j, at, &mut admitted);
+            } else if arr <= st.frontier_ns {
+                st.next_arrival += 1;
+                if self.waiting.try_push(j).is_ok() {
+                    st.jobs[j].status = JobStatus::Queued;
+                    st.max_queue_depth = st.max_queue_depth.max(self.waiting.len() as u64);
+                } else {
+                    // Queue at bound: reject outright (backpressure).
+                    let jr = &mut st.jobs[j];
+                    jr.status = JobStatus::Rejected;
+                    jr.admit_ns = arr;
+                    jr.finish_ns = arr;
+                    st.finished_jobs += 1;
+                }
+            } else {
+                break;
+            }
+        }
+        admitted
+    }
+
+    fn admit(&self, st: &mut ServeState, j: usize, at_ns: u64, admitted: &mut Vec<usize>) {
+        let jr = &mut st.jobs[j];
+        jr.admit_ns = at_ns;
+        if self.jobs[j].stages.is_empty() {
+            // Degenerate zero-stage job: done the instant it is admitted.
+            jr.status = JobStatus::Done;
+            jr.finish_ns = at_ns;
+            st.finished_jobs += 1;
+            return;
+        }
+        jr.status = JobStatus::Running;
+        st.running_jobs += 1;
+        st.max_running = st.max_running.max(st.running_jobs as u64);
+        admitted.push(j);
+    }
+
+    /// Post-event driver: pump admissions for a completed job's virtual
+    /// finish time, run every newly admitted job's state machine (which
+    /// may itself finish zero-unit jobs and admit more), then close the
+    /// pool once every job is accounted for.
+    fn after_job_event(&self, fin: Option<u64>) -> Result<()> {
+        let mut pending = match fin {
+            Some(f) => self.pump(f),
+            None => Vec::new(),
+        };
+        let mut i = 0;
+        while i < pending.len() {
+            let j = pending[i];
+            i += 1;
+            if let Some(f2) = self.job_advance(j)? {
+                let more = self.pump(f2);
+                pending.extend(more);
+            }
+        }
+        self.maybe_close();
+        Ok(())
+    }
+
+    fn maybe_close(&self) {
+        let done = {
+            let st = self.state.lock().unwrap();
+            st.finished_jobs == self.jobs.len()
+        };
+        if done {
+            self.sched.close();
+        }
+    }
+
+    // -- per-job DAG state machine (dag.rs, scoped to one job) --------------
+
+    fn gates_met(&self, jr: &JobRun, gates: &[Gate]) -> bool {
+        gates.iter().all(|g| match *g {
+            Gate::Planned(p) => p < jr.stages.len() && jr.stages[p].planned(),
+            Gate::Completed(p) => p < jr.stages.len() && jr.stages[p].status == StageStatus::Done,
+        })
+    }
+
+    fn next_act(&self, job: usize, jr: &mut JobRun) -> Option<Act> {
+        if let Some(i) = jr
+            .stages
+            .iter()
+            .position(|s| s.status == StageStatus::Running && s.outstanding == 0)
+        {
+            jr.stages[i].status = StageStatus::Finalizing;
+            return Some(Act::Finalize(i));
+        }
+        let blocked: Vec<usize> = jr
+            .stages
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.status == StageStatus::Blocked)
+            .map(|(i, _)| i)
+            .collect();
+        for i in blocked {
+            if self.gates_met(jr, &self.jobs[job].stages[i].gates()) {
+                jr.stages[i].status = StageStatus::Planning;
+                return Some(Act::Plan(i));
+            }
+        }
+        None
+    }
+
+    /// Drive one job's planning/finalization; `Some(finish_ns)` when
+    /// this call completed the job.  User code (plan/finalize) runs
+    /// outside the state lock, as in `dag.rs`.
+    fn job_advance(&self, job: usize) -> Result<Option<u64>> {
+        let mut finished = None;
+        loop {
+            let act = {
+                let mut st = self.state.lock().unwrap();
+                if st.jobs[job].status != JobStatus::Running {
+                    return Ok(finished);
+                }
+                let jr = &mut st.jobs[job];
+                // Split the borrow: next_act needs &self for specs.
+                match self.next_act(job, jr) {
+                    Some(act) => act,
+                    None => {
+                        let jr = &st.jobs[job];
+                        let idle = jr
+                            .stages
+                            .iter()
+                            .all(|s| matches!(s.status, StageStatus::Blocked | StageStatus::Done));
+                        if idle && jr.done_stages < jr.stages.len() {
+                            return Err(DifetError::Job(format!(
+                                "job '{}' stalled: stage gates never satisfiable",
+                                self.jobs[job].name
+                            )));
+                        }
+                        return Ok(finished);
+                    }
+                }
+            };
+            match act {
+                Act::Plan(i) => {
+                    let plan = self.jobs[job].stages[i].plan()?;
+                    let mut st = self.state.lock().unwrap();
+                    self.install_plan(&mut st, job, i, plan)?;
+                }
+                Act::Finalize(i) => {
+                    self.jobs[job].stages[i].finalize()?;
+                    let mut st = self.state.lock().unwrap();
+                    let jr = &mut st.jobs[job];
+                    jr.stages[i].status = StageStatus::Done;
+                    jr.done_stages += 1;
+                    if jr.done_stages == jr.stages.len() {
+                        let fin = jr
+                            .stages
+                            .iter()
+                            .map(|s| s.close_ns)
+                            .max()
+                            .unwrap_or(jr.admit_ns)
+                            .max(jr.admit_ns);
+                        jr.status = JobStatus::Done;
+                        jr.finish_ns = fin;
+                        st.running_jobs -= 1;
+                        st.finished_jobs += 1;
+                        finished = Some(fin);
+                    }
+                }
+            }
+        }
+    }
+
+    fn install_plan(
+        &self,
+        st: &mut ServeState,
+        job: usize,
+        stage: usize,
+        plan: StagePlan,
+    ) -> Result<()> {
+        let spec_stage = &self.jobs[job].stages[stage];
+        // Layer-2 audit, per job: same plan validator the DAG runtime
+        // uses, so a malformed plan is rejected before any unit state.
+        let unit_defs: Vec<dag_check::UnitDef> = plan
+            .units
+            .iter()
+            .map(|spec| dag_check::UnitDef {
+                deps: spec.deps.iter().map(|d| (d.stage, d.unit)).collect(),
+                preferred: spec.preferred_nodes.iter().map(|n| n.0).collect(),
+            })
+            .collect();
+        let planned_units: Vec<Option<usize>> = st.jobs[job]
+            .stages
+            .iter()
+            .enumerate()
+            .map(|(s, up)| (s != stage && up.planned()).then(|| up.units.len()))
+            .collect();
+        let issues = dag_check::validate_plan(
+            spec_stage.name(),
+            stage,
+            &unit_defs,
+            &planned_units,
+            self.nodes,
+        );
+        if !issues.is_empty() {
+            return Err(DifetError::Job(format!(
+                "job '{}': {}",
+                self.jobs[job].name,
+                issues.join("; ")
+            )));
+        }
+        if let Some(hbs) = &self.hb {
+            for (u, spec) in plan.units.iter().enumerate() {
+                let deps: Vec<(usize, usize)> =
+                    spec.deps.iter().map(|d| (d.stage, d.unit)).collect();
+                hbs[job].register_unit((stage, u), &deps);
+            }
+        }
+        // Resolve deps — immutable reads over this job's earlier stages;
+        // intra-stage deps (tree merges) count but never mark merged.
+        let jr = &mut st.jobs[job];
+        let mut units = Vec::with_capacity(plan.units.len());
+        for spec in &plan.units {
+            let mut deps_remaining = 0usize;
+            let mut ready_ns = 0u64;
+            for d in &spec.deps {
+                if d.stage == stage {
+                    deps_remaining += 1;
+                    continue;
+                }
+                let dep_unit = &jr.stages[d.stage].units[d.unit];
+                if dep_unit.merged {
+                    ready_ns = ready_ns.max(dep_unit.completion_ns);
+                } else {
+                    deps_remaining += 1;
+                }
+            }
+            units.push(UnitRun {
+                deps_remaining,
+                dependents: Vec::new(),
+                preferred: spec.preferred_nodes.clone(),
+                released: false,
+                merged: false,
+                ready_ns,
+                completion_ns: 0,
+            });
+        }
+        for (u, spec) in plan.units.iter().enumerate() {
+            for d in &spec.deps {
+                if d.stage == stage {
+                    units[d.unit].dependents.push(UnitRef { stage, unit: u });
+                } else if !jr.stages[d.stage].units[d.unit].merged {
+                    jr.stages[d.stage].units[d.unit]
+                        .dependents
+                        .push(UnitRef { stage, unit: u });
+                }
+            }
+        }
+        // Stage opens at the latest of admission and its gate times —
+        // NO per-job startup here: the pool paid it once at boot.
+        let mut base = jr.admit_ns;
+        for g in spec_stage.gates() {
+            base = base.max(match g {
+                Gate::Planned(p) => jr.stages[p].open_ns,
+                Gate::Completed(p) => jr.stages[p].close_ns,
+            });
+        }
+        let plan_io_ns = secs_to_ns(plan.plan_io_secs);
+        let open = base + plan_io_ns;
+        jr.units_total += units.len();
+        {
+            let s = &mut jr.stages[stage];
+            s.plan_io_ns = plan_io_ns;
+            s.outstanding = units.len();
+            s.units = units;
+            s.status = StageStatus::Running;
+            s.open_ns = open;
+            s.close_ns = open;
+        }
+        let ready: Vec<usize> = jr.stages[stage]
+            .units
+            .iter()
+            .enumerate()
+            .filter(|(_, u)| u.deps_remaining == 0)
+            .map(|(u, _)| u)
+            .collect();
+        for unit in ready {
+            self.release_unit(st, job, UnitRef { stage, unit });
+        }
+        Ok(())
+    }
+
+    fn release_unit(&self, st: &mut ServeState, job: usize, r: UnitRef) {
+        let preferred = {
+            let s = &mut st.jobs[job].stages[r.stage];
+            let u = &mut s.units[r.unit];
+            debug_assert!(!u.released && u.deps_remaining == 0);
+            u.released = true;
+            u.ready_ns = u.ready_ns.max(s.open_ns);
+            u.preferred.clone()
+        };
+        // Release recorded before the scheduler can hand the unit out.
+        if let Some(hbs) = &self.hb {
+            hbs[job].on_release((r.stage, r.unit));
+        }
+        self.sched.push(ServeTask {
+            job,
+            unit: r,
+            preferred,
+            tenant: self.jobs[job].tenant,
+            priority: self.jobs[job].priority,
+        });
+    }
+
+    fn complete_unit(&self, job: usize, r: UnitRef, completion_ns: u64) {
+        let mut st = self.state.lock().unwrap();
+        let dependents = {
+            let s = &mut st.jobs[job].stages[r.stage];
+            let u = &mut s.units[r.unit];
+            debug_assert!(!u.merged);
+            u.merged = true;
+            u.completion_ns = completion_ns;
+            let deps = std::mem::take(&mut u.dependents);
+            s.outstanding -= 1;
+            s.close_ns = s.close_ns.max(completion_ns);
+            deps
+        };
+        for d in dependents {
+            let release = {
+                let du = &mut st.jobs[job].stages[d.stage].units[d.unit];
+                du.ready_ns = du.ready_ns.max(completion_ns);
+                du.deps_remaining -= 1;
+                du.deps_remaining == 0
+            };
+            if release {
+                self.release_unit(&mut st, job, d);
+            }
+        }
+    }
+
+    // -- the shared worker slot --------------------------------------------
+
+    /// Worker-slot body over the WHOLE service: the slot's virtual clock
+    /// starts at pool startup (paid once) and then serves units of any
+    /// admitted job the fair-share scheduler grants it.
+    fn slot_loop(&self, node: NodeId) {
+        let mut clock_ns = self.startup_ns;
+        loop {
+            let (task, handle) = match self.sched.next_assignment(node) {
+                Assignment::Done => break,
+                Assignment::Run(task, handle) => (task, handle),
+            };
+            let UnitRef { stage, unit } = task.unit;
+            if let Some(hbs) = &self.hb {
+                hbs[task.job].on_attempt_start((stage, unit), handle.launch_seq, handle.speculative);
+            }
+            let ready_ns = {
+                let st = self.state.lock().unwrap();
+                st.jobs[task.job].stages[stage].units[unit].ready_ns
+            };
+            let unit_result = self.jobs[task.job].stages[stage].run_unit(unit, &handle, node);
+            match unit_result {
+                Ok(Some(out)) => {
+                    let io_ns = secs_to_ns(out.io_secs);
+                    let virtual_ns = self.overhead_ns + io_ns + out.compute_ns;
+                    let begin = clock_ns.max(ready_ns);
+                    let completion = begin + virtual_ns;
+                    clock_ns = completion;
+                    let won = self.sched.report_success(&handle);
+                    if won {
+                        match self.jobs[task.job].stages[stage].merge(unit, out.payload) {
+                            Ok(()) => {
+                                if let Some(hbs) = &self.hb {
+                                    hbs[task.job].on_merge((stage, unit));
+                                }
+                                self.complete_unit(task.job, task.unit, completion);
+                                let res = self
+                                    .job_advance(task.job)
+                                    .and_then(|fin| self.after_job_event(fin));
+                                if let Err(e) = res {
+                                    self.sched.abort(e.to_string());
+                                }
+                            }
+                            Err(e) => self.sched.abort(e.to_string()),
+                        }
+                    }
+                }
+                // Cooperative kill (speculative loser or preemption
+                // victim): no virtual time, the scheduler decides
+                // whether to requeue (preempted) or drop (lost twin).
+                Ok(None) => self.sched.report_cancelled(&handle),
+                Err(e) => {
+                    self.sched.report_failure(&handle, &e.to_string());
+                }
+            }
+        }
+        self.max_slot_ns.fetch_max(clock_ns, Ordering::Relaxed);
+    }
+
+    // -- reporting ----------------------------------------------------------
+
+    fn report(
+        &self,
+        wall_seconds: f64,
+        quotas: &[usize],
+        hb_checks: u64,
+        registry: &Registry,
+    ) -> Result<ServeReport> {
+        let st = self.state.lock().unwrap();
+        let mut sim_ns = self.max_slot_ns.load(Ordering::Relaxed).max(st.frontier_ns);
+        let mut jobs = Vec::with_capacity(self.jobs.len());
+        for (j, spec) in self.jobs.iter().enumerate() {
+            let jr = &st.jobs[j];
+            if jr.status != JobStatus::Done && jr.status != JobStatus::Rejected {
+                return Err(DifetError::Job(format!(
+                    "job '{}' ended in non-terminal state {:?}",
+                    spec.name, jr.status
+                )));
+            }
+            if jr.status == JobStatus::Done {
+                sim_ns = sim_ns.max(jr.finish_ns);
+            }
+            jobs.push(JobReport {
+                name: spec.name.clone(),
+                tenant: spec.tenant,
+                priority: spec.priority,
+                arrival_secs: self.arrival_ns[j] as f64 * 1e-9,
+                admit_secs: jr.admit_ns as f64 * 1e-9,
+                finish_secs: jr.finish_ns as f64 * 1e-9,
+                rejected: jr.status == JobStatus::Rejected,
+                units: jr.units_total,
+                digest: spec.sink.as_ref().map(sink_digest),
+            });
+        }
+        let max_running_jobs = st.max_running;
+        let max_queue_depth = st.max_queue_depth;
+        drop(st);
+
+        let granted = self.sched.tenant_granted();
+        let mut tenants = Vec::with_capacity(quotas.len());
+        for (t, &quota) in quotas.iter().enumerate() {
+            let mine: Vec<&JobReport> = jobs.iter().filter(|r| r.tenant == t).collect();
+            let done: Vec<&&JobReport> = mine.iter().filter(|r| !r.rejected).collect();
+            let mut lat: Vec<f64> = done.iter().map(|r| r.latency_secs()).collect();
+            let mut wait: Vec<f64> = done.iter().map(|r| r.queue_wait_secs()).collect();
+            let lat_h = registry.histogram(&format!("tenant_job_latency_seconds_{t}"));
+            let wait_h = registry.histogram(&format!("tenant_queue_wait_seconds_{t}"));
+            for &v in &lat {
+                lat_h.observe(v);
+            }
+            for &v in &wait {
+                wait_h.observe(v);
+            }
+            registry
+                .counter(&format!("tenant_jobs_submitted_{t}"))
+                .add(mine.len() as u64);
+            registry
+                .counter(&format!("tenant_jobs_completed_{t}"))
+                .add(done.len() as u64);
+            registry
+                .counter(&format!("tenant_jobs_rejected_{t}"))
+                .add((mine.len() - done.len()) as u64);
+            lat.sort_by(f64::total_cmp);
+            wait.sort_by(f64::total_cmp);
+            tenants.push(TenantReport {
+                tenant: t,
+                quota,
+                submitted: mine.len(),
+                completed: done.len(),
+                rejected: mine.len() - done.len(),
+                granted_units: granted.get(t).copied().unwrap_or(0),
+                latency_p50: percentile(&lat, 0.50),
+                latency_p95: percentile(&lat, 0.95),
+                latency_p99: percentile(&lat, 0.99),
+                queue_wait_p50: percentile(&wait, 0.50),
+                queue_wait_p95: percentile(&wait, 0.95),
+                queue_wait_p99: percentile(&wait, 0.99),
+            });
+        }
+
+        let preemptions = self.sched.preemptions.load(Ordering::Relaxed);
+        let fairness_violations = self.sched.fairness_violations.load(Ordering::Relaxed);
+        registry.counter("serve_preemptions").add(preemptions);
+        registry
+            .counter("serve_fairness_violations")
+            .add(fairness_violations);
+        registry
+            .gauge("serve_running_jobs_max")
+            .set(max_running_jobs as f64);
+        registry
+            .gauge("serve_queue_depth_max")
+            .set(max_queue_depth as f64);
+
+        Ok(ServeReport {
+            sim_seconds: sim_ns as f64 * 1e-9,
+            wall_seconds,
+            nodes: self.nodes,
+            slots_per_node: self.slots_per_node,
+            startup_secs: self.startup_ns as f64 * 1e-9,
+            max_concurrent_jobs: self.max_concurrent,
+            queue_depth_bound: self.waiting.capacity(),
+            max_running_jobs,
+            max_queue_depth,
+            preemptions,
+            fairness_violations,
+            hb_checks,
+            jobs,
+            tenants,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The service.
+// ---------------------------------------------------------------------------
+
+/// The persistent multi-tenant coordinator: submit jobs, then `run`
+/// drains them all through one shared fair-share slot pool.
+pub struct JobService {
+    cfg: Config,
+    jobs: Vec<JobSpec>,
+}
+
+impl JobService {
+    pub fn new(cfg: &Config) -> Self {
+        JobService {
+            cfg: cfg.clone(),
+            jobs: Vec::new(),
+        }
+    }
+
+    /// Register a job with the service; returns its job id (submission
+    /// order).  Admission control happens during [`JobService::run`]:
+    /// the job is admitted when a concurrency slot is free at its
+    /// virtual arrival time, queued while the pool is full, and
+    /// rejected if the admission queue is at its bound.
+    ///
+    /// ```
+    /// use difet::config::Config;
+    /// use difet::coordinator::serve::{synthetic_jobs, JobService};
+    /// use difet::metrics::Registry;
+    ///
+    /// let mut cfg = Config::new();
+    /// cfg.serve.jobs = 2;
+    /// let mut svc = JobService::new(&cfg);
+    /// let mut ids = Vec::new();
+    /// for job in synthetic_jobs(&cfg) {
+    ///     ids.push(svc.submit(job));
+    /// }
+    /// assert_eq!(ids, vec![0, 1]);
+    /// let report = svc.run(&Registry::new()).unwrap();
+    /// assert_eq!(report.jobs.len(), 2);
+    /// ```
+    pub fn submit(&mut self, job: JobSpec) -> usize {
+        self.jobs.push(job);
+        self.jobs.len() - 1
+    }
+
+    pub fn submitted(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Drain every submitted job through the shared pool and report.
+    pub fn run(&self, registry: &Registry) -> Result<ServeReport> {
+        let wall = Stopwatch::start();
+        let cfg = &self.cfg;
+        let nodes = cfg.cluster.nodes;
+        let slots = cfg.cluster.slots_per_node;
+        let cost = CostModel::new(&cfg.cluster);
+
+        // Layer-2 pre-flight, per job: reject unsatisfiable gate graphs
+        // before a single worker slot spawns.
+        for job in &self.jobs {
+            let names: Vec<&str> = job.stages.iter().map(|s| s.name()).collect();
+            let gate_defs: Vec<Vec<dag_check::GateDef>> = job
+                .stages
+                .iter()
+                .map(|s| {
+                    s.gates()
+                        .iter()
+                        .map(|g| dag_check::GateDef {
+                            kind: match g {
+                                Gate::Planned(_) => dag_check::GateKind::Planned,
+                                Gate::Completed(_) => dag_check::GateKind::Completed,
+                            },
+                            target: match *g {
+                                Gate::Planned(t) | Gate::Completed(t) => t,
+                            },
+                        })
+                        .collect()
+                })
+                .collect();
+            let issues = dag_check::validate_gates(&names, &gate_defs);
+            if !issues.is_empty() {
+                return Err(DifetError::Job(format!(
+                    "job '{}': {}",
+                    job.name,
+                    issues.join("; ")
+                )));
+            }
+        }
+
+        // Tenant quotas: configured, or an even split of the pool.
+        let n_tenants = self
+            .jobs
+            .iter()
+            .map(|j| j.tenant + 1)
+            .max()
+            .unwrap_or(1)
+            .max(cfg.serve.tenants)
+            .max(1);
+        let total_slots = (nodes * slots).max(1);
+        let default_quota = (total_slots / n_tenants).max(1);
+        let mut quotas = if cfg.serve.quotas.is_empty() {
+            vec![default_quota; n_tenants]
+        } else {
+            cfg.serve.quotas.clone()
+        };
+        while quotas.len() < n_tenants {
+            quotas.push(default_quota);
+        }
+
+        let arrival_ns: Vec<u64> = self.jobs.iter().map(|j| secs_to_ns(j.arrival_secs)).collect();
+        let mut order: Vec<usize> = (0..self.jobs.len()).collect();
+        order.sort_by_key(|&j| (arrival_ns[j], j));
+
+        let exec = ServeExec {
+            jobs: &self.jobs,
+            order,
+            arrival_ns,
+            sched: Scheduler::new_fair(
+                &cfg.scheduler,
+                monotonic_clock(),
+                &quotas,
+                cfg.serve.preemption,
+            ),
+            state: Mutex::new(ServeState {
+                jobs: self.jobs.iter().map(|j| JobRun::new(j.stages.len())).collect(),
+                next_arrival: 0,
+                running_jobs: 0,
+                finished_jobs: 0,
+                max_running: 0,
+                max_queue_depth: 0,
+                frontier_ns: 0,
+            }),
+            waiting: BoundedQueue::new(cfg.serve.queue_depth.max(1)),
+            hb: cfg
+                .scheduler
+                .audit
+                .then(|| self.jobs.iter().map(|_| HbChecker::new()).collect()),
+            startup_ns: secs_to_ns(cost.job_startup()),
+            overhead_ns: secs_to_ns(cost.task_overhead()),
+            max_slot_ns: AtomicU64::new(0),
+            nodes,
+            slots_per_node: slots,
+            max_concurrent: cfg.serve.max_concurrent_jobs.max(1),
+        };
+
+        // Admission bootstrap at the pool-startup frontier: startup is
+        // paid ONCE here — every slot clock starts at `startup_ns` and
+        // no per-job startup is ever charged again.
+        exec.after_job_event(Some(exec.startup_ns))?;
+        std::thread::scope(|scope| {
+            for node in 0..nodes {
+                for _slot in 0..slots {
+                    let exec = &exec;
+                    scope.spawn(move || exec.slot_loop(NodeId(node)));
+                }
+            }
+        });
+        if let Some(reason) = exec.sched.abort_reason() {
+            return Err(DifetError::Job(reason));
+        }
+        // Layer-3 verdict, per job: each admitted job's sampled history
+        // must be race-free even though the pool was shared.
+        let mut hb_checks = 0u64;
+        if let Some(hbs) = &exec.hb {
+            for (j, hb) in hbs.iter().enumerate() {
+                match hb.finish() {
+                    Ok(c) => hb_checks += c,
+                    Err(violations) => {
+                        return Err(DifetError::Job(format!(
+                            "job '{}' happens-before audit failed ({} violation(s)): {}",
+                            self.jobs[j].name,
+                            violations.len(),
+                            violations.join("; ")
+                        )))
+                    }
+                }
+            }
+            registry.counter("audit_hb_checks").add(hb_checks);
+        }
+        exec.report(wall.elapsed_secs(), &quotas, hb_checks, registry)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Synthetic workload (the `difet serve` simulation).
+// ---------------------------------------------------------------------------
+
+/// A synthetic DAG stage: unit `u` mixes its identity with its deps'
+/// merged values into the job's sink — cheap wall-clock, meaningful
+/// virtual cost, and a bit-exact output to compare solo vs shared.
+struct SynthStage {
+    name: &'static str,
+    index: usize,
+    gates: Vec<Gate>,
+    unit_deps: Vec<Vec<UnitRef>>,
+    preferred: Vec<Vec<NodeId>>,
+    compute_ns: Vec<u64>,
+    io_secs: Vec<f64>,
+    salt: u64,
+    fail_first: bool,
+    sink: JobSink,
+}
+
+impl DagStage for SynthStage {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn gates(&self) -> Vec<Gate> {
+        self.gates.clone()
+    }
+
+    fn plan(&self) -> Result<StagePlan> {
+        Ok(StagePlan {
+            units: self
+                .unit_deps
+                .iter()
+                .zip(&self.preferred)
+                .map(|(deps, pref)| UnitSpec {
+                    deps: deps.clone(),
+                    preferred_nodes: pref.clone(),
+                })
+                .collect(),
+            plan_io_secs: 0.001,
+        })
+    }
+
+    fn run_unit(
+        &self,
+        unit: usize,
+        handle: &TaskHandle,
+        _node: NodeId,
+    ) -> Result<Option<UnitOutput>> {
+        if handle.cancelled() {
+            return Ok(None);
+        }
+        if self.fail_first && handle.attempt == 0 {
+            return Err(DifetError::Job(format!(
+                "{} unit {unit}: injected first-attempt fault",
+                self.name
+            )));
+        }
+        let mut v = mix(self.salt, mix(self.index as u64, unit as u64));
+        {
+            let merged = self.sink.lock().unwrap();
+            for d in &self.unit_deps[unit] {
+                let dep = merged.get(&(d.stage, d.unit)).copied().ok_or_else(|| {
+                    DifetError::Job(format!(
+                        "{} unit {unit}: dep ({},{}) observed before merge",
+                        self.name, d.stage, d.unit
+                    ))
+                })?;
+                v = mix(v, dep);
+            }
+        }
+        Ok(Some(UnitOutput {
+            payload: Box::new(v),
+            compute_ns: self.compute_ns[unit],
+            io_secs: self.io_secs[unit],
+        }))
+    }
+
+    fn merge(&self, unit: usize, payload: Box<dyn Any + Send>) -> Result<()> {
+        let v = *payload
+            .downcast::<u64>()
+            .map_err(|_| DifetError::Job("synthetic payload type mismatch".into()))?;
+        self.sink.lock().unwrap().insert((self.index, unit), v);
+        Ok(())
+    }
+}
+
+/// Per-unit locality hints and virtual costs for one stage.
+fn draw_units(rng: &mut Pcg32, nodes: usize, n: usize) -> (Vec<Vec<NodeId>>, Vec<u64>, Vec<f64>) {
+    let mut pref = Vec::with_capacity(n);
+    let mut comp = Vec::with_capacity(n);
+    let mut io = Vec::with_capacity(n);
+    for _ in 0..n {
+        pref.push(vec![NodeId(rng.next_bounded(nodes.max(1) as u32) as usize)]);
+        comp.push(secs_to_ns(0.05 + 0.35 * rng.next_f64()));
+        io.push(0.02 * rng.next_f64());
+    }
+    (pref, comp, io)
+}
+
+fn synth_stage(
+    name: &'static str,
+    index: usize,
+    gates: Vec<Gate>,
+    unit_deps: Vec<Vec<UnitRef>>,
+    rng: &mut Pcg32,
+    nodes: usize,
+    salt: u64,
+    fail_first: bool,
+    sink: &JobSink,
+) -> Box<dyn DagStage + Send + Sync> {
+    let (preferred, compute_ns, io_secs) = draw_units(rng, nodes, unit_deps.len());
+    Box::new(SynthStage {
+        name,
+        index,
+        gates,
+        unit_deps,
+        preferred,
+        compute_ns,
+        io_secs,
+        salt,
+        fail_first,
+        sink: sink.clone(),
+    })
+}
+
+type Shape = Vec<Box<dyn DagStage + Send + Sync>>;
+
+/// extract: ingest fan-out → per-tile extraction (map-shaped).
+fn extract_shape(rng: &mut Pcg32, nodes: usize, salt: u64, ff: bool, sink: &JobSink) -> Shape {
+    let k = 2 + rng.next_bounded(3) as usize;
+    let m = 2 + rng.next_bounded(4) as usize;
+    let ingest: Vec<Vec<UnitRef>> = (0..k).map(|_| Vec::new()).collect();
+    let tiles: Vec<Vec<UnitRef>> = (0..m)
+        .map(|_| {
+            vec![UnitRef {
+                stage: 0,
+                unit: rng.next_bounded(k as u32) as usize,
+            }]
+        })
+        .collect();
+    vec![
+        synth_stage("ingest", 0, vec![], ingest, rng, nodes, salt, ff, sink),
+        synth_stage("tiles", 1, vec![Gate::Planned(0)], tiles, rng, nodes, salt, ff, sink),
+    ]
+}
+
+/// register: per-scene features → adjacent-pair matching (reduce-shaped).
+fn register_shape(rng: &mut Pcg32, nodes: usize, salt: u64, ff: bool, sink: &JobSink) -> Shape {
+    let k = 3 + rng.next_bounded(3) as usize;
+    let features: Vec<Vec<UnitRef>> = (0..k).map(|_| Vec::new()).collect();
+    let pairs: Vec<Vec<UnitRef>> = (0..k - 1)
+        .map(|i| {
+            vec![
+                UnitRef { stage: 0, unit: i },
+                UnitRef { stage: 0, unit: i + 1 },
+            ]
+        })
+        .collect();
+    vec![
+        synth_stage("features", 0, vec![], features, rng, nodes, salt, ff, sink),
+        synth_stage("pairs", 1, vec![Gate::Planned(0)], pairs, rng, nodes, salt, ff, sink),
+    ]
+}
+
+/// stitch: tiles → canvas composition → intra-stage tree merge.
+fn stitch_shape(rng: &mut Pcg32, nodes: usize, salt: u64, ff: bool, sink: &JobSink) -> Shape {
+    let k = 4usize;
+    let m = 2 + rng.next_bounded(3) as usize;
+    let tiles: Vec<Vec<UnitRef>> = (0..k).map(|_| Vec::new()).collect();
+    let canvas: Vec<Vec<UnitRef>> = (0..m)
+        .map(|_| {
+            let a = rng.next_bounded(k as u32) as usize;
+            let b = (a + 1 + rng.next_bounded(k as u32 - 1) as usize) % k;
+            vec![
+                UnitRef { stage: 0, unit: a },
+                UnitRef { stage: 0, unit: b },
+            ]
+        })
+        .collect();
+    // Tree merge over the canvas units: m cross-stage leaves, then
+    // intra-stage parents pair up each level until one root remains.
+    let mut tree: Vec<Vec<UnitRef>> = (0..m)
+        .map(|i| vec![UnitRef { stage: 1, unit: i }])
+        .collect();
+    let mut level: Vec<usize> = (0..m).collect();
+    while level.len() > 1 {
+        let mut next = Vec::new();
+        for pair in level.chunks(2) {
+            if pair.len() == 1 {
+                next.push(pair[0]);
+                continue;
+            }
+            let parent = tree.len();
+            tree.push(
+                pair.iter()
+                    .map(|&c| UnitRef { stage: 2, unit: c })
+                    .collect(),
+            );
+            next.push(parent);
+        }
+        level = next;
+    }
+    vec![
+        synth_stage("tiles", 0, vec![], tiles, rng, nodes, salt, ff, sink),
+        synth_stage("canvas", 1, vec![Gate::Planned(0)], canvas, rng, nodes, salt, ff, sink),
+        synth_stage("mergetree", 2, vec![Gate::Planned(1)], tree, rng, nodes, salt, ff, sink),
+    ]
+}
+
+/// vectorize: label tiles → one global join, gated on stage COMPLETION
+/// (plan-time consumes the whole upstream reduction).
+fn vectorize_shape(rng: &mut Pcg32, nodes: usize, salt: u64, ff: bool, sink: &JobSink) -> Shape {
+    let k = 3 + rng.next_bounded(4) as usize;
+    let labels: Vec<Vec<UnitRef>> = (0..k).map(|_| Vec::new()).collect();
+    let join: Vec<Vec<UnitRef>> = vec![(0..k).map(|i| UnitRef { stage: 0, unit: i }).collect()];
+    vec![
+        synth_stage("labels", 0, vec![], labels, rng, nodes, salt, ff, sink),
+        synth_stage("vecjoin", 1, vec![Gate::Completed(0)], join, rng, nodes, salt, ff, sink),
+    ]
+}
+
+/// The seeded synthetic workload `difet serve` drives: `serve.jobs`
+/// jobs with Poisson-ish arrivals (exponential inter-arrival gaps of
+/// mean `serve.mean_interarrival` on the virtual clock), tenants and
+/// priorities drawn per job, and one of four DAG shapes each.
+pub fn synthetic_jobs(cfg: &Config) -> Vec<JobSpec> {
+    synthetic_jobs_with_faults(cfg, false)
+}
+
+/// Same workload with a first-attempt fault injected into EVERY unit —
+/// the retry/preemption bit-parity property runs on this variant.
+/// Outputs are identical to the fault-free workload (retries must not
+/// change bits).
+pub fn synthetic_jobs_with_faults(cfg: &Config, fail_first: bool) -> Vec<JobSpec> {
+    let sc = &cfg.serve;
+    let nodes = cfg.cluster.nodes.max(1);
+    let tenants = sc.tenants.max(1) as u32;
+    let mut rng = Pcg32::new(sc.seed, 7);
+    let mut arrival = 0.0f64;
+    let mut jobs = Vec::with_capacity(sc.jobs);
+    for j in 0..sc.jobs {
+        let u = rng.next_f64().clamp(1e-12, 1.0 - 1e-12);
+        arrival += -sc.mean_interarrival * (1.0 - u).ln();
+        let tenant = rng.next_bounded(tenants) as usize;
+        let priority = 1 + rng.next_bounded(3) as u8;
+        let salt = mix(sc.seed, j as u64);
+        let sink: JobSink = Arc::new(Mutex::new(BTreeMap::new()));
+        let (shape_name, stages) = match rng.next_bounded(4) {
+            0 => ("extract", extract_shape(&mut rng, nodes, salt, fail_first, &sink)),
+            1 => ("register", register_shape(&mut rng, nodes, salt, fail_first, &sink)),
+            2 => ("stitch", stitch_shape(&mut rng, nodes, salt, fail_first, &sink)),
+            _ => ("vectorize", vectorize_shape(&mut rng, nodes, salt, fail_first, &sink)),
+        };
+        jobs.push(JobSpec {
+            name: format!("job{j:03}-{shape_name}"),
+            tenant,
+            priority,
+            arrival_secs: arrival,
+            stages,
+            sink: Some(sink),
+        });
+    }
+    jobs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_cfg() -> Config {
+        let mut cfg = Config::new();
+        cfg.cluster.nodes = 1;
+        cfg.cluster.slots_per_node = 1;
+        cfg.serve.jobs = 4;
+        cfg.serve.mean_interarrival = 0.5;
+        cfg
+    }
+
+    /// One single-unit stage whose value is its job salt.
+    fn one_unit_job(name: &str, tenant: usize, arrival_secs: f64, compute_secs: f64) -> JobSpec {
+        let sink: JobSink = Arc::new(Mutex::new(BTreeMap::new()));
+        let stage = Box::new(SynthStage {
+            name: "solo",
+            index: 0,
+            gates: vec![],
+            unit_deps: vec![vec![]],
+            preferred: vec![vec![NodeId(0)]],
+            compute_ns: vec![secs_to_ns(compute_secs)],
+            io_secs: vec![0.0],
+            salt: 11,
+            fail_first: false,
+            sink: sink.clone(),
+        });
+        JobSpec {
+            name: name.to_string(),
+            tenant,
+            priority: 1,
+            arrival_secs,
+            stages: vec![stage],
+            sink: Some(sink),
+        }
+    }
+
+    #[test]
+    fn pool_startup_is_paid_once_not_per_job() {
+        let mut cfg = test_cfg();
+        cfg.cluster.job_startup = 10.0;
+        cfg.cluster.task_overhead = 0.0;
+        let mut svc = JobService::new(&cfg);
+        for i in 0..3 {
+            svc.submit(one_unit_job(&format!("j{i}"), 0, 0.0, 1.0));
+        }
+        let report = svc.run(&Registry::new()).unwrap();
+        assert_eq!(report.completed(), 3);
+        // One 10s startup + 3×1s compute (+3ms plan io) on one slot; a
+        // per-job startup would put the makespan past 30s.
+        assert!(
+            report.sim_seconds > 12.9 && report.sim_seconds < 14.0,
+            "sim {} should reflect exactly one startup",
+            report.sim_seconds
+        );
+        for job in &report.jobs {
+            assert!(job.admit_secs >= 10.0, "admission waits for pool startup");
+        }
+    }
+
+    #[test]
+    fn admission_queue_rejects_past_bound() {
+        let mut cfg = test_cfg();
+        cfg.serve.max_concurrent_jobs = 1;
+        cfg.serve.queue_depth = 1;
+        let mut svc = JobService::new(&cfg);
+        for i in 0..3 {
+            svc.submit(one_unit_job(&format!("j{i}"), 0, 0.0, 0.5));
+        }
+        let report = svc.run(&Registry::new()).unwrap();
+        assert_eq!(report.completed(), 2, "one running + one queued complete");
+        assert_eq!(report.rejected(), 1, "the third due arrival is rejected");
+        assert_eq!(report.max_queue_depth, 1);
+        assert_eq!(report.max_running_jobs, 1);
+        assert!(report.max_queue_depth <= cfg.serve.queue_depth as u64);
+    }
+
+    #[test]
+    fn synthetic_workload_drains_with_fairness_and_audit() {
+        let mut cfg = test_cfg();
+        cfg.cluster.nodes = 2;
+        cfg.cluster.slots_per_node = 2;
+        cfg.serve.jobs = 12;
+        let mut svc = JobService::new(&cfg);
+        for job in synthetic_jobs(&cfg) {
+            svc.submit(job);
+        }
+        let registry = Registry::new();
+        let report = svc.run(&registry).unwrap();
+        assert_eq!(report.completed() + report.rejected(), 12);
+        assert!(report.fairness_ok(), "{} violations", report.fairness_violations);
+        assert!(report.hb_checks > 0, "per-job hb audit must have sampled");
+        assert!(report.max_running_jobs <= cfg.serve.max_concurrent_jobs as u64);
+        let rendered = report.render();
+        assert!(rendered.contains("fairness OK"));
+        assert!(rendered.contains("tenant"));
+        let snap = registry.render();
+        assert!(snap.contains("tenant_jobs_submitted_0"));
+        assert!(snap.contains("tenant_job_latency_seconds_0"));
+    }
+
+    #[test]
+    fn single_slot_service_is_run_to_run_deterministic() {
+        let run_once = || {
+            let mut cfg = test_cfg();
+            cfg.serve.jobs = 8;
+            let mut svc = JobService::new(&cfg);
+            for job in synthetic_jobs(&cfg) {
+                svc.submit(job);
+            }
+            let report = svc.run(&Registry::new()).unwrap();
+            let digests: Vec<Option<u64>> = report.jobs.iter().map(|j| j.digest).collect();
+            let times: Vec<(u64, u64)> = report
+                .jobs
+                .iter()
+                .map(|j| (secs_to_ns(j.admit_secs), secs_to_ns(j.finish_secs)))
+                .collect();
+            (digests, times, report.sim_seconds.to_bits())
+        };
+        assert_eq!(run_once(), run_once());
+    }
+}

@@ -28,6 +28,7 @@
 #![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod analysis;
+pub mod cli;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;

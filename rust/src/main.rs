@@ -11,12 +11,17 @@
 //! difet register    extract + match overlapping acquisitions (2-stage DAG)
 //! difet stitch      register + align + composite one mosaic (4-stage DAG)
 //! difet vectorize   stitch + segment + label + trace objects (9-stage DAG)
+//! difet serve       multi-tenant job service simulation on one shared pool
 //! difet bench       pipelined-vs-barrier DAG sweep → BENCH_8.json
 //! difet profile     profiled fused sweep → per-kernel MP/s table (BENCH_9)
 //! difet audit       determinism audit: lint the crate sources (Layer 1)
 //! difet trace       analyze a --trace JSON: validate + critical path
 //! difet inspect     show artifact manifest + cluster configuration
 //! ```
+//!
+//! (That table is generated from [`difet::cli::SUBCOMMANDS`] at runtime
+//! — `difet --help` is the authoritative copy, and the `cli` module's
+//! tests assert the two can't drift from the dispatch below.)
 //!
 //! The multi-stage subcommands run on the job-DAG runtime
 //! ([`difet::coordinator::run_dag`]): pipelined by default (work units
@@ -49,65 +54,30 @@
 //! each new stage reuses the previous stages' flags instead of
 //! re-parsing them.
 
+use difet::cli;
 use difet::config::Config;
 use difet::mosaic::BlendMode;
 use difet::pipeline::{
     self, report::ColumnKey, report::TableBuilder, ExtractRequest, RegistrationRequest,
     StitchRequest, VectorizeRequest,
 };
-use difet::util::args::{help_text, FlagSpec, ParsedArgs};
+use difet::util::args::ParsedArgs;
 use difet::util::json::Json;
-
-const USAGE: &str = "difet <extract|sequential|census|scalability|register|stitch|vectorize|bench|profile|audit|trace|inspect> [options]";
-
-fn flag_specs() -> Vec<FlagSpec> {
-    vec![
-        FlagSpec { name: "config", takes_value: true, help: "config file (TOML subset)" },
-        FlagSpec { name: "set", takes_value: true, help: "override, e.g. --set cluster.nodes=2 (repeatable via commas)" },
-        FlagSpec { name: "nodes", takes_value: true, help: "cluster nodes (default 4; bench: comma list, default 1,2,4,8,16)" },
-        FlagSpec { name: "scenes", takes_value: true, help: "corpus size N (default 3)" },
-        FlagSpec { name: "algorithms", takes_value: true, help: "comma list (default: all seven)" },
-        FlagSpec { name: "scene-size", takes_value: true, help: "scene edge px (default 1792; paper 7681)" },
-        FlagSpec { name: "artifacts", takes_value: true, help: "artifacts dir (default artifacts)" },
-        FlagSpec { name: "native", takes_value: false, help: "force the pure-Rust executor" },
-        FlagSpec { name: "fused", takes_value: false, help: "one fused pass for all algorithms" },
-        FlagSpec { name: "barrier", takes_value: false, help: "bulk-synchronous DAG stages (pre-DAG behavior; same bits)" },
-        FlagSpec { name: "audit", takes_value: false, help: "happens-before checking of DAG runs (default on)" },
-        FlagSpec { name: "no-audit", takes_value: false, help: "disable happens-before checking" },
-        FlagSpec { name: "no-write", takes_value: false, help: "skip mapper output writes" },
-        FlagSpec { name: "pairs", takes_value: true, help: "register: explicit pairs, e.g. 0-1,1-2 (default: all)" },
-        FlagSpec { name: "max-offset", takes_value: true, help: "register: acquisition offset bound px (default 96)" },
-        FlagSpec { name: "ratio", takes_value: true, help: "register: Lowe ratio threshold (default 0.85)" },
-        FlagSpec { name: "tolerance", takes_value: true, help: "register: RANSAC inlier tolerance px (default 3)" },
-        FlagSpec { name: "ransac-iters", takes_value: true, help: "register: RANSAC hypotheses per pair (default 256)" },
-        FlagSpec { name: "seed", takes_value: true, help: "register: base RANSAC seed (default 7)" },
-        FlagSpec { name: "blend", takes_value: true, help: "stitch: feather|average|first (default feather)" },
-        FlagSpec { name: "threshold", takes_value: true, help: "vectorize: luma threshold in [0,1] (default 0.5)" },
-        FlagSpec { name: "min-area", takes_value: true, help: "vectorize: min object area px (default 8)" },
-        FlagSpec { name: "epsilon", takes_value: true, help: "vectorize: Douglas-Peucker tolerance px (default 1.5)" },
-        FlagSpec { name: "out", takes_value: true, help: "stitch: mosaic .hib path; vectorize: GeoJSON path; bench: JSON path (default BENCH_8.json); profile: collapsed-stacks path" },
-        FlagSpec { name: "trace", takes_value: true, help: "write a Perfetto trace of the run's DAG to this JSON path" },
-        FlagSpec { name: "profile", takes_value: true, help: "write the wall-clock kernel profile (per-kernel table + span tree) to this path" },
-        FlagSpec { name: "json", takes_value: true, help: "profile: write the per-kernel throughput JSON (the BENCH_9 shape) to this path" },
-        FlagSpec { name: "bare", takes_value: false, help: "disable the I/O cost model" },
-        FlagSpec { name: "verbose", takes_value: false, help: "print counters/metrics" },
-        FlagSpec { name: "help", takes_value: false, help: "show this help" },
-    ]
-}
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let specs = flag_specs();
+    let specs = cli::flag_specs();
     let parsed = match ParsedArgs::parse(&argv, &specs, true) {
         Ok(p) => p,
         Err(e) => {
-            eprintln!("error: {e}\n\n{}", help_text(USAGE, &specs));
+            eprintln!("error: {e}\n\n{}", cli::help());
             std::process::exit(2);
         }
     };
-    if parsed.has("help") || parsed.subcommand.is_none() {
-        print!("{}", help_text(USAGE, &specs));
-        std::process::exit(if parsed.has("help") { 0 } else { 2 });
+    let wants_help = parsed.has("help") || parsed.subcommand.as_deref() == Some("help");
+    if wants_help || parsed.subcommand.is_none() {
+        print!("{}", cli::help());
+        std::process::exit(if wants_help { 0 } else { 2 });
     }
     if let Err(e) = run(&parsed) {
         eprintln!("error: {e}");
@@ -157,6 +127,23 @@ fn build_config(p: &ParsedArgs, nodes_is_list: bool) -> Result<Config, String> {
     }
     if let Some(path) = p.get("profile") {
         cfg.scheduler.profile_path = Some(path.to_string());
+    }
+    // Serve flags write `serve.*` keys; harmless for other subcommands.
+    cfg.serve.jobs = p.get_parse("jobs", cfg.serve.jobs)?;
+    cfg.serve.tenants = p.get_parse("tenants", cfg.serve.tenants)?;
+    cfg.serve.max_concurrent_jobs = p.get_parse("max-jobs", cfg.serve.max_concurrent_jobs)?;
+    cfg.serve.queue_depth = p.get_parse("queue-depth", cfg.serve.queue_depth)?;
+    cfg.serve.mean_interarrival =
+        p.get_parse("mean-interarrival", cfg.serve.mean_interarrival)?;
+    cfg.serve.seed = p.get_parse("seed", cfg.serve.seed)?;
+    if let Some(quotas) = p.get_list("quotas") {
+        cfg.serve.quotas = quotas
+            .iter()
+            .map(|q| q.parse().map_err(|_| format!("bad --quotas entry {q:?}")))
+            .collect::<Result<_, _>>()?;
+    }
+    if p.has("no-preemption") {
+        cfg.serve.preemption = false;
     }
     cfg.validate().map_err(|e| e.to_string())?;
     Ok(cfg)
@@ -401,6 +388,31 @@ fn run(p: &ParsedArgs) -> Result<(), String> {
                 print_counters(&out.vector.report.counters);
             }
         }
+        "serve" => {
+            // Multi-tenant job service: seeded synthetic workload of
+            // concurrent DAG jobs drained through one shared slot pool.
+            let registry = difet::metrics::Registry::new();
+            let mut svc = difet::coordinator::serve::JobService::new(&cfg);
+            for job in difet::coordinator::serve::synthetic_jobs(&cfg) {
+                svc.submit(job);
+            }
+            let report = svc.run(&registry).map_err(|e| e.to_string())?;
+            print!("{}", report.render());
+            if let Some(path) = p.get("out") {
+                std::fs::write(path, report.render()).map_err(|e| e.to_string())?;
+                println!("\nlatency report written to {path}");
+            }
+            if verbose {
+                print!("\n{}", registry.render());
+            }
+            if !report.fairness_ok() {
+                return Err(format!(
+                    "fair-share violated: {} grant(s) went to an over-quota tenant \
+                     while an under-quota tenant waited",
+                    report.fairness_violations
+                ));
+            }
+        }
         "bench" => {
             run_bench(p, &cfg, &req)?;
         }
@@ -425,7 +437,9 @@ fn run(p: &ParsedArgs) -> Result<(), String> {
             let path = p
                 .positional
                 .first()
-                .ok_or_else(|| format!("trace needs a file: difet trace <out.json>\n{USAGE}"))?;
+                .ok_or_else(|| {
+                    format!("trace needs a file: difet trace <out.json>\n{}", cli::usage())
+                })?;
             let log = difet::trace::perfetto::read_file(path).map_err(|e| e.to_string())?;
             println!(
                 "trace: {} mode, {} node(s) × {} slot(s), {} stage(s), {} event(s), sim {}\n",
@@ -472,7 +486,7 @@ fn run(p: &ParsedArgs) -> Result<(), String> {
             }
         }
         other => {
-            return Err(format!("unknown subcommand {other:?}\n{}", help_text(USAGE, &flag_specs())));
+            return Err(format!("unknown subcommand {other:?}\n{}", cli::help()));
         }
     }
     // End-of-run profile sink for every ordinary subcommand (`difet

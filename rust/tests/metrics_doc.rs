@@ -1,0 +1,158 @@
+//! docs/METRICS.md ↔ source sync gate.
+//!
+//! The metrics reference documents every counter/gauge/histogram name
+//! the crate can register.  This suite keeps it honest in both
+//! directions — every name registered in `rust/src/` (non-test code)
+//! must be documented, and every documented name must still exist in
+//! the source — and then cross-checks a live `metrics::render` of a
+//! serve run against the documented set.  Runtime-minted families are
+//! documented with a `_<x>` placeholder and matched by prefix.
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+
+fn docs_path(file: &str) -> PathBuf {
+    for cand in [format!("../docs/{file}"), format!("docs/{file}")] {
+        let p = PathBuf::from(&cand);
+        if p.is_file() {
+            return p;
+        }
+    }
+    panic!("cannot locate docs/{file} (run from the repo root or rust/)");
+}
+
+/// Names documented in METRICS.md: the first backticked token of every
+/// table row.  A `prefix_<x>` placeholder normalizes to `prefix_<`.
+fn documented_names() -> BTreeSet<String> {
+    let doc = std::fs::read_to_string(docs_path("METRICS.md")).expect("read METRICS.md");
+    let mut out = BTreeSet::new();
+    for line in doc.lines() {
+        let Some(rest) = line.strip_prefix("| `") else { continue };
+        let Some(end) = rest.find('`') else { continue };
+        let name = &rest[..end];
+        // Only metric rows: trace-event rows are CamelCase kinds.
+        if !name.chars().all(|c| c.is_ascii_lowercase() || c == '_' || c == '<' || c == '>') {
+            continue;
+        }
+        match name.find('<') {
+            Some(b) => out.insert(format!("{}<", &name[..b])),
+            None => out.insert(name.to_string()),
+        };
+    }
+    assert!(out.len() >= 20, "suspiciously few documented metrics: {out:?}");
+    out
+}
+
+fn rs_files(dir: &std::path::Path, out: &mut Vec<PathBuf>) {
+    for entry in std::fs::read_dir(dir).expect("read_dir") {
+        let path = entry.expect("dir entry").path();
+        if path.is_dir() {
+            rs_files(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+/// Names registered by non-test source: every `registry.counter(..)` /
+/// `.gauge(..)` / `.histogram(..)` call with a literal or `format!`
+/// name.  `format!` names normalize to the prefix before `{`, plus `<`.
+fn source_names() -> BTreeSet<String> {
+    let src = difet::analysis::find_src_root().expect("source root");
+    let mut files = Vec::new();
+    rs_files(&src, &mut files);
+    assert!(files.len() >= 17, "source walk found too few files");
+    let mut out = BTreeSet::new();
+    for path in files {
+        let raw = std::fs::read_to_string(&path).expect("read source file");
+        // Unit tests live at the tail of each module; drop them so
+        // fixture metric names don't leak into the inventory.
+        let body = raw.split("#[cfg(test)]").next().unwrap();
+        let text: String = body.chars().filter(|c| !c.is_whitespace()).collect();
+        for method in ["counter(", "gauge(", "histogram("] {
+            let pat = format!("registry.{method}");
+            let mut from = 0;
+            while let Some(i) = text[from..].find(&pat) {
+                let arg = from + i + pat.len();
+                from = arg;
+                let rest = &text[arg..];
+                let Some(s) = rest
+                    .strip_prefix('"')
+                    .or_else(|| rest.strip_prefix("&format!(\""))
+                else {
+                    continue;
+                };
+                let lit = &s[..s.find('"').expect("unterminated name literal")];
+                match lit.find('{') {
+                    Some(b) => out.insert(format!("{}<", &lit[..b])),
+                    None => out.insert(lit.to_string()),
+                };
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn every_source_metric_is_documented_and_vice_versa() {
+    let doc = documented_names();
+    let src = source_names();
+    let undocumented: Vec<_> = src.difference(&doc).collect();
+    assert!(
+        undocumented.is_empty(),
+        "metrics registered in rust/src/ but missing from docs/METRICS.md: {undocumented:?}"
+    );
+    let stale: Vec<_> = doc.difference(&src).collect();
+    assert!(
+        stale.is_empty(),
+        "metrics documented in docs/METRICS.md but no longer in rust/src/: {stale:?}"
+    );
+}
+
+/// A live render of a serve simulation must emit only documented names
+/// (exact, or under a documented `_<x>` family).
+#[test]
+fn rendered_serve_metrics_match_the_doc() {
+    let doc = documented_names();
+    let covers = |name: &str| {
+        doc.contains(name)
+            || doc
+                .iter()
+                .any(|d| d.ends_with('<') && name.starts_with(&d[..d.len() - 1]))
+    };
+    let mut cfg = difet::config::Config::new();
+    cfg.cluster.nodes = 1;
+    cfg.cluster.slots_per_node = 2;
+    cfg.serve.jobs = 6;
+    cfg.serve.tenants = 2;
+    cfg.serve.mean_interarrival = 0.5;
+    let registry = difet::metrics::Registry::new();
+    let mut svc = difet::coordinator::serve::JobService::new(&cfg);
+    for job in difet::coordinator::serve::synthetic_jobs(&cfg) {
+        svc.submit(job);
+    }
+    svc.run(&registry).expect("serve run");
+    let rendered = registry.render();
+    let mut seen = 0;
+    for line in rendered.lines() {
+        let Some(rest) = line.strip_prefix("  ") else { continue };
+        let name = rest.split_whitespace().next().expect("metric line");
+        assert!(covers(name), "rendered metric {name:?} is not in docs/METRICS.md");
+        seen += 1;
+    }
+    assert!(seen >= 8, "serve run rendered too few metrics:\n{rendered}");
+}
+
+#[test]
+fn trace_event_kinds_are_documented() {
+    let doc = std::fs::read_to_string(docs_path("METRICS.md")).expect("read METRICS.md");
+    for kind in ["StageOpen", "Release", "Attempt", "StageFinalize"] {
+        assert!(doc.contains(&format!("`{kind}`")), "TraceEvent kind {kind} undocumented");
+    }
+    for name in [
+        "Won", "Lost", "Killed", "Failed", // AttemptOutcome
+        "Compute", "Ingest", "MergeLeaf", "MergeInternal", "MergeRoot", // UnitKind
+    ] {
+        assert!(doc.contains(&format!("`{name}`")), "trace enum variant {name} undocumented");
+    }
+}

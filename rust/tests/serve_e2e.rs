@@ -1,0 +1,192 @@
+//! End-to-end properties of the multi-tenant job service.
+//!
+//! The service's central claim is that co-scheduling MANY DAG jobs on
+//! one shared slot pool changes *when* things run but never *what*
+//! they produce: every job's output must be bit-identical to running
+//! that job alone on a dedicated pool, under injected first-attempt
+//! faults (retries), straggler speculation and priority preemption.
+//! On top of that, the admission queue must respect its configured
+//! depth bound, the concurrency bound must hold, and the fair-share
+//! scheduler must never serve an over-quota tenant while an
+//! under-quota tenant has backlogged work.
+
+use difet::config::Config;
+use difet::coordinator::serve::{
+    sink_digest, synthetic_jobs_with_faults, JobService, ServeReport,
+};
+use difet::coordinator::{run_dag, DagStage, ExecMode};
+use difet::metrics::Registry;
+
+fn serve_cfg(seed: u64) -> Config {
+    let mut cfg = Config::new();
+    cfg.cluster.nodes = 2;
+    cfg.cluster.slots_per_node = 2;
+    cfg.serve.jobs = 10;
+    cfg.serve.tenants = 3;
+    cfg.serve.seed = seed;
+    cfg.serve.mean_interarrival = 0.4; // heavy overlap on the virtual clock
+    cfg.serve.max_concurrent_jobs = 16; // no rejects in the parity runs
+    cfg.serve.queue_depth = 32;
+    cfg
+}
+
+fn run_shared(cfg: &Config, faults: bool) -> ServeReport {
+    let registry = Registry::new();
+    let mut svc = JobService::new(cfg);
+    for job in synthetic_jobs_with_faults(cfg, faults) {
+        svc.submit(job);
+    }
+    svc.run(&registry).expect("shared serve run")
+}
+
+/// Digest of each job run SOLO: a fresh spec set (same seed, no
+/// faults), each executed on its own dedicated pool via `run_dag`.
+fn solo_digests(cfg: &Config) -> Vec<(String, u64)> {
+    let mut out = Vec::new();
+    for spec in synthetic_jobs_with_faults(cfg, false) {
+        let refs: Vec<&dyn DagStage> = spec
+            .stages
+            .iter()
+            .map(|b| {
+                let s: &dyn DagStage = b.as_ref();
+                s
+            })
+            .collect();
+        let registry = Registry::new();
+        run_dag(cfg, &refs, ExecMode::Pipelined, &registry).expect("solo run");
+        let sink = spec.sink.as_ref().expect("synthetic jobs carry a sink");
+        out.push((spec.name.clone(), sink_digest(sink)));
+    }
+    out
+}
+
+/// Tentpole acceptance: random concurrent job mixes × retries ×
+/// speculation × preemption — every co-scheduled job's output is
+/// bit-identical to its solo run.
+#[test]
+fn every_shared_job_is_bit_identical_to_its_solo_run() {
+    for seed in [7u64, 42, 20170924] {
+        let cfg = serve_cfg(seed);
+        let shared = run_shared(&cfg, true); // injected faults → retries
+        assert_eq!(shared.rejected(), 0, "parity cfg must not reject (seed {seed})");
+        for (name, solo) in solo_digests(&cfg) {
+            let job = shared.job(&name).unwrap_or_else(|| panic!("job {name} missing"));
+            assert_eq!(
+                job.digest,
+                Some(solo),
+                "job {name} (seed {seed}) diverged from its solo run"
+            );
+        }
+    }
+}
+
+/// The schedule may move under preemption and fault injection; the
+/// bits may not.
+#[test]
+fn outputs_are_invariant_to_preemption_and_faults() {
+    let base = serve_cfg(99);
+    let with_faults = run_shared(&base, true);
+    let clean = run_shared(&base, false);
+    let mut no_preempt_cfg = base.clone();
+    no_preempt_cfg.serve.preemption = false;
+    let no_preempt = run_shared(&no_preempt_cfg, false);
+    for job in &clean.jobs {
+        let faulted = with_faults.job(&job.name).expect("same workload");
+        let calm = no_preempt.job(&job.name).expect("same workload");
+        assert_eq!(job.digest, faulted.digest, "retries changed bits for {}", job.name);
+        assert_eq!(job.digest, calm.digest, "preemption changed bits for {}", job.name);
+    }
+}
+
+/// Fair share under sustained backlog: a starved pool with skewed
+/// quotas must never grant an over-quota tenant a slot while an
+/// under-quota tenant waits, and both tenants must make progress.
+#[test]
+fn fair_share_holds_under_backlog() {
+    let mut cfg = Config::new();
+    cfg.cluster.nodes = 1;
+    cfg.cluster.slots_per_node = 4;
+    cfg.serve.jobs = 16;
+    cfg.serve.tenants = 2;
+    cfg.serve.quotas = vec![3, 1];
+    cfg.serve.seed = 5;
+    cfg.serve.mean_interarrival = 0.1; // arrivals far outpace the pool
+    cfg.serve.max_concurrent_jobs = 16;
+    cfg.serve.queue_depth = 32;
+    let report = run_shared(&cfg, false);
+    assert!(report.fairness_ok(), "{} fairness violations", report.fairness_violations);
+    assert!(report.hb_checks > 0, "per-job happens-before audit must run");
+    for t in &report.tenants {
+        if t.submitted > 0 {
+            assert!(t.granted_units > 0, "tenant {} starved outright", t.tenant);
+            assert!(
+                t.latency_p50 <= t.latency_p95 && t.latency_p95 <= t.latency_p99,
+                "tenant {} percentiles not monotone",
+                t.tenant
+            );
+        }
+    }
+}
+
+/// Admission control: the queue never grows past its configured depth,
+/// the running set never exceeds the concurrency bound, and every
+/// submitted job terminates as exactly one of completed / rejected.
+#[test]
+fn admission_keeps_queue_depth_and_concurrency_bounded() {
+    let mut cfg = serve_cfg(11);
+    cfg.serve.jobs = 14;
+    cfg.serve.max_concurrent_jobs = 2;
+    cfg.serve.queue_depth = 3;
+    cfg.serve.mean_interarrival = 0.05; // slam the admission path
+    let report = run_shared(&cfg, false);
+    assert!(
+        report.max_queue_depth <= 3,
+        "queue depth {} exceeded bound 3",
+        report.max_queue_depth
+    );
+    assert!(
+        report.max_running_jobs <= 2,
+        "running jobs {} exceeded bound 2",
+        report.max_running_jobs
+    );
+    assert_eq!(report.completed() + report.rejected(), 14);
+    assert!(report.rejected() > 0, "this cfg is built to overflow the queue");
+    for job in report.jobs.iter().filter(|j| j.rejected) {
+        assert!(job.digest.is_none(), "rejected job {} must not run", job.name);
+    }
+    // Every arrival here lands before the pool finishes its startup
+    // charge, so the whole admit/queue/reject split resolves in the
+    // deterministic bootstrap pump: the same workload rejects the
+    // same jobs, run after run.
+    let again = run_shared(&cfg, false);
+    let rejected = |r: &ServeReport| {
+        r.jobs.iter().filter(|j| j.rejected).map(|j| j.name.clone()).collect::<Vec<_>>()
+    };
+    assert_eq!(rejected(&report), rejected(&again));
+}
+
+/// The pool pays startup once, not once per job: with N jobs whose
+/// virtual work is far longer than startup, total sim time must sit
+/// well under the N× per-job-startup cost the one-shot CLI would pay.
+#[test]
+fn shared_pool_amortizes_job_startup() {
+    let mut cfg = serve_cfg(3);
+    cfg.cluster.job_startup = 30.0;
+    cfg.serve.jobs = 6;
+    let report = run_shared(&cfg, false);
+    assert!(report.startup_secs >= 30.0 - 1e-9);
+    // Six jobs re-paying a 30s startup each would serialize ≥ 180s of
+    // charge; one pool-wide payment keeps the whole sim well under 3×.
+    assert!(
+        report.sim_seconds < 3.0 * 30.0,
+        "sim {}s suggests startup was paid per job, not per pool",
+        report.sim_seconds
+    );
+    for job in report.jobs.iter().filter(|j| !j.rejected) {
+        assert!(
+            job.admit_secs >= 30.0 - 1e-9,
+            "job {} admitted before the pool finished starting",
+            job.name
+        );
+    }
+}
